@@ -1,0 +1,72 @@
+//! DVFS / power-management study (the ablation behind Observation 6 and
+//! Insight 8): sweep the allocator-induced HBM power-noise level and watch
+//! the governor trade frequency for stability at constant average power —
+//! then cross-check against the full simulator with FSDPv1/v2 allocators.
+//!
+//!     cargo run --release --example dvfs_study
+
+use chopper::config::{FsdpVersion, GpuSpec, ModelConfig, NodeSpec, WorkloadConfig};
+use chopper::sim::{run_workload, DvfsGovernor, WindowActivity};
+use chopper::util::stats;
+
+fn governor_sweep() {
+    println!("governor response to HBM power noise (isolated, busy MFMA workload):");
+    println!("  {:>10} {:>12} {:>12} {:>10}", "noise σ(W)", "freq (MHz)", "power (W)", "freq σ");
+    let act = WindowActivity {
+        compute_busy: 0.95,
+        mfma_util: 0.6,
+        hbm_bytes: 3.5e9,
+        comm_busy: 0.3,
+    };
+    for noise in [2.0, 25.0, 50.0, 100.0, 150.0, 200.0, 300.0] {
+        let mut g = DvfsGovernor::new(GpuSpec::mi300x(), 42, 0, noise);
+        let mut fs = Vec::new();
+        let mut ps = Vec::new();
+        for _ in 0..600 {
+            let (p, f) = g.step(&act);
+            ps.push(p);
+            fs.push(f);
+        }
+        println!(
+            "  {:>10.0} {:>12.0} {:>12.0} {:>10.0}",
+            noise,
+            stats::mean(&fs),
+            stats::mean(&ps),
+            stats::std(&fs)
+        );
+    }
+}
+
+fn end_to_end() {
+    println!("\nfull simulator, b2s4, FSDPv1 (non-deterministic allocator) vs FSDPv2:");
+    let node = NodeSpec::mi300x_node();
+    let mut cfg = ModelConfig::llama3_8b();
+    cfg.layers = 16;
+    for v in [FsdpVersion::V1, FsdpVersion::V2] {
+        let mut wl = WorkloadConfig::parse_label("b2s4", v).unwrap();
+        wl.iterations = 6;
+        wl.warmup = 3;
+        let run = run_workload(&node, &cfg, &wl);
+        let active: Vec<_> = run
+            .power
+            .samples
+            .iter()
+            .filter(|s| s.power_w > 400.0)
+            .collect();
+        let f: Vec<f64> = active.iter().map(|s| s.freq_mhz).collect();
+        let p: Vec<f64> = active.iter().map(|s| s.power_w).collect();
+        println!(
+            "  {v}: allocator spike σ {:>9.2e} B  →  GPU {:.0}±{:.0} MHz at {:.0} W",
+            run.alloc.peak_sigma_bytes,
+            stats::mean(&f),
+            stats::std(&f),
+            stats::mean(&p),
+        );
+    }
+    println!("\nInsight 8: deterministic memory (v2) → quiet power → higher, more stable clocks.");
+}
+
+fn main() {
+    governor_sweep();
+    end_to_end();
+}

@@ -1,0 +1,64 @@
+//! FSDPv1 vs FSDPv2 deep-dive (the paper's Observations 5/6, Insight 8):
+//! launch overheads, frequency/power, and the end-to-end throughput delta
+//! — the mechanisms behind "v2 serializes more copies yet is faster".
+//!
+//!     cargo run --release --example fsdp_compare [layers] [iters]
+
+use chopper::chopper::report::{self, SweepRun};
+use chopper::chopper::throughput;
+use chopper::config::{FsdpVersion, ModelConfig, NodeSpec, WorkloadConfig};
+use chopper::model::ops::OpType;
+use chopper::sim::run_workload;
+
+fn main() {
+    let layers: u64 = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(16);
+    let iters: u32 = std::env::args()
+        .nth(2)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(8);
+    let node = NodeSpec::mi300x_node();
+    let mut cfg = ModelConfig::llama3_8b();
+    cfg.layers = layers;
+
+    let mut runs = Vec::new();
+    for v in [FsdpVersion::V1, FsdpVersion::V2] {
+        let mut wl = WorkloadConfig::parse_label("b2s4", v).unwrap();
+        wl.iterations = iters;
+        wl.warmup = iters / 2;
+        eprintln!("profiling {}…", wl.label_with_fsdp());
+        let run = run_workload(&node, &cfg, &wl);
+        runs.push(SweepRun { wl, run });
+    }
+    let (v1, v2) = (&runs[0], &runs[1]);
+
+    // Throughput delta (Observation 5).
+    let tokens = v1.wl.tokens_per_iteration(node.num_gpus as u64) as f64;
+    let tp1 = throughput(&v1.run.trace, tokens);
+    let tp2 = throughput(&v2.run.trace, tokens);
+    println!(
+        "throughput: v1 {:.0} tok/s, v2 {:.0} tok/s  (v2 = {:.2}x)",
+        tp1.tokens_per_sec,
+        tp2.tokens_per_sec,
+        tp2.tokens_per_sec / tp1.tokens_per_sec
+    );
+    let copies = |r: &SweepRun| {
+        r.run
+            .trace
+            .events
+            .iter()
+            .filter(|e| e.op.op == OpType::ParamCopy)
+            .count()
+    };
+    println!(
+        "serialized param-copy kernels: v1 {}, v2 {}  — v2 copies more, still wins",
+        copies(v1),
+        copies(v2)
+    );
+
+    println!("\n{}", report::fig11(v1, v2).ascii);
+    println!("{}", report::fig14(v1, v2).ascii);
+    println!("{}", report::fig15(&runs, &node).ascii);
+}

@@ -1,0 +1,62 @@
+//! Quickstart: profile one training workload on the simulated MI300X node
+//! and analyze it with Chopper — the 60-second tour of the API.
+//!
+//!     cargo run --release --example quickstart
+
+use chopper::chopper::aggregate::op_medians;
+use chopper::chopper::{throughput, CpuUtilAnalysis};
+use chopper::config::{FsdpVersion, ModelConfig, NodeSpec, WorkloadConfig};
+use chopper::trace::chrome;
+use chopper::trace::collect::RuntimeProfiler;
+use chopper::util::fmt;
+
+fn main() {
+    // 1. Describe the system and the workload (paper defaults: Llama 3 8B
+    //    on eight MI300X; here 8 layers to keep the demo quick).
+    let node = NodeSpec::mi300x_node();
+    let mut cfg = ModelConfig::llama3_8b();
+    cfg.layers = 8;
+    let mut wl = WorkloadConfig::parse_label("b2s4", FsdpVersion::V2).unwrap();
+    wl.iterations = 6;
+    wl.warmup = 3;
+
+    // 2. Runtime profiling: concurrent timestamps + annotations + power and
+    //    CPU telemetry (Section III-B1).
+    println!("profiling {} on {} GPUs…", wl.label_with_fsdp(), node.num_gpus);
+    let cap = RuntimeProfiler::new(node.clone()).capture(&cfg, &wl);
+    println!(
+        "  {} kernel events over {}",
+        cap.trace.events.len(),
+        fmt::dur_ns(cap.trace.span_ns())
+    );
+
+    // 3. Multi-granularity analysis.
+    let tokens = wl.tokens_per_iteration(node.num_gpus as u64) as f64;
+    let tp = throughput(&cap.trace, tokens);
+    println!(
+        "  throughput: {:.0} tokens/s   (median iteration {}, launch overhead {})",
+        tp.tokens_per_sec,
+        fmt::dur_ns(tp.iter_ns),
+        fmt::dur_ns(tp.launch_ns)
+    );
+
+    let mut medians: Vec<_> = op_medians(&cap.trace).into_iter().collect();
+    medians.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    println!("\n  top operations by median duration:");
+    for (op, d) in medians.iter().take(8) {
+        println!("    {:>10}  {}", op.paper_name(), fmt::dur_ns(*d));
+    }
+
+    let cpu = CpuUtilAnalysis::analyze(&cap.cpu);
+    println!(
+        "\n  host CPU: median {:.0} active cores (lower bound {:.1}), {:.1}% of physical cores ever used",
+        cpu.median_active(),
+        cpu.median_min_cores(),
+        cpu.physical_footprint() * 100.0
+    );
+
+    // 4. Export for Perfetto / chrome://tracing.
+    let out = std::env::temp_dir().join("chopper_quickstart_trace.json");
+    chrome::write_chrome_trace(&cap.trace, &out).unwrap();
+    println!("\n  chrome trace written to {}", out.display());
+}

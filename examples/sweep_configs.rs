@@ -1,0 +1,36 @@
+//! Reproduce the paper's configuration sweep (Fig. 4): throughput and
+//! phase/op-type breakdown across b1s4, b2s4, b4s4, b1s8, b2s8 under
+//! FSDPv1 and FSDPv2.
+//!
+//!     cargo run --release --example sweep_configs [layers] [iters]
+
+use chopper::chopper::report;
+use chopper::config::{FsdpVersion, ModelConfig, NodeSpec};
+
+fn main() {
+    let layers: u64 = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(32);
+    let iters: u32 = std::env::args()
+        .nth(2)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(8);
+    let node = NodeSpec::mi300x_node();
+    let mut cfg = ModelConfig::llama3_8b();
+    cfg.layers = layers;
+    eprintln!(
+        "running the paper sweep at {layers} layers × {iters} iterations (10 runs)…"
+    );
+    let runs = report::run_sweep(
+        &node,
+        &cfg,
+        &[FsdpVersion::V1, FsdpVersion::V2],
+        iters,
+        iters / 2,
+    );
+    let fig = report::fig4(&runs);
+    println!("{}", fig.ascii);
+    // Fig. 6 rides on the same runs.
+    println!("{}", report::fig6(&runs).ascii);
+}

@@ -1,0 +1,235 @@
+"""AOT compiler: lower the L2/L1 graphs to HLO *text* artifacts.
+
+Interchange format is HLO text, NOT `lowered.compile()`/`.serialize()`:
+jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the
+xla_extension 0.5.1 backing the Rust `xla` crate rejects
+(`proto.id() <= INT_MAX`). The HLO text parser reassigns ids, so text
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Emitted artifacts (all under artifacts/):
+
+  init.hlo.txt          (seed:i32)                  -> flat params tuple
+  fwd.hlo.txt           (params..., tokens)         -> (logits,)
+  loss.hlo.txt          (params..., tokens, tgt)    -> (loss,)
+  train_step.hlo.txt    (params..., tokens, tgt, lr)-> (params'..., loss)
+  ops/<name>.hlo.txt    per-operation graphs matching the paper's Fig. 1
+                        taxonomy, for the Rust op-by-op traced execution path
+  MANIFEST.txt          machine-readable index (shapes/dtypes/op metadata)
+
+Python runs ONCE at build time (`make artifacts`); the Rust binary is
+self-contained afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _fmt_aval(name, aval):
+    dt = {"float32": "f32", "int32": "s32"}.get(str(aval.dtype), str(aval.dtype))
+    dims = ",".join(str(d) for d in aval.shape)
+    return f"{name}:{dt}[{dims}]"
+
+
+class ArtifactWriter:
+    def __init__(self, out_dir: str, cfg: M.ModelConfig, batch: int):
+        self.out_dir = out_dir
+        self.cfg = cfg
+        self.batch = batch
+        self.manifest_lines = [
+            "# Chopper AOT artifact manifest (build-time generated; line-based)",
+            f"config vocab={cfg.vocab} hidden={cfg.hidden} layers={cfg.layers} "
+            f"q_heads={cfg.q_heads} kv_heads={cfg.kv_heads} ffn={cfg.ffn} "
+            f"seq={cfg.seq} batch={batch} head_dim={cfg.head_dim} "
+            f"params={cfg.param_count()}",
+        ]
+
+    def emit(self, rel_path: str, fn, in_avals: list, kind: str, names=None):
+        """Lower fn at the given input avals and write HLO text + manifest."""
+        lowered = jax.jit(fn).lower(*[a for _, a in in_avals])
+        text = to_hlo_text(lowered)
+        path = os.path.join(self.out_dir, rel_path)
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        with open(path, "w") as f:
+            f.write(text)
+        out_avals = jax.eval_shape(fn, *[a for _, a in in_avals])
+        flat_out, _ = jax.tree_util.tree_flatten(out_avals)
+        onames = names or [f"o{i}" for i in range(len(flat_out))]
+        ins = ",".join(_fmt_aval(n, a) for n, a in in_avals)
+        outs = ",".join(_fmt_aval(n, a) for n, a in zip(onames, flat_out))
+        self.manifest_lines.append(
+            f"artifact {rel_path} kind={kind} inputs={ins} outputs={outs}"
+        )
+        print(f"  wrote {rel_path} ({len(text)} chars)")
+
+    def finish(self):
+        path = os.path.join(self.out_dir, "MANIFEST.txt")
+        with open(path, "w") as f:
+            f.write("\n".join(self.manifest_lines) + "\n")
+        print(f"  wrote MANIFEST.txt ({len(self.manifest_lines)} entries)")
+
+
+def emit_all(out_dir: str, cfg: M.ModelConfig, batch: int, only: str | None = None):
+    w = ArtifactWriter(out_dir, cfg, batch)
+    b, s, h, v = batch, cfg.seq, cfg.hidden, cfg.vocab
+    hq, hkv, hd, f = cfg.q_heads, cfg.kv_heads, cfg.head_dim, cfg.ffn
+    spec = M.param_spec(cfg)
+    p_avals = [(n, _sds(sh)) for n, sh in spec]
+    tok = ("tokens", _sds((b, s), jnp.int32))
+    tgt = ("targets", _sds((b, s), jnp.int32))
+
+    def wants(name):
+        return only is None or only in name
+
+    # --- whole-graph artifacts -------------------------------------------
+    if wants("init"):
+        w.emit(
+            "init.hlo.txt",
+            lambda seed: tuple(M.flatten_params(M.init_params(cfg, seed))),
+            [("seed", _sds((), jnp.int32))],
+            kind="init",
+            names=[n for n, _ in spec],
+        )
+
+    def fwd_flat(*args):
+        params = M.unflatten_params(cfg, list(args[: len(spec)]))
+        return (M.forward(cfg, params, args[len(spec)]),)
+
+    if wants("fwd"):
+        w.emit("fwd.hlo.txt", fwd_flat, p_avals + [tok], kind="fwd",
+               names=["logits"])
+
+    def loss_flat(*args):
+        params = M.unflatten_params(cfg, list(args[: len(spec)]))
+        return (M.loss_fn(cfg, params, args[len(spec)], args[len(spec) + 1]),)
+
+    if wants("loss"):
+        w.emit("loss.hlo.txt", loss_flat, p_avals + [tok, tgt], kind="loss",
+               names=["loss"])
+
+    def step_flat(*args):
+        params = M.unflatten_params(cfg, list(args[: len(spec)]))
+        tokens, targets, lr = args[len(spec)], args[len(spec) + 1], args[len(spec) + 2]
+        new_params, loss = M.sgd_train_step(cfg, params, tokens, targets, lr)
+        return tuple(M.flatten_params(new_params)) + (loss,)
+
+    if wants("train_step"):
+        w.emit(
+            "train_step.hlo.txt",
+            step_flat,
+            p_avals + [tok, tgt, ("lr", _sds(()))],
+            kind="train_step",
+            names=[n for n, _ in spec] + ["loss"],
+        )
+
+    # --- per-operation artifacts (Fig. 1 taxonomy) ------------------------
+    x = ("x", _sds((b, s, h)))
+    res = ("res", _sds((b, s, h)))
+    nw = ("w", _sds((h,)))
+    q4 = ("q", _sds((b, hq, s, hd)))
+    k4 = ("k", _sds((b, hkv, s, hd)))
+    v4 = ("v", _sds((b, hkv, s, hd)))
+
+    ops = {
+        "i_e": (
+            lambda e, t: (M.op_i_e(e, t),),
+            [("embed", _sds((v, h))), tok],
+        ),
+        "attn_n": (lambda x_, w_: (M.op_attn_n(x_, w_, cfg.eps),), [x, nw]),
+        "qkv_ip": (
+            M.op_qkv_ip,
+            [x, ("wq", _sds((h, hq * hd))), ("wk", _sds((h, hkv * hd))),
+             ("wv", _sds((h, hkv * hd)))],
+        ),
+        "qkv_s": (
+            lambda q_, k_, v_: M.op_qkv_s(q_, k_, v_, hq, hkv),
+            [("q", _sds((b, s, hq * hd))), ("k", _sds((b, s, hkv * hd))),
+             ("v", _sds((b, s, hkv * hd)))],
+        ),
+        "qkv_t": (
+            M.op_qkv_t,
+            [("q", _sds((b, s, hq, hd))), ("k", _sds((b, s, hkv, hd))),
+             ("v", _sds((b, s, hkv, hd)))],
+        ),
+        "qkv_re": (
+            lambda q_, k_: M.op_qkv_re(q_, k_, cfg.rope_theta),
+            [q4, k4],
+        ),
+        "qkv_c": (M.op_qkv_c, [q4, k4, v4]),
+        "attn_fa": (lambda q_, k_, v_: (M.op_attn_fa(q_, k_, v_),), [q4, k4, v4]),
+        "attn_or": (lambda a: (M.op_attn_or(a),), [("a", _sds((b, hq, s, hd)))]),
+        "attn_op": (
+            lambda a, wo: (M.op_attn_op(a, wo),),
+            [("a", _sds((b, s, hq * hd))), ("wo", _sds((hq * hd, h)))],
+        ),
+        "attn_ra": (lambda a, r: (M.op_attn_ra(a, r),), [x, res]),
+        "mlp_n": (lambda x_, w_: (M.op_mlp_n(x_, w_, cfg.eps),), [x, nw]),
+        "mlp_gp": (lambda x_, wg: (M.op_mlp_gp(x_, wg),), [x, ("wg", _sds((h, f)))]),
+        "mlp_gs": (lambda g: (M.op_mlp_gs(g),), [("g", _sds((b, s, f)))]),
+        "mlp_up": (lambda x_, wu: (M.op_mlp_up(x_, wu),), [x, ("wu", _sds((h, f)))]),
+        "mlp_gu": (
+            lambda g, u: (M.op_mlp_gu(g, u),),
+            [("g", _sds((b, s, f))), ("u", _sds((b, s, f)))],
+        ),
+        "mlp_dp": (lambda m, wd: (M.op_mlp_dp(m, wd),), [("m", _sds((b, s, f))),
+                                                         ("wd", _sds((f, h)))]),
+        "mlp_ra": (lambda m, r: (M.op_mlp_ra(m, r),), [x, res]),
+        "ln": (lambda x_, w_: (M.op_ln(x_, w_, cfg.eps),), [x, nw]),
+        "lp": (lambda x_, w_: (M.op_lp(x_, w_),), [x, ("lp", _sds((h, v)))]),
+    }
+    for name, (fn, avals) in ops.items():
+        if wants(f"ops/{name}"):
+            w.emit(f"ops/{name}.hlo.txt", fn, avals, kind="op")
+
+    w.finish()
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts/model.hlo.txt",
+                    help="Path whose directory becomes the artifact dir "
+                         "(Makefile passes ../artifacts/model.hlo.txt)")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--config", default="mini", choices=["mini", "tiny"])
+    ap.add_argument("--only", default=None,
+                    help="Substring filter on artifact names (for iteration)")
+    args = ap.parse_args()
+
+    out_dir = os.path.dirname(os.path.abspath(args.out)) or "."
+    os.makedirs(out_dir, exist_ok=True)
+    cfg = M.ModelConfig.mini() if args.config == "mini" else M.ModelConfig.tiny()
+    print(f"AOT: config={args.config} batch={args.batch} "
+          f"params={cfg.param_count():,} -> {out_dir}")
+    emit_all(out_dir, cfg, args.batch, args.only)
+
+    # The Makefile stamps on model.hlo.txt; keep it as an alias of fwd.
+    fwd = os.path.join(out_dir, "fwd.hlo.txt")
+    stamp = os.path.join(out_dir, "model.hlo.txt")
+    if os.path.exists(fwd):
+        with open(fwd) as fsrc, open(stamp, "w") as fdst:
+            fdst.write(fsrc.read())
+    print("AOT done.")
+
+
+if __name__ == "__main__":
+    main()

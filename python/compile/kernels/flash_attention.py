@@ -1,0 +1,402 @@
+"""FlashAttention-2 as a Pallas kernel (forward + backward), TPU-shaped.
+
+Hardware adaptation (paper targets AMD CDNA3 / MI300X; see DESIGN.md
+§Hardware-Adaptation): the CDNA kernel tiles Q into workgroups and streams
+K/V through LDS; here the same insight — never materialize the S×S score
+matrix in off-chip memory — is expressed through Pallas `BlockSpec`s:
+
+  * grid = (batch·q_heads, Sq / block_q): one program instance owns one
+    Q tile resident in VMEM (the TPU analogue of the CU scratchpad),
+  * K/V are streamed tile-by-tile inside the kernel with an online-softmax
+    running (m, l, acc) state, f32 accumulation,
+  * matmuls are `jnp.dot(..., preferred_element_type=f32)` so they map to
+    the MXU systolic array rather than VPU lanes.
+
+VMEM budget (paper-scale shapes, bf16, block_q = block_k = 128, D = 128):
+q tile 32 KiB + k/v tiles 64 KiB + f32 acc 64 KiB + scores 64 KiB ≈ 224 KiB
+per instance — comfortably inside a 16 MiB VMEM even with double-buffering.
+
+The kernels are lowered with `interpret=True` everywhere in this repo: the
+CPU PJRT plugin cannot execute Mosaic custom-calls, so interpret mode is
+the correctness (and AOT) path; real-TPU performance is estimated
+analytically in DESIGN.md.
+
+GQA is supported (Hq a multiple of Hkv). Backward follows FlashAttention-2:
+a delta pre-pass, a dK/dV kernel gridded over KV tiles, and a dQ kernel
+gridded over Q tiles, glued together with `jax.custom_vjp`.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_Q = 64
+DEFAULT_BLOCK_K = 64
+NEG_INF = -1e30  # finite "-inf": keeps exp(m_old - m_new) well-defined
+
+
+def _pick_block(n: int, want: int) -> int:
+    """Largest power-of-two block <= want that divides n."""
+    b = min(want, n)
+    while n % b != 0:
+        b -= 1
+    return max(b, 1)
+
+
+# ---------------------------------------------------------------------------
+# Forward kernel
+# ---------------------------------------------------------------------------
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, *, scale, causal, block_k, skv):
+    """One (batch·head, q-tile) program instance.
+
+    q_ref: [block_q, D] VMEM tile; k_ref/v_ref: [Skv, D] slabs the kernel
+    streams through in block_k chunks; o_ref: [block_q, D]; lse_ref: [block_q].
+    """
+    block_q, d = q_ref.shape
+    qi = pl.program_id(1)
+
+    q = q_ref[...].astype(jnp.float32) * scale
+
+    m0 = jnp.full((block_q,), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((block_q,), dtype=jnp.float32)
+    acc0 = jnp.zeros((block_q, d), dtype=jnp.float32)
+
+    num_kb = skv // block_k
+    if causal:
+        # Query rows in this tile cover absolute positions
+        # [qi*block_q, (qi+1)*block_q); with the diagonal aligned to the end
+        # of KV, the last visible kv index is (qi+1)*block_q - 1 + (skv - sq).
+        # Bounding the stream here is the FA2 "skip fully-masked tiles" trick.
+        sq_total = pl.num_programs(1) * block_q
+        last_kv = (qi + 1) * block_q + (skv - sq_total)
+        num_kb = jnp.minimum((last_kv + block_k - 1) // block_k, skv // block_k)
+
+    def body(j, carry):
+        m, l, acc = carry
+        k = pl.load(k_ref, (pl.ds(j * block_k, block_k), slice(None))).astype(
+            jnp.float32
+        )
+        v = pl.load(v_ref, (pl.ds(j * block_k, block_k), slice(None))).astype(
+            jnp.float32
+        )
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # [bq, bk]
+        if causal:
+            sq_total = pl.num_programs(1) * block_q
+            qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            kpos = j * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(kpos <= qpos + (skv - sq_total), s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l * alpha + jnp.sum(p, axis=1)
+        acc_new = acc * alpha[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32
+        )
+        return m_new, l_new, acc_new
+
+    m, l, acc = jax.lax.fori_loop(0, num_kb, body, (m0, l0, acc0))
+
+    # Guard fully-masked rows (possible when skv < sq slack makes a row see
+    # no keys): l == 0 there; emit zeros rather than NaN.
+    l_safe = jnp.where(l == 0.0, 1.0, l)
+    o_ref[...] = (acc / l_safe[:, None]).astype(o_ref.dtype)
+    lse_ref[...] = jnp.where(l == 0.0, NEG_INF, m + jnp.log(l_safe))
+
+
+def _fa_forward(q, k, v, causal, scale, block_q, block_k, interpret):
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    group = hq // hkv
+    block_q = _pick_block(sq, block_q)
+    block_k = _pick_block(skv, block_k)
+
+    qf = q.reshape(b * hq, sq, d)
+    kf = k.reshape(b * hkv, skv, d)
+    vf = v.reshape(b * hkv, skv, d)
+
+    def q_map(bh, qi):
+        return (bh, qi, 0)
+
+    def kv_map(bh, qi):
+        # GQA: flat q index bh = bi*hq + h uses kv slab bi*hkv + h // group.
+        bi = bh // hq
+        h = bh % hq
+        return (bi * hkv + h // group, 0, 0)
+
+    out, lse = pl.pallas_call(
+        functools.partial(
+            _fwd_kernel, scale=scale, causal=causal, block_k=block_k, skv=skv
+        ),
+        grid=(b * hq, sq // block_q),
+        in_specs=[
+            pl.BlockSpec((None, block_q, d), q_map),
+            pl.BlockSpec((None, skv, d), kv_map),
+            pl.BlockSpec((None, skv, d), kv_map),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, block_q, d), q_map),
+            pl.BlockSpec((None, block_q), lambda bh, qi: (bh, qi)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b * hq, sq, d), q.dtype),
+            jax.ShapeDtypeStruct((b * hq, sq), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, hq, sq, d), lse.reshape(b, hq, sq)
+
+
+# ---------------------------------------------------------------------------
+# Backward kernels (FlashAttention-2 split: delta pre-pass, dKdV, dQ)
+# ---------------------------------------------------------------------------
+
+
+def _delta_kernel(o_ref, do_ref, delta_ref):
+    """delta_i = rowsum(dO_i * O_i), the softmax-jacobian diagonal term."""
+    o = o_ref[...].astype(jnp.float32)
+    do = do_ref[...].astype(jnp.float32)
+    delta_ref[...] = jnp.sum(o * do, axis=-1)
+
+
+def _dkdv_kernel(
+    q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dk_ref, dv_ref,
+    *, scale, causal, block_q, sq,
+):
+    """Grid (batch·q_head, kv-tile): accumulate dK/dV for one KV tile by
+    streaming all (visible) Q tiles past it."""
+    block_k, d = dk_ref.shape
+    ki = pl.program_id(1)
+
+    k = k_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+
+    dk0 = jnp.zeros((block_k, d), dtype=jnp.float32)
+    dv0 = jnp.zeros((block_k, d), dtype=jnp.float32)
+
+    skv_total = pl.num_programs(1) * block_k
+    num_qb = sq // block_q
+    start_qb = 0
+    if causal:
+        # KV tile [ki*block_k, ...) is visible only to q rows with
+        # qpos >= kpos - (skv - sq); skip earlier q tiles entirely.
+        first_q = ki * block_k - (skv_total - sq)
+        start_qb = jnp.maximum(first_q // block_q, 0)
+
+    def body(qi, carry):
+        dk, dv = carry
+        q = pl.load(q_ref, (pl.ds(qi * block_q, block_q), slice(None))).astype(
+            jnp.float32
+        )
+        do = pl.load(do_ref, (pl.ds(qi * block_q, block_q), slice(None))).astype(
+            jnp.float32
+        )
+        lse = pl.load(lse_ref, (pl.ds(qi * block_q, block_q),))
+        delta = pl.load(delta_ref, (pl.ds(qi * block_q, block_q),))
+        s = jnp.dot(q * scale, k.T, preferred_element_type=jnp.float32)
+        if causal:
+            qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            kpos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(kpos <= qpos + (skv_total - sq), s, NEG_INF)
+        p = jnp.exp(s - lse[:, None])  # [bq, bk]
+        dv_new = dv + jnp.dot(p.T, do, preferred_element_type=jnp.float32)
+        dp = jnp.dot(do, v.T, preferred_element_type=jnp.float32)
+        ds = p * (dp - delta[:, None]) * scale
+        dk_new = dk + jnp.dot(ds.T, q, preferred_element_type=jnp.float32)
+        return dk_new, dv_new
+
+    dk, dv = jax.lax.fori_loop(start_qb, num_qb, body, (dk0, dv0))
+    dk_ref[...] = dk.astype(dk_ref.dtype)
+    dv_ref[...] = dv.astype(dv_ref.dtype)
+
+
+def _dq_kernel(
+    q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
+    *, scale, causal, block_k, skv,
+):
+    """Grid (batch·q_head, q-tile): accumulate dQ for one Q tile by streaming
+    the (visible) KV tiles past it."""
+    block_q, d = dq_ref.shape
+    qi = pl.program_id(1)
+
+    q = q_ref[...].astype(jnp.float32)
+    do = do_ref[...].astype(jnp.float32)
+    lse = lse_ref[...]
+    delta = delta_ref[...]
+
+    dq0 = jnp.zeros((block_q, d), dtype=jnp.float32)
+    num_kb = skv // block_k
+    if causal:
+        sq_total = pl.num_programs(1) * block_q
+        last_kv = (qi + 1) * block_q + (skv - sq_total)
+        num_kb = jnp.minimum((last_kv + block_k - 1) // block_k, skv // block_k)
+
+    def body(j, dq):
+        k = pl.load(k_ref, (pl.ds(j * block_k, block_k), slice(None))).astype(
+            jnp.float32
+        )
+        v = pl.load(v_ref, (pl.ds(j * block_k, block_k), slice(None))).astype(
+            jnp.float32
+        )
+        s = jnp.dot(q * scale, k.T, preferred_element_type=jnp.float32)
+        if causal:
+            sq_total = pl.num_programs(1) * block_q
+            qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            kpos = j * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(kpos <= qpos + (skv - sq_total), s, NEG_INF)
+        p = jnp.exp(s - lse[:, None])
+        dp = jnp.dot(do, v.T, preferred_element_type=jnp.float32)
+        ds = p * (dp - delta[:, None]) * scale
+        return dq + jnp.dot(ds, k, preferred_element_type=jnp.float32)
+
+    dq = jax.lax.fori_loop(0, num_kb, body, dq0)
+    dq_ref[...] = dq.astype(dq_ref.dtype)
+
+
+def _fa_backward(q, k, v, out, lse, dout, causal, scale, block_q, block_k, interpret):
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    group = hq // hkv
+    block_q = _pick_block(sq, block_q)
+    block_k = _pick_block(skv, block_k)
+
+    qf = q.reshape(b * hq, sq, d)
+    kf = k.reshape(b * hkv, skv, d)
+    vf = v.reshape(b * hkv, skv, d)
+    of = out.reshape(b * hq, sq, d)
+    dof = dout.reshape(b * hq, sq, d)
+    lsef = lse.reshape(b * hq, sq)
+
+    # Pre-pass: delta = rowsum(dO * O).
+    delta = pl.pallas_call(
+        _delta_kernel,
+        grid=(b * hq, sq // block_q),
+        in_specs=[
+            pl.BlockSpec((None, block_q, d), lambda bh, qi: (bh, qi, 0)),
+            pl.BlockSpec((None, block_q, d), lambda bh, qi: (bh, qi, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q), lambda bh, qi: (bh, qi)),
+        out_shape=jax.ShapeDtypeStruct((b * hq, sq), jnp.float32),
+        interpret=interpret,
+    )(of, dof)
+
+    def kv_map(bh, i):
+        bi = bh // hq
+        h = bh % hq
+        return (bi * hkv + h // group, 0, 0)
+
+    full_q = lambda bh, i: (bh, 0, 0)
+    full_q1 = lambda bh, i: (bh, 0)
+
+    # dK/dV at q-head granularity (GQA groups reduced below).
+    dk_q, dv_q = pl.pallas_call(
+        functools.partial(
+            _dkdv_kernel, scale=scale, causal=causal, block_q=block_q, sq=sq
+        ),
+        grid=(b * hq, skv // block_k),
+        in_specs=[
+            pl.BlockSpec((None, sq, d), full_q),      # q (full slab, streamed)
+            pl.BlockSpec((None, block_k, d), lambda bh, ki: (kv_map(bh, ki)[0], ki, 0)),
+            pl.BlockSpec((None, block_k, d), lambda bh, ki: (kv_map(bh, ki)[0], ki, 0)),
+            pl.BlockSpec((None, sq, d), full_q),      # dout
+            pl.BlockSpec((None, sq), full_q1),        # lse
+            pl.BlockSpec((None, sq), full_q1),        # delta
+        ],
+        out_specs=[
+            pl.BlockSpec((None, block_k, d), lambda bh, ki: (bh, ki, 0)),
+            pl.BlockSpec((None, block_k, d), lambda bh, ki: (bh, ki, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b * hq, skv, d), q.dtype),
+            jax.ShapeDtypeStruct((b * hq, skv, d), q.dtype),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf, dof, lsef, delta)
+
+    dq = pl.pallas_call(
+        functools.partial(
+            _dq_kernel, scale=scale, causal=causal, block_k=block_k, skv=skv
+        ),
+        grid=(b * hq, sq // block_q),
+        in_specs=[
+            pl.BlockSpec((None, block_q, d), lambda bh, qi: (bh, qi, 0)),
+            pl.BlockSpec((None, skv, d), kv_map),
+            pl.BlockSpec((None, skv, d), kv_map),
+            pl.BlockSpec((None, block_q, d), lambda bh, qi: (bh, qi, 0)),
+            pl.BlockSpec((None, block_q), lambda bh, qi: (bh, qi)),
+            pl.BlockSpec((None, block_q), lambda bh, qi: (bh, qi)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, d), lambda bh, qi: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hq, sq, d), q.dtype),
+        interpret=interpret,
+    )(qf, kf, vf, dof, lsef, delta)
+
+    # Reduce GQA groups: each kv head received contributions from `group`
+    # query heads.
+    dk = dk_q.reshape(b, hkv, group, skv, d).sum(axis=2).astype(k.dtype)
+    dv = dv_q.reshape(b, hkv, group, skv, d).sum(axis=2).astype(v.dtype)
+    return dq.reshape(b, hq, sq, d), dk, dv
+
+
+# ---------------------------------------------------------------------------
+# custom_vjp glue
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _flash_attention(q, k, v, causal, scale, block_q, block_k, interpret):
+    out, _ = _fa_forward(q, k, v, causal, scale, block_q, block_k, interpret)
+    return out
+
+
+def _fa_fwd_rule(q, k, v, causal, scale, block_q, block_k, interpret):
+    out, lse = _fa_forward(q, k, v, causal, scale, block_q, block_k, interpret)
+    return out, (q, k, v, out, lse)
+
+
+def _fa_bwd_rule(causal, scale, block_q, block_k, interpret, res, dout):
+    q, k, v, out, lse = res
+    return _fa_backward(
+        q, k, v, out, lse, dout, causal, scale, block_q, block_k, interpret
+    )
+
+
+_flash_attention.defvjp(_fa_fwd_rule, _fa_bwd_rule)
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = True,
+) -> jax.Array:
+    """Fused multi-head attention with online softmax (FlashAttention-2).
+
+    q: [B, Hq, Sq, D]; k, v: [B, Hkv, Skv, D], Hq % Hkv == 0 (GQA).
+    Differentiable via a hand-written FA2 backward (delta/dKdV/dQ kernels).
+    """
+    b, hq, sq, d = q.shape
+    if k.shape[1] == 0 or hq % k.shape[1] != 0:
+        raise ValueError(f"Hq={hq} must be a positive multiple of Hkv={k.shape[1]}")
+    if scale is None:
+        scale = 1.0 / (d**0.5)
+    return _flash_attention(q, k, v, causal, scale, block_q, block_k, interpret)
+
+
+def flash_attention_with_lse(q, k, v, *, causal=True, scale=None,
+                             block_q=DEFAULT_BLOCK_Q, block_k=DEFAULT_BLOCK_K,
+                             interpret=True):
+    """Forward-only variant exposing the log-sum-exp residuals (for tests)."""
+    if scale is None:
+        scale = 1.0 / (q.shape[-1] ** 0.5)
+    return _fa_forward(q, k, v, causal, scale, block_q, block_k, interpret)

@@ -1,0 +1,108 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the CORE correctness signal: every Pallas kernel in this package
+must match its oracle to tight tolerances across a hypothesis-driven sweep
+of shapes and dtypes (see python/tests/test_kernels.py).
+
+The oracles are deliberately written in the most direct (naive) form —
+materialize the full attention matrix, full-precision softmax — so that a
+bug in the tiled/online-softmax kernel cannot be masked by a matching bug
+here.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm_ref(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """RMSNorm: x / rms(x) * w, normalizing over the last axis.
+
+    Matches the Llama formulation: the mean-square is computed in f32
+    regardless of input dtype, and the result is cast back to x.dtype.
+    """
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(ms + eps)
+    return (y * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def _repeat_kv(k: jax.Array, n_rep: int) -> jax.Array:
+    """Expand KV heads for grouped-query attention: [B,Hkv,S,D] -> [B,Hq,S,D]."""
+    if n_rep == 1:
+        return k
+    b, hkv, s, d = k.shape
+    k = jnp.broadcast_to(k[:, :, None, :, :], (b, hkv, n_rep, s, d))
+    return k.reshape(b, hkv * n_rep, s, d)
+
+
+def attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    causal: bool = True,
+    scale: float | None = None,
+) -> jax.Array:
+    """Naive scaled dot-product attention with GQA and optional causal mask.
+
+    q: [B, Hq, Sq, D]; k, v: [B, Hkv, Skv, D] with Hq % Hkv == 0.
+    Softmax is computed in f32 for numerical parity with the online-softmax
+    kernel; output is cast back to q.dtype.
+    """
+    b, hq, sq, d = q.shape
+    hkv = k.shape[1]
+    assert hq % hkv == 0, f"GQA requires Hq % Hkv == 0, got {hq} % {hkv}"
+    k = _repeat_kv(k, hq // hkv)
+    v = _repeat_kv(v, hq // hkv)
+    if scale is None:
+        scale = 1.0 / (d**0.5)
+    logits = (
+        jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+        * scale
+    )
+    if causal:
+        skv = k.shape[2]
+        # Align the causal diagonal to the *end* of the KV sequence so a
+        # query at position i attends to kv positions <= i + (skv - sq).
+        mask = jnp.tril(jnp.ones((sq, skv), dtype=bool), k=skv - sq)
+        logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def attention_ref_with_lse(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    causal: bool = True,
+    scale: float | None = None,
+):
+    """Reference that also returns the log-sum-exp rows, used to validate the
+    residuals the FlashAttention forward saves for its backward pass."""
+    b, hq, sq, d = q.shape
+    hkv = k.shape[1]
+    k = _repeat_kv(k, hq // hkv)
+    v = _repeat_kv(v, hq // hkv)
+    if scale is None:
+        scale = 1.0 / (d**0.5)
+    logits = (
+        jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+        * scale
+    )
+    if causal:
+        skv = k.shape[2]
+        mask = jnp.tril(jnp.ones((sq, skv), dtype=bool), k=skv - sq)
+        logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    p = jnp.exp(logits - lse[..., None])
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype), lse
+
+
+def swiglu_ref(x: jax.Array, wg: jax.Array, wu: jax.Array, wd: jax.Array) -> jax.Array:
+    """SwiGLU MLP: down( silu(x @ wg) * (x @ wu) )."""
+    g = jax.nn.silu(x @ wg)
+    u = x @ wu
+    return (g * u) @ wd

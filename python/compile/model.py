@@ -1,0 +1,368 @@
+"""L2: mini-Llama in JAX, structured around the paper's Fig. 1 op taxonomy.
+
+Every operation in the paper's diagram (i_e, attn_n, qkv_ip, qkv_s, qkv_t,
+qkv_re, qkv_c, attn_fa, attn_or, attn_op, attn_ra, mlp_n, mlp_gp, mlp_gs,
+mlp_up, mlp_gu, mlp_dp, mlp_ra, ln, lp) exists here as a named function, so
+that `aot.py` can lower each one to its own HLO artifact (the Rust runtime
+executes them op-by-op to produce a *real-execution* Chopper trace) as well
+as lower the fused forward/train-step graphs.
+
+The compute hot-spots call the L1 Pallas kernels:
+  * attn_fa  -> kernels.flash_attention (FlashAttention-2, custom VJP)
+  * *_n / ln -> kernels.rmsnorm         (fused RMSNorm, custom VJP)
+
+This file is build-time only; it is never imported on the Rust request path.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.flash_attention import flash_attention
+from .kernels.rmsnorm import rmsnorm
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Llama-style decoder configuration.
+
+    `mini()` is the AOT/CPU-executable scale; `llama3_8b()` is the paper's
+    Table II configuration (used analytically by the Rust simulator, far too
+    large to execute on the CPU PJRT plugin).
+    """
+
+    vocab: int = 2048
+    hidden: int = 256
+    layers: int = 4
+    q_heads: int = 8
+    kv_heads: int = 4
+    ffn: int = 896
+    seq: int = 128
+    rope_theta: float = 10000.0
+    eps: float = 1e-5
+
+    @property
+    def head_dim(self) -> int:
+        return self.hidden // self.q_heads
+
+    @staticmethod
+    def mini() -> "ModelConfig":
+        return ModelConfig()
+
+    @staticmethod
+    def tiny() -> "ModelConfig":
+        """For fast unit tests."""
+        return ModelConfig(vocab=97, hidden=32, layers=2, q_heads=4, kv_heads=2,
+                           ffn=48, seq=16)
+
+    @staticmethod
+    def llama3_8b() -> "ModelConfig":
+        # Table II: 32 layers, 4096 token (hidden 4096), FFN 14336, 32/8 heads.
+        return ModelConfig(vocab=128256, hidden=4096, layers=32, q_heads=32,
+                           kv_heads=8, ffn=14336, seq=4096, rope_theta=500000.0)
+
+    def param_count(self) -> int:
+        h, f, v = self.hidden, self.ffn, self.vocab
+        hd = self.head_dim
+        per_layer = (
+            h * h                      # wq
+            + 2 * h * (self.kv_heads * hd)  # wk, wv
+            + h * h                    # wo
+            + 3 * h * f                # wg, wu, wd
+            + 2 * h                    # attn_n, mlp_n weights
+        )
+        return v * h + self.layers * per_layer + h + h * v  # embed + layers + ln + lp
+
+
+class LayerParams(NamedTuple):
+    attn_n: jax.Array  # [H]
+    wq: jax.Array      # [H, Hq*D]
+    wk: jax.Array      # [H, Hkv*D]
+    wv: jax.Array      # [H, Hkv*D]
+    wo: jax.Array      # [Hq*D, H]
+    mlp_n: jax.Array   # [H]
+    wg: jax.Array      # [H, F]
+    wu: jax.Array      # [H, F]
+    wd: jax.Array      # [F, H]
+
+
+class Params(NamedTuple):
+    embed: jax.Array           # [V, H]
+    layers: tuple              # tuple[LayerParams, ...]
+    ln: jax.Array              # [H]
+    lp: jax.Array              # [H, V]
+
+
+def init_params(cfg: ModelConfig, seed) -> Params:
+    """Initialize parameters. `seed` may be a traced int32 scalar, so this
+    function itself can be lowered to an HLO artifact (artifacts/init.hlo.txt)
+    and executed from Rust — keeping Python off the runtime path entirely."""
+    key = jax.random.PRNGKey(seed)
+    h, f, v = cfg.hidden, cfg.ffn, cfg.vocab
+    hd = cfg.head_dim
+    kq, kk, kv_, ko, kg, ku, kd, ke, kl = jax.random.split(key, 9)
+
+    def norm_init(k, shape, fan_in):
+        return jax.random.normal(k, shape, jnp.float32) * (fan_in**-0.5)
+
+    layers = []
+    for i in range(cfg.layers):
+        ki = jax.random.fold_in(kq, i)
+        k1, k2, k3, k4, k5, k6, k7 = jax.random.split(ki, 7)
+        layers.append(
+            LayerParams(
+                attn_n=jnp.ones((h,), jnp.float32),
+                wq=norm_init(k1, (h, cfg.q_heads * hd), h),
+                wk=norm_init(k2, (h, cfg.kv_heads * hd), h),
+                wv=norm_init(k3, (h, cfg.kv_heads * hd), h),
+                wo=norm_init(k4, (cfg.q_heads * hd, h), cfg.q_heads * hd),
+                mlp_n=jnp.ones((h,), jnp.float32),
+                wg=norm_init(k5, (h, f), h),
+                wu=norm_init(k6, (h, f), h),
+                wd=norm_init(k7, (f, h), f),
+            )
+        )
+    return Params(
+        embed=norm_init(ke, (v, h), h),
+        layers=tuple(layers),
+        ln=jnp.ones((h,), jnp.float32),
+        lp=norm_init(kl, (h, v), h),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Fig. 1 operations, one named function each
+# ---------------------------------------------------------------------------
+
+
+def op_i_e(embed: jax.Array, tokens: jax.Array) -> jax.Array:
+    """Input embedding lookup. tokens: [B, S] int32 -> [B, S, H]."""
+    return embed[tokens]
+
+
+def op_attn_n(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """Attention-input RMSNorm (fused Pallas kernel)."""
+    return rmsnorm(x, w, eps=eps)
+
+
+def op_qkv_ip(x: jax.Array, wq, wk, wv):
+    """QKV input projections: three GEMMs (kept separate so each shows up as
+    its own kernel, like the rocBLAS GEMMs in the paper's trace)."""
+    return x @ wq, x @ wk, x @ wv
+
+
+def op_qkv_s(q, k, v, q_heads: int, kv_heads: int):
+    """Split heads: [B,S,H*D] -> [B,S,H,D]."""
+    b, s, _ = q.shape
+    d = q.shape[-1] // q_heads
+    return (
+        q.reshape(b, s, q_heads, d),
+        k.reshape(b, s, kv_heads, d),
+        v.reshape(b, s, kv_heads, d),
+    )
+
+
+def op_qkv_t(q, k, v):
+    """Transpose to attention layout [B,H,S,D]."""
+    return (
+        q.transpose(0, 2, 1, 3),
+        k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3),
+    )
+
+
+def _rope_tables(s: int, d: int, theta: float):
+    pos = jnp.arange(s, dtype=jnp.float32)[:, None]
+    freq = theta ** (-jnp.arange(0, d, 2, dtype=jnp.float32) / d)[None, :]
+    ang = pos * freq  # [S, D/2]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def op_qkv_re(q, k, theta: float = 10000.0):
+    """Rotary position embedding applied to q and k ([B,H,S,D])."""
+    s, d = q.shape[-2], q.shape[-1]
+    cos, sin = _rope_tables(s, d, theta)
+
+    def rot(x):
+        x1, x2 = x[..., 0::2], x[..., 1::2]
+        y1 = x1 * cos - x2 * sin
+        y2 = x1 * sin + x2 * cos
+        return jnp.stack([y1, y2], axis=-1).reshape(x.shape)
+
+    return rot(q), rot(k)
+
+
+def op_qkv_c(q, k, v):
+    """Contiguous-copy op: in PyTorch this is .contiguous() before the FA
+    kernel; in XLA we force a materializing copy so the op exists in the
+    lowered HLO (and hence in the real-execution trace) like in the paper."""
+    cp = lambda t: jax.lax.optimization_barrier(t)
+    return cp(q), cp(k), cp(v)
+
+
+def op_attn_fa(q, k, v, *, causal: bool = True) -> jax.Array:
+    """FlashAttention (L1 Pallas kernel, custom FA2 VJP)."""
+    return flash_attention(q, k, v, causal=causal)
+
+
+def op_attn_or(x: jax.Array) -> jax.Array:
+    """Output reshape [B,H,S,D] -> [B,S,H*D]."""
+    b, h, s, d = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, h * d)
+
+
+def op_attn_op(x: jax.Array, wo: jax.Array) -> jax.Array:
+    """Attention output projection."""
+    return x @ wo
+
+
+def op_attn_ra(x: jax.Array, res: jax.Array) -> jax.Array:
+    """Residual add."""
+    return x + res
+
+
+def op_mlp_n(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    return rmsnorm(x, w, eps=eps)
+
+
+def op_mlp_gp(x, wg):
+    return x @ wg
+
+
+def op_mlp_gs(g):
+    return jax.nn.silu(g)
+
+
+def op_mlp_up(x, wu):
+    return x @ wu
+
+
+def op_mlp_gu(g, u):
+    return g * u
+
+
+def op_mlp_dp(x, wd):
+    return x @ wd
+
+
+def op_mlp_ra(x, res):
+    return x + res
+
+
+def op_ln(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """Final RMSNorm."""
+    return rmsnorm(x, w, eps=eps)
+
+
+def op_lp(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Logits projection."""
+    return x @ w
+
+
+# ---------------------------------------------------------------------------
+# Composed model
+# ---------------------------------------------------------------------------
+
+
+def decoder_layer(cfg: ModelConfig, p: LayerParams, x: jax.Array) -> jax.Array:
+    res = x
+    h = op_attn_n(x, p.attn_n, cfg.eps)
+    q, k, v = op_qkv_ip(h, p.wq, p.wk, p.wv)
+    q, k, v = op_qkv_s(q, k, v, cfg.q_heads, cfg.kv_heads)
+    q, k, v = op_qkv_t(q, k, v)
+    q, k = op_qkv_re(q, k, cfg.rope_theta)
+    q, k, v = op_qkv_c(q, k, v)
+    a = op_attn_fa(q, k, v)
+    a = op_attn_or(a)
+    a = op_attn_op(a, p.wo)
+    x = op_attn_ra(a, res)
+
+    res = x
+    h = op_mlp_n(x, p.mlp_n, cfg.eps)
+    g = op_mlp_gs(op_mlp_gp(h, p.wg))
+    u = op_mlp_up(h, p.wu)
+    m = op_mlp_dp(op_mlp_gu(g, u), p.wd)
+    return op_mlp_ra(m, res)
+
+
+def forward(cfg: ModelConfig, params: Params, tokens: jax.Array) -> jax.Array:
+    """Full forward pass: tokens [B, S] -> logits [B, S, V]."""
+    x = op_i_e(params.embed, tokens)
+    for p in params.layers:
+        x = decoder_layer(cfg, p, x)
+    x = op_ln(x, params.ln, cfg.eps)
+    return op_lp(x, params.lp)
+
+
+def loss_fn(cfg: ModelConfig, params: Params, tokens, targets) -> jax.Array:
+    """Mean next-token cross-entropy. targets: [B, S] int32."""
+    logits = forward(cfg, params, tokens)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def sgd_train_step(cfg: ModelConfig, params: Params, tokens, targets, lr):
+    """One SGD step. Returns (new_params, loss). Lowered to
+    artifacts/train_step.hlo.txt and driven from Rust for the end-to-end
+    training example."""
+    loss, grads = jax.value_and_grad(lambda p: loss_fn(cfg, p, tokens, targets))(
+        params
+    )
+    new_params = jax.tree_util.tree_map(lambda p, g: p - lr * g, params, grads)
+    return new_params, loss
+
+
+# ---------------------------------------------------------------------------
+# Flat parameter plumbing (HLO interchange wants a flat list of arrays)
+# ---------------------------------------------------------------------------
+
+LAYER_FIELDS = list(LayerParams._fields)
+
+
+def param_spec(cfg: ModelConfig):
+    """Ordered (name, shape) list describing the flat parameter layout used
+    by the AOT artifacts. Mirrored by the Rust runtime via the manifest."""
+    h, f, v = cfg.hidden, cfg.ffn, cfg.vocab
+    hd = cfg.head_dim
+    spec = [("embed", (v, h))]
+    shapes = {
+        "attn_n": (h,),
+        "wq": (h, cfg.q_heads * hd),
+        "wk": (h, cfg.kv_heads * hd),
+        "wv": (h, cfg.kv_heads * hd),
+        "wo": (cfg.q_heads * hd, h),
+        "mlp_n": (h,),
+        "wg": (h, f),
+        "wu": (h, f),
+        "wd": (f, h),
+    }
+    for i in range(cfg.layers):
+        for name in LAYER_FIELDS:
+            spec.append((f"layer{i}.{name}", shapes[name]))
+    spec.append(("ln", (h,)))
+    spec.append(("lp", (h, v)))
+    return spec
+
+
+def flatten_params(params: Params) -> list:
+    flat = [params.embed]
+    for lp_ in params.layers:
+        flat.extend(list(lp_))
+    flat.append(params.ln)
+    flat.append(params.lp)
+    return flat
+
+
+def unflatten_params(cfg: ModelConfig, flat) -> Params:
+    n = len(LAYER_FIELDS)
+    layers = []
+    idx = 1
+    for _ in range(cfg.layers):
+        layers.append(LayerParams(*flat[idx : idx + n]))
+        idx += n
+    return Params(embed=flat[0], layers=tuple(layers), ln=flat[idx], lp=flat[idx + 1])

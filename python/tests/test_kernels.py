@@ -1,0 +1,236 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+hypothesis sweeps the shape/dtype/block space; assert_allclose against
+ref.py is the core correctness signal for the kernel layer.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import ref
+from compile.kernels.flash_attention import (
+    flash_attention,
+    flash_attention_with_lse,
+    _pick_block,
+)
+from compile.kernels.rmsnorm import rmsnorm
+
+jax.config.update("jax_enable_x64", False)
+
+
+def rnd(key, shape, dtype):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32).astype(dtype)
+
+
+TOL = {jnp.float32: dict(rtol=2e-5, atol=2e-5), jnp.bfloat16: dict(rtol=3e-2, atol=3e-2)}
+
+
+# ---------------------------------------------------------------------------
+# FlashAttention forward
+# ---------------------------------------------------------------------------
+
+
+class TestFlashAttentionForward:
+    @pytest.mark.parametrize("causal", [True, False])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_ref_basic(self, causal, dtype):
+        q = rnd(0, (2, 4, 64, 16), dtype)
+        k = rnd(1, (2, 2, 64, 16), dtype)
+        v = rnd(2, (2, 2, 64, 16), dtype)
+        out = flash_attention(q, k, v, causal=causal, block_q=16, block_k=16)
+        expect = ref.attention_ref(q, k, v, causal=causal)
+        assert_allclose(np.asarray(out, np.float32), np.asarray(expect, np.float32),
+                        **TOL[dtype])
+
+    def test_mha_no_gqa(self):
+        q = rnd(0, (1, 3, 32, 8), jnp.float32)
+        k = rnd(1, (1, 3, 32, 8), jnp.float32)
+        v = rnd(2, (1, 3, 32, 8), jnp.float32)
+        out = flash_attention(q, k, v, block_q=8, block_k=8)
+        assert_allclose(np.asarray(out), np.asarray(ref.attention_ref(q, k, v)),
+                        rtol=2e-5, atol=2e-5)
+
+    def test_cross_attention_longer_kv(self):
+        """Skv > Sq with the causal diagonal aligned to the KV end."""
+        q = rnd(0, (1, 2, 16, 8), jnp.float32)
+        k = rnd(1, (1, 2, 48, 8), jnp.float32)
+        v = rnd(2, (1, 2, 48, 8), jnp.float32)
+        out = flash_attention(q, k, v, causal=True, block_q=8, block_k=8)
+        assert_allclose(np.asarray(out),
+                        np.asarray(ref.attention_ref(q, k, v, causal=True)),
+                        rtol=2e-5, atol=2e-5)
+
+    def test_custom_scale(self):
+        q = rnd(0, (1, 2, 32, 8), jnp.float32)
+        k = rnd(1, (1, 2, 32, 8), jnp.float32)
+        v = rnd(2, (1, 2, 32, 8), jnp.float32)
+        out = flash_attention(q, k, v, scale=0.25, block_q=8, block_k=8)
+        assert_allclose(np.asarray(out),
+                        np.asarray(ref.attention_ref(q, k, v, scale=0.25)),
+                        rtol=2e-5, atol=2e-5)
+
+    def test_lse_matches_ref(self):
+        q = rnd(0, (2, 2, 32, 8), jnp.float32)
+        k = rnd(1, (2, 2, 32, 8), jnp.float32)
+        v = rnd(2, (2, 2, 32, 8), jnp.float32)
+        out, lse = flash_attention_with_lse(q, k, v, block_q=8, block_k=8)
+        expect, lse_ref = ref.attention_ref_with_lse(q, k, v)
+        # The kernel folds the 1/sqrt(d) scale into q before the logits, so
+        # its lse equals the ref lse computed over scaled logits.
+        assert_allclose(np.asarray(lse), np.asarray(lse_ref), rtol=1e-4, atol=1e-4)
+        assert_allclose(np.asarray(out), np.asarray(expect), rtol=2e-5, atol=2e-5)
+
+    def test_rejects_bad_gqa(self):
+        q = rnd(0, (1, 3, 16, 8), jnp.float32)
+        k = rnd(1, (1, 2, 16, 8), jnp.float32)
+        with pytest.raises(ValueError):
+            flash_attention(q, k, q)  # Hq=3 not a multiple of Hkv=2
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        b=st.integers(1, 3),
+        group=st.integers(1, 4),
+        hkv=st.integers(1, 3),
+        s_pow=st.integers(3, 7),  # S in {8..128}
+        d=st.sampled_from([4, 8, 16, 32]),
+        causal=st.booleans(),
+        block_q=st.sampled_from([8, 16, 32]),
+        block_k=st.sampled_from([8, 16, 32]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis_sweep(self, b, group, hkv, s_pow, d, causal, block_q,
+                              block_k, seed):
+        s = 2**s_pow
+        hq = hkv * group
+        q = rnd(seed, (b, hq, s, d), jnp.float32)
+        k = rnd(seed + 1, (b, hkv, s, d), jnp.float32)
+        v = rnd(seed + 2, (b, hkv, s, d), jnp.float32)
+        out = flash_attention(q, k, v, causal=causal, block_q=block_q,
+                              block_k=block_k)
+        expect = ref.attention_ref(q, k, v, causal=causal)
+        assert_allclose(np.asarray(out), np.asarray(expect), rtol=5e-5, atol=5e-5)
+
+
+# ---------------------------------------------------------------------------
+# FlashAttention backward (the paper's problem child — Insight 1)
+# ---------------------------------------------------------------------------
+
+
+class TestFlashAttentionBackward:
+    @pytest.mark.parametrize("causal", [True, False])
+    def test_grads_match_ref(self, causal):
+        q = rnd(0, (2, 4, 32, 8), jnp.float32)
+        k = rnd(1, (2, 2, 32, 8), jnp.float32)
+        v = rnd(2, (2, 2, 32, 8), jnp.float32)
+        dout = rnd(3, (2, 4, 32, 8), jnp.float32)
+
+        def via_kernel(q, k, v):
+            return jnp.vdot(
+                flash_attention(q, k, v, causal=causal, block_q=8, block_k=8), dout
+            )
+
+        def via_ref(q, k, v):
+            return jnp.vdot(ref.attention_ref(q, k, v, causal=causal), dout)
+
+        gk_ = jax.grad(via_kernel, argnums=(0, 1, 2))(q, k, v)
+        gr_ = jax.grad(via_ref, argnums=(0, 1, 2))(q, k, v)
+        for a, b, name in zip(gk_, gr_, "qkv"):
+            assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-4,
+                            err_msg=f"d{name}")
+
+    def test_batch_one_grads(self):
+        """Batch size one is the paper's pathological case — make sure our
+        kernel is *correct* there (the inefficiency is a perf property,
+        modelled in the simulator)."""
+        q = rnd(0, (1, 4, 64, 8), jnp.float32)
+        k = rnd(1, (1, 2, 64, 8), jnp.float32)
+        v = rnd(2, (1, 2, 64, 8), jnp.float32)
+        f = lambda q, k, v: (flash_attention(q, k, v, block_q=16, block_k=16) ** 2).sum()
+        g = lambda q, k, v: (ref.attention_ref(q, k, v) ** 2).sum()
+        for a, b in zip(jax.grad(f, (0, 1, 2))(q, k, v),
+                        jax.grad(g, (0, 1, 2))(q, k, v)):
+            assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        b=st.integers(1, 2),
+        group=st.integers(1, 2),
+        hkv=st.integers(1, 2),
+        s=st.sampled_from([16, 32]),
+        d=st.sampled_from([4, 8]),
+        causal=st.booleans(),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis_grads(self, b, group, hkv, s, d, causal, seed):
+        hq = hkv * group
+        q = rnd(seed, (b, hq, s, d), jnp.float32)
+        k = rnd(seed + 1, (b, hkv, s, d), jnp.float32)
+        v = rnd(seed + 2, (b, hkv, s, d), jnp.float32)
+        f = lambda q, k, v: (
+            flash_attention(q, k, v, causal=causal, block_q=8, block_k=8) ** 2
+        ).sum()
+        g = lambda q, k, v: (ref.attention_ref(q, k, v, causal=causal) ** 2).sum()
+        for a, b_ in zip(jax.grad(f, (0, 1, 2))(q, k, v),
+                         jax.grad(g, (0, 1, 2))(q, k, v)):
+            assert_allclose(np.asarray(a), np.asarray(b_), rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+
+class TestRmsNorm:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_ref(self, dtype):
+        x = rnd(0, (4, 32, 64), dtype)
+        w = (rnd(1, (64,), jnp.float32) + 1.0).astype(dtype)
+        assert_allclose(
+            np.asarray(rmsnorm(x, w), np.float32),
+            np.asarray(ref.rmsnorm_ref(x, w), np.float32),
+            **TOL[dtype],
+        )
+
+    def test_grads_match_ref(self):
+        x = rnd(0, (2, 8, 32), jnp.float32)
+        w = rnd(1, (32,), jnp.float32) + 1.0
+        f = lambda x, w: (rmsnorm(x, w) ** 3).sum()
+        g = lambda x, w: (ref.rmsnorm_ref(x, w) ** 3).sum()
+        for a, b in zip(jax.grad(f, (0, 1))(x, w), jax.grad(g, (0, 1))(x, w)):
+            assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-4)
+
+    def test_rejects_bad_weight(self):
+        with pytest.raises(ValueError):
+            rmsnorm(jnp.zeros((2, 8)), jnp.zeros((4,)))
+
+    @settings(max_examples=30, deadline=None)
+    @given(
+        rows=st.integers(1, 33),
+        h=st.sampled_from([8, 16, 32, 100, 256]),
+        block_rows=st.sampled_from([1, 4, 8, 16]),
+        eps=st.sampled_from([1e-5, 1e-6]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis_sweep(self, rows, h, block_rows, eps, seed):
+        x = rnd(seed, (rows, h), jnp.float32)
+        w = rnd(seed + 1, (h,), jnp.float32)
+        out = rmsnorm(x, w, eps=eps, block_rows=block_rows)
+        assert_allclose(np.asarray(out), np.asarray(ref.rmsnorm_ref(x, w, eps)),
+                        rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# Block picking helper
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=50, deadline=None)
+@given(n=st.integers(1, 4096), want=st.integers(1, 256))
+def test_pick_block_divides(n, want):
+    b = _pick_block(n, want)
+    assert 1 <= b <= max(want, 1)
+    assert n % b == 0

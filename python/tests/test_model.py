@@ -1,0 +1,154 @@
+"""L2 correctness: model shapes, op taxonomy parity, and training dynamics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import model as M
+from compile.kernels import ref
+
+CFG = M.ModelConfig.tiny()
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, 0)
+
+
+def toy_batch(cfg, b, seed=0):
+    """Synthetic corpus with learnable structure: next = (5*t + 7) % V with
+    occasional noise — the same generator the Rust e2e driver uses."""
+    key = jax.random.PRNGKey(seed)
+    first = jax.random.randint(key, (b, 1), 0, cfg.vocab)
+    toks = [first]
+    for _ in range(cfg.seq):
+        toks.append((5 * toks[-1] + 7) % cfg.vocab)
+    seq = jnp.concatenate(toks, axis=1)
+    return seq[:, : cfg.seq], seq[:, 1 : cfg.seq + 1]
+
+
+class TestShapes:
+    def test_forward_shape(self, params):
+        tokens = jnp.zeros((2, CFG.seq), jnp.int32)
+        logits = M.forward(CFG, params, tokens)
+        assert logits.shape == (2, CFG.seq, CFG.vocab)
+
+    def test_param_count_matches_spec(self, params):
+        flat = M.flatten_params(params)
+        spec = M.param_spec(CFG)
+        assert len(flat) == len(spec)
+        for arr, (name, shape) in zip(flat, spec):
+            assert arr.shape == shape, name
+        total = sum(int(np.prod(s)) for _, s in spec)
+        assert total == CFG.param_count()
+
+    def test_flatten_roundtrip(self, params):
+        flat = M.flatten_params(params)
+        back = M.unflatten_params(CFG, flat)
+        for a, b in zip(M.flatten_params(back), flat):
+            assert a is b
+
+    def test_loss_is_finite_scalar(self, params):
+        tokens, targets = toy_batch(CFG, 2)
+        loss = M.loss_fn(CFG, params, tokens, targets)
+        assert loss.shape == ()
+        assert bool(jnp.isfinite(loss))
+
+    def test_llama3_8b_param_count(self):
+        # Table II config should land near the nominal 8B.
+        cfg = M.ModelConfig.llama3_8b()
+        assert 7.0e9 < cfg.param_count() < 9.0e9
+
+
+class TestOpTaxonomy:
+    """Each Fig. 1 op function against a direct jnp formulation."""
+
+    def test_i_e(self, params):
+        tokens = jnp.array([[1, 2, 3]], jnp.int32)
+        out = M.op_i_e(params.embed, tokens)
+        assert_allclose(np.asarray(out), np.asarray(params.embed[tokens]))
+
+    def test_norms_match_ref(self, params):
+        x = jax.random.normal(jax.random.PRNGKey(0), (2, 8, CFG.hidden))
+        w = params.layers[0].attn_n
+        assert_allclose(np.asarray(M.op_attn_n(x, w)),
+                        np.asarray(ref.rmsnorm_ref(x, w)), rtol=2e-5, atol=2e-5)
+
+    def test_qkv_split_transpose_shapes(self):
+        b, s = 2, CFG.seq
+        hd = CFG.head_dim
+        q = jnp.zeros((b, s, CFG.q_heads * hd))
+        k = jnp.zeros((b, s, CFG.kv_heads * hd))
+        qs, ks, vs = M.op_qkv_s(q, k, k, CFG.q_heads, CFG.kv_heads)
+        assert qs.shape == (b, s, CFG.q_heads, hd)
+        qt, kt, vt = M.op_qkv_t(qs, ks, vs)
+        assert qt.shape == (b, CFG.q_heads, s, hd)
+        assert kt.shape == (b, CFG.kv_heads, s, hd)
+
+    def test_rope_preserves_norm(self):
+        q = jax.random.normal(jax.random.PRNGKey(1), (1, 2, 16, 8))
+        k = jax.random.normal(jax.random.PRNGKey(2), (1, 2, 16, 8))
+        qr, kr = M.op_qkv_re(q, k)
+        # Rotation preserves the norm of each (even, odd) pair.
+        assert_allclose(np.linalg.norm(np.asarray(qr)), np.linalg.norm(np.asarray(q)),
+                        rtol=1e-5)
+        # Position 0 is the identity rotation.
+        assert_allclose(np.asarray(qr[..., 0, :]), np.asarray(q[..., 0, :]),
+                        rtol=1e-6, atol=1e-6)
+
+    def test_attn_fa_matches_naive(self):
+        q = jax.random.normal(jax.random.PRNGKey(3), (1, 4, 16, 8))
+        k = jax.random.normal(jax.random.PRNGKey(4), (1, 2, 16, 8))
+        v = jax.random.normal(jax.random.PRNGKey(5), (1, 2, 16, 8))
+        assert_allclose(np.asarray(M.op_attn_fa(q, k, v)),
+                        np.asarray(ref.attention_ref(q, k, v)),
+                        rtol=5e-5, atol=5e-5)
+
+    def test_mlp_composition_matches_swiglu_ref(self, params):
+        lp_ = params.layers[0]
+        x = jax.random.normal(jax.random.PRNGKey(6), (2, 4, CFG.hidden))
+        g = M.op_mlp_gs(M.op_mlp_gp(x, lp_.wg))
+        u = M.op_mlp_up(x, lp_.wu)
+        out = M.op_mlp_dp(M.op_mlp_gu(g, u), lp_.wd)
+        assert_allclose(np.asarray(out),
+                        np.asarray(ref.swiglu_ref(x, lp_.wg, lp_.wu, lp_.wd)),
+                        rtol=2e-5, atol=2e-5)
+
+    def test_residual_adds(self):
+        x = jnp.ones((1, 2, 4))
+        assert_allclose(np.asarray(M.op_attn_ra(x, 2 * x)), 3.0)
+        assert_allclose(np.asarray(M.op_mlp_ra(x, x)), 2.0)
+
+
+class TestTraining:
+    def test_sgd_step_reduces_loss(self, params):
+        tokens, targets = toy_batch(CFG, 4)
+        p = params
+        l0 = float(M.loss_fn(CFG, p, tokens, targets))
+        step = jax.jit(lambda p, t, g: M.sgd_train_step(CFG, p, t, g, 0.5))
+        for _ in range(5):
+            p, loss = step(p, tokens, targets)
+        l5 = float(loss)
+        assert l5 < l0, f"loss did not decrease: {l0} -> {l5}"
+
+    def test_grads_flow_to_all_params(self, params):
+        tokens, targets = toy_batch(CFG, 2)
+        grads = jax.grad(lambda p: M.loss_fn(CFG, p, tokens, targets))(params)
+        for arr, (name, _) in zip(M.flatten_params(grads), M.param_spec(CFG)):
+            assert float(jnp.abs(arr).max()) > 0.0, f"zero grad for {name}"
+
+    def test_step_is_deterministic(self, params):
+        tokens, targets = toy_batch(CFG, 2)
+        p1, l1 = M.sgd_train_step(CFG, params, tokens, targets, 0.1)
+        p2, l2 = M.sgd_train_step(CFG, params, tokens, targets, 0.1)
+        assert float(l1) == float(l2)
+        for a, b in zip(M.flatten_params(p1), M.flatten_params(p2)):
+            assert_allclose(np.asarray(a), np.asarray(b))
+
+    def test_init_traced_seed(self):
+        """init_params must be lowerable with a traced seed (init.hlo.txt)."""
+        fn = jax.jit(lambda s: M.flatten_params(M.init_params(CFG, s)))
+        flat = fn(jnp.int32(7))
+        assert len(flat) == len(M.param_spec(CFG))

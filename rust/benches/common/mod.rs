@@ -1,0 +1,63 @@
+//! Shared setup for the figure benches: the paper's profiling protocol
+//! (Table II model, 20 iterations / 10 warmup, both FSDP versions) at a
+//! layer count tunable via CHOPPER_BENCH_LAYERS (default 32 — full scale).
+
+use chopper::chopper::report::{run_sweep, SweepRun};
+use chopper::config::{FsdpVersion, ModelConfig, NodeSpec, WorkloadConfig};
+use chopper::sim::{run_workload, ProfiledRun};
+
+pub fn layers() -> u64 {
+    std::env::var("CHOPPER_BENCH_LAYERS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(32)
+}
+
+pub fn iters() -> u32 {
+    std::env::var("CHOPPER_BENCH_ITERS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(20)
+}
+
+pub fn model() -> ModelConfig {
+    let mut cfg = ModelConfig::llama3_8b();
+    cfg.layers = layers();
+    cfg
+}
+
+pub fn node() -> NodeSpec {
+    NodeSpec::mi300x_node()
+}
+
+/// The full paper sweep (10 runs).
+pub fn paper_sweep() -> Vec<SweepRun> {
+    let it = iters();
+    eprintln!(
+        "setup: paper sweep at {} layers × {} iterations (10 runs)…",
+        layers(),
+        it
+    );
+    run_sweep(
+        &node(),
+        &model(),
+        &[FsdpVersion::V1, FsdpVersion::V2],
+        it,
+        it / 2,
+    )
+}
+
+/// One profiled workload.
+pub fn one(label: &str, fsdp: FsdpVersion) -> SweepRun {
+    let it = iters();
+    let mut wl = WorkloadConfig::parse_label(label, fsdp).expect("label");
+    wl.iterations = it;
+    wl.warmup = it / 2;
+    eprintln!("setup: {} at {} layers × {} iterations…", wl.label_with_fsdp(), layers(), it);
+    let run: ProfiledRun = run_workload(&node(), &model(), &wl);
+    SweepRun { wl, run }
+}
+
+pub fn find<'a>(runs: &'a [SweepRun], label: &str) -> &'a SweepRun {
+    runs.iter().find(|r| r.label() == label).expect(label)
+}

@@ -1,0 +1,55 @@
+//! Fig. 11 bench: preparation/call overheads of the top operations.
+//! Shape checks: f_ie and opt_step dominate (pipeline fill/empty,
+//! Insight 5); FSDPv2 shows *more* call overhead on the ops where it
+//! serializes copies (f_attn_n, b_mlp_dp, b_ie) yet less on opt_step
+//! (Section V-D3); everything else is small.
+
+mod common;
+
+use chopper::benchkit::{section, value, Bench};
+use chopper::chopper::op_launch_overheads;
+use chopper::chopper::report::fig11;
+use chopper::config::FsdpVersion;
+use chopper::model::ops::{OpRef, OpType, Phase};
+
+fn main() {
+    let v1 = common::one("b2s4", FsdpVersion::V1);
+    let v2 = common::one("b2s4", FsdpVersion::V2);
+
+    section("Fig. 11 — figure generation");
+    Bench::new("fig11_generate").samples(5).run(|| fig11(&v1, &v2));
+
+    section("Fig. 11 — launch-overhead analysis hot path");
+    Bench::new("op_launch_overheads")
+        .samples(10)
+        .run(|| op_launch_overheads(&v1.run.trace));
+
+    section("Fig. 11 — paper-shape checks");
+    let o1 = op_launch_overheads(&v1.run.trace);
+    let o2 = op_launch_overheads(&v2.run.trace);
+    let f_ie = o1[&OpRef::fwd(OpType::IE)];
+    let opt = o1[&OpRef::new(OpType::OptStep, Phase::Optimizer)];
+    let gemm = o1[&OpRef::fwd(OpType::MlpUp)];
+    value("f_ie total overhead v1 (paper: top)", f_ie.total() / 1e3, "µs");
+    value("f_ie prep overhead v1", f_ie.prep / 1e3, "µs");
+    value("opt_step call overhead v1", opt.call / 1e3, "µs");
+    value("f_mlp_up total overhead v1 (paper: tiny)", gemm.total() / 1e3, "µs");
+    assert!(f_ie.total() > gemm.total() * 10.0, "Insight 5: f_ie dominates");
+    assert!(f_ie.prep > 0.0, "f_ie must show prep overhead (pipeline fill)");
+    assert!(opt.call > gemm.call, "opt_step call overhead must stand out");
+
+    // v2 reduces opt_step bubbles…
+    let opt2 = o2[&OpRef::new(OpType::OptStep, Phase::Optimizer)];
+    value("opt_step call v1 vs v2", opt.call / opt2.call.max(1.0), "x");
+    assert!(opt2.call < opt.call, "Obs: v2 shrinks optimizer bubbles");
+    // …but serializes copies before b_mlp_dp (more call overhead there).
+    let dp1 = o1[&OpRef::bwd(OpType::MlpDp)];
+    let dp2 = o2[&OpRef::bwd(OpType::MlpDp)];
+    value("b_mlp_dp call overhead v1", dp1.call / 1e3, "µs");
+    value("b_mlp_dp call overhead v2 (paper: larger)", dp2.call / 1e3, "µs");
+    assert!(
+        dp2.call > dp1.call,
+        "Section V-D3: v2 serialized copies must appear as b_mlp_dp call overhead"
+    );
+    println!("\nfig11 shape OK");
+}

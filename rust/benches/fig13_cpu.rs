@@ -1,0 +1,43 @@
+//! Fig. 13 bench: host CPU core utilization.
+//! Shape checks (Insight 7): median active cores ≫ the Eq. 5 lower bound,
+//! a small physical-core footprint (paper: 12.5%), and rare SMT-sibling
+//! co-scheduling.
+
+mod common;
+
+use chopper::benchkit::{section, value, Bench};
+use chopper::chopper::report::fig13;
+use chopper::chopper::CpuUtilAnalysis;
+use chopper::config::FsdpVersion;
+
+fn main() {
+    let sr = common::one("b2s4", FsdpVersion::V2);
+
+    section("Fig. 13 — figure generation");
+    Bench::new("fig13_generate").samples(5).run(|| fig13(&sr));
+
+    section("Fig. 13 — CPU analysis hot path");
+    Bench::new("cpu_util_analyze")
+        .samples(10)
+        .run(|| CpuUtilAnalysis::analyze(&sr.run.cpu));
+
+    section("Fig. 13 — paper-shape checks");
+    let a = CpuUtilAnalysis::analyze(&sr.run.cpu);
+    value("median active cores (paper ~25)", a.median_active(), "cores");
+    value("median min cores, Eq.5 (paper ~9)", a.median_min_cores(), "cores");
+    value(
+        "physical footprint (paper ~12.5%)",
+        a.physical_footprint() * 100.0,
+        "%",
+    );
+    value("SMT co-sched windows", a.smt_cosched_rate() * 100.0, "%");
+    assert!(a.median_active() >= 20.0 && a.median_active() <= 30.0);
+    assert!(a.median_min_cores() >= 7.0 && a.median_min_cores() <= 12.0);
+    assert!(
+        a.median_active() > 2.0 * a.median_min_cores(),
+        "Insight 7: active cores could shrink >2x"
+    );
+    assert!(a.physical_footprint() < 0.25);
+    assert!(a.smt_cosched_rate() < 0.2);
+    println!("\nfig13 shape OK");
+}

@@ -1,0 +1,51 @@
+//! Fig. 14 bench: average frequency & power, FSDPv1 vs FSDPv2.
+//! Shape check (Observation 6): v2 sustains ~20-25% higher clocks with
+//! less variation at nearly identical power.
+
+mod common;
+
+use chopper::benchkit::{section, value, Bench};
+use chopper::chopper::report::fig14;
+use chopper::config::FsdpVersion;
+use chopper::util::stats;
+
+fn active(sr: &chopper::chopper::report::SweepRun) -> (Vec<f64>, Vec<f64>) {
+    let samples: Vec<_> = sr
+        .run
+        .power
+        .samples
+        .iter()
+        .filter(|s| s.power_w > 400.0)
+        .collect();
+    (
+        samples.iter().map(|s| s.freq_mhz).collect(),
+        samples.iter().map(|s| s.power_w).collect(),
+    )
+}
+
+fn main() {
+    let v1 = common::one("b2s4", FsdpVersion::V1);
+    let v2 = common::one("b2s4", FsdpVersion::V2);
+
+    section("Fig. 14 — figure generation");
+    Bench::new("fig14_generate").samples(5).run(|| fig14(&v1, &v2));
+
+    section("Fig. 14 — paper-shape checks");
+    let (f1, p1) = active(&v1);
+    let (f2, p2) = active(&v2);
+    let freq_ratio = stats::mean(&f2) / stats::mean(&f1);
+    let power_gap = (stats::mean(&p2) - stats::mean(&p1)).abs() / stats::mean(&p1);
+    value("v1 GPU freq", stats::mean(&f1), "MHz");
+    value("v2 GPU freq", stats::mean(&f2), "MHz");
+    value("v2/v1 freq ratio (paper ~1.2-1.25)", freq_ratio, "x");
+    value("v1 freq sigma", stats::std(&f1), "MHz");
+    value("v2 freq sigma (paper: much lower)", stats::std(&f2), "MHz");
+    value("power gap (paper ~0)", power_gap * 100.0, "%");
+    assert!(freq_ratio > 1.1, "Obs 6: v2 must clock ≥10% higher");
+    assert!(
+        stats::std(&f2) < stats::std(&f1),
+        "Obs 6: v2 must have less frequency variation"
+    );
+    assert!(power_gap < 0.15, "Obs 6: power must be nearly identical");
+    println!("\nfig14 shape OK");
+}

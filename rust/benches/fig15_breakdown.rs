@@ -1,0 +1,61 @@
+//! Fig. 15 bench: the Eq. (6)-(10) theoretical-vs-actual breakdown.
+//! Shape checks (Insight 8): frequency overhead dominates for GEMMs,
+//! utilization overhead is highest for FlashAttention, instruction
+//! overhead is rare, and the v1→v2 improvement is in the frequency term.
+
+mod common;
+
+use chopper::benchkit::{section, value, Bench};
+use chopper::chopper::report::fig15;
+use chopper::chopper::{all_breakdowns, AlignedTrace};
+use chopper::config::FsdpVersion;
+use chopper::model::ops::{OpRef, OpType};
+
+fn main() {
+    let v1 = common::one("b2s4", FsdpVersion::V1);
+    let v2 = common::one("b2s4", FsdpVersion::V2);
+    let node = common::node();
+    let runs = [v1, v2];
+
+    section("Fig. 15 — figure generation");
+    Bench::new("fig15_generate").samples(3).run(|| fig15(&runs, &node));
+
+    section("Fig. 15 — alignment + breakdown hot path");
+    let aligned1 = AlignedTrace::align(runs[0].run.trace.clone(), &runs[0].run.counters);
+    Bench::new("all_breakdowns")
+        .samples(5)
+        .run(|| all_breakdowns(&aligned1, &node.gpu));
+
+    section("Fig. 15 — paper-shape checks");
+    let b1 = all_breakdowns(&aligned1, &node.gpu);
+    let aligned2 = AlignedTrace::align(runs[1].run.trace.clone(), &runs[1].run.counters);
+    let b2 = all_breakdowns(&aligned2, &node.gpu);
+
+    let gemm1 = b1[&OpRef::fwd(OpType::MlpUp)];
+    let fa1 = b1[&OpRef::fwd(OpType::AttnFa)];
+    value("f_mlp_up v1: inst", gemm1.inst, "x");
+    value("f_mlp_up v1: util", gemm1.util, "x");
+    value("f_mlp_up v1: overlap", gemm1.overlap, "x");
+    value("f_mlp_up v1: freq (paper: dominant)", gemm1.freq, "x");
+    value("f_attn_fa v1: util (paper: high)", fa1.util, "x");
+    assert!(
+        gemm1.freq > gemm1.inst && gemm1.freq > gemm1.overlap,
+        "Insight 8: frequency overhead must dominate for GEMM"
+    );
+    assert!(fa1.util > gemm1.util, "FA utilization overhead > GEMM's");
+
+    // v1 → v2: the big change is the frequency term (Fig. 14's effect).
+    let gemm2 = b2[&OpRef::fwd(OpType::MlpUp)];
+    value("f_mlp_up v2: freq", gemm2.freq, "x");
+    value("freq overhead v1/v2 (paper >1)", gemm1.freq / gemm2.freq, "x");
+    value("util overhead v1/v2 (paper ~1)", gemm1.util / gemm2.util, "x");
+    assert!(
+        gemm1.freq / gemm2.freq > 1.08,
+        "Insight 8: v2 must shrink the frequency overhead"
+    );
+    assert!(
+        (gemm1.util / gemm2.util - 1.0).abs() < 0.1,
+        "same kernels ⇒ same utilization overhead across v1/v2"
+    );
+    println!("\nfig15 shape OK");
+}

@@ -1,0 +1,67 @@
+//! Fig. 4 bench: regenerate the end-to-end throughput/duration/launch
+//! breakdown for the full configuration sweep, check the paper's shape
+//! (Observations 1 & 3), and time the analysis hot path.
+
+mod common;
+
+use chopper::benchkit::{section, value, Bench};
+use chopper::chopper::report::fig4;
+use chopper::chopper::throughput;
+
+fn main() {
+    let runs = common::paper_sweep();
+
+    section("Fig. 4 — figure generation");
+    let fig = Bench::new("fig4_generate").samples(5).run(|| fig4(&runs));
+    drop(fig);
+
+    section("Fig. 4 — throughput analysis hot path");
+    let b2s4 = common::find(&runs, "b2s4-FSDPv1");
+    let tokens = b2s4
+        .wl
+        .tokens_per_iteration(b2s4.run.trace.meta.num_gpus as u64)
+        as f64;
+    Bench::new("throughput_b2s4")
+        .samples(10)
+        .run(|| throughput(&b2s4.run.trace, tokens));
+
+    section("Fig. 4 — paper-shape checks");
+    let tp = |label: &str| {
+        let sr = common::find(&runs, label);
+        let tok = sr.wl.tokens_per_iteration(8) as f64;
+        throughput(&sr.run.trace, tok)
+    };
+    for label in [
+        "b1s4-FSDPv1",
+        "b2s4-FSDPv1",
+        "b4s4-FSDPv1",
+        "b1s8-FSDPv1",
+        "b2s8-FSDPv1",
+        "b2s4-FSDPv2",
+    ] {
+        value(&format!("throughput {label}"), tp(label).tokens_per_sec, "tok/s");
+    }
+    // Observation 1: batch-1 underutilization (~30% lower throughput).
+    let b1 = tp("b1s4-FSDPv1").tokens_per_sec;
+    let b2 = tp("b2s4-FSDPv1").tokens_per_sec;
+    value("obs1 b1s4/b2s4 throughput ratio (paper ~0.7)", b1 / b2, "x");
+    // Observation 3: launch-overhead share shrinks with b·s.
+    let small = tp("b1s4-FSDPv1");
+    let large = tp("b2s8-FSDPv1");
+    value(
+        "obs3 launch share b1s4 (paper: larger)",
+        small.launch_ns / small.iter_ns,
+        "frac",
+    );
+    value(
+        "obs3 launch share b2s8 (paper: smaller)",
+        large.launch_ns / large.iter_ns,
+        "frac",
+    );
+    assert!(b1 < b2, "Obs 1 violated: b1 {b1} !< b2 {b2}");
+    assert!(
+        small.launch_ns / small.iter_ns > large.launch_ns / large.iter_ns,
+        "Obs 3 violated"
+    );
+    println!("\nfig4 shape OK");
+}

@@ -1,0 +1,58 @@
+//! Fig. 5 bench: operation-duration distributions across the sweep, with
+//! the paper's scaling checks (GEMM ∝ b·s, FA ∝ b·s², optimizer constant,
+//! and the Insight-1 backward-FA batch-1 anomaly).
+
+mod common;
+
+use chopper::benchkit::{section, value, Bench};
+use chopper::chopper::aggregate::op_duration_samples;
+use chopper::chopper::report::fig5;
+use chopper::config::FsdpVersion;
+use chopper::model::ops::{OpRef, OpType, Phase};
+use chopper::util::stats;
+
+fn main() {
+    let runs = common::paper_sweep();
+
+    section("Fig. 5 — figure generation");
+    Bench::new("fig5_generate").samples(5).run(|| fig5(&runs));
+
+    let med = |label: &str, op: OpRef| {
+        let sr = common::find(&runs, label);
+        stats::median(&op_duration_samples(&sr.run.trace, op))
+    };
+
+    section("Fig. 5 — paper-shape checks (FSDPv1)");
+    // GEMMs scale with b*s (Section V-B1).
+    let up1 = med("b1s4-FSDPv1", OpRef::fwd(OpType::MlpUp));
+    let up2 = med("b2s4-FSDPv1", OpRef::fwd(OpType::MlpUp));
+    value("f_mlp_up b2s4/b1s4 (paper ~2)", up2 / up1, "x");
+    assert!(up2 / up1 > 1.5 && up2 / up1 < 2.8);
+
+    // Forward FA scales ~b*s^2.
+    let fa_s4 = med("b2s4-FSDPv1", OpRef::fwd(OpType::AttnFa));
+    let fa_s8 = med("b2s8-FSDPv1", OpRef::fwd(OpType::AttnFa));
+    value("f_attn_fa s8/s4 (paper ~4)", fa_s8 / fa_s4, "x");
+    assert!(fa_s8 / fa_s4 > 2.8, "FA must scale superlinearly in s");
+
+    // Insight 1: backward FA at b1 SLOWER than b2 despite fewer flops.
+    let bfa1 = med("b1s4-FSDPv1", OpRef::bwd(OpType::AttnFa));
+    let bfa2 = med("b2s4-FSDPv1", OpRef::bwd(OpType::AttnFa));
+    value("insight1 b_attn_fa b1s4 (ms)", bfa1 / 1e6, "ms");
+    value("insight1 b_attn_fa b2s4 (ms)", bfa2 / 1e6, "ms");
+    assert!(bfa1 > bfa2, "Insight 1 violated: {bfa1} !> {bfa2}");
+
+    // Optimizer ops constant across b and s (Section V-B3).
+    let ga_a = med("b1s4-FSDPv1", OpRef::new(OpType::GradAccum, Phase::Optimizer));
+    let ga_b = med("b2s8-FSDPv1", OpRef::new(OpType::GradAccum, Phase::Optimizer));
+    value("b_ga b2s8/b1s4 (paper ~1)", ga_b / ga_a, "x");
+    assert!((ga_b / ga_a - 1.0).abs() < 0.35);
+
+    // FSDPv2 uniformly faster vector ops (Fig. 5 via frequency).
+    let n1 = med("b2s4-FSDPv1", OpRef::bwd(OpType::MlpN));
+    let n2 = med("b2s4-FSDPv2", OpRef::bwd(OpType::MlpN));
+    value("b_mlp_n v2/v1 (paper <1)", n2 / n1, "x");
+
+    let _ = FsdpVersion::V1;
+    println!("\nfig5 shape OK");
+}

@@ -1,0 +1,68 @@
+//! Fig. 7 bench: overlap-vs-duration for the dominant ops at b2s4.
+//! Shape checks: b_attn_n ≈ constant high overlap, b_mlp_n ≈ low overlap
+//! (Observation 4), and covered GEMM instances run slower than uncovered
+//! ones (Insight 3's mechanism).
+
+mod common;
+
+use chopper::benchkit::{section, value, Bench};
+use chopper::chopper::report::fig7;
+use chopper::chopper::{overlap_samples, summarize_op_overlap, Filter};
+use chopper::config::FsdpVersion;
+use chopper::model::ops::{OpRef, OpType};
+use chopper::util::stats;
+
+fn main() {
+    let v1 = common::one("b2s4", FsdpVersion::V1);
+    let v2 = common::one("b2s4", FsdpVersion::V2);
+
+    section("Fig. 7 — figure generation");
+    Bench::new("fig7_generate").samples(5).run(|| fig7(&v1, &v2));
+
+    section("Fig. 7 — overlap analysis hot path");
+    Bench::new("overlap_samples_full_trace")
+        .samples(10)
+        .run(|| overlap_samples(&v1.run.trace, &Filter::sampled()));
+
+    section("Fig. 7 — paper-shape checks (FSDPv1)");
+    let attn_n = summarize_op_overlap(&v1.run.trace, OpRef::bwd(OpType::AttnN));
+    let mlp_n = summarize_op_overlap(&v1.run.trace, OpRef::bwd(OpType::MlpN));
+    value("b_attn_n median overlap (paper ~0.9)", attn_n.ratio_q[2], "");
+    value("b_mlp_n median overlap (paper ~0)", mlp_n.ratio_q[2], "");
+    value(
+        "obs4 b_attn_n/b_mlp_n duration (paper >1)",
+        attn_n.duration_q[2] / mlp_n.duration_q[2],
+        "x",
+    );
+    assert!(attn_n.ratio_q[2] > 0.8, "b_attn_n must be mostly overlapped");
+    assert!(mlp_n.ratio_q[2] < 0.3, "b_mlp_n must be mostly clear");
+    assert!(
+        attn_n.duration_q[2] > mlp_n.duration_q[2],
+        "Obs 4 violated: identical ops, overlapped one must be slower"
+    );
+
+    // Insight 3 mechanism: covered GEMM instances slower than uncovered.
+    let mut f = Filter::sampled();
+    f.op = Some(OpRef::bwd(OpType::MlpUp));
+    let samples = overlap_samples(&v1.run.trace, &f);
+    let hi: Vec<f64> = samples
+        .iter()
+        .filter(|s| s.ratio > 0.9)
+        .map(|s| s.inst.duration())
+        .collect();
+    let lo: Vec<f64> = samples
+        .iter()
+        .filter(|s| s.ratio < 0.1)
+        .map(|s| s.inst.duration())
+        .collect();
+    if !hi.is_empty() && !lo.is_empty() {
+        let slowdown = stats::mean(&hi) / stats::mean(&lo);
+        // Note: "covered" includes spin-phase occupancy (RCCL kernels
+        // polling, small CU-occupancy penalty), which dilutes the pure
+        // transfer-contention effect — so this lands below the paper's
+        // 15-20%. The transfer-only effect is asserted in the sim tests.
+        value("b_mlp_up covered/uncovered duration (paper ~1.15-1.2)", slowdown, "x");
+        assert!(slowdown > 0.99, "contention must not speed up covered instances");
+    }
+    println!("\nfig7 shape OK");
+}

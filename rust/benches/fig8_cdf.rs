@@ -1,0 +1,44 @@
+//! Fig. 8 bench: per-GPU overlap/duration CDFs of f_attn_op at b2s4.
+//! Shape check: per-GPU overlap variation exists, and the low-overlap GPUs
+//! have lower normalized durations (Insight 3).
+
+mod common;
+
+use chopper::benchkit::{section, value, Bench};
+use chopper::chopper::per_gpu_overlap_cdf;
+use chopper::chopper::report::fig8;
+use chopper::config::FsdpVersion;
+use chopper::model::ops::{OpRef, OpType};
+use chopper::util::stats;
+
+fn main() {
+    let sr = common::one("b2s4", FsdpVersion::V1);
+
+    section("Fig. 8 — figure generation");
+    Bench::new("fig8_generate").samples(5).run(|| fig8(&sr));
+
+    section("Fig. 8 — per-GPU CDF hot path");
+    Bench::new("per_gpu_overlap_cdf")
+        .samples(10)
+        .run(|| per_gpu_overlap_cdf(&sr.run.trace, OpRef::fwd(OpType::AttnOp)));
+
+    section("Fig. 8 — paper-shape checks");
+    let per = per_gpu_overlap_cdf(&sr.run.trace, OpRef::fwd(OpType::AttnOp));
+    assert_eq!(per.len(), 8, "one CDF per GPU");
+    let mut med_ratios = Vec::new();
+    let mut med_durs = Vec::new();
+    for (gpu, pts) in &per {
+        let r = stats::median(&pts.iter().map(|(r, _)| *r).collect::<Vec<_>>());
+        let d = stats::median(&pts.iter().map(|(_, d)| *d).collect::<Vec<_>>());
+        value(&format!("gpu{gpu} median overlap"), r, "");
+        med_ratios.push(r);
+        med_durs.push(d);
+    }
+    let spread = stats::max(&med_ratios) - stats::min(&med_ratios);
+    value("overlap spread across GPUs", spread, "");
+    assert!(
+        stats::max(&med_durs) > stats::min(&med_durs),
+        "durations must vary across GPUs"
+    );
+    println!("\nfig8 shape OK");
+}

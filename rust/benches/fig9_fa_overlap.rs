@@ -1,0 +1,40 @@
+//! Fig. 9 bench: f_attn_fa overlap across configurations.
+//! Shape check (Insight 4): overlap is near-total at b1s4 and decreases as
+//! batch size / sequence length grow (FA scales b·s², comm stays flat).
+
+mod common;
+
+use chopper::benchkit::{section, value, Bench};
+use chopper::chopper::report::fig9;
+use chopper::chopper::summarize_op_overlap;
+use chopper::model::ops::{OpRef, OpType};
+
+fn main() {
+    let runs = common::paper_sweep();
+
+    section("Fig. 9 — figure generation");
+    Bench::new("fig9_generate").samples(5).run(|| fig9(&runs));
+
+    section("Fig. 9 — paper-shape checks (FSDPv1)");
+    let med = |label: &str| {
+        let sr = common::find(&runs, label);
+        summarize_op_overlap(&sr.run.trace, OpRef::fwd(OpType::AttnFa)).ratio_q[2]
+    };
+    let small = med("b1s4-FSDPv1");
+    let mid = med("b2s4-FSDPv1");
+    let large = med("b2s8-FSDPv1");
+    value("f_attn_fa median overlap b1s4 (paper ~1.0)", small, "");
+    value("f_attn_fa median overlap b2s4", mid, "");
+    value("f_attn_fa median overlap b2s8 (paper: lower)", large, "");
+    assert!(small > 0.8, "b1s4 FA should be almost fully overlapped");
+    assert!(
+        large < small,
+        "Insight 4 violated: overlap must fall with b·s ({small} -> {large})"
+    );
+    // Backward FA should NOT be consistently overlapped (Section V-C4).
+    let sr = common::find(&runs, "b2s4-FSDPv1");
+    let bwd = summarize_op_overlap(&sr.run.trace, OpRef::bwd(OpType::AttnFa));
+    value("b_attn_fa median overlap (paper ~0)", bwd.ratio_q[2], "");
+    assert!(bwd.ratio_q[2] < 0.5);
+    println!("\nfig9 shape OK");
+}

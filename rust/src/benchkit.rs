@@ -1,0 +1,134 @@
+//! Minimal benchmark harness (replaces criterion in this offline build;
+//! see DESIGN.md substitution table). Every `cargo bench` target uses
+//! `Bench` to run warmup + sampled iterations and print a stable,
+//! greppable report line per benchmark:
+//!
+//! `bench <name> ... median 12.345 ms  (n=10, sd 0.4%)`
+
+use crate::util::stats;
+use std::time::Instant;
+
+/// Configuration for one bench group.
+#[derive(Debug, Clone)]
+pub struct Bench {
+    pub warmup: u32,
+    pub samples: u32,
+    name: String,
+}
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub median_s: f64,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub samples: u32,
+}
+
+impl BenchResult {
+    pub fn report_line(&self) -> String {
+        let (v, unit) = scale(self.median_s);
+        format!(
+            "bench {:<40} median {:>9.3} {}  (n={}, sd {:.1}%)",
+            self.name,
+            v,
+            unit,
+            self.samples,
+            100.0 * self.std_s / self.mean_s.max(1e-12)
+        )
+    }
+}
+
+fn scale(s: f64) -> (f64, &'static str) {
+    if s < 1e-6 {
+        (s * 1e9, "ns")
+    } else if s < 1e-3 {
+        (s * 1e6, "µs")
+    } else if s < 1.0 {
+        (s * 1e3, "ms")
+    } else {
+        (s, "s ")
+    }
+}
+
+impl Bench {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self {
+            warmup: 1,
+            samples: 5,
+            name: name.into(),
+        }
+    }
+
+    pub fn warmup(mut self, n: u32) -> Self {
+        self.warmup = n;
+        self
+    }
+
+    pub fn samples(mut self, n: u32) -> Self {
+        self.samples = n;
+        self
+    }
+
+    /// Time `f`, print the report line, return the result. The closure's
+    /// return value is black-boxed so the work isn't optimized away.
+    pub fn run<T>(&self, mut f: impl FnMut() -> T) -> BenchResult {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut times = Vec::with_capacity(self.samples as usize);
+        for _ in 0..self.samples.max(1) {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        let r = BenchResult {
+            name: self.name.clone(),
+            median_s: stats::median(&times),
+            mean_s: stats::mean(&times),
+            std_s: stats::std(&times),
+            samples: self.samples,
+        };
+        println!("{}", r.report_line());
+        r
+    }
+}
+
+/// Print a section header in bench output.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+/// Print a named value in bench output (for paper-shape numbers, not
+/// wall-clock: throughputs, ratios, medians the figure reproduces).
+pub fn value(name: &str, v: f64, unit: &str) {
+    println!("value {name:<44} {v:>12.3} {unit}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_and_reports() {
+        let r = Bench::new("spin").warmup(0).samples(3).run(|| {
+            let mut x = 0u64;
+            for i in 0..10_000 {
+                x = x.wrapping_add(i);
+            }
+            x
+        });
+        assert!(r.median_s > 0.0);
+        assert_eq!(r.samples, 3);
+        assert!(r.report_line().contains("spin"));
+    }
+
+    #[test]
+    fn scale_picks_sane_units() {
+        assert_eq!(scale(2e-9).1, "ns");
+        assert_eq!(scale(2e-5).1, "µs");
+        assert_eq!(scale(2e-2).1, "ms");
+        assert_eq!(scale(2.0).1, "s ");
+    }
+}

@@ -1,0 +1,257 @@
+//! Duration breakdown — the gap between theoretical and actual performance
+//! (the paper's Section V-G, Eqs. (6)–(10), Fig. 15).
+//!
+//! For a GEMM/FlashAttention operation the actual duration factorizes as
+//!
+//!   D_act ≈ D_thr · Ovr_inst · Ovr_util · Ovr_overlap · Ovr_freq
+//!
+//! where D_thr = F_gemm / TPT_peak (Eq. 6), Ovr_inst = F_perf / F_gemm
+//! (padding, Eq. 7), Ovr_util = 1 / MFMA_util (Eq. 8), Ovr_overlap =
+//! D_50% / D_0% from the overlap-vs-duration profile (Eq. 9), and
+//! Ovr_freq = (D_act / D_peak) / Ovr_overlap with D_peak = C_gpu /
+//! Freq_peak (Eq. 10) — the residual DVFS term, which the paper finds
+//! dominates.
+
+use crate::chopper::align::AlignedTrace;
+use crate::chopper::aggregate::{op_instances, Filter};
+use crate::chopper::overlap::{duration_at_overlap, overlap_samples};
+use crate::config::GpuSpec;
+use crate::model::ops::{OpKind, OpRef};
+use crate::util::stats;
+use std::collections::BTreeMap;
+
+/// The Eq. (6)–(10) decomposition of one operation.
+#[derive(Debug, Clone, Copy)]
+pub struct OpBreakdown {
+    pub op: OpRef,
+    /// Median actual duration (ns) across sampled instances.
+    pub d_act: f64,
+    /// Eq. (6): theoretical duration at peak FLOPS (ns).
+    pub d_thr: f64,
+    /// Eq. (7): performed/theoretical flops, ≥ 1.
+    pub inst: f64,
+    /// Eq. (8): 1 / MFMA utilization, ≥ 1.
+    pub util: f64,
+    /// Eq. (9): D_50% / D_0%.
+    pub overlap: f64,
+    /// Eq. (10): residual frequency (DVFS) overhead.
+    pub freq: f64,
+    pub n: usize,
+}
+
+impl OpBreakdown {
+    /// Product of all overheads — should reconstruct D_act / D_thr.
+    pub fn total_overhead(&self) -> f64 {
+        self.inst * self.util * self.overlap * self.freq
+    }
+
+    /// Relative reconstruction error of the factorization.
+    pub fn residual(&self) -> f64 {
+        if self.d_thr <= 0.0 || self.d_act <= 0.0 {
+            return 0.0;
+        }
+        (self.d_thr * self.total_overhead() / self.d_act - 1.0).abs()
+    }
+}
+
+/// Compute the breakdown of one GEMM/FA op from an aligned trace.
+/// Returns None for ops with no MFMA work (vector/copy/comm).
+pub fn op_breakdown(
+    aligned: &AlignedTrace,
+    gpu_spec: &GpuSpec,
+    op: OpRef,
+) -> Option<OpBreakdown> {
+    if !matches!(op.op.kind(), OpKind::Gemm | OpKind::FlashAttn) {
+        return None;
+    }
+    let mut f = Filter::sampled();
+    f.op = Some(op);
+    let insts = op_instances(&aligned.trace, &f);
+    if insts.is_empty() {
+        return None;
+    }
+
+    // Median actual duration + per-instance counter sums.
+    let mut d_acts = Vec::with_capacity(insts.len());
+    let mut insts_ovr = Vec::new();
+    let mut utils = Vec::new();
+    let mut d_peaks = Vec::new();
+    for inst in &insts {
+        d_acts.push(inst.duration());
+        let mut f_perf = 0.0;
+        let mut cycles = 0.0;
+        let mut mfma_cycles = 0.0;
+        for &kid in &inst.kernel_ids {
+            if let Some(m) = aligned.metrics_by_id(kid) {
+                f_perf += m.flops_performed;
+                cycles += m.gpu_cycles;
+                mfma_cycles += m.gpu_cycles * m.mfma_util;
+            }
+        }
+        if inst.flops > 0.0 && f_perf > 0.0 {
+            insts_ovr.push(f_perf / inst.flops);
+        }
+        if cycles > 0.0 && mfma_cycles > 0.0 {
+            utils.push(cycles / mfma_cycles); // 1 / MFMA_util
+        }
+        if cycles > 0.0 {
+            // D_peak = C_gpu / Freq_peak (Eq. 10), in ns.
+            d_peaks.push(cycles / (gpu_spec.freq_peak_mhz * 1e-3));
+        }
+    }
+    if d_acts.is_empty() || d_peaks.is_empty() {
+        return None;
+    }
+    let d_act = stats::median(&d_acts);
+    let d_peak = stats::median(&d_peaks);
+    let flops_med = stats::median(&insts.iter().map(|i| i.flops).collect::<Vec<_>>());
+    let d_thr = flops_med / gpu_spec.peak_bf16_flops * 1e9;
+    let inst_ovr = if insts_ovr.is_empty() {
+        1.0
+    } else {
+        stats::median(&insts_ovr).max(1.0)
+    };
+    let util_ovr = if utils.is_empty() {
+        1.0
+    } else {
+        stats::median(&utils).max(1.0)
+    };
+
+    // Eq. (9): overlap overhead from the overlap-duration profile.
+    let ovl = overlap_samples(&aligned.trace, &f);
+    let profile: Vec<(f64, f64)> =
+        ovl.iter().map(|s| (s.ratio, s.inst.duration())).collect();
+    let d50 = duration_at_overlap(&profile, 0.5);
+    let d0 = duration_at_overlap(&profile, 0.0);
+    let overlap_ovr = if d0 > 0.0 && d50.is_finite() {
+        (d50 / d0).max(1.0)
+    } else {
+        1.0
+    };
+
+    // Eq. (10): frequency overhead, adjusted by the overlap term.
+    let freq_ovr = ((d_act / d_peak) / overlap_ovr).max(1.0);
+
+    Some(OpBreakdown {
+        op,
+        d_act,
+        d_thr,
+        inst: inst_ovr,
+        util: util_ovr,
+        overlap: overlap_ovr,
+        freq: freq_ovr,
+        n: insts.len(),
+    })
+}
+
+/// Breakdown of every GEMM + FA op present in the trace (Fig. 15's rows).
+pub fn all_breakdowns(
+    aligned: &AlignedTrace,
+    gpu_spec: &GpuSpec,
+) -> BTreeMap<OpRef, OpBreakdown> {
+    let mut ops: Vec<OpRef> = aligned
+        .trace
+        .events
+        .iter()
+        .filter(|e| matches!(e.kind(), OpKind::Gemm | OpKind::FlashAttn))
+        .map(|e| e.op)
+        .collect();
+    ops.sort();
+    ops.dedup();
+    ops.into_iter()
+        .filter_map(|op| op_breakdown(aligned, gpu_spec, op).map(|b| (op, b)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::*;
+    use crate::counters::Counter;
+    use crate::model::ops::OpType;
+    use crate::trace::collect::{HardwareProfiler, RuntimeProfiler};
+
+    fn aligned(batch: u64) -> AlignedTrace {
+        let node = NodeSpec::mi300x_node();
+        let mut cfg = ModelConfig::llama3_8b();
+        cfg.layers = 4;
+        let mut wl = WorkloadConfig::new(batch, 4096, FsdpVersion::V1);
+        wl.iterations = 2;
+        wl.warmup = 1;
+        let rt = RuntimeProfiler::new(node.clone()).capture(&cfg, &wl);
+        let hw = HardwareProfiler::new(node).capture(&cfg, &wl, &Counter::ALL);
+        AlignedTrace::align(rt.trace, &hw)
+    }
+
+    #[test]
+    fn gemm_breakdown_has_all_factors_ge_one() {
+        let a = aligned(2);
+        let b = op_breakdown(&a, &GpuSpec::mi300x(), OpRef::fwd(OpType::MlpUp))
+            .expect("gemm breakdown");
+        assert!(b.d_thr > 0.0);
+        assert!(b.inst >= 1.0);
+        assert!(b.util >= 1.0);
+        assert!(b.overlap >= 1.0);
+        assert!(b.freq >= 1.0);
+        assert!(b.d_act >= b.d_thr, "actual can't beat theoretical");
+    }
+
+    #[test]
+    fn factorization_reconstructs_actual_duration() {
+        let a = aligned(2);
+        for op in [
+            OpRef::fwd(OpType::MlpUp),
+            OpRef::fwd(OpType::MlpDp),
+            OpRef::bwd(OpType::MlpGp),
+        ] {
+            let b = op_breakdown(&a, &GpuSpec::mi300x(), op).unwrap();
+            assert!(
+                b.residual() < 0.35,
+                "{op}: residual {:.2} (act {:.0} thr {:.0} tot {:.2})",
+                b.residual(),
+                b.d_act,
+                b.d_thr,
+                b.total_overhead()
+            );
+        }
+    }
+
+    #[test]
+    fn fa_has_higher_util_overhead_than_gemm() {
+        // Section V-G3: utilization overhead particularly high for FA.
+        let a = aligned(2);
+        let fa = op_breakdown(&a, &GpuSpec::mi300x(), OpRef::fwd(OpType::AttnFa))
+            .unwrap();
+        let gemm = op_breakdown(&a, &GpuSpec::mi300x(), OpRef::fwd(OpType::MlpUp))
+            .unwrap();
+        assert!(fa.util > gemm.util, "fa {} !> gemm {}", fa.util, gemm.util);
+    }
+
+    #[test]
+    fn vector_ops_have_no_breakdown() {
+        let a = aligned(1);
+        assert!(op_breakdown(&a, &GpuSpec::mi300x(), OpRef::fwd(OpType::AttnN))
+            .is_none());
+    }
+
+    #[test]
+    fn all_breakdowns_cover_gemm_and_fa() {
+        let a = aligned(2);
+        let all = all_breakdowns(&a, &GpuSpec::mi300x());
+        assert!(all.contains_key(&OpRef::fwd(OpType::AttnFa)));
+        assert!(all.contains_key(&OpRef::bwd(OpType::MlpUp)));
+        assert!(all.len() >= 10);
+    }
+
+    #[test]
+    fn frequency_overhead_dominates_for_gemm() {
+        // Insight 8, at the mechanism level: with the power-capped DVFS
+        // governor, freq overhead exceeds instruction overhead and overlap
+        // overhead for the big MLP GEMMs.
+        let a = aligned(2);
+        let b = op_breakdown(&a, &GpuSpec::mi300x(), OpRef::fwd(OpType::MlpUp))
+            .unwrap();
+        assert!(b.freq > b.inst, "freq {} !> inst {}", b.freq, b.inst);
+        assert!(b.freq > b.overlap, "freq {} !> overlap {}", b.freq, b.overlap);
+    }
+}

@@ -1,0 +1,215 @@
+//! CPU utilization analysis — the paper's Section V-E, Eqs. (4)–(5).
+//!
+//! C_active = number of logical cores with non-zero utilization;
+//! C_min    = Σ util_i / 100, the theoretical lower bound on active cores;
+//! plus the logical→physical (SMT) mapping statistics behind Insight 7.
+
+use crate::trace::event::CpuTrace;
+use crate::util::stats;
+use std::collections::BTreeSet;
+
+/// Per-window core statistics.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CoreWindow {
+    pub t: f64,
+    /// Eq. (4).
+    pub active: u32,
+    /// Eq. (5).
+    pub min_cores: f64,
+    /// Physical cores with ≥2 active logical siblings this window.
+    pub smt_pairs: u32,
+}
+
+/// Full CPU-utilization analysis of one training run.
+#[derive(Debug, Clone)]
+pub struct CpuUtilAnalysis {
+    pub windows: Vec<CoreWindow>,
+    pub logical_cores: u32,
+    pub physical_cores: u32,
+    /// Physical cores that were ever active over the whole run.
+    pub ever_active_physical: u32,
+}
+
+impl CpuUtilAnalysis {
+    pub fn analyze(trace: &CpuTrace) -> Self {
+        let physical = trace.logical_cores / trace.smt.max(1);
+        let mut windows = Vec::with_capacity(trace.samples.len());
+        let mut ever: BTreeSet<u32> = BTreeSet::new();
+        for s in &trace.samples {
+            let mut active = 0u32;
+            let mut min_cores = 0.0;
+            let mut phys_seen: BTreeSet<u32> = BTreeSet::new();
+            let mut smt_pairs = 0u32;
+            for &(core, util) in &s.core_util {
+                if util > 0.0 {
+                    active += 1;
+                    min_cores += util / 100.0;
+                    let p = trace.physical_of(core);
+                    ever.insert(p);
+                    if !phys_seen.insert(p) {
+                        smt_pairs += 1;
+                    }
+                }
+            }
+            windows.push(CoreWindow {
+                t: s.t,
+                active,
+                min_cores,
+                smt_pairs,
+            });
+        }
+        Self {
+            windows,
+            logical_cores: trace.logical_cores,
+            physical_cores: physical,
+            ever_active_physical: ever.len() as u32,
+        }
+    }
+
+    pub fn median_active(&self) -> f64 {
+        stats::median(&self.windows.iter().map(|w| w.active as f64).collect::<Vec<_>>())
+    }
+
+    pub fn median_min_cores(&self) -> f64 {
+        stats::median(&self.windows.iter().map(|w| w.min_cores).collect::<Vec<_>>())
+    }
+
+    /// Fraction of physical cores ever active (the paper reports 12.5%).
+    pub fn physical_footprint(&self) -> f64 {
+        self.ever_active_physical as f64 / self.physical_cores.max(1) as f64
+    }
+
+    /// Fraction of windows in which any SMT sibling pair was co-scheduled.
+    pub fn smt_cosched_rate(&self) -> f64 {
+        if self.windows.is_empty() {
+            return 0.0;
+        }
+        self.windows.iter().filter(|w| w.smt_pairs > 0).count() as f64
+            / self.windows.len() as f64
+    }
+
+    /// Heatmap matrix for Fig. 13's bottom row: rows = physical cores that
+    /// were ever active, columns = windows, value = number of active
+    /// logical cores mapped there (0, 1 or 2).
+    pub fn physical_heatmap(&self, trace: &CpuTrace) -> (Vec<u32>, Vec<Vec<f64>>) {
+        let mut rows: Vec<u32> = Vec::new();
+        let mut seen = BTreeSet::new();
+        for s in &trace.samples {
+            for &(core, util) in &s.core_util {
+                if util > 0.0 && seen.insert(trace.physical_of(core)) {
+                    rows.push(trace.physical_of(core));
+                }
+            }
+        }
+        rows.sort_unstable();
+        let idx_of = |p: u32| rows.binary_search(&p).ok();
+        let mut m = vec![vec![0.0; trace.samples.len()]; rows.len()];
+        for (wi, s) in trace.samples.iter().enumerate() {
+            for &(core, util) in &s.core_util {
+                if util > 0.0 {
+                    if let Some(ri) = idx_of(trace.physical_of(core)) {
+                        m[ri][wi] += 1.0;
+                    }
+                }
+            }
+        }
+        (rows, m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::event::CpuSample;
+
+    fn trace_with(samples: Vec<Vec<(u32, f64)>>) -> CpuTrace {
+        CpuTrace {
+            logical_cores: 384,
+            smt: 2,
+            samples: samples
+                .into_iter()
+                .enumerate()
+                .map(|(i, core_util)| CpuSample {
+                    t: i as f64 * 1e6,
+                    core_util,
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn eq4_eq5_basic() {
+        let t = trace_with(vec![vec![(0, 100.0), (1, 50.0), (2, 0.0)]]);
+        let a = CpuUtilAnalysis::analyze(&t);
+        assert_eq!(a.windows[0].active, 2); // util > 0 only
+        assert!((a.windows[0].min_cores - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn smt_pair_detection() {
+        // Logical 5 and 197 map to physical 5 (384/2 = 192 offset).
+        let t = trace_with(vec![vec![(5, 80.0), (197, 20.0)]]);
+        let a = CpuUtilAnalysis::analyze(&t);
+        assert_eq!(a.windows[0].smt_pairs, 1);
+        assert_eq!(a.ever_active_physical, 1);
+    }
+
+    #[test]
+    fn footprint_counts_distinct_physical() {
+        let t = trace_with(vec![
+            vec![(0, 50.0), (1, 50.0)],
+            vec![(192, 50.0), (2, 50.0)], // 192 is sibling of 0
+        ]);
+        let a = CpuUtilAnalysis::analyze(&t);
+        assert_eq!(a.ever_active_physical, 3); // phys 0, 1, 2
+        assert!((a.physical_footprint() - 3.0 / 192.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn medians_over_windows() {
+        let t = trace_with(vec![
+            vec![(0, 100.0)],
+            vec![(0, 100.0), (1, 100.0)],
+            vec![(0, 100.0), (1, 100.0), (2, 100.0)],
+        ]);
+        let a = CpuUtilAnalysis::analyze(&t);
+        assert_eq!(a.median_active(), 2.0);
+        assert_eq!(a.median_min_cores(), 2.0);
+    }
+
+    #[test]
+    fn heatmap_shape_matches_rows_and_windows() {
+        let t = trace_with(vec![
+            vec![(0, 50.0), (5, 50.0)],
+            vec![(0, 50.0), (197, 50.0)],
+        ]);
+        let a = CpuUtilAnalysis::analyze(&t);
+        let (rows, m) = a.physical_heatmap(&t);
+        assert_eq!(rows, vec![0, 5]);
+        assert_eq!(m.len(), 2);
+        assert_eq!(m[0].len(), 2);
+        // physical 5 active in window 0 (logical 5) and window 1 (197).
+        assert_eq!(m[1][0], 1.0);
+        assert_eq!(m[1][1], 1.0);
+    }
+
+    #[test]
+    fn paper_scale_model_matches_insight7() {
+        // End-to-end with the host model: active cores well above the
+        // lower bound, tiny physical footprint.
+        use crate::config::*;
+        use crate::trace::collect::RuntimeProfiler;
+        let mut cfg = ModelConfig::llama3_8b();
+        cfg.layers = 2;
+        let mut wl = WorkloadConfig::new(1, 4096, FsdpVersion::V2);
+        wl.iterations = 1;
+        wl.warmup = 0;
+        let cap = RuntimeProfiler::new(NodeSpec::mi300x_node()).capture(&cfg, &wl);
+        let a = CpuUtilAnalysis::analyze(&cap.cpu);
+        assert!(a.median_active() >= 20.0 && a.median_active() <= 30.0);
+        assert!(a.median_min_cores() >= 7.0 && a.median_min_cores() <= 12.0);
+        assert!(a.median_active() > a.median_min_cores() * 2.0);
+        assert!(a.physical_footprint() < 0.25);
+        assert!(a.smt_cosched_rate() < 0.2);
+    }
+}

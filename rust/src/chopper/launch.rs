@@ -1,0 +1,264 @@
+//! Kernel-launch overhead — the paper's Section V-D, Eqs. (1)–(3).
+//!
+//! Launch overhead is the bubble between consecutive *compute* kernels
+//! (communication kernels are ignored; a serialized collective in the
+//! compute stream shows up as launch overhead, which Section V-D3 exploits
+//! to spot FSDPv2's serialized copies). The bubble splits into:
+//!
+//!   O_prep = max(t_l(i) − t_ke(i−1), 0)   — the CPU launched "too late";
+//!   O_call = min(t_ks(i) − t_l(i), t_ks(i) − t_ke(i−1)) — dispatch→start;
+//!   O_launch = O_prep + O_call.
+
+use crate::model::ops::{OpKind, OpRef, OpType, Phase};
+use crate::trace::event::{Stream, Trace, TraceEvent};
+use crate::util::stats;
+use std::collections::BTreeMap;
+
+/// Launch-overhead components of one kernel (ns).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LaunchOverhead {
+    pub prep: f64,
+    pub call: f64,
+}
+
+impl LaunchOverhead {
+    pub fn total(&self) -> f64 {
+        self.prep + self.call
+    }
+}
+
+/// Eqs. (1)–(2) for a kernel given the previous compute kernel's end.
+pub fn launch_overhead(e: &TraceEvent, prev_end: f64) -> LaunchOverhead {
+    let prep = (e.t_launch - prev_end).max(0.0);
+    let call = (e.t_start - e.t_launch).min(e.t_start - prev_end);
+    LaunchOverhead {
+        prep,
+        call: call.max(0.0),
+    }
+}
+
+/// Per-kernel overheads of one GPU's compute stream, in dispatch order.
+/// The first kernel of the trace has no predecessor and is skipped.
+pub fn per_kernel_overheads(trace: &Trace, gpu: u32) -> Vec<(usize, LaunchOverhead)> {
+    // FSDPv2's serialized parameter copies are treated like communication
+    // kernels (ignored as compute): the time they occupy becomes a bubble
+    // attributed to the next real operation — exactly how the paper spots
+    // them as call overhead on f_attn_n / b_mlp_dp / b_ie (Section V-D3).
+    let mut evs: Vec<(usize, &TraceEvent)> = trace
+        .events
+        .iter()
+        .enumerate()
+        .filter(|(_, e)| {
+            e.gpu == gpu
+                && e.stream == Stream::Compute
+                && e.op.op != OpType::ParamCopy
+        })
+        .collect();
+    evs.sort_by(|a, b| a.1.seq.cmp(&b.1.seq));
+    let mut out = Vec::with_capacity(evs.len().saturating_sub(1));
+    for w in evs.windows(2) {
+        let (_, prev) = w[0];
+        let (idx, cur) = w[1];
+        out.push((idx, launch_overhead(cur, prev.t_end)));
+    }
+    out
+}
+
+/// Mean prep/call overhead per operation across sampled iterations and all
+/// GPUs — Fig. 11's bars. The overhead of a kernel is attributed to the
+/// operation that kernel belongs to, so intra-op bubbles count too.
+pub fn op_launch_overheads(trace: &Trace) -> BTreeMap<OpRef, LaunchOverhead> {
+    let warmup = trace.meta.warmup;
+    let mut acc: BTreeMap<OpRef, (Vec<f64>, Vec<f64>)> = BTreeMap::new();
+    for gpu in 0..trace.meta.num_gpus {
+        for (idx, o) in per_kernel_overheads(trace, gpu) {
+            let e = &trace.events[idx];
+            if e.iter < warmup {
+                continue;
+            }
+            let entry = acc.entry(e.op).or_default();
+            entry.0.push(o.prep);
+            entry.1.push(o.call);
+        }
+    }
+    acc.into_iter()
+        .map(|(op, (preps, calls))| {
+            (
+                op,
+                LaunchOverhead {
+                    prep: stats::mean(&preps),
+                    call: stats::mean(&calls),
+                },
+            )
+        })
+        .collect()
+}
+
+/// Total launch overhead per (phase, kind) per (gpu, iteration) — the
+/// Fig. 4 launch-overhead row. Returns samples for median-taking.
+pub fn phase_kind_launch_samples(
+    trace: &Trace,
+) -> BTreeMap<(Phase, OpKind), Vec<f64>> {
+    let warmup = trace.meta.warmup;
+    let mut per: BTreeMap<(Phase, OpKind, u32, u32), f64> = BTreeMap::new();
+    for gpu in 0..trace.meta.num_gpus {
+        for (idx, o) in per_kernel_overheads(trace, gpu) {
+            let e = &trace.events[idx];
+            if e.iter < warmup {
+                continue;
+            }
+            *per.entry((e.op.phase, e.kind(), e.gpu, e.iter)).or_insert(0.0) +=
+                o.total();
+        }
+    }
+    let mut out: BTreeMap<(Phase, OpKind), Vec<f64>> = BTreeMap::new();
+    for ((phase, kind, _, _), v) in per {
+        out.entry((phase, kind)).or_default().push(v);
+    }
+    out
+}
+
+/// Total launch overhead of one (gpu, iteration) — used by the throughput
+/// definition ("maximum duration plus launch overhead across GPUs").
+pub fn iteration_launch_overhead(trace: &Trace) -> BTreeMap<(u32, u32), f64> {
+    let mut out: BTreeMap<(u32, u32), f64> = BTreeMap::new();
+    for gpu in 0..trace.meta.num_gpus {
+        for (idx, o) in per_kernel_overheads(trace, gpu) {
+            let e = &trace.events[idx];
+            *out.entry((e.gpu, e.iter)).or_insert(0.0) += o.total();
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::*;
+    use crate::model::ops::OpType;
+    use crate::trace::collect::RuntimeProfiler;
+
+    fn ev(seq: u64, t_l: f64, t_s: f64, t_e: f64) -> TraceEvent {
+        TraceEvent {
+            kernel_id: seq,
+            gpu: 0,
+            stream: Stream::Compute,
+            name: "k".into(),
+            op: OpRef::fwd(OpType::MlpUp),
+            layer: Some(0),
+            iter: 0,
+            t_launch: t_l,
+            t_start: t_s,
+            t_end: t_e,
+            seq,
+            fwd_link: None,
+            freq_mhz: 2100.0,
+            flops: 0.0,
+            bytes: 0.0,
+        }
+    }
+
+    #[test]
+    fn eq1_eq2_match_fig10_cases() {
+        // Case A: CPU launched before the previous kernel ended — no prep,
+        // call = start - prev_end.
+        let e = ev(1, 90.0, 110.0, 120.0);
+        let o = launch_overhead(&e, 100.0);
+        assert_eq!(o.prep, 0.0);
+        assert_eq!(o.call, 10.0);
+        // Case B: CPU launched late — prep = launch - prev_end,
+        // call = start - launch.
+        let e = ev(1, 130.0, 140.0, 150.0);
+        let o = launch_overhead(&e, 100.0);
+        assert_eq!(o.prep, 30.0);
+        assert_eq!(o.call, 10.0);
+        assert_eq!(o.total(), 40.0);
+    }
+
+    #[test]
+    fn back_to_back_kernels_have_no_overhead() {
+        let e = ev(1, 50.0, 100.0, 120.0);
+        let o = launch_overhead(&e, 100.0);
+        assert_eq!(o.prep, 0.0);
+        assert_eq!(o.call, 0.0);
+    }
+
+    fn trace() -> Trace {
+        let mut cfg = ModelConfig::llama3_8b();
+        cfg.layers = 4;
+        let mut wl = WorkloadConfig::new(2, 4096, FsdpVersion::V1);
+        wl.iterations = 2;
+        wl.warmup = 1;
+        RuntimeProfiler::new(NodeSpec::mi300x_node())
+            .capture(&cfg, &wl)
+            .trace
+    }
+
+    #[test]
+    fn fie_has_prep_overhead_from_pipeline_fill() {
+        // Insight 5: f_ie waits for the embedding all-gather at iteration
+        // start — large prep+call overhead, not a CPU bottleneck.
+        let t = trace();
+        let per_op = op_launch_overheads(&t);
+        let ie = per_op[&OpRef::fwd(OpType::IE)];
+        let mid_gemm = per_op[&OpRef::fwd(OpType::MlpUp)];
+        assert!(
+            ie.total() > mid_gemm.total() * 5.0,
+            "f_ie {:.0} !>> f_mlp_up {:.0}",
+            ie.total(),
+            mid_gemm.total()
+        );
+    }
+
+    #[test]
+    fn opt_step_has_large_call_overhead_v1() {
+        let t = trace();
+        let per_op = op_launch_overheads(&t);
+        let opt = per_op[&OpRef::new(OpType::OptStep, Phase::Optimizer)];
+        assert!(opt.call > 0.0);
+        let gemm = per_op[&OpRef::fwd(OpType::MlpDp)];
+        assert!(opt.total() > gemm.total());
+    }
+
+    #[test]
+    fn overheads_are_nonnegative() {
+        let t = trace();
+        for gpu in 0..8 {
+            for (_, o) in per_kernel_overheads(&t, gpu) {
+                assert!(o.prep >= 0.0 && o.call >= 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn fig4_launch_rollup_has_fwd_vec_entry() {
+        let t = trace();
+        let m = phase_kind_launch_samples(&t);
+        let v = &m[&(Phase::Forward, OpKind::Vector)];
+        assert_eq!(v.len(), 8, "8 gpus × 1 sampled iter");
+        assert!(v.iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn iteration_overhead_conserves_op_sums() {
+        // Sum over op-attributed overheads == sum over iterations (same
+        // kernels, different group-by) for sampled iters.
+        let t = trace();
+        let warmup = t.meta.warmup;
+        let per_iter = iteration_launch_overhead(&t);
+        let total_iter: f64 = per_iter
+            .iter()
+            .filter(|((_, it), _)| *it >= warmup)
+            .map(|(_, v)| v)
+            .sum();
+        let mut total_ops = 0.0;
+        for gpu in 0..8 {
+            for (idx, o) in per_kernel_overheads(&t, gpu) {
+                if t.events[idx].iter >= warmup {
+                    total_ops += o.total();
+                }
+            }
+        }
+        assert!((total_iter - total_ops).abs() / total_ops.max(1.0) < 1e-9);
+    }
+}

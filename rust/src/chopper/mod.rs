@@ -1,0 +1,24 @@
+//! The Chopper tool itself — the paper's contribution (Fig. 3): trace
+//! alignment, multi-granularity aggregation, overlap / launch-overhead /
+//! CPU-utilization / duration-breakdown analyses, throughput, and the
+//! figure generators.
+
+pub mod aggregate;
+pub mod align;
+pub mod breakdown;
+pub mod cpuutil;
+pub mod launch;
+pub mod overlap;
+pub mod report;
+pub mod throughput;
+
+pub use aggregate::{op_duration_samples, op_instances, Filter, OpInstanceAgg};
+pub use align::AlignedTrace;
+pub use breakdown::{all_breakdowns, op_breakdown, OpBreakdown};
+pub use cpuutil::CpuUtilAnalysis;
+pub use launch::{launch_overhead, op_launch_overheads, LaunchOverhead};
+pub use overlap::{
+    duration_at_overlap, overlap_samples, per_gpu_overlap_cdf,
+    summarize_op_overlap, CommIntervals, OpOverlapSummary,
+};
+pub use throughput::{throughput, Throughput};

@@ -1,0 +1,327 @@
+//! C3 overlap analysis — the paper's Section V-C.
+//!
+//! The overlap ratio of a compute operation instance is the fraction of its
+//! wall duration during which a communication kernel was resident on the
+//! same GPU. Variation in overlap across GPUs explains variation in
+//! duration (Insight 3); identical operations with different overlap have
+//! different durations (Observation 4).
+
+use crate::chopper::aggregate::{op_instances, Filter, OpInstanceAgg};
+use crate::model::ops::OpRef;
+use crate::trace::event::{Stream, Trace};
+use crate::util::stats;
+use std::collections::BTreeMap;
+
+/// Sorted, merged comm-occupancy intervals per GPU.
+#[derive(Debug, Clone, Default)]
+pub struct CommIntervals {
+    /// gpu → sorted non-overlapping (start, end).
+    per_gpu: BTreeMap<u32, Vec<(f64, f64)>>,
+}
+
+impl CommIntervals {
+    pub fn from_trace(trace: &Trace) -> Self {
+        let mut per_gpu: BTreeMap<u32, Vec<(f64, f64)>> = BTreeMap::new();
+        for e in trace.events.iter().filter(|e| e.stream == Stream::Comm) {
+            per_gpu
+                .entry(e.gpu)
+                .or_default()
+                .push((e.t_start, e.t_end));
+        }
+        for v in per_gpu.values_mut() {
+            v.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            // Merge overlapping/adjacent intervals.
+            let mut merged: Vec<(f64, f64)> = Vec::with_capacity(v.len());
+            for &(s, e) in v.iter() {
+                match merged.last_mut() {
+                    Some(last) if s <= last.1 => last.1 = last.1.max(e),
+                    _ => merged.push((s, e)),
+                }
+            }
+            *v = merged;
+        }
+        Self { per_gpu }
+    }
+
+    /// Nanoseconds of [s, e) covered by comm activity on `gpu`.
+    /// Binary-searches the merged interval list.
+    pub fn covered_ns(&self, gpu: u32, s: f64, e: f64) -> f64 {
+        let Some(iv) = self.per_gpu.get(&gpu) else {
+            return 0.0;
+        };
+        // First interval that could intersect: last with start <= e.
+        let start_idx = iv.partition_point(|&(_, end)| end <= s);
+        let mut acc = 0.0;
+        for &(is, ie) in &iv[start_idx..] {
+            if is >= e {
+                break;
+            }
+            let lo = is.max(s);
+            let hi = ie.min(e);
+            if hi > lo {
+                acc += hi - lo;
+            }
+        }
+        acc
+    }
+
+    /// Overlap ratio of an interval in [0, 1].
+    pub fn ratio(&self, gpu: u32, s: f64, e: f64) -> f64 {
+        if e <= s {
+            return 0.0;
+        }
+        (self.covered_ns(gpu, s, e) / (e - s)).clamp(0.0, 1.0)
+    }
+}
+
+/// One (instance, overlap-ratio) observation.
+#[derive(Debug, Clone)]
+pub struct OverlapSample {
+    pub inst: OpInstanceAgg,
+    pub ratio: f64,
+}
+
+/// Overlap ratio of every compute instance matching `filter`.
+pub fn overlap_samples(trace: &Trace, filter: &Filter) -> Vec<OverlapSample> {
+    let comm = CommIntervals::from_trace(trace);
+    op_instances(trace, filter)
+        .into_iter()
+        .filter(|i| !i.op.op.is_comm())
+        .map(|inst| {
+            let ratio = comm.ratio(inst.gpu, inst.t_start, inst.t_end);
+            OverlapSample { inst, ratio }
+        })
+        .collect()
+}
+
+/// Per-op overlap/duration summary (Fig. 7 rows): quantiles of the overlap
+/// ratio, quantiles of duration, and the Pearson correlation between them.
+#[derive(Debug, Clone)]
+pub struct OpOverlapSummary {
+    pub op: OpRef,
+    pub n: usize,
+    pub ratio_q: [f64; 5],    // min, q25, median, q75, max
+    pub duration_q: [f64; 5], // min, q25, median, q75, max
+    /// Pearson correlation between overlap ratio and duration; None when
+    /// either side is constant (the paper's "nan" cells).
+    pub correlation: Option<f64>,
+}
+
+pub fn summarize_op_overlap(trace: &Trace, op: OpRef) -> OpOverlapSummary {
+    let mut f = Filter::sampled();
+    f.op = Some(op);
+    let samples = overlap_samples(trace, &f);
+    let ratios: Vec<f64> = samples.iter().map(|s| s.ratio).collect();
+    let durs: Vec<f64> = samples.iter().map(|s| s.inst.duration()).collect();
+    let q = |xs: &[f64]| {
+        [
+            stats::min(xs),
+            stats::quantile(xs, 0.25),
+            stats::median(xs),
+            stats::quantile(xs, 0.75),
+            stats::max(xs),
+        ]
+    };
+    OpOverlapSummary {
+        op,
+        n: samples.len(),
+        ratio_q: q(&ratios),
+        duration_q: q(&durs),
+        correlation: stats::pearson(&ratios, &durs),
+    }
+}
+
+/// Per-GPU (overlap ratio, duration) pairs for one op — Fig. 8's CDFs.
+/// Durations are normalized to the per-GPU minimum like the paper.
+pub fn per_gpu_overlap_cdf(
+    trace: &Trace,
+    op: OpRef,
+) -> BTreeMap<u32, Vec<(f64, f64)>> {
+    let mut f = Filter::sampled();
+    f.op = Some(op);
+    let samples = overlap_samples(trace, &f);
+    let mut per: BTreeMap<u32, Vec<(f64, f64)>> = BTreeMap::new();
+    for s in samples {
+        per.entry(s.inst.gpu)
+            .or_default()
+            .push((s.ratio, s.inst.duration()));
+    }
+    for v in per.values_mut() {
+        let dmin = v
+            .iter()
+            .map(|(_, d)| *d)
+            .fold(f64::INFINITY, f64::min)
+            .max(1e-9);
+        for p in v.iter_mut() {
+            p.1 /= dmin;
+        }
+        v.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    }
+    per
+}
+
+/// Interpolated duration at a target overlap ratio, from the sorted
+/// (ratio, duration) profile — the D_x% of Eq. 9. Falls back to the edge
+/// values when the target lies outside the observed overlap range.
+pub fn duration_at_overlap(samples: &[(f64, f64)], target: f64) -> f64 {
+    if samples.is_empty() {
+        return f64::NAN;
+    }
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    if target <= sorted[0].0 {
+        // Mean duration of the lowest-overlap decile.
+        let k = (sorted.len() / 10).max(1);
+        return stats::mean(&sorted[..k].iter().map(|p| p.1).collect::<Vec<_>>());
+    }
+    if target >= sorted[sorted.len() - 1].0 {
+        let k = (sorted.len() / 10).max(1);
+        let tail = &sorted[sorted.len() - k..];
+        return stats::mean(&tail.iter().map(|p| p.1).collect::<Vec<_>>());
+    }
+    // Linear interpolation between bracketing samples.
+    for w in sorted.windows(2) {
+        let (r0, d0) = w[0];
+        let (r1, d1) = w[1];
+        if r0 <= target && target <= r1 {
+            if (r1 - r0).abs() < 1e-12 {
+                return 0.5 * (d0 + d1);
+            }
+            let t = (target - r0) / (r1 - r0);
+            return d0 + t * (d1 - d0);
+        }
+    }
+    sorted[sorted.len() - 1].1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::*;
+    use crate::model::ops::{OpType, Phase};
+    use crate::trace::collect::RuntimeProfiler;
+
+    fn trace(layers: u64) -> Trace {
+        let mut cfg = ModelConfig::llama3_8b();
+        cfg.layers = layers;
+        let mut wl = WorkloadConfig::new(2, 4096, FsdpVersion::V1);
+        wl.iterations = 2;
+        wl.warmup = 1;
+        RuntimeProfiler::new(NodeSpec::mi300x_node())
+            .capture(&cfg, &wl)
+            .trace
+    }
+
+    #[test]
+    fn interval_coverage_math() {
+        let mut c = CommIntervals::default();
+        c.per_gpu.insert(0, vec![(10.0, 20.0), (30.0, 40.0)]);
+        assert_eq!(c.covered_ns(0, 0.0, 50.0), 20.0);
+        assert_eq!(c.covered_ns(0, 15.0, 35.0), 10.0);
+        assert_eq!(c.covered_ns(0, 20.0, 30.0), 0.0);
+        assert_eq!(c.ratio(0, 10.0, 20.0), 1.0);
+        assert_eq!(c.ratio(1, 10.0, 20.0), 0.0);
+    }
+
+    #[test]
+    fn merging_handles_overlapping_comm_events() {
+        let mut t = Trace::default();
+        use crate::trace::event::TraceEvent;
+        for (s, e) in [(0.0, 10.0), (5.0, 15.0), (14.0, 20.0)] {
+            t.events.push(TraceEvent {
+                kernel_id: 0,
+                gpu: 0,
+                stream: Stream::Comm,
+                name: "rccl".into(),
+                op: OpRef::fwd(OpType::AllGather),
+                layer: None,
+                iter: 0,
+                t_launch: s,
+                t_start: s,
+                t_end: e,
+                seq: 0,
+                fwd_link: None,
+                freq_mhz: 0.0,
+                flops: 0.0,
+                bytes: 0.0,
+            });
+        }
+        let c = CommIntervals::from_trace(&t);
+        assert_eq!(c.covered_ns(0, 0.0, 20.0), 20.0);
+    }
+
+    #[test]
+    fn ratios_are_in_unit_interval() {
+        let t = trace(2);
+        for s in overlap_samples(&t, &Filter::sampled()) {
+            assert!((0.0..=1.0).contains(&s.ratio), "{}", s.ratio);
+        }
+    }
+
+    #[test]
+    fn overlap_exists_and_varies() {
+        let t = trace(4);
+        let samples = overlap_samples(&t, &Filter::sampled());
+        let overlapped = samples.iter().filter(|s| s.ratio > 0.5).count();
+        let clear = samples.iter().filter(|s| s.ratio < 0.05).count();
+        assert!(overlapped > 0, "nothing overlapped");
+        assert!(clear > 0, "everything overlapped");
+    }
+
+    #[test]
+    fn summary_has_correlation_for_varying_ops() {
+        let t = trace(4);
+        let s = summarize_op_overlap(&t, OpRef::bwd(OpType::MlpUp));
+        assert!(s.n > 0);
+        assert!(s.ratio_q[0] <= s.ratio_q[4]);
+        assert!(s.duration_q[0] <= s.duration_q[4]);
+    }
+
+    #[test]
+    fn fig8_cdf_normalizes_per_gpu() {
+        let t = trace(4);
+        let per = per_gpu_overlap_cdf(&t, OpRef::fwd(OpType::AttnOp));
+        assert_eq!(per.len(), 8);
+        for v in per.values() {
+            let dmin = v.iter().map(|(_, d)| *d).fold(f64::INFINITY, f64::min);
+            assert!((dmin - 1.0).abs() < 1e-9, "normalized min must be 1.0");
+        }
+    }
+
+    #[test]
+    fn duration_at_overlap_interpolates() {
+        let samples = vec![(0.0, 100.0), (1.0, 200.0)];
+        let d = duration_at_overlap(&samples, 0.5);
+        assert!((d - 150.0).abs() < 1e-9);
+        // Edges.
+        assert!((duration_at_overlap(&samples, -0.1) - 100.0).abs() < 1e-9);
+        assert!((duration_at_overlap(&samples, 1.5) - 200.0).abs() < 1e-9);
+        assert!(duration_at_overlap(&[], 0.5).is_nan());
+    }
+
+    #[test]
+    fn identical_vec_ops_differ_by_overlap() {
+        // Observation 4: b_attn_n vs b_mlp_n — identical computation,
+        // different overlap, different duration.
+        let t = trace(8);
+        let attn = summarize_op_overlap(&t, OpRef::bwd(OpType::AttnN));
+        let mlp = summarize_op_overlap(&t, OpRef::bwd(OpType::MlpN));
+        // attn_n (last op of a backward layer, next to the RS/AG window)
+        // sees more overlap than mlp_n.
+        assert!(
+            attn.ratio_q[2] > mlp.ratio_q[2],
+            "b_attn_n overlap {:.2} !> b_mlp_n {:.2}",
+            attn.ratio_q[2],
+            mlp.ratio_q[2]
+        );
+    }
+
+    #[test]
+    fn forward_phase_only_filter() {
+        let t = trace(2);
+        let mut f = Filter::sampled();
+        f.phase = Some(Phase::Forward);
+        let samples = overlap_samples(&t, &f);
+        assert!(samples.iter().all(|s| s.inst.op.phase == Phase::Forward));
+    }
+}

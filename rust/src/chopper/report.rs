@@ -1,0 +1,965 @@
+//! Figure generators: one function per table/figure of the paper's
+//! evaluation (Section V). Each returns a [`Figure`] holding an ASCII
+//! rendering (for the CLI), a CSV of the underlying rows (for regression
+//! diffing in benches), and optionally an SVG.
+//!
+//! Generators are pure functions of profiled runs, so the benches, the CLI
+//! and the tests all drive the same code; `run_sweep` produces the paper's
+//! b×s × {v1,v2} input set at any scale.
+
+use crate::chopper::aggregate::{op_duration_samples, phase_kind_duration_samples};
+use crate::chopper::align::AlignedTrace;
+use crate::chopper::breakdown::all_breakdowns;
+use crate::chopper::cpuutil::CpuUtilAnalysis;
+use crate::chopper::launch::{op_launch_overheads, phase_kind_launch_samples};
+use crate::chopper::overlap::{per_gpu_overlap_cdf, summarize_op_overlap};
+use crate::chopper::throughput::throughput;
+use crate::config::{FsdpVersion, ModelConfig, NodeSpec, WorkloadConfig};
+use crate::model::ops::{OpKind, OpRef, OpType, Phase};
+use crate::sim::{run_workload, ProfiledRun};
+use crate::trace::event::Stream;
+use crate::util::{ascii, fmt, stats};
+use std::fmt::Write as _;
+
+/// One regenerated table/figure.
+#[derive(Debug, Clone)]
+pub struct Figure {
+    /// "fig4", "table2", ...
+    pub id: &'static str,
+    pub title: String,
+    pub ascii: String,
+    /// The raw rows behind the plot.
+    pub csv: String,
+    pub svg: Option<String>,
+}
+
+impl Figure {
+    /// Write ascii/csv/svg files into `dir` as `<id>.{txt,csv,svg}`.
+    pub fn save(&self, dir: &std::path::Path) -> std::io::Result<()> {
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(dir.join(format!("{}.txt", self.id)), &self.ascii)?;
+        std::fs::write(dir.join(format!("{}.csv", self.id)), &self.csv)?;
+        if let Some(svg) = &self.svg {
+            std::fs::write(dir.join(format!("{}.svg", self.id)), svg)?;
+        }
+        Ok(())
+    }
+}
+
+/// One profiled workload of a sweep.
+#[derive(Debug)]
+pub struct SweepRun {
+    pub wl: WorkloadConfig,
+    pub run: ProfiledRun,
+}
+
+impl SweepRun {
+    pub fn label(&self) -> String {
+        self.wl.label_with_fsdp()
+    }
+}
+
+/// Profile the paper's configuration sweep (b1s4, b2s4, b4s4, b1s8, b2s8)
+/// for the given FSDP versions. `iterations`/`warmup` let tests/benches
+/// trade fidelity for speed (the paper uses 20/10).
+pub fn run_sweep(
+    node: &NodeSpec,
+    cfg: &ModelConfig,
+    versions: &[FsdpVersion],
+    iterations: u32,
+    warmup: u32,
+) -> Vec<SweepRun> {
+    let mut out = Vec::new();
+    for &v in versions {
+        for mut wl in WorkloadConfig::paper_sweep(v) {
+            wl.iterations = iterations;
+            wl.warmup = warmup;
+            let run = run_workload(node, cfg, &wl);
+            out.push(SweepRun { wl, run });
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Table II — model configuration
+// ---------------------------------------------------------------------------
+
+pub fn table2(cfg: &ModelConfig) -> Figure {
+    let rows = vec![vec![
+        cfg.layers.to_string(),
+        "4,096".to_string(),
+        cfg.ffn.to_string(),
+        format!("{}/{}", cfg.q_heads, cfg.kv_heads),
+    ]];
+    let ascii = ascii::table(
+        &["Layer count", "Token size", "Hidden dim", "Attn/KV heads"],
+        &rows,
+    );
+    let csv = format!(
+        "layers,token_size,hidden,ffn,q_heads,kv_heads,params\n{},{},{},{},{},{},{}\n",
+        cfg.layers, 4096, cfg.hidden, cfg.ffn, cfg.q_heads, cfg.kv_heads,
+        cfg.param_count()
+    );
+    Figure {
+        id: "table2",
+        title: format!("Table II: {} model configuration", cfg.name),
+        ascii,
+        csv,
+        svg: None,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 4 — end-to-end breakdown
+// ---------------------------------------------------------------------------
+
+pub fn fig4(runs: &[SweepRun]) -> Figure {
+    let mut csv = String::from(
+        "config,fsdp,throughput_tok_s,rel_throughput,phase,kind,median_duration_ms,median_launch_ms\n",
+    );
+    let mut ascii = String::from(
+        "Fig. 4 — end-to-end: throughput, duration by phase x op-type, launch overhead\n\n",
+    );
+    // Baseline for the normalized row: b1s4 with FSDPv1 if present.
+    let base_tp = runs
+        .iter()
+        .find(|r| r.wl.label() == "b1s4" && r.wl.fsdp == FsdpVersion::V1)
+        .map(|r| {
+            throughput(
+                &r.run.trace,
+                r.wl.tokens_per_iteration(r.run.trace.meta.num_gpus as u64) as f64,
+            )
+            .tokens_per_sec
+        });
+
+    for sr in runs {
+        let tokens =
+            sr.wl.tokens_per_iteration(sr.run.trace.meta.num_gpus as u64) as f64;
+        let tp = throughput(&sr.run.trace, tokens);
+        let rel = base_tp.map(|b| tp.tokens_per_sec / b).unwrap_or(1.0);
+        let _ = writeln!(
+            ascii,
+            "{:>14}: {:>9.0} tok/s ({}x b1s4-v1)   iter {} (launch {})",
+            sr.label(),
+            tp.tokens_per_sec,
+            format_args!("{rel:.2}"),
+            fmt::dur_ns(tp.iter_ns),
+            fmt::dur_ns(tp.launch_ns),
+        );
+        let durs = phase_kind_duration_samples(&sr.run.trace);
+        let launches = phase_kind_launch_samples(&sr.run.trace);
+        let max_total: f64 = Phase::ALL
+            .iter()
+            .map(|ph| {
+                durs.iter()
+                    .filter(|((p, _), _)| p == ph)
+                    .map(|(_, v)| stats::median(v))
+                    .sum::<f64>()
+            })
+            .fold(0.0, f64::max);
+        for phase in Phase::ALL {
+            let mut segs: Vec<(String, f64)> = Vec::new();
+            for kind in [OpKind::FlashAttn, OpKind::Vector, OpKind::Gemm, OpKind::Copy]
+            {
+                let d = durs.get(&(phase, kind)).map(|v| stats::median(v));
+                let l = launches.get(&(phase, kind)).map(|v| stats::median(v));
+                if d.is_none() && l.is_none() {
+                    continue;
+                }
+                let dm = d.unwrap_or(0.0);
+                let lm = l.unwrap_or(0.0);
+                let _ = writeln!(
+                    csv,
+                    "{},{},{:.0},{:.3},{},{},{:.3},{:.3}",
+                    sr.wl.label(),
+                    sr.wl.fsdp,
+                    tp.tokens_per_sec,
+                    rel,
+                    phase,
+                    kind,
+                    dm / 1e6,
+                    lm / 1e6
+                );
+                segs.push((kind.to_string(), dm));
+            }
+            ascii.push_str(&ascii::stacked_bar(
+                &format!("  {phase:>4}"),
+                &segs,
+                48,
+                max_total,
+            ));
+        }
+        ascii.push('\n');
+    }
+    Figure {
+        id: "fig4",
+        title: "Fig. 4 — end-to-end performance breakdown".into(),
+        ascii,
+        csv,
+        svg: None,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 5 — operation durations (a: GEMM+FA, b: vector)
+// ---------------------------------------------------------------------------
+
+const FIG5A_OPS: [(&str, Phase, OpType); 10] = [
+    ("f_qkv_ip", Phase::Forward, OpType::QkvIp),
+    ("f_attn_fa", Phase::Forward, OpType::AttnFa),
+    ("f_attn_op", Phase::Forward, OpType::AttnOp),
+    ("f_mlp_gp", Phase::Forward, OpType::MlpGp),
+    ("f_mlp_up", Phase::Forward, OpType::MlpUp),
+    ("f_mlp_dp", Phase::Forward, OpType::MlpDp),
+    ("b_attn_fa", Phase::Backward, OpType::AttnFa),
+    ("b_mlp_gp", Phase::Backward, OpType::MlpGp),
+    ("b_mlp_up", Phase::Backward, OpType::MlpUp),
+    ("b_mlp_dp", Phase::Backward, OpType::MlpDp),
+];
+
+const FIG5B_OPS: [(&str, Phase, OpType); 8] = [
+    ("f_attn_n", Phase::Forward, OpType::AttnN),
+    ("f_mlp_n", Phase::Forward, OpType::MlpN),
+    ("f_qkv_re", Phase::Forward, OpType::QkvRe),
+    ("b_attn_n", Phase::Backward, OpType::AttnN),
+    ("b_mlp_n", Phase::Backward, OpType::MlpN),
+    ("b_mlp_gu", Phase::Backward, OpType::MlpGu),
+    ("b_ga", Phase::Optimizer, OpType::GradAccum),
+    ("opt_step", Phase::Optimizer, OpType::OptStep),
+];
+
+pub fn fig5(runs: &[SweepRun]) -> Figure {
+    let mut csv =
+        String::from("panel,op,config,fsdp,min,q25,median,q75,max\n");
+    let mut ascii = String::from(
+        "Fig. 5 — operation duration distributions (normalized to global max)\n",
+    );
+    for (panel, ops) in [
+        ("a", &FIG5A_OPS[..]),
+        ("b", &FIG5B_OPS[..]),
+    ] {
+        // Collect everything first to find the normalization max.
+        let mut rows: Vec<(String, String, [f64; 5])> = Vec::new();
+        for (name, phase, op) in ops {
+            let opref = OpRef::new(*op, *phase);
+            for sr in runs {
+                let samples = op_duration_samples(&sr.run.trace, opref);
+                if samples.is_empty() {
+                    continue;
+                }
+                let q = [
+                    stats::min(&samples),
+                    stats::quantile(&samples, 0.25),
+                    stats::median(&samples),
+                    stats::quantile(&samples, 0.75),
+                    stats::max(&samples),
+                ];
+                rows.push((name.to_string(), sr.label(), q));
+            }
+        }
+        let global_max = rows
+            .iter()
+            .map(|r| r.2[4])
+            .fold(0.0_f64, f64::max)
+            .max(1e-9);
+        let _ = writeln!(ascii, "\n(5{panel})");
+        let mut last_op = String::new();
+        for (name, cfg_label, q) in &rows {
+            if *name != last_op {
+                let _ = writeln!(ascii, " {name}");
+                last_op = name.clone();
+            }
+            ascii.push_str(&ascii::quantile_row(
+                &format!("   {cfg_label:>12}"),
+                q[0],
+                q[1],
+                q[2],
+                q[3],
+                q[4],
+                0.0,
+                global_max,
+                44,
+            ));
+            let (cfg_part, fsdp_part) =
+                cfg_label.split_once('-').unwrap_or((cfg_label.as_str(), ""));
+            let _ = writeln!(
+                csv,
+                "{panel},{name},{cfg_part},{fsdp_part},{:.6},{:.6},{:.6},{:.6},{:.6}",
+                q[0] / global_max,
+                q[1] / global_max,
+                q[2] / global_max,
+                q[3] / global_max,
+                q[4] / global_max
+            );
+        }
+    }
+    Figure {
+        id: "fig5",
+        title: "Fig. 5 — operation durations by type and configuration".into(),
+        ascii,
+        csv,
+        svg: None,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 6 — communication kernel durations per iteration
+// ---------------------------------------------------------------------------
+
+pub fn fig6(runs: &[SweepRun]) -> Figure {
+    let mut csv = String::from(
+        "config,fsdp,op,median_ms,q25_ms,q75_ms,max_ms,iter_median_ms\n",
+    );
+    let mut ascii =
+        String::from("Fig. 6 — per-iteration communication kernel duration\n\n");
+    for sr in runs {
+        let warmup = sr.run.trace.meta.warmup;
+        // Iteration duration (for the compute-scaling comparison).
+        let spans = crate::chopper::aggregate::iteration_spans(&sr.run.trace);
+        let iter_durs: Vec<f64> = spans
+            .iter()
+            .filter(|((_, it), _)| *it >= warmup)
+            .map(|(_, (s, e))| e - s)
+            .collect();
+        let iter_med = stats::median(&iter_durs);
+        for op in [OpType::AllGather, OpType::ReduceScatter] {
+            let durs: Vec<f64> = sr
+                .run
+                .trace
+                .events
+                .iter()
+                .filter(|e| {
+                    e.stream == Stream::Comm && e.op.op == op && e.iter >= warmup
+                })
+                .map(|e| e.duration())
+                .collect();
+            if durs.is_empty() {
+                continue;
+            }
+            let med = stats::median(&durs);
+            let _ = writeln!(
+                ascii,
+                "{:>14} {:>3}: median {:>9} q75 {:>9} max {:>9}   (iter {:>9})",
+                sr.label(),
+                op.short(),
+                fmt::dur_ns(med),
+                fmt::dur_ns(stats::quantile(&durs, 0.75)),
+                fmt::dur_ns(stats::max(&durs)),
+                fmt::dur_ns(iter_med),
+            );
+            let _ = writeln!(
+                csv,
+                "{},{},{},{:.4},{:.4},{:.4},{:.4},{:.4}",
+                sr.wl.label(),
+                sr.wl.fsdp,
+                op.short(),
+                med / 1e6,
+                stats::quantile(&durs, 0.25) / 1e6,
+                stats::quantile(&durs, 0.75) / 1e6,
+                stats::max(&durs) / 1e6,
+                iter_med / 1e6
+            );
+        }
+    }
+    Figure {
+        id: "fig6",
+        title: "Fig. 6 — communication kernel durations".into(),
+        ascii,
+        csv,
+        svg: None,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 7 — overlap ratio vs duration for dominant ops
+// ---------------------------------------------------------------------------
+
+const FIG7_OPS: [(&str, Phase, OpType); 6] = [
+    ("b_attn_n", Phase::Backward, OpType::AttnN),
+    ("b_mlp_n", Phase::Backward, OpType::MlpN),
+    ("b_mlp_gp", Phase::Backward, OpType::MlpGp),
+    ("b_mlp_up", Phase::Backward, OpType::MlpUp),
+    ("b_mlp_dp", Phase::Backward, OpType::MlpDp),
+    ("f_attn_fa", Phase::Forward, OpType::AttnFa),
+];
+
+pub fn fig7(v1: &SweepRun, v2: &SweepRun) -> Figure {
+    let mut csv = String::from(
+        "op,fsdp,n,ratio_min,ratio_q25,ratio_med,ratio_q75,ratio_max,dur_med_ms,correlation\n",
+    );
+    let mut ascii = String::from(
+        "Fig. 7 — overlap ratio vs duration, dominant ops (b2s4)\n\n",
+    );
+    for (name, phase, op) in FIG7_OPS {
+        let opref = OpRef::new(op, phase);
+        for sr in [v1, v2] {
+            let s = summarize_op_overlap(&sr.run.trace, opref);
+            let corr = s
+                .correlation
+                .map(|c| format!("{c:+.2}"))
+                .unwrap_or_else(|| "nan".into());
+            let _ = writeln!(
+                ascii,
+                "{:>9} {:>6}: overlap [{:.2} {:.2} {:.2} {:.2} {:.2}]  dur med {:>9}  corr {}",
+                name,
+                sr.wl.fsdp.to_string(),
+                s.ratio_q[0],
+                s.ratio_q[1],
+                s.ratio_q[2],
+                s.ratio_q[3],
+                s.ratio_q[4],
+                fmt::dur_ns(s.duration_q[2]),
+                corr
+            );
+            let _ = writeln!(
+                csv,
+                "{},{},{},{:.3},{:.3},{:.3},{:.3},{:.3},{:.4},{}",
+                name,
+                sr.wl.fsdp,
+                s.n,
+                s.ratio_q[0],
+                s.ratio_q[1],
+                s.ratio_q[2],
+                s.ratio_q[3],
+                s.ratio_q[4],
+                s.duration_q[2] / 1e6,
+                corr
+            );
+        }
+    }
+    Figure {
+        id: "fig7",
+        title: "Fig. 7 — overlap vs duration correlations".into(),
+        ascii,
+        csv,
+        svg: None,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 8 — CDF of overlap vs duration per GPU (f_attn_op, b2s4)
+// ---------------------------------------------------------------------------
+
+pub fn fig8(run: &SweepRun) -> Figure {
+    let per = per_gpu_overlap_cdf(&run.run.trace, OpRef::fwd(OpType::AttnOp));
+    let mut csv = String::from("gpu,overlap_ratio,duration_norm\n");
+    let mut series: Vec<(String, Vec<f64>)> = Vec::new();
+    for (gpu, pts) in &per {
+        for (r, d) in pts {
+            let _ = writeln!(csv, "{gpu},{r:.4},{d:.5}");
+        }
+        series.push((
+            format!("GPU{gpu}"),
+            pts.iter().map(|(_, d)| *d).collect(),
+        ));
+    }
+    let mut ascii = String::from(
+        "Fig. 8 — f_attn_op across GPUs (b2s4): duration CDF (normalized to per-GPU min)\n",
+    );
+    ascii.push_str(&ascii::cdf_plot("", &series, 56, 12));
+    // Per-GPU medians table.
+    let mut rows = Vec::new();
+    for (gpu, pts) in &per {
+        let ratios: Vec<f64> = pts.iter().map(|(r, _)| *r).collect();
+        let durs: Vec<f64> = pts.iter().map(|(_, d)| *d).collect();
+        rows.push(vec![
+            format!("GPU{gpu}"),
+            format!("{:.2}", stats::median(&ratios)),
+            format!("{:.3}", stats::median(&durs)),
+        ]);
+    }
+    ascii.push_str(&ascii::table(
+        &["gpu", "median overlap", "median dur (norm)"],
+        &rows,
+    ));
+    Figure {
+        id: "fig8",
+        title: "Fig. 8 — per-GPU overlap/duration CDF of f_attn_op".into(),
+        ascii,
+        csv,
+        svg: Some(crate::util::svg::cdf_lines(
+            "f_attn_op duration CDF per GPU (b2s4)",
+            "duration (normalized to per-GPU min)",
+            &series,
+        )),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 9 — f_attn_fa overlap across configurations
+// ---------------------------------------------------------------------------
+
+pub fn fig9(runs: &[SweepRun]) -> Figure {
+    let mut csv =
+        String::from("config,fsdp,ratio_min,q25,median,q75,max,dur_med_ms\n");
+    let mut ascii =
+        String::from("Fig. 9 — f_attn_fa overlap ratio vs configuration\n\n");
+    for sr in runs {
+        let s = summarize_op_overlap(&sr.run.trace, OpRef::fwd(OpType::AttnFa));
+        ascii.push_str(&ascii::quantile_row(
+            &format!("{:>14}", sr.label()),
+            s.ratio_q[0],
+            s.ratio_q[1],
+            s.ratio_q[2],
+            s.ratio_q[3],
+            s.ratio_q[4],
+            0.0,
+            1.0,
+            44,
+        ));
+        let _ = writeln!(
+            csv,
+            "{},{},{:.3},{:.3},{:.3},{:.3},{:.3},{:.4}",
+            sr.wl.label(),
+            sr.wl.fsdp,
+            s.ratio_q[0],
+            s.ratio_q[1],
+            s.ratio_q[2],
+            s.ratio_q[3],
+            s.ratio_q[4],
+            s.duration_q[2] / 1e6
+        );
+    }
+    Figure {
+        id: "fig9",
+        title: "Fig. 9 — f_attn_fa overlap across configurations".into(),
+        ascii,
+        csv,
+        svg: None,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 10 — launch-overhead definition (static diagram + doc-tested eqs)
+// ---------------------------------------------------------------------------
+
+pub fn fig10() -> Figure {
+    let ascii = r#"Fig. 10 — launch overhead definition (Eqs. 1-3)
+
+   CPU   ──────┤dispatch(i)├─────────────────────────────
+                  t_l(i)
+   GPU   ──┤kernel i-1├ ░░░░░░░ ▒▒▒▒▒▒▒ ┤kernel i├──────
+              t_ke(i-1)  O_prep  O_call   t_ks(i)
+
+   O_prep  = max(t_l(i) - t_ke(i-1), 0)      "CPU launched too late"
+   O_call  = min(t_ks(i) - t_l(i),
+                 t_ks(i) - t_ke(i-1))        dispatch -> start latency
+   O_launch = O_prep + O_call
+
+   Bubbles spanned by serialized communication kernels count as launch
+   overhead too (Section V-D1) — which is how FSDPv2's serialized copy
+   kernels become visible.
+"#;
+    Figure {
+        id: "fig10",
+        title: "Fig. 10 — launch overhead definition".into(),
+        ascii: ascii.to_string(),
+        csv: "quantity,definition\nO_prep,max(t_l - t_ke_prev; 0)\nO_call,min(t_ks - t_l; t_ks - t_ke_prev)\nO_launch,O_prep + O_call\n".into(),
+        svg: None,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 11 — mean prep/call overhead for top operations
+// ---------------------------------------------------------------------------
+
+pub fn fig11(v1: &SweepRun, v2: &SweepRun) -> Figure {
+    let mut csv = String::from("op,fsdp,prep_us,call_us\n");
+    let mut ascii =
+        String::from("Fig. 11 — mean preparation / call overhead, top ops\n\n");
+    let interesting = [
+        OpRef::fwd(OpType::IE),
+        OpRef::new(OpType::OptStep, Phase::Optimizer),
+        OpRef::new(OpType::GradAccum, Phase::Optimizer),
+        OpRef::fwd(OpType::AttnN),
+        OpRef::bwd(OpType::MlpDp),
+        OpRef::bwd(OpType::IE),
+    ];
+    for sr in [v1, v2] {
+        let per_op = op_launch_overheads(&sr.run.trace);
+        let _ = writeln!(ascii, "{}", sr.wl.fsdp);
+        let mut rows: Vec<(String, f64, f64)> = interesting
+            .iter()
+            .filter_map(|op| {
+                per_op
+                    .get(op)
+                    .map(|o| (op.paper_name(), o.prep / 1e3, o.call / 1e3))
+            })
+            .collect();
+        rows.sort_by(|a, b| (b.1 + b.2).partial_cmp(&(a.1 + a.2)).unwrap());
+        let maxv = rows
+            .iter()
+            .map(|r| r.1 + r.2)
+            .fold(0.0_f64, f64::max)
+            .max(1e-9);
+        for (name, prep, call) in &rows {
+            ascii.push_str(&ascii::stacked_bar(
+                &format!("  {name:>9}"),
+                &[("prep".into(), *prep), ("call".into(), *call)],
+                40,
+                maxv,
+            ));
+            let _ = writeln!(csv, "{},{},{:.2},{:.2}", name, sr.wl.fsdp, prep, call);
+        }
+        ascii.push('\n');
+    }
+    Figure {
+        id: "fig11",
+        title: "Fig. 11 — launch overhead by operation".into(),
+        ascii,
+        csv,
+        svg: None,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 12 — comm pipeline fill/empty (trace excerpt)
+// ---------------------------------------------------------------------------
+
+pub fn fig12(run: &SweepRun) -> Figure {
+    // Render gpu 0's first sampled iteration: comm vs compute lanes around
+    // the iteration boundary.
+    let trace = &run.run.trace;
+    let warmup = trace.meta.warmup;
+    let mut comm: Vec<(f64, f64, String)> = Vec::new();
+    let mut compute: Vec<(f64, f64, String)> = Vec::new();
+    for e in &trace.events {
+        if e.gpu != 0 || e.iter != warmup {
+            continue;
+        }
+        let entry = (e.t_start, e.t_end, e.op.paper_name());
+        match e.stream {
+            Stream::Comm => comm.push(entry),
+            Stream::Compute => compute.push(entry),
+        }
+    }
+    comm.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    compute.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let mut csv = String::from("lane,op,t_start_ms,t_end_ms\n");
+    for (s, e, n) in &comm {
+        let _ = writeln!(csv, "comm,{n},{:.4},{:.4}", s / 1e6, e / 1e6);
+    }
+    for (s, e, n) in &compute {
+        let _ = writeln!(csv, "compute,{n},{:.4},{:.4}", s / 1e6, e / 1e6);
+    }
+    let mut ascii = String::from(
+        "Fig. 12 — filling/emptying the communication pipeline (gpu 0, first sampled iteration)\n\n  comm   : ",
+    );
+    for (_, _, n) in comm.iter().take(6) {
+        let _ = write!(ascii, "[{n}] ");
+    }
+    ascii.push_str("...\n  compute: ");
+    for (_, _, n) in compute.iter().take(4) {
+        let _ = write!(ascii, "[{n}] ");
+    }
+    ascii.push_str("...\n\n");
+    if let (Some(first_comm), Some(first_compute)) = (comm.first(), compute.first())
+    {
+        let _ = writeln!(
+            ascii,
+            "  first collective starts {} before the first compute kernel —\n  the pipeline-fill window that puts prep overhead on f_ie (Insight 5).",
+            fmt::dur_ns(first_compute.0 - first_comm.0)
+        );
+    }
+    Figure {
+        id: "fig12",
+        title: "Fig. 12 — comm pipeline fill/empty".into(),
+        ascii,
+        csv,
+        svg: None,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 13 — CPU cores
+// ---------------------------------------------------------------------------
+
+pub fn fig13(run: &SweepRun) -> Figure {
+    let a = CpuUtilAnalysis::analyze(&run.run.cpu);
+    let mut csv = String::from("window_t_ms,active_cores,min_cores,smt_pairs\n");
+    for w in &a.windows {
+        let _ = writeln!(
+            csv,
+            "{:.2},{},{:.2},{}",
+            w.t / 1e6,
+            w.active,
+            w.min_cores,
+            w.smt_pairs
+        );
+    }
+    let mut ascii = String::from("Fig. 13 — CPU logical/physical core usage\n\n");
+    let _ = writeln!(
+        ascii,
+        "  median active cores : {:.0}   (of {} logical)",
+        a.median_active(),
+        a.logical_cores
+    );
+    let _ = writeln!(
+        ascii,
+        "  median minimum cores: {:.1}  (Eq. 5 lower bound)",
+        a.median_min_cores()
+    );
+    let _ = writeln!(
+        ascii,
+        "  physical footprint  : {:.1}% of {} physical cores ever active",
+        a.physical_footprint() * 100.0,
+        a.physical_cores
+    );
+    let _ = writeln!(
+        ascii,
+        "  SMT sibling windows : {:.1}%",
+        a.smt_cosched_rate() * 100.0
+    );
+    let (rows, m) = a.physical_heatmap(&run.run.cpu);
+    // Downsample columns for terminal width.
+    let step = (m.first().map(|r| r.len()).unwrap_or(1) / 64).max(1);
+    let small: Vec<Vec<f64>> = m
+        .iter()
+        .map(|r| {
+            r.chunks(step)
+                .map(|c| c.iter().sum::<f64>() / c.len() as f64 / 2.0)
+                .collect()
+        })
+        .collect();
+    ascii.push_str(&format!(
+        "\n  logical→physical heatmap ({} active physical cores × time):\n",
+        rows.len()
+    ));
+    ascii.push_str(&ascii::heatmap("", &small));
+    Figure {
+        id: "fig13",
+        title: "Fig. 13 — CPU core utilization".into(),
+        ascii,
+        csv,
+        svg: None,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 14 — frequency and power v1 vs v2
+// ---------------------------------------------------------------------------
+
+pub fn fig14(v1: &SweepRun, v2: &SweepRun) -> Figure {
+    let mut csv = String::from(
+        "fsdp,gpu_freq_mhz,mem_freq_mhz,power_w,freq_sigma,power_sigma\n",
+    );
+    let mut ascii =
+        String::from("Fig. 14 — average frequency and power, FSDPv1 vs FSDPv2 (active windows)\n\n");
+    for sr in [v1, v2] {
+        // Active windows only (compute in flight), like the paper's
+        // during-training averages.
+        let samples: Vec<_> = sr
+            .run
+            .power
+            .samples
+            .iter()
+            .filter(|s| s.power_w > 400.0)
+            .collect();
+        let f: Vec<f64> = samples.iter().map(|s| s.freq_mhz).collect();
+        let m: Vec<f64> = samples.iter().map(|s| s.mem_freq_mhz).collect();
+        let p: Vec<f64> = samples.iter().map(|s| s.power_w).collect();
+        let _ = writeln!(
+            ascii,
+            "  {:>6}: GPU {:.0}±{:.0} MHz   MEM {:.0} MHz   power {:.0}±{:.0} W",
+            sr.wl.fsdp.to_string(),
+            stats::mean(&f),
+            stats::std(&f),
+            stats::mean(&m),
+            stats::mean(&p),
+            stats::std(&p),
+        );
+        let _ = writeln!(
+            csv,
+            "{},{:.1},{:.1},{:.1},{:.2},{:.2}",
+            sr.wl.fsdp,
+            stats::mean(&f),
+            stats::mean(&m),
+            stats::mean(&p),
+            stats::std(&f),
+            stats::std(&p)
+        );
+    }
+    let f1: Vec<f64> = v1
+        .run
+        .power
+        .samples
+        .iter()
+        .filter(|s| s.power_w > 400.0)
+        .map(|s| s.freq_mhz)
+        .collect();
+    let f2: Vec<f64> = v2
+        .run
+        .power
+        .samples
+        .iter()
+        .filter(|s| s.power_w > 400.0)
+        .map(|s| s.freq_mhz)
+        .collect();
+    let _ = writeln!(
+        ascii,
+        "\n  v2/v1 frequency ratio: {:.2}x at matched power (Observation 6)",
+        stats::mean(&f2) / stats::mean(&f1).max(1.0)
+    );
+    Figure {
+        id: "fig14",
+        title: "Fig. 14 — frequency & power by FSDP version".into(),
+        ascii,
+        csv,
+        svg: None,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 15 — overhead breakdown
+// ---------------------------------------------------------------------------
+
+pub fn fig15(runs: &[SweepRun], node: &NodeSpec) -> Figure {
+    let mut csv = String::from(
+        "config,fsdp,op,d_act_ms,d_thr_ms,inst,util,overlap,freq,total\n",
+    );
+    let mut ascii = String::from(
+        "Fig. 15 — overhead breakdown for GEMMs and FlashAttention\n  (multiplicative: D_act ≈ D_thr × inst × util × overlap × freq)\n\n",
+    );
+    for sr in runs {
+        let aligned = AlignedTrace::align(sr.run.trace.clone(), &sr.run.counters);
+        let breakdowns = all_breakdowns(&aligned, &node.gpu);
+        let _ = writeln!(ascii, "{}", sr.label());
+        for (op, b) in &breakdowns {
+            let _ = writeln!(
+                ascii,
+                "  {:>10}: act {:>9}  thr {:>9}  inst {:>5.2} util {:>5.2} overlap {:>5.2} freq {:>5.2}",
+                op.paper_name(),
+                fmt::dur_ns(b.d_act),
+                fmt::dur_ns(b.d_thr),
+                b.inst,
+                b.util,
+                b.overlap,
+                b.freq
+            );
+            let _ = writeln!(
+                csv,
+                "{},{},{},{:.4},{:.4},{:.3},{:.3},{:.3},{:.3},{:.3}",
+                sr.wl.label(),
+                sr.wl.fsdp,
+                op.paper_name(),
+                b.d_act / 1e6,
+                b.d_thr / 1e6,
+                b.inst,
+                b.util,
+                b.overlap,
+                b.freq,
+                b.total_overhead()
+            );
+        }
+        ascii.push('\n');
+    }
+    Figure {
+        id: "fig15",
+        title: "Fig. 15 — theoretical-vs-actual duration breakdown".into(),
+        ascii,
+        csv,
+        svg: None,
+    }
+}
+
+/// All figure ids this module can regenerate.
+pub const ALL_FIGURES: [&str; 13] = [
+    "table2", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10",
+    "fig11", "fig12", "fig13", "fig14", "fig15",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Small sweep for generator tests: 2 layers, 2 iterations.
+    fn small_sweep() -> (NodeSpec, Vec<SweepRun>) {
+        let node = NodeSpec::mi300x_node();
+        let mut cfg = ModelConfig::llama3_8b();
+        cfg.layers = 2;
+        let runs = run_sweep(
+            &node,
+            &cfg,
+            &[FsdpVersion::V1, FsdpVersion::V2],
+            2,
+            1,
+        );
+        (node, runs)
+    }
+
+    fn by_label<'a>(runs: &'a [SweepRun], label: &str) -> &'a SweepRun {
+        runs.iter().find(|r| r.label() == label).unwrap()
+    }
+
+    #[test]
+    fn sweep_covers_paper_configs() {
+        let (_, runs) = small_sweep();
+        assert_eq!(runs.len(), 10);
+        assert!(runs.iter().any(|r| r.label() == "b4s4-FSDPv1"));
+        assert!(runs.iter().any(|r| r.label() == "b2s8-FSDPv2"));
+    }
+
+    #[test]
+    fn every_figure_generates_nonempty_output() {
+        let (node, runs) = small_sweep();
+        let v1 = by_label(&runs, "b2s4-FSDPv1");
+        let v2 = by_label(&runs, "b2s4-FSDPv2");
+        let figs = vec![
+            table2(&ModelConfig::llama3_8b()),
+            fig4(&runs),
+            fig5(&runs),
+            fig6(&runs),
+            fig7(v1, v2),
+            fig8(v1),
+            fig9(&runs),
+            fig10(),
+            fig11(v1, v2),
+            fig12(v1),
+            fig13(v2),
+            fig14(v1, v2),
+            fig15(&runs[..2], &node),
+        ];
+        for f in &figs {
+            assert!(!f.ascii.trim().is_empty(), "{} ascii empty", f.id);
+            assert!(f.csv.lines().count() >= 2, "{} csv empty", f.id);
+        }
+        let ids: Vec<&str> = figs.iter().map(|f| f.id).collect();
+        assert_eq!(ids, ALL_FIGURES.to_vec());
+    }
+
+    #[test]
+    fn figures_save_to_disk() {
+        let f = fig10();
+        let dir = std::env::temp_dir().join("chopper_fig_test");
+        f.save(&dir).unwrap();
+        assert!(dir.join("fig10.txt").exists());
+        assert!(dir.join("fig10.csv").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fig4_csv_has_relative_throughput_column() {
+        let (_, runs) = small_sweep();
+        let f = fig4(&runs);
+        let header = f.csv.lines().next().unwrap();
+        assert!(header.contains("rel_throughput"));
+        // b1s4-v1 row should have rel == 1.0.
+        let row = f
+            .csv
+            .lines()
+            .find(|l| l.starts_with("b1s4,FSDPv1"))
+            .unwrap();
+        let rel: f64 = row.split(',').nth(3).unwrap().parse().unwrap();
+        assert!((rel - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fig8_svg_is_valid_xml_fragment() {
+        let (_, runs) = small_sweep();
+        let f = fig8(by_label(&runs, "b2s4-FSDPv1"));
+        let svg = f.svg.unwrap();
+        assert!(svg.starts_with("<svg"));
+        assert!(svg.trim_end().ends_with("</svg>"));
+    }
+}

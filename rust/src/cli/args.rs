@@ -1,0 +1,137 @@
+//! Tiny argument parser: `prog subcommand [positional...] [--flag value]
+//! [--switch]`. Unknown flags are errors; every consumed flag is tracked so
+//! commands can reject leftovers.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: String,
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    consumed: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: Vec<String>) -> Result<Args, String> {
+        let mut a = Args::default();
+        let mut it = argv.into_iter();
+        let _prog = it.next();
+        if let Some(sub) = it.next() {
+            a.subcommand = sub;
+        }
+        let mut it = it.peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err("bare `--` is not supported".into());
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    a.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    a.flags.insert(name.to_string(), v);
+                } else {
+                    // Boolean switch.
+                    a.flags.insert(name.to_string(), "true".into());
+                }
+            } else {
+                a.positional.push(tok);
+            }
+        }
+        Ok(a)
+    }
+
+    pub fn flag(&mut self, name: &str) -> Option<String> {
+        self.consumed.push(name.to_string());
+        self.flags.get(name).cloned()
+    }
+
+    pub fn flag_or(&mut self, name: &str, default: &str) -> String {
+        self.flag(name).unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn flag_u32(&mut self, name: &str, default: u32) -> Result<u32, String> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name}: bad number {v}")),
+        }
+    }
+
+    pub fn flag_u64(&mut self, name: &str, default: u64) -> Result<u64, String> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name}: bad number {v}")),
+        }
+    }
+
+    pub fn flag_f32(&mut self, name: &str, default: f32) -> Result<f32, String> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name}: bad number {v}")),
+        }
+    }
+
+    pub fn switch(&mut self, name: &str) -> bool {
+        self.flag(name).map(|v| v != "false").unwrap_or(false)
+    }
+
+    /// Error on flags nobody consumed (catches typos).
+    pub fn finish(&self) -> Result<(), String> {
+        for k in self.flags.keys() {
+            if !self.consumed.contains(k) {
+                return Err(format!("unknown flag --{k}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from).collect()).unwrap()
+    }
+
+    #[test]
+    fn subcommand_positional_flags() {
+        let mut a = parse("chopper figure fig4 --layers 8 --out /tmp/x --fast");
+        assert_eq!(a.subcommand, "figure");
+        assert_eq!(a.positional, vec!["fig4"]);
+        assert_eq!(a.flag_u32("layers", 32).unwrap(), 8);
+        assert_eq!(a.flag_or("out", "."), "/tmp/x");
+        assert!(a.switch("fast"));
+        assert!(a.finish().is_ok());
+    }
+
+    #[test]
+    fn equals_style_flags() {
+        let mut a = parse("chopper sweep --iters=6");
+        assert_eq!(a.flag_u32("iters", 20).unwrap(), 6);
+    }
+
+    #[test]
+    fn unknown_flags_rejected_by_finish() {
+        let a = parse("chopper sweep --whoops 3");
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn bad_number_is_an_error() {
+        let mut a = parse("chopper sweep --iters banana");
+        assert!(a.flag_u32("iters", 20).is_err());
+    }
+
+    #[test]
+    fn missing_flags_use_defaults() {
+        let mut a = parse("chopper sweep");
+        assert_eq!(a.flag_u32("iters", 20).unwrap(), 20);
+        assert!(!a.switch("fast"));
+    }
+}

@@ -1,0 +1,320 @@
+//! CLI subcommand implementations.
+
+use crate::chopper::report::{self, SweepRun};
+use crate::chopper::{CpuUtilAnalysis, Filter};
+use crate::cli::Args;
+use crate::config::{FsdpVersion, ModelConfig, NodeSpec, WorkloadConfig};
+use crate::sim::run_workload;
+use crate::trace::chrome;
+use crate::util::fmt;
+use std::path::PathBuf;
+
+pub const USAGE: &str = "\
+chopper — multi-level GPU characterization of LLM training (simulated
+MI300X node + real PJRT mini-Llama path)
+
+USAGE: chopper <subcommand> [options]
+
+  sweep    [--layers N] [--iters N] [--warmup N] [--out DIR]
+           Profile the paper sweep (b1s4 b2s4 b4s4 b1s8 b2s8 × v1,v2) and
+           write every figure (txt/csv/svg) to DIR (default: figures/).
+  figure   <table2|fig4..fig15|all> [--layers N] [--iters N] [--out DIR]
+           Regenerate one figure; prints the ASCII rendering.
+  collect  [--workload b2s4] [--fsdp v1|v2] [--layers N] [--iters N]
+           [--out trace.json]
+           Runtime-profile one workload and write a chrome trace.
+  analyze  <trace.json>
+           Aggregate statistics from a chrome trace (any source: sim/pjrt).
+  train    [--steps N] [--lr X] [--seed N] [--artifacts DIR]
+           Train the executable mini-Llama via the PJRT runtime.
+  config   [--model llama3-8b|mini]
+           Print the model configuration (Table II).
+";
+
+fn model_with_layers(args: &mut Args) -> Result<ModelConfig, String> {
+    let mut cfg = ModelConfig::llama3_8b();
+    let layers = args.flag_u64("layers", cfg.layers)?;
+    cfg.layers = layers;
+    Ok(cfg)
+}
+
+fn parse_fsdp(s: &str) -> Result<FsdpVersion, String> {
+    match s {
+        "v1" | "V1" | "fsdpv1" => Ok(FsdpVersion::V1),
+        "v2" | "V2" | "fsdpv2" => Ok(FsdpVersion::V2),
+        _ => Err(format!("bad --fsdp {s} (use v1 or v2)")),
+    }
+}
+
+pub fn cmd_sweep(args: &mut Args) -> Result<(), String> {
+    let cfg = model_with_layers(args)?;
+    let iters = args.flag_u32("iters", 20)?;
+    let warmup = args.flag_u32("warmup", iters / 2)?;
+    let out: PathBuf = args.flag_or("out", "figures").into();
+    args.finish()?;
+    let node = NodeSpec::mi300x_node();
+    eprintln!(
+        "sweep: {} layers, {iters} iterations ({warmup} warmup), 10 runs…",
+        cfg.layers
+    );
+    let runs = report::run_sweep(
+        &node,
+        &cfg,
+        &[FsdpVersion::V1, FsdpVersion::V2],
+        iters,
+        warmup,
+    );
+    let figs = all_figures(&runs, &node, &cfg)?;
+    for f in &figs {
+        f.save(&out).map_err(|e| e.to_string())?;
+        eprintln!("wrote {}/{}.{{txt,csv}}", out.display(), f.id);
+    }
+    println!("{} figures written to {}", figs.len(), out.display());
+    Ok(())
+}
+
+fn find<'a>(runs: &'a [SweepRun], label: &str) -> Result<&'a SweepRun, String> {
+    runs.iter()
+        .find(|r| r.label() == label)
+        .ok_or_else(|| format!("sweep missing {label}"))
+}
+
+fn all_figures(
+    runs: &[SweepRun],
+    node: &NodeSpec,
+    cfg: &ModelConfig,
+) -> Result<Vec<report::Figure>, String> {
+    let v1 = find(runs, "b2s4-FSDPv1")?;
+    let v2 = find(runs, "b2s4-FSDPv2")?;
+    Ok(vec![
+        report::table2(cfg),
+        report::fig4(runs),
+        report::fig5(runs),
+        report::fig6(runs),
+        report::fig7(v1, v2),
+        report::fig8(v1),
+        report::fig9(runs),
+        report::fig10(),
+        report::fig11(v1, v2),
+        report::fig12(v1),
+        report::fig13(v2),
+        report::fig14(v1, v2),
+        report::fig15(runs, node),
+    ])
+}
+
+pub fn cmd_figure(args: &mut Args) -> Result<(), String> {
+    let id = args
+        .positional
+        .first()
+        .cloned()
+        .ok_or("figure: missing id (table2, fig4…fig15, all)")?;
+    if id == "fig10" {
+        args.finish()?;
+        println!("{}", report::fig10().ascii);
+        return Ok(());
+    }
+    if id == "table2" {
+        let cfg = model_with_layers(args)?;
+        args.finish()?;
+        println!("{}", report::table2(&cfg).ascii);
+        return Ok(());
+    }
+    let cfg = model_with_layers(args)?;
+    let iters = args.flag_u32("iters", 4)?;
+    let warmup = args.flag_u32("warmup", iters / 2)?;
+    let out = args.flag("out").map(PathBuf::from);
+    args.finish()?;
+    if !report::ALL_FIGURES.contains(&id.as_str()) && id != "all" {
+        return Err(format!(
+            "unknown figure `{id}` (have: {} or all)",
+            report::ALL_FIGURES.join(", ")
+        ));
+    }
+    let node = NodeSpec::mi300x_node();
+    eprintln!("profiling sweep ({} layers, {iters} iters)…", cfg.layers);
+    let runs = report::run_sweep(
+        &node,
+        &cfg,
+        &[FsdpVersion::V1, FsdpVersion::V2],
+        iters,
+        warmup,
+    );
+    let figs = all_figures(&runs, &node, &cfg)?;
+    for f in figs {
+        if id == "all" || f.id == id {
+            println!("{}", f.ascii);
+            if let Some(dir) = &out {
+                f.save(dir).map_err(|e| e.to_string())?;
+            }
+        }
+    }
+    Ok(())
+}
+
+pub fn cmd_collect(args: &mut Args) -> Result<(), String> {
+    let cfg = model_with_layers(args)?;
+    let label = args.flag_or("workload", "b2s4");
+    let fsdp = parse_fsdp(&args.flag_or("fsdp", "v1"))?;
+    let iters = args.flag_u32("iters", 20)?;
+    let warmup = args.flag_u32("warmup", iters / 2)?;
+    let out: PathBuf = args.flag_or("out", "trace.json").into();
+    args.finish()?;
+    let mut wl = WorkloadConfig::parse_label(&label, fsdp)
+        .ok_or_else(|| format!("bad --workload {label}"))?;
+    wl.iterations = iters;
+    wl.warmup = warmup;
+    let node = NodeSpec::mi300x_node();
+    let run = run_workload(&node, &cfg, &wl);
+    chrome::write_chrome_trace(&run.trace, &out).map_err(|e| e.to_string())?;
+    println!(
+        "wrote {} ({} events, span {})",
+        out.display(),
+        run.trace.events.len(),
+        fmt::dur_ns(run.trace.span_ns())
+    );
+    let cpu = CpuUtilAnalysis::analyze(&run.cpu);
+    println!(
+        "cpu: median active {:.0} cores, min bound {:.1}",
+        cpu.median_active(),
+        cpu.median_min_cores()
+    );
+    Ok(())
+}
+
+pub fn cmd_analyze(args: &mut Args) -> Result<(), String> {
+    let path = args
+        .positional
+        .first()
+        .cloned()
+        .ok_or("analyze: missing trace path")?;
+    args.finish()?;
+    let trace = chrome::read_chrome_trace(std::path::Path::new(&path))?;
+    println!(
+        "trace: {} events, {} GPUs, workload {} ({}), source {}",
+        trace.events.len(),
+        trace.meta.num_gpus.max(1),
+        trace.meta.workload,
+        trace.meta.fsdp,
+        trace.meta.source
+    );
+    println!("span: {}", fmt::dur_ns(trace.span_ns()));
+    let medians = crate::chopper::aggregate::op_medians(&trace);
+    let mut rows: Vec<(String, f64)> = medians
+        .into_iter()
+        .map(|(op, d)| (op.paper_name(), d))
+        .collect();
+    rows.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    println!("\ntop operations by median duration:");
+    for (name, d) in rows.iter().take(12) {
+        println!("  {:>12}  {}", name, fmt::dur_ns(*d));
+    }
+    let samples = crate::chopper::overlap_samples(&trace, &Filter::sampled());
+    if !samples.is_empty() {
+        let overlapped =
+            samples.iter().filter(|s| s.ratio > 0.5).count() as f64
+                / samples.len() as f64;
+        println!(
+            "\nC3: {:.0}% of {} op instances are >50% overlapped by comm",
+            overlapped * 100.0,
+            samples.len()
+        );
+    }
+    Ok(())
+}
+
+pub fn cmd_train(args: &mut Args) -> Result<(), String> {
+    let steps = args.flag_u32("steps", 100)?;
+    let lr = args.flag_f32("lr", 2.0)?;
+    let seed = args.flag_u64("seed", 42)?;
+    let dir: PathBuf = args.flag_or(
+        "artifacts",
+        crate::runtime::default_artifact_dir().to_str().unwrap_or("artifacts"),
+    )
+    .into();
+    args.finish()?;
+    let mut rt =
+        crate::runtime::Runtime::open(&dir).map_err(|e| format!("{e:#}"))?;
+    let mc = rt.manifest().config.clone();
+    println!(
+        "mini-Llama: {} layers, hidden {}, vocab {}, {} params — PJRT {}",
+        mc.layers,
+        mc.hidden,
+        mc.vocab,
+        mc.params,
+        rt.platform()
+    );
+    let cfg = crate::train::TrainConfig {
+        steps,
+        lr,
+        seed,
+        log_every: (steps / 10).max(1),
+    };
+    let r = crate::train::train(&mut rt, &cfg).map_err(|e| format!("{e:#}"))?;
+    for l in &r.losses {
+        println!("step {:>5}  loss {:.4}  ({:.0} ms)", l.step, l.loss, l.wall_ms);
+    }
+    println!("throughput: {:.0} tokens/s", r.tokens_per_sec);
+    Ok(())
+}
+
+pub fn cmd_config(args: &mut Args) -> Result<(), String> {
+    let name = args.flag_or("model", "llama3-8b");
+    args.finish()?;
+    let cfg = ModelConfig::by_name(&name)
+        .ok_or_else(|| format!("unknown model `{name}`"))?;
+    println!("{}", report::table2(&cfg).ascii);
+    println!("parameters: {}", cfg.param_count());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run_cli(s: &str) -> i32 {
+        crate::cli::run(s.split_whitespace().map(String::from).collect())
+    }
+
+    #[test]
+    fn help_and_unknown() {
+        assert_eq!(run_cli("chopper help"), 0);
+        assert_eq!(run_cli("chopper frobnicate"), 1);
+    }
+
+    #[test]
+    fn config_prints_table2() {
+        assert_eq!(run_cli("chopper config --model llama3-8b"), 0);
+        assert_eq!(run_cli("chopper config --model nope"), 1);
+    }
+
+    #[test]
+    fn fig10_is_static() {
+        assert_eq!(run_cli("chopper figure fig10"), 0);
+    }
+
+    #[test]
+    fn collect_analyze_roundtrip() {
+        let dir = std::env::temp_dir().join("chopper_cli_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let trace = dir.join("t.json");
+        let cmd = format!(
+            "chopper collect --workload b1s4 --fsdp v2 --layers 2 --iters 2 --warmup 1 --out {}",
+            trace.display()
+        );
+        assert_eq!(run_cli(&cmd), 0);
+        assert!(trace.exists());
+        assert_eq!(run_cli(&format!("chopper analyze {}", trace.display())), 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn unknown_flag_fails() {
+        assert_eq!(run_cli("chopper config --bogus 1"), 1);
+    }
+
+    #[test]
+    fn figure_validates_id() {
+        assert_eq!(run_cli("chopper figure nope --layers 1 --iters 2"), 1);
+    }
+}

@@ -1,0 +1,50 @@
+//! Command-line interface: `chopper <subcommand>`.
+//!
+//! Subcommands
+//!   sweep     — profile the paper's b×s × {v1,v2} sweep, write every figure
+//!   figure    — regenerate one table/figure (fig4…fig15, table2)
+//!   collect   — profile one workload, write a chrome trace (+ telemetry)
+//!   analyze   — aggregate statistics from a chrome-trace file
+//!   train     — train the executable mini-Llama end to end via PJRT
+//!   config    — print the model configuration (Table II)
+//!
+//! A tiny in-repo arg parser (clap is unavailable offline; DESIGN.md
+//! substitution table).
+
+pub mod args;
+pub mod commands;
+
+pub use args::Args;
+
+/// Entry point used by `main.rs`. Returns the process exit code.
+pub fn run(argv: Vec<String>) -> i32 {
+    let mut args = match Args::parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n");
+            eprintln!("{}", commands::USAGE);
+            return 2;
+        }
+    };
+    let cmd = args.subcommand.clone();
+    let result = match cmd.as_str() {
+        "sweep" => commands::cmd_sweep(&mut args),
+        "figure" => commands::cmd_figure(&mut args),
+        "collect" => commands::cmd_collect(&mut args),
+        "analyze" => commands::cmd_analyze(&mut args),
+        "train" => commands::cmd_train(&mut args),
+        "config" => commands::cmd_config(&mut args),
+        "help" | "" => {
+            println!("{}", commands::USAGE);
+            Ok(())
+        }
+        other => Err(format!("unknown subcommand `{other}`")),
+    };
+    match result {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}

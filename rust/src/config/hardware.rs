@@ -1,0 +1,194 @@
+//! Hardware description of the simulated node.
+//!
+//! Defaults model the paper's testbed (Section IV-C): eight AMD Instinct
+//! MI300X GPUs (1.3 BF16 PFLOPS peak @ 2.1 GHz, 192 GB HBM3 @ 5.3 TB/s,
+//! 304 CUs / 1216 matrix cores) fully connected by 128 GB/s bidirectional
+//! Infinity Fabric links, hosted by two 96-core AMD EPYC 9684X CPUs with
+//! SMT (384 logical cores) and 2.3 TB of DRAM.
+
+/// Description of a single GPU.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuSpec {
+    pub name: String,
+    /// Peak BF16 matrix throughput at `freq_peak_mhz`, in FLOP/s.
+    pub peak_bf16_flops: f64,
+    /// Peak vector (non-MFMA) throughput in FLOP/s.
+    pub peak_vector_flops: f64,
+    /// HBM capacity in bytes.
+    pub hbm_bytes: u64,
+    /// HBM peak bandwidth in bytes/s.
+    pub hbm_bw: f64,
+    /// Number of compute units (workgroup occupancy model).
+    pub compute_units: u32,
+    /// Number of matrix cores.
+    pub matrix_cores: u32,
+    /// Peak (boost) engine clock in MHz; DVFS scales below this.
+    pub freq_peak_mhz: f64,
+    /// Minimum sustainable engine clock in MHz.
+    pub freq_min_mhz: f64,
+    /// Peak memory clock in MHz.
+    pub mem_freq_peak_mhz: f64,
+    /// Board power cap in watts (GPU package).
+    pub power_cap_w: f64,
+    /// Idle power in watts.
+    pub idle_power_w: f64,
+}
+
+impl GpuSpec {
+    pub fn mi300x() -> Self {
+        Self {
+            name: "AMD Instinct MI300X".into(),
+            peak_bf16_flops: 1.3e15,
+            peak_vector_flops: 163.4e12,
+            hbm_bytes: 192 * (1u64 << 30),
+            hbm_bw: 5.3e12,
+            compute_units: 304,
+            matrix_cores: 1216,
+            freq_peak_mhz: 2100.0,
+            freq_min_mhz: 800.0,
+            mem_freq_peak_mhz: 2525.0,
+            power_cap_w: 750.0,
+            idle_power_w: 140.0,
+        }
+    }
+
+    /// FLOP per engine cycle at peak (used to convert counters <-> time).
+    pub fn flops_per_cycle(&self) -> f64 {
+        self.peak_bf16_flops / (self.freq_peak_mhz * 1e6)
+    }
+}
+
+/// Description of the host CPU complex.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CpuSpec {
+    pub name: String,
+    pub sockets: u32,
+    pub cores_per_socket: u32,
+    /// SMT ways (2 on EPYC).
+    pub smt: u32,
+    /// Host memory in bytes.
+    pub dram_bytes: u64,
+    /// Mean cost for the host to dispatch one kernel, in ns.
+    pub dispatch_ns: f64,
+    /// Additional per-kernel launch latency (ring doorbell -> GPU start) ns.
+    pub launch_latency_ns: f64,
+}
+
+impl CpuSpec {
+    pub fn epyc_9684x_x2() -> Self {
+        Self {
+            name: "2x AMD EPYC 9684X".into(),
+            sockets: 2,
+            cores_per_socket: 96,
+            smt: 2,
+            dram_bytes: 2300 * (1u64 << 30),
+            dispatch_ns: 3_000.0,
+            launch_latency_ns: 8_000.0,
+        }
+    }
+
+    pub fn physical_cores(&self) -> u32 {
+        self.sockets * self.cores_per_socket
+    }
+
+    pub fn logical_cores(&self) -> u32 {
+        self.physical_cores() * self.smt
+    }
+}
+
+/// Interconnect between GPUs (fully connected Infinity Fabric mesh).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LinkSpec {
+    /// Per-direction bandwidth of one peer link, bytes/s.
+    pub link_bw: f64,
+    /// Link latency per hop in ns.
+    pub latency_ns: f64,
+    /// PCIe host link bandwidth, bytes/s (Gen5 x16).
+    pub host_bw: f64,
+    /// RCCL protocol efficiency over the parallel rings (fraction of the
+    /// aggregate link bandwidth actually achieved; ~0.5 observed for
+    /// large collectives on IF meshes).
+    pub rccl_eff: f64,
+}
+
+impl LinkSpec {
+    pub fn infinity_fabric() -> Self {
+        Self {
+            link_bw: 64e9, // 128 GB/s bidirectional => 64 GB/s per direction
+            latency_ns: 1_500.0,
+            host_bw: 64e9,
+            rccl_eff: 0.65,
+        }
+    }
+}
+
+/// The whole node.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodeSpec {
+    pub gpu: GpuSpec,
+    pub num_gpus: u32,
+    pub cpu: CpuSpec,
+    pub link: LinkSpec,
+}
+
+impl NodeSpec {
+    /// The paper's testbed: 8x MI300X + 2x EPYC 9684X.
+    pub fn mi300x_node() -> Self {
+        Self {
+            gpu: GpuSpec::mi300x(),
+            num_gpus: 8,
+            cpu: CpuSpec::epyc_9684x_x2(),
+            link: LinkSpec::infinity_fabric(),
+        }
+    }
+
+    /// Effective ring all-gather time for `bytes` of full payload: RCCL
+    /// builds (R−1) parallel rings over the fully connected mesh, so each
+    /// of the (R−1) steps moves one 1/R chunk split across *all* links;
+    /// `rccl_eff` captures protocol overhead. Used by the interconnect
+    /// model as the base (uncontended) duration.
+    pub fn ring_collective_ns(&self, full_bytes: f64) -> f64 {
+        let r = self.num_gpus as f64;
+        let steps = (r - 1.0).max(1.0);
+        let chunk = full_bytes / r;
+        let eff_bw = self.link.link_bw * steps * self.link.rccl_eff;
+        steps * (chunk / eff_bw * 1e9 + self.link.latency_ns)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mi300x_peaks_match_paper() {
+        let g = GpuSpec::mi300x();
+        assert_eq!(g.peak_bf16_flops, 1.3e15); // 1.3 PFLOPS (Section II-D)
+        assert_eq!(g.hbm_bytes, 192 * (1u64 << 30)); // 192 GB
+        assert_eq!(g.hbm_bw, 5.3e12); // 5.3 TB/s
+        assert_eq!(g.matrix_cores, 1216);
+    }
+
+    #[test]
+    fn node_logical_cores() {
+        let n = NodeSpec::mi300x_node();
+        assert_eq!(n.cpu.physical_cores(), 192);
+        assert_eq!(n.cpu.logical_cores(), 384);
+    }
+
+    #[test]
+    fn ring_collective_scales_with_bytes() {
+        let n = NodeSpec::mi300x_node();
+        let t1 = n.ring_collective_ns(1e9);
+        let t2 = n.ring_collective_ns(2e9);
+        assert!(t2 > t1 * 1.8 && t2 < t1 * 2.2);
+    }
+
+    #[test]
+    fn flops_per_cycle_sane() {
+        let g = GpuSpec::mi300x();
+        // 1.3e15 / 2.1e9 cycles ~ 619k flop/cycle across 1216 matrix cores.
+        let fpc = g.flops_per_cycle();
+        assert!(fpc > 5e5 && fpc < 7e5);
+    }
+}

@@ -1,0 +1,13 @@
+//! Configuration: hardware (the simulated MI300X node), model (Table II),
+//! workload (the b×s sweep and profiling protocol), and a small config-file
+//! parser for the CLI.
+
+pub mod hardware;
+pub mod model;
+pub mod parse;
+pub mod workload;
+
+pub use hardware::{CpuSpec, GpuSpec, LinkSpec, NodeSpec};
+pub use model::ModelConfig;
+pub use parse::{ConfigError, ConfigMap};
+pub use workload::{FsdpVersion, WorkloadConfig};

@@ -1,0 +1,120 @@
+//! Model configuration (the paper's Table II plus the executable mini
+//! config used by the real-execution path).
+
+/// Llama-style decoder configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab: u64,
+    pub hidden: u64,
+    pub layers: u64,
+    pub q_heads: u64,
+    pub kv_heads: u64,
+    pub ffn: u64,
+    /// Bytes per element of weights/activations (BF16 in the paper).
+    pub dtype_bytes: u64,
+}
+
+impl ModelConfig {
+    /// Table II: Llama 3 8B — 32 layers, 4096 hidden, 14336 FFN, 32/8 heads.
+    pub fn llama3_8b() -> Self {
+        Self {
+            name: "llama3-8b".into(),
+            vocab: 128_256,
+            hidden: 4096,
+            layers: 32,
+            q_heads: 32,
+            kv_heads: 8,
+            ffn: 14_336,
+            dtype_bytes: 2, // BF16 (Section IV-B)
+        }
+    }
+
+    /// The CPU-executable mini config matching python/compile/model.py.
+    pub fn mini() -> Self {
+        Self {
+            name: "mini".into(),
+            vocab: 2048,
+            hidden: 256,
+            layers: 4,
+            q_heads: 8,
+            kv_heads: 4,
+            ffn: 896,
+            dtype_bytes: 4, // f32 on the CPU PJRT path
+        }
+    }
+
+    pub fn head_dim(&self) -> u64 {
+        self.hidden / self.q_heads
+    }
+
+    /// Parameters of one decoder layer (attention + MLP + 2 norms).
+    pub fn params_per_layer(&self) -> u64 {
+        let h = self.hidden;
+        let hd = self.head_dim();
+        let kv = self.kv_heads * hd;
+        h * h                // wq
+            + 2 * h * kv     // wk, wv
+            + h * h          // wo
+            + 3 * h * self.ffn // wg, wu, wd
+            + 2 * h          // norms
+    }
+
+    pub fn param_count(&self) -> u64 {
+        self.vocab * self.hidden            // embed
+            + self.layers * self.params_per_layer()
+            + self.hidden                   // final norm
+            + self.hidden * self.vocab      // logits projection
+    }
+
+    /// Weight bytes of one decoder layer (what FSDP all-gathers).
+    pub fn layer_weight_bytes(&self) -> u64 {
+        self.params_per_layer() * self.dtype_bytes
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "llama3-8b" | "llama3_8b" => Some(Self::llama3_8b()),
+            "mini" => Some(Self::mini()),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn llama3_8b_is_roughly_8b_params() {
+        let c = ModelConfig::llama3_8b();
+        let p = c.param_count();
+        assert!(p > 7_000_000_000 && p < 9_000_000_000, "{p}");
+    }
+
+    #[test]
+    fn table_ii_fields() {
+        let c = ModelConfig::llama3_8b();
+        assert_eq!(c.layers, 32);
+        assert_eq!(c.hidden, 4096);
+        assert_eq!(c.ffn, 14_336);
+        assert_eq!(c.q_heads, 32);
+        assert_eq!(c.kv_heads, 8);
+        assert_eq!(c.head_dim(), 128);
+    }
+
+    #[test]
+    fn layer_weight_bytes_bf16() {
+        let c = ModelConfig::llama3_8b();
+        // ~218M params/layer * 2 bytes ~ 437 MB all-gathered per layer.
+        let b = c.layer_weight_bytes();
+        assert!(b > 350_000_000 && b < 500_000_000, "{b}");
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert!(ModelConfig::by_name("llama3-8b").is_some());
+        assert!(ModelConfig::by_name("mini").is_some());
+        assert!(ModelConfig::by_name("gpt-oss").is_none());
+    }
+}

@@ -1,0 +1,130 @@
+//! Line-based `key = value` config-file parser (clap/serde are not vendored
+//! in this environment; a small deterministic parser is all the CLI needs).
+//!
+//! Format: one `key = value` per line, `#` comments, blank lines ignored.
+//! Keys are dotted paths (`sim.seed`, `workload.batch`).
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::Path;
+
+#[derive(Debug)]
+pub struct ConfigError(pub String);
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+#[derive(Debug, Clone, Default)]
+pub struct ConfigMap {
+    values: BTreeMap<String, String>,
+}
+
+impl ConfigMap {
+    pub fn parse(text: &str) -> Result<Self, ConfigError> {
+        let mut values = BTreeMap::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (k, v) = line.split_once('=').ok_or_else(|| {
+                ConfigError(format!("line {}: expected 'key = value'", lineno + 1))
+            })?;
+            let key = k.trim();
+            if key.is_empty() {
+                return Err(ConfigError(format!("line {}: empty key", lineno + 1)));
+            }
+            values.insert(key.to_string(), v.trim().to_string());
+        }
+        Ok(Self { values })
+    }
+
+    pub fn load(path: &Path) -> Result<Self, ConfigError> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| ConfigError(format!("{}: {e}", path.display())))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_u64(&self, key: &str) -> Result<Option<u64>, ConfigError> {
+        self.typed(key, "u64", |s| s.parse::<u64>().ok())
+    }
+
+    pub fn get_f64(&self, key: &str) -> Result<Option<f64>, ConfigError> {
+        self.typed(key, "f64", |s| s.parse::<f64>().ok())
+    }
+
+    pub fn get_bool(&self, key: &str) -> Result<Option<bool>, ConfigError> {
+        self.typed(key, "bool", |s| match s {
+            "true" | "1" | "yes" | "on" => Some(true),
+            "false" | "0" | "no" | "off" => Some(false),
+            _ => None,
+        })
+    }
+
+    fn typed<T>(
+        &self,
+        key: &str,
+        ty: &str,
+        f: impl Fn(&str) -> Option<T>,
+    ) -> Result<Option<T>, ConfigError> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(s) => f(s)
+                .map(Some)
+                .ok_or_else(|| ConfigError(format!("key '{key}': '{s}' is not a {ty}"))),
+        }
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(|s| s.as_str())
+    }
+
+    pub fn set(&mut self, key: &str, value: &str) {
+        self.values.insert(key.to_string(), value.to_string());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_basic_file() {
+        let c = ConfigMap::parse(
+            "# comment\nsim.seed = 42\n\nworkload.label= b2s4 \nflag = true\n",
+        )
+        .unwrap();
+        assert_eq!(c.get_u64("sim.seed").unwrap(), Some(42));
+        assert_eq!(c.get("workload.label"), Some("b2s4"));
+        assert_eq!(c.get_bool("flag").unwrap(), Some(true));
+        assert_eq!(c.get("missing"), None);
+    }
+
+    #[test]
+    fn type_errors_are_reported() {
+        let c = ConfigMap::parse("x = notanumber\n").unwrap();
+        assert!(c.get_u64("x").is_err());
+        assert!(c.get_bool("x").is_err());
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(ConfigMap::parse("just a line\n").is_err());
+        assert!(ConfigMap::parse("= value\n").is_err());
+    }
+
+    #[test]
+    fn later_keys_override() {
+        let c = ConfigMap::parse("a = 1\na = 2\n").unwrap();
+        assert_eq!(c.get_u64("a").unwrap(), Some(2));
+    }
+}

@@ -1,0 +1,136 @@
+//! Workload configuration: the paper's batch-size/sequence-length sweep and
+//! profiling protocol (Section IV-A/IV-D).
+
+use std::fmt;
+
+/// FSDP flavor under test (Section II-B).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum FsdpVersion {
+    /// Flat-parameter FSDP: non-deterministic caching-allocator reuse.
+    V1,
+    /// Per-parameter-sharding FSDP: deterministic allocation, extra copies.
+    V2,
+}
+
+impl fmt::Display for FsdpVersion {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FsdpVersion::V1 => write!(f, "FSDPv1"),
+            FsdpVersion::V2 => write!(f, "FSDPv2"),
+        }
+    }
+}
+
+/// One training workload configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadConfig {
+    pub batch: u64,
+    /// Sequence length in tokens.
+    pub seq: u64,
+    pub fsdp: FsdpVersion,
+    /// Total iterations to run.
+    pub iterations: u32,
+    /// Leading iterations discarded as warmup (paper: 10 of 20).
+    pub warmup: u32,
+    /// Whether iterations include the optimizer phase. The paper runs once
+    /// with an optimizer step at iteration 15 and once without.
+    pub optimizer: bool,
+    /// Simulator seed.
+    pub seed: u64,
+}
+
+impl WorkloadConfig {
+    pub fn new(batch: u64, seq: u64, fsdp: FsdpVersion) -> Self {
+        Self {
+            batch,
+            seq,
+            fsdp,
+            iterations: 20,
+            warmup: 10,
+            optimizer: true,
+            seed: 0xC0FFEE,
+        }
+    }
+
+    /// Paper naming: b1s4 = batch 1, seq 4K.
+    pub fn label(&self) -> String {
+        format!("b{}s{}", self.batch, self.seq / 1024)
+    }
+
+    pub fn label_with_fsdp(&self) -> String {
+        format!("{}-{}", self.label(), self.fsdp)
+    }
+
+    /// Parse "b2s4" style labels.
+    pub fn parse_label(label: &str, fsdp: FsdpVersion) -> Option<Self> {
+        let rest = label.strip_prefix('b')?;
+        let sidx = rest.find('s')?;
+        let batch: u64 = rest[..sidx].parse().ok()?;
+        let seq_k: u64 = rest[sidx + 1..].parse().ok()?;
+        if batch == 0 || seq_k == 0 {
+            return None;
+        }
+        Some(Self::new(batch, seq_k * 1024, fsdp))
+    }
+
+    /// Tokens processed per iteration per GPU (data parallel: each rank has
+    /// its own micro-batch).
+    pub fn tokens_per_iteration(&self, num_gpus: u64) -> u64 {
+        self.batch * self.seq * num_gpus
+    }
+
+    /// The paper's evaluated sweep: all configurations that fit in memory —
+    /// b1s4, b2s4, b4s4, b1s8, b2s8 (Section IV-A).
+    pub fn paper_sweep(fsdp: FsdpVersion) -> Vec<Self> {
+        ["b1s4", "b2s4", "b4s4", "b1s8", "b2s8"]
+            .iter()
+            .map(|l| Self::parse_label(l, fsdp).expect("static label"))
+            .collect()
+    }
+
+    /// Sampled (non-warmup) iteration indices.
+    pub fn sampled_iterations(&self) -> impl Iterator<Item = u32> + '_ {
+        self.warmup..self.iterations
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn label_roundtrip() {
+        for l in ["b1s4", "b2s4", "b4s4", "b1s8", "b2s8"] {
+            let w = WorkloadConfig::parse_label(l, FsdpVersion::V1).unwrap();
+            assert_eq!(w.label(), l);
+        }
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(WorkloadConfig::parse_label("x1s4", FsdpVersion::V1).is_none());
+        assert!(WorkloadConfig::parse_label("b0s4", FsdpVersion::V1).is_none());
+        assert!(WorkloadConfig::parse_label("b1", FsdpVersion::V1).is_none());
+    }
+
+    #[test]
+    fn paper_sweep_has_five_configs() {
+        let sweep = WorkloadConfig::paper_sweep(FsdpVersion::V2);
+        assert_eq!(sweep.len(), 5);
+        assert!(sweep.iter().all(|w| w.fsdp == FsdpVersion::V2));
+    }
+
+    #[test]
+    fn tokens_per_iteration() {
+        let w = WorkloadConfig::parse_label("b2s4", FsdpVersion::V1).unwrap();
+        assert_eq!(w.tokens_per_iteration(8), 2 * 4096 * 8);
+    }
+
+    #[test]
+    fn sampled_iterations_skip_warmup() {
+        let w = WorkloadConfig::new(1, 4096, FsdpVersion::V1);
+        let v: Vec<u32> = w.sampled_iterations().collect();
+        assert_eq!(v.len(), 10);
+        assert_eq!(v[0], 10);
+    }
+}

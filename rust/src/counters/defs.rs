@@ -1,0 +1,153 @@
+//! Counter definitions and the multi-pass collection constraint.
+
+use std::collections::BTreeMap;
+
+/// The performance counters Chopper collects (CDNA3 vocabulary).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Counter {
+    /// Total engine cycles the kernel occupied (C_gpu in Eq. 10).
+    GpuCycles,
+    /// Cycles with at least one MFMA instruction in flight.
+    MfmaBusyCycles,
+    /// Cycles with vector-ALU activity.
+    ValuBusyCycles,
+    /// Bytes read from HBM through the L2 (TCC).
+    TccReadBytes,
+    /// Bytes written to HBM through the L2 (TCC).
+    TccWriteBytes,
+    /// Flops actually executed, including padding (F_perf in Eq. 7).
+    FlopsPerformed,
+    /// Workgroups launched (occupancy analysis).
+    GridWorkgroups,
+}
+
+impl Counter {
+    pub const ALL: [Counter; 7] = [
+        Counter::GpuCycles,
+        Counter::MfmaBusyCycles,
+        Counter::ValuBusyCycles,
+        Counter::TccReadBytes,
+        Counter::TccWriteBytes,
+        Counter::FlopsPerformed,
+        Counter::GridWorkgroups,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Counter::GpuCycles => "GRBM_GUI_ACTIVE",
+            Counter::MfmaBusyCycles => "SQ_VALU_MFMA_BUSY_CYCLES",
+            Counter::ValuBusyCycles => "SQ_BUSY_CU_CYCLES",
+            Counter::TccReadBytes => "TCC_EA_RDREQ_BYTES",
+            Counter::TccWriteBytes => "TCC_EA_WRREQ_BYTES",
+            Counter::FlopsPerformed => "SQ_INSTS_MFMA_FLOPS",
+            Counter::GridWorkgroups => "SPI_CSN_NUM_WAVES",
+        }
+    }
+}
+
+/// Group counters into passes of at most `per_pass` (the paper collects
+/// "two or three at a time").
+pub fn collection_passes(counters: &[Counter], per_pass: usize) -> Vec<Vec<Counter>> {
+    assert!(per_pass >= 1);
+    counters
+        .chunks(per_pass)
+        .map(|c| c.to_vec())
+        .collect()
+}
+
+/// Counter values recorded for one kernel execution.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CounterValues {
+    values: BTreeMap<Counter, f64>,
+}
+
+impl CounterValues {
+    pub fn set(&mut self, c: Counter, v: f64) {
+        self.values.insert(c, v);
+    }
+
+    pub fn get(&self, c: Counter) -> Option<f64> {
+        self.values.get(&c).copied()
+    }
+
+    pub fn merge(&mut self, other: &CounterValues) {
+        for (k, v) in &other.values {
+            self.values.insert(*k, *v);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+}
+
+/// Counters keyed by the alignment key (gpu, stream-seq) of the
+/// *serialized* hardware-profiling trace.
+#[derive(Debug, Clone, Default)]
+pub struct CounterTrace {
+    /// (gpu, seq-within-gpu-compute-stream) -> values.
+    pub records: BTreeMap<(u32, u64), CounterValues>,
+    /// Which counters were collected in which pass.
+    pub passes: Vec<Vec<Counter>>,
+}
+
+impl CounterTrace {
+    pub fn get(&self, gpu: u32, seq: u64) -> Option<&CounterValues> {
+        self.records.get(&(gpu, seq))
+    }
+
+    pub fn insert(&mut self, gpu: u32, seq: u64, values: CounterValues) {
+        self.records
+            .entry((gpu, seq))
+            .or_default()
+            .merge(&values);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_respect_limit() {
+        let passes = collection_passes(&Counter::ALL, 3);
+        assert_eq!(passes.len(), 3);
+        assert!(passes.iter().all(|p| p.len() <= 3));
+        let total: usize = passes.iter().map(|p| p.len()).sum();
+        assert_eq!(total, Counter::ALL.len());
+    }
+
+    #[test]
+    fn values_merge_across_passes() {
+        let mut a = CounterValues::default();
+        a.set(Counter::GpuCycles, 100.0);
+        let mut b = CounterValues::default();
+        b.set(Counter::MfmaBusyCycles, 40.0);
+        a.merge(&b);
+        assert_eq!(a.get(Counter::GpuCycles), Some(100.0));
+        assert_eq!(a.get(Counter::MfmaBusyCycles), Some(40.0));
+        assert_eq!(a.len(), 2);
+    }
+
+    #[test]
+    fn trace_insert_merges() {
+        let mut t = CounterTrace::default();
+        let mut v1 = CounterValues::default();
+        v1.set(Counter::GpuCycles, 1.0);
+        let mut v2 = CounterValues::default();
+        v2.set(Counter::TccReadBytes, 2.0);
+        t.insert(0, 5, v1);
+        t.insert(0, 5, v2);
+        assert_eq!(t.get(0, 5).unwrap().len(), 2);
+    }
+
+    #[test]
+    fn counter_names_are_cdna_flavored() {
+        assert!(Counter::MfmaBusyCycles.name().contains("MFMA"));
+        assert!(Counter::TccReadBytes.name().contains("TCC"));
+    }
+}

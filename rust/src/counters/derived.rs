@@ -1,0 +1,100 @@
+//! Derived metrics from raw counters — the rocprofiler-compute equations
+//! (Section IV-D) used by the aggregation layer and the Fig. 15 breakdown.
+
+use super::defs::{Counter, CounterValues};
+use crate::config::GpuSpec;
+
+/// Metrics derived for one kernel from its counters + duration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DerivedMetrics {
+    /// MFMA utilization in [0,1]: MFMA busy cycles / total cycles (Eq. 8's
+    /// denominator).
+    pub mfma_util: f64,
+    /// Achieved FLOPS (flops performed / duration).
+    pub achieved_flops: f64,
+    /// Achieved HBM bandwidth (bytes/s).
+    pub achieved_bw: f64,
+    /// Mean engine clock over the kernel, MHz (C_gpu / duration).
+    pub freq_mhz: f64,
+    /// Flops performed (incl. padding), F_perf.
+    pub flops_performed: f64,
+    /// Total GPU cycles, C_gpu.
+    pub gpu_cycles: f64,
+}
+
+impl DerivedMetrics {
+    /// Derive from counters and the kernel duration in ns. Returns None if
+    /// the required counters were not collected.
+    pub fn from_counters(values: &CounterValues, duration_ns: f64) -> Option<Self> {
+        let cycles = values.get(Counter::GpuCycles)?;
+        let mfma = values.get(Counter::MfmaBusyCycles).unwrap_or(0.0);
+        let flops = values.get(Counter::FlopsPerformed).unwrap_or(0.0);
+        let rd = values.get(Counter::TccReadBytes).unwrap_or(0.0);
+        let wr = values.get(Counter::TccWriteBytes).unwrap_or(0.0);
+        let secs = (duration_ns * 1e-9).max(1e-15);
+        Some(Self {
+            mfma_util: if cycles > 0.0 { (mfma / cycles).min(1.0) } else { 0.0 },
+            achieved_flops: flops / secs,
+            achieved_bw: (rd + wr) / secs,
+            freq_mhz: cycles / secs / 1e6,
+            flops_performed: flops,
+            gpu_cycles: cycles,
+        })
+    }
+
+    /// Fraction of peak matrix throughput achieved (setup-validation
+    /// style "MFU" number).
+    pub fn matrix_efficiency(&self, gpu: &GpuSpec) -> f64 {
+        self.achieved_flops / gpu.peak_bf16_flops
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn values(cycles: f64, mfma: f64, flops: f64, rd: f64, wr: f64) -> CounterValues {
+        let mut v = CounterValues::default();
+        v.set(Counter::GpuCycles, cycles);
+        v.set(Counter::MfmaBusyCycles, mfma);
+        v.set(Counter::FlopsPerformed, flops);
+        v.set(Counter::TccReadBytes, rd);
+        v.set(Counter::TccWriteBytes, wr);
+        v
+    }
+
+    #[test]
+    fn derives_util_and_rates() {
+        // 1 ms kernel at 2 GHz: 2e6 cycles, 60% MFMA busy.
+        let v = values(2e6, 1.2e6, 1e9, 5e6, 5e6);
+        let d = DerivedMetrics::from_counters(&v, 1e6).unwrap();
+        assert!((d.mfma_util - 0.6).abs() < 1e-12);
+        assert!((d.freq_mhz - 2000.0).abs() < 1e-9);
+        // 1e9 flops over 1 ms = 1e12 flop/s; 1e7 bytes over 1 ms = 1e10 B/s.
+        assert!((d.achieved_flops - 1e12).abs() / 1e12 < 1e-9);
+        assert!((d.achieved_bw - 1e10).abs() / 1e10 < 1e-9);
+    }
+
+    #[test]
+    fn missing_cycles_yields_none() {
+        let mut v = CounterValues::default();
+        v.set(Counter::FlopsPerformed, 1.0);
+        assert!(DerivedMetrics::from_counters(&v, 1.0).is_none());
+    }
+
+    #[test]
+    fn util_clamped_to_one() {
+        let v = values(100.0, 500.0, 0.0, 0.0, 0.0);
+        let d = DerivedMetrics::from_counters(&v, 1.0).unwrap();
+        assert_eq!(d.mfma_util, 1.0);
+    }
+
+    #[test]
+    fn matrix_efficiency_against_peak() {
+        let gpu = GpuSpec::mi300x();
+        let v = values(2.1e6, 2.1e6, 6.5e11, 0.0, 0.0);
+        let d = DerivedMetrics::from_counters(&v, 1e6).unwrap();
+        // 6.5e11 flops in 1 ms = 6.5e14 flop/s = 50% of 1.3e15.
+        assert!((d.matrix_efficiency(&gpu) - 0.5).abs() < 1e-9);
+    }
+}

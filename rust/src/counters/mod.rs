@@ -1,0 +1,11 @@
+//! Hardware performance counters and derived metrics.
+//!
+//! Models the paper's rocprofv3 workflow (Section III-B2): only 2–3
+//! counters can be collected per pass, collection serializes kernels, and
+//! derived metrics follow rocprofiler-compute's equations.
+
+pub mod defs;
+pub mod derived;
+
+pub use defs::{collection_passes, Counter, CounterTrace, CounterValues};
+pub use derived::DerivedMetrics;

@@ -1,0 +1,14 @@
+//! FSDP substrate: sharding math, the caching-allocator model (v1
+//! non-determinism vs v2 determinism), and the dispatch-schedule builder
+//! that weaves collectives and FSDPv2 copy kernels into the compute stream.
+
+pub mod allocator;
+pub mod schedule;
+pub mod shard;
+
+pub use allocator::{simulate_gather_pattern, AllocStats, CachingAllocator, MemEvent};
+pub use schedule::{
+    build_program, CollectiveDesc, CommScope, DispatchItem, HostSync, ProgKernel,
+    Program,
+};
+pub use shard::ShardLayout;

@@ -1,0 +1,483 @@
+//! FSDP dispatch-schedule builder.
+//!
+//! Expands the per-iteration compute program (model::graph) into the full
+//! host dispatch stream for one rank: compute kernels, collectives
+//! (all-gather / reduce-scatter with prefetch depth 2), FSDPv2's serialized
+//! parameter-copy kernels, host-side bookkeeping work, and the
+//! synchronization points. Every rank runs the same program — collective
+//! ids therefore align across ranks and become the rendezvous keys in the
+//! simulator.
+//!
+//! Mechanisms encoded here (referenced from DESIGN.md §5):
+//!  * pipeline fill: AG(embed), AG(0), AG(1) are enqueued back-to-back
+//!    before the first compute kernel of the iteration (Fig. 12);
+//!  * pipeline empty: trailing reduce-scatters drain during b_ga and the
+//!    optimizer sync (Insight 5);
+//!  * FSDPv2 serializes ParamCopy kernels into the compute stream before
+//!    f_attn_n, before b_mlp_dp, and before b_ie (Section V-D3);
+//!  * FSDPv1 performs per-tensor host work inside the optimizer loop
+//!    (bubbles between opt_step kernels, reduced in v2).
+
+use crate::config::{FsdpVersion, ModelConfig, WorkloadConfig};
+use crate::model::graph::{build_iteration, KernelDesc};
+use crate::model::ops::{OpRef, OpType, Phase};
+
+/// What a collective gathers/reduces.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CommScope {
+    Embed,
+    Layer(u32),
+    Head,
+}
+
+impl CommScope {
+    pub fn layer(&self) -> Option<u32> {
+        match self {
+            CommScope::Layer(l) => Some(*l),
+            _ => None,
+        }
+    }
+}
+
+/// One collective operation (same id on every rank).
+#[derive(Debug, Clone)]
+pub struct CollectiveDesc {
+    pub id: u64,
+    pub op: OpRef,
+    pub scope: CommScope,
+    pub iter: u32,
+    /// Full (unsharded) payload bytes.
+    pub bytes: f64,
+    /// Cross-stream dependency (HIP stream-event semantics): the comm
+    /// kernel may not start on a rank until this many compute kernels have
+    /// *completed* there — i.e., an event recorded on the compute stream
+    /// at the comm's enqueue point. This is what anchors collectives to
+    /// device-side progress instead of the (far-ahead) host clock.
+    pub wait_seq: u64,
+}
+
+/// A compute kernel in dispatch order.
+#[derive(Debug, Clone)]
+pub struct ProgKernel {
+    pub desc: KernelDesc,
+    pub iter: u32,
+    /// Collective that must complete before this kernel may start.
+    pub wait_comm: Option<u64>,
+}
+
+/// Host-side synchronization.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HostSync {
+    /// Host blocks until the given collective completes.
+    Collective(u64),
+    /// Host blocks until both streams fully drain.
+    Device,
+}
+
+#[derive(Debug, Clone)]
+pub enum DispatchItem {
+    Kernel(ProgKernel),
+    Comm(CollectiveDesc),
+    Sync(HostSync),
+    /// Pure host CPU time (bookkeeping) before the next dispatch, ns.
+    HostWork { ns: f64, tag: &'static str },
+}
+
+/// The complete multi-iteration dispatch program of one rank.
+#[derive(Debug, Clone)]
+pub struct Program {
+    pub items: Vec<DispatchItem>,
+    pub num_collectives: u64,
+    pub iterations: u32,
+}
+
+impl Program {
+    pub fn kernels(&self) -> impl Iterator<Item = &ProgKernel> {
+        self.items.iter().filter_map(|i| match i {
+            DispatchItem::Kernel(k) => Some(k),
+            _ => None,
+        })
+    }
+
+    pub fn collectives(&self) -> impl Iterator<Item = &CollectiveDesc> {
+        self.items.iter().filter_map(|i| match i {
+            DispatchItem::Comm(c) => Some(c),
+            _ => None,
+        })
+    }
+}
+
+struct Builder {
+    items: Vec<DispatchItem>,
+    next_comm_id: u64,
+    kernel_count: u64,
+}
+
+impl Builder {
+    fn comm(&mut self, op: OpType, scope: CommScope, iter: u32, bytes: f64) -> u64 {
+        let id = self.next_comm_id;
+        self.next_comm_id += 1;
+        self.items.push(DispatchItem::Comm(CollectiveDesc {
+            id,
+            op: OpRef::new(op, Phase::Forward),
+            scope,
+            iter,
+            bytes,
+            wait_seq: self.kernel_count,
+        }));
+        id
+    }
+
+    fn kernel(&mut self, desc: KernelDesc, iter: u32, wait: Option<u64>) {
+        self.kernel_count += 1;
+        self.items.push(DispatchItem::Kernel(ProgKernel {
+            desc,
+            iter,
+            wait_comm: wait,
+        }));
+    }
+
+    fn host(&mut self, ns: f64, tag: &'static str) {
+        self.items.push(DispatchItem::HostWork { ns, tag });
+    }
+}
+
+fn param_copy_kernel(cfg: &ModelConfig, phase: Phase, layer: Option<u32>,
+                     ranks: u64) -> KernelDesc {
+    let bytes = 2.0 * cfg.layer_weight_bytes() as f64 / ranks as f64;
+    KernelDesc {
+        name: "fsdp2_param_copy".into(),
+        op: OpRef::new(OpType::ParamCopy, phase),
+        layer,
+        kind: OpType::ParamCopy.kind(),
+        flops: 0.0,
+        bytes,
+        gemm_mnk: None,
+    }
+}
+
+/// Build the dispatch program for `wl` on a model sharded over `ranks`.
+pub fn build_program(cfg: &ModelConfig, wl: &WorkloadConfig, ranks: u64) -> Program {
+    let iter_prog = build_iteration(cfg, wl.batch, wl.seq, ranks, wl.optimizer);
+    let layers = cfg.layers as u32;
+    let layer_bytes = cfg.layer_weight_bytes() as f64;
+    let embed_bytes = (cfg.vocab * cfg.hidden * cfg.dtype_bytes) as f64;
+    let head_bytes = ((cfg.hidden + cfg.hidden * cfg.vocab) * cfg.dtype_bytes) as f64;
+    let v2 = wl.fsdp == FsdpVersion::V2;
+
+    let mut b = Builder {
+        items: Vec::new(),
+        next_comm_id: 0,
+        kernel_count: 0,
+    };
+
+    for iter in 0..wl.iterations {
+        // --- iteration begin: dataloader + FSDP bookkeeping on the host.
+        b.host(120_000.0, "iter_begin");
+
+        // --- forward: fill the AG pipeline (Fig. 12).
+        let ag_embed = b.comm(OpType::AllGather, CommScope::Embed, iter, embed_bytes);
+        let mut ag_ids: Vec<u64> = Vec::with_capacity(layers as usize);
+        for l in 0..2.min(layers) {
+            ag_ids.push(b.comm(
+                OpType::AllGather,
+                CommScope::Layer(l),
+                iter,
+                layer_bytes,
+            ));
+        }
+
+        let mut fwd_iter = iter_prog.fwd.iter();
+        // i_e waits on the embedding gather.
+        let ie = fwd_iter.next().expect("i_e first");
+        for k in &ie.kernels {
+            b.kernel(k.clone(), iter, Some(ag_embed));
+        }
+
+        let mut ag_head: Option<u64> = None;
+        for l in 0..layers {
+            // Prefetch depth 2.
+            if l + 2 < layers {
+                ag_ids.push(b.comm(
+                    OpType::AllGather,
+                    CommScope::Layer(l + 2),
+                    iter,
+                    layer_bytes,
+                ));
+            } else if ag_head.is_none() {
+                ag_head =
+                    Some(b.comm(OpType::AllGather, CommScope::Head, iter, head_bytes));
+            }
+            let wait = Some(ag_ids[l as usize]);
+            if v2 {
+                // Per-parameter sharding: copy gathered shards into the
+                // flat views, serialized in the compute stream.
+                b.kernel(
+                    param_copy_kernel(cfg, Phase::Forward, Some(l), ranks),
+                    iter,
+                    wait,
+                );
+            }
+            let mut first = true;
+            for op in iter_prog.fwd.iter().filter(|o| o.layer == Some(l)) {
+                for k in &op.kernels {
+                    // Only the first kernel of the layer carries the AG
+                    // dependency (the rest are ordered behind it anyway).
+                    let w = if first && !v2 { wait } else { None };
+                    b.kernel(k.clone(), iter, w);
+                    first = false;
+                }
+            }
+        }
+        let ag_head = ag_head
+            .unwrap_or_else(|| b.comm(OpType::AllGather, CommScope::Head, iter, head_bytes));
+        // ln + lp wait on the head gather.
+        let mut first = true;
+        for op in iter_prog.fwd.iter().filter(|o| {
+            o.layer.is_none() && matches!(o.op.op, OpType::Ln | OpType::Lp)
+        }) {
+            for k in &op.kernels {
+                b.kernel(k.clone(), iter, if first { Some(ag_head) } else { None });
+                first = false;
+            }
+        }
+
+        // --- backward. Loss/host autograd setup.
+        b.host(60_000.0, "bwd_begin");
+        // Head ops first (weights still resident), then layers in reverse
+        // with re-gather prefetch depth 2.
+        for op in iter_prog.bwd.iter().filter(|o| {
+            o.layer.is_none() && matches!(o.op.op, OpType::Lp | OpType::Ln)
+        }) {
+            for k in &op.kernels {
+                b.kernel(k.clone(), iter, None);
+            }
+        }
+        let rs_head = b.comm(OpType::ReduceScatter, CommScope::Head, iter, head_bytes);
+        let _ = rs_head;
+
+        let mut bag: Vec<Option<u64>> = vec![None; layers as usize];
+        for l in (layers.saturating_sub(2)..layers).rev() {
+            bag[l as usize] = Some(b.comm(
+                OpType::AllGather,
+                CommScope::Layer(l),
+                iter,
+                layer_bytes,
+            ));
+        }
+        for l in (0..layers).rev() {
+            let wait = bag[l as usize];
+            let mut first = true;
+            for op in iter_prog.bwd.iter().filter(|o| o.layer == Some(l)) {
+                if op.op.op == OpType::QkvIp {
+                    // Layer-end comm window: FSDPv1's post-backward hook
+                    // for layer l+1 fires late (autograd drains that
+                    // layer's accumulation nodes lazily), so its
+                    // reduce-scatter is dispatched at the b_qkv_ip →
+                    // b_attn_n boundary of layer l, together with the
+                    // backward prefetch all-gather. The window covers
+                    // b_attn_n (the layer's last op) on every rank whose
+                    // comm engine is prompt — ~90% overlap on b_attn_n,
+                    // ~0% on b_mlp_n under FSDPv1 (Observation 4).
+                    if l + 1 < layers {
+                        b.comm(
+                            OpType::ReduceScatter,
+                            CommScope::Layer(l + 1),
+                            iter,
+                            layer_bytes,
+                        );
+                    }
+                    if l >= 2 {
+                        let pl = l - 2;
+                        bag[pl as usize] = Some(b.comm(
+                            OpType::AllGather,
+                            CommScope::Layer(pl),
+                            iter,
+                            layer_bytes,
+                        ));
+                    }
+                }
+                if v2 && op.op.op == OpType::MlpDp {
+                    // FSDPv2 serializes the param copy right before
+                    // b_mlp_dp (Section V-D3).
+                    b.kernel(
+                        param_copy_kernel(cfg, Phase::Backward, Some(l), ranks),
+                        iter,
+                        wait,
+                    );
+                }
+                for k in &op.kernels {
+                    let w = if first { wait } else { None };
+                    b.kernel(k.clone(), iter, w);
+                    first = false;
+                }
+            }
+        }
+        // The bottom layer's grads reduce after its backward completes.
+        b.comm(OpType::ReduceScatter, CommScope::Layer(0), iter, layer_bytes);
+        // Embedding backward (+ v2 copy before b_ie), then its RS.
+        if v2 {
+            b.kernel(param_copy_kernel(cfg, Phase::Backward, None, ranks), iter, None);
+        }
+        for op in iter_prog.bwd.iter().filter(|o| o.op.op == OpType::IE) {
+            for k in &op.kernels {
+                b.kernel(k.clone(), iter, None);
+            }
+        }
+        b.comm(OpType::ReduceScatter, CommScope::Embed, iter, embed_bytes);
+
+        // --- optimizer phase: b_ga overlaps the RS drain; opt_step runs
+        // after the host synchronizes on all reduce-scatters.
+        for op in iter_prog.opt.iter().filter(|o| o.op.op == OpType::GradAccum) {
+            for k in &op.kernels {
+                b.kernel(k.clone(), iter, None);
+            }
+        }
+        if wl.optimizer {
+            b.items.push(DispatchItem::Sync(HostSync::Device));
+            b.host(180_000.0, "opt_begin");
+            for op in iter_prog.opt.iter().filter(|o| o.op.op == OpType::OptStep) {
+                for k in &op.kernels {
+                    if wl.fsdp == FsdpVersion::V1 {
+                        // Flat-param optimizer: per-tensor host work
+                        // (unflatten/view bookkeeping) between kernel
+                        // launches — longer than the small vector kernels
+                        // themselves, hence bubbles (Section V-D3).
+                        b.host(85_000.0, "opt_tensor_loop");
+                    }
+                    b.kernel(k.clone(), iter, None);
+                }
+            }
+        }
+        // End-of-iteration device sync (the trainer's iteration barrier).
+        b.items.push(DispatchItem::Sync(HostSync::Device));
+    }
+
+    Program {
+        num_collectives: b.next_comm_id,
+        items: b.items,
+        iterations: wl.iterations,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::FsdpVersion;
+
+    fn small_cfg() -> ModelConfig {
+        let mut c = ModelConfig::llama3_8b();
+        c.layers = 4;
+        c
+    }
+
+    fn wl(fsdp: FsdpVersion) -> WorkloadConfig {
+        let mut w = WorkloadConfig::new(2, 4096, fsdp);
+        w.iterations = 2;
+        w.warmup = 1;
+        w
+    }
+
+    #[test]
+    fn collective_count_matches_structure() {
+        let cfg = small_cfg();
+        let p = build_program(&cfg, &wl(FsdpVersion::V1), 8);
+        // Per iteration: AG embed + AG head (fwd) + L fwd AGs + L bwd AGs
+        // + L RS + RS embed + RS head.
+        let l = cfg.layers as u64;
+        let per_iter = 2 + l + l + l + 2;
+        assert_eq!(p.num_collectives, per_iter * 2);
+    }
+
+    #[test]
+    fn v2_adds_copy_kernels() {
+        let cfg = small_cfg();
+        let v1 = build_program(&cfg, &wl(FsdpVersion::V1), 8);
+        let v2 = build_program(&cfg, &wl(FsdpVersion::V2), 8);
+        let copies = |p: &Program| {
+            p.kernels()
+                .filter(|k| k.desc.op.op == OpType::ParamCopy)
+                .count()
+        };
+        assert_eq!(copies(&v1), 0);
+        // fwd: 1/layer; bwd: 1/layer + 1 before b_ie; per iteration.
+        assert_eq!(copies(&v2), 2 * (cfg.layers as usize * 2 + 1));
+    }
+
+    #[test]
+    fn first_layer_kernel_waits_on_its_gather() {
+        let cfg = small_cfg();
+        let p = build_program(&cfg, &wl(FsdpVersion::V1), 8);
+        // Find first attn_n fwd kernel of layer 0 / iter 0.
+        let k = p
+            .kernels()
+            .find(|k| {
+                k.iter == 0
+                    && k.desc.op.op == OpType::AttnN
+                    && k.desc.op.phase == Phase::Forward
+                    && k.desc.layer == Some(0)
+            })
+            .unwrap();
+        assert!(k.wait_comm.is_some());
+        // Its wait target is an AG for layer 0.
+        let c = p
+            .collectives()
+            .find(|c| c.id == k.wait_comm.unwrap())
+            .unwrap();
+        assert_eq!(c.op.op, OpType::AllGather);
+        assert_eq!(c.scope, CommScope::Layer(0));
+    }
+
+    #[test]
+    fn pipeline_fill_precedes_first_kernel() {
+        let cfg = small_cfg();
+        let p = build_program(&cfg, &wl(FsdpVersion::V1), 8);
+        // Dispatch order: the first three comm items come before the first
+        // kernel (AG embed, AG l0, AG l1).
+        let mut comms_before = 0;
+        for item in &p.items {
+            match item {
+                DispatchItem::Comm(_) => comms_before += 1,
+                DispatchItem::Kernel(_) => break,
+                _ => {}
+            }
+        }
+        assert_eq!(comms_before, 3);
+    }
+
+    #[test]
+    fn v1_has_host_gaps_in_opt_step() {
+        let cfg = small_cfg();
+        let p1 = build_program(&cfg, &wl(FsdpVersion::V1), 8);
+        let p2 = build_program(&cfg, &wl(FsdpVersion::V2), 8);
+        let gaps = |p: &Program| {
+            p.items
+                .iter()
+                .filter(|i| matches!(i, DispatchItem::HostWork { tag, .. } if *tag == "opt_tensor_loop"))
+                .count()
+        };
+        assert!(gaps(&p1) > 0);
+        assert_eq!(gaps(&p2), 0);
+    }
+
+    #[test]
+    fn reduce_scatters_drain_after_backward() {
+        let cfg = small_cfg();
+        let p = build_program(&cfg, &wl(FsdpVersion::V1), 8);
+        // The last collective of iteration 0 is the embed RS.
+        let last_comm_iter0 = p.collectives().filter(|c| c.iter == 0).last().unwrap();
+        assert_eq!(last_comm_iter0.op.op, OpType::ReduceScatter);
+        assert_eq!(last_comm_iter0.scope, CommScope::Embed);
+    }
+
+    #[test]
+    fn collective_ids_are_dense_and_unique() {
+        let cfg = small_cfg();
+        let p = build_program(&cfg, &wl(FsdpVersion::V2), 8);
+        let mut ids: Vec<u64> = p.collectives().map(|c| c.id).collect();
+        ids.sort();
+        for (i, id) in ids.iter().enumerate() {
+            assert_eq!(*id, i as u64);
+        }
+    }
+}

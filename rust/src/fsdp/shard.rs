@@ -1,0 +1,87 @@
+//! Parameter sharding math (Section II-B): FSDP shards weights, gradients
+//! and optimizer state across ranks; forward/backward all-gather full
+//! layers, reduce-scatter re-shards gradients.
+
+use crate::config::ModelConfig;
+
+/// Sharding layout for one model on `ranks` GPUs.
+#[derive(Debug, Clone)]
+pub struct ShardLayout {
+    pub ranks: u64,
+    /// Full (unsharded) bytes of each decoder layer's weights.
+    pub layer_bytes: u64,
+    /// Full bytes of the embedding table.
+    pub embed_bytes: u64,
+    /// Full bytes of the head (final norm + logits projection).
+    pub head_bytes: u64,
+    /// Total parameter bytes.
+    pub total_bytes: u64,
+}
+
+impl ShardLayout {
+    pub fn new(cfg: &ModelConfig, ranks: u64) -> Self {
+        assert!(ranks > 0);
+        let layer_bytes = cfg.layer_weight_bytes();
+        let embed_bytes = cfg.vocab * cfg.hidden * cfg.dtype_bytes;
+        let head_bytes = (cfg.hidden + cfg.hidden * cfg.vocab) * cfg.dtype_bytes;
+        Self {
+            ranks,
+            layer_bytes,
+            embed_bytes,
+            head_bytes,
+            total_bytes: cfg.param_count() * cfg.dtype_bytes,
+        }
+    }
+
+    /// Bytes a single rank holds of one layer (its shard).
+    pub fn layer_shard_bytes(&self) -> u64 {
+        self.layer_bytes.div_ceil(self.ranks)
+    }
+
+    /// Bytes of persistent per-rank state: weight shard + grad shard +
+    /// fp32 master + two moments (AdamW) for its shard.
+    pub fn optimizer_state_bytes(&self) -> u64 {
+        let shard_params = self.total_bytes / 2 / self.ranks; // bf16 -> count
+        // fp32 master + m + v = 12 bytes/param, grads bf16 = 2, weights = 2.
+        shard_params * (12 + 2 + 2)
+    }
+
+    /// Transient bytes alive while a layer is gathered (the full layer).
+    pub fn gathered_layer_bytes(&self) -> u64 {
+        self.layer_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_bytes_divide_evenly_enough() {
+        let l = ShardLayout::new(&ModelConfig::llama3_8b(), 8);
+        assert!(l.layer_shard_bytes() * 8 >= l.layer_bytes);
+        assert!(l.layer_shard_bytes() * 8 < l.layer_bytes + 8);
+    }
+
+    #[test]
+    fn totals_are_consistent() {
+        let cfg = ModelConfig::llama3_8b();
+        let l = ShardLayout::new(&cfg, 8);
+        assert_eq!(l.total_bytes, cfg.param_count() * 2);
+        assert!(l.embed_bytes > 0 && l.head_bytes > l.embed_bytes / 2);
+    }
+
+    #[test]
+    fn optimizer_state_fits_hbm() {
+        // Sanity: 8B params sharded over 8 ranks with AdamW state must fit
+        // well inside 192 GB (it's ~16 GB/rank).
+        let l = ShardLayout::new(&ModelConfig::llama3_8b(), 8);
+        assert!(l.optimizer_state_bytes() < 64 * (1 << 30));
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_ranks_rejected() {
+        ShardLayout::new(&ModelConfig::mini(), 0);
+    }
+}

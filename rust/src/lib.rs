@@ -1,0 +1,28 @@
+//! # Chopper
+//!
+//! A multi-level GPU characterization tool for LLM training — a full
+//! reproduction of *"Chopper: A Multi-Level GPU Characterization Tool &
+//! Derived Insights Into LLM Training Inefficiency"* (CS.DC 2025) — plus
+//! every substrate the paper profiles: a discrete-event simulator of an
+//! eight-GPU AMD Instinct MI300X node training Llama 3 8B under FSDPv1/v2,
+//! and a real-execution path that runs a JAX/Pallas mini-Llama AOT-compiled
+//! to HLO through PJRT.
+//!
+//! Layering (see DESIGN.md):
+//! * substrates: [`config`], [`model`], [`fsdp`], [`sim`], [`counters`]
+//! * the tool:   [`trace`], [`chopper`]
+//! * runtime:    [`runtime`] (PJRT), [`train`] (e2e driver)
+//! * glue:       [`cli`], [`util`], [`benchkit`]
+
+pub mod benchkit;
+pub mod chopper;
+pub mod cli;
+pub mod config;
+pub mod counters;
+pub mod fsdp;
+pub mod model;
+pub mod runtime;
+pub mod sim;
+pub mod trace;
+pub mod train;
+pub mod util;

@@ -1,0 +1,6 @@
+//! `chopper` binary — see `chopper help`.
+
+fn main() {
+    let code = chopper::cli::run(std::env::args().collect());
+    std::process::exit(code);
+}

@@ -1,0 +1,273 @@
+//! Analytical FLOP/byte model per operation (the F_gemm of Eq. 6 and the
+//! memory-side inputs to the roofline duration model).
+//!
+//! Conventions:
+//!  * GEMM flops = 2·m·n·k (theoretical, un-padded — padding is applied by
+//!    the simulator's kernel-selection model and surfaces as the paper's
+//!    *instruction overhead*, Eq. 7).
+//!  * Backward GEMMs cost 2× forward (dgrad + wgrad).
+//!  * FlashAttention forward = 4·b·hq·s²·hd (QKᵀ and PV), halved when
+//!    causal; backward = 2.5× forward (FA2 recomputation).
+//!  * Vector/copy ops are byte-dominated; flops ≈ a few per element.
+
+use super::ops::{OpType, Phase};
+use crate::config::ModelConfig;
+
+/// Cost of one operation instance on one GPU.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OpCost {
+    /// Theoretical useful flops (F_gemm in Eq. 6). 0 for pure-copy ops.
+    pub flops: f64,
+    /// Bytes moved to/from HBM (reads + writes).
+    pub bytes: f64,
+    /// GEMM logical dims when the op is a single logical GEMM family.
+    pub gemm_mnk: Option<(u64, u64, u64)>,
+}
+
+impl OpCost {
+    fn gemm(m: u64, n: u64, k: u64, dtype: u64) -> Self {
+        OpCost {
+            flops: 2.0 * m as f64 * n as f64 * k as f64,
+            bytes: ((m * k + k * n + m * n) * dtype) as f64,
+            gemm_mnk: Some((m, n, k)),
+        }
+    }
+
+    fn vector(flops_per_elem: f64, elems: f64, bytes: f64) -> Self {
+        OpCost {
+            flops: flops_per_elem * elems,
+            bytes,
+            gemm_mnk: None,
+        }
+    }
+
+    fn scaled(self, f: f64) -> Self {
+        OpCost {
+            flops: self.flops * f,
+            bytes: self.bytes * f,
+            gemm_mnk: self.gemm_mnk,
+        }
+    }
+}
+
+/// Compute the analytical cost of `op` in `phase` for micro-batch `b` and
+/// sequence `s` on a model sharded over `ranks` GPUs (relevant only to the
+/// optimizer-phase ops, which operate on the local shard).
+pub fn op_cost(
+    cfg: &ModelConfig,
+    op: OpType,
+    phase: Phase,
+    b: u64,
+    s: u64,
+    ranks: u64,
+) -> OpCost {
+    let h = cfg.hidden;
+    let f = cfg.ffn;
+    let v = cfg.vocab;
+    let hd = cfg.head_dim();
+    let hq = cfg.q_heads;
+    let kvw = cfg.kv_heads * hd;
+    let dt = cfg.dtype_bytes;
+    let bs = b * s;
+    let bwd_gemm = 2.0; // dgrad + wgrad
+
+    let fwd = match op {
+        OpType::IE => OpCost::vector(0.0, 0.0, (bs * h * dt + bs * 4) as f64),
+        OpType::AttnN | OpType::MlpN | OpType::Ln => OpCost::vector(
+            4.0,
+            (bs * h) as f64,
+            (2 * bs * h * dt + h * dt) as f64,
+        ),
+        OpType::QkvIp => {
+            // Three GEMMs: q [bs,h]x[h,h], k/v [bs,h]x[h,kvw].
+            let q = OpCost::gemm(bs, h, h, dt);
+            let k = OpCost::gemm(bs, kvw, h, dt);
+            OpCost {
+                flops: q.flops + 2.0 * k.flops,
+                bytes: q.bytes + 2.0 * k.bytes,
+                gemm_mnk: Some((bs, h + 2 * kvw, h)),
+            }
+        }
+        OpType::QkvS | OpType::QkvT | OpType::QkvC => {
+            let elems = (bs * (hq * hd + 2 * kvw)) as f64;
+            OpCost::vector(0.0, 0.0, 2.0 * elems * dt as f64)
+        }
+        OpType::QkvRe => {
+            let elems = (bs * (hq * hd + kvw)) as f64;
+            OpCost::vector(6.0, elems, 2.0 * elems * dt as f64)
+        }
+        OpType::AttnFa => {
+            // Causal FA: 2 GEMMs over the lower triangle.
+            let full = 4.0 * (b * hq) as f64 * (s as f64) * (s as f64) * hd as f64;
+            OpCost {
+                flops: 0.5 * full,
+                bytes: (3.0 * (bs * hq * hd) as f64 + (bs * hq * hd) as f64)
+                    * dt as f64,
+                gemm_mnk: None,
+            }
+        }
+        OpType::AttnOr => OpCost::vector(0.0, 0.0, (2 * bs * hq * hd * dt) as f64),
+        OpType::AttnOp => OpCost::gemm(bs, h, hq * hd, dt),
+        OpType::AttnRa | OpType::MlpRa => {
+            OpCost::vector(1.0, (bs * h) as f64, (3 * bs * h * dt) as f64)
+        }
+        OpType::MlpGp | OpType::MlpUp => OpCost::gemm(bs, f, h, dt),
+        OpType::MlpGs => OpCost::vector(4.0, (bs * f) as f64, (2 * bs * f * dt) as f64),
+        OpType::MlpGu => OpCost::vector(1.0, (bs * f) as f64, (3 * bs * f * dt) as f64),
+        OpType::MlpDp => OpCost::gemm(bs, h, f, dt),
+        OpType::Lp => OpCost::gemm(bs, v, h, dt),
+        OpType::GradAccum => {
+            // Accumulate the full local gradient shard once per iteration.
+            let shard = cfg.param_count() as f64 / ranks as f64;
+            OpCost::vector(1.0, shard, 3.0 * shard * dt as f64)
+        }
+        OpType::OptStep => {
+            // AdamW-style update on the local shard with fp32 master
+            // weights + two moments: r/w weights, grads, m, v.
+            let shard = cfg.param_count() as f64 / ranks as f64;
+            OpCost::vector(10.0, shard, shard * (4.0 * 4.0 + 3.0 * 4.0))
+        }
+        OpType::AllGather => OpCost {
+            flops: 0.0,
+            bytes: cfg.layer_weight_bytes() as f64,
+            gemm_mnk: None,
+        },
+        OpType::ReduceScatter => OpCost {
+            flops: cfg.params_per_layer() as f64, // the reduction adds
+            bytes: cfg.layer_weight_bytes() as f64,
+            gemm_mnk: None,
+        },
+        OpType::ParamCopy => OpCost::vector(
+            0.0,
+            0.0,
+            2.0 * cfg.layer_weight_bytes() as f64 / ranks as f64,
+        ),
+    };
+
+    match (phase, op) {
+        // Optimizer-phase ops are already per-iteration totals.
+        (_, OpType::GradAccum) | (_, OpType::OptStep) => fwd,
+        (Phase::Forward, _) | (Phase::Optimizer, _) => fwd,
+        (Phase::Backward, OpType::AttnFa) => fwd.scaled(2.5),
+        (Phase::Backward, o) if o.kind() == super::ops::OpKind::Gemm => {
+            fwd.scaled(bwd_gemm)
+        }
+        // Backward vector/copy ops move roughly 2x the data (grads in+out).
+        (Phase::Backward, _) => fwd.scaled(2.0),
+    }
+}
+
+/// Total theoretical GEMM+FA flops of one full iteration on one GPU —
+/// used for the setup-validation FLOPS numbers (Section IV-E).
+pub fn iteration_flops(cfg: &ModelConfig, b: u64, s: u64, ranks: u64) -> f64 {
+    use OpType::*;
+    let mut total = 0.0;
+    for layer_op in [QkvIp, AttnFa, AttnOp, MlpGp, MlpUp, MlpDp] {
+        total += op_cost(cfg, layer_op, Phase::Forward, b, s, ranks).flops
+            * cfg.layers as f64;
+        total += op_cost(cfg, layer_op, Phase::Backward, b, s, ranks).flops
+            * cfg.layers as f64;
+    }
+    total += op_cost(cfg, Lp, Phase::Forward, b, s, ranks).flops;
+    total += op_cost(cfg, Lp, Phase::Backward, b, s, ranks).flops;
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ops::OpKind;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig::llama3_8b()
+    }
+
+    #[test]
+    fn gemm_flops_scale_with_batch_times_seq() {
+        // Section V-B1: "All GEMMs scale with b*s".
+        for op in [OpType::QkvIp, OpType::AttnOp, OpType::MlpGp, OpType::MlpDp] {
+            let c1 = op_cost(&cfg(), op, Phase::Forward, 1, 4096, 8);
+            let c2 = op_cost(&cfg(), op, Phase::Forward, 2, 4096, 8);
+            let c3 = op_cost(&cfg(), op, Phase::Forward, 1, 8192, 8);
+            assert!((c2.flops / c1.flops - 2.0).abs() < 1e-9, "{op}");
+            assert!((c3.flops / c1.flops - 2.0).abs() < 1e-9, "{op}");
+        }
+    }
+
+    #[test]
+    fn fa_flops_scale_with_b_s_squared() {
+        // Section V-B2: FlashAttention scales with b*s^2.
+        let c1 = op_cost(&cfg(), OpType::AttnFa, Phase::Forward, 1, 4096, 8);
+        let c2 = op_cost(&cfg(), OpType::AttnFa, Phase::Forward, 1, 8192, 8);
+        assert!((c2.flops / c1.flops - 4.0).abs() < 1e-9);
+        let c3 = op_cost(&cfg(), OpType::AttnFa, Phase::Forward, 2, 4096, 8);
+        assert!((c3.flops / c1.flops - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn backward_fa_does_more_flops_than_forward() {
+        let f = op_cost(&cfg(), OpType::AttnFa, Phase::Forward, 2, 4096, 8);
+        let b = op_cost(&cfg(), OpType::AttnFa, Phase::Backward, 2, 4096, 8);
+        assert!(b.flops > f.flops * 2.0);
+    }
+
+    #[test]
+    fn optimizer_ops_invariant_to_batch_and_seq() {
+        // Section V-B3: b_ga and opt_step constant across b and s.
+        for op in [OpType::GradAccum, OpType::OptStep] {
+            let a = op_cost(&cfg(), op, Phase::Optimizer, 1, 4096, 8);
+            let b = op_cost(&cfg(), op, Phase::Optimizer, 4, 8192, 8);
+            assert_eq!(a.flops, b.flops, "{op}");
+            assert_eq!(a.bytes, b.bytes, "{op}");
+        }
+    }
+
+    #[test]
+    fn comm_bytes_invariant_to_batch_and_seq() {
+        // Insight 2's premise: only weights/grads are communicated.
+        let a = op_cost(&cfg(), OpType::AllGather, Phase::Forward, 1, 4096, 8);
+        let b = op_cost(&cfg(), OpType::AllGather, Phase::Forward, 4, 8192, 8);
+        assert_eq!(a.bytes, b.bytes);
+    }
+
+    #[test]
+    fn gemm_dims_recorded() {
+        let c = op_cost(&cfg(), OpType::MlpDp, Phase::Forward, 2, 4096, 8);
+        assert_eq!(c.gemm_mnk, Some((8192, 4096, 14336)));
+    }
+
+    #[test]
+    fn iteration_flops_match_6nd_rule() {
+        // Dense-transformer rule of thumb: ~6 * params * tokens per
+        // fwd+bwd (2N fwd + 4N bwd), GEMM-dominated. Allow generous slack
+        // since embeddings don't do GEMM flops and FA adds extra.
+        let c = cfg();
+        let (b, s) = (2u64, 4096u64);
+        let flops = iteration_flops(&c, b, s, 8);
+        let approx = 6.0 * c.param_count() as f64 * (b * s) as f64;
+        let ratio = flops / approx;
+        assert!(ratio > 0.7 && ratio < 1.4, "ratio {ratio}");
+    }
+
+    #[test]
+    fn vector_ops_have_positive_bytes() {
+        for op in [
+            OpType::AttnN,
+            OpType::MlpGs,
+            OpType::MlpGu,
+            OpType::AttnRa,
+            OpType::QkvRe,
+        ] {
+            let c = op_cost(&cfg(), op, Phase::Forward, 1, 4096, 8);
+            assert!(c.bytes > 0.0, "{op}");
+            assert_eq!(c.gemm_mnk, None, "{op}");
+            assert_eq!(c.kind_is_gemm(), false, "{op}");
+        }
+    }
+
+    impl OpCost {
+        fn kind_is_gemm(&self) -> bool {
+            self.gemm_mnk.is_some()
+        }
+    }
+}

@@ -1,0 +1,390 @@
+//! Iteration program builder: expands the model configuration into the
+//! ordered list of operations (and their constituent kernels) that one
+//! training iteration executes on one GPU — forward, backward, optimizer.
+//!
+//! This is the application-side half of the trace schema: the simulator
+//! executes these kernels, and the trace collectors annotate every kernel
+//! event with the (op, layer, phase) it came from, exactly like the paper's
+//! runtime profiling records "annotations for kernels, operations, layers,
+//! and iterations" (Section III-B1).
+
+use super::flops::{op_cost, OpCost};
+use super::ops::{OpKind, OpRef, OpType, Phase};
+use crate::config::ModelConfig;
+
+/// Static description of one kernel inside an operation.
+#[derive(Debug, Clone)]
+pub struct KernelDesc {
+    /// Kernel symbol name (rocBLAS/CK-style, for trace realism).
+    pub name: String,
+    pub op: OpRef,
+    /// Decoder layer index; None for embedding/head/optimizer ops.
+    pub layer: Option<u32>,
+    pub kind: OpKind,
+    /// Theoretical useful flops for this kernel.
+    pub flops: f64,
+    /// HBM bytes moved.
+    pub bytes: f64,
+    /// GEMM dims if this kernel is a GEMM.
+    pub gemm_mnk: Option<(u64, u64, u64)>,
+}
+
+/// One operation instance (one or more kernels, Section III: "operation
+/// (which consists of one or more kernels)").
+#[derive(Debug, Clone)]
+pub struct OpInstance {
+    pub op: OpRef,
+    pub layer: Option<u32>,
+    pub kernels: Vec<KernelDesc>,
+}
+
+impl OpInstance {
+    pub fn flops(&self) -> f64 {
+        self.kernels.iter().map(|k| k.flops).sum()
+    }
+
+    pub fn bytes(&self) -> f64 {
+        self.kernels.iter().map(|k| k.bytes).sum()
+    }
+}
+
+/// The ordered op list of one iteration (compute only; FSDP comm is woven
+/// in by `fsdp::schedule`).
+#[derive(Debug, Clone)]
+pub struct IterationProgram {
+    pub fwd: Vec<OpInstance>,
+    pub bwd: Vec<OpInstance>,
+    pub opt: Vec<OpInstance>,
+}
+
+impl IterationProgram {
+    pub fn all_ops(&self) -> impl Iterator<Item = &OpInstance> {
+        self.fwd.iter().chain(self.bwd.iter()).chain(self.opt.iter())
+    }
+
+    pub fn kernel_count(&self) -> usize {
+        self.all_ops().map(|o| o.kernels.len()).sum()
+    }
+}
+
+/// How many parameter tensors the optimizer touches (per-layer tensors +
+/// embed + final norm + head) — drives the many-small-kernels structure of
+/// opt_step (Section V-D3).
+pub fn param_tensor_count(cfg: &ModelConfig) -> u64 {
+    cfg.layers * 9 + 3
+}
+
+fn gemm_kernel_name(m: u64, n: u64, k: u64, phase: Phase) -> String {
+    // rocBLAS-flavored naming so traces look like the real thing.
+    let suffix = match phase {
+        Phase::Forward => "NN",
+        Phase::Backward => "NT",
+        Phase::Optimizer => "NN",
+    };
+    format!("Cijk_Alik_Bljk_BF16_MT128x128x32_{suffix}_m{m}n{n}k{k}")
+}
+
+fn expand_kernels(
+    cfg: &ModelConfig,
+    op: OpType,
+    phase: Phase,
+    layer: Option<u32>,
+    cost: OpCost,
+) -> Vec<KernelDesc> {
+    let opref = OpRef::new(op, phase);
+    let kind = op.kind();
+    let mk = |name: String, flops: f64, bytes: f64, mnk: Option<(u64, u64, u64)>| {
+        KernelDesc {
+            name,
+            op: opref,
+            layer,
+            kind,
+            flops,
+            bytes,
+            gemm_mnk: mnk,
+        }
+    };
+
+    match (op, phase) {
+        // QKV projection: three GEMM kernels (q, k, v).
+        (OpType::QkvIp, ph) => {
+            let hd = cfg.head_dim();
+            let kvw = cfg.kv_heads * hd;
+            let (m, _, kk) = cost.gemm_mnk.expect("qkv_ip is a gemm");
+            let mult = if ph == Phase::Backward { 2.0 } else { 1.0 };
+            let per = |n: u64| {
+                (
+                    2.0 * m as f64 * n as f64 * kk as f64 * mult,
+                    ((m * kk + kk * n + m * n) * cfg.dtype_bytes) as f64 * mult,
+                )
+            };
+            let (fq, bq) = per(cfg.hidden);
+            let (fk, bk) = per(kvw);
+            vec![
+                mk(gemm_kernel_name(m, cfg.hidden, kk, ph), fq, bq,
+                   Some((m, cfg.hidden, kk))),
+                mk(gemm_kernel_name(m, kvw, kk, ph), fk, bk, Some((m, kvw, kk))),
+                mk(gemm_kernel_name(m, kvw, kk, ph), fk, bk, Some((m, kvw, kk))),
+            ]
+        }
+        // Other GEMMs: forward = 1 kernel; backward = dgrad + wgrad kernels.
+        (_, Phase::Forward) if kind == OpKind::Gemm => {
+            let (m, n, k) = cost.gemm_mnk.expect("gemm has dims");
+            vec![mk(gemm_kernel_name(m, n, k, phase), cost.flops, cost.bytes,
+                    Some((m, n, k)))]
+        }
+        (_, Phase::Backward) if kind == OpKind::Gemm => {
+            let (m, n, k) = cost.gemm_mnk.expect("gemm has dims");
+            // dgrad: [m,n] x [n,k]^T -> [m,k]; wgrad: [m,k]^T x [m,n] -> [k,n]
+            vec![
+                mk(gemm_kernel_name(m, k, n, phase), cost.flops / 2.0,
+                   cost.bytes / 2.0, Some((m, k, n))),
+                mk(gemm_kernel_name(k, n, m, phase), cost.flops / 2.0,
+                   cost.bytes / 2.0, Some((k, n, m))),
+            ]
+        }
+        // FlashAttention: fused kernel forward; FA2 backward is the
+        // delta / dKdV / dQ triple (mirrors our Pallas implementation).
+        (OpType::AttnFa, Phase::Forward) => {
+            vec![mk(
+                format!("fmha_fwd_d{}_bf16_causal", cfg.head_dim()),
+                cost.flops,
+                cost.bytes,
+                None,
+            )]
+        }
+        (OpType::AttnFa, Phase::Backward) => {
+            let d = cfg.head_dim();
+            vec![
+                mk(format!("fmha_bwd_delta_d{d}_bf16"), cost.flops * 0.02,
+                   cost.bytes * 0.2, None),
+                mk(format!("fmha_bwd_dkdv_d{d}_bf16_causal"), cost.flops * 0.56,
+                   cost.bytes * 0.4, None),
+                mk(format!("fmha_bwd_dq_d{d}_bf16_causal"), cost.flops * 0.42,
+                   cost.bytes * 0.4, None),
+            ]
+        }
+        // RMSNorm: 1 fused kernel forward, dx + dw kernels backward.
+        (OpType::AttnN | OpType::MlpN | OpType::Ln, Phase::Forward) => {
+            vec![mk("rmsnorm_fwd_kernel".into(), cost.flops, cost.bytes, None)]
+        }
+        (OpType::AttnN | OpType::MlpN | OpType::Ln, Phase::Backward) => {
+            vec![
+                mk("rmsnorm_bwd_dx_kernel".into(), cost.flops * 0.7,
+                   cost.bytes * 0.7, None),
+                mk("rmsnorm_bwd_dw_kernel".into(), cost.flops * 0.3,
+                   cost.bytes * 0.3, None),
+            ]
+        }
+        // Optimizer-phase ops: chunked foreach kernels — many small
+        // launches, the structural cause of opt_step's launch overhead.
+        (OpType::GradAccum, _) => {
+            let n = param_tensor_count(cfg).div_ceil(8).max(1);
+            (0..n)
+                .map(|i| {
+                    mk(
+                        format!("multi_tensor_accum_chunk{i}"),
+                        cost.flops / n as f64,
+                        cost.bytes / n as f64,
+                        None,
+                    )
+                })
+                .collect()
+        }
+        (OpType::OptStep, _) => {
+            // foreach AdamW: ~2 kernels per bucket of tensors.
+            let buckets = param_tensor_count(cfg).div_ceil(4).max(1);
+            (0..buckets * 2)
+                .map(|i| {
+                    mk(
+                        format!("multi_tensor_adamw_chunk{i}"),
+                        cost.flops / (buckets * 2) as f64,
+                        cost.bytes / (buckets * 2) as f64,
+                        None,
+                    )
+                })
+                .collect()
+        }
+        // Everything else: one kernel.
+        (o, _) => {
+            let name = match kind {
+                OpKind::Copy => "copy_kernel".to_string(),
+                OpKind::Vector => format!("elementwise_{}", o.short()),
+                _ => o.short().to_string(),
+            };
+            vec![mk(name, cost.flops, cost.bytes, cost.gemm_mnk)]
+        }
+    }
+}
+
+fn op_instance(
+    cfg: &ModelConfig,
+    op: OpType,
+    phase: Phase,
+    layer: Option<u32>,
+    b: u64,
+    s: u64,
+    ranks: u64,
+) -> OpInstance {
+    let cost = op_cost(cfg, op, phase, b, s, ranks);
+    OpInstance {
+        op: OpRef::new(op, phase),
+        layer,
+        kernels: expand_kernels(cfg, op, phase, layer, cost),
+    }
+}
+
+/// Build the compute-op program of one iteration.
+pub fn build_iteration(
+    cfg: &ModelConfig,
+    b: u64,
+    s: u64,
+    ranks: u64,
+    optimizer: bool,
+) -> IterationProgram {
+    let mut fwd = Vec::new();
+    fwd.push(op_instance(cfg, OpType::IE, Phase::Forward, None, b, s, ranks));
+    for layer in 0..cfg.layers as u32 {
+        for &op in OpType::LAYER_FWD_ORDER.iter() {
+            fwd.push(op_instance(cfg, op, Phase::Forward, Some(layer), b, s, ranks));
+        }
+    }
+    fwd.push(op_instance(cfg, OpType::Ln, Phase::Forward, None, b, s, ranks));
+    fwd.push(op_instance(cfg, OpType::Lp, Phase::Forward, None, b, s, ranks));
+
+    // Backward: reverse order (autograd spawns backward kernels from their
+    // forward counterparts — Section III-B1).
+    let mut bwd = Vec::new();
+    bwd.push(op_instance(cfg, OpType::Lp, Phase::Backward, None, b, s, ranks));
+    bwd.push(op_instance(cfg, OpType::Ln, Phase::Backward, None, b, s, ranks));
+    for layer in (0..cfg.layers as u32).rev() {
+        for &op in OpType::LAYER_FWD_ORDER.iter().rev() {
+            bwd.push(op_instance(cfg, op, Phase::Backward, Some(layer), b, s, ranks));
+        }
+    }
+    bwd.push(op_instance(cfg, OpType::IE, Phase::Backward, None, b, s, ranks));
+
+    // Optimizer phase: gradient accumulate always runs (it feeds the
+    // optimizer); opt_step only on optimizer iterations.
+    let mut opt = Vec::new();
+    opt.push(op_instance(
+        cfg,
+        OpType::GradAccum,
+        Phase::Optimizer,
+        None,
+        b,
+        s,
+        ranks,
+    ));
+    if optimizer {
+        opt.push(op_instance(
+            cfg,
+            OpType::OptStep,
+            Phase::Optimizer,
+            None,
+            b,
+            s,
+            ranks,
+        ));
+    }
+
+    IterationProgram { fwd, bwd, opt }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig::llama3_8b()
+    }
+
+    #[test]
+    fn forward_has_expected_structure() {
+        let p = build_iteration(&cfg(), 2, 4096, 8, true);
+        // i_e + 32 layers * 17 ops + ln + lp
+        assert_eq!(p.fwd.len(), 1 + 32 * 17 + 2);
+        assert_eq!(p.fwd[0].op.op, OpType::IE);
+        assert_eq!(p.fwd.last().unwrap().op.op, OpType::Lp);
+    }
+
+    #[test]
+    fn backward_is_reversed() {
+        let p = build_iteration(&cfg(), 2, 4096, 8, true);
+        assert_eq!(p.bwd[0].op.op, OpType::Lp);
+        assert_eq!(p.bwd[0].op.phase, Phase::Backward);
+        // First layer-op of backward is the last of forward order.
+        assert_eq!(p.bwd[2].op.op, OpType::MlpRa);
+        assert_eq!(p.bwd[2].layer, Some(31));
+        assert_eq!(p.bwd.last().unwrap().op.op, OpType::IE);
+    }
+
+    #[test]
+    fn optimizer_phase_toggles() {
+        let with = build_iteration(&cfg(), 1, 4096, 8, true);
+        let without = build_iteration(&cfg(), 1, 4096, 8, false);
+        assert_eq!(with.opt.len(), 2);
+        assert_eq!(without.opt.len(), 1);
+        assert_eq!(without.opt[0].op.op, OpType::GradAccum);
+    }
+
+    #[test]
+    fn qkv_ip_expands_to_three_gemm_kernels() {
+        let p = build_iteration(&cfg(), 1, 4096, 8, false);
+        let qkv = p
+            .fwd
+            .iter()
+            .find(|o| o.op.op == OpType::QkvIp)
+            .expect("qkv_ip present");
+        assert_eq!(qkv.kernels.len(), 3);
+        assert!(qkv.kernels.iter().all(|k| k.gemm_mnk.is_some()));
+    }
+
+    #[test]
+    fn backward_gemms_have_two_kernels() {
+        let p = build_iteration(&cfg(), 1, 4096, 8, false);
+        let up = p
+            .bwd
+            .iter()
+            .find(|o| o.op.op == OpType::MlpUp)
+            .expect("b_mlp_up present");
+        assert_eq!(up.kernels.len(), 2);
+    }
+
+    #[test]
+    fn fa_backward_is_three_kernels_matching_pallas_split() {
+        let p = build_iteration(&cfg(), 1, 4096, 8, false);
+        let fa = p.bwd.iter().find(|o| o.op.op == OpType::AttnFa).unwrap();
+        assert_eq!(fa.kernels.len(), 3);
+        let total: f64 = fa.kernels.iter().map(|k| k.flops).sum();
+        let cost = op_cost(&cfg(), OpType::AttnFa, Phase::Backward, 1, 4096, 8);
+        assert!((total / cost.flops - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn opt_step_is_many_small_kernels() {
+        let p = build_iteration(&cfg(), 1, 4096, 8, true);
+        let opt = p.opt.iter().find(|o| o.op.op == OpType::OptStep).unwrap();
+        assert!(opt.kernels.len() > 100, "got {}", opt.kernels.len());
+    }
+
+    #[test]
+    fn kernel_count_scales_with_layers() {
+        let mut small = cfg();
+        small.layers = 4;
+        let p4 = build_iteration(&small, 1, 4096, 8, false);
+        let p32 = build_iteration(&cfg(), 1, 4096, 8, false);
+        assert!(p32.kernel_count() > p4.kernel_count() * 4);
+    }
+
+    #[test]
+    fn layer_annotations_present() {
+        let p = build_iteration(&cfg(), 1, 4096, 8, false);
+        for o in &p.fwd {
+            match o.op.op {
+                OpType::IE | OpType::Ln | OpType::Lp => assert!(o.layer.is_none()),
+                _ => assert!(o.layer.is_some(), "{}", o.op),
+            }
+        }
+    }
+}

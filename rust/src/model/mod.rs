@@ -1,0 +1,10 @@
+//! Application model: the paper's Fig. 1 operation taxonomy, the analytical
+//! FLOP/byte cost model, and the per-iteration program builder.
+
+pub mod flops;
+pub mod graph;
+pub mod ops;
+
+pub use flops::{iteration_flops, op_cost, OpCost};
+pub use graph::{build_iteration, param_tensor_count, IterationProgram, KernelDesc, OpInstance};
+pub use ops::{OpKind, OpRef, OpType, Phase};

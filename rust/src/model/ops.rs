@@ -1,0 +1,351 @@
+//! The paper's operation taxonomy (Fig. 1) and phase vocabulary.
+//!
+//! Every kernel in a trace is annotated with (OpType, Phase, layer,
+//! iteration, gpu) — this is what lets Chopper aggregate from kernels up
+//! through operations, layers, phases, iterations, GPUs, and the workload.
+
+use std::fmt;
+
+/// Training phase (Section II-B / Fig. 4 notation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Phase {
+    Forward,
+    Backward,
+    Optimizer,
+}
+
+impl Phase {
+    pub fn prefix(&self) -> &'static str {
+        match self {
+            Phase::Forward => "f",
+            Phase::Backward => "b",
+            Phase::Optimizer => "opt",
+        }
+    }
+
+    pub const ALL: [Phase; 3] = [Phase::Forward, Phase::Backward, Phase::Optimizer];
+}
+
+impl fmt::Display for Phase {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Phase::Forward => write!(f, "fwd"),
+            Phase::Backward => write!(f, "bwd"),
+            Phase::Optimizer => write!(f, "opt"),
+        }
+    }
+}
+
+/// Coarse kernel/operation class used in the Fig. 4 breakdown.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum OpKind {
+    /// Matrix-multiply (MFMA/rocBLAS) kernels.
+    Gemm,
+    /// FlashAttention fused kernels.
+    FlashAttn,
+    /// Element-wise / reduction vector kernels.
+    Vector,
+    /// Memory copies (FSDPv2 per-parameter copies, contiguous() etc.).
+    Copy,
+    /// Collective communication kernels (all gather / reduce scatter).
+    Comm,
+}
+
+impl fmt::Display for OpKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            OpKind::Gemm => write!(f, "gemm"),
+            OpKind::FlashAttn => write!(f, "fa"),
+            OpKind::Vector => write!(f, "vec"),
+            OpKind::Copy => write!(f, "copy"),
+            OpKind::Comm => write!(f, "comm"),
+        }
+    }
+}
+
+/// Operation types, straight from the paper's Fig. 1 (plus the optimizer
+/// ops b_ga / opt_step from Section V-B, the collectives, and the FSDPv2
+/// parameter-copy op from Section V-D3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+#[allow(clippy::upper_case_acronyms)]
+pub enum OpType {
+    /// i_e: input embedding.
+    IE,
+    /// attn_n: attention RMSNorm.
+    AttnN,
+    /// qkv_ip: QKV input projections.
+    QkvIp,
+    /// qkv_s: head split.
+    QkvS,
+    /// qkv_t: transpose to attention layout.
+    QkvT,
+    /// qkv_re: rotary embedding.
+    QkvRe,
+    /// qkv_c: contiguous memory copy.
+    QkvC,
+    /// attn_fa: FlashAttention.
+    AttnFa,
+    /// attn_or: output reshape.
+    AttnOr,
+    /// attn_op: output projection.
+    AttnOp,
+    /// attn_ra: attention residual add.
+    AttnRa,
+    /// mlp_n: MLP RMSNorm.
+    MlpN,
+    /// mlp_gp: gate projection.
+    MlpGp,
+    /// mlp_gs: SiLU.
+    MlpGs,
+    /// mlp_up: up projection.
+    MlpUp,
+    /// mlp_gu: gate-up elementwise multiply.
+    MlpGu,
+    /// mlp_dp: down projection.
+    MlpDp,
+    /// mlp_ra: MLP residual add.
+    MlpRa,
+    /// ln: final RMSNorm.
+    Ln,
+    /// lp: logits projection.
+    Lp,
+    /// b_ga: gradient accumulate feeding the optimizer phase.
+    GradAccum,
+    /// opt_step: optimizer step.
+    OptStep,
+    /// ag: FSDP all gather.
+    AllGather,
+    /// rs: FSDP reduce scatter.
+    ReduceScatter,
+    /// FSDPv2 per-parameter copy around collectives.
+    ParamCopy,
+}
+
+impl OpType {
+    pub fn short(&self) -> &'static str {
+        use OpType::*;
+        match self {
+            IE => "i_e",
+            AttnN => "attn_n",
+            QkvIp => "qkv_ip",
+            QkvS => "qkv_s",
+            QkvT => "qkv_t",
+            QkvRe => "qkv_re",
+            QkvC => "qkv_c",
+            AttnFa => "attn_fa",
+            AttnOr => "attn_or",
+            AttnOp => "attn_op",
+            AttnRa => "attn_ra",
+            MlpN => "mlp_n",
+            MlpGp => "mlp_gp",
+            MlpGs => "mlp_gs",
+            MlpUp => "mlp_up",
+            MlpGu => "mlp_gu",
+            MlpDp => "mlp_dp",
+            MlpRa => "mlp_ra",
+            Ln => "ln",
+            Lp => "lp",
+            GradAccum => "ga",
+            OptStep => "opt_step",
+            AllGather => "ag",
+            ReduceScatter => "rs",
+            ParamCopy => "param_copy",
+        }
+    }
+
+    pub fn kind(&self) -> OpKind {
+        use OpType::*;
+        match self {
+            QkvIp | AttnOp | MlpGp | MlpUp | MlpDp | Lp => OpKind::Gemm,
+            AttnFa => OpKind::FlashAttn,
+            IE | AttnN | QkvRe | AttnRa | MlpN | MlpGs | MlpGu | MlpRa | Ln
+            | GradAccum | OptStep => OpKind::Vector,
+            QkvS | QkvT | QkvC | AttnOr | ParamCopy => OpKind::Copy,
+            AllGather | ReduceScatter => OpKind::Comm,
+        }
+    }
+
+    pub fn is_comm(&self) -> bool {
+        self.kind() == OpKind::Comm
+    }
+
+    /// All per-layer decoder operations in forward execution order (Fig. 1).
+    pub const LAYER_FWD_ORDER: [OpType; 17] = [
+        OpType::AttnN,
+        OpType::QkvIp,
+        OpType::QkvS,
+        OpType::QkvT,
+        OpType::QkvRe,
+        OpType::QkvC,
+        OpType::AttnFa,
+        OpType::AttnOr,
+        OpType::AttnOp,
+        OpType::AttnRa,
+        OpType::MlpN,
+        OpType::MlpGp,
+        OpType::MlpGs,
+        OpType::MlpUp,
+        OpType::MlpGu,
+        OpType::MlpDp,
+        OpType::MlpRa,
+    ];
+
+    pub fn parse(s: &str) -> Option<OpType> {
+        use OpType::*;
+        Some(match s {
+            "i_e" => IE,
+            "attn_n" => AttnN,
+            "qkv_ip" => QkvIp,
+            "qkv_s" => QkvS,
+            "qkv_t" => QkvT,
+            "qkv_re" => QkvRe,
+            "qkv_c" => QkvC,
+            "attn_fa" => AttnFa,
+            "attn_or" => AttnOr,
+            "attn_op" => AttnOp,
+            "attn_ra" => AttnRa,
+            "mlp_n" => MlpN,
+            "mlp_gp" => MlpGp,
+            "mlp_gs" => MlpGs,
+            "mlp_up" => MlpUp,
+            "mlp_gu" => MlpGu,
+            "mlp_dp" => MlpDp,
+            "mlp_ra" => MlpRa,
+            "ln" => Ln,
+            "lp" => Lp,
+            "ga" => GradAccum,
+            "opt_step" => OptStep,
+            "ag" => AllGather,
+            "rs" => ReduceScatter,
+            "param_copy" => ParamCopy,
+            _ => return None,
+        })
+    }
+}
+
+impl fmt::Display for OpType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.short())
+    }
+}
+
+/// A fully-qualified operation reference: op type + phase (the paper's
+/// f_/b_ prefixes) — e.g. `f_attn_fa`, `b_mlp_up`, `b_ga`, `opt_step`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct OpRef {
+    pub op: OpType,
+    pub phase: Phase,
+}
+
+impl OpRef {
+    pub fn new(op: OpType, phase: Phase) -> Self {
+        Self { op, phase }
+    }
+
+    pub fn fwd(op: OpType) -> Self {
+        Self::new(op, Phase::Forward)
+    }
+
+    pub fn bwd(op: OpType) -> Self {
+        Self::new(op, Phase::Backward)
+    }
+
+    /// Paper naming: f_attn_fa, b_mlp_up, b_ga, opt_step. Communication
+    /// ops and optimizer ops are not phase-prefixed in the paper's plots.
+    pub fn paper_name(&self) -> String {
+        match (self.op, self.phase) {
+            (OpType::OptStep, _) => "opt_step".into(),
+            (OpType::GradAccum, _) => "b_ga".into(),
+            (OpType::AllGather, _) | (OpType::ReduceScatter, _) => {
+                self.op.short().into()
+            }
+            (op, Phase::Forward) => format!("f_{}", op.short()),
+            (op, Phase::Backward) => format!("b_{}", op.short()),
+            (op, Phase::Optimizer) => format!("opt_{}", op.short()),
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<OpRef> {
+        if s == "opt_step" {
+            return Some(OpRef::new(OpType::OptStep, Phase::Optimizer));
+        }
+        if s == "b_ga" {
+            return Some(OpRef::new(OpType::GradAccum, Phase::Optimizer));
+        }
+        if let Some(op) = OpType::parse(s) {
+            // bare comm names
+            return Some(OpRef::new(op, Phase::Forward));
+        }
+        if let Some(rest) = s.strip_prefix("f_") {
+            return OpType::parse(rest).map(OpRef::fwd);
+        }
+        if let Some(rest) = s.strip_prefix("b_") {
+            return OpType::parse(rest).map(OpRef::bwd);
+        }
+        None
+    }
+}
+
+impl fmt::Display for OpRef {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.paper_name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn short_names_roundtrip() {
+        use OpType::*;
+        for op in [
+            IE, AttnN, QkvIp, QkvS, QkvT, QkvRe, QkvC, AttnFa, AttnOr, AttnOp,
+            AttnRa, MlpN, MlpGp, MlpGs, MlpUp, MlpGu, MlpDp, MlpRa, Ln, Lp,
+            GradAccum, OptStep, AllGather, ReduceScatter, ParamCopy,
+        ] {
+            assert_eq!(OpType::parse(op.short()), Some(op), "{op}");
+        }
+    }
+
+    #[test]
+    fn paper_names_match_figures() {
+        assert_eq!(OpRef::fwd(OpType::AttnFa).paper_name(), "f_attn_fa");
+        assert_eq!(OpRef::bwd(OpType::MlpUp).paper_name(), "b_mlp_up");
+        assert_eq!(
+            OpRef::new(OpType::GradAccum, Phase::Optimizer).paper_name(),
+            "b_ga"
+        );
+        assert_eq!(
+            OpRef::new(OpType::OptStep, Phase::Optimizer).paper_name(),
+            "opt_step"
+        );
+        assert_eq!(OpRef::fwd(OpType::AllGather).paper_name(), "ag");
+    }
+
+    #[test]
+    fn opref_parse_roundtrip() {
+        for name in ["f_attn_fa", "b_mlp_up", "b_ga", "opt_step", "ag", "rs"] {
+            let r = OpRef::parse(name).unwrap();
+            assert_eq!(r.paper_name(), name);
+        }
+        assert!(OpRef::parse("nonsense").is_none());
+    }
+
+    #[test]
+    fn kinds_match_paper_categories() {
+        assert_eq!(OpType::MlpUp.kind(), OpKind::Gemm);
+        assert_eq!(OpType::AttnFa.kind(), OpKind::FlashAttn);
+        assert_eq!(OpType::AttnN.kind(), OpKind::Vector);
+        assert_eq!(OpType::QkvC.kind(), OpKind::Copy);
+        assert!(OpType::AllGather.is_comm());
+    }
+
+    #[test]
+    fn layer_order_is_fig1() {
+        assert_eq!(OpType::LAYER_FWD_ORDER.len(), 17);
+        assert_eq!(OpType::LAYER_FWD_ORDER[0], OpType::AttnN);
+        assert_eq!(OpType::LAYER_FWD_ORDER[6], OpType::AttnFa);
+        assert_eq!(OpType::LAYER_FWD_ORDER[16], OpType::MlpRa);
+    }
+}

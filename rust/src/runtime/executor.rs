@@ -1,0 +1,289 @@
+//! PJRT executor: load AOT HLO-text artifacts and run them on the CPU
+//! client — the request-path side of the three-layer architecture. Python
+//! never runs here; the artifacts under `artifacts/` are the only contract.
+//!
+//! HLO *text* is the interchange format (not serialized protos): jax ≥ 0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects, while the
+//! text parser reassigns ids (see python/compile/aot.py and
+//! /opt/xla-example/README.md).
+
+use crate::runtime::manifest::{DType, Manifest};
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// A host-side tensor (what flows in/out of executables).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tensor {
+    F32(Vec<f32>, Vec<usize>),
+    S32(Vec<i32>, Vec<usize>),
+}
+
+impl Tensor {
+    pub fn scalar_f32(x: f32) -> Tensor {
+        Tensor::F32(vec![x], vec![])
+    }
+
+    pub fn scalar_i32(x: i32) -> Tensor {
+        Tensor::S32(vec![x], vec![])
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        match self {
+            Tensor::F32(_, d) | Tensor::S32(_, d) => d,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Tensor::F32(v, _) => v.len(),
+            Tensor::S32(v, _) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32(v, _) => Ok(v),
+            _ => Err(anyhow!("tensor is not f32")),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Tensor::S32(v, _) => Ok(v),
+            _ => Err(anyhow!("tensor is not s32")),
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = match self {
+            Tensor::F32(v, dims) => {
+                let l = xla::Literal::vec1(v.as_slice());
+                let d: Vec<i64> = dims.iter().map(|&x| x as i64).collect();
+                l.reshape(&d)?
+            }
+            Tensor::S32(v, dims) => {
+                let l = xla::Literal::vec1(v.as_slice());
+                let d: Vec<i64> = dims.iter().map(|&x| x as i64).collect();
+                l.reshape(&d)?
+            }
+        };
+        Ok(lit)
+    }
+
+    fn from_literal(lit: &xla::Literal, spec: &ArtifactOut) -> Result<Tensor> {
+        Ok(match spec.dtype {
+            DType::F32 => Tensor::F32(lit.to_vec::<f32>()?, spec.dims.clone()),
+            DType::S32 => Tensor::S32(lit.to_vec::<i32>()?, spec.dims.clone()),
+        })
+    }
+}
+
+struct ArtifactOut {
+    dtype: DType,
+    dims: Vec<usize>,
+}
+
+/// PJRT runtime: one CPU client + a compile cache keyed by artifact path.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Open the artifact directory (reads MANIFEST.txt, creates the PJRT
+    /// CPU client; compilation is lazy per artifact).
+    pub fn open(artifact_dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(artifact_dir).map_err(|e| anyhow!(e))?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime {
+            client,
+            manifest,
+            cache: HashMap::new(),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (and cache) one artifact.
+    pub fn compile(&mut self, rel: &str) -> Result<()> {
+        if self.cache.contains_key(rel) {
+            return Ok(());
+        }
+        let path = self.manifest.abs_path(rel);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("loading {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {rel}"))?;
+        self.cache.insert(rel.to_string(), exe);
+        Ok(())
+    }
+
+    /// Number of artifacts compiled so far.
+    pub fn compiled_count(&self) -> usize {
+        self.cache.len()
+    }
+
+    /// Execute one artifact with host tensors; returns the output tuple.
+    pub fn run(&mut self, rel: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let spec = self
+            .manifest
+            .get(rel)
+            .ok_or_else(|| anyhow!("unknown artifact {rel}"))?;
+        if inputs.len() != spec.inputs.len() {
+            return Err(anyhow!(
+                "{rel}: expected {} inputs, got {}",
+                spec.inputs.len(),
+                inputs.len()
+            ));
+        }
+        for (t, s) in inputs.iter().zip(&spec.inputs) {
+            if t.len() != s.elements() {
+                return Err(anyhow!(
+                    "{rel}: input {} has {} elements, expected {}",
+                    s.name,
+                    t.len(),
+                    s.elements()
+                ));
+            }
+        }
+        let outs: Vec<ArtifactOut> = spec
+            .outputs
+            .iter()
+            .map(|o| ArtifactOut {
+                dtype: o.dtype,
+                dims: o.dims.clone(),
+            })
+            .collect();
+        self.compile(rel)?;
+        let exe = self.cache.get(rel).expect("compiled above");
+        let lits: Result<Vec<xla::Literal>> =
+            inputs.iter().map(|t| t.to_literal()).collect();
+        let result = exe.execute::<xla::Literal>(&lits?)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: always a tuple.
+        let parts = result.to_tuple()?;
+        if parts.len() != outs.len() {
+            return Err(anyhow!(
+                "{rel}: got {} outputs, manifest says {}",
+                parts.len(),
+                outs.len()
+            ));
+        }
+        parts
+            .iter()
+            .zip(&outs)
+            .map(|(l, o)| Tensor::from_literal(l, o))
+            .collect()
+    }
+}
+
+/// Locate the workspace artifact directory (CARGO_MANIFEST_DIR/artifacts or
+/// `CHOPPER_ARTIFACTS`).
+pub fn default_artifact_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("CHOPPER_ARTIFACTS") {
+        return p.into();
+    }
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// True when the AOT artifacts have been built (used by tests to skip
+/// gracefully before `make artifacts`).
+pub fn artifacts_available() -> bool {
+    default_artifact_dir().join("MANIFEST.txt").exists()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runtime() -> Option<Runtime> {
+        if !artifacts_available() {
+            eprintln!("skipping: run `make artifacts` first");
+            return None;
+        }
+        Some(Runtime::open(&default_artifact_dir()).unwrap())
+    }
+
+    #[test]
+    fn open_and_platform() {
+        let Some(rt) = runtime() else { return };
+        assert_eq!(rt.platform().to_lowercase(), "cpu");
+        assert!(rt.manifest().artifacts.len() >= 20);
+    }
+
+    #[test]
+    fn init_produces_params() {
+        let Some(mut rt) = runtime() else { return };
+        let outs = rt.run("init.hlo.txt", &[Tensor::scalar_i32(42)]).unwrap();
+        let spec = rt.manifest().get("init.hlo.txt").unwrap().clone();
+        assert_eq!(outs.len(), spec.outputs.len());
+        // Embedding is f32[vocab, hidden] with non-trivial values.
+        let embed = outs[0].as_f32().unwrap();
+        assert_eq!(
+            embed.len(),
+            rt.manifest().config.vocab * rt.manifest().config.hidden
+        );
+        let nonzero = embed.iter().filter(|x| **x != 0.0).count();
+        assert!(nonzero > embed.len() / 2);
+    }
+
+    #[test]
+    fn init_is_deterministic_per_seed() {
+        let Some(mut rt) = runtime() else { return };
+        let a = rt.run("init.hlo.txt", &[Tensor::scalar_i32(7)]).unwrap();
+        let b = rt.run("init.hlo.txt", &[Tensor::scalar_i32(7)]).unwrap();
+        let c = rt.run("init.hlo.txt", &[Tensor::scalar_i32(8)]).unwrap();
+        assert_eq!(a[0], b[0]);
+        assert_ne!(a[0], c[0]);
+    }
+
+    #[test]
+    fn fwd_runs_and_produces_logits() {
+        let Some(mut rt) = runtime() else { return };
+        let cfg = rt.manifest().config.clone();
+        let mut inputs = rt.run("init.hlo.txt", &[Tensor::scalar_i32(1)]).unwrap();
+        let tokens: Vec<i32> = (0..cfg.batch * cfg.seq)
+            .map(|i| (i % cfg.vocab) as i32)
+            .collect();
+        inputs.push(Tensor::S32(tokens, vec![cfg.batch, cfg.seq]));
+        let outs = rt.run("fwd.hlo.txt", &inputs).unwrap();
+        assert_eq!(outs.len(), 1);
+        let logits = outs[0].as_f32().unwrap();
+        assert_eq!(logits.len(), cfg.batch * cfg.seq * cfg.vocab);
+        assert!(logits.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn input_validation_errors() {
+        let Some(mut rt) = runtime() else { return };
+        assert!(rt.run("nope.hlo.txt", &[]).is_err());
+        assert!(rt.run("init.hlo.txt", &[]).is_err()); // missing seed
+        let bad = Tensor::F32(vec![0.0; 3], vec![3]);
+        assert!(rt.run("init.hlo.txt", &[bad]).is_err()); // wrong dtype/shape
+    }
+
+    #[test]
+    fn compile_cache_reuses_executables() {
+        let Some(mut rt) = runtime() else { return };
+        rt.run("init.hlo.txt", &[Tensor::scalar_i32(1)]).unwrap();
+        assert_eq!(rt.compiled_count(), 1);
+        rt.run("init.hlo.txt", &[Tensor::scalar_i32(2)]).unwrap();
+        assert_eq!(rt.compiled_count(), 1);
+    }
+}

@@ -1,0 +1,288 @@
+//! Artifact manifest parser.
+//!
+//! `python/compile/aot.py` writes `artifacts/MANIFEST.txt`, a line-based
+//! index of every lowered HLO artifact: its path, kind, and input/output
+//! tensor specs (`name:f32[2048,256]`). The Rust runtime reads this to know
+//! what to feed each executable without ever importing Python.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Element type of a tensor spec.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    S32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Option<DType> {
+        match s {
+            "f32" => Some(DType::F32),
+            "s32" => Some(DType::S32),
+            _ => None,
+        }
+    }
+}
+
+/// One named tensor of an artifact signature.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: DType,
+    pub dims: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    /// Parse `name:f32[2048,256]` (scalar = `name:f32[]`).
+    pub fn parse(s: &str) -> Option<TensorSpec> {
+        let (name, rest) = s.split_once(':')?;
+        let (ty, dims) = rest.split_once('[')?;
+        let dims = dims.strip_suffix(']')?;
+        let dims: Vec<usize> = if dims.is_empty() {
+            vec![]
+        } else {
+            dims.split(',').map(|d| d.parse().ok()).collect::<Option<_>>()?
+        };
+        Some(TensorSpec {
+            name: name.to_string(),
+            dtype: DType::parse(ty)?,
+            dims,
+        })
+    }
+}
+
+/// One artifact entry.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    /// Path relative to the artifact dir, e.g. `ops/attn_fa.hlo.txt`.
+    pub rel_path: String,
+    pub kind: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The mini-model build configuration recorded in the manifest.
+#[derive(Debug, Clone, Default)]
+pub struct BuildConfig {
+    pub vocab: usize,
+    pub hidden: usize,
+    pub layers: usize,
+    pub q_heads: usize,
+    pub kv_heads: usize,
+    pub ffn: usize,
+    pub seq: usize,
+    pub batch: usize,
+    pub head_dim: usize,
+    pub params: usize,
+}
+
+/// Parsed MANIFEST.txt.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub config: BuildConfig,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest, String> {
+        let mut m = Manifest {
+            dir: dir.to_path_buf(),
+            ..Default::default()
+        };
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            match parts.next() {
+                Some("config") => {
+                    for kv in parts {
+                        let Some((k, v)) = kv.split_once('=') else {
+                            continue;
+                        };
+                        let n: usize =
+                            v.parse().map_err(|_| format!("bad config value {kv}"))?;
+                        match k {
+                            "vocab" => m.config.vocab = n,
+                            "hidden" => m.config.hidden = n,
+                            "layers" => m.config.layers = n,
+                            "q_heads" => m.config.q_heads = n,
+                            "kv_heads" => m.config.kv_heads = n,
+                            "ffn" => m.config.ffn = n,
+                            "seq" => m.config.seq = n,
+                            "batch" => m.config.batch = n,
+                            "head_dim" => m.config.head_dim = n,
+                            "params" => m.config.params = n,
+                            _ => {}
+                        }
+                    }
+                }
+                Some("artifact") => {
+                    let rel = parts
+                        .next()
+                        .ok_or_else(|| format!("artifact line without path: {line}"))?
+                        .to_string();
+                    let mut kind = String::new();
+                    let mut inputs = Vec::new();
+                    let mut outputs = Vec::new();
+                    for kv in parts {
+                        let Some((k, v)) = kv.split_once('=') else {
+                            continue;
+                        };
+                        match k {
+                            "kind" => kind = v.to_string(),
+                            "inputs" | "outputs" => {
+                                let specs: Option<Vec<TensorSpec>> =
+                                    v.split(',').map(assemble_spec_piece).collect::<Vec<_>>()
+                                        .into_iter()
+                                        .collect();
+                                // `v.split(',')` breaks dims apart; re-join.
+                                let specs = match specs {
+                                    Some(s) => s,
+                                    None => parse_spec_list(v)
+                                        .ok_or_else(|| format!("bad specs: {v}"))?,
+                                };
+                                if k == "inputs" {
+                                    inputs = specs;
+                                } else {
+                                    outputs = specs;
+                                }
+                            }
+                            _ => {}
+                        }
+                    }
+                    m.artifacts.insert(
+                        rel.clone(),
+                        ArtifactSpec {
+                            rel_path: rel,
+                            kind,
+                            inputs,
+                            outputs,
+                        },
+                    );
+                }
+                _ => {}
+            }
+        }
+        if m.artifacts.is_empty() {
+            return Err("manifest has no artifacts".into());
+        }
+        Ok(m)
+    }
+
+    pub fn load(dir: &Path) -> Result<Manifest, String> {
+        let path = dir.join("MANIFEST.txt");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("{}: {e}", path.display()))?;
+        Self::parse(dir, &text)
+    }
+
+    pub fn get(&self, rel: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.get(rel)
+    }
+
+    pub fn abs_path(&self, rel: &str) -> PathBuf {
+        self.dir.join(rel)
+    }
+}
+
+/// Naive piece parse — fails when the spec contains multi-dim commas; used
+/// only as the fast path.
+fn assemble_spec_piece(_s: &str) -> Option<TensorSpec> {
+    None
+}
+
+/// Correct spec-list parser: split on commas *outside* brackets.
+fn parse_spec_list(v: &str) -> Option<Vec<TensorSpec>> {
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut cur = String::new();
+    for ch in v.chars() {
+        match ch {
+            '[' => {
+                depth += 1;
+                cur.push(ch);
+            }
+            ']' => {
+                depth = depth.saturating_sub(1);
+                cur.push(ch);
+            }
+            ',' if depth == 0 => {
+                out.push(TensorSpec::parse(&cur)?);
+                cur.clear();
+            }
+            _ => cur.push(ch),
+        }
+    }
+    if !cur.is_empty() {
+        out.push(TensorSpec::parse(&cur)?);
+    }
+    Some(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_spec_parsing() {
+        let t = TensorSpec::parse("embed:f32[2048,256]").unwrap();
+        assert_eq!(t.name, "embed");
+        assert_eq!(t.dtype, DType::F32);
+        assert_eq!(t.dims, vec![2048, 256]);
+        assert_eq!(t.elements(), 2048 * 256);
+        let s = TensorSpec::parse("seed:s32[]").unwrap();
+        assert_eq!(s.dims, Vec::<usize>::new());
+        assert_eq!(s.elements(), 1);
+        assert!(TensorSpec::parse("junk").is_none());
+    }
+
+    #[test]
+    fn spec_list_with_bracketed_commas() {
+        let v = "a:f32[2,3],b:s32[],c:f32[4]";
+        let specs = parse_spec_list(v).unwrap();
+        assert_eq!(specs.len(), 3);
+        assert_eq!(specs[0].dims, vec![2, 3]);
+        assert_eq!(specs[1].dims, Vec::<usize>::new());
+        assert_eq!(specs[2].dims, vec![4]);
+    }
+
+    #[test]
+    fn manifest_parse_minimal() {
+        let text = "\
+# comment
+config vocab=2048 hidden=256 layers=4 q_heads=8 kv_heads=4 ffn=896 seq=128 batch=4 head_dim=32 params=4589824
+artifact fwd.hlo.txt kind=fwd inputs=x:f32[4,128] outputs=logits:f32[4,128,2048]
+";
+        let m = Manifest::parse(Path::new("/tmp/a"), text).unwrap();
+        assert_eq!(m.config.vocab, 2048);
+        assert_eq!(m.config.batch, 4);
+        let a = m.get("fwd.hlo.txt").unwrap();
+        assert_eq!(a.kind, "fwd");
+        assert_eq!(a.inputs.len(), 1);
+        assert_eq!(a.outputs[0].dims, vec![4, 128, 2048]);
+    }
+
+    #[test]
+    fn real_manifest_loads_when_built() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("MANIFEST.txt").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.artifacts.len() >= 20, "{}", m.artifacts.len());
+        assert!(m.get("train_step.hlo.txt").is_some());
+        assert!(m.get("ops/attn_fa.hlo.txt").is_some());
+        // train_step: params + tokens + targets + lr in; params + loss out.
+        let ts = m.get("train_step.hlo.txt").unwrap();
+        assert_eq!(ts.inputs.len(), ts.outputs.len() + 2);
+    }
+}

@@ -1,0 +1,12 @@
+//! PJRT runtime: loads the AOT artifacts produced by `make artifacts`
+//! (python runs once, never on the request path) and executes them on the
+//! xla crate's CPU client. `traced` adds the real-execution trace path that
+//! feeds the same Chopper pipeline the simulator feeds.
+
+pub mod executor;
+pub mod manifest;
+pub mod traced;
+
+pub use executor::{artifacts_available, default_artifact_dir, Runtime, Tensor};
+pub use manifest::{ArtifactSpec, BuildConfig, DType, Manifest, TensorSpec};
+pub use traced::{traced_forward, ParamIndex, TracedForward};

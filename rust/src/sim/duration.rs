@@ -1,0 +1,326 @@
+//! Kernel timing model: roofline + a rocBLAS-like tile-selection model.
+//!
+//! For each kernel the model produces the *nominal* duration (at peak clock
+//! with no C3 contention) plus the microarchitectural quantities the
+//! hardware-profiling pass reports as counters: performed flops (padding →
+//! instruction overhead, Eq. 7), MFMA utilization (Eq. 8), workgroup count
+//! (occupancy). The event loop then stretches the nominal duration through
+//! the fluid contention/DVFS model.
+//!
+//! The b1 backward-FlashAttention pathology (Insight 1) lives here: at
+//! batch·heads below the CU count the backward kernel selection falls back
+//! to a non-split-KV variant whose grid cannot fill the GPU.
+
+use crate::config::GpuSpec;
+use crate::model::graph::KernelDesc;
+use crate::model::ops::{OpKind, OpType, Phase};
+
+/// Timing + counter facts about one kernel instance.
+#[derive(Debug, Clone, Copy)]
+pub struct KernelTiming {
+    /// Nominal duration at peak clock, no contention (ns).
+    pub nominal_ns: f64,
+    /// Flops actually executed (>= theoretical; padding).
+    pub performed_flops: f64,
+    /// MFMA busy fraction during the kernel, in [0,1].
+    pub mfma_util: f64,
+    /// Workgroups launched.
+    pub workgroups: u64,
+    /// Fraction of nominal time bound by memory (0 = pure compute).
+    pub mem_bound_frac: f64,
+}
+
+/// One entry of the GEMM tile library.
+#[derive(Debug, Clone, Copy)]
+struct Tile {
+    m: u64,
+    n: u64,
+    /// MFMA pipeline efficiency when this tile is fully occupied.
+    eff: f64,
+}
+
+const TILE_LIBRARY: [Tile; 5] = [
+    Tile { m: 256, n: 128, eff: 0.90 },
+    Tile { m: 128, n: 128, eff: 0.84 },
+    Tile { m: 128, n: 64, eff: 0.74 },
+    Tile { m: 64, n: 64, eff: 0.58 },
+    Tile { m: 64, n: 16, eff: 0.34 },
+];
+
+/// Fixed kernel launch/teardown cost on the GPU (ns).
+const KERNEL_FIXED_NS: f64 = 3_000.0;
+/// Achievable fraction of HBM peak for streaming vector kernels.
+const HBM_EFF: f64 = 0.72;
+/// Achievable fraction of HBM peak for strided copies.
+const COPY_EFF: f64 = 0.55;
+
+#[derive(Debug, Clone)]
+pub struct DurationModel {
+    pub gpu: GpuSpec,
+    /// batch size (kernel-selection inputs).
+    pub batch: u64,
+    pub q_heads: u64,
+}
+
+impl DurationModel {
+    pub fn new(gpu: GpuSpec, batch: u64, q_heads: u64) -> Self {
+        Self {
+            gpu,
+            batch,
+            q_heads,
+        }
+    }
+
+    /// Pick the best tile for a GEMM: maximize effective throughput
+    /// = tile_eff * wave_efficiency / padding_ratio.
+    fn select_gemm_tile(&self, m: u64, n: u64) -> (Tile, f64, u64) {
+        let cus = self.gpu.compute_units as u64;
+        let mut best: Option<(Tile, f64, u64, f64)> = None;
+        for t in TILE_LIBRARY {
+            let wgs = m.div_ceil(t.m) * n.div_ceil(t.n);
+            // Wave quantization: the last wave may be mostly idle.
+            let waves = wgs.div_ceil(cus);
+            let wave_eff = wgs as f64 / (waves * cus) as f64;
+            let padded = (m.div_ceil(t.m) * t.m) as f64 * (n.div_ceil(t.n) * t.n) as f64;
+            let pad_ratio = padded / (m as f64 * n as f64);
+            let score = t.eff * wave_eff / pad_ratio;
+            if best.map(|b| score > b.3).unwrap_or(true) {
+                best = Some((t, pad_ratio, wgs, score));
+            }
+        }
+        let (t, pad, wgs, _) = best.expect("non-empty tile library");
+        (t, pad, wgs)
+    }
+
+    /// Compute timing for one kernel.
+    pub fn timing(&self, k: &KernelDesc) -> KernelTiming {
+        match k.kind {
+            OpKind::Gemm => self.gemm_timing(k),
+            OpKind::FlashAttn => self.fa_timing(k),
+            OpKind::Vector => self.vector_timing(k, HBM_EFF),
+            OpKind::Copy => self.vector_timing(k, COPY_EFF),
+            OpKind::Comm => {
+                // Collectives are timed by the interconnect model; this
+                // path is only hit for per-kernel accounting.
+                KernelTiming {
+                    nominal_ns: 0.0,
+                    performed_flops: k.flops,
+                    mfma_util: 0.0,
+                    workgroups: self.gpu.compute_units as u64 / 4,
+                    mem_bound_frac: 1.0,
+                }
+            }
+        }
+    }
+
+    fn gemm_timing(&self, k: &KernelDesc) -> KernelTiming {
+        let (m, n, kk) = k.gemm_mnk.unwrap_or((1, 1, 1));
+        let (tile, pad_ratio, wgs) = self.select_gemm_tile(m, n);
+        let waves = wgs.div_ceil(self.gpu.compute_units as u64);
+        let wave_eff = wgs as f64 / (waves * self.gpu.compute_units as u64) as f64;
+        // Deep-K GEMMs amortize prologue better.
+        let k_eff = (kk as f64 / (kk as f64 + 512.0)).clamp(0.3, 1.0);
+        let util = (tile.eff * wave_eff * k_eff).clamp(0.02, 0.95);
+        let performed = k.flops * pad_ratio;
+        let compute_ns = performed / (self.gpu.peak_bf16_flops * util) * 1e9;
+        let mem_ns = k.bytes / (self.gpu.hbm_bw * HBM_EFF) * 1e9;
+        let nominal = compute_ns.max(mem_ns) + KERNEL_FIXED_NS;
+        KernelTiming {
+            nominal_ns: nominal,
+            performed_flops: performed,
+            // The counter-visible MFMA busy fraction over the whole kernel.
+            mfma_util: (compute_ns / nominal * util).min(util),
+            workgroups: wgs,
+            mem_bound_frac: (mem_ns / nominal).min(1.0),
+        }
+    }
+
+    fn fa_timing(&self, k: &KernelDesc) -> KernelTiming {
+        // FlashAttention interleaves MFMA with softmax vector work, capping
+        // MFMA utilization well below GEMM (Section V-G3).
+        let (base_util, grid_scale) = match (k.op.phase, k.name.as_str()) {
+            (Phase::Forward, _) => (0.44, 1.0),
+            // The FA2 backward splits into delta/dkdv/dq; the delta
+            // pre-pass is pure vector work.
+            (_, name) if name.contains("delta") => (0.02, 1.0),
+            (_, _) => (0.34, 1.0),
+        };
+        // Kernel-selection pathology (Insight 1): the backward kernels at
+        // batch size one select a non-split-KV variant whose grid is only
+        // batch*heads workgroups — it cannot fill 304 CUs, so effective
+        // utilization collapses. (Forward uses a q-block-parallel grid and
+        // is unaffected.)
+        let pathological = k.op.phase == Phase::Backward
+            && k.op.op == OpType::AttnFa
+            && !k.name.contains("delta")
+            && self.batch == 1;
+        let util = if pathological {
+            let grid = (self.batch * self.q_heads) as f64 * grid_scale;
+            let occupancy =
+                (grid / self.gpu.compute_units as f64).min(1.0).max(0.08);
+            // Partial recovery from multiple waves per CU, but far from full.
+            base_util * (0.30 + 0.70 * occupancy)
+        } else {
+            base_util
+        };
+        let performed = k.flops;
+        let compute_ns = performed / (self.gpu.peak_bf16_flops * util) * 1e9;
+        let mem_ns = k.bytes / (self.gpu.hbm_bw * HBM_EFF) * 1e9;
+        let nominal = compute_ns.max(mem_ns) + KERNEL_FIXED_NS;
+        let wgs = if pathological {
+            self.batch * self.q_heads
+        } else {
+            self.batch * self.q_heads * 32
+        };
+        KernelTiming {
+            nominal_ns: nominal,
+            performed_flops: performed,
+            mfma_util: (compute_ns / nominal * util).min(util),
+            workgroups: wgs,
+            mem_bound_frac: (mem_ns / nominal).min(1.0),
+        }
+    }
+
+    fn vector_timing(&self, k: &KernelDesc, eff: f64) -> KernelTiming {
+        // Memory-bound: bytes over effective HBM bandwidth; small kernels
+        // are latency-bound via the fixed cost.
+        let mem_ns = k.bytes / (self.gpu.hbm_bw * eff) * 1e9;
+        let valu_ns = k.flops / self.gpu.peak_vector_flops * 1e9;
+        let nominal = mem_ns.max(valu_ns) + KERNEL_FIXED_NS;
+        KernelTiming {
+            nominal_ns: nominal,
+            performed_flops: 0.0, // no MFMA flops
+            mfma_util: 0.0,
+            workgroups: ((k.bytes / 65536.0) as u64).clamp(1, 4096),
+            mem_bound_frac: 1.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::model::graph::build_iteration;
+    use crate::model::ops::OpRef;
+
+    fn model(batch: u64) -> DurationModel {
+        DurationModel::new(GpuSpec::mi300x(), batch, 32)
+    }
+
+    fn kernels_of(
+        batch: u64,
+        seq: u64,
+        op: OpType,
+        phase: Phase,
+    ) -> Vec<KernelDesc> {
+        let cfg = ModelConfig::llama3_8b();
+        let p = build_iteration(&cfg, batch, seq, 8, true);
+        let ops: Vec<_> = match phase {
+            Phase::Forward => p.fwd,
+            Phase::Backward => p.bwd,
+            Phase::Optimizer => p.opt,
+        };
+        ops.into_iter()
+            .filter(|o| o.op.op == op)
+            .flat_map(|o| o.kernels)
+            .collect()
+    }
+
+    fn op_nominal(batch: u64, seq: u64, op: OpType, phase: Phase) -> f64 {
+        let m = model(batch);
+        // Per-layer duration: sum of kernels of one op instance.
+        let ks = kernels_of(batch, seq, op, phase);
+        let per_layer = ks.len() / 32.max(1);
+        ks.iter()
+            .take(per_layer.max(1))
+            .map(|k| m.timing(k).nominal_ns)
+            .sum()
+    }
+
+    #[test]
+    fn big_gemm_hits_high_utilization() {
+        let m = model(2);
+        let k = KernelDesc {
+            name: "g".into(),
+            op: OpRef::fwd(OpType::MlpUp),
+            layer: Some(0),
+            kind: OpKind::Gemm,
+            flops: 2.0 * 8192.0 * 14336.0 * 4096.0,
+            bytes: 2.0 * (8192.0 * 4096.0 + 4096.0 * 14336.0 + 8192.0 * 14336.0),
+            gemm_mnk: Some((8192, 14336, 4096)),
+        };
+        let t = m.timing(&k);
+        assert!(t.mfma_util > 0.6, "util {}", t.mfma_util);
+        // ~9.6e11 flops at ~1e15 flop/s -> ~1 ms.
+        assert!(t.nominal_ns > 5e5 && t.nominal_ns < 5e6, "{}", t.nominal_ns);
+    }
+
+    #[test]
+    fn skinny_gemm_pays_occupancy_and_padding() {
+        let m = model(1);
+        let k = KernelDesc {
+            name: "g".into(),
+            op: OpRef::fwd(OpType::AttnOp),
+            layer: Some(0),
+            kind: OpKind::Gemm,
+            flops: 2.0 * 100.0 * 100.0 * 4096.0,
+            bytes: 2.0 * (100.0 * 4096.0 * 2.0 + 100.0 * 100.0),
+            gemm_mnk: Some((100, 100, 4096)),
+        };
+        let t = m.timing(&k);
+        assert!(t.performed_flops > k.flops, "padding expected");
+        assert!(t.mfma_util < 0.3, "util {}", t.mfma_util);
+    }
+
+    #[test]
+    fn bwd_fa_batch1_slower_than_batch2_despite_fewer_flops() {
+        // Insight 1 — the headline pathology.
+        let d1 = op_nominal(1, 4096, OpType::AttnFa, Phase::Backward);
+        let d2 = op_nominal(2, 4096, OpType::AttnFa, Phase::Backward);
+        assert!(
+            d1 > d2,
+            "b1 bwd FA ({d1:.0} ns) should exceed b2 ({d2:.0} ns)"
+        );
+        // And at 8k too.
+        let d1 = op_nominal(1, 8192, OpType::AttnFa, Phase::Backward);
+        let d2 = op_nominal(2, 8192, OpType::AttnFa, Phase::Backward);
+        assert!(d1 > d2);
+    }
+
+    #[test]
+    fn fwd_fa_scales_normally_with_batch() {
+        let d1 = op_nominal(1, 4096, OpType::AttnFa, Phase::Forward);
+        let d2 = op_nominal(2, 4096, OpType::AttnFa, Phase::Forward);
+        assert!(d2 > d1 * 1.6, "fwd FA should ~double: {d1} -> {d2}");
+    }
+
+    #[test]
+    fn fa_util_below_gemm_util() {
+        // Section V-G3: utilization overhead particularly high for FA.
+        let m = model(2);
+        let fa = kernels_of(2, 4096, OpType::AttnFa, Phase::Forward);
+        let gemm = kernels_of(2, 4096, OpType::MlpUp, Phase::Forward);
+        let fa_util = m.timing(&fa[0]).mfma_util;
+        let gemm_util = m.timing(&gemm[0]).mfma_util;
+        assert!(fa_util < gemm_util);
+    }
+
+    #[test]
+    fn vector_kernels_have_zero_mfma() {
+        let m = model(2);
+        let norm = kernels_of(2, 4096, OpType::AttnN, Phase::Forward);
+        let t = m.timing(&norm[0]);
+        assert_eq!(t.mfma_util, 0.0);
+        assert!(t.nominal_ns > KERNEL_FIXED_NS);
+    }
+
+    #[test]
+    fn timing_is_deterministic() {
+        let m = model(2);
+        let ks = kernels_of(2, 4096, OpType::MlpDp, Phase::Forward);
+        let a = m.timing(&ks[0]);
+        let b = m.timing(&ks[0]);
+        assert_eq!(a.nominal_ns, b.nominal_ns);
+    }
+}

@@ -1,0 +1,981 @@
+//! The discrete-event engine: executes the per-rank FSDP dispatch program
+//! on the simulated node and emits the runtime-profiling trace plus the
+//! power and host-activity telemetry.
+//!
+//! Fluid-flow execution model: at most one compute kernel and one
+//! collective are in flight per GPU (streams are FIFO, depth-1 execution);
+//! their progress rates change when the DVFS governor retunes the clocks,
+//! when a collective transfer starts/ends (C3 contention), or when a rank's
+//! comm stream occupancy changes (RCCL spin kernels hold CUs). Every rate
+//! change advances the in-flight work and reschedules the end event under a
+//! fresh generation number; stale events are ignored.
+
+use std::cmp::Ordering;
+use std::collections::{BinaryHeap, HashMap, VecDeque};
+use std::sync::Arc;
+
+use crate::config::{ModelConfig, NodeSpec, WorkloadConfig};
+use crate::fsdp::{
+    build_program, simulate_gather_pattern, AllocStats, DispatchItem, HostSync,
+    ProgKernel,
+};
+use crate::model::ops::OpType;
+use crate::sim::duration::{DurationModel, KernelTiming};
+use crate::sim::dvfs::{DvfsGovernor, WindowActivity};
+use crate::sim::interconnect::{collective_base_ns, CollPhase, CollState};
+use crate::trace::event::{PowerSample, PowerTrace, Stream, Trace, TraceEvent};
+use crate::util::prng::Rng;
+
+/// Tunable mechanism parameters (DESIGN.md §5). Defaults are calibrated so
+/// the paper's qualitative results emerge; the ablation benches sweep them.
+#[derive(Debug, Clone)]
+pub struct EngineParams {
+    /// Compute slowdown from a spinning RCCL kernel holding CUs.
+    pub spin_penalty: f64,
+    /// Extra compute slowdown while a transfer contends for HBM.
+    pub transfer_penalty: f64,
+    /// Transfer slowdown at 100% of ranks running compute.
+    pub comm_stretch: f64,
+    /// Per-rank static host-speed jitter (sigma, fraction).
+    pub rank_jitter: f64,
+    /// Per-rank static compute-speed jitter (sigma, fraction) — silicon /
+    /// thermal heterogeneity. This is what makes ranks arrive at
+    /// collectives at different times, so early ranks spin (long comm
+    /// kernels) — the mechanism behind Insight 2's "median comm scales
+    /// with compute" and Fig. 8's per-GPU overlap spread.
+    pub compute_jitter: f64,
+    /// Per-dispatch lognormal-ish jitter (sigma, fraction).
+    pub dispatch_jitter: f64,
+    /// Per-rank comm-stream dispatch delay (half-normal sigma, ns) —
+    /// small doorbell-latency differences between GPUs.
+    pub comm_delay_sigma_ns: f64,
+    /// Extra comm dispatch delay of the one NUMA-far GPU (ns): in a
+    /// two-socket chassis one GPU's doorbell path crosses the socket
+    /// interconnect, so its collectives consistently arrive late — it
+    /// sees minimal overlap while everyone else spins longer (Fig. 8's
+    /// low-overlap GPU).
+    pub far_rank_delay_ns: f64,
+    /// HBM power noise floor (W) — FSDPv2's deterministic allocator.
+    pub hbm_noise_quiet_w: f64,
+    /// HBM power noise (W) per unit of allocator memory-spike variability
+    /// (per-iteration peak σ normalized by the layer weight size) — the
+    /// FSDPv1 non-determinism channel (Observation 6).
+    pub hbm_noise_scale_w: f64,
+    /// DVFS governor window (ns).
+    pub dvfs_window_ns: f64,
+}
+
+impl Default for EngineParams {
+    fn default() -> Self {
+        Self {
+            spin_penalty: 0.07,
+            transfer_penalty: 0.65,
+            comm_stretch: 0.3,
+            rank_jitter: 0.05,
+            compute_jitter: 0.004,
+            dispatch_jitter: 0.35,
+            comm_delay_sigma_ns: 150_000.0,
+            far_rank_delay_ns: 2_200_000.0,
+            hbm_noise_quiet_w: 6.0,
+            hbm_noise_scale_w: 185.0,
+            dvfs_window_ns: 1_000_000.0,
+        }
+    }
+}
+
+/// Per-rank host busy time bucketed into fixed windows — input to the CPU
+/// utilization model (sim::cpu).
+#[derive(Debug, Clone, Default)]
+pub struct HostActivity {
+    /// Window length (ns).
+    pub window_ns: f64,
+    /// busy\[rank\]\[window\] = busy ns within that window.
+    pub busy: Vec<HashMap<u64, f64>>,
+    /// Total wall-clock span simulated.
+    pub span_ns: f64,
+}
+
+/// Everything one simulated training run produces.
+#[derive(Debug)]
+pub struct SimOutput {
+    pub trace: Trace,
+    pub power: PowerTrace,
+    pub host: HostActivity,
+    pub alloc: AllocStats,
+    /// Wall-clock boundaries of each iteration (start, end), ns.
+    pub iter_bounds: Vec<(f64, f64)>,
+}
+
+// ---------------------------------------------------------------------------
+// Event heap
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum EvKind {
+    /// Try to start the front of a rank's compute queue.
+    TryCompute { rank: usize },
+    /// Try to start the front of a rank's comm queue.
+    TryComm { rank: usize },
+    KernelEnd { rank: usize, gen: u64 },
+    CollEnd { coll: usize, gen: u64 },
+    DvfsTick { rank: usize },
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Ev {
+    t: f64,
+    seq: u64,
+    kind: EvKind,
+}
+
+impl PartialEq for Ev {
+    fn eq(&self, other: &Self) -> bool {
+        self.t == other.t && self.seq == other.seq
+    }
+}
+impl Eq for Ev {}
+impl PartialOrd for Ev {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Ev {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Min-heap via reversed compare; ties broken by insertion order.
+        other
+            .t
+            .partial_cmp(&self.t)
+            .unwrap_or(Ordering::Equal)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-rank state
+// ---------------------------------------------------------------------------
+
+/// A dispatched kernel, referenced by its index in the (shared, immutable)
+/// program — avoids cloning the KernelDesc per rank on the hot path.
+#[derive(Debug, Clone, Copy)]
+struct QueuedKernel {
+    item_idx: usize,
+    t_launch: f64,
+}
+
+#[derive(Debug)]
+struct InflightKernel {
+    q: QueuedKernel,
+    bytes_total: f64,
+    timing: KernelTiming,
+    t_start: f64,
+    /// Remaining work in nominal-seconds.
+    work_s: f64,
+    rate: f64,
+    last_update: f64,
+    /// Portion of HBM bytes not yet attributed to a DVFS window.
+    bytes_left: f64,
+    gen: u64,
+    freq_at_start: f64,
+}
+
+#[derive(Debug)]
+enum HostBlock {
+    None,
+    /// Waiting for a collective id to complete.
+    Collective(u64),
+    /// Waiting for both local streams (and pending queues) to drain.
+    Device,
+}
+
+struct RankState {
+    // Host.
+    item_idx: usize,
+    host_time: f64,
+    block: HostBlock,
+    host_scale: f64,
+    /// Static compute-throughput multiplier of this GPU (~1.0).
+    compute_scale: f64,
+    /// Static comm-dispatch delay of this GPU (ns, >= 0).
+    comm_delay_ns: f64,
+    // Streams.
+    compute_q: VecDeque<QueuedKernel>,
+    comm_q: VecDeque<(u64, f64)>, // (collective id, t_launch)
+    inflight: Option<InflightKernel>,
+    /// Collective currently occupying this rank's comm stream.
+    comm_occupied: Option<usize>,
+    /// True when the front compute kernel is parked on a collective.
+    parked: bool,
+    /// Pending TryCompute timer already scheduled for a future time.
+    compute_timer: f64,
+    comm_timer: f64,
+    // DVFS + accounting.
+    gov: DvfsGovernor,
+    win_start: f64,
+    win: WindowActivity,
+    comm_accounted: f64,
+    // Trace bookkeeping.
+    seq_compute: u64,
+    seq_comm: u64,
+    /// Compute kernels fully completed (gates comm stream-event waits).
+    completed_kernels: u64,
+    cur_iter: u32,
+    rng: Rng,
+}
+
+// ---------------------------------------------------------------------------
+// Engine
+// ---------------------------------------------------------------------------
+
+pub struct Engine<'a> {
+    node: &'a NodeSpec,
+    wl: &'a WorkloadConfig,
+    params: EngineParams,
+    dur: DurationModel,
+    ranks: Vec<RankState>,
+    colls: Vec<CollState>,
+    /// Index of the collective currently in (or awaiting) transfer, if any.
+    active_transfer: bool,
+    heap: BinaryHeap<Ev>,
+    ev_seq: u64,
+    now: f64,
+    program: Arc<crate::fsdp::Program>,
+    // Output.
+    events: Vec<TraceEvent>,
+    power: PowerTrace,
+    host: HostActivity,
+    next_kernel_id: u64,
+    /// fwd kernel id lookup for fwd→bwd links:
+    /// (rank, iter, layer, op, kernel index within op) → kernel_id.
+    fwd_ids: HashMap<(u32, u32, u32, OpType, u32), u64>,
+    /// Running kernel-index-within-op while dispatch proceeds.
+    op_kernel_idx: HashMap<(usize, u32, Option<u32>, OpType, u8), u32>,
+    iter_bounds: Vec<(f64, f64)>,
+    alloc: AllocStats,
+}
+
+impl<'a> Engine<'a> {
+    pub fn new(
+        node: &'a NodeSpec,
+        cfg: &ModelConfig,
+        wl: &'a WorkloadConfig,
+        params: EngineParams,
+    ) -> Self {
+        let r = node.num_gpus as usize;
+        let program = Arc::new(build_program(cfg, wl, r as u64));
+
+        // Allocator behaviour decides the HBM power-noise level (Obs. 6).
+        let alloc = simulate_gather_pattern(
+            wl.fsdp,
+            cfg.layer_weight_bytes(),
+            cfg.layers as u32,
+            wl.iterations,
+            wl.seed,
+        );
+        let spike_var =
+            alloc.peak_sigma_bytes / cfg.layer_weight_bytes().max(1) as f64;
+        let noise_w =
+            params.hbm_noise_quiet_w + params.hbm_noise_scale_w * spike_var;
+
+        let far_rank = Rng::substream(wl.seed, "far_rank").range_usize(0, r);
+        let mut ranks = Vec::with_capacity(r);
+        for g in 0..r {
+            let mut rng = Rng::substream(wl.seed, &format!("rank{g}"));
+            let host_scale = (1.0 + params.rank_jitter * rng.gauss()).clamp(0.8, 1.3);
+            let compute_scale =
+                (1.0 + params.compute_jitter * rng.gauss()).clamp(0.9, 1.1);
+            let comm_delay_ns = rng.gauss().abs() * params.comm_delay_sigma_ns
+                + if g == far_rank { params.far_rank_delay_ns } else { 0.0 };
+            ranks.push(RankState {
+                item_idx: 0,
+                host_time: 0.0,
+                block: HostBlock::None,
+                host_scale,
+                compute_scale,
+                comm_delay_ns,
+                compute_q: VecDeque::new(),
+                comm_q: VecDeque::new(),
+                inflight: None,
+                comm_occupied: None,
+                parked: false,
+                compute_timer: f64::NAN,
+                comm_timer: f64::NAN,
+                // HBM power noise is common-mode across ranks (every GPU
+                // runs the identical allocator pattern), so all governors
+                // share one noise stream; divergence between ranks comes
+                // from their (slightly) different activity histories.
+                gov: DvfsGovernor::new(node.gpu.clone(), wl.seed, 0, noise_w),
+                win_start: 0.0,
+                win: WindowActivity::default(),
+                comm_accounted: 0.0,
+                seq_compute: 0,
+                seq_comm: 0,
+                completed_kernels: 0,
+                cur_iter: 0,
+                rng,
+            });
+        }
+
+        let colls = program
+            .collectives()
+            .map(|c| CollState::new(c.clone(), r, collective_base_ns(node, c.bytes)))
+            .collect();
+
+        let mut eng = Self {
+            node,
+            wl,
+            dur: DurationModel::new(node.gpu.clone(), wl.batch, cfg.q_heads),
+            ranks,
+            colls,
+            active_transfer: false,
+            heap: BinaryHeap::new(),
+            ev_seq: 0,
+            now: 0.0,
+            program,
+            events: Vec::new(),
+            power: PowerTrace::default(),
+            host: HostActivity {
+                window_ns: params.dvfs_window_ns,
+                busy: vec![HashMap::new(); r],
+                span_ns: 0.0,
+            },
+            next_kernel_id: 0,
+            fwd_ids: HashMap::new(),
+            op_kernel_idx: HashMap::new(),
+            iter_bounds: vec![(f64::INFINITY, 0.0); wl.iterations as usize],
+            alloc,
+            params,
+        };
+        for g in 0..r {
+            eng.push(eng.params.dvfs_window_ns, EvKind::DvfsTick { rank: g });
+        }
+        eng
+    }
+
+    fn push(&mut self, t: f64, kind: EvKind) {
+        self.ev_seq += 1;
+        self.heap.push(Ev {
+            t,
+            seq: self.ev_seq,
+            kind,
+        });
+    }
+
+    // ------------------------------------------------------------------
+    // Host actor
+    // ------------------------------------------------------------------
+
+    /// Run the host of `rank` until it blocks or the program ends.
+    fn run_host(&mut self, rank: usize) {
+        let program = Arc::clone(&self.program);
+        loop {
+            let idx = self.ranks[rank].item_idx;
+            if idx >= program.items.len() {
+                return;
+            }
+            match &program.items[idx] {
+                DispatchItem::HostWork { ns, tag: _ } => {
+                    let r = &mut self.ranks[rank];
+                    let cost = ns * r.host_scale;
+                    Self::host_busy(&mut self.host, rank, r.host_time, cost);
+                    r.host_time += cost;
+                    r.item_idx += 1;
+                }
+                DispatchItem::Kernel(_) => {
+                    let r = &mut self.ranks[rank];
+                    let jit = 1.0
+                        + self.params.dispatch_jitter * r.rng.f64().powi(3);
+                    let cost = self.node.cpu.dispatch_ns * r.host_scale * jit;
+                    Self::host_busy(&mut self.host, rank, r.host_time, cost);
+                    r.host_time += cost;
+                    let t_launch = r.host_time;
+                    r.compute_q.push_back(QueuedKernel {
+                        item_idx: idx,
+                        t_launch,
+                    });
+                    r.item_idx += 1;
+                    self.try_compute(rank);
+                }
+                DispatchItem::Comm(c) => {
+                    let id = c.id;
+                    let r = &mut self.ranks[rank];
+                    // Collective dispatch is cheaper than a kernel launch.
+                    let cost = self.node.cpu.dispatch_ns * 0.6 * r.host_scale;
+                    Self::host_busy(&mut self.host, rank, r.host_time, cost);
+                    r.host_time += cost;
+                    let t_launch = r.host_time;
+                    self.colls[id as usize].t_launch[rank] = t_launch;
+                    r.comm_q.push_back((id, t_launch));
+                    r.item_idx += 1;
+                    self.try_comm(rank);
+                }
+                DispatchItem::Sync(HostSync::Collective(id)) => {
+                    let id = *id;
+                    if self.colls[id as usize].is_done() {
+                        let end = self.colls[id as usize].end_time;
+                        let r = &mut self.ranks[rank];
+                        r.host_time = r.host_time.max(end);
+                        r.item_idx += 1;
+                    } else {
+                        self.colls[id as usize].host_waiters.push(rank);
+                        self.ranks[rank].block = HostBlock::Collective(id);
+                        return;
+                    }
+                }
+                DispatchItem::Sync(HostSync::Device) => {
+                    if self.rank_idle(rank) {
+                        let r = &mut self.ranks[rank];
+                        r.host_time = r.host_time.max(self.now);
+                        r.item_idx += 1;
+                    } else {
+                        self.ranks[rank].block = HostBlock::Device;
+                        return;
+                    }
+                }
+            }
+        }
+    }
+
+    fn host_busy(host: &mut HostActivity, rank: usize, t0: f64, dur: f64) {
+        // Attribute busy time to windows (a dispatch can straddle one).
+        let w = host.window_ns;
+        let mut t = t0;
+        let end = t0 + dur;
+        while t < end {
+            let widx = (t / w) as u64;
+            let wend = (widx + 1) as f64 * w;
+            let chunk = end.min(wend) - t;
+            *host.busy[rank].entry(widx).or_insert(0.0) += chunk;
+            t = end.min(wend);
+        }
+    }
+
+    fn rank_idle(&self, rank: usize) -> bool {
+        let r = &self.ranks[rank];
+        r.compute_q.is_empty()
+            && r.inflight.is_none()
+            && r.comm_q.is_empty()
+            && r.comm_occupied.is_none()
+    }
+
+    /// Re-check a blocked host after device progress.
+    fn wake_host(&mut self, rank: usize) {
+        let ready = match self.ranks[rank].block {
+            HostBlock::None => false,
+            HostBlock::Collective(id) => self.colls[id as usize].is_done(),
+            HostBlock::Device => self.rank_idle(rank),
+        };
+        if ready {
+            {
+                let r = &mut self.ranks[rank];
+                r.block = HostBlock::None;
+                r.host_time = r.host_time.max(self.now);
+                r.item_idx += 1;
+            }
+            self.run_host(rank);
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Compute stream
+    // ------------------------------------------------------------------
+
+    /// Current progress rate for an in-flight kernel on `rank`.
+    fn compute_rate(&self, rank: usize, timing: &KernelTiming) -> f64 {
+        let r = &self.ranks[rank];
+        let fr = r.gov.freq_ratio().max(0.05);
+        let mfr = r.gov.mem_freq_ratio().max(0.05);
+        let mbf = timing.mem_bound_frac.clamp(0.0, 1.0);
+        let freq_factor = 1.0 / ((1.0 - mbf) / fr + mbf / mfr);
+        let mem_sens = 0.25 + 0.75 * mbf;
+        let occupied = r.comm_occupied.is_some();
+        let cont = 1.0
+            + mem_sens
+                * (self.params.spin_penalty * occupied as u8 as f64
+                    + self.params.transfer_penalty
+                        * (occupied && self.active_transfer) as u8 as f64);
+        freq_factor * r.compute_scale / cont
+    }
+
+    fn try_compute(&mut self, rank: usize) {
+        if self.ranks[rank].inflight.is_some() || self.ranks[rank].parked {
+            return;
+        }
+        let Some(&front) = self.ranks[rank].compute_q.front() else {
+            return;
+        };
+        let wait_comm = self.prog_kernel(front.item_idx).wait_comm;
+        // Collective dependency?
+        if let Some(cid) = wait_comm {
+            let c = &mut self.colls[cid as usize];
+            if !c.is_done() {
+                c.kernel_waiters.push(rank);
+                self.ranks[rank].parked = true;
+                return;
+            }
+        }
+        let ready = front
+            .t_launch
+            .max(self.colls_ready_time(wait_comm))
+            + self.node.cpu.launch_latency_ns;
+        if ready > self.now {
+            // Schedule a wake-up; dedupe timers.
+            if self.ranks[rank].compute_timer.is_nan()
+                || self.ranks[rank].compute_timer > ready
+            {
+                self.ranks[rank].compute_timer = ready;
+                self.push(ready, EvKind::TryCompute { rank });
+            }
+            return;
+        }
+        self.ranks[rank].compute_timer = f64::NAN;
+        // Start it.
+        let q = self.ranks[rank].compute_q.pop_front().unwrap();
+        let pk = self.prog_kernel(q.item_idx);
+        let (timing, bytes, iter) = (self.dur.timing(&pk.desc), pk.desc.bytes, pk.iter);
+        let rate = self.compute_rate(rank, &timing);
+        let gen = self.next_gen();
+        let freq = self.ranks[rank].gov.freq_mhz;
+        let inflight = InflightKernel {
+            work_s: timing.nominal_ns * 1e-9,
+            bytes_left: bytes,
+            bytes_total: bytes,
+            q,
+            timing,
+            t_start: self.now,
+            rate,
+            last_update: self.now,
+            gen,
+            freq_at_start: freq,
+        };
+        let end = self.now + inflight.work_s / rate * 1e9;
+        self.ranks[rank].cur_iter = iter;
+        self.ranks[rank].inflight = Some(inflight);
+        self.push(end, EvKind::KernelEnd { rank, gen });
+        // Compute starting changes collective contention.
+        self.retune_transfer();
+    }
+
+    /// The program kernel behind a queue entry.
+    fn prog_kernel(&self, item_idx: usize) -> &ProgKernel {
+        match &self.program.items[item_idx] {
+            DispatchItem::Kernel(k) => k,
+            _ => unreachable!("compute queue holds only kernels"),
+        }
+    }
+
+    fn colls_ready_time(&self, wait: Option<u64>) -> f64 {
+        match wait {
+            Some(id) => self.colls[id as usize].end_time,
+            None => 0.0,
+        }
+    }
+
+    fn next_gen(&mut self) -> u64 {
+        self.ev_seq += 1;
+        self.ev_seq
+    }
+
+    /// Advance the in-flight kernel of `rank` to `now`, attributing window
+    /// activity; does not finish it.
+    fn account_inflight(&mut self, rank: usize) {
+        let now = self.now;
+        let r = &mut self.ranks[rank];
+        if let Some(k) = r.inflight.as_mut() {
+            let dt = (now - k.last_update).max(0.0);
+            if dt > 0.0 {
+                let done_s = (dt * 1e-9 * k.rate).min(k.work_s);
+                let total_s = k.timing.nominal_ns * 1e-9;
+                let frac = if total_s > 0.0 { done_s / total_s } else { 0.0 };
+                let bytes = k.bytes_total * frac;
+                k.bytes_left = (k.bytes_left - bytes).max(0.0);
+                k.work_s -= done_s;
+                k.last_update = now;
+                r.win.compute_busy += dt;
+                r.win.mfma_util += dt * k.timing.mfma_util;
+                r.win.hbm_bytes += bytes;
+            }
+        }
+        // Comm occupancy accounting.
+        if r.comm_occupied.is_some() {
+            let dt = (now - r.comm_accounted).max(0.0);
+            r.win.comm_busy += dt;
+            r.comm_accounted = now;
+        }
+    }
+
+    /// Rescale the in-flight compute kernel of `rank` after a rate change.
+    fn rescale_compute(&mut self, rank: usize) {
+        let Some((timing, old_rate)) = self.ranks[rank]
+            .inflight
+            .as_ref()
+            .map(|k| (k.timing, k.rate))
+        else {
+            return;
+        };
+        let rate = self.compute_rate(rank, &timing);
+        if (rate - old_rate).abs() < 1e-9 * old_rate {
+            return; // no change — keep the scheduled end event
+        }
+        self.account_inflight(rank);
+        let gen = self.next_gen();
+        let now = self.now;
+        let k = self.ranks[rank].inflight.as_mut().unwrap();
+        k.rate = rate;
+        k.gen = gen;
+        let end = now + k.work_s / rate * 1e9;
+        self.push(end, EvKind::KernelEnd { rank, gen });
+    }
+
+    fn on_kernel_end(&mut self, rank: usize, gen: u64) {
+        let valid = self.ranks[rank]
+            .inflight
+            .as_ref()
+            .map(|k| k.gen == gen)
+            .unwrap_or(false);
+        if !valid {
+            return;
+        }
+        self.account_inflight(rank);
+        let k = self.ranks[rank].inflight.take().unwrap();
+        debug_assert!(k.work_s < 1e-9, "kernel ended with work left: {}", k.work_s);
+        self.ranks[rank].completed_kernels += 1;
+        self.emit_compute_event(rank, k);
+        self.retune_transfer();
+        self.try_compute(rank);
+        self.try_comm(rank); // a stream-event wait may now be satisfied
+        self.wake_host(rank);
+    }
+
+    fn emit_compute_event(&mut self, rank: usize, k: InflightKernel) {
+        let id = self.next_kernel_id;
+        self.next_kernel_id += 1;
+        let program = Arc::clone(&self.program);
+        let pk = match &program.items[k.q.item_idx] {
+            DispatchItem::Kernel(pk) => pk,
+            _ => unreachable!(),
+        };
+        let d = &pk.desc;
+        let iter = pk.iter;
+        let op = d.op;
+        // fwd→bwd link (Section III-B1): backward kernels are spawned from
+        // their forward counterparts.
+        let layer_key = d.layer.unwrap_or(u32::MAX);
+        let ph = match op.phase {
+            crate::model::ops::Phase::Forward => 0u8,
+            crate::model::ops::Phase::Backward => 1,
+            crate::model::ops::Phase::Optimizer => 2,
+        };
+        let pidx = {
+            let key = (rank, iter, d.layer, op.op, ph);
+            let e = self.op_kernel_idx.entry(key).or_insert(0);
+            let v = *e;
+            *e += 1;
+            v
+        };
+        let fwd_link = match ph {
+            0 => {
+                self.fwd_ids
+                    .insert((rank as u32, iter, layer_key, op.op, pidx), id);
+                None
+            }
+            1 => self
+                .fwd_ids
+                .get(&(rank as u32, iter, layer_key, op.op, pidx))
+                .copied(),
+            _ => None,
+        };
+        let seq = self.ranks[rank].seq_compute;
+        self.ranks[rank].seq_compute += 1;
+        let b = self.iter_bounds.get_mut(iter as usize);
+        if let Some((s, e)) = b {
+            *s = s.min(k.t_start);
+            *e = e.max(self.now);
+        }
+        self.events.push(TraceEvent {
+            kernel_id: id,
+            gpu: rank as u32,
+            stream: Stream::Compute,
+            name: d.name.clone(),
+            op,
+            layer: d.layer,
+            iter,
+            t_launch: k.q.t_launch,
+            t_start: k.t_start,
+            t_end: self.now,
+            seq,
+            fwd_link,
+            freq_mhz: k.freq_at_start,
+            flops: d.flops,
+            bytes: d.bytes,
+        });
+    }
+
+    // ------------------------------------------------------------------
+    // Comm stream
+    // ------------------------------------------------------------------
+
+    fn try_comm(&mut self, rank: usize) {
+        if self.ranks[rank].comm_occupied.is_some() {
+            return;
+        }
+        let Some(&(cid, t_launch)) = self.ranks[rank].comm_q.front() else {
+            return;
+        };
+        // Cross-stream event dependency: the collective may not start
+        // until the compute kernels enqueued before it have completed on
+        // this rank (re-checked from on_kernel_end).
+        if self.ranks[rank].completed_kernels
+            < self.colls[cid as usize].desc.wait_seq
+        {
+            return;
+        }
+        // The rank's comm-dispatch delay applies from the moment the
+        // stream-event gate is satisfied (now), not from the (far-ahead)
+        // host launch time; memoize so rescheduling stays idempotent.
+        let ready = {
+            let c = &mut self.colls[cid as usize];
+            if c.ready_at[rank].is_nan() {
+                c.ready_at[rank] = self
+                    .now
+                    .max(t_launch + self.node.cpu.launch_latency_ns)
+                    + self.ranks[rank].comm_delay_ns;
+            }
+            c.ready_at[rank]
+        };
+        if ready > self.now {
+            if self.ranks[rank].comm_timer.is_nan()
+                || self.ranks[rank].comm_timer > ready
+            {
+                self.ranks[rank].comm_timer = ready;
+                self.push(ready, EvKind::TryComm { rank });
+            }
+            return;
+        }
+        self.ranks[rank].comm_timer = f64::NAN;
+        self.ranks[rank].comm_q.pop_front();
+        self.ranks[rank].comm_occupied = Some(cid as usize);
+        self.ranks[rank].comm_accounted = self.now;
+        // RCCL kernel now holds CUs on this rank: compute slows down.
+        self.rescale_compute(rank);
+        let all_arrived = self.colls[cid as usize].arrive(rank, self.now);
+        if all_arrived {
+            self.active_transfer = true;
+            // Transfer contends with compute on every rank.
+            for g in 0..self.ranks.len() {
+                self.rescale_compute(g);
+            }
+            self.retune_transfer();
+        }
+    }
+
+    /// Recompute the in-flight transfer's rate from current compute
+    /// activity and reschedule its end event.
+    fn retune_transfer(&mut self) {
+        let Some(idx) = self.transfer_idx() else {
+            return;
+        };
+        let busy = self
+            .ranks
+            .iter()
+            .filter(|r| r.inflight.is_some())
+            .count() as f64
+            / self.ranks.len() as f64;
+        let c = &mut self.colls[idx];
+        c.advance(self.now);
+        c.rate = 1.0 / (1.0 + self.params.comm_stretch * busy);
+        c.gen += 1;
+        let gen = c.gen;
+        let end = c.projected_end();
+        self.push(end, EvKind::CollEnd { coll: idx, gen });
+    }
+
+    fn transfer_idx(&self) -> Option<usize> {
+        if !self.active_transfer {
+            return None;
+        }
+        // The transfer, if any, is the collective occupying rank 0's comm
+        // stream (all ranks occupy the same collective during transfer).
+        let idx = self.ranks[0].comm_occupied?;
+        (self.colls[idx].phase == CollPhase::Transfer).then_some(idx)
+    }
+
+    fn on_coll_end(&mut self, idx: usize, gen: u64) {
+        {
+            let c = &mut self.colls[idx];
+            if c.gen != gen || c.phase != CollPhase::Transfer {
+                return;
+            }
+            c.advance(self.now);
+            if c.work_s > 1e-9 {
+                // Numerical residue: reschedule rather than deadlock.
+                c.gen += 1;
+                let gen = c.gen;
+                let end = c.projected_end();
+                self.push(end, EvKind::CollEnd { coll: idx, gen });
+                return;
+            }
+            c.phase = CollPhase::Done;
+            c.end_time = self.now;
+        }
+        self.active_transfer = false;
+        // Emit one trace event per rank, free comm streams.
+        for rank in 0..self.ranks.len() {
+            self.account_inflight(rank);
+            self.ranks[rank].comm_occupied = None;
+            let c = &self.colls[idx];
+            let id = self.next_kernel_id;
+            self.next_kernel_id += 1;
+            let seq = self.ranks[rank].seq_comm;
+            self.ranks[rank].seq_comm += 1;
+            let name = match c.desc.op.op {
+                OpType::AllGather => "rccl_AllGather_bf16".to_string(),
+                _ => "rccl_ReduceScatter_bf16".to_string(),
+            };
+            self.events.push(TraceEvent {
+                kernel_id: id,
+                gpu: rank as u32,
+                stream: Stream::Comm,
+                name,
+                op: c.desc.op,
+                layer: c.desc.scope.layer(),
+                iter: c.desc.iter,
+                t_launch: c.t_launch[rank],
+                t_start: c.local_start[rank],
+                t_end: self.now,
+                seq,
+                fwd_link: None,
+                freq_mhz: self.ranks[rank].gov.freq_mhz,
+                flops: 0.0,
+                bytes: c.desc.bytes,
+            });
+        }
+        // Contention released: compute speeds back up.
+        for rank in 0..self.ranks.len() {
+            self.rescale_compute(rank);
+        }
+        // Wake parked compute kernels and blocked hosts.
+        let waiters = std::mem::take(&mut self.colls[idx].kernel_waiters);
+        for rank in waiters {
+            self.ranks[rank].parked = false;
+            self.try_compute(rank);
+        }
+        let hosts = std::mem::take(&mut self.colls[idx].host_waiters);
+        for rank in hosts {
+            self.wake_host(rank);
+        }
+        // Next collective may start on every rank.
+        for rank in 0..self.ranks.len() {
+            self.try_comm(rank);
+            self.wake_host(rank);
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // DVFS tick
+    // ------------------------------------------------------------------
+
+    fn on_dvfs_tick(&mut self, rank: usize) {
+        self.account_inflight(rank);
+        let wn = self.params.dvfs_window_ns;
+        let (act, t0, iter) = {
+            let r = &mut self.ranks[rank];
+            let act = WindowActivity {
+                compute_busy: (r.win.compute_busy / wn).min(1.0),
+                mfma_util: if r.win.compute_busy > 0.0 {
+                    r.win.mfma_util / r.win.compute_busy
+                } else {
+                    0.0
+                },
+                hbm_bytes: r.win.hbm_bytes,
+                comm_busy: (r.win.comm_busy / wn).min(1.0),
+            };
+            (act, r.win_start, r.cur_iter)
+        };
+        let (power, freq) = self.ranks[rank].gov.step(&act);
+        self.power.samples.push(PowerSample {
+            gpu: rank as u32,
+            t: t0,
+            window_ns: wn,
+            freq_mhz: freq,
+            mem_freq_mhz: self.ranks[rank].gov.mem_freq_mhz,
+            power_w: power,
+            iter,
+        });
+        {
+            let r = &mut self.ranks[rank];
+            r.win = WindowActivity::default();
+            r.win_start = self.now;
+        }
+        // New clocks ⇒ new compute rate.
+        self.rescale_compute(rank);
+        self.push(self.now + wn, EvKind::DvfsTick { rank });
+    }
+
+    // ------------------------------------------------------------------
+    // Main loop
+    // ------------------------------------------------------------------
+
+    pub fn run(mut self) -> SimOutput {
+        for rank in 0..self.ranks.len() {
+            self.run_host(rank);
+        }
+        while let Some(ev) = self.heap.pop() {
+            // Stop once all hosts finished and devices drained.
+            self.now = ev.t;
+            match ev.kind {
+                EvKind::TryCompute { rank } => {
+                    self.ranks[rank].compute_timer = f64::NAN;
+                    self.try_compute(rank)
+                }
+                EvKind::TryComm { rank } => {
+                    self.ranks[rank].comm_timer = f64::NAN;
+                    self.try_comm(rank)
+                }
+                EvKind::KernelEnd { rank, gen } => self.on_kernel_end(rank, gen),
+                EvKind::CollEnd { coll, gen } => self.on_coll_end(coll, gen),
+                EvKind::DvfsTick { rank } => {
+                    if self.done() {
+                        continue; // don't tick forever after the run
+                    }
+                    self.on_dvfs_tick(rank)
+                }
+            }
+            if self.done() && !self.heap.iter().any(|e| !matches!(e.kind, EvKind::DvfsTick { .. })) {
+                break;
+            }
+        }
+        self.finish()
+    }
+
+    fn done(&self) -> bool {
+        (0..self.ranks.len()).all(|r| {
+            self.ranks[r].item_idx >= self.program.items.len() && self.rank_idle(r)
+        })
+    }
+
+    fn finish(mut self) -> SimOutput {
+        self.events.sort_by(|a, b| {
+            a.t_start
+                .partial_cmp(&b.t_start)
+                .unwrap_or(Ordering::Equal)
+        });
+        self.host.span_ns = self.now;
+        let mut trace = Trace::default();
+        trace.meta.workload = self.wl.label();
+        trace.meta.fsdp = self.wl.fsdp.to_string();
+        trace.meta.num_gpus = self.node.num_gpus;
+        trace.meta.iterations = self.wl.iterations;
+        trace.meta.warmup = self.wl.warmup;
+        trace.meta.seed = self.wl.seed;
+        trace.meta.source = "sim".into();
+        trace.meta.serialized = false;
+        trace.events = self.events;
+        SimOutput {
+            trace,
+            power: self.power,
+            host: self.host,
+            alloc: self.alloc,
+            iter_bounds: self.iter_bounds,
+        }
+    }
+}

@@ -1,0 +1,184 @@
+//! Interconnect model: ring all-gather / reduce-scatter over the fully
+//! connected Infinity Fabric mesh, plus the collective rendezvous state the
+//! event loop tracks.
+//!
+//! RCCL semantics reproduced here (and why they matter to the paper):
+//!  * a collective kernel starts on a rank's comm stream as soon as that
+//!    rank dispatches it and the stream is free — it then *spins*, holding
+//!    CUs, until every rank has arrived (this is the local occupancy that
+//!    shows up as C3 overlap in traces);
+//!  * the actual transfer begins at the last arrival and completes on all
+//!    ranks at (approximately) the same time;
+//!  * while the transfer is in flight it contends with compute for HBM
+//!    bandwidth on every rank — and compute contends back, stretching the
+//!    transfer (Insight 2's "median comm scales with compute time").
+
+use crate::config::NodeSpec;
+use crate::fsdp::CollectiveDesc;
+
+/// Fixed RCCL launch/rendezvous cost per collective (ns).
+pub const COLL_FIXED_NS: f64 = 15_000.0;
+
+/// Base (uncontended) transfer time of a ring collective, ns.
+pub fn collective_base_ns(node: &NodeSpec, bytes: f64) -> f64 {
+    node.ring_collective_ns(bytes) + COLL_FIXED_NS
+}
+
+/// Lifecycle phase of one collective.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CollPhase {
+    /// Not yet reached by any rank's comm stream.
+    Pending,
+    /// Some ranks have arrived and are spinning.
+    Arriving,
+    /// All ranks arrived; transfer in flight.
+    Transfer,
+    Done,
+}
+
+/// Rendezvous + fluid-progress state of one collective instance.
+#[derive(Debug, Clone)]
+pub struct CollState {
+    pub desc: CollectiveDesc,
+    pub phase: CollPhase,
+    /// Local comm-stream occupancy start per rank (NaN = not arrived).
+    pub local_start: Vec<f64>,
+    pub arrived: u32,
+    /// Host dispatch timestamp per rank.
+    pub t_launch: Vec<f64>,
+    /// Absolute time the rank's comm engine may begin (gate time + its
+    /// static dispatch delay); NaN until the gate is first satisfied.
+    pub ready_at: Vec<f64>,
+    /// Remaining transfer work, expressed in seconds-at-base-rate.
+    pub work_s: f64,
+    /// Current progress rate (1.0 = base rate).
+    pub rate: f64,
+    pub last_update: f64,
+    /// Generation counter to invalidate stale end events.
+    pub gen: u64,
+    pub end_time: f64,
+    /// Compute kernels parked on this collective (rank ids).
+    pub kernel_waiters: Vec<usize>,
+    /// Hosts blocked on this collective (rank ids).
+    pub host_waiters: Vec<usize>,
+}
+
+impl CollState {
+    pub fn new(desc: CollectiveDesc, ranks: usize, base_ns: f64) -> Self {
+        Self {
+            desc,
+            phase: CollPhase::Pending,
+            local_start: vec![f64::NAN; ranks],
+            arrived: 0,
+            t_launch: vec![f64::NAN; ranks],
+            ready_at: vec![f64::NAN; ranks],
+            work_s: base_ns * 1e-9,
+            rate: 1.0,
+            last_update: 0.0,
+            gen: 0,
+            end_time: f64::INFINITY,
+            kernel_waiters: Vec::new(),
+            host_waiters: Vec::new(),
+        }
+    }
+
+    /// Record a rank's arrival. Returns true when this was the last rank
+    /// (transfer may begin).
+    pub fn arrive(&mut self, rank: usize, t: f64) -> bool {
+        debug_assert!(self.local_start[rank].is_nan(), "double arrival");
+        self.local_start[rank] = t;
+        self.arrived += 1;
+        self.phase = CollPhase::Arriving;
+        if self.arrived as usize == self.local_start.len() {
+            self.phase = CollPhase::Transfer;
+            self.last_update = t;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Advance fluid progress to `now` and return whether work remains.
+    pub fn advance(&mut self, now: f64) {
+        if self.phase != CollPhase::Transfer {
+            return;
+        }
+        let dt = (now - self.last_update).max(0.0) * 1e-9;
+        self.work_s = (self.work_s - dt * self.rate).max(0.0);
+        self.last_update = now;
+    }
+
+    /// Time at which the transfer finishes at the current rate.
+    pub fn projected_end(&self) -> f64 {
+        self.last_update + self.work_s / self.rate.max(1e-12) * 1e9
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.phase == CollPhase::Done
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fsdp::CommScope;
+    use crate::model::ops::{OpRef, OpType};
+
+    fn desc() -> CollectiveDesc {
+        CollectiveDesc {
+            id: 0,
+            op: OpRef::fwd(OpType::AllGather),
+            scope: CommScope::Layer(0),
+            iter: 0,
+            bytes: 1e9,
+            wait_seq: 0,
+        }
+    }
+
+    #[test]
+    fn base_duration_scales_with_bytes() {
+        let node = NodeSpec::mi300x_node();
+        let t1 = collective_base_ns(&node, 1e9);
+        let t2 = collective_base_ns(&node, 4e9);
+        assert!(t2 > t1 * 3.0 && t2 < t1 * 4.5);
+    }
+
+    #[test]
+    fn rendezvous_completes_on_last_arrival() {
+        let node = NodeSpec::mi300x_node();
+        let mut c = CollState::new(desc(), 4, collective_base_ns(&node, 1e9));
+        assert!(!c.arrive(0, 10.0));
+        assert!(!c.arrive(2, 20.0));
+        assert!(!c.arrive(3, 30.0));
+        assert_eq!(c.phase, CollPhase::Arriving);
+        assert!(c.arrive(1, 40.0));
+        assert_eq!(c.phase, CollPhase::Transfer);
+        assert_eq!(c.last_update, 40.0);
+    }
+
+    #[test]
+    fn fluid_progress_halves_at_half_rate() {
+        let node = NodeSpec::mi300x_node();
+        let base = collective_base_ns(&node, 1e9);
+        let mut c = CollState::new(desc(), 1, base);
+        c.arrive(0, 0.0);
+        // Full rate: projected end == base.
+        assert!((c.projected_end() - base).abs() < 1.0);
+        // Run half the work at rate 1, then drop to rate 0.5.
+        c.advance(base / 2.0);
+        c.rate = 0.5;
+        let end = c.projected_end();
+        assert!((end - (base / 2.0 + base)).abs() < 1.0, "end {end}");
+    }
+
+    #[test]
+    fn advance_is_monotone_and_clamps() {
+        let node = NodeSpec::mi300x_node();
+        let mut c = CollState::new(desc(), 1, collective_base_ns(&node, 1e6));
+        c.arrive(0, 0.0);
+        c.advance(1e12); // way past the end
+        assert_eq!(c.work_s, 0.0);
+        c.advance(0.0); // time going backwards must not panic or add work
+        assert_eq!(c.work_s, 0.0);
+    }
+}

@@ -1,0 +1,154 @@
+//! Trace collection front-ends — the paper's Section III-B as an API.
+//!
+//! `RuntimeProfiler` is the roctracer/PyTorch-profiler analogue: accurate
+//! concurrent timestamps, full annotations, no counters. `HardwareProfiler`
+//! is the rocprofv3 analogue: counters a few at a time, kernels serialized,
+//! timestamps useless for overlap. Both run against the simulator substrate
+//! here; the PJRT runtime path produces the same `Trace` schema through
+//! `runtime::traced` — the tool downstream cannot tell them apart.
+
+use crate::config::{ModelConfig, NodeSpec, WorkloadConfig};
+use crate::counters::{Counter, CounterTrace};
+use crate::sim::{self, EngineParams};
+use crate::trace::event::{CpuTrace, PowerTrace, Trace};
+
+/// Runtime profiling: timestamps + annotations (+ power/CPU telemetry,
+/// which the paper collects alongside via rocm-smi-style sampling).
+#[derive(Debug, Clone)]
+pub struct RuntimeProfiler {
+    pub node: NodeSpec,
+    pub params: EngineParams,
+}
+
+/// What one runtime-profiling session returns.
+#[derive(Debug)]
+pub struct RuntimeCapture {
+    pub trace: Trace,
+    pub power: PowerTrace,
+    pub cpu: CpuTrace,
+    pub iter_bounds: Vec<(f64, f64)>,
+    pub alloc: crate::fsdp::AllocStats,
+}
+
+impl RuntimeProfiler {
+    pub fn new(node: NodeSpec) -> Self {
+        Self {
+            node,
+            params: EngineParams::default(),
+        }
+    }
+
+    /// Profile one training run.
+    pub fn capture(&self, cfg: &ModelConfig, wl: &WorkloadConfig) -> RuntimeCapture {
+        let out = sim::Engine::new(&self.node, cfg, wl, self.params.clone()).run();
+        let cpu = sim::cpu_trace(
+            &self.node,
+            &out.host,
+            wl.seed,
+            &sim::HostModelParams::default(),
+        );
+        RuntimeCapture {
+            trace: out.trace,
+            power: out.power,
+            cpu,
+            iter_bounds: out.iter_bounds,
+            alloc: out.alloc,
+        }
+    }
+}
+
+/// Hardware profiling: performance counters, collected `per_pass` at a
+/// time, with kernels serialized (Section III-B2).
+#[derive(Debug, Clone)]
+pub struct HardwareProfiler {
+    pub node: NodeSpec,
+    /// How many counters one pass may collect (paper: 2–3).
+    pub per_pass: usize,
+}
+
+impl HardwareProfiler {
+    pub fn new(node: NodeSpec) -> Self {
+        Self { node, per_pass: 3 }
+    }
+
+    /// Collect `counters` for every kernel of the workload, re-running the
+    /// workload once per pass.
+    pub fn capture(
+        &self,
+        cfg: &ModelConfig,
+        wl: &WorkloadConfig,
+        counters: &[Counter],
+    ) -> CounterTrace {
+        sim::collect_counters(&self.node, cfg, wl, counters, self.per_pass)
+    }
+
+    /// Number of serialized re-runs `capture` will perform.
+    pub fn passes(&self, counters: &[Counter]) -> usize {
+        counters.len().div_ceil(self.per_pass.max(1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::FsdpVersion;
+    use crate::sim::align_key;
+    use crate::trace::event::Stream;
+
+    fn setup() -> (ModelConfig, WorkloadConfig) {
+        let mut cfg = ModelConfig::llama3_8b();
+        cfg.layers = 2;
+        let mut wl = WorkloadConfig::new(1, 4096, FsdpVersion::V2);
+        wl.iterations = 1;
+        wl.warmup = 0;
+        (cfg, wl)
+    }
+
+    #[test]
+    fn runtime_capture_has_annotations_and_telemetry() {
+        let (cfg, wl) = setup();
+        let cap = RuntimeProfiler::new(NodeSpec::mi300x_node()).capture(&cfg, &wl);
+        assert!(!cap.trace.events.is_empty());
+        assert!(!cap.power.samples.is_empty());
+        assert!(!cap.cpu.samples.is_empty());
+        assert!(cap.trace.events.iter().any(|e| e.layer.is_some()));
+        assert_eq!(cap.trace.meta.source, "sim");
+        assert!(!cap.trace.meta.serialized);
+    }
+
+    #[test]
+    fn hardware_capture_covers_every_kernel() {
+        let (cfg, wl) = setup();
+        let hw = HardwareProfiler::new(NodeSpec::mi300x_node());
+        let counters = hw.capture(&cfg, &wl, &Counter::ALL);
+        let cap = RuntimeProfiler::new(NodeSpec::mi300x_node()).capture(&cfg, &wl);
+        for e in cap.trace.events.iter().filter(|e| e.gpu == 0) {
+            let v = counters.get(0, align_key(e.stream, e.seq));
+            assert!(v.is_some(), "no counters for {} seq {}", e.name, e.seq);
+        }
+    }
+
+    #[test]
+    fn pass_count_follows_per_pass_limit() {
+        let hw = HardwareProfiler::new(NodeSpec::mi300x_node());
+        assert_eq!(hw.passes(&Counter::ALL), 3); // 7 counters / 3 per pass
+        let hw2 = HardwareProfiler {
+            per_pass: 2,
+            ..hw.clone()
+        };
+        assert_eq!(hw2.passes(&Counter::ALL), 4);
+    }
+
+    #[test]
+    fn runtime_trace_has_concurrent_streams() {
+        // The runtime profiler sees overlap; that's its whole point.
+        let (cfg, wl) = setup();
+        let cap = RuntimeProfiler::new(NodeSpec::mi300x_node()).capture(&cfg, &wl);
+        let has_comm = cap
+            .trace
+            .events
+            .iter()
+            .any(|e| e.stream == Stream::Comm);
+        assert!(has_comm);
+    }
+}

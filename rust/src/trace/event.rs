@@ -1,0 +1,255 @@
+//! Trace schema: what the profilers record.
+//!
+//! Mirrors the paper's Section III-B: runtime profiling records accurate
+//! launch/start/end timestamps of concurrently-executing kernels plus
+//! annotations (op, layer, phase, iteration, fwd→bwd mapping); hardware
+//! profiling records counters but serializes kernels, so its timestamps are
+//! not valid for overlap analysis — alignment joins the two.
+
+use crate::model::ops::{OpKind, OpRef, Phase};
+use std::fmt;
+
+/// GPU execution stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Stream {
+    Compute,
+    Comm,
+}
+
+impl fmt::Display for Stream {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Stream::Compute => write!(f, "compute"),
+            Stream::Comm => write!(f, "comm"),
+        }
+    }
+}
+
+/// One kernel execution, with the full annotation set.
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    /// Unique id within the trace.
+    pub kernel_id: u64,
+    pub gpu: u32,
+    pub stream: Stream,
+    /// Kernel symbol name.
+    pub name: String,
+    /// Operation annotation (paper Fig. 1 taxonomy + phase).
+    pub op: OpRef,
+    /// Decoder layer, when applicable.
+    pub layer: Option<u32>,
+    /// Training iteration.
+    pub iter: u32,
+    /// Host dispatch timestamp t_l (ns).
+    pub t_launch: f64,
+    /// Kernel start t_ks (ns).
+    pub t_start: f64,
+    /// Kernel end t_ke (ns).
+    pub t_end: f64,
+    /// Dispatch sequence number within (gpu, stream) — the alignment key.
+    pub seq: u64,
+    /// For backward kernels: the kernel_id of the forward counterpart
+    /// ("backward kernels are spawned from their forward counterparts").
+    pub fwd_link: Option<u64>,
+    /// Engine clock at kernel start, MHz (what rocprof would derive).
+    pub freq_mhz: f64,
+    /// Theoretical flops of this kernel instance (annotation from the
+    /// framework, F_gemm in Eq. 6).
+    pub flops: f64,
+    /// HBM bytes moved.
+    pub bytes: f64,
+}
+
+impl TraceEvent {
+    pub fn duration(&self) -> f64 {
+        self.t_end - self.t_start
+    }
+
+    pub fn kind(&self) -> OpKind {
+        self.op.op.kind()
+    }
+
+    pub fn phase(&self) -> Phase {
+        self.op.phase
+    }
+
+    pub fn is_comm(&self) -> bool {
+        self.stream == Stream::Comm
+    }
+}
+
+/// Trace-wide metadata.
+#[derive(Debug, Clone, Default)]
+pub struct TraceMeta {
+    pub workload: String,
+    pub fsdp: String,
+    pub model: String,
+    pub num_gpus: u32,
+    pub iterations: u32,
+    pub warmup: u32,
+    pub seed: u64,
+    /// "sim" or "pjrt" — which collector produced this trace.
+    pub source: String,
+    /// Kernels were serialized (hardware-profiling pass).
+    pub serialized: bool,
+}
+
+/// A full runtime-profiling trace.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    pub meta: TraceMeta,
+    pub events: Vec<TraceEvent>,
+}
+
+impl Trace {
+    pub fn sampled_events(&self) -> impl Iterator<Item = &TraceEvent> {
+        let warmup = self.meta.warmup;
+        self.events.iter().filter(move |e| e.iter >= warmup)
+    }
+
+    /// Events of one GPU in (stream, seq) order.
+    pub fn gpu_events(&self, gpu: u32) -> Vec<&TraceEvent> {
+        let mut v: Vec<&TraceEvent> =
+            self.events.iter().filter(|e| e.gpu == gpu).collect();
+        v.sort_by(|a, b| {
+            (a.stream, a.seq)
+                .partial_cmp(&(b.stream, b.seq))
+                .unwrap()
+        });
+        v
+    }
+
+    pub fn span_ns(&self) -> f64 {
+        let start = self
+            .events
+            .iter()
+            .map(|e| e.t_start)
+            .fold(f64::INFINITY, f64::min);
+        let end = self
+            .events
+            .iter()
+            .map(|e| e.t_end)
+            .fold(f64::NEG_INFINITY, f64::max);
+        if end > start {
+            end - start
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Per-window frequency/power sample of one GPU (Fig. 14's data).
+#[derive(Debug, Clone, Copy)]
+pub struct PowerSample {
+    pub gpu: u32,
+    /// Window start, ns.
+    pub t: f64,
+    /// Window length, ns.
+    pub window_ns: f64,
+    pub freq_mhz: f64,
+    pub mem_freq_mhz: f64,
+    pub power_w: f64,
+    pub iter: u32,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct PowerTrace {
+    pub samples: Vec<PowerSample>,
+}
+
+/// Per-window logical-core utilization sample (Fig. 13's data).
+#[derive(Debug, Clone)]
+pub struct CpuSample {
+    /// Window start, ns.
+    pub t: f64,
+    /// Utilization [0,100] per logical core (sparse: only non-zero cores).
+    pub core_util: Vec<(u32, f64)>,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct CpuTrace {
+    pub logical_cores: u32,
+    pub smt: u32,
+    pub samples: Vec<CpuSample>,
+}
+
+impl CpuTrace {
+    /// Map a logical core id to its physical core (Linux-style: logical
+    /// core p and p + physical_count share a physical core).
+    pub fn physical_of(&self, logical: u32) -> u32 {
+        logical % (self.logical_cores / self.smt)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ops::{OpRef, OpType};
+
+    fn ev(id: u64, gpu: u32, stream: Stream, seq: u64, t0: f64, t1: f64) -> TraceEvent {
+        TraceEvent {
+            kernel_id: id,
+            gpu,
+            stream,
+            name: "k".into(),
+            op: OpRef::fwd(OpType::AttnN),
+            layer: Some(0),
+            iter: 0,
+            t_launch: t0 - 1.0,
+            t_start: t0,
+            t_end: t1,
+            seq,
+            fwd_link: None,
+            freq_mhz: 2100.0,
+            flops: 0.0,
+            bytes: 0.0,
+        }
+    }
+
+    #[test]
+    fn duration_and_span() {
+        let mut t = Trace::default();
+        t.events.push(ev(0, 0, Stream::Compute, 0, 10.0, 20.0));
+        t.events.push(ev(1, 1, Stream::Compute, 0, 15.0, 40.0));
+        assert_eq!(t.events[0].duration(), 10.0);
+        assert_eq!(t.span_ns(), 30.0);
+    }
+
+    #[test]
+    fn gpu_events_sorted_by_stream_then_seq() {
+        let mut t = Trace::default();
+        t.events.push(ev(0, 0, Stream::Comm, 0, 0.0, 1.0));
+        t.events.push(ev(1, 0, Stream::Compute, 1, 0.0, 1.0));
+        t.events.push(ev(2, 0, Stream::Compute, 0, 0.0, 1.0));
+        let v = t.gpu_events(0);
+        assert_eq!(v[0].kernel_id, 2);
+        assert_eq!(v[1].kernel_id, 1);
+        assert_eq!(v[2].kernel_id, 0);
+    }
+
+    #[test]
+    fn sampled_events_respect_warmup() {
+        let mut t = Trace::default();
+        t.meta.warmup = 1;
+        let mut e0 = ev(0, 0, Stream::Compute, 0, 0.0, 1.0);
+        e0.iter = 0;
+        let mut e1 = ev(1, 0, Stream::Compute, 1, 2.0, 3.0);
+        e1.iter = 1;
+        t.events.push(e0);
+        t.events.push(e1);
+        assert_eq!(t.sampled_events().count(), 1);
+    }
+
+    #[test]
+    fn smt_mapping() {
+        let c = CpuTrace {
+            logical_cores: 384,
+            smt: 2,
+            samples: vec![],
+        };
+        assert_eq!(c.physical_of(0), 0);
+        assert_eq!(c.physical_of(192), 0);
+        assert_eq!(c.physical_of(191), 191);
+        assert_eq!(c.physical_of(383), 191);
+    }
+}

@@ -1,0 +1,16 @@
+//! Trace schema and collectors — the paper's Section III-B.
+//!
+//! [`event`] defines the schema (timestamped annotated kernels, power and
+//! CPU samples); [`collect`] wraps the simulator and the PJRT runtime
+//! behind the same two profiler interfaces the paper uses (runtime
+//! profiling vs hardware profiling); [`chrome`] round-trips traces through
+//! chrome://tracing JSON so they can be inspected in Perfetto.
+
+pub mod chrome;
+pub mod collect;
+pub mod event;
+
+pub use event::{
+    CpuSample, CpuTrace, PowerSample, PowerTrace, Stream, Trace, TraceEvent,
+    TraceMeta,
+};

@@ -1,0 +1,230 @@
+//! ASCII chart rendering for terminal reports.
+//!
+//! Chopper's visualization layer has two backends: SVG (util::svg) for the
+//! report files, and these ASCII renderers so `chopper figure N` is useful
+//! over ssh — the way the paper's authors drive rocprof output through
+//! notebooks, we drive traces through the terminal.
+
+use super::fmt;
+
+const BLOCKS: &[char] = &[' ', '▏', '▎', '▍', '▌', '▋', '▊', '▉', '█'];
+
+/// Horizontal bar chart. `rows` are (label, value); bars are scaled to
+/// `width` columns against max(values) unless `max_value` is given.
+pub fn bar_chart(title: &str, rows: &[(String, f64)], width: usize,
+                 max_value: Option<f64>) -> String {
+    let mut out = String::new();
+    out.push_str(title);
+    out.push('\n');
+    if rows.is_empty() {
+        out.push_str("  (no data)\n");
+        return out;
+    }
+    let maxv = max_value
+        .unwrap_or_else(|| rows.iter().map(|r| r.1).fold(f64::MIN, f64::max))
+        .max(1e-12);
+    let label_w = rows.iter().map(|r| r.0.len()).max().unwrap_or(0);
+    for (label, value) in rows {
+        let frac = (value / maxv).clamp(0.0, 1.0);
+        out.push_str(&format!(
+            "  {} {} {:.4}\n",
+            fmt::pad(label, label_w),
+            solid_bar(frac, width),
+            value
+        ));
+    }
+    out
+}
+
+/// A stacked horizontal bar: segments are (name, value); the legend maps
+/// segment glyphs to names. Used for the Fig. 4 duration breakdowns.
+pub fn stacked_bar(label: &str, segments: &[(String, f64)], total_width: usize,
+                   scale_max: f64) -> String {
+    const GLYPHS: &[char] = &['█', '▓', '▒', '░', '◆', '●', '○', '■'];
+    let total: f64 = segments.iter().map(|s| s.1).sum();
+    let mut bar = String::new();
+    let scale = scale_max.max(1e-12);
+    for (i, (_, v)) in segments.iter().enumerate() {
+        let cols = ((v / scale) * total_width as f64).round() as usize;
+        let g = GLYPHS[i % GLYPHS.len()];
+        for _ in 0..cols {
+            bar.push(g);
+        }
+    }
+    format!("  {label} |{bar}| total={total:.4}\n")
+}
+
+/// Unicode sub-character horizontal bar of fractional `frac` over `width`.
+fn solid_bar(frac: f64, width: usize) -> String {
+    let cells = frac * width as f64;
+    let full = cells.floor() as usize;
+    let rem = cells - full as f64;
+    let mut s = String::new();
+    for _ in 0..full {
+        s.push('█');
+    }
+    if full < width {
+        let idx = (rem * 8.0).round() as usize;
+        s.push(BLOCKS[idx.min(8)]);
+        for _ in full + 1..width {
+            s.push(' ');
+        }
+    }
+    s
+}
+
+/// Box/fill row for quantile plots (Figs. 7/9): renders min..max as light
+/// fill, q25..q75 as dark fill, median as a marker, on a [lo, hi] axis.
+pub fn quantile_row(label: &str, min: f64, q25: f64, med: f64, q75: f64, max: f64,
+                    lo: f64, hi: f64, width: usize) -> String {
+    let pos = |x: f64| -> usize {
+        (((x - lo) / (hi - lo).max(1e-12)) * (width - 1) as f64)
+            .round()
+            .clamp(0.0, (width - 1) as f64) as usize
+    };
+    let mut row = vec![' '; width];
+    for cell in row.iter_mut().take(pos(max) + 1).skip(pos(min)) {
+        *cell = '░';
+    }
+    for cell in row.iter_mut().take(pos(q75) + 1).skip(pos(q25)) {
+        *cell = '▓';
+    }
+    row[pos(med)] = '┃';
+    format!("  {label} |{}|\n", row.iter().collect::<String>())
+}
+
+/// Render an empirical CDF as a fixed-size grid of braille-ish dots.
+pub fn cdf_plot(title: &str, series: &[(String, Vec<f64>)], width: usize,
+                height: usize) -> String {
+    let mut out = format!("{title}\n");
+    let all: Vec<f64> = series.iter().flat_map(|s| s.1.iter().copied()).collect();
+    if all.is_empty() {
+        out.push_str("  (no data)\n");
+        return out;
+    }
+    let lo = all.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = all.iter().cloned().fold(f64::NEG_INFINITY, f64::max).max(lo + 1e-12);
+    let marks = ['*', '+', 'o', 'x', '#', '@', '%', '&'];
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, (_, xs)) in series.iter().enumerate() {
+        let mut v = xs.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = v.len();
+        for (i, x) in v.iter().enumerate() {
+            let p = (i + 1) as f64 / n as f64;
+            let col = (((x - lo) / (hi - lo)) * (width - 1) as f64) as usize;
+            let row = ((1.0 - p) * (height - 1) as f64) as usize;
+            grid[row.min(height - 1)][col.min(width - 1)] = marks[si % marks.len()];
+        }
+    }
+    for (ri, row) in grid.iter().enumerate() {
+        let y = 1.0 - ri as f64 / (height - 1) as f64;
+        out.push_str(&format!("  {y:4.2} |{}|\n", row.iter().collect::<String>()));
+    }
+    out.push_str(&format!("       {lo:<12.4}{:>width$.4}\n", hi, width = width - 11));
+    for (si, (name, _)) in series.iter().enumerate() {
+        out.push_str(&format!("       {} = {name}\n", marks[si % marks.len()]));
+    }
+    out
+}
+
+/// Heatmap over a [rows][cols] matrix of values in [0,1] (Fig. 13 SMT map).
+pub fn heatmap(title: &str, matrix: &[Vec<f64>]) -> String {
+    const SHADES: &[char] = &[' ', '·', '░', '▒', '▓', '█'];
+    let mut out = format!("{title}\n");
+    for row in matrix {
+        out.push_str("  |");
+        for &v in row {
+            let idx = (v.clamp(0.0, 1.0) * (SHADES.len() - 1) as f64).round() as usize;
+            out.push(SHADES[idx]);
+        }
+        out.push_str("|\n");
+    }
+    out
+}
+
+/// Simple fixed-width table.
+pub fn table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let ncol = headers.len();
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate().take(ncol) {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let mut out = String::new();
+    let mut line = String::from("  ");
+    for (h, w) in headers.iter().zip(&widths) {
+        line.push_str(&fmt::pad(h, w + 2));
+    }
+    out.push_str(line.trim_end());
+    out.push('\n');
+    out.push_str("  ");
+    out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * ncol));
+    out.push('\n');
+    for row in rows {
+        let mut line = String::from("  ");
+        for (c, w) in row.iter().zip(&widths) {
+            line.push_str(&fmt::pad(c, w + 2));
+        }
+        out.push_str(line.trim_end());
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bar_chart_scales_to_max() {
+        let rows = vec![("a".into(), 1.0), ("bb".into(), 2.0)];
+        let s = bar_chart("t", &rows, 10, None);
+        assert!(s.contains("t\n"));
+        assert!(s.contains("bb"));
+        // The max row should have a full-width bar.
+        let lines: Vec<&str> = s.lines().collect();
+        assert!(lines[2].matches('█').count() >= 10);
+    }
+
+    #[test]
+    fn bar_chart_empty() {
+        assert!(bar_chart("t", &[], 10, None).contains("(no data)"));
+    }
+
+    #[test]
+    fn quantile_row_orders_glyphs() {
+        let s = quantile_row("x", 0.0, 0.25, 0.5, 0.75, 1.0, 0.0, 1.0, 41);
+        assert!(s.contains('░'));
+        assert!(s.contains('▓'));
+        assert!(s.contains('┃'));
+    }
+
+    #[test]
+    fn table_aligns() {
+        let t = table(&["op", "dur"], &[vec!["attn_fa".into(), "1.0".into()]]);
+        assert!(t.contains("attn_fa"));
+        assert!(t.contains("op"));
+    }
+
+    #[test]
+    fn heatmap_renders_all_rows() {
+        let m = vec![vec![0.0, 0.5, 1.0], vec![1.0, 0.0, 0.2]];
+        let h = heatmap("smt", &m);
+        assert_eq!(h.lines().count(), 3);
+    }
+
+    #[test]
+    fn cdf_plot_contains_series_marks() {
+        let s = cdf_plot(
+            "cdf",
+            &[("g0".into(), vec![1.0, 2.0, 3.0]), ("g1".into(), vec![2.0, 4.0])],
+            20,
+            5,
+        );
+        assert!(s.contains('*'));
+        assert!(s.contains('+'));
+        assert!(s.contains("g0"));
+    }
+}

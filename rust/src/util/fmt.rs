@@ -1,0 +1,105 @@
+//! Human-readable formatting for durations, rates and percentages.
+
+/// Format nanoseconds with an adaptive unit (ns / µs / ms / s).
+pub fn dur_ns(ns: f64) -> String {
+    let abs = ns.abs();
+    if abs < 1e3 {
+        format!("{ns:.0} ns")
+    } else if abs < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if abs < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Format a ratio as a percentage with one decimal.
+pub fn pct(x: f64) -> String {
+    format!("{:.1}%", x * 100.0)
+}
+
+/// Engineering notation for counts (K/M/G/T).
+pub fn eng(x: f64) -> String {
+    let abs = x.abs();
+    if abs < 1e3 {
+        format!("{x:.0}")
+    } else if abs < 1e6 {
+        format!("{:.2}K", x / 1e3)
+    } else if abs < 1e9 {
+        format!("{:.2}M", x / 1e6)
+    } else if abs < 1e12 {
+        format!("{:.2}G", x / 1e9)
+    } else {
+        format!("{:.2}T", x / 1e12)
+    }
+}
+
+/// Bytes with binary units.
+pub fn bytes(x: f64) -> String {
+    let abs = x.abs();
+    if abs < 1024.0 {
+        format!("{x:.0} B")
+    } else if abs < 1024.0 * 1024.0 {
+        format!("{:.2} KiB", x / 1024.0)
+    } else if abs < 1024.0 * 1024.0 * 1024.0 {
+        format!("{:.2} MiB", x / (1024.0 * 1024.0))
+    } else {
+        format!("{:.2} GiB", x / (1024.0 * 1024.0 * 1024.0))
+    }
+}
+
+/// Fixed-width left padding helper for tables.
+pub fn pad(s: &str, width: usize) -> String {
+    if s.len() >= width {
+        s.to_string()
+    } else {
+        format!("{s}{}", " ".repeat(width - s.len()))
+    }
+}
+
+pub fn pad_left(s: &str, width: usize) -> String {
+    if s.len() >= width {
+        s.to_string()
+    } else {
+        format!("{}{s}", " ".repeat(width - s.len()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn duration_units() {
+        assert_eq!(dur_ns(500.0), "500 ns");
+        assert_eq!(dur_ns(1500.0), "1.50 µs");
+        assert_eq!(dur_ns(2.5e6), "2.50 ms");
+        assert_eq!(dur_ns(3.0e9), "3.000 s");
+    }
+
+    #[test]
+    fn pct_format() {
+        assert_eq!(pct(0.256), "25.6%");
+    }
+
+    #[test]
+    fn eng_format() {
+        assert_eq!(eng(950.0), "950");
+        assert_eq!(eng(1.3e15), "1300.00T");
+        assert_eq!(eng(2.0e6), "2.00M");
+    }
+
+    #[test]
+    fn bytes_format() {
+        assert_eq!(bytes(512.0), "512 B");
+        assert_eq!(bytes(2048.0), "2.00 KiB");
+    }
+
+    #[test]
+    fn padding() {
+        assert_eq!(pad("ab", 4), "ab  ");
+        assert_eq!(pad_left("ab", 4), "  ab");
+        assert_eq!(pad("abcdef", 4), "abcdef");
+    }
+}

@@ -1,0 +1,11 @@
+//! Shared utilities: deterministic PRNG, statistics, JSON, chart rendering
+//! and formatting. These replace crates that are unavailable in the offline
+//! build environment (see DESIGN.md substitution table) and keep the
+//! simulator bit-reproducible.
+
+pub mod ascii;
+pub mod fmt;
+pub mod json;
+pub mod prng;
+pub mod stats;
+pub mod svg;

@@ -1,0 +1,218 @@
+//! Deterministic PRNG for the simulator and the property-test kit.
+//!
+//! The `rand` crate is not vendored in this environment (see DESIGN.md
+//! substitution table); more importantly the simulator *must* be exactly
+//! reproducible across runs for trace-alignment tests, so we ship our own
+//! SplitMix64 (seeding) + xoshiro256** (bulk) generators. Algorithms by
+//! Blackman & Vigna (public domain reference implementations).
+
+/// SplitMix64: used to expand a single u64 seed into xoshiro state and to
+/// derive independent substreams (one per GPU, per subsystem) that stay
+/// stable when unrelated code adds draws.
+#[derive(Debug, Clone, Copy)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9e3779b97f4a7c15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+        z ^ (z >> 31)
+    }
+}
+
+/// xoshiro256**: fast, high-quality, 256-bit state.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+    /// Cached second normal from Box-Muller.
+    gauss_spare: Option<f64>,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        Self {
+            s: [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()],
+            gauss_spare: None,
+        }
+    }
+
+    /// Derive an independent substream keyed by a label. Stable: adding
+    /// draws to the parent does not perturb children.
+    pub fn substream(seed: u64, label: &str) -> Self {
+        let mut h = 0xcbf29ce484222325u64; // FNV-1a
+        for b in label.as_bytes() {
+            h ^= *b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        Self::new(seed ^ h)
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1]
+            .wrapping_mul(5)
+            .rotate_left(7)
+            .wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Uniform integer in [lo, hi) via Lemire-style rejection-free mapping
+    /// (bias negligible for our ranges; documented).
+    pub fn range_u64(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(hi > lo, "empty range");
+        let span = hi - lo;
+        lo + (((self.next_u64() as u128 * span as u128) >> 64) as u64)
+    }
+
+    pub fn range_usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.range_u64(lo as u64, hi as u64) as usize
+    }
+
+    pub fn bool(&mut self, p_true: f64) -> bool {
+        self.f64() < p_true
+    }
+
+    /// Standard normal via Box-Muller (cached pair).
+    pub fn gauss(&mut self) -> f64 {
+        if let Some(v) = self.gauss_spare.take() {
+            return v;
+        }
+        // Avoid ln(0).
+        let u1 = (1.0 - self.f64()).max(1e-300);
+        let u2 = self.f64();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let theta = 2.0 * std::f64::consts::PI * u2;
+        self.gauss_spare = Some(r * theta.sin());
+        r * theta.cos()
+    }
+
+    /// Normal with mean/std.
+    pub fn normal(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.gauss()
+    }
+
+    /// Log-normal-ish positive jitter around 1.0: exp(N(0, sigma)).
+    /// Used for kernel-duration noise (durations can never go negative).
+    pub fn jitter(&mut self, sigma: f64) -> f64 {
+        (self.gauss() * sigma).exp()
+    }
+
+    pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        assert!(!items.is_empty());
+        &items[self.range_usize(0, items.len())]
+    }
+
+    pub fn shuffle<T>(&mut self, items: &mut [T]) {
+        // Fisher-Yates.
+        for i in (1..items.len()).rev() {
+            let j = self.range_usize(0, i + 1);
+            items.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn substreams_differ_and_are_stable() {
+        let mut a = Rng::substream(1, "gpu0");
+        let mut b = Rng::substream(1, "gpu1");
+        let mut a2 = Rng::substream(1, "gpu0");
+        assert_ne!(a.next_u64(), b.next_u64());
+        let _ = a2.next_u64();
+        // a already consumed one draw; a2 should agree on the first draw.
+        let mut a3 = Rng::substream(1, "gpu0");
+        assert_eq!(a3.next_u64(), {
+            let mut fresh = Rng::substream(1, "gpu0");
+            fresh.next_u64()
+        });
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn range_u64_bounds() {
+        let mut r = Rng::new(9);
+        for _ in 0..10_000 {
+            let x = r.range_u64(10, 20);
+            assert!((10..20).contains(&x));
+        }
+    }
+
+    #[test]
+    fn gauss_moments_roughly_standard() {
+        let mut r = Rng::new(11);
+        let n = 200_000;
+        let (mut sum, mut sum2) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = r.gauss();
+            sum += x;
+            sum2 += x * x;
+        }
+        let mean = sum / n as f64;
+        let var = sum2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.01, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.02, "var {var}");
+    }
+
+    #[test]
+    fn jitter_always_positive() {
+        let mut r = Rng::new(13);
+        for _ in 0..10_000 {
+            assert!(r.jitter(0.3) > 0.0);
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(17);
+        let mut v: Vec<u32> = (0..50).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,306 @@
+//! Statistics helpers used throughout the trace analysis: quantiles,
+//! correlation, CDFs, histograms. All operate on `f64` slices; `NaN`s are
+//! rejected by debug assertions (the analysis layer filters them upstream).
+
+/// Arithmetic mean; 0.0 for an empty slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation; 0.0 for fewer than 2 points.
+pub fn std(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Linear-interpolation quantile (type-7, numpy default). `q` in [0, 1].
+/// Sorts a copy; use `quantile_sorted` on pre-sorted data in hot paths.
+pub fn quantile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).expect("NaN in quantile input"));
+    quantile_sorted(&v, q)
+}
+
+/// Quantile on pre-sorted data.
+pub fn quantile_sorted(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let q = q.clamp(0.0, 1.0);
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = pos - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
+pub fn median(xs: &[f64]) -> f64 {
+    quantile(xs, 0.5)
+}
+
+pub fn min(xs: &[f64]) -> f64 {
+    xs.iter().cloned().fold(f64::INFINITY, f64::min)
+}
+
+pub fn max(xs: &[f64]) -> f64 {
+    xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+}
+
+/// Pearson correlation coefficient. Returns `None` when either side has
+/// (near-)zero variance — the paper reports these as "nan" in Fig. 7 for
+/// constant-overlap operations, and we preserve that semantics.
+pub fn pearson(xs: &[f64], ys: &[f64]) -> Option<f64> {
+    assert_eq!(xs.len(), ys.len(), "pearson: length mismatch");
+    if xs.len() < 2 {
+        return None;
+    }
+    let mx = mean(xs);
+    let my = mean(ys);
+    let (mut sxy, mut sxx, mut syy) = (0.0, 0.0, 0.0);
+    for (x, y) in xs.iter().zip(ys) {
+        let dx = x - mx;
+        let dy = y - my;
+        sxy += dx * dy;
+        sxx += dx * dx;
+        syy += dy * dy;
+    }
+    let denom = (sxx * syy).sqrt();
+    if denom < 1e-12 * xs.len() as f64 {
+        return None; // constant series -> undefined correlation
+    }
+    Some(sxy / denom)
+}
+
+/// Empirical CDF: returns (sorted values, cumulative probability in (0,1]).
+pub fn ecdf(xs: &[f64]) -> (Vec<f64>, Vec<f64>) {
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).expect("NaN in ecdf input"));
+    let n = v.len();
+    let probs = (1..=n).map(|i| i as f64 / n as f64).collect();
+    (v, probs)
+}
+
+/// Value of the empirical CDF's inverse at probability `p` — i.e. the value
+/// below which a fraction `p` of the data falls (used for the D_50% / D_0%
+/// overlap-overhead extraction of Eq. 9).
+pub fn ecdf_value_at(xs: &[f64], p: f64) -> f64 {
+    quantile(xs, p)
+}
+
+/// Five-number-style summary used by the fill plots in Figs. 7 and 9.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub min: f64,
+    pub q25: f64,
+    pub median: f64,
+    pub q75: f64,
+    pub max: f64,
+    pub mean: f64,
+    pub std: f64,
+    pub n: usize,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Self {
+        if xs.is_empty() {
+            return Self {
+                min: 0.0,
+                q25: 0.0,
+                median: 0.0,
+                q75: 0.0,
+                max: 0.0,
+                mean: 0.0,
+                std: 0.0,
+                n: 0,
+            };
+        }
+        let mut v = xs.to_vec();
+        v.sort_by(|a, b| a.partial_cmp(b).expect("NaN in summary input"));
+        Self {
+            min: v[0],
+            q25: quantile_sorted(&v, 0.25),
+            median: quantile_sorted(&v, 0.5),
+            q75: quantile_sorted(&v, 0.75),
+            max: v[v.len() - 1],
+            mean: mean(&v),
+            std: std(&v),
+            n: v.len(),
+        }
+    }
+}
+
+/// Fixed-width histogram over [lo, hi) with `bins` buckets; values outside
+/// are clamped into the edge buckets.
+pub fn histogram(xs: &[f64], lo: f64, hi: f64, bins: usize) -> Vec<usize> {
+    assert!(bins > 0 && hi > lo);
+    let mut h = vec![0usize; bins];
+    let w = (hi - lo) / bins as f64;
+    for &x in xs {
+        let idx = (((x - lo) / w) as i64).clamp(0, bins as i64 - 1) as usize;
+        h[idx] += 1;
+    }
+    h
+}
+
+/// Exponential moving average state (used by the DVFS governor).
+#[derive(Debug, Clone, Copy)]
+pub struct Ema {
+    pub alpha: f64,
+    pub value: Option<f64>,
+}
+
+impl Ema {
+    pub fn new(alpha: f64) -> Self {
+        Self { alpha, value: None }
+    }
+
+    pub fn update(&mut self, x: f64) -> f64 {
+        let v = match self.value {
+            None => x,
+            Some(prev) => prev + self.alpha * (x - prev),
+        };
+        self.value = Some(v);
+        v
+    }
+
+    pub fn get(&self) -> f64 {
+        self.value.unwrap_or(0.0)
+    }
+}
+
+/// Online mean/variance (Welford) — used for window power statistics.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_median_basic() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(mean(&xs), 2.5);
+        assert_eq!(median(&xs), 2.5);
+        assert_eq!(median(&[1.0, 2.0, 9.0]), 2.0);
+    }
+
+    #[test]
+    fn quantile_interpolates() {
+        let xs = [0.0, 10.0];
+        assert_eq!(quantile(&xs, 0.25), 2.5);
+        assert_eq!(quantile(&xs, 0.0), 0.0);
+        assert_eq!(quantile(&xs, 1.0), 10.0);
+    }
+
+    #[test]
+    fn quantile_empty_is_zero() {
+        assert_eq!(quantile(&[], 0.5), 0.0);
+        assert_eq!(mean(&[]), 0.0);
+    }
+
+    #[test]
+    fn pearson_perfect_correlation() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        let ys = [2.0, 4.0, 6.0, 8.0];
+        let r = pearson(&xs, &ys).unwrap();
+        assert!((r - 1.0).abs() < 1e-12);
+        let neg: Vec<f64> = ys.iter().map(|y| -y).collect();
+        assert!((pearson(&xs, &neg).unwrap() + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pearson_constant_is_none() {
+        // Matches the paper's "nan" correlations for constant overlap.
+        assert_eq!(pearson(&[1.0, 1.0, 1.0], &[1.0, 2.0, 3.0]), None);
+    }
+
+    #[test]
+    fn ecdf_monotone() {
+        let (vals, probs) = ecdf(&[3.0, 1.0, 2.0]);
+        assert_eq!(vals, vec![1.0, 2.0, 3.0]);
+        assert_eq!(probs.last().copied(), Some(1.0));
+        assert!(probs.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn summary_fields() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 100.0]);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 100.0);
+        assert_eq!(s.median, 3.0);
+        assert_eq!(s.n, 5);
+        assert!(s.std > 0.0);
+    }
+
+    #[test]
+    fn histogram_clamps_outliers() {
+        let h = histogram(&[-5.0, 0.1, 0.9, 99.0], 0.0, 1.0, 2);
+        assert_eq!(h, vec![2, 2]);
+    }
+
+    #[test]
+    fn welford_matches_naive() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        let mut w = Welford::default();
+        for &x in &xs {
+            w.push(x);
+        }
+        assert!((w.mean() - 5.0).abs() < 1e-12);
+        assert!((w.std() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ema_converges() {
+        let mut e = Ema::new(0.5);
+        for _ in 0..50 {
+            e.update(10.0);
+        }
+        assert!((e.get() - 10.0).abs() < 1e-6);
+    }
+}

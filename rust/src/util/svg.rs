@@ -1,0 +1,322 @@
+//! Minimal SVG chart emitter for the report files (reports/*.svg).
+//!
+//! Supports exactly the chart families the paper's figures need: grouped
+//! bars (Fig. 4, 11, 14), scatter (Fig. 7, 9), step-CDF lines (Fig. 8),
+//! stacked bars (Fig. 15) and heatmaps (Fig. 13). No external deps.
+
+use std::fmt::Write as _;
+
+pub const PALETTE: &[&str] = &[
+    "#4e79a7", "#f28e2b", "#e15759", "#76b7b2", "#59a14f", "#edc948",
+    "#b07aa1", "#ff9da7", "#9c755f", "#bab0ac",
+];
+
+pub struct Svg {
+    width: f64,
+    height: f64,
+    body: String,
+}
+
+impl Svg {
+    pub fn new(width: f64, height: f64) -> Self {
+        Self {
+            width,
+            height,
+            body: String::new(),
+        }
+    }
+
+    pub fn rect(&mut self, x: f64, y: f64, w: f64, h: f64, fill: &str) {
+        let _ = write!(
+            self.body,
+            r#"<rect x="{x:.1}" y="{y:.1}" width="{w:.1}" height="{h:.1}" fill="{fill}"/>"#
+        );
+    }
+
+    pub fn line(&mut self, x1: f64, y1: f64, x2: f64, y2: f64, stroke: &str, w: f64) {
+        let _ = write!(
+            self.body,
+            r#"<line x1="{x1:.1}" y1="{y1:.1}" x2="{x2:.1}" y2="{y2:.1}" stroke="{stroke}" stroke-width="{w}"/>"#
+        );
+    }
+
+    pub fn circle(&mut self, cx: f64, cy: f64, r: f64, fill: &str) {
+        let _ = write!(
+            self.body,
+            r#"<circle cx="{cx:.1}" cy="{cy:.1}" r="{r:.1}" fill="{fill}"/>"#
+        );
+    }
+
+    pub fn text(&mut self, x: f64, y: f64, size: f64, s: &str) {
+        let esc = s.replace('&', "&amp;").replace('<', "&lt;").replace('>', "&gt;");
+        let _ = write!(
+            self.body,
+            r#"<text x="{x:.1}" y="{y:.1}" font-size="{size}" font-family="monospace">{esc}</text>"#
+        );
+    }
+
+    pub fn text_rotated(&mut self, x: f64, y: f64, size: f64, s: &str) {
+        let esc = s.replace('&', "&amp;").replace('<', "&lt;").replace('>', "&gt;");
+        let _ = write!(
+            self.body,
+            r#"<text x="{x:.1}" y="{y:.1}" font-size="{size}" font-family="monospace" transform="rotate(-45 {x:.1} {y:.1})" text-anchor="end">{esc}</text>"#
+        );
+    }
+
+    pub fn polyline(&mut self, pts: &[(f64, f64)], stroke: &str, w: f64) {
+        let mut s = String::new();
+        for (x, y) in pts {
+            let _ = write!(s, "{x:.1},{y:.1} ");
+        }
+        let _ = write!(
+            self.body,
+            r#"<polyline points="{}" fill="none" stroke="{stroke}" stroke-width="{w}"/>"#,
+            s.trim_end()
+        );
+    }
+
+    pub fn finish(self) -> String {
+        format!(
+            "<svg xmlns=\"http://www.w3.org/2000/svg\" width=\"{:.0}\" height=\"{:.0}\" viewBox=\"0 0 {:.0} {:.0}\">\n<rect width=\"100%\" height=\"100%\" fill=\"white\"/>\n{}\n</svg>\n",
+            self.width, self.height, self.width, self.height, self.body
+        )
+    }
+}
+
+/// Grouped bar chart: `groups` along x, `series` per group.
+/// data[group][series] = value.
+pub fn grouped_bars(title: &str, groups: &[String], series: &[String],
+                    data: &[Vec<f64>]) -> String {
+    let (w, h) = (900.0, 420.0);
+    let (ml, mr, mt, mb) = (70.0, 20.0, 40.0, 90.0);
+    let mut svg = Svg::new(w, h);
+    svg.text(ml, 24.0, 16.0, title);
+    let plot_w = w - ml - mr;
+    let plot_h = h - mt - mb;
+    let maxv = data
+        .iter()
+        .flat_map(|g| g.iter())
+        .cloned()
+        .fold(f64::MIN, f64::max)
+        .max(1e-12);
+    // y axis + gridlines
+    for i in 0..=4 {
+        let frac = i as f64 / 4.0;
+        let y = mt + plot_h * (1.0 - frac);
+        svg.line(ml, y, w - mr, y, "#dddddd", 1.0);
+        svg.text(4.0, y + 4.0, 11.0, &format!("{:.3}", maxv * frac));
+    }
+    let gw = plot_w / groups.len().max(1) as f64;
+    let bw = gw * 0.8 / series.len().max(1) as f64;
+    for (gi, g) in groups.iter().enumerate() {
+        let gx = ml + gi as f64 * gw;
+        for (si, _) in series.iter().enumerate() {
+            let v = data.get(gi).and_then(|r| r.get(si)).copied().unwrap_or(0.0);
+            let bh = (v / maxv) * plot_h;
+            svg.rect(
+                gx + gw * 0.1 + si as f64 * bw,
+                mt + plot_h - bh,
+                bw.max(1.0) - 1.0,
+                bh,
+                PALETTE[si % PALETTE.len()],
+            );
+        }
+        svg.text_rotated(gx + gw * 0.5, h - mb + 16.0, 11.0, g);
+    }
+    // legend
+    for (si, s) in series.iter().enumerate() {
+        let lx = ml + si as f64 * 130.0;
+        svg.rect(lx, h - 24.0, 12.0, 12.0, PALETTE[si % PALETTE.len()]);
+        svg.text(lx + 16.0, h - 14.0, 11.0, s);
+    }
+    svg.finish()
+}
+
+/// Stacked bar chart: data[group][segment] stacked vertically.
+pub fn stacked_bars(title: &str, groups: &[String], segments: &[String],
+                    data: &[Vec<f64>]) -> String {
+    let (w, h) = (900.0, 420.0);
+    let (ml, mr, mt, mb) = (70.0, 20.0, 40.0, 90.0);
+    let mut svg = Svg::new(w, h);
+    svg.text(ml, 24.0, 16.0, title);
+    let plot_w = w - ml - mr;
+    let plot_h = h - mt - mb;
+    let maxv = data
+        .iter()
+        .map(|g| g.iter().sum::<f64>())
+        .fold(f64::MIN, f64::max)
+        .max(1e-12);
+    for i in 0..=4 {
+        let frac = i as f64 / 4.0;
+        let y = mt + plot_h * (1.0 - frac);
+        svg.line(ml, y, w - mr, y, "#dddddd", 1.0);
+        svg.text(4.0, y + 4.0, 11.0, &format!("{:.3}", maxv * frac));
+    }
+    let gw = plot_w / groups.len().max(1) as f64;
+    for (gi, g) in groups.iter().enumerate() {
+        let gx = ml + gi as f64 * gw + gw * 0.2;
+        let mut acc = 0.0;
+        for (si, _) in segments.iter().enumerate() {
+            let v = data.get(gi).and_then(|r| r.get(si)).copied().unwrap_or(0.0);
+            let y0 = mt + plot_h * (1.0 - (acc + v) / maxv);
+            let bh = plot_h * v / maxv;
+            svg.rect(gx, y0, gw * 0.6, bh, PALETTE[si % PALETTE.len()]);
+            acc += v;
+        }
+        svg.text_rotated(gx + gw * 0.3, h - mb + 16.0, 11.0, g);
+    }
+    for (si, s) in segments.iter().enumerate() {
+        let lx = ml + si as f64 * 130.0;
+        svg.rect(lx, h - 24.0, 12.0, 12.0, PALETTE[si % PALETTE.len()]);
+        svg.text(lx + 16.0, h - 14.0, 11.0, s);
+    }
+    svg.finish()
+}
+
+/// Scatter plot with multiple series: series_points[(name, [(x, y)])].
+pub fn scatter(title: &str, xlabel: &str, ylabel: &str,
+               series_points: &[(String, Vec<(f64, f64)>)]) -> String {
+    let (w, h) = (720.0, 480.0);
+    let (ml, mr, mt, mb) = (70.0, 20.0, 40.0, 60.0);
+    let mut svg = Svg::new(w, h);
+    svg.text(ml, 24.0, 16.0, title);
+    let all: Vec<(f64, f64)> = series_points
+        .iter()
+        .flat_map(|s| s.1.iter().copied())
+        .collect();
+    if all.is_empty() {
+        return svg.finish();
+    }
+    let (xmin, xmax) = all.iter().fold((f64::MAX, f64::MIN), |(lo, hi), p| {
+        (lo.min(p.0), hi.max(p.0))
+    });
+    let (ymin, ymax) = all.iter().fold((f64::MAX, f64::MIN), |(lo, hi), p| {
+        (lo.min(p.1), hi.max(p.1))
+    });
+    let xs = (xmax - xmin).max(1e-12);
+    let ys = (ymax - ymin).max(1e-12);
+    let px = |x: f64| ml + (x - xmin) / xs * (w - ml - mr);
+    let py = |y: f64| mt + (1.0 - (y - ymin) / ys) * (h - mt - mb);
+    svg.line(ml, h - mb, w - mr, h - mb, "#333333", 1.0);
+    svg.line(ml, mt, ml, h - mb, "#333333", 1.0);
+    svg.text(w / 2.0 - 30.0, h - 16.0, 12.0, xlabel);
+    svg.text(4.0, mt - 8.0, 12.0, ylabel);
+    svg.text(ml - 10.0, h - mb + 14.0, 10.0, &format!("{xmin:.3}"));
+    svg.text(w - mr - 40.0, h - mb + 14.0, 10.0, &format!("{xmax:.3}"));
+    svg.text(4.0, h - mb, 10.0, &format!("{ymin:.3}"));
+    svg.text(4.0, mt + 10.0, 10.0, &format!("{ymax:.3}"));
+    for (si, (name, pts)) in series_points.iter().enumerate() {
+        let color = PALETTE[si % PALETTE.len()];
+        for (x, y) in pts {
+            svg.circle(px(*x), py(*y), 3.0, color);
+        }
+        let lx = ml + 8.0 + si as f64 * 120.0;
+        svg.circle(lx, mt + 8.0, 4.0, color);
+        svg.text(lx + 8.0, mt + 12.0, 11.0, name);
+    }
+    svg.finish()
+}
+
+/// Step-CDF plot: one line per series of raw values.
+pub fn cdf_lines(title: &str, xlabel: &str, series: &[(String, Vec<f64>)]) -> String {
+    let (w, h) = (720.0, 480.0);
+    let (ml, mr, mt, mb) = (70.0, 20.0, 40.0, 60.0);
+    let mut svg = Svg::new(w, h);
+    svg.text(ml, 24.0, 16.0, title);
+    let all: Vec<f64> = series.iter().flat_map(|s| s.1.iter().copied()).collect();
+    if all.is_empty() {
+        return svg.finish();
+    }
+    let xmin = all.iter().cloned().fold(f64::MAX, f64::min);
+    let xmax = all.iter().cloned().fold(f64::MIN, f64::max).max(xmin + 1e-12);
+    let px = |x: f64| ml + (x - xmin) / (xmax - xmin) * (w - ml - mr);
+    let py = |p: f64| mt + (1.0 - p) * (h - mt - mb);
+    svg.line(ml, h - mb, w - mr, h - mb, "#333333", 1.0);
+    svg.line(ml, mt, ml, h - mb, "#333333", 1.0);
+    svg.text(w / 2.0 - 30.0, h - 16.0, 12.0, xlabel);
+    svg.text(4.0, mt - 8.0, 12.0, "CDF");
+    for (si, (name, xs)) in series.iter().enumerate() {
+        let mut v = xs.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = v.len().max(1);
+        let mut pts = Vec::with_capacity(n + 1);
+        pts.push((px(v.first().copied().unwrap_or(xmin)), py(0.0)));
+        for (i, x) in v.iter().enumerate() {
+            pts.push((px(*x), py((i + 1) as f64 / n as f64)));
+        }
+        let color = PALETTE[si % PALETTE.len()];
+        svg.polyline(&pts, color, 1.5);
+        let lx = ml + 8.0 + si as f64 * 90.0;
+        svg.line(lx, mt + 8.0, lx + 14.0, mt + 8.0, color, 2.0);
+        svg.text(lx + 18.0, mt + 12.0, 11.0, name);
+    }
+    svg.finish()
+}
+
+/// Heatmap: matrix[r][c] in [0,1], rendered as shaded cells.
+pub fn heatmap(title: &str, matrix: &[Vec<f64>], row_labels: &[String]) -> String {
+    let rows = matrix.len().max(1);
+    let cols = matrix.iter().map(|r| r.len()).max().unwrap_or(1).max(1);
+    let cell = (820.0 / cols as f64).min(14.0);
+    let (ml, mt) = (90.0, 40.0);
+    let w = ml + cols as f64 * cell + 20.0;
+    let h = mt + rows as f64 * cell + 20.0;
+    let mut svg = Svg::new(w, h);
+    svg.text(ml, 24.0, 16.0, title);
+    for (r, row) in matrix.iter().enumerate() {
+        if let Some(label) = row_labels.get(r) {
+            svg.text(4.0, mt + r as f64 * cell + cell * 0.8, 10.0, label);
+        }
+        for (c, &v) in row.iter().enumerate() {
+            let shade = (255.0 * (1.0 - v.clamp(0.0, 1.0))) as u8;
+            let color = format!("#{shade:02x}{shade:02x}ff");
+            svg.rect(ml + c as f64 * cell, mt + r as f64 * cell, cell - 0.5,
+                     cell - 0.5, &color);
+        }
+    }
+    svg.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn svg_is_well_formed_ish() {
+        let s = grouped_bars(
+            "t",
+            &["a".into(), "b".into()],
+            &["s1".into()],
+            &[vec![1.0], vec![2.0]],
+        );
+        assert!(s.starts_with("<svg"));
+        assert!(s.trim_end().ends_with("</svg>"));
+        assert_eq!(s.matches("<rect").count(), s.matches("/>").count() - s.matches("<line").count() - s.matches("<circle").count() - s.matches("<polyline").count());
+    }
+
+    #[test]
+    fn scatter_handles_empty() {
+        let s = scatter("t", "x", "y", &[]);
+        assert!(s.contains("</svg>"));
+    }
+
+    #[test]
+    fn text_is_escaped() {
+        let mut svg = Svg::new(10.0, 10.0);
+        svg.text(0.0, 0.0, 10.0, "a<b&c");
+        let s = svg.finish();
+        assert!(s.contains("a&lt;b&amp;c"));
+    }
+
+    #[test]
+    fn cdf_lines_renders_series() {
+        let s = cdf_lines("t", "dur", &[("g".into(), vec![1.0, 2.0, 3.0])]);
+        assert!(s.contains("<polyline"));
+    }
+
+    #[test]
+    fn heatmap_cells() {
+        let s = heatmap("t", &[vec![0.0, 1.0]], &["r0".into()]);
+        assert!(s.matches("<rect").count() >= 3); // bg + 2 cells
+    }
+}

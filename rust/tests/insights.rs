@@ -1,0 +1,271 @@
+//! Integration tests: every insight and observation of the paper's
+//! Section V, validated end-to-end against the simulator at reduced scale
+//! (8 layers, 4 iterations — the full-scale versions run in `cargo bench`,
+//! one bench per figure).
+
+use chopper::chopper::{
+    op_launch_overheads, overlap_samples, summarize_op_overlap, throughput,
+    CpuUtilAnalysis, Filter,
+};
+use chopper::config::{FsdpVersion, ModelConfig, NodeSpec, WorkloadConfig};
+use chopper::model::ops::{OpRef, OpType, Phase};
+use chopper::sim::{run_workload, ProfiledRun};
+use chopper::util::stats;
+use std::collections::HashMap;
+use std::sync::{Mutex, OnceLock};
+
+const LAYERS: u64 = 8;
+const ITERS: u32 = 4;
+
+/// Profiled runs are expensive; share them across tests.
+fn cached(label: &str, fsdp: FsdpVersion) -> &'static ProfiledRun {
+    static CACHE: OnceLock<Mutex<HashMap<String, &'static ProfiledRun>>> =
+        OnceLock::new();
+    let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+    let key = format!("{label}-{fsdp}");
+    let mut guard = cache.lock().unwrap();
+    if let Some(run) = guard.get(&key) {
+        return run;
+    }
+    let node = NodeSpec::mi300x_node();
+    let mut cfg = ModelConfig::llama3_8b();
+    cfg.layers = LAYERS;
+    let mut wl = WorkloadConfig::parse_label(label, fsdp).unwrap();
+    wl.iterations = ITERS;
+    wl.warmup = ITERS / 2;
+    let run: &'static ProfiledRun = Box::leak(Box::new(run_workload(&node, &cfg, &wl)));
+    guard.insert(key, run);
+    run
+}
+
+fn tps(label: &str, fsdp: FsdpVersion) -> f64 {
+    let run = cached(label, fsdp);
+    let wl = WorkloadConfig::parse_label(label, fsdp).unwrap();
+    throughput(&run.trace, wl.tokens_per_iteration(8) as f64).tokens_per_sec
+}
+
+#[test]
+fn observation1_batch_one_underutilizes() {
+    // "Batch size one experiences severe underutilization (~30% lower
+    // throughput), regardless of the sequence length."
+    let b1 = tps("b1s4", FsdpVersion::V1);
+    let b2 = tps("b2s4", FsdpVersion::V1);
+    assert!(b1 < b2 * 0.95, "b1s4 {b1:.0} !< b2s4 {b2:.0}");
+    let b1_8 = tps("b1s8", FsdpVersion::V1);
+    let b2_8 = tps("b2s8", FsdpVersion::V1);
+    assert!(b1_8 < b2_8 * 0.95, "b1s8 {b1_8:.0} !< b2s8 {b2_8:.0}");
+}
+
+#[test]
+fn observation2_insight1_backward_fa_anomaly() {
+    // Backward FlashAttention at batch one is SLOWER than at batch two
+    // despite performing fewer flops.
+    let med = |label: &str| {
+        let run = cached(label, FsdpVersion::V1);
+        stats::median(&chopper::chopper::op_duration_samples(
+            &run.trace,
+            OpRef::bwd(OpType::AttnFa),
+        ))
+    };
+    let d1 = med("b1s4");
+    let d2 = med("b2s4");
+    assert!(d1 > d2, "Insight 1: b1 {d1:.0} !> b2 {d2:.0}");
+    // Forward FA scales normally.
+    let fmed = |label: &str| {
+        let run = cached(label, FsdpVersion::V1);
+        stats::median(&chopper::chopper::op_duration_samples(
+            &run.trace,
+            OpRef::fwd(OpType::AttnFa),
+        ))
+    };
+    assert!(fmed("b2s4") > fmed("b1s4") * 1.5);
+}
+
+#[test]
+fn observation3_insight6_launch_share_shrinks() {
+    let t_small = {
+        let run = cached("b1s4", FsdpVersion::V1);
+        throughput(&run.trace, 1.0)
+    };
+    let t_large = {
+        let run = cached("b2s8", FsdpVersion::V1);
+        throughput(&run.trace, 1.0)
+    };
+    let share_small = t_small.launch_ns / t_small.iter_ns;
+    let share_large = t_large.launch_ns / t_large.iter_ns;
+    assert!(
+        share_small > share_large,
+        "launch share must shrink: {share_small:.4} -> {share_large:.4}"
+    );
+}
+
+#[test]
+fn insight2_median_comm_scales_with_compute() {
+    use chopper::trace::event::Stream;
+    let rs_median = |label: &str| {
+        let run = cached(label, FsdpVersion::V1);
+        let warmup = run.trace.meta.warmup;
+        let durs: Vec<f64> = run
+            .trace
+            .events
+            .iter()
+            .filter(|e| {
+                e.stream == Stream::Comm
+                    && e.op.op == OpType::ReduceScatter
+                    && e.iter >= warmup
+            })
+            .map(|e| e.duration())
+            .collect();
+        (stats::median(&durs), stats::min(&durs))
+    };
+    let (med_small, min_small) = rs_median("b1s4");
+    let (med_large, min_large) = rs_median("b2s8");
+    // At 8 of 32 layers the skew window is proportionally shorter, so
+    // the growth is milder here; the full-scale bench (fig6_comm) asserts
+    // the paper's >1.3x.
+    assert!(
+        med_large > med_small * 1.08,
+        "median comm must scale: {med_small:.0} -> {med_large:.0}"
+    );
+    // Tail (fast synchronized instances) stays closer to constant.
+    let min_growth = min_large / min_small;
+    let med_growth = med_large / med_small;
+    assert!(min_growth < med_growth, "{min_growth} !< {med_growth}");
+}
+
+#[test]
+fn insight3_overlap_variation_tracks_duration_variation() {
+    // Per-GPU: the GPU with the least overlap on f_attn_op should not be
+    // the slowest one (its kernels run clear of contention).
+    let run = cached("b2s4", FsdpVersion::V1);
+    let per = chopper::chopper::per_gpu_overlap_cdf(
+        &run.trace,
+        OpRef::fwd(OpType::AttnOp),
+    );
+    assert_eq!(per.len(), 8);
+    let med_ratio: Vec<f64> = per
+        .values()
+        .map(|v| stats::median(&v.iter().map(|(r, _)| *r).collect::<Vec<_>>()))
+        .collect();
+    let spread = stats::max(&med_ratio) - stats::min(&med_ratio);
+    assert!(spread > 0.3, "per-GPU overlap spread too small: {spread}");
+}
+
+#[test]
+fn observation4_identical_ops_differ_by_overlap() {
+    let run = cached("b2s4", FsdpVersion::V1);
+    let attn = summarize_op_overlap(&run.trace, OpRef::bwd(OpType::AttnN));
+    let mlp = summarize_op_overlap(&run.trace, OpRef::bwd(OpType::MlpN));
+    assert!(attn.ratio_q[2] > mlp.ratio_q[2] + 0.4);
+}
+
+#[test]
+fn insight4_fa_overlap_decreases_with_scale() {
+    let med = |label: &str| {
+        let run = cached(label, FsdpVersion::V1);
+        summarize_op_overlap(&run.trace, OpRef::fwd(OpType::AttnFa)).ratio_q[2]
+    };
+    let small = med("b1s4");
+    let large = med("b2s8");
+    assert!(small > 0.75, "b1s4 fwd FA should be mostly overlapped: {small}");
+    assert!(large < small, "overlap must fall with b·s: {small} -> {large}");
+}
+
+#[test]
+fn insight5_prep_overhead_is_pipeline_fill_not_cpu() {
+    let run = cached("b2s4", FsdpVersion::V1);
+    let per_op = op_launch_overheads(&run.trace);
+    let ie = per_op[&OpRef::fwd(OpType::IE)];
+    // f_ie (iteration start, waiting on the embed all-gather) dominates.
+    let gemm = per_op[&OpRef::fwd(OpType::MlpUp)];
+    assert!(ie.total() > gemm.total() * 10.0);
+    // And the CPU is NOT the bottleneck: its active cores are far below
+    // the core count (checked via Insight 7's analysis below).
+    let cpu = CpuUtilAnalysis::analyze(&run.cpu);
+    assert!(cpu.median_active() < 48.0, "CPU nearly idle overall");
+}
+
+#[test]
+fn observation5_v2_more_copies_but_faster() {
+    let v1 = cached("b2s4", FsdpVersion::V1);
+    let v2 = cached("b2s4", FsdpVersion::V2);
+    let copies = |r: &ProfiledRun| {
+        r.trace
+            .events
+            .iter()
+            .filter(|e| e.op.op == OpType::ParamCopy)
+            .count()
+    };
+    assert_eq!(copies(v1), 0);
+    assert!(copies(v2) > 0, "v2 must serialize copies");
+    let t1 = tps("b2s4", FsdpVersion::V1);
+    let t2 = tps("b2s4", FsdpVersion::V2);
+    assert!(t2 > t1 * 1.05, "v2 {t2:.0} !>> v1 {t1:.0}");
+}
+
+#[test]
+fn insight7_cpu_heavily_underutilized() {
+    let run = cached("b2s4", FsdpVersion::V2);
+    let a = CpuUtilAnalysis::analyze(&run.cpu);
+    assert!(a.median_active() > 2.0 * a.median_min_cores());
+    assert!(a.physical_footprint() < 0.25);
+    assert!(a.smt_cosched_rate() < 0.2);
+}
+
+#[test]
+fn observation6_insight8_frequency_story() {
+    let v1 = cached("b2s4", FsdpVersion::V1);
+    let v2 = cached("b2s4", FsdpVersion::V2);
+    let active = |r: &ProfiledRun| -> (Vec<f64>, Vec<f64>) {
+        let s: Vec<_> = r.power.samples.iter().filter(|s| s.power_w > 400.0).collect();
+        (
+            s.iter().map(|x| x.freq_mhz).collect(),
+            s.iter().map(|x| x.power_w).collect(),
+        )
+    };
+    let (f1, p1) = active(v1);
+    let (f2, p2) = active(v2);
+    // v2 clocks higher with less variation at similar power.
+    assert!(stats::mean(&f2) > stats::mean(&f1) * 1.08);
+    assert!(stats::std(&f2) < stats::std(&f1));
+    let gap = (stats::mean(&p2) - stats::mean(&p1)).abs() / stats::mean(&p1);
+    assert!(gap < 0.15, "power gap {gap}");
+}
+
+#[test]
+fn insight8_frequency_overhead_dominates_breakdown() {
+    use chopper::chopper::{op_breakdown, AlignedTrace};
+    let run = cached("b2s4", FsdpVersion::V1);
+    let aligned = AlignedTrace::align(run.trace.clone(), &run.counters);
+    let node = NodeSpec::mi300x_node();
+    let b = op_breakdown(&aligned, &node.gpu, OpRef::fwd(OpType::MlpUp)).unwrap();
+    assert!(b.freq > b.inst, "freq {} !> inst {}", b.freq, b.inst);
+    assert!(b.freq > b.overlap, "freq {} !> overlap {}", b.freq, b.overlap);
+    // FA pays extra utilization overhead.
+    let fa = op_breakdown(&aligned, &node.gpu, OpRef::fwd(OpType::AttnFa)).unwrap();
+    assert!(fa.util > b.util);
+}
+
+#[test]
+fn setup_validation_throughput_in_published_range() {
+    // Section IV-E: the reported token throughput for Llama-3-8B FSDP on
+    // 8x MI300X is in the tens of thousands of tokens/s. At 8 of 32
+    // layers our iteration is ~4x shorter, so scale the bound.
+    let t2 = tps("b2s4", FsdpVersion::V1);
+    let full_scale_estimate = t2 * (LAYERS as f64 / 32.0);
+    assert!(
+        full_scale_estimate > 30_000.0 && full_scale_estimate < 200_000.0,
+        "estimated full-scale throughput {full_scale_estimate:.0} tok/s out of range"
+    );
+}
+
+#[test]
+fn overlap_ratios_always_valid() {
+    for fsdp in [FsdpVersion::V1, FsdpVersion::V2] {
+        let run = cached("b2s4", fsdp);
+        for s in overlap_samples(&run.trace, &Filter::sampled()) {
+            assert!((0.0..=1.0).contains(&s.ratio));
+            assert!(s.inst.duration() > 0.0);
+        }
+    }
+}

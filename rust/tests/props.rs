@@ -1,0 +1,377 @@
+//! Property-based tests (proptest-style, using the in-repo deterministic
+//! PRNG — see DESIGN.md substitution table): seeded random cases over the
+//! coordinator's core invariants, with the failing seed printed so any
+//! regression is reproducible.
+
+use chopper::chopper::aggregate::{kernel_time_by, op_instances, Filter};
+use chopper::chopper::launch::{launch_overhead, per_kernel_overheads};
+use chopper::chopper::overlap::CommIntervals;
+use chopper::config::{FsdpVersion, ModelConfig, NodeSpec, WorkloadConfig};
+use chopper::fsdp::{build_program, CachingAllocator, DispatchItem};
+use chopper::model::ops::{OpRef, OpType};
+use chopper::sim::{Engine, EngineParams};
+use chopper::trace::chrome::{from_chrome_json, to_chrome_json};
+use chopper::trace::event::{Stream, Trace, TraceEvent};
+use chopper::util::json::{parse, Json};
+use chopper::util::prng::Rng;
+
+/// Run `f` over `cases` seeded cases; panic with the seed on failure.
+fn prop(name: &str, cases: u64, f: impl Fn(&mut Rng)) {
+    for case in 0..cases {
+        let seed = 0x9E3779B9_u64.wrapping_mul(case + 1) ^ 0xC0FFEE;
+        let mut rng = Rng::substream(seed, name);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            f(&mut rng)
+        }));
+        if let Err(e) = result {
+            eprintln!("property `{name}` failed on case {case} (seed {seed:#x})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+fn random_workload(rng: &mut Rng) -> (ModelConfig, WorkloadConfig) {
+    let mut cfg = ModelConfig::llama3_8b();
+    cfg.layers = rng.range_u64(1, 5);
+    let batch = *rng.choose(&[1u64, 2, 4]);
+    let seq = *rng.choose(&[4096u64, 8192]);
+    let fsdp = if rng.bool(0.5) {
+        FsdpVersion::V1
+    } else {
+        FsdpVersion::V2
+    };
+    let mut wl = WorkloadConfig::new(batch, seq, fsdp);
+    wl.iterations = rng.range_u64(1, 3) as u32;
+    wl.warmup = 0;
+    wl.optimizer = rng.bool(0.8);
+    wl.seed = rng.next_u64();
+    (cfg, wl)
+}
+
+fn simulate(cfg: &ModelConfig, wl: &WorkloadConfig) -> Trace {
+    let node = NodeSpec::mi300x_node();
+    Engine::new(&node, cfg, wl, EngineParams::default())
+        .run()
+        .trace
+}
+
+#[test]
+fn prop_event_conservation() {
+    // Every dispatched kernel/collective appears exactly once per GPU.
+    prop("event_conservation", 6, |rng| {
+        let (cfg, wl) = random_workload(rng);
+        let program = build_program(&cfg, &wl, 8);
+        let trace = simulate(&cfg, &wl);
+        let kernels = program.kernels().count();
+        let comms = program.collectives().count();
+        for gpu in 0..8 {
+            let (mut k, mut c) = (0, 0);
+            for e in trace.events.iter().filter(|e| e.gpu == gpu) {
+                match e.stream {
+                    Stream::Compute => k += 1,
+                    Stream::Comm => c += 1,
+                }
+            }
+            assert_eq!(k, kernels, "gpu {gpu} compute count");
+            assert_eq!(c, comms, "gpu {gpu} comm count");
+        }
+    });
+}
+
+#[test]
+fn prop_streams_are_serial_and_ordered() {
+    prop("serial_streams", 6, |rng| {
+        let (cfg, wl) = random_workload(rng);
+        let trace = simulate(&cfg, &wl);
+        for gpu in 0..8 {
+            for stream in [Stream::Compute, Stream::Comm] {
+                let mut evs: Vec<&TraceEvent> = trace
+                    .events
+                    .iter()
+                    .filter(|e| e.gpu == gpu && e.stream == stream)
+                    .collect();
+                evs.sort_by_key(|e| e.seq);
+                for w in evs.windows(2) {
+                    assert!(
+                        w[1].t_start >= w[0].t_end - 1e-6,
+                        "stream {stream} on gpu {gpu} overlaps itself"
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_aggregation_conserves_kernel_time() {
+    // Sum over any partition of the events == total (at every granularity).
+    prop("aggregation_conservation", 4, |rng| {
+        let (cfg, wl) = random_workload(rng);
+        let trace = simulate(&cfg, &wl);
+        let f = Filter::default();
+        let total: f64 = trace.events.iter().map(|e| e.duration()).sum();
+        let by_op: f64 = kernel_time_by(&trace, &f, |e| e.op).values().sum();
+        let by_gpu: f64 = kernel_time_by(&trace, &f, |e| e.gpu).values().sum();
+        let by_iter: f64 = kernel_time_by(&trace, &f, |e| e.iter).values().sum();
+        let by_kind: f64 = kernel_time_by(&trace, &f, |e| e.kind()).values().sum();
+        for (name, v) in [("op", by_op), ("gpu", by_gpu), ("iter", by_iter), ("kind", by_kind)] {
+            assert!(
+                (v - total).abs() < total * 1e-12 + 1e-6,
+                "partition by {name}: {v} != {total}"
+            );
+        }
+        // Instance durations ≥ their kernel time; bubbles ≥ 0.
+        for inst in op_instances(&trace, &f) {
+            assert!(inst.duration() >= inst.kernel_ns - 1e-6);
+            assert!(inst.bubble_ns() >= 0.0);
+        }
+    });
+}
+
+#[test]
+fn prop_launch_overhead_equations() {
+    // O_prep ≥ 0, O_call ≥ 0, and when the kernel starts exactly at
+    // max(prev_end, launch)+x the parts sum to the bubble.
+    prop("launch_eqs", 200, |rng| {
+        let prev_end = rng.range_f64(0.0, 1e6);
+        let t_l = prev_end + rng.range_f64(-1e5, 1e5);
+        let t_s = t_l.max(prev_end) + rng.range_f64(0.0, 1e5);
+        let e = TraceEvent {
+            kernel_id: 0,
+            gpu: 0,
+            stream: Stream::Compute,
+            name: "k".into(),
+            op: OpRef::fwd(OpType::MlpUp),
+            layer: None,
+            iter: 0,
+            t_launch: t_l,
+            t_start: t_s,
+            t_end: t_s + 1.0,
+            seq: 1,
+            fwd_link: None,
+            freq_mhz: 0.0,
+            flops: 0.0,
+            bytes: 0.0,
+        };
+        let o = launch_overhead(&e, prev_end);
+        assert!(o.prep >= 0.0 && o.call >= 0.0);
+        let bubble = t_s - prev_end;
+        assert!(
+            (o.total() - bubble).abs() < 1e-9,
+            "prep+call ({}) != bubble ({bubble})",
+            o.total()
+        );
+    });
+}
+
+#[test]
+fn prop_launch_overheads_nonnegative_on_real_traces() {
+    prop("launch_real", 3, |rng| {
+        let (cfg, wl) = random_workload(rng);
+        let trace = simulate(&cfg, &wl);
+        for gpu in 0..8 {
+            for (_, o) in per_kernel_overheads(&trace, gpu) {
+                assert!(o.prep >= 0.0);
+                assert!(o.call >= 0.0);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_comm_interval_coverage_matches_bruteforce() {
+    prop("interval_coverage", 100, |rng| {
+        // Random interval set; compare covered_ns with a brute-force scan.
+        let n = rng.range_usize(0, 12);
+        let mut t = Trace::default();
+        let mut raw: Vec<(f64, f64)> = Vec::new();
+        for i in 0..n {
+            let s = rng.range_f64(0.0, 1000.0);
+            let e = s + rng.range_f64(0.1, 300.0);
+            raw.push((s, e));
+            t.events.push(TraceEvent {
+                kernel_id: i as u64,
+                gpu: 0,
+                stream: Stream::Comm,
+                name: "c".into(),
+                op: OpRef::fwd(OpType::AllGather),
+                layer: None,
+                iter: 0,
+                t_launch: s,
+                t_start: s,
+                t_end: e,
+                seq: i as u64,
+                fwd_link: None,
+                freq_mhz: 0.0,
+                flops: 0.0,
+                bytes: 0.0,
+            });
+        }
+        let iv = CommIntervals::from_trace(&t);
+        for _ in 0..16 {
+            let qs = rng.range_f64(-50.0, 1100.0);
+            let qe = qs + rng.range_f64(0.0, 400.0);
+            // Brute force at 0.25 resolution.
+            let mut acc = 0.0;
+            let step = 0.25;
+            let mut x = qs;
+            while x < qe {
+                if raw.iter().any(|&(s, e)| x >= s && x < e) {
+                    acc += step;
+                }
+                x += step;
+            }
+            let got = iv.covered_ns(0, qs, qe);
+            assert!(
+                (got - acc).abs() <= 2.0 * step * (n as f64 + 1.0),
+                "coverage mismatch: got {got}, brute {acc}"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_chrome_roundtrip_fidelity() {
+    prop("chrome_roundtrip", 3, |rng| {
+        let (cfg, wl) = random_workload(rng);
+        let trace = simulate(&cfg, &wl);
+        let back = from_chrome_json(&to_chrome_json(&trace)).unwrap();
+        assert_eq!(back.events.len(), trace.events.len());
+        assert_eq!(back.meta.workload, trace.meta.workload);
+        for (a, b) in trace.events.iter().zip(&back.events) {
+            assert_eq!(a.kernel_id, b.kernel_id);
+            assert_eq!(a.op, b.op);
+            assert_eq!(a.gpu, b.gpu);
+            assert_eq!(a.layer, b.layer);
+            assert_eq!(a.seq, b.seq);
+            assert!((a.t_start - b.t_start).abs() < 1e-3);
+            assert!((a.t_end - b.t_end).abs() < 1e-3);
+        }
+    });
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    fn random_json(rng: &mut Rng, depth: u32) -> Json {
+        match if depth == 0 { rng.range_u64(0, 4) } else { rng.range_u64(0, 6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.bool(0.5)),
+            2 => Json::Num((rng.range_f64(-1e9, 1e9) * 100.0).round() / 100.0),
+            3 => Json::Str(format!("s{}\"\\x{}", rng.next_u64() % 100, rng.next_u64() % 10)),
+            4 => Json::Arr(
+                (0..rng.range_usize(0, 4))
+                    .map(|_| random_json(rng, depth - 1))
+                    .collect(),
+            ),
+            _ => {
+                let mut m = std::collections::BTreeMap::new();
+                for i in 0..rng.range_usize(0, 4) {
+                    m.insert(format!("k{i}"), random_json(rng, depth - 1));
+                }
+                Json::Obj(m)
+            }
+        }
+    }
+    prop("json_roundtrip", 200, |rng| {
+        let j = random_json(rng, 3);
+        let text = j.to_string();
+        let back = parse(&text).unwrap_or_else(|e| panic!("parse {text}: {e}"));
+        assert_eq!(j, back);
+    });
+}
+
+#[test]
+fn prop_allocator_invariants() {
+    prop("allocator", 50, |rng| {
+        let version = if rng.bool(0.5) {
+            FsdpVersion::V1
+        } else {
+            FsdpVersion::V2
+        };
+        let mut a = CachingAllocator::new(version, rng.next_u64());
+        let mut outstanding: Vec<u64> = Vec::new();
+        for _ in 0..rng.range_usize(1, 120) {
+            if outstanding.is_empty() || rng.bool(0.55) {
+                let bytes = rng.range_u64(1, 1 << 28);
+                a.alloc(bytes);
+                outstanding.push(bytes);
+            } else {
+                let i = rng.range_usize(0, outstanding.len());
+                let bytes = outstanding.swap_remove(i);
+                a.free(bytes);
+            }
+            assert!(a.peak_bytes >= a.live_bytes, "peak below live");
+        }
+        a.flush_deferred();
+        for b in outstanding.drain(..) {
+            a.free(b);
+        }
+        a.flush_deferred();
+        assert_eq!(a.live_bytes, 0, "leak: {} bytes live", a.live_bytes);
+    });
+}
+
+#[test]
+fn prop_program_structure_invariants() {
+    prop("program_structure", 10, |rng| {
+        let (cfg, wl) = random_workload(rng);
+        let program = build_program(&cfg, &wl, 8);
+        // Collective ids dense and unique.
+        let mut ids: Vec<u64> = program.collectives().map(|c| c.id).collect();
+        ids.sort_unstable();
+        for (i, id) in ids.iter().enumerate() {
+            assert_eq!(*id, i as u64);
+        }
+        // Every kernel's wait_comm references an existing, earlier comm.
+        let mut seen = std::collections::HashSet::new();
+        for item in &program.items {
+            match item {
+                DispatchItem::Comm(c) => {
+                    seen.insert(c.id);
+                }
+                DispatchItem::Kernel(k) => {
+                    if let Some(w) = k.prog_wait() {
+                        assert!(seen.contains(&w), "kernel waits on future comm {w}");
+                    }
+                }
+                _ => {}
+            }
+        }
+        // wait_seq never exceeds the number of kernels dispatched before.
+        let mut kernel_count = 0u64;
+        for item in &program.items {
+            match item {
+                DispatchItem::Kernel(_) => kernel_count += 1,
+                DispatchItem::Comm(c) => {
+                    assert!(c.wait_seq <= kernel_count);
+                }
+                _ => {}
+            }
+        }
+    });
+}
+
+/// Helper so the property can read the private-ish field uniformly.
+trait WaitExt {
+    fn prog_wait(&self) -> Option<u64>;
+}
+impl WaitExt for chopper::fsdp::ProgKernel {
+    fn prog_wait(&self) -> Option<u64> {
+        self.wait_comm
+    }
+}
+
+#[test]
+fn prop_engine_determinism() {
+    prop("determinism", 3, |rng| {
+        let (cfg, wl) = random_workload(rng);
+        let a = simulate(&cfg, &wl);
+        let b = simulate(&cfg, &wl);
+        assert_eq!(a.events.len(), b.events.len());
+        for (x, y) in a.events.iter().zip(&b.events) {
+            assert_eq!(x.kernel_id, y.kernel_id);
+            assert_eq!(x.t_start, y.t_start);
+            assert_eq!(x.t_end, y.t_end);
+        }
+    });
+}
