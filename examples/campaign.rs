@@ -1,0 +1,54 @@
+//! A large ablation campaign: the paper's workload grid crossed with
+//! engine-mechanism ablations (RCCL spin penalty × DVFS governor window),
+//! run through the parallel cached campaign runner and compared in one
+//! table — the "many scenarios side by side" workflow the characterization
+//! insights come from.
+//!
+//!     cargo run --release --example campaign [layers] [iters]
+//!
+//! Re-running reuses `.chopper-cache/` and executes nothing.
+
+use chopper::campaign::{
+    campaign_breakdown, campaign_table, default_jobs, run_campaign, Cache,
+    GridSpec, Knob,
+};
+use chopper::config::NodeSpec;
+
+fn main() {
+    let layers: u64 = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(4);
+    let iters: u32 = std::env::args()
+        .nth(2)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(4);
+
+    let mut spec = GridSpec::paper(layers, iters, iters / 2);
+    // b{1,2,4} × s{4K,8K} × {v1,v2} × spin{0.0,0.07} × dvfs{0.5ms,1ms}
+    // = 48 scenarios.
+    spec.ablations = vec![
+        (Knob::SpinPenalty, vec![0.0, 0.07]),
+        (Knob::DvfsWindowNs, vec![5e5, 1e6]),
+    ];
+    let scenarios = spec.expand();
+    let jobs = default_jobs();
+    eprintln!(
+        "campaign: {} scenarios ({layers} layers × {iters} iters) on {jobs} workers…",
+        scenarios.len()
+    );
+
+    let node = NodeSpec::mi300x_node();
+    let cache = Cache::open(".chopper-cache").expect("cache dir");
+    let t0 = std::time::Instant::now();
+    let outcome = run_campaign(&node, &scenarios, jobs, Some(&cache), false);
+    eprintln!(
+        "campaign: {} executed, {} cached in {:.2}s",
+        outcome.executed,
+        outcome.cached,
+        t0.elapsed().as_secs_f64()
+    );
+
+    println!("{}", campaign_table(&outcome.summaries).ascii);
+    println!("{}", campaign_breakdown(&outcome.summaries).ascii);
+}

@@ -1,9 +1,11 @@
 //! Reproduce the paper's configuration sweep (Fig. 4): throughput and
 //! phase/op-type breakdown across b1s4, b2s4, b4s4, b1s8, b2s8 under
-//! FSDPv1 and FSDPv2.
+//! FSDPv1 and FSDPv2. The ten runs fan out over the campaign runner —
+//! one worker per hardware thread, results in deterministic sweep order.
 //!
 //!     cargo run --release --example sweep_configs [layers] [iters]
 
+use chopper::campaign::default_jobs;
 use chopper::chopper::report;
 use chopper::config::{FsdpVersion, ModelConfig, NodeSpec};
 
@@ -20,7 +22,9 @@ fn main() {
     let mut cfg = ModelConfig::llama3_8b();
     cfg.layers = layers;
     eprintln!(
-        "running the paper sweep at {layers} layers × {iters} iterations (10 runs)…"
+        "running the paper sweep at {layers} layers × {iters} iterations \
+         (10 runs, {} workers)…",
+        default_jobs()
     );
     let runs = report::run_sweep(
         &node,

@@ -1,0 +1,145 @@
+//! On-disk result cache for campaign runs.
+//!
+//! Each scenario is content-addressed: its fingerprint hashes the full
+//! node spec, model config, workload config, and engine parameters (via
+//! their canonical `Debug` renderings, which include every field, so any
+//! new mechanism parameter automatically invalidates stale entries) plus a
+//! schema version. Summaries persist as one JSON artifact per scenario at
+//! `<dir>/<name>-<fingerprint:016x>.json`; a re-run with an unchanged grid
+//! loads every summary from disk and executes zero engine runs.
+
+use crate::campaign::grid::Scenario;
+use crate::campaign::runner::ScenarioSummary;
+use crate::config::NodeSpec;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// Bump when [`ScenarioSummary`]'s JSON schema changes **or** when engine
+/// semantics change in a way not reflected in any config/parameter struct —
+/// invalidates every existing cache entry. (The crate version is also
+/// folded into fingerprints, so released engine changes invalidate
+/// automatically; this constant covers same-version development.)
+pub const SCHEMA_VERSION: u32 = 1;
+
+pub use crate::util::prng::fnv1a;
+
+/// Content fingerprint of one scenario on one node. Hashes the crate
+/// version, schema version, and the full `Debug` renderings of the node /
+/// model / workload / engine-parameter state, so any new field is picked
+/// up automatically.
+pub fn fingerprint(node: &NodeSpec, sc: &Scenario) -> u64 {
+    let canon = format!(
+        "chopper-{}-campaign-v{SCHEMA_VERSION}|{node:?}|{:?}|{:?}|{:?}",
+        env!("CARGO_PKG_VERSION"),
+        sc.model,
+        sc.wl,
+        sc.params
+    );
+    fnv1a(canon.as_bytes())
+}
+
+fn sanitize(name: &str) -> String {
+    name.chars()
+        .map(|c| {
+            if c.is_ascii_alphanumeric() || matches!(c, '-' | '_' | '.') {
+                c
+            } else {
+                '_'
+            }
+        })
+        .collect()
+}
+
+/// A directory of per-scenario summary artifacts.
+#[derive(Debug, Clone)]
+pub struct Cache {
+    dir: PathBuf,
+}
+
+impl Cache {
+    /// Open (creating if needed) a cache directory.
+    pub fn open(dir: impl Into<PathBuf>) -> io::Result<Cache> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir)?;
+        Ok(Cache { dir })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Artifact path for a scenario name + fingerprint.
+    pub fn path_for(&self, name: &str, fp: u64) -> PathBuf {
+        self.dir.join(format!("{}-{fp:016x}.json", sanitize(name)))
+    }
+
+    /// Load a cached summary if one exists for exactly this fingerprint.
+    /// Corrupt or mismatched artifacts are treated as misses.
+    pub fn load(&self, name: &str, fp: u64) -> Option<ScenarioSummary> {
+        let path = self.path_for(name, fp);
+        let text = std::fs::read_to_string(path).ok()?;
+        let s = ScenarioSummary::from_json_str(&text).ok()?;
+        if s.fingerprint != fp {
+            return None;
+        }
+        Some(s)
+    }
+
+    /// Persist a summary; returns the artifact path.
+    pub fn store(&self, s: &ScenarioSummary) -> io::Result<PathBuf> {
+        let path = self.path_for(&s.name, s.fingerprint);
+        std::fs::write(&path, s.to_json_str())?;
+        Ok(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::campaign::grid::GridSpec;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("chopper_cache_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn fnv_is_stable_and_discriminating() {
+        assert_eq!(fnv1a(b"abc"), fnv1a(b"abc"));
+        assert_ne!(fnv1a(b"abc"), fnv1a(b"abd"));
+        // Spot-check against the reference value of FNV-1a("a").
+        assert_eq!(fnv1a(b"a"), 0xaf63dc4c8601ec8c);
+    }
+
+    #[test]
+    fn fingerprint_changes_with_any_input() {
+        let node = NodeSpec::mi300x_node();
+        let scs = GridSpec::paper(2, 2, 1).expand();
+        let base = fingerprint(&node, &scs[0]);
+        assert_eq!(base, fingerprint(&node, &scs[0]));
+        assert_ne!(base, fingerprint(&node, &scs[1]));
+        let mut tweaked = scs[0].clone();
+        tweaked.params.spin_penalty += 0.01;
+        assert_ne!(base, fingerprint(&node, &tweaked));
+        let mut tweaked = scs[0].clone();
+        tweaked.wl.iterations += 1;
+        assert_ne!(base, fingerprint(&node, &tweaked));
+    }
+
+    #[test]
+    fn sanitize_keeps_safe_chars() {
+        assert_eq!(sanitize("L2-b1s4-FSDPv1"), "L2-b1s4-FSDPv1");
+        assert_eq!(sanitize("a/b c"), "a_b_c");
+    }
+
+    #[test]
+    fn missing_and_corrupt_entries_are_misses() {
+        let cache = Cache::open(tmpdir("miss")).unwrap();
+        assert!(cache.load("nope", 7).is_none());
+        std::fs::write(cache.path_for("bad", 9), "{not json").unwrap();
+        assert!(cache.load("bad", 9).is_none());
+        std::fs::remove_dir_all(cache.dir()).ok();
+    }
+}

@@ -1,0 +1,192 @@
+//! Cross-scenario comparison reports: the campaign counterpart of the
+//! per-figure generators in `chopper::report`. Pure functions of
+//! [`ScenarioSummary`] rows, so cached and freshly executed campaigns
+//! render byte-identically.
+
+use crate::campaign::runner::ScenarioSummary;
+use crate::chopper::report::Figure;
+use crate::util::ascii;
+use std::fmt::Write as _;
+
+/// The headline comparison table: throughput (absolute and relative to the
+/// first scenario), iteration cost, launch share, DVFS frequency loss, and
+/// overlap efficiency for every scenario in grid order.
+pub fn campaign_table(summaries: &[ScenarioSummary]) -> Figure {
+    let base_tp = summaries
+        .first()
+        .map(|s| s.tokens_per_sec)
+        .unwrap_or(1.0)
+        .max(1e-9);
+    let mut rows: Vec<Vec<String>> = Vec::with_capacity(summaries.len());
+    let mut csv = String::from(
+        "scenario,label,fsdp,layers,batch,seq,tokens_per_sec,rel_throughput,\
+         iter_ms,launch_ms,launch_pct,freq_mhz,freq_loss_pct,power_w,overlap_fa\n",
+    );
+    for s in summaries {
+        let rel = s.tokens_per_sec / base_tp;
+        let launch_pct = 100.0 * s.launch_ms / s.iter_ms.max(1e-9);
+        rows.push(vec![
+            s.name.clone(),
+            format!("{:.0}", s.tokens_per_sec),
+            format!("{rel:.2}x"),
+            format!("{:.2}", s.iter_ms),
+            format!("{launch_pct:.1}%"),
+            format!("{:.0}", s.freq_mhz),
+            format!("{:.1}%", 100.0 * s.freq_loss),
+            format!("{:.0}", s.power_w),
+            format!("{:.2}", s.overlap_fa),
+        ]);
+        let _ = writeln!(
+            csv,
+            "{},{},{},{},{},{},{:.2},{:.4},{:.4},{:.4},{:.2},{:.1},{:.2},{:.1},{:.4}",
+            s.name,
+            s.label,
+            s.fsdp,
+            s.layers,
+            s.batch,
+            s.seq,
+            s.tokens_per_sec,
+            rel,
+            s.iter_ms,
+            s.launch_ms,
+            launch_pct,
+            s.freq_mhz,
+            100.0 * s.freq_loss,
+            s.power_w,
+            s.overlap_fa
+        );
+    }
+    let mut out = String::from(
+        "Campaign — cross-scenario comparison (relative to first scenario)\n\n",
+    );
+    out.push_str(&ascii::table(
+        &[
+            "scenario", "tok/s", "rel", "iter ms", "launch", "MHz",
+            "DVFS loss", "W", "ovl(fa)",
+        ],
+        &rows,
+    ));
+    Figure {
+        id: "campaign",
+        title: "Campaign — cross-scenario comparison".into(),
+        ascii: out,
+        csv,
+        svg: None,
+    }
+}
+
+/// Phase/communication breakdown: stacked fwd/bwd/opt bars per scenario
+/// plus the collective-duration columns — how iteration time redistributes
+/// across the grid.
+pub fn campaign_breakdown(summaries: &[ScenarioSummary]) -> Figure {
+    let mut csv = String::from(
+        "scenario,fwd_ms,bwd_ms,opt_ms,allgather_ms,reduce_scatter_ms,span_ms,events\n",
+    );
+    let mut out =
+        String::from("Campaign — phase and communication breakdown\n\n");
+    let width = summaries.iter().map(|s| s.name.len()).max().unwrap_or(8);
+    let max_total = summaries
+        .iter()
+        .map(|s| s.fwd_ms + s.bwd_ms + s.opt_ms)
+        .fold(0.0_f64, f64::max)
+        .max(1e-9);
+    for s in summaries {
+        out.push_str(&ascii::stacked_bar(
+            &format!("{:>width$}", s.name, width = width),
+            &[
+                ("fwd".into(), s.fwd_ms),
+                ("bwd".into(), s.bwd_ms),
+                ("opt".into(), s.opt_ms),
+            ],
+            44,
+            max_total,
+        ));
+        let _ = writeln!(
+            out,
+            "  {:>width$}  ag {:.3} ms  rs {:.3} ms",
+            "",
+            s.allgather_ms,
+            s.reduce_scatter_ms,
+            width = width
+        );
+        let _ = writeln!(
+            csv,
+            "{},{:.4},{:.4},{:.4},{:.4},{:.4},{:.3},{}",
+            s.name,
+            s.fwd_ms,
+            s.bwd_ms,
+            s.opt_ms,
+            s.allgather_ms,
+            s.reduce_scatter_ms,
+            s.span_ms,
+            s.events
+        );
+    }
+    out.push_str("\n  bars: fwd █  bwd ▓  opt ▒ (scaled to slowest scenario)\n");
+    Figure {
+        id: "campaign_breakdown",
+        title: "Campaign — phase/communication breakdown".into(),
+        ascii: out,
+        csv,
+        svg: None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake(name: &str, tp: f64) -> ScenarioSummary {
+        ScenarioSummary {
+            name: name.into(),
+            fingerprint: 1,
+            label: "b1s4".into(),
+            fsdp: "FSDPv1".into(),
+            layers: 2,
+            batch: 1,
+            seq: 4096,
+            tokens_per_sec: tp,
+            iter_ms: 10.0,
+            launch_ms: 1.0,
+            fwd_ms: 3.0,
+            bwd_ms: 6.0,
+            opt_ms: 1.0,
+            allgather_ms: 0.4,
+            reduce_scatter_ms: 0.6,
+            overlap_fa: 0.8,
+            freq_mhz: 1900.0,
+            freq_loss: 0.09,
+            power_w: 700.0,
+            span_ms: 25.0,
+            events: 1234,
+        }
+    }
+
+    #[test]
+    fn table_normalizes_to_first_scenario() {
+        let f = campaign_table(&[fake("a", 1000.0), fake("b", 2000.0)]);
+        assert!(f.ascii.contains("1.00x"));
+        assert!(f.ascii.contains("2.00x"));
+        let row_b = f.csv.lines().find(|l| l.starts_with("b,")).unwrap();
+        let rel: f64 = row_b.split(',').nth(7).unwrap().parse().unwrap();
+        assert!((rel - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn figures_render_nonempty() {
+        let rows = vec![fake("a", 1000.0), fake("b", 1500.0)];
+        for f in [campaign_table(&rows), campaign_breakdown(&rows)] {
+            assert!(!f.ascii.trim().is_empty(), "{} ascii empty", f.id);
+            assert!(f.csv.lines().count() >= 3, "{} csv short", f.id);
+        }
+    }
+
+    #[test]
+    fn rendering_is_deterministic() {
+        let rows = vec![fake("a", 1000.0), fake("b", 1500.0)];
+        let x = campaign_table(&rows);
+        let y = campaign_table(&rows);
+        assert_eq!(x.ascii, y.ascii);
+        assert_eq!(x.csv, y.csv);
+    }
+}

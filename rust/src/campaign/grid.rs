@@ -1,0 +1,360 @@
+//! Declarative scenario grids: cartesian products of model configuration ×
+//! workload configuration × engine-parameter ablations, expanded into
+//! named, seeded scenarios in a deterministic order.
+
+use crate::config::{FsdpVersion, ModelConfig, WorkloadConfig};
+use crate::sim::EngineParams;
+
+/// One fully specified simulation scenario — everything the engine needs,
+/// plus a stable human-readable name that doubles as the cache key prefix.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub name: String,
+    pub model: ModelConfig,
+    pub wl: WorkloadConfig,
+    pub params: EngineParams,
+}
+
+/// An [`EngineParams`] knob a grid can ablate (DESIGN.md §5 mechanisms).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Knob {
+    SpinPenalty,
+    TransferPenalty,
+    CommStretch,
+    RankJitter,
+    ComputeJitter,
+    DispatchJitter,
+    CommDelaySigmaNs,
+    FarRankDelayNs,
+    DvfsWindowNs,
+}
+
+impl Knob {
+    pub const ALL: [Knob; 9] = [
+        Knob::SpinPenalty,
+        Knob::TransferPenalty,
+        Knob::CommStretch,
+        Knob::RankJitter,
+        Knob::ComputeJitter,
+        Knob::DispatchJitter,
+        Knob::CommDelaySigmaNs,
+        Knob::FarRankDelayNs,
+        Knob::DvfsWindowNs,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Knob::SpinPenalty => "spin_penalty",
+            Knob::TransferPenalty => "transfer_penalty",
+            Knob::CommStretch => "comm_stretch",
+            Knob::RankJitter => "rank_jitter",
+            Knob::ComputeJitter => "compute_jitter",
+            Knob::DispatchJitter => "dispatch_jitter",
+            Knob::CommDelaySigmaNs => "comm_delay_sigma_ns",
+            Knob::FarRankDelayNs => "far_rank_delay_ns",
+            Knob::DvfsWindowNs => "dvfs_window_ns",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Knob> {
+        Knob::ALL.iter().copied().find(|k| k.name() == s)
+    }
+
+    pub fn apply(&self, p: &mut EngineParams, v: f64) {
+        match self {
+            Knob::SpinPenalty => p.spin_penalty = v,
+            Knob::TransferPenalty => p.transfer_penalty = v,
+            Knob::CommStretch => p.comm_stretch = v,
+            Knob::RankJitter => p.rank_jitter = v,
+            Knob::ComputeJitter => p.compute_jitter = v,
+            Knob::DispatchJitter => p.dispatch_jitter = v,
+            Knob::CommDelaySigmaNs => p.comm_delay_sigma_ns = v,
+            Knob::FarRankDelayNs => p.far_rank_delay_ns = v,
+            Knob::DvfsWindowNs => p.dvfs_window_ns = v,
+        }
+    }
+
+    pub fn get(&self, p: &EngineParams) -> f64 {
+        match self {
+            Knob::SpinPenalty => p.spin_penalty,
+            Knob::TransferPenalty => p.transfer_penalty,
+            Knob::CommStretch => p.comm_stretch,
+            Knob::RankJitter => p.rank_jitter,
+            Knob::ComputeJitter => p.compute_jitter,
+            Knob::DispatchJitter => p.dispatch_jitter,
+            Knob::CommDelaySigmaNs => p.comm_delay_sigma_ns,
+            Knob::FarRankDelayNs => p.far_rank_delay_ns,
+            Knob::DvfsWindowNs => p.dvfs_window_ns,
+        }
+    }
+}
+
+/// A cartesian scenario grid. Every axis is a list; [`GridSpec::expand`]
+/// produces the product in declared order (layers, then batch, then seq,
+/// then FSDP version, then each ablation axis — innermost last), which is
+/// the order results are reported in.
+#[derive(Debug, Clone)]
+pub struct GridSpec {
+    pub base_model: ModelConfig,
+    pub base_params: EngineParams,
+    pub layers: Vec<u64>,
+    pub batches: Vec<u64>,
+    /// Sequence lengths in tokens.
+    pub seqs: Vec<u64>,
+    pub fsdp: Vec<FsdpVersion>,
+    pub iterations: u32,
+    pub warmup: u32,
+    /// Base seed; each scenario derives its own seed from this and its name.
+    pub seed: u64,
+    /// Engine-parameter ablation axes: (knob, values). A knob value equal
+    /// to the base default still counts as a grid point.
+    pub ablations: Vec<(Knob, Vec<f64>)>,
+}
+
+impl GridSpec {
+    /// The paper's Fig. 4 axes as a proper cartesian grid: b×{1,2,4} ×
+    /// s×{4K,8K} × {v1,v2} at the given layer count — 12 scenarios.
+    pub fn paper(layers: u64, iterations: u32, warmup: u32) -> Self {
+        Self {
+            base_model: ModelConfig::llama3_8b(),
+            base_params: EngineParams::default(),
+            layers: vec![layers],
+            batches: vec![1, 2, 4],
+            seqs: vec![4096, 8192],
+            fsdp: vec![FsdpVersion::V1, FsdpVersion::V2],
+            iterations,
+            warmup,
+            seed: 0xC0FFEE,
+            ablations: Vec::new(),
+        }
+    }
+
+    /// Number of scenarios [`expand`](Self::expand) will produce.
+    pub fn len(&self) -> usize {
+        let mut n = self.layers.len()
+            * self.batches.len()
+            * self.seqs.len()
+            * self.fsdp.len();
+        for (_, vals) in &self.ablations {
+            n *= vals.len().max(1);
+        }
+        n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Expand the cartesian product into named scenarios, deterministic in
+    /// both order and content.
+    pub fn expand(&self) -> Vec<Scenario> {
+        let mut out = Vec::with_capacity(self.len());
+        for &layers in &self.layers {
+            for &batch in &self.batches {
+                for &seq in &self.seqs {
+                    for &fsdp in &self.fsdp {
+                        self.expand_ablations(layers, batch, seq, fsdp, &mut out);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    fn expand_ablations(
+        &self,
+        layers: u64,
+        batch: u64,
+        seq: u64,
+        fsdp: FsdpVersion,
+        out: &mut Vec<Scenario>,
+    ) {
+        // Odometer over the ablation axes (empty product = one scenario).
+        let axes: Vec<(Knob, &[f64])> = self
+            .ablations
+            .iter()
+            .filter(|(_, vals)| !vals.is_empty())
+            .map(|(k, vals)| (*k, vals.as_slice()))
+            .collect();
+        let mut idx = vec![0usize; axes.len()];
+        loop {
+            let mut model = self.base_model.clone();
+            model.layers = layers;
+            let mut params = self.base_params.clone();
+            let mut name = format!("L{layers}-b{batch}s{}-{fsdp}", seq / 1024);
+            for (pos, (knob, vals)) in axes.iter().enumerate() {
+                let v = vals[idx[pos]];
+                knob.apply(&mut params, v);
+                let mut tag = format!("{v}");
+                // Keep names filesystem-friendly.
+                tag = tag.replace('.', "_").replace('+', "_").replace('-', "m");
+                name.push_str(&format!("-{}{}", knob.name(), tag));
+            }
+            let mut wl = WorkloadConfig::new(batch, seq, fsdp);
+            wl.iterations = self.iterations;
+            wl.warmup = self.warmup;
+            // Per-scenario seed: stable under grid reordering because it
+            // depends only on the scenario name and the base seed.
+            wl.seed = self.seed ^ crate::campaign::cache::fnv1a(name.as_bytes());
+            out.push(Scenario {
+                name,
+                model,
+                wl,
+                params,
+            });
+            // Advance the odometer; done when it wraps.
+            let mut pos = axes.len();
+            loop {
+                if pos == 0 {
+                    return;
+                }
+                pos -= 1;
+                idx[pos] += 1;
+                if idx[pos] < axes[pos].1.len() {
+                    break;
+                }
+                idx[pos] = 0;
+            }
+        }
+    }
+}
+
+/// Parse a comma-separated list of integers ("1,2,4").
+pub fn parse_list_u64(s: &str) -> Result<Vec<u64>, String> {
+    s.split(',')
+        .filter(|t| !t.trim().is_empty())
+        .map(|t| {
+            t.trim()
+                .parse()
+                .map_err(|_| format!("bad integer `{t}` in list `{s}`"))
+        })
+        .collect()
+}
+
+/// Parse a comma-separated list of floats ("0.05,0.2").
+pub fn parse_list_f64(s: &str) -> Result<Vec<f64>, String> {
+    s.split(',')
+        .filter(|t| !t.trim().is_empty())
+        .map(|t| {
+            t.trim()
+                .parse()
+                .map_err(|_| format!("bad number `{t}` in list `{s}`"))
+        })
+        .collect()
+}
+
+/// Parse a comma-separated FSDP-version list ("v1,v2").
+pub fn parse_list_fsdp(s: &str) -> Result<Vec<FsdpVersion>, String> {
+    s.split(',')
+        .filter(|t| !t.trim().is_empty())
+        .map(|t| match t.trim() {
+            "v1" | "V1" | "fsdpv1" | "FSDPv1" => Ok(FsdpVersion::V1),
+            "v2" | "V2" | "fsdpv2" | "FSDPv2" => Ok(FsdpVersion::V2),
+            other => Err(format!("bad FSDP version `{other}` (use v1/v2)")),
+        })
+        .collect()
+}
+
+/// Parse an ablation spec: `knob=v1,v2[;knob2=v3,v4]`.
+pub fn parse_ablations(s: &str) -> Result<Vec<(Knob, Vec<f64>)>, String> {
+    let mut out = Vec::new();
+    for part in s.split(';').filter(|p| !p.trim().is_empty()) {
+        let (k, vals) = part
+            .split_once('=')
+            .ok_or_else(|| format!("bad ablation `{part}` (want knob=v1,v2)"))?;
+        let knob = Knob::parse(k.trim()).ok_or_else(|| {
+            let names: Vec<&str> = Knob::ALL.iter().map(|k| k.name()).collect();
+            format!("unknown knob `{}` (have: {})", k.trim(), names.join(", "))
+        })?;
+        out.push((knob, parse_list_f64(vals)?));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_grid_is_twelve_scenarios() {
+        let g = GridSpec::paper(2, 2, 1);
+        let scs = g.expand();
+        assert_eq!(scs.len(), 12);
+        assert_eq!(scs.len(), g.len());
+        assert!(scs.iter().any(|s| s.name == "L2-b1s4-FSDPv1"));
+        assert!(scs.iter().any(|s| s.name == "L2-b4s8-FSDPv2"));
+    }
+
+    #[test]
+    fn names_are_unique_and_order_is_stable() {
+        let mut g = GridSpec::paper(2, 2, 1);
+        g.ablations = vec![(Knob::SpinPenalty, vec![0.05, 0.2])];
+        let a = g.expand();
+        let b = g.expand();
+        let names: Vec<&str> = a.iter().map(|s| s.name.as_str()).collect();
+        let mut uniq = names.clone();
+        uniq.sort();
+        uniq.dedup();
+        assert_eq!(uniq.len(), names.len(), "duplicate scenario names");
+        assert_eq!(a.len(), 24);
+        let names_b: Vec<&str> = b.iter().map(|s| s.name.as_str()).collect();
+        assert_eq!(names, names_b);
+    }
+
+    #[test]
+    fn ablation_values_are_applied() {
+        let mut g = GridSpec::paper(2, 2, 1);
+        g.batches = vec![1];
+        g.seqs = vec![4096];
+        g.fsdp = vec![FsdpVersion::V1];
+        g.ablations = vec![
+            (Knob::SpinPenalty, vec![0.5]),
+            (Knob::DvfsWindowNs, vec![5e5, 1e6]),
+        ];
+        let scs = g.expand();
+        assert_eq!(scs.len(), 2);
+        for sc in &scs {
+            assert_eq!(sc.params.spin_penalty, 0.5);
+        }
+        assert_eq!(scs[0].params.dvfs_window_ns, 5e5);
+        assert_eq!(scs[1].params.dvfs_window_ns, 1e6);
+    }
+
+    #[test]
+    fn seeds_differ_between_scenarios() {
+        let scs = GridSpec::paper(2, 2, 1).expand();
+        let mut seeds: Vec<u64> = scs.iter().map(|s| s.wl.seed).collect();
+        seeds.sort();
+        seeds.dedup();
+        assert_eq!(seeds.len(), scs.len());
+    }
+
+    #[test]
+    fn knob_roundtrip() {
+        let p = EngineParams::default();
+        for k in Knob::ALL {
+            assert_eq!(Knob::parse(k.name()), Some(k));
+            let mut q = p.clone();
+            k.apply(&mut q, 123.5);
+            assert_eq!(k.get(&q), 123.5);
+        }
+        assert_eq!(Knob::parse("nope"), None);
+    }
+
+    #[test]
+    fn list_parsers() {
+        assert_eq!(parse_list_u64("1,2,4").unwrap(), vec![1, 2, 4]);
+        assert!(parse_list_u64("1,x").is_err());
+        assert_eq!(parse_list_f64("0.5, 2").unwrap(), vec![0.5, 2.0]);
+        assert_eq!(
+            parse_list_fsdp("v1,v2").unwrap(),
+            vec![FsdpVersion::V1, FsdpVersion::V2]
+        );
+        let ab = parse_ablations("spin_penalty=0.1,0.2;dvfs_window_ns=5e5")
+            .unwrap();
+        assert_eq!(ab.len(), 2);
+        assert_eq!(ab[0].0, Knob::SpinPenalty);
+        assert_eq!(ab[0].1, vec![0.1, 0.2]);
+        assert!(parse_ablations("bogus=1").is_err());
+    }
+}

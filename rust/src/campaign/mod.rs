@@ -1,0 +1,30 @@
+//! Scenario-campaign subsystem: declarative scenario grids, a parallel
+//! deterministic fan-out runner, an on-disk result cache, and
+//! cross-scenario comparison reports.
+//!
+//! The paper's insights come from comparing many workload configurations
+//! side by side (the Fig. 4/6 b×s × FSDP sweeps). This module generalizes
+//! that pattern: a [`GridSpec`] expands cartesian products of model /
+//! workload / [`EngineParams`](crate::sim::EngineParams) axes into named,
+//! seeded [`Scenario`]s; [`runner`] fans them out over scoped threads while
+//! guaranteeing results come back in grid order (so parallel output is
+//! byte-identical to a serial run); [`cache`] fingerprints each scenario
+//! and persists its [`ScenarioSummary`] as a JSON artifact so re-running a
+//! campaign only executes changed scenarios; [`compare`] renders the
+//! cross-scenario tables as [`Figure`](crate::chopper::report::Figure)s.
+//!
+//! Driven by `chopper campaign` (see cli::commands) and
+//! `examples/campaign.rs`; `report::run_sweep` rides the same runner.
+
+pub mod cache;
+pub mod compare;
+pub mod grid;
+pub mod runner;
+
+pub use cache::{fingerprint, fnv1a, Cache};
+pub use compare::{campaign_breakdown, campaign_table};
+pub use grid::{GridSpec, Knob, Scenario};
+pub use runner::{
+    default_jobs, run_campaign, run_ordered, summarize, CampaignOutcome,
+    ScenarioSummary,
+};

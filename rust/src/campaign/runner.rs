@@ -1,0 +1,386 @@
+//! Deterministic parallel fan-out over scenarios, plus the per-scenario
+//! summary the cache persists and the comparison layer consumes.
+//!
+//! Workers are `std::thread::scope` threads pulling scenario indices from a
+//! shared atomic counter; each result lands in its grid-order slot, so the
+//! collected output is identical — byte for byte once rendered — to a
+//! serial run. Per-scenario determinism comes from the engine itself (every
+//! stochastic mechanism draws from seeded substreams, never from global
+//! state), which `tests/campaign.rs` asserts end to end.
+
+use crate::campaign::cache::{fingerprint, Cache};
+use crate::campaign::grid::Scenario;
+use crate::chopper::overlap::summarize_op_overlap;
+use crate::chopper::throughput::throughput;
+use crate::config::NodeSpec;
+use crate::model::ops::{OpRef, OpType, Phase};
+use crate::sim::{run_workload_with, ProfiledRun};
+use crate::trace::event::Stream;
+use crate::util::json::Json;
+use crate::util::stats;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Worker count: one per available hardware thread.
+pub fn default_jobs() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Run `f` over `items` on up to `jobs` scoped threads; results come back
+/// in input order regardless of completion order. `jobs <= 1` runs inline.
+pub fn run_ordered<I, T, F>(items: &[I], jobs: usize, f: F) -> Vec<T>
+where
+    I: Sync,
+    T: Send,
+    F: Fn(usize, &I) -> T + Sync,
+{
+    let jobs = jobs.min(items.len()).max(1);
+    if jobs <= 1 {
+        return items.iter().enumerate().map(|(i, it)| f(i, it)).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<T>>> =
+        items.iter().map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..jobs {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= items.len() {
+                    break;
+                }
+                let out = f(i, &items[i]);
+                *slots[i].lock().unwrap() = Some(out);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("worker filled every slot"))
+        .collect()
+}
+
+/// The persisted per-scenario record: everything the comparison tables
+/// need, small enough to keep thousands on disk. Durations in ms.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioSummary {
+    pub name: String,
+    pub fingerprint: u64,
+    pub label: String,
+    pub fsdp: String,
+    pub layers: u64,
+    pub batch: u64,
+    pub seq: u64,
+    pub tokens_per_sec: f64,
+    /// Median per-iteration cost of the slowest GPU.
+    pub iter_ms: f64,
+    pub launch_ms: f64,
+    /// Median per-(gpu,iter) summed compute duration by phase.
+    pub fwd_ms: f64,
+    pub bwd_ms: f64,
+    pub opt_ms: f64,
+    /// Median communication kernel durations (sampled iterations).
+    pub allgather_ms: f64,
+    pub reduce_scatter_ms: f64,
+    /// Median overlap ratio of f_attn_fa (the paper's Fig. 9 quantity).
+    pub overlap_fa: f64,
+    /// Mean GPU frequency over active windows (power > 400 W).
+    pub freq_mhz: f64,
+    /// DVFS overhead: fraction of peak frequency lost, (peak-f)/peak.
+    pub freq_loss: f64,
+    pub power_w: f64,
+    pub span_ms: f64,
+    pub events: u64,
+}
+
+fn num(j: &Json, k: &str) -> Result<f64, String> {
+    j.get(k)
+        .and_then(|v| v.as_f64())
+        .ok_or_else(|| format!("summary missing number `{k}`"))
+}
+
+fn text(j: &Json, k: &str) -> Result<String, String> {
+    j.get(k)
+        .and_then(|v| v.as_str())
+        .map(|s| s.to_string())
+        .ok_or_else(|| format!("summary missing string `{k}`"))
+}
+
+impl ScenarioSummary {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            // u64 doesn't round-trip through f64 above 2^53; store as hex.
+            ("fingerprint", Json::str(format!("{:016x}", self.fingerprint))),
+            ("label", Json::str(self.label.clone())),
+            ("fsdp", Json::str(self.fsdp.clone())),
+            ("layers", Json::num(self.layers as f64)),
+            ("batch", Json::num(self.batch as f64)),
+            ("seq", Json::num(self.seq as f64)),
+            ("tokens_per_sec", Json::num(self.tokens_per_sec)),
+            ("iter_ms", Json::num(self.iter_ms)),
+            ("launch_ms", Json::num(self.launch_ms)),
+            ("fwd_ms", Json::num(self.fwd_ms)),
+            ("bwd_ms", Json::num(self.bwd_ms)),
+            ("opt_ms", Json::num(self.opt_ms)),
+            ("allgather_ms", Json::num(self.allgather_ms)),
+            ("reduce_scatter_ms", Json::num(self.reduce_scatter_ms)),
+            ("overlap_fa", Json::num(self.overlap_fa)),
+            ("freq_mhz", Json::num(self.freq_mhz)),
+            ("freq_loss", Json::num(self.freq_loss)),
+            ("power_w", Json::num(self.power_w)),
+            ("span_ms", Json::num(self.span_ms)),
+            ("events", Json::num(self.events as f64)),
+        ])
+    }
+
+    pub fn to_json_str(&self) -> String {
+        self.to_json().to_string()
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        let fp_hex = text(j, "fingerprint")?;
+        let fingerprint = u64::from_str_radix(&fp_hex, 16)
+            .map_err(|_| format!("bad fingerprint `{fp_hex}`"))?;
+        Ok(Self {
+            name: text(j, "name")?,
+            fingerprint,
+            label: text(j, "label")?,
+            fsdp: text(j, "fsdp")?,
+            layers: num(j, "layers")? as u64,
+            batch: num(j, "batch")? as u64,
+            seq: num(j, "seq")? as u64,
+            tokens_per_sec: num(j, "tokens_per_sec")?,
+            iter_ms: num(j, "iter_ms")?,
+            launch_ms: num(j, "launch_ms")?,
+            fwd_ms: num(j, "fwd_ms")?,
+            bwd_ms: num(j, "bwd_ms")?,
+            opt_ms: num(j, "opt_ms")?,
+            allgather_ms: num(j, "allgather_ms")?,
+            reduce_scatter_ms: num(j, "reduce_scatter_ms")?,
+            overlap_fa: num(j, "overlap_fa")?,
+            freq_mhz: num(j, "freq_mhz")?,
+            freq_loss: num(j, "freq_loss")?,
+            power_w: num(j, "power_w")?,
+            span_ms: num(j, "span_ms")?,
+            events: num(j, "events")? as u64,
+        })
+    }
+
+    pub fn from_json_str(s: &str) -> Result<Self, String> {
+        Self::from_json(&crate::util::json::parse(s)?)
+    }
+}
+
+/// Reduce one profiled run to its persisted summary.
+pub fn summarize(
+    node: &NodeSpec,
+    sc: &Scenario,
+    fp: u64,
+    run: &ProfiledRun,
+) -> ScenarioSummary {
+    let trace = &run.trace;
+    let warmup = trace.meta.warmup;
+    let tokens = sc.wl.tokens_per_iteration(trace.meta.num_gpus as u64) as f64;
+    let tp = throughput(trace, tokens);
+
+    // Per-(gpu, iter) summed compute duration by phase → median.
+    let mut per_phase: std::collections::BTreeMap<(Phase, u32, u32), f64> =
+        std::collections::BTreeMap::new();
+    for e in trace.events.iter() {
+        if e.stream == Stream::Comm || e.iter < warmup {
+            continue;
+        }
+        *per_phase.entry((e.op.phase, e.gpu, e.iter)).or_insert(0.0) +=
+            e.duration();
+    }
+    let phase_median = |ph: Phase| -> f64 {
+        let xs: Vec<f64> = per_phase
+            .iter()
+            .filter(|((p, _, _), _)| *p == ph)
+            .map(|(_, v)| *v)
+            .collect();
+        if xs.is_empty() {
+            0.0
+        } else {
+            stats::median(&xs) / 1e6
+        }
+    };
+
+    let comm_median = |op: OpType| -> f64 {
+        let xs: Vec<f64> = trace
+            .events
+            .iter()
+            .filter(|e| e.stream == Stream::Comm && e.op.op == op && e.iter >= warmup)
+            .map(|e| e.duration())
+            .collect();
+        if xs.is_empty() {
+            0.0
+        } else {
+            stats::median(&xs) / 1e6
+        }
+    };
+
+    let fa = summarize_op_overlap(trace, OpRef::fwd(OpType::AttnFa));
+
+    // Active-window telemetry, the paper's Fig. 14 averaging.
+    let active: Vec<&crate::trace::event::PowerSample> = run
+        .power
+        .samples
+        .iter()
+        .filter(|s| s.power_w > 400.0)
+        .collect();
+    let freqs: Vec<f64> = active.iter().map(|s| s.freq_mhz).collect();
+    let powers: Vec<f64> = active.iter().map(|s| s.power_w).collect();
+    let freq_mhz = finite(stats::mean(&freqs));
+    let peak = node.gpu.freq_peak_mhz.max(1.0);
+    // No active windows (degenerate workload): report zero DVFS loss
+    // rather than "100% of peak lost" to a frequency that never existed.
+    let freq_loss = if freqs.is_empty() {
+        0.0
+    } else {
+        ((peak - freq_mhz) / peak).max(0.0)
+    };
+
+    ScenarioSummary {
+        name: sc.name.clone(),
+        fingerprint: fp,
+        label: sc.wl.label(),
+        fsdp: sc.wl.fsdp.to_string(),
+        layers: sc.model.layers,
+        batch: sc.wl.batch,
+        seq: sc.wl.seq,
+        tokens_per_sec: finite(tp.tokens_per_sec),
+        iter_ms: finite(tp.iter_ns / 1e6),
+        launch_ms: finite(tp.launch_ns / 1e6),
+        fwd_ms: phase_median(Phase::Forward),
+        bwd_ms: phase_median(Phase::Backward),
+        opt_ms: phase_median(Phase::Optimizer),
+        allgather_ms: comm_median(OpType::AllGather),
+        reduce_scatter_ms: comm_median(OpType::ReduceScatter),
+        overlap_fa: finite(fa.ratio_q[2]),
+        freq_mhz,
+        freq_loss,
+        power_w: finite(stats::mean(&powers)),
+        span_ms: finite(trace.span_ns() / 1e6),
+        events: trace.events.len() as u64,
+    }
+}
+
+/// NaN/inf would serialize as invalid JSON (and poison the cache with
+/// permanently-missing artifacts); degenerate inputs summarize to 0.
+fn finite(x: f64) -> f64 {
+    if x.is_finite() {
+        x
+    } else {
+        0.0
+    }
+}
+
+/// Outcome of one campaign run.
+#[derive(Debug)]
+pub struct CampaignOutcome {
+    /// Per-scenario summaries in grid order.
+    pub summaries: Vec<ScenarioSummary>,
+    /// Scenarios that actually ran the engine.
+    pub executed: usize,
+    /// Scenarios served from the on-disk cache.
+    pub cached: usize,
+}
+
+/// Run every scenario (parallel fan-out, grid-order results). With a cache,
+/// scenarios whose fingerprint already has an artifact are loaded instead
+/// of executed — unless `force` bypasses lookups (results are still
+/// re-stored, refreshing the artifacts).
+pub fn run_campaign(
+    node: &NodeSpec,
+    scenarios: &[Scenario],
+    jobs: usize,
+    cache: Option<&Cache>,
+    force: bool,
+) -> CampaignOutcome {
+    let executed = AtomicUsize::new(0);
+    let cached = AtomicUsize::new(0);
+    let summaries = run_ordered(scenarios, jobs, |_, sc| {
+        let fp = fingerprint(node, sc);
+        if !force {
+            if let Some(hit) = cache.and_then(|c| c.load(&sc.name, fp)) {
+                cached.fetch_add(1, Ordering::Relaxed);
+                return hit;
+            }
+        }
+        let run = run_workload_with(node, &sc.model, &sc.wl, sc.params.clone());
+        let summary = summarize(node, sc, fp, &run);
+        if let Some(c) = cache {
+            // Best-effort: a failed write only costs a future re-run.
+            let _ = c.store(&summary);
+        }
+        executed.fetch_add(1, Ordering::Relaxed);
+        summary
+    });
+    CampaignOutcome {
+        summaries,
+        executed: executed.load(Ordering::Relaxed),
+        cached: cached.load(Ordering::Relaxed),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_ordered_preserves_input_order() {
+        let items: Vec<usize> = (0..37).collect();
+        let serial = run_ordered(&items, 1, |i, x| i * 1000 + *x);
+        let parallel = run_ordered(&items, 4, |i, x| i * 1000 + *x);
+        assert_eq!(serial, parallel);
+        assert_eq!(serial[5], 5005);
+    }
+
+    #[test]
+    fn run_ordered_handles_empty_and_oversubscribed() {
+        let empty: Vec<u32> = Vec::new();
+        assert!(run_ordered(&empty, 8, |_, x| *x).is_empty());
+        let one = vec![7u32];
+        assert_eq!(run_ordered(&one, 8, |_, x| *x + 1), vec![8]);
+    }
+
+    #[test]
+    fn summary_json_roundtrip_is_exact() {
+        let s = ScenarioSummary {
+            name: "L2-b1s4-FSDPv1".into(),
+            fingerprint: 0xdeadbeef12345678,
+            label: "b1s4".into(),
+            fsdp: "FSDPv1".into(),
+            layers: 2,
+            batch: 1,
+            seq: 4096,
+            tokens_per_sec: 12345.6789012345,
+            iter_ms: 3.14159,
+            launch_ms: 0.25,
+            fwd_ms: 1.0 / 3.0,
+            bwd_ms: 2.0 / 3.0,
+            opt_ms: 0.1,
+            allgather_ms: 0.5,
+            reduce_scatter_ms: 0.75,
+            overlap_fa: 0.875,
+            freq_mhz: 1870.123456,
+            freq_loss: 0.1234567890123,
+            power_w: 698.7,
+            span_ms: 123.456,
+            events: 9999,
+        };
+        let back = ScenarioSummary::from_json_str(&s.to_json_str()).unwrap();
+        assert_eq!(s, back);
+        // Twice through the wire must be byte-stable.
+        assert_eq!(s.to_json_str(), back.to_json_str());
+    }
+
+    #[test]
+    fn summary_parse_rejects_missing_fields() {
+        assert!(ScenarioSummary::from_json_str("{}").is_err());
+        assert!(ScenarioSummary::from_json_str("not json").is_err());
+    }
+}

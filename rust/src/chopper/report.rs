@@ -62,6 +62,10 @@ impl SweepRun {
 /// Profile the paper's configuration sweep (b1s4, b2s4, b4s4, b1s8, b2s8)
 /// for the given FSDP versions. `iterations`/`warmup` let tests/benches
 /// trade fidelity for speed (the paper uses 20/10).
+///
+/// Workloads fan out over the campaign runner (one worker per hardware
+/// thread); each simulation is independently seeded, so the results are
+/// identical to the old serial loop, in the same order.
 pub fn run_sweep(
     node: &NodeSpec,
     cfg: &ModelConfig,
@@ -69,16 +73,23 @@ pub fn run_sweep(
     iterations: u32,
     warmup: u32,
 ) -> Vec<SweepRun> {
-    let mut out = Vec::new();
+    let mut wls = Vec::new();
     for &v in versions {
         for mut wl in WorkloadConfig::paper_sweep(v) {
             wl.iterations = iterations;
             wl.warmup = warmup;
-            let run = run_workload(node, cfg, &wl);
-            out.push(SweepRun { wl, run });
+            wls.push(wl);
         }
     }
-    out
+    let jobs = crate::campaign::runner::default_jobs();
+    let runs =
+        crate::campaign::runner::run_ordered(&wls, jobs, |_, wl| {
+            run_workload(node, cfg, wl)
+        });
+    wls.into_iter()
+        .zip(runs)
+        .map(|(wl, run)| SweepRun { wl, run })
+        .collect()
 }
 
 // ---------------------------------------------------------------------------

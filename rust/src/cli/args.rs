@@ -10,6 +10,18 @@ pub struct Args {
     pub positional: Vec<String>,
     flags: BTreeMap<String, String>,
     consumed: Vec<String>,
+    pos_consumed: usize,
+}
+
+/// Is this token a flag (as opposed to a value)? Anything not starting
+/// with `--` is a value — including `-0.01`-style negative numbers — and
+/// so is a `--`-prefixed token that parses as a number, so flag values can
+/// never be swallowed as switches.
+fn looks_like_flag(tok: &str) -> bool {
+    match tok.strip_prefix("--") {
+        Some(rest) => rest.is_empty() || rest.parse::<f64>().is_err(),
+        None => false,
+    }
 }
 
 impl Args {
@@ -30,7 +42,7 @@ impl Args {
                     a.flags.insert(k.to_string(), v.to_string());
                 } else if it
                     .peek()
-                    .map(|n| !n.starts_with("--"))
+                    .map(|n| !looks_like_flag(n))
                     .unwrap_or(false)
                 {
                     let v = it.next().unwrap();
@@ -44,6 +56,16 @@ impl Args {
             }
         }
         Ok(a)
+    }
+
+    /// Consume the next positional argument, in order. Positionals not
+    /// consumed by a command are rejected by [`Args::finish`].
+    pub fn take_positional(&mut self) -> Option<String> {
+        let v = self.positional.get(self.pos_consumed).cloned();
+        if v.is_some() {
+            self.pos_consumed += 1;
+        }
+        v
     }
 
     pub fn flag(&mut self, name: &str) -> Option<String> {
@@ -80,12 +102,17 @@ impl Args {
         self.flag(name).map(|v| v != "false").unwrap_or(false)
     }
 
-    /// Error on flags nobody consumed (catches typos).
+    /// Error on flags nobody consumed and on leftover positional
+    /// arguments (catches typos). Every subcommand calls this after it has
+    /// taken what it needs, so unknown input fails uniformly.
     pub fn finish(&self) -> Result<(), String> {
         for k in self.flags.keys() {
             if !self.consumed.contains(k) {
                 return Err(format!("unknown flag --{k}"));
             }
+        }
+        if let Some(extra) = self.positional.get(self.pos_consumed) {
+            return Err(format!("unexpected argument `{extra}`"));
         }
         Ok(())
     }
@@ -104,10 +131,32 @@ mod tests {
         let mut a = parse("chopper figure fig4 --layers 8 --out /tmp/x --fast");
         assert_eq!(a.subcommand, "figure");
         assert_eq!(a.positional, vec!["fig4"]);
+        assert_eq!(a.take_positional().as_deref(), Some("fig4"));
         assert_eq!(a.flag_u32("layers", 32).unwrap(), 8);
         assert_eq!(a.flag_or("out", "."), "/tmp/x");
         assert!(a.switch("fast"));
         assert!(a.finish().is_ok());
+        assert_eq!(a.take_positional(), None);
+    }
+
+    #[test]
+    fn negative_numbers_are_values_not_switches() {
+        let mut a = parse("chopper train --lr -0.01 --seed 7");
+        assert_eq!(a.flag_f32("lr", 2.0).unwrap(), -0.01);
+        assert_eq!(a.flag_u64("seed", 0).unwrap(), 7);
+        assert!(a.finish().is_ok());
+        // Even a doubled-dash numeric token is a value, not a flag.
+        let mut b = parse("chopper train --lr --0.5");
+        assert_eq!(b.flag_or("lr", "x"), "--0.5");
+    }
+
+    #[test]
+    fn leftover_positionals_rejected_by_finish() {
+        let a = parse("chopper sweep stray");
+        assert!(a.finish().is_err());
+        let mut b = parse("chopper figure fig4 extra");
+        assert_eq!(b.take_positional().as_deref(), Some("fig4"));
+        assert!(b.finish().is_err());
     }
 
     #[test]

@@ -1,5 +1,6 @@
 //! CLI subcommand implementations.
 
+use crate::campaign::{self, grid, Cache, GridSpec};
 use crate::chopper::report::{self, SweepRun};
 use crate::chopper::{CpuUtilAnalysis, Filter};
 use crate::cli::Args;
@@ -18,6 +19,16 @@ USAGE: chopper <subcommand> [options]
   sweep    [--layers N] [--iters N] [--warmup N] [--out DIR]
            Profile the paper sweep (b1s4 b2s4 b4s4 b1s8 b2s8 × v1,v2) and
            write every figure (txt/csv/svg) to DIR (default: figures/).
+  campaign [--layers 2,4] [--batch 1,2,4] [--seq 4,8 (K tokens)]
+           [--fsdp v1,v2] [--iters N] [--warmup N] [--seed N]
+           [--ablate knob=v1,v2[;knob2=...]] [--jobs N] [--cache-dir DIR]
+           [--force] [--no-cache] [--out DIR]
+           Expand the scenario grid (model × workload × engine-parameter
+           ablations), fan scenarios out over worker threads, reuse cached
+           results, and print cross-scenario comparison tables. Knobs:
+           spin_penalty transfer_penalty comm_stretch rank_jitter
+           compute_jitter dispatch_jitter comm_delay_sigma_ns
+           far_rank_delay_ns dvfs_window_ns.
   figure   <table2|fig4..fig15|all> [--layers N] [--iters N] [--out DIR]
            Regenerate one figure; prints the ASCII rendering.
   collect  [--workload b2s4] [--fsdp v1|v2] [--layers N] [--iters N]
@@ -73,6 +84,79 @@ pub fn cmd_sweep(args: &mut Args) -> Result<(), String> {
     Ok(())
 }
 
+/// `campaign` — expand a scenario grid, run it in parallel with caching,
+/// and render the cross-scenario comparison figures.
+pub fn cmd_campaign(args: &mut Args) -> Result<(), String> {
+    let layers = grid::parse_list_u64(&args.flag_or("layers", "2"))?;
+    let batches = grid::parse_list_u64(&args.flag_or("batch", "1,2,4"))?;
+    // Sequence lengths are given in K tokens, like the paper's labels.
+    let seqs: Vec<u64> = grid::parse_list_u64(&args.flag_or("seq", "4,8"))?
+        .into_iter()
+        .map(|k| k * 1024)
+        .collect();
+    let fsdp = grid::parse_list_fsdp(&args.flag_or("fsdp", "v1,v2"))?;
+    let iters = args.flag_u32("iters", 4)?;
+    let warmup = args.flag_u32("warmup", iters / 2)?;
+    let seed = args.flag_u64("seed", 0xC0FFEE)?;
+    let ablations = match args.flag("ablate") {
+        Some(s) => grid::parse_ablations(&s)?,
+        None => Vec::new(),
+    };
+    let jobs = args.flag_u32("jobs", campaign::default_jobs() as u32)? as usize;
+    let cache_dir: PathBuf = args.flag_or("cache-dir", ".chopper-cache").into();
+    let force = args.switch("force");
+    let no_cache = args.switch("no-cache");
+    let out = args.flag("out").map(PathBuf::from);
+    args.finish()?;
+
+    let mut spec = GridSpec::paper(2, iters, warmup);
+    spec.layers = layers;
+    spec.batches = batches;
+    spec.seqs = seqs;
+    spec.fsdp = fsdp;
+    spec.seed = seed;
+    spec.ablations = ablations;
+    let scenarios = spec.expand();
+    if scenarios.is_empty() {
+        return Err("campaign: empty grid (every axis needs ≥1 value)".into());
+    }
+    let cache = if no_cache {
+        None
+    } else {
+        Some(Cache::open(&cache_dir).map_err(|e| {
+            format!("campaign: cannot open cache {}: {e}", cache_dir.display())
+        })?)
+    };
+    eprintln!(
+        "campaign: {} scenarios × {} iterations, {jobs} worker(s), cache {}…",
+        scenarios.len(),
+        iters,
+        if no_cache { "off".to_string() } else { cache_dir.display().to_string() },
+    );
+    let node = NodeSpec::mi300x_node();
+    let t0 = std::time::Instant::now();
+    let outcome =
+        campaign::run_campaign(&node, &scenarios, jobs, cache.as_ref(), force);
+    eprintln!(
+        "campaign: {} executed, {} cached in {:.2}s",
+        outcome.executed,
+        outcome.cached,
+        t0.elapsed().as_secs_f64()
+    );
+    let figs = [
+        campaign::campaign_table(&outcome.summaries),
+        campaign::campaign_breakdown(&outcome.summaries),
+    ];
+    for f in &figs {
+        println!("{}", f.ascii);
+        if let Some(dir) = &out {
+            f.save(dir).map_err(|e| e.to_string())?;
+            eprintln!("wrote {}/{}.{{txt,csv}}", dir.display(), f.id);
+        }
+    }
+    Ok(())
+}
+
 fn find<'a>(runs: &'a [SweepRun], label: &str) -> Result<&'a SweepRun, String> {
     runs.iter()
         .find(|r| r.label() == label)
@@ -105,9 +189,7 @@ fn all_figures(
 
 pub fn cmd_figure(args: &mut Args) -> Result<(), String> {
     let id = args
-        .positional
-        .first()
-        .cloned()
+        .take_positional()
         .ok_or("figure: missing id (table2, fig4…fig15, all)")?;
     if id == "fig10" {
         args.finish()?;
@@ -184,9 +266,7 @@ pub fn cmd_collect(args: &mut Args) -> Result<(), String> {
 
 pub fn cmd_analyze(args: &mut Args) -> Result<(), String> {
     let path = args
-        .positional
-        .first()
-        .cloned()
+        .take_positional()
         .ok_or("analyze: missing trace path")?;
     args.finish()?;
     let trace = chrome::read_chrome_trace(std::path::Path::new(&path))?;
@@ -311,6 +391,36 @@ mod tests {
     #[test]
     fn unknown_flag_fails() {
         assert_eq!(run_cli("chopper config --bogus 1"), 1);
+    }
+
+    #[test]
+    fn stray_positional_fails() {
+        assert_eq!(run_cli("chopper config extra"), 1);
+    }
+
+    #[test]
+    fn campaign_runs_small_grid_and_caches() {
+        let dir = std::env::temp_dir()
+            .join(format!("chopper_cli_campaign_{}", std::process::id()));
+        let cache = dir.join("cache");
+        let cmd = format!(
+            "chopper campaign --layers 2 --batch 1 --seq 4 --fsdp v1,v2 \
+             --iters 2 --warmup 1 --jobs 2 --cache-dir {}",
+            cache.display()
+        );
+        assert_eq!(run_cli(&cmd), 0);
+        // Second run is served from cache; still exits cleanly.
+        assert_eq!(run_cli(&cmd), 0);
+        assert!(cache.exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn campaign_rejects_unknown_knob() {
+        assert_eq!(
+            run_cli("chopper campaign --no-cache --ablate bogus=1 --iters 2"),
+            1
+        );
     }
 
     #[test]

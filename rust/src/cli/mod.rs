@@ -2,6 +2,8 @@
 //!
 //! Subcommands
 //!   sweep     — profile the paper's b×s × {v1,v2} sweep, write every figure
+//!   campaign  — expand a scenario grid, run it in parallel with caching,
+//!               and print cross-scenario comparison tables
 //!   figure    — regenerate one table/figure (fig4…fig15, table2)
 //!   collect   — profile one workload, write a chrome trace (+ telemetry)
 //!   analyze   — aggregate statistics from a chrome-trace file
@@ -29,6 +31,7 @@ pub fn run(argv: Vec<String>) -> i32 {
     let cmd = args.subcommand.clone();
     let result = match cmd.as_str() {
         "sweep" => commands::cmd_sweep(&mut args),
+        "campaign" => commands::cmd_campaign(&mut args),
         "figure" => commands::cmd_figure(&mut args),
         "collect" => commands::cmd_collect(&mut args),
         "analyze" => commands::cmd_analyze(&mut args),

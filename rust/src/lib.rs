@@ -11,10 +11,12 @@
 //! Layering (see DESIGN.md):
 //! * substrates: [`config`], [`model`], [`fsdp`], [`sim`], [`counters`]
 //! * the tool:   [`trace`], [`chopper`]
+//! * campaigns:  [`campaign`] (scenario grids, parallel runner, cache)
 //! * runtime:    [`runtime`] (PJRT), [`train`] (e2e driver)
 //! * glue:       [`cli`], [`util`], [`benchkit`]
 
 pub mod benchkit;
+pub mod campaign;
 pub mod chopper;
 pub mod cli;
 pub mod config;

@@ -6,6 +6,18 @@
 //! SplitMix64 (seeding) + xoshiro256** (bulk) generators. Algorithms by
 //! Blackman & Vigna (public domain reference implementations).
 
+/// FNV-1a 64-bit hash: keys PRNG substreams by label and content-addresses
+/// campaign cache entries — one shared implementation so the keying scheme
+/// can never desynchronize between the two.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in bytes {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
 /// SplitMix64: used to expand a single u64 seed into xoshiro state and to
 /// derive independent substreams (one per GPU, per subsystem) that stay
 /// stable when unrelated code adds draws.
@@ -48,12 +60,7 @@ impl Rng {
     /// Derive an independent substream keyed by a label. Stable: adding
     /// draws to the parent does not perturb children.
     pub fn substream(seed: u64, label: &str) -> Self {
-        let mut h = 0xcbf29ce484222325u64; // FNV-1a
-        for b in label.as_bytes() {
-            h ^= *b as u64;
-            h = h.wrapping_mul(0x100000001b3);
-        }
-        Self::new(seed ^ h)
+        Self::new(seed ^ fnv1a(label.as_bytes()))
     }
 
     pub fn next_u64(&mut self) -> u64 {

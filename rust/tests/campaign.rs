@@ -1,0 +1,169 @@
+//! Campaign subsystem integration tests: grid expansion, parallel-vs-serial
+//! determinism (byte-identical reports), and cache round-trips.
+
+use chopper::campaign::{
+    campaign_breakdown, campaign_table, fingerprint, run_campaign, Cache,
+    GridSpec, Knob, Scenario,
+};
+use chopper::config::{FsdpVersion, NodeSpec};
+use std::path::PathBuf;
+
+/// A small grid that still exercises every axis: 2 layers × b{1,2} ×
+/// s4K × {v1,v2} × spin_penalty{0.05,0.2} = 8 scenarios, 2 iterations.
+fn small_grid() -> Vec<Scenario> {
+    let mut spec = GridSpec::paper(2, 2, 1);
+    spec.batches = vec![1, 2];
+    spec.seqs = vec![4096];
+    spec.ablations = vec![(Knob::SpinPenalty, vec![0.05, 0.2])];
+    spec.expand()
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("chopper_campaign_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn grid_expansion_matches_len_and_is_deterministic() {
+    let mut spec = GridSpec::paper(2, 2, 1);
+    spec.ablations = vec![
+        (Knob::SpinPenalty, vec![0.05, 0.2]),
+        (Knob::DvfsWindowNs, vec![5e5, 1e6]),
+    ];
+    let a = spec.expand();
+    let b = spec.expand();
+    assert_eq!(a.len(), spec.len());
+    assert_eq!(a.len(), 12 * 4);
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.name, y.name);
+        assert_eq!(x.wl, y.wl);
+    }
+}
+
+#[test]
+fn parallel_runner_matches_serial_byte_for_byte() {
+    let node = NodeSpec::mi300x_node();
+    let scenarios = small_grid();
+    assert_eq!(scenarios.len(), 8);
+    let serial = run_campaign(&node, &scenarios, 1, None, false);
+    let parallel = run_campaign(&node, &scenarios, 4, None, false);
+    assert_eq!(serial.executed, scenarios.len());
+    assert_eq!(parallel.executed, scenarios.len());
+    // Identical structured results, in grid order...
+    assert_eq!(serial.summaries.len(), parallel.summaries.len());
+    for (a, b) in serial.summaries.iter().zip(&parallel.summaries) {
+        assert_eq!(a, b, "scenario {} diverged under parallelism", a.name);
+    }
+    // ...and byte-identical rendered reports.
+    let ta = campaign_table(&serial.summaries);
+    let tb = campaign_table(&parallel.summaries);
+    assert_eq!(ta.ascii, tb.ascii);
+    assert_eq!(ta.csv, tb.csv);
+    let ba = campaign_breakdown(&serial.summaries);
+    let bb = campaign_breakdown(&parallel.summaries);
+    assert_eq!(ba.ascii, bb.ascii);
+    assert_eq!(ba.csv, bb.csv);
+}
+
+#[test]
+fn cache_round_trip_and_force_bypass() {
+    let node = NodeSpec::mi300x_node();
+    let mut spec = GridSpec::paper(2, 2, 1);
+    spec.batches = vec![1];
+    spec.seqs = vec![4096];
+    let scenarios = spec.expand();
+    assert_eq!(scenarios.len(), 2);
+    let dir = tmpdir("roundtrip");
+    let cache = Cache::open(&dir).unwrap();
+
+    // Cold: everything executes, artifacts appear on disk.
+    let first = run_campaign(&node, &scenarios, 2, Some(&cache), false);
+    assert_eq!(first.executed, 2);
+    assert_eq!(first.cached, 0);
+    for sc in &scenarios {
+        let fp = fingerprint(&node, sc);
+        assert!(cache.path_for(&sc.name, fp).exists(), "{} not stored", sc.name);
+    }
+
+    // Warm: zero engine runs, identical summaries and rendered output.
+    let second = run_campaign(&node, &scenarios, 2, Some(&cache), false);
+    assert_eq!(second.executed, 0, "cache was not hit");
+    assert_eq!(second.cached, 2);
+    assert_eq!(first.summaries, second.summaries);
+    assert_eq!(
+        campaign_table(&first.summaries).ascii,
+        campaign_table(&second.summaries).ascii
+    );
+
+    // --force bypasses lookups and re-executes everything.
+    let forced = run_campaign(&node, &scenarios, 2, Some(&cache), true);
+    assert_eq!(forced.executed, 2);
+    assert_eq!(forced.cached, 0);
+    assert_eq!(first.summaries, forced.summaries);
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn changed_scenario_invalidates_only_its_entry() {
+    let node = NodeSpec::mi300x_node();
+    let mut spec = GridSpec::paper(2, 2, 1);
+    spec.batches = vec![1];
+    spec.seqs = vec![4096];
+    spec.fsdp = vec![FsdpVersion::V1];
+    let dir = tmpdir("invalidate");
+    let cache = Cache::open(&dir).unwrap();
+
+    let base = spec.expand();
+    assert_eq!(run_campaign(&node, &base, 1, Some(&cache), false).executed, 1);
+
+    // Same grid + one new ablation point: the base-parameter scenario gets
+    // a different fingerprint (knob in name/params), so both run fresh —
+    // but re-running the *original* grid still hits its artifact.
+    let again = run_campaign(&node, &base, 1, Some(&cache), false);
+    assert_eq!(again.executed, 0);
+    assert_eq!(again.cached, 1);
+
+    let mut tweaked = base.clone();
+    tweaked[0].params.spin_penalty += 0.01;
+    let fresh = run_campaign(&node, &tweaked, 1, Some(&cache), false);
+    assert_eq!(fresh.executed, 1, "changed params must miss the cache");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn sweep_runner_matches_campaign_scenarios() {
+    // report::run_sweep rides the same fan-out; spot-check it still
+    // produces the paper's 10 labeled runs in order.
+    use chopper::chopper::report::run_sweep;
+    use chopper::config::ModelConfig;
+    let node = NodeSpec::mi300x_node();
+    let mut cfg = ModelConfig::llama3_8b();
+    cfg.layers = 2;
+    let runs = run_sweep(
+        &node,
+        &cfg,
+        &[FsdpVersion::V1, FsdpVersion::V2],
+        2,
+        1,
+    );
+    assert_eq!(runs.len(), 10);
+    assert_eq!(runs[0].label(), "b1s4-FSDPv1");
+    assert_eq!(runs[9].label(), "b2s8-FSDPv2");
+    // Two invocations are identical (parallel fan-out is deterministic).
+    let runs2 = run_sweep(
+        &node,
+        &cfg,
+        &[FsdpVersion::V1, FsdpVersion::V2],
+        2,
+        1,
+    );
+    for (a, b) in runs.iter().zip(&runs2) {
+        assert_eq!(a.label(), b.label());
+        assert_eq!(a.run.trace.events.len(), b.run.trace.events.len());
+        assert_eq!(a.run.trace.span_ns(), b.run.trace.span_ns());
+    }
+}
