@@ -57,7 +57,7 @@ fn main() {
     println!("\ntraced per-op forward (the pjrt trace path):");
     let traced = traced_eval(&mut rt, &r.params, 7).expect("traced forward");
     let mut meds: Vec<_> = op_medians(&traced.trace).into_iter().collect();
-    meds.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    meds.sort_by(|a, b| b.1.total_cmp(&a.1));
     for (op, d) in meds.iter().take(6) {
         println!("  {:>10}  {}", op.paper_name(), fmt::dur_ns(*d));
     }

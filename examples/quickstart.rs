@@ -41,7 +41,7 @@ fn main() {
     );
 
     let mut medians: Vec<_> = op_medians(&cap.trace).into_iter().collect();
-    medians.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    medians.sort_by(|a, b| b.1.total_cmp(&a.1));
     println!("\n  top operations by median duration:");
     for (op, d) in medians.iter().take(8) {
         println!("    {:>10}  {}", op.paper_name(), fmt::dur_ns(*d));

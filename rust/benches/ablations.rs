@@ -106,4 +106,5 @@ fn main() {
     assert!(tp_v2 > tp_v1);
 
     println!("\nablations OK — each phenomenon tracks its mechanism");
+    chopper::benchkit::emit_collected("ablations");
 }

@@ -1,151 +1,89 @@
-//! The discrete-event engine: executes the per-rank FSDP dispatch program
-//! on the simulated node and emits the runtime-profiling trace plus the
-//! power and host-activity telemetry.
+//! The PRE-REFACTOR discrete-event engine, kept verbatim as a measurement
+//! baseline and equivalence oracle.
 //!
-//! Fluid-flow execution model: at most one compute kernel and one
-//! collective are in flight per GPU (streams are FIFO, depth-1 execution);
-//! their progress rates change when the DVFS governor retunes the clocks,
-//! when a collective transfer starts/ends (C3 contention), or when a rank's
-//! comm stream occupancy changes (RCCL spin kernels hold CUs). Every rate
-//! change advances the in-flight work and reschedules the end event under a
-//! fresh generation number; stale events are ignored.
+//! This is the `sim::engine` hot loop exactly as it stood before the
+//! hot-path overhaul (per-event `done()` scan + full `heap.iter().any`
+//! termination check, owned `String` kernel names allocated per event,
+//! SipHash std maps for `fwd_ids` / `op_kernel_idx`, `HashMap`-bucketed
+//! host-activity windows, unreserved output vectors), ported onto the
+//! crate's public substrate API. It exists for two purposes:
 //!
-//! Hot-path design (campaigns multiply simulations per invocation, so the
-//! per-event constant factor is the dominant wall-clock term):
-//!  * termination is O(1) per event — outstanding-work counters
-//!    (`hosts_unfinished`, `device_work`, `live_events`) replace the old
-//!    full rank scan plus `heap.iter().any(..)` after every popped event;
-//!  * kernel names are interned [`Sym`] handles (`util::intern`), so event
-//!    emission allocates nothing;
-//!  * kernel timings are precomputed per program item (the duration model
-//!    is deterministic per descriptor), not re-derived per dispatch;
-//!  * the tuple-keyed per-event maps (`fwd_ids`, `op_kernel_idx`) use the
-//!    fast deterministic hasher (`util::hash`);
-//!  * host-activity windows are dense per-rank vectors, not hash maps;
-//!  * output vectors are pre-reserved from program shape.
-//! `benches/engine_baseline.rs` keeps the pre-refactor loop verbatim;
-//! `benches/engine_hot.rs` A/Bs the two and `tests/pipeline.rs` asserts
-//! bitwise-identical event streams.
+//! 1. `benches/engine_hot.rs` A/Bs the optimized engine against it on the
+//!    same machine and records the measured speedup in `BENCH_engine.json`;
+//! 2. `tests/pipeline.rs` asserts the optimized engine's event stream is
+//!    bitwise identical to this one (the refactor is purely mechanical).
+//!
+//! It is NOT part of the library: the file is only compiled into the bench
+//! and test targets that include it via `#[path]` (autotests/autobenches
+//! are off). Do not "fix" or optimize this copy — its value is fidelity to
+//! the pre-refactor behavior.
 
-use std::collections::{BinaryHeap, VecDeque};
+#![allow(dead_code)]
+
+use std::cmp::Ordering;
+use std::collections::{BinaryHeap, HashMap, VecDeque};
 use std::sync::Arc;
 
-use crate::config::{ModelConfig, NodeSpec, WorkloadConfig};
-use crate::fsdp::{
+use chopper::config::{ModelConfig, NodeSpec, WorkloadConfig};
+use chopper::fsdp::{
     build_program, simulate_gather_pattern, AllocStats, DispatchItem, HostSync,
     ProgKernel,
 };
-use crate::model::ops::OpType;
-use crate::sim::duration::{DurationModel, KernelTiming};
-use crate::sim::dvfs::{DvfsGovernor, WindowActivity};
-use crate::sim::interconnect::{collective_base_ns, CollPhase, CollState};
-use crate::trace::event::{PowerSample, PowerTrace, Stream, Trace, TraceEvent};
-use crate::util::hash::FxHashMap;
-use crate::util::intern::{intern, Sym};
-use crate::util::prng::Rng;
+use chopper::model::ops::{OpRef, OpType, Phase};
+use chopper::sim::{
+    collective_base_ns, CollPhase, CollState, DurationModel, DvfsGovernor,
+    EngineParams, KernelTiming, WindowActivity,
+};
+use chopper::trace::event::{PowerSample, PowerTrace, Stream};
+use chopper::util::prng::Rng;
 
-/// Tunable mechanism parameters (DESIGN.md §5). Defaults are calibrated so
-/// the paper's qualitative results emerge; the ablation benches sweep them.
+/// Pre-refactor trace event: owned `String` kernel name (the per-event
+/// allocation the interning refactor removed).
 #[derive(Debug, Clone)]
-pub struct EngineParams {
-    /// Compute slowdown from a spinning RCCL kernel holding CUs.
-    pub spin_penalty: f64,
-    /// Extra compute slowdown while a transfer contends for HBM.
-    pub transfer_penalty: f64,
-    /// Transfer slowdown at 100% of ranks running compute.
-    pub comm_stretch: f64,
-    /// Per-rank static host-speed jitter (sigma, fraction).
-    pub rank_jitter: f64,
-    /// Per-rank static compute-speed jitter (sigma, fraction) — silicon /
-    /// thermal heterogeneity. This is what makes ranks arrive at
-    /// collectives at different times, so early ranks spin (long comm
-    /// kernels) — the mechanism behind Insight 2's "median comm scales
-    /// with compute" and Fig. 8's per-GPU overlap spread.
-    pub compute_jitter: f64,
-    /// Per-dispatch lognormal-ish jitter (sigma, fraction).
-    pub dispatch_jitter: f64,
-    /// Per-rank comm-stream dispatch delay (half-normal sigma, ns) —
-    /// small doorbell-latency differences between GPUs.
-    pub comm_delay_sigma_ns: f64,
-    /// Extra comm dispatch delay of the one NUMA-far GPU (ns): in a
-    /// two-socket chassis one GPU's doorbell path crosses the socket
-    /// interconnect, so its collectives consistently arrive late — it
-    /// sees minimal overlap while everyone else spins longer (Fig. 8's
-    /// low-overlap GPU).
-    pub far_rank_delay_ns: f64,
-    /// HBM power noise floor (W) — FSDPv2's deterministic allocator.
-    pub hbm_noise_quiet_w: f64,
-    /// HBM power noise (W) per unit of allocator memory-spike variability
-    /// (per-iteration peak σ normalized by the layer weight size) — the
-    /// FSDPv1 non-determinism channel (Observation 6).
-    pub hbm_noise_scale_w: f64,
-    /// DVFS governor window (ns).
-    pub dvfs_window_ns: f64,
+pub struct BaselineEvent {
+    pub kernel_id: u64,
+    pub gpu: u32,
+    pub stream: Stream,
+    pub name: String,
+    pub op: OpRef,
+    pub layer: Option<u32>,
+    pub iter: u32,
+    pub t_launch: f64,
+    pub t_start: f64,
+    pub t_end: f64,
+    pub seq: u64,
+    pub fwd_link: Option<u64>,
+    pub freq_mhz: f64,
+    pub flops: f64,
+    pub bytes: f64,
 }
 
-impl Default for EngineParams {
-    fn default() -> Self {
-        Self {
-            spin_penalty: 0.07,
-            transfer_penalty: 0.65,
-            comm_stretch: 0.3,
-            rank_jitter: 0.05,
-            compute_jitter: 0.004,
-            dispatch_jitter: 0.35,
-            comm_delay_sigma_ns: 150_000.0,
-            far_rank_delay_ns: 2_200_000.0,
-            hbm_noise_quiet_w: 6.0,
-            hbm_noise_scale_w: 185.0,
-            dvfs_window_ns: 1_000_000.0,
-        }
-    }
-}
-
-/// Per-rank host busy time bucketed into fixed windows — input to the CPU
-/// utilization model (sim::cpu).
+/// Pre-refactor host-activity accounting: per-rank `HashMap` window
+/// buckets (the structure the dense-vector refactor replaced).
 #[derive(Debug, Clone, Default)]
 pub struct HostActivity {
-    /// Window length (ns).
     pub window_ns: f64,
-    /// busy\[rank\]\[window\] = busy ns within that window. Dense per-rank
-    /// vectors (windows are contiguous from t=0); a window index past the
-    /// end of a rank's vector simply means zero busy time there.
-    pub busy: Vec<Vec<f64>>,
-    /// Total wall-clock span simulated.
+    pub busy: Vec<HashMap<u64, f64>>,
     pub span_ns: f64,
 }
 
-impl HostActivity {
-    /// Busy ns of `rank` in window `widx` (0 where never touched).
-    pub fn busy_ns(&self, rank: usize, widx: u64) -> f64 {
-        self.busy
-            .get(rank)
-            .and_then(|w| w.get(widx as usize))
-            .copied()
-            .unwrap_or(0.0)
-    }
-}
-
-/// Everything one simulated training run produces.
+/// Everything one baseline run produces.
 #[derive(Debug)]
 pub struct SimOutput {
-    pub trace: Trace,
+    pub events: Vec<BaselineEvent>,
     pub power: PowerTrace,
     pub host: HostActivity,
     pub alloc: AllocStats,
-    /// Wall-clock boundaries of each iteration (start, end), ns.
     pub iter_bounds: Vec<(f64, f64)>,
 }
 
 // ---------------------------------------------------------------------------
-// Event heap
+// Event heap (verbatim, including the partial_cmp ordering)
 // ---------------------------------------------------------------------------
 
 #[derive(Debug, Clone, Copy, PartialEq)]
 enum EvKind {
-    /// Try to start the front of a rank's compute queue.
     TryCompute { rank: usize },
-    /// Try to start the front of a rank's comm queue.
     TryComm { rank: usize },
     KernelEnd { rank: usize, gen: u64 },
     CollEnd { coll: usize, gen: u64 },
@@ -166,25 +104,25 @@ impl PartialEq for Ev {
 }
 impl Eq for Ev {}
 impl PartialOrd for Ev {
-    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
         Some(self.cmp(other))
     }
 }
 impl Ord for Ev {
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+    fn cmp(&self, other: &Self) -> Ordering {
         // Min-heap via reversed compare; ties broken by insertion order.
-        // total_cmp: a NaN timestamp (impossible today, but float math
-        // upstream) can never silently collapse the ordering to Equal.
-        other.t.total_cmp(&self.t).then(other.seq.cmp(&self.seq))
+        other
+            .t
+            .partial_cmp(&self.t)
+            .unwrap_or(Ordering::Equal)
+            .then(other.seq.cmp(&self.seq))
     }
 }
 
 // ---------------------------------------------------------------------------
-// Per-rank state
+// Per-rank state (verbatim)
 // ---------------------------------------------------------------------------
 
-/// A dispatched kernel, referenced by its index in the (shared, immutable)
-/// program — avoids cloning the KernelDesc per rank on the hot path.
 #[derive(Debug, Clone, Copy)]
 struct QueuedKernel {
     item_idx: usize,
@@ -197,11 +135,9 @@ struct InflightKernel {
     bytes_total: f64,
     timing: KernelTiming,
     t_start: f64,
-    /// Remaining work in nominal-seconds.
     work_s: f64,
     rate: f64,
     last_update: f64,
-    /// Portion of HBM bytes not yet attributed to a DVFS window.
     bytes_left: f64,
     gen: u64,
     freq_at_start: f64,
@@ -210,92 +146,56 @@ struct InflightKernel {
 #[derive(Debug)]
 enum HostBlock {
     None,
-    /// Waiting for a collective id to complete.
     Collective(u64),
-    /// Waiting for both local streams (and pending queues) to drain.
     Device,
 }
 
 struct RankState {
-    // Host.
     item_idx: usize,
     host_time: f64,
     block: HostBlock,
     host_scale: f64,
-    /// Host program ran to completion (counted once in `hosts_unfinished`).
-    host_done: bool,
-    /// Static compute-throughput multiplier of this GPU (~1.0).
     compute_scale: f64,
-    /// Static comm-dispatch delay of this GPU (ns, >= 0).
     comm_delay_ns: f64,
-    // Streams.
     compute_q: VecDeque<QueuedKernel>,
-    comm_q: VecDeque<(u64, f64)>, // (collective id, t_launch)
+    comm_q: VecDeque<(u64, f64)>,
     inflight: Option<InflightKernel>,
-    /// Collective currently occupying this rank's comm stream.
     comm_occupied: Option<usize>,
-    /// True when the front compute kernel is parked on a collective.
     parked: bool,
-    /// Pending TryCompute timer already scheduled for a future time.
     compute_timer: f64,
     comm_timer: f64,
-    // DVFS + accounting.
     gov: DvfsGovernor,
     win_start: f64,
     win: WindowActivity,
     comm_accounted: f64,
-    // Trace bookkeeping.
     seq_compute: u64,
     seq_comm: u64,
-    /// Compute kernels fully completed (gates comm stream-event waits).
     completed_kernels: u64,
     cur_iter: u32,
     rng: Rng,
 }
 
 // ---------------------------------------------------------------------------
-// Engine
+// Engine (verbatim pre-refactor main loop and accounting)
 // ---------------------------------------------------------------------------
 
 pub struct Engine<'a> {
     node: &'a NodeSpec,
-    wl: &'a WorkloadConfig,
     params: EngineParams,
+    dur: DurationModel,
     ranks: Vec<RankState>,
     colls: Vec<CollState>,
-    /// Index of the collective currently in (or awaiting) transfer, if any.
     active_transfer: bool,
     heap: BinaryHeap<Ev>,
     ev_seq: u64,
     now: f64,
-    program: Arc<crate::fsdp::Program>,
-    /// Kernel timing per program item (None for non-kernel items). The
-    /// duration model is deterministic per descriptor, so timings are
-    /// derived once here instead of once per dispatch per rank.
-    timings: Vec<Option<KernelTiming>>,
-    // O(1) termination counters (see `done`).
-    /// Non-DvfsTick events currently in the heap (incl. stale ones — the
-    /// loop must drain them before it may stop, exactly as the old
-    /// heap-scan did).
-    live_events: usize,
-    /// Ranks whose host program has not yet run to completion.
-    hosts_unfinished: usize,
-    /// Device-side outstanding work across ranks: queued + in-flight
-    /// compute kernels, queued + stream-occupying collectives.
-    device_work: usize,
-    // Interned comm-kernel names (one per collective flavor).
-    name_allgather: Sym,
-    name_reduce_scatter: Sym,
-    // Output.
-    events: Vec<TraceEvent>,
+    program: Arc<chopper::fsdp::Program>,
+    events: Vec<BaselineEvent>,
     power: PowerTrace,
     host: HostActivity,
     next_kernel_id: u64,
-    /// fwd kernel id lookup for fwd→bwd links:
-    /// (rank, iter, layer, op, kernel index within op) → kernel_id.
-    fwd_ids: FxHashMap<(u32, u32, u32, OpType, u32), u64>,
-    /// Running kernel-index-within-op while dispatch proceeds.
-    op_kernel_idx: FxHashMap<(usize, u32, Option<u32>, OpType, u8), u32>,
+    fwd_ids: HashMap<(u32, u32, u32, OpType, u32), u64>,
+    op_kernel_idx: HashMap<(usize, u32, Option<u32>, OpType, u8), u32>,
     iter_bounds: Vec<(f64, f64)>,
     alloc: AllocStats,
 }
@@ -304,13 +204,12 @@ impl<'a> Engine<'a> {
     pub fn new(
         node: &'a NodeSpec,
         cfg: &ModelConfig,
-        wl: &'a WorkloadConfig,
+        wl: &WorkloadConfig,
         params: EngineParams,
     ) -> Self {
         let r = node.num_gpus as usize;
         let program = Arc::new(build_program(cfg, wl, r as u64));
 
-        // Allocator behaviour decides the HBM power-noise level (Obs. 6).
         let alloc = simulate_gather_pattern(
             wl.fsdp,
             cfg.layer_weight_bytes(),
@@ -337,7 +236,6 @@ impl<'a> Engine<'a> {
                 host_time: 0.0,
                 block: HostBlock::None,
                 host_scale,
-                host_done: false,
                 compute_scale,
                 comm_delay_ns,
                 compute_q: VecDeque::new(),
@@ -347,10 +245,6 @@ impl<'a> Engine<'a> {
                 parked: false,
                 compute_timer: f64::NAN,
                 comm_timer: f64::NAN,
-                // HBM power noise is common-mode across ranks (every GPU
-                // runs the identical allocator pattern), so all governors
-                // share one noise stream; divergence between ranks comes
-                // from their (slightly) different activity histories.
                 gov: DvfsGovernor::new(node.gpu.clone(), wl.seed, 0, noise_w),
                 win_start: 0.0,
                 win: WindowActivity::default(),
@@ -363,31 +257,6 @@ impl<'a> Engine<'a> {
             });
         }
 
-        let dur = DurationModel::new(node.gpu.clone(), wl.batch, cfg.q_heads);
-
-        // One pass over the program: per-item timings (the duration model
-        // is a pure function of the descriptor) and output capacities.
-        let mut compute_kernels = 0usize;
-        let mut fwd_kernels = 0usize;
-        let mut comm_count = 0usize;
-        let mut timings = Vec::with_capacity(program.items.len());
-        for item in program.items.iter() {
-            match item {
-                DispatchItem::Kernel(k) => {
-                    compute_kernels += 1;
-                    if k.desc.op.phase == crate::model::ops::Phase::Forward {
-                        fwd_kernels += 1;
-                    }
-                    timings.push(Some(dur.timing(&k.desc)));
-                }
-                DispatchItem::Comm(_) => {
-                    comm_count += 1;
-                    timings.push(None);
-                }
-                _ => timings.push(None),
-            }
-        }
-
         let colls = program
             .collectives()
             .map(|c| CollState::new(c.clone(), r, collective_base_ns(node, c.bytes)))
@@ -395,33 +264,24 @@ impl<'a> Engine<'a> {
 
         let mut eng = Self {
             node,
-            wl,
+            dur: DurationModel::new(node.gpu.clone(), wl.batch, cfg.q_heads),
             ranks,
             colls,
             active_transfer: false,
-            heap: BinaryHeap::with_capacity(8 * r + 64),
+            heap: BinaryHeap::new(),
             ev_seq: 0,
             now: 0.0,
             program,
-            timings,
-            live_events: 0,
-            hosts_unfinished: r,
-            device_work: 0,
-            name_allgather: intern("rccl_AllGather_bf16"),
-            name_reduce_scatter: intern("rccl_ReduceScatter_bf16"),
-            events: Vec::with_capacity((compute_kernels + comm_count) * r),
+            events: Vec::new(),
             power: PowerTrace::default(),
             host: HostActivity {
                 window_ns: params.dvfs_window_ns,
-                busy: vec![Vec::new(); r],
+                busy: vec![HashMap::new(); r],
                 span_ns: 0.0,
             },
             next_kernel_id: 0,
-            fwd_ids: FxHashMap::with_capacity_and_hasher(
-                fwd_kernels * r,
-                Default::default(),
-            ),
-            op_kernel_idx: FxHashMap::default(),
+            fwd_ids: HashMap::new(),
+            op_kernel_idx: HashMap::new(),
             iter_bounds: vec![(f64::INFINITY, 0.0); wl.iterations as usize],
             alloc,
             params,
@@ -434,9 +294,6 @@ impl<'a> Engine<'a> {
 
     fn push(&mut self, t: f64, kind: EvKind) {
         self.ev_seq += 1;
-        if !matches!(kind, EvKind::DvfsTick { .. }) {
-            self.live_events += 1;
-        }
         self.heap.push(Ev {
             t,
             seq: self.ev_seq,
@@ -444,20 +301,11 @@ impl<'a> Engine<'a> {
         });
     }
 
-    // ------------------------------------------------------------------
-    // Host actor
-    // ------------------------------------------------------------------
-
-    /// Run the host of `rank` until it blocks or the program ends.
     fn run_host(&mut self, rank: usize) {
         let program = Arc::clone(&self.program);
         loop {
             let idx = self.ranks[rank].item_idx;
             if idx >= program.items.len() {
-                if !self.ranks[rank].host_done {
-                    self.ranks[rank].host_done = true;
-                    self.hosts_unfinished -= 1;
-                }
                 return;
             }
             match &program.items[idx] {
@@ -481,13 +329,11 @@ impl<'a> Engine<'a> {
                         t_launch,
                     });
                     r.item_idx += 1;
-                    self.device_work += 1;
                     self.try_compute(rank);
                 }
                 DispatchItem::Comm(c) => {
                     let id = c.id;
                     let r = &mut self.ranks[rank];
-                    // Collective dispatch is cheaper than a kernel launch.
                     let cost = self.node.cpu.dispatch_ns * 0.6 * r.host_scale;
                     Self::host_busy(&mut self.host, rank, r.host_time, cost);
                     r.host_time += cost;
@@ -495,7 +341,6 @@ impl<'a> Engine<'a> {
                     self.colls[id as usize].t_launch[rank] = t_launch;
                     r.comm_q.push_back((id, t_launch));
                     r.item_idx += 1;
-                    self.device_work += 1;
                     self.try_comm(rank);
                 }
                 DispatchItem::Sync(HostSync::Collective(id)) => {
@@ -526,19 +371,14 @@ impl<'a> Engine<'a> {
     }
 
     fn host_busy(host: &mut HostActivity, rank: usize, t0: f64, dur: f64) {
-        // Attribute busy time to windows (a dispatch can straddle one).
         let w = host.window_ns;
-        let busy = &mut host.busy[rank];
         let mut t = t0;
         let end = t0 + dur;
         while t < end {
-            let widx = (t / w) as usize;
-            if busy.len() <= widx {
-                busy.resize(widx + 1, 0.0);
-            }
+            let widx = (t / w) as u64;
             let wend = (widx + 1) as f64 * w;
             let chunk = end.min(wend) - t;
-            busy[widx] += chunk;
+            *host.busy[rank].entry(widx).or_insert(0.0) += chunk;
             t = end.min(wend);
         }
     }
@@ -551,7 +391,6 @@ impl<'a> Engine<'a> {
             && r.comm_occupied.is_none()
     }
 
-    /// Re-check a blocked host after device progress.
     fn wake_host(&mut self, rank: usize) {
         let ready = match self.ranks[rank].block {
             HostBlock::None => false,
@@ -569,11 +408,6 @@ impl<'a> Engine<'a> {
         }
     }
 
-    // ------------------------------------------------------------------
-    // Compute stream
-    // ------------------------------------------------------------------
-
-    /// Current progress rate for an in-flight kernel on `rank`.
     fn compute_rate(&self, rank: usize, timing: &KernelTiming) -> f64 {
         let r = &self.ranks[rank];
         let fr = r.gov.freq_ratio().max(0.05);
@@ -598,7 +432,6 @@ impl<'a> Engine<'a> {
             return;
         };
         let wait_comm = self.prog_kernel(front.item_idx).wait_comm;
-        // Collective dependency?
         if let Some(cid) = wait_comm {
             let c = &mut self.colls[cid as usize];
             if !c.is_done() {
@@ -612,7 +445,6 @@ impl<'a> Engine<'a> {
             .max(self.colls_ready_time(wait_comm))
             + self.node.cpu.launch_latency_ns;
         if ready > self.now {
-            // Schedule a wake-up; dedupe timers.
             if self.ranks[rank].compute_timer.is_nan()
                 || self.ranks[rank].compute_timer > ready
             {
@@ -622,12 +454,9 @@ impl<'a> Engine<'a> {
             return;
         }
         self.ranks[rank].compute_timer = f64::NAN;
-        // Start it.
         let q = self.ranks[rank].compute_q.pop_front().unwrap();
         let pk = self.prog_kernel(q.item_idx);
-        let (bytes, iter) = (pk.desc.bytes, pk.iter);
-        let timing = self.timings[q.item_idx]
-            .expect("compute queue holds only kernels");
+        let (timing, bytes, iter) = (self.dur.timing(&pk.desc), pk.desc.bytes, pk.iter);
         let rate = self.compute_rate(rank, &timing);
         let gen = self.next_gen();
         let freq = self.ranks[rank].gov.freq_mhz;
@@ -647,11 +476,9 @@ impl<'a> Engine<'a> {
         self.ranks[rank].cur_iter = iter;
         self.ranks[rank].inflight = Some(inflight);
         self.push(end, EvKind::KernelEnd { rank, gen });
-        // Compute starting changes collective contention.
         self.retune_transfer();
     }
 
-    /// The program kernel behind a queue entry.
     fn prog_kernel(&self, item_idx: usize) -> &ProgKernel {
         match &self.program.items[item_idx] {
             DispatchItem::Kernel(k) => k,
@@ -671,8 +498,6 @@ impl<'a> Engine<'a> {
         self.ev_seq
     }
 
-    /// Advance the in-flight kernel of `rank` to `now`, attributing window
-    /// activity; does not finish it.
     fn account_inflight(&mut self, rank: usize) {
         let now = self.now;
         let r = &mut self.ranks[rank];
@@ -691,7 +516,6 @@ impl<'a> Engine<'a> {
                 r.win.hbm_bytes += bytes;
             }
         }
-        // Comm occupancy accounting.
         if r.comm_occupied.is_some() {
             let dt = (now - r.comm_accounted).max(0.0);
             r.win.comm_busy += dt;
@@ -699,7 +523,6 @@ impl<'a> Engine<'a> {
         }
     }
 
-    /// Rescale the in-flight compute kernel of `rank` after a rate change.
     fn rescale_compute(&mut self, rank: usize) {
         let Some((timing, old_rate)) = self.ranks[rank]
             .inflight
@@ -710,7 +533,7 @@ impl<'a> Engine<'a> {
         };
         let rate = self.compute_rate(rank, &timing);
         if (rate - old_rate).abs() < 1e-9 * old_rate {
-            return; // no change — keep the scheduled end event
+            return;
         }
         self.account_inflight(rank);
         let gen = self.next_gen();
@@ -735,11 +558,10 @@ impl<'a> Engine<'a> {
         let k = self.ranks[rank].inflight.take().unwrap();
         debug_assert!(k.work_s < 1e-9, "kernel ended with work left: {}", k.work_s);
         self.ranks[rank].completed_kernels += 1;
-        self.device_work -= 1;
         self.emit_compute_event(rank, k);
         self.retune_transfer();
         self.try_compute(rank);
-        self.try_comm(rank); // a stream-event wait may now be satisfied
+        self.try_comm(rank);
         self.wake_host(rank);
     }
 
@@ -754,13 +576,11 @@ impl<'a> Engine<'a> {
         let d = &pk.desc;
         let iter = pk.iter;
         let op = d.op;
-        // fwd→bwd link (Section III-B1): backward kernels are spawned from
-        // their forward counterparts.
         let layer_key = d.layer.unwrap_or(u32::MAX);
         let ph = match op.phase {
-            crate::model::ops::Phase::Forward => 0u8,
-            crate::model::ops::Phase::Backward => 1,
-            crate::model::ops::Phase::Optimizer => 2,
+            Phase::Forward => 0u8,
+            Phase::Backward => 1,
+            Phase::Optimizer => 2,
         };
         let pidx = {
             let key = (rank, iter, d.layer, op.op, ph);
@@ -788,11 +608,12 @@ impl<'a> Engine<'a> {
             *s = s.min(k.t_start);
             *e = e.max(self.now);
         }
-        self.events.push(TraceEvent {
+        self.events.push(BaselineEvent {
             kernel_id: id,
             gpu: rank as u32,
             stream: Stream::Compute,
-            name: d.name,
+            // Pre-refactor cost model: one owned String per event.
+            name: d.name.as_str().to_string(),
             op,
             layer: d.layer,
             iter,
@@ -807,10 +628,6 @@ impl<'a> Engine<'a> {
         });
     }
 
-    // ------------------------------------------------------------------
-    // Comm stream
-    // ------------------------------------------------------------------
-
     fn try_comm(&mut self, rank: usize) {
         if self.ranks[rank].comm_occupied.is_some() {
             return;
@@ -818,17 +635,11 @@ impl<'a> Engine<'a> {
         let Some(&(cid, t_launch)) = self.ranks[rank].comm_q.front() else {
             return;
         };
-        // Cross-stream event dependency: the collective may not start
-        // until the compute kernels enqueued before it have completed on
-        // this rank (re-checked from on_kernel_end).
         if self.ranks[rank].completed_kernels
             < self.colls[cid as usize].desc.wait_seq
         {
             return;
         }
-        // The rank's comm-dispatch delay applies from the moment the
-        // stream-event gate is satisfied (now), not from the (far-ahead)
-        // host launch time; memoize so rescheduling stays idempotent.
         let ready = {
             let c = &mut self.colls[cid as usize];
             if c.ready_at[rank].is_nan() {
@@ -852,12 +663,10 @@ impl<'a> Engine<'a> {
         self.ranks[rank].comm_q.pop_front();
         self.ranks[rank].comm_occupied = Some(cid as usize);
         self.ranks[rank].comm_accounted = self.now;
-        // RCCL kernel now holds CUs on this rank: compute slows down.
         self.rescale_compute(rank);
         let all_arrived = self.colls[cid as usize].arrive(rank, self.now);
         if all_arrived {
             self.active_transfer = true;
-            // Transfer contends with compute on every rank.
             for g in 0..self.ranks.len() {
                 self.rescale_compute(g);
             }
@@ -865,8 +674,6 @@ impl<'a> Engine<'a> {
         }
     }
 
-    /// Recompute the in-flight transfer's rate from current compute
-    /// activity and reschedule its end event.
     fn retune_transfer(&mut self) {
         let Some(idx) = self.transfer_idx() else {
             return;
@@ -890,8 +697,6 @@ impl<'a> Engine<'a> {
         if !self.active_transfer {
             return None;
         }
-        // The transfer, if any, is the collective occupying rank 0's comm
-        // stream (all ranks occupy the same collective during transfer).
         let idx = self.ranks[0].comm_occupied?;
         (self.colls[idx].phase == CollPhase::Transfer).then_some(idx)
     }
@@ -904,7 +709,6 @@ impl<'a> Engine<'a> {
             }
             c.advance(self.now);
             if c.work_s > 1e-9 {
-                // Numerical residue: reschedule rather than deadlock.
                 c.gen += 1;
                 let gen = c.gen;
                 let end = c.projected_end();
@@ -915,21 +719,20 @@ impl<'a> Engine<'a> {
             c.end_time = self.now;
         }
         self.active_transfer = false;
-        // Emit one trace event per rank, free comm streams.
         for rank in 0..self.ranks.len() {
             self.account_inflight(rank);
             self.ranks[rank].comm_occupied = None;
-            self.device_work -= 1;
             let c = &self.colls[idx];
             let id = self.next_kernel_id;
             self.next_kernel_id += 1;
             let seq = self.ranks[rank].seq_comm;
             self.ranks[rank].seq_comm += 1;
+            // Pre-refactor cost model: a fresh String per rank per coll.
             let name = match c.desc.op.op {
-                OpType::AllGather => self.name_allgather,
-                _ => self.name_reduce_scatter,
+                OpType::AllGather => "rccl_AllGather_bf16".to_string(),
+                _ => "rccl_ReduceScatter_bf16".to_string(),
             };
-            self.events.push(TraceEvent {
+            self.events.push(BaselineEvent {
                 kernel_id: id,
                 gpu: rank as u32,
                 stream: Stream::Comm,
@@ -947,11 +750,9 @@ impl<'a> Engine<'a> {
                 bytes: c.desc.bytes,
             });
         }
-        // Contention released: compute speeds back up.
         for rank in 0..self.ranks.len() {
             self.rescale_compute(rank);
         }
-        // Wake parked compute kernels and blocked hosts.
         let waiters = std::mem::take(&mut self.colls[idx].kernel_waiters);
         for rank in waiters {
             self.ranks[rank].parked = false;
@@ -961,16 +762,11 @@ impl<'a> Engine<'a> {
         for rank in hosts {
             self.wake_host(rank);
         }
-        // Next collective may start on every rank.
         for rank in 0..self.ranks.len() {
             self.try_comm(rank);
             self.wake_host(rank);
         }
     }
-
-    // ------------------------------------------------------------------
-    // DVFS tick
-    // ------------------------------------------------------------------
 
     fn on_dvfs_tick(&mut self, rank: usize) {
         self.account_inflight(rank);
@@ -1004,14 +800,9 @@ impl<'a> Engine<'a> {
             r.win = WindowActivity::default();
             r.win_start = self.now;
         }
-        // New clocks ⇒ new compute rate.
         self.rescale_compute(rank);
         self.push(self.now + wn, EvKind::DvfsTick { rank });
     }
-
-    // ------------------------------------------------------------------
-    // Main loop
-    // ------------------------------------------------------------------
 
     pub fn run(mut self) -> SimOutput {
         for rank in 0..self.ranks.len() {
@@ -1021,73 +812,51 @@ impl<'a> Engine<'a> {
             self.now = ev.t;
             match ev.kind {
                 EvKind::TryCompute { rank } => {
-                    self.live_events -= 1;
                     self.ranks[rank].compute_timer = f64::NAN;
                     self.try_compute(rank)
                 }
                 EvKind::TryComm { rank } => {
-                    self.live_events -= 1;
                     self.ranks[rank].comm_timer = f64::NAN;
                     self.try_comm(rank)
                 }
-                EvKind::KernelEnd { rank, gen } => {
-                    self.live_events -= 1;
-                    self.on_kernel_end(rank, gen)
-                }
-                EvKind::CollEnd { coll, gen } => {
-                    self.live_events -= 1;
-                    self.on_coll_end(coll, gen)
-                }
+                EvKind::KernelEnd { rank, gen } => self.on_kernel_end(rank, gen),
+                EvKind::CollEnd { coll, gen } => self.on_coll_end(coll, gen),
                 EvKind::DvfsTick { rank } => {
                     if self.done() {
-                        continue; // don't tick forever after the run
+                        continue;
                     }
                     self.on_dvfs_tick(rank)
                 }
             }
-            // Stop once all hosts finished, devices drained, and every
-            // non-DVFS event (incl. stale generations) has been popped —
-            // the same stopping point as the old O(events × heap) scan,
-            // now three integer compares.
-            if self.live_events == 0 && self.done() {
+            // The pre-refactor termination check: a full `done()` rank scan
+            // plus a heap scan after EVERY popped event — O(events × heap).
+            if self.done()
+                && !self
+                    .heap
+                    .iter()
+                    .any(|e| !matches!(e.kind, EvKind::DvfsTick { .. }))
+            {
                 break;
             }
         }
         self.finish()
     }
 
-    /// O(1) termination predicate via outstanding-work counters. The
-    /// debug build cross-checks against the exhaustive scan it replaced.
     fn done(&self) -> bool {
-        let fast = self.hosts_unfinished == 0 && self.device_work == 0;
-        debug_assert_eq!(fast, self.done_scan(), "termination counters drifted");
-        fast
-    }
-
-    /// The pre-refactor exhaustive check (kept as the debug-mode oracle).
-    fn done_scan(&self) -> bool {
         (0..self.ranks.len()).all(|r| {
             self.ranks[r].item_idx >= self.program.items.len() && self.rank_idle(r)
         })
     }
 
     fn finish(mut self) -> SimOutput {
-        // total_cmp: NaN timestamps (impossible today) would order
-        // deterministically instead of silently comparing Equal.
-        self.events.sort_by(|a, b| a.t_start.total_cmp(&b.t_start));
+        self.events.sort_by(|a, b| {
+            a.t_start
+                .partial_cmp(&b.t_start)
+                .unwrap_or(Ordering::Equal)
+        });
         self.host.span_ns = self.now;
-        let mut trace = Trace::default();
-        trace.meta.workload = self.wl.label();
-        trace.meta.fsdp = self.wl.fsdp.to_string();
-        trace.meta.num_gpus = self.node.num_gpus;
-        trace.meta.iterations = self.wl.iterations;
-        trace.meta.warmup = self.wl.warmup;
-        trace.meta.seed = self.wl.seed;
-        trace.meta.source = "sim".into();
-        trace.meta.serialized = false;
-        trace.events = self.events;
         SimOutput {
-            trace,
+            events: self.events,
             power: self.power,
             host: self.host,
             alloc: self.alloc,

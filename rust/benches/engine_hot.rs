@@ -1,0 +1,98 @@
+//! Engine hot-path bench: A/B the optimized discrete-event engine against
+//! the verbatim pre-refactor engine (`engine_baseline.rs`) on a
+//! campaign-sized scenario (8 GPUs × multi-iteration b2s4), verify the two
+//! produce bitwise-identical event streams, and append the measured
+//! medians + speedup to `BENCH_engine.json` at the repo root.
+//!
+//! Scale knobs (env): CHOPPER_BENCH_LAYERS (default 8), CHOPPER_BENCH_ITERS
+//! (default 10), CHOPPER_BENCH_SAMPLES (default 5). CI smoke-runs tiny
+//! values and only checks the trajectory file is produced and well-formed;
+//! set CHOPPER_BENCH_ENFORCE_SPEEDUP=2.0 (or any threshold) to make the
+//! run fail below a required speedup.
+
+#[path = "engine_baseline.rs"]
+mod engine_baseline;
+
+use chopper::benchkit::{emit_collected, section, value, Bench};
+use chopper::config::{FsdpVersion, ModelConfig, NodeSpec, WorkloadConfig};
+use chopper::sim::{Engine, EngineParams};
+use chopper::trace::chrome::to_chrome_json;
+
+fn env_or<T: std::str::FromStr>(key: &str, default: T) -> T {
+    std::env::var(key)
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() {
+    let layers: u64 = env_or("CHOPPER_BENCH_LAYERS", 8);
+    let iters: u32 = env_or("CHOPPER_BENCH_ITERS", 10);
+    let samples: u32 = env_or("CHOPPER_BENCH_SAMPLES", 5);
+
+    let node = NodeSpec::mi300x_node();
+    let mut cfg = ModelConfig::llama3_8b();
+    cfg.layers = layers;
+    let mut wl = WorkloadConfig::parse_label("b2s4", FsdpVersion::V1).expect("label");
+    wl.iterations = iters;
+    wl.warmup = iters / 2;
+    eprintln!(
+        "setup: engine A/B at {layers} layers × {iters} iterations, {} GPUs…",
+        node.num_gpus
+    );
+
+    section("equivalence — refactored engine vs pre-refactor baseline");
+    let new_out = Engine::new(&node, &cfg, &wl, EngineParams::default()).run();
+    let old_out =
+        engine_baseline::Engine::new(&node, &cfg, &wl, EngineParams::default())
+            .run();
+    assert_eq!(
+        new_out.trace.events.len(),
+        old_out.events.len(),
+        "event count diverged"
+    );
+    for (a, b) in new_out.trace.events.iter().zip(&old_out.events) {
+        assert_eq!(a.t_start.to_bits(), b.t_start.to_bits(), "t_start diverged");
+        assert_eq!(a.t_end.to_bits(), b.t_end.to_bits(), "t_end diverged");
+        assert_eq!(a.t_launch.to_bits(), b.t_launch.to_bits());
+        assert_eq!(a.name.as_str(), b.name.as_str(), "kernel name diverged");
+        assert_eq!((a.gpu, a.seq, a.kernel_id), (b.gpu, b.seq, b.kernel_id));
+        assert_eq!(a.fwd_link, b.fwd_link, "fwd→bwd links diverged");
+    }
+    println!(
+        "equivalence OK: {} events bitwise-identical across engines",
+        new_out.trace.events.len()
+    );
+
+    section("engine hot path");
+    let events = new_out.trace.events.len() as f64;
+    let opt = Bench::new("engine_run/optimized").samples(samples).run(|| {
+        Engine::new(&node, &cfg, &wl, EngineParams::default()).run()
+    });
+    let base = Bench::new("engine_run/pre_refactor").samples(samples).run(|| {
+        engine_baseline::Engine::new(&node, &cfg, &wl, EngineParams::default())
+            .run()
+    });
+    let speedup = base.median_s / opt.median_s.max(1e-12);
+    value("speedup_vs_pre_refactor", speedup, "x");
+    value("events_per_sec_optimized", events / opt.median_s.max(1e-12), "ev/s");
+    value("events", events, "");
+    value("layers", layers as f64, "");
+    value("iterations", iters as f64, "");
+    value("gpus", node.num_gpus as f64, "");
+
+    section("trace serialization");
+    Bench::new("trace_to_chrome_json")
+        .samples(samples)
+        .run(|| to_chrome_json(&new_out.trace));
+
+    emit_collected("engine");
+
+    if let Ok(min) = std::env::var("CHOPPER_BENCH_ENFORCE_SPEEDUP") {
+        let min: f64 = min.parse().expect("CHOPPER_BENCH_ENFORCE_SPEEDUP");
+        assert!(
+            speedup >= min,
+            "speedup {speedup:.2}x below required {min:.2}x"
+        );
+    }
+}

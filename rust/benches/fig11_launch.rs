@@ -52,4 +52,5 @@ fn main() {
         "Section V-D3: v2 serialized copies must appear as b_mlp_dp call overhead"
     );
     println!("\nfig11 shape OK");
+    chopper::benchkit::emit_collected("fig11_launch");
 }

@@ -40,4 +40,5 @@ fn main() {
     assert!(a.physical_footprint() < 0.25);
     assert!(a.smt_cosched_rate() < 0.2);
     println!("\nfig13 shape OK");
+    chopper::benchkit::emit_collected("fig13_cpu");
 }

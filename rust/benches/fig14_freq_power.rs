@@ -48,4 +48,5 @@ fn main() {
     );
     assert!(power_gap < 0.15, "Obs 6: power must be nearly identical");
     println!("\nfig14 shape OK");
+    chopper::benchkit::emit_collected("fig14_freq_power");
 }

@@ -58,4 +58,5 @@ fn main() {
         "same kernels ⇒ same utilization overhead across v1/v2"
     );
     println!("\nfig15 shape OK");
+    chopper::benchkit::emit_collected("fig15_breakdown");
 }

@@ -64,4 +64,5 @@ fn main() {
         "Obs 3 violated"
     );
     println!("\nfig4 shape OK");
+    chopper::benchkit::emit_collected("fig4_e2e");
 }

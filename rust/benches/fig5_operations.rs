@@ -55,4 +55,5 @@ fn main() {
 
     let _ = FsdpVersion::V1;
     println!("\nfig5 shape OK");
+    chopper::benchkit::emit_collected("fig5_operations");
 }

@@ -93,4 +93,5 @@ fn main() {
         .unwrap();
     assert_eq!(b_small, b_large, "AG payload must not depend on b/s");
     println!("\nfig6 shape OK");
+    chopper::benchkit::emit_collected("fig6_comm");
 }

@@ -65,4 +65,5 @@ fn main() {
         assert!(slowdown > 0.99, "contention must not speed up covered instances");
     }
     println!("\nfig7 shape OK");
+    chopper::benchkit::emit_collected("fig7_overlap");
 }

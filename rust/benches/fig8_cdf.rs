@@ -41,4 +41,5 @@ fn main() {
         "durations must vary across GPUs"
     );
     println!("\nfig8 shape OK");
+    chopper::benchkit::emit_collected("fig8_cdf");
 }

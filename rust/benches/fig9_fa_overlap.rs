@@ -37,4 +37,5 @@ fn main() {
     value("b_attn_fa median overlap (paper ~0)", bwd.ratio_q[2], "");
     assert!(bwd.ratio_q[2] < 0.5);
     println!("\nfig9 shape OK");
+    chopper::benchkit::emit_collected("fig9_fa_overlap");
 }

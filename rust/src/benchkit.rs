@@ -4,9 +4,27 @@
 //! greppable report line per benchmark:
 //!
 //! `bench <name> ... median 12.345 ms  (n=10, sd 0.4%)`
+//!
+//! Results are also machine-readable: [`emit_json`] appends one entry per
+//! bench invocation to a `BENCH_<target>.json` trajectory file at the
+//! working directory (the repo root under `cargo bench`), so speedups and
+//! regressions are recorded over time instead of scrolling away in a
+//! terminal. See README.md "Performance methodology".
 
+use crate::util::json::Json;
 use crate::util::stats;
+use std::path::{Path, PathBuf};
+use std::sync::{Mutex, OnceLock};
 use std::time::Instant;
+
+/// Process-global recorder: every `Bench::run` timing and every `value`
+/// scalar lands here so a bench target can flush them all with one
+/// [`emit_collected`] call at the end of `main`.
+fn collected() -> &'static Mutex<(Vec<BenchResult>, Vec<(String, f64)>)> {
+    static C: OnceLock<Mutex<(Vec<BenchResult>, Vec<(String, f64)>)>> =
+        OnceLock::new();
+    C.get_or_init(|| Mutex::new((Vec::new(), Vec::new())))
+}
 
 /// Configuration for one bench group.
 #[derive(Debug, Clone)]
@@ -27,6 +45,17 @@ pub struct BenchResult {
 }
 
 impl BenchResult {
+    /// Machine-readable form (seconds, like the struct).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("median_s", Json::num(self.median_s)),
+            ("mean_s", Json::num(self.mean_s)),
+            ("std_s", Json::num(self.std_s)),
+            ("samples", Json::num(self.samples as f64)),
+        ])
+    }
+
     pub fn report_line(&self) -> String {
         let (v, unit) = scale(self.median_s);
         format!(
@@ -91,8 +120,90 @@ impl Bench {
             samples: self.samples,
         };
         println!("{}", r.report_line());
+        collected().lock().unwrap().0.push(r.clone());
         r
     }
+}
+
+/// Standard trajectory path for a bench target: `BENCH_<target>.json` in
+/// the working directory (the repo root under `cargo bench`).
+pub fn trajectory_path(target: &str) -> PathBuf {
+    PathBuf::from(format!("BENCH_{target}.json"))
+}
+
+/// Append one invocation's results (plus optional derived scalar metrics,
+/// e.g. a measured speedup) to the trajectory file at `path`. The file is
+/// a single JSON object:
+///
+/// ```json
+/// {"bench": "<target>", "schema": 1, "entries": [
+///   {"run": 1, "unix_ts": ..., "results": [...], "metrics": {...}}, ...]}
+/// ```
+///
+/// A missing or unparseable file starts a fresh trajectory (corrupt
+/// history should never make a bench run fail).
+pub fn emit_json(
+    path: &Path,
+    target: &str,
+    results: &[BenchResult],
+    metrics: &[(&str, f64)],
+) -> std::io::Result<()> {
+    let prior = std::fs::read_to_string(path)
+        .ok()
+        .and_then(|t| crate::util::json::parse(&t).ok());
+    let mut entries: Vec<Json> = prior
+        .as_ref()
+        .and_then(|j| j.get("entries"))
+        .and_then(|e| e.as_arr())
+        .map(|a| a.to_vec())
+        .unwrap_or_default();
+    let unix_ts = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let mut fields = vec![
+        ("run", Json::num((entries.len() + 1) as f64)),
+        ("unix_ts", Json::num(unix_ts as f64)),
+        (
+            "results",
+            Json::Arr(results.iter().map(|r| r.to_json()).collect()),
+        ),
+    ];
+    if !metrics.is_empty() {
+        fields.push((
+            "metrics",
+            Json::obj(metrics.iter().map(|(k, v)| (*k, Json::num(*v))).collect()),
+        ));
+    }
+    entries.push(Json::obj(fields));
+    let root = Json::obj(vec![
+        ("bench", Json::str(target)),
+        ("schema", Json::num(1.0)),
+        ("entries", Json::Arr(entries)),
+    ]);
+    std::fs::write(path, root.to_string_with_capacity(4096))
+}
+
+/// Drain everything this process recorded via `Bench::run` and `value`
+/// and append it as one trajectory entry for `target` — the single call a
+/// bench target makes at the end of `main`. Panics on IO errors (bench
+/// targets have no error channel worth threading).
+pub fn emit_collected(target: &str) {
+    let (results, vals) = {
+        let mut c = collected().lock().unwrap();
+        (std::mem::take(&mut c.0), std::mem::take(&mut c.1))
+    };
+    let metrics: Vec<(&str, f64)> =
+        vals.iter().map(|(k, v)| (k.as_str(), *v)).collect();
+    let path = trajectory_path(target);
+    emit_json(&path, target, &results, &metrics)
+        .unwrap_or_else(|e| panic!("writing {}: {e}", path.display()));
+    println!(
+        "trajectory {} updated ({} timings, {} values)",
+        path.display(),
+        results.len(),
+        metrics.len()
+    );
 }
 
 /// Print a section header in bench output.
@@ -101,9 +212,12 @@ pub fn section(title: &str) {
 }
 
 /// Print a named value in bench output (for paper-shape numbers, not
-/// wall-clock: throughputs, ratios, medians the figure reproduces).
+/// wall-clock: throughputs, ratios, medians the figure reproduces). Also
+/// recorded for [`emit_collected`], so the trajectory tracks the figure
+/// shape alongside the timings.
 pub fn value(name: &str, v: f64, unit: &str) {
     println!("value {name:<44} {v:>12.3} {unit}");
+    collected().lock().unwrap().1.push((name.to_string(), v));
 }
 
 #[cfg(test)]
@@ -122,6 +236,61 @@ mod tests {
         assert!(r.median_s > 0.0);
         assert_eq!(r.samples, 3);
         assert!(r.report_line().contains("spin"));
+    }
+
+    fn result(name: &str, median: f64) -> BenchResult {
+        BenchResult {
+            name: name.into(),
+            median_s: median,
+            mean_s: median,
+            std_s: 0.0,
+            samples: 3,
+        }
+    }
+
+    #[test]
+    fn trajectory_appends_and_parses() {
+        let dir = std::env::temp_dir()
+            .join(format!("chopper_benchkit_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_test.json");
+        std::fs::remove_file(&path).ok();
+        emit_json(&path, "test", &[result("x", 0.5)], &[("speedup", 2.5)])
+            .unwrap();
+        emit_json(&path, "test", &[result("x", 0.4)], &[]).unwrap();
+        let j = crate::util::json::parse(&std::fs::read_to_string(&path).unwrap())
+            .unwrap();
+        assert_eq!(j.get("bench").unwrap().as_str(), Some("test"));
+        let entries = j.get("entries").unwrap().as_arr().unwrap();
+        assert_eq!(entries.len(), 2);
+        assert_eq!(entries[0].get("run").unwrap().as_f64(), Some(1.0));
+        assert_eq!(
+            entries[0]
+                .get("metrics")
+                .unwrap()
+                .get("speedup")
+                .unwrap()
+                .as_f64(),
+            Some(2.5)
+        );
+        assert_eq!(entries[1].get("run").unwrap().as_f64(), Some(2.0));
+        let r0 = &entries[1].get("results").unwrap().as_arr().unwrap()[0];
+        assert_eq!(r0.get("median_s").unwrap().as_f64(), Some(0.4));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn corrupt_trajectory_starts_fresh() {
+        let dir = std::env::temp_dir()
+            .join(format!("chopper_benchkit_corrupt_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_bad.json");
+        std::fs::write(&path, "{not json").unwrap();
+        emit_json(&path, "bad", &[result("y", 1.0)], &[]).unwrap();
+        let j = crate::util::json::parse(&std::fs::read_to_string(&path).unwrap())
+            .unwrap();
+        assert_eq!(j.get("entries").unwrap().as_arr().unwrap().len(), 1);
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -136,7 +136,8 @@ impl ScenarioSummary {
     }
 
     pub fn to_json_str(&self) -> String {
-        self.to_json().to_string()
+        // Summaries serialize to ~700 bytes; one reservation, zero regrows.
+        self.to_json().to_string_with_capacity(1024)
     }
 
     pub fn from_json(j: &Json) -> Result<Self, String> {

@@ -11,14 +11,16 @@
 use crate::counters::{CounterTrace, DerivedMetrics};
 use crate::sim::align_key;
 use crate::trace::event::{Trace, TraceEvent};
-use std::collections::HashMap;
+use crate::util::hash::FxHashMap;
 
 /// A runtime trace with hardware counters attached to each kernel.
 #[derive(Debug)]
 pub struct AlignedTrace {
     pub trace: Trace,
-    /// kernel_id → derived metrics (from the hardware pass).
-    metrics: HashMap<u64, DerivedMetrics>,
+    /// kernel_id → derived metrics (from the hardware pass). Fast
+    /// deterministic hasher: this map takes one insert + one lookup per
+    /// kernel event and is never iterated.
+    metrics: FxHashMap<u64, DerivedMetrics>,
     /// Kernels that had no counter record (reported, not fatal).
     pub unmatched: usize,
 }
@@ -26,7 +28,10 @@ pub struct AlignedTrace {
 impl AlignedTrace {
     /// Join a runtime trace with a hardware-counter trace.
     pub fn align(trace: Trace, counters: &CounterTrace) -> Self {
-        let mut metrics = HashMap::with_capacity(trace.events.len());
+        let mut metrics = FxHashMap::with_capacity_and_hasher(
+            trace.events.len(),
+            Default::default(),
+        );
         let mut unmatched = 0;
         for e in &trace.events {
             match counters

@@ -29,7 +29,7 @@ impl CommIntervals {
                 .push((e.t_start, e.t_end));
         }
         for v in per_gpu.values_mut() {
-            v.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            v.sort_by(|a, b| a.0.total_cmp(&b.0));
             // Merge overlapping/adjacent intervals.
             let mut merged: Vec<(f64, f64)> = Vec::with_capacity(v.len());
             for &(s, e) in v.iter() {
@@ -155,7 +155,7 @@ pub fn per_gpu_overlap_cdf(
         for p in v.iter_mut() {
             p.1 /= dmin;
         }
-        v.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        v.sort_by(|a, b| a.0.total_cmp(&b.0));
     }
     per
 }
@@ -168,7 +168,7 @@ pub fn duration_at_overlap(samples: &[(f64, f64)], target: f64) -> f64 {
         return f64::NAN;
     }
     let mut sorted = samples.to_vec();
-    sorted.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    sorted.sort_by(|a, b| a.0.total_cmp(&b.0));
     if target <= sorted[0].0 {
         // Mean duration of the lowest-overlap decile.
         let k = (sorted.len() / 10).max(1);

@@ -18,6 +18,7 @@ use crate::config::{FsdpVersion, ModelConfig, NodeSpec, WorkloadConfig};
 use crate::model::ops::{OpKind, OpRef, OpType, Phase};
 use crate::sim::{run_workload, ProfiledRun};
 use crate::trace::event::Stream;
+use crate::util::intern::{intern, Sym};
 use crate::util::{ascii, fmt, stats};
 use std::fmt::Write as _;
 
@@ -250,8 +251,10 @@ pub fn fig5(runs: &[SweepRun]) -> Figure {
         ("a", &FIG5A_OPS[..]),
         ("b", &FIG5B_OPS[..]),
     ] {
-        // Collect everything first to find the normalization max.
-        let mut rows: Vec<(String, String, [f64; 5])> = Vec::new();
+        // Collect everything first to find the normalization max. Row
+        // labels are interned handles: the render loop below compares
+        // 4-byte ids instead of cloning a String per row.
+        let mut rows: Vec<(Sym, String, [f64; 5])> = Vec::new();
         for (name, phase, op) in ops {
             let opref = OpRef::new(*op, *phase);
             for sr in runs {
@@ -266,7 +269,7 @@ pub fn fig5(runs: &[SweepRun]) -> Figure {
                     stats::quantile(&samples, 0.75),
                     stats::max(&samples),
                 ];
-                rows.push((name.to_string(), sr.label(), q));
+                rows.push((intern(name), sr.label(), q));
             }
         }
         let global_max = rows
@@ -275,11 +278,11 @@ pub fn fig5(runs: &[SweepRun]) -> Figure {
             .fold(0.0_f64, f64::max)
             .max(1e-9);
         let _ = writeln!(ascii, "\n(5{panel})");
-        let mut last_op = String::new();
+        let mut last_op: Option<Sym> = None;
         for (name, cfg_label, q) in &rows {
-            if *name != last_op {
+            if last_op != Some(*name) {
                 let _ = writeln!(ascii, " {name}");
-                last_op = name.clone();
+                last_op = Some(*name);
             }
             ascii.push_str(&ascii::quantile_row(
                 &format!("   {cfg_label:>12}"),
@@ -598,7 +601,7 @@ pub fn fig11(v1: &SweepRun, v2: &SweepRun) -> Figure {
                     .map(|o| (op.paper_name(), o.prep / 1e3, o.call / 1e3))
             })
             .collect();
-        rows.sort_by(|a, b| (b.1 + b.2).partial_cmp(&(a.1 + a.2)).unwrap());
+        rows.sort_by(|a, b| (b.1 + b.2).total_cmp(&(a.1 + a.2)));
         let maxv = rows
             .iter()
             .map(|r| r.1 + r.2)
@@ -645,8 +648,8 @@ pub fn fig12(run: &SweepRun) -> Figure {
             Stream::Compute => compute.push(entry),
         }
     }
-    comm.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
-    compute.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    comm.sort_by(|a, b| a.0.total_cmp(&b.0));
+    compute.sort_by(|a, b| a.0.total_cmp(&b.0));
     let mut csv = String::from("lane,op,t_start_ms,t_end_ms\n");
     for (s, e, n) in &comm {
         let _ = writeln!(csv, "comm,{n},{:.4},{:.4}", s / 1e6, e / 1e6);

@@ -284,7 +284,7 @@ pub fn cmd_analyze(args: &mut Args) -> Result<(), String> {
         .into_iter()
         .map(|(op, d)| (op.paper_name(), d))
         .collect();
-    rows.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    rows.sort_by(|a, b| b.1.total_cmp(&a.1));
     println!("\ntop operations by median duration:");
     for (name, d) in rows.iter().take(12) {
         println!("  {:>12}  {}", name, fmt::dur_ns(*d));

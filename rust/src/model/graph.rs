@@ -11,12 +11,15 @@
 use super::flops::{op_cost, OpCost};
 use super::ops::{OpKind, OpRef, OpType, Phase};
 use crate::config::ModelConfig;
+use crate::util::intern::{intern, Sym};
 
 /// Static description of one kernel inside an operation.
 #[derive(Debug, Clone)]
 pub struct KernelDesc {
-    /// Kernel symbol name (rocBLAS/CK-style, for trace realism).
-    pub name: String,
+    /// Kernel symbol name (rocBLAS/CK-style, for trace realism). Interned
+    /// once at program-build time; the engine copies the 4-byte handle
+    /// into every trace event instead of cloning a `String`.
+    pub name: Sym,
     pub op: OpRef,
     /// Decoder layer index; None for embedding/head/optimizer ops.
     pub layer: Option<u32>,
@@ -74,14 +77,16 @@ pub fn param_tensor_count(cfg: &ModelConfig) -> u64 {
     cfg.layers * 9 + 3
 }
 
-fn gemm_kernel_name(m: u64, n: u64, k: u64, phase: Phase) -> String {
-    // rocBLAS-flavored naming so traces look like the real thing.
+fn gemm_kernel_name(m: u64, n: u64, k: u64, phase: Phase) -> Sym {
+    // rocBLAS-flavored naming so traces look like the real thing. Names
+    // depend only on (dims, phase), so interning collapses the per-layer /
+    // per-iteration repetition to a handful of table entries.
     let suffix = match phase {
         Phase::Forward => "NN",
         Phase::Backward => "NT",
         Phase::Optimizer => "NN",
     };
-    format!("Cijk_Alik_Bljk_BF16_MT128x128x32_{suffix}_m{m}n{n}k{k}")
+    intern(&format!("Cijk_Alik_Bljk_BF16_MT128x128x32_{suffix}_m{m}n{n}k{k}"))
 }
 
 fn expand_kernels(
@@ -93,7 +98,7 @@ fn expand_kernels(
 ) -> Vec<KernelDesc> {
     let opref = OpRef::new(op, phase);
     let kind = op.kind();
-    let mk = |name: String, flops: f64, bytes: f64, mnk: Option<(u64, u64, u64)>| {
+    let mk = |name: Sym, flops: f64, bytes: f64, mnk: Option<(u64, u64, u64)>| {
         KernelDesc {
             name,
             op: opref,
@@ -147,7 +152,7 @@ fn expand_kernels(
         // delta / dKdV / dQ triple (mirrors our Pallas implementation).
         (OpType::AttnFa, Phase::Forward) => {
             vec![mk(
-                format!("fmha_fwd_d{}_bf16_causal", cfg.head_dim()),
+                intern(&format!("fmha_fwd_d{}_bf16_causal", cfg.head_dim())),
                 cost.flops,
                 cost.bytes,
                 None,
@@ -156,11 +161,11 @@ fn expand_kernels(
         (OpType::AttnFa, Phase::Backward) => {
             let d = cfg.head_dim();
             vec![
-                mk(format!("fmha_bwd_delta_d{d}_bf16"), cost.flops * 0.02,
+                mk(intern(&format!("fmha_bwd_delta_d{d}_bf16")), cost.flops * 0.02,
                    cost.bytes * 0.2, None),
-                mk(format!("fmha_bwd_dkdv_d{d}_bf16_causal"), cost.flops * 0.56,
+                mk(intern(&format!("fmha_bwd_dkdv_d{d}_bf16_causal")), cost.flops * 0.56,
                    cost.bytes * 0.4, None),
-                mk(format!("fmha_bwd_dq_d{d}_bf16_causal"), cost.flops * 0.42,
+                mk(intern(&format!("fmha_bwd_dq_d{d}_bf16_causal")), cost.flops * 0.42,
                    cost.bytes * 0.4, None),
             ]
         }
@@ -183,7 +188,7 @@ fn expand_kernels(
             (0..n)
                 .map(|i| {
                     mk(
-                        format!("multi_tensor_accum_chunk{i}"),
+                        intern(&format!("multi_tensor_accum_chunk{i}")),
                         cost.flops / n as f64,
                         cost.bytes / n as f64,
                         None,
@@ -197,7 +202,7 @@ fn expand_kernels(
             (0..buckets * 2)
                 .map(|i| {
                     mk(
-                        format!("multi_tensor_adamw_chunk{i}"),
+                        intern(&format!("multi_tensor_adamw_chunk{i}")),
                         cost.flops / (buckets * 2) as f64,
                         cost.bytes / (buckets * 2) as f64,
                         None,
@@ -208,9 +213,9 @@ fn expand_kernels(
         // Everything else: one kernel.
         (o, _) => {
             let name = match kind {
-                OpKind::Copy => "copy_kernel".to_string(),
-                OpKind::Vector => format!("elementwise_{}", o.short()),
-                _ => o.short().to_string(),
+                OpKind::Copy => intern("copy_kernel"),
+                OpKind::Vector => intern(&format!("elementwise_{}", o.short())),
+                _ => intern(o.short()),
             };
             vec![mk(name, cost.flops, cost.bytes, cost.gemm_mnk)]
         }

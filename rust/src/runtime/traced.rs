@@ -45,7 +45,7 @@ impl Tracer {
             kernel_id: self.seq,
             gpu: 0,
             stream: Stream::Compute,
-            name: format!("pjrt_{}", op.short()),
+            name: format!("pjrt_{}", op.short()).into(),
             op: OpRef::new(op, Phase::Forward),
             layer,
             iter: self.iter,

@@ -116,7 +116,7 @@ pub fn cpu_trace(
                 th.core = place(&mut occupied, logical, physical, &mut rng);
             }
             let util = if th.main {
-                let busy = host.busy[th.rank].get(&widx).copied().unwrap_or(0.0);
+                let busy = host.busy_ns(th.rank, widx);
                 let dispatch_frac = (busy / w).min(1.0);
                 ((params.spin_floor + (1.0 - params.spin_floor) * dispatch_frac)
                     * 100.0
@@ -149,18 +149,10 @@ pub fn cpu_trace(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::collections::HashMap;
 
     fn host_activity(ranks: usize, windows: u64, busy_frac: f64) -> HostActivity {
         let w = 1_000_000.0;
-        let mut busy = Vec::new();
-        for _ in 0..ranks {
-            let mut m = HashMap::new();
-            for i in 0..windows {
-                m.insert(i, w * busy_frac);
-            }
-            busy.push(m);
-        }
+        let busy = vec![vec![w * busy_frac; windows as usize]; ranks];
         HostActivity {
             window_ns: w,
             busy,

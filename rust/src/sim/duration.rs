@@ -152,7 +152,7 @@ impl DurationModel {
         // is unaffected.)
         let pathological = k.op.phase == Phase::Backward
             && k.op.op == OpType::AttnFa
-            && !k.name.contains("delta")
+            && !k.name.as_str().contains("delta")
             && self.batch == 1;
         let util = if pathological {
             let grid = (self.batch * self.q_heads) as f64 * grid_scale;

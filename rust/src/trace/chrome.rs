@@ -56,7 +56,7 @@ pub fn to_chrome_json(trace: &Trace) -> String {
             args.push(("fwd_link", Json::num(f as f64)));
         }
         events.push(Json::obj(vec![
-            ("name", Json::str(e.name.clone())),
+            ("name", Json::str(e.name.as_str())),
             ("ph", Json::str("X")),
             ("pid", Json::num(e.gpu as f64)),
             ("tid", Json::num(stream_tid(e.stream))),
@@ -65,15 +65,26 @@ pub fn to_chrome_json(trace: &Trace) -> String {
             ("args", Json::obj(args)),
         ]));
     }
+    // Pre-reserve the output buffer: one event serializes to ~300 bytes,
+    // and growing a multi-MB String by doubling re-copies the whole trace
+    // several times over.
     Json::obj(vec![
         ("traceEvents", Json::Arr(events)),
         ("displayTimeUnit", Json::str("ms")),
     ])
-    .to_string()
+    .to_string_with_capacity(1024 + trace.events.len() * 320)
 }
 
 /// Parse chrome-trace JSON produced by [`to_chrome_json`] back into a
 /// [`Trace`]. Events missing Chopper annotations are skipped.
+///
+/// Kernel names are interned into the process-global symbol table
+/// (`util::intern`), whose entries live for the process lifetime. That is
+/// bounded for chopper-generated traces (tiny name vocabulary) but means a
+/// long-running process importing many foreign traces with high-cardinality
+/// names (e.g. per-dispatch-suffixed rocprof symbols) retains one table
+/// entry per distinct name — use short-lived processes for bulk imports of
+/// untrusted traces.
 pub fn from_chrome_json(text: &str) -> Result<Trace, String> {
     let root = parse(text)?;
     let events = root
@@ -129,7 +140,7 @@ pub fn from_chrome_json(text: &str) -> Result<Trace, String> {
                         .get("name")
                         .and_then(|n| n.as_str())
                         .unwrap_or("")
-                        .to_string(),
+                        .into(),
                     op,
                     layer: num(args, "layer").map(|l| l as u32),
                     iter: num(args, "iter").unwrap_or(0.0) as u32,

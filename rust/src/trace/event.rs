@@ -7,6 +7,7 @@
 //! not valid for overlap analysis — alignment joins the two.
 
 use crate::model::ops::{OpKind, OpRef, Phase};
+use crate::util::intern::Sym;
 use std::fmt;
 
 /// GPU execution stream.
@@ -32,8 +33,10 @@ pub struct TraceEvent {
     pub kernel_id: u64,
     pub gpu: u32,
     pub stream: Stream,
-    /// Kernel symbol name.
-    pub name: String,
+    /// Kernel symbol name (interned handle; resolves at serialization —
+    /// events are emitted on the engine's hottest path and must not
+    /// allocate). `TraceEvent` is also `Copy`-cheap to clone now.
+    pub name: Sym,
     /// Operation annotation (paper Fig. 1 taxonomy + phase).
     pub op: OpRef,
     /// Decoder layer, when applicable.
@@ -111,11 +114,7 @@ impl Trace {
     pub fn gpu_events(&self, gpu: u32) -> Vec<&TraceEvent> {
         let mut v: Vec<&TraceEvent> =
             self.events.iter().filter(|e| e.gpu == gpu).collect();
-        v.sort_by(|a, b| {
-            (a.stream, a.seq)
-                .partial_cmp(&(b.stream, b.seq))
-                .unwrap()
-        });
+        v.sort_by(|a, b| (a.stream, a.seq).cmp(&(b.stream, b.seq)));
         v
     }
 

@@ -1,0 +1,147 @@
+//! Fast non-cryptographic hashing for hot tuple-keyed maps.
+//!
+//! `std::collections::HashMap` defaults to SipHash-1-3, which is DoS-safe
+//! but costs ~1ns/byte with a per-hash finalization — measurable on the
+//! engine's per-event maps (`fwd_ids`, `op_kernel_idx`) and the alignment
+//! join. This is an FxHash-style multiply-rotate hasher (the firefox /
+//! rustc-hash scheme; the external crate is not vendored, per the DESIGN.md
+//! §6 substitution table). All keys here are program-derived, never
+//! attacker-controlled, so hash-flooding resistance is irrelevant.
+//!
+//! Determinism note: `FxHasher` is fully deterministic (no per-process
+//! random state, unlike SipHash's `RandomState`), but map *iteration*
+//! order is still arbitrary — only use these maps where lookups, not
+//! iteration order, feed results (outputs must stay byte-stable).
+
+use std::collections::{HashMap, HashSet};
+use std::hash::{BuildHasherDefault, Hasher};
+
+/// The FxHash multiplier (64-bit golden-ratio-derived odd constant).
+const SEED: u64 = 0x51_7c_c1_b7_27_22_0a_95;
+
+/// Multiply-rotate hasher; one rotate+xor+mul per 8-byte word.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FxHasher {
+    hash: u64,
+}
+
+impl FxHasher {
+    #[inline]
+    fn add(&mut self, word: u64) {
+        self.hash = (self.hash.rotate_left(5) ^ word).wrapping_mul(SEED);
+    }
+}
+
+impl Hasher for FxHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.hash
+    }
+
+    #[inline]
+    fn write(&mut self, mut bytes: &[u8]) {
+        while bytes.len() >= 8 {
+            let (word, rest) = bytes.split_at(8);
+            self.add(u64::from_le_bytes(word.try_into().unwrap()));
+            bytes = rest;
+        }
+        if bytes.len() >= 4 {
+            let (word, rest) = bytes.split_at(4);
+            self.add(u32::from_le_bytes(word.try_into().unwrap()) as u64);
+            bytes = rest;
+        }
+        for &b in bytes {
+            self.add(b as u64);
+        }
+    }
+
+    #[inline]
+    fn write_u8(&mut self, n: u8) {
+        self.add(n as u64);
+    }
+
+    #[inline]
+    fn write_u16(&mut self, n: u16) {
+        self.add(n as u64);
+    }
+
+    #[inline]
+    fn write_u32(&mut self, n: u32) {
+        self.add(n as u64);
+    }
+
+    #[inline]
+    fn write_u64(&mut self, n: u64) {
+        self.add(n);
+    }
+
+    #[inline]
+    fn write_u128(&mut self, n: u128) {
+        self.add(n as u64);
+        self.add((n >> 64) as u64);
+    }
+
+    #[inline]
+    fn write_usize(&mut self, n: usize) {
+        self.add(n as u64);
+    }
+}
+
+pub type FxBuildHasher = BuildHasherDefault<FxHasher>;
+
+/// `HashMap` with the fast deterministic hasher.
+pub type FxHashMap<K, V> = HashMap<K, V, FxBuildHasher>;
+
+/// `HashSet` with the fast deterministic hasher.
+pub type FxHashSet<T> = HashSet<T, FxBuildHasher>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::hash::{BuildHasher, Hash};
+
+    fn hash_of<T: Hash>(v: &T) -> u64 {
+        FxBuildHasher::default().hash_one(v)
+    }
+
+    #[test]
+    fn deterministic_across_instances() {
+        let k = (3usize, 7u32, Some(2u32), 9u8);
+        assert_eq!(hash_of(&k), hash_of(&k));
+        assert_eq!(hash_of(&"kernel_name"), hash_of(&"kernel_name"));
+    }
+
+    #[test]
+    fn discriminates_nearby_keys() {
+        assert_ne!(hash_of(&(0u32, 1u32)), hash_of(&(1u32, 0u32)));
+        assert_ne!(hash_of(&42u64), hash_of(&43u64));
+        assert_ne!(hash_of(&"abc"), hash_of(&"abd"));
+    }
+
+    #[test]
+    fn map_and_set_work_with_tuple_keys() {
+        let mut m: FxHashMap<(u32, u32, Option<u32>), u64> = FxHashMap::default();
+        m.insert((1, 2, None), 10);
+        m.insert((1, 2, Some(0)), 20);
+        assert_eq!(m.get(&(1, 2, None)), Some(&10));
+        assert_eq!(m.get(&(1, 2, Some(0))), Some(&20));
+        assert_eq!(m.get(&(2, 1, None)), None);
+
+        let mut s: FxHashSet<&str> = FxHashSet::default();
+        assert!(s.insert("a"));
+        assert!(!s.insert("a"));
+    }
+
+    #[test]
+    fn write_handles_odd_lengths() {
+        // 0..16-byte slices all hash without panicking and differ.
+        let mut seen = std::collections::HashSet::new();
+        for len in 0..16 {
+            let bytes: Vec<u8> = (0..len as u8).collect();
+            let mut h = FxHasher::default();
+            h.write(&bytes);
+            seen.insert(h.finish());
+        }
+        assert_eq!(seen.len(), 16, "collision among trivial slices");
+    }
+}

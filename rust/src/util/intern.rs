@@ -1,0 +1,158 @@
+//! String interning for kernel symbol names.
+//!
+//! The engine used to carry an owned `String` in every `TraceEvent` —
+//! one heap allocation per simulated kernel on the hottest path, plus a
+//! clone into every serialization. Kernel names are drawn from a tiny,
+//! program-determined vocabulary (a few dozen rocBLAS/CK-style symbols per
+//! model configuration), so they are interned once at program-build time
+//! and events carry a 4-byte [`Sym`] handle that resolves back to
+//! `&'static str` at serialization/display time.
+//!
+//! The table is global, thread-safe (campaign workers intern from scoped
+//! threads), and append-only; interned strings are leaked deliberately —
+//! the vocabulary is bounded by the set of distinct kernel names across
+//! all scenarios of a process, not by event count.
+//!
+//! Determinism: handle *ids* depend on interning order and are therefore
+//! not stable across runs or thread interleavings — which is why [`Sym`]
+//! deliberately implements neither `Ord` nor `Hash`. Equality is safe
+//! (same string ⇔ same id within a process), and every serialized output
+//! resolves handles back to their strings, so rendered artifacts stay
+//! byte-identical regardless of interning order.
+
+use crate::util::hash::FxHashMap;
+use std::fmt;
+use std::sync::{OnceLock, RwLock};
+
+/// Interned string handle. `Copy`, 4 bytes, resolves via [`Sym::as_str`].
+#[derive(Clone, Copy, PartialEq, Eq)]
+pub struct Sym(u32);
+
+struct Interner {
+    map: FxHashMap<&'static str, u32>,
+    table: Vec<&'static str>,
+}
+
+static INTERNER: OnceLock<RwLock<Interner>> = OnceLock::new();
+
+fn interner() -> &'static RwLock<Interner> {
+    INTERNER.get_or_init(|| {
+        RwLock::new(Interner {
+            map: FxHashMap::default(),
+            table: Vec::new(),
+        })
+    })
+}
+
+/// Intern a string, returning its handle. Read-locks on the (overwhelmingly
+/// common) hit path; write-locks only when a new name first appears.
+pub fn intern(s: &str) -> Sym {
+    let lock = interner();
+    if let Some(&id) = lock.read().unwrap().map.get(s) {
+        return Sym(id);
+    }
+    let mut inner = lock.write().unwrap();
+    // Re-check: another thread may have interned it between the locks.
+    if let Some(&id) = inner.map.get(s) {
+        return Sym(id);
+    }
+    let leaked: &'static str = Box::leak(s.to_owned().into_boxed_str());
+    let id = u32::try_from(inner.table.len()).expect("interner overflow");
+    inner.table.push(leaked);
+    inner.map.insert(leaked, id);
+    Sym(id)
+}
+
+impl Sym {
+    /// Resolve back to the interned string. Takes an uncontended RwLock
+    /// read (~tens of ns) — intentional: resolution happens once per event
+    /// at serialization/display time, never on the engine hot path, and a
+    /// lock-free read of the append-only table would require `unsafe`.
+    pub fn as_str(self) -> &'static str {
+        interner().read().unwrap().table[self.0 as usize]
+    }
+}
+
+impl fmt::Display for Sym {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl fmt::Debug for Sym {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:?}", self.as_str())
+    }
+}
+
+impl From<&str> for Sym {
+    fn from(s: &str) -> Sym {
+        intern(s)
+    }
+}
+
+impl From<String> for Sym {
+    fn from(s: String) -> Sym {
+        intern(&s)
+    }
+}
+
+impl PartialEq<&str> for Sym {
+    fn eq(&self, other: &&str) -> bool {
+        self.as_str() == *other
+    }
+}
+
+impl PartialEq<str> for Sym {
+    fn eq(&self, other: &str) -> bool {
+        self.as_str() == other
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_string_same_handle() {
+        let a = intern("rmsnorm_fwd_kernel_test");
+        let b = intern("rmsnorm_fwd_kernel_test");
+        assert_eq!(a, b);
+        assert_eq!(a.as_str(), "rmsnorm_fwd_kernel_test");
+    }
+
+    #[test]
+    fn distinct_strings_distinct_handles() {
+        assert_ne!(intern("intern_test_a"), intern("intern_test_b"));
+    }
+
+    #[test]
+    fn from_and_compare_with_str() {
+        let s: Sym = "intern_test_from".into();
+        assert_eq!(s, "intern_test_from");
+        let owned: Sym = String::from("intern_test_owned").into();
+        assert_eq!(owned.to_string(), "intern_test_owned");
+        assert_eq!(format!("{owned:?}"), "\"intern_test_owned\"");
+    }
+
+    #[test]
+    fn concurrent_interning_converges() {
+        let handles: Vec<_> = (0..8)
+            .map(|t| {
+                std::thread::spawn(move || {
+                    let mut out = Vec::new();
+                    for i in 0..64 {
+                        out.push(intern(&format!("intern_race_{}", i)));
+                    }
+                    let _ = t;
+                    out
+                })
+            })
+            .collect();
+        let results: Vec<Vec<Sym>> =
+            handles.into_iter().map(|h| h.join().unwrap()).collect();
+        for w in results.windows(2) {
+            assert_eq!(w[0], w[1], "threads disagree on handles");
+        }
+    }
+}

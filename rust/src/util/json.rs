@@ -80,7 +80,18 @@ impl Json {
         out
     }
 
-    fn write(&self, out: &mut String) {
+    /// Serialize into a pre-reserved buffer. Callers that know the rough
+    /// output size (traces: ~bytes-per-event × events; summaries: a few
+    /// hundred bytes) avoid the repeated grow-and-copy of an unsized
+    /// `String` — the dominant cost of serializing large artifacts.
+    pub fn to_string_with_capacity(&self, capacity: usize) -> String {
+        let mut out = String::with_capacity(capacity);
+        self.write(&mut out);
+        out
+    }
+
+    /// Append the serialized form to an existing buffer (no whitespace).
+    pub fn write(&self, out: &mut String) {
         match self {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
@@ -361,6 +372,15 @@ mod tests {
         assert!(parse("[1,]").is_err());
         assert!(parse("12 34").is_err());
         assert!(parse("\"open").is_err());
+    }
+
+    #[test]
+    fn buffered_writer_matches_to_string() {
+        let j = Json::obj(vec![("a", Json::num(1.5)), ("b", Json::str("x"))]);
+        assert_eq!(j.to_string(), j.to_string_with_capacity(256));
+        let mut out = String::from("prefix:");
+        j.write(&mut out);
+        assert_eq!(out, format!("prefix:{}", j.to_string()));
     }
 
     #[test]

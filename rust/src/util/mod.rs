@@ -5,6 +5,8 @@
 
 pub mod ascii;
 pub mod fmt;
+pub mod hash;
+pub mod intern;
 pub mod json;
 pub mod prng;
 pub mod stats;

@@ -134,6 +134,37 @@ fn changed_scenario_invalidates_only_its_entry() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+/// Golden output invariance for summaries: re-running a fixed-seed
+/// scenario produces byte-identical `ScenarioSummary` JSON (the engine
+/// refactor — interning, counter-based termination, fast hashing — must
+/// not perturb any summarized quantity), and the JSON round-trips through
+/// the wire byte-stably.
+#[test]
+fn scenario_summary_json_is_byte_stable_across_runs() {
+    use chopper::campaign::ScenarioSummary;
+    let node = NodeSpec::mi300x_node();
+    let mut spec = GridSpec::paper(2, 2, 1);
+    spec.batches = vec![2];
+    spec.seqs = vec![4096];
+    spec.fsdp = vec![FsdpVersion::V1];
+    let scenarios = spec.expand();
+    assert_eq!(scenarios.len(), 1);
+
+    let a = run_campaign(&node, &scenarios, 1, None, false);
+    let b = run_campaign(&node, &scenarios, 1, None, false);
+    let ja = a.summaries[0].to_json_str();
+    let jb = b.summaries[0].to_json_str();
+    assert_eq!(ja, jb, "summary bytes changed between identical runs");
+
+    let back = ScenarioSummary::from_json_str(&ja).unwrap();
+    assert_eq!(back, a.summaries[0]);
+    assert_eq!(back.to_json_str(), ja, "summary JSON not wire-stable");
+
+    // The summary carries real signal (not a degenerate all-zero record).
+    assert!(a.summaries[0].tokens_per_sec > 0.0);
+    assert!(a.summaries[0].events > 0);
+}
+
 #[test]
 fn sweep_runner_matches_campaign_scenarios() {
     // report::run_sweep rides the same fan-out; spot-check it still

@@ -1,12 +1,20 @@
 //! Full-pipeline integration test: collect → export → import → align →
 //! every figure generator → files on disk — the `chopper sweep` path end
-//! to end at reduced scale, plus the CLI surface.
+//! to end at reduced scale, plus the CLI surface. Also the golden
+//! output-invariance tests: the hot-path refactor (counter-based
+//! termination, interned names, fast hashing, dense host windows) must
+//! leave the engine's serialized output byte-identical — asserted against
+//! the verbatim pre-refactor engine kept in `benches/engine_baseline.rs`.
+
+#[path = "../benches/engine_baseline.rs"]
+mod engine_baseline;
 
 use chopper::chopper::report::{self, SweepRun};
 use chopper::chopper::AlignedTrace;
-use chopper::config::{FsdpVersion, ModelConfig, NodeSpec};
-use chopper::sim::run_workload;
+use chopper::config::{FsdpVersion, ModelConfig, NodeSpec, WorkloadConfig};
+use chopper::sim::{run_workload, Engine, EngineParams};
 use chopper::trace::chrome;
+use chopper::trace::event::{Trace, TraceEvent};
 
 fn small_sweep() -> (NodeSpec, Vec<SweepRun>) {
     let node = NodeSpec::mi300x_node();
@@ -88,6 +96,113 @@ fn cli_figure_all_small() {
         );
     }
     std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Golden output invariance: the refactored engine and the verbatim
+/// pre-refactor engine produce bitwise-identical event streams and
+/// byte-identical serialized trace JSON for a fixed seed.
+#[test]
+fn engine_refactor_preserves_serialized_trace_bytes() {
+    let node = NodeSpec::mi300x_node();
+    let mut cfg = ModelConfig::llama3_8b();
+    cfg.layers = 2;
+    let mut wl = WorkloadConfig::new(2, 4096, FsdpVersion::V1);
+    wl.iterations = 2;
+    wl.warmup = 1;
+
+    let new_out = Engine::new(&node, &cfg, &wl, EngineParams::default()).run();
+    let old_out =
+        engine_baseline::Engine::new(&node, &cfg, &wl, EngineParams::default())
+            .run();
+
+    // Field-level bitwise identity of every event.
+    assert_eq!(new_out.trace.events.len(), old_out.events.len());
+    for (a, b) in new_out.trace.events.iter().zip(&old_out.events) {
+        assert_eq!(a.kernel_id, b.kernel_id);
+        assert_eq!(a.gpu, b.gpu);
+        assert_eq!(a.stream, b.stream);
+        assert_eq!(a.name.as_str(), b.name);
+        assert_eq!(a.op, b.op);
+        assert_eq!(a.layer, b.layer);
+        assert_eq!(a.iter, b.iter);
+        assert_eq!(a.t_launch.to_bits(), b.t_launch.to_bits());
+        assert_eq!(a.t_start.to_bits(), b.t_start.to_bits());
+        assert_eq!(a.t_end.to_bits(), b.t_end.to_bits());
+        assert_eq!(a.seq, b.seq);
+        assert_eq!(a.fwd_link, b.fwd_link);
+        assert_eq!(a.freq_mhz.to_bits(), b.freq_mhz.to_bits());
+    }
+
+    // Byte-identical serialized trace: rebuild a Trace from the baseline's
+    // events (same meta) and compare the Chrome JSON strings.
+    let mut base_trace = Trace::default();
+    base_trace.meta = new_out.trace.meta.clone();
+    base_trace.events = old_out
+        .events
+        .iter()
+        .map(|e| TraceEvent {
+            kernel_id: e.kernel_id,
+            gpu: e.gpu,
+            stream: e.stream,
+            name: e.name.as_str().into(),
+            op: e.op,
+            layer: e.layer,
+            iter: e.iter,
+            t_launch: e.t_launch,
+            t_start: e.t_start,
+            t_end: e.t_end,
+            seq: e.seq,
+            fwd_link: e.fwd_link,
+            freq_mhz: e.freq_mhz,
+            flops: e.flops,
+            bytes: e.bytes,
+        })
+        .collect();
+    assert_eq!(
+        chrome::to_chrome_json(&new_out.trace),
+        chrome::to_chrome_json(&base_trace),
+        "serialized trace bytes changed across the refactor"
+    );
+
+    // Telemetry equivalence: power samples and host-activity windows.
+    assert_eq!(new_out.power.samples.len(), old_out.power.samples.len());
+    for (a, b) in new_out.power.samples.iter().zip(&old_out.power.samples) {
+        assert_eq!(a.power_w.to_bits(), b.power_w.to_bits());
+        assert_eq!(a.freq_mhz.to_bits(), b.freq_mhz.to_bits());
+    }
+    for (rank, windows) in old_out.host.busy.iter().enumerate() {
+        for (&widx, &ns) in windows {
+            let dense = new_out.host.busy_ns(rank, widx);
+            assert!(
+                (dense - ns).abs() < 1e-9,
+                "host window ({rank}, {widx}) diverged: {dense} vs {ns}"
+            );
+        }
+        let total_dense: f64 = new_out.host.busy[rank].iter().sum();
+        let total_map: f64 = windows.values().sum();
+        assert!((total_dense - total_map).abs() < 1e-6);
+    }
+}
+
+/// Serialization is deterministic byte-for-byte, and interned kernel
+/// names survive an export → import round trip exactly.
+#[test]
+fn chrome_json_serialization_is_deterministic() {
+    let node = NodeSpec::mi300x_node();
+    let mut cfg = ModelConfig::llama3_8b();
+    cfg.layers = 1;
+    let mut wl = WorkloadConfig::new(1, 4096, FsdpVersion::V2);
+    wl.iterations = 1;
+    wl.warmup = 0;
+    let out = Engine::new(&node, &cfg, &wl, EngineParams::default()).run();
+    let first = chrome::to_chrome_json(&out.trace);
+    assert_eq!(first, chrome::to_chrome_json(&out.trace));
+    let back = chrome::from_chrome_json(&first).unwrap();
+    assert_eq!(back.events.len(), out.trace.events.len());
+    for (a, b) in back.events.iter().zip(&out.trace.events) {
+        assert_eq!(a.name, b.name, "interned name lost in round trip");
+        assert_eq!(a.seq, b.seq);
+    }
 }
 
 #[test]
