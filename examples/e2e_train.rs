@@ -9,6 +9,7 @@
 //!     cargo run --release --example e2e_train [steps]
 
 use chopper::chopper::aggregate::op_medians;
+use chopper::chopper::TraceIndex;
 use chopper::runtime::{default_artifact_dir, Runtime};
 use chopper::train::{train, traced_eval, TrainConfig};
 use chopper::util::fmt;
@@ -56,7 +57,8 @@ fn main() {
     // --- Chopper-traced per-op forward on the trained weights. ------------
     println!("\ntraced per-op forward (the pjrt trace path):");
     let traced = traced_eval(&mut rt, &r.params, 7).expect("traced forward");
-    let mut meds: Vec<_> = op_medians(&traced.trace).into_iter().collect();
+    let idx = TraceIndex::build(&traced.trace);
+    let mut meds: Vec<_> = op_medians(&idx).into_iter().collect();
     meds.sort_by(|a, b| b.1.total_cmp(&a.1));
     for (op, d) in meds.iter().take(6) {
         println!("  {:>10}  {}", op.paper_name(), fmt::dur_ns(*d));

@@ -4,7 +4,7 @@
 //!
 //!     cargo run --release --example fsdp_compare [layers] [iters]
 
-use chopper::chopper::report::{self, SweepRun};
+use chopper::chopper::report::{self, IndexedRun, SweepRun};
 use chopper::chopper::throughput;
 use chopper::config::{FsdpVersion, ModelConfig, NodeSpec, WorkloadConfig};
 use chopper::model::ops::OpType;
@@ -32,20 +32,22 @@ fn main() {
         let run = run_workload(&node, &cfg, &wl);
         runs.push(SweepRun { wl, run });
     }
-    let (v1, v2) = (&runs[0], &runs[1]);
+    // One shared index per run (counters joined) feeds every analysis.
+    let indexed = report::index_runs(&runs);
+    let (v1, v2) = (&indexed[0], &indexed[1]);
 
     // Throughput delta (Observation 5).
-    let tokens = v1.wl.tokens_per_iteration(node.num_gpus as u64) as f64;
-    let tp1 = throughput(&v1.run.trace, tokens);
-    let tp2 = throughput(&v2.run.trace, tokens);
+    let tokens = v1.wl().tokens_per_iteration(node.num_gpus as u64) as f64;
+    let tp1 = throughput(v1.idx(), tokens);
+    let tp2 = throughput(v2.idx(), tokens);
     println!(
         "throughput: v1 {:.0} tok/s, v2 {:.0} tok/s  (v2 = {:.2}x)",
         tp1.tokens_per_sec,
         tp2.tokens_per_sec,
         tp2.tokens_per_sec / tp1.tokens_per_sec
     );
-    let copies = |r: &SweepRun| {
-        r.run
+    let copies = |r: &IndexedRun| {
+        r.sr.run
             .trace
             .events
             .iter()
@@ -60,5 +62,5 @@ fn main() {
 
     println!("\n{}", report::fig11(v1, v2).ascii);
     println!("{}", report::fig14(v1, v2).ascii);
-    println!("{}", report::fig15(&runs, &node).ascii);
+    println!("{}", report::fig15(&indexed, &node).ascii);
 }

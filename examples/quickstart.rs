@@ -4,7 +4,7 @@
 //!     cargo run --release --example quickstart
 
 use chopper::chopper::aggregate::op_medians;
-use chopper::chopper::{throughput, CpuUtilAnalysis};
+use chopper::chopper::{throughput, CpuUtilAnalysis, TraceIndex};
 use chopper::config::{FsdpVersion, ModelConfig, NodeSpec, WorkloadConfig};
 use chopper::trace::chrome;
 use chopper::trace::collect::RuntimeProfiler;
@@ -30,9 +30,11 @@ fn main() {
         fmt::dur_ns(cap.trace.span_ns())
     );
 
-    // 3. Multi-granularity analysis.
+    // 3. Multi-granularity analysis: build the shared index once
+    //    (one pass over the events), then query it as often as you like.
+    let idx = TraceIndex::build(&cap.trace);
     let tokens = wl.tokens_per_iteration(node.num_gpus as u64) as f64;
-    let tp = throughput(&cap.trace, tokens);
+    let tp = throughput(&idx, tokens);
     println!(
         "  throughput: {:.0} tokens/s   (median iteration {}, launch overhead {})",
         tp.tokens_per_sec,
@@ -40,7 +42,7 @@ fn main() {
         fmt::dur_ns(tp.launch_ns)
     );
 
-    let mut medians: Vec<_> = op_medians(&cap.trace).into_iter().collect();
+    let mut medians: Vec<_> = op_medians(&idx).into_iter().collect();
     medians.sort_by(|a, b| b.1.total_cmp(&a.1));
     println!("\n  top operations by median duration:");
     for (op, d) in medians.iter().take(8) {

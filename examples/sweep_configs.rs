@@ -1,7 +1,8 @@
 //! Reproduce the paper's configuration sweep (Fig. 4): throughput and
 //! phase/op-type breakdown across b1s4, b2s4, b4s4, b1s8, b2s8 under
 //! FSDPv1 and FSDPv2. The ten runs fan out over the campaign runner —
-//! one worker per hardware thread, results in deterministic sweep order.
+//! one worker per hardware thread, results in deterministic sweep order —
+//! and the per-run TraceIndexes are built the same way.
 //!
 //!     cargo run --release --example sweep_configs [layers] [iters]
 
@@ -33,8 +34,9 @@ fn main() {
         iters,
         iters / 2,
     );
-    let fig = report::fig4(&runs);
+    let indexed = report::index_runs(&runs);
+    let fig = report::fig4(&indexed);
     println!("{}", fig.ascii);
-    // Fig. 6 rides on the same runs.
-    println!("{}", report::fig6(&runs).ascii);
+    // Fig. 6 rides on the same runs (and the same indexes).
+    println!("{}", report::fig6(&indexed).ascii);
 }

@@ -5,7 +5,7 @@
 mod common;
 
 use chopper::benchkit::{section, value};
-use chopper::chopper::{summarize_op_overlap, throughput};
+use chopper::chopper::{summarize_op_overlap, throughput, TraceIndex};
 use chopper::config::{FsdpVersion, WorkloadConfig};
 use chopper::model::ops::{OpRef, OpType};
 use chopper::sim::{run_workload_with, EngineParams};
@@ -35,6 +35,8 @@ fn main() {
     section("ablation: allocator-noise channel (drives Obs 6 / Insight 8)");
     let v1 = run("b2s4", FsdpVersion::V1, base.clone());
     let v2 = run("b2s4", FsdpVersion::V2, base.clone());
+    let idx_v1 = TraceIndex::build(&v1.trace);
+    let idx_v2 = TraceIndex::build(&v2.trace);
     let mut no_noise = base.clone();
     no_noise.hbm_noise_scale_w = 0.0;
     let v1_quiet = run("b2s4", FsdpVersion::V1, no_noise);
@@ -49,15 +51,16 @@ fn main() {
     assert!(gap_off < 1.05, "mechanism removed: gap must vanish");
 
     section("ablation: C3 contention penalties (drive Obs 4 / Insight 3)");
-    let attn = summarize_op_overlap(&v1.trace, OpRef::bwd(OpType::AttnN));
-    let mlp = summarize_op_overlap(&v1.trace, OpRef::bwd(OpType::MlpN));
+    let attn = summarize_op_overlap(&idx_v1, OpRef::bwd(OpType::AttnN));
+    let mlp = summarize_op_overlap(&idx_v1, OpRef::bwd(OpType::MlpN));
     let dur_ratio_on = attn.duration_q[2] / mlp.duration_q[2];
     let mut no_contention = base.clone();
     no_contention.spin_penalty = 0.0;
     no_contention.transfer_penalty = 0.0;
     let v1_nc = run("b2s4", FsdpVersion::V1, no_contention);
-    let attn_nc = summarize_op_overlap(&v1_nc.trace, OpRef::bwd(OpType::AttnN));
-    let mlp_nc = summarize_op_overlap(&v1_nc.trace, OpRef::bwd(OpType::MlpN));
+    let idx_nc = TraceIndex::build(&v1_nc.trace);
+    let attn_nc = summarize_op_overlap(&idx_nc, OpRef::bwd(OpType::AttnN));
+    let mlp_nc = summarize_op_overlap(&idx_nc, OpRef::bwd(OpType::MlpN));
     let dur_ratio_off = attn_nc.duration_q[2] / mlp_nc.duration_q[2];
     value("b_attn_n/b_mlp_n duration, contention ON", dur_ratio_on, "x");
     value("b_attn_n/b_mlp_n duration, contention OFF (→ ~1)", dur_ratio_off, "x");
@@ -69,7 +72,7 @@ fn main() {
 
     section("ablation: comm-dispatch asymmetry (drives Fig. 8's outlier GPU)");
     let per = chopper::chopper::per_gpu_overlap_cdf(
-        &v1.trace,
+        &idx_v1,
         OpRef::fwd(OpType::AttnOp),
     );
     let meds: Vec<f64> = per
@@ -81,8 +84,9 @@ fn main() {
     no_far.far_rank_delay_ns = 0.0;
     no_far.comm_delay_sigma_ns = 0.0;
     let v1_nf = run("b2s4", FsdpVersion::V1, no_far);
+    let idx_nf = TraceIndex::build(&v1_nf.trace);
     let per_nf = chopper::chopper::per_gpu_overlap_cdf(
-        &v1_nf.trace,
+        &idx_nf,
         OpRef::fwd(OpType::AttnOp),
     );
     let meds_nf: Vec<f64> = per_nf
@@ -99,8 +103,8 @@ fn main() {
 
     section("ablation: v1 optimizer host gaps (drive Fig. 11's opt_step bars)");
     let tokens = 2.0 * 4096.0 * 8.0;
-    let tp_v1 = throughput(&v1.trace, tokens).tokens_per_sec;
-    let tp_v2 = throughput(&v2.trace, tokens).tokens_per_sec;
+    let tp_v1 = throughput(&idx_v1, tokens).tokens_per_sec;
+    let tp_v2 = throughput(&idx_v2, tokens).tokens_per_sec;
     value("throughput v1", tp_v1, "tok/s");
     value("throughput v2", tp_v2, "tok/s");
     assert!(tp_v2 > tp_v1);

@@ -1,0 +1,1397 @@
+//! VERBATIM pre-refactor analysis path — the A/B baseline and equivalence
+//! oracle for the `chopper::index::TraceIndex` refactor, mirroring how
+//! `engine_baseline.rs` pins the engine hot-path overhaul (PR 2
+//! methodology). Each nested module below is the pre-index source of the
+//! corresponding `rust/src/chopper/*` module (plus the campaign runner's
+//! `summarize`), with only mechanical adjustments: `crate::` import paths
+//! became `chopper::` library paths, intra-`chopper` references became
+//! `super::` references, and unit tests were stripped. The shared data
+//! shapes (`OpInstanceAgg`, `Figure`, `SweepRun`, `ScenarioSummary`,
+//! `OpBreakdown`, `LaunchOverhead`, …) are reused from the library so the
+//! two paths' outputs compare directly.
+//!
+//! Every function here re-scans `trace.events` per call, re-derives the
+//! comm-interval set per op, and `align::AlignedTrace::align` deep-clones
+//! the trace — exactly the costs the index removes. `benches/analysis_hot.rs`
+//! and `tests/pipeline.rs` assert the optimized path's figures, CSVs and
+//! summaries are byte-identical to this one before timing anything.
+#![allow(dead_code)]
+
+pub mod aggregate {
+    use chopper::chopper::aggregate::{Filter, OpInstanceAgg};
+    use chopper::model::ops::{OpKind, OpRef, Phase};
+    use chopper::trace::event::{Stream, Trace};
+    use chopper::util::stats;
+    use std::collections::BTreeMap;
+
+    /// Group the compute kernels of a trace into operation instances.
+    /// Comm events become single-kernel instances of their collective op.
+    pub fn op_instances(trace: &Trace, filter: &Filter) -> Vec<OpInstanceAgg> {
+        let warmup = trace.meta.warmup;
+        let mut map: BTreeMap<(u32, u32, OpRef, Option<u32>, u8), OpInstanceAgg> =
+            BTreeMap::new();
+        for e in trace.events.iter() {
+            if !filter.accepts(e, warmup) {
+                continue;
+            }
+            let stream_tag = match e.stream {
+                Stream::Compute => 0u8,
+                Stream::Comm => 1,
+            };
+            let key = (e.gpu, e.iter, e.op, e.layer, stream_tag);
+            let inst = map.entry(key).or_insert_with(|| OpInstanceAgg {
+                gpu: e.gpu,
+                iter: e.iter,
+                op: e.op,
+                layer: e.layer,
+                t_start: f64::INFINITY,
+                t_end: f64::NEG_INFINITY,
+                kernel_ns: 0.0,
+                kernels: 0,
+                flops: 0.0,
+                bytes: 0.0,
+                kernel_ids: Vec::new(),
+            });
+            inst.t_start = inst.t_start.min(e.t_start);
+            inst.t_end = inst.t_end.max(e.t_end);
+            inst.kernel_ns += e.duration();
+            inst.kernels += 1;
+            inst.flops += e.flops;
+            inst.bytes += e.bytes;
+            inst.kernel_ids.push(e.kernel_id);
+        }
+        map.into_values().collect()
+    }
+
+    /// Fig-5-style samples: per (gpu, iter), the durations of all instances
+    /// of `op` summed across layers.
+    pub fn op_duration_samples(trace: &Trace, op: OpRef) -> Vec<f64> {
+        let mut filter = Filter::sampled();
+        filter.op = Some(op);
+        let mut per: BTreeMap<(u32, u32), f64> = BTreeMap::new();
+        for inst in op_instances(trace, &filter) {
+            *per.entry((inst.gpu, inst.iter)).or_insert(0.0) += inst.duration();
+        }
+        per.into_values().collect()
+    }
+
+    /// Duration rollup per (phase, op-kind) — the Fig-4 stacked-bar
+    /// quantity.
+    pub fn phase_kind_duration_samples(
+        trace: &Trace,
+    ) -> BTreeMap<(Phase, OpKind), Vec<f64>> {
+        let mut per: BTreeMap<(Phase, OpKind, u32, u32), f64> = BTreeMap::new();
+        let warmup = trace.meta.warmup;
+        for e in trace.events.iter().filter(|e| e.iter >= warmup) {
+            if e.stream == Stream::Comm {
+                continue; // comm kernels are not part of the compute breakdown
+            }
+            *per.entry((e.op.phase, e.kind(), e.gpu, e.iter)).or_insert(0.0) +=
+                e.duration();
+        }
+        let mut out: BTreeMap<(Phase, OpKind), Vec<f64>> = BTreeMap::new();
+        for ((phase, kind, _, _), v) in per {
+            out.entry((phase, kind)).or_default().push(v);
+        }
+        out
+    }
+
+    /// Total duration of one full iteration per (gpu, iter).
+    pub fn iteration_spans(trace: &Trace) -> BTreeMap<(u32, u32), (f64, f64)> {
+        let mut spans: BTreeMap<(u32, u32), (f64, f64)> = BTreeMap::new();
+        for e in &trace.events {
+            if e.stream == Stream::Comm {
+                continue;
+            }
+            let s = spans
+                .entry((e.gpu, e.iter))
+                .or_insert((f64::INFINITY, f64::NEG_INFINITY));
+            s.0 = s.0.min(e.t_start);
+            s.1 = s.1.max(e.t_end);
+        }
+        spans
+    }
+
+    /// Median duration of each op across all sampled instances.
+    pub fn op_medians(trace: &Trace) -> BTreeMap<OpRef, f64> {
+        let mut by_op: BTreeMap<OpRef, Vec<f64>> = BTreeMap::new();
+        for inst in op_instances(trace, &Filter::sampled()) {
+            by_op.entry(inst.op).or_default().push(inst.duration());
+        }
+        by_op
+            .into_iter()
+            .map(|(op, v)| (op, stats::median(&v)))
+            .collect()
+    }
+}
+
+pub mod overlap {
+    use super::aggregate::op_instances;
+    use chopper::chopper::aggregate::{Filter, OpInstanceAgg};
+    use chopper::chopper::CommIntervals;
+    use chopper::model::ops::OpRef;
+    use chopper::trace::event::Trace;
+    use chopper::util::stats;
+    use std::collections::BTreeMap;
+
+    /// One (instance, overlap-ratio) observation (owned, pre-index shape).
+    #[derive(Debug, Clone)]
+    pub struct OverlapSample {
+        pub inst: OpInstanceAgg,
+        pub ratio: f64,
+    }
+
+    /// Overlap ratio of every compute instance matching `filter`.
+    pub fn overlap_samples(trace: &Trace, filter: &Filter) -> Vec<OverlapSample> {
+        let comm = CommIntervals::from_trace(trace);
+        op_instances(trace, filter)
+            .into_iter()
+            .filter(|i| !i.op.op.is_comm())
+            .map(|inst| {
+                let ratio = comm.ratio(inst.gpu, inst.t_start, inst.t_end);
+                OverlapSample { inst, ratio }
+            })
+            .collect()
+    }
+
+    /// Per-op overlap/duration summary (Fig. 7 rows).
+    #[derive(Debug, Clone)]
+    pub struct OpOverlapSummary {
+        pub op: OpRef,
+        pub n: usize,
+        pub ratio_q: [f64; 5],
+        pub duration_q: [f64; 5],
+        pub correlation: Option<f64>,
+    }
+
+    pub fn summarize_op_overlap(trace: &Trace, op: OpRef) -> OpOverlapSummary {
+        let mut f = Filter::sampled();
+        f.op = Some(op);
+        let samples = overlap_samples(trace, &f);
+        let ratios: Vec<f64> = samples.iter().map(|s| s.ratio).collect();
+        let durs: Vec<f64> = samples.iter().map(|s| s.inst.duration()).collect();
+        let q = |xs: &[f64]| {
+            [
+                stats::min(xs),
+                stats::quantile(xs, 0.25),
+                stats::median(xs),
+                stats::quantile(xs, 0.75),
+                stats::max(xs),
+            ]
+        };
+        OpOverlapSummary {
+            op,
+            n: samples.len(),
+            ratio_q: q(&ratios),
+            duration_q: q(&durs),
+            correlation: stats::pearson(&ratios, &durs),
+        }
+    }
+
+    /// Per-GPU (overlap ratio, duration) pairs for one op — Fig. 8's CDFs.
+    pub fn per_gpu_overlap_cdf(
+        trace: &Trace,
+        op: OpRef,
+    ) -> BTreeMap<u32, Vec<(f64, f64)>> {
+        let mut f = Filter::sampled();
+        f.op = Some(op);
+        let samples = overlap_samples(trace, &f);
+        let mut per: BTreeMap<u32, Vec<(f64, f64)>> = BTreeMap::new();
+        for s in samples {
+            per.entry(s.inst.gpu)
+                .or_default()
+                .push((s.ratio, s.inst.duration()));
+        }
+        for v in per.values_mut() {
+            let dmin = v
+                .iter()
+                .map(|(_, d)| *d)
+                .fold(f64::INFINITY, f64::min)
+                .max(1e-9);
+            for p in v.iter_mut() {
+                p.1 /= dmin;
+            }
+            v.sort_by(|a, b| a.0.total_cmp(&b.0));
+        }
+        per
+    }
+}
+
+pub mod launch {
+    use chopper::chopper::launch::{launch_overhead, LaunchOverhead};
+    use chopper::model::ops::{OpKind, OpRef, OpType, Phase};
+    use chopper::trace::event::{Stream, Trace, TraceEvent};
+    use chopper::util::stats;
+    use std::collections::BTreeMap;
+
+    /// Per-kernel overheads of one GPU's compute stream, in dispatch order.
+    pub fn per_kernel_overheads(
+        trace: &Trace,
+        gpu: u32,
+    ) -> Vec<(usize, LaunchOverhead)> {
+        let mut evs: Vec<(usize, &TraceEvent)> = trace
+            .events
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| {
+                e.gpu == gpu
+                    && e.stream == Stream::Compute
+                    && e.op.op != OpType::ParamCopy
+            })
+            .collect();
+        evs.sort_by(|a, b| a.1.seq.cmp(&b.1.seq));
+        let mut out = Vec::with_capacity(evs.len().saturating_sub(1));
+        for w in evs.windows(2) {
+            let (_, prev) = w[0];
+            let (idx, cur) = w[1];
+            out.push((idx, launch_overhead(cur, prev.t_end)));
+        }
+        out
+    }
+
+    /// Mean prep/call overhead per operation — Fig. 11's bars.
+    pub fn op_launch_overheads(trace: &Trace) -> BTreeMap<OpRef, LaunchOverhead> {
+        let warmup = trace.meta.warmup;
+        let mut acc: BTreeMap<OpRef, (Vec<f64>, Vec<f64>)> = BTreeMap::new();
+        for gpu in 0..trace.meta.num_gpus {
+            for (idx, o) in per_kernel_overheads(trace, gpu) {
+                let e = &trace.events[idx];
+                if e.iter < warmup {
+                    continue;
+                }
+                let entry = acc.entry(e.op).or_default();
+                entry.0.push(o.prep);
+                entry.1.push(o.call);
+            }
+        }
+        acc.into_iter()
+            .map(|(op, (preps, calls))| {
+                (
+                    op,
+                    LaunchOverhead {
+                        prep: stats::mean(&preps),
+                        call: stats::mean(&calls),
+                    },
+                )
+            })
+            .collect()
+    }
+
+    /// Total launch overhead per (phase, kind) per (gpu, iteration).
+    pub fn phase_kind_launch_samples(
+        trace: &Trace,
+    ) -> BTreeMap<(Phase, OpKind), Vec<f64>> {
+        let warmup = trace.meta.warmup;
+        let mut per: BTreeMap<(Phase, OpKind, u32, u32), f64> = BTreeMap::new();
+        for gpu in 0..trace.meta.num_gpus {
+            for (idx, o) in per_kernel_overheads(trace, gpu) {
+                let e = &trace.events[idx];
+                if e.iter < warmup {
+                    continue;
+                }
+                *per.entry((e.op.phase, e.kind(), e.gpu, e.iter)).or_insert(0.0) +=
+                    o.total();
+            }
+        }
+        let mut out: BTreeMap<(Phase, OpKind), Vec<f64>> = BTreeMap::new();
+        for ((phase, kind, _, _), v) in per {
+            out.entry((phase, kind)).or_default().push(v);
+        }
+        out
+    }
+
+    /// Total launch overhead of one (gpu, iteration).
+    pub fn iteration_launch_overhead(trace: &Trace) -> BTreeMap<(u32, u32), f64> {
+        let mut out: BTreeMap<(u32, u32), f64> = BTreeMap::new();
+        for gpu in 0..trace.meta.num_gpus {
+            for (idx, o) in per_kernel_overheads(trace, gpu) {
+                let e = &trace.events[idx];
+                *out.entry((e.gpu, e.iter)).or_insert(0.0) += o.total();
+            }
+        }
+        out
+    }
+}
+
+pub mod throughput {
+    use super::launch::iteration_launch_overhead;
+    use chopper::chopper::Throughput;
+    use chopper::trace::event::{Stream, Trace};
+    use chopper::util::stats;
+    use std::collections::BTreeMap;
+
+    /// Per-(gpu, iter) summed compute-kernel duration.
+    fn kernel_duration_by_gpu_iter(trace: &Trace) -> BTreeMap<(u32, u32), f64> {
+        let mut out: BTreeMap<(u32, u32), f64> = BTreeMap::new();
+        for e in trace.events.iter().filter(|e| e.stream == Stream::Compute) {
+            *out.entry((e.gpu, e.iter)).or_insert(0.0) += e.duration();
+        }
+        out
+    }
+
+    /// Compute throughput for a run of `tokens_per_iter` tokens.
+    pub fn throughput(trace: &Trace, tokens_per_iter: f64) -> Throughput {
+        let durs = kernel_duration_by_gpu_iter(trace);
+        let launch = iteration_launch_overhead(trace);
+        let warmup = trace.meta.warmup;
+        // Per iteration: max across GPUs of duration + launch overhead.
+        let mut per_iter: BTreeMap<u32, (f64, f64, f64)> = BTreeMap::new();
+        for (&(gpu, iter), &d) in &durs {
+            if iter < warmup {
+                continue;
+            }
+            let l = launch.get(&(gpu, iter)).copied().unwrap_or(0.0);
+            let e = per_iter.entry(iter).or_insert((0.0, 0.0, 0.0));
+            if d + l > e.0 {
+                *e = (d + l, d, l);
+            }
+        }
+        let totals: Vec<f64> = per_iter.values().map(|v| v.0).collect();
+        let durations: Vec<f64> = per_iter.values().map(|v| v.1).collect();
+        let launches: Vec<f64> = per_iter.values().map(|v| v.2).collect();
+        let iter_ns = stats::median(&totals);
+        Throughput {
+            tokens_per_sec: tokens_per_iter / (iter_ns * 1e-9),
+            iter_ns,
+            duration_ns: stats::median(&durations),
+            launch_ns: stats::median(&launches),
+        }
+    }
+}
+
+pub mod align {
+    use chopper::counters::{CounterTrace, DerivedMetrics};
+    use chopper::sim::align_key;
+    use chopper::trace::event::{Trace, TraceEvent};
+    use chopper::util::hash::FxHashMap;
+
+    /// A runtime trace with hardware counters attached to each kernel —
+    /// the pre-refactor owned form: `align` took the trace **by value**,
+    /// which forced the `trace.clone()` at every figure call site.
+    #[derive(Debug)]
+    pub struct AlignedTrace {
+        pub trace: Trace,
+        metrics: FxHashMap<u64, DerivedMetrics>,
+        pub unmatched: usize,
+    }
+
+    impl AlignedTrace {
+        /// Join a runtime trace with a hardware-counter trace.
+        pub fn align(trace: Trace, counters: &CounterTrace) -> Self {
+            let mut metrics = FxHashMap::with_capacity_and_hasher(
+                trace.events.len(),
+                Default::default(),
+            );
+            let mut unmatched = 0;
+            for e in &trace.events {
+                match counters
+                    .get(e.gpu, align_key(e.stream, e.seq))
+                    .and_then(|v| DerivedMetrics::from_counters(v, e.duration()))
+                {
+                    Some(m) => {
+                        metrics.insert(e.kernel_id, m);
+                    }
+                    None => unmatched += 1,
+                }
+            }
+            Self {
+                trace,
+                metrics,
+                unmatched,
+            }
+        }
+
+        pub fn metrics_of(&self, e: &TraceEvent) -> Option<&DerivedMetrics> {
+            self.metrics.get(&e.kernel_id)
+        }
+
+        pub fn metrics_by_id(&self, kernel_id: u64) -> Option<&DerivedMetrics> {
+            self.metrics.get(&kernel_id)
+        }
+
+        pub fn coverage(&self) -> f64 {
+            if self.trace.events.is_empty() {
+                return 1.0;
+            }
+            self.metrics.len() as f64 / self.trace.events.len() as f64
+        }
+    }
+}
+
+pub mod breakdown {
+    use super::aggregate::op_instances;
+    use super::align::AlignedTrace;
+    use super::overlap::overlap_samples;
+    use chopper::chopper::aggregate::Filter;
+    use chopper::chopper::duration_at_overlap;
+    use chopper::chopper::OpBreakdown;
+    use chopper::config::GpuSpec;
+    use chopper::model::ops::{OpKind, OpRef};
+    use chopper::util::stats;
+    use std::collections::BTreeMap;
+
+    /// Compute the breakdown of one GEMM/FA op from an aligned trace.
+    pub fn op_breakdown(
+        aligned: &AlignedTrace,
+        gpu_spec: &GpuSpec,
+        op: OpRef,
+    ) -> Option<OpBreakdown> {
+        if !matches!(op.op.kind(), OpKind::Gemm | OpKind::FlashAttn) {
+            return None;
+        }
+        let mut f = Filter::sampled();
+        f.op = Some(op);
+        let insts = op_instances(&aligned.trace, &f);
+        if insts.is_empty() {
+            return None;
+        }
+
+        // Median actual duration + per-instance counter sums.
+        let mut d_acts = Vec::with_capacity(insts.len());
+        let mut insts_ovr = Vec::new();
+        let mut utils = Vec::new();
+        let mut d_peaks = Vec::new();
+        for inst in &insts {
+            d_acts.push(inst.duration());
+            let mut f_perf = 0.0;
+            let mut cycles = 0.0;
+            let mut mfma_cycles = 0.0;
+            for &kid in &inst.kernel_ids {
+                if let Some(m) = aligned.metrics_by_id(kid) {
+                    f_perf += m.flops_performed;
+                    cycles += m.gpu_cycles;
+                    mfma_cycles += m.gpu_cycles * m.mfma_util;
+                }
+            }
+            if inst.flops > 0.0 && f_perf > 0.0 {
+                insts_ovr.push(f_perf / inst.flops);
+            }
+            if cycles > 0.0 && mfma_cycles > 0.0 {
+                utils.push(cycles / mfma_cycles); // 1 / MFMA_util
+            }
+            if cycles > 0.0 {
+                // D_peak = C_gpu / Freq_peak (Eq. 10), in ns.
+                d_peaks.push(cycles / (gpu_spec.freq_peak_mhz * 1e-3));
+            }
+        }
+        if d_acts.is_empty() || d_peaks.is_empty() {
+            return None;
+        }
+        let d_act = stats::median(&d_acts);
+        let d_peak = stats::median(&d_peaks);
+        let flops_med =
+            stats::median(&insts.iter().map(|i| i.flops).collect::<Vec<_>>());
+        let d_thr = flops_med / gpu_spec.peak_bf16_flops * 1e9;
+        let inst_ovr = if insts_ovr.is_empty() {
+            1.0
+        } else {
+            stats::median(&insts_ovr).max(1.0)
+        };
+        let util_ovr = if utils.is_empty() {
+            1.0
+        } else {
+            stats::median(&utils).max(1.0)
+        };
+
+        // Eq. (9): overlap overhead from the overlap-duration profile.
+        let ovl = overlap_samples(&aligned.trace, &f);
+        let profile: Vec<(f64, f64)> =
+            ovl.iter().map(|s| (s.ratio, s.inst.duration())).collect();
+        let d50 = duration_at_overlap(&profile, 0.5);
+        let d0 = duration_at_overlap(&profile, 0.0);
+        let overlap_ovr = if d0 > 0.0 && d50.is_finite() {
+            (d50 / d0).max(1.0)
+        } else {
+            1.0
+        };
+
+        // Eq. (10): frequency overhead, adjusted by the overlap term.
+        let freq_ovr = ((d_act / d_peak) / overlap_ovr).max(1.0);
+
+        Some(OpBreakdown {
+            op,
+            d_act,
+            d_thr,
+            inst: inst_ovr,
+            util: util_ovr,
+            overlap: overlap_ovr,
+            freq: freq_ovr,
+            n: insts.len(),
+        })
+    }
+
+    /// Breakdown of every GEMM + FA op present in the trace.
+    pub fn all_breakdowns(
+        aligned: &AlignedTrace,
+        gpu_spec: &GpuSpec,
+    ) -> BTreeMap<OpRef, OpBreakdown> {
+        let mut ops: Vec<OpRef> = aligned
+            .trace
+            .events
+            .iter()
+            .filter(|e| matches!(e.kind(), OpKind::Gemm | OpKind::FlashAttn))
+            .map(|e| e.op)
+            .collect();
+        ops.sort();
+        ops.dedup();
+        ops.into_iter()
+            .filter_map(|op| op_breakdown(aligned, gpu_spec, op).map(|b| (op, b)))
+            .collect()
+    }
+}
+
+pub mod report {
+    use super::aggregate::{op_duration_samples, phase_kind_duration_samples};
+    use super::align::AlignedTrace;
+    use super::breakdown::all_breakdowns;
+    use super::launch::{op_launch_overheads, phase_kind_launch_samples};
+    use super::overlap::{per_gpu_overlap_cdf, summarize_op_overlap};
+    use super::throughput::throughput;
+    use chopper::chopper::report::{fig10, table2, Figure, SweepRun};
+    use chopper::chopper::CpuUtilAnalysis;
+    use chopper::config::{FsdpVersion, NodeSpec};
+    use chopper::model::ops::{OpKind, OpRef, OpType, Phase};
+    use chopper::trace::event::Stream;
+    use chopper::util::intern::{intern, Sym};
+    use chopper::util::{ascii, fmt, stats};
+    use std::fmt::Write as _;
+
+    pub use chopper::chopper::report::ALL_FIGURES;
+
+    pub fn fig4(runs: &[SweepRun]) -> Figure {
+        let mut csv = String::from(
+            "config,fsdp,throughput_tok_s,rel_throughput,phase,kind,median_duration_ms,median_launch_ms\n",
+        );
+        let mut ascii = String::from(
+            "Fig. 4 — end-to-end: throughput, duration by phase x op-type, launch overhead\n\n",
+        );
+        // Baseline for the normalized row: b1s4 with FSDPv1 if present.
+        let base_tp = runs
+            .iter()
+            .find(|r| r.wl.label() == "b1s4" && r.wl.fsdp == FsdpVersion::V1)
+            .map(|r| {
+                throughput(
+                    &r.run.trace,
+                    r.wl.tokens_per_iteration(r.run.trace.meta.num_gpus as u64)
+                        as f64,
+                )
+                .tokens_per_sec
+            });
+
+        for sr in runs {
+            let tokens = sr
+                .wl
+                .tokens_per_iteration(sr.run.trace.meta.num_gpus as u64)
+                as f64;
+            let tp = throughput(&sr.run.trace, tokens);
+            let rel = base_tp.map(|b| tp.tokens_per_sec / b).unwrap_or(1.0);
+            let _ = writeln!(
+                ascii,
+                "{:>14}: {:>9.0} tok/s ({}x b1s4-v1)   iter {} (launch {})",
+                sr.label(),
+                tp.tokens_per_sec,
+                format_args!("{rel:.2}"),
+                fmt::dur_ns(tp.iter_ns),
+                fmt::dur_ns(tp.launch_ns),
+            );
+            let durs = phase_kind_duration_samples(&sr.run.trace);
+            let launches = phase_kind_launch_samples(&sr.run.trace);
+            let max_total: f64 = Phase::ALL
+                .iter()
+                .map(|ph| {
+                    durs.iter()
+                        .filter(|((p, _), _)| p == ph)
+                        .map(|(_, v)| stats::median(v))
+                        .sum::<f64>()
+                })
+                .fold(0.0, f64::max);
+            for phase in Phase::ALL {
+                let mut segs: Vec<(String, f64)> = Vec::new();
+                for kind in
+                    [OpKind::FlashAttn, OpKind::Vector, OpKind::Gemm, OpKind::Copy]
+                {
+                    let d = durs.get(&(phase, kind)).map(|v| stats::median(v));
+                    let l = launches.get(&(phase, kind)).map(|v| stats::median(v));
+                    if d.is_none() && l.is_none() {
+                        continue;
+                    }
+                    let dm = d.unwrap_or(0.0);
+                    let lm = l.unwrap_or(0.0);
+                    let _ = writeln!(
+                        csv,
+                        "{},{},{:.0},{:.3},{},{},{:.3},{:.3}",
+                        sr.wl.label(),
+                        sr.wl.fsdp,
+                        tp.tokens_per_sec,
+                        rel,
+                        phase,
+                        kind,
+                        dm / 1e6,
+                        lm / 1e6
+                    );
+                    segs.push((kind.to_string(), dm));
+                }
+                ascii.push_str(&ascii::stacked_bar(
+                    &format!("  {phase:>4}"),
+                    &segs,
+                    48,
+                    max_total,
+                ));
+            }
+            ascii.push('\n');
+        }
+        Figure {
+            id: "fig4",
+            title: "Fig. 4 — end-to-end performance breakdown".into(),
+            ascii,
+            csv,
+            svg: None,
+        }
+    }
+
+    const FIG5A_OPS: [(&str, Phase, OpType); 10] = [
+        ("f_qkv_ip", Phase::Forward, OpType::QkvIp),
+        ("f_attn_fa", Phase::Forward, OpType::AttnFa),
+        ("f_attn_op", Phase::Forward, OpType::AttnOp),
+        ("f_mlp_gp", Phase::Forward, OpType::MlpGp),
+        ("f_mlp_up", Phase::Forward, OpType::MlpUp),
+        ("f_mlp_dp", Phase::Forward, OpType::MlpDp),
+        ("b_attn_fa", Phase::Backward, OpType::AttnFa),
+        ("b_mlp_gp", Phase::Backward, OpType::MlpGp),
+        ("b_mlp_up", Phase::Backward, OpType::MlpUp),
+        ("b_mlp_dp", Phase::Backward, OpType::MlpDp),
+    ];
+
+    const FIG5B_OPS: [(&str, Phase, OpType); 8] = [
+        ("f_attn_n", Phase::Forward, OpType::AttnN),
+        ("f_mlp_n", Phase::Forward, OpType::MlpN),
+        ("f_qkv_re", Phase::Forward, OpType::QkvRe),
+        ("b_attn_n", Phase::Backward, OpType::AttnN),
+        ("b_mlp_n", Phase::Backward, OpType::MlpN),
+        ("b_mlp_gu", Phase::Backward, OpType::MlpGu),
+        ("b_ga", Phase::Optimizer, OpType::GradAccum),
+        ("opt_step", Phase::Optimizer, OpType::OptStep),
+    ];
+
+    pub fn fig5(runs: &[SweepRun]) -> Figure {
+        let mut csv =
+            String::from("panel,op,config,fsdp,min,q25,median,q75,max\n");
+        let mut ascii = String::from(
+            "Fig. 5 — operation duration distributions (normalized to global max)\n",
+        );
+        for (panel, ops) in [("a", &FIG5A_OPS[..]), ("b", &FIG5B_OPS[..])] {
+            let mut rows: Vec<(Sym, String, [f64; 5])> = Vec::new();
+            for (name, phase, op) in ops {
+                let opref = OpRef::new(*op, *phase);
+                for sr in runs {
+                    let samples = op_duration_samples(&sr.run.trace, opref);
+                    if samples.is_empty() {
+                        continue;
+                    }
+                    let q = [
+                        stats::min(&samples),
+                        stats::quantile(&samples, 0.25),
+                        stats::median(&samples),
+                        stats::quantile(&samples, 0.75),
+                        stats::max(&samples),
+                    ];
+                    rows.push((intern(name), sr.label(), q));
+                }
+            }
+            let global_max = rows
+                .iter()
+                .map(|r| r.2[4])
+                .fold(0.0_f64, f64::max)
+                .max(1e-9);
+            let _ = writeln!(ascii, "\n(5{panel})");
+            let mut last_op: Option<Sym> = None;
+            for (name, cfg_label, q) in &rows {
+                if last_op != Some(*name) {
+                    let _ = writeln!(ascii, " {name}");
+                    last_op = Some(*name);
+                }
+                ascii.push_str(&ascii::quantile_row(
+                    &format!("   {cfg_label:>12}"),
+                    q[0],
+                    q[1],
+                    q[2],
+                    q[3],
+                    q[4],
+                    0.0,
+                    global_max,
+                    44,
+                ));
+                let (cfg_part, fsdp_part) =
+                    cfg_label.split_once('-').unwrap_or((cfg_label.as_str(), ""));
+                let _ = writeln!(
+                    csv,
+                    "{panel},{name},{cfg_part},{fsdp_part},{:.6},{:.6},{:.6},{:.6},{:.6}",
+                    q[0] / global_max,
+                    q[1] / global_max,
+                    q[2] / global_max,
+                    q[3] / global_max,
+                    q[4] / global_max
+                );
+            }
+        }
+        Figure {
+            id: "fig5",
+            title: "Fig. 5 — operation durations by type and configuration".into(),
+            ascii,
+            csv,
+            svg: None,
+        }
+    }
+
+    pub fn fig6(runs: &[SweepRun]) -> Figure {
+        let mut csv = String::from(
+            "config,fsdp,op,median_ms,q25_ms,q75_ms,max_ms,iter_median_ms\n",
+        );
+        let mut ascii = String::from(
+            "Fig. 6 — per-iteration communication kernel duration\n\n",
+        );
+        for sr in runs {
+            let warmup = sr.run.trace.meta.warmup;
+            // Iteration duration (for the compute-scaling comparison).
+            let spans = super::aggregate::iteration_spans(&sr.run.trace);
+            let iter_durs: Vec<f64> = spans
+                .iter()
+                .filter(|((_, it), _)| *it >= warmup)
+                .map(|(_, (s, e))| e - s)
+                .collect();
+            let iter_med = stats::median(&iter_durs);
+            for op in [OpType::AllGather, OpType::ReduceScatter] {
+                let durs: Vec<f64> = sr
+                    .run
+                    .trace
+                    .events
+                    .iter()
+                    .filter(|e| {
+                        e.stream == Stream::Comm
+                            && e.op.op == op
+                            && e.iter >= warmup
+                    })
+                    .map(|e| e.duration())
+                    .collect();
+                if durs.is_empty() {
+                    continue;
+                }
+                let med = stats::median(&durs);
+                let _ = writeln!(
+                    ascii,
+                    "{:>14} {:>3}: median {:>9} q75 {:>9} max {:>9}   (iter {:>9})",
+                    sr.label(),
+                    op.short(),
+                    fmt::dur_ns(med),
+                    fmt::dur_ns(stats::quantile(&durs, 0.75)),
+                    fmt::dur_ns(stats::max(&durs)),
+                    fmt::dur_ns(iter_med),
+                );
+                let _ = writeln!(
+                    csv,
+                    "{},{},{},{:.4},{:.4},{:.4},{:.4},{:.4}",
+                    sr.wl.label(),
+                    sr.wl.fsdp,
+                    op.short(),
+                    med / 1e6,
+                    stats::quantile(&durs, 0.25) / 1e6,
+                    stats::quantile(&durs, 0.75) / 1e6,
+                    stats::max(&durs) / 1e6,
+                    iter_med / 1e6
+                );
+            }
+        }
+        Figure {
+            id: "fig6",
+            title: "Fig. 6 — communication kernel durations".into(),
+            ascii,
+            csv,
+            svg: None,
+        }
+    }
+
+    const FIG7_OPS: [(&str, Phase, OpType); 6] = [
+        ("b_attn_n", Phase::Backward, OpType::AttnN),
+        ("b_mlp_n", Phase::Backward, OpType::MlpN),
+        ("b_mlp_gp", Phase::Backward, OpType::MlpGp),
+        ("b_mlp_up", Phase::Backward, OpType::MlpUp),
+        ("b_mlp_dp", Phase::Backward, OpType::MlpDp),
+        ("f_attn_fa", Phase::Forward, OpType::AttnFa),
+    ];
+
+    pub fn fig7(v1: &SweepRun, v2: &SweepRun) -> Figure {
+        let mut csv = String::from(
+            "op,fsdp,n,ratio_min,ratio_q25,ratio_med,ratio_q75,ratio_max,dur_med_ms,correlation\n",
+        );
+        let mut ascii = String::from(
+            "Fig. 7 — overlap ratio vs duration, dominant ops (b2s4)\n\n",
+        );
+        for (name, phase, op) in FIG7_OPS {
+            let opref = OpRef::new(op, phase);
+            for sr in [v1, v2] {
+                let s = summarize_op_overlap(&sr.run.trace, opref);
+                let corr = s
+                    .correlation
+                    .map(|c| format!("{c:+.2}"))
+                    .unwrap_or_else(|| "nan".into());
+                let _ = writeln!(
+                    ascii,
+                    "{:>9} {:>6}: overlap [{:.2} {:.2} {:.2} {:.2} {:.2}]  dur med {:>9}  corr {}",
+                    name,
+                    sr.wl.fsdp.to_string(),
+                    s.ratio_q[0],
+                    s.ratio_q[1],
+                    s.ratio_q[2],
+                    s.ratio_q[3],
+                    s.ratio_q[4],
+                    fmt::dur_ns(s.duration_q[2]),
+                    corr
+                );
+                let _ = writeln!(
+                    csv,
+                    "{},{},{},{:.3},{:.3},{:.3},{:.3},{:.3},{:.4},{}",
+                    name,
+                    sr.wl.fsdp,
+                    s.n,
+                    s.ratio_q[0],
+                    s.ratio_q[1],
+                    s.ratio_q[2],
+                    s.ratio_q[3],
+                    s.ratio_q[4],
+                    s.duration_q[2] / 1e6,
+                    corr
+                );
+            }
+        }
+        Figure {
+            id: "fig7",
+            title: "Fig. 7 — overlap vs duration correlations".into(),
+            ascii,
+            csv,
+            svg: None,
+        }
+    }
+
+    pub fn fig8(run: &SweepRun) -> Figure {
+        let per = per_gpu_overlap_cdf(&run.run.trace, OpRef::fwd(OpType::AttnOp));
+        let mut csv = String::from("gpu,overlap_ratio,duration_norm\n");
+        let mut series: Vec<(String, Vec<f64>)> = Vec::new();
+        for (gpu, pts) in &per {
+            for (r, d) in pts {
+                let _ = writeln!(csv, "{gpu},{r:.4},{d:.5}");
+            }
+            series.push((
+                format!("GPU{gpu}"),
+                pts.iter().map(|(_, d)| *d).collect(),
+            ));
+        }
+        let mut ascii = String::from(
+            "Fig. 8 — f_attn_op across GPUs (b2s4): duration CDF (normalized to per-GPU min)\n",
+        );
+        ascii.push_str(&ascii::cdf_plot("", &series, 56, 12));
+        // Per-GPU medians table.
+        let mut rows = Vec::new();
+        for (gpu, pts) in &per {
+            let ratios: Vec<f64> = pts.iter().map(|(r, _)| *r).collect();
+            let durs: Vec<f64> = pts.iter().map(|(_, d)| *d).collect();
+            rows.push(vec![
+                format!("GPU{gpu}"),
+                format!("{:.2}", stats::median(&ratios)),
+                format!("{:.3}", stats::median(&durs)),
+            ]);
+        }
+        ascii.push_str(&ascii::table(
+            &["gpu", "median overlap", "median dur (norm)"],
+            &rows,
+        ));
+        Figure {
+            id: "fig8",
+            title: "Fig. 8 — per-GPU overlap/duration CDF of f_attn_op".into(),
+            ascii,
+            csv,
+            svg: Some(chopper::util::svg::cdf_lines(
+                "f_attn_op duration CDF per GPU (b2s4)",
+                "duration (normalized to per-GPU min)",
+                &series,
+            )),
+        }
+    }
+
+    pub fn fig9(runs: &[SweepRun]) -> Figure {
+        let mut csv =
+            String::from("config,fsdp,ratio_min,q25,median,q75,max,dur_med_ms\n");
+        let mut ascii =
+            String::from("Fig. 9 — f_attn_fa overlap ratio vs configuration\n\n");
+        for sr in runs {
+            let s = summarize_op_overlap(&sr.run.trace, OpRef::fwd(OpType::AttnFa));
+            ascii.push_str(&ascii::quantile_row(
+                &format!("{:>14}", sr.label()),
+                s.ratio_q[0],
+                s.ratio_q[1],
+                s.ratio_q[2],
+                s.ratio_q[3],
+                s.ratio_q[4],
+                0.0,
+                1.0,
+                44,
+            ));
+            let _ = writeln!(
+                csv,
+                "{},{},{:.3},{:.3},{:.3},{:.3},{:.3},{:.4}",
+                sr.wl.label(),
+                sr.wl.fsdp,
+                s.ratio_q[0],
+                s.ratio_q[1],
+                s.ratio_q[2],
+                s.ratio_q[3],
+                s.ratio_q[4],
+                s.duration_q[2] / 1e6
+            );
+        }
+        Figure {
+            id: "fig9",
+            title: "Fig. 9 — f_attn_fa overlap across configurations".into(),
+            ascii,
+            csv,
+            svg: None,
+        }
+    }
+
+    pub fn fig11(v1: &SweepRun, v2: &SweepRun) -> Figure {
+        let mut csv = String::from("op,fsdp,prep_us,call_us\n");
+        let mut ascii = String::from(
+            "Fig. 11 — mean preparation / call overhead, top ops\n\n",
+        );
+        let interesting = [
+            OpRef::fwd(OpType::IE),
+            OpRef::new(OpType::OptStep, Phase::Optimizer),
+            OpRef::new(OpType::GradAccum, Phase::Optimizer),
+            OpRef::fwd(OpType::AttnN),
+            OpRef::bwd(OpType::MlpDp),
+            OpRef::bwd(OpType::IE),
+        ];
+        for sr in [v1, v2] {
+            let per_op = op_launch_overheads(&sr.run.trace);
+            let _ = writeln!(ascii, "{}", sr.wl.fsdp);
+            let mut rows: Vec<(String, f64, f64)> = interesting
+                .iter()
+                .filter_map(|op| {
+                    per_op
+                        .get(op)
+                        .map(|o| (op.paper_name(), o.prep / 1e3, o.call / 1e3))
+                })
+                .collect();
+            rows.sort_by(|a, b| (b.1 + b.2).total_cmp(&(a.1 + a.2)));
+            let maxv = rows
+                .iter()
+                .map(|r| r.1 + r.2)
+                .fold(0.0_f64, f64::max)
+                .max(1e-9);
+            for (name, prep, call) in &rows {
+                ascii.push_str(&ascii::stacked_bar(
+                    &format!("  {name:>9}"),
+                    &[("prep".into(), *prep), ("call".into(), *call)],
+                    40,
+                    maxv,
+                ));
+                let _ =
+                    writeln!(csv, "{},{},{:.2},{:.2}", name, sr.wl.fsdp, prep, call);
+            }
+            ascii.push('\n');
+        }
+        Figure {
+            id: "fig11",
+            title: "Fig. 11 — launch overhead by operation".into(),
+            ascii,
+            csv,
+            svg: None,
+        }
+    }
+
+    pub fn fig12(run: &SweepRun) -> Figure {
+        // Render gpu 0's first sampled iteration: comm vs compute lanes
+        // around the iteration boundary.
+        let trace = &run.run.trace;
+        let warmup = trace.meta.warmup;
+        let mut comm: Vec<(f64, f64, String)> = Vec::new();
+        let mut compute: Vec<(f64, f64, String)> = Vec::new();
+        for e in &trace.events {
+            if e.gpu != 0 || e.iter != warmup {
+                continue;
+            }
+            let entry = (e.t_start, e.t_end, e.op.paper_name());
+            match e.stream {
+                Stream::Comm => comm.push(entry),
+                Stream::Compute => compute.push(entry),
+            }
+        }
+        comm.sort_by(|a, b| a.0.total_cmp(&b.0));
+        compute.sort_by(|a, b| a.0.total_cmp(&b.0));
+        let mut csv = String::from("lane,op,t_start_ms,t_end_ms\n");
+        for (s, e, n) in &comm {
+            let _ = writeln!(csv, "comm,{n},{:.4},{:.4}", s / 1e6, e / 1e6);
+        }
+        for (s, e, n) in &compute {
+            let _ = writeln!(csv, "compute,{n},{:.4},{:.4}", s / 1e6, e / 1e6);
+        }
+        let mut ascii = String::from(
+            "Fig. 12 — filling/emptying the communication pipeline (gpu 0, first sampled iteration)\n\n  comm   : ",
+        );
+        for (_, _, n) in comm.iter().take(6) {
+            let _ = write!(ascii, "[{n}] ");
+        }
+        ascii.push_str("...\n  compute: ");
+        for (_, _, n) in compute.iter().take(4) {
+            let _ = write!(ascii, "[{n}] ");
+        }
+        ascii.push_str("...\n\n");
+        if let (Some(first_comm), Some(first_compute)) =
+            (comm.first(), compute.first())
+        {
+            let _ = writeln!(
+                ascii,
+                "  first collective starts {} before the first compute kernel —\n  the pipeline-fill window that puts prep overhead on f_ie (Insight 5).",
+                fmt::dur_ns(first_compute.0 - first_comm.0)
+            );
+        }
+        Figure {
+            id: "fig12",
+            title: "Fig. 12 — comm pipeline fill/empty".into(),
+            ascii,
+            csv,
+            svg: None,
+        }
+    }
+
+    pub fn fig13(run: &SweepRun) -> Figure {
+        let a = CpuUtilAnalysis::analyze(&run.run.cpu);
+        let mut csv =
+            String::from("window_t_ms,active_cores,min_cores,smt_pairs\n");
+        for w in &a.windows {
+            let _ = writeln!(
+                csv,
+                "{:.2},{},{:.2},{}",
+                w.t / 1e6,
+                w.active,
+                w.min_cores,
+                w.smt_pairs
+            );
+        }
+        let mut ascii =
+            String::from("Fig. 13 — CPU logical/physical core usage\n\n");
+        let _ = writeln!(
+            ascii,
+            "  median active cores : {:.0}   (of {} logical)",
+            a.median_active(),
+            a.logical_cores
+        );
+        let _ = writeln!(
+            ascii,
+            "  median minimum cores: {:.1}  (Eq. 5 lower bound)",
+            a.median_min_cores()
+        );
+        let _ = writeln!(
+            ascii,
+            "  physical footprint  : {:.1}% of {} physical cores ever active",
+            a.physical_footprint() * 100.0,
+            a.physical_cores
+        );
+        let _ = writeln!(
+            ascii,
+            "  SMT sibling windows : {:.1}%",
+            a.smt_cosched_rate() * 100.0
+        );
+        let (rows, m) = a.physical_heatmap(&run.run.cpu);
+        // Downsample columns for terminal width.
+        let step = (m.first().map(|r| r.len()).unwrap_or(1) / 64).max(1);
+        let small: Vec<Vec<f64>> = m
+            .iter()
+            .map(|r| {
+                r.chunks(step)
+                    .map(|c| c.iter().sum::<f64>() / c.len() as f64 / 2.0)
+                    .collect()
+            })
+            .collect();
+        ascii.push_str(&format!(
+            "\n  logical→physical heatmap ({} active physical cores × time):\n",
+            rows.len()
+        ));
+        ascii.push_str(&ascii::heatmap("", &small));
+        Figure {
+            id: "fig13",
+            title: "Fig. 13 — CPU core utilization".into(),
+            ascii,
+            csv,
+            svg: None,
+        }
+    }
+
+    pub fn fig14(v1: &SweepRun, v2: &SweepRun) -> Figure {
+        let mut csv = String::from(
+            "fsdp,gpu_freq_mhz,mem_freq_mhz,power_w,freq_sigma,power_sigma\n",
+        );
+        let mut ascii = String::from(
+            "Fig. 14 — average frequency and power, FSDPv1 vs FSDPv2 (active windows)\n\n",
+        );
+        for sr in [v1, v2] {
+            // Active windows only (compute in flight), like the paper's
+            // during-training averages.
+            let samples: Vec<_> = sr
+                .run
+                .power
+                .samples
+                .iter()
+                .filter(|s| s.power_w > 400.0)
+                .collect();
+            let f: Vec<f64> = samples.iter().map(|s| s.freq_mhz).collect();
+            let m: Vec<f64> = samples.iter().map(|s| s.mem_freq_mhz).collect();
+            let p: Vec<f64> = samples.iter().map(|s| s.power_w).collect();
+            let _ = writeln!(
+                ascii,
+                "  {:>6}: GPU {:.0}±{:.0} MHz   MEM {:.0} MHz   power {:.0}±{:.0} W",
+                sr.wl.fsdp.to_string(),
+                stats::mean(&f),
+                stats::std(&f),
+                stats::mean(&m),
+                stats::mean(&p),
+                stats::std(&p),
+            );
+            let _ = writeln!(
+                csv,
+                "{},{:.1},{:.1},{:.1},{:.2},{:.2}",
+                sr.wl.fsdp,
+                stats::mean(&f),
+                stats::mean(&m),
+                stats::mean(&p),
+                stats::std(&f),
+                stats::std(&p)
+            );
+        }
+        let f1: Vec<f64> = v1
+            .run
+            .power
+            .samples
+            .iter()
+            .filter(|s| s.power_w > 400.0)
+            .map(|s| s.freq_mhz)
+            .collect();
+        let f2: Vec<f64> = v2
+            .run
+            .power
+            .samples
+            .iter()
+            .filter(|s| s.power_w > 400.0)
+            .map(|s| s.freq_mhz)
+            .collect();
+        let _ = writeln!(
+            ascii,
+            "\n  v2/v1 frequency ratio: {:.2}x at matched power (Observation 6)",
+            stats::mean(&f2) / stats::mean(&f1).max(1.0)
+        );
+        Figure {
+            id: "fig14",
+            title: "Fig. 14 — frequency & power by FSDP version".into(),
+            ascii,
+            csv,
+            svg: None,
+        }
+    }
+
+    pub fn fig15(runs: &[SweepRun], node: &NodeSpec) -> Figure {
+        let mut csv = String::from(
+            "config,fsdp,op,d_act_ms,d_thr_ms,inst,util,overlap,freq,total\n",
+        );
+        let mut ascii = String::from(
+            "Fig. 15 — overhead breakdown for GEMMs and FlashAttention\n  (multiplicative: D_act ≈ D_thr × inst × util × overlap × freq)\n\n",
+        );
+        for sr in runs {
+            // The pre-refactor forced clone: `align` takes the trace by
+            // value, the figure still needs it afterwards.
+            let aligned =
+                AlignedTrace::align(sr.run.trace.clone(), &sr.run.counters);
+            let breakdowns = all_breakdowns(&aligned, &node.gpu);
+            let _ = writeln!(ascii, "{}", sr.label());
+            for (op, b) in &breakdowns {
+                let _ = writeln!(
+                    ascii,
+                    "  {:>10}: act {:>9}  thr {:>9}  inst {:>5.2} util {:>5.2} overlap {:>5.2} freq {:>5.2}",
+                    op.paper_name(),
+                    fmt::dur_ns(b.d_act),
+                    fmt::dur_ns(b.d_thr),
+                    b.inst,
+                    b.util,
+                    b.overlap,
+                    b.freq
+                );
+                let _ = writeln!(
+                    csv,
+                    "{},{},{},{:.4},{:.4},{:.3},{:.3},{:.3},{:.3},{:.3}",
+                    sr.wl.label(),
+                    sr.wl.fsdp,
+                    op.paper_name(),
+                    b.d_act / 1e6,
+                    b.d_thr / 1e6,
+                    b.inst,
+                    b.util,
+                    b.overlap,
+                    b.freq,
+                    b.total_overhead()
+                );
+            }
+            ascii.push('\n');
+        }
+        Figure {
+            id: "fig15",
+            title: "Fig. 15 — theoretical-vs-actual duration breakdown".into(),
+            ascii,
+            csv,
+            svg: None,
+        }
+    }
+
+    /// The full pre-refactor figure set, in [`ALL_FIGURES`] order (table2
+    /// and fig10 never touched the trace; they are the library functions).
+    pub fn all_figures(
+        runs: &[SweepRun],
+        node: &NodeSpec,
+        cfg: &chopper::config::ModelConfig,
+    ) -> Vec<Figure> {
+        let find = |label: &str| {
+            runs.iter()
+                .find(|r| r.label() == label)
+                .unwrap_or_else(|| panic!("sweep missing {label}"))
+        };
+        let v1 = find("b2s4-FSDPv1");
+        let v2 = find("b2s4-FSDPv2");
+        vec![
+            table2(cfg),
+            fig4(runs),
+            fig5(runs),
+            fig6(runs),
+            fig7(v1, v2),
+            fig8(v1),
+            fig9(runs),
+            fig10(),
+            fig11(v1, v2),
+            fig12(v1),
+            fig13(v2),
+            fig14(v1, v2),
+            fig15(runs, node),
+        ]
+    }
+}
+
+pub mod summarize {
+    use super::overlap::summarize_op_overlap;
+    use super::throughput::throughput;
+    use chopper::campaign::{Scenario, ScenarioSummary};
+    use chopper::config::NodeSpec;
+    use chopper::model::ops::{OpRef, OpType, Phase};
+    use chopper::sim::ProfiledRun;
+    use chopper::trace::event::Stream;
+    use chopper::util::stats;
+
+    /// Reduce one profiled run to its persisted summary — the pre-index
+    /// `campaign::runner::summarize` (per-call event scans throughout).
+    pub fn summarize(
+        node: &NodeSpec,
+        sc: &Scenario,
+        fp: u64,
+        run: &ProfiledRun,
+    ) -> ScenarioSummary {
+        let trace = &run.trace;
+        let warmup = trace.meta.warmup;
+        let tokens = sc.wl.tokens_per_iteration(trace.meta.num_gpus as u64) as f64;
+        let tp = throughput(trace, tokens);
+
+        // Per-(gpu, iter) summed compute duration by phase → median.
+        let mut per_phase: std::collections::BTreeMap<(Phase, u32, u32), f64> =
+            std::collections::BTreeMap::new();
+        for e in trace.events.iter() {
+            if e.stream == Stream::Comm || e.iter < warmup {
+                continue;
+            }
+            *per_phase.entry((e.op.phase, e.gpu, e.iter)).or_insert(0.0) +=
+                e.duration();
+        }
+        let phase_median = |ph: Phase| -> f64 {
+            let xs: Vec<f64> = per_phase
+                .iter()
+                .filter(|((p, _, _), _)| *p == ph)
+                .map(|(_, v)| *v)
+                .collect();
+            if xs.is_empty() {
+                0.0
+            } else {
+                stats::median(&xs) / 1e6
+            }
+        };
+
+        let comm_median = |op: OpType| -> f64 {
+            let xs: Vec<f64> = trace
+                .events
+                .iter()
+                .filter(|e| {
+                    e.stream == Stream::Comm && e.op.op == op && e.iter >= warmup
+                })
+                .map(|e| e.duration())
+                .collect();
+            if xs.is_empty() {
+                0.0
+            } else {
+                stats::median(&xs) / 1e6
+            }
+        };
+
+        let fa = summarize_op_overlap(trace, OpRef::fwd(OpType::AttnFa));
+
+        // Active-window telemetry, the paper's Fig. 14 averaging.
+        let active: Vec<&chopper::trace::event::PowerSample> = run
+            .power
+            .samples
+            .iter()
+            .filter(|s| s.power_w > 400.0)
+            .collect();
+        let freqs: Vec<f64> = active.iter().map(|s| s.freq_mhz).collect();
+        let powers: Vec<f64> = active.iter().map(|s| s.power_w).collect();
+        let freq_mhz = finite(stats::mean(&freqs));
+        let peak = node.gpu.freq_peak_mhz.max(1.0);
+        let freq_loss = if freqs.is_empty() {
+            0.0
+        } else {
+            ((peak - freq_mhz) / peak).max(0.0)
+        };
+
+        ScenarioSummary {
+            name: sc.name.clone(),
+            fingerprint: fp,
+            label: sc.wl.label(),
+            fsdp: sc.wl.fsdp.to_string(),
+            layers: sc.model.layers,
+            batch: sc.wl.batch,
+            seq: sc.wl.seq,
+            tokens_per_sec: finite(tp.tokens_per_sec),
+            iter_ms: finite(tp.iter_ns / 1e6),
+            launch_ms: finite(tp.launch_ns / 1e6),
+            fwd_ms: phase_median(Phase::Forward),
+            bwd_ms: phase_median(Phase::Backward),
+            opt_ms: phase_median(Phase::Optimizer),
+            allgather_ms: comm_median(OpType::AllGather),
+            reduce_scatter_ms: comm_median(OpType::ReduceScatter),
+            overlap_fa: finite(fa.ratio_q[2]),
+            freq_mhz,
+            freq_loss,
+            power_w: finite(stats::mean(&powers)),
+            span_ms: finite(trace.span_ns() / 1e6),
+            events: trace.events.len() as u64,
+        }
+    }
+
+    fn finite(x: f64) -> f64 {
+        if x.is_finite() {
+            x
+        } else {
+            0.0
+        }
+    }
+}

@@ -1,0 +1,117 @@
+//! Analysis hot-path bench: A/B the shared-`TraceIndex` analysis pipeline
+//! against the verbatim pre-refactor path (`analysis_baseline.rs`) on the
+//! paper's figure sweep, verify the two produce **byte-identical** figure
+//! ASCII/CSV/SVG output and `ScenarioSummary` JSON, and append the
+//! measured medians + speedup to `BENCH_analysis.json` at the repo root
+//! (same trajectory schema as `BENCH_engine.json`).
+//!
+//! Scale knobs (env): CHOPPER_BENCH_LAYERS (default 8), CHOPPER_BENCH_ITERS
+//! (default 10), CHOPPER_BENCH_SAMPLES (default 3). CI smoke-runs tiny
+//! values and only checks the trajectory file is produced and well-formed;
+//! set CHOPPER_BENCH_ENFORCE_SPEEDUP=2.0 (or any threshold) to make the
+//! run fail below a required speedup.
+
+#[path = "analysis_baseline.rs"]
+mod analysis_baseline;
+
+use chopper::benchkit::{emit_collected, section, value, Bench};
+use chopper::campaign::{self, fingerprint, GridSpec};
+use chopper::chopper::report::{self, Figure};
+use chopper::config::{FsdpVersion, ModelConfig, NodeSpec};
+use chopper::sim::run_workload_with;
+
+fn env_or<T: std::str::FromStr>(key: &str, default: T) -> T {
+    std::env::var(key)
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+fn assert_figures_identical(new: &[Figure], old: &[Figure]) {
+    assert_eq!(new.len(), old.len(), "figure count diverged");
+    for (a, b) in new.iter().zip(old) {
+        assert_eq!(a.id, b.id, "figure order diverged");
+        assert_eq!(a.ascii, b.ascii, "{}: ASCII bytes diverged", a.id);
+        assert_eq!(a.csv, b.csv, "{}: CSV bytes diverged", a.id);
+        assert_eq!(a.svg, b.svg, "{}: SVG bytes diverged", a.id);
+    }
+}
+
+fn main() {
+    let layers: u64 = env_or("CHOPPER_BENCH_LAYERS", 8);
+    let iters: u32 = env_or("CHOPPER_BENCH_ITERS", 10);
+    let samples: u32 = env_or("CHOPPER_BENCH_SAMPLES", 3);
+
+    let node = NodeSpec::mi300x_node();
+    let mut cfg = ModelConfig::llama3_8b();
+    cfg.layers = layers;
+    eprintln!(
+        "setup: analysis A/B at {layers} layers × {iters} iterations (paper sweep, 10 runs)…"
+    );
+    let runs = report::run_sweep(
+        &node,
+        &cfg,
+        &[FsdpVersion::V1, FsdpVersion::V2],
+        iters,
+        iters / 2,
+    );
+    let events: usize = runs.iter().map(|r| r.run.trace.events.len()).sum();
+
+    section("equivalence — TraceIndex pipeline vs pre-refactor analysis");
+    let new_figs = report::render_all(&node, &cfg, &runs, 1).expect("render");
+    let old_figs = analysis_baseline::report::all_figures(&runs, &node, &cfg);
+    assert_figures_identical(&new_figs, &old_figs);
+    println!(
+        "equivalence OK: {} figures byte-identical across pipelines ({} events analyzed)",
+        new_figs.len(),
+        events
+    );
+
+    // ScenarioSummary JSON equivalence (the campaign runner's reduction).
+    let mut spec = GridSpec::paper(2, 2, 1);
+    spec.batches = vec![2];
+    spec.seqs = vec![4096];
+    spec.fsdp = vec![FsdpVersion::V1];
+    let scenarios = spec.expand();
+    let sc = &scenarios[0];
+    let run = run_workload_with(&node, &sc.model, &sc.wl, sc.params.clone());
+    let fp = fingerprint(&node, sc);
+    let new_summary = campaign::summarize(&node, sc, fp, &run).to_json_str();
+    let old_summary =
+        analysis_baseline::summarize::summarize(&node, sc, fp, &run).to_json_str();
+    assert_eq!(new_summary, old_summary, "ScenarioSummary bytes diverged");
+    println!("equivalence OK: ScenarioSummary JSON byte-identical");
+
+    section("analysis hot path — full fig4–fig15 sweep");
+    let opt = Bench::new("analysis/optimized").samples(samples).run(|| {
+        report::render_all(&node, &cfg, &runs, 1).expect("render")
+    });
+    let base = Bench::new("analysis/pre_refactor").samples(samples).run(|| {
+        analysis_baseline::report::all_figures(&runs, &node, &cfg)
+    });
+    let par = Bench::new("analysis/optimized_parallel")
+        .samples(samples)
+        .run(|| {
+            report::render_all(&node, &cfg, &runs, campaign::default_jobs())
+                .expect("render")
+        });
+
+    let speedup = base.median_s / opt.median_s.max(1e-12);
+    let par_speedup = base.median_s / par.median_s.max(1e-12);
+    value("speedup_vs_pre_refactor", speedup, "x");
+    value("parallel_speedup_vs_pre_refactor", par_speedup, "x");
+    value("events_analyzed", events as f64, "");
+    value("figures", new_figs.len() as f64, "");
+    value("layers", layers as f64, "");
+    value("iterations", iters as f64, "");
+
+    emit_collected("analysis");
+
+    if let Ok(min) = std::env::var("CHOPPER_BENCH_ENFORCE_SPEEDUP") {
+        let min: f64 = min.parse().expect("CHOPPER_BENCH_ENFORCE_SPEEDUP");
+        assert!(
+            speedup >= min,
+            "speedup {speedup:.2}x below required {min:.2}x"
+        );
+    }
+}

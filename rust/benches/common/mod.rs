@@ -2,7 +2,7 @@
 //! (Table II model, 20 iterations / 10 warmup, both FSDP versions) at a
 //! layer count tunable via CHOPPER_BENCH_LAYERS (default 32 — full scale).
 
-use chopper::chopper::report::{run_sweep, SweepRun};
+use chopper::chopper::report::{index_runs, run_sweep, IndexedRun, SweepRun};
 use chopper::config::{FsdpVersion, ModelConfig, NodeSpec, WorkloadConfig};
 use chopper::sim::{run_workload, ProfiledRun};
 
@@ -59,5 +59,17 @@ pub fn one(label: &str, fsdp: FsdpVersion) -> SweepRun {
 }
 
 pub fn find<'a>(runs: &'a [SweepRun], label: &str) -> &'a SweepRun {
+    runs.iter().find(|r| r.label() == label).expect(label)
+}
+
+/// Build the shared per-run `TraceIndex`es (counters joined) for a sweep.
+pub fn indexed(runs: &[SweepRun]) -> Vec<IndexedRun<'_>> {
+    index_runs(runs)
+}
+
+pub fn find_indexed<'a, 't>(
+    runs: &'a [IndexedRun<'t>],
+    label: &str,
+) -> &'a IndexedRun<'t> {
     runs.iter().find(|r| r.label() == label).expect(label)
 }

@@ -8,25 +8,27 @@ mod common;
 
 use chopper::benchkit::{section, value, Bench};
 use chopper::chopper::op_launch_overheads;
-use chopper::chopper::report::fig11;
+use chopper::chopper::report::{fig11, IndexedRun};
 use chopper::config::FsdpVersion;
 use chopper::model::ops::{OpRef, OpType, Phase};
 
 fn main() {
     let v1 = common::one("b2s4", FsdpVersion::V1);
     let v2 = common::one("b2s4", FsdpVersion::V2);
+    let iv1 = IndexedRun::new(&v1);
+    let iv2 = IndexedRun::new(&v2);
 
     section("Fig. 11 — figure generation");
-    Bench::new("fig11_generate").samples(5).run(|| fig11(&v1, &v2));
+    Bench::new("fig11_generate").samples(5).run(|| fig11(&iv1, &iv2));
 
     section("Fig. 11 — launch-overhead analysis hot path");
     Bench::new("op_launch_overheads")
         .samples(10)
-        .run(|| op_launch_overheads(&v1.run.trace));
+        .run(|| op_launch_overheads(iv1.idx()));
 
     section("Fig. 11 — paper-shape checks");
-    let o1 = op_launch_overheads(&v1.run.trace);
-    let o2 = op_launch_overheads(&v2.run.trace);
+    let o1 = op_launch_overheads(iv1.idx());
+    let o2 = op_launch_overheads(iv2.idx());
     let f_ie = o1[&OpRef::fwd(OpType::IE)];
     let opt = o1[&OpRef::new(OpType::OptStep, Phase::Optimizer)];
     let gemm = o1[&OpRef::fwd(OpType::MlpUp)];

@@ -6,15 +6,16 @@
 mod common;
 
 use chopper::benchkit::{section, value, Bench};
-use chopper::chopper::report::fig13;
+use chopper::chopper::report::{fig13, IndexedRun};
 use chopper::chopper::CpuUtilAnalysis;
 use chopper::config::FsdpVersion;
 
 fn main() {
     let sr = common::one("b2s4", FsdpVersion::V2);
+    let isr = IndexedRun::new(&sr);
 
     section("Fig. 13 — figure generation");
-    Bench::new("fig13_generate").samples(5).run(|| fig13(&sr));
+    Bench::new("fig13_generate").samples(5).run(|| fig13(&isr));
 
     section("Fig. 13 — CPU analysis hot path");
     Bench::new("cpu_util_analyze")

@@ -5,7 +5,7 @@
 mod common;
 
 use chopper::benchkit::{section, value, Bench};
-use chopper::chopper::report::fig14;
+use chopper::chopper::report::{fig14, IndexedRun};
 use chopper::config::FsdpVersion;
 use chopper::util::stats;
 
@@ -26,9 +26,11 @@ fn active(sr: &chopper::chopper::report::SweepRun) -> (Vec<f64>, Vec<f64>) {
 fn main() {
     let v1 = common::one("b2s4", FsdpVersion::V1);
     let v2 = common::one("b2s4", FsdpVersion::V2);
+    let iv1 = IndexedRun::new(&v1);
+    let iv2 = IndexedRun::new(&v2);
 
     section("Fig. 14 — figure generation");
-    Bench::new("fig14_generate").samples(5).run(|| fig14(&v1, &v2));
+    Bench::new("fig14_generate").samples(5).run(|| fig14(&iv1, &iv2));
 
     section("Fig. 14 — paper-shape checks");
     let (f1, p1) = active(&v1);

@@ -6,7 +6,7 @@
 mod common;
 
 use chopper::benchkit::{section, value, Bench};
-use chopper::chopper::report::fig15;
+use chopper::chopper::report::{fig15, IndexedRun};
 use chopper::chopper::{all_breakdowns, AlignedTrace};
 use chopper::config::FsdpVersion;
 use chopper::model::ops::{OpRef, OpType};
@@ -16,19 +16,25 @@ fn main() {
     let v2 = common::one("b2s4", FsdpVersion::V2);
     let node = common::node();
     let runs = [v1, v2];
+    let indexed: Vec<IndexedRun> = runs.iter().map(IndexedRun::new).collect();
 
     section("Fig. 15 — figure generation");
-    Bench::new("fig15_generate").samples(3).run(|| fig15(&runs, &node));
+    Bench::new("fig15_generate").samples(3).run(|| fig15(&indexed, &node));
 
     section("Fig. 15 — alignment + breakdown hot path");
-    let aligned1 = AlignedTrace::align(runs[0].run.trace.clone(), &runs[0].run.counters);
+    // Borrowing alignment: no trace clone (the pre-refactor path cloned
+    // the full event vector here just to keep using the trace).
+    let aligned1 = AlignedTrace::align(&runs[0].run.trace, &runs[0].run.counters);
+    Bench::new("align_borrowed")
+        .samples(5)
+        .run(|| AlignedTrace::align(&runs[0].run.trace, &runs[0].run.counters));
     Bench::new("all_breakdowns")
         .samples(5)
         .run(|| all_breakdowns(&aligned1, &node.gpu));
 
     section("Fig. 15 — paper-shape checks");
     let b1 = all_breakdowns(&aligned1, &node.gpu);
-    let aligned2 = AlignedTrace::align(runs[1].run.trace.clone(), &runs[1].run.counters);
+    let aligned2 = AlignedTrace::align(&runs[1].run.trace, &runs[1].run.counters);
     let b2 = all_breakdowns(&aligned2, &node.gpu);
 
     let gemm1 = b1[&OpRef::fwd(OpType::MlpUp)];

@@ -1,35 +1,40 @@
 //! Fig. 4 bench: regenerate the end-to-end throughput/duration/launch
 //! breakdown for the full configuration sweep, check the paper's shape
-//! (Observations 1 & 3), and time the analysis hot path.
+//! (Observations 1 & 3), and time the analysis hot path (shared
+//! TraceIndex build + indexed queries).
 
 mod common;
 
 use chopper::benchkit::{section, value, Bench};
 use chopper::chopper::report::fig4;
-use chopper::chopper::throughput;
+use chopper::chopper::{throughput, TraceIndex};
 
 fn main() {
     let runs = common::paper_sweep();
+    let indexed = common::indexed(&runs);
 
     section("Fig. 4 — figure generation");
-    let fig = Bench::new("fig4_generate").samples(5).run(|| fig4(&runs));
+    let fig = Bench::new("fig4_generate").samples(5).run(|| fig4(&indexed));
     drop(fig);
 
     section("Fig. 4 — throughput analysis hot path");
-    let b2s4 = common::find(&runs, "b2s4-FSDPv1");
+    let b2s4 = common::find_indexed(&indexed, "b2s4-FSDPv1");
     let tokens = b2s4
-        .wl
-        .tokens_per_iteration(b2s4.run.trace.meta.num_gpus as u64)
+        .wl()
+        .tokens_per_iteration(b2s4.sr.run.trace.meta.num_gpus as u64)
         as f64;
+    Bench::new("trace_index_build")
+        .samples(10)
+        .run(|| TraceIndex::build(&b2s4.sr.run.trace));
     Bench::new("throughput_b2s4")
         .samples(10)
-        .run(|| throughput(&b2s4.run.trace, tokens));
+        .run(|| throughput(b2s4.idx(), tokens));
 
     section("Fig. 4 — paper-shape checks");
     let tp = |label: &str| {
-        let sr = common::find(&runs, label);
-        let tok = sr.wl.tokens_per_iteration(8) as f64;
-        throughput(&sr.run.trace, tok)
+        let sr = common::find_indexed(&indexed, label);
+        let tok = sr.wl().tokens_per_iteration(8) as f64;
+        throughput(sr.idx(), tok)
     };
     for label in [
         "b1s4-FSDPv1",

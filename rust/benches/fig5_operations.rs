@@ -13,13 +13,14 @@ use chopper::util::stats;
 
 fn main() {
     let runs = common::paper_sweep();
+    let indexed = common::indexed(&runs);
 
     section("Fig. 5 — figure generation");
-    Bench::new("fig5_generate").samples(5).run(|| fig5(&runs));
+    Bench::new("fig5_generate").samples(5).run(|| fig5(&indexed));
 
     let med = |label: &str, op: OpRef| {
-        let sr = common::find(&runs, label);
-        stats::median(&op_duration_samples(&sr.run.trace, op))
+        let sr = common::find_indexed(&indexed, label);
+        stats::median(&op_duration_samples(sr.idx(), op))
     };
 
     section("Fig. 5 — paper-shape checks (FSDPv1)");

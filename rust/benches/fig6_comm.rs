@@ -8,25 +8,14 @@ use chopper::benchkit::{section, value, Bench};
 use chopper::chopper::aggregate::iteration_spans;
 use chopper::chopper::report::fig6;
 use chopper::model::ops::OpType;
-use chopper::trace::event::Stream;
 use chopper::util::stats;
-
-fn comm_durs(sr: &chopper::chopper::report::SweepRun, op: OpType) -> Vec<f64> {
-    let warmup = sr.run.trace.meta.warmup;
-    sr.run
-        .trace
-        .events
-        .iter()
-        .filter(|e| e.stream == Stream::Comm && e.op.op == op && e.iter >= warmup)
-        .map(|e| e.duration())
-        .collect()
-}
 
 fn main() {
     let runs = common::paper_sweep();
+    let indexed = common::indexed(&runs);
 
     section("Fig. 6 — figure generation");
-    Bench::new("fig6_generate").samples(5).run(|| fig6(&runs));
+    Bench::new("fig6_generate").samples(5).run(|| fig6(&indexed));
 
     section("Fig. 6 — paper-shape checks (FSDPv1, reduce-scatter)");
     // The reduce-scatters carry the rendezvous skew (they are gated on
@@ -37,12 +26,12 @@ fn main() {
     let mut mins = Vec::new();
     let mut iters = Vec::new();
     for label in ["b1s4-FSDPv1", "b2s4-FSDPv1", "b4s4-FSDPv1", "b2s8-FSDPv1"] {
-        let sr = common::find(&runs, label);
-        let durs = comm_durs(sr, OpType::ReduceScatter);
-        let med = stats::median(&durs);
-        mins.push(stats::min(&durs));
-        let spans = iteration_spans(&sr.run.trace);
-        let warmup = sr.run.trace.meta.warmup;
+        let sr = common::find_indexed(&indexed, label);
+        let durs = sr.idx().comm_durations(OpType::ReduceScatter);
+        let med = stats::median(durs);
+        mins.push(stats::min(durs));
+        let spans = iteration_spans(sr.idx());
+        let warmup = sr.sr.run.trace.meta.warmup;
         let iter_med = stats::median(
             &spans
                 .iter()

@@ -6,7 +6,7 @@
 mod common;
 
 use chopper::benchkit::{section, value, Bench};
-use chopper::chopper::report::fig7;
+use chopper::chopper::report::{fig7, IndexedRun};
 use chopper::chopper::{overlap_samples, summarize_op_overlap, Filter};
 use chopper::config::FsdpVersion;
 use chopper::model::ops::{OpRef, OpType};
@@ -15,18 +15,20 @@ use chopper::util::stats;
 fn main() {
     let v1 = common::one("b2s4", FsdpVersion::V1);
     let v2 = common::one("b2s4", FsdpVersion::V2);
+    let iv1 = IndexedRun::new(&v1);
+    let iv2 = IndexedRun::new(&v2);
 
     section("Fig. 7 — figure generation");
-    Bench::new("fig7_generate").samples(5).run(|| fig7(&v1, &v2));
+    Bench::new("fig7_generate").samples(5).run(|| fig7(&iv1, &iv2));
 
     section("Fig. 7 — overlap analysis hot path");
     Bench::new("overlap_samples_full_trace")
         .samples(10)
-        .run(|| overlap_samples(&v1.run.trace, &Filter::sampled()));
+        .run(|| overlap_samples(iv1.idx(), &Filter::sampled()));
 
     section("Fig. 7 — paper-shape checks (FSDPv1)");
-    let attn_n = summarize_op_overlap(&v1.run.trace, OpRef::bwd(OpType::AttnN));
-    let mlp_n = summarize_op_overlap(&v1.run.trace, OpRef::bwd(OpType::MlpN));
+    let attn_n = summarize_op_overlap(iv1.idx(), OpRef::bwd(OpType::AttnN));
+    let mlp_n = summarize_op_overlap(iv1.idx(), OpRef::bwd(OpType::MlpN));
     value("b_attn_n median overlap (paper ~0.9)", attn_n.ratio_q[2], "");
     value("b_mlp_n median overlap (paper ~0)", mlp_n.ratio_q[2], "");
     value(
@@ -44,7 +46,7 @@ fn main() {
     // Insight 3 mechanism: covered GEMM instances slower than uncovered.
     let mut f = Filter::sampled();
     f.op = Some(OpRef::bwd(OpType::MlpUp));
-    let samples = overlap_samples(&v1.run.trace, &f);
+    let samples = overlap_samples(iv1.idx(), &f);
     let hi: Vec<f64> = samples
         .iter()
         .filter(|s| s.ratio > 0.9)

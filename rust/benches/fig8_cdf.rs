@@ -6,24 +6,25 @@ mod common;
 
 use chopper::benchkit::{section, value, Bench};
 use chopper::chopper::per_gpu_overlap_cdf;
-use chopper::chopper::report::fig8;
+use chopper::chopper::report::{fig8, IndexedRun};
 use chopper::config::FsdpVersion;
 use chopper::model::ops::{OpRef, OpType};
 use chopper::util::stats;
 
 fn main() {
     let sr = common::one("b2s4", FsdpVersion::V1);
+    let isr = IndexedRun::new(&sr);
 
     section("Fig. 8 — figure generation");
-    Bench::new("fig8_generate").samples(5).run(|| fig8(&sr));
+    Bench::new("fig8_generate").samples(5).run(|| fig8(&isr));
 
     section("Fig. 8 — per-GPU CDF hot path");
     Bench::new("per_gpu_overlap_cdf")
         .samples(10)
-        .run(|| per_gpu_overlap_cdf(&sr.run.trace, OpRef::fwd(OpType::AttnOp)));
+        .run(|| per_gpu_overlap_cdf(isr.idx(), OpRef::fwd(OpType::AttnOp)));
 
     section("Fig. 8 — paper-shape checks");
-    let per = per_gpu_overlap_cdf(&sr.run.trace, OpRef::fwd(OpType::AttnOp));
+    let per = per_gpu_overlap_cdf(isr.idx(), OpRef::fwd(OpType::AttnOp));
     assert_eq!(per.len(), 8, "one CDF per GPU");
     let mut med_ratios = Vec::new();
     let mut med_durs = Vec::new();

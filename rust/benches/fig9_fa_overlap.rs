@@ -11,14 +11,15 @@ use chopper::model::ops::{OpRef, OpType};
 
 fn main() {
     let runs = common::paper_sweep();
+    let indexed = common::indexed(&runs);
 
     section("Fig. 9 — figure generation");
-    Bench::new("fig9_generate").samples(5).run(|| fig9(&runs));
+    Bench::new("fig9_generate").samples(5).run(|| fig9(&indexed));
 
     section("Fig. 9 — paper-shape checks (FSDPv1)");
     let med = |label: &str| {
-        let sr = common::find(&runs, label);
-        summarize_op_overlap(&sr.run.trace, OpRef::fwd(OpType::AttnFa)).ratio_q[2]
+        let sr = common::find_indexed(&indexed, label);
+        summarize_op_overlap(sr.idx(), OpRef::fwd(OpType::AttnFa)).ratio_q[2]
     };
     let small = med("b1s4-FSDPv1");
     let mid = med("b2s4-FSDPv1");
@@ -32,8 +33,8 @@ fn main() {
         "Insight 4 violated: overlap must fall with b·s ({small} -> {large})"
     );
     // Backward FA should NOT be consistently overlapped (Section V-C4).
-    let sr = common::find(&runs, "b2s4-FSDPv1");
-    let bwd = summarize_op_overlap(&sr.run.trace, OpRef::bwd(OpType::AttnFa));
+    let sr = common::find_indexed(&indexed, "b2s4-FSDPv1");
+    let bwd = summarize_op_overlap(sr.idx(), OpRef::bwd(OpType::AttnFa));
     value("b_attn_fa median overlap (paper ~0)", bwd.ratio_q[2], "");
     assert!(bwd.ratio_q[2] < 0.5);
     println!("\nfig9 shape OK");

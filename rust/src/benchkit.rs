@@ -131,22 +131,73 @@ pub fn trajectory_path(target: &str) -> PathBuf {
     PathBuf::from(format!("BENCH_{target}.json"))
 }
 
+/// Best-effort code+config fingerprint of this bench invocation:
+/// `git describe --always --dirty` plus a hash of every `CHOPPER_*`
+/// environment knob (bench scale is set through those). A dirty tree also
+/// hashes the uncommitted diff, so two different uncommitted states of
+/// the same commit get different fingerprints. Re-running the same code
+/// at the same scale reproduces the fingerprint, so the trajectory
+/// replaces the stale entry instead of growing duplicates; any code or
+/// scale change appends a new point.
+pub fn run_fingerprint() -> String {
+    let run_git = |args: &[&str]| {
+        std::process::Command::new("git")
+            .args(args)
+            .output()
+            .ok()
+            .filter(|o| o.status.success())
+            .map(|o| o.stdout)
+    };
+    let mut git = run_git(&["describe", "--always"])
+        .map(|out| String::from_utf8_lossy(&out).trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".into());
+    let mut knobs: Vec<String> = std::env::vars()
+        .filter(|(k, _)| k.starts_with("CHOPPER_"))
+        .map(|(k, v)| format!("{k}={v}"))
+        .collect();
+    knobs.sort();
+    use std::hash::Hasher as _;
+    let mut h = crate::util::hash::FxHasher::default();
+    for knob in &knobs {
+        h.write(knob.as_bytes());
+    }
+    // Dirtiness is decided by the same exclusion-filtered diff that gets
+    // hashed: the trajectory files are excluded on both sides, so a bench
+    // run rewriting its own BENCH_*.json neither flips the tree dirty nor
+    // perturbs the hash — while any real uncommitted edit both marks the
+    // fingerprint "-dirty" and distinguishes its content.
+    let diff = run_git(&["diff", "HEAD", "--", ".", ":(exclude)BENCH_*.json"])
+        .unwrap_or_default();
+    if !diff.is_empty() {
+        git.push_str("-dirty");
+        h.write(&diff);
+    }
+    format!("{git}-{:08x}", h.finish() as u32)
+}
+
 /// Append one invocation's results (plus optional derived scalar metrics,
 /// e.g. a measured speedup) to the trajectory file at `path`. The file is
 /// a single JSON object:
 ///
 /// ```json
 /// {"bench": "<target>", "schema": 1, "entries": [
-///   {"run": 1, "unix_ts": ..., "results": [...], "metrics": {...}}, ...]}
+///   {"run": 1, "unix_ts": ..., "fingerprint": "...", "results": [...],
+///    "metrics": {...}}, ...]}
 /// ```
 ///
-/// A missing or unparseable file starts a fresh trajectory (corrupt
-/// history should never make a bench run fail).
+/// Entries **accumulate across runs** — the file is rewritten with all
+/// prior entries preserved, so the perf trajectory is real history, not
+/// the last run. When `fingerprint` is given, prior entries with the same
+/// fingerprint are replaced (same code + same scale = one point); `run`
+/// numbers stay monotonic. A missing or unparseable file starts a fresh
+/// trajectory (corrupt history should never make a bench run fail).
 pub fn emit_json(
     path: &Path,
     target: &str,
     results: &[BenchResult],
     metrics: &[(&str, f64)],
+    fingerprint: Option<&str>,
 ) -> std::io::Result<()> {
     let prior = std::fs::read_to_string(path)
         .ok()
@@ -157,18 +208,33 @@ pub fn emit_json(
         .and_then(|e| e.as_arr())
         .map(|a| a.to_vec())
         .unwrap_or_default();
+    // Monotonic run id, computed before dedup so replaced entries still
+    // advance the counter (the trajectory records "this was re-measured").
+    let next_run = entries
+        .iter()
+        .filter_map(|e| e.get("run").and_then(|r| r.as_f64()))
+        .fold(0.0_f64, f64::max)
+        + 1.0;
+    if let Some(fp) = fingerprint {
+        entries.retain(|e| {
+            e.get("fingerprint").and_then(|f| f.as_str()) != Some(fp)
+        });
+    }
     let unix_ts = std::time::SystemTime::now()
         .duration_since(std::time::UNIX_EPOCH)
         .map(|d| d.as_secs())
         .unwrap_or(0);
     let mut fields = vec![
-        ("run", Json::num((entries.len() + 1) as f64)),
+        ("run", Json::num(next_run)),
         ("unix_ts", Json::num(unix_ts as f64)),
-        (
-            "results",
-            Json::Arr(results.iter().map(|r| r.to_json()).collect()),
-        ),
     ];
+    if let Some(fp) = fingerprint {
+        fields.push(("fingerprint", Json::str(fp)));
+    }
+    fields.push((
+        "results",
+        Json::Arr(results.iter().map(|r| r.to_json()).collect()),
+    ));
     if !metrics.is_empty() {
         fields.push((
             "metrics",
@@ -196,7 +262,8 @@ pub fn emit_collected(target: &str) {
     let metrics: Vec<(&str, f64)> =
         vals.iter().map(|(k, v)| (k.as_str(), *v)).collect();
     let path = trajectory_path(target);
-    emit_json(&path, target, &results, &metrics)
+    let fp = run_fingerprint();
+    emit_json(&path, target, &results, &metrics, Some(&fp))
         .unwrap_or_else(|e| panic!("writing {}: {e}", path.display()));
     println!(
         "trajectory {} updated ({} timings, {} values)",
@@ -255,9 +322,9 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("BENCH_test.json");
         std::fs::remove_file(&path).ok();
-        emit_json(&path, "test", &[result("x", 0.5)], &[("speedup", 2.5)])
+        emit_json(&path, "test", &[result("x", 0.5)], &[("speedup", 2.5)], None)
             .unwrap();
-        emit_json(&path, "test", &[result("x", 0.4)], &[]).unwrap();
+        emit_json(&path, "test", &[result("x", 0.4)], &[], None).unwrap();
         let j = crate::util::json::parse(&std::fs::read_to_string(&path).unwrap())
             .unwrap();
         assert_eq!(j.get("bench").unwrap().as_str(), Some("test"));
@@ -280,13 +347,49 @@ mod tests {
     }
 
     #[test]
+    fn trajectory_dedups_by_fingerprint() {
+        let dir = std::env::temp_dir()
+            .join(format!("chopper_benchkit_fp_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_fp.json");
+        std::fs::remove_file(&path).ok();
+        // Same fingerprint twice: the re-measurement replaces the stale
+        // entry; a different fingerprint appends.
+        emit_json(&path, "fp", &[result("x", 0.5)], &[], Some("v1-aaaa")).unwrap();
+        emit_json(&path, "fp", &[result("x", 0.4)], &[], Some("v1-aaaa")).unwrap();
+        emit_json(&path, "fp", &[result("x", 0.3)], &[], Some("v2-bbbb")).unwrap();
+        let j = crate::util::json::parse(&std::fs::read_to_string(&path).unwrap())
+            .unwrap();
+        let entries = j.get("entries").unwrap().as_arr().unwrap();
+        assert_eq!(entries.len(), 2, "same fingerprint must dedup");
+        assert_eq!(
+            entries[0].get("fingerprint").unwrap().as_str(),
+            Some("v1-aaaa")
+        );
+        let r0 = &entries[0].get("results").unwrap().as_arr().unwrap()[0];
+        assert_eq!(r0.get("median_s").unwrap().as_f64(), Some(0.4));
+        // Run ids stay monotonic across replacements: 2 then 3.
+        assert_eq!(entries[0].get("run").unwrap().as_f64(), Some(2.0));
+        assert_eq!(entries[1].get("run").unwrap().as_f64(), Some(3.0));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn run_fingerprint_is_stable_within_process() {
+        let a = run_fingerprint();
+        let b = run_fingerprint();
+        assert_eq!(a, b);
+        assert!(!a.is_empty());
+    }
+
+    #[test]
     fn corrupt_trajectory_starts_fresh() {
         let dir = std::env::temp_dir()
             .join(format!("chopper_benchkit_corrupt_{}", std::process::id()));
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("BENCH_bad.json");
         std::fs::write(&path, "{not json").unwrap();
-        emit_json(&path, "bad", &[result("y", 1.0)], &[]).unwrap();
+        emit_json(&path, "bad", &[result("y", 1.0)], &[], None).unwrap();
         let j = crate::util::json::parse(&std::fs::read_to_string(&path).unwrap())
             .unwrap();
         assert_eq!(j.get("entries").unwrap().as_arr().unwrap().len(), 1);

@@ -10,12 +10,12 @@
 
 use crate::campaign::cache::{fingerprint, Cache};
 use crate::campaign::grid::Scenario;
+use crate::chopper::index::TraceIndex;
 use crate::chopper::overlap::summarize_op_overlap;
 use crate::chopper::throughput::throughput;
 use crate::config::NodeSpec;
 use crate::model::ops::{OpRef, OpType, Phase};
 use crate::sim::{run_workload_with, ProfiledRun};
-use crate::trace::event::Stream;
 use crate::util::json::Json;
 use crate::util::stats;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -174,7 +174,8 @@ impl ScenarioSummary {
     }
 }
 
-/// Reduce one profiled run to its persisted summary.
+/// Reduce one profiled run to its persisted summary. Builds the shared
+/// [`TraceIndex`] once; every summarized quantity is a query against it.
 pub fn summarize(
     node: &NodeSpec,
     sc: &Scenario,
@@ -182,22 +183,15 @@ pub fn summarize(
     run: &ProfiledRun,
 ) -> ScenarioSummary {
     let trace = &run.trace;
-    let warmup = trace.meta.warmup;
+    let idx = TraceIndex::build(trace);
     let tokens = sc.wl.tokens_per_iteration(trace.meta.num_gpus as u64) as f64;
-    let tp = throughput(trace, tokens);
+    let tp = throughput(&idx, tokens);
 
-    // Per-(gpu, iter) summed compute duration by phase → median.
-    let mut per_phase: std::collections::BTreeMap<(Phase, u32, u32), f64> =
-        std::collections::BTreeMap::new();
-    for e in trace.events.iter() {
-        if e.stream == Stream::Comm || e.iter < warmup {
-            continue;
-        }
-        *per_phase.entry((e.op.phase, e.gpu, e.iter)).or_insert(0.0) +=
-            e.duration();
-    }
+    // Per-(gpu, iter) summed compute duration by phase → median
+    // (precomputed by the index in event order, sampled iters only).
     let phase_median = |ph: Phase| -> f64 {
-        let xs: Vec<f64> = per_phase
+        let xs: Vec<f64> = idx
+            .phase_dur()
             .iter()
             .filter(|((p, _, _), _)| *p == ph)
             .map(|(_, v)| *v)
@@ -210,20 +204,15 @@ pub fn summarize(
     };
 
     let comm_median = |op: OpType| -> f64 {
-        let xs: Vec<f64> = trace
-            .events
-            .iter()
-            .filter(|e| e.stream == Stream::Comm && e.op.op == op && e.iter >= warmup)
-            .map(|e| e.duration())
-            .collect();
+        let xs = idx.comm_durations(op);
         if xs.is_empty() {
             0.0
         } else {
-            stats::median(&xs) / 1e6
+            stats::median(xs) / 1e6
         }
     };
 
-    let fa = summarize_op_overlap(trace, OpRef::fwd(OpType::AttnFa));
+    let fa = summarize_op_overlap(&idx, OpRef::fwd(OpType::AttnFa));
 
     // Active-window telemetry, the paper's Fig. 14 averaging.
     let active: Vec<&crate::trace::event::PowerSample> = run

@@ -7,9 +7,14 @@
 //! between, and runtime of all spawned kernels corresponding to a given
 //! operation"). A small filter struct constrains any aggregation to a
 //! granularity slice (specific GPUs, iterations, op types, phases).
+//!
+//! All aggregations are queries over the shared [`TraceIndex`] — the
+//! instance partition and the rollups are computed once per trace and
+//! borrowed here, never recomputed per call (see DESIGN.md §7).
 
+use crate::chopper::index::TraceIndex;
 use crate::model::ops::{OpKind, OpRef, Phase};
-use crate::trace::event::{Stream, Trace, TraceEvent};
+use crate::trace::event::{Trace, TraceEvent};
 use crate::util::stats;
 use std::collections::BTreeMap;
 
@@ -74,104 +79,69 @@ impl Filter {
             && self.kind.map(|k| e.kind() == k).unwrap_or(true)
             && self.layer.map(|l| e.layer == Some(l)).unwrap_or(true)
     }
+
+    /// Instance-level acceptance. Every filter axis is a function of the
+    /// instance grouping key, so an instance either contains only accepted
+    /// events or only rejected ones — filtering the precomputed partition
+    /// is exactly equivalent to filtering events before grouping.
+    pub fn accepts_instance(&self, inst: &OpInstanceAgg, warmup: u32) -> bool {
+        if self.sampled_only && inst.iter < warmup {
+            return false;
+        }
+        self.gpu.map(|g| inst.gpu == g).unwrap_or(true)
+            && self.iter.map(|i| inst.iter == i).unwrap_or(true)
+            && self.phase.map(|p| inst.op.phase == p).unwrap_or(true)
+            && self.op.map(|o| inst.op == o).unwrap_or(true)
+            && self.kind.map(|k| inst.op.op.kind() == k).unwrap_or(true)
+            && self.layer.map(|l| inst.layer == Some(l)).unwrap_or(true)
+    }
 }
 
-/// Group the compute kernels of a trace into operation instances.
-/// Comm events become single-kernel instances of their collective op.
-pub fn op_instances(trace: &Trace, filter: &Filter) -> Vec<OpInstanceAgg> {
-    let warmup = trace.meta.warmup;
-    let mut map: BTreeMap<(u32, u32, OpRef, Option<u32>, u8), OpInstanceAgg> =
-        BTreeMap::new();
-    for e in trace.events.iter() {
-        if !filter.accepts(e, warmup) {
-            continue;
-        }
-        let stream_tag = match e.stream {
-            Stream::Compute => 0u8,
-            Stream::Comm => 1,
-        };
-        let key = (e.gpu, e.iter, e.op, e.layer, stream_tag);
-        let inst = map.entry(key).or_insert_with(|| OpInstanceAgg {
-            gpu: e.gpu,
-            iter: e.iter,
-            op: e.op,
-            layer: e.layer,
-            t_start: f64::INFINITY,
-            t_end: f64::NEG_INFINITY,
-            kernel_ns: 0.0,
-            kernels: 0,
-            flops: 0.0,
-            bytes: 0.0,
-            kernel_ids: Vec::new(),
-        });
-        inst.t_start = inst.t_start.min(e.t_start);
-        inst.t_end = inst.t_end.max(e.t_end);
-        inst.kernel_ns += e.duration();
-        inst.kernels += 1;
-        inst.flops += e.flops;
-        inst.bytes += e.bytes;
-        inst.kernel_ids.push(e.kernel_id);
-    }
-    map.into_values().collect()
+/// The operation instances matching `filter`, borrowed from the index's
+/// precomputed partition (comm events are single-kernel instances of their
+/// collective op, exactly as before).
+pub fn op_instances<'i>(
+    idx: &'i TraceIndex,
+    filter: &Filter,
+) -> Vec<&'i OpInstanceAgg> {
+    idx.instances(filter)
 }
 
 /// Fig-5-style samples: per (gpu, iter), the durations of all instances of
 /// `op` summed across layers ("Duration is summed across layers and
 /// includes bubbles between the kernels of each operation").
-pub fn op_duration_samples(trace: &Trace, op: OpRef) -> Vec<f64> {
+pub fn op_duration_samples(idx: &TraceIndex, op: OpRef) -> Vec<f64> {
     let mut filter = Filter::sampled();
     filter.op = Some(op);
     let mut per: BTreeMap<(u32, u32), f64> = BTreeMap::new();
-    for inst in op_instances(trace, &filter) {
+    for inst in idx.instances(&filter) {
         *per.entry((inst.gpu, inst.iter)).or_insert(0.0) += inst.duration();
     }
     per.into_values().collect()
 }
 
 /// Duration rollup per (phase, op-kind), summed over an iteration on one
-/// GPU — the Fig-4 stacked-bar quantity. Returns samples across
-/// (gpu, iteration) for median-taking.
-pub fn phase_kind_duration_samples(
-    trace: &Trace,
-) -> BTreeMap<(Phase, OpKind), Vec<f64>> {
-    let mut per: BTreeMap<(Phase, OpKind, u32, u32), f64> = BTreeMap::new();
-    let warmup = trace.meta.warmup;
-    for e in trace.events.iter().filter(|e| e.iter >= warmup) {
-        if e.stream == Stream::Comm {
-            continue; // comm kernels are not part of the compute breakdown
-        }
-        *per.entry((e.op.phase, e.kind(), e.gpu, e.iter)).or_insert(0.0) +=
-            e.duration();
-    }
-    let mut out: BTreeMap<(Phase, OpKind), Vec<f64>> = BTreeMap::new();
-    for ((phase, kind, _, _), v) in per {
-        out.entry((phase, kind)).or_default().push(v);
-    }
-    out
+/// GPU — the Fig-4 stacked-bar quantity. Samples across (gpu, iteration)
+/// for median-taking, precomputed by the index.
+pub fn phase_kind_duration_samples<'i>(
+    idx: &'i TraceIndex,
+) -> &'i BTreeMap<(Phase, OpKind), Vec<f64>> {
+    idx.phase_kind_dur()
 }
 
 /// Total duration of one full iteration per (gpu, iter): last end − first
 /// start over compute events of that iteration.
-pub fn iteration_spans(trace: &Trace) -> BTreeMap<(u32, u32), (f64, f64)> {
-    let mut spans: BTreeMap<(u32, u32), (f64, f64)> = BTreeMap::new();
-    for e in &trace.events {
-        if e.stream == Stream::Comm {
-            continue;
-        }
-        let s = spans
-            .entry((e.gpu, e.iter))
-            .or_insert((f64::INFINITY, f64::NEG_INFINITY));
-        s.0 = s.0.min(e.t_start);
-        s.1 = s.1.max(e.t_end);
-    }
-    spans
+pub fn iteration_spans<'i>(
+    idx: &'i TraceIndex,
+) -> &'i BTreeMap<(u32, u32), (f64, f64)> {
+    idx.iter_spans()
 }
 
 /// Median duration of each op across all sampled (gpu, iter, layer)
 /// instances — the per-operation summary table.
-pub fn op_medians(trace: &Trace) -> BTreeMap<OpRef, f64> {
+pub fn op_medians(idx: &TraceIndex) -> BTreeMap<OpRef, f64> {
     let mut by_op: BTreeMap<OpRef, Vec<f64>> = BTreeMap::new();
-    for inst in op_instances(trace, &Filter::sampled()) {
+    for inst in idx.instances(&Filter::sampled()) {
         by_op.entry(inst.op).or_default().push(inst.duration());
     }
     by_op
@@ -181,7 +151,9 @@ pub fn op_medians(trace: &Trace) -> BTreeMap<OpRef, f64> {
 }
 
 /// Conservation check used by property tests: at every granularity, the
-/// sum of kernel durations of the children equals the parent's.
+/// sum of kernel durations of the children equals the parent's. This is
+/// the one aggregation that deliberately reads the raw events — it is the
+/// oracle the index is cross-checked against, so it must not consume it.
 pub fn kernel_time_by<K: Ord>(
     trace: &Trace,
     filter: &Filter,
@@ -200,27 +172,20 @@ pub fn kernel_time_by<K: Ord>(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::chopper::fixtures;
     use crate::config::*;
     use crate::model::ops::OpType;
-    use crate::trace::collect::RuntimeProfiler;
 
-    fn trace() -> Trace {
-        let mut cfg = ModelConfig::llama3_8b();
-        cfg.layers = 2;
-        let mut wl = WorkloadConfig::new(1, 4096, FsdpVersion::V1);
-        wl.iterations = 2;
-        wl.warmup = 1;
-        RuntimeProfiler::new(NodeSpec::mi300x_node())
-            .capture(&cfg, &wl)
-            .trace
+    fn idx() -> TraceIndex<'static> {
+        TraceIndex::build(&fixtures::runtime(2, 1, 2, 1, FsdpVersion::V1).trace)
     }
 
     #[test]
     fn instances_group_kernels_of_one_op() {
-        let t = trace();
+        let idx = idx();
         let mut f = Filter::sampled();
         f.op = Some(OpRef::bwd(OpType::AttnFa));
-        let insts = op_instances(&t, &f);
+        let insts = op_instances(&idx, &f);
         // 8 gpus × 1 sampled iter × 2 layers
         assert_eq!(insts.len(), 16);
         for i in &insts {
@@ -233,17 +198,11 @@ mod tests {
     fn duration_includes_bubbles() {
         // Needs enough layers that the optimizer's per-kernel host work
         // exceeds the (shard-size-dependent) kernel durations.
-        let mut cfg = ModelConfig::llama3_8b();
-        cfg.layers = 8;
-        let mut wl = WorkloadConfig::new(1, 4096, FsdpVersion::V1);
-        wl.iterations = 2;
-        wl.warmup = 1;
-        let t = RuntimeProfiler::new(NodeSpec::mi300x_node())
-            .capture(&cfg, &wl)
-            .trace;
+        let cap = fixtures::runtime(8, 1, 2, 1, FsdpVersion::V1);
+        let idx = TraceIndex::build(&cap.trace);
         let mut f = Filter::sampled();
         f.op = Some(OpRef::new(OpType::OptStep, Phase::Optimizer));
-        let insts = op_instances(&t, &f);
+        let insts = op_instances(&idx, &f);
         assert!(!insts.is_empty());
         // opt_step under FSDPv1 has host gaps between kernels -> bubbles.
         let with_bubbles = insts.iter().filter(|i| i.bubble_ns() > 0.0).count();
@@ -252,11 +211,11 @@ mod tests {
 
     #[test]
     fn filter_slices_by_gpu_and_phase() {
-        let t = trace();
+        let idx = idx();
         let mut f = Filter::sampled();
         f.gpu = Some(3);
         f.phase = Some(Phase::Forward);
-        let insts = op_instances(&t, &f);
+        let insts = op_instances(&idx, &f);
         assert!(insts.iter().all(|i| i.gpu == 3));
         assert!(insts.iter().all(|i| i.op.phase == Phase::Forward));
     }
@@ -264,9 +223,9 @@ mod tests {
     #[test]
     fn conservation_kernel_time() {
         // Sum over per-op groups == total over the same filter.
-        let t = trace();
+        let t = &fixtures::runtime(2, 1, 2, 1, FsdpVersion::V1).trace;
         let f = Filter::sampled();
-        let by_op = kernel_time_by(&t, &f, |e| e.op);
+        let by_op = kernel_time_by(t, &f, |e| e.op);
         let total: f64 = by_op.values().sum();
         let direct: f64 = t
             .events
@@ -279,8 +238,8 @@ mod tests {
 
     #[test]
     fn fig5_samples_sum_layers() {
-        let t = trace();
-        let samples = op_duration_samples(&t, OpRef::fwd(OpType::MlpUp));
+        let idx = idx();
+        let samples = op_duration_samples(&idx, OpRef::fwd(OpType::MlpUp));
         // one per (gpu, sampled iter) = 8
         assert_eq!(samples.len(), 8);
         assert!(samples.iter().all(|&d| d > 0.0));
@@ -288,8 +247,8 @@ mod tests {
 
     #[test]
     fn phase_kind_rollup_covers_all_phases() {
-        let t = trace();
-        let m = phase_kind_duration_samples(&t);
+        let idx = idx();
+        let m = phase_kind_duration_samples(&idx);
         assert!(m.contains_key(&(Phase::Forward, OpKind::Gemm)));
         assert!(m.contains_key(&(Phase::Backward, OpKind::FlashAttn)));
         assert!(m.contains_key(&(Phase::Optimizer, OpKind::Vector)));
@@ -299,18 +258,18 @@ mod tests {
 
     #[test]
     fn iteration_spans_cover_every_gpu() {
-        let t = trace();
-        let spans = iteration_spans(&t);
+        let idx = idx();
+        let spans = iteration_spans(&idx);
         assert_eq!(spans.len(), 8 * 2);
-        for ((_, _), (s, e)) in &spans {
+        for ((_, _), (s, e)) in spans.iter() {
             assert!(e > s);
         }
     }
 
     #[test]
     fn op_medians_nonempty_and_positive() {
-        let t = trace();
-        let m = op_medians(&t);
+        let idx = idx();
+        let m = op_medians(&idx);
         assert!(m.len() > 20);
         assert!(m.values().all(|&d| d > 0.0));
     }

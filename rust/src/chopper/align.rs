@@ -7,86 +7,67 @@
 //! alignment every kernel event carries its derived metrics, so the
 //! aggregation stage can roll hardware counters up to operations, layers,
 //! phases, iterations, and GPUs.
+//!
+//! `AlignedTrace` **borrows** the trace (the pre-index version took it by
+//! value, which forced a deep clone at every call site that still needed
+//! the trace) and stores the joined metrics as a column on the shared
+//! [`TraceIndex`], so the downstream breakdown queries reuse the same
+//! instance partition and overlap intervals as every other analysis.
 
+use crate::chopper::index::TraceIndex;
 use crate::counters::{CounterTrace, DerivedMetrics};
-use crate::sim::align_key;
 use crate::trace::event::{Trace, TraceEvent};
-use crate::util::hash::FxHashMap;
 
-/// A runtime trace with hardware counters attached to each kernel.
+/// A runtime trace index with hardware counters attached to each kernel.
 #[derive(Debug)]
-pub struct AlignedTrace {
-    pub trace: Trace,
-    /// kernel_id → derived metrics (from the hardware pass). Fast
-    /// deterministic hasher: this map takes one insert + one lookup per
-    /// kernel event and is never iterated.
-    metrics: FxHashMap<u64, DerivedMetrics>,
+pub struct AlignedTrace<'t> {
+    pub trace: &'t Trace,
+    /// The shared analysis index, with the counter-derived metrics column
+    /// attached (one insert + one lookup per kernel event, fast
+    /// deterministic hashing for the id join).
+    pub index: TraceIndex<'t>,
     /// Kernels that had no counter record (reported, not fatal).
     pub unmatched: usize,
 }
 
-impl AlignedTrace {
+impl<'t> AlignedTrace<'t> {
     /// Join a runtime trace with a hardware-counter trace.
-    pub fn align(trace: Trace, counters: &CounterTrace) -> Self {
-        let mut metrics = FxHashMap::with_capacity_and_hasher(
-            trace.events.len(),
-            Default::default(),
-        );
-        let mut unmatched = 0;
-        for e in &trace.events {
-            match counters
-                .get(e.gpu, align_key(e.stream, e.seq))
-                .and_then(|v| DerivedMetrics::from_counters(v, e.duration()))
-            {
-                Some(m) => {
-                    metrics.insert(e.kernel_id, m);
-                }
-                None => unmatched += 1,
-            }
-        }
+    pub fn align(trace: &'t Trace, counters: &CounterTrace) -> Self {
+        let mut index = TraceIndex::build(trace);
+        let unmatched = index.attach_counters(counters);
         Self {
             trace,
-            metrics,
+            index,
             unmatched,
         }
     }
 
     /// Metrics of one kernel, if its counters were collected.
     pub fn metrics_of(&self, e: &TraceEvent) -> Option<&DerivedMetrics> {
-        self.metrics.get(&e.kernel_id)
+        self.index.metrics_of(e)
     }
 
     pub fn metrics_by_id(&self, kernel_id: u64) -> Option<&DerivedMetrics> {
-        self.metrics.get(&kernel_id)
+        self.index.metrics_by_id(kernel_id)
     }
 
     /// Fraction of kernels successfully aligned.
     pub fn coverage(&self) -> f64 {
-        if self.trace.events.is_empty() {
-            return 1.0;
-        }
-        self.metrics.len() as f64 / self.trace.events.len() as f64
+        self.index.coverage()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::chopper::fixtures;
     use crate::config::*;
-    use crate::counters::Counter;
     use crate::model::ops::OpKind;
-    use crate::trace::collect::{HardwareProfiler, RuntimeProfiler};
 
-    fn aligned() -> AlignedTrace {
-        let node = NodeSpec::mi300x_node();
-        let mut cfg = ModelConfig::llama3_8b();
-        cfg.layers = 2;
-        let mut wl = WorkloadConfig::new(1, 4096, FsdpVersion::V1);
-        wl.iterations = 1;
-        wl.warmup = 0;
-        let rt = RuntimeProfiler::new(node.clone()).capture(&cfg, &wl);
-        let hw = HardwareProfiler::new(node).capture(&cfg, &wl, &Counter::ALL);
-        AlignedTrace::align(rt.trace, &hw)
+    fn aligned() -> AlignedTrace<'static> {
+        let rt = fixtures::runtime(2, 1, 1, 0, FsdpVersion::V1);
+        let hw = fixtures::counters(2, 1, 1, 0, FsdpVersion::V1);
+        AlignedTrace::align(&rt.trace, hw)
     }
 
     #[test]

@@ -11,9 +11,13 @@
 //! Ovr_freq = (D_act / D_peak) / Ovr_overlap with D_peak = C_gpu /
 //! Freq_peak (Eq. 10) — the residual DVFS term, which the paper finds
 //! dominates.
+//!
+//! Consumes the counter-joined [`AlignedTrace`]: instances, overlap
+//! intervals, and metrics all come from its shared index — nothing here
+//! re-scans the events or rebuilds the interval set per op.
 
-use crate::chopper::align::AlignedTrace;
 use crate::chopper::aggregate::{op_instances, Filter};
+use crate::chopper::align::AlignedTrace;
 use crate::chopper::overlap::{duration_at_overlap, overlap_samples};
 use crate::config::GpuSpec;
 use crate::model::ops::{OpKind, OpRef};
@@ -64,9 +68,10 @@ pub fn op_breakdown(
     if !matches!(op.op.kind(), OpKind::Gemm | OpKind::FlashAttn) {
         return None;
     }
+    let idx = &aligned.index;
     let mut f = Filter::sampled();
     f.op = Some(op);
-    let insts = op_instances(&aligned.trace, &f);
+    let insts = op_instances(idx, &f);
     if insts.is_empty() {
         return None;
     }
@@ -118,7 +123,7 @@ pub fn op_breakdown(
     };
 
     // Eq. (9): overlap overhead from the overlap-duration profile.
-    let ovl = overlap_samples(&aligned.trace, &f);
+    let ovl = overlap_samples(idx, &f);
     let profile: Vec<(f64, f64)> =
         ovl.iter().map(|s| (s.ratio, s.inst.duration())).collect();
     let d50 = duration_at_overlap(&profile, 0.5);
@@ -145,20 +150,16 @@ pub fn op_breakdown(
 }
 
 /// Breakdown of every GEMM + FA op present in the trace (Fig. 15's rows).
+/// The op set comes straight off the index's per-op partition — already
+/// sorted and deduplicated.
 pub fn all_breakdowns(
     aligned: &AlignedTrace,
     gpu_spec: &GpuSpec,
 ) -> BTreeMap<OpRef, OpBreakdown> {
-    let mut ops: Vec<OpRef> = aligned
-        .trace
-        .events
-        .iter()
-        .filter(|e| matches!(e.kind(), OpKind::Gemm | OpKind::FlashAttn))
-        .map(|e| e.op)
-        .collect();
-    ops.sort();
-    ops.dedup();
-    ops.into_iter()
+    aligned
+        .index
+        .ops()
+        .filter(|op| matches!(op.op.kind(), OpKind::Gemm | OpKind::FlashAttn))
         .filter_map(|op| op_breakdown(aligned, gpu_spec, op).map(|b| (op, b)))
         .collect()
 }
@@ -166,21 +167,14 @@ pub fn all_breakdowns(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::chopper::fixtures;
     use crate::config::*;
-    use crate::counters::Counter;
     use crate::model::ops::OpType;
-    use crate::trace::collect::{HardwareProfiler, RuntimeProfiler};
 
-    fn aligned(batch: u64) -> AlignedTrace {
-        let node = NodeSpec::mi300x_node();
-        let mut cfg = ModelConfig::llama3_8b();
-        cfg.layers = 4;
-        let mut wl = WorkloadConfig::new(batch, 4096, FsdpVersion::V1);
-        wl.iterations = 2;
-        wl.warmup = 1;
-        let rt = RuntimeProfiler::new(node.clone()).capture(&cfg, &wl);
-        let hw = HardwareProfiler::new(node).capture(&cfg, &wl, &Counter::ALL);
-        AlignedTrace::align(rt.trace, &hw)
+    fn aligned(batch: u64) -> AlignedTrace<'static> {
+        let rt = fixtures::runtime(4, batch, 2, 1, FsdpVersion::V1);
+        let hw = fixtures::counters(4, batch, 2, 1, FsdpVersion::V1);
+        AlignedTrace::align(&rt.trace, hw)
     }
 
     #[test]

@@ -197,14 +197,9 @@ mod tests {
     fn paper_scale_model_matches_insight7() {
         // End-to-end with the host model: active cores well above the
         // lower bound, tiny physical footprint.
-        use crate::config::*;
-        use crate::trace::collect::RuntimeProfiler;
-        let mut cfg = ModelConfig::llama3_8b();
-        cfg.layers = 2;
-        let mut wl = WorkloadConfig::new(1, 4096, FsdpVersion::V2);
-        wl.iterations = 1;
-        wl.warmup = 0;
-        let cap = RuntimeProfiler::new(NodeSpec::mi300x_node()).capture(&cfg, &wl);
+        use crate::chopper::fixtures;
+        use crate::config::FsdpVersion;
+        let cap = fixtures::runtime(2, 1, 1, 0, FsdpVersion::V2);
         let a = CpuUtilAnalysis::analyze(&cap.cpu);
         assert!(a.median_active() >= 20.0 && a.median_active() <= 30.0);
         assert!(a.median_min_cores() >= 7.0 && a.median_min_cores() <= 12.0);

@@ -1,0 +1,75 @@
+//! Shared, cached unit-test fixtures for the analysis modules.
+//!
+//! Before this module every `chopper::*` test file carried its own
+//! copy-pasted `RuntimeProfiler::new(node.clone()).capture(..)` /
+//! `HardwareProfiler::new(node).capture(..)` preamble, so the same
+//! workload was re-simulated once per test. Fixtures are keyed by their
+//! full configuration and leaked (`Box::leak`) into `'static`, so each
+//! distinct configuration is simulated **once per test binary** and every
+//! index/aligned view can borrow it for as long as the test runs.
+
+use crate::config::{FsdpVersion, ModelConfig, NodeSpec, WorkloadConfig};
+use crate::counters::{Counter, CounterTrace};
+use crate::trace::collect::{HardwareProfiler, RuntimeCapture, RuntimeProfiler};
+use std::collections::HashMap;
+use std::sync::{Mutex, OnceLock};
+
+type Key = (u64, u64, u32, u32, FsdpVersion);
+
+fn workload(key: Key) -> (ModelConfig, WorkloadConfig) {
+    let (layers, batch, iters, warmup, fsdp) = key;
+    let mut cfg = ModelConfig::llama3_8b();
+    cfg.layers = layers;
+    let mut wl = WorkloadConfig::new(batch, 4096, fsdp);
+    wl.iterations = iters;
+    wl.warmup = warmup;
+    (cfg, wl)
+}
+
+/// Runtime-profiled capture (trace + power + CPU telemetry) at s=4096.
+pub fn runtime(
+    layers: u64,
+    batch: u64,
+    iters: u32,
+    warmup: u32,
+    fsdp: FsdpVersion,
+) -> &'static RuntimeCapture {
+    static CACHE: OnceLock<Mutex<HashMap<Key, &'static RuntimeCapture>>> =
+        OnceLock::new();
+    let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+    let key = (layers, batch, iters, warmup, fsdp);
+    if let Some(cap) = cache.lock().unwrap().get(&key) {
+        return cap;
+    }
+    // Simulate with the lock released so tests needing *different*
+    // configurations stay parallel; a racing duplicate build of the same
+    // key just loses the insert (one leaked extra, correctness unharmed).
+    let (cfg, wl) = workload(key);
+    let cap: &'static RuntimeCapture = Box::leak(Box::new(
+        RuntimeProfiler::new(NodeSpec::mi300x_node()).capture(&cfg, &wl),
+    ));
+    *cache.lock().unwrap().entry(key).or_insert(cap)
+}
+
+/// Hardware-counter trace (all counters) for the same workload grid.
+pub fn counters(
+    layers: u64,
+    batch: u64,
+    iters: u32,
+    warmup: u32,
+    fsdp: FsdpVersion,
+) -> &'static CounterTrace {
+    static CACHE: OnceLock<Mutex<HashMap<Key, &'static CounterTrace>>> =
+        OnceLock::new();
+    let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+    let key = (layers, batch, iters, warmup, fsdp);
+    if let Some(c) = cache.lock().unwrap().get(&key) {
+        return c;
+    }
+    let (cfg, wl) = workload(key);
+    let c: &'static CounterTrace = Box::leak(Box::new(
+        HardwareProfiler::new(NodeSpec::mi300x_node())
+            .capture(&cfg, &wl, &Counter::ALL),
+    ));
+    *cache.lock().unwrap().entry(key).or_insert(c)
+}

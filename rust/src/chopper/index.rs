@@ -1,0 +1,668 @@
+//! `TraceIndex` — a build-once / query-many columnar index over a trace.
+//!
+//! Every analysis in this crate asks one of a handful of questions: "the
+//! kernels of operation X", "what overlapped this interval", "the bubble
+//! before each compute kernel", "this rollup per (gpu, iteration)". Before
+//! this module each question re-scanned the full `Vec<TraceEvent>` (and
+//! the alignment stage deep-cloned the trace), so a 12-figure report paid
+//! for a dozen full passes per scenario. The index performs **one** pass
+//! over the events plus a few per-bucket sorts and precomputes:
+//!
+//! * per-(gpu, stream) event lanes sorted by `t_start`;
+//! * the full operation-instance partition (kernels grouped by
+//!   (gpu, iter, op, layer, stream)) in the exact deterministic order the
+//!   old `BTreeMap` grouping produced, plus a per-`OpRef` sub-partition
+//!   with duration prefix sums;
+//! * merged communication-occupancy intervals per GPU ([`CommIntervals`]);
+//! * per-GPU compute-lane launch overheads (Eqs. 1–3) and their
+//!   per-iteration / per-(phase, kind) rollups;
+//! * per-(gpu, iteration) compute spans and summed kernel durations;
+//! * optionally, the counter-derived metrics column (the alignment join of
+//!   Section III-C1) via [`TraceIndex::attach_counters`].
+//!
+//! Determinism contract (DESIGN.md §3/§7): every precomputed aggregate
+//! accumulates in the same order as the event-order scan it replaced, and
+//! every partition is sorted by the same `Ord` keys the old `BTreeMap`s
+//! used — so analyses and figure generators that consume the index are
+//! **byte-identical** to the pre-index implementations kept verbatim in
+//! `rust/benches/analysis_baseline.rs` (asserted by `tests/pipeline.rs`
+//! and `benches/analysis_hot.rs`).
+
+use crate::chopper::aggregate::{Filter, OpInstanceAgg};
+use crate::chopper::launch::{launch_overhead, LaunchOverhead};
+use crate::chopper::overlap::CommIntervals;
+use crate::counters::{CounterTrace, DerivedMetrics};
+use crate::model::ops::{OpKind, OpRef, OpType, Phase};
+use crate::sim::align_key;
+use crate::trace::event::{Stream, Trace, TraceEvent};
+use crate::util::hash::FxHashMap;
+use std::collections::BTreeMap;
+use std::ops::Range;
+
+/// Grouping key of one operation instance: (gpu, iter, op, layer, stream
+/// tag). Identical to the old `aggregate::op_instances` `BTreeMap` key, so
+/// sorting by it reproduces the old output order exactly.
+type InstKey = (u32, u32, OpRef, Option<u32>, u8);
+
+#[derive(Debug, Default)]
+struct MetricsColumn {
+    /// Parallel to `trace.events`: the derived metrics of each kernel, or
+    /// `None` when no counter record matched.
+    per_event: Vec<Option<DerivedMetrics>>,
+    unmatched: usize,
+}
+
+/// The shared analysis index. Borrows the trace — nothing is cloned.
+#[derive(Debug)]
+pub struct TraceIndex<'t> {
+    pub trace: &'t Trace,
+    /// Comm-occupancy intervals per GPU (the C3 overlap oracle).
+    pub comm: CommIntervals,
+    /// All operation instances, sorted by [`InstKey`].
+    instances: Vec<OpInstanceAgg>,
+    /// Stream tag of each instance (0 = compute, 1 = comm), parallel to
+    /// `instances`.
+    inst_stream: Vec<u8>,
+    /// Instance indices re-sorted by op (stable), i.e. by
+    /// (op, gpu, iter, layer, stream) — the per-operation partition.
+    by_op: Vec<u32>,
+    /// Contiguous range of each op inside `by_op`.
+    op_ranges: BTreeMap<OpRef, Range<usize>>,
+    /// Prefix sums of instance wall durations in `by_op` order:
+    /// `dur_prefix[i+1] - dur_prefix[i] == instances[by_op[i]].duration()`.
+    dur_prefix: Vec<f64>,
+    /// Event indices per (gpu, stream), sorted by `t_start` (stable).
+    lanes: BTreeMap<(u32, Stream), Vec<u32>>,
+    /// Per-GPU compute-lane launch overheads in dispatch (seq) order:
+    /// (event index, overhead) for every compute kernel with a
+    /// predecessor, ParamCopy excluded (Section V-D1). Keyed by gpu id —
+    /// imported traces may carry arbitrary (even huge) gpu ids, so no
+    /// dense per-id storage anywhere in the index.
+    launch: BTreeMap<u32, Vec<(usize, LaunchOverhead)>>,
+    /// (gpu, iter) → (first start, last end) over compute events.
+    iter_spans: BTreeMap<(u32, u32), (f64, f64)>,
+    /// (gpu, iter) → summed compute-kernel duration.
+    compute_ns: BTreeMap<(u32, u32), f64>,
+    /// (gpu, iter) → summed launch overhead (all iterations).
+    launch_ns: BTreeMap<(u32, u32), f64>,
+    /// (phase, gpu, iter) → summed compute duration, sampled iters only.
+    phase_dur: BTreeMap<(Phase, u32, u32), f64>,
+    /// (phase, kind) → per-(gpu, iter) duration samples, sampled only.
+    phase_kind_dur: BTreeMap<(Phase, OpKind), Vec<f64>>,
+    /// (phase, kind) → per-(gpu, iter) launch-overhead samples, sampled.
+    phase_kind_launch: BTreeMap<(Phase, OpKind), Vec<f64>>,
+    /// Comm-kernel durations per collective op, sampled iters, event order.
+    comm_durs: BTreeMap<OpType, Vec<f64>>,
+    /// kernel_id → event index; built with the metrics column (it only
+    /// serves the counter joins, so counter-less builds skip it).
+    id_idx: FxHashMap<u64, u32>,
+    /// Counter-derived metrics column (attached on demand).
+    metrics: Option<MetricsColumn>,
+}
+
+impl<'t> TraceIndex<'t> {
+    /// Build the index: one pass over the events, then per-bucket sorts.
+    pub fn build(trace: &'t Trace) -> Self {
+        let warmup = trace.meta.warmup;
+        let mut lanes: BTreeMap<(u32, Stream), Vec<u32>> = BTreeMap::new();
+        let mut inst_map: FxHashMap<InstKey, u32> = FxHashMap::default();
+        let mut instances: Vec<OpInstanceAgg> = Vec::new();
+        let mut inst_keys: Vec<InstKey> = Vec::new();
+        let mut iter_spans: BTreeMap<(u32, u32), (f64, f64)> = BTreeMap::new();
+        let mut compute_ns: BTreeMap<(u32, u32), f64> = BTreeMap::new();
+        let mut phase_dur: BTreeMap<(Phase, u32, u32), f64> = BTreeMap::new();
+        let mut pk_dur: BTreeMap<(Phase, OpKind, u32, u32), f64> = BTreeMap::new();
+        let mut comm_durs: BTreeMap<OpType, Vec<f64>> = BTreeMap::new();
+        // Compute-lane event indices per gpu, ParamCopy excluded.
+        let mut launch_seq: BTreeMap<u32, Vec<u32>> = BTreeMap::new();
+
+        for (i, e) in trace.events.iter().enumerate() {
+            lanes.entry((e.gpu, e.stream)).or_default().push(i as u32);
+
+            let stream_tag = match e.stream {
+                Stream::Compute => 0u8,
+                Stream::Comm => 1,
+            };
+            let key = (e.gpu, e.iter, e.op, e.layer, stream_tag);
+            let slot = *inst_map.entry(key).or_insert_with(|| {
+                instances.push(OpInstanceAgg {
+                    gpu: e.gpu,
+                    iter: e.iter,
+                    op: e.op,
+                    layer: e.layer,
+                    t_start: f64::INFINITY,
+                    t_end: f64::NEG_INFINITY,
+                    kernel_ns: 0.0,
+                    kernels: 0,
+                    flops: 0.0,
+                    bytes: 0.0,
+                    kernel_ids: Vec::new(),
+                });
+                inst_keys.push(key);
+                (instances.len() - 1) as u32
+            });
+            let inst = &mut instances[slot as usize];
+            inst.t_start = inst.t_start.min(e.t_start);
+            inst.t_end = inst.t_end.max(e.t_end);
+            inst.kernel_ns += e.duration();
+            inst.kernels += 1;
+            inst.flops += e.flops;
+            inst.bytes += e.bytes;
+            inst.kernel_ids.push(e.kernel_id);
+
+            match e.stream {
+                Stream::Comm => {
+                    if e.iter >= warmup {
+                        comm_durs.entry(e.op.op).or_default().push(e.duration());
+                    }
+                }
+                Stream::Compute => {
+                    let s = iter_spans
+                        .entry((e.gpu, e.iter))
+                        .or_insert((f64::INFINITY, f64::NEG_INFINITY));
+                    s.0 = s.0.min(e.t_start);
+                    s.1 = s.1.max(e.t_end);
+                    *compute_ns.entry((e.gpu, e.iter)).or_insert(0.0) +=
+                        e.duration();
+                    if e.iter >= warmup {
+                        *phase_dur
+                            .entry((e.op.phase, e.gpu, e.iter))
+                            .or_insert(0.0) += e.duration();
+                        *pk_dur
+                            .entry((e.op.phase, e.kind(), e.gpu, e.iter))
+                            .or_insert(0.0) += e.duration();
+                    }
+                    if e.op.op != OpType::ParamCopy {
+                        launch_seq.entry(e.gpu).or_default().push(i as u32);
+                    }
+                }
+            }
+        }
+
+        // Instance partition in the old BTreeMap-grouping order.
+        let mut perm: Vec<u32> = (0..instances.len() as u32).collect();
+        perm.sort_by_key(|&i| inst_keys[i as usize]);
+        let mut slots: Vec<Option<OpInstanceAgg>> =
+            instances.into_iter().map(Some).collect();
+        let mut sorted = Vec::with_capacity(slots.len());
+        let mut inst_stream = Vec::with_capacity(slots.len());
+        for &i in &perm {
+            sorted.push(slots[i as usize].take().expect("unique permutation"));
+            inst_stream.push(inst_keys[i as usize].4);
+        }
+        let instances = sorted;
+
+        // Per-op sub-partition: stable re-sort by op keeps the
+        // (gpu, iter, layer, stream) order inside each op's range.
+        let mut by_op: Vec<u32> = (0..instances.len() as u32).collect();
+        by_op.sort_by_key(|&i| instances[i as usize].op);
+        let mut op_ranges: BTreeMap<OpRef, Range<usize>> = BTreeMap::new();
+        let mut dur_prefix = Vec::with_capacity(by_op.len() + 1);
+        dur_prefix.push(0.0);
+        let mut start = 0usize;
+        for (pos, &i) in by_op.iter().enumerate() {
+            let inst = &instances[i as usize];
+            let total = dur_prefix[pos] + inst.duration();
+            dur_prefix.push(total);
+            let next_op = by_op
+                .get(pos + 1)
+                .map(|&j| instances[j as usize].op);
+            if next_op != Some(inst.op) {
+                op_ranges.insert(inst.op, start..pos + 1);
+                start = pos + 1;
+            }
+        }
+
+        // Lanes sorted by t_start (stable, so equal starts keep event
+        // order — filtering a lane then equals filter-then-stable-sort).
+        for v in lanes.values_mut() {
+            v.sort_by(|&a, &b| {
+                trace.events[a as usize]
+                    .t_start
+                    .total_cmp(&trace.events[b as usize].t_start)
+            });
+        }
+
+        // Comm occupancy from the already-sorted comm lanes.
+        let mut per_gpu: BTreeMap<u32, Vec<(f64, f64)>> = BTreeMap::new();
+        for ((gpu, stream), v) in &lanes {
+            if *stream != Stream::Comm {
+                continue;
+            }
+            per_gpu.insert(
+                *gpu,
+                v.iter()
+                    .map(|&i| {
+                        let e = &trace.events[i as usize];
+                        (e.t_start, e.t_end)
+                    })
+                    .collect(),
+            );
+        }
+        let comm = CommIntervals::from_sorted(per_gpu);
+
+        // Launch overheads per gpu, in dispatch order (Eqs. 1–3).
+        let mut launch: BTreeMap<u32, Vec<(usize, LaunchOverhead)>> =
+            BTreeMap::new();
+        for (gpu, evs) in &mut launch_seq {
+            evs.sort_by(|&a, &b| {
+                trace.events[a as usize]
+                    .seq
+                    .cmp(&trace.events[b as usize].seq)
+            });
+            let mut out = Vec::with_capacity(evs.len().saturating_sub(1));
+            for w in evs.windows(2) {
+                let prev = &trace.events[w[0] as usize];
+                let cur = &trace.events[w[1] as usize];
+                out.push((w[1] as usize, launch_overhead(cur, prev.t_end)));
+            }
+            launch.insert(*gpu, out);
+        }
+
+        // Launch rollups iterate gpu 0..num_gpus like the pre-index code
+        // (a trace with meta.num_gpus == 0 rolls up to nothing).
+        let mut launch_ns: BTreeMap<(u32, u32), f64> = BTreeMap::new();
+        let mut pk_launch: BTreeMap<(Phase, OpKind, u32, u32), f64> =
+            BTreeMap::new();
+        for gpu in 0..trace.meta.num_gpus {
+            let Some(list) = launch.get(&gpu) else {
+                continue;
+            };
+            for &(idx, o) in list {
+                let e = &trace.events[idx];
+                *launch_ns.entry((e.gpu, e.iter)).or_insert(0.0) += o.total();
+                if e.iter >= warmup {
+                    *pk_launch
+                        .entry((e.op.phase, e.kind(), e.gpu, e.iter))
+                        .or_insert(0.0) += o.total();
+                }
+            }
+        }
+
+        let mut phase_kind_dur: BTreeMap<(Phase, OpKind), Vec<f64>> =
+            BTreeMap::new();
+        for ((phase, kind, _, _), v) in pk_dur {
+            phase_kind_dur.entry((phase, kind)).or_default().push(v);
+        }
+        let mut phase_kind_launch: BTreeMap<(Phase, OpKind), Vec<f64>> =
+            BTreeMap::new();
+        for ((phase, kind, _, _), v) in pk_launch {
+            phase_kind_launch.entry((phase, kind)).or_default().push(v);
+        }
+
+        Self {
+            trace,
+            comm,
+            instances,
+            inst_stream,
+            by_op,
+            op_ranges,
+            dur_prefix,
+            lanes,
+            launch,
+            iter_spans,
+            compute_ns,
+            launch_ns,
+            phase_dur,
+            phase_kind_dur,
+            phase_kind_launch,
+            comm_durs,
+            id_idx: FxHashMap::default(),
+            metrics: None,
+        }
+    }
+
+    /// Build and immediately attach the counter-derived metrics column.
+    pub fn with_counters(trace: &'t Trace, counters: &CounterTrace) -> Self {
+        let mut idx = Self::build(trace);
+        idx.attach_counters(counters);
+        idx
+    }
+
+    // -- instance partition ------------------------------------------------
+
+    /// All operation instances, sorted by (gpu, iter, op, layer, stream).
+    pub fn all_instances(&self) -> &[OpInstanceAgg] {
+        &self.instances
+    }
+
+    /// Stream of instance `i` of [`all_instances`](Self::all_instances).
+    pub fn instance_stream(&self, i: usize) -> Stream {
+        if self.inst_stream[i] == 0 {
+            Stream::Compute
+        } else {
+            Stream::Comm
+        }
+    }
+
+    /// Instances matching `filter`, in the same order the old event-level
+    /// grouping produced. An op-constrained filter touches only that op's
+    /// sub-partition instead of scanning everything.
+    pub fn instances(&self, filter: &Filter) -> Vec<&OpInstanceAgg> {
+        let warmup = self.trace.meta.warmup;
+        let mut out = Vec::new();
+        match filter.op {
+            Some(op) => {
+                if let Some(r) = self.op_ranges.get(&op) {
+                    for &i in &self.by_op[r.clone()] {
+                        let inst = &self.instances[i as usize];
+                        if filter.accepts_instance(inst, warmup) {
+                            out.push(inst);
+                        }
+                    }
+                }
+            }
+            None => {
+                for inst in &self.instances {
+                    if filter.accepts_instance(inst, warmup) {
+                        out.push(inst);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Every distinct op present in the trace, ascending.
+    pub fn ops(&self) -> impl Iterator<Item = OpRef> + '_ {
+        self.op_ranges.keys().copied()
+    }
+
+    /// Total wall duration (ns) of every instance of `op` — O(1) via the
+    /// duration prefix sums over the per-op partition.
+    pub fn op_total_duration(&self, op: OpRef) -> f64 {
+        match self.op_ranges.get(&op) {
+            Some(r) => self.dur_prefix[r.end] - self.dur_prefix[r.start],
+            None => 0.0,
+        }
+    }
+
+    // -- lanes and launch --------------------------------------------------
+
+    /// Event indices of one (gpu, stream) lane, sorted by `t_start`.
+    pub fn lane(&self, gpu: u32, stream: Stream) -> &[u32] {
+        self.lanes
+            .get(&(gpu, stream))
+            .map(|v| v.as_slice())
+            .unwrap_or(&[])
+    }
+
+    /// Launch overheads of one GPU's compute lane in dispatch order:
+    /// (event index, overhead) per kernel with a predecessor.
+    pub fn gpu_launch(&self, gpu: u32) -> &[(usize, LaunchOverhead)] {
+        self.launch
+            .get(&gpu)
+            .map(|v| v.as_slice())
+            .unwrap_or(&[])
+    }
+
+    // -- precomputed rollups -----------------------------------------------
+
+    /// (gpu, iter) → (first start, last end) over compute events.
+    pub fn iter_spans(&self) -> &BTreeMap<(u32, u32), (f64, f64)> {
+        &self.iter_spans
+    }
+
+    /// (gpu, iter) → summed compute-kernel duration (ns).
+    pub fn compute_ns(&self) -> &BTreeMap<(u32, u32), f64> {
+        &self.compute_ns
+    }
+
+    /// (gpu, iter) → summed launch overhead (ns), all iterations.
+    pub fn launch_ns(&self) -> &BTreeMap<(u32, u32), f64> {
+        &self.launch_ns
+    }
+
+    /// (phase, gpu, iter) → summed compute duration, sampled iters only.
+    pub fn phase_dur(&self) -> &BTreeMap<(Phase, u32, u32), f64> {
+        &self.phase_dur
+    }
+
+    /// (phase, kind) → per-(gpu, iter) duration samples, sampled only.
+    pub fn phase_kind_dur(&self) -> &BTreeMap<(Phase, OpKind), Vec<f64>> {
+        &self.phase_kind_dur
+    }
+
+    /// (phase, kind) → per-(gpu, iter) launch samples, sampled only.
+    pub fn phase_kind_launch(&self) -> &BTreeMap<(Phase, OpKind), Vec<f64>> {
+        &self.phase_kind_launch
+    }
+
+    /// Sampled-iteration durations of one collective op, in event order.
+    pub fn comm_durations(&self, op: OpType) -> &[f64] {
+        self.comm_durs
+            .get(&op)
+            .map(|v| v.as_slice())
+            .unwrap_or(&[])
+    }
+
+    // -- counter metrics column --------------------------------------------
+
+    /// Join the hardware-counter trace onto the events (Section III-C1):
+    /// one column entry per event. Returns the number of kernels with no
+    /// matching counter record. The kernel-id join map is built here too —
+    /// counter-less index builds never pay for it.
+    pub fn attach_counters(&mut self, counters: &CounterTrace) -> usize {
+        let nev = self.trace.events.len();
+        let mut id_idx: FxHashMap<u64, u32> =
+            FxHashMap::with_capacity_and_hasher(nev, Default::default());
+        let mut per_event = Vec::with_capacity(nev);
+        let mut unmatched = 0;
+        for (i, e) in self.trace.events.iter().enumerate() {
+            id_idx.insert(e.kernel_id, i as u32);
+            match counters
+                .get(e.gpu, align_key(e.stream, e.seq))
+                .and_then(|v| DerivedMetrics::from_counters(v, e.duration()))
+            {
+                Some(m) => per_event.push(Some(m)),
+                None => {
+                    per_event.push(None);
+                    unmatched += 1;
+                }
+            }
+        }
+        self.id_idx = id_idx;
+        self.metrics = Some(MetricsColumn {
+            per_event,
+            unmatched,
+        });
+        unmatched
+    }
+
+    pub fn has_metrics(&self) -> bool {
+        self.metrics.is_some()
+    }
+
+    /// Kernels that had no counter record (0 when no column is attached).
+    pub fn unmatched(&self) -> usize {
+        self.metrics.as_ref().map(|m| m.unmatched).unwrap_or(0)
+    }
+
+    /// Derived metrics of the event at `event_idx`, if aligned.
+    pub fn metrics_at(&self, event_idx: usize) -> Option<&DerivedMetrics> {
+        self.metrics.as_ref()?.per_event.get(event_idx)?.as_ref()
+    }
+
+    /// Derived metrics of a kernel by its id.
+    pub fn metrics_by_id(&self, kernel_id: u64) -> Option<&DerivedMetrics> {
+        let &i = self.id_idx.get(&kernel_id)?;
+        self.metrics_at(i as usize)
+    }
+
+    /// Derived metrics of one event.
+    pub fn metrics_of(&self, e: &TraceEvent) -> Option<&DerivedMetrics> {
+        self.metrics_by_id(e.kernel_id)
+    }
+
+    /// Fraction of kernels with an aligned counter record. 1.0 for an
+    /// empty trace (nothing to align).
+    pub fn coverage(&self) -> f64 {
+        let n = self.trace.events.len();
+        if n == 0 {
+            return 1.0;
+        }
+        (n - self.unmatched()) as f64 / n as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chopper::fixtures;
+    use crate::config::FsdpVersion;
+    use std::collections::BTreeMap;
+
+    fn trace() -> &'static Trace {
+        &fixtures::runtime(2, 2, 2, 1, FsdpVersion::V1).trace
+    }
+
+    #[test]
+    fn instance_partition_matches_btreemap_grouping() {
+        let t = trace();
+        let idx = TraceIndex::build(t);
+        // Reference: the pre-index event-order BTreeMap grouping.
+        let mut map: BTreeMap<InstKey, (f64, f64, f64, u32)> = BTreeMap::new();
+        for e in &t.events {
+            let tag = match e.stream {
+                Stream::Compute => 0u8,
+                Stream::Comm => 1,
+            };
+            let k = (e.gpu, e.iter, e.op, e.layer, tag);
+            let v = map.entry(k).or_insert((
+                f64::INFINITY,
+                f64::NEG_INFINITY,
+                0.0,
+                0,
+            ));
+            v.0 = v.0.min(e.t_start);
+            v.1 = v.1.max(e.t_end);
+            v.2 += e.duration();
+            v.3 += 1;
+        }
+        assert_eq!(idx.all_instances().len(), map.len());
+        for (inst, (k, v)) in idx.all_instances().iter().zip(map.iter()) {
+            assert_eq!((inst.gpu, inst.iter, inst.op, inst.layer), (k.0, k.1, k.2, k.3));
+            assert_eq!(inst.t_start.to_bits(), v.0.to_bits());
+            assert_eq!(inst.t_end.to_bits(), v.1.to_bits());
+            assert_eq!(inst.kernel_ns.to_bits(), v.2.to_bits());
+            assert_eq!(inst.kernels, v.3);
+        }
+    }
+
+    #[test]
+    fn op_partition_equals_filtered_full_scan() {
+        let t = trace();
+        let idx = TraceIndex::build(t);
+        for op in idx.ops().collect::<Vec<_>>() {
+            let mut f = Filter::default();
+            f.op = Some(op);
+            let fast = idx.instances(&f);
+            let slow: Vec<&OpInstanceAgg> = idx
+                .all_instances()
+                .iter()
+                .filter(|i| i.op == op)
+                .collect();
+            assert_eq!(fast.len(), slow.len(), "{op}");
+            for (a, b) in fast.iter().zip(&slow) {
+                assert!(std::ptr::eq(*a, *b), "{op}: order diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn comm_intervals_match_from_trace() {
+        let t = trace();
+        let idx = TraceIndex::build(t);
+        let direct = CommIntervals::from_trace(t);
+        for gpu in 0..t.meta.num_gpus {
+            for e in &t.events {
+                let a = idx.comm.covered_ns(gpu, e.t_start, e.t_end);
+                let b = direct.covered_ns(gpu, e.t_start, e.t_end);
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn launch_lane_matches_manual_recompute() {
+        let t = trace();
+        let idx = TraceIndex::build(t);
+        for gpu in 0..t.meta.num_gpus {
+            // Pre-index algorithm: filter, stable-sort by seq, window.
+            let mut evs: Vec<(usize, &TraceEvent)> = t
+                .events
+                .iter()
+                .enumerate()
+                .filter(|(_, e)| {
+                    e.gpu == gpu
+                        && e.stream == Stream::Compute
+                        && e.op.op != OpType::ParamCopy
+                })
+                .collect();
+            evs.sort_by(|a, b| a.1.seq.cmp(&b.1.seq));
+            let manual: Vec<(usize, LaunchOverhead)> = evs
+                .windows(2)
+                .map(|w| (w[1].0, launch_overhead(w[1].1, w[0].1.t_end)))
+                .collect();
+            assert_eq!(idx.gpu_launch(gpu), manual.as_slice(), "gpu {gpu}");
+        }
+    }
+
+    #[test]
+    fn lanes_are_sorted_and_complete() {
+        let t = trace();
+        let idx = TraceIndex::build(t);
+        let mut total = 0;
+        for gpu in 0..t.meta.num_gpus {
+            for stream in [Stream::Compute, Stream::Comm] {
+                let lane = idx.lane(gpu, stream);
+                total += lane.len();
+                for w in lane.windows(2) {
+                    let a = &t.events[w[0] as usize];
+                    let b = &t.events[w[1] as usize];
+                    assert!(a.t_start <= b.t_start);
+                    assert_eq!((a.gpu, a.stream), (gpu, stream));
+                }
+            }
+        }
+        assert_eq!(total, t.events.len());
+    }
+
+    #[test]
+    fn prefix_sums_give_op_totals() {
+        let t = trace();
+        let idx = TraceIndex::build(t);
+        for op in idx.ops().collect::<Vec<_>>() {
+            let mut f = Filter::default();
+            f.op = Some(op);
+            let direct: f64 =
+                idx.instances(&f).iter().map(|i| i.duration()).sum();
+            assert!(
+                (idx.op_total_duration(op) - direct).abs() < 1e-6,
+                "{op}"
+            );
+        }
+    }
+
+    #[test]
+    fn metrics_column_joins_every_kernel() {
+        let cap = fixtures::runtime(2, 1, 1, 0, FsdpVersion::V1);
+        let counters = fixtures::counters(2, 1, 1, 0, FsdpVersion::V1);
+        let idx = TraceIndex::with_counters(&cap.trace, counters);
+        assert!(idx.has_metrics());
+        assert_eq!(idx.unmatched(), 0);
+        assert!((idx.coverage() - 1.0).abs() < 1e-12);
+        for e in &cap.trace.events {
+            assert!(idx.metrics_of(e).is_some(), "{}", e.name);
+        }
+    }
+
+    #[test]
+    fn empty_trace_builds() {
+        let t = Trace::default();
+        let idx = TraceIndex::build(&t);
+        assert!(idx.all_instances().is_empty());
+        assert_eq!(idx.coverage(), 1.0);
+        assert_eq!(idx.op_total_duration(OpRef::fwd(OpType::MlpUp)), 0.0);
+    }
+}

@@ -8,9 +8,15 @@
 //!   O_prep = max(t_l(i) − t_ke(i−1), 0)   — the CPU launched "too late";
 //!   O_call = min(t_ks(i) − t_l(i), t_ks(i) − t_ke(i−1)) — dispatch→start;
 //!   O_launch = O_prep + O_call.
+//!
+//! Per-kernel overheads are precomputed once per trace on the shared
+//! [`TraceIndex`] (per-GPU dispatch-ordered compute lanes); the rollups
+//! here iterate those lists instead of re-filtering and re-sorting the
+//! full event vector per GPU per call.
 
-use crate::model::ops::{OpKind, OpRef, OpType, Phase};
-use crate::trace::event::{Stream, Trace, TraceEvent};
+use crate::chopper::index::TraceIndex;
+use crate::model::ops::{OpKind, OpRef, Phase};
+use crate::trace::event::TraceEvent;
 use crate::util::stats;
 use std::collections::BTreeMap;
 
@@ -39,40 +45,27 @@ pub fn launch_overhead(e: &TraceEvent, prev_end: f64) -> LaunchOverhead {
 
 /// Per-kernel overheads of one GPU's compute stream, in dispatch order.
 /// The first kernel of the trace has no predecessor and is skipped.
-pub fn per_kernel_overheads(trace: &Trace, gpu: u32) -> Vec<(usize, LaunchOverhead)> {
-    // FSDPv2's serialized parameter copies are treated like communication
-    // kernels (ignored as compute): the time they occupy becomes a bubble
-    // attributed to the next real operation — exactly how the paper spots
-    // them as call overhead on f_attn_n / b_mlp_dp / b_ie (Section V-D3).
-    let mut evs: Vec<(usize, &TraceEvent)> = trace
-        .events
-        .iter()
-        .enumerate()
-        .filter(|(_, e)| {
-            e.gpu == gpu
-                && e.stream == Stream::Compute
-                && e.op.op != OpType::ParamCopy
-        })
-        .collect();
-    evs.sort_by(|a, b| a.1.seq.cmp(&b.1.seq));
-    let mut out = Vec::with_capacity(evs.len().saturating_sub(1));
-    for w in evs.windows(2) {
-        let (_, prev) = w[0];
-        let (idx, cur) = w[1];
-        out.push((idx, launch_overhead(cur, prev.t_end)));
-    }
-    out
+/// FSDPv2's serialized parameter copies are treated like communication
+/// kernels (excluded): the time they occupy becomes a bubble attributed to
+/// the next real operation — exactly how the paper spots them as call
+/// overhead on f_attn_n / b_mlp_dp / b_ie (Section V-D3).
+pub fn per_kernel_overheads<'i>(
+    idx: &'i TraceIndex,
+    gpu: u32,
+) -> &'i [(usize, LaunchOverhead)] {
+    idx.gpu_launch(gpu)
 }
 
 /// Mean prep/call overhead per operation across sampled iterations and all
 /// GPUs — Fig. 11's bars. The overhead of a kernel is attributed to the
 /// operation that kernel belongs to, so intra-op bubbles count too.
-pub fn op_launch_overheads(trace: &Trace) -> BTreeMap<OpRef, LaunchOverhead> {
+pub fn op_launch_overheads(idx: &TraceIndex) -> BTreeMap<OpRef, LaunchOverhead> {
+    let trace = idx.trace;
     let warmup = trace.meta.warmup;
     let mut acc: BTreeMap<OpRef, (Vec<f64>, Vec<f64>)> = BTreeMap::new();
     for gpu in 0..trace.meta.num_gpus {
-        for (idx, o) in per_kernel_overheads(trace, gpu) {
-            let e = &trace.events[idx];
+        for &(i, o) in per_kernel_overheads(idx, gpu) {
+            let e = &trace.events[i];
             if e.iter < warmup {
                 continue;
             }
@@ -95,48 +88,29 @@ pub fn op_launch_overheads(trace: &Trace) -> BTreeMap<OpRef, LaunchOverhead> {
 }
 
 /// Total launch overhead per (phase, kind) per (gpu, iteration) — the
-/// Fig. 4 launch-overhead row. Returns samples for median-taking.
-pub fn phase_kind_launch_samples(
-    trace: &Trace,
-) -> BTreeMap<(Phase, OpKind), Vec<f64>> {
-    let warmup = trace.meta.warmup;
-    let mut per: BTreeMap<(Phase, OpKind, u32, u32), f64> = BTreeMap::new();
-    for gpu in 0..trace.meta.num_gpus {
-        for (idx, o) in per_kernel_overheads(trace, gpu) {
-            let e = &trace.events[idx];
-            if e.iter < warmup {
-                continue;
-            }
-            *per.entry((e.op.phase, e.kind(), e.gpu, e.iter)).or_insert(0.0) +=
-                o.total();
-        }
-    }
-    let mut out: BTreeMap<(Phase, OpKind), Vec<f64>> = BTreeMap::new();
-    for ((phase, kind, _, _), v) in per {
-        out.entry((phase, kind)).or_default().push(v);
-    }
-    out
+/// Fig. 4 launch-overhead row. Samples for median-taking, precomputed by
+/// the index.
+pub fn phase_kind_launch_samples<'i>(
+    idx: &'i TraceIndex,
+) -> &'i BTreeMap<(Phase, OpKind), Vec<f64>> {
+    idx.phase_kind_launch()
 }
 
 /// Total launch overhead of one (gpu, iteration) — used by the throughput
 /// definition ("maximum duration plus launch overhead across GPUs").
-pub fn iteration_launch_overhead(trace: &Trace) -> BTreeMap<(u32, u32), f64> {
-    let mut out: BTreeMap<(u32, u32), f64> = BTreeMap::new();
-    for gpu in 0..trace.meta.num_gpus {
-        for (idx, o) in per_kernel_overheads(trace, gpu) {
-            let e = &trace.events[idx];
-            *out.entry((e.gpu, e.iter)).or_insert(0.0) += o.total();
-        }
-    }
-    out
+pub fn iteration_launch_overhead<'i>(
+    idx: &'i TraceIndex,
+) -> &'i BTreeMap<(u32, u32), f64> {
+    idx.launch_ns()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::chopper::fixtures;
     use crate::config::*;
     use crate::model::ops::OpType;
-    use crate::trace::collect::RuntimeProfiler;
+    use crate::trace::event::Stream;
 
     fn ev(seq: u64, t_l: f64, t_s: f64, t_e: f64) -> TraceEvent {
         TraceEvent {
@@ -183,23 +157,16 @@ mod tests {
         assert_eq!(o.call, 0.0);
     }
 
-    fn trace() -> Trace {
-        let mut cfg = ModelConfig::llama3_8b();
-        cfg.layers = 4;
-        let mut wl = WorkloadConfig::new(2, 4096, FsdpVersion::V1);
-        wl.iterations = 2;
-        wl.warmup = 1;
-        RuntimeProfiler::new(NodeSpec::mi300x_node())
-            .capture(&cfg, &wl)
-            .trace
+    fn idx() -> TraceIndex<'static> {
+        TraceIndex::build(&fixtures::runtime(4, 2, 2, 1, FsdpVersion::V1).trace)
     }
 
     #[test]
     fn fie_has_prep_overhead_from_pipeline_fill() {
         // Insight 5: f_ie waits for the embedding all-gather at iteration
         // start — large prep+call overhead, not a CPU bottleneck.
-        let t = trace();
-        let per_op = op_launch_overheads(&t);
+        let idx = idx();
+        let per_op = op_launch_overheads(&idx);
         let ie = per_op[&OpRef::fwd(OpType::IE)];
         let mid_gemm = per_op[&OpRef::fwd(OpType::MlpUp)];
         assert!(
@@ -212,8 +179,8 @@ mod tests {
 
     #[test]
     fn opt_step_has_large_call_overhead_v1() {
-        let t = trace();
-        let per_op = op_launch_overheads(&t);
+        let idx = idx();
+        let per_op = op_launch_overheads(&idx);
         let opt = per_op[&OpRef::new(OpType::OptStep, Phase::Optimizer)];
         assert!(opt.call > 0.0);
         let gemm = per_op[&OpRef::fwd(OpType::MlpDp)];
@@ -222,9 +189,9 @@ mod tests {
 
     #[test]
     fn overheads_are_nonnegative() {
-        let t = trace();
+        let idx = idx();
         for gpu in 0..8 {
-            for (_, o) in per_kernel_overheads(&t, gpu) {
+            for &(_, o) in per_kernel_overheads(&idx, gpu) {
                 assert!(o.prep >= 0.0 && o.call >= 0.0);
             }
         }
@@ -232,8 +199,8 @@ mod tests {
 
     #[test]
     fn fig4_launch_rollup_has_fwd_vec_entry() {
-        let t = trace();
-        let m = phase_kind_launch_samples(&t);
+        let idx = idx();
+        let m = phase_kind_launch_samples(&idx);
         let v = &m[&(Phase::Forward, OpKind::Vector)];
         assert_eq!(v.len(), 8, "8 gpus × 1 sampled iter");
         assert!(v.iter().all(|&x| x >= 0.0));
@@ -243,9 +210,9 @@ mod tests {
     fn iteration_overhead_conserves_op_sums() {
         // Sum over op-attributed overheads == sum over iterations (same
         // kernels, different group-by) for sampled iters.
-        let t = trace();
-        let warmup = t.meta.warmup;
-        let per_iter = iteration_launch_overhead(&t);
+        let idx = idx();
+        let warmup = idx.trace.meta.warmup;
+        let per_iter = iteration_launch_overhead(&idx);
         let total_iter: f64 = per_iter
             .iter()
             .filter(|((_, it), _)| *it >= warmup)
@@ -253,8 +220,8 @@ mod tests {
             .sum();
         let mut total_ops = 0.0;
         for gpu in 0..8 {
-            for (idx, o) in per_kernel_overheads(&t, gpu) {
-                if t.events[idx].iter >= warmup {
+            for &(i, o) in per_kernel_overheads(&idx, gpu) {
+                if idx.trace.events[i].iter >= warmup {
                     total_ops += o.total();
                 }
             }

@@ -2,11 +2,18 @@
 //! alignment, multi-granularity aggregation, overlap / launch-overhead /
 //! CPU-utilization / duration-breakdown analyses, throughput, and the
 //! figure generators.
+//!
+//! Every analysis consumes the shared build-once/query-many
+//! [`TraceIndex`] (DESIGN.md §7) instead of re-scanning the raw event
+//! vector.
 
 pub mod aggregate;
 pub mod align;
 pub mod breakdown;
 pub mod cpuutil;
+#[cfg(test)]
+pub mod fixtures;
+pub mod index;
 pub mod launch;
 pub mod overlap;
 pub mod report;
@@ -16,9 +23,10 @@ pub use aggregate::{op_duration_samples, op_instances, Filter, OpInstanceAgg};
 pub use align::AlignedTrace;
 pub use breakdown::{all_breakdowns, op_breakdown, OpBreakdown};
 pub use cpuutil::CpuUtilAnalysis;
+pub use index::TraceIndex;
 pub use launch::{launch_overhead, op_launch_overheads, LaunchOverhead};
 pub use overlap::{
     duration_at_overlap, overlap_samples, per_gpu_overlap_cdf,
-    summarize_op_overlap, CommIntervals, OpOverlapSummary,
+    summarize_op_overlap, CommIntervals, OpOverlapSummary, OverlapSample,
 };
 pub use throughput::{throughput, Throughput};

@@ -5,8 +5,13 @@
 //! same GPU. Variation in overlap across GPUs explains variation in
 //! duration (Insight 3); identical operations with different overlap have
 //! different durations (Observation 4).
+//!
+//! The merged comm-occupancy intervals live on the shared [`TraceIndex`]
+//! (built once per trace); the queries here borrow them instead of
+//! re-deriving the interval set per call like the pre-index code did.
 
-use crate::chopper::aggregate::{op_instances, Filter, OpInstanceAgg};
+use crate::chopper::aggregate::{Filter, OpInstanceAgg};
+use crate::chopper::index::TraceIndex;
 use crate::model::ops::OpRef;
 use crate::trace::event::{Stream, Trace};
 use crate::util::stats;
@@ -30,17 +35,27 @@ impl CommIntervals {
         }
         for v in per_gpu.values_mut() {
             v.sort_by(|a, b| a.0.total_cmp(&b.0));
+        }
+        Self::from_sorted(per_gpu)
+    }
+
+    /// Build from per-GPU interval lists already sorted by start — the
+    /// index hands its sorted comm lanes straight in, skipping the
+    /// event-scan + re-sort of [`from_trace`](Self::from_trace).
+    pub(crate) fn from_sorted(per_gpu: BTreeMap<u32, Vec<(f64, f64)>>) -> Self {
+        let mut out: BTreeMap<u32, Vec<(f64, f64)>> = BTreeMap::new();
+        for (gpu, v) in per_gpu {
             // Merge overlapping/adjacent intervals.
             let mut merged: Vec<(f64, f64)> = Vec::with_capacity(v.len());
-            for &(s, e) in v.iter() {
+            for (s, e) in v {
                 match merged.last_mut() {
                     Some(last) if s <= last.1 => last.1 = last.1.max(e),
                     _ => merged.push((s, e)),
                 }
             }
-            *v = merged;
+            out.insert(gpu, merged);
         }
-        Self { per_gpu }
+        Self { per_gpu: out }
     }
 
     /// Nanoseconds of [s, e) covered by comm activity on `gpu`.
@@ -74,21 +89,24 @@ impl CommIntervals {
     }
 }
 
-/// One (instance, overlap-ratio) observation.
+/// One (instance, overlap-ratio) observation. Borrows the instance from
+/// the index's partition — no per-sample clone.
 #[derive(Debug, Clone)]
-pub struct OverlapSample {
-    pub inst: OpInstanceAgg,
+pub struct OverlapSample<'a> {
+    pub inst: &'a OpInstanceAgg,
     pub ratio: f64,
 }
 
 /// Overlap ratio of every compute instance matching `filter`.
-pub fn overlap_samples(trace: &Trace, filter: &Filter) -> Vec<OverlapSample> {
-    let comm = CommIntervals::from_trace(trace);
-    op_instances(trace, filter)
+pub fn overlap_samples<'i>(
+    idx: &'i TraceIndex,
+    filter: &Filter,
+) -> Vec<OverlapSample<'i>> {
+    idx.instances(filter)
         .into_iter()
         .filter(|i| !i.op.op.is_comm())
         .map(|inst| {
-            let ratio = comm.ratio(inst.gpu, inst.t_start, inst.t_end);
+            let ratio = idx.comm.ratio(inst.gpu, inst.t_start, inst.t_end);
             OverlapSample { inst, ratio }
         })
         .collect()
@@ -107,10 +125,10 @@ pub struct OpOverlapSummary {
     pub correlation: Option<f64>,
 }
 
-pub fn summarize_op_overlap(trace: &Trace, op: OpRef) -> OpOverlapSummary {
+pub fn summarize_op_overlap(idx: &TraceIndex, op: OpRef) -> OpOverlapSummary {
     let mut f = Filter::sampled();
     f.op = Some(op);
-    let samples = overlap_samples(trace, &f);
+    let samples = overlap_samples(idx, &f);
     let ratios: Vec<f64> = samples.iter().map(|s| s.ratio).collect();
     let durs: Vec<f64> = samples.iter().map(|s| s.inst.duration()).collect();
     let q = |xs: &[f64]| {
@@ -134,12 +152,12 @@ pub fn summarize_op_overlap(trace: &Trace, op: OpRef) -> OpOverlapSummary {
 /// Per-GPU (overlap ratio, duration) pairs for one op — Fig. 8's CDFs.
 /// Durations are normalized to the per-GPU minimum like the paper.
 pub fn per_gpu_overlap_cdf(
-    trace: &Trace,
+    idx: &TraceIndex,
     op: OpRef,
 ) -> BTreeMap<u32, Vec<(f64, f64)>> {
     let mut f = Filter::sampled();
     f.op = Some(op);
-    let samples = overlap_samples(trace, &f);
+    let samples = overlap_samples(idx, &f);
     let mut per: BTreeMap<u32, Vec<(f64, f64)>> = BTreeMap::new();
     for s in samples {
         per.entry(s.inst.gpu)
@@ -197,25 +215,19 @@ pub fn duration_at_overlap(samples: &[(f64, f64)], target: f64) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::chopper::fixtures;
     use crate::config::*;
     use crate::model::ops::{OpType, Phase};
-    use crate::trace::collect::RuntimeProfiler;
 
-    fn trace(layers: u64) -> Trace {
-        let mut cfg = ModelConfig::llama3_8b();
-        cfg.layers = layers;
-        let mut wl = WorkloadConfig::new(2, 4096, FsdpVersion::V1);
-        wl.iterations = 2;
-        wl.warmup = 1;
-        RuntimeProfiler::new(NodeSpec::mi300x_node())
-            .capture(&cfg, &wl)
-            .trace
+    fn idx(layers: u64) -> TraceIndex<'static> {
+        TraceIndex::build(&fixtures::runtime(layers, 2, 2, 1, FsdpVersion::V1).trace)
     }
 
     #[test]
     fn interval_coverage_math() {
-        let mut c = CommIntervals::default();
-        c.per_gpu.insert(0, vec![(10.0, 20.0), (30.0, 40.0)]);
+        let mut per = BTreeMap::new();
+        per.insert(0u32, vec![(10.0, 20.0), (30.0, 40.0)]);
+        let c = CommIntervals::from_sorted(per);
         assert_eq!(c.covered_ns(0, 0.0, 50.0), 20.0);
         assert_eq!(c.covered_ns(0, 15.0, 35.0), 10.0);
         assert_eq!(c.covered_ns(0, 20.0, 30.0), 0.0);
@@ -252,16 +264,16 @@ mod tests {
 
     #[test]
     fn ratios_are_in_unit_interval() {
-        let t = trace(2);
-        for s in overlap_samples(&t, &Filter::sampled()) {
+        let idx = idx(2);
+        for s in overlap_samples(&idx, &Filter::sampled()) {
             assert!((0.0..=1.0).contains(&s.ratio), "{}", s.ratio);
         }
     }
 
     #[test]
     fn overlap_exists_and_varies() {
-        let t = trace(4);
-        let samples = overlap_samples(&t, &Filter::sampled());
+        let idx = idx(4);
+        let samples = overlap_samples(&idx, &Filter::sampled());
         let overlapped = samples.iter().filter(|s| s.ratio > 0.5).count();
         let clear = samples.iter().filter(|s| s.ratio < 0.05).count();
         assert!(overlapped > 0, "nothing overlapped");
@@ -270,8 +282,8 @@ mod tests {
 
     #[test]
     fn summary_has_correlation_for_varying_ops() {
-        let t = trace(4);
-        let s = summarize_op_overlap(&t, OpRef::bwd(OpType::MlpUp));
+        let idx = idx(4);
+        let s = summarize_op_overlap(&idx, OpRef::bwd(OpType::MlpUp));
         assert!(s.n > 0);
         assert!(s.ratio_q[0] <= s.ratio_q[4]);
         assert!(s.duration_q[0] <= s.duration_q[4]);
@@ -279,8 +291,8 @@ mod tests {
 
     #[test]
     fn fig8_cdf_normalizes_per_gpu() {
-        let t = trace(4);
-        let per = per_gpu_overlap_cdf(&t, OpRef::fwd(OpType::AttnOp));
+        let idx = idx(4);
+        let per = per_gpu_overlap_cdf(&idx, OpRef::fwd(OpType::AttnOp));
         assert_eq!(per.len(), 8);
         for v in per.values() {
             let dmin = v.iter().map(|(_, d)| *d).fold(f64::INFINITY, f64::min);
@@ -303,9 +315,9 @@ mod tests {
     fn identical_vec_ops_differ_by_overlap() {
         // Observation 4: b_attn_n vs b_mlp_n — identical computation,
         // different overlap, different duration.
-        let t = trace(8);
-        let attn = summarize_op_overlap(&t, OpRef::bwd(OpType::AttnN));
-        let mlp = summarize_op_overlap(&t, OpRef::bwd(OpType::MlpN));
+        let idx = idx(8);
+        let attn = summarize_op_overlap(&idx, OpRef::bwd(OpType::AttnN));
+        let mlp = summarize_op_overlap(&idx, OpRef::bwd(OpType::MlpN));
         // attn_n (last op of a backward layer, next to the RS/AG window)
         // sees more overlap than mlp_n.
         assert!(
@@ -318,10 +330,10 @@ mod tests {
 
     #[test]
     fn forward_phase_only_filter() {
-        let t = trace(2);
+        let idx = idx(2);
         let mut f = Filter::sampled();
         f.phase = Some(Phase::Forward);
-        let samples = overlap_samples(&t, &f);
+        let samples = overlap_samples(&idx, &f);
         assert!(samples.iter().all(|s| s.inst.op.phase == Phase::Forward));
     }
 }

@@ -5,12 +5,18 @@
 //!
 //! Generators are pure functions of profiled runs, so the benches, the CLI
 //! and the tests all drive the same code; `run_sweep` produces the paper's
-//! b×s × {v1,v2} input set at any scale.
+//! b×s × {v1,v2} input set at any scale. Every generator consumes the
+//! shared per-run [`TraceIndex`] (wrapped in [`IndexedRun`]) — the trace
+//! is scanned once per run, not once per figure — and [`render_all`] fans
+//! the independent generators out over the campaign runner with
+//! deterministic ordered collection, so a scenario's figures render in
+//! parallel yet byte-identically to a serial pass.
 
 use crate::chopper::aggregate::{op_duration_samples, phase_kind_duration_samples};
 use crate::chopper::align::AlignedTrace;
 use crate::chopper::breakdown::all_breakdowns;
 use crate::chopper::cpuutil::CpuUtilAnalysis;
+use crate::chopper::index::TraceIndex;
 use crate::chopper::launch::{op_launch_overheads, phase_kind_launch_samples};
 use crate::chopper::overlap::{per_gpu_overlap_cdf, summarize_op_overlap};
 use crate::chopper::throughput::throughput;
@@ -58,6 +64,55 @@ impl SweepRun {
     pub fn label(&self) -> String {
         self.wl.label_with_fsdp()
     }
+}
+
+/// A sweep run plus its shared analysis index (counters joined), built
+/// once and consumed by every figure generator.
+#[derive(Debug)]
+pub struct IndexedRun<'t> {
+    pub sr: &'t SweepRun,
+    pub aligned: AlignedTrace<'t>,
+}
+
+impl<'t> IndexedRun<'t> {
+    pub fn new(sr: &'t SweepRun) -> Self {
+        Self {
+            sr,
+            aligned: AlignedTrace::align(&sr.run.trace, &sr.run.counters),
+        }
+    }
+
+    pub fn idx(&self) -> &TraceIndex<'t> {
+        &self.aligned.index
+    }
+
+    pub fn wl(&self) -> &WorkloadConfig {
+        &self.sr.wl
+    }
+
+    pub fn label(&self) -> String {
+        self.sr.label()
+    }
+}
+
+/// Index every run of a sweep, fanning the (independent) index builds out
+/// over the campaign runner in deterministic order.
+pub fn index_runs(runs: &[SweepRun]) -> Vec<IndexedRun<'_>> {
+    index_runs_with(runs, crate::campaign::runner::default_jobs())
+}
+
+/// [`index_runs`] with an explicit worker count (`jobs <= 1` is fully
+/// serial — the analysis A/B bench relies on it).
+///
+/// The fan-out runs over run *indices*: the result borrows from `runs`
+/// itself (captured by the worker closure), not from the per-call `&I`
+/// argument — which `run_ordered`'s higher-ranked `Fn` bound could not
+/// express.
+pub fn index_runs_with(runs: &[SweepRun], jobs: usize) -> Vec<IndexedRun<'_>> {
+    let ids: Vec<usize> = (0..runs.len()).collect();
+    crate::campaign::runner::run_ordered(&ids, jobs, |_, &i| {
+        IndexedRun::new(&runs[i])
+    })
 }
 
 /// Profile the paper's configuration sweep (b1s4, b2s4, b4s4, b1s8, b2s8)
@@ -126,7 +181,7 @@ pub fn table2(cfg: &ModelConfig) -> Figure {
 // Fig. 4 — end-to-end breakdown
 // ---------------------------------------------------------------------------
 
-pub fn fig4(runs: &[SweepRun]) -> Figure {
+pub fn fig4(runs: &[IndexedRun]) -> Figure {
     let mut csv = String::from(
         "config,fsdp,throughput_tok_s,rel_throughput,phase,kind,median_duration_ms,median_launch_ms\n",
     );
@@ -136,19 +191,22 @@ pub fn fig4(runs: &[SweepRun]) -> Figure {
     // Baseline for the normalized row: b1s4 with FSDPv1 if present.
     let base_tp = runs
         .iter()
-        .find(|r| r.wl.label() == "b1s4" && r.wl.fsdp == FsdpVersion::V1)
+        .find(|r| r.wl().label() == "b1s4" && r.wl().fsdp == FsdpVersion::V1)
         .map(|r| {
             throughput(
-                &r.run.trace,
-                r.wl.tokens_per_iteration(r.run.trace.meta.num_gpus as u64) as f64,
+                r.idx(),
+                r.wl().tokens_per_iteration(
+                    r.sr.run.trace.meta.num_gpus as u64,
+                ) as f64,
             )
             .tokens_per_sec
         });
 
     for sr in runs {
         let tokens =
-            sr.wl.tokens_per_iteration(sr.run.trace.meta.num_gpus as u64) as f64;
-        let tp = throughput(&sr.run.trace, tokens);
+            sr.wl().tokens_per_iteration(sr.sr.run.trace.meta.num_gpus as u64)
+                as f64;
+        let tp = throughput(sr.idx(), tokens);
         let rel = base_tp.map(|b| tp.tokens_per_sec / b).unwrap_or(1.0);
         let _ = writeln!(
             ascii,
@@ -159,8 +217,8 @@ pub fn fig4(runs: &[SweepRun]) -> Figure {
             fmt::dur_ns(tp.iter_ns),
             fmt::dur_ns(tp.launch_ns),
         );
-        let durs = phase_kind_duration_samples(&sr.run.trace);
-        let launches = phase_kind_launch_samples(&sr.run.trace);
+        let durs = phase_kind_duration_samples(sr.idx());
+        let launches = phase_kind_launch_samples(sr.idx());
         let max_total: f64 = Phase::ALL
             .iter()
             .map(|ph| {
@@ -184,8 +242,8 @@ pub fn fig4(runs: &[SweepRun]) -> Figure {
                 let _ = writeln!(
                     csv,
                     "{},{},{:.0},{:.3},{},{},{:.3},{:.3}",
-                    sr.wl.label(),
-                    sr.wl.fsdp,
+                    sr.wl().label(),
+                    sr.wl().fsdp,
                     tp.tokens_per_sec,
                     rel,
                     phase,
@@ -241,7 +299,7 @@ const FIG5B_OPS: [(&str, Phase, OpType); 8] = [
     ("opt_step", Phase::Optimizer, OpType::OptStep),
 ];
 
-pub fn fig5(runs: &[SweepRun]) -> Figure {
+pub fn fig5(runs: &[IndexedRun]) -> Figure {
     let mut csv =
         String::from("panel,op,config,fsdp,min,q25,median,q75,max\n");
     let mut ascii = String::from(
@@ -258,7 +316,7 @@ pub fn fig5(runs: &[SweepRun]) -> Figure {
         for (name, phase, op) in ops {
             let opref = OpRef::new(*op, *phase);
             for sr in runs {
-                let samples = op_duration_samples(&sr.run.trace, opref);
+                let samples = op_duration_samples(sr.idx(), opref);
                 if samples.is_empty() {
                     continue;
                 }
@@ -321,16 +379,16 @@ pub fn fig5(runs: &[SweepRun]) -> Figure {
 // Fig. 6 — communication kernel durations per iteration
 // ---------------------------------------------------------------------------
 
-pub fn fig6(runs: &[SweepRun]) -> Figure {
+pub fn fig6(runs: &[IndexedRun]) -> Figure {
     let mut csv = String::from(
         "config,fsdp,op,median_ms,q25_ms,q75_ms,max_ms,iter_median_ms\n",
     );
     let mut ascii =
         String::from("Fig. 6 — per-iteration communication kernel duration\n\n");
     for sr in runs {
-        let warmup = sr.run.trace.meta.warmup;
+        let warmup = sr.sr.run.trace.meta.warmup;
         // Iteration duration (for the compute-scaling comparison).
-        let spans = crate::chopper::aggregate::iteration_spans(&sr.run.trace);
+        let spans = crate::chopper::aggregate::iteration_spans(sr.idx());
         let iter_durs: Vec<f64> = spans
             .iter()
             .filter(|((_, it), _)| *it >= warmup)
@@ -338,40 +396,31 @@ pub fn fig6(runs: &[SweepRun]) -> Figure {
             .collect();
         let iter_med = stats::median(&iter_durs);
         for op in [OpType::AllGather, OpType::ReduceScatter] {
-            let durs: Vec<f64> = sr
-                .run
-                .trace
-                .events
-                .iter()
-                .filter(|e| {
-                    e.stream == Stream::Comm && e.op.op == op && e.iter >= warmup
-                })
-                .map(|e| e.duration())
-                .collect();
+            let durs = sr.idx().comm_durations(op);
             if durs.is_empty() {
                 continue;
             }
-            let med = stats::median(&durs);
+            let med = stats::median(durs);
             let _ = writeln!(
                 ascii,
                 "{:>14} {:>3}: median {:>9} q75 {:>9} max {:>9}   (iter {:>9})",
                 sr.label(),
                 op.short(),
                 fmt::dur_ns(med),
-                fmt::dur_ns(stats::quantile(&durs, 0.75)),
-                fmt::dur_ns(stats::max(&durs)),
+                fmt::dur_ns(stats::quantile(durs, 0.75)),
+                fmt::dur_ns(stats::max(durs)),
                 fmt::dur_ns(iter_med),
             );
             let _ = writeln!(
                 csv,
                 "{},{},{},{:.4},{:.4},{:.4},{:.4},{:.4}",
-                sr.wl.label(),
-                sr.wl.fsdp,
+                sr.wl().label(),
+                sr.wl().fsdp,
                 op.short(),
                 med / 1e6,
-                stats::quantile(&durs, 0.25) / 1e6,
-                stats::quantile(&durs, 0.75) / 1e6,
-                stats::max(&durs) / 1e6,
+                stats::quantile(durs, 0.25) / 1e6,
+                stats::quantile(durs, 0.75) / 1e6,
+                stats::max(durs) / 1e6,
                 iter_med / 1e6
             );
         }
@@ -398,7 +447,7 @@ const FIG7_OPS: [(&str, Phase, OpType); 6] = [
     ("f_attn_fa", Phase::Forward, OpType::AttnFa),
 ];
 
-pub fn fig7(v1: &SweepRun, v2: &SweepRun) -> Figure {
+pub fn fig7(v1: &IndexedRun, v2: &IndexedRun) -> Figure {
     let mut csv = String::from(
         "op,fsdp,n,ratio_min,ratio_q25,ratio_med,ratio_q75,ratio_max,dur_med_ms,correlation\n",
     );
@@ -408,7 +457,7 @@ pub fn fig7(v1: &SweepRun, v2: &SweepRun) -> Figure {
     for (name, phase, op) in FIG7_OPS {
         let opref = OpRef::new(op, phase);
         for sr in [v1, v2] {
-            let s = summarize_op_overlap(&sr.run.trace, opref);
+            let s = summarize_op_overlap(sr.idx(), opref);
             let corr = s
                 .correlation
                 .map(|c| format!("{c:+.2}"))
@@ -417,7 +466,7 @@ pub fn fig7(v1: &SweepRun, v2: &SweepRun) -> Figure {
                 ascii,
                 "{:>9} {:>6}: overlap [{:.2} {:.2} {:.2} {:.2} {:.2}]  dur med {:>9}  corr {}",
                 name,
-                sr.wl.fsdp.to_string(),
+                sr.wl().fsdp.to_string(),
                 s.ratio_q[0],
                 s.ratio_q[1],
                 s.ratio_q[2],
@@ -430,7 +479,7 @@ pub fn fig7(v1: &SweepRun, v2: &SweepRun) -> Figure {
                 csv,
                 "{},{},{},{:.3},{:.3},{:.3},{:.3},{:.3},{:.4},{}",
                 name,
-                sr.wl.fsdp,
+                sr.wl().fsdp,
                 s.n,
                 s.ratio_q[0],
                 s.ratio_q[1],
@@ -455,8 +504,8 @@ pub fn fig7(v1: &SweepRun, v2: &SweepRun) -> Figure {
 // Fig. 8 — CDF of overlap vs duration per GPU (f_attn_op, b2s4)
 // ---------------------------------------------------------------------------
 
-pub fn fig8(run: &SweepRun) -> Figure {
-    let per = per_gpu_overlap_cdf(&run.run.trace, OpRef::fwd(OpType::AttnOp));
+pub fn fig8(run: &IndexedRun) -> Figure {
+    let per = per_gpu_overlap_cdf(run.idx(), OpRef::fwd(OpType::AttnOp));
     let mut csv = String::from("gpu,overlap_ratio,duration_norm\n");
     let mut series: Vec<(String, Vec<f64>)> = Vec::new();
     for (gpu, pts) in &per {
@@ -504,13 +553,13 @@ pub fn fig8(run: &SweepRun) -> Figure {
 // Fig. 9 — f_attn_fa overlap across configurations
 // ---------------------------------------------------------------------------
 
-pub fn fig9(runs: &[SweepRun]) -> Figure {
+pub fn fig9(runs: &[IndexedRun]) -> Figure {
     let mut csv =
         String::from("config,fsdp,ratio_min,q25,median,q75,max,dur_med_ms\n");
     let mut ascii =
         String::from("Fig. 9 — f_attn_fa overlap ratio vs configuration\n\n");
     for sr in runs {
-        let s = summarize_op_overlap(&sr.run.trace, OpRef::fwd(OpType::AttnFa));
+        let s = summarize_op_overlap(sr.idx(), OpRef::fwd(OpType::AttnFa));
         ascii.push_str(&ascii::quantile_row(
             &format!("{:>14}", sr.label()),
             s.ratio_q[0],
@@ -525,8 +574,8 @@ pub fn fig9(runs: &[SweepRun]) -> Figure {
         let _ = writeln!(
             csv,
             "{},{},{:.3},{:.3},{:.3},{:.3},{:.3},{:.4}",
-            sr.wl.label(),
-            sr.wl.fsdp,
+            sr.wl().label(),
+            sr.wl().fsdp,
             s.ratio_q[0],
             s.ratio_q[1],
             s.ratio_q[2],
@@ -578,7 +627,7 @@ pub fn fig10() -> Figure {
 // Fig. 11 — mean prep/call overhead for top operations
 // ---------------------------------------------------------------------------
 
-pub fn fig11(v1: &SweepRun, v2: &SweepRun) -> Figure {
+pub fn fig11(v1: &IndexedRun, v2: &IndexedRun) -> Figure {
     let mut csv = String::from("op,fsdp,prep_us,call_us\n");
     let mut ascii =
         String::from("Fig. 11 — mean preparation / call overhead, top ops\n\n");
@@ -591,8 +640,8 @@ pub fn fig11(v1: &SweepRun, v2: &SweepRun) -> Figure {
         OpRef::bwd(OpType::IE),
     ];
     for sr in [v1, v2] {
-        let per_op = op_launch_overheads(&sr.run.trace);
-        let _ = writeln!(ascii, "{}", sr.wl.fsdp);
+        let per_op = op_launch_overheads(sr.idx());
+        let _ = writeln!(ascii, "{}", sr.wl().fsdp);
         let mut rows: Vec<(String, f64, f64)> = interesting
             .iter()
             .filter_map(|op| {
@@ -614,7 +663,7 @@ pub fn fig11(v1: &SweepRun, v2: &SweepRun) -> Figure {
                 40,
                 maxv,
             ));
-            let _ = writeln!(csv, "{},{},{:.2},{:.2}", name, sr.wl.fsdp, prep, call);
+            let _ = writeln!(csv, "{},{},{:.2},{:.2}", name, sr.wl().fsdp, prep, call);
         }
         ascii.push('\n');
     }
@@ -631,25 +680,23 @@ pub fn fig11(v1: &SweepRun, v2: &SweepRun) -> Figure {
 // Fig. 12 — comm pipeline fill/empty (trace excerpt)
 // ---------------------------------------------------------------------------
 
-pub fn fig12(run: &SweepRun) -> Figure {
+pub fn fig12(run: &IndexedRun) -> Figure {
     // Render gpu 0's first sampled iteration: comm vs compute lanes around
-    // the iteration boundary.
-    let trace = &run.run.trace;
+    // the iteration boundary. The index's per-(gpu, stream) lanes are
+    // already t_start-sorted, so this is a filtered walk, not a scan+sort.
+    let idx = run.idx();
+    let trace = idx.trace;
     let warmup = trace.meta.warmup;
-    let mut comm: Vec<(f64, f64, String)> = Vec::new();
-    let mut compute: Vec<(f64, f64, String)> = Vec::new();
-    for e in &trace.events {
-        if e.gpu != 0 || e.iter != warmup {
-            continue;
-        }
-        let entry = (e.t_start, e.t_end, e.op.paper_name());
-        match e.stream {
-            Stream::Comm => comm.push(entry),
-            Stream::Compute => compute.push(entry),
-        }
-    }
-    comm.sort_by(|a, b| a.0.total_cmp(&b.0));
-    compute.sort_by(|a, b| a.0.total_cmp(&b.0));
+    let lane_entries = |stream: Stream| -> Vec<(f64, f64, String)> {
+        idx.lane(0, stream)
+            .iter()
+            .map(|&i| &trace.events[i as usize])
+            .filter(|e| e.iter == warmup)
+            .map(|e| (e.t_start, e.t_end, e.op.paper_name()))
+            .collect()
+    };
+    let comm = lane_entries(Stream::Comm);
+    let compute = lane_entries(Stream::Compute);
     let mut csv = String::from("lane,op,t_start_ms,t_end_ms\n");
     for (s, e, n) in &comm {
         let _ = writeln!(csv, "comm,{n},{:.4},{:.4}", s / 1e6, e / 1e6);
@@ -689,8 +736,8 @@ pub fn fig12(run: &SweepRun) -> Figure {
 // Fig. 13 — CPU cores
 // ---------------------------------------------------------------------------
 
-pub fn fig13(run: &SweepRun) -> Figure {
-    let a = CpuUtilAnalysis::analyze(&run.run.cpu);
+pub fn fig13(run: &IndexedRun) -> Figure {
+    let a = CpuUtilAnalysis::analyze(&run.sr.run.cpu);
     let mut csv = String::from("window_t_ms,active_cores,min_cores,smt_pairs\n");
     for w in &a.windows {
         let _ = writeln!(
@@ -725,7 +772,7 @@ pub fn fig13(run: &SweepRun) -> Figure {
         "  SMT sibling windows : {:.1}%",
         a.smt_cosched_rate() * 100.0
     );
-    let (rows, m) = a.physical_heatmap(&run.run.cpu);
+    let (rows, m) = a.physical_heatmap(&run.sr.run.cpu);
     // Downsample columns for terminal width.
     let step = (m.first().map(|r| r.len()).unwrap_or(1) / 64).max(1);
     let small: Vec<Vec<f64>> = m
@@ -754,7 +801,7 @@ pub fn fig13(run: &SweepRun) -> Figure {
 // Fig. 14 — frequency and power v1 vs v2
 // ---------------------------------------------------------------------------
 
-pub fn fig14(v1: &SweepRun, v2: &SweepRun) -> Figure {
+pub fn fig14(v1: &IndexedRun, v2: &IndexedRun) -> Figure {
     let mut csv = String::from(
         "fsdp,gpu_freq_mhz,mem_freq_mhz,power_w,freq_sigma,power_sigma\n",
     );
@@ -764,6 +811,7 @@ pub fn fig14(v1: &SweepRun, v2: &SweepRun) -> Figure {
         // Active windows only (compute in flight), like the paper's
         // during-training averages.
         let samples: Vec<_> = sr
+            .sr
             .run
             .power
             .samples
@@ -776,7 +824,7 @@ pub fn fig14(v1: &SweepRun, v2: &SweepRun) -> Figure {
         let _ = writeln!(
             ascii,
             "  {:>6}: GPU {:.0}±{:.0} MHz   MEM {:.0} MHz   power {:.0}±{:.0} W",
-            sr.wl.fsdp.to_string(),
+            sr.wl().fsdp.to_string(),
             stats::mean(&f),
             stats::std(&f),
             stats::mean(&m),
@@ -786,7 +834,7 @@ pub fn fig14(v1: &SweepRun, v2: &SweepRun) -> Figure {
         let _ = writeln!(
             csv,
             "{},{:.1},{:.1},{:.1},{:.2},{:.2}",
-            sr.wl.fsdp,
+            sr.wl().fsdp,
             stats::mean(&f),
             stats::mean(&m),
             stats::mean(&p),
@@ -795,6 +843,7 @@ pub fn fig14(v1: &SweepRun, v2: &SweepRun) -> Figure {
         );
     }
     let f1: Vec<f64> = v1
+        .sr
         .run
         .power
         .samples
@@ -803,6 +852,7 @@ pub fn fig14(v1: &SweepRun, v2: &SweepRun) -> Figure {
         .map(|s| s.freq_mhz)
         .collect();
     let f2: Vec<f64> = v2
+        .sr
         .run
         .power
         .samples
@@ -828,7 +878,7 @@ pub fn fig14(v1: &SweepRun, v2: &SweepRun) -> Figure {
 // Fig. 15 — overhead breakdown
 // ---------------------------------------------------------------------------
 
-pub fn fig15(runs: &[SweepRun], node: &NodeSpec) -> Figure {
+pub fn fig15(runs: &[IndexedRun], node: &NodeSpec) -> Figure {
     let mut csv = String::from(
         "config,fsdp,op,d_act_ms,d_thr_ms,inst,util,overlap,freq,total\n",
     );
@@ -836,8 +886,9 @@ pub fn fig15(runs: &[SweepRun], node: &NodeSpec) -> Figure {
         "Fig. 15 — overhead breakdown for GEMMs and FlashAttention\n  (multiplicative: D_act ≈ D_thr × inst × util × overlap × freq)\n\n",
     );
     for sr in runs {
-        let aligned = AlignedTrace::align(sr.run.trace.clone(), &sr.run.counters);
-        let breakdowns = all_breakdowns(&aligned, &node.gpu);
+        // The counter metrics are already joined onto the shared index —
+        // no per-figure alignment pass, no trace clone.
+        let breakdowns = all_breakdowns(&sr.aligned, &node.gpu);
         let _ = writeln!(ascii, "{}", sr.label());
         for (op, b) in &breakdowns {
             let _ = writeln!(
@@ -854,8 +905,8 @@ pub fn fig15(runs: &[SweepRun], node: &NodeSpec) -> Figure {
             let _ = writeln!(
                 csv,
                 "{},{},{},{:.4},{:.4},{:.3},{:.3},{:.3},{:.3},{:.3}",
-                sr.wl.label(),
-                sr.wl.fsdp,
+                sr.wl().label(),
+                sr.wl().fsdp,
                 op.paper_name(),
                 b.d_act / 1e6,
                 b.d_thr / 1e6,
@@ -883,6 +934,47 @@ pub const ALL_FIGURES: [&str; 13] = [
     "fig11", "fig12", "fig13", "fig14", "fig15",
 ];
 
+/// Render every figure of a sweep, fanning the generators out over the
+/// campaign runner on `jobs` workers with ordered collection — the output
+/// vector is byte-identical to a serial pass (`jobs <= 1`), in
+/// [`ALL_FIGURES`] order. The per-run indexes are built once (also in
+/// parallel) and shared by all generators.
+pub fn render_all(
+    node: &NodeSpec,
+    cfg: &ModelConfig,
+    runs: &[SweepRun],
+    jobs: usize,
+) -> Result<Vec<Figure>, String> {
+    let indexed = index_runs_with(runs, jobs);
+    let find = |label: &str| {
+        indexed
+            .iter()
+            .find(|r| r.label() == label)
+            .ok_or_else(|| format!("sweep missing {label}"))
+    };
+    let v1 = find("b2s4-FSDPv1")?;
+    let v2 = find("b2s4-FSDPv2")?;
+    let idxs = &indexed;
+    let tasks: Vec<Box<dyn Fn() -> Figure + Sync + '_>> = vec![
+        Box::new(|| table2(cfg)),
+        Box::new(|| fig4(idxs)),
+        Box::new(|| fig5(idxs)),
+        Box::new(|| fig6(idxs)),
+        Box::new(|| fig7(v1, v2)),
+        Box::new(|| fig8(v1)),
+        Box::new(|| fig9(idxs)),
+        Box::new(fig10),
+        Box::new(|| fig11(v1, v2)),
+        Box::new(|| fig12(v1)),
+        Box::new(|| fig13(v2)),
+        Box::new(|| fig14(v1, v2)),
+        Box::new(|| fig15(idxs, node)),
+    ];
+    Ok(crate::campaign::runner::run_ordered(&tasks, jobs, |_, t| {
+        t()
+    }))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -902,7 +994,10 @@ mod tests {
         (node, runs)
     }
 
-    fn by_label<'a>(runs: &'a [SweepRun], label: &str) -> &'a SweepRun {
+    fn by_label<'a, 't>(
+        runs: &'a [IndexedRun<'t>],
+        label: &str,
+    ) -> &'a IndexedRun<'t> {
         runs.iter().find(|r| r.label() == label).unwrap()
     }
 
@@ -917,22 +1012,23 @@ mod tests {
     #[test]
     fn every_figure_generates_nonempty_output() {
         let (node, runs) = small_sweep();
-        let v1 = by_label(&runs, "b2s4-FSDPv1");
-        let v2 = by_label(&runs, "b2s4-FSDPv2");
+        let indexed = index_runs(&runs);
+        let v1 = by_label(&indexed, "b2s4-FSDPv1");
+        let v2 = by_label(&indexed, "b2s4-FSDPv2");
         let figs = vec![
             table2(&ModelConfig::llama3_8b()),
-            fig4(&runs),
-            fig5(&runs),
-            fig6(&runs),
+            fig4(&indexed),
+            fig5(&indexed),
+            fig6(&indexed),
             fig7(v1, v2),
             fig8(v1),
-            fig9(&runs),
+            fig9(&indexed),
             fig10(),
             fig11(v1, v2),
             fig12(v1),
             fig13(v2),
             fig14(v1, v2),
-            fig15(&runs[..2], &node),
+            fig15(&indexed[..2], &node),
         ];
         for f in &figs {
             assert!(!f.ascii.trim().is_empty(), "{} ascii empty", f.id);
@@ -955,7 +1051,8 @@ mod tests {
     #[test]
     fn fig4_csv_has_relative_throughput_column() {
         let (_, runs) = small_sweep();
-        let f = fig4(&runs);
+        let indexed = index_runs(&runs);
+        let f = fig4(&indexed);
         let header = f.csv.lines().next().unwrap();
         assert!(header.contains("rel_throughput"));
         // b1s4-v1 row should have rel == 1.0.
@@ -971,9 +1068,19 @@ mod tests {
     #[test]
     fn fig8_svg_is_valid_xml_fragment() {
         let (_, runs) = small_sweep();
-        let f = fig8(by_label(&runs, "b2s4-FSDPv1"));
+        let indexed = index_runs(&runs);
+        let f = fig8(by_label(&indexed, "b2s4-FSDPv1"));
         let svg = f.svg.unwrap();
         assert!(svg.starts_with("<svg"));
         assert!(svg.trim_end().ends_with("</svg>"));
+    }
+
+    #[test]
+    fn render_all_produces_all_figures_in_order() {
+        let (node, runs) = small_sweep();
+        let cfg = ModelConfig::llama3_8b();
+        let figs = render_all(&node, &cfg, &runs, 1).unwrap();
+        let ids: Vec<&str> = figs.iter().map(|f| f.id).collect();
+        assert_eq!(ids, ALL_FIGURES.to_vec());
     }
 }

@@ -4,10 +4,10 @@
 //! overhead across GPUs": for each sampled iteration, every GPU's cost is
 //! its summed kernel duration plus its summed launch overhead; the
 //! iteration cost is the slowest GPU's; tokens/s is tokens-per-iteration
-//! over the median iteration cost.
+//! over the median iteration cost. Both per-(gpu, iter) rollups are
+//! precomputed by the shared [`TraceIndex`], so this is a pure map merge.
 
-use crate::chopper::launch::iteration_launch_overhead;
-use crate::trace::event::{Stream, Trace};
+use crate::chopper::index::TraceIndex;
 use crate::util::stats;
 use std::collections::BTreeMap;
 
@@ -23,24 +23,15 @@ pub struct Throughput {
     pub launch_ns: f64,
 }
 
-/// Per-(gpu, iter) summed compute-kernel duration.
-fn kernel_duration_by_gpu_iter(trace: &Trace) -> BTreeMap<(u32, u32), f64> {
-    let mut out: BTreeMap<(u32, u32), f64> = BTreeMap::new();
-    for e in trace.events.iter().filter(|e| e.stream == Stream::Compute) {
-        *out.entry((e.gpu, e.iter)).or_insert(0.0) += e.duration();
-    }
-    out
-}
-
 /// Compute throughput for a run of `tokens_per_iter` tokens (across all
 /// GPUs' micro-batches) per iteration.
-pub fn throughput(trace: &Trace, tokens_per_iter: f64) -> Throughput {
-    let durs = kernel_duration_by_gpu_iter(trace);
-    let launch = iteration_launch_overhead(trace);
-    let warmup = trace.meta.warmup;
+pub fn throughput(idx: &TraceIndex, tokens_per_iter: f64) -> Throughput {
+    let durs = idx.compute_ns();
+    let launch = idx.launch_ns();
+    let warmup = idx.trace.meta.warmup;
     // Per iteration: max across GPUs of duration + launch overhead.
     let mut per_iter: BTreeMap<u32, (f64, f64, f64)> = BTreeMap::new();
-    for (&(gpu, iter), &d) in &durs {
+    for (&(gpu, iter), &d) in durs {
         if iter < warmup {
             continue;
         }
@@ -65,26 +56,24 @@ pub fn throughput(trace: &Trace, tokens_per_iter: f64) -> Throughput {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::chopper::fixtures;
     use crate::config::*;
-    use crate::trace::collect::RuntimeProfiler;
 
-    fn run(batch: u64, seq: u64, layers: u64) -> (Trace, f64) {
-        let mut cfg = ModelConfig::llama3_8b();
-        cfg.layers = layers;
-        let mut wl = WorkloadConfig::new(batch, seq, FsdpVersion::V1);
-        wl.iterations = 2;
-        wl.warmup = 1;
-        let t = RuntimeProfiler::new(NodeSpec::mi300x_node())
-            .capture(&cfg, &wl)
-            .trace;
-        let tokens = wl.tokens_per_iteration(8) as f64;
-        (t, tokens)
+    fn run(batch: u64, layers: u64) -> (TraceIndex<'static>, f64) {
+        let cap = fixtures::runtime(layers, batch, 2, 1, FsdpVersion::V1);
+        let tokens = {
+            let mut wl = WorkloadConfig::new(batch, 4096, FsdpVersion::V1);
+            wl.iterations = 2;
+            wl.warmup = 1;
+            wl.tokens_per_iteration(8) as f64
+        };
+        (TraceIndex::build(&cap.trace), tokens)
     }
 
     #[test]
     fn throughput_is_positive_and_sane() {
-        let (t, tokens) = run(2, 4096, 4);
-        let tp = throughput(&t, tokens);
+        let (idx, tokens) = run(2, 4);
+        let tp = throughput(&idx, tokens);
         assert!(tp.tokens_per_sec > 1_000.0, "{}", tp.tokens_per_sec);
         assert!(tp.tokens_per_sec < 10_000_000.0);
         assert!(tp.iter_ns >= tp.duration_ns);
@@ -94,10 +83,10 @@ mod tests {
     #[test]
     fn batch2_beats_batch1_tokens_per_sec() {
         // Observation 1: batch one underutilizes.
-        let (t1, tok1) = run(1, 4096, 4);
-        let (t2, tok2) = run(2, 4096, 4);
-        let tp1 = throughput(&t1, tok1);
-        let tp2 = throughput(&t2, tok2);
+        let (i1, tok1) = run(1, 4);
+        let (i2, tok2) = run(2, 4);
+        let tp1 = throughput(&i1, tok1);
+        let tp2 = throughput(&i2, tok2);
         assert!(
             tp2.tokens_per_sec > tp1.tokens_per_sec * 1.1,
             "b2 {:.0} !>> b1 {:.0}",
@@ -109,10 +98,10 @@ mod tests {
     #[test]
     fn launch_share_shrinks_with_scale() {
         // Insight 6: launch overhead's share decreases with b·s.
-        let (t1, _) = run(1, 4096, 4);
-        let (t2, _) = run(4, 4096, 4);
-        let tp1 = throughput(&t1, 1.0);
-        let tp2 = throughput(&t2, 1.0);
+        let (i1, _) = run(1, 4);
+        let (i2, _) = run(4, 4);
+        let tp1 = throughput(&i1, 1.0);
+        let tp2 = throughput(&i2, 1.0);
         let share1 = tp1.launch_ns / tp1.iter_ns;
         let share2 = tp2.launch_ns / tp2.iter_ns;
         assert!(share1 > share2, "{share1} !> {share2}");

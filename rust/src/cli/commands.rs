@@ -1,7 +1,7 @@
 //! CLI subcommand implementations.
 
 use crate::campaign::{self, grid, Cache, GridSpec};
-use crate::chopper::report::{self, SweepRun};
+use crate::chopper::report;
 use crate::chopper::{CpuUtilAnalysis, Filter};
 use crate::cli::Args;
 use crate::config::{FsdpVersion, ModelConfig, NodeSpec, WorkloadConfig};
@@ -75,7 +75,8 @@ pub fn cmd_sweep(args: &mut Args) -> Result<(), String> {
         iters,
         warmup,
     );
-    let figs = all_figures(&runs, &node, &cfg)?;
+    let figs =
+        report::render_all(&node, &cfg, &runs, campaign::default_jobs())?;
     for f in &figs {
         f.save(&out).map_err(|e| e.to_string())?;
         eprintln!("wrote {}/{}.{{txt,csv}}", out.display(), f.id);
@@ -157,36 +158,6 @@ pub fn cmd_campaign(args: &mut Args) -> Result<(), String> {
     Ok(())
 }
 
-fn find<'a>(runs: &'a [SweepRun], label: &str) -> Result<&'a SweepRun, String> {
-    runs.iter()
-        .find(|r| r.label() == label)
-        .ok_or_else(|| format!("sweep missing {label}"))
-}
-
-fn all_figures(
-    runs: &[SweepRun],
-    node: &NodeSpec,
-    cfg: &ModelConfig,
-) -> Result<Vec<report::Figure>, String> {
-    let v1 = find(runs, "b2s4-FSDPv1")?;
-    let v2 = find(runs, "b2s4-FSDPv2")?;
-    Ok(vec![
-        report::table2(cfg),
-        report::fig4(runs),
-        report::fig5(runs),
-        report::fig6(runs),
-        report::fig7(v1, v2),
-        report::fig8(v1),
-        report::fig9(runs),
-        report::fig10(),
-        report::fig11(v1, v2),
-        report::fig12(v1),
-        report::fig13(v2),
-        report::fig14(v1, v2),
-        report::fig15(runs, node),
-    ])
-}
-
 pub fn cmd_figure(args: &mut Args) -> Result<(), String> {
     let id = args
         .take_positional()
@@ -222,7 +193,8 @@ pub fn cmd_figure(args: &mut Args) -> Result<(), String> {
         iters,
         warmup,
     );
-    let figs = all_figures(&runs, &node, &cfg)?;
+    let figs =
+        report::render_all(&node, &cfg, &runs, campaign::default_jobs())?;
     for f in figs {
         if id == "all" || f.id == id {
             println!("{}", f.ascii);
@@ -279,7 +251,9 @@ pub fn cmd_analyze(args: &mut Args) -> Result<(), String> {
         trace.meta.source
     );
     println!("span: {}", fmt::dur_ns(trace.span_ns()));
-    let medians = crate::chopper::aggregate::op_medians(&trace);
+    // Build the shared index once; every query below consumes it.
+    let idx = crate::chopper::TraceIndex::build(&trace);
+    let medians = crate::chopper::aggregate::op_medians(&idx);
     let mut rows: Vec<(String, f64)> = medians
         .into_iter()
         .map(|(op, d)| (op.paper_name(), d))
@@ -289,7 +263,7 @@ pub fn cmd_analyze(args: &mut Args) -> Result<(), String> {
     for (name, d) in rows.iter().take(12) {
         println!("  {:>12}  {}", name, fmt::dur_ns(*d));
     }
-    let samples = crate::chopper::overlap_samples(&trace, &Filter::sampled());
+    let samples = crate::chopper::overlap_samples(&idx, &Filter::sampled());
     if !samples.is_empty() {
         let overlapped =
             samples.iter().filter(|s| s.ratio > 0.5).count() as f64

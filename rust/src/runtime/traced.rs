@@ -248,12 +248,13 @@ mod tests {
         // The tool cannot tell sim and pjrt traces apart.
         let Some((mut rt, params, tok)) = setup() else { return };
         let traced = traced_forward(&mut rt, &params, &tok, 0).unwrap();
+        let idx = crate::chopper::TraceIndex::build(&traced.trace);
         let insts = crate::chopper::op_instances(
-            &traced.trace,
+            &idx,
             &crate::chopper::Filter::default(),
         );
         assert!(!insts.is_empty());
-        let medians = crate::chopper::aggregate::op_medians(&traced.trace);
+        let medians = crate::chopper::aggregate::op_medians(&idx);
         assert!(medians.contains_key(&OpRef::fwd(OpType::AttnFa)));
         // Chrome-trace roundtrip too.
         let json = crate::trace::chrome::to_chrome_json(&traced.trace);

@@ -165,6 +165,34 @@ fn scenario_summary_json_is_byte_stable_across_runs() {
     assert!(a.summaries[0].events > 0);
 }
 
+/// Figure rendering rides the same ordered fan-out: a parallel render of
+/// the whole figure set is byte-identical to a serial one.
+#[test]
+fn figure_rendering_parallel_matches_serial_byte_for_byte() {
+    use chopper::chopper::report::{render_all, run_sweep, ALL_FIGURES};
+    use chopper::config::ModelConfig;
+    let node = NodeSpec::mi300x_node();
+    let mut cfg = ModelConfig::llama3_8b();
+    cfg.layers = 2;
+    let runs = run_sweep(
+        &node,
+        &cfg,
+        &[FsdpVersion::V1, FsdpVersion::V2],
+        2,
+        1,
+    );
+    let serial = render_all(&node, &cfg, &runs, 1).unwrap();
+    let parallel = render_all(&node, &cfg, &runs, 4).unwrap();
+    assert_eq!(serial.len(), ALL_FIGURES.len());
+    assert_eq!(serial.len(), parallel.len());
+    for (a, b) in serial.iter().zip(&parallel) {
+        assert_eq!(a.id, b.id, "figure order diverged under parallelism");
+        assert_eq!(a.ascii, b.ascii, "{}: ASCII diverged under parallelism", a.id);
+        assert_eq!(a.csv, b.csv, "{}: CSV diverged under parallelism", a.id);
+        assert_eq!(a.svg, b.svg, "{}: SVG diverged under parallelism", a.id);
+    }
+}
+
 #[test]
 fn sweep_runner_matches_campaign_scenarios() {
     // report::run_sweep rides the same fan-out; spot-check it still

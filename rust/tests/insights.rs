@@ -5,7 +5,7 @@
 
 use chopper::chopper::{
     op_launch_overheads, overlap_samples, summarize_op_overlap, throughput,
-    CpuUtilAnalysis, Filter,
+    CpuUtilAnalysis, Filter, TraceIndex,
 };
 use chopper::config::{FsdpVersion, ModelConfig, NodeSpec, WorkloadConfig};
 use chopper::model::ops::{OpRef, OpType, Phase};
@@ -38,10 +38,28 @@ fn cached(label: &str, fsdp: FsdpVersion) -> &'static ProfiledRun {
     run
 }
 
-fn tps(label: &str, fsdp: FsdpVersion) -> f64 {
+/// Shared-index view of a cached run (built once per (label, fsdp), like
+/// the runs themselves).
+fn indexed(label: &str, fsdp: FsdpVersion) -> &'static TraceIndex<'static> {
+    static CACHE: OnceLock<Mutex<HashMap<String, &'static TraceIndex<'static>>>> =
+        OnceLock::new();
+    let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+    let key = format!("{label}-{fsdp}");
+    let mut guard = cache.lock().unwrap();
+    if let Some(idx) = guard.get(&key) {
+        return idx;
+    }
     let run = cached(label, fsdp);
+    let idx: &'static TraceIndex<'static> =
+        Box::leak(Box::new(TraceIndex::build(&run.trace)));
+    guard.insert(key, idx);
+    idx
+}
+
+fn tps(label: &str, fsdp: FsdpVersion) -> f64 {
+    let idx = indexed(label, fsdp);
     let wl = WorkloadConfig::parse_label(label, fsdp).unwrap();
-    throughput(&run.trace, wl.tokens_per_iteration(8) as f64).tokens_per_sec
+    throughput(idx, wl.tokens_per_iteration(8) as f64).tokens_per_sec
 }
 
 #[test]
@@ -61,9 +79,8 @@ fn observation2_insight1_backward_fa_anomaly() {
     // Backward FlashAttention at batch one is SLOWER than at batch two
     // despite performing fewer flops.
     let med = |label: &str| {
-        let run = cached(label, FsdpVersion::V1);
         stats::median(&chopper::chopper::op_duration_samples(
-            &run.trace,
+            indexed(label, FsdpVersion::V1),
             OpRef::bwd(OpType::AttnFa),
         ))
     };
@@ -72,9 +89,8 @@ fn observation2_insight1_backward_fa_anomaly() {
     assert!(d1 > d2, "Insight 1: b1 {d1:.0} !> b2 {d2:.0}");
     // Forward FA scales normally.
     let fmed = |label: &str| {
-        let run = cached(label, FsdpVersion::V1);
         stats::median(&chopper::chopper::op_duration_samples(
-            &run.trace,
+            indexed(label, FsdpVersion::V1),
             OpRef::fwd(OpType::AttnFa),
         ))
     };
@@ -83,14 +99,8 @@ fn observation2_insight1_backward_fa_anomaly() {
 
 #[test]
 fn observation3_insight6_launch_share_shrinks() {
-    let t_small = {
-        let run = cached("b1s4", FsdpVersion::V1);
-        throughput(&run.trace, 1.0)
-    };
-    let t_large = {
-        let run = cached("b2s8", FsdpVersion::V1);
-        throughput(&run.trace, 1.0)
-    };
+    let t_small = throughput(indexed("b1s4", FsdpVersion::V1), 1.0);
+    let t_large = throughput(indexed("b2s8", FsdpVersion::V1), 1.0);
     let share_small = t_small.launch_ns / t_small.iter_ns;
     let share_large = t_large.launch_ns / t_large.iter_ns;
     assert!(
@@ -137,9 +147,8 @@ fn insight2_median_comm_scales_with_compute() {
 fn insight3_overlap_variation_tracks_duration_variation() {
     // Per-GPU: the GPU with the least overlap on f_attn_op should not be
     // the slowest one (its kernels run clear of contention).
-    let run = cached("b2s4", FsdpVersion::V1);
     let per = chopper::chopper::per_gpu_overlap_cdf(
-        &run.trace,
+        indexed("b2s4", FsdpVersion::V1),
         OpRef::fwd(OpType::AttnOp),
     );
     assert_eq!(per.len(), 8);
@@ -153,17 +162,17 @@ fn insight3_overlap_variation_tracks_duration_variation() {
 
 #[test]
 fn observation4_identical_ops_differ_by_overlap() {
-    let run = cached("b2s4", FsdpVersion::V1);
-    let attn = summarize_op_overlap(&run.trace, OpRef::bwd(OpType::AttnN));
-    let mlp = summarize_op_overlap(&run.trace, OpRef::bwd(OpType::MlpN));
+    let idx = indexed("b2s4", FsdpVersion::V1);
+    let attn = summarize_op_overlap(idx, OpRef::bwd(OpType::AttnN));
+    let mlp = summarize_op_overlap(idx, OpRef::bwd(OpType::MlpN));
     assert!(attn.ratio_q[2] > mlp.ratio_q[2] + 0.4);
 }
 
 #[test]
 fn insight4_fa_overlap_decreases_with_scale() {
     let med = |label: &str| {
-        let run = cached(label, FsdpVersion::V1);
-        summarize_op_overlap(&run.trace, OpRef::fwd(OpType::AttnFa)).ratio_q[2]
+        summarize_op_overlap(indexed(label, FsdpVersion::V1), OpRef::fwd(OpType::AttnFa))
+            .ratio_q[2]
     };
     let small = med("b1s4");
     let large = med("b2s8");
@@ -174,7 +183,7 @@ fn insight4_fa_overlap_decreases_with_scale() {
 #[test]
 fn insight5_prep_overhead_is_pipeline_fill_not_cpu() {
     let run = cached("b2s4", FsdpVersion::V1);
-    let per_op = op_launch_overheads(&run.trace);
+    let per_op = op_launch_overheads(indexed("b2s4", FsdpVersion::V1));
     let ie = per_op[&OpRef::fwd(OpType::IE)];
     // f_ie (iteration start, waiting on the embed all-gather) dominates.
     let gemm = per_op[&OpRef::fwd(OpType::MlpUp)];
@@ -236,7 +245,7 @@ fn observation6_insight8_frequency_story() {
 fn insight8_frequency_overhead_dominates_breakdown() {
     use chopper::chopper::{op_breakdown, AlignedTrace};
     let run = cached("b2s4", FsdpVersion::V1);
-    let aligned = AlignedTrace::align(run.trace.clone(), &run.counters);
+    let aligned = AlignedTrace::align(&run.trace, &run.counters);
     let node = NodeSpec::mi300x_node();
     let b = op_breakdown(&aligned, &node.gpu, OpRef::fwd(OpType::MlpUp)).unwrap();
     assert!(b.freq > b.inst, "freq {} !> inst {}", b.freq, b.inst);
@@ -262,8 +271,8 @@ fn setup_validation_throughput_in_published_range() {
 #[test]
 fn overlap_ratios_always_valid() {
     for fsdp in [FsdpVersion::V1, FsdpVersion::V2] {
-        let run = cached("b2s4", fsdp);
-        for s in overlap_samples(&run.trace, &Filter::sampled()) {
+        let _ = cached("b2s4", fsdp);
+        for s in overlap_samples(indexed("b2s4", fsdp), &Filter::sampled()) {
             assert!((0.0..=1.0).contains(&s.ratio));
             assert!(s.inst.duration() > 0.0);
         }

@@ -1,16 +1,21 @@
 //! Full-pipeline integration test: collect → export → import → align →
 //! every figure generator → files on disk — the `chopper sweep` path end
 //! to end at reduced scale, plus the CLI surface. Also the golden
-//! output-invariance tests: the hot-path refactor (counter-based
-//! termination, interned names, fast hashing, dense host windows) must
-//! leave the engine's serialized output byte-identical — asserted against
-//! the verbatim pre-refactor engine kept in `benches/engine_baseline.rs`.
+//! output-invariance tests: the engine hot-path refactor must leave the
+//! serialized engine output byte-identical (vs the verbatim pre-refactor
+//! engine in `benches/engine_baseline.rs`), and the TraceIndex analysis
+//! refactor must leave every fig4–fig15 figure (ASCII + CSV + SVG) and
+//! `ScenarioSummary` JSON byte-identical (vs the verbatim pre-refactor
+//! analysis path in `benches/analysis_baseline.rs`).
 
 #[path = "../benches/engine_baseline.rs"]
 mod engine_baseline;
 
-use chopper::chopper::report::{self, SweepRun};
-use chopper::chopper::AlignedTrace;
+#[path = "../benches/analysis_baseline.rs"]
+mod analysis_baseline;
+
+use chopper::chopper::report::{self, IndexedRun, SweepRun};
+use chopper::chopper::{AlignedTrace, TraceIndex};
 use chopper::config::{FsdpVersion, ModelConfig, NodeSpec, WorkloadConfig};
 use chopper::sim::{run_workload, Engine, EngineParams};
 use chopper::trace::chrome;
@@ -27,21 +32,23 @@ fn small_sweep() -> (NodeSpec, Vec<SweepRun>) {
 #[test]
 fn collect_align_report_roundtrip() {
     let (node, runs) = small_sweep();
-    let v1 = runs.iter().find(|r| r.label() == "b2s4-FSDPv1").unwrap();
-    let v2 = runs.iter().find(|r| r.label() == "b2s4-FSDPv2").unwrap();
+    let indexed = report::index_runs(&runs);
+    let v1 = indexed.iter().find(|r| r.label() == "b2s4-FSDPv1").unwrap();
+    let v2 = indexed.iter().find(|r| r.label() == "b2s4-FSDPv2").unwrap();
 
     // 1. Trace export/import keeps the analysis results identical.
-    let json = chrome::to_chrome_json(&v1.run.trace);
+    let json = chrome::to_chrome_json(&v1.sr.run.trace);
     let back = chrome::from_chrome_json(&json).unwrap();
-    let med_before = chopper::chopper::aggregate::op_medians(&v1.run.trace);
-    let med_after = chopper::chopper::aggregate::op_medians(&back);
+    let back_idx = TraceIndex::build(&back);
+    let med_before = chopper::chopper::aggregate::op_medians(v1.idx());
+    let med_after = chopper::chopper::aggregate::op_medians(&back_idx);
     assert_eq!(med_before.len(), med_after.len());
     for (op, d) in &med_before {
         assert!((med_after[op] - d).abs() < 1e-2, "{op} changed by roundtrip");
     }
 
-    // 2. Alignment covers every kernel.
-    let aligned = AlignedTrace::align(v1.run.trace.clone(), &v1.run.counters);
+    // 2. Alignment covers every kernel (borrowing align: no clone).
+    let aligned = AlignedTrace::align(&v1.sr.run.trace, &v1.sr.run.counters);
     assert_eq!(aligned.unmatched, 0);
 
     // 3. Every figure generates and saves.
@@ -49,18 +56,18 @@ fn collect_align_report_roundtrip() {
     std::fs::remove_dir_all(&dir).ok();
     let figs = vec![
         report::table2(&ModelConfig::llama3_8b()),
-        report::fig4(&runs),
-        report::fig5(&runs),
-        report::fig6(&runs),
+        report::fig4(&indexed),
+        report::fig5(&indexed),
+        report::fig6(&indexed),
         report::fig7(v1, v2),
         report::fig8(v1),
-        report::fig9(&runs),
+        report::fig9(&indexed),
         report::fig10(),
         report::fig11(v1, v2),
         report::fig12(v1),
         report::fig13(v2),
         report::fig14(v1, v2),
-        report::fig15(&runs[..1], &node),
+        report::fig15(&indexed[..1], &node),
     ];
     assert_eq!(figs.len(), report::ALL_FIGURES.len());
     for f in &figs {
@@ -96,6 +103,135 @@ fn cli_figure_all_small() {
         );
     }
     std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Golden output invariance (analysis): every figure the TraceIndex
+/// pipeline produces is byte-identical — ASCII, CSV and SVG — to the
+/// verbatim pre-refactor analysis path.
+#[test]
+fn trace_index_refactor_preserves_figure_bytes() {
+    let (node, runs) = small_sweep();
+    let cfg = ModelConfig::llama3_8b();
+    let new_figs = report::render_all(&node, &cfg, &runs, 1).unwrap();
+    let old_figs = analysis_baseline::report::all_figures(&runs, &node, &cfg);
+    assert_eq!(new_figs.len(), old_figs.len());
+    for (a, b) in new_figs.iter().zip(&old_figs) {
+        assert_eq!(a.id, b.id, "figure order diverged");
+        assert_eq!(a.ascii, b.ascii, "{}: ASCII bytes changed", a.id);
+        assert_eq!(a.csv, b.csv, "{}: CSV bytes changed", a.id);
+        assert_eq!(a.svg, b.svg, "{}: SVG bytes changed", a.id);
+    }
+}
+
+/// Golden output invariance (campaign): `ScenarioSummary` JSON is
+/// byte-identical to the pre-refactor reduction.
+#[test]
+fn trace_index_refactor_preserves_summary_bytes() {
+    use chopper::campaign::{fingerprint, GridSpec};
+    use chopper::sim::run_workload_with;
+    let node = NodeSpec::mi300x_node();
+    let mut spec = GridSpec::paper(2, 2, 1);
+    spec.batches = vec![2];
+    spec.seqs = vec![4096];
+    spec.fsdp = vec![FsdpVersion::V1];
+    let scenarios = spec.expand();
+    assert_eq!(scenarios.len(), 1);
+    let sc = &scenarios[0];
+    let run = run_workload_with(&node, &sc.model, &sc.wl, sc.params.clone());
+    let fp = fingerprint(&node, sc);
+    let new = chopper::campaign::summarize(&node, sc, fp, &run);
+    let old = analysis_baseline::summarize::summarize(&node, sc, fp, &run);
+    assert_eq!(new, old, "summary fields diverged");
+    assert_eq!(
+        new.to_json_str(),
+        old.to_json_str(),
+        "ScenarioSummary JSON bytes changed across the TraceIndex refactor"
+    );
+}
+
+/// Cross-check the index-backed analyses against the pre-refactor
+/// implementations structurally (bitwise floats, same ordering).
+#[test]
+fn trace_index_queries_match_pre_refactor_analyses() {
+    use chopper::chopper::aggregate::Filter;
+    let node = NodeSpec::mi300x_node();
+    let mut cfg = ModelConfig::llama3_8b();
+    cfg.layers = 2;
+    let mut wl = WorkloadConfig::new(2, 4096, FsdpVersion::V1);
+    wl.iterations = 2;
+    wl.warmup = 1;
+    let run = run_workload(&node, &cfg, &wl);
+    let idx = TraceIndex::build(&run.trace);
+
+    // Instance partition: same order, bitwise-equal aggregates.
+    let new_insts = chopper::chopper::op_instances(&idx, &Filter::default());
+    let old_insts =
+        analysis_baseline::aggregate::op_instances(&run.trace, &Filter::default());
+    assert_eq!(new_insts.len(), old_insts.len());
+    for (a, b) in new_insts.iter().zip(&old_insts) {
+        assert_eq!((a.gpu, a.iter, a.op, a.layer), (b.gpu, b.iter, b.op, b.layer));
+        assert_eq!(a.t_start.to_bits(), b.t_start.to_bits());
+        assert_eq!(a.t_end.to_bits(), b.t_end.to_bits());
+        assert_eq!(a.kernel_ns.to_bits(), b.kernel_ns.to_bits());
+        assert_eq!(a.kernel_ids, b.kernel_ids);
+    }
+
+    // Launch overheads per gpu: identical lists.
+    for gpu in 0..run.trace.meta.num_gpus {
+        let new_l = chopper::chopper::launch::per_kernel_overheads(&idx, gpu);
+        let old_l = analysis_baseline::launch::per_kernel_overheads(&run.trace, gpu);
+        assert_eq!(new_l, old_l.as_slice(), "gpu {gpu} launch overheads");
+    }
+
+    // Throughput: bitwise-equal summary.
+    let tokens = wl.tokens_per_iteration(8) as f64;
+    let new_tp = chopper::chopper::throughput(&idx, tokens);
+    let old_tp = analysis_baseline::throughput::throughput(&run.trace, tokens);
+    assert_eq!(new_tp.iter_ns.to_bits(), old_tp.iter_ns.to_bits());
+    assert_eq!(new_tp.launch_ns.to_bits(), old_tp.launch_ns.to_bits());
+    assert_eq!(
+        new_tp.tokens_per_sec.to_bits(),
+        old_tp.tokens_per_sec.to_bits()
+    );
+
+    // Overlap summaries: bitwise-equal quantiles.
+    use chopper::model::ops::{OpRef, OpType};
+    for op in [
+        OpRef::fwd(OpType::AttnFa),
+        OpRef::bwd(OpType::MlpUp),
+        OpRef::bwd(OpType::AttnN),
+    ] {
+        let new_s = chopper::chopper::summarize_op_overlap(&idx, op);
+        let old_s = analysis_baseline::overlap::summarize_op_overlap(&run.trace, op);
+        assert_eq!(new_s.n, old_s.n, "{op}");
+        for i in 0..5 {
+            assert_eq!(new_s.ratio_q[i].to_bits(), old_s.ratio_q[i].to_bits());
+            assert_eq!(
+                new_s.duration_q[i].to_bits(),
+                old_s.duration_q[i].to_bits()
+            );
+        }
+        assert_eq!(new_s.correlation, old_s.correlation);
+    }
+
+    // Aligned breakdowns: identical op sets and factors.
+    let aligned = AlignedTrace::align(&run.trace, &run.counters);
+    let old_aligned = analysis_baseline::align::AlignedTrace::align(
+        run.trace.clone(),
+        &run.counters,
+    );
+    let new_b = chopper::chopper::all_breakdowns(&aligned, &node.gpu);
+    let old_b = analysis_baseline::breakdown::all_breakdowns(&old_aligned, &node.gpu);
+    assert_eq!(new_b.len(), old_b.len());
+    for ((op_a, a), (op_b, b)) in new_b.iter().zip(&old_b) {
+        assert_eq!(op_a, op_b);
+        assert_eq!(a.d_act.to_bits(), b.d_act.to_bits());
+        assert_eq!(a.d_thr.to_bits(), b.d_thr.to_bits());
+        assert_eq!(a.inst.to_bits(), b.inst.to_bits());
+        assert_eq!(a.util.to_bits(), b.util.to_bits());
+        assert_eq!(a.overlap.to_bits(), b.overlap.to_bits());
+        assert_eq!(a.freq.to_bits(), b.freq.to_bits());
+    }
 }
 
 /// Golden output invariance: the refactored engine and the verbatim
@@ -221,6 +357,18 @@ fn hardware_profiler_serialization_constraint() {
         .filter(|e| e.stream == chopper::trace::event::Stream::Compute)
         .any(|e| comm.ratio(e.gpu, e.t_start, e.t_end) > 0.0);
     assert!(any_overlap, "runtime profiling must capture C3 overlap");
+}
+
+#[test]
+fn indexed_run_shares_metrics_with_figures() {
+    // The per-run index carries the counter column fig15 needs — a single
+    // build serves plain analyses and breakdowns alike.
+    let (_, runs) = small_sweep();
+    let v1 = runs.iter().find(|r| r.label() == "b2s4-FSDPv1").unwrap();
+    let ir = IndexedRun::new(v1);
+    assert!(ir.idx().has_metrics());
+    assert_eq!(ir.aligned.unmatched, 0);
+    assert!((ir.idx().coverage() - 1.0).abs() < 1e-12);
 }
 
 #[test]

@@ -6,6 +6,7 @@
 use chopper::chopper::aggregate::{kernel_time_by, op_instances, Filter};
 use chopper::chopper::launch::{launch_overhead, per_kernel_overheads};
 use chopper::chopper::overlap::CommIntervals;
+use chopper::chopper::TraceIndex;
 use chopper::config::{FsdpVersion, ModelConfig, NodeSpec, WorkloadConfig};
 use chopper::fsdp::{build_program, CachingAllocator, DispatchItem};
 use chopper::model::ops::{OpRef, OpType};
@@ -120,11 +121,20 @@ fn prop_aggregation_conserves_kernel_time() {
                 "partition by {name}: {v} != {total}"
             );
         }
-        // Instance durations ≥ their kernel time; bubbles ≥ 0.
-        for inst in op_instances(&trace, &f) {
+        // Instance durations ≥ their kernel time; bubbles ≥ 0 — and the
+        // index's partition conserves kernel time against the raw-event
+        // oracle above.
+        let idx = TraceIndex::build(&trace);
+        let mut inst_total = 0.0;
+        for inst in op_instances(&idx, &f) {
             assert!(inst.duration() >= inst.kernel_ns - 1e-6);
             assert!(inst.bubble_ns() >= 0.0);
+            inst_total += inst.kernel_ns;
         }
+        assert!(
+            (inst_total - total).abs() < total * 1e-9 + 1e-6,
+            "instance partition lost kernel time: {inst_total} != {total}"
+        );
     });
 }
 
@@ -169,8 +179,9 @@ fn prop_launch_overheads_nonnegative_on_real_traces() {
     prop("launch_real", 3, |rng| {
         let (cfg, wl) = random_workload(rng);
         let trace = simulate(&cfg, &wl);
+        let idx = TraceIndex::build(&trace);
         for gpu in 0..8 {
-            for (_, o) in per_kernel_overheads(&trace, gpu) {
+            for &(_, o) in per_kernel_overheads(&idx, gpu) {
                 assert!(o.prep >= 0.0);
                 assert!(o.call >= 0.0);
             }
