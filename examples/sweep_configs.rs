@@ -4,11 +4,16 @@
 //! one worker per hardware thread, results in deterministic sweep order —
 //! and the per-run TraceIndexes are built the same way.
 //!
-//!     cargo run --release --example sweep_configs [layers] [iters]
+//! A third argument scales the sweep out to a multi-node topology: the
+//! same ten workloads run FSDP-sharded across N nodes (every collective
+//! pays the hierarchical inter-node phase), and the per-node rollup
+//! figure is printed alongside Fig. 4.
+//!
+//!     cargo run --release --example sweep_configs [layers] [iters] [nodes]
 
 use chopper::campaign::default_jobs;
 use chopper::chopper::report;
-use chopper::config::{FsdpVersion, ModelConfig, NodeSpec};
+use chopper::config::{FsdpVersion, ModelConfig, Topology};
 
 fn main() {
     let layers: u64 = std::env::args()
@@ -19,16 +24,21 @@ fn main() {
         .nth(2)
         .and_then(|s| s.parse().ok())
         .unwrap_or(8);
-    let node = NodeSpec::mi300x_node();
+    let nodes: u32 = std::env::args()
+        .nth(3)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1)
+        .max(1);
+    let topo = Topology::mi300x_cluster(nodes);
     let mut cfg = ModelConfig::llama3_8b();
     cfg.layers = layers;
     eprintln!(
-        "running the paper sweep at {layers} layers × {iters} iterations \
-         (10 runs, {} workers)…",
+        "running the paper sweep at {layers} layers × {iters} iterations on \
+         {nodes} node(s) (10 runs, {} workers)…",
         default_jobs()
     );
-    let runs = report::run_sweep(
-        &node,
+    let runs = report::run_sweep_topo(
+        &topo,
         &cfg,
         &[FsdpVersion::V1, FsdpVersion::V2],
         iters,
@@ -39,4 +49,7 @@ fn main() {
     println!("{}", fig.ascii);
     // Fig. 6 rides on the same runs (and the same indexes).
     println!("{}", report::fig6(&indexed).ascii);
+    if nodes > 1 {
+        println!("{}", report::node_rollup(&indexed).ascii);
+    }
 }

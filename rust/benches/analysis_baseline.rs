@@ -1367,6 +1367,12 @@ pub mod summarize {
             fingerprint: fp,
             label: sc.wl.label(),
             fsdp: sc.wl.fsdp.to_string(),
+            // Mechanical port for the post-topology ScenarioSummary: the
+            // baseline only ever summarizes the degenerate single-node
+            // FSDP pipeline, where these fields are constants.
+            sharding: sc.wl.sharding.to_string(),
+            num_nodes: 1,
+            node_iter_ms: Vec::new(),
             layers: sc.model.layers,
             batch: sc.wl.batch,
             seq: sc.wl.seq,

@@ -43,6 +43,8 @@ fn main() {
     let samples: u32 = env_or("CHOPPER_BENCH_SAMPLES", 3);
 
     let node = NodeSpec::mi300x_node();
+    // Topology-tag the trajectory fingerprint (see benchkit::note_topology).
+    chopper::benchkit::note_topology(1, node.num_gpus);
     let mut cfg = ModelConfig::llama3_8b();
     cfg.layers = layers;
     eprintln!(

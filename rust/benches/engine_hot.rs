@@ -31,6 +31,9 @@ fn main() {
     let samples: u32 = env_or("CHOPPER_BENCH_SAMPLES", 5);
 
     let node = NodeSpec::mi300x_node();
+    // Fold the simulated topology into the trajectory fingerprint so a
+    // future multi-node A/B never dedup-collides with these points.
+    chopper::benchkit::note_topology(1, node.num_gpus);
     let mut cfg = ModelConfig::llama3_8b();
     cfg.layers = layers;
     let mut wl = WorkloadConfig::parse_label("b2s4", FsdpVersion::V1).expect("label");

@@ -131,14 +131,31 @@ pub fn trajectory_path(target: &str) -> PathBuf {
     PathBuf::from(format!("BENCH_{target}.json"))
 }
 
+/// Process-global topology tag for [`run_fingerprint`]. Empty until a
+/// bench declares its topology via [`note_topology`].
+fn topology_tag() -> &'static Mutex<String> {
+    static T: OnceLock<Mutex<String>> = OnceLock::new();
+    T.get_or_init(|| Mutex::new(String::new()))
+}
+
+/// Declare the simulated topology a bench target runs against. The tag
+/// ("topoN2x8") is folded into [`run_fingerprint`] — both hashed and
+/// appended visibly — so trajectory points measured on different
+/// topologies never dedup-collide even at identical code + `CHOPPER_*`
+/// scale. Call before [`emit_collected`].
+pub fn note_topology(num_nodes: u32, gpus_per_node: u32) {
+    *topology_tag().lock().unwrap() = format!("topoN{num_nodes}x{gpus_per_node}");
+}
+
 /// Best-effort code+config fingerprint of this bench invocation:
 /// `git describe --always --dirty` plus a hash of every `CHOPPER_*`
-/// environment knob (bench scale is set through those). A dirty tree also
+/// environment knob (bench scale is set through those) and the declared
+/// simulation topology ([`note_topology`]). A dirty tree also
 /// hashes the uncommitted diff, so two different uncommitted states of
 /// the same commit get different fingerprints. Re-running the same code
 /// at the same scale reproduces the fingerprint, so the trajectory
-/// replaces the stale entry instead of growing duplicates; any code or
-/// scale change appends a new point.
+/// replaces the stale entry instead of growing duplicates; any code,
+/// scale, or topology change appends a new point.
 pub fn run_fingerprint() -> String {
     let run_git = |args: &[&str]| {
         std::process::Command::new("git")
@@ -173,7 +190,13 @@ pub fn run_fingerprint() -> String {
         git.push_str("-dirty");
         h.write(&diff);
     }
-    format!("{git}-{:08x}", h.finish() as u32)
+    let topo = topology_tag().lock().unwrap().clone();
+    if topo.is_empty() {
+        format!("{git}-{:08x}", h.finish() as u32)
+    } else {
+        h.write(topo.as_bytes());
+        format!("{git}-{:08x}-{topo}", h.finish() as u32)
+    }
 }
 
 /// Append one invocation's results (plus optional derived scalar metrics,
@@ -375,11 +398,19 @@ mod tests {
     }
 
     #[test]
-    fn run_fingerprint_is_stable_within_process() {
+    fn run_fingerprint_is_stable_and_topology_aware() {
+        // One test covers both properties: the topology tag is process-
+        // global state, so splitting these into parallel tests would race.
         let a = run_fingerprint();
         let b = run_fingerprint();
         assert_eq!(a, b);
         assert!(!a.is_empty());
+        note_topology(2, 8);
+        let c = run_fingerprint();
+        assert!(c.ends_with("-topoN2x8"), "{c}");
+        assert_ne!(a, c, "topology must change the fingerprint");
+        topology_tag().lock().unwrap().clear();
+        assert_eq!(run_fingerprint(), a);
     }
 
     #[test]

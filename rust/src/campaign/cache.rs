@@ -19,18 +19,23 @@ use std::path::{Path, PathBuf};
 /// invalidates every existing cache entry. (The crate version is also
 /// folded into fingerprints, so released engine changes invalidate
 /// automatically; this constant covers same-version development.)
-pub const SCHEMA_VERSION: u32 = 1;
+///
+/// v2: scenarios carry a topology (node count + NIC), workloads carry a
+/// sharding strategy, and summaries grew per-node rollup fields.
+pub const SCHEMA_VERSION: u32 = 2;
 
 pub use crate::util::prng::fnv1a;
 
-/// Content fingerprint of one scenario on one node. Hashes the crate
-/// version, schema version, and the full `Debug` renderings of the node /
-/// model / workload / engine-parameter state, so any new field is picked
-/// up automatically.
+/// Content fingerprint of one scenario on one per-node hardware spec.
+/// Hashes the crate version, schema version, and the full `Debug`
+/// renderings of the node / topology / model / workload /
+/// engine-parameter state, so any new field is picked up automatically.
 pub fn fingerprint(node: &NodeSpec, sc: &Scenario) -> u64 {
     let canon = format!(
-        "chopper-{}-campaign-v{SCHEMA_VERSION}|{node:?}|{:?}|{:?}|{:?}",
+        "chopper-{}-campaign-v{SCHEMA_VERSION}|{node:?}|N{}|{:?}|{:?}|{:?}|{:?}",
         env!("CARGO_PKG_VERSION"),
+        sc.num_nodes,
+        sc.nic,
         sc.model,
         sc.wl,
         sc.params
@@ -125,6 +130,16 @@ mod tests {
         assert_ne!(base, fingerprint(&node, &tweaked));
         let mut tweaked = scs[0].clone();
         tweaked.wl.iterations += 1;
+        assert_ne!(base, fingerprint(&node, &tweaked));
+        // Topology inputs fingerprint too.
+        let mut tweaked = scs[0].clone();
+        tweaked.num_nodes = 2;
+        assert_ne!(base, fingerprint(&node, &tweaked));
+        let mut tweaked = scs[0].clone();
+        tweaked.nic.nic_bw /= 2.0;
+        assert_ne!(base, fingerprint(&node, &tweaked));
+        let mut tweaked = scs[0].clone();
+        tweaked.wl.sharding = crate::config::Sharding::Hsdp;
         assert_ne!(base, fingerprint(&node, &tweaked));
     }
 

@@ -17,15 +17,24 @@ pub fn campaign_table(summaries: &[ScenarioSummary]) -> Figure {
         .map(|s| s.tokens_per_sec)
         .unwrap_or(1.0)
         .max(1e-9);
+    // Topology columns appear only when some scenario is multi-node /
+    // HSDP, so classic campaigns render byte-identically.
+    let multi = summaries
+        .iter()
+        .any(|s| s.num_nodes > 1 || s.sharding != "FSDP");
     let mut rows: Vec<Vec<String>> = Vec::with_capacity(summaries.len());
     let mut csv = String::from(
         "scenario,label,fsdp,layers,batch,seq,tokens_per_sec,rel_throughput,\
-         iter_ms,launch_ms,launch_pct,freq_mhz,freq_loss_pct,power_w,overlap_fa\n",
+         iter_ms,launch_ms,launch_pct,freq_mhz,freq_loss_pct,power_w,overlap_fa",
     );
+    if multi {
+        csv.push_str(",sharding,num_nodes");
+    }
+    csv.push('\n');
     for s in summaries {
         let rel = s.tokens_per_sec / base_tp;
         let launch_pct = 100.0 * s.launch_ms / s.iter_ms.max(1e-9);
-        rows.push(vec![
+        let mut row = vec![
             s.name.clone(),
             format!("{:.0}", s.tokens_per_sec),
             format!("{rel:.2}x"),
@@ -35,8 +44,12 @@ pub fn campaign_table(summaries: &[ScenarioSummary]) -> Figure {
             format!("{:.1}%", 100.0 * s.freq_loss),
             format!("{:.0}", s.power_w),
             format!("{:.2}", s.overlap_fa),
-        ]);
-        let _ = writeln!(
+        ];
+        if multi {
+            row.push(format!("{}x{}", s.sharding, s.num_nodes));
+        }
+        rows.push(row);
+        let _ = write!(
             csv,
             "{},{},{},{},{},{},{:.2},{:.4},{:.4},{:.4},{:.2},{:.1},{:.2},{:.1},{:.4}",
             s.name,
@@ -55,20 +68,77 @@ pub fn campaign_table(summaries: &[ScenarioSummary]) -> Figure {
             s.power_w,
             s.overlap_fa
         );
+        if multi {
+            let _ = write!(csv, ",{},{}", s.sharding, s.num_nodes);
+        }
+        csv.push('\n');
     }
     let mut out = String::from(
         "Campaign — cross-scenario comparison (relative to first scenario)\n\n",
     );
-    out.push_str(&ascii::table(
-        &[
-            "scenario", "tok/s", "rel", "iter ms", "launch", "MHz",
-            "DVFS loss", "W", "ovl(fa)",
-        ],
-        &rows,
-    ));
+    let mut headers = vec![
+        "scenario", "tok/s", "rel", "iter ms", "launch", "MHz", "DVFS loss",
+        "W", "ovl(fa)",
+    ];
+    if multi {
+        headers.push("topo");
+    }
+    out.push_str(&ascii::table(&headers, &rows));
     Figure {
         id: "campaign",
         title: "Campaign — cross-scenario comparison".into(),
+        ascii: out,
+        csv,
+        svg: None,
+    }
+}
+
+/// Node-grouped comparison: one row per (scenario, node) with the node's
+/// median iteration span and its skew against the scenario's fastest
+/// node — the cross-scenario view of the per-node figure rollups. Only
+/// meaningful on campaigns with multi-node scenarios; single-node rows
+/// report their scenario-wide iteration median as node 0.
+pub fn campaign_by_nodes(summaries: &[ScenarioSummary]) -> Figure {
+    let mut csv =
+        String::from("scenario,sharding,num_nodes,node,iter_ms,skew_pct\n");
+    let mut out = String::from(
+        "Campaign — per-node iteration medians (skew vs fastest node)\n\n",
+    );
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    for s in summaries {
+        let per_node: Vec<f64> = if s.node_iter_ms.is_empty() {
+            vec![s.iter_ms]
+        } else {
+            s.node_iter_ms.clone()
+        };
+        let fastest = per_node
+            .iter()
+            .cloned()
+            .fold(f64::INFINITY, f64::min)
+            .max(1e-9);
+        for (n, &ms) in per_node.iter().enumerate() {
+            let skew = 100.0 * (ms / fastest - 1.0);
+            rows.push(vec![
+                s.name.clone(),
+                format!("{}x{}", s.sharding, s.num_nodes),
+                format!("node{n}"),
+                format!("{ms:.2}"),
+                format!("{skew:+.1}%"),
+            ]);
+            let _ = writeln!(
+                csv,
+                "{},{},{},{},{:.4},{:.2}",
+                s.name, s.sharding, s.num_nodes, n, ms, skew
+            );
+        }
+    }
+    out.push_str(&ascii::table(
+        &["scenario", "topo", "node", "iter ms", "skew"],
+        &rows,
+    ));
+    Figure {
+        id: "campaign_nodes",
+        title: "Campaign — per-node iteration medians".into(),
         ascii: out,
         csv,
         svg: None,
@@ -142,6 +212,9 @@ mod tests {
             fingerprint: 1,
             label: "b1s4".into(),
             fsdp: "FSDPv1".into(),
+            sharding: "FSDP".into(),
+            num_nodes: 1,
+            node_iter_ms: Vec::new(),
             layers: 2,
             batch: 1,
             seq: 4096,
@@ -179,6 +252,27 @@ mod tests {
             assert!(!f.ascii.trim().is_empty(), "{} ascii empty", f.id);
             assert!(f.csv.lines().count() >= 3, "{} csv short", f.id);
         }
+    }
+
+    #[test]
+    fn topology_columns_only_when_multi_node() {
+        let flat = campaign_table(&[fake("a", 1000.0)]);
+        assert!(!flat.csv.contains("num_nodes"));
+        assert!(!flat.ascii.contains("topo"));
+        let mut h = fake("b-hsdp", 1500.0);
+        h.sharding = "HSDP".into();
+        h.num_nodes = 2;
+        h.node_iter_ms = vec![9.5, 10.5];
+        let multi = campaign_table(&[fake("a", 1000.0), h.clone()]);
+        assert!(multi.csv.lines().next().unwrap().contains("num_nodes"));
+        assert!(multi.ascii.contains("HSDPx2"));
+
+        let nodes = campaign_by_nodes(&[fake("a", 1000.0), h]);
+        // One row for the flat scenario, two for the 2-node one.
+        assert_eq!(nodes.csv.lines().count(), 1 + 1 + 2);
+        assert!(nodes.ascii.contains("node1"));
+        // Slow node skews positive against the fastest.
+        assert!(nodes.csv.contains("10.53"), "{}", nodes.csv);
     }
 
     #[test]

@@ -2,17 +2,24 @@
 //! workload configuration × engine-parameter ablations, expanded into
 //! named, seeded scenarios in a deterministic order.
 
-use crate::config::{FsdpVersion, ModelConfig, WorkloadConfig};
+use crate::config::{FsdpVersion, ModelConfig, NicSpec, Sharding, WorkloadConfig};
 use crate::sim::EngineParams;
 
 /// One fully specified simulation scenario — everything the engine needs,
 /// plus a stable human-readable name that doubles as the cache key prefix.
+/// The sharding strategy lives in `wl.sharding`; the topology shape is the
+/// node count + NIC here, composed with the campaign's per-node hardware
+/// by `run_campaign`.
 #[derive(Debug, Clone)]
 pub struct Scenario {
     pub name: String,
     pub model: ModelConfig,
     pub wl: WorkloadConfig,
     pub params: EngineParams,
+    /// Nodes in the scenario's topology (1 = the classic single node).
+    pub num_nodes: u32,
+    /// Inter-node NIC of the scenario's topology.
+    pub nic: NicSpec,
 }
 
 /// An [`EngineParams`] knob a grid can ablate (DESIGN.md §5 mechanisms).
@@ -102,6 +109,15 @@ pub struct GridSpec {
     /// Sequence lengths in tokens.
     pub seqs: Vec<u64>,
     pub fsdp: Vec<FsdpVersion>,
+    /// Sharding-strategy axis (default `[Fsdp]`; HSDP scenarios get a
+    /// `-HSDP` name tag).
+    pub shardings: Vec<Sharding>,
+    /// Node-count axis (default `[1]`; multi-node scenarios get a `-N<n>`
+    /// name tag).
+    pub nodes: Vec<u32>,
+    /// NIC-bandwidth axis in GB/s per direction per GPU. Empty = the
+    /// default NIC with no name tag; explicit values get `-nic<gbs>`.
+    pub nic_gbs: Vec<f64>,
     pub iterations: u32,
     pub warmup: u32,
     /// Base seed; each scenario derives its own seed from this and its name.
@@ -122,6 +138,9 @@ impl GridSpec {
             batches: vec![1, 2, 4],
             seqs: vec![4096, 8192],
             fsdp: vec![FsdpVersion::V1, FsdpVersion::V2],
+            shardings: vec![Sharding::Fsdp],
+            nodes: vec![1],
+            nic_gbs: Vec::new(),
             iterations,
             warmup,
             seed: 0xC0FFEE,
@@ -134,7 +153,10 @@ impl GridSpec {
         let mut n = self.layers.len()
             * self.batches.len()
             * self.seqs.len()
-            * self.fsdp.len();
+            * self.fsdp.len()
+            * self.shardings.len()
+            * self.nodes.len()
+            * self.nic_gbs.len().max(1);
         for (_, vals) in &self.ablations {
             n *= vals.len().max(1);
         }
@@ -146,14 +168,31 @@ impl GridSpec {
     }
 
     /// Expand the cartesian product into named scenarios, deterministic in
-    /// both order and content.
+    /// both order and content. Topology axes (sharding, nodes, NIC) tag
+    /// the scenario name only when non-default, so default grids keep
+    /// their pre-topology names (and therefore their derived seeds and
+    /// cache keys).
     pub fn expand(&self) -> Vec<Scenario> {
         let mut out = Vec::with_capacity(self.len());
+        let nics: Vec<Option<f64>> = if self.nic_gbs.is_empty() {
+            vec![None]
+        } else {
+            self.nic_gbs.iter().map(|&g| Some(g)).collect()
+        };
         for &layers in &self.layers {
             for &batch in &self.batches {
                 for &seq in &self.seqs {
                     for &fsdp in &self.fsdp {
-                        self.expand_ablations(layers, batch, seq, fsdp, &mut out);
+                        for &sharding in &self.shardings {
+                            for &nodes in &self.nodes {
+                                for &nic in &nics {
+                                    self.expand_ablations(
+                                        layers, batch, seq, fsdp, sharding,
+                                        nodes, nic, &mut out,
+                                    );
+                                }
+                            }
+                        }
                     }
                 }
             }
@@ -161,12 +200,16 @@ impl GridSpec {
         out
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn expand_ablations(
         &self,
         layers: u64,
         batch: u64,
         seq: u64,
         fsdp: FsdpVersion,
+        sharding: Sharding,
+        nodes: u32,
+        nic_gbs: Option<f64>,
         out: &mut Vec<Scenario>,
     ) {
         // Odometer over the ablation axes (empty product = one scenario).
@@ -182,6 +225,18 @@ impl GridSpec {
             model.layers = layers;
             let mut params = self.base_params.clone();
             let mut name = format!("L{layers}-b{batch}s{}-{fsdp}", seq / 1024);
+            if sharding != Sharding::Fsdp {
+                name.push_str(&format!("-{sharding}"));
+            }
+            if nodes != 1 {
+                name.push_str(&format!("-N{nodes}"));
+            }
+            let mut nic = NicSpec::default();
+            if let Some(gbs) = nic_gbs {
+                nic.nic_bw = gbs * 1e9;
+                let tag = format!("{gbs}").replace('.', "_");
+                name.push_str(&format!("-nic{tag}"));
+            }
             for (pos, (knob, vals)) in axes.iter().enumerate() {
                 let v = vals[idx[pos]];
                 knob.apply(&mut params, v);
@@ -191,6 +246,7 @@ impl GridSpec {
                 name.push_str(&format!("-{}{}", knob.name(), tag));
             }
             let mut wl = WorkloadConfig::new(batch, seq, fsdp);
+            wl.sharding = sharding;
             wl.iterations = self.iterations;
             wl.warmup = self.warmup;
             // Per-scenario seed: stable under grid reordering because it
@@ -201,6 +257,8 @@ impl GridSpec {
                 model,
                 wl,
                 params,
+                num_nodes: nodes.max(1),
+                nic,
             });
             // Advance the odometer; done when it wraps.
             let mut pos = axes.len();
@@ -253,6 +311,27 @@ pub fn parse_list_fsdp(s: &str) -> Result<Vec<FsdpVersion>, String> {
             other => Err(format!("bad FSDP version `{other}` (use v1/v2)")),
         })
         .collect()
+}
+
+/// Parse a comma-separated sharding-strategy list ("fsdp,hsdp").
+pub fn parse_list_sharding(s: &str) -> Result<Vec<Sharding>, String> {
+    s.split(',')
+        .filter(|t| !t.trim().is_empty())
+        .map(|t| {
+            Sharding::parse(t.trim())
+                .ok_or_else(|| format!("bad sharding `{t}` (use fsdp/hsdp)"))
+        })
+        .collect()
+}
+
+/// Parse a comma-separated node-count list ("1,2,4"), rejecting zero and
+/// values that would not survive the u32 topology representation.
+pub fn parse_list_nodes(s: &str) -> Result<Vec<u32>, String> {
+    let v = parse_list_u64(s)?;
+    if let Some(&bad) = v.iter().find(|&&n| n == 0 || n > u32::MAX as u64) {
+        return Err(format!("bad node count {bad} in list `{s}`"));
+    }
+    Ok(v.into_iter().map(|n| n as u32).collect())
 }
 
 /// Parse an ablation spec: `knob=v1,v2[;knob2=v3,v4]`.
@@ -318,6 +397,68 @@ mod tests {
         }
         assert_eq!(scs[0].params.dvfs_window_ns, 5e5);
         assert_eq!(scs[1].params.dvfs_window_ns, 1e6);
+    }
+
+    #[test]
+    fn default_topology_axes_keep_legacy_names_and_seeds() {
+        // The topology axes must be invisible on default grids: same
+        // names (hence same derived seeds and cache keys) as before.
+        let scs = GridSpec::paper(2, 2, 1).expand();
+        assert_eq!(scs.len(), 12);
+        for sc in &scs {
+            assert!(!sc.name.contains("-N"), "{}", sc.name);
+            assert!(!sc.name.contains("HSDP"), "{}", sc.name);
+            assert!(!sc.name.contains("nic"), "{}", sc.name);
+            assert_eq!(sc.num_nodes, 1);
+            assert_eq!(sc.wl.sharding, crate::config::Sharding::Fsdp);
+        }
+        assert!(scs.iter().any(|s| s.name == "L2-b1s4-FSDPv1"));
+    }
+
+    #[test]
+    fn topology_axes_expand_and_tag_names() {
+        use crate::config::Sharding;
+        let mut g = GridSpec::paper(2, 2, 1);
+        g.batches = vec![1];
+        g.seqs = vec![4096];
+        g.fsdp = vec![FsdpVersion::V1];
+        g.shardings = vec![Sharding::Fsdp, Sharding::Hsdp];
+        g.nodes = vec![1, 2];
+        g.nic_gbs = vec![50.0, 12.5];
+        let scs = g.expand();
+        assert_eq!(scs.len(), g.len());
+        assert_eq!(scs.len(), 2 * 2 * 2);
+        assert!(scs.iter().any(|s| s.name == "L2-b1s4-FSDPv1-nic50"));
+        assert!(scs
+            .iter()
+            .any(|s| s.name == "L2-b1s4-FSDPv1-HSDP-N2-nic12_5"));
+        let hsdp2 = scs
+            .iter()
+            .find(|s| s.name == "L2-b1s4-FSDPv1-HSDP-N2-nic12_5")
+            .unwrap();
+        assert_eq!(hsdp2.num_nodes, 2);
+        assert_eq!(hsdp2.wl.sharding, Sharding::Hsdp);
+        assert_eq!(hsdp2.nic.nic_bw, 12.5e9);
+        // Names are unique across the topology product.
+        let mut names: Vec<&str> = scs.iter().map(|s| s.name.as_str()).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), scs.len());
+    }
+
+    #[test]
+    fn topology_list_parsers() {
+        use crate::config::Sharding;
+        assert_eq!(
+            parse_list_sharding("fsdp,hsdp").unwrap(),
+            vec![Sharding::Fsdp, Sharding::Hsdp]
+        );
+        assert!(parse_list_sharding("zero").is_err());
+        assert_eq!(parse_list_nodes("1,2,4").unwrap(), vec![1, 2, 4]);
+        assert!(parse_list_nodes("0,2").is_err());
+        // Values past u32 must error, not truncate (4294967296 would
+        // silently become 0 nodes under a bare `as u32`).
+        assert!(parse_list_nodes("4294967296").is_err());
     }
 
     #[test]

@@ -13,9 +13,9 @@ use crate::campaign::grid::Scenario;
 use crate::chopper::index::TraceIndex;
 use crate::chopper::overlap::summarize_op_overlap;
 use crate::chopper::throughput::throughput;
-use crate::config::NodeSpec;
+use crate::config::{NodeSpec, Topology};
 use crate::model::ops::{OpRef, OpType, Phase};
-use crate::sim::{run_workload_with, ProfiledRun};
+use crate::sim::{run_workload_topo_with, ProfiledRun};
 use crate::util::json::Json;
 use crate::util::stats;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -69,6 +69,13 @@ pub struct ScenarioSummary {
     pub fingerprint: u64,
     pub label: String,
     pub fsdp: String,
+    /// Sharding strategy ("FSDP"/"HSDP").
+    pub sharding: String,
+    /// Nodes in the scenario topology (1 = classic single node).
+    pub num_nodes: u64,
+    /// Median per-iteration wall span of each node, ms, node order.
+    /// Empty on single-node scenarios (the rollup equals `iter_ms`).
+    pub node_iter_ms: Vec<f64>,
     pub layers: u64,
     pub batch: u64,
     pub seq: u64,
@@ -109,12 +116,25 @@ fn text(j: &Json, k: &str) -> Result<String, String> {
 
 impl ScenarioSummary {
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("name", Json::str(self.name.clone())),
             // u64 doesn't round-trip through f64 above 2^53; store as hex.
             ("fingerprint", Json::str(format!("{:016x}", self.fingerprint))),
             ("label", Json::str(self.label.clone())),
             ("fsdp", Json::str(self.fsdp.clone())),
+        ];
+        // Topology fields serialize only when non-degenerate, so classic
+        // single-node FSDP summaries keep their pre-topology JSON bytes
+        // (asserted against the vendored baseline in tests/pipeline.rs).
+        if self.num_nodes > 1 || self.sharding != "FSDP" {
+            fields.push(("sharding", Json::str(self.sharding.clone())));
+            fields.push(("num_nodes", Json::num(self.num_nodes as f64)));
+            fields.push((
+                "node_iter_ms",
+                Json::Arr(self.node_iter_ms.iter().map(|&v| Json::num(v)).collect()),
+            ));
+        }
+        fields.extend(vec![
             ("layers", Json::num(self.layers as f64)),
             ("batch", Json::num(self.batch as f64)),
             ("seq", Json::num(self.seq as f64)),
@@ -132,7 +152,8 @@ impl ScenarioSummary {
             ("power_w", Json::num(self.power_w)),
             ("span_ms", Json::num(self.span_ms)),
             ("events", Json::num(self.events as f64)),
-        ])
+        ]);
+        Json::obj(fields)
     }
 
     pub fn to_json_str(&self) -> String {
@@ -144,11 +165,32 @@ impl ScenarioSummary {
         let fp_hex = text(j, "fingerprint")?;
         let fingerprint = u64::from_str_radix(&fp_hex, 16)
             .map_err(|_| format!("bad fingerprint `{fp_hex}`"))?;
+        // Topology fields default to the degenerate single-node shape so
+        // pre-topology artifacts still parse (their fingerprints differ,
+        // so they read as cache misses anyway — this keeps the parser
+        // total, not the cache warm).
+        let sharding = j
+            .get("sharding")
+            .and_then(|v| v.as_str())
+            .unwrap_or("FSDP")
+            .to_string();
+        let num_nodes = j
+            .get("num_nodes")
+            .and_then(|v| v.as_f64())
+            .unwrap_or(1.0) as u64;
+        let node_iter_ms = j
+            .get("node_iter_ms")
+            .and_then(|v| v.as_arr())
+            .map(|a| a.iter().filter_map(|v| v.as_f64()).collect())
+            .unwrap_or_default();
         Ok(Self {
             name: text(j, "name")?,
             fingerprint,
             label: text(j, "label")?,
             fsdp: text(j, "fsdp")?,
+            sharding,
+            num_nodes,
+            node_iter_ms,
             layers: num(j, "layers")? as u64,
             batch: num(j, "batch")? as u64,
             seq: num(j, "seq")? as u64,
@@ -233,11 +275,27 @@ pub fn summarize(
         ((peak - freq_mhz) / peak).max(0.0)
     };
 
+    // Per-node rollup: only materialized on multi-node topologies (on one
+    // node it duplicates `iter_ms`, and omitting it keeps the summary
+    // JSON byte-identical to the pre-topology schema).
+    let num_nodes = trace.meta.nodes() as u64;
+    let node_iter_ms: Vec<f64> = if num_nodes > 1 {
+        idx.node_iter_medians()
+            .iter()
+            .map(|&v| finite(v / 1e6))
+            .collect()
+    } else {
+        Vec::new()
+    };
+
     ScenarioSummary {
         name: sc.name.clone(),
         fingerprint: fp,
         label: sc.wl.label(),
         fsdp: sc.wl.fsdp.to_string(),
+        sharding: sc.wl.sharding.to_string(),
+        num_nodes,
+        node_iter_ms,
         layers: sc.model.layers,
         batch: sc.wl.batch,
         seq: sc.wl.seq,
@@ -282,7 +340,9 @@ pub struct CampaignOutcome {
 /// Run every scenario (parallel fan-out, grid-order results). With a cache,
 /// scenarios whose fingerprint already has an artifact are loaded instead
 /// of executed — unless `force` bypasses lookups (results are still
-/// re-stored, refreshing the artifacts).
+/// re-stored, refreshing the artifacts). Each scenario's topology is
+/// composed from the campaign's per-node hardware and the scenario's node
+/// count + NIC axes.
 pub fn run_campaign(
     node: &NodeSpec,
     scenarios: &[Scenario],
@@ -300,7 +360,12 @@ pub fn run_campaign(
                 return hit;
             }
         }
-        let run = run_workload_with(node, &sc.model, &sc.wl, sc.params.clone());
+        let topo = Topology {
+            node: node.clone(),
+            num_nodes: sc.num_nodes,
+            nic: sc.nic.clone(),
+        };
+        let run = run_workload_topo_with(&topo, &sc.model, &sc.wl, sc.params.clone());
         let summary = summarize(node, sc, fp, &run);
         if let Some(c) = cache {
             // Best-effort: a failed write only costs a future re-run.
@@ -344,6 +409,9 @@ mod tests {
             fingerprint: 0xdeadbeef12345678,
             label: "b1s4".into(),
             fsdp: "FSDPv1".into(),
+            sharding: "FSDP".into(),
+            num_nodes: 1,
+            node_iter_ms: Vec::new(),
             layers: 2,
             batch: 1,
             seq: 4096,
@@ -366,6 +434,20 @@ mod tests {
         assert_eq!(s, back);
         // Twice through the wire must be byte-stable.
         assert_eq!(s.to_json_str(), back.to_json_str());
+        // Degenerate topology fields stay off the wire entirely.
+        assert!(!s.to_json_str().contains("num_nodes"));
+
+        // Multi-node HSDP summaries carry the rollup and round-trip too.
+        let mut m = s.clone();
+        m.sharding = "HSDP".into();
+        m.num_nodes = 2;
+        m.node_iter_ms = vec![3.25, 3.5];
+        let j = m.to_json_str();
+        assert!(j.contains("num_nodes"));
+        assert!(j.contains("node_iter_ms"));
+        let back = ScenarioSummary::from_json_str(&j).unwrap();
+        assert_eq!(m, back);
+        assert_eq!(back.to_json_str(), j);
     }
 
     #[test]

@@ -91,6 +91,12 @@ pub struct TraceIndex<'t> {
     phase_kind_dur: BTreeMap<(Phase, OpKind), Vec<f64>>,
     /// (phase, kind) → per-(gpu, iter) launch-overhead samples, sampled.
     phase_kind_launch: BTreeMap<(Phase, OpKind), Vec<f64>>,
+    /// (node, iter) → (first start, last end) over the node's compute
+    /// events — the per-node rollup behind node-grouped figure rows.
+    node_iter_spans: BTreeMap<(u32, u32), (f64, f64)>,
+    /// (phase, node) → per-(gpu, iter) summed compute durations, sampled
+    /// iters only, in (phase, gpu, iter) order.
+    node_phase_dur: BTreeMap<(Phase, u32), Vec<f64>>,
     /// Comm-kernel durations per collective op, sampled iters, event order.
     comm_durs: BTreeMap<OpType, Vec<f64>>,
     /// kernel_id → event index; built with the metrics column (it only
@@ -290,6 +296,26 @@ impl<'t> TraceIndex<'t> {
             phase_kind_launch.entry((phase, kind)).or_default().push(v);
         }
 
+        // Per-node rollups, folded from the per-GPU rollups above using
+        // the trace's rank → node mapping (legacy traces fold to node 0).
+        let mut node_iter_spans: BTreeMap<(u32, u32), (f64, f64)> =
+            BTreeMap::new();
+        for (&(gpu, iter), &(s, e)) in &iter_spans {
+            let n = trace.meta.node_of(gpu);
+            let v = node_iter_spans
+                .entry((n, iter))
+                .or_insert((f64::INFINITY, f64::NEG_INFINITY));
+            v.0 = v.0.min(s);
+            v.1 = v.1.max(e);
+        }
+        let mut node_phase_dur: BTreeMap<(Phase, u32), Vec<f64>> = BTreeMap::new();
+        for (&(phase, gpu, _), &v) in &phase_dur {
+            node_phase_dur
+                .entry((phase, trace.meta.node_of(gpu)))
+                .or_default()
+                .push(v);
+        }
+
         Self {
             trace,
             comm,
@@ -306,6 +332,8 @@ impl<'t> TraceIndex<'t> {
             phase_dur,
             phase_kind_dur,
             phase_kind_launch,
+            node_iter_spans,
+            node_phase_dur,
             comm_durs,
             id_idx: FxHashMap::default(),
             metrics: None,
@@ -426,6 +454,51 @@ impl<'t> TraceIndex<'t> {
     /// (phase, kind) → per-(gpu, iter) launch samples, sampled only.
     pub fn phase_kind_launch(&self) -> &BTreeMap<(Phase, OpKind), Vec<f64>> {
         &self.phase_kind_launch
+    }
+
+    // -- per-node rollups ---------------------------------------------------
+
+    /// Nodes in the trace's topology (1 for legacy/single-node traces).
+    pub fn num_nodes(&self) -> u32 {
+        self.trace.meta.nodes()
+    }
+
+    /// Node hosting flat rank `gpu` (trace-metadata mapping).
+    pub fn node_of(&self, gpu: u32) -> u32 {
+        self.trace.meta.node_of(gpu)
+    }
+
+    /// (node, iter) → (first start, last end) over compute events.
+    pub fn node_iter_spans(&self) -> &BTreeMap<(u32, u32), (f64, f64)> {
+        &self.node_iter_spans
+    }
+
+    /// (phase, node) → per-(gpu, iter) summed compute durations, sampled
+    /// iterations only.
+    pub fn node_phase_dur(&self) -> &BTreeMap<(Phase, u32), Vec<f64>> {
+        &self.node_phase_dur
+    }
+
+    /// Median per-iteration wall span of each node, sampled iterations
+    /// only, in node order — the headline per-node rollup the campaign
+    /// summaries and node-grouped figure rows report.
+    pub fn node_iter_medians(&self) -> Vec<f64> {
+        let warmup = self.trace.meta.warmup;
+        let mut out = Vec::with_capacity(self.num_nodes() as usize);
+        for n in 0..self.num_nodes() {
+            let spans: Vec<f64> = self
+                .node_iter_spans
+                .range((n, 0)..(n + 1, 0))
+                .filter(|((_, it), _)| *it >= warmup)
+                .map(|(_, (s, e))| e - s)
+                .collect();
+            out.push(if spans.is_empty() {
+                0.0
+            } else {
+                crate::util::stats::median(&spans)
+            });
+        }
+        out
     }
 
     /// Sampled-iteration durations of one collective op, in event order.
@@ -654,6 +727,52 @@ mod tests {
         assert!((idx.coverage() - 1.0).abs() < 1e-12);
         for e in &cap.trace.events {
             assert!(idx.metrics_of(e).is_some(), "{}", e.name);
+        }
+    }
+
+    #[test]
+    fn node_rollups_fold_per_gpu_rollups() {
+        let t = trace();
+        let idx = TraceIndex::build(t);
+        // Single-node trace: node 0's rollups equal the fold over all gpus.
+        assert_eq!(idx.num_nodes(), 1);
+        for (&(n, iter), &(s, e)) in idx.node_iter_spans() {
+            assert_eq!(n, 0);
+            let mut lo = f64::INFINITY;
+            let mut hi = f64::NEG_INFINITY;
+            for (&(_, it), &(gs, ge)) in idx.iter_spans() {
+                if it == iter {
+                    lo = lo.min(gs);
+                    hi = hi.max(ge);
+                }
+            }
+            assert_eq!(s.to_bits(), lo.to_bits());
+            assert_eq!(e.to_bits(), hi.to_bits());
+        }
+        let medians = idx.node_iter_medians();
+        assert_eq!(medians.len(), 1);
+        assert!(medians[0] > 0.0);
+    }
+
+    #[test]
+    fn node_rollups_split_by_metadata_mapping() {
+        // Relabel the 8-gpu trace as 2 nodes × 4 gpus: rollups split.
+        let mut t = fixtures::runtime(2, 2, 2, 1, FsdpVersion::V1).trace.clone();
+        t.meta.num_nodes = 2;
+        t.meta.gpus_per_node = 4;
+        let idx = TraceIndex::build(&t);
+        assert_eq!(idx.num_nodes(), 2);
+        assert_eq!(idx.node_of(3), 0);
+        assert_eq!(idx.node_of(4), 1);
+        let medians = idx.node_iter_medians();
+        assert_eq!(medians.len(), 2);
+        assert!(medians.iter().all(|&m| m > 0.0));
+        // Per-phase rollups cover both nodes.
+        use crate::model::ops::Phase;
+        for n in 0..2 {
+            assert!(idx
+                .node_phase_dur()
+                .contains_key(&(Phase::Forward, n)));
         }
     }
 

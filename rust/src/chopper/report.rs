@@ -22,11 +22,22 @@ use crate::chopper::overlap::{per_gpu_overlap_cdf, summarize_op_overlap};
 use crate::chopper::throughput::throughput;
 use crate::config::{FsdpVersion, ModelConfig, NodeSpec, WorkloadConfig};
 use crate::model::ops::{OpKind, OpRef, OpType, Phase};
-use crate::sim::{run_workload, ProfiledRun};
+use crate::sim::ProfiledRun;
 use crate::trace::event::Stream;
 use crate::util::intern::{intern, Sym};
 use crate::util::{ascii, fmt, stats};
 use std::fmt::Write as _;
+
+/// Label of a flat rank for figure rows: "GPU3" on a single node, node-
+/// grouped "N0G3" on a multi-node trace (single-node output stays
+/// byte-identical to the pre-topology figures).
+pub fn gpu_label(meta: &crate::trace::event::TraceMeta, gpu: u32) -> String {
+    if meta.multi_node() {
+        format!("N{}G{}", meta.node_of(gpu), meta.local_of(gpu))
+    } else {
+        format!("GPU{gpu}")
+    }
+}
 
 /// One regenerated table/figure.
 #[derive(Debug, Clone)]
@@ -129,6 +140,26 @@ pub fn run_sweep(
     iterations: u32,
     warmup: u32,
 ) -> Vec<SweepRun> {
+    run_sweep_topo(
+        &crate::config::Topology::single(node.clone()),
+        cfg,
+        versions,
+        iterations,
+        warmup,
+    )
+}
+
+/// [`run_sweep`] over a full cluster [`Topology`](crate::config::Topology)
+/// — the same workload set FSDP/HSDP-sharded across the cluster
+/// (`wl.sharding` defaults to FSDP; `Topology::single` is the
+/// byte-identical single-node case).
+pub fn run_sweep_topo(
+    topo: &crate::config::Topology,
+    cfg: &ModelConfig,
+    versions: &[FsdpVersion],
+    iterations: u32,
+    warmup: u32,
+) -> Vec<SweepRun> {
     let mut wls = Vec::new();
     for &v in versions {
         for mut wl in WorkloadConfig::paper_sweep(v) {
@@ -140,7 +171,7 @@ pub fn run_sweep(
     let jobs = crate::campaign::runner::default_jobs();
     let runs =
         crate::campaign::runner::run_ordered(&wls, jobs, |_, wl| {
-            run_workload(node, cfg, wl)
+            crate::sim::run_workload_topo(topo, cfg, wl)
         });
     wls.into_iter()
         .zip(runs)
@@ -259,6 +290,26 @@ pub fn fig4(runs: &[IndexedRun]) -> Figure {
                 48,
                 max_total,
             ));
+        }
+        // Node-grouped rollup rows (multi-node traces only, so the
+        // single-node figure stays byte-identical).
+        if sr.sr.run.trace.meta.multi_node() {
+            for (n, med) in sr.idx().node_iter_medians().iter().enumerate() {
+                let _ = writeln!(
+                    ascii,
+                    "  node{n}: iter median {}",
+                    fmt::dur_ns(*med)
+                );
+                let _ = writeln!(
+                    csv,
+                    "{},{},{:.0},{:.3},node{n},rollup,{:.3},0.000",
+                    sr.wl().label(),
+                    sr.wl().fsdp,
+                    tp.tokens_per_sec,
+                    rel,
+                    med / 1e6
+                );
+            }
         }
         ascii.push('\n');
     }
@@ -395,7 +446,9 @@ pub fn fig6(runs: &[IndexedRun]) -> Figure {
             .map(|(_, (s, e))| e - s)
             .collect();
         let iter_med = stats::median(&iter_durs);
-        for op in [OpType::AllGather, OpType::ReduceScatter] {
+        // AllReduce only appears in HSDP traces; its empty column is
+        // skipped everywhere else, keeping single-node output identical.
+        for op in [OpType::AllGather, OpType::ReduceScatter, OpType::AllReduce] {
             let durs = sr.idx().comm_durations(op);
             if durs.is_empty() {
                 continue;
@@ -506,6 +559,7 @@ pub fn fig7(v1: &IndexedRun, v2: &IndexedRun) -> Figure {
 
 pub fn fig8(run: &IndexedRun) -> Figure {
     let per = per_gpu_overlap_cdf(run.idx(), OpRef::fwd(OpType::AttnOp));
+    let meta = &run.sr.run.trace.meta;
     let mut csv = String::from("gpu,overlap_ratio,duration_norm\n");
     let mut series: Vec<(String, Vec<f64>)> = Vec::new();
     for (gpu, pts) in &per {
@@ -513,7 +567,7 @@ pub fn fig8(run: &IndexedRun) -> Figure {
             let _ = writeln!(csv, "{gpu},{r:.4},{d:.5}");
         }
         series.push((
-            format!("GPU{gpu}"),
+            gpu_label(meta, *gpu),
             pts.iter().map(|(_, d)| *d).collect(),
         ));
     }
@@ -527,7 +581,7 @@ pub fn fig8(run: &IndexedRun) -> Figure {
         let ratios: Vec<f64> = pts.iter().map(|(r, _)| *r).collect();
         let durs: Vec<f64> = pts.iter().map(|(_, d)| *d).collect();
         rows.push(vec![
-            format!("GPU{gpu}"),
+            gpu_label(meta, *gpu),
             format!("{:.2}", stats::median(&ratios)),
             format!("{:.3}", stats::median(&durs)),
         ]);
@@ -928,6 +982,90 @@ pub fn fig15(runs: &[IndexedRun], node: &NodeSpec) -> Figure {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Node rollup — per-node iteration/phase medians (multi-node topologies)
+// ---------------------------------------------------------------------------
+
+/// Per-node rollup figure: median iteration span and phase durations of
+/// every node of every run, node-grouped. The multi-node counterpart of
+/// Fig. 4's per-workload rows; on a single-node run it degenerates to one
+/// row per run. Not part of [`ALL_FIGURES`] (the paper set) — rendered by
+/// `chopper campaign` on multi-node grids and `examples/multinode.rs`.
+pub fn node_rollup(runs: &[IndexedRun]) -> Figure {
+    let mut csv = String::from(
+        "run,sharding,nodes,node,iter_median_ms,fwd_ms,bwd_ms,opt_ms\n",
+    );
+    let mut ascii = String::from(
+        "Node rollup — median iteration span and phase durations per node\n\n",
+    );
+    for sr in runs {
+        let idx = sr.idx();
+        let meta = &sr.sr.run.trace.meta;
+        let sharding = if meta.sharding.is_empty() {
+            "FSDP"
+        } else {
+            meta.sharding.as_str()
+        };
+        let medians = idx.node_iter_medians();
+        let _ = writeln!(
+            ascii,
+            "{} [{sharding}, {} node(s) x {} gpu(s)]",
+            sr.label(),
+            meta.nodes(),
+            meta.node_gpus()
+        );
+        let max_med = medians.iter().cloned().fold(0.0_f64, f64::max).max(1e-9);
+        for (n, med) in medians.iter().enumerate() {
+            let phase_med = |ph: Phase| -> f64 {
+                idx.node_phase_dur()
+                    .get(&(ph, n as u32))
+                    .map(|v| stats::median(v))
+                    .unwrap_or(0.0)
+            };
+            let (fwd, bwd, opt) = (
+                phase_med(Phase::Forward),
+                phase_med(Phase::Backward),
+                phase_med(Phase::Optimizer),
+            );
+            ascii.push_str(&ascii::stacked_bar(
+                &format!("  node{n:<2}"),
+                &[
+                    ("fwd".into(), fwd),
+                    ("bwd".into(), bwd),
+                    ("opt".into(), opt),
+                ],
+                44,
+                max_med.max(fwd + bwd + opt),
+            ));
+            let _ = writeln!(
+                ascii,
+                "         iter median {}",
+                fmt::dur_ns(*med)
+            );
+            let _ = writeln!(
+                csv,
+                "{},{},{},{},{:.4},{:.4},{:.4},{:.4}",
+                sr.label(),
+                sharding,
+                meta.nodes(),
+                n,
+                med / 1e6,
+                fwd / 1e6,
+                bwd / 1e6,
+                opt / 1e6
+            );
+        }
+        ascii.push('\n');
+    }
+    Figure {
+        id: "nodes",
+        title: "Node rollup — per-node iteration and phase medians".into(),
+        ascii,
+        csv,
+        svg: None,
+    }
+}
+
 /// All figure ids this module can regenerate.
 pub const ALL_FIGURES: [&str; 13] = [
     "table2", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10",
@@ -1073,6 +1211,31 @@ mod tests {
         let svg = f.svg.unwrap();
         assert!(svg.starts_with("<svg"));
         assert!(svg.trim_end().ends_with("</svg>"));
+    }
+
+    #[test]
+    fn gpu_labels_flat_vs_node_grouped() {
+        let mut meta = crate::trace::event::TraceMeta::default();
+        meta.num_gpus = 8;
+        assert_eq!(gpu_label(&meta, 3), "GPU3");
+        meta.num_nodes = 2;
+        meta.gpus_per_node = 8;
+        meta.num_gpus = 16;
+        assert_eq!(gpu_label(&meta, 3), "N0G3");
+        assert_eq!(gpu_label(&meta, 11), "N1G3");
+    }
+
+    #[test]
+    fn node_rollup_renders_one_row_per_node() {
+        let (_, runs) = small_sweep();
+        let indexed = index_runs(&runs);
+        let f = node_rollup(&indexed[..1]);
+        assert_eq!(f.id, "nodes");
+        assert!(f.ascii.contains("node0"));
+        // Single-node run: header + exactly one data row.
+        assert_eq!(f.csv.lines().count(), 2);
+        let row = f.csv.lines().nth(1).unwrap();
+        assert!(row.contains("FSDP"));
     }
 
     #[test]

@@ -4,8 +4,10 @@ use crate::campaign::{self, grid, Cache, GridSpec};
 use crate::chopper::report;
 use crate::chopper::{CpuUtilAnalysis, Filter};
 use crate::cli::Args;
-use crate::config::{FsdpVersion, ModelConfig, NodeSpec, WorkloadConfig};
-use crate::sim::run_workload;
+use crate::config::{
+    FsdpVersion, ModelConfig, NodeSpec, Sharding, Topology, WorkloadConfig,
+};
+use crate::sim::run_workload_topo;
 use crate::trace::chrome;
 use crate::util::fmt;
 use std::path::PathBuf;
@@ -20,19 +22,21 @@ USAGE: chopper <subcommand> [options]
            Profile the paper sweep (b1s4 b2s4 b4s4 b1s8 b2s8 × v1,v2) and
            write every figure (txt/csv/svg) to DIR (default: figures/).
   campaign [--layers 2,4] [--batch 1,2,4] [--seq 4,8 (K tokens)]
-           [--fsdp v1,v2] [--iters N] [--warmup N] [--seed N]
+           [--fsdp v1,v2] [--nodes 1,2,4] [--sharding fsdp,hsdp]
+           [--nic-gbs 50,12.5] [--iters N] [--warmup N] [--seed N]
            [--ablate knob=v1,v2[;knob2=...]] [--jobs N] [--cache-dir DIR]
            [--force] [--no-cache] [--out DIR]
-           Expand the scenario grid (model × workload × engine-parameter
-           ablations), fan scenarios out over worker threads, reuse cached
-           results, and print cross-scenario comparison tables. Knobs:
-           spin_penalty transfer_penalty comm_stretch rank_jitter
+           Expand the scenario grid (model × workload × topology ×
+           engine-parameter ablations), fan scenarios out over worker
+           threads, reuse cached results, and print cross-scenario
+           comparison tables (plus per-node rollups on multi-node grids).
+           Knobs: spin_penalty transfer_penalty comm_stretch rank_jitter
            compute_jitter dispatch_jitter comm_delay_sigma_ns
            far_rank_delay_ns dvfs_window_ns.
   figure   <table2|fig4..fig15|all> [--layers N] [--iters N] [--out DIR]
            Regenerate one figure; prints the ASCII rendering.
-  collect  [--workload b2s4] [--fsdp v1|v2] [--layers N] [--iters N]
-           [--out trace.json]
+  collect  [--workload b2s4] [--fsdp v1|v2] [--nodes N] [--sharding
+           fsdp|hsdp] [--layers N] [--iters N] [--out trace.json]
            Runtime-profile one workload and write a chrome trace.
   analyze  <trace.json>
            Aggregate statistics from a chrome trace (any source: sim/pjrt).
@@ -96,6 +100,12 @@ pub fn cmd_campaign(args: &mut Args) -> Result<(), String> {
         .map(|k| k * 1024)
         .collect();
     let fsdp = grid::parse_list_fsdp(&args.flag_or("fsdp", "v1,v2"))?;
+    let nodes = grid::parse_list_nodes(&args.flag_or("nodes", "1"))?;
+    let shardings = grid::parse_list_sharding(&args.flag_or("sharding", "fsdp"))?;
+    let nic_gbs = match args.flag("nic-gbs") {
+        Some(s) => grid::parse_list_f64(&s)?,
+        None => Vec::new(),
+    };
     let iters = args.flag_u32("iters", 4)?;
     let warmup = args.flag_u32("warmup", iters / 2)?;
     let seed = args.flag_u64("seed", 0xC0FFEE)?;
@@ -115,6 +125,9 @@ pub fn cmd_campaign(args: &mut Args) -> Result<(), String> {
     spec.batches = batches;
     spec.seqs = seqs;
     spec.fsdp = fsdp;
+    spec.nodes = nodes;
+    spec.shardings = shardings;
+    spec.nic_gbs = nic_gbs;
     spec.seed = seed;
     spec.ablations = ablations;
     let scenarios = spec.expand();
@@ -144,10 +157,14 @@ pub fn cmd_campaign(args: &mut Args) -> Result<(), String> {
         outcome.cached,
         t0.elapsed().as_secs_f64()
     );
-    let figs = [
+    let mut figs = vec![
         campaign::campaign_table(&outcome.summaries),
         campaign::campaign_breakdown(&outcome.summaries),
     ];
+    // Per-node rollup table when the grid has any multi-node scenario.
+    if outcome.summaries.iter().any(|s| s.num_nodes > 1) {
+        figs.push(campaign::campaign_by_nodes(&outcome.summaries));
+    }
     for f in &figs {
         println!("{}", f.ascii);
         if let Some(dir) = &out {
@@ -210,16 +227,21 @@ pub fn cmd_collect(args: &mut Args) -> Result<(), String> {
     let cfg = model_with_layers(args)?;
     let label = args.flag_or("workload", "b2s4");
     let fsdp = parse_fsdp(&args.flag_or("fsdp", "v1"))?;
+    let nodes = args.flag_u32("nodes", 1)?.max(1);
+    let sharding_s = args.flag_or("sharding", "fsdp");
+    let sharding = Sharding::parse(&sharding_s)
+        .ok_or_else(|| format!("bad --sharding {sharding_s} (use fsdp/hsdp)"))?;
     let iters = args.flag_u32("iters", 20)?;
     let warmup = args.flag_u32("warmup", iters / 2)?;
     let out: PathBuf = args.flag_or("out", "trace.json").into();
     args.finish()?;
     let mut wl = WorkloadConfig::parse_label(&label, fsdp)
         .ok_or_else(|| format!("bad --workload {label}"))?;
+    wl.sharding = sharding;
     wl.iterations = iters;
     wl.warmup = warmup;
-    let node = NodeSpec::mi300x_node();
-    let run = run_workload(&node, &cfg, &wl);
+    let topo = Topology::mi300x_cluster(nodes);
+    let run = run_workload_topo(&topo, &cfg, &wl);
     chrome::write_chrome_trace(&run.trace, &out).map_err(|e| e.to_string())?;
     println!(
         "wrote {} ({} events, span {})",
@@ -250,6 +272,18 @@ pub fn cmd_analyze(args: &mut Args) -> Result<(), String> {
         trace.meta.fsdp,
         trace.meta.source
     );
+    if trace.meta.multi_node() {
+        println!(
+            "topology: {} nodes x {} GPUs ({})",
+            trace.meta.nodes(),
+            trace.meta.node_gpus(),
+            if trace.meta.sharding.is_empty() {
+                "FSDP"
+            } else {
+                trace.meta.sharding.as_str()
+            }
+        );
+    }
     println!("span: {}", fmt::dur_ns(trace.span_ns()));
     // Build the shared index once; every query below consumes it.
     let idx = crate::chopper::TraceIndex::build(&trace);
@@ -387,6 +421,48 @@ mod tests {
         assert_eq!(run_cli(&cmd), 0);
         assert!(cache.exists());
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn collect_multinode_hsdp_roundtrip() {
+        let dir = std::env::temp_dir().join(format!(
+            "chopper_cli_multinode_{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let trace = dir.join("t2.json");
+        let cmd = format!(
+            "chopper collect --workload b1s4 --fsdp v2 --nodes 2 --sharding hsdp \
+             --layers 2 --iters 2 --warmup 1 --out {}",
+            trace.display()
+        );
+        assert_eq!(run_cli(&cmd), 0);
+        let t = chrome::read_chrome_trace(&trace).unwrap();
+        assert_eq!(t.meta.num_nodes, 2);
+        assert_eq!(t.meta.num_gpus, 16);
+        assert_eq!(t.meta.sharding, "HSDP");
+        assert_eq!(run_cli(&format!("chopper analyze {}", trace.display())), 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn campaign_accepts_topology_axes() {
+        assert_eq!(
+            run_cli(
+                "chopper campaign --layers 1 --batch 1 --seq 4 --fsdp v1 \
+                 --nodes 1,2 --sharding hsdp --iters 2 --warmup 1 --jobs 2 \
+                 --no-cache"
+            ),
+            0
+        );
+        assert_eq!(
+            run_cli("chopper campaign --no-cache --sharding zero3 --iters 2"),
+            1
+        );
+        assert_eq!(
+            run_cli("chopper campaign --no-cache --nodes 0 --iters 2"),
+            1
+        );
     }
 
     #[test]

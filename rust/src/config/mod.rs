@@ -5,9 +5,11 @@
 pub mod hardware;
 pub mod model;
 pub mod parse;
+pub mod topology;
 pub mod workload;
 
 pub use hardware::{CpuSpec, GpuSpec, LinkSpec, NodeSpec};
 pub use model::ModelConfig;
 pub use parse::{ConfigError, ConfigMap};
+pub use topology::{NicSpec, Sharding, Topology};
 pub use workload::{FsdpVersion, WorkloadConfig};

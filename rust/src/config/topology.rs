@@ -1,0 +1,195 @@
+//! Multi-node cluster topology: N identical nodes of G GPUs each, with a
+//! two-level interconnect — intra-node xGMI (Infinity Fabric, `LinkSpec`)
+//! and inter-node RDMA NICs (`NicSpec`, rail-optimized: one NIC per GPU).
+//!
+//! The topology is the contract every layer shares (DESIGN.md §8):
+//!
+//! * **Rank mapping.** Global ("flat") ranks are dense `0..world_size()`;
+//!   rank `r` lives on node `r / gpus_per_node()` as local GPU
+//!   `r % gpus_per_node()`. Traces, figures and counters keep flat ranks,
+//!   so every single-node analysis works unchanged on multi-node traces.
+//! * **Two-level collectives.** A world-scoped collective costs the
+//!   intra-node ring **plus** an inter-node phase over the NICs
+//!   (`sim::interconnect::hierarchical_collective_ns`); node-scoped and
+//!   cross-node-scoped collectives (HSDP) cost exactly their level.
+//! * **Degenerate case.** `Topology::single(node)` (one node) must be
+//!   indistinguishable — byte for byte in figures, summaries and traces —
+//!   from the plain `NodeSpec` path. The inter-node phase is exactly zero
+//!   at one node, and `tests/pipeline.rs` pins the whole pipeline.
+
+use crate::config::NodeSpec;
+use std::fmt;
+
+/// Parameter-sharding strategy across the topology.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Sharding {
+    /// Fully Sharded Data Parallel over every rank of the cluster: one
+    /// shard group of `world_size()` ranks, world-scoped collectives.
+    Fsdp,
+    /// Hybrid Sharded Data Parallel: shard *within* each node, replicate
+    /// *across* nodes — intra-node all-gather / reduce-scatter plus a
+    /// cross-node all-reduce of each rank's gradient shard.
+    Hsdp,
+}
+
+impl fmt::Display for Sharding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Sharding::Fsdp => write!(f, "FSDP"),
+            Sharding::Hsdp => write!(f, "HSDP"),
+        }
+    }
+}
+
+impl Sharding {
+    pub fn parse(s: &str) -> Option<Sharding> {
+        match s {
+            "fsdp" | "FSDP" => Some(Sharding::Fsdp),
+            "hsdp" | "HSDP" => Some(Sharding::Hsdp),
+            _ => None,
+        }
+    }
+}
+
+/// Inter-node NIC, rail-optimized: one NIC per GPU, so the G concurrent
+/// cross-node rings of a hierarchical collective each get a full NIC.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NicSpec {
+    /// Per-direction bandwidth of one GPU's NIC, bytes/s.
+    pub nic_bw: f64,
+    /// Inter-node (switch + wire) latency per ring step, ns.
+    pub latency_ns: f64,
+    /// RDMA/RCCL protocol efficiency over the NIC (fraction achieved).
+    pub eff: f64,
+}
+
+impl NicSpec {
+    /// 400 Gb/s RoCE per GPU — the rail-optimized fabric MI300X clusters
+    /// ship with. Noticeably slower than the 64 GB/s per-direction xGMI
+    /// links once protocol efficiency is applied, which is exactly the
+    /// bandwidth divergence that makes multi-node scheduling interesting.
+    pub fn roce_400g() -> Self {
+        Self {
+            nic_bw: 50e9,
+            latency_ns: 5_000.0,
+            eff: 0.8,
+        }
+    }
+}
+
+impl Default for NicSpec {
+    fn default() -> Self {
+        Self::roce_400g()
+    }
+}
+
+/// The whole cluster: `num_nodes` identical [`NodeSpec`]s joined by
+/// [`NicSpec`] rails.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Topology {
+    /// Per-node hardware (GPUs, host CPU, intra-node links).
+    pub node: NodeSpec,
+    pub num_nodes: u32,
+    pub nic: NicSpec,
+}
+
+impl Topology {
+    /// The degenerate single-node topology — the paper's testbed. Must
+    /// reproduce the plain `NodeSpec` path byte for byte.
+    pub fn single(node: NodeSpec) -> Self {
+        Self {
+            node,
+            num_nodes: 1,
+            nic: NicSpec::default(),
+        }
+    }
+
+    /// `n` MI300X nodes on the default 400 Gb/s rails.
+    pub fn mi300x_cluster(num_nodes: u32) -> Self {
+        Self {
+            node: NodeSpec::mi300x_node(),
+            num_nodes: num_nodes.max(1),
+            nic: NicSpec::default(),
+        }
+    }
+
+    pub fn gpus_per_node(&self) -> u32 {
+        self.node.num_gpus
+    }
+
+    /// Total flat ranks in the cluster.
+    pub fn world_size(&self) -> u32 {
+        self.num_nodes * self.node.num_gpus
+    }
+
+    /// Node hosting flat rank `rank`.
+    pub fn node_of(&self, rank: u32) -> u32 {
+        rank / self.gpus_per_node().max(1)
+    }
+
+    /// Local GPU index of flat rank `rank` within its node.
+    pub fn local_of(&self, rank: u32) -> u32 {
+        rank % self.gpus_per_node().max(1)
+    }
+
+    /// Flat rank of (node, local GPU).
+    pub fn rank_of(&self, node: u32, local: u32) -> u32 {
+        node * self.gpus_per_node() + local
+    }
+
+    /// Flat ranks of one node, ascending.
+    pub fn node_ranks(&self, node: u32) -> std::ops::Range<u32> {
+        let g = self.gpus_per_node();
+        node * g..(node + 1) * g
+    }
+
+    /// Compact tag for names/fingerprints: "N2x8".
+    pub fn tag(&self) -> String {
+        format!("N{}x{}", self.num_nodes, self.gpus_per_node())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_is_one_node() {
+        let t = Topology::single(NodeSpec::mi300x_node());
+        assert_eq!(t.num_nodes, 1);
+        assert_eq!(t.world_size(), 8);
+        assert_eq!(t.gpus_per_node(), 8);
+        assert_eq!(t.tag(), "N1x8");
+    }
+
+    #[test]
+    fn rank_mapping_roundtrips() {
+        let t = Topology::mi300x_cluster(4);
+        assert_eq!(t.world_size(), 32);
+        for rank in 0..t.world_size() {
+            let (n, l) = (t.node_of(rank), t.local_of(rank));
+            assert!(n < 4 && l < 8);
+            assert_eq!(t.rank_of(n, l), rank);
+        }
+        assert_eq!(t.node_of(8), 1);
+        assert_eq!(t.local_of(8), 0);
+        assert_eq!(t.node_ranks(1).collect::<Vec<_>>(), (8..16).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sharding_parse_display() {
+        assert_eq!(Sharding::parse("fsdp"), Some(Sharding::Fsdp));
+        assert_eq!(Sharding::parse("HSDP"), Some(Sharding::Hsdp));
+        assert_eq!(Sharding::parse("zero3"), None);
+        assert_eq!(Sharding::Fsdp.to_string(), "FSDP");
+        assert_eq!(Sharding::Hsdp.to_string(), "HSDP");
+    }
+
+    #[test]
+    fn nic_slower_than_xgmi() {
+        // The premise of the two-level model: effective NIC bandwidth is
+        // below the per-direction xGMI link bandwidth.
+        let t = Topology::mi300x_cluster(2);
+        assert!(t.nic.nic_bw * t.nic.eff < t.node.link.link_bw);
+    }
+}

@@ -1,6 +1,7 @@
 //! Workload configuration: the paper's batch-size/sequence-length sweep and
 //! profiling protocol (Section IV-A/IV-D).
 
+use crate::config::topology::Sharding;
 use std::fmt;
 
 /// FSDP flavor under test (Section II-B).
@@ -28,6 +29,12 @@ pub struct WorkloadConfig {
     /// Sequence length in tokens.
     pub seq: u64,
     pub fsdp: FsdpVersion,
+    /// Cross-topology sharding strategy. [`Sharding::Fsdp`] shards over
+    /// every rank of the cluster (the single-node default); on a
+    /// multi-node [`Topology`](crate::config::Topology),
+    /// [`Sharding::Hsdp`] shards within each node and replicates across
+    /// nodes. Ignored (equivalent to FSDP) on one node.
+    pub sharding: Sharding,
     /// Total iterations to run.
     pub iterations: u32,
     /// Leading iterations discarded as warmup (paper: 10 of 20).
@@ -45,6 +52,7 @@ impl WorkloadConfig {
             batch,
             seq,
             fsdp,
+            sharding: Sharding::Fsdp,
             iterations: 20,
             warmup: 10,
             optimizer: true,

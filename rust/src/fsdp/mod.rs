@@ -8,7 +8,7 @@ pub mod shard;
 
 pub use allocator::{simulate_gather_pattern, AllocStats, CachingAllocator, MemEvent};
 pub use schedule::{
-    build_program, CollectiveDesc, CommScope, DispatchItem, HostSync, ProgKernel,
-    Program,
+    build_program, build_program_topo, CollectiveDesc, CommGroup, CommScope,
+    DispatchItem, HostSync, ProgKernel, Program,
 };
 pub use shard::ShardLayout;

@@ -17,8 +17,16 @@
 //!    f_attn_n, before b_mlp_dp, and before b_ie (Section V-D3);
 //!  * FSDPv1 performs per-tensor host work inside the optimizer loop
 //!    (bubbles between opt_step kernels, reduced in v2).
+//!
+//! Topology-aware variants (DESIGN.md §8): [`build_program_topo`] keeps
+//! the same dispatch skeleton but retargets the collectives. Under FSDP
+//! every collective is world-scoped; under HSDP on a multi-node topology
+//! parameters shard *within* the node (intra-node all-gather /
+//! reduce-scatter over `gpus_per_node` ranks) and every reduce-scatter is
+//! followed by a cross-node all-reduce of the rank's gradient shard. On a
+//! one-node topology both strategies produce the identical program.
 
-use crate::config::{FsdpVersion, ModelConfig, WorkloadConfig};
+use crate::config::{FsdpVersion, ModelConfig, Sharding, Topology, WorkloadConfig};
 use crate::model::graph::{build_iteration, KernelDesc};
 use crate::model::ops::{OpRef, OpType, Phase};
 
@@ -39,12 +47,28 @@ impl CommScope {
     }
 }
 
+/// Which ranks rendezvous on a collective (the engine expands each
+/// program-level collective into one instance per rendezvous group).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CommGroup {
+    /// Every rank of the cluster — FSDP collectives, and everything on a
+    /// single node.
+    World,
+    /// The dispatching rank's node (HSDP parameter sharding group).
+    IntraNode,
+    /// The dispatching rank's same-local-index peers across nodes (HSDP
+    /// gradient replication group).
+    CrossNode,
+}
+
 /// One collective operation (same id on every rank).
 #[derive(Debug, Clone)]
 pub struct CollectiveDesc {
     pub id: u64,
     pub op: OpRef,
     pub scope: CommScope,
+    /// Rendezvous group of this collective.
+    pub group: CommGroup,
     pub iter: u32,
     /// Full (unsharded) payload bytes.
     pub bytes: f64,
@@ -107,24 +131,80 @@ impl Program {
     }
 }
 
+/// How a program's collectives map onto the topology (internal; selected
+/// by [`build_program`] / [`build_program_topo`]).
+#[derive(Debug, Clone, Copy)]
+struct CommPlan {
+    /// Size of the parameter-shard group (divisor for per-rank copy /
+    /// optimizer shard sizes): the world under FSDP, one node under HSDP.
+    shard_ranks: u64,
+    /// Rendezvous group of every all-gather / reduce-scatter.
+    group: CommGroup,
+    /// Follow each reduce-scatter with a cross-node all-reduce of the
+    /// rank's `1/shard_ranks` gradient shard (HSDP replication sync).
+    cross_node: bool,
+}
+
+impl CommPlan {
+    fn fsdp(ranks: u64) -> Self {
+        Self {
+            shard_ranks: ranks,
+            group: CommGroup::World,
+            cross_node: false,
+        }
+    }
+}
+
 struct Builder {
     items: Vec<DispatchItem>,
     next_comm_id: u64,
     kernel_count: u64,
+    plan: CommPlan,
 }
 
 impl Builder {
-    fn comm(&mut self, op: OpType, scope: CommScope, iter: u32, bytes: f64) -> u64 {
+    fn push_comm(
+        &mut self,
+        op: OpType,
+        scope: CommScope,
+        group: CommGroup,
+        iter: u32,
+        bytes: f64,
+    ) -> u64 {
         let id = self.next_comm_id;
         self.next_comm_id += 1;
         self.items.push(DispatchItem::Comm(CollectiveDesc {
             id,
             op: OpRef::new(op, Phase::Forward),
             scope,
+            group,
             iter,
             bytes,
             wait_seq: self.kernel_count,
         }));
+        id
+    }
+
+    /// A sharding-group collective (all-gather or reduce-scatter).
+    fn comm(&mut self, op: OpType, scope: CommScope, iter: u32, bytes: f64) -> u64 {
+        self.push_comm(op, scope, self.plan.group, iter, bytes)
+    }
+
+    /// A gradient reduce-scatter, plus — under HSDP — the cross-node
+    /// all-reduce of the resulting shard. The all-reduce is enqueued
+    /// immediately behind the reduce-scatter, so the per-rank FIFO comm
+    /// stream gives the data dependency for free.
+    fn reduce(&mut self, scope: CommScope, iter: u32, bytes: f64) -> u64 {
+        let id = self.comm(OpType::ReduceScatter, scope, iter, bytes);
+        if self.plan.cross_node {
+            self.push_comm(
+                OpType::AllReduce,
+                scope,
+                CommGroup::CrossNode,
+                iter,
+                bytes / self.plan.shard_ranks as f64,
+            );
+        }
         id
     }
 
@@ -156,8 +236,38 @@ fn param_copy_kernel(cfg: &ModelConfig, phase: Phase, layer: Option<u32>,
     }
 }
 
-/// Build the dispatch program for `wl` on a model sharded over `ranks`.
+/// Build the dispatch program for `wl` on a model sharded over `ranks`
+/// (flat FSDP — every collective is world-scoped).
 pub fn build_program(cfg: &ModelConfig, wl: &WorkloadConfig, ranks: u64) -> Program {
+    build_with_plan(cfg, wl, CommPlan::fsdp(ranks))
+}
+
+/// Build the dispatch program for `wl` on `topo`, honoring
+/// `wl.sharding`. FSDP shards over the whole cluster; HSDP (on more than
+/// one node) shards within each node and adds the cross-node gradient
+/// all-reduces. On one node both degenerate to [`build_program`].
+pub fn build_program_topo(
+    cfg: &ModelConfig,
+    wl: &WorkloadConfig,
+    topo: &Topology,
+) -> Program {
+    if wl.sharding == Sharding::Hsdp && topo.num_nodes > 1 {
+        build_with_plan(
+            cfg,
+            wl,
+            CommPlan {
+                shard_ranks: topo.gpus_per_node() as u64,
+                group: CommGroup::IntraNode,
+                cross_node: true,
+            },
+        )
+    } else {
+        build_with_plan(cfg, wl, CommPlan::fsdp(topo.world_size() as u64))
+    }
+}
+
+fn build_with_plan(cfg: &ModelConfig, wl: &WorkloadConfig, plan: CommPlan) -> Program {
+    let ranks = plan.shard_ranks;
     let iter_prog = build_iteration(cfg, wl.batch, wl.seq, ranks, wl.optimizer);
     let layers = cfg.layers as u32;
     let layer_bytes = cfg.layer_weight_bytes() as f64;
@@ -169,6 +279,7 @@ pub fn build_program(cfg: &ModelConfig, wl: &WorkloadConfig, ranks: u64) -> Prog
         items: Vec::new(),
         next_comm_id: 0,
         kernel_count: 0,
+        plan,
     };
 
     for iter in 0..wl.iterations {
@@ -253,7 +364,7 @@ pub fn build_program(cfg: &ModelConfig, wl: &WorkloadConfig, ranks: u64) -> Prog
                 b.kernel(k.clone(), iter, None);
             }
         }
-        let rs_head = b.comm(OpType::ReduceScatter, CommScope::Head, iter, head_bytes);
+        let rs_head = b.reduce(CommScope::Head, iter, head_bytes);
         let _ = rs_head;
 
         let mut bag: Vec<Option<u64>> = vec![None; layers as usize];
@@ -280,12 +391,7 @@ pub fn build_program(cfg: &ModelConfig, wl: &WorkloadConfig, ranks: u64) -> Prog
                     // comm engine is prompt — ~90% overlap on b_attn_n,
                     // ~0% on b_mlp_n under FSDPv1 (Observation 4).
                     if l + 1 < layers {
-                        b.comm(
-                            OpType::ReduceScatter,
-                            CommScope::Layer(l + 1),
-                            iter,
-                            layer_bytes,
-                        );
+                        b.reduce(CommScope::Layer(l + 1), iter, layer_bytes);
                     }
                     if l >= 2 {
                         let pl = l - 2;
@@ -314,7 +420,7 @@ pub fn build_program(cfg: &ModelConfig, wl: &WorkloadConfig, ranks: u64) -> Prog
             }
         }
         // The bottom layer's grads reduce after its backward completes.
-        b.comm(OpType::ReduceScatter, CommScope::Layer(0), iter, layer_bytes);
+        b.reduce(CommScope::Layer(0), iter, layer_bytes);
         // Embedding backward (+ v2 copy before b_ie), then its RS.
         if v2 {
             b.kernel(param_copy_kernel(cfg, Phase::Backward, None, ranks), iter, None);
@@ -324,7 +430,7 @@ pub fn build_program(cfg: &ModelConfig, wl: &WorkloadConfig, ranks: u64) -> Prog
                 b.kernel(k.clone(), iter, None);
             }
         }
-        b.comm(OpType::ReduceScatter, CommScope::Embed, iter, embed_bytes);
+        b.reduce(CommScope::Embed, iter, embed_bytes);
 
         // --- optimizer phase: b_ga overlaps the RS drain; opt_step runs
         // after the host synchronizes on all reduce-scatters.
@@ -479,5 +585,93 @@ mod tests {
         for (i, id) in ids.iter().enumerate() {
             assert_eq!(*id, i as u64);
         }
+    }
+
+    #[test]
+    fn topo_fsdp_single_node_matches_flat_build() {
+        use crate::config::Topology;
+        let cfg = small_cfg();
+        let w = wl(FsdpVersion::V1);
+        let flat = build_program(&cfg, &w, 8);
+        let topo = build_program_topo(&cfg, &w, &Topology::mi300x_cluster(1));
+        assert_eq!(flat.items.len(), topo.items.len());
+        assert_eq!(flat.num_collectives, topo.num_collectives);
+        for (a, b) in flat.collectives().zip(topo.collectives()) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.op, b.op);
+            assert_eq!(a.scope, b.scope);
+            assert_eq!(a.group, b.group);
+            assert_eq!(a.bytes, b.bytes);
+            assert_eq!(a.wait_seq, b.wait_seq);
+        }
+    }
+
+    #[test]
+    fn hsdp_adds_cross_node_allreduce_per_reduce_scatter() {
+        use crate::config::{Sharding, Topology};
+        let cfg = small_cfg();
+        let mut w = wl(FsdpVersion::V1);
+        w.sharding = Sharding::Hsdp;
+        let topo = Topology::mi300x_cluster(2);
+        let p = build_program_topo(&cfg, &w, &topo);
+        let rs: Vec<_> = p
+            .collectives()
+            .filter(|c| c.op.op == OpType::ReduceScatter)
+            .collect();
+        let ar: Vec<_> = p
+            .collectives()
+            .filter(|c| c.op.op == OpType::AllReduce)
+            .collect();
+        assert!(!rs.is_empty());
+        assert_eq!(rs.len(), ar.len(), "one all-reduce per reduce-scatter");
+        for (r, a) in rs.iter().zip(&ar) {
+            assert_eq!(a.id, r.id + 1, "AR immediately follows its RS");
+            assert_eq!(a.scope, r.scope);
+            assert_eq!(r.group, CommGroup::IntraNode);
+            assert_eq!(a.group, CommGroup::CrossNode);
+            // AR moves the rank's 1/G shard of what the RS reduced.
+            let g = topo.gpus_per_node() as f64;
+            assert!((a.bytes - r.bytes / g).abs() < 1e-6);
+        }
+        // All-gathers shard within the node too.
+        assert!(p
+            .collectives()
+            .filter(|c| c.op.op == OpType::AllGather)
+            .all(|c| c.group == CommGroup::IntraNode));
+    }
+
+    #[test]
+    fn hsdp_one_node_degenerates_to_fsdp() {
+        use crate::config::{Sharding, Topology};
+        let cfg = small_cfg();
+        let mut w = wl(FsdpVersion::V2);
+        w.sharding = Sharding::Hsdp;
+        let topo = Topology::mi300x_cluster(1);
+        let hsdp = build_program_topo(&cfg, &w, &topo);
+        let mut w2 = w.clone();
+        w2.sharding = Sharding::Fsdp;
+        let fsdp = build_program_topo(&cfg, &w2, &topo);
+        assert_eq!(hsdp.items.len(), fsdp.items.len());
+        assert_eq!(hsdp.num_collectives, fsdp.num_collectives);
+        assert!(hsdp.collectives().all(|c| c.group == CommGroup::World));
+    }
+
+    #[test]
+    fn hsdp_shards_copies_by_node_group() {
+        use crate::config::{Sharding, Topology};
+        let cfg = small_cfg();
+        let mut w = wl(FsdpVersion::V2);
+        w.sharding = Sharding::Hsdp;
+        let p2 = build_program_topo(&cfg, &w, &Topology::mi300x_cluster(2));
+        let p_flat = build_program(&cfg, &w, 16);
+        let copy_bytes = |p: &Program| {
+            p.kernels()
+                .find(|k| k.desc.op.op == OpType::ParamCopy)
+                .map(|k| k.desc.bytes)
+                .unwrap()
+        };
+        // HSDP shards over 8 (one node), flat FSDP over all 16 ranks:
+        // per-rank copies are twice as large under HSDP.
+        assert!((copy_bytes(&p2) - 2.0 * copy_bytes(&p_flat)).abs() < 1e-6);
     }
 }

@@ -137,6 +137,12 @@ pub fn op_cost(
             bytes: cfg.layer_weight_bytes() as f64,
             gemm_mnk: None,
         },
+        // HSDP cross-node all-reduce of one rank's gradient shard.
+        OpType::AllReduce => OpCost {
+            flops: cfg.params_per_layer() as f64 / ranks as f64,
+            bytes: cfg.layer_weight_bytes() as f64 / ranks as f64,
+            gemm_mnk: None,
+        },
         OpType::ParamCopy => OpCost::vector(
             0.0,
             0.0,

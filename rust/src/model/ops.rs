@@ -117,6 +117,8 @@ pub enum OpType {
     AllGather,
     /// rs: FSDP reduce scatter.
     ReduceScatter,
+    /// ar: HSDP cross-node all-reduce of gradient shards.
+    AllReduce,
     /// FSDPv2 per-parameter copy around collectives.
     ParamCopy,
 }
@@ -149,6 +151,7 @@ impl OpType {
             OptStep => "opt_step",
             AllGather => "ag",
             ReduceScatter => "rs",
+            AllReduce => "ar",
             ParamCopy => "param_copy",
         }
     }
@@ -161,7 +164,7 @@ impl OpType {
             IE | AttnN | QkvRe | AttnRa | MlpN | MlpGs | MlpGu | MlpRa | Ln
             | GradAccum | OptStep => OpKind::Vector,
             QkvS | QkvT | QkvC | AttnOr | ParamCopy => OpKind::Copy,
-            AllGather | ReduceScatter => OpKind::Comm,
+            AllGather | ReduceScatter | AllReduce => OpKind::Comm,
         }
     }
 
@@ -217,6 +220,7 @@ impl OpType {
             "opt_step" => OptStep,
             "ag" => AllGather,
             "rs" => ReduceScatter,
+            "ar" => AllReduce,
             "param_copy" => ParamCopy,
             _ => return None,
         })
@@ -256,9 +260,9 @@ impl OpRef {
         match (self.op, self.phase) {
             (OpType::OptStep, _) => "opt_step".into(),
             (OpType::GradAccum, _) => "b_ga".into(),
-            (OpType::AllGather, _) | (OpType::ReduceScatter, _) => {
-                self.op.short().into()
-            }
+            (OpType::AllGather, _)
+            | (OpType::ReduceScatter, _)
+            | (OpType::AllReduce, _) => self.op.short().into(),
             (op, Phase::Forward) => format!("f_{}", op.short()),
             (op, Phase::Backward) => format!("b_{}", op.short()),
             (op, Phase::Optimizer) => format!("opt_{}", op.short()),
@@ -302,7 +306,7 @@ mod tests {
         for op in [
             IE, AttnN, QkvIp, QkvS, QkvT, QkvRe, QkvC, AttnFa, AttnOr, AttnOp,
             AttnRa, MlpN, MlpGp, MlpGs, MlpUp, MlpGu, MlpDp, MlpRa, Ln, Lp,
-            GradAccum, OptStep, AllGather, ReduceScatter, ParamCopy,
+            GradAccum, OptStep, AllGather, ReduceScatter, AllReduce, ParamCopy,
         ] {
             assert_eq!(OpType::parse(op.short()), Some(op), "{op}");
         }
@@ -325,7 +329,7 @@ mod tests {
 
     #[test]
     fn opref_parse_roundtrip() {
-        for name in ["f_attn_fa", "b_mlp_up", "b_ga", "opt_step", "ag", "rs"] {
+        for name in ["f_attn_fa", "b_mlp_up", "b_ga", "opt_step", "ag", "rs", "ar"] {
             let r = OpRef::parse(name).unwrap();
             assert_eq!(r.paper_name(), name);
         }

@@ -30,15 +30,15 @@
 use std::collections::{BinaryHeap, VecDeque};
 use std::sync::Arc;
 
-use crate::config::{ModelConfig, NodeSpec, WorkloadConfig};
+use crate::config::{ModelConfig, NodeSpec, Topology, WorkloadConfig};
 use crate::fsdp::{
-    build_program, simulate_gather_pattern, AllocStats, DispatchItem, HostSync,
-    ProgKernel,
+    build_program_topo, simulate_gather_pattern, AllocStats, CommGroup,
+    DispatchItem, HostSync, ProgKernel,
 };
 use crate::model::ops::OpType;
 use crate::sim::duration::{DurationModel, KernelTiming};
 use crate::sim::dvfs::{DvfsGovernor, WindowActivity};
-use crate::sim::interconnect::{collective_base_ns, CollPhase, CollState};
+use crate::sim::interconnect::{group_collective_base_ns, CollPhase, CollState};
 use crate::trace::event::{PowerSample, PowerTrace, Stream, Trace, TraceEvent};
 use crate::util::hash::FxHashMap;
 use crate::util::intern::{intern, Sym};
@@ -123,6 +123,17 @@ impl HostActivity {
             .and_then(|w| w.get(widx as usize))
             .copied()
             .unwrap_or(0.0)
+    }
+
+    /// The activity of node 0's ranks only (the first `gpus_per_node`),
+    /// for feeding the single-host CPU model on multi-node runs. On one
+    /// node this is a plain copy of the full activity.
+    pub fn node0(&self, gpus_per_node: usize) -> HostActivity {
+        HostActivity {
+            window_ns: self.window_ns,
+            busy: self.busy.iter().take(gpus_per_node).cloned().collect(),
+            span_ns: self.span_ns,
+        }
     }
 }
 
@@ -258,13 +269,23 @@ struct RankState {
 // ---------------------------------------------------------------------------
 
 pub struct Engine<'a> {
-    node: &'a NodeSpec,
+    topo: Topology,
     wl: &'a WorkloadConfig,
     params: EngineParams,
     ranks: Vec<RankState>,
+    /// Collective *instances*: one per rendezvous group of each program
+    /// collective (one instance for world-scoped collectives, one per
+    /// node for intra-node HSDP collectives, one per local-GPU index for
+    /// cross-node HSDP all-reduces).
     colls: Vec<CollState>,
-    /// Index of the collective currently in (or awaiting) transfer, if any.
-    active_transfer: bool,
+    /// First instance index of each program collective id.
+    coll_base: Vec<usize>,
+    /// Rendezvous group of each program collective id.
+    coll_group: Vec<CommGroup>,
+    /// Instance indices currently in the Transfer phase. At most one on a
+    /// single node (world-scoped collectives serialize on the comm
+    /// streams); under HSDP, disjoint node groups transfer concurrently.
+    active_transfers: Vec<usize>,
     heap: BinaryHeap<Ev>,
     ev_seq: u64,
     now: f64,
@@ -286,6 +307,7 @@ pub struct Engine<'a> {
     // Interned comm-kernel names (one per collective flavor).
     name_allgather: Sym,
     name_reduce_scatter: Sym,
+    name_allreduce: Sym,
     // Output.
     events: Vec<TraceEvent>,
     power: PowerTrace,
@@ -301,14 +323,30 @@ pub struct Engine<'a> {
 }
 
 impl<'a> Engine<'a> {
+    /// Single-node engine over a plain [`NodeSpec`] — the original entry
+    /// point, byte-identical to [`Engine::with_topology`] on
+    /// [`Topology::single`] (pinned by `tests/pipeline.rs`).
     pub fn new(
         node: &'a NodeSpec,
         cfg: &ModelConfig,
         wl: &'a WorkloadConfig,
         params: EngineParams,
     ) -> Self {
-        let r = node.num_gpus as usize;
-        let program = Arc::new(build_program(cfg, wl, r as u64));
+        Self::with_topology(Topology::single(node.clone()), cfg, wl, params)
+    }
+
+    /// Engine over a full cluster topology: `topo.world_size()` flat
+    /// ranks, hierarchical collective costs, and (under
+    /// [`Sharding::Hsdp`](crate::config::Sharding)) node-scoped
+    /// rendezvous groups whose transfers overlap across nodes.
+    pub fn with_topology(
+        topo: Topology,
+        cfg: &ModelConfig,
+        wl: &'a WorkloadConfig,
+        params: EngineParams,
+    ) -> Self {
+        let r = topo.world_size() as usize;
+        let program = Arc::new(build_program_topo(cfg, wl, &topo));
 
         // Allocator behaviour decides the HBM power-noise level (Obs. 6).
         let alloc = simulate_gather_pattern(
@@ -323,15 +361,29 @@ impl<'a> Engine<'a> {
         let noise_w =
             params.hbm_noise_quiet_w + params.hbm_noise_scale_w * spike_var;
 
-        let far_rank = Rng::substream(wl.seed, "far_rank").range_usize(0, r);
+        // One NUMA-far GPU per node (each chassis has its own two-socket
+        // doorbell asymmetry). Node 0 keeps the original substream label so
+        // the single-node trace is bit-identical to the pre-topology path.
+        let gpn = topo.gpus_per_node() as usize;
+        let far_locals: Vec<usize> = (0..topo.num_nodes as usize)
+            .map(|n| {
+                let label = if n == 0 {
+                    "far_rank".to_string()
+                } else {
+                    format!("far_rank_node{n}")
+                };
+                Rng::substream(wl.seed, &label).range_usize(0, gpn)
+            })
+            .collect();
         let mut ranks = Vec::with_capacity(r);
         for g in 0..r {
             let mut rng = Rng::substream(wl.seed, &format!("rank{g}"));
             let host_scale = (1.0 + params.rank_jitter * rng.gauss()).clamp(0.8, 1.3);
             let compute_scale =
                 (1.0 + params.compute_jitter * rng.gauss()).clamp(0.9, 1.1);
+            let is_far = g % gpn == far_locals[g / gpn];
             let comm_delay_ns = rng.gauss().abs() * params.comm_delay_sigma_ns
-                + if g == far_rank { params.far_rank_delay_ns } else { 0.0 };
+                + if is_far { params.far_rank_delay_ns } else { 0.0 };
             ranks.push(RankState {
                 item_idx: 0,
                 host_time: 0.0,
@@ -351,7 +403,7 @@ impl<'a> Engine<'a> {
                 // runs the identical allocator pattern), so all governors
                 // share one noise stream; divergence between ranks comes
                 // from their (slightly) different activity histories.
-                gov: DvfsGovernor::new(node.gpu.clone(), wl.seed, 0, noise_w),
+                gov: DvfsGovernor::new(topo.node.gpu.clone(), wl.seed, 0, noise_w),
                 win_start: 0.0,
                 win: WindowActivity::default(),
                 comm_accounted: 0.0,
@@ -363,7 +415,7 @@ impl<'a> Engine<'a> {
             });
         }
 
-        let dur = DurationModel::new(node.gpu.clone(), wl.batch, cfg.q_heads);
+        let dur = DurationModel::new(topo.node.gpu.clone(), wl.batch, cfg.q_heads);
 
         // One pass over the program: per-item timings (the duration model
         // is a pure function of the descriptor) and output capacities.
@@ -388,17 +440,48 @@ impl<'a> Engine<'a> {
             }
         }
 
-        let colls = program
-            .collectives()
-            .map(|c| CollState::new(c.clone(), r, collective_base_ns(node, c.bytes)))
-            .collect();
+        // Expand each program collective into its rendezvous-group
+        // instances. On one node (or flat FSDP) every collective is
+        // world-scoped: exactly one instance whose index equals the
+        // program id, so instance lookups reduce to the old `colls[cid]`.
+        let mut colls: Vec<CollState> = Vec::with_capacity(comm_count);
+        let mut coll_base: Vec<usize> = Vec::with_capacity(comm_count);
+        let mut coll_group: Vec<CommGroup> = Vec::with_capacity(comm_count);
+        for c in program.collectives() {
+            debug_assert_eq!(c.id as usize, coll_base.len(), "dense comm ids");
+            coll_base.push(colls.len());
+            coll_group.push(c.group);
+            let base_ns = group_collective_base_ns(&topo, c.group, c.bytes);
+            match c.group {
+                CommGroup::World => {
+                    colls.push(CollState::new(c.clone(), r, base_ns));
+                }
+                CommGroup::IntraNode => {
+                    for n in 0..topo.num_nodes {
+                        let parts: Vec<usize> =
+                            topo.node_ranks(n).map(|x| x as usize).collect();
+                        colls.push(CollState::for_group(c.clone(), parts, r, base_ns));
+                    }
+                }
+                CommGroup::CrossNode => {
+                    for local in 0..topo.gpus_per_node() {
+                        let parts: Vec<usize> = (0..topo.num_nodes)
+                            .map(|n| topo.rank_of(n, local) as usize)
+                            .collect();
+                        colls.push(CollState::for_group(c.clone(), parts, r, base_ns));
+                    }
+                }
+            }
+        }
 
         let mut eng = Self {
-            node,
+            topo,
             wl,
             ranks,
             colls,
-            active_transfer: false,
+            coll_base,
+            coll_group,
+            active_transfers: Vec::new(),
             heap: BinaryHeap::with_capacity(8 * r + 64),
             ev_seq: 0,
             now: 0.0,
@@ -409,6 +492,7 @@ impl<'a> Engine<'a> {
             device_work: 0,
             name_allgather: intern("rccl_AllGather_bf16"),
             name_reduce_scatter: intern("rccl_ReduceScatter_bf16"),
+            name_allreduce: intern("rccl_AllReduce_bf16"),
             events: Vec::with_capacity((compute_kernels + comm_count) * r),
             power: PowerTrace::default(),
             host: HostActivity {
@@ -430,6 +514,18 @@ impl<'a> Engine<'a> {
             eng.push(eng.params.dvfs_window_ns, EvKind::DvfsTick { rank: g });
         }
         eng
+    }
+
+    /// The collective *instance* rank `rank` rendezvouses on for program
+    /// collective `cid`. With world-scoped collectives (any single-node
+    /// program) this is exactly the old `colls[cid]` lookup.
+    fn coll_inst(&self, rank: usize, cid: u64) -> usize {
+        let base = self.coll_base[cid as usize];
+        match self.coll_group[cid as usize] {
+            CommGroup::World => base,
+            CommGroup::IntraNode => base + self.topo.node_of(rank as u32) as usize,
+            CommGroup::CrossNode => base + self.topo.local_of(rank as u32) as usize,
+        }
     }
 
     fn push(&mut self, t: f64, kind: EvKind) {
@@ -472,7 +568,7 @@ impl<'a> Engine<'a> {
                     let r = &mut self.ranks[rank];
                     let jit = 1.0
                         + self.params.dispatch_jitter * r.rng.f64().powi(3);
-                    let cost = self.node.cpu.dispatch_ns * r.host_scale * jit;
+                    let cost = self.topo.node.cpu.dispatch_ns * r.host_scale * jit;
                     Self::host_busy(&mut self.host, rank, r.host_time, cost);
                     r.host_time += cost;
                     let t_launch = r.host_time;
@@ -486,13 +582,14 @@ impl<'a> Engine<'a> {
                 }
                 DispatchItem::Comm(c) => {
                     let id = c.id;
+                    let inst = self.coll_inst(rank, id);
                     let r = &mut self.ranks[rank];
                     // Collective dispatch is cheaper than a kernel launch.
-                    let cost = self.node.cpu.dispatch_ns * 0.6 * r.host_scale;
+                    let cost = self.topo.node.cpu.dispatch_ns * 0.6 * r.host_scale;
                     Self::host_busy(&mut self.host, rank, r.host_time, cost);
                     r.host_time += cost;
                     let t_launch = r.host_time;
-                    self.colls[id as usize].t_launch[rank] = t_launch;
+                    self.colls[inst].t_launch[rank] = t_launch;
                     r.comm_q.push_back((id, t_launch));
                     r.item_idx += 1;
                     self.device_work += 1;
@@ -500,13 +597,14 @@ impl<'a> Engine<'a> {
                 }
                 DispatchItem::Sync(HostSync::Collective(id)) => {
                     let id = *id;
-                    if self.colls[id as usize].is_done() {
-                        let end = self.colls[id as usize].end_time;
+                    let inst = self.coll_inst(rank, id);
+                    if self.colls[inst].is_done() {
+                        let end = self.colls[inst].end_time;
                         let r = &mut self.ranks[rank];
                         r.host_time = r.host_time.max(end);
                         r.item_idx += 1;
                     } else {
-                        self.colls[id as usize].host_waiters.push(rank);
+                        self.colls[inst].host_waiters.push(rank);
                         self.ranks[rank].block = HostBlock::Collective(id);
                         return;
                     }
@@ -555,7 +653,9 @@ impl<'a> Engine<'a> {
     fn wake_host(&mut self, rank: usize) {
         let ready = match self.ranks[rank].block {
             HostBlock::None => false,
-            HostBlock::Collective(id) => self.colls[id as usize].is_done(),
+            HostBlock::Collective(id) => {
+                self.colls[self.coll_inst(rank, id)].is_done()
+            }
             HostBlock::Device => self.rank_idle(rank),
         };
         if ready {
@@ -582,11 +682,19 @@ impl<'a> Engine<'a> {
         let freq_factor = 1.0 / ((1.0 - mbf) / fr + mbf / mfr);
         let mem_sens = 0.25 + 0.75 * mbf;
         let occupied = r.comm_occupied.is_some();
+        // HBM contention applies while the collective occupying *this
+        // rank's* comm stream is in its transfer phase. (On one node this
+        // is exactly the old global `occupied && active_transfer` check:
+        // world-scoped collectives serialize, so the only possible
+        // transfer is the one occupying every rank.)
+        let in_transfer = r
+            .comm_occupied
+            .map(|ci| self.colls[ci].phase == CollPhase::Transfer)
+            .unwrap_or(false);
         let cont = 1.0
             + mem_sens
                 * (self.params.spin_penalty * occupied as u8 as f64
-                    + self.params.transfer_penalty
-                        * (occupied && self.active_transfer) as u8 as f64);
+                    + self.params.transfer_penalty * in_transfer as u8 as f64);
         freq_factor * r.compute_scale / cont
     }
 
@@ -600,7 +708,8 @@ impl<'a> Engine<'a> {
         let wait_comm = self.prog_kernel(front.item_idx).wait_comm;
         // Collective dependency?
         if let Some(cid) = wait_comm {
-            let c = &mut self.colls[cid as usize];
+            let inst = self.coll_inst(rank, cid);
+            let c = &mut self.colls[inst];
             if !c.is_done() {
                 c.kernel_waiters.push(rank);
                 self.ranks[rank].parked = true;
@@ -609,8 +718,8 @@ impl<'a> Engine<'a> {
         }
         let ready = front
             .t_launch
-            .max(self.colls_ready_time(wait_comm))
-            + self.node.cpu.launch_latency_ns;
+            .max(self.colls_ready_time(rank, wait_comm))
+            + self.topo.node.cpu.launch_latency_ns;
         if ready > self.now {
             // Schedule a wake-up; dedupe timers.
             if self.ranks[rank].compute_timer.is_nan()
@@ -648,7 +757,7 @@ impl<'a> Engine<'a> {
         self.ranks[rank].inflight = Some(inflight);
         self.push(end, EvKind::KernelEnd { rank, gen });
         // Compute starting changes collective contention.
-        self.retune_transfer();
+        self.retune_transfers(rank);
     }
 
     /// The program kernel behind a queue entry.
@@ -659,9 +768,9 @@ impl<'a> Engine<'a> {
         }
     }
 
-    fn colls_ready_time(&self, wait: Option<u64>) -> f64 {
+    fn colls_ready_time(&self, rank: usize, wait: Option<u64>) -> f64 {
         match wait {
-            Some(id) => self.colls[id as usize].end_time,
+            Some(id) => self.colls[self.coll_inst(rank, id)].end_time,
             None => 0.0,
         }
     }
@@ -737,7 +846,7 @@ impl<'a> Engine<'a> {
         self.ranks[rank].completed_kernels += 1;
         self.device_work -= 1;
         self.emit_compute_event(rank, k);
-        self.retune_transfer();
+        self.retune_transfers(rank);
         self.try_compute(rank);
         self.try_comm(rank); // a stream-event wait may now be satisfied
         self.wake_host(rank);
@@ -818,23 +927,22 @@ impl<'a> Engine<'a> {
         let Some(&(cid, t_launch)) = self.ranks[rank].comm_q.front() else {
             return;
         };
+        let inst = self.coll_inst(rank, cid);
         // Cross-stream event dependency: the collective may not start
         // until the compute kernels enqueued before it have completed on
         // this rank (re-checked from on_kernel_end).
-        if self.ranks[rank].completed_kernels
-            < self.colls[cid as usize].desc.wait_seq
-        {
+        if self.ranks[rank].completed_kernels < self.colls[inst].desc.wait_seq {
             return;
         }
         // The rank's comm-dispatch delay applies from the moment the
         // stream-event gate is satisfied (now), not from the (far-ahead)
         // host launch time; memoize so rescheduling stays idempotent.
         let ready = {
-            let c = &mut self.colls[cid as usize];
+            let c = &mut self.colls[inst];
             if c.ready_at[rank].is_nan() {
                 c.ready_at[rank] = self
                     .now
-                    .max(t_launch + self.node.cpu.launch_latency_ns)
+                    .max(t_launch + self.topo.node.cpu.launch_latency_ns)
                     + self.ranks[rank].comm_delay_ns;
             }
             c.ready_at[rank]
@@ -850,33 +958,48 @@ impl<'a> Engine<'a> {
         }
         self.ranks[rank].comm_timer = f64::NAN;
         self.ranks[rank].comm_q.pop_front();
-        self.ranks[rank].comm_occupied = Some(cid as usize);
+        self.ranks[rank].comm_occupied = Some(inst);
         self.ranks[rank].comm_accounted = self.now;
         // RCCL kernel now holds CUs on this rank: compute slows down.
         self.rescale_compute(rank);
-        let all_arrived = self.colls[cid as usize].arrive(rank, self.now);
+        let all_arrived = self.colls[inst].arrive(rank, self.now);
         if all_arrived {
-            self.active_transfer = true;
-            // Transfer contends with compute on every rank.
-            for g in 0..self.ranks.len() {
+            self.active_transfers.push(inst);
+            // Transfer contends with compute on every participating rank
+            // (every rank, when the collective is world-scoped).
+            for pi in 0..self.colls[inst].participants.len() {
+                let g = self.colls[inst].participants[pi];
                 self.rescale_compute(g);
             }
-            self.retune_transfer();
+            self.retune_one(inst);
         }
     }
 
-    /// Recompute the in-flight transfer's rate from current compute
-    /// activity and reschedule its end event.
-    fn retune_transfer(&mut self) {
-        let Some(idx) = self.transfer_idx() else {
-            return;
+    /// Recompute the rate of every in-flight transfer `rank` participates
+    /// in and reschedule its end event. On one node there is at most one
+    /// active transfer and every rank participates — the old single
+    /// global retune, unchanged.
+    fn retune_transfers(&mut self, rank: usize) {
+        for i in 0..self.active_transfers.len() {
+            let idx = self.active_transfers[i];
+            if self.colls[idx].participants.contains(&rank) {
+                self.retune_one(idx);
+            }
+        }
+    }
+
+    /// Recompute one in-flight transfer's rate from the compute activity
+    /// of its participants and reschedule its end event.
+    fn retune_one(&mut self, idx: usize) {
+        debug_assert_eq!(self.colls[idx].phase, CollPhase::Transfer);
+        let busy = {
+            let c = &self.colls[idx];
+            c.participants
+                .iter()
+                .filter(|&&p| self.ranks[p].inflight.is_some())
+                .count() as f64
+                / c.participants.len() as f64
         };
-        let busy = self
-            .ranks
-            .iter()
-            .filter(|r| r.inflight.is_some())
-            .count() as f64
-            / self.ranks.len() as f64;
         let c = &mut self.colls[idx];
         c.advance(self.now);
         c.rate = 1.0 / (1.0 + self.params.comm_stretch * busy);
@@ -884,16 +1007,6 @@ impl<'a> Engine<'a> {
         let gen = c.gen;
         let end = c.projected_end();
         self.push(end, EvKind::CollEnd { coll: idx, gen });
-    }
-
-    fn transfer_idx(&self) -> Option<usize> {
-        if !self.active_transfer {
-            return None;
-        }
-        // The transfer, if any, is the collective occupying rank 0's comm
-        // stream (all ranks occupy the same collective during transfer).
-        let idx = self.ranks[0].comm_occupied?;
-        (self.colls[idx].phase == CollPhase::Transfer).then_some(idx)
     }
 
     fn on_coll_end(&mut self, idx: usize, gen: u64) {
@@ -914,10 +1027,14 @@ impl<'a> Engine<'a> {
             c.phase = CollPhase::Done;
             c.end_time = self.now;
         }
-        self.active_transfer = false;
-        // Emit one trace event per rank, free comm streams.
-        for rank in 0..self.ranks.len() {
+        self.active_transfers.retain(|&i| i != idx);
+        // Emit one trace event per participant, free their comm streams.
+        // Participants are ascending, so on one node this is the old
+        // `0..ranks` walk exactly.
+        for pi in 0..self.colls[idx].participants.len() {
+            let rank = self.colls[idx].participants[pi];
             self.account_inflight(rank);
+            debug_assert_eq!(self.ranks[rank].comm_occupied, Some(idx));
             self.ranks[rank].comm_occupied = None;
             self.device_work -= 1;
             let c = &self.colls[idx];
@@ -927,6 +1044,7 @@ impl<'a> Engine<'a> {
             self.ranks[rank].seq_comm += 1;
             let name = match c.desc.op.op {
                 OpType::AllGather => self.name_allgather,
+                OpType::AllReduce => self.name_allreduce,
                 _ => self.name_reduce_scatter,
             };
             self.events.push(TraceEvent {
@@ -947,11 +1065,13 @@ impl<'a> Engine<'a> {
                 bytes: c.desc.bytes,
             });
         }
-        // Contention released: compute speeds back up.
-        for rank in 0..self.ranks.len() {
+        // Contention released: compute speeds back up on participants.
+        for pi in 0..self.colls[idx].participants.len() {
+            let rank = self.colls[idx].participants[pi];
             self.rescale_compute(rank);
         }
-        // Wake parked compute kernels and blocked hosts.
+        // Wake parked compute kernels and blocked hosts (waiters are
+        // always participants — only they rendezvous on this instance).
         let waiters = std::mem::take(&mut self.colls[idx].kernel_waiters);
         for rank in waiters {
             self.ranks[rank].parked = false;
@@ -961,8 +1081,9 @@ impl<'a> Engine<'a> {
         for rank in hosts {
             self.wake_host(rank);
         }
-        // Next collective may start on every rank.
-        for rank in 0..self.ranks.len() {
+        // Next collective may start on every participant.
+        for pi in 0..self.colls[idx].participants.len() {
+            let rank = self.colls[idx].participants[pi];
             self.try_comm(rank);
             self.wake_host(rank);
         }
@@ -1079,7 +1200,10 @@ impl<'a> Engine<'a> {
         let mut trace = Trace::default();
         trace.meta.workload = self.wl.label();
         trace.meta.fsdp = self.wl.fsdp.to_string();
-        trace.meta.num_gpus = self.node.num_gpus;
+        trace.meta.num_gpus = self.topo.world_size();
+        trace.meta.num_nodes = self.topo.num_nodes;
+        trace.meta.gpus_per_node = self.topo.gpus_per_node();
+        trace.meta.sharding = self.wl.sharding.to_string();
         trace.meta.iterations = self.wl.iterations;
         trace.meta.warmup = self.wl.warmup;
         trace.meta.seed = self.wl.seed;

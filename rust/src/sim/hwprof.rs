@@ -12,11 +12,11 @@
 //! paper's constraint — and the alignment stage joins counters to the
 //! runtime trace by (gpu, stream, seq).
 
-use crate::config::{ModelConfig, NodeSpec, WorkloadConfig};
+use crate::config::{ModelConfig, NodeSpec, Topology, WorkloadConfig};
 use crate::counters::{collection_passes, Counter, CounterTrace, CounterValues};
-use crate::fsdp::{build_program, DispatchItem};
+use crate::fsdp::{build_program_topo, DispatchItem};
 use crate::sim::duration::DurationModel;
-use crate::sim::interconnect::collective_base_ns;
+use crate::sim::interconnect::group_collective_base_ns;
 use crate::trace::event::Stream;
 
 /// Key a kernel the same way the runtime engine does: per-(gpu, stream)
@@ -29,8 +29,8 @@ pub fn align_key(stream: Stream, seq: u64) -> u64 {
         }
 }
 
-/// Run the multi-pass counter collection. `per_pass` mirrors the paper's
-/// "two or three at a time".
+/// Run the multi-pass counter collection on a single node. `per_pass`
+/// mirrors the paper's "two or three at a time".
 pub fn collect_counters(
     node: &NodeSpec,
     cfg: &ModelConfig,
@@ -38,7 +38,21 @@ pub fn collect_counters(
     counters: &[Counter],
     per_pass: usize,
 ) -> CounterTrace {
-    let program = build_program(cfg, wl, node.num_gpus as u64);
+    collect_counters_topo(&Topology::single(node.clone()), cfg, wl, counters, per_pass)
+}
+
+/// [`collect_counters`] over a full cluster topology: the serialized
+/// program matches the runtime program (HSDP included, so comm-stream seq
+/// numbers align), and records replicate across all `world_size()` ranks.
+pub fn collect_counters_topo(
+    topo: &Topology,
+    cfg: &ModelConfig,
+    wl: &WorkloadConfig,
+    counters: &[Counter],
+    per_pass: usize,
+) -> CounterTrace {
+    let node = &topo.node;
+    let program = build_program_topo(cfg, wl, topo);
     let dur = DurationModel::new(node.gpu.clone(), wl.batch, cfg.q_heads);
     let mut out = CounterTrace::default();
 
@@ -88,7 +102,7 @@ pub fn collect_counters(
                     // Serialized collectives still execute (and get
                     // counters), but their durations are meaningless for
                     // overlap analysis.
-                    let ns = collective_base_ns(node, c.bytes);
+                    let ns = group_collective_base_ns(topo, c.group, c.bytes);
                     let key = align_key(Stream::Comm, seq_comm);
                     seq_comm += 1;
                     let mut v = CounterValues::default();
@@ -108,7 +122,7 @@ pub fn collect_counters(
                 _ => {}
             }
         }
-        for gpu in 0..node.num_gpus {
+        for gpu in 0..topo.world_size() {
             for (key, v) in &values {
                 match out.get(gpu, *key) {
                     Some(_) => {

@@ -13,8 +13,8 @@
 //!    bandwidth on every rank — and compute contends back, stretching the
 //!    transfer (Insight 2's "median comm scales with compute time").
 
-use crate::config::NodeSpec;
-use crate::fsdp::CollectiveDesc;
+use crate::config::{NodeSpec, Topology};
+use crate::fsdp::{CollectiveDesc, CommGroup};
 
 /// Fixed RCCL launch/rendezvous cost per collective (ns).
 pub const COLL_FIXED_NS: f64 = 15_000.0;
@@ -22,6 +22,57 @@ pub const COLL_FIXED_NS: f64 = 15_000.0;
 /// Base (uncontended) transfer time of a ring collective, ns.
 pub fn collective_base_ns(node: &NodeSpec, bytes: f64) -> f64 {
     node.ring_collective_ns(bytes) + COLL_FIXED_NS
+}
+
+/// Inter-node phase of a world-scoped hierarchical collective, ns.
+/// **Exactly zero at one node** — the degenerate-topology guarantee
+/// (DESIGN.md §8) reduces [`hierarchical_collective_ns`] to
+/// [`collective_base_ns`] bit for bit.
+///
+/// Model: a two-level ring. Level 1 is the intra-node ring over the xGMI
+/// mesh (priced by [`collective_base_ns`]); level 2 runs G concurrent
+/// cross-node rings — one per local GPU index, each over its own
+/// rail-optimized NIC — moving each rank's `bytes / world` shard through
+/// `N - 1` steps, plus a second rendezvous (each level synchronizes
+/// independently in RCCL's hierarchical algorithms).
+pub fn inter_node_phase_ns(topo: &Topology, bytes: f64) -> f64 {
+    if topo.num_nodes <= 1 {
+        return 0.0;
+    }
+    let n = topo.num_nodes as f64;
+    let world = topo.world_size() as f64;
+    let steps = n - 1.0;
+    let chunk = bytes / world;
+    let eff_bw = (topo.nic.nic_bw * topo.nic.eff).max(1.0);
+    steps * (chunk / eff_bw * 1e9 + topo.nic.latency_ns) + COLL_FIXED_NS
+}
+
+/// Base (uncontended) time of a world-scoped collective over the whole
+/// topology: intra-node ring + inter-node NIC phase.
+pub fn hierarchical_collective_ns(topo: &Topology, bytes: f64) -> f64 {
+    collective_base_ns(&topo.node, bytes) + inter_node_phase_ns(topo, bytes)
+}
+
+/// Base time of a cross-node ring all-reduce of one rank's `shard_bytes`
+/// among its `num_nodes` same-local-index peers (HSDP gradient sync):
+/// reduce-scatter + all-gather over the ring, `2(N-1)` steps of
+/// `shard_bytes / N` each over the rank's NIC.
+pub fn cross_node_allreduce_ns(topo: &Topology, shard_bytes: f64) -> f64 {
+    let n = topo.num_nodes as f64;
+    let steps = 2.0 * (n - 1.0).max(0.0);
+    let chunk = shard_bytes / n.max(1.0);
+    let eff_bw = (topo.nic.nic_bw * topo.nic.eff).max(1.0);
+    steps * (chunk / eff_bw * 1e9 + topo.nic.latency_ns) + COLL_FIXED_NS
+}
+
+/// Base duration of a collective by its communication scope (the engine's
+/// per-instance cost oracle).
+pub fn group_collective_base_ns(topo: &Topology, group: CommGroup, bytes: f64) -> f64 {
+    match group {
+        CommGroup::World => hierarchical_collective_ns(topo, bytes),
+        CommGroup::IntraNode => collective_base_ns(&topo.node, bytes),
+        CommGroup::CrossNode => cross_node_allreduce_ns(topo, bytes),
+    }
 }
 
 /// Lifecycle phase of one collective.
@@ -37,10 +88,18 @@ pub enum CollPhase {
 }
 
 /// Rendezvous + fluid-progress state of one collective instance.
+///
+/// One *instance* spans one rendezvous group: the whole world for FSDP
+/// collectives, one node's ranks for an HSDP intra-node collective, or
+/// one cross-node shard group for an HSDP all-reduce. Per-rank arrays stay
+/// world-sized (indexed by flat rank); `participants` defines who must
+/// arrive before the transfer starts.
 #[derive(Debug, Clone)]
 pub struct CollState {
     pub desc: CollectiveDesc,
     pub phase: CollPhase,
+    /// Flat ranks participating in this instance, ascending.
+    pub participants: Vec<usize>,
     /// Local comm-stream occupancy start per rank (NaN = not arrived).
     pub local_start: Vec<f64>,
     pub arrived: u32,
@@ -64,14 +123,29 @@ pub struct CollState {
 }
 
 impl CollState {
+    /// World-scoped instance: every rank `0..ranks` participates (the
+    /// single-node / FSDP shape).
     pub fn new(desc: CollectiveDesc, ranks: usize, base_ns: f64) -> Self {
+        Self::for_group(desc, (0..ranks).collect(), ranks, base_ns)
+    }
+
+    /// Instance over an explicit participant subset of a `world`-rank
+    /// cluster (HSDP node-scoped / cross-node-scoped collectives).
+    pub fn for_group(
+        desc: CollectiveDesc,
+        participants: Vec<usize>,
+        world: usize,
+        base_ns: f64,
+    ) -> Self {
+        debug_assert!(participants.iter().all(|&r| r < world));
         Self {
             desc,
             phase: CollPhase::Pending,
-            local_start: vec![f64::NAN; ranks],
+            participants,
+            local_start: vec![f64::NAN; world],
             arrived: 0,
-            t_launch: vec![f64::NAN; ranks],
-            ready_at: vec![f64::NAN; ranks],
+            t_launch: vec![f64::NAN; world],
+            ready_at: vec![f64::NAN; world],
             work_s: base_ns * 1e-9,
             rate: 1.0,
             last_update: 0.0,
@@ -82,14 +156,14 @@ impl CollState {
         }
     }
 
-    /// Record a rank's arrival. Returns true when this was the last rank
-    /// (transfer may begin).
+    /// Record a rank's arrival. Returns true when this was the last
+    /// participant (transfer may begin).
     pub fn arrive(&mut self, rank: usize, t: f64) -> bool {
         debug_assert!(self.local_start[rank].is_nan(), "double arrival");
         self.local_start[rank] = t;
         self.arrived += 1;
         self.phase = CollPhase::Arriving;
-        if self.arrived as usize == self.local_start.len() {
+        if self.arrived as usize == self.participants.len() {
             self.phase = CollPhase::Transfer;
             self.last_update = t;
             true
@@ -129,6 +203,7 @@ mod tests {
             id: 0,
             op: OpRef::fwd(OpType::AllGather),
             scope: CommScope::Layer(0),
+            group: CommGroup::World,
             iter: 0,
             bytes: 1e9,
             wait_seq: 0,
@@ -169,6 +244,70 @@ mod tests {
         c.rate = 0.5;
         let end = c.projected_end();
         assert!((end - (base / 2.0 + base)).abs() < 1.0, "end {end}");
+    }
+
+    #[test]
+    fn hierarchical_degenerates_at_one_node() {
+        use crate::config::Topology;
+        let topo = Topology::single(NodeSpec::mi300x_node());
+        for bytes in [1e6, 1e8, 4e9] {
+            let flat = collective_base_ns(&topo.node, bytes);
+            let hier = hierarchical_collective_ns(&topo, bytes);
+            assert_eq!(flat.to_bits(), hier.to_bits(), "bytes {bytes}");
+            assert_eq!(inter_node_phase_ns(&topo, bytes), 0.0);
+        }
+    }
+
+    #[test]
+    fn hierarchical_never_cheaper_than_intra() {
+        use crate::config::Topology;
+        for n in [2u32, 4, 8] {
+            let topo = Topology::mi300x_cluster(n);
+            for bytes in [1e6, 1e8, 4e9] {
+                assert!(
+                    hierarchical_collective_ns(&topo, bytes)
+                        >= collective_base_ns(&topo.node, bytes),
+                    "N{n} bytes {bytes}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn group_costs_dispatch_by_scope() {
+        use crate::config::Topology;
+        let topo = Topology::mi300x_cluster(2);
+        let b = 1e9;
+        assert_eq!(
+            group_collective_base_ns(&topo, CommGroup::World, b).to_bits(),
+            hierarchical_collective_ns(&topo, b).to_bits()
+        );
+        assert_eq!(
+            group_collective_base_ns(&topo, CommGroup::IntraNode, b).to_bits(),
+            collective_base_ns(&topo.node, b).to_bits()
+        );
+        assert_eq!(
+            group_collective_base_ns(&topo, CommGroup::CrossNode, b).to_bits(),
+            cross_node_allreduce_ns(&topo, b).to_bits()
+        );
+    }
+
+    #[test]
+    fn subgroup_rendezvous_ignores_outsiders() {
+        let node = NodeSpec::mi300x_node();
+        // Ranks {1, 3} of a 4-rank world: the transfer starts when both
+        // arrive, regardless of ranks 0/2.
+        let mut c = CollState::for_group(
+            desc(),
+            vec![1, 3],
+            4,
+            collective_base_ns(&node, 1e9),
+        );
+        assert!(!c.arrive(1, 10.0));
+        assert_eq!(c.phase, CollPhase::Arriving);
+        assert!(c.arrive(3, 25.0));
+        assert_eq!(c.phase, CollPhase::Transfer);
+        assert_eq!(c.last_update, 25.0);
     }
 
     #[test]

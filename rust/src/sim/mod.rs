@@ -15,10 +15,13 @@ pub use cpu::{cpu_trace, HostModelParams};
 pub use duration::{DurationModel, KernelTiming};
 pub use dvfs::{DvfsGovernor, WindowActivity};
 pub use engine::{Engine, EngineParams, HostActivity, SimOutput};
-pub use hwprof::{align_key, collect_counters};
-pub use interconnect::{collective_base_ns, CollPhase, CollState};
+pub use hwprof::{align_key, collect_counters, collect_counters_topo};
+pub use interconnect::{
+    collective_base_ns, cross_node_allreduce_ns, group_collective_base_ns,
+    hierarchical_collective_ns, inter_node_phase_ns, CollPhase, CollState,
+};
 
-use crate::config::{ModelConfig, NodeSpec, WorkloadConfig};
+use crate::config::{ModelConfig, NodeSpec, Topology, WorkloadConfig};
 use crate::counters::{Counter, CounterTrace};
 use crate::trace::event::{CpuTrace, PowerTrace, Trace};
 
@@ -56,6 +59,41 @@ pub fn run_workload_with(
     let out = Engine::new(node, cfg, wl, params).run();
     let counters = collect_counters(node, cfg, wl, &Counter::ALL, 3);
     let cpu = cpu_trace(node, &out.host, wl.seed, &HostModelParams::default());
+    ProfiledRun {
+        trace: out.trace,
+        counters,
+        power: out.power,
+        cpu,
+        alloc: out.alloc,
+        iter_bounds: out.iter_bounds,
+    }
+}
+
+/// Simulate + profile one workload on a full cluster [`Topology`] with
+/// default mechanism parameters. `Topology::single(node)` is byte-identical
+/// to [`run_workload`] (pinned by `tests/pipeline.rs`).
+pub fn run_workload_topo(
+    topo: &Topology,
+    cfg: &ModelConfig,
+    wl: &WorkloadConfig,
+) -> ProfiledRun {
+    run_workload_topo_with(topo, cfg, wl, EngineParams::default())
+}
+
+/// [`run_workload_topo`] with explicit engine parameters.
+pub fn run_workload_topo_with(
+    topo: &Topology,
+    cfg: &ModelConfig,
+    wl: &WorkloadConfig,
+    params: EngineParams,
+) -> ProfiledRun {
+    let out = Engine::with_topology(topo.clone(), cfg, wl, params).run();
+    let counters = collect_counters_topo(topo, cfg, wl, &Counter::ALL, 3);
+    // The CPU model covers node 0's host complex (every node is
+    // statistically identical; on one node this is the full activity —
+    // the byte-identical degenerate case).
+    let host0 = out.host.node0(topo.gpus_per_node() as usize);
+    let cpu = cpu_trace(&topo.node, &host0, wl.seed, &HostModelParams::default());
     ProfiledRun {
         trace: out.trace,
         counters,
@@ -298,6 +336,135 @@ mod tests {
         assert!(!run.cpu.samples.is_empty());
         // Counters align with the first compute kernel.
         let v = run.counters.get(0, align_key(Stream::Compute, 0));
+        assert!(v.is_some());
+    }
+
+    #[test]
+    fn single_node_topology_matches_nodespec_engine_bitwise() {
+        let (node, cfg, wl) = small();
+        let flat = Engine::new(&node, &cfg, &wl, EngineParams::default()).run();
+        let topo = crate::config::Topology::single(node.clone());
+        let t = Engine::with_topology(topo, &cfg, &wl, EngineParams::default()).run();
+        assert_eq!(flat.trace.events.len(), t.trace.events.len());
+        for (a, b) in flat.trace.events.iter().zip(&t.trace.events) {
+            assert_eq!(a.kernel_id, b.kernel_id);
+            assert_eq!(a.t_start.to_bits(), b.t_start.to_bits());
+            assert_eq!(a.t_end.to_bits(), b.t_end.to_bits());
+            assert_eq!(a.seq, b.seq);
+        }
+        assert_eq!(t.trace.meta.num_nodes, 1);
+        assert_eq!(t.trace.meta.gpus_per_node, 8);
+    }
+
+    fn multi(nodes: u32, sharding: crate::config::Sharding) -> SimOutput {
+        let (_, cfg, mut wl) = small();
+        wl.sharding = sharding;
+        let topo = crate::config::Topology::mi300x_cluster(nodes);
+        Engine::with_topology(topo, &cfg, &wl, EngineParams::default()).run()
+    }
+
+    #[test]
+    fn multinode_trace_covers_every_rank_and_comm() {
+        use crate::config::Sharding;
+        let (_, cfg, wl) = small();
+        let topo = crate::config::Topology::mi300x_cluster(2);
+        let program = crate::fsdp::build_program_topo(&cfg, &wl, &topo);
+        let out = multi(2, Sharding::Fsdp);
+        assert_eq!(out.trace.meta.num_gpus, 16);
+        assert_eq!(out.trace.meta.num_nodes, 2);
+        for gpu in 0..16u32 {
+            let comm = out
+                .trace
+                .events
+                .iter()
+                .filter(|e| e.gpu == gpu && e.stream == Stream::Comm)
+                .count();
+            assert_eq!(comm, program.collectives().count(), "gpu {gpu}");
+        }
+    }
+
+    #[test]
+    fn hsdp_emits_allreduces_and_fsdp_does_not() {
+        use crate::config::Sharding;
+        let fsdp = multi(2, Sharding::Fsdp);
+        let hsdp = multi(2, Sharding::Hsdp);
+        let ars = |o: &SimOutput| {
+            o.trace
+                .events
+                .iter()
+                .filter(|e| e.op.op == OpType::AllReduce)
+                .count()
+        };
+        assert_eq!(ars(&fsdp), 0);
+        assert!(ars(&hsdp) > 0);
+        assert_eq!(hsdp.trace.meta.sharding, "HSDP");
+    }
+
+    #[test]
+    fn hsdp_intra_node_comm_overlaps_across_nodes() {
+        // Node-scoped rendezvous groups progress independently: comm
+        // occupancy on node 0 overlaps comm occupancy on node 1 in wall
+        // time, which world-scoped collectives can never do.
+        use crate::config::Sharding;
+        let out = multi(2, Sharding::Hsdp);
+        let spans = |node: u32| -> Vec<(f64, f64)> {
+            out.trace
+                .events
+                .iter()
+                .filter(|e| {
+                    e.stream == Stream::Comm
+                        && e.op.op == OpType::AllGather
+                        && e.gpu / 8 == node
+                })
+                .map(|e| (e.t_start, e.t_end))
+                .collect()
+        };
+        let (a, b) = (spans(0), spans(1));
+        let overlapping = a.iter().any(|(s0, e0)| {
+            b.iter().any(|(s1, e1)| s0.max(*s1) < e0.min(*e1))
+        });
+        assert!(overlapping, "no cross-node comm concurrency under HSDP");
+    }
+
+    #[test]
+    fn multinode_fsdp_pays_the_inter_node_phase() {
+        // Same per-rank workload, same per-node hardware: adding a second
+        // node makes every world collective strictly more expensive, so
+        // the run gets slower end to end.
+        use crate::config::Sharding;
+        let one = multi(1, Sharding::Fsdp);
+        let two = multi(2, Sharding::Fsdp);
+        assert!(
+            two.trace.span_ns() > one.trace.span_ns(),
+            "2-node span {} !> 1-node span {}",
+            two.trace.span_ns(),
+            one.trace.span_ns()
+        );
+    }
+
+    #[test]
+    fn multinode_runs_are_deterministic() {
+        use crate::config::Sharding;
+        let a = multi(2, Sharding::Hsdp);
+        let b = multi(2, Sharding::Hsdp);
+        assert_eq!(a.trace.events.len(), b.trace.events.len());
+        let ta: Vec<u64> = a.trace.events.iter().map(|e| e.t_start.to_bits()).collect();
+        let tb: Vec<u64> = b.trace.events.iter().map(|e| e.t_start.to_bits()).collect();
+        assert_eq!(ta, tb);
+    }
+
+    #[test]
+    fn topo_profiled_run_has_all_artifacts() {
+        use crate::config::Sharding;
+        let (_, cfg, mut wl) = small();
+        wl.sharding = Sharding::Hsdp;
+        let topo = crate::config::Topology::mi300x_cluster(2);
+        let run = run_workload_topo(&topo, &cfg, &wl);
+        assert!(!run.trace.events.is_empty());
+        assert!(!run.power.samples.is_empty());
+        assert!(!run.cpu.samples.is_empty());
+        // Counters cover a far rank on node 1 as well.
+        let v = run.counters.get(15, align_key(Stream::Compute, 0));
         assert!(v.is_some());
     }
 

@@ -1,9 +1,13 @@
 //! Chrome-trace (chrome://tracing / Perfetto) JSON export + import.
 //!
 //! One "process" per GPU; two "threads" per GPU (compute / comm stream).
-//! Every event carries the Chopper annotations in `args`, so a trace
-//! written here round-trips losslessly back into a [`Trace`] — the on-disk
-//! interchange format between `chopper collect` and `chopper analyze`.
+//! Process/thread metadata rows name each pid "node<N>/gpu<L>" (and each
+//! tid "compute"/"comm") with a node-major sort index, so multi-node
+//! traces group by node when imported into Perfetto instead of showing a
+//! flat anonymous pid list. Every event carries the Chopper annotations in
+//! `args`, so a trace written here round-trips losslessly back into a
+//! [`Trace`] — the on-disk interchange format between `chopper collect`
+//! and `chopper analyze`.
 
 use crate::model::ops::OpRef;
 use crate::trace::event::{Stream, Trace, TraceEvent, TraceMeta};
@@ -30,6 +34,9 @@ pub fn to_chrome_json(trace: &Trace) -> String {
                 ("fsdp", Json::str(trace.meta.fsdp.clone())),
                 ("model", Json::str(trace.meta.model.clone())),
                 ("num_gpus", Json::num(trace.meta.num_gpus as f64)),
+                ("num_nodes", Json::num(trace.meta.nodes() as f64)),
+                ("gpus_per_node", Json::num(trace.meta.node_gpus() as f64)),
+                ("sharding", Json::str(trace.meta.sharding.clone())),
                 ("iterations", Json::num(trace.meta.iterations as f64)),
                 ("warmup", Json::num(trace.meta.warmup as f64)),
                 ("seed", Json::num(trace.meta.seed as f64)),
@@ -38,6 +45,41 @@ pub fn to_chrome_json(trace: &Trace) -> String {
             ]),
         ),
     ]));
+    // Process/thread naming rows: without these Perfetto shows a flat
+    // anonymous pid list (pid == flat gpu rank); with them every process
+    // reads "node<N>/gpu<L>" and sorts node-major, and each pid's two
+    // threads are labeled compute/comm. The importer below ignores every
+    // "M" record except chopper_meta, so round-tripping is unaffected.
+    for gpu in 0..trace.meta.num_gpus {
+        let (node, local) = (trace.meta.node_of(gpu), trace.meta.local_of(gpu));
+        events.push(Json::obj(vec![
+            ("name", Json::str("process_name")),
+            ("ph", Json::str("M")),
+            ("pid", Json::num(gpu as f64)),
+            (
+                "args",
+                Json::obj(vec![("name", Json::str(format!("node{node}/gpu{local}")))]),
+            ),
+        ]));
+        events.push(Json::obj(vec![
+            ("name", Json::str("process_sort_index")),
+            ("ph", Json::str("M")),
+            ("pid", Json::num(gpu as f64)),
+            ("args", Json::obj(vec![("sort_index", Json::num(gpu as f64))])),
+        ]));
+        for stream in [Stream::Compute, Stream::Comm] {
+            events.push(Json::obj(vec![
+                ("name", Json::str("thread_name")),
+                ("ph", Json::str("M")),
+                ("pid", Json::num(gpu as f64)),
+                ("tid", Json::num(stream_tid(stream))),
+                (
+                    "args",
+                    Json::obj(vec![("name", Json::str(stream.to_string()))]),
+                ),
+            ]));
+        }
+    }
     for e in &trace.events {
         let mut args = vec![
             ("op", Json::str(e.op.paper_name())),
@@ -107,6 +149,11 @@ pub fn from_chrome_json(text: &str) -> Result<Trace, String> {
                         fsdp: s("fsdp"),
                         model: s("model"),
                         num_gpus: n("num_gpus") as u32,
+                        // 0 when absent: TraceMeta's accessors treat that
+                        // as the legacy flat single-node layout.
+                        num_nodes: n("num_nodes") as u32,
+                        gpus_per_node: n("gpus_per_node") as u32,
+                        sharding: s("sharding"),
                         iterations: n("iterations") as u32,
                         warmup: n("warmup") as u32,
                         seed: n("seed") as u64,
@@ -256,6 +303,46 @@ mod tests {
         let back = read_chrome_trace(&path).unwrap();
         assert_eq!(back.events.len(), t.events.len());
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn process_metadata_rows_name_node_and_gpu() {
+        let mut t = sample_trace();
+        t.meta.num_gpus = 4;
+        t.meta.num_nodes = 2;
+        t.meta.gpus_per_node = 2;
+        t.meta.sharding = "HSDP".into();
+        let json = to_chrome_json(&t);
+        // pid 3 is node 1 / local gpu 1; threads are named per stream.
+        assert!(json.contains("\"process_name\""));
+        assert!(json.contains("node1/gpu1"));
+        assert!(json.contains("\"thread_name\""));
+        assert!(json.contains("\"process_sort_index\""));
+        // Topology meta round-trips.
+        let back = from_chrome_json(&json).unwrap();
+        assert_eq!(back.meta.num_nodes, 2);
+        assert_eq!(back.meta.gpus_per_node, 2);
+        assert_eq!(back.meta.sharding, "HSDP");
+        assert_eq!(back.meta.node_of(3), 1);
+        // The naming rows did not leak into the event stream.
+        assert_eq!(back.events.len(), t.events.len());
+    }
+
+    #[test]
+    fn legacy_traces_import_as_single_node() {
+        // A trace written before topology metadata existed has no
+        // num_nodes/gpus_per_node keys; the accessors fall back to flat.
+        let json = r#"{"traceEvents":[
+            {"name":"chopper_meta","ph":"M","args":{
+                "workload":"b1s4","fsdp":"FSDPv1","model":"m",
+                "num_gpus":8,"iterations":2,"warmup":1,"seed":1,
+                "source":"sim","serialized":false}}
+        ]}"#;
+        let t = from_chrome_json(json).unwrap();
+        assert_eq!(t.meta.num_nodes, 0);
+        assert_eq!(t.meta.nodes(), 1);
+        assert_eq!(t.meta.node_gpus(), 8);
+        assert!(!t.meta.multi_node());
     }
 
     #[test]

@@ -7,16 +7,18 @@
 //! here; the PJRT runtime path produces the same `Trace` schema through
 //! `runtime::traced` — the tool downstream cannot tell them apart.
 
-use crate::config::{ModelConfig, NodeSpec, WorkloadConfig};
+use crate::config::{ModelConfig, NodeSpec, Topology, WorkloadConfig};
 use crate::counters::{Counter, CounterTrace};
 use crate::sim::{self, EngineParams};
 use crate::trace::event::{CpuTrace, PowerTrace, Trace};
 
 /// Runtime profiling: timestamps + annotations (+ power/CPU telemetry,
 /// which the paper collects alongside via rocm-smi-style sampling).
+/// Profiles a full cluster [`Topology`]; [`RuntimeProfiler::new`] wraps a
+/// single node, byte-identical to the pre-topology path.
 #[derive(Debug, Clone)]
 pub struct RuntimeProfiler {
-    pub node: NodeSpec,
+    pub topo: Topology,
     pub params: EngineParams,
 }
 
@@ -32,18 +34,27 @@ pub struct RuntimeCapture {
 
 impl RuntimeProfiler {
     pub fn new(node: NodeSpec) -> Self {
+        Self::with_topology(Topology::single(node))
+    }
+
+    pub fn with_topology(topo: Topology) -> Self {
         Self {
-            node,
+            topo,
             params: EngineParams::default(),
         }
     }
 
     /// Profile one training run.
     pub fn capture(&self, cfg: &ModelConfig, wl: &WorkloadConfig) -> RuntimeCapture {
-        let out = sim::Engine::new(&self.node, cfg, wl, self.params.clone()).run();
+        let out =
+            sim::Engine::with_topology(self.topo.clone(), cfg, wl, self.params.clone())
+                .run();
+        // CPU telemetry models node 0's host (identical to the full
+        // activity on a single node).
+        let host0 = out.host.node0(self.topo.gpus_per_node() as usize);
         let cpu = sim::cpu_trace(
-            &self.node,
-            &out.host,
+            &self.topo.node,
+            &host0,
             wl.seed,
             &sim::HostModelParams::default(),
         );
@@ -61,14 +72,18 @@ impl RuntimeProfiler {
 /// time, with kernels serialized (Section III-B2).
 #[derive(Debug, Clone)]
 pub struct HardwareProfiler {
-    pub node: NodeSpec,
+    pub topo: Topology,
     /// How many counters one pass may collect (paper: 2–3).
     pub per_pass: usize,
 }
 
 impl HardwareProfiler {
     pub fn new(node: NodeSpec) -> Self {
-        Self { node, per_pass: 3 }
+        Self::with_topology(Topology::single(node))
+    }
+
+    pub fn with_topology(topo: Topology) -> Self {
+        Self { topo, per_pass: 3 }
     }
 
     /// Collect `counters` for every kernel of the workload, re-running the
@@ -79,7 +94,7 @@ impl HardwareProfiler {
         wl: &WorkloadConfig,
         counters: &[Counter],
     ) -> CounterTrace {
-        sim::collect_counters(&self.node, cfg, wl, counters, self.per_pass)
+        sim::collect_counters_topo(&self.topo, cfg, wl, counters, self.per_pass)
     }
 
     /// Number of serialized re-runs `capture` will perform.

@@ -87,7 +87,14 @@ pub struct TraceMeta {
     pub workload: String,
     pub fsdp: String,
     pub model: String,
+    /// Total flat ranks in the trace (cluster-wide on multi-node runs).
     pub num_gpus: u32,
+    /// Nodes in the topology (0 in legacy traces ⇒ treat as 1).
+    pub num_nodes: u32,
+    /// GPUs per node (0 in legacy traces ⇒ treat as `num_gpus`).
+    pub gpus_per_node: u32,
+    /// Sharding strategy label ("FSDP"/"HSDP"; empty in legacy traces).
+    pub sharding: String,
     pub iterations: u32,
     pub warmup: u32,
     pub seed: u64,
@@ -95,6 +102,37 @@ pub struct TraceMeta {
     pub source: String,
     /// Kernels were serialized (hardware-profiling pass).
     pub serialized: bool,
+}
+
+impl TraceMeta {
+    /// Node count, tolerating legacy traces without topology metadata.
+    pub fn nodes(&self) -> u32 {
+        self.num_nodes.max(1)
+    }
+
+    /// GPUs per node, tolerating legacy traces (flat = one node).
+    pub fn node_gpus(&self) -> u32 {
+        if self.gpus_per_node > 0 {
+            self.gpus_per_node
+        } else {
+            self.num_gpus.max(1)
+        }
+    }
+
+    /// Node hosting flat rank `gpu`.
+    pub fn node_of(&self, gpu: u32) -> u32 {
+        gpu / self.node_gpus()
+    }
+
+    /// Local GPU index of flat rank `gpu` within its node.
+    pub fn local_of(&self, gpu: u32) -> u32 {
+        gpu % self.node_gpus()
+    }
+
+    /// True when the trace spans more than one node.
+    pub fn multi_node(&self) -> bool {
+        self.nodes() > 1
+    }
 }
 
 /// A full runtime-profiling trace.
@@ -237,6 +275,23 @@ mod tests {
         t.events.push(e0);
         t.events.push(e1);
         assert_eq!(t.sampled_events().count(), 1);
+    }
+
+    #[test]
+    fn meta_node_mapping_and_legacy_fallback() {
+        let mut m = TraceMeta::default();
+        m.num_gpus = 8;
+        // Legacy trace: no topology fields ⇒ one node of num_gpus.
+        assert_eq!(m.nodes(), 1);
+        assert_eq!(m.node_gpus(), 8);
+        assert!(!m.multi_node());
+        assert_eq!(m.node_of(5), 0);
+        m.num_nodes = 2;
+        m.gpus_per_node = 8;
+        m.num_gpus = 16;
+        assert!(m.multi_node());
+        assert_eq!(m.node_of(11), 1);
+        assert_eq!(m.local_of(11), 3);
     }
 
     #[test]

@@ -67,6 +67,36 @@ fn parallel_runner_matches_serial_byte_for_byte() {
     assert_eq!(ba.csv, bb.csv);
 }
 
+/// Multi-node campaign determinism: the parallel fan-out over a 2-node
+/// FSDP/HSDP grid is byte-identical to a serial run (the CI multi-node
+/// smoke drives the same grid through the CLI).
+#[test]
+fn multinode_parallel_runner_matches_serial_byte_for_byte() {
+    use chopper::campaign::campaign_by_nodes;
+    use chopper::config::Sharding;
+    let node = NodeSpec::mi300x_node();
+    let mut spec = GridSpec::paper(2, 2, 1);
+    spec.batches = vec![1];
+    spec.seqs = vec![4096];
+    spec.fsdp = vec![FsdpVersion::V1];
+    spec.shardings = vec![Sharding::Fsdp, Sharding::Hsdp];
+    spec.nodes = vec![2];
+    let scenarios = spec.expand();
+    assert_eq!(scenarios.len(), 2);
+    let serial = run_campaign(&node, &scenarios, 1, None, false);
+    let parallel = run_campaign(&node, &scenarios, 4, None, false);
+    for (a, b) in serial.summaries.iter().zip(&parallel.summaries) {
+        assert_eq!(a, b, "multi-node scenario {} diverged", a.name);
+        assert_eq!(a.to_json_str(), b.to_json_str());
+        assert_eq!(a.num_nodes, 2);
+        assert_eq!(a.node_iter_ms.len(), 2);
+    }
+    let na = campaign_by_nodes(&serial.summaries);
+    let nb = campaign_by_nodes(&parallel.summaries);
+    assert_eq!(na.ascii, nb.ascii);
+    assert_eq!(na.csv, nb.csv);
+}
+
 #[test]
 fn cache_round_trip_and_force_bypass() {
     let node = NodeSpec::mi300x_node();

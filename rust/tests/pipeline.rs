@@ -234,6 +234,101 @@ fn trace_index_queries_match_pre_refactor_analyses() {
     }
 }
 
+/// Golden output invariance (topology): the degenerate 1-node `Topology`
+/// pipeline — engine, counters, CPU model, figures, campaign summary —
+/// is byte-identical to the plain single-node `NodeSpec` path. This is
+/// the contract that makes the multi-node refactor a refactor rather
+/// than a fork (DESIGN.md §8).
+#[test]
+fn one_node_topology_pipeline_is_byte_identical() {
+    use chopper::campaign::{fingerprint, GridSpec};
+    use chopper::config::Topology;
+    use chopper::sim::{run_workload_topo, run_workload_topo_with, run_workload_with};
+
+    let node = NodeSpec::mi300x_node();
+    let topo = Topology::single(node.clone());
+    let mut cfg = ModelConfig::llama3_8b();
+    cfg.layers = 2;
+
+    // Figures: the same sweep through both entry points renders every
+    // figure (ASCII + CSV + SVG) byte-identically.
+    let flat_runs =
+        report::run_sweep(&node, &cfg, &[FsdpVersion::V1, FsdpVersion::V2], 2, 1);
+    let topo_runs: Vec<SweepRun> = flat_runs
+        .iter()
+        .map(|sr| SweepRun {
+            wl: sr.wl.clone(),
+            run: run_workload_topo(&topo, &cfg, &sr.wl),
+        })
+        .collect();
+    let flat_figs = report::render_all(&node, &cfg, &flat_runs, 1).unwrap();
+    let topo_figs = report::render_all(&node, &cfg, &topo_runs, 1).unwrap();
+    assert_eq!(flat_figs.len(), topo_figs.len());
+    for (a, b) in flat_figs.iter().zip(&topo_figs) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.ascii, b.ascii, "{}: 1-node topology changed ASCII", a.id);
+        assert_eq!(a.csv, b.csv, "{}: 1-node topology changed CSV", a.id);
+        assert_eq!(a.svg, b.svg, "{}: 1-node topology changed SVG", a.id);
+    }
+
+    // Campaign summary: byte-identical ScenarioSummary JSON.
+    let mut spec = GridSpec::paper(2, 2, 1);
+    spec.batches = vec![2];
+    spec.seqs = vec![4096];
+    spec.fsdp = vec![FsdpVersion::V1];
+    let sc = &spec.expand()[0];
+    let fp = fingerprint(&node, sc);
+    let flat_run = run_workload_with(&node, &sc.model, &sc.wl, sc.params.clone());
+    let topo_run =
+        run_workload_topo_with(&topo, &sc.model, &sc.wl, sc.params.clone());
+    let flat_sum = chopper::campaign::summarize(&node, sc, fp, &flat_run);
+    let topo_sum = chopper::campaign::summarize(&node, sc, fp, &topo_run);
+    assert_eq!(flat_sum, topo_sum);
+    assert_eq!(
+        flat_sum.to_json_str(),
+        topo_sum.to_json_str(),
+        "1-node topology changed ScenarioSummary JSON bytes"
+    );
+    // Serialized traces agree too (chrome JSON incl. topology metadata).
+    assert_eq!(
+        chrome::to_chrome_json(&flat_run.trace),
+        chrome::to_chrome_json(&topo_run.trace)
+    );
+}
+
+/// A 2-node HSDP campaign runs end-to-end through the campaign runner
+/// with per-node figure rollups — the acceptance scenario of the
+/// topology refactor.
+#[test]
+fn two_node_hsdp_campaign_end_to_end() {
+    use chopper::campaign::{campaign_by_nodes, run_campaign, GridSpec};
+    use chopper::config::Sharding;
+    let node = NodeSpec::mi300x_node();
+    let mut spec = GridSpec::paper(2, 2, 1);
+    spec.batches = vec![1];
+    spec.seqs = vec![4096];
+    spec.fsdp = vec![FsdpVersion::V1];
+    spec.shardings = vec![Sharding::Hsdp];
+    spec.nodes = vec![2];
+    let scenarios = spec.expand();
+    assert_eq!(scenarios.len(), 1);
+    assert_eq!(scenarios[0].name, "L2-b1s4-FSDPv1-HSDP-N2");
+    let outcome = run_campaign(&node, &scenarios, 1, None, false);
+    let s = &outcome.summaries[0];
+    assert_eq!(s.num_nodes, 2);
+    assert_eq!(s.sharding, "HSDP");
+    assert_eq!(s.node_iter_ms.len(), 2, "per-node rollup missing");
+    assert!(s.node_iter_ms.iter().all(|&m| m > 0.0));
+    assert!(s.tokens_per_sec > 0.0);
+    // The node-grouped comparison figure renders one row per node.
+    let f = campaign_by_nodes(&outcome.summaries);
+    assert!(f.ascii.contains("node0") && f.ascii.contains("node1"));
+    // And the summary survives the wire with its rollup intact.
+    let back = chopper::campaign::ScenarioSummary::from_json_str(&s.to_json_str())
+        .unwrap();
+    assert_eq!(&back, s);
+}
+
 /// Golden output invariance: the refactored engine and the verbatim
 /// pre-refactor engine produce bitwise-identical event streams and
 /// byte-identical serialized trace JSON for a fixed seed.

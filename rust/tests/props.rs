@@ -386,3 +386,102 @@ fn prop_engine_determinism() {
         }
     });
 }
+
+// ---------------------------------------------------------------------------
+// Hierarchical interconnect cost model (DESIGN.md §8)
+// ---------------------------------------------------------------------------
+
+fn random_topology(rng: &mut Rng) -> chopper::config::Topology {
+    let mut topo = chopper::config::Topology::mi300x_cluster(
+        *rng.choose(&[1u32, 2, 3, 4, 8]),
+    );
+    // Perturb the NIC within physical ranges.
+    topo.nic.nic_bw = 12.5e9 * rng.range_u64(1, 9) as f64; // 100G..1T rails
+    topo.nic.latency_ns = 1_000.0 + rng.f64() * 9_000.0;
+    topo.nic.eff = 0.5 + rng.f64() * 0.45;
+    topo
+}
+
+#[test]
+fn prop_hierarchical_cost_monotone_in_bytes() {
+    use chopper::sim::hierarchical_collective_ns;
+    prop("hier_monotone", 64, |rng| {
+        let topo = random_topology(rng);
+        let a = rng.f64() * 4e9 + 1.0;
+        let b = a + rng.f64() * 4e9 + 1.0; // b > a
+        let ca = hierarchical_collective_ns(&topo, a);
+        let cb = hierarchical_collective_ns(&topo, b);
+        assert!(
+            cb >= ca,
+            "cost not monotone: {ca} @ {a}B vs {cb} @ {b}B ({topo:?})"
+        );
+    });
+}
+
+#[test]
+fn prop_hierarchical_never_cheaper_than_intra_node() {
+    use chopper::sim::{collective_base_ns, hierarchical_collective_ns};
+    prop("hier_floor", 64, |rng| {
+        let topo = random_topology(rng);
+        let bytes = rng.f64() * 8e9 + 1.0;
+        assert!(
+            hierarchical_collective_ns(&topo, bytes)
+                >= collective_base_ns(&topo.node, bytes),
+            "hierarchical cost below the pure intra-node collective"
+        );
+    });
+}
+
+#[test]
+fn prop_hierarchical_degenerates_exactly_at_one_node() {
+    use chopper::sim::{
+        collective_base_ns, hierarchical_collective_ns, inter_node_phase_ns,
+    };
+    prop("hier_degenerate", 64, |rng| {
+        let mut topo = random_topology(rng);
+        topo.num_nodes = 1;
+        let bytes = rng.f64() * 8e9;
+        assert_eq!(inter_node_phase_ns(&topo, bytes), 0.0);
+        assert_eq!(
+            hierarchical_collective_ns(&topo, bytes).to_bits(),
+            collective_base_ns(&topo.node, bytes).to_bits(),
+            "1-node hierarchical cost must equal collective_base_ns bit-for-bit"
+        );
+    });
+}
+
+#[test]
+fn prop_hsdp_program_mirrors_fsdp_skeleton() {
+    use chopper::config::{Sharding, Topology};
+    use chopper::fsdp::build_program_topo;
+    use chopper::model::ops::OpType as Op;
+    prop("hsdp_skeleton", 8, |rng| {
+        let (cfg, mut wl) = random_workload(rng);
+        let nodes = *rng.choose(&[2u32, 4]);
+        let topo = Topology::mi300x_cluster(nodes);
+        wl.sharding = Sharding::Fsdp;
+        let fsdp = build_program_topo(&cfg, &wl, &topo);
+        wl.sharding = Sharding::Hsdp;
+        let hsdp = build_program_topo(&cfg, &wl, &topo);
+        // Identical kernel stream; collectives differ only by the added
+        // cross-node all-reduces (one per reduce-scatter).
+        assert_eq!(
+            fsdp.kernels().count(),
+            hsdp.kernels().count(),
+            "HSDP must not change the compute stream"
+        );
+        let count = |p: &chopper::fsdp::Program, op: Op| {
+            p.collectives().filter(|c| c.op.op == op).count()
+        };
+        assert_eq!(count(&fsdp, Op::AllGather), count(&hsdp, Op::AllGather));
+        assert_eq!(
+            count(&fsdp, Op::ReduceScatter),
+            count(&hsdp, Op::ReduceScatter)
+        );
+        assert_eq!(count(&fsdp, Op::AllReduce), 0);
+        assert_eq!(
+            count(&hsdp, Op::AllReduce),
+            count(&hsdp, Op::ReduceScatter)
+        );
+    });
+}
