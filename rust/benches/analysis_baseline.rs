@@ -1345,6 +1345,20 @@ pub mod summarize {
 
         let fa = summarize_op_overlap(trace, OpRef::fwd(OpType::AttnFa));
 
+        // Mechanical port for the post-power-subsystem ScenarioSummary:
+        // energy is the window-sum of power × dt over the sampled
+        // iterations, accumulated in sample order exactly like the
+        // index-side summarize (both call the same PowerTrace rollup).
+        let sampled_iters =
+            trace.meta.iterations.saturating_sub(warmup).max(1) as f64;
+        let energy_per_iter_j =
+            finite(run.power.sampled_energy_j(warmup) / sampled_iters);
+        let tokens_per_j = if energy_per_iter_j > 0.0 {
+            finite(tokens / energy_per_iter_j)
+        } else {
+            0.0
+        };
+
         // Active-window telemetry, the paper's Fig. 14 averaging.
         let active: Vec<&chopper::trace::event::PowerSample> = run
             .power
@@ -1367,6 +1381,7 @@ pub mod summarize {
             fingerprint: fp,
             label: sc.wl.label(),
             fsdp: sc.wl.fsdp.to_string(),
+            governor: sc.params.governor.name().to_string(),
             // Mechanical port for the post-topology ScenarioSummary: the
             // baseline only ever summarizes the degenerate single-node
             // FSDP pipeline, where these fields are constants.
@@ -1388,6 +1403,8 @@ pub mod summarize {
             freq_mhz,
             freq_loss,
             power_w: finite(stats::mean(&powers)),
+            energy_per_iter_j,
+            tokens_per_j,
             span_ms: finite(trace.span_ns() / 1e6),
             events: trace.events.len() as u64,
         }

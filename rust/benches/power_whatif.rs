@@ -1,0 +1,131 @@
+//! Power what-if bench: replay one workload under the full governor
+//! policy set (`chopper::whatif`), verify the replay is deterministic and
+//! that the `Reactive` row reproduces the default pipeline's numbers,
+//! then record the replay timings and the policy-space shape (oracle
+//! speedup, energy deltas, perf-per-watt spread) into `BENCH_power.json`
+//! at the repo root (same trajectory schema as `BENCH_engine.json`).
+//!
+//! Scale knobs (env): CHOPPER_BENCH_LAYERS (default 8), CHOPPER_BENCH_ITERS
+//! (default 10), CHOPPER_BENCH_SAMPLES (default 3). CI smoke-runs tiny
+//! values twice and validates the trajectory schema + fingerprint dedup.
+
+use chopper::benchkit::{emit_collected, section, value, Bench};
+use chopper::campaign;
+use chopper::chopper::whatif::{render, replay};
+use chopper::chopper::TraceIndex;
+use chopper::config::{FsdpVersion, ModelConfig, NodeSpec, WorkloadConfig};
+use chopper::sim::{Engine, EngineParams, GovernorKind};
+
+fn env_or<T: std::str::FromStr>(key: &str, default: T) -> T {
+    std::env::var(key)
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() {
+    let layers: u64 = env_or("CHOPPER_BENCH_LAYERS", 8);
+    let iters: u32 = env_or("CHOPPER_BENCH_ITERS", 10);
+    let samples: u32 = env_or("CHOPPER_BENCH_SAMPLES", 3);
+
+    let node = NodeSpec::mi300x_node();
+    chopper::benchkit::note_topology(1, node.num_gpus);
+    let mut cfg = ModelConfig::llama3_8b();
+    cfg.layers = layers;
+    let mut wl = WorkloadConfig::parse_label("b2s4", FsdpVersion::V1).expect("label");
+    wl.iterations = iters;
+    wl.warmup = iters / 2;
+    let params = EngineParams::default();
+    eprintln!(
+        "setup: what-if replay at {layers} layers × {iters} iterations, {} policies…",
+        GovernorKind::ALL.len()
+    );
+
+    section("equivalence — reactive replay vs default pipeline");
+    let report = replay(&node, &cfg, &wl, &params, &GovernorKind::ALL, 1);
+    assert_eq!(report.rows.len(), GovernorKind::ALL.len());
+    // Determinism: a second replay (parallel this time) is identical.
+    let again = replay(
+        &node,
+        &cfg,
+        &wl,
+        &params,
+        &GovernorKind::ALL,
+        campaign::default_jobs(),
+    );
+    assert_eq!(report, again, "what-if replay diverged between invocations");
+    let fig = render(&report);
+    assert_eq!(fig.csv, render(&again).csv, "rendered report diverged");
+    // The reactive row must equal the default pipeline's own numbers.
+    let out = Engine::new(&node, &cfg, &wl, params.clone()).run();
+    let idx = TraceIndex::build(&out.trace);
+    let tokens = wl.tokens_per_iteration(out.trace.meta.num_gpus as u64) as f64;
+    let tp = chopper::chopper::throughput(&idx, tokens);
+    let reactive = report.row(GovernorKind::Reactive).expect("reactive row");
+    assert_eq!(
+        reactive.iter_ms.to_bits(),
+        (tp.iter_ns / 1e6).to_bits(),
+        "reactive replay drifted off the default pipeline"
+    );
+    println!(
+        "equivalence OK: {} policies replayed deterministically; reactive row \
+         bit-identical to the default pipeline",
+        report.rows.len()
+    );
+
+    section("what-if replay hot path");
+    let serial = Bench::new("whatif/replay_serial").samples(samples).run(|| {
+        replay(&node, &cfg, &wl, &params, &GovernorKind::ALL, 1)
+    });
+    let parallel = Bench::new("whatif/replay_parallel")
+        .samples(samples)
+        .run(|| {
+            replay(
+                &node,
+                &cfg,
+                &wl,
+                &params,
+                &GovernorKind::ALL,
+                campaign::default_jobs(),
+            )
+        });
+    Bench::new("whatif/render").samples(samples).run(|| render(&report));
+
+    let oracle = report.row(GovernorKind::Oracle).expect("oracle row");
+    let fixed = report.row(GovernorKind::FixedCap).expect("fixed_cap row");
+    let det = report
+        .row(GovernorKind::DeterministicAware)
+        .expect("det_aware row");
+    // The paper-shaped numbers: what each policy would buy on this
+    // workload, in time and in joules.
+    value(
+        "oracle_speedup_vs_reactive",
+        reactive.iter_ms / oracle.iter_ms.max(1e-12),
+        "x",
+    );
+    value("oracle_delta_energy_pct", oracle.delta_energy_pct, "%");
+    value("fixed_cap_delta_iter_pct", fixed.delta_iter_pct, "%");
+    value("fixed_cap_delta_energy_pct", fixed.delta_energy_pct, "%");
+    value("det_aware_delta_iter_pct", det.delta_iter_pct, "%");
+    value(
+        "best_tokens_per_j",
+        report.best_perf_per_watt().tokens_per_j,
+        "tok/J",
+    );
+    value("reactive_tokens_per_j", reactive.tokens_per_j, "tok/J");
+    value(
+        "frontier_size",
+        report.rows.iter().filter(|r| r.frontier).count() as f64,
+        "",
+    );
+    value(
+        "parallel_speedup",
+        serial.median_s / parallel.median_s.max(1e-12),
+        "x",
+    );
+    value("policies", report.rows.len() as f64, "");
+    value("layers", layers as f64, "");
+    value("iterations", iters as f64, "");
+
+    emit_collected("power");
+}

@@ -22,7 +22,12 @@ use std::path::{Path, PathBuf};
 ///
 /// v2: scenarios carry a topology (node count + NIC), workloads carry a
 /// sharding strategy, and summaries grew per-node rollup fields.
-pub const SCHEMA_VERSION: u32 = 2;
+///
+/// v3: engine parameters carry a power-management policy
+/// (`governor`/`margin_k`/`fixed_cap_ratio`) and summaries grew the
+/// governor/energy fields (`governor`, `energy_per_iter_j`,
+/// `tokens_per_j`).
+pub const SCHEMA_VERSION: u32 = 3;
 
 pub use crate::util::prng::fnv1a;
 

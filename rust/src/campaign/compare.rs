@@ -9,26 +9,32 @@ use crate::util::ascii;
 use std::fmt::Write as _;
 
 /// The headline comparison table: throughput (absolute and relative to the
-/// first scenario), iteration cost, launch share, DVFS frequency loss, and
-/// overlap efficiency for every scenario in grid order.
+/// first scenario), iteration cost, launch share, DVFS frequency loss,
+/// overlap efficiency, and the energy columns (joules per iteration,
+/// tokens per joule) for every scenario in grid order.
 pub fn campaign_table(summaries: &[ScenarioSummary]) -> Figure {
     let base_tp = summaries
         .first()
         .map(|s| s.tokens_per_sec)
         .unwrap_or(1.0)
         .max(1e-9);
-    // Topology columns appear only when some scenario is multi-node /
-    // HSDP, so classic campaigns render byte-identically.
+    // Topology / governor columns appear only when some scenario uses
+    // them, so classic campaigns keep their column set.
     let multi = summaries
         .iter()
         .any(|s| s.num_nodes > 1 || s.sharding != "FSDP");
+    let gov = summaries.iter().any(|s| s.governor != "reactive");
     let mut rows: Vec<Vec<String>> = Vec::with_capacity(summaries.len());
     let mut csv = String::from(
         "scenario,label,fsdp,layers,batch,seq,tokens_per_sec,rel_throughput,\
-         iter_ms,launch_ms,launch_pct,freq_mhz,freq_loss_pct,power_w,overlap_fa",
+         iter_ms,launch_ms,launch_pct,freq_mhz,freq_loss_pct,power_w,overlap_fa,\
+         energy_per_iter_j,tokens_per_j",
     );
     if multi {
         csv.push_str(",sharding,num_nodes");
+    }
+    if gov {
+        csv.push_str(",governor");
     }
     csv.push('\n');
     for s in summaries {
@@ -44,14 +50,19 @@ pub fn campaign_table(summaries: &[ScenarioSummary]) -> Figure {
             format!("{:.1}%", 100.0 * s.freq_loss),
             format!("{:.0}", s.power_w),
             format!("{:.2}", s.overlap_fa),
+            format!("{:.1}", s.energy_per_iter_j),
+            format!("{:.2}", s.tokens_per_j),
         ];
         if multi {
             row.push(format!("{}x{}", s.sharding, s.num_nodes));
         }
+        if gov {
+            row.push(s.governor.clone());
+        }
         rows.push(row);
         let _ = write!(
             csv,
-            "{},{},{},{},{},{},{:.2},{:.4},{:.4},{:.4},{:.2},{:.1},{:.2},{:.1},{:.4}",
+            "{},{},{},{},{},{},{:.2},{:.4},{:.4},{:.4},{:.2},{:.1},{:.2},{:.1},{:.4},{:.4},{:.4}",
             s.name,
             s.label,
             s.fsdp,
@@ -66,10 +77,15 @@ pub fn campaign_table(summaries: &[ScenarioSummary]) -> Figure {
             s.freq_mhz,
             100.0 * s.freq_loss,
             s.power_w,
-            s.overlap_fa
+            s.overlap_fa,
+            s.energy_per_iter_j,
+            s.tokens_per_j
         );
         if multi {
             let _ = write!(csv, ",{},{}", s.sharding, s.num_nodes);
+        }
+        if gov {
+            let _ = write!(csv, ",{}", s.governor);
         }
         csv.push('\n');
     }
@@ -78,10 +94,13 @@ pub fn campaign_table(summaries: &[ScenarioSummary]) -> Figure {
     );
     let mut headers = vec![
         "scenario", "tok/s", "rel", "iter ms", "launch", "MHz", "DVFS loss",
-        "W", "ovl(fa)",
+        "W", "ovl(fa)", "J/iter", "tok/J",
     ];
     if multi {
         headers.push("topo");
+    }
+    if gov {
+        headers.push("gov");
     }
     out.push_str(&ascii::table(&headers, &rows));
     Figure {
@@ -139,6 +158,76 @@ pub fn campaign_by_nodes(summaries: &[ScenarioSummary]) -> Figure {
     Figure {
         id: "campaign_nodes",
         title: "Campaign — per-node iteration medians".into(),
+        ascii: out,
+        csv,
+        svg: None,
+    }
+}
+
+/// Cross-policy energy/perf comparison: one row per scenario, grouped by
+/// workload (everything but the governor), with Δ iteration time and Δ
+/// energy against the group's `reactive` row — the campaign-wide view of
+/// `chopper whatif`. Meaningful on grids with a `--governor` axis;
+/// governor-less groups report zero deltas against themselves.
+pub fn campaign_by_governor(summaries: &[ScenarioSummary]) -> Figure {
+    // Group key: the full scenario identity with only the governor tag
+    // stripped. The name carries every axis the grid varied (incl. NIC
+    // and ablation-knob tags that individual summary fields don't), so
+    // siblings differing in anything but the policy never collapse into
+    // one group.
+    let key = |s: &ScenarioSummary| -> String {
+        s.name.replace(&format!("-gov_{}", s.governor), "")
+    };
+    // Baseline per group: the reactive row if present, else the group's
+    // first row in grid order.
+    let mut base: std::collections::BTreeMap<_, (f64, f64)> =
+        std::collections::BTreeMap::new();
+    for s in summaries {
+        let k = key(s);
+        let e = base.entry(k).or_insert((s.iter_ms, s.energy_per_iter_j));
+        if s.governor == "reactive" {
+            *e = (s.iter_ms, s.energy_per_iter_j);
+        }
+    }
+    let mut csv = String::from(
+        "scenario,governor,iter_ms,delta_iter_pct,energy_per_iter_j,\
+         delta_energy_pct,power_w,tokens_per_j\n",
+    );
+    let mut rows: Vec<Vec<String>> = Vec::with_capacity(summaries.len());
+    for s in summaries {
+        let (bi, be) = base[&key(s)];
+        let di = 100.0 * (s.iter_ms / bi.max(1e-9) - 1.0);
+        let de = 100.0 * (s.energy_per_iter_j / be.max(1e-9) - 1.0);
+        rows.push(vec![
+            s.name.clone(),
+            s.governor.clone(),
+            format!("{:.2}", s.iter_ms),
+            format!("{di:+.1}%"),
+            format!("{:.1}", s.energy_per_iter_j),
+            format!("{de:+.1}%"),
+            format!("{:.0}", s.power_w),
+            format!("{:.2}", s.tokens_per_j),
+        ]);
+        let _ = writeln!(
+            csv,
+            "{},{},{:.4},{:.2},{:.4},{:.2},{:.1},{:.4}",
+            s.name, s.governor, s.iter_ms, di, s.energy_per_iter_j, de,
+            s.power_w, s.tokens_per_j
+        );
+    }
+    let mut out = String::from(
+        "Campaign — governor policies (Δ vs each workload's reactive row)\n\n",
+    );
+    out.push_str(&ascii::table(
+        &[
+            "scenario", "governor", "iter ms", "Δiter", "J/iter", "ΔJ", "W",
+            "tok/J",
+        ],
+        &rows,
+    ));
+    Figure {
+        id: "campaign_governors",
+        title: "Campaign — governor energy/perf comparison".into(),
         ascii: out,
         csv,
         svg: None,
@@ -212,6 +301,7 @@ mod tests {
             fingerprint: 1,
             label: "b1s4".into(),
             fsdp: "FSDPv1".into(),
+            governor: "reactive".into(),
             sharding: "FSDP".into(),
             num_nodes: 1,
             node_iter_ms: Vec::new(),
@@ -230,6 +320,8 @@ mod tests {
             freq_mhz: 1900.0,
             freq_loss: 0.09,
             power_w: 700.0,
+            energy_per_iter_j: 56.0,
+            tokens_per_j: 120.0,
             span_ms: 25.0,
             events: 1234,
         }
@@ -273,6 +365,42 @@ mod tests {
         assert!(nodes.ascii.contains("node1"));
         // Slow node skews positive against the fastest.
         assert!(nodes.csv.contains("10.53"), "{}", nodes.csv);
+    }
+
+    #[test]
+    fn energy_columns_always_present_governor_column_gated() {
+        let flat = campaign_table(&[fake("a", 1000.0)]);
+        assert!(flat.csv.contains("energy_per_iter_j"));
+        assert!(flat.ascii.contains("J/iter"));
+        assert!(!flat.csv.contains("governor"));
+        let mut o = fake("a-gov_oracle", 1200.0);
+        o.governor = "oracle".into();
+        o.iter_ms = 8.0;
+        o.energy_per_iter_j = 70.0;
+        let multi = campaign_table(&[fake("a", 1000.0), o.clone()]);
+        assert!(multi.csv.lines().next().unwrap().ends_with(",governor"));
+        assert!(multi.ascii.contains("oracle"));
+    }
+
+    #[test]
+    fn governor_table_deltas_vs_reactive_sibling() {
+        let mut o = fake("a-gov_oracle", 1200.0);
+        o.governor = "oracle".into();
+        o.iter_ms = 8.0; // 20% faster than the reactive 10.0
+        o.energy_per_iter_j = 70.0; // 25% more energy than 56.0
+        let f = campaign_by_governor(&[fake("a", 1000.0), o]);
+        let oracle_row = f.csv.lines().find(|l| l.contains("oracle")).unwrap();
+        let cols: Vec<&str> = oracle_row.split(',').collect();
+        assert_eq!(cols[1], "oracle");
+        let di: f64 = cols[3].parse().unwrap();
+        let de: f64 = cols[5].parse().unwrap();
+        assert!((di + 20.0).abs() < 1e-9, "Δiter {di}");
+        assert!((de - 25.0).abs() < 1e-9, "Δenergy {de}");
+        // The reactive row is its own baseline: zero deltas.
+        let base_row = f.csv.lines().find(|l| l.starts_with("a,")).unwrap();
+        let cols: Vec<&str> = base_row.split(',').collect();
+        assert_eq!(cols[3], "0.00");
+        assert_eq!(cols[5], "0.00");
     }
 
     #[test]

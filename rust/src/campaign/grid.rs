@@ -3,7 +3,9 @@
 //! named, seeded scenarios in a deterministic order.
 
 use crate::config::{FsdpVersion, ModelConfig, NicSpec, Sharding, WorkloadConfig};
-use crate::sim::EngineParams;
+use crate::sim::{EngineParams, GovernorKind};
+
+pub use crate::sim::power::parse_list_governor;
 
 /// One fully specified simulation scenario — everything the engine needs,
 /// plus a stable human-readable name that doubles as the cache key prefix.
@@ -34,10 +36,12 @@ pub enum Knob {
     CommDelaySigmaNs,
     FarRankDelayNs,
     DvfsWindowNs,
+    MarginK,
+    FixedCapRatio,
 }
 
 impl Knob {
-    pub const ALL: [Knob; 9] = [
+    pub const ALL: [Knob; 11] = [
         Knob::SpinPenalty,
         Knob::TransferPenalty,
         Knob::CommStretch,
@@ -47,6 +51,8 @@ impl Knob {
         Knob::CommDelaySigmaNs,
         Knob::FarRankDelayNs,
         Knob::DvfsWindowNs,
+        Knob::MarginK,
+        Knob::FixedCapRatio,
     ];
 
     pub fn name(&self) -> &'static str {
@@ -60,6 +66,8 @@ impl Knob {
             Knob::CommDelaySigmaNs => "comm_delay_sigma_ns",
             Knob::FarRankDelayNs => "far_rank_delay_ns",
             Knob::DvfsWindowNs => "dvfs_window_ns",
+            Knob::MarginK => "margin_k",
+            Knob::FixedCapRatio => "fixed_cap_ratio",
         }
     }
 
@@ -78,6 +86,8 @@ impl Knob {
             Knob::CommDelaySigmaNs => p.comm_delay_sigma_ns = v,
             Knob::FarRankDelayNs => p.far_rank_delay_ns = v,
             Knob::DvfsWindowNs => p.dvfs_window_ns = v,
+            Knob::MarginK => p.margin_k = v,
+            Knob::FixedCapRatio => p.fixed_cap_ratio = v,
         }
     }
 
@@ -92,6 +102,8 @@ impl Knob {
             Knob::CommDelaySigmaNs => p.comm_delay_sigma_ns,
             Knob::FarRankDelayNs => p.far_rank_delay_ns,
             Knob::DvfsWindowNs => p.dvfs_window_ns,
+            Knob::MarginK => p.margin_k,
+            Knob::FixedCapRatio => p.fixed_cap_ratio,
         }
     }
 }
@@ -118,6 +130,10 @@ pub struct GridSpec {
     /// NIC-bandwidth axis in GB/s per direction per GPU. Empty = the
     /// default NIC with no name tag; explicit values get `-nic<gbs>`.
     pub nic_gbs: Vec<f64>,
+    /// Power-management policy axis (default `[Reactive]`; non-default
+    /// policies get a `-gov_<name>` name tag, so classic grids keep their
+    /// names, derived seeds and cache keys).
+    pub governors: Vec<GovernorKind>,
     pub iterations: u32,
     pub warmup: u32,
     /// Base seed; each scenario derives its own seed from this and its name.
@@ -141,6 +157,7 @@ impl GridSpec {
             shardings: vec![Sharding::Fsdp],
             nodes: vec![1],
             nic_gbs: Vec::new(),
+            governors: vec![GovernorKind::Reactive],
             iterations,
             warmup,
             seed: 0xC0FFEE,
@@ -156,7 +173,8 @@ impl GridSpec {
             * self.fsdp.len()
             * self.shardings.len()
             * self.nodes.len()
-            * self.nic_gbs.len().max(1);
+            * self.nic_gbs.len().max(1)
+            * self.governors.len();
         for (_, vals) in &self.ablations {
             n *= vals.len().max(1);
         }
@@ -186,10 +204,12 @@ impl GridSpec {
                         for &sharding in &self.shardings {
                             for &nodes in &self.nodes {
                                 for &nic in &nics {
-                                    self.expand_ablations(
-                                        layers, batch, seq, fsdp, sharding,
-                                        nodes, nic, &mut out,
-                                    );
+                                    for &gov in &self.governors {
+                                        self.expand_ablations(
+                                            layers, batch, seq, fsdp, sharding,
+                                            nodes, nic, gov, &mut out,
+                                        );
+                                    }
                                 }
                             }
                         }
@@ -210,6 +230,7 @@ impl GridSpec {
         sharding: Sharding,
         nodes: u32,
         nic_gbs: Option<f64>,
+        governor: GovernorKind,
         out: &mut Vec<Scenario>,
     ) {
         // Odometer over the ablation axes (empty product = one scenario).
@@ -250,8 +271,16 @@ impl GridSpec {
             wl.iterations = self.iterations;
             wl.warmup = self.warmup;
             // Per-scenario seed: stable under grid reordering because it
-            // depends only on the scenario name and the base seed.
+            // depends only on the scenario name and the base seed. The
+            // governor tag is appended *after* the seed is derived, so
+            // policy siblings share every jitter draw — a cross-policy
+            // Δ in `campaign_by_governor` measures the policy, not seed
+            // noise (the same fixed-workload semantics as `whatif`).
             wl.seed = self.seed ^ crate::campaign::cache::fnv1a(name.as_bytes());
+            params.governor = governor;
+            if governor != GovernorKind::Reactive {
+                name.push_str(&format!("-gov_{}", governor.name()));
+            }
             out.push(Scenario {
                 name,
                 model,
@@ -459,6 +488,53 @@ mod tests {
         // Values past u32 must error, not truncate (4294967296 would
         // silently become 0 nodes under a bare `as u32`).
         assert!(parse_list_nodes("4294967296").is_err());
+    }
+
+    #[test]
+    fn governor_axis_expands_and_tags_non_default_only() {
+        let mut g = GridSpec::paper(2, 2, 1);
+        g.batches = vec![1];
+        g.seqs = vec![4096];
+        g.fsdp = vec![FsdpVersion::V1];
+        g.governors = GovernorKind::ALL.to_vec();
+        let scs = g.expand();
+        assert_eq!(scs.len(), g.len());
+        assert_eq!(scs.len(), 4);
+        // The reactive scenario keeps its legacy name (seed/cache-key
+        // stability); every other policy is tagged.
+        assert!(scs.iter().any(|s| s.name == "L2-b1s4-FSDPv1"));
+        assert!(scs.iter().any(|s| s.name == "L2-b1s4-FSDPv1-gov_oracle"));
+        assert!(scs.iter().any(|s| s.name == "L2-b1s4-FSDPv1-gov_fixed_cap"));
+        assert!(scs.iter().any(|s| s.name == "L2-b1s4-FSDPv1-gov_det_aware"));
+        for sc in &scs {
+            let tagged = sc.name.contains("-gov_");
+            assert_eq!(tagged, sc.params.governor != GovernorKind::Reactive);
+        }
+        // Policy siblings share the seed (the tag is excluded from the
+        // seed basis), so cross-policy deltas measure the policy alone.
+        let seed_of = |n: &str| scs.iter().find(|s| s.name == n).unwrap().wl.seed;
+        let base_seed = seed_of("L2-b1s4-FSDPv1");
+        for tagged in ["oracle", "fixed_cap", "det_aware"] {
+            assert_eq!(
+                seed_of(&format!("L2-b1s4-FSDPv1-gov_{tagged}")),
+                base_seed,
+                "{tagged} sibling drew a different seed"
+            );
+        }
+        // Default grids carry no governor tag at all.
+        for sc in GridSpec::paper(2, 2, 1).expand() {
+            assert!(!sc.name.contains("-gov_"), "{}", sc.name);
+            assert_eq!(sc.params.governor, GovernorKind::Reactive);
+        }
+    }
+
+    #[test]
+    fn governor_list_parser() {
+        assert_eq!(
+            parse_list_governor("reactive,oracle").unwrap(),
+            vec![GovernorKind::Reactive, GovernorKind::Oracle]
+        );
+        assert!(parse_list_governor("powersave").is_err());
     }
 
     #[test]

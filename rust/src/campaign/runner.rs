@@ -69,6 +69,8 @@ pub struct ScenarioSummary {
     pub fingerprint: u64,
     pub label: String,
     pub fsdp: String,
+    /// Power-management policy name (`sim::power::GovernorKind::name`).
+    pub governor: String,
     /// Sharding strategy ("FSDP"/"HSDP").
     pub sharding: String,
     /// Nodes in the scenario topology (1 = classic single node).
@@ -97,6 +99,11 @@ pub struct ScenarioSummary {
     /// DVFS overhead: fraction of peak frequency lost, (peak-f)/peak.
     pub freq_loss: f64,
     pub power_w: f64,
+    /// Joules per sampled iteration, summed over every rank (the
+    /// governor's window-sum of power × dt).
+    pub energy_per_iter_j: f64,
+    /// Perf per watt: tokens per joule at this scenario's energy cost.
+    pub tokens_per_j: f64,
     pub span_ms: f64,
     pub events: u64,
 }
@@ -122,6 +129,7 @@ impl ScenarioSummary {
             ("fingerprint", Json::str(format!("{:016x}", self.fingerprint))),
             ("label", Json::str(self.label.clone())),
             ("fsdp", Json::str(self.fsdp.clone())),
+            ("governor", Json::str(self.governor.clone())),
         ];
         // Topology fields serialize only when non-degenerate, so classic
         // single-node FSDP summaries keep their pre-topology JSON bytes
@@ -150,6 +158,8 @@ impl ScenarioSummary {
             ("freq_mhz", Json::num(self.freq_mhz)),
             ("freq_loss", Json::num(self.freq_loss)),
             ("power_w", Json::num(self.power_w)),
+            ("energy_per_iter_j", Json::num(self.energy_per_iter_j)),
+            ("tokens_per_j", Json::num(self.tokens_per_j)),
             ("span_ms", Json::num(self.span_ms)),
             ("events", Json::num(self.events as f64)),
         ]);
@@ -165,6 +175,20 @@ impl ScenarioSummary {
         let fp_hex = text(j, "fingerprint")?;
         let fingerprint = u64::from_str_radix(&fp_hex, 16)
             .map_err(|_| format!("bad fingerprint `{fp_hex}`"))?;
+        // Governor / energy fields default so pre-power-subsystem
+        // artifacts still parse (their fingerprints differ, so they read
+        // as cache misses anyway — this keeps the parser total).
+        let governor = j
+            .get("governor")
+            .and_then(|v| v.as_str())
+            .unwrap_or("reactive")
+            .to_string();
+        let energy_per_iter_j = j
+            .get("energy_per_iter_j")
+            .and_then(|v| v.as_f64())
+            .unwrap_or(0.0);
+        let tokens_per_j =
+            j.get("tokens_per_j").and_then(|v| v.as_f64()).unwrap_or(0.0);
         // Topology fields default to the degenerate single-node shape so
         // pre-topology artifacts still parse (their fingerprints differ,
         // so they read as cache misses anyway — this keeps the parser
@@ -188,6 +212,7 @@ impl ScenarioSummary {
             fingerprint,
             label: text(j, "label")?,
             fsdp: text(j, "fsdp")?,
+            governor,
             sharding,
             num_nodes,
             node_iter_ms,
@@ -206,6 +231,8 @@ impl ScenarioSummary {
             freq_mhz: num(j, "freq_mhz")?,
             freq_loss: num(j, "freq_loss")?,
             power_w: num(j, "power_w")?,
+            energy_per_iter_j,
+            tokens_per_j,
             span_ms: num(j, "span_ms")?,
             events: num(j, "events")? as u64,
         })
@@ -256,15 +283,13 @@ pub fn summarize(
 
     let fa = summarize_op_overlap(&idx, OpRef::fwd(OpType::AttnFa));
 
-    // Active-window telemetry, the paper's Fig. 14 averaging.
-    let active: Vec<&crate::trace::event::PowerSample> = run
-        .power
-        .samples
-        .iter()
-        .filter(|s| s.power_w > 400.0)
-        .collect();
-    let freqs: Vec<f64> = active.iter().map(|s| s.freq_mhz).collect();
-    let powers: Vec<f64> = active.iter().map(|s| s.power_w).collect();
+    // Active-window telemetry, the paper's Fig. 14 averaging
+    // (PowerTrace::active_samples — same filter, same order, as the
+    // pre-refactor inline scan, so the means are bit-identical).
+    let freqs: Vec<f64> =
+        run.power.active_samples().map(|s| s.freq_mhz).collect();
+    let powers: Vec<f64> =
+        run.power.active_samples().map(|s| s.power_w).collect();
     let freq_mhz = finite(stats::mean(&freqs));
     let peak = node.gpu.freq_peak_mhz.max(1.0);
     // No active windows (degenerate workload): report zero DVFS loss
@@ -273,6 +298,22 @@ pub fn summarize(
         0.0
     } else {
         ((peak - freq_mhz) / peak).max(0.0)
+    };
+
+    // Energy integration (sim::power): joules per sampled iteration
+    // summed over every rank — the governor's window-sum of power × dt —
+    // and the perf-per-watt it implies. Computed directly over the power
+    // samples in emission order (bit-stable; the vendored baseline
+    // summarize accumulates identically).
+    let warmup = trace.meta.warmup;
+    let sampled_iters =
+        trace.meta.iterations.saturating_sub(warmup).max(1) as f64;
+    let energy_per_iter_j =
+        finite(run.power.sampled_energy_j(warmup) / sampled_iters);
+    let tokens_per_j = if energy_per_iter_j > 0.0 {
+        finite(tokens / energy_per_iter_j)
+    } else {
+        0.0
     };
 
     // Per-node rollup: only materialized on multi-node topologies (on one
@@ -293,6 +334,7 @@ pub fn summarize(
         fingerprint: fp,
         label: sc.wl.label(),
         fsdp: sc.wl.fsdp.to_string(),
+        governor: sc.params.governor.name().to_string(),
         sharding: sc.wl.sharding.to_string(),
         num_nodes,
         node_iter_ms,
@@ -311,6 +353,8 @@ pub fn summarize(
         freq_mhz,
         freq_loss,
         power_w: finite(stats::mean(&powers)),
+        energy_per_iter_j,
+        tokens_per_j,
         span_ms: finite(trace.span_ns() / 1e6),
         events: trace.events.len() as u64,
     }
@@ -409,6 +453,7 @@ mod tests {
             fingerprint: 0xdeadbeef12345678,
             label: "b1s4".into(),
             fsdp: "FSDPv1".into(),
+            governor: "reactive".into(),
             sharding: "FSDP".into(),
             num_nodes: 1,
             node_iter_ms: Vec::new(),
@@ -427,6 +472,8 @@ mod tests {
             freq_mhz: 1870.123456,
             freq_loss: 0.1234567890123,
             power_w: 698.7,
+            energy_per_iter_j: 42.125,
+            tokens_per_j: 97.53,
             span_ms: 123.456,
             events: 9999,
         };
@@ -436,6 +483,10 @@ mod tests {
         assert_eq!(s.to_json_str(), back.to_json_str());
         // Degenerate topology fields stay off the wire entirely.
         assert!(!s.to_json_str().contains("num_nodes"));
+        // Governor/energy fields are always on the wire (cached and fresh
+        // campaigns must render identically).
+        assert!(s.to_json_str().contains("\"governor\""));
+        assert!(s.to_json_str().contains("energy_per_iter_j"));
 
         // Multi-node HSDP summaries carry the rollup and round-trip too.
         let mut m = s.clone();

@@ -34,7 +34,7 @@ use crate::chopper::overlap::CommIntervals;
 use crate::counters::{CounterTrace, DerivedMetrics};
 use crate::model::ops::{OpKind, OpRef, OpType, Phase};
 use crate::sim::align_key;
-use crate::trace::event::{Stream, Trace, TraceEvent};
+use crate::trace::event::{PowerTrace, Stream, Trace, TraceEvent};
 use crate::util::hash::FxHashMap;
 use std::collections::BTreeMap;
 use std::ops::Range;
@@ -50,6 +50,20 @@ struct MetricsColumn {
     /// `None` when no counter record matched.
     per_event: Vec<Option<DerivedMetrics>>,
     unmatched: usize,
+}
+
+/// Energy rollups joined from a [`PowerTrace`] (the power-management
+/// subsystem's telemetry) — attached on demand like the counter column.
+#[derive(Debug, Default)]
+struct EnergyColumn {
+    /// (gpu, iter) → joules (windows tagged by iteration at window start).
+    per_gpu_iter: BTreeMap<(u32, u32), f64>,
+    /// gpu → total joules.
+    per_gpu: BTreeMap<u32, f64>,
+    /// (phase, gpu) → joules attributed by proportional overlap of each
+    /// power window with the gpu's per-(iter, phase) compute spans.
+    per_phase: BTreeMap<(Phase, u32), f64>,
+    total_j: f64,
 }
 
 /// The shared analysis index. Borrows the trace — nothing is cloned.
@@ -104,6 +118,8 @@ pub struct TraceIndex<'t> {
     id_idx: FxHashMap<u64, u32>,
     /// Counter-derived metrics column (attached on demand).
     metrics: Option<MetricsColumn>,
+    /// Energy rollups from the power trace (attached on demand).
+    energy: Option<EnergyColumn>,
 }
 
 impl<'t> TraceIndex<'t> {
@@ -337,6 +353,7 @@ impl<'t> TraceIndex<'t> {
             comm_durs,
             id_idx: FxHashMap::default(),
             metrics: None,
+            energy: None,
         }
     }
 
@@ -507,6 +524,88 @@ impl<'t> TraceIndex<'t> {
             .get(&op)
             .map(|v| v.as_slice())
             .unwrap_or(&[])
+    }
+
+    // -- energy rollups -----------------------------------------------------
+
+    /// Join a [`PowerTrace`] onto the index: per-(gpu, iter) and per-GPU
+    /// joule rollups (windows tagged by the iteration at window start) and
+    /// a per-(phase, gpu) attribution by proportional overlap of each
+    /// window with the GPU's per-iteration phase spans. Deterministic:
+    /// accumulates in sample order, spans in `BTreeMap` order.
+    pub fn attach_power(&mut self, power: &PowerTrace) {
+        // Per-(gpu, iter, phase) compute spans, one scan over the events.
+        let mut spans: BTreeMap<(u32, u32, Phase), (f64, f64)> = BTreeMap::new();
+        for e in &self.trace.events {
+            if e.stream != Stream::Compute {
+                continue;
+            }
+            let s = spans
+                .entry((e.gpu, e.iter, e.op.phase))
+                .or_insert((f64::INFINITY, f64::NEG_INFINITY));
+            s.0 = s.0.min(e.t_start);
+            s.1 = s.1.max(e.t_end);
+        }
+        let mut per_gpu_spans: BTreeMap<u32, Vec<(Phase, f64, f64)>> =
+            BTreeMap::new();
+        for (&(gpu, _, phase), &(s, e)) in &spans {
+            per_gpu_spans.entry(gpu).or_default().push((phase, s, e));
+        }
+
+        let mut col = EnergyColumn::default();
+        for s in &power.samples {
+            let e_j = s.energy_j();
+            *col.per_gpu_iter.entry((s.gpu, s.iter)).or_insert(0.0) += e_j;
+            *col.per_gpu.entry(s.gpu).or_insert(0.0) += e_j;
+            col.total_j += e_j;
+            let (w0, w1) = (s.t, s.t + s.window_ns);
+            if let Some(sp) = per_gpu_spans.get(&s.gpu) {
+                for &(phase, ps, pe) in sp {
+                    let ov = w1.min(pe) - w0.max(ps);
+                    if ov > 0.0 {
+                        *col.per_phase.entry((phase, s.gpu)).or_insert(0.0) +=
+                            e_j * ov / s.window_ns;
+                    }
+                }
+            }
+        }
+        self.energy = Some(col);
+    }
+
+    pub fn has_energy(&self) -> bool {
+        self.energy.is_some()
+    }
+
+    /// Total joules in the attached power trace (0 when none attached).
+    pub fn total_energy_j(&self) -> f64 {
+        self.energy.as_ref().map(|e| e.total_j).unwrap_or(0.0)
+    }
+
+    /// (gpu, iter) → joules; empty map when no power trace is attached.
+    pub fn energy_per_gpu_iter(&self) -> BTreeMap<(u32, u32), f64> {
+        self.energy
+            .as_ref()
+            .map(|e| e.per_gpu_iter.clone())
+            .unwrap_or_default()
+    }
+
+    /// gpu → total joules.
+    pub fn energy_per_gpu(&self) -> BTreeMap<u32, f64> {
+        self.energy
+            .as_ref()
+            .map(|e| e.per_gpu.clone())
+            .unwrap_or_default()
+    }
+
+    /// (phase, gpu) → joules attributed by window/phase-span overlap. The
+    /// attribution is partial by construction: idle window time (and any
+    /// time outside every phase span) stays unattributed, so summing this
+    /// map yields **at most** `total_energy_j`.
+    pub fn energy_by_phase(&self) -> BTreeMap<(Phase, u32), f64> {
+        self.energy
+            .as_ref()
+            .map(|e| e.per_phase.clone())
+            .unwrap_or_default()
     }
 
     // -- counter metrics column --------------------------------------------
@@ -774,6 +873,29 @@ mod tests {
                 .node_phase_dur()
                 .contains_key(&(Phase::Forward, n)));
         }
+    }
+
+    #[test]
+    fn energy_rollups_conserve_the_power_trace() {
+        let cap = fixtures::runtime(2, 2, 2, 1, FsdpVersion::V1);
+        let mut idx = TraceIndex::build(&cap.trace);
+        assert!(!idx.has_energy());
+        assert_eq!(idx.total_energy_j(), 0.0);
+        idx.attach_power(&cap.power);
+        assert!(idx.has_energy());
+        let total = idx.total_energy_j();
+        assert!(total > 0.0);
+        assert!((total - cap.power.total_energy_j()).abs() <= total * 1e-12);
+        // Per-gpu and per-(gpu, iter) rollups partition the total.
+        let by_gpu: f64 = idx.energy_per_gpu().values().sum();
+        let by_gi: f64 = idx.energy_per_gpu_iter().values().sum();
+        assert!((by_gpu - total).abs() <= total * 1e-9);
+        assert!((by_gi - total).abs() <= total * 1e-9);
+        // Phase attribution is partial (idle windows stay unattributed)
+        // but positive and bounded by the total.
+        let by_phase: f64 = idx.energy_by_phase().values().sum();
+        assert!(by_phase > 0.0);
+        assert!(by_phase <= total * (1.0 + 1e-9), "{by_phase} > {total}");
     }
 
     #[test]

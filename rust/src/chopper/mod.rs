@@ -1,7 +1,8 @@
 //! The Chopper tool itself — the paper's contribution (Fig. 3): trace
 //! alignment, multi-granularity aggregation, overlap / launch-overhead /
-//! CPU-utilization / duration-breakdown analyses, throughput, and the
-//! figure generators.
+//! CPU-utilization / duration-breakdown analyses, throughput, the figure
+//! generators, and the counterfactual what-if policy replay ([`whatif`],
+//! DESIGN.md §9).
 //!
 //! Every analysis consumes the shared build-once/query-many
 //! [`TraceIndex`] (DESIGN.md §7) instead of re-scanning the raw event
@@ -18,6 +19,7 @@ pub mod launch;
 pub mod overlap;
 pub mod report;
 pub mod throughput;
+pub mod whatif;
 
 pub use aggregate::{op_duration_samples, op_instances, Filter, OpInstanceAgg};
 pub use align::AlignedTrace;
@@ -30,3 +32,4 @@ pub use overlap::{
     summarize_op_overlap, CommIntervals, OpOverlapSummary, OverlapSample,
 };
 pub use throughput::{throughput, Throughput};
+pub use whatif::{PolicyOutcome, WhatIfReport};

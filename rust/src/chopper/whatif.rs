@@ -1,0 +1,384 @@
+//! Counterfactual what-if replay: one workload, many power-management
+//! policies, a ranked advisor report.
+//!
+//! The per-op Eq. 6–10 breakdown (fig15) says *where* the
+//! theoretical-vs-observed gap comes from — and DVFS frequency overhead is
+//! its single largest term — but never answers the operator's question:
+//! "what would iteration time and energy be under a different policy?".
+//! This module closes that loop: it replays the identical workload (same
+//! seed, same program, same jitter draws) under a set of
+//! [`GovernorKind`]s and reports Δ iteration time, Δ energy and the
+//! perf-per-watt frontier per policy — the end-to-end "what you would
+//! gain" numbers the paper's power-management insight calls for.
+//!
+//! Replays are engine-only (no counter passes, no CPU model — policies
+//! affect neither), fan out over the deterministic campaign runner, and
+//! are reproducible byte for byte (`tests/pipeline.rs` and the CI what-if
+//! smoke pin two invocations identical).
+
+use crate::campaign::runner::run_ordered;
+use crate::chopper::index::TraceIndex;
+use crate::chopper::report::Figure;
+use crate::chopper::throughput::throughput;
+use crate::config::{ModelConfig, NodeSpec, WorkloadConfig};
+use crate::sim::{Engine, EngineParams, GovernorKind};
+use crate::util::{ascii, stats};
+use std::fmt::Write as _;
+
+/// One policy's replay outcome. Durations in ms, energy in joules per
+/// iteration (cluster-wide, sampled iterations), deltas in percent
+/// relative to the baseline policy (negative Δ = better).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PolicyOutcome {
+    pub governor: GovernorKind,
+    /// Median per-iteration wall cost of the slowest GPU.
+    pub iter_ms: f64,
+    pub delta_iter_pct: f64,
+    /// Joules per sampled iteration, summed over every rank.
+    pub energy_per_iter_j: f64,
+    pub delta_energy_pct: f64,
+    /// Mean per-GPU package power over active windows (> 400 W).
+    pub power_w: f64,
+    /// Mean engine clock over active windows.
+    pub freq_mhz: f64,
+    pub tokens_per_sec: f64,
+    /// Perf per watt, expressed as tokens per joule.
+    pub tokens_per_j: f64,
+    /// On the (iteration time, energy) Pareto frontier: no other policy
+    /// is at least as fast *and* at least as cheap (strictly better in
+    /// one).
+    pub frontier: bool,
+}
+
+/// The ranked advisor report for one workload.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WhatIfReport {
+    /// The policy deltas are measured against ([`EngineParams::governor`]
+    /// of the replayed parameter set).
+    pub baseline: GovernorKind,
+    /// Outcomes ranked fastest-first (iteration time ascending, policy
+    /// name breaking exact ties) — the "Δ iteration time" ranking.
+    pub rows: Vec<PolicyOutcome>,
+}
+
+impl WhatIfReport {
+    pub fn row(&self, g: GovernorKind) -> Option<&PolicyOutcome> {
+        self.rows.iter().find(|r| r.governor == g)
+    }
+
+    /// The fastest policy (rank 1).
+    pub fn fastest(&self) -> &PolicyOutcome {
+        &self.rows[0]
+    }
+
+    /// The best perf-per-watt policy.
+    pub fn best_perf_per_watt(&self) -> &PolicyOutcome {
+        self.rows
+            .iter()
+            .max_by(|a, b| a.tokens_per_j.total_cmp(&b.tokens_per_j))
+            .expect("report has rows")
+    }
+}
+
+/// Replay `wl` under every governor in `governors` (the baseline
+/// `params.governor` is added automatically if absent, so deltas always
+/// have a referent) and rank the outcomes. `jobs` fans replays out over
+/// the deterministic ordered runner; results are byte-identical to a
+/// serial replay.
+pub fn replay(
+    node: &NodeSpec,
+    cfg: &ModelConfig,
+    wl: &WorkloadConfig,
+    params: &EngineParams,
+    governors: &[GovernorKind],
+    jobs: usize,
+) -> WhatIfReport {
+    let baseline = params.governor;
+    let mut kinds: Vec<GovernorKind> = Vec::new();
+    if !governors.contains(&baseline) {
+        kinds.push(baseline);
+    }
+    for &g in governors {
+        if !kinds.contains(&g) {
+            kinds.push(g);
+        }
+    }
+
+    let mut rows = run_ordered(&kinds, jobs, |_, &g| {
+        let mut p = params.clone();
+        p.governor = g;
+        measure(node, cfg, wl, p, g)
+    });
+
+    // Rank by Δ iteration time (ascending), names breaking exact ties so
+    // the ordering is total and stable across runs.
+    rows.sort_by(|a, b| {
+        a.iter_ms
+            .total_cmp(&b.iter_ms)
+            .then_with(|| a.governor.name().cmp(b.governor.name()))
+    });
+
+    // Deltas vs the baseline policy's row.
+    let (base_iter, base_energy) = rows
+        .iter()
+        .find(|r| r.governor == baseline)
+        .map(|r| (r.iter_ms, r.energy_per_iter_j))
+        .expect("baseline policy was replayed");
+    for r in &mut rows {
+        r.delta_iter_pct = 100.0 * (r.iter_ms / base_iter.max(1e-12) - 1.0);
+        r.delta_energy_pct =
+            100.0 * (r.energy_per_iter_j / base_energy.max(1e-12) - 1.0);
+    }
+
+    // Pareto frontier on (iteration time, energy), both minimized.
+    for i in 0..rows.len() {
+        let dominated = (0..rows.len()).any(|j| {
+            j != i
+                && rows[j].iter_ms <= rows[i].iter_ms
+                && rows[j].energy_per_iter_j <= rows[i].energy_per_iter_j
+                && (rows[j].iter_ms < rows[i].iter_ms
+                    || rows[j].energy_per_iter_j < rows[i].energy_per_iter_j)
+        });
+        rows[i].frontier = !dominated;
+    }
+
+    WhatIfReport { baseline, rows }
+}
+
+/// Engine-only replay of one policy, reduced to its outcome row (deltas
+/// and frontier are filled in by [`replay`] once every row exists).
+fn measure(
+    node: &NodeSpec,
+    cfg: &ModelConfig,
+    wl: &WorkloadConfig,
+    params: EngineParams,
+    g: GovernorKind,
+) -> PolicyOutcome {
+    let out = Engine::new(node, cfg, wl, params).run();
+    let idx = TraceIndex::build(&out.trace);
+
+    let tokens = wl.tokens_per_iteration(out.trace.meta.num_gpus as u64) as f64;
+    let tp = throughput(&idx, tokens);
+    // Same energy reduction as campaign::runner::summarize — one code
+    // path for "joules per sampled iteration" everywhere.
+    let sampled_iters = wl.iterations.saturating_sub(wl.warmup).max(1) as f64;
+    let energy_per_iter_j = out.power.sampled_energy_j(wl.warmup) / sampled_iters;
+
+    // Active-window telemetry, the paper's Fig. 14 averaging — the same
+    // `PowerTrace::active_samples` reduction campaign summaries use.
+    let freqs: Vec<f64> = out.power.active_samples().map(|s| s.freq_mhz).collect();
+    let powers: Vec<f64> = out.power.active_samples().map(|s| s.power_w).collect();
+
+    let tokens_per_j = if energy_per_iter_j > 0.0 {
+        tokens / energy_per_iter_j
+    } else {
+        0.0
+    };
+    PolicyOutcome {
+        governor: g,
+        iter_ms: finite(tp.iter_ns / 1e6),
+        delta_iter_pct: 0.0,
+        energy_per_iter_j: finite(energy_per_iter_j),
+        delta_energy_pct: 0.0,
+        power_w: finite(stats::mean(&powers)),
+        freq_mhz: finite(stats::mean(&freqs)),
+        tokens_per_sec: finite(tp.tokens_per_sec),
+        tokens_per_j: finite(tokens_per_j),
+        frontier: false,
+    }
+}
+
+fn finite(x: f64) -> f64 {
+    if x.is_finite() {
+        x
+    } else {
+        0.0
+    }
+}
+
+/// Render the advisor report: the ranked policy table plus the headline
+/// recommendations. Pure function of the report, so two replays of the
+/// same workload render byte-identically.
+pub fn render(report: &WhatIfReport) -> Figure {
+    let mut csv = String::from(
+        "rank,governor,iter_ms,delta_iter_pct,energy_per_iter_j,\
+         delta_energy_pct,power_w,freq_mhz,tokens_per_sec,tokens_per_j,frontier\n",
+    );
+    let mut rows: Vec<Vec<String>> = Vec::with_capacity(report.rows.len());
+    for (rank, r) in report.rows.iter().enumerate() {
+        rows.push(vec![
+            format!("{}", rank + 1),
+            r.governor.name().to_string(),
+            format!("{:.2}", r.iter_ms),
+            format!("{:+.1}%", r.delta_iter_pct),
+            format!("{:.1}", r.energy_per_iter_j),
+            format!("{:+.1}%", r.delta_energy_pct),
+            format!("{:.0}", r.power_w),
+            format!("{:.0}", r.freq_mhz),
+            format!("{:.0}", r.tokens_per_sec),
+            format!("{:.2}", r.tokens_per_j),
+            if r.frontier { "*".into() } else { String::new() },
+        ]);
+        let _ = writeln!(
+            csv,
+            "{},{},{:.4},{:.2},{:.4},{:.2},{:.1},{:.1},{:.2},{:.4},{}",
+            rank + 1,
+            r.governor.name(),
+            r.iter_ms,
+            r.delta_iter_pct,
+            r.energy_per_iter_j,
+            r.delta_energy_pct,
+            r.power_w,
+            r.freq_mhz,
+            r.tokens_per_sec,
+            r.tokens_per_j,
+            r.frontier as u8
+        );
+    }
+    let mut out = format!(
+        "What-if — governor policy replay (baseline: {}, Δ vs baseline)\n\n",
+        report.baseline.name()
+    );
+    out.push_str(&ascii::table(
+        &[
+            "#", "governor", "iter ms", "Δiter", "J/iter", "ΔJ", "W", "MHz",
+            "tok/s", "tok/J", "pareto",
+        ],
+        &rows,
+    ));
+    let fast = report.fastest();
+    let ppw = report.best_perf_per_watt();
+    let frontier: Vec<&str> = report
+        .rows
+        .iter()
+        .filter(|r| r.frontier)
+        .map(|r| r.governor.name())
+        .collect();
+    let _ = write!(
+        out,
+        "\n  fastest:        {} ({:+.1}% iteration time, {:+.1}% energy)\n\
+         \x20 best perf/watt: {} ({:.2} tok/J)\n\
+         \x20 pareto frontier (time × energy): {}\n",
+        fast.governor.name(),
+        fast.delta_iter_pct,
+        fast.delta_energy_pct,
+        ppw.governor.name(),
+        ppw.tokens_per_j,
+        frontier.join(", ")
+    );
+    Figure {
+        id: "whatif",
+        title: "What-if — governor policy replay".into(),
+        ascii: out,
+        csv,
+        svg: None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::FsdpVersion;
+
+    fn small() -> (NodeSpec, ModelConfig, WorkloadConfig) {
+        let node = NodeSpec::mi300x_node();
+        let mut cfg = ModelConfig::llama3_8b();
+        cfg.layers = 2;
+        let mut wl = WorkloadConfig::new(2, 4096, FsdpVersion::V1);
+        wl.iterations = 2;
+        wl.warmup = 1;
+        (node, cfg, wl)
+    }
+
+    fn report() -> WhatIfReport {
+        let (node, cfg, wl) = small();
+        replay(
+            &node,
+            &cfg,
+            &wl,
+            &EngineParams::default(),
+            &GovernorKind::ALL,
+            2,
+        )
+    }
+
+    #[test]
+    fn ranks_all_policies_with_baseline_deltas() {
+        let r = report();
+        assert_eq!(r.rows.len(), GovernorKind::ALL.len());
+        assert_eq!(r.baseline, GovernorKind::Reactive);
+        // Ranked ascending by iteration time.
+        for w in r.rows.windows(2) {
+            assert!(w[0].iter_ms <= w[1].iter_ms);
+        }
+        // Baseline row's deltas are exactly zero.
+        let base = r.row(GovernorKind::Reactive).unwrap();
+        assert_eq!(base.delta_iter_pct, 0.0);
+        assert_eq!(base.delta_energy_pct, 0.0);
+        // Every row carries real signal.
+        for row in &r.rows {
+            assert!(row.iter_ms > 0.0, "{}", row.governor);
+            assert!(row.energy_per_iter_j > 0.0, "{}", row.governor);
+            assert!(row.tokens_per_j > 0.0, "{}", row.governor);
+        }
+    }
+
+    #[test]
+    fn oracle_is_at_least_as_fast_as_reactive() {
+        let r = report();
+        let oracle = r.row(GovernorKind::Oracle).unwrap();
+        let reactive = r.row(GovernorKind::Reactive).unwrap();
+        assert!(
+            oracle.iter_ms <= reactive.iter_ms,
+            "peak clocks slower than throttled clocks: {} vs {}",
+            oracle.iter_ms,
+            reactive.iter_ms
+        );
+        assert!(oracle.freq_mhz >= reactive.freq_mhz);
+    }
+
+    #[test]
+    fn frontier_contains_extremes_and_report_is_deterministic() {
+        let a = report();
+        let b = report();
+        assert_eq!(a, b, "replay not deterministic");
+        let fa = render(&a);
+        let fb = render(&b);
+        assert_eq!(fa.ascii, fb.ascii);
+        assert_eq!(fa.csv, fb.csv);
+        // The fastest policy and the lowest-energy policy can never be
+        // dominated, so the frontier holds ≥ 1 row and includes both.
+        let fastest = a.fastest();
+        assert!(fastest.frontier, "fastest policy off the frontier");
+        let cheapest = a
+            .rows
+            .iter()
+            .min_by(|x, y| x.energy_per_iter_j.total_cmp(&y.energy_per_iter_j))
+            .unwrap();
+        assert!(cheapest.frontier, "cheapest policy off the frontier");
+        // Rendering mentions every policy in the CSV.
+        for g in GovernorKind::ALL {
+            assert!(fa.csv.contains(g.name()), "{g} missing from CSV");
+        }
+    }
+
+    #[test]
+    fn parallel_replay_matches_serial() {
+        let (node, cfg, wl) = small();
+        let p = EngineParams::default();
+        let serial = replay(&node, &cfg, &wl, &p, &GovernorKind::ALL, 1);
+        let parallel = replay(&node, &cfg, &wl, &p, &GovernorKind::ALL, 4);
+        assert_eq!(serial, parallel);
+        assert_eq!(render(&serial).csv, render(&parallel).csv);
+    }
+
+    #[test]
+    fn baseline_added_when_absent() {
+        let (node, cfg, wl) = small();
+        let p = EngineParams::default();
+        let r = replay(&node, &cfg, &wl, &p, &[GovernorKind::Oracle], 1);
+        assert_eq!(r.rows.len(), 2);
+        assert!(r.row(GovernorKind::Reactive).is_some());
+        assert!(r.row(GovernorKind::Oracle).is_some());
+    }
+}

@@ -98,6 +98,13 @@ impl Args {
         }
     }
 
+    pub fn flag_f64(&mut self, name: &str, default: f64) -> Result<f64, String> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name}: bad number {v}")),
+        }
+    }
+
     pub fn switch(&mut self, name: &str) -> bool {
         self.flag(name).map(|v| v != "false").unwrap_or(false)
     }
@@ -145,6 +152,9 @@ mod tests {
         assert_eq!(a.flag_f32("lr", 2.0).unwrap(), -0.01);
         assert_eq!(a.flag_u64("seed", 0).unwrap(), 7);
         assert!(a.finish().is_ok());
+        let mut c = parse("chopper whatif --cap-ratio 0.65");
+        assert_eq!(c.flag_f64("cap-ratio", 0.7).unwrap(), 0.65);
+        assert_eq!(c.flag_f64("other", 1.5).unwrap(), 1.5);
         // Even a doubled-dash numeric token is a value, not a flag.
         let mut b = parse("chopper train --lr --0.5");
         assert_eq!(b.flag_or("lr", "x"), "--0.5");

@@ -23,16 +23,25 @@ USAGE: chopper <subcommand> [options]
            write every figure (txt/csv/svg) to DIR (default: figures/).
   campaign [--layers 2,4] [--batch 1,2,4] [--seq 4,8 (K tokens)]
            [--fsdp v1,v2] [--nodes 1,2,4] [--sharding fsdp,hsdp]
-           [--nic-gbs 50,12.5] [--iters N] [--warmup N] [--seed N]
+           [--nic-gbs 50,12.5] [--governor reactive,fixed_cap,det_aware,oracle]
+           [--iters N] [--warmup N] [--seed N]
            [--ablate knob=v1,v2[;knob2=...]] [--jobs N] [--cache-dir DIR]
            [--force] [--no-cache] [--out DIR]
            Expand the scenario grid (model × workload × topology ×
-           engine-parameter ablations), fan scenarios out over worker
-           threads, reuse cached results, and print cross-scenario
-           comparison tables (plus per-node rollups on multi-node grids).
+           governor policy × engine-parameter ablations), fan scenarios
+           out over worker threads, reuse cached results, and print
+           cross-scenario comparison tables incl. energy columns (plus
+           per-node rollups on multi-node grids and a cross-policy
+           energy/perf table on --governor grids).
            Knobs: spin_penalty transfer_penalty comm_stretch rank_jitter
            compute_jitter dispatch_jitter comm_delay_sigma_ns
-           far_rank_delay_ns dvfs_window_ns.
+           far_rank_delay_ns dvfs_window_ns margin_k fixed_cap_ratio.
+  whatif   [--workload b2s4] [--fsdp v1|v2] [--layers N] [--iters N]
+           [--warmup N] [--governor reactive,fixed_cap,det_aware,oracle]
+           [--cap-ratio 0.7] [--jobs N] [--out DIR]
+           Replay one workload under a set of power-management policies
+           and print the ranked advisor report: Δ iteration time,
+           Δ energy, and the perf-per-watt (time × energy) frontier.
   figure   <table2|fig4..fig15|all> [--layers N] [--iters N] [--out DIR]
            Regenerate one figure; prints the ASCII rendering.
   collect  [--workload b2s4] [--fsdp v1|v2] [--nodes N] [--sharding
@@ -106,6 +115,10 @@ pub fn cmd_campaign(args: &mut Args) -> Result<(), String> {
         Some(s) => grid::parse_list_f64(&s)?,
         None => Vec::new(),
     };
+    let governors = grid::parse_list_governor(&args.flag_or("governor", "reactive"))?;
+    if governors.is_empty() {
+        return Err("campaign: --governor needs at least one policy".into());
+    }
     let iters = args.flag_u32("iters", 4)?;
     let warmup = args.flag_u32("warmup", iters / 2)?;
     let seed = args.flag_u64("seed", 0xC0FFEE)?;
@@ -128,6 +141,7 @@ pub fn cmd_campaign(args: &mut Args) -> Result<(), String> {
     spec.nodes = nodes;
     spec.shardings = shardings;
     spec.nic_gbs = nic_gbs;
+    spec.governors = governors;
     spec.seed = seed;
     spec.ablations = ablations;
     let scenarios = spec.expand();
@@ -165,12 +179,63 @@ pub fn cmd_campaign(args: &mut Args) -> Result<(), String> {
     if outcome.summaries.iter().any(|s| s.num_nodes > 1) {
         figs.push(campaign::campaign_by_nodes(&outcome.summaries));
     }
+    // Cross-policy energy/perf table when the grid has a governor axis.
+    if outcome.summaries.iter().any(|s| s.governor != "reactive") {
+        figs.push(campaign::campaign_by_governor(&outcome.summaries));
+    }
     for f in &figs {
         println!("{}", f.ascii);
         if let Some(dir) = &out {
             f.save(dir).map_err(|e| e.to_string())?;
             eprintln!("wrote {}/{}.{{txt,csv}}", dir.display(), f.id);
         }
+    }
+    Ok(())
+}
+
+/// `whatif` — replay one workload under a set of power-management
+/// policies and print the ranked advisor report (chopper::whatif).
+pub fn cmd_whatif(args: &mut Args) -> Result<(), String> {
+    let mut cfg = ModelConfig::llama3_8b();
+    cfg.layers = args.flag_u64("layers", 8)?;
+    let label = args.flag_or("workload", "b2s4");
+    let fsdp = parse_fsdp(&args.flag_or("fsdp", "v1"))?;
+    let iters = args.flag_u32("iters", 6)?;
+    let warmup = args.flag_u32("warmup", iters / 2)?;
+    // Same flag spelling as `campaign --governor` (one axis, one name).
+    let governors = crate::sim::parse_list_governor(
+        &args.flag_or("governor", "reactive,fixed_cap,det_aware,oracle"),
+    )?;
+    let cap_ratio = args.flag_f64("cap-ratio", 0.7)?;
+    let jobs = args.flag_u32("jobs", campaign::default_jobs() as u32)? as usize;
+    let out = args.flag("out").map(PathBuf::from);
+    args.finish()?;
+    if governors.is_empty() {
+        return Err("whatif: --governor needs at least one policy".into());
+    }
+    if !(cap_ratio > 0.0 && cap_ratio.is_finite()) {
+        return Err(format!("whatif: bad --cap-ratio {cap_ratio}"));
+    }
+    let mut wl = WorkloadConfig::parse_label(&label, fsdp)
+        .ok_or_else(|| format!("bad --workload {label}"))?;
+    wl.iterations = iters;
+    wl.warmup = warmup;
+    let mut params = crate::sim::EngineParams::default();
+    params.fixed_cap_ratio = cap_ratio;
+    let node = NodeSpec::mi300x_node();
+    eprintln!(
+        "whatif: {} × {} layers × {iters} iters under {} policies, {jobs} worker(s)…",
+        wl.label_with_fsdp(),
+        cfg.layers,
+        governors.len()
+    );
+    let report =
+        crate::chopper::whatif::replay(&node, &cfg, &wl, &params, &governors, jobs);
+    let fig = crate::chopper::whatif::render(&report);
+    println!("{}", fig.ascii);
+    if let Some(dir) = &out {
+        fig.save(dir).map_err(|e| e.to_string())?;
+        eprintln!("wrote {}/{}.{{txt,csv}}", dir.display(), fig.id);
     }
     Ok(())
 }
@@ -254,6 +319,25 @@ pub fn cmd_collect(args: &mut Args) -> Result<(), String> {
         "cpu: median active {:.0} cores, min bound {:.1}",
         cpu.median_active(),
         cpu.median_min_cores()
+    );
+    // Energy rollups: join the power telemetry onto the trace index and
+    // report where the joules went (sim::power / DESIGN.md §9).
+    let mut idx = crate::chopper::TraceIndex::build(&run.trace);
+    idx.attach_power(&run.power);
+    let by_phase = idx.energy_by_phase();
+    let phase_j = |ph: crate::model::ops::Phase| -> f64 {
+        by_phase
+            .iter()
+            .filter(|((p, _), _)| *p == ph)
+            .map(|(_, v)| *v)
+            .sum()
+    };
+    println!(
+        "energy: {:.1} J total ({:.1} fwd / {:.1} bwd / {:.1} opt attributed)",
+        idx.total_energy_j(),
+        phase_j(crate::model::ops::Phase::Forward),
+        phase_j(crate::model::ops::Phase::Backward),
+        phase_j(crate::model::ops::Phase::Optimizer),
     );
     Ok(())
 }
@@ -461,6 +545,39 @@ mod tests {
         );
         assert_eq!(
             run_cli("chopper campaign --no-cache --nodes 0 --iters 2"),
+            1
+        );
+    }
+
+    #[test]
+    fn whatif_runs_and_rejects_bad_inputs() {
+        assert_eq!(
+            run_cli(
+                "chopper whatif --workload b1s4 --layers 1 --iters 2 \
+                 --warmup 1 --governor reactive,oracle --jobs 2"
+            ),
+            0
+        );
+        assert_eq!(run_cli("chopper whatif --governor turbo --iters 2"), 1);
+        assert_eq!(
+            run_cli("chopper whatif --iters 2 --cap-ratio -1 --layers 1"),
+            1
+        );
+        assert_eq!(run_cli("chopper whatif --workload bogus --iters 2"), 1);
+    }
+
+    #[test]
+    fn campaign_accepts_governor_axis() {
+        assert_eq!(
+            run_cli(
+                "chopper campaign --layers 1 --batch 1 --seq 4 --fsdp v1 \
+                 --governor reactive,oracle --iters 2 --warmup 1 --jobs 2 \
+                 --no-cache"
+            ),
+            0
+        );
+        assert_eq!(
+            run_cli("chopper campaign --no-cache --governor warp9 --iters 2"),
             1
         );
     }

@@ -1,5 +1,10 @@
-//! DVFS governor and power model — the mechanism behind Observation 6 and
-//! Insight 8.
+//! The stock DVFS governor mechanism — the behaviour behind Observation 6
+//! and Insight 8. Since the power-management refactor this is one policy
+//! among several: `sim::power` wraps it as `Reactive` (bit-identical) and
+//! offers alternatives behind the [`GovernorPolicy`](crate::sim::power::
+//! GovernorPolicy) trait; the package-power model itself lives in
+//! [`power::package_power_w`](crate::sim::power::package_power_w) so every
+//! policy prices watts identically.
 //!
 //! Per window the model computes package power from engine activity
 //! (MFMA-weighted compute busy fraction), HBM traffic, and an HBM power
@@ -48,13 +53,34 @@ pub struct DvfsGovernor {
 }
 
 impl DvfsGovernor {
+    /// The legacy 1 ms / 0.3-margin constructor, kept with this exact
+    /// signature for the verbatim pre-refactor engine in
+    /// `benches/engine_baseline.rs`. New code routes the window and margin
+    /// explicitly via [`with_window`](Self::with_window) — the engine's
+    /// `EngineParams::dvfs_window_ns` / `margin_k` are the single source
+    /// of truth (previously `window_ns` was duplicated here and silently
+    /// disagreed with the engine's tick period on non-default windows).
     pub fn new(gpu: GpuSpec, seed: u64, gpu_idx: u32, hbm_noise_w: f64) -> Self {
+        Self::with_window(gpu, seed, gpu_idx, hbm_noise_w, 1_000_000.0, 0.3)
+    }
+
+    /// Construct with an explicit governor window (ns) and margin
+    /// coefficient — what [`sim::power::Reactive`](crate::sim::power::
+    /// Reactive) builds from `EngineParams`.
+    pub fn with_window(
+        gpu: GpuSpec,
+        seed: u64,
+        gpu_idx: u32,
+        hbm_noise_w: f64,
+        window_ns: f64,
+        margin_k: f64,
+    ) -> Self {
         Self {
             freq_mhz: gpu.freq_peak_mhz * 0.85,
             mem_freq_mhz: gpu.mem_freq_peak_mhz * 0.9,
-            window_ns: 1_000_000.0, // 1 ms governor tick
+            window_ns,
             hbm_noise_w,
-            margin_k: 0.3,
+            margin_k,
             power_ema: Ema::new(0.2),
             power_var_ema: Ema::new(0.1),
             last_power_w: gpu.idle_power_w,
@@ -63,23 +89,17 @@ impl DvfsGovernor {
         }
     }
 
-    /// Package power at frequency `f` for the given activity.
-    ///
-    /// The coefficients make a fully-busy MFMA workload *power-limited* at
-    /// peak clock (≈775 W > the 750 W cap) — the regime the MI300X actually
-    /// operates in during GEMM-heavy training, and the precondition for
-    /// DVFS to matter at all (Insight 8).
+    /// Package power at frequency `f` for the given activity — the shared
+    /// model in [`power::package_power_w`](crate::sim::power::
+    /// package_power_w), evaluated at this governor's window.
     fn power_at(&self, f_mhz: f64, act: &WindowActivity, noise_w: f64) -> f64 {
-        let g = &self.gpu;
-        let fr = f_mhz / g.freq_peak_mhz;
-        // Dynamic power ~ f^2.2 (voltage scales with f); split into MFMA
-        // (dominant), generic compute, and comm-engine terms.
-        let mfma_w = 760.0 * act.compute_busy * act.mfma_util;
-        let valu_w = 150.0 * act.compute_busy * (1.0 - act.mfma_util);
-        let comm_w = 40.0 * act.comm_busy;
-        let hbm_rate = act.hbm_bytes / (self.window_ns * 1e-9) / g.hbm_bw;
-        let hbm_w = 200.0 * hbm_rate.min(1.2);
-        g.idle_power_w + (mfma_w + valu_w) * fr.powf(2.2) + comm_w + hbm_w + noise_w
+        crate::sim::power::package_power_w(
+            &self.gpu,
+            f_mhz,
+            self.window_ns,
+            act,
+            noise_w,
+        )
     }
 
     /// Advance one window: observe activity, update the power telemetry,
@@ -93,13 +113,14 @@ impl DvfsGovernor {
     /// power itself, which keeps the *average* power of noisy and quiet
     /// workloads nearly identical (Observation 6).
     pub fn step(&mut self, act: &WindowActivity) -> (f64, f64) {
-        // Allocator-driven HBM power noise: bursty page touches mostly
-        // *shift* HBM power between windows (the pages get touched either
-        // way), with a smaller genuinely-extra component (fresh-page
-        // writes). Only manifests while the GPU is actually moving memory.
+        // Allocator-driven HBM power noise (shared draw — see
+        // power::hbm_noise_draw for the physics).
         let busy = act.compute_busy.max(act.comm_busy);
-        let n = self.rng.normal(0.0, self.hbm_noise_w) * busy;
-        let noise = n + 1.5 * n.abs();
+        let noise = crate::sim::power::hbm_noise_draw(
+            &mut self.rng,
+            self.hbm_noise_w,
+            act,
+        );
         // The in-window fast regulator bounds transient overshoot to ~10%
         // above the cap (the slow per-window loop below handles the rest).
         let power = self
@@ -124,9 +145,11 @@ impl DvfsGovernor {
             let budget = self.gpu.power_cap_w - margin;
             // Closed-form inversion of power_at: dynamic = dyn_w * fr^2.2,
             // so the highest admissible ratio is ((budget-static)/dyn)^(1/2.2);
-            // snap down to the 50 MHz grid the firmware uses.
-            let dyn_w = 760.0 * act.compute_busy * act.mfma_util
-                + 150.0 * act.compute_busy * (1.0 - act.mfma_util);
+            // snap down to the 50 MHz grid the firmware uses. Coefficients
+            // are the shared power-model constants (sim::power).
+            use crate::sim::power::{FREQ_POWER_EXP, MFMA_PEAK_W, VALU_PEAK_W};
+            let dyn_w = MFMA_PEAK_W * act.compute_busy * act.mfma_util
+                + VALU_PEAK_W * act.compute_busy * (1.0 - act.mfma_util);
             // power_at(0) = idle + comm + hbm (the fr^2.2 term vanishes).
             let static_w = self.power_at(0.0, act, 0.0);
             let headroom = budget - static_w;
@@ -135,7 +158,7 @@ impl DvfsGovernor {
             } else if headroom <= 0.0 {
                 self.gpu.freq_min_mhz
             } else {
-                let fr = (headroom / dyn_w).powf(1.0 / 2.2);
+                let fr = (headroom / dyn_w).powf(1.0 / FREQ_POWER_EXP);
                 let f = fr * self.gpu.freq_peak_mhz;
                 (f / 50.0).floor() * 50.0
             };
@@ -241,5 +264,52 @@ mod tests {
         let a = run(30.0, 100);
         let b = run(30.0, 100);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn legacy_constructor_equals_with_window_defaults() {
+        let mut a = DvfsGovernor::new(GpuSpec::mi300x(), 11, 3, 25.0);
+        let mut b = DvfsGovernor::with_window(
+            GpuSpec::mi300x(),
+            11,
+            3,
+            25.0,
+            1_000_000.0,
+            0.3,
+        );
+        let act = busy_window();
+        for _ in 0..200 {
+            let (pa, fa) = a.step(&act);
+            let (pb, fb) = b.step(&act);
+            assert_eq!(pa.to_bits(), pb.to_bits());
+            assert_eq!(fa.to_bits(), fb.to_bits());
+        }
+    }
+
+    #[test]
+    fn window_length_feeds_the_power_model() {
+        // Same byte traffic in a half-length window = twice the HBM rate =
+        // more HBM power — the disagreement the routed window fixes.
+        let mut short = DvfsGovernor::with_window(
+            GpuSpec::mi300x(),
+            5,
+            0,
+            0.0,
+            500_000.0,
+            0.3,
+        );
+        let mut long = DvfsGovernor::with_window(
+            GpuSpec::mi300x(),
+            5,
+            0,
+            0.0,
+            1_000_000.0,
+            0.3,
+        );
+        let mut act = busy_window();
+        act.hbm_bytes = 1.0e9; // keep both windows below HBM saturation
+        let (p_short, _) = short.step(&act);
+        let (p_long, _) = long.step(&act);
+        assert!(p_short > p_long, "{p_short} !> {p_long}");
     }
 }

@@ -37,8 +37,9 @@ use crate::fsdp::{
 };
 use crate::model::ops::OpType;
 use crate::sim::duration::{DurationModel, KernelTiming};
-use crate::sim::dvfs::{DvfsGovernor, WindowActivity};
+use crate::sim::dvfs::WindowActivity;
 use crate::sim::interconnect::{group_collective_base_ns, CollPhase, CollState};
+use crate::sim::power::{GovCtx, GovernorKind, GovernorPolicy};
 use crate::trace::event::{PowerSample, PowerTrace, Stream, Trace, TraceEvent};
 use crate::util::hash::FxHashMap;
 use crate::util::intern::{intern, Sym};
@@ -79,8 +80,18 @@ pub struct EngineParams {
     /// (per-iteration peak σ normalized by the layer weight size) — the
     /// FSDPv1 non-determinism channel (Observation 6).
     pub hbm_noise_scale_w: f64,
-    /// DVFS governor window (ns).
+    /// DVFS governor window (ns) — the single source of truth for both
+    /// the engine's tick period and the policy's internal power model.
     pub dvfs_window_ns: f64,
+    /// Governor margin coefficient: required power headroom =
+    /// `margin_k` × observed power sigma (previously hard-coded 0.3
+    /// inside the governor).
+    pub margin_k: f64,
+    /// Power-management policy (`sim::power`); `Reactive` is the stock
+    /// governor and reproduces the pre-refactor pipeline byte for byte.
+    pub governor: GovernorKind,
+    /// Clock ratio the `FixedCap` policy pins (fraction of peak).
+    pub fixed_cap_ratio: f64,
 }
 
 impl Default for EngineParams {
@@ -97,6 +108,9 @@ impl Default for EngineParams {
             hbm_noise_quiet_w: 6.0,
             hbm_noise_scale_w: 185.0,
             dvfs_window_ns: 1_000_000.0,
+            margin_k: 0.3,
+            governor: GovernorKind::Reactive,
+            fixed_cap_ratio: 0.7,
         }
     }
 }
@@ -146,6 +160,10 @@ pub struct SimOutput {
     pub alloc: AllocStats,
     /// Wall-clock boundaries of each iteration (start, end), ns.
     pub iter_bounds: Vec<(f64, f64)>,
+    /// Per-rank joules integrated by the power-management policy — the
+    /// window-sum of power × dt over every DVFS tick (`tests/pipeline.rs`
+    /// pins it against the per-sample sum of the power trace).
+    pub gov_energy_j: Vec<f64>,
 }
 
 // ---------------------------------------------------------------------------
@@ -250,8 +268,8 @@ struct RankState {
     /// Pending TryCompute timer already scheduled for a future time.
     compute_timer: f64,
     comm_timer: f64,
-    // DVFS + accounting.
-    gov: DvfsGovernor,
+    // Power management + accounting.
+    gov: Box<dyn GovernorPolicy>,
     win_start: f64,
     win: WindowActivity,
     comm_accounted: f64,
@@ -403,7 +421,16 @@ impl<'a> Engine<'a> {
                 // runs the identical allocator pattern), so all governors
                 // share one noise stream; divergence between ranks comes
                 // from their (slightly) different activity histories.
-                gov: DvfsGovernor::new(topo.node.gpu.clone(), wl.seed, 0, noise_w),
+                gov: params.governor.build(&GovCtx {
+                    gpu: &topo.node.gpu,
+                    seed: wl.seed,
+                    gpu_idx: 0,
+                    hbm_noise_w: noise_w,
+                    window_ns: params.dvfs_window_ns,
+                    margin_k: params.margin_k,
+                    fixed_cap_ratio: params.fixed_cap_ratio,
+                    spike_var,
+                }),
                 win_start: 0.0,
                 win: WindowActivity::default(),
                 comm_accounted: 0.0,
@@ -676,8 +703,10 @@ impl<'a> Engine<'a> {
     /// Current progress rate for an in-flight kernel on `rank`.
     fn compute_rate(&self, rank: usize, timing: &KernelTiming) -> f64 {
         let r = &self.ranks[rank];
-        let fr = r.gov.freq_ratio().max(0.05);
-        let mfr = r.gov.mem_freq_ratio().max(0.05);
+        // Clamped accessors: the policy (not each call site) guarantees
+        // the ratios can never reach the divide-by-zero regime.
+        let fr = r.gov.freq_ratio_clamped();
+        let mfr = r.gov.mem_freq_ratio_clamped();
         let mbf = timing.mem_bound_frac.clamp(0.0, 1.0);
         let freq_factor = 1.0 / ((1.0 - mbf) / fr + mbf / mfr);
         let mem_sens = 0.25 + 0.75 * mbf;
@@ -739,7 +768,7 @@ impl<'a> Engine<'a> {
             .expect("compute queue holds only kernels");
         let rate = self.compute_rate(rank, &timing);
         let gen = self.next_gen();
-        let freq = self.ranks[rank].gov.freq_mhz;
+        let freq = self.ranks[rank].gov.freq_mhz();
         let inflight = InflightKernel {
             work_s: timing.nominal_ns * 1e-9,
             bytes_left: bytes,
@@ -1060,7 +1089,7 @@ impl<'a> Engine<'a> {
                 t_end: self.now,
                 seq,
                 fwd_link: None,
-                freq_mhz: self.ranks[rank].gov.freq_mhz,
+                freq_mhz: self.ranks[rank].gov.freq_mhz(),
                 flops: 0.0,
                 bytes: c.desc.bytes,
             });
@@ -1116,7 +1145,7 @@ impl<'a> Engine<'a> {
             t: t0,
             window_ns: wn,
             freq_mhz: freq,
-            mem_freq_mhz: self.ranks[rank].gov.mem_freq_mhz,
+            mem_freq_mhz: self.ranks[rank].gov.mem_freq_mhz(),
             power_w: power,
             iter,
         });
@@ -1197,6 +1226,8 @@ impl<'a> Engine<'a> {
         // deterministically instead of silently comparing Equal.
         self.events.sort_by(|a, b| a.t_start.total_cmp(&b.t_start));
         self.host.span_ns = self.now;
+        let gov_energy_j: Vec<f64> =
+            self.ranks.iter().map(|r| r.gov.energy_j()).collect();
         let mut trace = Trace::default();
         trace.meta.workload = self.wl.label();
         trace.meta.fsdp = self.wl.fsdp.to_string();
@@ -1216,6 +1247,7 @@ impl<'a> Engine<'a> {
             host: self.host,
             alloc: self.alloc,
             iter_bounds: self.iter_bounds,
+            gov_energy_j,
         }
     }
 }

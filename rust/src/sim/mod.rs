@@ -1,8 +1,10 @@
 //! The node simulator substrate: everything the paper's testbed did, as
 //! mechanisms — kernel timing (roofline + tile selection), the
 //! discrete-event multi-GPU engine with C3 contention, the interconnect
-//! rendezvous model, the DVFS governor, the host-CPU model, and the
-//! serialized hardware-profiling pass.
+//! rendezvous model, the pluggable power-management subsystem
+//! ([`power`]: governor policies + energy accounting; [`dvfs`] holds the
+//! stock reactive mechanism), the host-CPU model, and the serialized
+//! hardware-profiling pass.
 
 pub mod cpu;
 pub mod duration;
@@ -10,11 +12,15 @@ pub mod dvfs;
 pub mod engine;
 pub mod hwprof;
 pub mod interconnect;
+pub mod power;
 
 pub use cpu::{cpu_trace, HostModelParams};
 pub use duration::{DurationModel, KernelTiming};
 pub use dvfs::{DvfsGovernor, WindowActivity};
 pub use engine::{Engine, EngineParams, HostActivity, SimOutput};
+pub use power::{
+    package_power_w, parse_list_governor, GovCtx, GovernorKind, GovernorPolicy,
+};
 pub use hwprof::{align_key, collect_counters, collect_counters_topo};
 pub use interconnect::{
     collective_base_ns, cross_node_allreduce_ns, group_collective_base_ns,

@@ -1,0 +1,751 @@
+//! The pluggable power-management subsystem: a [`GovernorPolicy`] trait
+//! over the per-window frequency/power decision, four concrete policies,
+//! and per-policy energy integration.
+//!
+//! The paper's headline result is that DVFS frequency overhead is the
+//! single largest contributor to the theoretical-vs-observed gap, and its
+//! stated payoff is *improving power-management strategies* — which makes
+//! the governor exactly the mechanism worth making explorable. Before this
+//! module the engine hard-coded one policy ([`DvfsGovernor`], the
+//! margin-tracking reactive firmware model behind Observation 6 /
+//! Insight 8); now the policy is a seeded, deterministic trait object the
+//! engine steps once per window, selected per scenario via
+//! [`EngineParams::governor`](crate::sim::EngineParams):
+//!
+//! | [`GovernorKind`] | Models | Clocks |
+//! |---|---|---|
+//! | `Reactive` | the stock firmware governor (extracted mechanism, byte-identical) | cap-tracking with a σ-proportional margin |
+//! | `FixedCap` | a locked-clock deployment (`rocm-smi --setperflevel` style) | pinned at `fixed_cap_ratio` × peak |
+//! | `DeterministicAware` | firmware that trusts a quiet power signal | reactive, margin shrunk when the FSDPv2 allocator's deterministic memory behaviour is detected |
+//! | `Oracle` | the Eq. 10 `D_peak` denominator made runnable | peak, power cap ignored |
+//!
+//! Every policy integrates energy (`Σ power × window`) as it steps, so a
+//! run's joules are first-class alongside its nanoseconds — the input to
+//! `chopper::whatif`'s perf-per-watt frontier.
+//!
+//! Determinism contract (DESIGN.md §3/§9): a policy's entire stochastic
+//! behaviour comes from the `Rng` substream it is seeded with at
+//! construction (`(seed, "dvfs<gpu_idx>")` — the same channel the stock
+//! governor used, so `Reactive` is bit-identical to the pre-refactor
+//! pipeline); policies never read ambient state, so replaying a workload
+//! under a policy set is reproducible byte for byte.
+
+use crate::config::GpuSpec;
+use crate::sim::dvfs::DvfsGovernor;
+pub use crate::sim::dvfs::WindowActivity;
+use crate::util::prng::Rng;
+use std::fmt;
+
+/// Floor applied to clock ratios before the engine divides by them — a
+/// policy bug (or a hostile `fixed_cap_ratio`) must never turn the
+/// progress-rate math into a divide-by-zero. Shared by the clamped
+/// accessors below; the engine consumes only the clamped forms.
+pub const MIN_FREQ_RATIO: f64 = 0.05;
+
+/// Package-power model coefficients (see [`package_power_w`]): dynamic
+/// power of a fully-busy MFMA workload / generic VALU compute / the comm
+/// engines, the HBM power at saturation, and the f^2.2 voltage-frequency
+/// exponent. One source of truth for every policy *and* the reactive
+/// governor's closed-form inversion.
+pub const MFMA_PEAK_W: f64 = 760.0;
+pub const VALU_PEAK_W: f64 = 150.0;
+pub const COMM_ENGINE_W: f64 = 40.0;
+pub const HBM_PEAK_W: f64 = 200.0;
+pub const FREQ_POWER_EXP: f64 = 2.2;
+
+/// Package power at engine clock `f_mhz` for the given window activity.
+///
+/// The coefficients make a fully-busy MFMA workload *power-limited* at
+/// peak clock (≈775 W > the 750 W cap) — the regime the MI300X actually
+/// operates in during GEMM-heavy training, and the precondition for DVFS
+/// to matter at all (Insight 8). Shared verbatim by every policy.
+pub fn package_power_w(
+    gpu: &GpuSpec,
+    f_mhz: f64,
+    window_ns: f64,
+    act: &WindowActivity,
+    noise_w: f64,
+) -> f64 {
+    let fr = f_mhz / gpu.freq_peak_mhz;
+    // Dynamic power ~ f^2.2 (voltage scales with f); split into MFMA
+    // (dominant), generic compute, and comm-engine terms.
+    let mfma_w = MFMA_PEAK_W * act.compute_busy * act.mfma_util;
+    let valu_w = VALU_PEAK_W * act.compute_busy * (1.0 - act.mfma_util);
+    let comm_w = COMM_ENGINE_W * act.comm_busy;
+    let hbm_rate = act.hbm_bytes / (window_ns * 1e-9) / gpu.hbm_bw;
+    let hbm_w = HBM_PEAK_W * hbm_rate.min(1.2);
+    gpu.idle_power_w
+        + (mfma_w + valu_w) * fr.powf(FREQ_POWER_EXP)
+        + comm_w
+        + hbm_w
+        + noise_w
+}
+
+/// Allocator-driven HBM power noise for one window: bursty page touches
+/// mostly *shift* HBM power between windows, with a smaller genuinely-
+/// extra component (fresh-page writes); only manifests while the GPU is
+/// actually moving memory. The one stochastic term every policy shares —
+/// drawing it from the same substream keeps cross-policy replays
+/// comparable window for window.
+pub fn hbm_noise_draw(rng: &mut Rng, hbm_noise_w: f64, act: &WindowActivity) -> f64 {
+    let busy = act.compute_busy.max(act.comm_busy);
+    let n = rng.normal(0.0, hbm_noise_w) * busy;
+    n + 1.5 * n.abs()
+}
+
+// ---------------------------------------------------------------------------
+// The policy trait
+// ---------------------------------------------------------------------------
+
+/// One GPU's power-management policy: stepped once per DVFS window by the
+/// engine, returning the window's package power and the engine clock the
+/// *next* window will run at. Object-safe; every implementation must be
+/// deterministic given its construction-time seed (DESIGN.md §9).
+pub trait GovernorPolicy: fmt::Debug + Send {
+    /// Advance one window: observe activity, update telemetry, pick the
+    /// next window's clocks. Returns `(power_w, freq_mhz)`.
+    fn step(&mut self, act: &WindowActivity) -> (f64, f64);
+
+    /// Current engine clock, MHz.
+    fn freq_mhz(&self) -> f64;
+
+    /// Current memory clock, MHz.
+    fn mem_freq_mhz(&self) -> f64;
+
+    /// Engine-clock fraction of peak (unclamped — see the `_clamped`
+    /// accessors for what the engine's rate math consumes).
+    fn freq_ratio(&self) -> f64;
+
+    /// Memory-clock fraction of peak (unclamped).
+    fn mem_freq_ratio(&self) -> f64;
+
+    /// Joules integrated so far: the window-sum of `power × dt` over every
+    /// [`step`](Self::step) taken. `tests/props.rs` pins the identity.
+    fn energy_j(&self) -> f64;
+
+    /// Which [`GovernorKind`] built this policy.
+    fn kind(&self) -> GovernorKind;
+
+    /// Engine-clock ratio with the divide-by-zero floor applied — the only
+    /// form the engine's compute-rate math is allowed to consume (the old
+    /// per-call-site `.max(0.05)` clamps, deduplicated here).
+    fn freq_ratio_clamped(&self) -> f64 {
+        self.freq_ratio().max(MIN_FREQ_RATIO)
+    }
+
+    /// Memory-clock ratio with the divide-by-zero floor applied.
+    fn mem_freq_ratio_clamped(&self) -> f64 {
+        self.mem_freq_ratio().max(MIN_FREQ_RATIO)
+    }
+}
+
+/// Everything a [`GovernorKind`] needs to build its policy for one GPU.
+/// Assembled by the engine from the workload, the topology's GPU spec and
+/// [`EngineParams`](crate::sim::EngineParams).
+#[derive(Debug, Clone)]
+pub struct GovCtx<'a> {
+    pub gpu: &'a GpuSpec,
+    pub seed: u64,
+    /// Substream index — the engine passes 0 for every rank (HBM power
+    /// noise is common-mode: all GPUs run the identical allocator
+    /// pattern), matching the pre-refactor governor wiring.
+    pub gpu_idx: u32,
+    /// HBM power-noise sigma (W) derived from the allocator behaviour.
+    pub hbm_noise_w: f64,
+    /// Governor window (ns) — `EngineParams::dvfs_window_ns`, the single
+    /// source of truth (previously duplicated as a hard-coded 1 ms).
+    pub window_ns: f64,
+    /// Margin coefficient: required headroom = `margin_k` × power sigma.
+    pub margin_k: f64,
+    /// Clock ratio `FixedCap` pins (fraction of peak).
+    pub fixed_cap_ratio: f64,
+    /// Allocator per-iteration peak σ normalized by the layer weight size
+    /// — `DeterministicAware`'s determinism signal (≈0 under FSDPv2).
+    pub spike_var: f64,
+}
+
+/// Spike-variability threshold below which `DeterministicAware` treats
+/// the allocator as deterministic (FSDPv2's pre-sized flat buffers sit at
+/// exactly 0; FSDPv1's block churn lands well above).
+pub const DET_SPIKE_THRESHOLD: f64 = 0.01;
+
+/// Margin shrink `DeterministicAware` applies once determinism is
+/// detected: the power signal is trustworthy, so the firmware keeps only
+/// a quarter of the reactive σ-margin.
+pub const DET_MARGIN_SHRINK: f64 = 0.25;
+
+/// The selectable policy set — the campaign `--governor` axis and the
+/// `chopper whatif` replay space.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum GovernorKind {
+    /// The stock margin-tracking firmware governor (the pre-refactor
+    /// pipeline, byte-identical).
+    Reactive,
+    /// Engine/memory clocks pinned at `fixed_cap_ratio` × peak.
+    FixedCap,
+    /// Reactive, with the σ-margin shrunk when the allocator's memory
+    /// behaviour is deterministic (Obs. 6 / Insight 8 acted upon).
+    DeterministicAware,
+    /// Peak clocks, power cap ignored — Eq. 10's `D_peak` denominator.
+    Oracle,
+}
+
+impl GovernorKind {
+    pub const ALL: [GovernorKind; 4] = [
+        GovernorKind::Reactive,
+        GovernorKind::FixedCap,
+        GovernorKind::DeterministicAware,
+        GovernorKind::Oracle,
+    ];
+
+    /// Stable identifier: scenario name tags, summary JSON, CLI values.
+    pub fn name(&self) -> &'static str {
+        match self {
+            GovernorKind::Reactive => "reactive",
+            GovernorKind::FixedCap => "fixed_cap",
+            GovernorKind::DeterministicAware => "det_aware",
+            GovernorKind::Oracle => "oracle",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<GovernorKind> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "reactive" => Some(GovernorKind::Reactive),
+            "fixed_cap" | "fixedcap" | "fixed-cap" => Some(GovernorKind::FixedCap),
+            "det_aware" | "detaware" | "det-aware" | "deterministic" => {
+                Some(GovernorKind::DeterministicAware)
+            }
+            "oracle" => Some(GovernorKind::Oracle),
+            _ => None,
+        }
+    }
+
+    /// Build this kind's policy for one GPU.
+    pub fn build(&self, ctx: &GovCtx<'_>) -> Box<dyn GovernorPolicy> {
+        match self {
+            GovernorKind::Reactive => Box::new(Reactive::new(ctx)),
+            GovernorKind::FixedCap => Box::new(FixedCap::new(ctx)),
+            GovernorKind::DeterministicAware => {
+                Box::new(DeterministicAware::new(ctx))
+            }
+            GovernorKind::Oracle => Box::new(Oracle::new(ctx)),
+        }
+    }
+}
+
+impl fmt::Display for GovernorKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Parse a comma-separated governor list ("reactive,oracle").
+pub fn parse_list_governor(s: &str) -> Result<Vec<GovernorKind>, String> {
+    s.split(',')
+        .filter(|t| !t.trim().is_empty())
+        .map(|t| {
+            GovernorKind::parse(t).ok_or_else(|| {
+                let names: Vec<&str> =
+                    GovernorKind::ALL.iter().map(|g| g.name()).collect();
+                format!("bad governor `{t}` (have: {})", names.join(", "))
+            })
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Reactive — the extracted stock governor
+// ---------------------------------------------------------------------------
+
+/// The stock margin-tracking firmware governor, extracted as a policy: a
+/// thin energy-integrating wrapper over the verbatim [`DvfsGovernor`]
+/// mechanism (which the pre-refactor engine baseline still constructs
+/// directly — `tests/props.rs` pins the two bit-identical).
+#[derive(Debug)]
+pub struct Reactive {
+    gov: DvfsGovernor,
+    energy_j: f64,
+}
+
+impl Reactive {
+    pub fn new(ctx: &GovCtx<'_>) -> Self {
+        Self::with_margin(ctx, ctx.margin_k)
+    }
+
+    fn with_margin(ctx: &GovCtx<'_>, margin_k: f64) -> Self {
+        Self {
+            gov: DvfsGovernor::with_window(
+                ctx.gpu.clone(),
+                ctx.seed,
+                ctx.gpu_idx,
+                ctx.hbm_noise_w,
+                ctx.window_ns,
+                margin_k,
+            ),
+            energy_j: 0.0,
+        }
+    }
+}
+
+impl GovernorPolicy for Reactive {
+    fn step(&mut self, act: &WindowActivity) -> (f64, f64) {
+        let (p, f) = self.gov.step(act);
+        self.energy_j += p * self.gov.window_ns * 1e-9;
+        (p, f)
+    }
+
+    fn freq_mhz(&self) -> f64 {
+        self.gov.freq_mhz
+    }
+
+    fn mem_freq_mhz(&self) -> f64 {
+        self.gov.mem_freq_mhz
+    }
+
+    fn freq_ratio(&self) -> f64 {
+        self.gov.freq_ratio()
+    }
+
+    fn mem_freq_ratio(&self) -> f64 {
+        self.gov.mem_freq_ratio()
+    }
+
+    fn energy_j(&self) -> f64 {
+        self.energy_j
+    }
+
+    fn kind(&self) -> GovernorKind {
+        GovernorKind::Reactive
+    }
+}
+
+// ---------------------------------------------------------------------------
+// FixedCap — locked clocks
+// ---------------------------------------------------------------------------
+
+/// Engine and memory clocks pinned at a configurable fraction of peak —
+/// a locked-clock deployment. The governor makes no decisions at all; the
+/// in-window fast regulator still bounds transient power to 10% above the
+/// board cap (locking clocks does not disable the hardware limiter).
+#[derive(Debug)]
+pub struct FixedCap {
+    gpu: GpuSpec,
+    freq_mhz: f64,
+    mem_freq_mhz: f64,
+    window_ns: f64,
+    hbm_noise_w: f64,
+    rng: Rng,
+    energy_j: f64,
+}
+
+impl FixedCap {
+    pub fn new(ctx: &GovCtx<'_>) -> Self {
+        let gpu = ctx.gpu.clone();
+        let freq_mhz = (gpu.freq_peak_mhz * ctx.fixed_cap_ratio)
+            .clamp(gpu.freq_min_mhz, gpu.freq_peak_mhz);
+        let mem_freq_mhz =
+            (gpu.mem_freq_peak_mhz * ctx.fixed_cap_ratio).min(gpu.mem_freq_peak_mhz);
+        Self {
+            freq_mhz,
+            mem_freq_mhz,
+            window_ns: ctx.window_ns,
+            hbm_noise_w: ctx.hbm_noise_w,
+            rng: Rng::substream(ctx.seed, &format!("dvfs{}", ctx.gpu_idx)),
+            energy_j: 0.0,
+            gpu,
+        }
+    }
+}
+
+impl GovernorPolicy for FixedCap {
+    fn step(&mut self, act: &WindowActivity) -> (f64, f64) {
+        let noise = hbm_noise_draw(&mut self.rng, self.hbm_noise_w, act);
+        let power =
+            package_power_w(&self.gpu, self.freq_mhz, self.window_ns, act, noise)
+                .clamp(self.gpu.idle_power_w, self.gpu.power_cap_w * 1.10);
+        self.energy_j += power * self.window_ns * 1e-9;
+        (power, self.freq_mhz)
+    }
+
+    fn freq_mhz(&self) -> f64 {
+        self.freq_mhz
+    }
+
+    fn mem_freq_mhz(&self) -> f64 {
+        self.mem_freq_mhz
+    }
+
+    fn freq_ratio(&self) -> f64 {
+        self.freq_mhz / self.gpu.freq_peak_mhz
+    }
+
+    fn mem_freq_ratio(&self) -> f64 {
+        self.mem_freq_mhz / self.gpu.mem_freq_peak_mhz
+    }
+
+    fn energy_j(&self) -> f64 {
+        self.energy_j
+    }
+
+    fn kind(&self) -> GovernorKind {
+        GovernorKind::FixedCap
+    }
+}
+
+// ---------------------------------------------------------------------------
+// DeterministicAware — Insight 8 acted upon
+// ---------------------------------------------------------------------------
+
+/// The reactive governor, but the σ-margin shrinks when the allocator's
+/// memory behaviour is deterministic (FSDPv2's pre-sized flat buffers ⇒
+/// quiet power signal ⇒ the firmware can trust its telemetry and run
+/// closer to the cap). On a noisy FSDPv1 workload it degenerates to
+/// [`Reactive`] exactly — the margin only shrinks when shrinking is safe,
+/// which is precisely the paper's Obs. 6 / Insight 8 recommendation.
+#[derive(Debug)]
+pub struct DeterministicAware {
+    inner: Reactive,
+    /// Allocator determinism was detected at construction.
+    pub detected: bool,
+}
+
+impl DeterministicAware {
+    pub fn new(ctx: &GovCtx<'_>) -> Self {
+        let detected = ctx.spike_var < DET_SPIKE_THRESHOLD;
+        let margin_k = if detected {
+            ctx.margin_k * DET_MARGIN_SHRINK
+        } else {
+            ctx.margin_k
+        };
+        Self {
+            inner: Reactive::with_margin(ctx, margin_k),
+            detected,
+        }
+    }
+}
+
+impl GovernorPolicy for DeterministicAware {
+    fn step(&mut self, act: &WindowActivity) -> (f64, f64) {
+        self.inner.step(act)
+    }
+
+    fn freq_mhz(&self) -> f64 {
+        self.inner.freq_mhz()
+    }
+
+    fn mem_freq_mhz(&self) -> f64 {
+        self.inner.mem_freq_mhz()
+    }
+
+    fn freq_ratio(&self) -> f64 {
+        self.inner.freq_ratio()
+    }
+
+    fn mem_freq_ratio(&self) -> f64 {
+        self.inner.mem_freq_ratio()
+    }
+
+    fn energy_j(&self) -> f64 {
+        self.inner.energy_j()
+    }
+
+    fn kind(&self) -> GovernorKind {
+        GovernorKind::DeterministicAware
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Oracle — Eq. 10's D_peak denominator
+// ---------------------------------------------------------------------------
+
+/// Peak clocks, power cap ignored: what the run would cost if frequency
+/// were never the bottleneck — the runnable form of Eq. 10's `D_peak`
+/// denominator. Power is reported honestly (it *exceeds* the board cap on
+/// MFMA-heavy windows; that excess is the physical reason the reactive
+/// governor must throttle), so the oracle's energy quantifies what
+/// peak-clock performance would cost in joules.
+#[derive(Debug)]
+pub struct Oracle {
+    gpu: GpuSpec,
+    window_ns: f64,
+    hbm_noise_w: f64,
+    rng: Rng,
+    energy_j: f64,
+}
+
+impl Oracle {
+    pub fn new(ctx: &GovCtx<'_>) -> Self {
+        Self {
+            gpu: ctx.gpu.clone(),
+            window_ns: ctx.window_ns,
+            hbm_noise_w: ctx.hbm_noise_w,
+            rng: Rng::substream(ctx.seed, &format!("dvfs{}", ctx.gpu_idx)),
+            energy_j: 0.0,
+        }
+    }
+}
+
+impl GovernorPolicy for Oracle {
+    fn step(&mut self, act: &WindowActivity) -> (f64, f64) {
+        let noise = hbm_noise_draw(&mut self.rng, self.hbm_noise_w, act);
+        let power = package_power_w(
+            &self.gpu,
+            self.gpu.freq_peak_mhz,
+            self.window_ns,
+            act,
+            noise,
+        )
+        .max(self.gpu.idle_power_w);
+        self.energy_j += power * self.window_ns * 1e-9;
+        (power, self.gpu.freq_peak_mhz)
+    }
+
+    fn freq_mhz(&self) -> f64 {
+        self.gpu.freq_peak_mhz
+    }
+
+    fn mem_freq_mhz(&self) -> f64 {
+        self.gpu.mem_freq_peak_mhz
+    }
+
+    fn freq_ratio(&self) -> f64 {
+        1.0
+    }
+
+    fn mem_freq_ratio(&self) -> f64 {
+        1.0
+    }
+
+    fn energy_j(&self) -> f64 {
+        self.energy_j
+    }
+
+    fn kind(&self) -> GovernorKind {
+        GovernorKind::Oracle
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx(gpu: &GpuSpec) -> GovCtx<'_> {
+        GovCtx {
+            gpu,
+            seed: 42,
+            gpu_idx: 0,
+            hbm_noise_w: 40.0,
+            window_ns: 1_000_000.0,
+            margin_k: 0.3,
+            fixed_cap_ratio: 0.7,
+            spike_var: 0.0,
+        }
+    }
+
+    fn busy() -> WindowActivity {
+        WindowActivity {
+            compute_busy: 0.95,
+            mfma_util: 0.6,
+            hbm_bytes: 3.5e9,
+            comm_busy: 0.3,
+        }
+    }
+
+    #[test]
+    fn kind_name_roundtrip_and_aliases() {
+        for k in GovernorKind::ALL {
+            assert_eq!(GovernorKind::parse(k.name()), Some(k));
+            assert_eq!(format!("{k}"), k.name());
+        }
+        assert_eq!(GovernorKind::parse("FixedCap"), Some(GovernorKind::FixedCap));
+        assert_eq!(
+            GovernorKind::parse("deterministic"),
+            Some(GovernorKind::DeterministicAware)
+        );
+        assert_eq!(GovernorKind::parse("nope"), None);
+        assert_eq!(
+            parse_list_governor("reactive, oracle").unwrap(),
+            vec![GovernorKind::Reactive, GovernorKind::Oracle]
+        );
+        assert!(parse_list_governor("turbo").is_err());
+    }
+
+    #[test]
+    fn built_policies_report_their_kind() {
+        let gpu = GpuSpec::mi300x();
+        for k in GovernorKind::ALL {
+            let p = k.build(&ctx(&gpu));
+            assert_eq!(p.kind(), k, "{k}");
+        }
+    }
+
+    #[test]
+    fn reactive_policy_is_bitwise_the_stock_governor() {
+        let gpu = GpuSpec::mi300x();
+        let c = ctx(&gpu);
+        let mut policy = Reactive::new(&c);
+        let mut stock = DvfsGovernor::new(gpu.clone(), c.seed, c.gpu_idx, c.hbm_noise_w);
+        let act = busy();
+        for _ in 0..300 {
+            let (pp, pf) = policy.step(&act);
+            let (sp, sf) = stock.step(&act);
+            assert_eq!(pp.to_bits(), sp.to_bits());
+            assert_eq!(pf.to_bits(), sf.to_bits());
+            assert_eq!(policy.mem_freq_mhz().to_bits(), stock.mem_freq_mhz.to_bits());
+        }
+    }
+
+    #[test]
+    fn fixed_cap_pins_clocks_and_respects_regulator() {
+        let gpu = GpuSpec::mi300x();
+        let c = ctx(&gpu);
+        let mut p = FixedCap::new(&c);
+        let expect = (gpu.freq_peak_mhz * c.fixed_cap_ratio)
+            .clamp(gpu.freq_min_mhz, gpu.freq_peak_mhz);
+        for i in 0..200 {
+            let act = if i % 3 == 0 { WindowActivity::default() } else { busy() };
+            let (pw, f) = p.step(&act);
+            assert_eq!(f.to_bits(), expect.to_bits(), "clock moved");
+            assert!(pw <= gpu.power_cap_w * 1.10 + 1e-9);
+            assert!(pw >= gpu.idle_power_w - 1e-9);
+        }
+        assert_eq!(p.freq_mhz().to_bits(), expect.to_bits());
+    }
+
+    #[test]
+    fn fixed_cap_ratio_clamps_to_physical_clock_range() {
+        let gpu = GpuSpec::mi300x();
+        let mut c = ctx(&gpu);
+        c.fixed_cap_ratio = 0.01; // below freq_min — must clamp, not stall
+        let p = FixedCap::new(&c);
+        assert_eq!(p.freq_mhz(), gpu.freq_min_mhz);
+        assert!(p.freq_ratio_clamped() >= MIN_FREQ_RATIO);
+        c.fixed_cap_ratio = 3.0; // above peak — pinned at peak
+        let p = FixedCap::new(&c);
+        assert_eq!(p.freq_mhz(), gpu.freq_peak_mhz);
+    }
+
+    #[test]
+    fn oracle_holds_peak_and_exceeds_cap_when_mfma_heavy() {
+        let gpu = GpuSpec::mi300x();
+        let mut p = Oracle::new(&ctx(&gpu));
+        let act = busy();
+        let mut exceeded = false;
+        for _ in 0..200 {
+            let (pw, f) = p.step(&act);
+            assert_eq!(f.to_bits(), gpu.freq_peak_mhz.to_bits());
+            assert!(pw >= gpu.idle_power_w);
+            if pw > gpu.power_cap_w {
+                exceeded = true;
+            }
+        }
+        assert!(exceeded, "oracle never exceeded the cap — not cap-ignoring");
+        assert_eq!(p.freq_ratio(), 1.0);
+    }
+
+    #[test]
+    fn det_aware_detects_quiet_allocator_and_clocks_higher() {
+        let gpu = GpuSpec::mi300x();
+        // Quiet (v2-like) allocator: detection fires, clocks beat reactive.
+        let mut c = ctx(&gpu);
+        c.spike_var = 0.0;
+        let da = DeterministicAware::new(&c);
+        assert!(da.detected);
+        // Noisy (v1-like) allocator: no detection — degenerates to Reactive
+        // bit for bit.
+        c.spike_var = 0.5;
+        c.hbm_noise_w = 150.0;
+        let mut da = DeterministicAware::new(&c);
+        let mut re = Reactive::new(&c);
+        assert!(!da.detected);
+        let act = busy();
+        for _ in 0..200 {
+            let (dp, df) = da.step(&act);
+            let (rp, rf) = re.step(&act);
+            assert_eq!(dp.to_bits(), rp.to_bits());
+            assert_eq!(df.to_bits(), rf.to_bits());
+        }
+
+        // Detected case sustains higher clocks at the same cap.
+        let mut cq = ctx(&gpu);
+        cq.hbm_noise_w = 40.0;
+        cq.spike_var = 0.0;
+        let mut da = DeterministicAware::new(&cq);
+        let mut re = Reactive::new(&cq);
+        let (mut fd, mut fr) = (0.0, 0.0);
+        for _ in 0..400 {
+            fd += da.step(&act).1;
+            fr += re.step(&act).1;
+        }
+        assert!(fd >= fr, "det-aware {fd:.0} !>= reactive {fr:.0}");
+    }
+
+    #[test]
+    fn energy_is_the_window_sum_of_power_dt() {
+        let gpu = GpuSpec::mi300x();
+        let act = busy();
+        for k in GovernorKind::ALL {
+            let mut p = k.build(&ctx(&gpu));
+            let mut acc = 0.0;
+            for _ in 0..250 {
+                let (pw, _) = p.step(&act);
+                acc += pw * 1_000_000.0 * 1e-9;
+            }
+            let got = p.energy_j();
+            assert!(
+                (got - acc).abs() <= acc * 1e-12,
+                "{k}: energy {got} != window-sum {acc}"
+            );
+            assert!(got > 0.0, "{k}: no energy integrated");
+        }
+    }
+
+    #[test]
+    fn policies_are_deterministic_for_a_seed() {
+        let gpu = GpuSpec::mi300x();
+        let act = busy();
+        for k in GovernorKind::ALL {
+            let run = || {
+                let mut p = k.build(&ctx(&gpu));
+                let mut out = Vec::new();
+                for _ in 0..100 {
+                    let (pw, f) = p.step(&act);
+                    out.push((pw.to_bits(), f.to_bits()));
+                }
+                (out, p.energy_j().to_bits())
+            };
+            assert_eq!(run(), run(), "{k} not deterministic");
+        }
+    }
+
+    #[test]
+    fn oracle_is_fastest_fixed_cap_cheapest_per_window() {
+        // The whole point of the policy space: the oracle holds the highest
+        // clocks; a conservative fixed cap draws the least power.
+        let gpu = GpuSpec::mi300x();
+        let act = busy();
+        let mut freqs = std::collections::BTreeMap::new();
+        let mut powers = std::collections::BTreeMap::new();
+        for k in GovernorKind::ALL {
+            let mut p = k.build(&ctx(&gpu));
+            let (mut fs, mut ps) = (0.0, 0.0);
+            for _ in 0..400 {
+                let (pw, f) = p.step(&act);
+                ps += pw;
+                fs += f;
+            }
+            freqs.insert(k, fs / 400.0);
+            powers.insert(k, ps / 400.0);
+        }
+        for k in GovernorKind::ALL {
+            assert!(
+                freqs[&GovernorKind::Oracle] >= freqs[&k],
+                "oracle not fastest vs {k}"
+            );
+            assert!(
+                powers[&GovernorKind::FixedCap] <= powers[&k] + 1e-9,
+                "fixed_cap(0.7) not cheapest vs {k}"
+            );
+        }
+    }
+}

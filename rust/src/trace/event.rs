@@ -189,9 +189,65 @@ pub struct PowerSample {
     pub iter: u32,
 }
 
+impl PowerSample {
+    /// Joules this window accounts for: power × window length.
+    pub fn energy_j(&self) -> f64 {
+        self.power_w * self.window_ns * 1e-9
+    }
+}
+
 #[derive(Debug, Clone, Default)]
 pub struct PowerTrace {
     pub samples: Vec<PowerSample>,
+}
+
+/// Power threshold (W) above which a window counts as *active* — the
+/// paper's Fig. 14 averages frequency/power over training activity only
+/// (idle fill/empty windows would dilute the comparison). One constant
+/// shared by campaign summaries, the what-if replay and the figures.
+pub const ACTIVE_POWER_W: f64 = 400.0;
+
+impl PowerTrace {
+    /// Samples from active windows (power above [`ACTIVE_POWER_W`]), in
+    /// emission order.
+    pub fn active_samples(&self) -> impl Iterator<Item = &PowerSample> {
+        self.samples.iter().filter(|s| s.power_w > ACTIVE_POWER_W)
+    }
+
+    /// Total joules across every GPU and window, in sample order (the
+    /// order the engine emitted them — bit-stable across runs).
+    pub fn total_energy_j(&self) -> f64 {
+        self.samples.iter().map(|s| s.energy_j()).sum()
+    }
+
+    /// Joules per GPU, in sample order within each GPU.
+    pub fn gpu_energy_j(&self) -> std::collections::BTreeMap<u32, f64> {
+        let mut out = std::collections::BTreeMap::new();
+        for s in &self.samples {
+            *out.entry(s.gpu).or_insert(0.0) += s.energy_j();
+        }
+        out
+    }
+
+    /// Joules per training iteration (windows tagged by the iteration the
+    /// rank was executing at window start), all GPUs summed.
+    pub fn iter_energy_j(&self) -> std::collections::BTreeMap<u32, f64> {
+        let mut out = std::collections::BTreeMap::new();
+        for s in &self.samples {
+            *out.entry(s.iter).or_insert(0.0) += s.energy_j();
+        }
+        out
+    }
+
+    /// Total joules over sampled iterations only (`iter >= warmup`),
+    /// summed in sample order — the quantity campaign summaries persist.
+    pub fn sampled_energy_j(&self, warmup: u32) -> f64 {
+        self.samples
+            .iter()
+            .filter(|s| s.iter >= warmup)
+            .map(|s| s.energy_j())
+            .sum()
+    }
 }
 
 /// Per-window logical-core utilization sample (Fig. 13's data).
@@ -292,6 +348,32 @@ mod tests {
         assert!(m.multi_node());
         assert_eq!(m.node_of(11), 1);
         assert_eq!(m.local_of(11), 3);
+    }
+
+    #[test]
+    fn power_energy_rollups_partition_the_total() {
+        let mut p = PowerTrace::default();
+        for (gpu, iter, w) in [(0u32, 0u32, 500.0), (0, 1, 700.0), (1, 0, 600.0)] {
+            p.samples.push(PowerSample {
+                gpu,
+                t: 0.0,
+                window_ns: 1e6,
+                freq_mhz: 2000.0,
+                mem_freq_mhz: 2500.0,
+                power_w: w,
+                iter,
+            });
+        }
+        // One 1 ms window at 500 W = 0.5 J.
+        assert!((p.samples[0].energy_j() - 0.5).abs() < 1e-12);
+        let total = p.total_energy_j();
+        assert!((total - 1.8).abs() < 1e-12, "{total}");
+        let by_gpu: f64 = p.gpu_energy_j().values().sum();
+        let by_iter: f64 = p.iter_energy_j().values().sum();
+        assert!((by_gpu - total).abs() < 1e-12);
+        assert!((by_iter - total).abs() < 1e-12);
+        assert!((p.sampled_energy_j(1) - 0.7).abs() < 1e-12);
+        assert_eq!(p.sampled_energy_j(0), total);
     }
 
     #[test]

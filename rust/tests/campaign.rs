@@ -97,6 +97,80 @@ fn multinode_parallel_runner_matches_serial_byte_for_byte() {
     assert_eq!(na.csv, nb.csv);
 }
 
+/// Governor-axis campaign determinism: a grid crossed with the full
+/// policy set fans out byte-identically to a serial run, and the
+/// cross-policy energy/perf table renders deterministically (the CI
+/// what-if smoke drives the same grid through the CLI).
+#[test]
+fn governor_axis_parallel_matches_serial_byte_for_byte() {
+    use chopper::campaign::campaign_by_governor;
+    use chopper::sim::GovernorKind;
+    let node = NodeSpec::mi300x_node();
+    let mut spec = GridSpec::paper(2, 2, 1);
+    spec.batches = vec![1];
+    spec.seqs = vec![4096];
+    spec.fsdp = vec![FsdpVersion::V1];
+    spec.governors = GovernorKind::ALL.to_vec();
+    let scenarios = spec.expand();
+    assert_eq!(scenarios.len(), 4);
+    let serial = run_campaign(&node, &scenarios, 1, None, false);
+    let parallel = run_campaign(&node, &scenarios, 4, None, false);
+    for (a, b) in serial.summaries.iter().zip(&parallel.summaries) {
+        assert_eq!(a, b, "governor scenario {} diverged", a.name);
+        assert_eq!(a.to_json_str(), b.to_json_str());
+        assert!(a.energy_per_iter_j > 0.0, "{}: no energy", a.name);
+        assert!(a.tokens_per_j > 0.0, "{}: no perf-per-watt", a.name);
+    }
+    let ta = campaign_table(&serial.summaries);
+    let tb = campaign_table(&parallel.summaries);
+    assert_eq!(ta.ascii, tb.ascii);
+    assert_eq!(ta.csv, tb.csv);
+    // The governor column is present on this grid.
+    assert!(ta.csv.lines().next().unwrap().ends_with(",governor"));
+    let ga = campaign_by_governor(&serial.summaries);
+    let gb = campaign_by_governor(&parallel.summaries);
+    assert_eq!(ga.ascii, gb.ascii);
+    assert_eq!(ga.csv, gb.csv);
+    // The oracle scenario is at least as fast as its reactive sibling,
+    // and perf-per-watt orders the policy space meaningfully.
+    let by_gov = |g: &str| {
+        serial
+            .summaries
+            .iter()
+            .find(|s| s.governor == g)
+            .unwrap_or_else(|| panic!("no {g} scenario"))
+    };
+    assert!(by_gov("oracle").iter_ms <= by_gov("reactive").iter_ms);
+    assert!(by_gov("oracle").freq_mhz >= by_gov("reactive").freq_mhz);
+}
+
+/// Governor scenarios round-trip through the on-disk cache with their
+/// energy fields intact, so cached and fresh campaigns render the energy
+/// columns identically.
+#[test]
+fn governor_summaries_cache_round_trip() {
+    use chopper::sim::GovernorKind;
+    let node = NodeSpec::mi300x_node();
+    let mut spec = GridSpec::paper(2, 2, 1);
+    spec.batches = vec![1];
+    spec.seqs = vec![4096];
+    spec.fsdp = vec![FsdpVersion::V1];
+    spec.governors = vec![GovernorKind::Reactive, GovernorKind::Oracle];
+    let scenarios = spec.expand();
+    let dir = tmpdir("governors");
+    let cache = Cache::open(&dir).unwrap();
+    let first = run_campaign(&node, &scenarios, 2, Some(&cache), false);
+    assert_eq!(first.executed, 2);
+    let second = run_campaign(&node, &scenarios, 2, Some(&cache), false);
+    assert_eq!(second.cached, 2);
+    assert_eq!(first.summaries, second.summaries);
+    assert_eq!(
+        campaign_table(&first.summaries).csv,
+        campaign_table(&second.summaries).csv
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 #[test]
 fn cache_round_trip_and_force_bypass() {
     let node = NodeSpec::mi300x_node();

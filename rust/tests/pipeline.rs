@@ -415,6 +415,103 @@ fn engine_refactor_preserves_serialized_trace_bytes() {
     }
 }
 
+/// Power-subsystem golden guard: under the default `Reactive` policy the
+/// refactored engine's power trace and per-rank energy integration are
+/// bitwise-identical to the verbatim pre-refactor engine's telemetry —
+/// the 1-policy pipeline stayed byte-identical through the policy-trait
+/// extraction (figures/summary/chrome bytes are pinned by the tests
+/// above; this pins the power channel itself plus the new energy column).
+#[test]
+fn power_subsystem_default_policy_is_byte_identical() {
+    let node = NodeSpec::mi300x_node();
+    let mut cfg = ModelConfig::llama3_8b();
+    cfg.layers = 2;
+    let mut wl = WorkloadConfig::new(2, 4096, FsdpVersion::V1);
+    wl.iterations = 2;
+    wl.warmup = 1;
+
+    let new_out = Engine::new(&node, &cfg, &wl, EngineParams::default()).run();
+    let old_out =
+        engine_baseline::Engine::new(&node, &cfg, &wl, EngineParams::default())
+            .run();
+    assert_eq!(new_out.power.samples.len(), old_out.power.samples.len());
+    for (a, b) in new_out.power.samples.iter().zip(&old_out.power.samples) {
+        assert_eq!(a.power_w.to_bits(), b.power_w.to_bits());
+        assert_eq!(a.freq_mhz.to_bits(), b.freq_mhz.to_bits());
+        assert_eq!(a.mem_freq_mhz.to_bits(), b.mem_freq_mhz.to_bits());
+        assert_eq!(a.t.to_bits(), b.t.to_bits());
+        assert_eq!((a.gpu, a.iter), (b.gpu, b.iter));
+    }
+    // The new energy column is exactly the window-sum of the (unchanged)
+    // power samples, per rank.
+    assert_eq!(new_out.gov_energy_j.len(), 8);
+    for (rank, &got) in new_out.gov_energy_j.iter().enumerate() {
+        let want: f64 = new_out
+            .power
+            .samples
+            .iter()
+            .filter(|s| s.gpu == rank as u32)
+            .map(|s| s.energy_j())
+            .sum();
+        assert!(
+            (got - want).abs() <= want * 1e-9,
+            "rank {rank}: energy {got} != sample sum {want}"
+        );
+    }
+}
+
+/// What-if acceptance: the replay ranks every policy by Δ iteration time
+/// with perf-per-watt alongside, the `Reactive` row is bit-identical to
+/// the default pipeline's own numbers, and two invocations (serial vs
+/// parallel) render byte-identically.
+#[test]
+fn whatif_replay_ranks_policies_and_reproduces_default_pipeline() {
+    use chopper::chopper::whatif::{render, replay};
+    use chopper::sim::GovernorKind;
+
+    let node = NodeSpec::mi300x_node();
+    let mut cfg = ModelConfig::llama3_8b();
+    cfg.layers = 2;
+    let mut wl = WorkloadConfig::new(2, 4096, FsdpVersion::V1);
+    wl.iterations = 2;
+    wl.warmup = 1;
+    let params = EngineParams::default();
+
+    let a = replay(&node, &cfg, &wl, &params, &GovernorKind::ALL, 1);
+    let b = replay(&node, &cfg, &wl, &params, &GovernorKind::ALL, 4);
+    assert_eq!(a, b, "what-if replay not deterministic across jobs");
+    let fa = render(&a);
+    let fb = render(&b);
+    assert_eq!(fa.ascii, fb.ascii);
+    assert_eq!(fa.csv, fb.csv);
+
+    // ≥ 4 policies, ranked by iteration time.
+    assert!(a.rows.len() >= 4);
+    for w in a.rows.windows(2) {
+        assert!(w[0].iter_ms <= w[1].iter_ms, "ranking broken");
+    }
+
+    // Reactive row == the default pipeline, bit for bit.
+    let out = Engine::new(&node, &cfg, &wl, params).run();
+    let idx = TraceIndex::build(&out.trace);
+    let tokens = wl.tokens_per_iteration(out.trace.meta.num_gpus as u64) as f64;
+    let tp = chopper::chopper::throughput(&idx, tokens);
+    let reactive = a.row(GovernorKind::Reactive).unwrap();
+    assert_eq!(reactive.iter_ms.to_bits(), (tp.iter_ns / 1e6).to_bits());
+    assert_eq!(reactive.delta_iter_pct, 0.0);
+
+    // The oracle (peak clocks) is never slower than the throttled
+    // baseline, and the frontier marks at least one policy.
+    let oracle = a.row(GovernorKind::Oracle).unwrap();
+    assert!(oracle.iter_ms <= reactive.iter_ms);
+    assert!(a.rows.iter().any(|r| r.frontier));
+    // Energy signal is real on every row.
+    for r in &a.rows {
+        assert!(r.energy_per_iter_j > 0.0, "{}", r.governor);
+        assert!(r.tokens_per_j > 0.0, "{}", r.governor);
+    }
+}
+
 /// Serialization is deterministic byte-for-byte, and interned kernel
 /// names survive an export → import round trip exactly.
 #[test]

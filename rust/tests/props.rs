@@ -372,6 +372,181 @@ impl WaitExt for chopper::fsdp::ProgKernel {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Power-management policies (sim::power, DESIGN.md §9)
+// ---------------------------------------------------------------------------
+
+use chopper::config::GpuSpec;
+use chopper::sim::power::{GovCtx, GovernorKind, WindowActivity};
+use chopper::sim::DvfsGovernor;
+
+fn random_activity(rng: &mut Rng) -> WindowActivity {
+    WindowActivity {
+        compute_busy: rng.f64(),
+        mfma_util: rng.f64(),
+        hbm_bytes: rng.f64() * 5e9,
+        comm_busy: rng.f64(),
+    }
+}
+
+fn random_ctx(gpu: &GpuSpec, rng: &mut Rng) -> GovCtx<'_> {
+    GovCtx {
+        gpu,
+        seed: rng.next_u64(),
+        gpu_idx: 0,
+        hbm_noise_w: rng.f64() * 150.0,
+        window_ns: *rng.choose(&[5e5, 1e6, 2e6]),
+        margin_k: 0.1 + rng.f64() * 0.5,
+        fixed_cap_ratio: 0.3 + rng.f64() * 0.9,
+        spike_var: rng.f64() * 0.5,
+    }
+}
+
+#[test]
+fn prop_policy_power_and_clock_envelopes() {
+    // Every policy keeps clocks inside the physical range; cap-respecting
+    // policies never exceed cap + the 10% fast-regulator margin (the
+    // oracle ignores the cap by construction — that's its property).
+    prop("policy_envelopes", 24, |rng| {
+        let gpu = GpuSpec::mi300x();
+        let ctx = random_ctx(&gpu, rng);
+        for kind in GovernorKind::ALL {
+            let mut p = kind.build(&ctx);
+            for _ in 0..120 {
+                let act = random_activity(rng);
+                let (power, freq) = p.step(&act);
+                assert!(
+                    freq >= gpu.freq_min_mhz - 1.0 && freq <= gpu.freq_peak_mhz + 1.0,
+                    "{kind}: freq {freq} out of range"
+                );
+                assert!(power >= gpu.idle_power_w - 1e-9, "{kind}: power {power}");
+                if kind != GovernorKind::Oracle {
+                    assert!(
+                        power <= gpu.power_cap_w * 1.10 + 1e-9,
+                        "{kind}: power {power} exceeds cap + margin"
+                    );
+                }
+                assert!(p.freq_ratio_clamped() >= 0.05);
+                assert!(p.mem_freq_ratio_clamped() >= 0.05);
+            }
+            if kind == GovernorKind::Oracle {
+                assert_eq!(p.freq_mhz().to_bits(), gpu.freq_peak_mhz.to_bits());
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_fixed_cap_pins_clocks() {
+    prop("fixed_cap_pins", 32, |rng| {
+        let gpu = GpuSpec::mi300x();
+        let ctx = random_ctx(&gpu, rng);
+        let expect_f = (gpu.freq_peak_mhz * ctx.fixed_cap_ratio)
+            .clamp(gpu.freq_min_mhz, gpu.freq_peak_mhz);
+        let expect_m =
+            (gpu.mem_freq_peak_mhz * ctx.fixed_cap_ratio).min(gpu.mem_freq_peak_mhz);
+        let mut p = GovernorKind::FixedCap.build(&ctx);
+        for _ in 0..80 {
+            let act = random_activity(rng);
+            let (_, freq) = p.step(&act);
+            assert_eq!(freq.to_bits(), expect_f.to_bits(), "engine clock moved");
+            assert_eq!(
+                p.mem_freq_mhz().to_bits(),
+                expect_m.to_bits(),
+                "memory clock moved"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_policy_energy_is_window_sum_of_power_dt() {
+    prop("policy_energy", 12, |rng| {
+        let gpu = GpuSpec::mi300x();
+        let ctx = random_ctx(&gpu, rng);
+        for kind in GovernorKind::ALL {
+            let mut p = kind.build(&ctx);
+            let mut acc = 0.0;
+            for _ in 0..150 {
+                let act = random_activity(rng);
+                let (power, _) = p.step(&act);
+                acc += power * ctx.window_ns * 1e-9;
+            }
+            let got = p.energy_j();
+            assert!(
+                (got - acc).abs() <= acc.abs() * 1e-12 + 1e-12,
+                "{kind}: energy {got} != window-sum {acc}"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_reactive_policy_is_bitwise_the_pre_refactor_governor() {
+    // The 1-policy pipeline's golden contract: the extracted Reactive
+    // policy steps bit-identically to the stock DvfsGovernor the vendored
+    // pre-refactor engine still constructs (same seed substream, same
+    // window, same margin).
+    prop("reactive_bitwise", 16, |rng| {
+        let gpu = GpuSpec::mi300x();
+        let seed = rng.next_u64();
+        let noise = rng.f64() * 150.0;
+        let ctx = GovCtx {
+            gpu: &gpu,
+            seed,
+            gpu_idx: 0,
+            hbm_noise_w: noise,
+            window_ns: 1_000_000.0,
+            margin_k: 0.3,
+            fixed_cap_ratio: 0.7,
+            spike_var: rng.f64(),
+        };
+        let mut policy = GovernorKind::Reactive.build(&ctx);
+        let mut stock = DvfsGovernor::new(gpu.clone(), seed, 0, noise);
+        for _ in 0..200 {
+            let act = random_activity(rng);
+            let (pp, pf) = policy.step(&act);
+            let (sp, sf) = stock.step(&act);
+            assert_eq!(pp.to_bits(), sp.to_bits(), "power diverged");
+            assert_eq!(pf.to_bits(), sf.to_bits(), "frequency diverged");
+            assert_eq!(
+                policy.mem_freq_mhz().to_bits(),
+                stock.mem_freq_mhz.to_bits(),
+                "memory clock diverged"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_engine_energy_equals_power_trace_sum() {
+    // Through the whole engine: the per-rank joules the policy integrated
+    // equal the window-sum of the emitted power samples, for every policy.
+    prop("engine_energy", 2, |rng| {
+        let (cfg, wl) = random_workload(rng);
+        let node = NodeSpec::mi300x_node();
+        for kind in GovernorKind::ALL {
+            let mut params = EngineParams::default();
+            params.governor = kind;
+            let out = Engine::new(&node, &cfg, &wl, params).run();
+            assert_eq!(out.gov_energy_j.len(), 8);
+            let mut per_gpu = vec![0.0f64; 8];
+            for s in &out.power.samples {
+                per_gpu[s.gpu as usize] += s.power_w * s.window_ns * 1e-9;
+            }
+            for (rank, (&got, &want)) in
+                out.gov_energy_j.iter().zip(&per_gpu).enumerate()
+            {
+                assert!(
+                    (got - want).abs() <= want.abs() * 1e-9 + 1e-9,
+                    "{kind} rank {rank}: {got} != {want}"
+                );
+                assert!(got > 0.0, "{kind} rank {rank}: no energy");
+            }
+        }
+    });
+}
+
 #[test]
 fn prop_engine_determinism() {
     prop("determinism", 3, |rng| {
