@@ -1407,6 +1407,14 @@ pub mod summarize {
             tokens_per_j,
             span_ms: finite(trace.span_ns() / 1e6),
             events: trace.events.len() as u64,
+            // Mechanical port for the post-serving ScenarioSummary: the
+            // baseline only ever summarizes training pipelines, where the
+            // serving block is constant zero (off the wire).
+            offered_qps: 0.0,
+            ttft_p99_ms: 0.0,
+            tpot_p99_ms: 0.0,
+            goodput_rps: 0.0,
+            energy_per_request_j: 0.0,
         }
     }
 

@@ -1,0 +1,111 @@
+//! Serving bench: drive the continuous-batching serving pipeline
+//! (`chopper::serve`) end to end, verify the run is deterministic and that
+//! an offered-load sweep is byte-identical between serial and parallel
+//! execution, then record the hot-path timings and the paper-shaped
+//! latency/goodput/energy numbers into `BENCH_serving.json` at the repo
+//! root (same trajectory schema as `BENCH_engine.json`).
+//!
+//! Scale knobs (env): CHOPPER_BENCH_LAYERS (default 8), CHOPPER_BENCH_QPS
+//! (default 16), CHOPPER_BENCH_REQUESTS (default 64), CHOPPER_BENCH_SAMPLES
+//! (default 3). CI smoke-runs tiny values twice and validates the
+//! trajectory schema + fingerprint dedup.
+
+use chopper::benchkit::{emit_collected, section, value, Bench};
+use chopper::campaign;
+use chopper::chopper::{serving_energy, serving_goodput, serving_latency};
+use chopper::config::{LengthDist, ModelConfig, NodeSpec, ServingConfig, Topology};
+use chopper::serve::{generate_requests, plan_schedule, run_serving, ServingReport};
+use chopper::sim::EngineParams;
+
+fn env_or<T: std::str::FromStr>(key: &str, default: T) -> T {
+    std::env::var(key)
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() {
+    let layers: u64 = env_or("CHOPPER_BENCH_LAYERS", 8);
+    let qps: f64 = env_or("CHOPPER_BENCH_QPS", 16.0);
+    let requests: u32 = env_or("CHOPPER_BENCH_REQUESTS", 64);
+    let samples: u32 = env_or("CHOPPER_BENCH_SAMPLES", 3);
+
+    let node = NodeSpec::mi300x_node();
+    chopper::benchkit::note_topology(1, node.num_gpus);
+    chopper::benchkit::note_workload("serving");
+    let topo = Topology::single(node.clone());
+    let mut cfg = ModelConfig::llama3_8b();
+    cfg.layers = layers;
+    let mut scfg = ServingConfig::new(qps, requests);
+    scfg.seed = 0xBEEF;
+    // Chat-shaped lengths, bounded so the CI smoke stays tiny.
+    scfg.prompt = LengthDist::lognormal(256, 0.5, 16, 2048);
+    scfg.output = LengthDist::lognormal(64, 0.5, 4, 256);
+    let params = EngineParams::default();
+    eprintln!("setup: serving {requests} requests at {qps} req/s × {layers} layers…");
+
+    section("equivalence — repeated run and serial vs parallel sweep");
+    let out = run_serving(&topo, &cfg, &scfg, params.clone());
+    let again = run_serving(&topo, &cfg, &scfg, params.clone());
+    assert_eq!(
+        out.report, again.report,
+        "serving run diverged between invocations"
+    );
+    // The QPS sweep must come back byte-identical whether it fans out or
+    // runs serially (the campaign's grid-order guarantee).
+    let sweep = [qps * 0.5, qps, qps * 2.0];
+    let run_q = |q: f64| {
+        let mut s = scfg.clone();
+        s.arrival = chopper::config::ArrivalProcess::Poisson { qps: q };
+        run_serving(&topo, &cfg, &s, params.clone()).report
+    };
+    let serial: Vec<ServingReport> = campaign::run_ordered(&sweep, 1, |_, &q| run_q(q));
+    let parallel: Vec<ServingReport> =
+        campaign::run_ordered(&sweep, campaign::default_jobs(), |_, &q| run_q(q));
+    assert_eq!(serial, parallel, "sweep diverged between jobs=1 and parallel");
+    assert_eq!(
+        serving_latency(&serial).csv,
+        serving_latency(&parallel).csv,
+        "rendered latency figure diverged"
+    );
+    println!(
+        "equivalence OK: run repeated bit-identically; {}-point sweep \
+         byte-identical serial vs parallel",
+        sweep.len()
+    );
+
+    section("serving hot path");
+    let reqs = generate_requests(&scfg);
+    Bench::new("serve/plan_schedule").samples(samples).run(|| {
+        plan_schedule(&reqs, &cfg, &topo.node.gpu, &scfg, topo.world_size())
+    });
+    Bench::new("serve/run_serving")
+        .samples(samples)
+        .run(|| run_serving(&topo, &cfg, &scfg, params.clone()));
+    Bench::new("serve/figures").samples(samples).run(|| {
+        (
+            serving_latency(&serial),
+            serving_goodput(&serial),
+            serving_energy(&serial),
+        )
+    });
+
+    // The paper-shaped numbers: what the serving stack delivers at the
+    // reference offered load, in time, tokens, and joules.
+    let rep = &out.report;
+    value("ttft_p50_ms", rep.ttft_ms.p50, "ms");
+    value("ttft_p99_ms", rep.ttft_ms.p99, "ms");
+    value("tpot_p99_ms", rep.tpot_ms.p99, "ms");
+    value("e2e_p99_ms", rep.e2e_ms.p99, "ms");
+    value("goodput_rps", rep.goodput_rps, "req/s");
+    value("slo_goodput_rps", rep.slo_goodput_rps, "req/s");
+    value("output_tok_s", rep.output_tok_s, "tok/s");
+    value("energy_per_request_j", rep.energy_per_request_j, "J");
+    value("tok_per_joule", rep.tok_per_joule, "tok/J");
+    value("kv_peak_frac", rep.kv_peak_frac, "");
+    value("steps", rep.steps as f64, "");
+    value("requests", requests as f64, "");
+    value("layers", layers as f64, "");
+
+    emit_collected("serving");
+}

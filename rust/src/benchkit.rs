@@ -147,6 +147,23 @@ pub fn note_topology(num_nodes: u32, gpus_per_node: u32) {
     *topology_tag().lock().unwrap() = format!("topoN{num_nodes}x{gpus_per_node}");
 }
 
+/// Process-global workload tag for [`run_fingerprint`]. Empty until a
+/// bench declares its workload family via [`note_workload`].
+fn workload_tag() -> &'static Mutex<String> {
+    static W: OnceLock<Mutex<String>> = OnceLock::new();
+    W.get_or_init(|| Mutex::new(String::new()))
+}
+
+/// Declare the workload family a bench target measures ("serving",
+/// "training"). Mirrors [`note_topology`]: the tag ("wl_serving") is
+/// folded into [`run_fingerprint`] — both hashed and appended visibly —
+/// so trajectory points from different workload families never
+/// dedup-collide even at identical code + `CHOPPER_*` scale. Call before
+/// [`emit_collected`].
+pub fn note_workload(name: &str) {
+    *workload_tag().lock().unwrap() = format!("wl_{name}");
+}
+
 /// Best-effort code+config fingerprint of this bench invocation:
 /// `git describe --always --dirty` plus a hash of every `CHOPPER_*`
 /// environment knob (bench scale is set through those) and the declared
@@ -190,13 +207,25 @@ pub fn run_fingerprint() -> String {
         git.push_str("-dirty");
         h.write(&diff);
     }
+    // Tags hash in declaration order (topology, then workload) and then
+    // append visibly, so a tagless run keeps its historical fingerprint
+    // byte for byte.
     let topo = topology_tag().lock().unwrap().clone();
-    if topo.is_empty() {
-        format!("{git}-{:08x}", h.finish() as u32)
-    } else {
+    if !topo.is_empty() {
         h.write(topo.as_bytes());
-        format!("{git}-{:08x}-{topo}", h.finish() as u32)
     }
+    let wl = workload_tag().lock().unwrap().clone();
+    if !wl.is_empty() {
+        h.write(wl.as_bytes());
+    }
+    let mut fp = format!("{git}-{:08x}", h.finish() as u32);
+    for tag in [&topo, &wl] {
+        if !tag.is_empty() {
+            fp.push('-');
+            fp.push_str(tag);
+        }
+    }
+    fp
 }
 
 /// Append one invocation's results (plus optional derived scalar metrics,
@@ -398,9 +427,10 @@ mod tests {
     }
 
     #[test]
-    fn run_fingerprint_is_stable_and_topology_aware() {
-        // One test covers both properties: the topology tag is process-
-        // global state, so splitting these into parallel tests would race.
+    fn run_fingerprint_is_stable_and_tag_aware() {
+        // One test covers every property: the topology/workload tags are
+        // process-global state, so splitting these into parallel tests
+        // would race.
         let a = run_fingerprint();
         let b = run_fingerprint();
         assert_eq!(a, b);
@@ -409,6 +439,18 @@ mod tests {
         let c = run_fingerprint();
         assert!(c.ends_with("-topoN2x8"), "{c}");
         assert_ne!(a, c, "topology must change the fingerprint");
+        topology_tag().lock().unwrap().clear();
+        assert_eq!(run_fingerprint(), a);
+        // The workload tag mirrors the topology tag and composes with it.
+        note_workload("serving");
+        let d = run_fingerprint();
+        assert!(d.ends_with("-wl_serving"), "{d}");
+        assert_ne!(a, d, "workload must change the fingerprint");
+        note_topology(2, 8);
+        let e = run_fingerprint();
+        assert!(e.ends_with("-topoN2x8-wl_serving"), "{e}");
+        assert_ne!(c, e);
+        workload_tag().lock().unwrap().clear();
         topology_tag().lock().unwrap().clear();
         assert_eq!(run_fingerprint(), a);
     }

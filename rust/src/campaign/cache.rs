@@ -27,7 +27,11 @@ use std::path::{Path, PathBuf};
 /// (`governor`/`margin_k`/`fixed_cap_ratio`) and summaries grew the
 /// governor/energy fields (`governor`, `energy_per_iter_j`,
 /// `tokens_per_j`).
-pub const SCHEMA_VERSION: u32 = 3;
+///
+/// v4: scenarios may carry a serving workload (`Scenario::serving`) and
+/// summaries grew the serving fields (`offered_qps`, `ttft_p99_ms`,
+/// `tpot_p99_ms`, `goodput_rps`, `energy_per_request_j`).
+pub const SCHEMA_VERSION: u32 = 4;
 
 pub use crate::util::prng::fnv1a;
 
@@ -36,7 +40,7 @@ pub use crate::util::prng::fnv1a;
 /// renderings of the node / topology / model / workload /
 /// engine-parameter state, so any new field is picked up automatically.
 pub fn fingerprint(node: &NodeSpec, sc: &Scenario) -> u64 {
-    let canon = format!(
+    let mut canon = format!(
         "chopper-{}-campaign-v{SCHEMA_VERSION}|{node:?}|N{}|{:?}|{:?}|{:?}|{:?}",
         env!("CARGO_PKG_VERSION"),
         sc.num_nodes,
@@ -45,6 +49,11 @@ pub fn fingerprint(node: &NodeSpec, sc: &Scenario) -> u64 {
         sc.wl,
         sc.params
     );
+    // The serving block is folded in only when present, so training
+    // fingerprints keep their serving-free canonical form.
+    if let Some(scfg) = &sc.serving {
+        canon.push_str(&format!("|serve{scfg:?}"));
+    }
     fnv1a(canon.as_bytes())
 }
 
@@ -146,6 +155,18 @@ mod tests {
         let mut tweaked = scs[0].clone();
         tweaked.wl.sharding = crate::config::Sharding::Hsdp;
         assert_ne!(base, fingerprint(&node, &tweaked));
+        // Serving presence and serving knobs fingerprint too.
+        let mut serving = scs[0].clone();
+        serving.serving = Some(crate::config::ServingConfig::new(8.0, 32));
+        let sfp = fingerprint(&node, &serving);
+        assert_ne!(base, sfp);
+        let mut tweaked = serving.clone();
+        tweaked.serving.as_mut().unwrap().max_batch += 1;
+        assert_ne!(sfp, fingerprint(&node, &tweaked));
+        let mut tweaked = serving.clone();
+        tweaked.serving.as_mut().unwrap().arrival =
+            crate::config::ArrivalProcess::Poisson { qps: 9.0 };
+        assert_ne!(sfp, fingerprint(&node, &tweaked));
     }
 
     #[test]

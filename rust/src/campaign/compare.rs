@@ -291,6 +291,67 @@ pub fn campaign_breakdown(summaries: &[ScenarioSummary]) -> Figure {
     }
 }
 
+/// Serving comparison: one row per serving scenario with the
+/// latency/goodput/energy block of the summary (the `--workload serving`
+/// campaign counterpart of [`campaign_table`]). Training rows carry no
+/// serving block and are skipped.
+pub fn campaign_serving(summaries: &[ScenarioSummary]) -> Figure {
+    let mut csv = String::from(
+        "scenario,label,offered_qps,ttft_p99_ms,tpot_p99_ms,goodput_rps,\
+         output_tok_s,energy_per_request_j,tokens_per_j,power_w\n",
+    );
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    for s in summaries.iter().filter(|s| s.offered_qps > 0.0) {
+        rows.push(vec![
+            s.name.clone(),
+            format!("{:.2}", s.offered_qps),
+            format!("{:.2}", s.ttft_p99_ms),
+            format!("{:.3}", s.tpot_p99_ms),
+            format!("{:.3}", s.goodput_rps),
+            format!("{:.0}", s.tokens_per_sec),
+            format!("{:.2}", s.energy_per_request_j),
+            format!("{:.2}", s.tokens_per_j),
+        ]);
+        let _ = writeln!(
+            csv,
+            "{},{},{:.4},{:.4},{:.4},{:.4},{:.2},{:.4},{:.4},{:.1}",
+            s.name,
+            s.label,
+            s.offered_qps,
+            s.ttft_p99_ms,
+            s.tpot_p99_ms,
+            s.goodput_rps,
+            s.tokens_per_sec,
+            s.energy_per_request_j,
+            s.tokens_per_j,
+            s.power_w,
+        );
+    }
+    let mut out = String::from(
+        "Campaign — serving latency/goodput/energy by offered load\n\n",
+    );
+    out.push_str(&ascii::table(
+        &[
+            "scenario",
+            "qps",
+            "ttft p99 ms",
+            "tpot p99 ms",
+            "goodput rps",
+            "out tok/s",
+            "J/req",
+            "tok/J",
+        ],
+        &rows,
+    ));
+    Figure {
+        id: "campaign_serving",
+        title: "Campaign — serving comparison".into(),
+        ascii: out,
+        csv,
+        svg: None,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -324,7 +385,30 @@ mod tests {
             tokens_per_j: 120.0,
             span_ms: 25.0,
             events: 1234,
+            offered_qps: 0.0,
+            ttft_p99_ms: 0.0,
+            tpot_p99_ms: 0.0,
+            goodput_rps: 0.0,
+            energy_per_request_j: 0.0,
         }
+    }
+
+    #[test]
+    fn serving_table_keeps_only_serving_rows() {
+        let mut sv = fake("L2-b1s4-FSDPv2-serve_q16", 900.0);
+        sv.fsdp = "serving".into();
+        sv.offered_qps = 16.0;
+        sv.ttft_p99_ms = 120.5;
+        sv.tpot_p99_ms = 5.25;
+        sv.goodput_rps = 14.0;
+        sv.energy_per_request_j = 250.0;
+        let f = campaign_serving(&[fake("a", 1000.0), sv]);
+        assert_eq!(f.id, "campaign_serving");
+        // Header + exactly one serving row; the training row is skipped.
+        assert_eq!(f.csv.lines().count(), 2);
+        assert!(f.csv.contains("serve_q16"));
+        assert!(!f.csv.lines().nth(1).unwrap().starts_with("a,"));
+        assert!(f.ascii.contains("ttft p99"));
     }
 
     #[test]

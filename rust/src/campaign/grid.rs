@@ -2,7 +2,10 @@
 //! workload configuration × engine-parameter ablations, expanded into
 //! named, seeded scenarios in a deterministic order.
 
-use crate::config::{FsdpVersion, ModelConfig, NicSpec, Sharding, WorkloadConfig};
+use crate::config::{
+    ArrivalProcess, FsdpVersion, ModelConfig, NicSpec, ServingConfig, Sharding,
+    WorkloadConfig,
+};
 use crate::sim::{EngineParams, GovernorKind};
 
 pub use crate::sim::power::parse_list_governor;
@@ -22,6 +25,10 @@ pub struct Scenario {
     pub num_nodes: u32,
     /// Inter-node NIC of the scenario's topology.
     pub nic: NicSpec,
+    /// Serving workload (continuous batching over open-loop arrivals).
+    /// `None` = the classic training scenario; `Some` scenarios run
+    /// through `serve::run_serving` instead of the training schedule.
+    pub serving: Option<ServingConfig>,
 }
 
 /// An [`EngineParams`] knob a grid can ablate (DESIGN.md §5 mechanisms).
@@ -134,6 +141,14 @@ pub struct GridSpec {
     /// policies get a `-gov_<name>` name tag, so classic grids keep their
     /// names, derived seeds and cache keys).
     pub governors: Vec<GovernorKind>,
+    /// Serving base configuration (default `None` = a training grid).
+    /// When set, every scenario becomes a serving scenario tagged
+    /// `-serve_q<qps>` and the [`qps`](Self::qps) axis sweeps offered
+    /// load over the base config.
+    pub serving: Option<ServingConfig>,
+    /// Offered-load axis in requests/s (only meaningful with `serving`;
+    /// empty = the base config's arrival process, unswept).
+    pub qps: Vec<f64>,
     pub iterations: u32,
     pub warmup: u32,
     /// Base seed; each scenario derives its own seed from this and its name.
@@ -158,6 +173,8 @@ impl GridSpec {
             nodes: vec![1],
             nic_gbs: Vec::new(),
             governors: vec![GovernorKind::Reactive],
+            serving: None,
+            qps: Vec::new(),
             iterations,
             warmup,
             seed: 0xC0FFEE,
@@ -174,7 +191,12 @@ impl GridSpec {
             * self.shardings.len()
             * self.nodes.len()
             * self.nic_gbs.len().max(1)
-            * self.governors.len();
+            * self.governors.len()
+            * if self.serving.is_some() {
+                self.qps.len().max(1)
+            } else {
+                1
+            };
         for (_, vals) in &self.ablations {
             n *= vals.len().max(1);
         }
@@ -197,6 +219,16 @@ impl GridSpec {
         } else {
             self.nic_gbs.iter().map(|&g| Some(g)).collect()
         };
+        // Serving axis: outer `Some` marks a serving scenario, inner
+        // `Some(q)` overrides the base arrival rate (empty QPS list = the
+        // base config's own arrival process, unswept).
+        let loads: Vec<Option<Option<f64>>> = if self.serving.is_none() {
+            vec![None]
+        } else if self.qps.is_empty() {
+            vec![Some(None)]
+        } else {
+            self.qps.iter().map(|&q| Some(Some(q))).collect()
+        };
         for &layers in &self.layers {
             for &batch in &self.batches {
                 for &seq in &self.seqs {
@@ -205,10 +237,13 @@ impl GridSpec {
                             for &nodes in &self.nodes {
                                 for &nic in &nics {
                                     for &gov in &self.governors {
-                                        self.expand_ablations(
-                                            layers, batch, seq, fsdp, sharding,
-                                            nodes, nic, gov, &mut out,
-                                        );
+                                        for &load in &loads {
+                                            self.expand_ablations(
+                                                layers, batch, seq, fsdp,
+                                                sharding, nodes, nic, gov,
+                                                load, &mut out,
+                                            );
+                                        }
                                     }
                                 }
                             }
@@ -231,6 +266,7 @@ impl GridSpec {
         nodes: u32,
         nic_gbs: Option<f64>,
         governor: GovernorKind,
+        load: Option<Option<f64>>,
         out: &mut Vec<Scenario>,
     ) {
         // Odometer over the ablation axes (empty product = one scenario).
@@ -281,6 +317,24 @@ impl GridSpec {
             if governor != GovernorKind::Reactive {
                 name.push_str(&format!("-gov_{}", governor.name()));
             }
+            // The serving tag is appended *after* the seed is derived,
+            // the same rule as the governor tag: QPS siblings share every
+            // arrival/length draw, so the goodput-vs-load curve measures
+            // offered load, not seed noise.
+            let serving = load.map(|qps| {
+                let mut scfg = self
+                    .serving
+                    .clone()
+                    .expect("QPS axis requires a serving base config");
+                if let Some(q) = qps {
+                    scfg.arrival = ArrivalProcess::Poisson { qps: q };
+                }
+                scfg.seed = wl.seed;
+                let tag = format!("{}", scfg.arrival.mean_qps())
+                    .replace('.', "_");
+                name.push_str(&format!("-serve_q{tag}"));
+                scfg
+            });
             out.push(Scenario {
                 name,
                 model,
@@ -288,6 +342,7 @@ impl GridSpec {
                 params,
                 num_nodes: nodes.max(1),
                 nic,
+                serving,
             });
             // Advance the odometer; done when it wraps.
             let mut pos = axes.len();
@@ -525,6 +580,58 @@ mod tests {
         for sc in GridSpec::paper(2, 2, 1).expand() {
             assert!(!sc.name.contains("-gov_"), "{}", sc.name);
             assert_eq!(sc.params.governor, GovernorKind::Reactive);
+        }
+    }
+
+    #[test]
+    fn serving_axis_tags_after_seed_derivation() {
+        let mut g = GridSpec::paper(2, 2, 1);
+        g.batches = vec![1];
+        g.seqs = vec![4096];
+        g.fsdp = vec![FsdpVersion::V2];
+        g.serving = Some(ServingConfig::new(8.0, 32));
+        g.qps = vec![8.0, 32.0];
+        let scs = g.expand();
+        assert_eq!(scs.len(), g.len());
+        assert_eq!(scs.len(), 2);
+        assert!(scs.iter().any(|s| s.name == "L2-b1s4-FSDPv2-serve_q8"));
+        assert!(scs.iter().any(|s| s.name == "L2-b1s4-FSDPv2-serve_q32"));
+        // The serving tag is excluded from the seed basis (same rule as
+        // the governor tag): QPS siblings share the seed with each other
+        // and with the untagged training scenario of the same name.
+        let mut base = GridSpec::paper(2, 2, 1);
+        base.batches = vec![1];
+        base.seqs = vec![4096];
+        base.fsdp = vec![FsdpVersion::V2];
+        let base_seed = base.expand()[0].wl.seed;
+        for sc in &scs {
+            assert_eq!(sc.wl.seed, base_seed, "{}", sc.name);
+            let scfg = sc.serving.as_ref().expect("serving scenario");
+            // The serving config inherits the scenario-derived seed, so
+            // arrivals are pinned per scenario name.
+            assert_eq!(scfg.seed, sc.wl.seed);
+        }
+        let q_of = |n: &str| {
+            scs.iter()
+                .find(|s| s.name == n)
+                .unwrap()
+                .serving
+                .as_ref()
+                .unwrap()
+                .arrival
+                .mean_qps()
+        };
+        assert_eq!(q_of("L2-b1s4-FSDPv2-serve_q8"), 8.0);
+        assert_eq!(q_of("L2-b1s4-FSDPv2-serve_q32"), 32.0);
+        // An empty QPS list keeps the base arrival process, unswept.
+        g.qps = Vec::new();
+        let unswept = g.expand();
+        assert_eq!(unswept.len(), 1);
+        assert_eq!(unswept[0].serving.as_ref().unwrap().arrival.mean_qps(), 8.0);
+        // Training grids carry no serving config and no tag.
+        for sc in GridSpec::paper(2, 2, 1).expand() {
+            assert!(sc.serving.is_none());
+            assert!(!sc.name.contains("serve_q"), "{}", sc.name);
         }
     }
 

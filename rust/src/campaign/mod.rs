@@ -23,10 +23,11 @@ pub mod runner;
 
 pub use cache::{fingerprint, fnv1a, Cache};
 pub use compare::{
-    campaign_breakdown, campaign_by_governor, campaign_by_nodes, campaign_table,
+    campaign_breakdown, campaign_by_governor, campaign_by_nodes,
+    campaign_serving, campaign_table,
 };
 pub use grid::{GridSpec, Knob, Scenario};
 pub use runner::{
-    default_jobs, run_campaign, run_ordered, summarize, CampaignOutcome,
-    ScenarioSummary,
+    default_jobs, run_campaign, run_ordered, summarize, summarize_serving,
+    CampaignOutcome, ScenarioSummary,
 };

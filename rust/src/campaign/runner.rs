@@ -106,6 +106,18 @@ pub struct ScenarioSummary {
     pub tokens_per_j: f64,
     pub span_ms: f64,
     pub events: u64,
+    /// Offered load in requests/s — 0 on training scenarios, where the
+    /// serving block below stays off the wire entirely (training summary
+    /// JSON keeps its pre-serving bytes).
+    pub offered_qps: f64,
+    /// p99 time-to-first-token, ms.
+    pub ttft_p99_ms: f64,
+    /// p99 time-per-output-token, ms.
+    pub tpot_p99_ms: f64,
+    /// Completed requests per second of makespan.
+    pub goodput_rps: f64,
+    /// Sampled energy divided by completed requests, joules.
+    pub energy_per_request_j: f64,
 }
 
 fn num(j: &Json, k: &str) -> Result<f64, String> {
@@ -163,6 +175,21 @@ impl ScenarioSummary {
             ("span_ms", Json::num(self.span_ms)),
             ("events", Json::num(self.events as f64)),
         ]);
+        // Serving fields serialize only on serving scenarios, so training
+        // summaries keep their pre-serving JSON bytes (same discipline as
+        // the topology block above).
+        if self.offered_qps > 0.0 {
+            fields.extend(vec![
+                ("offered_qps", Json::num(self.offered_qps)),
+                ("ttft_p99_ms", Json::num(self.ttft_p99_ms)),
+                ("tpot_p99_ms", Json::num(self.tpot_p99_ms)),
+                ("goodput_rps", Json::num(self.goodput_rps)),
+                (
+                    "energy_per_request_j",
+                    Json::num(self.energy_per_request_j),
+                ),
+            ]);
+        }
         Json::obj(fields)
     }
 
@@ -207,6 +234,10 @@ impl ScenarioSummary {
             .and_then(|v| v.as_arr())
             .map(|a| a.iter().filter_map(|v| v.as_f64()).collect())
             .unwrap_or_default();
+        // Serving fields default to zero on training artifacts (the block
+        // is only written for serving scenarios).
+        let serving_num =
+            |k: &str| j.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0);
         Ok(Self {
             name: text(j, "name")?,
             fingerprint,
@@ -235,6 +266,11 @@ impl ScenarioSummary {
             tokens_per_j,
             span_ms: num(j, "span_ms")?,
             events: num(j, "events")? as u64,
+            offered_qps: serving_num("offered_qps"),
+            ttft_p99_ms: serving_num("ttft_p99_ms"),
+            tpot_p99_ms: serving_num("tpot_p99_ms"),
+            goodput_rps: serving_num("goodput_rps"),
+            energy_per_request_j: serving_num("energy_per_request_j"),
         })
     }
 
@@ -357,6 +393,77 @@ pub fn summarize(
         tokens_per_j,
         span_ms: finite(trace.span_ns() / 1e6),
         events: trace.events.len() as u64,
+        offered_qps: 0.0,
+        ttft_p99_ms: 0.0,
+        tpot_p99_ms: 0.0,
+        goodput_rps: 0.0,
+        energy_per_request_j: 0.0,
+    }
+}
+
+/// Reduce one serving run to its persisted summary — the serving
+/// counterpart of [`summarize`]. Training columns with no serving meaning
+/// (phase/communication medians, launch overhead, overlap) summarize to
+/// zero; an "iteration" is one continuous-batching step, and the serving
+/// block carries the latency/goodput/energy quantities the comparison
+/// layer and CLI tables consume.
+pub fn summarize_serving(
+    node: &NodeSpec,
+    sc: &Scenario,
+    fp: u64,
+    out: &crate::serve::ServingOutput,
+) -> ScenarioSummary {
+    let rep = &out.report;
+    let trace = &out.trace;
+    let steps = rep.steps.max(1) as f64;
+
+    // Active-window telemetry, identical averaging to the training path.
+    let freqs: Vec<f64> =
+        out.power.active_samples().map(|s| s.freq_mhz).collect();
+    let powers: Vec<f64> =
+        out.power.active_samples().map(|s| s.power_w).collect();
+    let freq_mhz = finite(stats::mean(&freqs));
+    let peak = node.gpu.freq_peak_mhz.max(1.0);
+    let freq_loss = if freqs.is_empty() {
+        0.0
+    } else {
+        ((peak - freq_mhz) / peak).max(0.0)
+    };
+
+    ScenarioSummary {
+        name: sc.name.clone(),
+        fingerprint: fp,
+        label: rep.label.clone(),
+        fsdp: "serving".into(),
+        governor: sc.params.governor.name().to_string(),
+        sharding: sc.wl.sharding.to_string(),
+        num_nodes: trace.meta.nodes() as u64,
+        node_iter_ms: Vec::new(),
+        layers: sc.model.layers,
+        batch: sc.wl.batch,
+        seq: sc.wl.seq,
+        // Generated-token throughput (prefill tokens are not counted).
+        tokens_per_sec: finite(rep.output_tok_s),
+        iter_ms: finite(rep.makespan_s * 1e3 / steps),
+        launch_ms: 0.0,
+        fwd_ms: 0.0,
+        bwd_ms: 0.0,
+        opt_ms: 0.0,
+        allgather_ms: 0.0,
+        reduce_scatter_ms: 0.0,
+        overlap_fa: 0.0,
+        freq_mhz,
+        freq_loss,
+        power_w: finite(stats::mean(&powers)),
+        energy_per_iter_j: finite(out.power.sampled_energy_j(0) / steps),
+        tokens_per_j: finite(rep.tok_per_joule),
+        span_ms: finite(trace.span_ns() / 1e6),
+        events: trace.events.len() as u64,
+        offered_qps: finite(rep.offered_qps),
+        ttft_p99_ms: finite(rep.ttft_ms.p99),
+        tpot_p99_ms: finite(rep.tpot_ms.p99),
+        goodput_rps: finite(rep.goodput_rps),
+        energy_per_request_j: finite(rep.energy_per_request_j),
     }
 }
 
@@ -409,8 +516,23 @@ pub fn run_campaign(
             num_nodes: sc.num_nodes,
             nic: sc.nic.clone(),
         };
-        let run = run_workload_topo_with(&topo, &sc.model, &sc.wl, sc.params.clone());
-        let summary = summarize(node, sc, fp, &run);
+        let summary = if let Some(scfg) = &sc.serving {
+            let out = crate::serve::run_serving(
+                &topo,
+                &sc.model,
+                scfg,
+                sc.params.clone(),
+            );
+            summarize_serving(node, sc, fp, &out)
+        } else {
+            let run = run_workload_topo_with(
+                &topo,
+                &sc.model,
+                &sc.wl,
+                sc.params.clone(),
+            );
+            summarize(node, sc, fp, &run)
+        };
         if let Some(c) = cache {
             // Best-effort: a failed write only costs a future re-run.
             let _ = c.store(&summary);
@@ -476,6 +598,11 @@ mod tests {
             tokens_per_j: 97.53,
             span_ms: 123.456,
             events: 9999,
+            offered_qps: 0.0,
+            ttft_p99_ms: 0.0,
+            tpot_p99_ms: 0.0,
+            goodput_rps: 0.0,
+            energy_per_request_j: 0.0,
         };
         let back = ScenarioSummary::from_json_str(&s.to_json_str()).unwrap();
         assert_eq!(s, back);
@@ -483,6 +610,8 @@ mod tests {
         assert_eq!(s.to_json_str(), back.to_json_str());
         // Degenerate topology fields stay off the wire entirely.
         assert!(!s.to_json_str().contains("num_nodes"));
+        // Training summaries carry no serving block at all.
+        assert!(!s.to_json_str().contains("offered_qps"));
         // Governor/energy fields are always on the wire (cached and fresh
         // campaigns must render identically).
         assert!(s.to_json_str().contains("\"governor\""));
@@ -498,6 +627,21 @@ mod tests {
         assert!(j.contains("node_iter_ms"));
         let back = ScenarioSummary::from_json_str(&j).unwrap();
         assert_eq!(m, back);
+        assert_eq!(back.to_json_str(), j);
+
+        // Serving summaries carry the serving block and round-trip too.
+        let mut v = s.clone();
+        v.fsdp = "serving".into();
+        v.offered_qps = 16.0;
+        v.ttft_p99_ms = 87.5;
+        v.tpot_p99_ms = 4.25;
+        v.goodput_rps = 14.75;
+        v.energy_per_request_j = 321.0625;
+        let j = v.to_json_str();
+        assert!(j.contains("offered_qps"));
+        assert!(j.contains("energy_per_request_j"));
+        let back = ScenarioSummary::from_json_str(&j).unwrap();
+        assert_eq!(v, back);
         assert_eq!(back.to_json_str(), j);
     }
 

@@ -66,6 +66,24 @@ struct EnergyColumn {
     total_j: f64,
 }
 
+/// Per-request serving column (DESIGN.md §10), joined from the batcher's
+/// [`RequestRecord`](crate::serve::RequestRecord)s against the index's own
+/// per-step spans — attached on demand like the counter/energy columns.
+/// All vectors are parallel, in request-id order.
+#[derive(Debug, Default, Clone)]
+pub struct RequestColumn {
+    pub ids: Vec<u32>,
+    /// Wall-clock span of each request on the device timeline:
+    /// admit-step start → completion-step end (ns).
+    pub span_ns: Vec<(f64, f64)>,
+    /// Time to first token, ms.
+    pub ttft_ms: Vec<f64>,
+    /// Time per output token after the first, ms (0 for 1-token outputs).
+    pub tpot_ms: Vec<f64>,
+    /// End-to-end latency, ms.
+    pub e2e_ms: Vec<f64>,
+}
+
 /// The shared analysis index. Borrows the trace — nothing is cloned.
 #[derive(Debug)]
 pub struct TraceIndex<'t> {
@@ -120,6 +138,8 @@ pub struct TraceIndex<'t> {
     metrics: Option<MetricsColumn>,
     /// Energy rollups from the power trace (attached on demand).
     energy: Option<EnergyColumn>,
+    /// Per-request serving column (attached on demand, serving traces).
+    requests: Option<RequestColumn>,
 }
 
 impl<'t> TraceIndex<'t> {
@@ -354,6 +374,7 @@ impl<'t> TraceIndex<'t> {
             id_idx: FxHashMap::default(),
             metrics: None,
             energy: None,
+            requests: None,
         }
     }
 
@@ -606,6 +627,48 @@ impl<'t> TraceIndex<'t> {
             .as_ref()
             .map(|e| e.per_phase.clone())
             .unwrap_or_default()
+    }
+
+    // -- serving request column --------------------------------------------
+
+    /// Join the continuous batcher's per-request scheduling records against
+    /// the trace's own per-step spans (serving steps are `iter`s), yielding
+    /// the per-request TTFT / TPOT / e2e column. Works purely off the
+    /// trace: the step bounds are the cluster-wide min start / max end of
+    /// each step's events, so imported serving traces index identically to
+    /// fresh runs.
+    pub fn attach_requests(&mut self, records: &[crate::serve::RequestRecord]) {
+        // Cluster-wide step bounds from the per-(gpu, iter) spans.
+        let mut bounds: BTreeMap<u32, (f64, f64)> = BTreeMap::new();
+        for (&(_gpu, iter), &(s, e)) in &self.iter_spans {
+            let b = bounds.entry(iter).or_insert((f64::INFINITY, 0.0));
+            b.0 = b.0.min(s);
+            b.1 = b.1.max(e);
+        }
+        let end_of = |step: u32| bounds.get(&step).map(|b| b.1).unwrap_or(0.0);
+        let start_of = |step: u32| bounds.get(&step).map(|b| b.0).unwrap_or(0.0);
+        let mut col = RequestColumn::default();
+        for r in records {
+            let ttft_ns = end_of(r.first_token_step) - r.req.arrival_ns;
+            let e2e_ns = end_of(r.completion_step) - r.req.arrival_ns;
+            let tpot_ms = if r.req.output_tokens > 1 {
+                (e2e_ns - ttft_ns) * 1e-6 / (r.req.output_tokens - 1) as f64
+            } else {
+                0.0
+            };
+            col.ids.push(r.req.id);
+            col.span_ns
+                .push((start_of(r.admit_step), end_of(r.completion_step)));
+            col.ttft_ms.push(ttft_ns * 1e-6);
+            col.tpot_ms.push(tpot_ms);
+            col.e2e_ms.push(e2e_ns * 1e-6);
+        }
+        self.requests = Some(col);
+    }
+
+    /// The attached per-request column, if any.
+    pub fn requests(&self) -> Option<&RequestColumn> {
+        self.requests.as_ref()
     }
 
     // -- counter metrics column --------------------------------------------

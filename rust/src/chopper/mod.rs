@@ -18,6 +18,7 @@ pub mod index;
 pub mod launch;
 pub mod overlap;
 pub mod report;
+pub mod serving;
 pub mod throughput;
 pub mod whatif;
 
@@ -25,11 +26,14 @@ pub use aggregate::{op_duration_samples, op_instances, Filter, OpInstanceAgg};
 pub use align::AlignedTrace;
 pub use breakdown::{all_breakdowns, op_breakdown, OpBreakdown};
 pub use cpuutil::CpuUtilAnalysis;
-pub use index::TraceIndex;
+pub use index::{RequestColumn, TraceIndex};
+pub use serving::{serving_energy, serving_goodput, serving_latency};
 pub use launch::{launch_overhead, op_launch_overheads, LaunchOverhead};
 pub use overlap::{
     duration_at_overlap, overlap_samples, per_gpu_overlap_cdf,
     summarize_op_overlap, CommIntervals, OpOverlapSummary, OverlapSample,
 };
 pub use throughput::{throughput, Throughput};
-pub use whatif::{PolicyOutcome, WhatIfReport};
+pub use whatif::{
+    PolicyOutcome, ServingPolicyOutcome, ServingWhatIfReport, WhatIfReport,
+};

@@ -1,0 +1,244 @@
+//! Serving report figures (DESIGN.md §10) — the serving counterparts of
+//! the paper figure set: latency percentiles per scenario, the
+//! goodput-vs-offered-load curve, and energy-per-request. Like
+//! [`node_rollup`](crate::chopper::report::node_rollup) these are *extra*
+//! figures, not part of [`ALL_FIGURES`](crate::chopper::report::ALL_FIGURES)
+//! (the paper's training set stays byte-identical); `chopper serve`
+//! renders them over a QPS sweep.
+
+use crate::chopper::report::Figure;
+use crate::serve::ServingReport;
+use crate::util::svg;
+use std::fmt::Write;
+
+/// Latency percentiles (TTFT / TPOT / e2e, p50 and p99) per scenario.
+pub fn serving_latency(reports: &[ServingReport]) -> Figure {
+    let mut csv = String::from(
+        "label,offered_qps,ttft_p50_ms,ttft_p99_ms,tpot_p50_ms,tpot_p99_ms,\
+         e2e_p50_ms,e2e_p99_ms\n",
+    );
+    let mut ascii = String::from(
+        "Serving latency percentiles\n\n\
+         label                 qps    ttft p50/p99 ms    tpot p50/p99 ms    e2e p50/p99 ms\n",
+    );
+    for r in reports {
+        let _ = writeln!(
+            csv,
+            "{},{:.3},{:.4},{:.4},{:.4},{:.4},{:.4},{:.4}",
+            r.label,
+            r.offered_qps,
+            r.ttft_ms.p50,
+            r.ttft_ms.p99,
+            r.tpot_ms.p50,
+            r.tpot_ms.p99,
+            r.e2e_ms.p50,
+            r.e2e_ms.p99,
+        );
+        let _ = writeln!(
+            ascii,
+            "{:<20} {:>6.2}    {:>7.2} / {:<7.2}   {:>7.3} / {:<7.3}   {:>8.2} / {:<8.2}",
+            r.label,
+            r.offered_qps,
+            r.ttft_ms.p50,
+            r.ttft_ms.p99,
+            r.tpot_ms.p50,
+            r.tpot_ms.p99,
+            r.e2e_ms.p50,
+            r.e2e_ms.p99,
+        );
+    }
+    let groups: Vec<String> = reports.iter().map(|r| r.label.clone()).collect();
+    let series = vec![
+        "ttft_p50_ms".to_string(),
+        "ttft_p99_ms".to_string(),
+        "e2e_p99_ms".to_string(),
+    ];
+    let data: Vec<Vec<f64>> = reports
+        .iter()
+        .map(|r| vec![r.ttft_ms.p50, r.ttft_ms.p99, r.e2e_ms.p99])
+        .collect();
+    Figure {
+        id: "serving_latency",
+        title: "Serving latency percentiles (p50/p99)".into(),
+        ascii,
+        csv,
+        svg: Some(svg::grouped_bars(
+            "Serving latency percentiles (ms)",
+            &groups,
+            &series,
+            &data,
+        )),
+    }
+}
+
+/// Goodput (and SLO-gated goodput) against offered load — the serving
+/// saturation curve. Meaningful over a QPS sweep; a single report yields a
+/// one-point curve.
+pub fn serving_goodput(reports: &[ServingReport]) -> Figure {
+    let mut csv = String::from(
+        "offered_qps,goodput_rps,slo_goodput_rps,output_tok_s,makespan_s\n",
+    );
+    let mut ascii = String::from(
+        "Goodput vs offered load\n\n\
+         offered qps    goodput rps    SLO goodput rps    output tok/s\n",
+    );
+    for r in reports {
+        let _ = writeln!(
+            csv,
+            "{:.3},{:.4},{:.4},{:.2},{:.4}",
+            r.offered_qps, r.goodput_rps, r.slo_goodput_rps, r.output_tok_s, r.makespan_s,
+        );
+        let _ = writeln!(
+            ascii,
+            "{:>11.3}    {:>11.3}    {:>15.3}    {:>12.1}",
+            r.offered_qps, r.goodput_rps, r.slo_goodput_rps, r.output_tok_s,
+        );
+    }
+    let good: Vec<(f64, f64)> = reports
+        .iter()
+        .map(|r| (r.offered_qps, r.goodput_rps))
+        .collect();
+    let slo: Vec<(f64, f64)> = reports
+        .iter()
+        .map(|r| (r.offered_qps, r.slo_goodput_rps))
+        .collect();
+    Figure {
+        id: "serving_goodput",
+        title: "Goodput vs offered load".into(),
+        ascii,
+        csv,
+        svg: Some(svg::scatter(
+            "Goodput vs offered load",
+            "offered qps",
+            "goodput rps",
+            &[("goodput".to_string(), good), ("slo_goodput".to_string(), slo)],
+        )),
+    }
+}
+
+/// Energy per request and generated tokens per joule per scenario (the PR 5
+/// power plumbing, serving-shaped).
+pub fn serving_energy(reports: &[ServingReport]) -> Figure {
+    let mut csv = String::from(
+        "label,offered_qps,energy_per_request_j,tok_per_joule,kv_peak_frac\n",
+    );
+    let mut ascii = String::from(
+        "Serving energy\n\n\
+         label                 qps    J/request    tok/J      KV peak\n",
+    );
+    for r in reports {
+        let _ = writeln!(
+            csv,
+            "{},{:.3},{:.4},{:.6},{:.4}",
+            r.label, r.offered_qps, r.energy_per_request_j, r.tok_per_joule, r.kv_peak_frac,
+        );
+        let _ = writeln!(
+            ascii,
+            "{:<20} {:>6.2}    {:>9.2}    {:>7.4}    {:>6.1}%",
+            r.label,
+            r.offered_qps,
+            r.energy_per_request_j,
+            r.tok_per_joule,
+            r.kv_peak_frac * 100.0,
+        );
+    }
+    let groups: Vec<String> = reports.iter().map(|r| r.label.clone()).collect();
+    let series = vec!["energy_per_request_j".to_string()];
+    let data: Vec<Vec<f64>> = reports
+        .iter()
+        .map(|r| vec![r.energy_per_request_j])
+        .collect();
+    Figure {
+        id: "serving_energy",
+        title: "Energy per request".into(),
+        ascii,
+        csv,
+        svg: Some(svg::grouped_bars(
+            "Energy per request (J)",
+            &groups,
+            &series,
+            &data,
+        )),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chopper::TraceIndex;
+    use crate::config::{ModelConfig, NodeSpec, ServingConfig, Topology};
+    use crate::serve::run_serving;
+    use crate::sim::EngineParams;
+
+    fn reports() -> Vec<ServingReport> {
+        [4.0, 64.0]
+            .iter()
+            .map(|&q| {
+                let mut s = ServingConfig::new(q, 10);
+                s.seed = 21;
+                s.prompt = crate::config::LengthDist::lognormal(64, 0.4, 16, 256);
+                s.output = crate::config::LengthDist::lognormal(12, 0.4, 2, 48);
+                run_serving(
+                    &Topology::single(NodeSpec::mi300x_node()),
+                    &ModelConfig::mini(),
+                    &s,
+                    EngineParams::default(),
+                )
+                .report
+            })
+            .collect()
+    }
+
+    #[test]
+    fn figures_have_one_row_per_scenario() {
+        let rs = reports();
+        for f in [
+            serving_latency(&rs),
+            serving_goodput(&rs),
+            serving_energy(&rs),
+        ] {
+            assert_eq!(f.csv.lines().count(), 1 + rs.len(), "{}", f.id);
+            assert!(f.svg.is_some(), "{}", f.id);
+            assert!(!f.ascii.is_empty());
+        }
+    }
+
+    #[test]
+    fn goodput_curve_is_ordered_by_offered_load() {
+        let rs = reports();
+        let f = serving_goodput(&rs);
+        let qps: Vec<f64> = f
+            .csv
+            .lines()
+            .skip(1)
+            .map(|l| l.split(',').next().unwrap().parse().unwrap())
+            .collect();
+        assert!(qps.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn index_request_column_matches_serving_report() {
+        let mut s = ServingConfig::new(16.0, 12);
+        s.seed = 33;
+        s.prompt = crate::config::LengthDist::lognormal(64, 0.4, 16, 256);
+        s.output = crate::config::LengthDist::lognormal(12, 0.4, 2, 48);
+        let out = run_serving(
+            &Topology::single(NodeSpec::mi300x_node()),
+            &ModelConfig::mini(),
+            &s,
+            EngineParams::default(),
+        );
+        let mut idx = TraceIndex::build(&out.trace);
+        assert!(idx.requests().is_none());
+        idx.attach_requests(&out.schedule.records);
+        let col = idx.requests().expect("attached");
+        assert_eq!(col.ids.len(), 12);
+        // The index's trace-derived column agrees with the engine-derived
+        // latencies (same events, same bounds).
+        for (i, l) in out.latencies.iter().enumerate() {
+            assert!((col.ttft_ms[i] - l.ttft_ns * 1e-6).abs() < 1e-6);
+            assert!((col.e2e_ms[i] - l.e2e_ns * 1e-6).abs() < 1e-6);
+            assert!(col.span_ns[i].0 <= col.span_ns[i].1);
+        }
+    }
+}

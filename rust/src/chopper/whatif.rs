@@ -196,6 +196,194 @@ fn finite(x: f64) -> f64 {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Serving replay (DESIGN.md §10): same counterfactual machinery, serving
+// metrics — policies ranked by joules per request, tokens-per-joule shown
+// alongside. A separate report/render pair so the training advisor output
+// stays byte-identical.
+// ---------------------------------------------------------------------------
+
+/// One policy's serving replay outcome. Deltas in percent vs the baseline
+/// policy (negative = better).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServingPolicyOutcome {
+    pub governor: GovernorKind,
+    /// Joules per request, cluster-wide — the ranking key.
+    pub joules_per_request: f64,
+    pub delta_j_req_pct: f64,
+    /// Generated tokens per joule.
+    pub tok_per_joule: f64,
+    pub ttft_p99_ms: f64,
+    pub e2e_p99_ms: f64,
+    pub delta_p99_pct: f64,
+    pub goodput_rps: f64,
+    /// On the (e2e p99, joules/request) Pareto frontier.
+    pub frontier: bool,
+}
+
+/// The ranked serving advisor report.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServingWhatIfReport {
+    pub baseline: GovernorKind,
+    /// Outcomes ranked cheapest-first (joules per request ascending,
+    /// policy name breaking exact ties).
+    pub rows: Vec<ServingPolicyOutcome>,
+}
+
+impl ServingWhatIfReport {
+    pub fn row(&self, g: GovernorKind) -> Option<&ServingPolicyOutcome> {
+        self.rows.iter().find(|r| r.governor == g)
+    }
+
+    /// The cheapest policy per request (rank 1).
+    pub fn cheapest(&self) -> &ServingPolicyOutcome {
+        &self.rows[0]
+    }
+}
+
+/// Replay one serving scenario under every governor in `governors` and
+/// rank the outcomes by joules per request. Fan-out and determinism
+/// contract match [`replay`].
+pub fn replay_serving(
+    topo: &crate::config::Topology,
+    model: &ModelConfig,
+    scfg: &crate::config::ServingConfig,
+    params: &EngineParams,
+    governors: &[GovernorKind],
+    jobs: usize,
+) -> ServingWhatIfReport {
+    let baseline = params.governor;
+    let mut kinds: Vec<GovernorKind> = Vec::new();
+    if !governors.contains(&baseline) {
+        kinds.push(baseline);
+    }
+    for &g in governors {
+        if !kinds.contains(&g) {
+            kinds.push(g);
+        }
+    }
+
+    let mut rows = run_ordered(&kinds, jobs, |_, &g| {
+        let mut p = params.clone();
+        p.governor = g;
+        let out = crate::serve::run_serving(topo, model, scfg, p);
+        let r = &out.report;
+        ServingPolicyOutcome {
+            governor: g,
+            joules_per_request: finite(r.energy_per_request_j),
+            delta_j_req_pct: 0.0,
+            tok_per_joule: finite(r.tok_per_joule),
+            ttft_p99_ms: finite(r.ttft_ms.p99),
+            e2e_p99_ms: finite(r.e2e_ms.p99),
+            delta_p99_pct: 0.0,
+            goodput_rps: finite(r.goodput_rps),
+            frontier: false,
+        }
+    });
+
+    rows.sort_by(|a, b| {
+        a.joules_per_request
+            .total_cmp(&b.joules_per_request)
+            .then_with(|| a.governor.name().cmp(b.governor.name()))
+    });
+
+    let (base_j, base_p99) = rows
+        .iter()
+        .find(|r| r.governor == baseline)
+        .map(|r| (r.joules_per_request, r.e2e_p99_ms))
+        .expect("baseline policy was replayed");
+    for r in &mut rows {
+        r.delta_j_req_pct =
+            100.0 * (r.joules_per_request / base_j.max(1e-12) - 1.0);
+        r.delta_p99_pct = 100.0 * (r.e2e_p99_ms / base_p99.max(1e-12) - 1.0);
+    }
+
+    // Pareto frontier on (e2e p99 latency, joules per request).
+    for i in 0..rows.len() {
+        let dominated = (0..rows.len()).any(|j| {
+            j != i
+                && rows[j].e2e_p99_ms <= rows[i].e2e_p99_ms
+                && rows[j].joules_per_request <= rows[i].joules_per_request
+                && (rows[j].e2e_p99_ms < rows[i].e2e_p99_ms
+                    || rows[j].joules_per_request < rows[i].joules_per_request)
+        });
+        rows[i].frontier = !dominated;
+    }
+
+    ServingWhatIfReport { baseline, rows }
+}
+
+/// Render the serving advisor report (the serving sibling of [`render`]).
+pub fn render_serving(report: &ServingWhatIfReport) -> Figure {
+    let mut csv = String::from(
+        "rank,governor,joules_per_request,delta_j_req_pct,tok_per_joule,\
+         ttft_p99_ms,e2e_p99_ms,delta_p99_pct,goodput_rps,frontier\n",
+    );
+    let mut rows: Vec<Vec<String>> = Vec::with_capacity(report.rows.len());
+    for (rank, r) in report.rows.iter().enumerate() {
+        rows.push(vec![
+            format!("{}", rank + 1),
+            r.governor.name().to_string(),
+            format!("{:.2}", r.joules_per_request),
+            format!("{:+.1}%", r.delta_j_req_pct),
+            format!("{:.4}", r.tok_per_joule),
+            format!("{:.1}", r.ttft_p99_ms),
+            format!("{:.1}", r.e2e_p99_ms),
+            format!("{:+.1}%", r.delta_p99_pct),
+            format!("{:.2}", r.goodput_rps),
+            if r.frontier { "*".into() } else { String::new() },
+        ]);
+        let _ = writeln!(
+            csv,
+            "{},{},{:.4},{:.2},{:.6},{:.4},{:.4},{:.2},{:.4},{}",
+            rank + 1,
+            r.governor.name(),
+            r.joules_per_request,
+            r.delta_j_req_pct,
+            r.tok_per_joule,
+            r.ttft_p99_ms,
+            r.e2e_p99_ms,
+            r.delta_p99_pct,
+            r.goodput_rps,
+            r.frontier as u8
+        );
+    }
+    let mut out = format!(
+        "What-if — governor policy replay, serving (baseline: {}, ranked by J/request)\n\n",
+        report.baseline.name()
+    );
+    out.push_str(&ascii::table(
+        &[
+            "#", "governor", "J/req", "ΔJ/req", "tok/J", "ttft p99",
+            "e2e p99", "Δp99", "rps", "pareto",
+        ],
+        &rows,
+    ));
+    let cheap = report.cheapest();
+    let frontier: Vec<&str> = report
+        .rows
+        .iter()
+        .filter(|r| r.frontier)
+        .map(|r| r.governor.name())
+        .collect();
+    let _ = write!(
+        out,
+        "\n  cheapest per request: {} ({:+.1}% J/request, {:+.1}% e2e p99)\n\
+         \x20 pareto frontier (p99 × J/request): {}\n",
+        cheap.governor.name(),
+        cheap.delta_j_req_pct,
+        cheap.delta_p99_pct,
+        frontier.join(", ")
+    );
+    Figure {
+        id: "whatif_serving",
+        title: "What-if — governor policy replay (serving)".into(),
+        ascii: out,
+        csv,
+        svg: None,
+    }
+}
+
 /// Render the advisor report: the ranked policy table plus the headline
 /// recommendations. Pure function of the report, so two replays of the
 /// same workload render byte-identically.
@@ -380,5 +568,55 @@ mod tests {
         assert_eq!(r.rows.len(), 2);
         assert!(r.row(GovernorKind::Reactive).is_some());
         assert!(r.row(GovernorKind::Oracle).is_some());
+    }
+
+    fn serving_report(jobs: usize) -> ServingWhatIfReport {
+        let topo =
+            crate::config::Topology::single(crate::config::NodeSpec::mi300x_node());
+        let model = ModelConfig::mini();
+        let mut scfg = crate::config::ServingConfig::new(16.0, 10);
+        scfg.seed = 77;
+        scfg.prompt = crate::config::LengthDist::lognormal(64, 0.4, 16, 256);
+        scfg.output = crate::config::LengthDist::lognormal(12, 0.4, 2, 48);
+        replay_serving(
+            &topo,
+            &model,
+            &scfg,
+            &EngineParams::default(),
+            &GovernorKind::ALL,
+            jobs,
+        )
+    }
+
+    #[test]
+    fn serving_replay_ranks_by_joules_per_request() {
+        let r = serving_report(2);
+        assert_eq!(r.rows.len(), GovernorKind::ALL.len());
+        for w in r.rows.windows(2) {
+            assert!(w[0].joules_per_request <= w[1].joules_per_request);
+        }
+        let base = r.row(r.baseline).unwrap();
+        assert_eq!(base.delta_j_req_pct, 0.0);
+        assert_eq!(base.delta_p99_pct, 0.0);
+        for row in &r.rows {
+            assert!(row.joules_per_request > 0.0, "{}", row.governor);
+            assert!(row.tok_per_joule > 0.0, "{}", row.governor);
+            assert!(row.e2e_p99_ms > 0.0, "{}", row.governor);
+        }
+        // The cheapest row can never be dominated.
+        assert!(r.cheapest().frontier);
+    }
+
+    #[test]
+    fn serving_replay_parallel_matches_serial_and_renders() {
+        let serial = serving_report(1);
+        let parallel = serving_report(4);
+        assert_eq!(serial, parallel);
+        let f = render_serving(&serial);
+        assert_eq!(f.id, "whatif_serving");
+        assert_eq!(f.csv, render_serving(&parallel).csv);
+        for g in GovernorKind::ALL {
+            assert!(f.csv.contains(g.name()), "{g} missing from CSV");
+        }
     }
 }

@@ -24,6 +24,7 @@ USAGE: chopper <subcommand> [options]
   campaign [--layers 2,4] [--batch 1,2,4] [--seq 4,8 (K tokens)]
            [--fsdp v1,v2] [--nodes 1,2,4] [--sharding fsdp,hsdp]
            [--nic-gbs 50,12.5] [--governor reactive,fixed_cap,det_aware,oracle]
+           [--workload training|serving] [--qps 4,8,16] [--requests N]
            [--iters N] [--warmup N] [--seed N]
            [--ablate knob=v1,v2[;knob2=...]] [--jobs N] [--cache-dir DIR]
            [--force] [--no-cache] [--out DIR]
@@ -31,17 +32,28 @@ USAGE: chopper <subcommand> [options]
            governor policy × engine-parameter ablations), fan scenarios
            out over worker threads, reuse cached results, and print
            cross-scenario comparison tables incl. energy columns (plus
-           per-node rollups on multi-node grids and a cross-policy
-           energy/perf table on --governor grids).
+           per-node rollups on multi-node grids, a cross-policy
+           energy/perf table on --governor grids, and a latency/goodput
+           table on --workload serving grids with a --qps axis).
            Knobs: spin_penalty transfer_penalty comm_stretch rank_jitter
            compute_jitter dispatch_jitter comm_delay_sigma_ns
            far_rank_delay_ns dvfs_window_ns margin_k fixed_cap_ratio.
-  whatif   [--workload b2s4] [--fsdp v1|v2] [--layers N] [--iters N]
+  serve    [--qps 4,8,16] [--requests N] [--layers N] [--nodes N]
+           [--max-batch N] [--prefill-chunk N] [--kv-frac 0.30]
+           [--slo-ttft-ms 200] [--seed N] [--jobs N] [--out DIR]
+           Run the continuous-batching serving workload (open-loop
+           Poisson arrivals) over an offered-load sweep; print and write
+           the serving figures (latency percentiles, goodput-vs-load,
+           energy per request) plus serving_summary.json.
+  whatif   [--workload b2s4|serving] [--fsdp v1|v2] [--layers N] [--iters N]
            [--warmup N] [--governor reactive,fixed_cap,det_aware,oracle]
            [--cap-ratio 0.7] [--jobs N] [--out DIR]
            Replay one workload under a set of power-management policies
            and print the ranked advisor report: Δ iteration time,
            Δ energy, and the perf-per-watt (time × energy) frontier.
+           With --workload serving ([--qps X] [--requests N] [--seed N]),
+           policies are ranked by joules per request alongside
+           tokens-per-joule, p99 latency and goodput.
   figure   <table2|fig4..fig15|all> [--layers N] [--iters N] [--out DIR]
            Regenerate one figure; prints the ASCII rendering.
   collect  [--workload b2s4] [--fsdp v1|v2] [--nodes N] [--sharding
@@ -119,6 +131,12 @@ pub fn cmd_campaign(args: &mut Args) -> Result<(), String> {
     if governors.is_empty() {
         return Err("campaign: --governor needs at least one policy".into());
     }
+    let workload = args.flag_or("workload", "training");
+    let qps = match args.flag("qps") {
+        Some(s) => grid::parse_list_f64(&s)?,
+        None => Vec::new(),
+    };
+    let requests = args.flag_u32("requests", 32)?;
     let iters = args.flag_u32("iters", 4)?;
     let warmup = args.flag_u32("warmup", iters / 2)?;
     let seed = args.flag_u64("seed", 0xC0FFEE)?;
@@ -144,6 +162,31 @@ pub fn cmd_campaign(args: &mut Args) -> Result<(), String> {
     spec.governors = governors;
     spec.seed = seed;
     spec.ablations = ablations;
+    match workload.as_str() {
+        "training" => {
+            if !qps.is_empty() {
+                return Err(
+                    "campaign: --qps needs --workload serving".into()
+                );
+            }
+        }
+        "serving" => {
+            if requests == 0 {
+                return Err("campaign: --requests needs at least 1".into());
+            }
+            if qps.iter().any(|&q| !(q > 0.0 && q.is_finite())) {
+                return Err("campaign: --qps rates must be positive".into());
+            }
+            let base = crate::config::ServingConfig::new(8.0, requests);
+            spec.serving = Some(base);
+            spec.qps = qps;
+        }
+        other => {
+            return Err(format!(
+                "campaign: bad --workload {other} (use training or serving)"
+            ))
+        }
+    }
     let scenarios = spec.expand();
     if scenarios.is_empty() {
         return Err("campaign: empty grid (every axis needs ≥1 value)".into());
@@ -183,6 +226,10 @@ pub fn cmd_campaign(args: &mut Args) -> Result<(), String> {
     if outcome.summaries.iter().any(|s| s.governor != "reactive") {
         figs.push(campaign::campaign_by_governor(&outcome.summaries));
     }
+    // Latency/goodput/energy table on serving grids.
+    if outcome.summaries.iter().any(|s| s.offered_qps > 0.0) {
+        figs.push(campaign::campaign_serving(&outcome.summaries));
+    }
     for f in &figs {
         println!("{}", f.ascii);
         if let Some(dir) = &out {
@@ -209,6 +256,46 @@ pub fn cmd_whatif(args: &mut Args) -> Result<(), String> {
     let cap_ratio = args.flag_f64("cap-ratio", 0.7)?;
     let jobs = args.flag_u32("jobs", campaign::default_jobs() as u32)? as usize;
     let out = args.flag("out").map(PathBuf::from);
+    if label == "serving" {
+        // Serving replay: rank the policies by joules per request.
+        let qps = args.flag_f64("qps", 8.0)?;
+        let requests = args.flag_u32("requests", 32)?;
+        let seed = args.flag_u64("seed", 0xC0FFEE)?;
+        args.finish()?;
+        if governors.is_empty() {
+            return Err("whatif: --governor needs at least one policy".into());
+        }
+        if !(cap_ratio > 0.0 && cap_ratio.is_finite()) {
+            return Err(format!("whatif: bad --cap-ratio {cap_ratio}"));
+        }
+        if !(qps > 0.0 && qps.is_finite()) {
+            return Err(format!("whatif: bad --qps {qps}"));
+        }
+        if requests == 0 {
+            return Err("whatif: --requests needs at least 1".into());
+        }
+        let mut scfg = crate::config::ServingConfig::new(qps, requests);
+        scfg.seed = seed;
+        let mut params = crate::sim::EngineParams::default();
+        params.fixed_cap_ratio = cap_ratio;
+        let topo = Topology::mi300x_cluster(1);
+        eprintln!(
+            "whatif: {} × {} layers under {} policies, {jobs} worker(s)…",
+            scfg.label(),
+            cfg.layers,
+            governors.len()
+        );
+        let report = crate::chopper::whatif::replay_serving(
+            &topo, &cfg, &scfg, &params, &governors, jobs,
+        );
+        let fig = crate::chopper::whatif::render_serving(&report);
+        println!("{}", fig.ascii);
+        if let Some(dir) = &out {
+            fig.save(dir).map_err(|e| e.to_string())?;
+            eprintln!("wrote {}/{}.{{txt,csv}}", dir.display(), fig.id);
+        }
+        return Ok(());
+    }
     args.finish()?;
     if governors.is_empty() {
         return Err("whatif: --governor needs at least one policy".into());
@@ -236,6 +323,84 @@ pub fn cmd_whatif(args: &mut Args) -> Result<(), String> {
     if let Some(dir) = &out {
         fig.save(dir).map_err(|e| e.to_string())?;
         eprintln!("wrote {}/{}.{{txt,csv}}", dir.display(), fig.id);
+    }
+    Ok(())
+}
+
+/// `serve` — run the continuous-batching serving workload over an
+/// offered-load sweep and render the serving figures (chopper::serving).
+/// The sweep fans out over `run_ordered`, so `--jobs N` output is
+/// byte-identical to a serial run (the serving determinism contract).
+pub fn cmd_serve(args: &mut Args) -> Result<(), String> {
+    let cfg = model_with_layers(args)?;
+    let qps = grid::parse_list_f64(&args.flag_or("qps", "8"))?;
+    let requests = args.flag_u32("requests", 64)?;
+    let nodes = args.flag_u32("nodes", 1)?.max(1);
+    let max_batch = args.flag_u32("max-batch", 64)?;
+    let prefill_chunk = args.flag_u64("prefill-chunk", 8192)?;
+    let kv_frac = args.flag_f64("kv-frac", 0.30)?;
+    let slo_ttft_ms = args.flag_f64("slo-ttft-ms", 200.0)?;
+    let seed = args.flag_u64("seed", 0xC0FFEE)?;
+    let jobs = args.flag_u32("jobs", campaign::default_jobs() as u32)? as usize;
+    let out = args.flag("out").map(PathBuf::from);
+    args.finish()?;
+    if qps.is_empty() || qps.iter().any(|&q| !(q > 0.0 && q.is_finite())) {
+        return Err("serve: --qps needs positive offered loads".into());
+    }
+    if requests == 0 {
+        return Err("serve: --requests needs at least 1".into());
+    }
+    if !(kv_frac > 0.0 && kv_frac <= 1.0) {
+        return Err(format!("serve: bad --kv-frac {kv_frac} (use (0,1])"));
+    }
+    if max_batch == 0 || prefill_chunk == 0 {
+        return Err("serve: --max-batch/--prefill-chunk need at least 1".into());
+    }
+    let topo = Topology::mi300x_cluster(nodes);
+    let params = crate::sim::EngineParams::default();
+    eprintln!(
+        "serve: {requests} requests × {} offered load(s), {} layers, \
+         {jobs} worker(s)…",
+        qps.len(),
+        cfg.layers
+    );
+    // QPS siblings share the seed (the campaign sibling rule): the sweep
+    // measures offered load, not seed noise.
+    let reports: Vec<crate::serve::ServingReport> =
+        campaign::run_ordered(&qps, jobs, |_, &q| {
+            let mut scfg = crate::config::ServingConfig::new(q, requests);
+            scfg.max_batch = max_batch;
+            scfg.prefill_chunk = prefill_chunk;
+            scfg.kv_frac = kv_frac;
+            scfg.slo_ttft_ms = slo_ttft_ms;
+            scfg.seed = seed;
+            crate::serve::run_serving(&topo, &cfg, &scfg, params.clone())
+                .report
+        });
+    let figs = vec![
+        crate::chopper::serving_latency(&reports),
+        crate::chopper::serving_goodput(&reports),
+        crate::chopper::serving_energy(&reports),
+    ];
+    for f in &figs {
+        println!("{}", f.ascii);
+        if let Some(dir) = &out {
+            f.save(dir).map_err(|e| e.to_string())?;
+            eprintln!("wrote {}/{}.{{txt,csv,svg}}", dir.display(), f.id);
+        }
+    }
+    if let Some(dir) = &out {
+        let mut json = String::from("[\n");
+        for (i, r) in reports.iter().enumerate() {
+            json.push_str("  ");
+            json.push_str(&r.to_json());
+            json.push_str(if i + 1 < reports.len() { ",\n" } else { "\n" });
+        }
+        json.push_str("]\n");
+        std::fs::create_dir_all(dir).map_err(|e| e.to_string())?;
+        let path = dir.join("serving_summary.json");
+        std::fs::write(&path, json).map_err(|e| e.to_string())?;
+        eprintln!("wrote {}", path.display());
     }
     Ok(())
 }
@@ -578,6 +743,69 @@ mod tests {
         );
         assert_eq!(
             run_cli("chopper campaign --no-cache --governor warp9 --iters 2"),
+            1
+        );
+    }
+
+    #[test]
+    fn serve_runs_qps_sweep_and_writes_artifacts() {
+        let dir = std::env::temp_dir()
+            .join(format!("chopper_cli_serve_{}", std::process::id()));
+        let cmd = format!(
+            "chopper serve --layers 2 --qps 4,16 --requests 6 --jobs 2 \
+             --seed 11 --out {}",
+            dir.display()
+        );
+        assert_eq!(run_cli(&cmd), 0);
+        for id in ["serving_latency", "serving_goodput", "serving_energy"] {
+            assert!(dir.join(format!("{id}.csv")).exists(), "{id}");
+        }
+        let json =
+            std::fs::read_to_string(dir.join("serving_summary.json")).unwrap();
+        assert!(json.contains("serve-q4.000-r6"));
+        assert!(json.contains("serve-q16.000-r6"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn serve_rejects_bad_inputs() {
+        assert_eq!(run_cli("chopper serve --qps 0"), 1);
+        assert_eq!(run_cli("chopper serve --requests 0"), 1);
+        assert_eq!(run_cli("chopper serve --kv-frac 2.0"), 1);
+    }
+
+    #[test]
+    fn campaign_accepts_serving_workload() {
+        assert_eq!(
+            run_cli(
+                "chopper campaign --layers 2 --batch 1 --seq 4 --fsdp v2 \
+                 --workload serving --qps 4,16 --requests 4 --jobs 2 \
+                 --no-cache"
+            ),
+            0
+        );
+        // --qps is a serving-only axis.
+        assert_eq!(
+            run_cli("chopper campaign --no-cache --qps 4 --iters 2"),
+            1
+        );
+        assert_eq!(
+            run_cli("chopper campaign --no-cache --workload batch --iters 2"),
+            1
+        );
+    }
+
+    #[test]
+    fn whatif_serving_ranks_policies() {
+        assert_eq!(
+            run_cli(
+                "chopper whatif --workload serving --layers 2 --qps 8 \
+                 --requests 4 --governor reactive,oracle --jobs 2"
+            ),
+            0
+        );
+        assert_eq!(
+            run_cli("chopper whatif --workload serving --qps -3"),
             1
         );
     }

@@ -4,8 +4,11 @@
 //!   sweep     — profile the paper's b×s × {v1,v2} sweep, write every figure
 //!   campaign  — expand a scenario grid, run it in parallel with caching,
 //!               and print cross-scenario comparison tables
-//!   whatif    — replay one workload under several power-management
-//!               policies and print the ranked advisor report
+//!   serve     — run the continuous-batching serving workload over an
+//!               offered-load sweep and write the serving figures
+//!   whatif    — replay one workload (training or serving) under several
+//!               power-management policies and print the ranked advisor
+//!               report
 //!   figure    — regenerate one table/figure (fig4…fig15, table2)
 //!   collect   — profile one workload, write a chrome trace (+ telemetry)
 //!   analyze   — aggregate statistics from a chrome-trace file
@@ -34,6 +37,7 @@ pub fn run(argv: Vec<String>) -> i32 {
     let result = match cmd.as_str() {
         "sweep" => commands::cmd_sweep(&mut args),
         "campaign" => commands::cmd_campaign(&mut args),
+        "serve" => commands::cmd_serve(&mut args),
         "whatif" => commands::cmd_whatif(&mut args),
         "figure" => commands::cmd_figure(&mut args),
         "collect" => commands::cmd_collect(&mut args),

@@ -5,11 +5,13 @@
 pub mod hardware;
 pub mod model;
 pub mod parse;
+pub mod serving;
 pub mod topology;
 pub mod workload;
 
 pub use hardware::{CpuSpec, GpuSpec, LinkSpec, NodeSpec};
 pub use model::ModelConfig;
 pub use parse::{ConfigError, ConfigMap};
+pub use serving::{ArrivalProcess, LengthDist, ServingConfig};
 pub use topology::{NicSpec, Sharding, Topology};
 pub use workload::{FsdpVersion, WorkloadConfig};

@@ -1,0 +1,173 @@
+//! Serving-workload configuration (DESIGN.md §10): the open-loop request
+//! arrival process, the prompt/output length distributions, and the
+//! continuous-batching scheduler knobs. Everything is seeded — two runs
+//! with the same `ServingConfig` produce byte-identical request streams,
+//! schedules, and traces (the serving determinism contract).
+
+use crate::util::prng::Rng;
+
+/// Open-loop request arrival process. Open-loop means arrivals never wait
+/// for the server: a request's arrival timestamp depends only on the seed
+/// and the process parameters, so offered load is an independent variable
+/// and latency under overload is honestly unbounded.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArrivalProcess {
+    /// Homogeneous Poisson arrivals at `qps` requests per second
+    /// (exponential inter-arrival times).
+    Poisson { qps: f64 },
+    /// Trace-driven offered load: a piecewise-constant rate (requests per
+    /// second), one entry per wall-clock second, cycled when the request
+    /// stream outlives the trace. Arrivals are drawn from the
+    /// inhomogeneous Poisson process with this rate function.
+    Trace { qps_per_sec: Vec<f64> },
+}
+
+impl ArrivalProcess {
+    /// Mean offered load (requests per second) of the process.
+    pub fn mean_qps(&self) -> f64 {
+        match self {
+            ArrivalProcess::Poisson { qps } => *qps,
+            ArrivalProcess::Trace { qps_per_sec } => {
+                crate::util::stats::mean(qps_per_sec)
+            }
+        }
+    }
+}
+
+/// A clamped lognormal-ish token-length distribution: `mean × exp(σ·N)`
+/// rounded and clamped into `[min, max]`. σ is derived from the coefficient
+/// of variation `cv`, so `cv = 0` pins every draw to `mean`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LengthDist {
+    pub mean: u64,
+    pub cv: f64,
+    pub min: u64,
+    pub max: u64,
+}
+
+impl LengthDist {
+    pub fn fixed(mean: u64) -> Self {
+        Self {
+            mean,
+            cv: 0.0,
+            min: mean,
+            max: mean,
+        }
+    }
+
+    pub fn lognormal(mean: u64, cv: f64, min: u64, max: u64) -> Self {
+        Self { mean, cv, min, max }
+    }
+
+    /// One draw from the distribution (consumes two uniforms via the
+    /// Box-Muller pair inside `Rng::jitter`).
+    pub fn sample(&self, rng: &mut Rng) -> u64 {
+        if self.cv <= 0.0 {
+            return self.mean.clamp(self.min, self.max);
+        }
+        // ln(1 + cv²) is the lognormal σ² matching the requested cv.
+        let sigma = (1.0 + self.cv * self.cv).ln().sqrt();
+        let v = self.mean as f64 * rng.jitter(sigma);
+        (v.round() as u64).clamp(self.min, self.max)
+    }
+}
+
+/// The full serving-scenario description. `Debug` is part of the campaign
+/// cache fingerprint — any field change invalidates cached summaries.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServingConfig {
+    pub arrival: ArrivalProcess,
+    /// Requests in the (finite) open-loop stream.
+    pub num_requests: u32,
+    pub prompt: LengthDist,
+    pub output: LengthDist,
+    /// Decode-batch cap of the continuous batcher.
+    pub max_batch: u32,
+    /// Prefill token budget per scheduler step (chunked prefill): at most
+    /// this many prompt tokens are ingested per step, so a long prompt
+    /// cannot starve in-flight decodes for many steps.
+    pub prefill_chunk: u64,
+    /// Fraction of HBM available to the KV cache (weights, activations
+    /// and allocator headroom take the rest).
+    pub kv_frac: f64,
+    /// TTFT service-level objective (ms) — the goodput cutoff.
+    pub slo_ttft_ms: f64,
+    pub seed: u64,
+}
+
+impl ServingConfig {
+    /// A small default scenario: Poisson arrivals, chat-shaped lengths.
+    pub fn new(qps: f64, num_requests: u32) -> Self {
+        Self {
+            arrival: ArrivalProcess::Poisson { qps },
+            num_requests,
+            prompt: LengthDist::lognormal(512, 0.6, 16, 8192),
+            output: LengthDist::lognormal(128, 0.5, 4, 2048),
+            max_batch: 64,
+            prefill_chunk: 8192,
+            kv_frac: 0.30,
+            slo_ttft_ms: 200.0,
+            seed: 0xC0FFEE,
+        }
+    }
+
+    /// Scenario label used in figure rows, campaign names and trace
+    /// metadata: `serve-q{qps}-r{requests}`.
+    pub fn label(&self) -> String {
+        format!("serve-q{:.3}-r{}", self.arrival.mean_qps(), self.num_requests)
+    }
+
+    /// KV-cache bytes per token for `model` (K and V per layer, all KV
+    /// heads) — what one decoded or prefilled token pins in HBM until the
+    /// request completes.
+    pub fn kv_bytes_per_token(model: &crate::config::ModelConfig) -> f64 {
+        2.0 * model.layers as f64
+            * model.kv_heads as f64
+            * model.head_dim() as f64
+            * model.dtype_bytes as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn length_dist_fixed_is_constant() {
+        let d = LengthDist::fixed(128);
+        let mut r = Rng::new(1);
+        for _ in 0..32 {
+            assert_eq!(d.sample(&mut r), 128);
+        }
+    }
+
+    #[test]
+    fn length_dist_respects_bounds_and_varies() {
+        let d = LengthDist::lognormal(256, 0.8, 32, 1024);
+        let mut r = Rng::new(7);
+        let xs: Vec<u64> = (0..256).map(|_| d.sample(&mut r)).collect();
+        assert!(xs.iter().all(|&x| (32..=1024).contains(&x)));
+        assert!(xs.iter().any(|&x| x != xs[0]), "cv>0 must vary");
+    }
+
+    #[test]
+    fn mean_qps_of_trace_is_mean_of_buckets() {
+        let p = ArrivalProcess::Trace {
+            qps_per_sec: vec![2.0, 4.0, 6.0],
+        };
+        assert!((p.mean_qps() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn label_is_stable() {
+        assert_eq!(ServingConfig::new(4.0, 64).label(), "serve-q4.000-r64");
+    }
+
+    #[test]
+    fn kv_bytes_per_token_matches_formula() {
+        let m = crate::config::ModelConfig::llama3_8b();
+        // 2 (K+V) × 32 layers × 8 kv heads × 128 head dim × 2 bytes.
+        let expect = 2.0 * 32.0 * 8.0 * 128.0 * 2.0;
+        assert_eq!(ServingConfig::kv_bytes_per_token(&m), expect);
+    }
+}

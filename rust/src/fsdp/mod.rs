@@ -6,7 +6,10 @@ pub mod allocator;
 pub mod schedule;
 pub mod shard;
 
-pub use allocator::{simulate_gather_pattern, AllocStats, CachingAllocator, MemEvent};
+pub use allocator::{
+    simulate_gather_pattern, simulate_kv_pattern, AllocStats, CachingAllocator,
+    MemEvent,
+};
 pub use schedule::{
     build_program, build_program_topo, CollectiveDesc, CommGroup, CommScope,
     DispatchItem, HostSync, ProgKernel, Program,

@@ -10,6 +10,7 @@
 //!
 //! Layering (see DESIGN.md):
 //! * substrates: [`config`], [`model`], [`fsdp`], [`sim`], [`counters`]
+//! * workloads:  [`serve`] (open-loop arrivals, continuous batching)
 //! * the tool:   [`trace`], [`chopper`]
 //! * campaigns:  [`campaign`] (scenario grids, parallel runner, cache)
 //! * runtime:    [`runtime`] (PJRT), [`train`] (e2e driver)
@@ -24,6 +25,7 @@ pub mod counters;
 pub mod fsdp;
 pub mod model;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod trace;
 pub mod train;

@@ -121,6 +121,10 @@ pub enum OpType {
     AllReduce,
     /// FSDPv2 per-parameter copy around collectives.
     ParamCopy,
+    /// prefill: serving prompt ingestion (step-fused, compute-bound).
+    Prefill,
+    /// decode: serving token generation (step-fused, memory-bound).
+    Decode,
 }
 
 impl OpType {
@@ -153,16 +157,18 @@ impl OpType {
             ReduceScatter => "rs",
             AllReduce => "ar",
             ParamCopy => "param_copy",
+            Prefill => "prefill",
+            Decode => "decode",
         }
     }
 
     pub fn kind(&self) -> OpKind {
         use OpType::*;
         match self {
-            QkvIp | AttnOp | MlpGp | MlpUp | MlpDp | Lp => OpKind::Gemm,
+            QkvIp | AttnOp | MlpGp | MlpUp | MlpDp | Lp | Prefill => OpKind::Gemm,
             AttnFa => OpKind::FlashAttn,
             IE | AttnN | QkvRe | AttnRa | MlpN | MlpGs | MlpGu | MlpRa | Ln
-            | GradAccum | OptStep => OpKind::Vector,
+            | GradAccum | OptStep | Decode => OpKind::Vector,
             QkvS | QkvT | QkvC | AttnOr | ParamCopy => OpKind::Copy,
             AllGather | ReduceScatter | AllReduce => OpKind::Comm,
         }
@@ -222,6 +228,8 @@ impl OpType {
             "rs" => ReduceScatter,
             "ar" => AllReduce,
             "param_copy" => ParamCopy,
+            "prefill" => Prefill,
+            "decode" => Decode,
             _ => return None,
         })
     }
@@ -262,7 +270,11 @@ impl OpRef {
             (OpType::GradAccum, _) => "b_ga".into(),
             (OpType::AllGather, _)
             | (OpType::ReduceScatter, _)
-            | (OpType::AllReduce, _) => self.op.short().into(),
+            | (OpType::AllReduce, _)
+            // Serving phases are not the paper's f_/b_ vocabulary: the
+            // step-fused kernels keep their bare names in every rollup.
+            | (OpType::Prefill, _)
+            | (OpType::Decode, _) => self.op.short().into(),
             (op, Phase::Forward) => format!("f_{}", op.short()),
             (op, Phase::Backward) => format!("b_{}", op.short()),
             (op, Phase::Optimizer) => format!("opt_{}", op.short()),
@@ -307,6 +319,7 @@ mod tests {
             IE, AttnN, QkvIp, QkvS, QkvT, QkvRe, QkvC, AttnFa, AttnOr, AttnOp,
             AttnRa, MlpN, MlpGp, MlpGs, MlpUp, MlpGu, MlpDp, MlpRa, Ln, Lp,
             GradAccum, OptStep, AllGather, ReduceScatter, AllReduce, ParamCopy,
+            Prefill, Decode,
         ] {
             assert_eq!(OpType::parse(op.short()), Some(op), "{op}");
         }
@@ -329,7 +342,10 @@ mod tests {
 
     #[test]
     fn opref_parse_roundtrip() {
-        for name in ["f_attn_fa", "b_mlp_up", "b_ga", "opt_step", "ag", "rs", "ar"] {
+        for name in [
+            "f_attn_fa", "b_mlp_up", "b_ga", "opt_step", "ag", "rs", "ar",
+            "prefill", "decode",
+        ] {
             let r = OpRef::parse(name).unwrap();
             assert_eq!(r.paper_name(), name);
         }
@@ -343,6 +359,10 @@ mod tests {
         assert_eq!(OpType::AttnN.kind(), OpKind::Vector);
         assert_eq!(OpType::QkvC.kind(), OpKind::Copy);
         assert!(OpType::AllGather.is_comm());
+        // Serving: prefill is compute-shaped, decode is bandwidth-shaped.
+        assert_eq!(OpType::Prefill.kind(), OpKind::Gemm);
+        assert_eq!(OpType::Decode.kind(), OpKind::Vector);
+        assert!(!OpType::Prefill.is_comm());
     }
 
     #[test]

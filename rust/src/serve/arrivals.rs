@@ -1,0 +1,163 @@
+//! Seeded open-loop request generation (DESIGN.md §10).
+//!
+//! Arrival timestamps are drawn by inverse-transform sampling of the
+//! arrival process: homogeneous Poisson arrivals use plain exponential
+//! inter-arrival times; trace-driven (piecewise-constant rate) arrivals
+//! integrate the rate function until the accumulated unit-rate exposure
+//! matches the drawn exponential. Both depend only on
+//! `(seed, process parameters)` — adding draws elsewhere can never perturb
+//! them (the `serve_arrivals` / `serve_lens` substream labels).
+
+use crate::config::{ArrivalProcess, ServingConfig};
+use crate::util::prng::Rng;
+
+/// One request of the open-loop stream.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Request {
+    /// Arrival order (also the stream index).
+    pub id: u32,
+    /// Open-loop arrival timestamp, ns.
+    pub arrival_ns: f64,
+    pub prompt_tokens: u64,
+    pub output_tokens: u64,
+}
+
+impl Request {
+    pub fn total_tokens(&self) -> u64 {
+        self.prompt_tokens + self.output_tokens
+    }
+}
+
+/// Advance one arrival from `t_ns` under the process. Returns the next
+/// arrival timestamp (ns).
+fn next_arrival_ns(proc: &ArrivalProcess, t_ns: f64, rng: &mut Rng) -> f64 {
+    // Exponential with unit rate; guard ln(0).
+    let e = -(1.0 - rng.f64()).max(1e-300).ln();
+    match proc {
+        ArrivalProcess::Poisson { qps } => {
+            assert!(*qps > 0.0, "Poisson arrivals need qps > 0");
+            t_ns + e / qps * 1e9
+        }
+        ArrivalProcess::Trace { qps_per_sec } => {
+            assert!(
+                !qps_per_sec.is_empty() && qps_per_sec.iter().any(|&q| q > 0.0),
+                "trace-driven arrivals need a non-empty rate trace with \
+                 some positive rate"
+            );
+            // Walk second-sized buckets, spending the exposure `e` against
+            // the piecewise-constant rate (thinning-free inversion).
+            let mut remaining = e;
+            let mut t = t_ns;
+            loop {
+                let bucket = (t / 1e9) as usize % qps_per_sec.len();
+                let rate = qps_per_sec[bucket];
+                let bucket_end = ((t / 1e9).floor() + 1.0) * 1e9;
+                let span_s = (bucket_end - t) * 1e-9;
+                let exposure = rate * span_s;
+                if rate > 0.0 && exposure >= remaining {
+                    return t + remaining / rate * 1e9;
+                }
+                remaining -= exposure;
+                t = bucket_end;
+            }
+        }
+    }
+}
+
+/// Generate the full seeded request stream for `cfg`: arrival timestamps
+/// from the arrival process, prompt/output lengths from their
+/// distributions, each on its own substream.
+pub fn generate_requests(cfg: &ServingConfig) -> Vec<Request> {
+    let mut arr = Rng::substream(cfg.seed, "serve_arrivals");
+    let mut lens = Rng::substream(cfg.seed, "serve_lens");
+    let mut out = Vec::with_capacity(cfg.num_requests as usize);
+    let mut t = 0.0f64;
+    for id in 0..cfg.num_requests {
+        t = next_arrival_ns(&cfg.arrival, t, &mut arr);
+        let prompt_tokens = cfg.prompt.sample(&mut lens);
+        let output_tokens = cfg.output.sample(&mut lens).max(1);
+        out.push(Request {
+            id,
+            arrival_ns: t,
+            prompt_tokens,
+            output_tokens,
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::LengthDist;
+
+    fn cfg(qps: f64) -> ServingConfig {
+        let mut c = ServingConfig::new(qps, 64);
+        c.seed = 42;
+        c
+    }
+
+    #[test]
+    fn arrivals_are_monotone_and_positive() {
+        let reqs = generate_requests(&cfg(8.0));
+        assert_eq!(reqs.len(), 64);
+        assert!(reqs[0].arrival_ns > 0.0);
+        for w in reqs.windows(2) {
+            assert!(w[1].arrival_ns > w[0].arrival_ns);
+        }
+    }
+
+    #[test]
+    fn arrivals_deterministic_per_seed() {
+        let a = generate_requests(&cfg(8.0));
+        let b = generate_requests(&cfg(8.0));
+        assert_eq!(a, b);
+        let mut other = cfg(8.0);
+        other.seed = 43;
+        let c = generate_requests(&other);
+        assert_ne!(a, c, "different seed must give a different stream");
+    }
+
+    #[test]
+    fn poisson_mean_rate_roughly_matches_qps() {
+        let mut c = cfg(20.0);
+        c.num_requests = 4000;
+        let reqs = generate_requests(&c);
+        let span_s = reqs.last().unwrap().arrival_ns * 1e-9;
+        let rate = reqs.len() as f64 / span_s;
+        assert!(
+            (rate - 20.0).abs() / 20.0 < 0.1,
+            "empirical rate {rate} vs 20"
+        );
+    }
+
+    #[test]
+    fn trace_rate_concentrates_arrivals_in_hot_seconds() {
+        let mut c = cfg(1.0);
+        c.num_requests = 2000;
+        // 10 rps in even seconds, 0 in odd seconds.
+        c.arrival = crate::config::ArrivalProcess::Trace {
+            qps_per_sec: vec![10.0, 0.0],
+        };
+        let reqs = generate_requests(&c);
+        for r in &reqs {
+            let sec = (r.arrival_ns / 1e9) as u64;
+            assert_eq!(sec % 2, 0, "arrival in a zero-rate second");
+        }
+        for w in reqs.windows(2) {
+            assert!(w[1].arrival_ns > w[0].arrival_ns);
+        }
+    }
+
+    #[test]
+    fn lengths_respect_distribution_bounds() {
+        let mut c = cfg(4.0);
+        c.prompt = LengthDist::lognormal(100, 1.0, 50, 150);
+        c.output = LengthDist::fixed(7);
+        let reqs = generate_requests(&c);
+        assert!(reqs
+            .iter()
+            .all(|r| (50..=150).contains(&r.prompt_tokens)));
+        assert!(reqs.iter().all(|r| r.output_tokens == 7));
+    }
+}

@@ -1,0 +1,250 @@
+//! Lower a [`BatchSchedule`] to an engine [`Program`] (DESIGN.md §10).
+//!
+//! Each scheduler step becomes a short dispatch burst on every rank: an
+//! optional open-loop wait (host idles until the next arrival), scheduler
+//! bookkeeping, a fused compute-bound prefill kernel over the step's
+//! prompt-token chunk, a fused bandwidth-bound decode kernel over the
+//! in-flight batch, one tensor-parallel all-reduce combining the step's
+//! partial activations, and a device sync (the step barrier). The engine
+//! then replays this program under its ordinary fluid-flow contention /
+//! DVFS / host-jitter machinery, so serving runs produce ordinary traces
+//! and per-step `iter_bounds` — the step's wall-clock bounds from which
+//! TTFT and end-to-end latency are measured.
+
+use crate::config::{ModelConfig, ServingConfig};
+use crate::fsdp::schedule::{
+    CollectiveDesc, CommGroup, CommScope, DispatchItem, HostSync, Program, ProgKernel,
+};
+use crate::model::graph::KernelDesc;
+use crate::model::ops::{OpRef, OpType, Phase};
+use crate::serve::batcher::BatchSchedule;
+
+/// Host-side scheduler bookkeeping per step (admission, block allocation,
+/// sampler bookkeeping), ns.
+const SCHED_HOST_NS: f64 = 30_000.0;
+
+/// Lower the planned schedule onto `world` tensor-parallel ranks. Every
+/// rank runs the same program (TP replicates the dispatch stream; the
+/// engine's rendezvous machinery aligns collective ids across ranks).
+pub fn lower_schedule(
+    sched: &BatchSchedule,
+    model: &ModelConfig,
+    _cfg: &ServingConfig,
+    world: u32,
+) -> Program {
+    let world_f = world.max(1) as f64;
+    let weight_bytes = (model.param_count() * model.dtype_bytes) as f64;
+    let act_row_bytes = (model.hidden * model.dtype_bytes) as f64;
+
+    let mut items: Vec<DispatchItem> = Vec::with_capacity(sched.steps.len() * 6);
+    let mut next_comm_id = 0u64;
+    let mut kernel_count = 0u64;
+
+    for p in &sched.steps {
+        if p.idle_gap_ns > 0.0 {
+            // Absolute open-loop wait: the engine advances the host clock
+            // to the arrival's wall-clock deadline (unscaled, not CPU
+            // time), re-anchoring the engine timeline to the arrival
+            // timeline at every idle point.
+            items.push(DispatchItem::HostWork {
+                ns: p.wait_until_ns,
+                tag: "serve_wait_until",
+            });
+        }
+        items.push(DispatchItem::HostWork {
+            ns: SCHED_HOST_NS,
+            tag: "serve_sched",
+        });
+
+        let prefill_tokens = p.prefill_tokens();
+        if prefill_tokens > 0 {
+            // Compute-bound prompt ingestion: the step's chunk runs the
+            // whole dense stack, 1/world of it per TP rank.
+            let flops = 2.0 * model.param_count() as f64 * prefill_tokens as f64 / world_f;
+            let bytes =
+                (weight_bytes + prefill_tokens as f64 * act_row_bytes) / world_f;
+            kernel_count += 1;
+            items.push(DispatchItem::Kernel(ProgKernel {
+                desc: KernelDesc {
+                    name: "serve_prefill_chunk".into(),
+                    op: OpRef::new(OpType::Prefill, Phase::Forward),
+                    layer: None,
+                    kind: OpType::Prefill.kind(),
+                    flops,
+                    bytes,
+                    gemm_mnk: Some((prefill_tokens, model.ffn, model.hidden)),
+                },
+                iter: p.step,
+                wait_comm: None,
+            }));
+        }
+
+        let decode_batch = p.decode_batch();
+        if decode_batch > 0 {
+            // Bandwidth-bound token generation: one full weight sweep plus
+            // the batch's accumulated KV reads, 1/world per rank.
+            let bytes = (weight_bytes + p.decode_kv_bytes) / world_f;
+            let flops =
+                2.0 * model.param_count() as f64 * decode_batch as f64 / world_f;
+            kernel_count += 1;
+            items.push(DispatchItem::Kernel(ProgKernel {
+                desc: KernelDesc {
+                    name: "serve_decode_step".into(),
+                    op: OpRef::new(OpType::Decode, Phase::Forward),
+                    layer: None,
+                    kind: OpType::Decode.kind(),
+                    flops,
+                    bytes,
+                    gemm_mnk: None,
+                },
+                iter: p.step,
+                wait_comm: None,
+            }));
+        }
+
+        let step_tokens = prefill_tokens + decode_batch as u64;
+        if step_tokens > 0 && world > 1 {
+            // One fused TP all-reduce of the step's activations (per-layer
+            // all-reduces folded into a single payload: layers × hidden ×
+            // tokens). Anchored behind the step's compute via wait_seq.
+            let bytes = (model.layers * model.hidden * step_tokens * model.dtype_bytes)
+                as f64;
+            items.push(DispatchItem::Comm(CollectiveDesc {
+                id: next_comm_id,
+                op: OpRef::new(OpType::AllReduce, Phase::Forward),
+                scope: CommScope::Head,
+                group: CommGroup::World,
+                iter: p.step,
+                bytes,
+                wait_seq: kernel_count,
+            }));
+            next_comm_id += 1;
+        }
+
+        // Step barrier: the sampler needs the step's logits on the host.
+        items.push(DispatchItem::Sync(HostSync::Device));
+    }
+
+    Program {
+        items,
+        num_collectives: next_comm_id,
+        iterations: sched.steps.len() as u32,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GpuSpec;
+    use crate::serve::arrivals::generate_requests;
+    use crate::serve::batcher::plan_schedule;
+
+    fn lowered(world: u32) -> (BatchSchedule, Program) {
+        let mut cfg = ServingConfig::new(16.0, 24);
+        cfg.seed = 3;
+        let model = ModelConfig::mini();
+        let reqs = generate_requests(&cfg);
+        let sched = plan_schedule(&reqs, &model, &GpuSpec::mi300x(), &cfg, world);
+        let prog = lower_schedule(&sched, &model, &cfg, world);
+        (sched, prog)
+    }
+
+    #[test]
+    fn one_sync_and_sched_per_step() {
+        let (sched, prog) = lowered(8);
+        let syncs = prog
+            .items
+            .iter()
+            .filter(|i| matches!(i, DispatchItem::Sync(HostSync::Device)))
+            .count();
+        assert_eq!(syncs, sched.steps.len());
+        let scheds = prog
+            .items
+            .iter()
+            .filter(|i| {
+                matches!(i, DispatchItem::HostWork { tag, .. } if *tag == "serve_sched")
+            })
+            .count();
+        assert_eq!(scheds, sched.steps.len());
+        assert_eq!(prog.iterations as usize, sched.steps.len());
+    }
+
+    #[test]
+    fn kernels_match_step_structure() {
+        let (sched, prog) = lowered(8);
+        let prefills = prog
+            .kernels()
+            .filter(|k| k.desc.op.op == OpType::Prefill)
+            .count();
+        let decodes = prog
+            .kernels()
+            .filter(|k| k.desc.op.op == OpType::Decode)
+            .count();
+        assert_eq!(
+            prefills,
+            sched.steps.iter().filter(|p| p.prefill_tokens() > 0).count()
+        );
+        assert_eq!(
+            decodes,
+            sched.steps.iter().filter(|p| p.decode_batch() > 0).count()
+        );
+        // Prefill is a GEMM with honest shape; decode is bandwidth-bound.
+        for k in prog.kernels() {
+            match k.desc.op.op {
+                OpType::Prefill => assert!(k.desc.gemm_mnk.is_some()),
+                OpType::Decode => assert!(k.desc.gemm_mnk.is_none()),
+                other => panic!("unexpected serving op {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn collectives_are_dense_world_allreduces_behind_compute() {
+        let (_, prog) = lowered(8);
+        let mut expect = 0u64;
+        for c in prog.collectives() {
+            assert_eq!(c.id, expect);
+            expect += 1;
+            assert_eq!(c.op.op, OpType::AllReduce);
+            assert_eq!(c.group, CommGroup::World);
+            assert!(c.bytes > 0.0);
+            assert!(c.wait_seq > 0, "TP all-reduce must anchor behind compute");
+        }
+        assert_eq!(prog.num_collectives, expect);
+        assert!(expect > 0);
+    }
+
+    #[test]
+    fn single_rank_emits_no_collectives() {
+        let (_, prog) = lowered(1);
+        assert_eq!(prog.num_collectives, 0);
+        assert_eq!(prog.collectives().count(), 0);
+    }
+
+    #[test]
+    fn open_loop_waits_survive_lowering() {
+        let (sched, prog) = lowered(8);
+        let gaps = sched
+            .steps
+            .iter()
+            .filter(|p| p.idle_gap_ns > 0.0)
+            .count();
+        let waits: Vec<f64> = prog
+            .items
+            .iter()
+            .filter_map(|i| match i {
+                DispatchItem::HostWork { ns, tag } if *tag == "serve_wait_until" => {
+                    Some(*ns)
+                }
+                _ => None,
+            })
+            .collect();
+        assert_eq!(gaps, waits.len());
+        // Deadlines are the absolute arrival timestamps: positive and
+        // strictly increasing.
+        assert!(waits.iter().all(|&w| w > 0.0));
+        for w in waits.windows(2) {
+            assert!(w[1] > w[0]);
+        }
+    }
+}

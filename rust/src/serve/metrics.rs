@@ -1,0 +1,291 @@
+//! Per-request serving metrics (DESIGN.md §10): TTFT / TPOT / end-to-end
+//! latency measured off the engine trace, latency percentiles, goodput and
+//! energy-per-request.
+//!
+//! Time base: every latency is `step-end wall clock − open-loop arrival
+//! timestamp`, both in the engine's nanosecond clock (the open-loop waits
+//! are replayed as host work, so arrivals and step bounds share one
+//! timeline). TTFT anchors on the step that finishes the request's prompt;
+//! end-to-end on the step that emits its last token — TTFT ≤ e2e by
+//! construction.
+
+use crate::config::ServingConfig;
+use crate::serve::batcher::{BatchSchedule, RequestRecord};
+
+/// Linearly-interpolated percentile (type-7, like `stats::quantile`) over
+/// an unsorted slice, ordered by `f64::total_cmp` so NaN payloads and
+/// signed zeros have a defined, deterministic order. Returns 0.0 for an
+/// empty slice; a single element is every percentile of itself.
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(f64::total_cmp);
+    percentile_sorted(&v, q)
+}
+
+/// [`percentile`] over an already `total_cmp`-sorted slice.
+pub fn percentile_sorted(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let q = q.clamp(0.0, 1.0);
+    let pos = q * (xs.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        return xs[lo];
+    }
+    let frac = pos - lo as f64;
+    xs[lo] + (xs[hi] - xs[lo]) * frac
+}
+
+/// p50 / p99 / mean / max of a latency population.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LatencySummary {
+    pub p50: f64,
+    pub p99: f64,
+    pub mean: f64,
+    pub max: f64,
+}
+
+impl LatencySummary {
+    pub fn of(xs: &[f64]) -> Self {
+        if xs.is_empty() {
+            return Self {
+                p50: 0.0,
+                p99: 0.0,
+                mean: 0.0,
+                max: 0.0,
+            };
+        }
+        let mut v = xs.to_vec();
+        v.sort_by(f64::total_cmp);
+        Self {
+            p50: percentile_sorted(&v, 0.50),
+            p99: percentile_sorted(&v, 0.99),
+            mean: crate::util::stats::mean(&v),
+            max: *v.last().expect("non-empty"),
+        }
+    }
+}
+
+/// One request's measured latencies (all ns).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RequestLatency {
+    pub id: u32,
+    pub arrival_ns: f64,
+    /// Time to first token: first-token step end − arrival.
+    pub ttft_ns: f64,
+    /// End-to-end: completion step end − arrival.
+    pub e2e_ns: f64,
+    /// Time per output token after the first: (e2e − ttft)/(out − 1);
+    /// 0 for single-token outputs.
+    pub tpot_ns: f64,
+    pub output_tokens: u64,
+}
+
+/// Join the scheduler's per-request records against the engine's per-step
+/// wall-clock bounds (`iter_bounds[step] = (start, end)`).
+pub fn request_latencies(
+    records: &[RequestRecord],
+    iter_bounds: &[(f64, f64)],
+) -> Vec<RequestLatency> {
+    records
+        .iter()
+        .map(|r| {
+            let ttft_ns = iter_bounds[r.first_token_step as usize].1 - r.req.arrival_ns;
+            let e2e_ns = iter_bounds[r.completion_step as usize].1 - r.req.arrival_ns;
+            let tpot_ns = if r.req.output_tokens > 1 {
+                (e2e_ns - ttft_ns) / (r.req.output_tokens - 1) as f64
+            } else {
+                0.0
+            };
+            RequestLatency {
+                id: r.req.id,
+                arrival_ns: r.req.arrival_ns,
+                ttft_ns,
+                e2e_ns,
+                tpot_ns,
+                output_tokens: r.req.output_tokens,
+            }
+        })
+        .collect()
+}
+
+/// The aggregate serving report for one run — what the figures, campaign
+/// summaries and what-if rankings consume.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServingReport {
+    pub label: String,
+    pub offered_qps: f64,
+    pub num_requests: u32,
+    pub steps: u32,
+    /// Wall-clock span of the run (first step start → last step end), s.
+    pub makespan_s: f64,
+    pub ttft_ms: LatencySummary,
+    pub tpot_ms: LatencySummary,
+    pub e2e_ms: LatencySummary,
+    /// Completed requests per second of makespan.
+    pub goodput_rps: f64,
+    /// Completed requests meeting the TTFT SLO, per second of makespan.
+    pub slo_goodput_rps: f64,
+    /// Generated (output) tokens per second of makespan.
+    pub output_tok_s: f64,
+    /// Whole-cluster energy over the run divided by requests, J.
+    pub energy_per_request_j: f64,
+    /// Generated tokens per joule (the serving twin of tokens-per-joule).
+    pub tok_per_joule: f64,
+    /// KV high-water mark as a fraction of the KV budget.
+    pub kv_peak_frac: f64,
+}
+
+impl ServingReport {
+    pub fn build(
+        cfg: &ServingConfig,
+        sched: &BatchSchedule,
+        lats: &[RequestLatency],
+        iter_bounds: &[(f64, f64)],
+        energy_j: f64,
+    ) -> Self {
+        let to_ms = |ns: f64| ns * 1e-6;
+        let ttft: Vec<f64> = lats.iter().map(|l| to_ms(l.ttft_ns)).collect();
+        let tpot: Vec<f64> = lats.iter().map(|l| to_ms(l.tpot_ns)).collect();
+        let e2e: Vec<f64> = lats.iter().map(|l| to_ms(l.e2e_ns)).collect();
+        let makespan_s = iter_bounds
+            .last()
+            .map(|b| (b.1 - iter_bounds[0].0) * 1e-9)
+            .unwrap_or(0.0)
+            .max(1e-12);
+        let n = lats.len() as f64;
+        let met_slo = ttft.iter().filter(|&&t| t <= cfg.slo_ttft_ms).count() as f64;
+        let out_tokens: u64 = lats.iter().map(|l| l.output_tokens).sum();
+        Self {
+            label: cfg.label(),
+            offered_qps: cfg.arrival.mean_qps(),
+            num_requests: lats.len() as u32,
+            steps: sched.steps.len() as u32,
+            makespan_s,
+            ttft_ms: LatencySummary::of(&ttft),
+            tpot_ms: LatencySummary::of(&tpot),
+            e2e_ms: LatencySummary::of(&e2e),
+            goodput_rps: n / makespan_s,
+            slo_goodput_rps: met_slo / makespan_s,
+            output_tok_s: out_tokens as f64 / makespan_s,
+            energy_per_request_j: if n > 0.0 { energy_j / n } else { 0.0 },
+            tok_per_joule: if energy_j > 0.0 {
+                out_tokens as f64 / energy_j
+            } else {
+                0.0
+            },
+            kv_peak_frac: if sched.kv_capacity_bytes > 0.0 {
+                sched.kv_peak_bytes / sched.kv_capacity_bytes
+            } else {
+                0.0
+            },
+        }
+    }
+
+    /// Hand-rolled JSON object (the repo has no serde; mirrors the
+    /// campaign summary / benchkit idiom).
+    pub fn to_json(&self) -> String {
+        let s = |l: &LatencySummary| {
+            format!(
+                "{{\"p50\":{:.6},\"p99\":{:.6},\"mean\":{:.6},\"max\":{:.6}}}",
+                l.p50, l.p99, l.mean, l.max
+            )
+        };
+        format!(
+            "{{\"label\":\"{}\",\"offered_qps\":{:.6},\"num_requests\":{},\
+             \"steps\":{},\"makespan_s\":{:.6},\"ttft_ms\":{},\"tpot_ms\":{},\
+             \"e2e_ms\":{},\"goodput_rps\":{:.6},\"slo_goodput_rps\":{:.6},\
+             \"output_tok_s\":{:.3},\"energy_per_request_j\":{:.6},\
+             \"tok_per_joule\":{:.6},\"kv_peak_frac\":{:.6}}}",
+            self.label,
+            self.offered_qps,
+            self.num_requests,
+            self.steps,
+            self.makespan_s,
+            s(&self.ttft_ms),
+            s(&self.tpot_ms),
+            s(&self.e2e_ms),
+            self.goodput_rps,
+            self.slo_goodput_rps,
+            self.output_tok_s,
+            self.energy_per_request_j,
+            self.tok_per_joule,
+            self.kv_peak_frac,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_exact_on_known_inputs() {
+        // 1..=100: p50 interpolates to 50.5, p99 to 99.01.
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert!((percentile(&xs, 0.50) - 50.5).abs() < 1e-12);
+        assert!((percentile(&xs, 0.99) - 99.01).abs() < 1e-9);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 1.0), 100.0);
+        // Five elements: p50 is the middle element exactly.
+        let v = [9.0, 1.0, 5.0, 3.0, 7.0];
+        assert_eq!(percentile(&v, 0.50), 5.0);
+        assert!((percentile(&v, 0.25) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_edge_cases() {
+        assert_eq!(percentile(&[], 0.5), 0.0);
+        assert_eq!(percentile(&[42.0], 0.5), 42.0);
+        assert_eq!(percentile(&[42.0], 0.99), 42.0);
+        // Quantiles outside [0,1] clamp instead of panicking.
+        assert_eq!(percentile(&[1.0, 2.0], -0.5), 1.0);
+        assert_eq!(percentile(&[1.0, 2.0], 1.5), 2.0);
+    }
+
+    #[test]
+    fn percentile_total_cmp_handles_signed_zero() {
+        // total_cmp orders -0.0 before +0.0; partial_cmp sorts would leave
+        // them wherever they started.
+        let xs = [0.0, -0.0, -1.0, 1.0];
+        let mut v = xs.to_vec();
+        v.sort_by(f64::total_cmp);
+        assert_eq!(v[0], -1.0);
+        assert!(v[1].is_sign_negative() && v[1] == 0.0);
+        assert_eq!(percentile(&xs, 1.0), 1.0);
+    }
+
+    #[test]
+    fn summary_of_empty_and_single() {
+        let e = LatencySummary::of(&[]);
+        assert_eq!((e.p50, e.p99, e.mean, e.max), (0.0, 0.0, 0.0, 0.0));
+        let s = LatencySummary::of(&[3.5]);
+        assert_eq!((s.p50, s.p99, s.mean, s.max), (3.5, 3.5, 3.5, 3.5));
+    }
+
+    #[test]
+    fn tpot_zero_for_single_token_outputs() {
+        use crate::serve::arrivals::Request;
+        let rec = RequestRecord {
+            req: Request {
+                id: 0,
+                arrival_ns: 100.0,
+                prompt_tokens: 8,
+                output_tokens: 1,
+            },
+            admit_step: 0,
+            first_token_step: 0,
+            completion_step: 0,
+        };
+        let bounds = [(0.0, 1_000.0)];
+        let l = request_latencies(&[rec], &bounds);
+        assert_eq!(l[0].ttft_ns, 900.0);
+        assert_eq!(l[0].e2e_ns, 900.0);
+        assert_eq!(l[0].tpot_ns, 0.0);
+    }
+}

@@ -1,0 +1,200 @@
+//! Inference/serving subsystem (DESIGN.md §10): seeded open-loop request
+//! arrivals ([`arrivals`]), the continuous-batching step planner
+//! ([`batcher`]), lowering of the plan to an ordinary engine dispatch
+//! program ([`lower`]), and per-request latency / goodput / energy metrics
+//! ([`metrics`]).
+//!
+//! Serving runs reuse the whole training stack: the lowered program
+//! executes on [`Engine::with_program`] under the same fluid-flow
+//! contention, DVFS-governor and host-jitter machinery, produces an
+//! ordinary [`Trace`] (steps are `iter`s), and the KV-cache residency
+//! timeline drives the allocator's HBM power-noise statistics exactly like
+//! the training gather pattern does.
+
+pub mod arrivals;
+pub mod batcher;
+pub mod lower;
+pub mod metrics;
+
+pub use arrivals::{generate_requests, Request};
+pub use batcher::{plan_schedule, BatchSchedule, RequestRecord, StepCost, StepPlan};
+pub use lower::lower_schedule;
+pub use metrics::{
+    percentile, percentile_sorted, request_latencies, LatencySummary,
+    RequestLatency, ServingReport,
+};
+
+use crate::config::{
+    FsdpVersion, ModelConfig, ServingConfig, Topology, WorkloadConfig,
+};
+use crate::fsdp::{simulate_kv_pattern, AllocStats};
+use crate::sim::{Engine, EngineParams};
+use crate::trace::event::{PowerTrace, Trace};
+use std::sync::Arc;
+
+/// Paged KV-cache block size (bytes) for the allocator replay.
+const KV_BLOCK_BYTES: u64 = 2 << 20;
+
+/// One complete serving run: the ordinary engine trace plus the serving
+/// overlays (schedule, per-request latencies, aggregate report).
+#[derive(Debug)]
+pub struct ServingOutput {
+    pub trace: Trace,
+    pub power: PowerTrace,
+    pub schedule: BatchSchedule,
+    pub latencies: Vec<RequestLatency>,
+    pub report: ServingReport,
+    /// Per-step wall-clock bounds (the engine's iter bounds).
+    pub iter_bounds: Vec<(f64, f64)>,
+    pub alloc: AllocStats,
+    /// Per-rank governor-integrated joules (PR 5 power plumbing).
+    pub gov_energy_j: Vec<f64>,
+}
+
+/// The synthetic [`WorkloadConfig`] a serving run drives the engine with:
+/// one "iteration" per scheduler step, no warmup, no optimizer phase.
+/// FSDPv2 allocator semantics match the paged KV pool (deterministic
+/// frees).
+pub fn serving_workload(scfg: &ServingConfig, steps: u32) -> WorkloadConfig {
+    let mut wl = WorkloadConfig::new(scfg.max_batch as u64, scfg.prompt.mean, FsdpVersion::V2);
+    wl.iterations = steps;
+    wl.warmup = 0;
+    wl.optimizer = false;
+    wl.seed = scfg.seed;
+    wl
+}
+
+/// Run one serving scenario end to end on `topo`: generate the seeded
+/// request stream, plan the continuous-batching schedule, lower it to a
+/// dispatch program, execute it on the engine, and measure per-request
+/// latencies off the trace. Deterministic: byte-identical outputs for
+/// identical `(topo, model, scfg, params)`.
+pub fn run_serving(
+    topo: &Topology,
+    model: &ModelConfig,
+    scfg: &ServingConfig,
+    params: EngineParams,
+) -> ServingOutput {
+    let world = topo.world_size();
+    let requests = generate_requests(scfg);
+    let schedule = plan_schedule(&requests, model, &topo.node.gpu, scfg, world);
+    let program = Arc::new(lower_schedule(&schedule, model, scfg, world));
+
+    // Per-GPU KV residency timeline -> allocator -> HBM power noise.
+    let resident: Vec<f64> = schedule
+        .steps
+        .iter()
+        .map(|p| p.kv_resident_bytes / world.max(1) as f64)
+        .collect();
+    let alloc = simulate_kv_pattern(&resident, KV_BLOCK_BYTES, scfg.seed);
+
+    let wl = serving_workload(scfg, schedule.steps.len() as u32);
+    let out =
+        Engine::with_program(topo.clone(), model, &wl, params, program, alloc).run();
+
+    let mut trace = out.trace;
+    trace.meta.workload = scfg.label();
+    trace.meta.fsdp = "serving".into();
+
+    let latencies = request_latencies(&schedule.records, &out.iter_bounds);
+    let energy_j = out.power.sampled_energy_j(0);
+    let report =
+        ServingReport::build(scfg, &schedule, &latencies, &out.iter_bounds, energy_j);
+    ServingOutput {
+        trace,
+        power: out.power,
+        schedule,
+        latencies,
+        report,
+        iter_bounds: out.iter_bounds,
+        alloc: out.alloc,
+        gov_energy_j: out.gov_energy_j,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ops::OpType;
+
+    fn small_scfg() -> ServingConfig {
+        let mut s = ServingConfig::new(24.0, 16);
+        s.seed = 9;
+        s.prompt = crate::config::LengthDist::lognormal(96, 0.5, 16, 512);
+        s.output = crate::config::LengthDist::lognormal(24, 0.5, 2, 96);
+        s
+    }
+
+    fn run_small() -> ServingOutput {
+        run_serving(
+            &Topology::single(crate::config::NodeSpec::mi300x_node()),
+            &ModelConfig::mini(),
+            &small_scfg(),
+            EngineParams::default(),
+        )
+    }
+
+    #[test]
+    fn serving_trace_is_ordinary_and_labeled() {
+        let out = run_small();
+        assert_eq!(out.trace.meta.workload, "serve-q24.000-r16");
+        assert_eq!(out.trace.meta.fsdp, "serving");
+        assert_eq!(out.trace.meta.warmup, 0);
+        assert_eq!(
+            out.trace.meta.iterations as usize,
+            out.schedule.steps.len()
+        );
+        assert!(!out.trace.events.is_empty());
+        assert!(out
+            .trace
+            .events
+            .iter()
+            .any(|e| e.op.op == OpType::Prefill));
+        assert!(out.trace.events.iter().any(|e| e.op.op == OpType::Decode));
+    }
+
+    #[test]
+    fn ttft_positive_and_bounded_by_e2e() {
+        let out = run_small();
+        assert_eq!(out.latencies.len(), 16);
+        for l in &out.latencies {
+            assert!(l.ttft_ns > 0.0, "req {} TTFT {}", l.id, l.ttft_ns);
+            assert!(
+                l.ttft_ns <= l.e2e_ns,
+                "req {} TTFT {} > e2e {}",
+                l.id,
+                l.ttft_ns,
+                l.e2e_ns
+            );
+            assert!(l.tpot_ns >= 0.0);
+        }
+        assert!(out.report.goodput_rps > 0.0);
+        assert!(out.report.energy_per_request_j > 0.0);
+    }
+
+    #[test]
+    fn serving_run_is_deterministic() {
+        let a = run_small();
+        let b = run_small();
+        assert_eq!(a.report, b.report);
+        assert_eq!(a.trace.events.len(), b.trace.events.len());
+        for (x, y) in a.trace.events.iter().zip(&b.trace.events) {
+            assert_eq!(x.t_start.to_bits(), y.t_start.to_bits());
+            assert_eq!(x.t_end.to_bits(), y.t_end.to_bits());
+        }
+    }
+
+    #[test]
+    fn engine_steps_end_no_earlier_than_estimate_admits() {
+        // The estimate is optimistic by construction: each request's
+        // first-token step must end after its arrival (TTFT > 0 above is
+        // the per-request form; here we check the step clock re-anchors).
+        let out = run_small();
+        for p in &out.schedule.steps {
+            if p.wait_until_ns > 0.0 {
+                let (start, _) = out.iter_bounds[p.step as usize];
+                assert!(start >= p.wait_until_ns - 1e-6);
+            }
+        }
+    }
+}

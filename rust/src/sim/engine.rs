@@ -363,7 +363,6 @@ impl<'a> Engine<'a> {
         wl: &'a WorkloadConfig,
         params: EngineParams,
     ) -> Self {
-        let r = topo.world_size() as usize;
         let program = Arc::new(build_program_topo(cfg, wl, &topo));
 
         // Allocator behaviour decides the HBM power-noise level (Obs. 6).
@@ -374,6 +373,24 @@ impl<'a> Engine<'a> {
             wl.iterations,
             wl.seed,
         );
+        Self::with_program(topo, cfg, wl, params, program, alloc)
+    }
+
+    /// Engine over an explicit dispatch [`Program`](crate::fsdp::Program)
+    /// and allocator profile — the entry point for non-training programs
+    /// (the serving path builds its own continuous-batching program).
+    /// [`Engine::with_topology`] is exactly this with the FSDP training
+    /// program and gather-pattern allocator plugged in, so the training
+    /// path stays byte-identical.
+    pub fn with_program(
+        topo: Topology,
+        cfg: &ModelConfig,
+        wl: &'a WorkloadConfig,
+        params: EngineParams,
+        program: Arc<crate::fsdp::Program>,
+        alloc: AllocStats,
+    ) -> Self {
+        let r = topo.world_size() as usize;
         let spike_var =
             alloc.peak_sigma_bytes / cfg.layer_weight_bytes().max(1) as f64;
         let noise_w =
@@ -584,11 +601,20 @@ impl<'a> Engine<'a> {
                 return;
             }
             match &program.items[idx] {
-                DispatchItem::HostWork { ns, tag: _ } => {
+                DispatchItem::HostWork { ns, tag } => {
                     let r = &mut self.ranks[rank];
-                    let cost = ns * r.host_scale;
-                    Self::host_busy(&mut self.host, rank, r.host_time, cost);
-                    r.host_time += cost;
+                    if *tag == "serve_wait_until" {
+                        // Serving open-loop wait: `ns` is an absolute
+                        // wall-clock deadline (the next arrival), not CPU
+                        // work — unscaled by host speed and not accounted
+                        // as host busy time. Training programs never emit
+                        // this tag.
+                        r.host_time = r.host_time.max(*ns);
+                    } else {
+                        let cost = ns * r.host_scale;
+                        Self::host_busy(&mut self.host, rank, r.host_time, cost);
+                        r.host_time += cost;
+                    }
                     r.item_idx += 1;
                 }
                 DispatchItem::Kernel(_) => {

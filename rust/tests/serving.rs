@@ -1,0 +1,190 @@
+//! Serving-subsystem integration tests (ISSUE 6): arrival determinism,
+//! per-request latency invariants (TTFT ≤ e2e, TTFT > 0), offered-load
+//! sweep byte-identity between serial and parallel execution, the
+//! TraceIndex request columns, and a bootstrap golden that pins the
+//! paper-shaped TTFT/TPOT/p99, goodput-vs-load and energy-per-request
+//! numbers for a small seeded scenario.
+//!
+//! Golden contract: `rust/tests/golden/serving.json` is written on the
+//! first run (bootstrap) and byte-compared on every run after. Delete the
+//! file to intentionally re-baseline.
+
+use chopper::campaign;
+use chopper::chopper::{serving_latency, TraceIndex};
+use chopper::config::{
+    ArrivalProcess, LengthDist, ModelConfig, NodeSpec, ServingConfig, Topology,
+};
+use chopper::serve::{
+    generate_requests, percentile, run_serving, LatencySummary, ServingReport,
+};
+use chopper::sim::EngineParams;
+
+/// The small seeded scenario every test here shares (mirrors the
+/// serve-module unit tests, so failures triangulate).
+fn small_scfg() -> ServingConfig {
+    let mut s = ServingConfig::new(24.0, 16);
+    s.seed = 9;
+    s.prompt = LengthDist::lognormal(96, 0.5, 16, 512);
+    s.output = LengthDist::lognormal(24, 0.5, 2, 96);
+    s
+}
+
+fn mini() -> (Topology, ModelConfig) {
+    (
+        Topology::single(NodeSpec::mi300x_node()),
+        ModelConfig::mini(),
+    )
+}
+
+#[test]
+fn arrivals_are_deterministic_per_seed() {
+    let scfg = small_scfg();
+    let a = generate_requests(&scfg);
+    let b = generate_requests(&scfg);
+    assert_eq!(a.len(), scfg.num_requests as usize);
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.id, y.id);
+        assert_eq!(x.arrival_ns.to_bits(), y.arrival_ns.to_bits());
+        assert_eq!(x.prompt_tokens, y.prompt_tokens);
+        assert_eq!(x.output_tokens, y.output_tokens);
+    }
+    // Arrivals are an ordered open-loop stream with clamped lengths.
+    for w in a.windows(2) {
+        assert!(w[1].arrival_ns >= w[0].arrival_ns, "arrivals out of order");
+    }
+    for r in &a {
+        assert!((16..=512).contains(&r.prompt_tokens));
+        assert!((2..=96).contains(&r.output_tokens));
+    }
+    // A different seed draws a different stream.
+    let mut other = small_scfg();
+    other.seed = 10;
+    let c = generate_requests(&other);
+    assert!(
+        a.iter().zip(&c).any(|(x, y)| {
+            x.arrival_ns.to_bits() != y.arrival_ns.to_bits()
+                || x.prompt_tokens != y.prompt_tokens
+        }),
+        "seed change did not perturb the arrival stream"
+    );
+}
+
+#[test]
+fn ttft_is_positive_and_bounded_by_e2e_for_every_request() {
+    let (topo, cfg) = mini();
+    let out = run_serving(&topo, &cfg, &small_scfg(), EngineParams::default());
+    assert_eq!(out.latencies.len(), 16);
+    for l in &out.latencies {
+        assert!(l.ttft_ns > 0.0, "request {} has non-positive TTFT", l.id);
+        assert!(
+            l.ttft_ns <= l.e2e_ns,
+            "request {}: TTFT {} > e2e {}",
+            l.id,
+            l.ttft_ns,
+            l.e2e_ns
+        );
+        assert!(l.tpot_ns >= 0.0);
+        assert!(l.output_tokens >= 1);
+    }
+    // The report aggregates the same population.
+    let rep = &out.report;
+    assert_eq!(rep.num_requests, 16);
+    assert!(rep.ttft_ms.p50 <= rep.ttft_ms.p99);
+    assert!(rep.ttft_ms.p99 <= rep.ttft_ms.max);
+    assert!(rep.goodput_rps > 0.0 && rep.goodput_rps.is_finite());
+    assert!(rep.energy_per_request_j > 0.0);
+    assert!(rep.kv_peak_frac > 0.0 && rep.kv_peak_frac <= 1.0);
+}
+
+#[test]
+fn latency_helpers_exact_through_public_api() {
+    // Exact p50/p99 on known inputs (type-7 interpolation, total_cmp
+    // order) — the integration twin of the serve::metrics unit tests.
+    let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+    assert!((percentile(&xs, 0.50) - 50.5).abs() < 1e-12);
+    assert!((percentile(&xs, 0.99) - 99.01).abs() < 1e-9);
+    assert_eq!(percentile(&[], 0.5), 0.0);
+    assert_eq!(percentile(&[7.25], 0.99), 7.25);
+    let s = LatencySummary::of(&[2.0, 4.0, 6.0, 8.0]);
+    assert!((s.p50 - 5.0).abs() < 1e-12);
+    assert!((s.mean - 5.0).abs() < 1e-12);
+    assert_eq!(s.max, 8.0);
+    let empty = LatencySummary::of(&[]);
+    assert_eq!((empty.p50, empty.p99, empty.mean, empty.max), (0.0, 0.0, 0.0, 0.0));
+}
+
+#[test]
+fn qps_sweep_is_byte_identical_serial_vs_parallel() {
+    let (topo, cfg) = mini();
+    let sweep = [8.0, 24.0, 48.0];
+    let run_q = |q: f64| {
+        let mut s = small_scfg();
+        s.arrival = ArrivalProcess::Poisson { qps: q };
+        run_serving(&topo, &cfg, &s, EngineParams::default()).report
+    };
+    let serial: Vec<ServingReport> = campaign::run_ordered(&sweep, 1, |_, &q| run_q(q));
+    let parallel: Vec<ServingReport> = campaign::run_ordered(&sweep, 4, |_, &q| run_q(q));
+    assert_eq!(serial, parallel, "sweep diverged between jobs=1 and jobs=4");
+    for (a, b) in serial.iter().zip(&parallel) {
+        assert_eq!(a.to_json(), b.to_json(), "summary JSON diverged");
+    }
+    assert_eq!(
+        serving_latency(&serial).csv,
+        serving_latency(&parallel).csv,
+        "figure csv diverged"
+    );
+    // Offered load actually loads the system: makespan never shrinks when
+    // the same requests arrive faster, and tail TTFT is monotone-ish in
+    // load (p99 at the top of the sweep ≥ p99 at the bottom).
+    assert!(serial[0].makespan_s >= serial[2].makespan_s * 0.999);
+    assert!(serial[2].ttft_ms.p99 >= serial[0].ttft_ms.p99 * 0.999);
+}
+
+#[test]
+fn trace_index_carries_per_request_columns() {
+    let (topo, cfg) = mini();
+    let out = run_serving(&topo, &cfg, &small_scfg(), EngineParams::default());
+    let mut idx = TraceIndex::build(&out.trace);
+    idx.attach_requests(&out.schedule.records);
+    let col = idx.requests().expect("request columns attached");
+    assert_eq!(col.ids.len(), 16);
+    for i in 0..col.ids.len() {
+        assert!(col.ttft_ms[i] > 0.0);
+        assert!(col.ttft_ms[i] <= col.e2e_ms[i] + 1e-9);
+        let (s, e) = col.span_ns[i];
+        assert!(e > s, "request {} has an empty device span", col.ids[i]);
+    }
+}
+
+/// Bootstrap golden: pins TTFT/TPOT p50+p99, goodput-vs-offered-load and
+/// energy-per-request for the small seeded scenario at three loads. Any
+/// drift in the arrival model, batcher, engine clock or energy accounting
+/// shows up as a byte diff here.
+#[test]
+fn golden_pins_serving_numbers() {
+    let (topo, cfg) = mini();
+    let reports: Vec<ServingReport> = [8.0, 24.0, 48.0]
+        .iter()
+        .map(|&q| {
+            let mut s = small_scfg();
+            s.arrival = ArrivalProcess::Poisson { qps: q };
+            run_serving(&topo, &cfg, &s, EngineParams::default()).report
+        })
+        .collect();
+    let body: Vec<String> = reports.iter().map(|r| format!("  {}", r.to_json())).collect();
+    let json = format!("[\n{}\n]\n", body.join(",\n"));
+
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/rust/tests/golden/serving.json");
+    let dir = std::path::Path::new(path).parent().unwrap();
+    std::fs::create_dir_all(dir).expect("golden dir");
+    match std::fs::read_to_string(path) {
+        Ok(existing) => assert_eq!(
+            existing, json,
+            "serving golden drifted — delete {path} to re-baseline if intended"
+        ),
+        Err(_) => {
+            std::fs::write(path, &json).expect("bootstrap golden");
+            eprintln!("bootstrapped serving golden at {path}");
+        }
+    }
+}
