@@ -31,7 +31,11 @@ use std::path::{Path, PathBuf};
 /// v4: scenarios may carry a serving workload (`Scenario::serving`) and
 /// summaries grew the serving fields (`offered_qps`, `ttft_p99_ms`,
 /// `tpot_p99_ms`, `goodput_rps`, `energy_per_request_j`).
-pub const SCHEMA_VERSION: u32 = 4;
+///
+/// v5: engine parameters carry injected faults (`faults`) and summaries
+/// grew the fault/robustness fields (`faults`, `lost_ms`, `blocked_ms`,
+/// `status`).
+pub const SCHEMA_VERSION: u32 = 5;
 
 pub use crate::util::prng::fnv1a;
 
@@ -93,21 +97,37 @@ impl Cache {
     }
 
     /// Load a cached summary if one exists for exactly this fingerprint.
-    /// Corrupt or mismatched artifacts are treated as misses.
+    /// Corrupt or mismatched artifacts are treated as misses: an entry
+    /// that exists but fails to parse (truncated by a crash predating
+    /// atomic writes, or hand-edited) is logged and recomputed, never a
+    /// panic that takes the whole sweep down.
     pub fn load(&self, name: &str, fp: u64) -> Option<ScenarioSummary> {
         let path = self.path_for(name, fp);
-        let text = std::fs::read_to_string(path).ok()?;
-        let s = ScenarioSummary::from_json_str(&text).ok()?;
-        if s.fingerprint != fp {
-            return None;
+        let text = std::fs::read_to_string(&path).ok()?;
+        match ScenarioSummary::from_json_str(&text) {
+            Ok(s) if s.fingerprint == fp => Some(s),
+            Ok(_) => None,
+            Err(e) => {
+                eprintln!(
+                    "cache: corrupt entry {} ({e}); recomputing",
+                    path.display()
+                );
+                None
+            }
         }
-        Some(s)
     }
 
     /// Persist a summary; returns the artifact path.
+    ///
+    /// Crash-safe: the JSON is written to a `.tmp` sibling and renamed
+    /// into place, so a process killed mid-write can never leave a
+    /// truncated artifact under the final content-addressed name —
+    /// `campaign --resume` then sees either the complete entry or none.
     pub fn store(&self, s: &ScenarioSummary) -> io::Result<PathBuf> {
         let path = self.path_for(&s.name, s.fingerprint);
-        std::fs::write(&path, s.to_json_str())?;
+        let tmp = path.with_extension("json.tmp");
+        std::fs::write(&tmp, s.to_json_str())?;
+        std::fs::rename(&tmp, &path)?;
         Ok(path)
     }
 }
@@ -181,6 +201,46 @@ mod tests {
         assert!(cache.load("nope", 7).is_none());
         std::fs::write(cache.path_for("bad", 9), "{not json").unwrap();
         assert!(cache.load("bad", 9).is_none());
+        std::fs::remove_dir_all(cache.dir()).ok();
+    }
+
+    #[test]
+    fn store_is_atomic_and_leaves_no_tmp_sibling() {
+        let cache = Cache::open(tmpdir("atomic")).unwrap();
+        let mut s = ScenarioSummary::default();
+        s.name = "L2-b1s4-FSDPv1".into();
+        s.fingerprint = 0xABCD;
+        let path = cache.store(&s).unwrap();
+        assert!(path.exists());
+        // The rename consumed the temp sibling.
+        let leftovers: Vec<_> = std::fs::read_dir(cache.dir())
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| {
+                e.path().to_string_lossy().ends_with(".tmp")
+            })
+            .collect();
+        assert!(leftovers.is_empty(), "stray tmp files: {leftovers:?}");
+        let back = cache.load(&s.name, s.fingerprint).unwrap();
+        assert_eq!(back.name, s.name);
+        std::fs::remove_dir_all(cache.dir()).ok();
+    }
+
+    #[test]
+    fn truncated_entry_is_a_logged_miss_and_recoverable() {
+        let cache = Cache::open(tmpdir("trunc")).unwrap();
+        let mut s = ScenarioSummary::default();
+        s.name = "L2-b1s4-FSDPv1".into();
+        s.fingerprint = 0x1234;
+        let path = cache.store(&s).unwrap();
+        // Simulate a crash mid-write under a non-atomic scheme: truncate
+        // the artifact in place.
+        let full = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path, &full[..full.len() / 2]).unwrap();
+        assert!(cache.load(&s.name, s.fingerprint).is_none());
+        // A fresh store heals the entry.
+        cache.store(&s).unwrap();
+        assert!(cache.load(&s.name, s.fingerprint).is_some());
         std::fs::remove_dir_all(cache.dir()).ok();
     }
 }

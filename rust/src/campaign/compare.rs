@@ -352,6 +352,97 @@ pub fn campaign_serving(summaries: &[ScenarioSummary]) -> Figure {
     }
 }
 
+/// Fault/robustness comparison: one row per scenario that injected faults
+/// or failed outright, with Δ iteration time and Δ energy against the
+/// scenario's healthy sibling (the same grid point with the `-flt_` tag
+/// stripped), plus the time lost to restarts and the time ranks spent
+/// blocked on slower peers. Healthy `ok` rows serve only as baselines and
+/// are skipped; failed rows render with their status so a crashed
+/// scenario is visible in the report rather than silently absent.
+pub fn campaign_faults(summaries: &[ScenarioSummary]) -> Figure {
+    // Group key: the scenario identity with the fault tag stripped — the
+    // healthy sibling shares every other axis tag (and, by grid
+    // construction, every jitter draw).
+    let key = |s: &ScenarioSummary| -> String {
+        if s.faults.is_empty() {
+            s.name.clone()
+        } else {
+            s.name.replace(&format!("-flt_{}", s.faults), "")
+        }
+    };
+    // Baseline per group: the healthy (fault-less, ok) row if present,
+    // else the group's first row in grid order.
+    let mut base: std::collections::BTreeMap<_, (f64, f64)> =
+        std::collections::BTreeMap::new();
+    for s in summaries {
+        let k = key(s);
+        let e = base.entry(k).or_insert((s.iter_ms, s.energy_per_iter_j));
+        if s.faults.is_empty() && s.status == "ok" {
+            *e = (s.iter_ms, s.energy_per_iter_j);
+        }
+    }
+    let mut csv = String::from(
+        "scenario,faults,status,iter_ms,delta_iter_pct,energy_per_iter_j,\
+         delta_energy_pct,lost_ms,blocked_ms,tokens_per_j\n",
+    );
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    for s in summaries
+        .iter()
+        .filter(|s| !s.faults.is_empty() || s.status != "ok")
+    {
+        let (bi, be) = base[&key(s)];
+        let di = 100.0 * (s.iter_ms / bi.max(1e-9) - 1.0);
+        let de = 100.0 * (s.energy_per_iter_j / be.max(1e-9) - 1.0);
+        rows.push(vec![
+            s.name.clone(),
+            if s.faults.is_empty() {
+                "none".into()
+            } else {
+                s.faults.clone()
+            },
+            s.status.clone(),
+            format!("{:.2}", s.iter_ms),
+            format!("{di:+.1}%"),
+            format!("{:.1}", s.energy_per_iter_j),
+            format!("{de:+.1}%"),
+            format!("{:.2}", s.lost_ms),
+            format!("{:.2}", s.blocked_ms),
+            format!("{:.2}", s.tokens_per_j),
+        ]);
+        let _ = writeln!(
+            csv,
+            "{},{},{},{:.4},{:.2},{:.4},{:.2},{:.4},{:.4},{:.4}",
+            s.name,
+            s.faults,
+            s.status,
+            s.iter_ms,
+            di,
+            s.energy_per_iter_j,
+            de,
+            s.lost_ms,
+            s.blocked_ms,
+            s.tokens_per_j
+        );
+    }
+    let mut out = String::from(
+        "Campaign — fault injection (Δ vs each scenario's healthy sibling)\n\n",
+    );
+    out.push_str(&ascii::table(
+        &[
+            "scenario", "faults", "status", "iter ms", "Δiter", "J/iter",
+            "ΔJ", "lost ms", "blocked ms", "tok/J",
+        ],
+        &rows,
+    ));
+    Figure {
+        id: "campaign_faults",
+        title: "Campaign — fault injection comparison".into(),
+        ascii: out,
+        csv,
+        svg: None,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -390,6 +481,10 @@ mod tests {
             tpot_p99_ms: 0.0,
             goodput_rps: 0.0,
             energy_per_request_j: 0.0,
+            faults: String::new(),
+            lost_ms: 0.0,
+            blocked_ms: 0.0,
+            status: "ok".into(),
         }
     }
 
@@ -485,6 +580,34 @@ mod tests {
         let cols: Vec<&str> = base_row.split(',').collect();
         assert_eq!(cols[3], "0.00");
         assert_eq!(cols[5], "0.00");
+    }
+
+    #[test]
+    fn fault_table_deltas_vs_healthy_sibling_and_shows_failures() {
+        let healthy = fake("L2-b1s4-FSDPv1", 1000.0);
+        let mut strag = fake("L2-b1s4-FSDPv1-flt_strag_f0_8", 800.0);
+        strag.faults = "strag_f0_8".into();
+        strag.iter_ms = 12.5; // 25% slower than the healthy 10.0
+        strag.energy_per_iter_j = 70.0; // 25% more energy than 56.0
+        strag.lost_ms = 0.0;
+        strag.blocked_ms = 1.75;
+        let mut dead = fake("L2-b1s4-FSDPv1-flt_panic", 0.0);
+        dead.faults = "panic".into();
+        dead.status = "failed".into();
+        dead.iter_ms = 0.0;
+        let f = campaign_faults(&[healthy, strag, dead]);
+        assert_eq!(f.id, "campaign_faults");
+        // Healthy baseline row is skipped; fault + failed rows render.
+        assert_eq!(f.csv.lines().count(), 3);
+        let row = f.csv.lines().find(|l| l.contains("strag")).unwrap();
+        let cols: Vec<&str> = row.split(',').collect();
+        assert_eq!(cols[2], "ok");
+        let di: f64 = cols[4].parse().unwrap();
+        let de: f64 = cols[6].parse().unwrap();
+        assert!((di - 25.0).abs() < 1e-9, "Δiter {di}");
+        assert!((de - 25.0).abs() < 1e-9, "Δenergy {de}");
+        assert!(f.csv.contains("failed"));
+        assert!(f.ascii.contains("panic"));
     }
 
     #[test]

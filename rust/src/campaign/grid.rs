@@ -3,11 +3,12 @@
 //! named, seeded scenarios in a deterministic order.
 
 use crate::config::{
-    ArrivalProcess, FsdpVersion, ModelConfig, NicSpec, ServingConfig, Sharding,
-    WorkloadConfig,
+    ArrivalProcess, FaultSpec, FsdpVersion, ModelConfig, NicSpec,
+    ServingConfig, Sharding, WorkloadConfig,
 };
 use crate::sim::{EngineParams, GovernorKind};
 
+pub use crate::config::faults::parse_list_faults;
 pub use crate::sim::power::parse_list_governor;
 
 /// One fully specified simulation scenario — everything the engine needs,
@@ -149,6 +150,10 @@ pub struct GridSpec {
     /// Offered-load axis in requests/s (only meaningful with `serving`;
     /// empty = the base config's arrival process, unswept).
     pub qps: Vec<f64>,
+    /// Fault-injection axis: each entry is one fault *set*
+    /// (`config::faults`). Default `[[]]` = the healthy cluster with no
+    /// name tag; non-empty sets get a `-flt_<label>` tag.
+    pub faults: Vec<Vec<FaultSpec>>,
     pub iterations: u32,
     pub warmup: u32,
     /// Base seed; each scenario derives its own seed from this and its name.
@@ -175,6 +180,7 @@ impl GridSpec {
             governors: vec![GovernorKind::Reactive],
             serving: None,
             qps: Vec::new(),
+            faults: vec![Vec::new()],
             iterations,
             warmup,
             seed: 0xC0FFEE,
@@ -196,7 +202,8 @@ impl GridSpec {
                 self.qps.len().max(1)
             } else {
                 1
-            };
+            }
+            * self.faults.len().max(1);
         for (_, vals) in &self.ablations {
             n *= vals.len().max(1);
         }
@@ -229,6 +236,13 @@ impl GridSpec {
         } else {
             self.qps.iter().map(|&q| Some(Some(q))).collect()
         };
+        // Fault axis: empty list = the one healthy (empty) fault set.
+        let empty_set: Vec<FaultSpec> = Vec::new();
+        let fault_sets: Vec<&[FaultSpec]> = if self.faults.is_empty() {
+            vec![empty_set.as_slice()]
+        } else {
+            self.faults.iter().map(|f| f.as_slice()).collect()
+        };
         for &layers in &self.layers {
             for &batch in &self.batches {
                 for &seq in &self.seqs {
@@ -238,11 +252,13 @@ impl GridSpec {
                                 for &nic in &nics {
                                     for &gov in &self.governors {
                                         for &load in &loads {
-                                            self.expand_ablations(
-                                                layers, batch, seq, fsdp,
-                                                sharding, nodes, nic, gov,
-                                                load, &mut out,
-                                            );
+                                            for &fset in &fault_sets {
+                                                self.expand_ablations(
+                                                    layers, batch, seq, fsdp,
+                                                    sharding, nodes, nic, gov,
+                                                    load, fset, &mut out,
+                                                );
+                                            }
                                         }
                                     }
                                 }
@@ -267,6 +283,7 @@ impl GridSpec {
         nic_gbs: Option<f64>,
         governor: GovernorKind,
         load: Option<Option<f64>>,
+        fset: &[FaultSpec],
         out: &mut Vec<Scenario>,
     ) {
         // Odometer over the ablation axes (empty product = one scenario).
@@ -335,6 +352,17 @@ impl GridSpec {
                 name.push_str(&format!("-serve_q{tag}"));
                 scfg
             });
+            // The fault tag is appended *after* the seed is derived, the
+            // same rule as the governor/serving tags: fault siblings share
+            // every jitter draw with the healthy scenario of the same
+            // name, so a fault Δ measures the fault, not seed noise.
+            params.faults = fset.to_vec();
+            if !fset.is_empty() {
+                name.push_str(&format!(
+                    "-flt_{}",
+                    crate::config::faults::set_label(fset)
+                ));
+            }
             out.push(Scenario {
                 name,
                 model,
@@ -632,6 +660,43 @@ mod tests {
         for sc in GridSpec::paper(2, 2, 1).expand() {
             assert!(sc.serving.is_none());
             assert!(!sc.name.contains("serve_q"), "{}", sc.name);
+        }
+    }
+
+    #[test]
+    fn fault_axis_expands_and_tags_non_empty_only() {
+        let mut g = GridSpec::paper(2, 2, 1);
+        g.batches = vec![1];
+        g.seqs = vec![4096];
+        g.fsdp = vec![FsdpVersion::V1];
+        g.faults =
+            parse_list_faults("none;straggler(factor=0.8)+stalls(rate=0.02)")
+                .unwrap();
+        let scs = g.expand();
+        assert_eq!(scs.len(), g.len());
+        assert_eq!(scs.len(), 2);
+        // The healthy set keeps its legacy name (seed/cache-key
+        // stability); the faulted sibling is tagged.
+        assert!(scs.iter().any(|s| s.name == "L2-b1s4-FSDPv1"));
+        let tagged = scs
+            .iter()
+            .find(|s| s.name == "L2-b1s4-FSDPv1-flt_strag_f0_8+stall_p0_02_m500")
+            .unwrap_or_else(|| {
+                panic!(
+                    "missing tagged fault scenario, have: {:?}",
+                    scs.iter().map(|s| &s.name).collect::<Vec<_>>()
+                )
+            });
+        assert_eq!(tagged.params.faults.len(), 2);
+        // Fault siblings share the seed (the tag is excluded from the
+        // seed basis), so a fault delta measures the fault alone.
+        let base = scs.iter().find(|s| s.name == "L2-b1s4-FSDPv1").unwrap();
+        assert!(base.params.faults.is_empty());
+        assert_eq!(tagged.wl.seed, base.wl.seed);
+        // Default grids carry no fault tag at all.
+        for sc in GridSpec::paper(2, 2, 1).expand() {
+            assert!(!sc.name.contains("-flt_"), "{}", sc.name);
+            assert!(sc.params.faults.is_empty());
         }
     }
 

@@ -118,6 +118,62 @@ pub struct ScenarioSummary {
     pub goodput_rps: f64,
     /// Sampled energy divided by completed requests, joules.
     pub energy_per_request_j: f64,
+    /// Injected fault-set label ("" = healthy scenario; the fault block
+    /// below stays off the wire so healthy summary JSON keeps its
+    /// pre-fault bytes).
+    pub faults: String,
+    /// Wall-clock lost to GPU dropout + checkpoint-restart, ms.
+    pub lost_ms: f64,
+    /// Time ranks spent blocked at collectives waiting on slower peers
+    /// (straggler drag), summed over ranks and sampled iterations, ms.
+    pub blocked_ms: f64,
+    /// "ok", or "failed" when the scenario panicked and was isolated by
+    /// the runner (numeric columns are zero; the entry is not cached, so
+    /// `--resume` retries it).
+    pub status: String,
+}
+
+impl Default for ScenarioSummary {
+    fn default() -> Self {
+        Self {
+            name: String::new(),
+            fingerprint: 0,
+            label: String::new(),
+            fsdp: String::new(),
+            governor: "reactive".into(),
+            sharding: "FSDP".into(),
+            num_nodes: 1,
+            node_iter_ms: Vec::new(),
+            layers: 0,
+            batch: 0,
+            seq: 0,
+            tokens_per_sec: 0.0,
+            iter_ms: 0.0,
+            launch_ms: 0.0,
+            fwd_ms: 0.0,
+            bwd_ms: 0.0,
+            opt_ms: 0.0,
+            allgather_ms: 0.0,
+            reduce_scatter_ms: 0.0,
+            overlap_fa: 0.0,
+            freq_mhz: 0.0,
+            freq_loss: 0.0,
+            power_w: 0.0,
+            energy_per_iter_j: 0.0,
+            tokens_per_j: 0.0,
+            span_ms: 0.0,
+            events: 0,
+            offered_qps: 0.0,
+            ttft_p99_ms: 0.0,
+            tpot_p99_ms: 0.0,
+            goodput_rps: 0.0,
+            energy_per_request_j: 0.0,
+            faults: String::new(),
+            lost_ms: 0.0,
+            blocked_ms: 0.0,
+            status: "ok".into(),
+        }
+    }
 }
 
 fn num(j: &Json, k: &str) -> Result<f64, String> {
@@ -190,6 +246,17 @@ impl ScenarioSummary {
                 ),
             ]);
         }
+        // Fault/robustness fields serialize only on faulted or failed
+        // scenarios, so healthy summaries keep their pre-fault JSON bytes
+        // (same discipline as the topology and serving blocks above).
+        if !self.faults.is_empty() || self.status != "ok" {
+            fields.extend(vec![
+                ("faults", Json::str(self.faults.clone())),
+                ("lost_ms", Json::num(self.lost_ms)),
+                ("blocked_ms", Json::num(self.blocked_ms)),
+                ("status", Json::str(self.status.clone())),
+            ]);
+        }
         Json::obj(fields)
     }
 
@@ -238,6 +305,19 @@ impl ScenarioSummary {
         // is only written for serving scenarios).
         let serving_num =
             |k: &str| j.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0);
+        // Fault/robustness fields default to the healthy shape on
+        // pre-fault artifacts (the block is only written when faulted or
+        // failed).
+        let faults = j
+            .get("faults")
+            .and_then(|v| v.as_str())
+            .unwrap_or("")
+            .to_string();
+        let status = j
+            .get("status")
+            .and_then(|v| v.as_str())
+            .unwrap_or("ok")
+            .to_string();
         Ok(Self {
             name: text(j, "name")?,
             fingerprint,
@@ -271,6 +351,10 @@ impl ScenarioSummary {
             tpot_p99_ms: serving_num("tpot_p99_ms"),
             goodput_rps: serving_num("goodput_rps"),
             energy_per_request_j: serving_num("energy_per_request_j"),
+            faults,
+            lost_ms: serving_num("lost_ms"),
+            blocked_ms: serving_num("blocked_ms"),
+            status,
         })
     }
 
@@ -365,6 +449,16 @@ pub fn summarize(
         Vec::new()
     };
 
+    // Blocked-on-straggler drag is only materialized on faulted runs:
+    // healthy runs have (jitter-scale) blocked time too, but keeping the
+    // field at 0.0 there means cached and freshly-computed healthy
+    // summaries stay identical (the fault block is off the wire).
+    let blocked_ms = if trace.meta.faults.is_empty() {
+        0.0
+    } else {
+        finite(idx.blocked_on_straggler_ns() / 1e6)
+    };
+
     ScenarioSummary {
         name: sc.name.clone(),
         fingerprint: fp,
@@ -398,6 +492,10 @@ pub fn summarize(
         tpot_p99_ms: 0.0,
         goodput_rps: 0.0,
         energy_per_request_j: 0.0,
+        faults: trace.meta.faults.clone(),
+        lost_ms: finite(trace.meta.fault_lost_ns / 1e6),
+        blocked_ms,
+        status: "ok".into(),
     }
 }
 
@@ -464,6 +562,10 @@ pub fn summarize_serving(
         tpot_p99_ms: finite(rep.tpot_ms.p99),
         goodput_rps: finite(rep.goodput_rps),
         energy_per_request_j: finite(rep.energy_per_request_j),
+        faults: trace.meta.faults.clone(),
+        lost_ms: finite(trace.meta.fault_lost_ns / 1e6),
+        blocked_ms: 0.0,
+        status: "ok".into(),
     }
 }
 
@@ -486,6 +588,35 @@ pub struct CampaignOutcome {
     pub executed: usize,
     /// Scenarios served from the on-disk cache.
     pub cached: usize,
+    /// Scenarios that panicked and were isolated (status "failed").
+    pub failed: usize,
+}
+
+/// The placeholder summary of a scenario whose engine run panicked: name
+/// and grid coordinates survive (so the comparison tables keep their
+/// row), numeric columns are zero, and `status` is "failed". It is never
+/// written to the cache, so `campaign --resume` retries exactly these.
+fn failed_summary(sc: &Scenario, fp: u64) -> ScenarioSummary {
+    ScenarioSummary {
+        name: sc.name.clone(),
+        fingerprint: fp,
+        label: sc.wl.label(),
+        fsdp: sc.wl.fsdp.to_string(),
+        governor: sc.params.governor.name().to_string(),
+        sharding: sc.wl.sharding.to_string(),
+        num_nodes: sc.num_nodes as u64,
+        layers: sc.model.layers,
+        batch: sc.wl.batch,
+        seq: sc.wl.seq,
+        // "" = healthy, matching `TraceMeta::faults` on normal runs.
+        faults: if sc.params.faults.is_empty() {
+            String::new()
+        } else {
+            crate::config::faults::set_label(&sc.params.faults)
+        },
+        status: "failed".into(),
+        ..ScenarioSummary::default()
+    }
 }
 
 /// Run every scenario (parallel fan-out, grid-order results). With a cache,
@@ -503,6 +634,7 @@ pub fn run_campaign(
 ) -> CampaignOutcome {
     let executed = AtomicUsize::new(0);
     let cached = AtomicUsize::new(0);
+    let failed = AtomicUsize::new(0);
     let summaries = run_ordered(scenarios, jobs, |_, sc| {
         let fp = fingerprint(node, sc);
         if !force {
@@ -511,39 +643,58 @@ pub fn run_campaign(
                 return hit;
             }
         }
-        let topo = Topology {
-            node: node.clone(),
-            num_nodes: sc.num_nodes,
-            nic: sc.nic.clone(),
-        };
-        let summary = if let Some(scfg) = &sc.serving {
-            let out = crate::serve::run_serving(
-                &topo,
-                &sc.model,
-                scfg,
-                sc.params.clone(),
-            );
-            summarize_serving(node, sc, fp, &out)
-        } else {
-            let run = run_workload_topo_with(
-                &topo,
-                &sc.model,
-                &sc.wl,
-                sc.params.clone(),
-            );
-            summarize(node, sc, fp, &run)
-        };
-        if let Some(c) = cache {
-            // Best-effort: a failed write only costs a future re-run.
-            let _ = c.store(&summary);
+        // Per-scenario panic isolation: one scenario blowing up (an
+        // engine bug on some corner of the grid, or the deliberate
+        // `panic` fault) must not lose the rest of a long sweep. The
+        // closure only touches per-scenario state, so unwinding cannot
+        // leave shared state inconsistent (AssertUnwindSafe is sound).
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+            || {
+                let topo = Topology {
+                    node: node.clone(),
+                    num_nodes: sc.num_nodes,
+                    nic: sc.nic.clone(),
+                };
+                if let Some(scfg) = &sc.serving {
+                    let out = crate::serve::run_serving(
+                        &topo,
+                        &sc.model,
+                        scfg,
+                        sc.params.clone(),
+                    );
+                    summarize_serving(node, sc, fp, &out)
+                } else {
+                    let run = run_workload_topo_with(
+                        &topo,
+                        &sc.model,
+                        &sc.wl,
+                        sc.params.clone(),
+                    );
+                    summarize(node, sc, fp, &run)
+                }
+            },
+        ));
+        match result {
+            Ok(summary) => {
+                if let Some(c) = cache {
+                    // Best-effort: a failed write only costs a re-run.
+                    let _ = c.store(&summary);
+                }
+                executed.fetch_add(1, Ordering::Relaxed);
+                summary
+            }
+            Err(_) => {
+                // Deliberately not cached: `--resume` must retry it.
+                failed.fetch_add(1, Ordering::Relaxed);
+                failed_summary(sc, fp)
+            }
         }
-        executed.fetch_add(1, Ordering::Relaxed);
-        summary
     });
     CampaignOutcome {
         summaries,
         executed: executed.load(Ordering::Relaxed),
         cached: cached.load(Ordering::Relaxed),
+        failed: failed.load(Ordering::Relaxed),
     }
 }
 
@@ -603,6 +754,10 @@ mod tests {
             tpot_p99_ms: 0.0,
             goodput_rps: 0.0,
             energy_per_request_j: 0.0,
+            faults: String::new(),
+            lost_ms: 0.0,
+            blocked_ms: 0.0,
+            status: "ok".into(),
         };
         let back = ScenarioSummary::from_json_str(&s.to_json_str()).unwrap();
         assert_eq!(s, back);
@@ -612,6 +767,9 @@ mod tests {
         assert!(!s.to_json_str().contains("num_nodes"));
         // Training summaries carry no serving block at all.
         assert!(!s.to_json_str().contains("offered_qps"));
+        // Healthy summaries carry no fault/status block at all.
+        assert!(!s.to_json_str().contains("faults"));
+        assert!(!s.to_json_str().contains("status"));
         // Governor/energy fields are always on the wire (cached and fresh
         // campaigns must render identically).
         assert!(s.to_json_str().contains("\"governor\""));
@@ -643,6 +801,59 @@ mod tests {
         let back = ScenarioSummary::from_json_str(&j).unwrap();
         assert_eq!(v, back);
         assert_eq!(back.to_json_str(), j);
+
+        // Faulted summaries carry the fault block and round-trip too.
+        let mut f = s.clone();
+        f.faults = "strag_f0_8".into();
+        f.lost_ms = 12.5;
+        f.blocked_ms = 3.25;
+        let j = f.to_json_str();
+        assert!(j.contains("\"faults\""));
+        assert!(j.contains("lost_ms"));
+        assert!(j.contains("blocked_ms"));
+        let back = ScenarioSummary::from_json_str(&j).unwrap();
+        assert_eq!(f, back);
+        assert_eq!(back.to_json_str(), j);
+
+        // Failed summaries carry the block even with no declared faults.
+        let mut x = s.clone();
+        x.status = "failed".into();
+        let j = x.to_json_str();
+        assert!(j.contains("\"status\":\"failed\""));
+        let back = ScenarioSummary::from_json_str(&j).unwrap();
+        assert_eq!(x, back);
+    }
+
+    #[test]
+    fn run_campaign_isolates_a_panicking_scenario() {
+        use crate::campaign::grid::GridSpec;
+        use crate::config::FaultSpec;
+        let node = NodeSpec::mi300x_node();
+        let mut spec = GridSpec::paper(2, 2, 1);
+        spec.batches = vec![1];
+        spec.seqs = vec![4];
+        spec.fsdp = vec![crate::config::FsdpVersion::V1];
+        spec.faults = vec![vec![], vec![FaultSpec::Panic]];
+        let scenarios = spec.expand();
+        assert_eq!(scenarios.len(), 2);
+        for jobs in [1, 2] {
+            let out = run_campaign(&node, &scenarios, jobs, None, false);
+            assert_eq!(out.failed, 1);
+            assert_eq!(out.executed, 1);
+            let failed: Vec<_> = out
+                .summaries
+                .iter()
+                .filter(|s| s.status == "failed")
+                .collect();
+            assert_eq!(failed.len(), 1);
+            assert!(failed[0].name.contains("flt_panic"), "{}", failed[0].name);
+            assert_eq!(failed[0].iter_ms, 0.0);
+            // The healthy sibling still produced real numbers.
+            assert!(out
+                .summaries
+                .iter()
+                .any(|s| s.status == "ok" && s.iter_ms > 0.0));
+        }
     }
 
     #[test]

@@ -547,6 +547,36 @@ impl<'t> TraceIndex<'t> {
             .unwrap_or(&[])
     }
 
+    /// Time ranks spent blocked on a slower peer inside collectives (ns),
+    /// summed over sampled iterations. Comm events are grouped into
+    /// synchronized collective instances — the engine gives every rank of
+    /// one collective the same end time, so (end-time bits, op, layer,
+    /// iter) identifies an instance — and each rank's duration in excess
+    /// of the group's fastest rank counts as blocked. Healthy traces
+    /// report a small nonzero value too (compute jitter skews arrival);
+    /// campaign summaries surface it only for faulted runs, where a
+    /// straggler or degraded link dominates the skew.
+    pub fn blocked_on_straggler_ns(&self) -> f64 {
+        let warmup = self.trace.meta.warmup;
+        let mut groups: BTreeMap<(u64, OpRef, u32, u32), (f64, f64, u32)> =
+            BTreeMap::new();
+        for e in &self.trace.events {
+            if e.stream != Stream::Comm || e.iter < warmup {
+                continue;
+            }
+            let key =
+                (e.t_end.to_bits(), e.op, e.layer.unwrap_or(u32::MAX), e.iter);
+            let g = groups.entry(key).or_insert((f64::INFINITY, 0.0, 0));
+            g.0 = g.0.min(e.duration());
+            g.1 += e.duration();
+            g.2 += 1;
+        }
+        groups
+            .values()
+            .map(|&(min, sum, n)| sum - n as f64 * min)
+            .sum()
+    }
+
     // -- energy rollups -----------------------------------------------------
 
     /// Join a [`PowerTrace`] onto the index: per-(gpu, iter) and per-GPU
@@ -959,6 +989,19 @@ mod tests {
         let by_phase: f64 = idx.energy_by_phase().values().sum();
         assert!(by_phase > 0.0);
         assert!(by_phase <= total * (1.0 + 1e-9), "{by_phase} > {total}");
+    }
+
+    #[test]
+    fn blocked_on_straggler_is_finite_and_nonnegative() {
+        let t = trace();
+        let idx = TraceIndex::build(t);
+        let blocked = idx.blocked_on_straggler_ns();
+        assert!(blocked.is_finite());
+        // Per-group (sum − n·min) is ≥ 0 by construction, so the total is.
+        assert!(blocked >= 0.0, "{blocked}");
+        // An empty trace reports zero blocked time.
+        let empty = Trace::default();
+        assert_eq!(TraceIndex::build(&empty).blocked_on_straggler_ns(), 0.0);
     }
 
     #[test]

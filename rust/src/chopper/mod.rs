@@ -35,5 +35,6 @@ pub use overlap::{
 };
 pub use throughput::{throughput, Throughput};
 pub use whatif::{
-    PolicyOutcome, ServingPolicyOutcome, ServingWhatIfReport, WhatIfReport,
+    FaultOutcome, FaultWhatIfReport, PolicyOutcome, ServingPolicyOutcome,
+    ServingWhatIfReport, WhatIfReport,
 };

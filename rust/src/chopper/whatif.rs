@@ -313,6 +313,193 @@ pub fn replay_serving(
     ServingWhatIfReport { baseline, rows }
 }
 
+// ---------------------------------------------------------------------------
+// Fault replay (DESIGN.md §11): same counterfactual machinery, a fault
+// dimension instead of a policy dimension — "what does one straggler /
+// degraded link / dropout cost this workload?". The healthy (empty) fault
+// set is always replayed as the baseline referent.
+// ---------------------------------------------------------------------------
+
+/// One fault set's replay outcome. Deltas in percent vs the healthy
+/// (`none`) baseline row; `lost_ms` is checkpoint-restart time, `blocked_ms`
+/// the collective time ranks spent waiting on slower peers.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultOutcome {
+    /// Canonical fault-set label (`none` for the healthy baseline).
+    pub label: String,
+    /// Median per-iteration wall cost of the slowest GPU.
+    pub iter_ms: f64,
+    pub delta_iter_pct: f64,
+    /// Joules per sampled iteration, summed over every rank.
+    pub energy_per_iter_j: f64,
+    pub delta_energy_pct: f64,
+    /// Time lost to dropout + checkpoint-restart, ms.
+    pub lost_ms: f64,
+    /// Collective time spent blocked on slower peers, ms (sampled iters).
+    pub blocked_ms: f64,
+    pub tokens_per_sec: f64,
+    pub tokens_per_j: f64,
+}
+
+/// The ranked fault-impact report for one workload.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultWhatIfReport {
+    /// Outcomes ranked fastest-first (iteration time ascending, label
+    /// breaking exact ties). The `none` baseline is always present.
+    pub rows: Vec<FaultOutcome>,
+}
+
+impl FaultWhatIfReport {
+    pub fn row(&self, label: &str) -> Option<&FaultOutcome> {
+        self.rows.iter().find(|r| r.label == label)
+    }
+
+    /// The healthy baseline row.
+    pub fn baseline(&self) -> &FaultOutcome {
+        self.row("none").expect("healthy baseline was replayed")
+    }
+}
+
+/// Replay `wl` under every fault set in `fault_sets` (the healthy empty
+/// set is added automatically if absent, so deltas always have a referent)
+/// and rank the outcomes by iteration time. Fan-out and determinism
+/// contract match [`replay`]: each fault set's engine run draws the same
+/// base seed, so a fault row differs from the baseline only by the fault.
+pub fn replay_faults(
+    node: &NodeSpec,
+    cfg: &ModelConfig,
+    wl: &WorkloadConfig,
+    params: &EngineParams,
+    fault_sets: &[Vec<crate::config::FaultSpec>],
+    jobs: usize,
+) -> FaultWhatIfReport {
+    let mut sets: Vec<Vec<crate::config::FaultSpec>> = Vec::new();
+    if !fault_sets.iter().any(|s| s.is_empty()) {
+        sets.push(Vec::new());
+    }
+    for s in fault_sets {
+        if !sets.contains(s) {
+            sets.push(s.clone());
+        }
+    }
+
+    let mut rows = run_ordered(&sets, jobs, |_, set| {
+        let mut p = params.clone();
+        p.faults = set.clone();
+        let out = Engine::new(node, cfg, wl, p).run();
+        let idx = TraceIndex::build(&out.trace);
+        let tokens =
+            wl.tokens_per_iteration(out.trace.meta.num_gpus as u64) as f64;
+        let tp = throughput(&idx, tokens);
+        let sampled_iters =
+            wl.iterations.saturating_sub(wl.warmup).max(1) as f64;
+        let energy_per_iter_j =
+            out.power.sampled_energy_j(wl.warmup) / sampled_iters;
+        let tokens_per_j = if energy_per_iter_j > 0.0 {
+            tokens / energy_per_iter_j
+        } else {
+            0.0
+        };
+        let blocked_ms = if set.is_empty() {
+            0.0
+        } else {
+            finite(idx.blocked_on_straggler_ns() / 1e6)
+        };
+        FaultOutcome {
+            label: crate::config::faults::set_label(set),
+            iter_ms: finite(tp.iter_ns / 1e6),
+            delta_iter_pct: 0.0,
+            energy_per_iter_j: finite(energy_per_iter_j),
+            delta_energy_pct: 0.0,
+            lost_ms: finite(out.trace.meta.fault_lost_ns / 1e6),
+            blocked_ms,
+            tokens_per_sec: finite(tp.tokens_per_sec),
+            tokens_per_j: finite(tokens_per_j),
+        }
+    });
+
+    rows.sort_by(|a, b| {
+        a.iter_ms
+            .total_cmp(&b.iter_ms)
+            .then_with(|| a.label.cmp(&b.label))
+    });
+
+    let (base_iter, base_energy) = rows
+        .iter()
+        .find(|r| r.label == "none")
+        .map(|r| (r.iter_ms, r.energy_per_iter_j))
+        .expect("healthy baseline was replayed");
+    for r in &mut rows {
+        r.delta_iter_pct = 100.0 * (r.iter_ms / base_iter.max(1e-12) - 1.0);
+        r.delta_energy_pct =
+            100.0 * (r.energy_per_iter_j / base_energy.max(1e-12) - 1.0);
+    }
+
+    FaultWhatIfReport { rows }
+}
+
+/// Render the fault-impact report (the robustness sibling of [`render`]).
+pub fn render_faults(report: &FaultWhatIfReport) -> Figure {
+    let mut csv = String::from(
+        "rank,faults,iter_ms,delta_iter_pct,energy_per_iter_j,\
+         delta_energy_pct,lost_ms,blocked_ms,tokens_per_sec,tokens_per_j\n",
+    );
+    let mut rows: Vec<Vec<String>> = Vec::with_capacity(report.rows.len());
+    for (rank, r) in report.rows.iter().enumerate() {
+        rows.push(vec![
+            format!("{}", rank + 1),
+            r.label.clone(),
+            format!("{:.2}", r.iter_ms),
+            format!("{:+.1}%", r.delta_iter_pct),
+            format!("{:.1}", r.energy_per_iter_j),
+            format!("{:+.1}%", r.delta_energy_pct),
+            format!("{:.2}", r.lost_ms),
+            format!("{:.2}", r.blocked_ms),
+            format!("{:.0}", r.tokens_per_sec),
+            format!("{:.2}", r.tokens_per_j),
+        ]);
+        let _ = writeln!(
+            csv,
+            "{},{},{:.4},{:.2},{:.4},{:.2},{:.4},{:.4},{:.2},{:.4}",
+            rank + 1,
+            r.label,
+            r.iter_ms,
+            r.delta_iter_pct,
+            r.energy_per_iter_j,
+            r.delta_energy_pct,
+            r.lost_ms,
+            r.blocked_ms,
+            r.tokens_per_sec,
+            r.tokens_per_j
+        );
+    }
+    let mut out = String::from(
+        "What-if — fault injection replay (Δ vs healthy `none` baseline)\n\n",
+    );
+    out.push_str(&ascii::table(
+        &[
+            "#", "faults", "iter ms", "Δiter", "J/iter", "ΔJ", "lost ms",
+            "blocked ms", "tok/s", "tok/J",
+        ],
+        &rows,
+    ));
+    let worst = report.rows.last().expect("report has rows");
+    let _ = write!(
+        out,
+        "\n  worst case: {} ({:+.1}% iteration time, {:+.1}% energy, \
+         {:.2} ms lost to restarts)\n",
+        worst.label, worst.delta_iter_pct, worst.delta_energy_pct,
+        worst.lost_ms
+    );
+    Figure {
+        id: "whatif_faults",
+        title: "What-if — fault injection replay".into(),
+        ascii: out,
+        csv,
+        svg: None,
+    }
+}
+
 /// Render the serving advisor report (the serving sibling of [`render`]).
 pub fn render_serving(report: &ServingWhatIfReport) -> Figure {
     let mut csv = String::from(
@@ -605,6 +792,58 @@ mod tests {
         }
         // The cheapest row can never be dominated.
         assert!(r.cheapest().frontier);
+    }
+
+    #[test]
+    fn fault_replay_adds_baseline_and_ranks_by_iter_time() {
+        use crate::config::FaultSpec;
+        let (node, cfg, wl) = small();
+        let p = EngineParams::default();
+        let sets = vec![vec![FaultSpec::Straggler {
+            rank: Some(0),
+            factor: 0.7,
+        }]];
+        let r = replay_faults(&node, &cfg, &wl, &p, &sets, 1);
+        // The healthy baseline was added automatically.
+        assert_eq!(r.rows.len(), 2);
+        let base = r.baseline();
+        assert_eq!(base.delta_iter_pct, 0.0);
+        assert_eq!(base.delta_energy_pct, 0.0);
+        assert_eq!(base.blocked_ms, 0.0);
+        // A 0.7× straggler makes iteration time strictly worse.
+        let strag = r.row("strag_f0_7").unwrap();
+        assert!(strag.iter_ms > base.iter_ms, "{} vs {}", strag.iter_ms, base.iter_ms);
+        assert!(strag.delta_iter_pct > 0.0);
+        assert!(strag.blocked_ms > 0.0, "straggler shows no blocked time");
+        // Ranked ascending: the baseline is row 0.
+        assert_eq!(r.rows[0].label, "none");
+    }
+
+    #[test]
+    fn fault_replay_parallel_matches_serial_and_renders() {
+        use crate::config::FaultSpec;
+        let (node, cfg, wl) = small();
+        let p = EngineParams::default();
+        let sets = vec![
+            Vec::new(),
+            vec![FaultSpec::Straggler {
+                rank: Some(1),
+                factor: 0.8,
+            }],
+            vec![FaultSpec::Stalls {
+                rate: 0.05,
+                mean_us: 200.0,
+            }],
+        ];
+        let serial = replay_faults(&node, &cfg, &wl, &p, &sets, 1);
+        let parallel = replay_faults(&node, &cfg, &wl, &p, &sets, 4);
+        assert_eq!(serial, parallel);
+        let f = render_faults(&serial);
+        assert_eq!(f.id, "whatif_faults");
+        assert_eq!(f.csv, render_faults(&parallel).csv);
+        assert!(f.csv.contains("none"));
+        assert!(f.csv.contains("strag_f0_8"));
+        assert!(f.ascii.contains("worst case"));
     }
 
     #[test]

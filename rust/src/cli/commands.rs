@@ -5,7 +5,8 @@ use crate::chopper::report;
 use crate::chopper::{CpuUtilAnalysis, Filter};
 use crate::cli::Args;
 use crate::config::{
-    FsdpVersion, ModelConfig, NodeSpec, Sharding, Topology, WorkloadConfig,
+    FaultSpec, FsdpVersion, ModelConfig, NodeSpec, Sharding, Topology,
+    WorkloadConfig,
 };
 use crate::sim::run_workload_topo;
 use crate::trace::chrome;
@@ -26,18 +27,28 @@ USAGE: chopper <subcommand> [options]
            [--nic-gbs 50,12.5] [--governor reactive,fixed_cap,det_aware,oracle]
            [--workload training|serving] [--qps 4,8,16] [--requests N]
            [--iters N] [--warmup N] [--seed N]
-           [--ablate knob=v1,v2[;knob2=...]] [--jobs N] [--cache-dir DIR]
-           [--force] [--no-cache] [--out DIR]
+           [--ablate knob=v1,v2[;knob2=...]]
+           [--faults 'none;straggler(factor=0.8)+stalls(rate=0.02)']
+           [--jobs N] [--cache-dir DIR] [--force] [--no-cache] [--resume]
+           [--out DIR]
            Expand the scenario grid (model × workload × topology ×
-           governor policy × engine-parameter ablations), fan scenarios
-           out over worker threads, reuse cached results, and print
-           cross-scenario comparison tables incl. energy columns (plus
-           per-node rollups on multi-node grids, a cross-policy
-           energy/perf table on --governor grids, and a latency/goodput
-           table on --workload serving grids with a --qps axis).
+           governor policy × engine-parameter ablations × injected fault
+           sets), fan scenarios out over worker threads, reuse cached
+           results, and print cross-scenario comparison tables incl.
+           energy columns (plus per-node rollups on multi-node grids, a
+           cross-policy energy/perf table on --governor grids, a
+           latency/goodput table on --workload serving grids with a --qps
+           axis, and a fault-impact table on --faults grids). A scenario
+           that panics is isolated: marked `failed`, the sweep continues,
+           and --resume retries exactly the missing/failed scenarios of an
+           interrupted or partly-failed campaign from the cache.
            Knobs: spin_penalty transfer_penalty comm_stretch rank_jitter
            compute_jitter dispatch_jitter comm_delay_sigma_ns
            far_rank_delay_ns dvfs_window_ns margin_k fixed_cap_ratio.
+           Faults: straggler(rank,factor) linkdown(node,bw)
+           stalls(rate,mean_us) dropout(rank,at_ms,restart_ms) panic;
+           sets separated by `;`, faults within a set joined by `+`,
+           `none` = healthy baseline.
   serve    [--qps 4,8,16] [--requests N] [--layers N] [--nodes N]
            [--max-batch N] [--prefill-chunk N] [--kv-frac 0.30]
            [--slo-ttft-ms 200] [--seed N] [--jobs N] [--out DIR]
@@ -47,13 +58,17 @@ USAGE: chopper <subcommand> [options]
            energy per request) plus serving_summary.json.
   whatif   [--workload b2s4|serving] [--fsdp v1|v2] [--layers N] [--iters N]
            [--warmup N] [--governor reactive,fixed_cap,det_aware,oracle]
-           [--cap-ratio 0.7] [--jobs N] [--out DIR]
+           [--cap-ratio 0.7] [--faults SETS] [--jobs N] [--out DIR]
            Replay one workload under a set of power-management policies
            and print the ranked advisor report: Δ iteration time,
            Δ energy, and the perf-per-watt (time × energy) frontier.
            With --workload serving ([--qps X] [--requests N] [--seed N]),
            policies are ranked by joules per request alongside
            tokens-per-joule, p99 latency and goodput.
+           With --faults (same grammar as campaign; training only), the
+           dimension is injected fault sets instead of policies: each set
+           replays against the healthy `none` baseline with Δ iteration
+           time, Δ energy, restart-lost and blocked-on-straggler time.
   figure   <table2|fig4..fig15|all> [--layers N] [--iters N] [--out DIR]
            Regenerate one figure; prints the ASCII rendering.
   collect  [--workload b2s4] [--fsdp v1|v2] [--nodes N] [--sharding
@@ -144,12 +159,26 @@ pub fn cmd_campaign(args: &mut Args) -> Result<(), String> {
         Some(s) => grid::parse_ablations(&s)?,
         None => Vec::new(),
     };
+    let faults = match args.flag("faults") {
+        Some(s) => grid::parse_list_faults(&s)?,
+        None => Vec::new(),
+    };
     let jobs = args.flag_u32("jobs", campaign::default_jobs() as u32)? as usize;
     let cache_dir: PathBuf = args.flag_or("cache-dir", ".chopper-cache").into();
     let force = args.switch("force");
     let no_cache = args.switch("no-cache");
+    let resume = args.switch("resume");
     let out = args.flag("out").map(PathBuf::from);
     args.finish()?;
+    if resume && no_cache {
+        return Err("campaign: --resume needs the cache (drop --no-cache)".into());
+    }
+    if resume && force {
+        return Err(
+            "campaign: --resume conflicts with --force (resume reuses, force re-runs)"
+                .into(),
+        );
+    }
 
     let mut spec = GridSpec::paper(2, iters, warmup);
     spec.layers = layers;
@@ -162,6 +191,9 @@ pub fn cmd_campaign(args: &mut Args) -> Result<(), String> {
     spec.governors = governors;
     spec.seed = seed;
     spec.ablations = ablations;
+    if !faults.is_empty() {
+        spec.faults = faults;
+    }
     match workload.as_str() {
         "training" => {
             if !qps.is_empty() {
@@ -205,6 +237,21 @@ pub fn cmd_campaign(args: &mut Args) -> Result<(), String> {
         if no_cache { "off".to_string() } else { cache_dir.display().to_string() },
     );
     let node = NodeSpec::mi300x_node();
+    if resume {
+        // Pre-scan so an interrupted campaign says up front how much of
+        // the grid survives (the run itself reuses the same cache hits).
+        let c = cache.as_ref().expect("resume implies cache");
+        let done = scenarios
+            .iter()
+            .filter(|sc| {
+                c.load(&sc.name, campaign::fingerprint(&node, sc)).is_some()
+            })
+            .count();
+        eprintln!(
+            "campaign: resuming — {done} of {} scenarios already cached",
+            scenarios.len()
+        );
+    }
     let t0 = std::time::Instant::now();
     let outcome =
         campaign::run_campaign(&node, &scenarios, jobs, cache.as_ref(), force);
@@ -214,6 +261,13 @@ pub fn cmd_campaign(args: &mut Args) -> Result<(), String> {
         outcome.cached,
         t0.elapsed().as_secs_f64()
     );
+    if outcome.failed > 0 {
+        eprintln!(
+            "campaign: {} scenario(s) failed and were isolated (not cached; \
+             re-run with --resume to retry them)",
+            outcome.failed
+        );
+    }
     let mut figs = vec![
         campaign::campaign_table(&outcome.summaries),
         campaign::campaign_breakdown(&outcome.summaries),
@@ -229,6 +283,15 @@ pub fn cmd_campaign(args: &mut Args) -> Result<(), String> {
     // Latency/goodput/energy table on serving grids.
     if outcome.summaries.iter().any(|s| s.offered_qps > 0.0) {
         figs.push(campaign::campaign_serving(&outcome.summaries));
+    }
+    // Fault-impact table when the grid injected faults or a scenario
+    // failed (a crash must be visible in the report, not just stderr).
+    if outcome
+        .summaries
+        .iter()
+        .any(|s| !s.faults.is_empty() || s.status != "ok")
+    {
+        figs.push(campaign::campaign_faults(&outcome.summaries));
     }
     for f in &figs {
         println!("{}", f.ascii);
@@ -254,9 +317,31 @@ pub fn cmd_whatif(args: &mut Args) -> Result<(), String> {
         &args.flag_or("governor", "reactive,fixed_cap,det_aware,oracle"),
     )?;
     let cap_ratio = args.flag_f64("cap-ratio", 0.7)?;
+    let fault_sets = match args.flag("faults") {
+        Some(s) => Some(crate::config::parse_list_faults(&s)?),
+        None => None,
+    };
+    if let Some(sets) = &fault_sets {
+        // The `panic` fault exists to exercise the campaign runner's
+        // isolation; a direct replay has nothing to catch it with.
+        if sets.iter().flatten().any(|f| matches!(f, FaultSpec::Panic)) {
+            return Err(
+                "whatif: the `panic` fault is a campaign-runner test hook \
+                 (use it under `chopper campaign`)"
+                    .into(),
+            );
+        }
+    }
     let jobs = args.flag_u32("jobs", campaign::default_jobs() as u32)? as usize;
     let out = args.flag("out").map(PathBuf::from);
     if label == "serving" {
+        if fault_sets.is_some() {
+            return Err(
+                "whatif: --faults replays a training workload (drop \
+                 --workload serving)"
+                    .into(),
+            );
+        }
         // Serving replay: rank the policies by joules per request.
         let qps = args.flag_f64("qps", 8.0)?;
         let requests = args.flag_u32("requests", 32)?;
@@ -310,6 +395,27 @@ pub fn cmd_whatif(args: &mut Args) -> Result<(), String> {
     let mut params = crate::sim::EngineParams::default();
     params.fixed_cap_ratio = cap_ratio;
     let node = NodeSpec::mi300x_node();
+    if let Some(sets) = &fault_sets {
+        // Fault dimension: replay the identical workload per fault set
+        // against the always-present healthy baseline.
+        eprintln!(
+            "whatif: {} × {} layers × {iters} iters under {} fault set(s), \
+             {jobs} worker(s)…",
+            wl.label_with_fsdp(),
+            cfg.layers,
+            sets.len()
+        );
+        let report = crate::chopper::whatif::replay_faults(
+            &node, &cfg, &wl, &params, sets, jobs,
+        );
+        let fig = crate::chopper::whatif::render_faults(&report);
+        println!("{}", fig.ascii);
+        if let Some(dir) = &out {
+            fig.save(dir).map_err(|e| e.to_string())?;
+            eprintln!("wrote {}/{}.{{txt,csv}}", dir.display(), fig.id);
+        }
+        return Ok(());
+    }
     eprintln!(
         "whatif: {} × {} layers × {iters} iters under {} policies, {jobs} worker(s)…",
         wl.label_with_fsdp(),
@@ -806,6 +912,73 @@ mod tests {
         );
         assert_eq!(
             run_cli("chopper whatif --workload serving --qps -3"),
+            1
+        );
+    }
+
+    #[test]
+    fn campaign_accepts_fault_axis_and_survives_panics() {
+        // A `panic` fault set is isolated by the runner: exit stays 0 and
+        // the healthy sibling still renders.
+        assert_eq!(
+            run_cli(
+                "chopper campaign --layers 1 --batch 1 --seq 4 --fsdp v1 \
+                 --faults none;straggler(factor=0.8);panic --iters 2 \
+                 --warmup 1 --jobs 2 --no-cache"
+            ),
+            0
+        );
+        assert_eq!(
+            run_cli("chopper campaign --no-cache --faults meteor --iters 2"),
+            1
+        );
+    }
+
+    #[test]
+    fn campaign_resume_validates_flag_combinations() {
+        assert_eq!(
+            run_cli("chopper campaign --resume --no-cache --iters 2"),
+            1
+        );
+        assert_eq!(run_cli("chopper campaign --resume --force --iters 2"), 1);
+        let dir = std::env::temp_dir()
+            .join(format!("chopper_cli_resume_{}", std::process::id()));
+        let cache = dir.join("cache");
+        // Warm the cache, then resume: the pre-scan finds everything.
+        let base = format!(
+            "chopper campaign --layers 1 --batch 1 --seq 4 --fsdp v1 \
+             --iters 2 --warmup 1 --jobs 1 --cache-dir {}",
+            cache.display()
+        );
+        assert_eq!(run_cli(&base), 0);
+        assert_eq!(run_cli(&format!("{base} --resume")), 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn whatif_fault_replay_runs_and_rejects_bad_combos() {
+        assert_eq!(
+            run_cli(
+                "chopper whatif --workload b1s4 --layers 1 --iters 2 \
+                 --warmup 1 --faults straggler(factor=0.8) --jobs 2"
+            ),
+            0
+        );
+        // The panic fault only means something under the campaign runner.
+        assert_eq!(
+            run_cli("chopper whatif --layers 1 --iters 2 --faults panic"),
+            1
+        );
+        // Fault replay is training-only.
+        assert_eq!(
+            run_cli(
+                "chopper whatif --workload serving --qps 8 --requests 4 \
+                 --faults straggler"
+            ),
+            1
+        );
+        assert_eq!(
+            run_cli("chopper whatif --layers 1 --iters 2 --faults meteor"),
             1
         );
     }

@@ -1,0 +1,393 @@
+//! Fault-injection declarations: what can go wrong in a simulated run.
+//!
+//! A [`FaultSpec`] names one injected fault; a scenario carries a list of
+//! them (`EngineParams::faults`). The specs are pure *declarations* — all
+//! randomness (which rank straggles, when a stall fires) is derived by
+//! `sim::faults` from `(seed, "fault<idx>")` substreams, so the same
+//! `(config, seed)` always replays the same failures and the empty list
+//! reproduces the healthy pipeline byte for byte.
+//!
+//! CLI grammar (campaign `--faults`, `whatif --faults`):
+//!
+//! ```text
+//! set      := "none" | fault ("+" fault)*
+//! sets     := set (";" set)*
+//! fault    := kind | kind "(" key "=" value ("," key "=" value)* ")"
+//! ```
+//!
+//! e.g. `--faults 'none;straggler(factor=0.8)+stalls(rate=0.02)'` sweeps
+//! the healthy baseline against a straggler-plus-ECC-stall scenario.
+
+use std::fmt;
+
+/// One declared fault. Optional ranks/nodes (`None`) are resolved
+/// deterministically by the fault model from the fault's seeded substream.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FaultSpec {
+    /// A persistently slow rank: its compute throughput is multiplied by
+    /// `factor` (< 1.0 = slower) for the whole run.
+    Straggler { rank: Option<u32>, factor: f64 },
+    /// A degraded link on one node: every collective whose rendezvous
+    /// group touches that node pays `1/bw` extra transfer time (`bw` is
+    /// the remaining bandwidth fraction of the slow xGMI/NIC link).
+    LinkDown { node: Option<u32>, bw: f64 },
+    /// Transient ECC-retry-style stalls: each kernel start stalls with
+    /// probability `rate`, for an exponentially distributed `mean_us`.
+    Stalls { rate: f64, mean_us: f64 },
+    /// GPU dropout: a rank dies at `at_ms`; the schedule replays from the
+    /// last checkpoint boundary (iteration start) plus `restart_ms` of
+    /// restart cost. Time lost to the failure is reported first-class.
+    Dropout {
+        rank: Option<u32>,
+        at_ms: f64,
+        restart_ms: f64,
+    },
+    /// Deliberate engine panic at model-build time — a test hook for the
+    /// campaign runner's per-scenario panic isolation. Only meaningful
+    /// under `chopper campaign` (which catches it and marks the scenario
+    /// `failed`); rejected by `chopper whatif`.
+    Panic,
+}
+
+impl FaultSpec {
+    /// The grammar keyword of this fault kind.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            FaultSpec::Straggler { .. } => "straggler",
+            FaultSpec::LinkDown { .. } => "linkdown",
+            FaultSpec::Stalls { .. } => "stalls",
+            FaultSpec::Dropout { .. } => "dropout",
+            FaultSpec::Panic => "panic",
+        }
+    }
+
+    /// Compact filesystem-safe label (scenario-name tag material):
+    /// `strag_f0_8`, `link_n1_b0_5`, `stall_p0_01_m500`, `drop_a50_rs250`.
+    pub fn label(&self) -> String {
+        fn num(v: f64) -> String {
+            format!("{v}").replace('.', "_").replace('-', "m")
+        }
+        match self {
+            FaultSpec::Straggler { rank, factor } => {
+                let mut s = String::from("strag");
+                if let Some(r) = rank {
+                    s.push_str(&format!("_r{r}"));
+                }
+                s.push_str(&format!("_f{}", num(*factor)));
+                s
+            }
+            FaultSpec::LinkDown { node, bw } => {
+                let mut s = String::from("link");
+                if let Some(n) = node {
+                    s.push_str(&format!("_n{n}"));
+                }
+                s.push_str(&format!("_b{}", num(*bw)));
+                s
+            }
+            FaultSpec::Stalls { rate, mean_us } => {
+                format!("stall_p{}_m{}", num(*rate), num(*mean_us))
+            }
+            FaultSpec::Dropout {
+                rank,
+                at_ms,
+                restart_ms,
+            } => {
+                let mut s = String::from("drop");
+                if let Some(r) = rank {
+                    s.push_str(&format!("_r{r}"));
+                }
+                s.push_str(&format!("_a{}_rs{}", num(*at_ms), num(*restart_ms)));
+                s
+            }
+            FaultSpec::Panic => "panic".into(),
+        }
+    }
+}
+
+impl fmt::Display for FaultSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.label())
+    }
+}
+
+/// Compact label of a whole fault set (`+`-joined; "none" when empty) —
+/// the scenario-name tag and `TraceMeta::faults` value.
+pub fn set_label(faults: &[FaultSpec]) -> String {
+    if faults.is_empty() {
+        return "none".into();
+    }
+    faults
+        .iter()
+        .map(|f| f.label())
+        .collect::<Vec<_>>()
+        .join("+")
+}
+
+fn parse_kv(body: &str, fault: &str) -> Result<Vec<(String, f64)>, String> {
+    let mut out = Vec::new();
+    for part in body.split(',').filter(|p| !p.trim().is_empty()) {
+        let (k, v) = part.split_once('=').ok_or_else(|| {
+            format!("bad fault parameter `{part}` in `{fault}` (want key=value)")
+        })?;
+        let val: f64 = v.trim().parse().map_err(|_| {
+            format!("bad value `{}` for `{}` in `{fault}`", v.trim(), k.trim())
+        })?;
+        out.push((k.trim().to_string(), val));
+    }
+    Ok(out)
+}
+
+fn take(
+    kvs: &mut Vec<(String, f64)>,
+    key: &str,
+) -> Option<f64> {
+    let pos = kvs.iter().position(|(k, _)| k == key)?;
+    Some(kvs.remove(pos).1)
+}
+
+fn reject_leftovers(
+    kvs: &[(String, f64)],
+    fault: &str,
+    known: &[&str],
+) -> Result<(), String> {
+    if let Some((k, _)) = kvs.first() {
+        return Err(format!(
+            "unknown key `{k}` in fault `{fault}` (have: {})",
+            known.join(", ")
+        ));
+    }
+    Ok(())
+}
+
+/// Parse one fault: `kind` or `kind(key=value,...)`. Ranks/nodes are u32;
+/// every numeric parameter is validated into its sane range so a typo'd
+/// flag errors here, not as a NaN three layers down.
+pub fn parse_fault(s: &str) -> Result<FaultSpec, String> {
+    let s = s.trim();
+    let (kind, body) = match s.split_once('(') {
+        Some((k, rest)) => {
+            let body = rest
+                .strip_suffix(')')
+                .ok_or_else(|| format!("bad fault `{s}` (missing `)`)"))?;
+            (k.trim(), body)
+        }
+        None => (s, ""),
+    };
+    let mut kvs = parse_kv(body, s)?;
+    let as_rank = |v: f64, key: &str| -> Result<u32, String> {
+        if v.is_finite() && v >= 0.0 && v.fract() == 0.0 && v <= u32::MAX as f64
+        {
+            Ok(v as u32)
+        } else {
+            Err(format!("bad value `{v}` for `{key}` in `{s}` (want integer)"))
+        }
+    };
+    let spec = match kind {
+        "straggler" | "strag" => {
+            let rank = take(&mut kvs, "rank")
+                .map(|v| as_rank(v, "rank"))
+                .transpose()?;
+            let factor = take(&mut kvs, "factor").unwrap_or(0.8);
+            if !(factor > 0.0 && factor <= 1.0) {
+                return Err(format!(
+                    "bad value `{factor}` for `factor` in `{s}` (want 0 < f <= 1)"
+                ));
+            }
+            reject_leftovers(&kvs, s, &["rank", "factor"])?;
+            FaultSpec::Straggler { rank, factor }
+        }
+        "linkdown" | "link" => {
+            let node = take(&mut kvs, "node")
+                .map(|v| as_rank(v, "node"))
+                .transpose()?;
+            let bw = take(&mut kvs, "bw").unwrap_or(0.5);
+            if !(bw > 0.0 && bw <= 1.0) {
+                return Err(format!(
+                    "bad value `{bw}` for `bw` in `{s}` (want 0 < bw <= 1)"
+                ));
+            }
+            reject_leftovers(&kvs, s, &["node", "bw"])?;
+            FaultSpec::LinkDown { node, bw }
+        }
+        "stalls" | "stall" => {
+            let rate = take(&mut kvs, "rate").unwrap_or(0.01);
+            let mean_us = take(&mut kvs, "mean_us").unwrap_or(500.0);
+            if !(rate >= 0.0 && rate <= 1.0) {
+                return Err(format!(
+                    "bad value `{rate}` for `rate` in `{s}` (want 0 <= p <= 1)"
+                ));
+            }
+            if !(mean_us > 0.0 && mean_us.is_finite()) {
+                return Err(format!(
+                    "bad value `{mean_us}` for `mean_us` in `{s}` (want > 0)"
+                ));
+            }
+            reject_leftovers(&kvs, s, &["rate", "mean_us"])?;
+            FaultSpec::Stalls { rate, mean_us }
+        }
+        "dropout" | "drop" => {
+            let rank = take(&mut kvs, "rank")
+                .map(|v| as_rank(v, "rank"))
+                .transpose()?;
+            let at_ms = take(&mut kvs, "at_ms").unwrap_or(50.0);
+            let restart_ms = take(&mut kvs, "restart_ms").unwrap_or(250.0);
+            for (key, v) in [("at_ms", at_ms), ("restart_ms", restart_ms)] {
+                if !(v >= 0.0 && v.is_finite()) {
+                    return Err(format!(
+                        "bad value `{v}` for `{key}` in `{s}` (want >= 0)"
+                    ));
+                }
+            }
+            reject_leftovers(&kvs, s, &["rank", "at_ms", "restart_ms"])?;
+            FaultSpec::Dropout {
+                rank,
+                at_ms,
+                restart_ms,
+            }
+        }
+        "panic" => {
+            reject_leftovers(&kvs, s, &[])?;
+            FaultSpec::Panic
+        }
+        other => {
+            return Err(format!(
+                "unknown fault `{other}` (have: straggler, linkdown, stalls, dropout, panic)"
+            ))
+        }
+    };
+    Ok(spec)
+}
+
+/// Parse one fault set: `none` (empty) or `fault+fault+...`.
+pub fn parse_fault_set(s: &str) -> Result<Vec<FaultSpec>, String> {
+    let s = s.trim();
+    if s.is_empty() || s == "none" {
+        return Ok(Vec::new());
+    }
+    s.split('+')
+        .filter(|t| !t.trim().is_empty())
+        .map(parse_fault)
+        .collect()
+}
+
+/// Parse a `;`-separated list of fault sets — the campaign `--faults`
+/// axis. `none;straggler(factor=0.8)` sweeps healthy vs one straggler.
+pub fn parse_list_faults(s: &str) -> Result<Vec<Vec<FaultSpec>>, String> {
+    let sets: Vec<Vec<FaultSpec>> = s
+        .split(';')
+        .filter(|t| !t.trim().is_empty())
+        .map(parse_fault_set)
+        .collect::<Result<_, _>>()?;
+    if sets.is_empty() {
+        return Err(format!("empty fault list `{s}` (use `none`)"));
+    }
+    Ok(sets)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_bare_kinds_with_defaults() {
+        assert_eq!(
+            parse_fault("straggler").unwrap(),
+            FaultSpec::Straggler {
+                rank: None,
+                factor: 0.8
+            }
+        );
+        assert_eq!(
+            parse_fault("stalls").unwrap(),
+            FaultSpec::Stalls {
+                rate: 0.01,
+                mean_us: 500.0
+            }
+        );
+        assert_eq!(parse_fault("panic").unwrap(), FaultSpec::Panic);
+    }
+
+    #[test]
+    fn parses_keyed_parameters() {
+        assert_eq!(
+            parse_fault("straggler(rank=2,factor=0.7)").unwrap(),
+            FaultSpec::Straggler {
+                rank: Some(2),
+                factor: 0.7
+            }
+        );
+        assert_eq!(
+            parse_fault("linkdown(node=1,bw=0.25)").unwrap(),
+            FaultSpec::LinkDown {
+                node: Some(1),
+                bw: 0.25
+            }
+        );
+        assert_eq!(
+            parse_fault("dropout(at_ms=10,restart_ms=40)").unwrap(),
+            FaultSpec::Dropout {
+                rank: None,
+                at_ms: 10.0,
+                restart_ms: 40.0
+            }
+        );
+    }
+
+    #[test]
+    fn rejects_malformed_input_with_offending_token() {
+        let e = parse_fault("straggler(factor=2.0)").unwrap_err();
+        assert!(e.contains("factor"), "{e}");
+        let e = parse_fault("straggler(rank=1.5)").unwrap_err();
+        assert!(e.contains("rank"), "{e}");
+        let e = parse_fault("straggler(speed=0.5)").unwrap_err();
+        assert!(e.contains("speed"), "{e}");
+        let e = parse_fault("meteor").unwrap_err();
+        assert!(e.contains("meteor"), "{e}");
+        assert!(parse_fault("straggler(factor=0.8").is_err());
+        assert!(parse_fault("stalls(rate=x)").is_err());
+    }
+
+    #[test]
+    fn set_and_list_grammar() {
+        assert!(parse_fault_set("none").unwrap().is_empty());
+        let set =
+            parse_fault_set("straggler(factor=0.8)+stalls(rate=0.02)").unwrap();
+        assert_eq!(set.len(), 2);
+        let sets = parse_list_faults("none;straggler(factor=0.8)").unwrap();
+        assert_eq!(sets.len(), 2);
+        assert!(sets[0].is_empty());
+        assert_eq!(sets[1].len(), 1);
+        assert!(parse_list_faults(";").is_err());
+        assert!(parse_list_faults("none;bogus").is_err());
+    }
+
+    #[test]
+    fn labels_are_compact_and_filesystem_safe() {
+        assert_eq!(
+            parse_fault("straggler(factor=0.8)").unwrap().label(),
+            "strag_f0_8"
+        );
+        assert_eq!(
+            parse_fault("linkdown(node=1,bw=0.5)").unwrap().label(),
+            "link_n1_b0_5"
+        );
+        assert_eq!(parse_fault("stalls").unwrap().label(), "stall_p0_01_m500");
+        assert_eq!(
+            parse_fault("dropout(rank=2,at_ms=50,restart_ms=250)")
+                .unwrap()
+                .label(),
+            "drop_r2_a50_rs250"
+        );
+        assert_eq!(set_label(&[]), "none");
+        let set = parse_fault_set("straggler+panic").unwrap();
+        assert_eq!(set_label(&set), "strag_f0_8+panic");
+        for spec in &set {
+            for c in spec.label().chars() {
+                assert!(
+                    c.is_ascii_alphanumeric() || c == '_' || c == '+',
+                    "unsafe label char {c}"
+                );
+            }
+        }
+    }
+}

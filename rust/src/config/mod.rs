@@ -2,6 +2,7 @@
 //! workload (the b×s sweep and profiling protocol), and a small config-file
 //! parser for the CLI.
 
+pub mod faults;
 pub mod hardware;
 pub mod model;
 pub mod parse;
@@ -9,6 +10,7 @@ pub mod serving;
 pub mod topology;
 pub mod workload;
 
+pub use faults::{parse_list_faults, FaultSpec};
 pub use hardware::{CpuSpec, GpuSpec, LinkSpec, NodeSpec};
 pub use model::ModelConfig;
 pub use parse::{ConfigError, ConfigMap};

@@ -92,6 +92,10 @@ pub struct EngineParams {
     pub governor: GovernorKind,
     /// Clock ratio the `FixedCap` policy pins (fraction of peak).
     pub fixed_cap_ratio: f64,
+    /// Injected faults (`sim::faults`), resolved deterministically from
+    /// the workload seed. Empty = healthy cluster, byte-identical to the
+    /// pre-fault pipeline.
+    pub faults: Vec<crate::config::FaultSpec>,
 }
 
 impl Default for EngineParams {
@@ -111,6 +115,7 @@ impl Default for EngineParams {
             margin_k: 0.3,
             governor: GovernorKind::Reactive,
             fixed_cap_ratio: 0.7,
+            faults: Vec::new(),
         }
     }
 }
@@ -338,6 +343,8 @@ pub struct Engine<'a> {
     op_kernel_idx: FxHashMap<(usize, u32, Option<u32>, OpType, u8), u32>,
     iter_bounds: Vec<(f64, f64)>,
     alloc: AllocStats,
+    /// Resolved fault model (`NoFaults` when `params.faults` is empty).
+    faults: Box<dyn crate::sim::faults::FaultModel>,
 }
 
 impl<'a> Engine<'a> {
@@ -410,12 +417,22 @@ impl<'a> Engine<'a> {
                 Rng::substream(wl.seed, &label).range_usize(0, gpn)
             })
             .collect();
+        // Fault model: resolved from its own `(seed, "fault<i>")`
+        // substreams so it never consumes a draw from the per-rank jitter
+        // streams below — the empty set stays byte-identical.
+        let faults =
+            crate::sim::faults::build_fault_model(&params.faults, wl.seed, r, gpn);
+
         let mut ranks = Vec::with_capacity(r);
         for g in 0..r {
             let mut rng = Rng::substream(wl.seed, &format!("rank{g}"));
             let host_scale = (1.0 + params.rank_jitter * rng.gauss()).clamp(0.8, 1.3);
-            let compute_scale =
+            let mut compute_scale =
                 (1.0 + params.compute_jitter * rng.gauss()).clamp(0.9, 1.1);
+            if !faults.is_empty() {
+                // Persistent straggler: a hot/slow GPU's throughput deficit.
+                compute_scale *= faults.compute_factor(g);
+            }
             let is_far = g % gpn == far_locals[g / gpn];
             let comm_delay_ns = rng.gauss().abs() * params.comm_delay_sigma_ns
                 + if is_far { params.far_rank_delay_ns } else { 0.0 };
@@ -496,15 +513,27 @@ impl<'a> Engine<'a> {
             coll_base.push(colls.len());
             coll_group.push(c.group);
             let base_ns = group_collective_base_ns(&topo, c.group, c.bytes);
+            // A degraded xGMI/NIC link stretches the base transfer time of
+            // every collective instance whose rendezvous group touches the
+            // slow node — one bad link drags the whole group.
             match c.group {
                 CommGroup::World => {
-                    colls.push(CollState::new(c.clone(), r, base_ns));
+                    let mut b = base_ns;
+                    if !faults.is_empty() {
+                        let parts: Vec<usize> = (0..r).collect();
+                        b *= faults.link_time_factor(&parts);
+                    }
+                    colls.push(CollState::new(c.clone(), r, b));
                 }
                 CommGroup::IntraNode => {
                     for n in 0..topo.num_nodes {
                         let parts: Vec<usize> =
                             topo.node_ranks(n).map(|x| x as usize).collect();
-                        colls.push(CollState::for_group(c.clone(), parts, r, base_ns));
+                        let mut b = base_ns;
+                        if !faults.is_empty() {
+                            b *= faults.link_time_factor(&parts);
+                        }
+                        colls.push(CollState::for_group(c.clone(), parts, r, b));
                     }
                 }
                 CommGroup::CrossNode => {
@@ -512,7 +541,11 @@ impl<'a> Engine<'a> {
                         let parts: Vec<usize> = (0..topo.num_nodes)
                             .map(|n| topo.rank_of(n, local) as usize)
                             .collect();
-                        colls.push(CollState::for_group(c.clone(), parts, r, base_ns));
+                        let mut b = base_ns;
+                        if !faults.is_empty() {
+                            b *= faults.link_time_factor(&parts);
+                        }
+                        colls.push(CollState::for_group(c.clone(), parts, r, b));
                     }
                 }
             }
@@ -553,6 +586,7 @@ impl<'a> Engine<'a> {
             iter_bounds: vec![(f64::INFINITY, 0.0); wl.iterations as usize],
             alloc,
             params,
+            faults,
         };
         for g in 0..r {
             eng.push(eng.params.dvfs_window_ns, EvKind::DvfsTick { rank: g });
@@ -795,8 +829,15 @@ impl<'a> Engine<'a> {
         let rate = self.compute_rate(rank, &timing);
         let gen = self.next_gen();
         let freq = self.ranks[rank].gov.freq_mhz();
+        // Transient ECC-retry-style stall: extra nominal work charged at
+        // kernel start (0.0 and draw-free on the empty fault model).
+        let mut work_s = timing.nominal_ns * 1e-9;
+        let stall_ns = self.faults.stall_ns(rank);
+        if stall_ns > 0.0 {
+            work_s += stall_ns * 1e-9;
+        }
         let inflight = InflightKernel {
-            work_s: timing.nominal_ns * 1e-9,
+            work_s,
             bytes_left: bytes,
             bytes_total: bytes,
             q,
@@ -1248,6 +1289,48 @@ impl<'a> Engine<'a> {
     }
 
     fn finish(mut self) -> SimOutput {
+        // GPU dropout + checkpoint-restart: the dying rank takes its whole
+        // collective group down with it, so the schedule replays from the
+        // last checkpoint boundary (start of the iteration in progress at
+        // the failure) plus a fixed restart cost. Replayed work is
+        // identical to the first attempt (same seeds), so the whole effect
+        // is a rigid time shift of everything from that iteration on —
+        // which makes time-lost-to-failure an exact, first-class quantity.
+        let mut restart_spans: Vec<(f64, f64)> = Vec::new();
+        let mut fault_lost_ns = 0.0;
+        if let Some(plan) = self.faults.dropout() {
+            let hit = self
+                .iter_bounds
+                .iter()
+                .position(|&(_, e)| e > 0.0 && e > plan.at_ns);
+            if let Some(k) = hit {
+                let ck_start = self.iter_bounds[k].0;
+                let delta = (plan.at_ns - ck_start).max(0.0) + plan.restart_ns;
+                let k32 = k as u32;
+                for e in &mut self.events {
+                    if e.iter >= k32 {
+                        e.t_launch += delta;
+                        e.t_start += delta;
+                        e.t_end += delta;
+                    }
+                }
+                for b in &mut self.iter_bounds[k..] {
+                    b.0 += delta;
+                    b.1 += delta;
+                }
+                // Power samples shift with their iteration; sampled energy
+                // filters by iteration index, so energy accounting is
+                // unchanged by the shift.
+                for s in &mut self.power.samples {
+                    if s.iter >= k32 {
+                        s.t += delta;
+                    }
+                }
+                self.now += delta;
+                restart_spans.push((ck_start, ck_start + delta));
+                fault_lost_ns = delta;
+            }
+        }
         // total_cmp: NaN timestamps (impossible today) would order
         // deterministically instead of silently comparing Equal.
         self.events.sort_by(|a, b| a.t_start.total_cmp(&b.t_start));
@@ -1266,6 +1349,12 @@ impl<'a> Engine<'a> {
         trace.meta.seed = self.wl.seed;
         trace.meta.source = "sim".into();
         trace.meta.serialized = false;
+        if !self.faults.is_empty() {
+            trace.meta.faults = crate::config::faults::set_label(&self.params.faults);
+            trace.meta.fault_slowdown = self.faults.slowdowns();
+            trace.meta.restart_spans = restart_spans;
+            trace.meta.fault_lost_ns = fault_lost_ns;
+        }
         trace.events = self.events;
         SimOutput {
             trace,

@@ -1,0 +1,297 @@
+//! Seeded fault model: turns declarative [`FaultSpec`]s into the concrete,
+//! deterministic fault events the engine prices into a run.
+//!
+//! Seeding contract: fault `i` in the spec list derives **all** of its
+//! randomness from `Rng::substream(seed, "fault<i>")` — which rank
+//! straggles, which node's link degrades, when stalls fire. Per-rank stall
+//! streams are further split as `Rng::substream(seed ^ fnv1a("fault<i>"),
+//! "rank<g>")` so each rank consumes its own draw sequence in its own
+//! deterministic kernel-dispatch order. Crucially, no fault ever draws
+//! from the engine's per-rank jitter streams (`substream(seed,
+//! "rank<g>")`): those are consumed in strict program order by the
+//! healthy pipeline, so stealing a draw would silently reshuffle every
+//! downstream jitter value and break the empty-set byte-identity
+//! guarantee. With an empty spec list [`NoFaults`] is installed and no
+//! fault code touches a single random draw or float — the run is
+//! bit-identical to a build without this module.
+
+use crate::config::FaultSpec;
+use crate::util::prng::{fnv1a, Rng};
+
+/// Resolved GPU-dropout plan: `rank` dies at `at_ns`; the schedule
+/// replays from the last checkpoint boundary with `restart_ns` of
+/// restart cost.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DropoutPlan {
+    pub rank: u32,
+    pub at_ns: f64,
+    pub restart_ns: f64,
+}
+
+/// Object-safe fault model the engine consults at each pricing point.
+/// All methods are exact no-ops on the empty model.
+pub trait FaultModel: std::fmt::Debug + Send {
+    /// True iff no fault is active (engine skips all fault paths).
+    fn is_empty(&self) -> bool;
+    /// Persistent compute-throughput multiplier for `rank` (1.0 = healthy,
+    /// < 1.0 = straggler).
+    fn compute_factor(&self, rank: usize) -> f64;
+    /// Transfer-time multiplier (>= 1.0) for a collective instance whose
+    /// rendezvous group is `participants`: the slowest degraded link any
+    /// participant sits behind dominates the whole group.
+    fn link_time_factor(&self, participants: &[usize]) -> f64;
+    /// Transient stall (ns of extra nominal work) charged to the kernel
+    /// now starting on `rank`; 0.0 almost always. Draws, when they
+    /// happen, come from this model's own per-rank substreams.
+    fn stall_ns(&mut self, rank: usize) -> f64;
+    /// The resolved dropout event, if any (first `Dropout` spec wins).
+    fn dropout(&self) -> Option<DropoutPlan>;
+    /// Per-rank compute multipliers for the whole world (for
+    /// `TraceMeta::fault_slowdown`); empty on the empty model.
+    fn slowdowns(&self) -> Vec<f64>;
+}
+
+/// The empty model: installed when `EngineParams::faults` is empty.
+#[derive(Debug, Default)]
+pub struct NoFaults;
+
+impl FaultModel for NoFaults {
+    fn is_empty(&self) -> bool {
+        true
+    }
+    fn compute_factor(&self, _rank: usize) -> f64 {
+        1.0
+    }
+    fn link_time_factor(&self, _participants: &[usize]) -> f64 {
+        1.0
+    }
+    fn stall_ns(&mut self, _rank: usize) -> f64 {
+        0.0
+    }
+    fn dropout(&self) -> Option<DropoutPlan> {
+        None
+    }
+    fn slowdowns(&self) -> Vec<f64> {
+        Vec::new()
+    }
+}
+
+/// One resolved transient-stall source: per-rank substreams drawn in the
+/// rank's own kernel-dispatch order.
+#[derive(Debug)]
+struct StallSource {
+    rate: f64,
+    mean_ns: f64,
+    rngs: Vec<Rng>,
+}
+
+/// Faults resolved against a concrete `(seed, world, gpus_per_node)`.
+#[derive(Debug)]
+pub struct SeededFaults {
+    gpus_per_node: usize,
+    /// Per-rank persistent compute multiplier (product of stragglers).
+    compute: Vec<f64>,
+    /// (node, 1/bw) per degraded link.
+    bad_links: Vec<(usize, f64)>,
+    stalls: Vec<StallSource>,
+    dropout: Option<DropoutPlan>,
+}
+
+impl FaultModel for SeededFaults {
+    fn is_empty(&self) -> bool {
+        false
+    }
+
+    fn compute_factor(&self, rank: usize) -> f64 {
+        self.compute[rank]
+    }
+
+    fn link_time_factor(&self, participants: &[usize]) -> f64 {
+        let mut f = 1.0f64;
+        for &(node, slow) in &self.bad_links {
+            if participants
+                .iter()
+                .any(|&p| p / self.gpus_per_node == node)
+            {
+                f = f.max(slow);
+            }
+        }
+        f
+    }
+
+    fn stall_ns(&mut self, rank: usize) -> f64 {
+        let mut total = 0.0;
+        for src in &mut self.stalls {
+            let r = &mut src.rngs[rank];
+            if r.f64() < src.rate {
+                // Exponentially distributed retry burst; 1 - u keeps the
+                // argument of ln strictly positive.
+                total += -src.mean_ns * (1.0 - r.f64()).ln();
+            }
+        }
+        total
+    }
+
+    fn dropout(&self) -> Option<DropoutPlan> {
+        self.dropout
+    }
+
+    fn slowdowns(&self) -> Vec<f64> {
+        self.compute.clone()
+    }
+}
+
+/// Resolve `specs` into a concrete model for a `world`-rank run.
+///
+/// Panics on [`FaultSpec::Panic`] — the documented test hook for the
+/// campaign runner's per-scenario panic isolation.
+pub fn build_fault_model(
+    specs: &[FaultSpec],
+    seed: u64,
+    world: usize,
+    gpus_per_node: usize,
+) -> Box<dyn FaultModel> {
+    if specs.is_empty() {
+        return Box::new(NoFaults);
+    }
+    let num_nodes = world.div_ceil(gpus_per_node.max(1));
+    let mut model = SeededFaults {
+        gpus_per_node: gpus_per_node.max(1),
+        compute: vec![1.0; world],
+        bad_links: Vec::new(),
+        stalls: Vec::new(),
+        dropout: None,
+    };
+    for (i, spec) in specs.iter().enumerate() {
+        let label = format!("fault{i}");
+        let mut rng = Rng::substream(seed, &label);
+        match spec {
+            FaultSpec::Straggler { rank, factor } => {
+                let g = resolve_rank(*rank, world, &mut rng);
+                model.compute[g] *= factor;
+            }
+            FaultSpec::LinkDown { node, bw } => {
+                let n = match node {
+                    Some(n) => (*n as usize).min(num_nodes - 1),
+                    None => rng.range_usize(0, num_nodes),
+                };
+                model.bad_links.push((n, 1.0 / bw.clamp(0.05, 1.0)));
+            }
+            FaultSpec::Stalls { rate, mean_us } => {
+                let sub = seed ^ fnv1a(label.as_bytes());
+                model.stalls.push(StallSource {
+                    rate: *rate,
+                    mean_ns: mean_us * 1e3,
+                    rngs: (0..world)
+                        .map(|g| Rng::substream(sub, &format!("rank{g}")))
+                        .collect(),
+                });
+            }
+            FaultSpec::Dropout {
+                rank,
+                at_ms,
+                restart_ms,
+            } => {
+                if model.dropout.is_none() {
+                    let g = resolve_rank(*rank, world, &mut rng);
+                    model.dropout = Some(DropoutPlan {
+                        rank: g as u32,
+                        at_ns: at_ms * 1e6,
+                        restart_ns: restart_ms * 1e6,
+                    });
+                }
+            }
+            FaultSpec::Panic => {
+                panic!("fault injection: deliberate `panic` fault (runner isolation test hook)")
+            }
+        }
+    }
+    Box::new(model)
+}
+
+fn resolve_rank(rank: Option<u32>, world: usize, rng: &mut Rng) -> usize {
+    match rank {
+        Some(r) => (r as usize).min(world - 1),
+        None => rng.range_usize(0, world),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::faults::parse_fault_set;
+
+    #[test]
+    fn empty_specs_build_the_empty_model() {
+        let mut m = build_fault_model(&[], 7, 8, 8);
+        assert!(m.is_empty());
+        assert_eq!(m.compute_factor(3), 1.0);
+        assert_eq!(m.link_time_factor(&[0, 1, 2]), 1.0);
+        assert_eq!(m.stall_ns(0), 0.0);
+        assert!(m.dropout().is_none());
+        assert!(m.slowdowns().is_empty());
+    }
+
+    #[test]
+    fn resolution_is_deterministic_in_seed() {
+        let set = parse_fault_set("straggler(factor=0.8)+dropout").unwrap();
+        let a = build_fault_model(&set, 42, 8, 8);
+        let b = build_fault_model(&set, 42, 8, 8);
+        assert_eq!(a.slowdowns(), b.slowdowns());
+        assert_eq!(a.dropout(), b.dropout());
+        // A different seed picks (with high probability over the world
+        // size) a different straggler rank — at minimum the resolved
+        // model is still well-formed.
+        let c = build_fault_model(&set, 43, 8, 8);
+        assert_eq!(c.slowdowns().len(), 8);
+        assert_eq!(
+            c.slowdowns().iter().filter(|&&f| f < 1.0).count(),
+            1,
+            "exactly one straggler"
+        );
+    }
+
+    #[test]
+    fn stall_streams_replay_per_rank() {
+        let set = parse_fault_set("stalls(rate=1.0,mean_us=100)").unwrap();
+        let mut a = build_fault_model(&set, 9, 2, 2);
+        let mut b = build_fault_model(&set, 9, 2, 2);
+        let draws_a: Vec<f64> = (0..4).map(|_| a.stall_ns(0)).collect();
+        let draws_b: Vec<f64> = (0..4).map(|_| b.stall_ns(0)).collect();
+        assert_eq!(draws_a, draws_b);
+        assert!(draws_a.iter().all(|&d| d > 0.0));
+        // Rank 1's stream is independent of rank 0's consumption.
+        assert_eq!(a.stall_ns(1), b.stall_ns(1));
+    }
+
+    #[test]
+    fn link_factor_hits_only_touched_groups() {
+        let set = parse_fault_set("linkdown(node=1,bw=0.5)").unwrap();
+        let m = build_fault_model(&set, 5, 16, 8);
+        // Group entirely on node 0: untouched.
+        assert_eq!(m.link_time_factor(&[0, 1, 7]), 1.0);
+        // Any group touching node 1 pays 1/bw.
+        assert_eq!(m.link_time_factor(&[0, 8]), 2.0);
+        assert_eq!(m.link_time_factor(&[9, 10]), 2.0);
+    }
+
+    #[test]
+    fn explicit_ranks_and_clamps() {
+        let set =
+            parse_fault_set("straggler(rank=99,factor=0.5)+dropout(rank=1,at_ms=10,restart_ms=20)")
+                .unwrap();
+        let m = build_fault_model(&set, 0, 4, 4);
+        // Out-of-range rank clamps to the last rank.
+        assert_eq!(m.compute_factor(3), 0.5);
+        let d = m.dropout().unwrap();
+        assert_eq!(d.rank, 1);
+        assert_eq!(d.at_ns, 10.0e6);
+        assert_eq!(d.restart_ns, 20.0e6);
+    }
+
+    #[test]
+    #[should_panic(expected = "deliberate")]
+    fn panic_fault_panics_at_build() {
+        let _ = build_fault_model(&[FaultSpec::Panic], 0, 2, 2);
+    }
+}

@@ -3,13 +3,16 @@
 //! discrete-event multi-GPU engine with C3 contention, the interconnect
 //! rendezvous model, the pluggable power-management subsystem
 //! ([`power`]: governor policies + energy accounting; [`dvfs`] holds the
-//! stock reactive mechanism), the host-CPU model, and the serialized
+//! stock reactive mechanism), the seeded fault-injection model
+//! ([`faults`]: stragglers, degraded links, transient stalls, GPU
+//! dropout + checkpoint-restart), the host-CPU model, and the serialized
 //! hardware-profiling pass.
 
 pub mod cpu;
 pub mod duration;
 pub mod dvfs;
 pub mod engine;
+pub mod faults;
 pub mod hwprof;
 pub mod interconnect;
 pub mod power;
@@ -18,6 +21,7 @@ pub use cpu::{cpu_trace, HostModelParams};
 pub use duration::{DurationModel, KernelTiming};
 pub use dvfs::{DvfsGovernor, WindowActivity};
 pub use engine::{Engine, EngineParams, HostActivity, SimOutput};
+pub use faults::{build_fault_model, DropoutPlan, FaultModel, NoFaults};
 pub use power::{
     package_power_w, parse_list_governor, GovCtx, GovernorKind, GovernorPolicy,
 };

@@ -23,27 +23,53 @@ fn stream_tid(stream: Stream) -> f64 {
 /// Serialize a trace to chrome-trace JSON ("X" complete events, µs units).
 pub fn to_chrome_json(trace: &Trace) -> String {
     let mut events = Vec::with_capacity(trace.events.len() + 1);
-    // Metadata record first.
+    // Metadata record first. Fault fields ride along only on faulted
+    // traces, so healthy exports stay byte-identical to the pre-fault
+    // format (and legacy traces import with the fields defaulted).
+    let mut meta_args = vec![
+        ("workload", Json::str(trace.meta.workload.clone())),
+        ("fsdp", Json::str(trace.meta.fsdp.clone())),
+        ("model", Json::str(trace.meta.model.clone())),
+        ("num_gpus", Json::num(trace.meta.num_gpus as f64)),
+        ("num_nodes", Json::num(trace.meta.nodes() as f64)),
+        ("gpus_per_node", Json::num(trace.meta.node_gpus() as f64)),
+        ("sharding", Json::str(trace.meta.sharding.clone())),
+        ("iterations", Json::num(trace.meta.iterations as f64)),
+        ("warmup", Json::num(trace.meta.warmup as f64)),
+        ("seed", Json::num(trace.meta.seed as f64)),
+        ("source", Json::str(trace.meta.source.clone())),
+        ("serialized", Json::Bool(trace.meta.serialized)),
+    ];
+    if !trace.meta.faults.is_empty() {
+        meta_args.push(("faults", Json::str(trace.meta.faults.clone())));
+        meta_args.push((
+            "fault_slowdown",
+            Json::Arr(
+                trace
+                    .meta
+                    .fault_slowdown
+                    .iter()
+                    .map(|&f| Json::num(f))
+                    .collect(),
+            ),
+        ));
+        meta_args.push((
+            "restart_spans",
+            Json::Arr(
+                trace
+                    .meta
+                    .restart_spans
+                    .iter()
+                    .map(|&(s, e)| Json::Arr(vec![Json::num(s), Json::num(e)]))
+                    .collect(),
+            ),
+        ));
+        meta_args.push(("fault_lost_ns", Json::num(trace.meta.fault_lost_ns)));
+    }
     events.push(Json::obj(vec![
         ("name", Json::str("chopper_meta")),
         ("ph", Json::str("M")),
-        (
-            "args",
-            Json::obj(vec![
-                ("workload", Json::str(trace.meta.workload.clone())),
-                ("fsdp", Json::str(trace.meta.fsdp.clone())),
-                ("model", Json::str(trace.meta.model.clone())),
-                ("num_gpus", Json::num(trace.meta.num_gpus as f64)),
-                ("num_nodes", Json::num(trace.meta.nodes() as f64)),
-                ("gpus_per_node", Json::num(trace.meta.node_gpus() as f64)),
-                ("sharding", Json::str(trace.meta.sharding.clone())),
-                ("iterations", Json::num(trace.meta.iterations as f64)),
-                ("warmup", Json::num(trace.meta.warmup as f64)),
-                ("seed", Json::num(trace.meta.seed as f64)),
-                ("source", Json::str(trace.meta.source.clone())),
-                ("serialized", Json::Bool(trace.meta.serialized)),
-            ]),
-        ),
+        ("args", Json::obj(meta_args)),
     ]));
     // Process/thread naming rows: without these Perfetto shows a flat
     // anonymous pid list (pid == flat gpu rank); with them every process
@@ -162,6 +188,34 @@ pub fn from_chrome_json(text: &str) -> Result<Trace, String> {
                             .get("serialized")
                             .and_then(|v| v.as_bool())
                             .unwrap_or(false),
+                        // Fault fields: absent on healthy/legacy traces.
+                        faults: s("faults"),
+                        fault_slowdown: a
+                            .get("fault_slowdown")
+                            .and_then(|v| v.as_arr())
+                            .map(|xs| {
+                                xs.iter().filter_map(|v| v.as_f64()).collect()
+                            })
+                            .unwrap_or_default(),
+                        restart_spans: a
+                            .get("restart_spans")
+                            .and_then(|v| v.as_arr())
+                            .map(|xs| {
+                                xs.iter()
+                                    .filter_map(|p| {
+                                        let pa = p.as_arr()?;
+                                        Some((
+                                            pa.first()?.as_f64()?,
+                                            pa.get(1)?.as_f64()?,
+                                        ))
+                                    })
+                                    .collect()
+                            })
+                            .unwrap_or_default(),
+                        fault_lost_ns: a
+                            .get("fault_lost_ns")
+                            .and_then(|v| v.as_f64())
+                            .unwrap_or(0.0),
                     };
                 }
             }

@@ -102,6 +102,17 @@ pub struct TraceMeta {
     pub source: String,
     /// Kernels were serialized (hardware-profiling pass).
     pub serialized: bool,
+    /// Injected fault-set label (`config::faults::set_label`); "" = no
+    /// faults (healthy run — none of the fault fields are serialized).
+    pub faults: String,
+    /// Per-rank persistent compute multiplier under faults (empty when
+    /// no faults; 1.0 = healthy rank, < 1.0 = straggler).
+    pub fault_slowdown: Vec<f64>,
+    /// Checkpoint-restart replay spans (start ns, end ns) inserted by
+    /// GPU-dropout faults.
+    pub restart_spans: Vec<(f64, f64)>,
+    /// Wall-clock lost to dropout + checkpoint-restart (ns).
+    pub fault_lost_ns: f64,
 }
 
 impl TraceMeta {

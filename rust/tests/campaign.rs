@@ -297,6 +297,97 @@ fn figure_rendering_parallel_matches_serial_byte_for_byte() {
     }
 }
 
+/// Fault-axis campaign determinism: a grid crossed with fault sets fans
+/// out byte-identically under parallelism, faulted siblings are strictly
+/// slower than their healthy baseline, and the fault-impact table renders
+/// deterministically (the CI fault smoke drives the same grid through the
+/// CLI).
+#[test]
+fn fault_axis_parallel_matches_serial_byte_for_byte() {
+    use chopper::campaign::campaign_faults;
+    use chopper::config::FaultSpec;
+    let node = NodeSpec::mi300x_node();
+    let mut spec = GridSpec::paper(2, 2, 1);
+    spec.batches = vec![1];
+    spec.seqs = vec![4096];
+    spec.fsdp = vec![FsdpVersion::V1];
+    spec.faults = vec![
+        Vec::new(),
+        vec![FaultSpec::Straggler { rank: Some(0), factor: 0.8 }],
+        vec![FaultSpec::Stalls { rate: 0.02, mean_us: 500.0 }],
+    ];
+    let scenarios = spec.expand();
+    assert_eq!(scenarios.len(), 3);
+    let serial = run_campaign(&node, &scenarios, 1, None, false);
+    let parallel = run_campaign(&node, &scenarios, 4, None, false);
+    assert_eq!(serial.failed, 0);
+    for (a, b) in serial.summaries.iter().zip(&parallel.summaries) {
+        assert_eq!(a, b, "fault scenario {} diverged", a.name);
+        assert_eq!(a.to_json_str(), b.to_json_str());
+        assert_eq!(a.status, "ok");
+    }
+    let healthy = &serial.summaries[0];
+    let strag = &serial.summaries[1];
+    assert!(healthy.faults.is_empty(), "baseline carries a fault label");
+    assert_eq!(healthy.blocked_ms, 0.0);
+    assert_eq!(strag.faults, "strag_r0_f0_8");
+    assert!(strag.iter_ms > healthy.iter_ms, "straggler did not slow the run");
+    assert!(strag.blocked_ms > 0.0, "no time blocked on the straggler");
+    let fa = campaign_faults(&serial.summaries);
+    let fb = campaign_faults(&parallel.summaries);
+    assert_eq!(fa.ascii, fb.ascii);
+    assert_eq!(fa.csv, fb.csv);
+    // Only the faulted rows render (deltas are vs the healthy sibling).
+    assert_eq!(fa.csv.lines().count(), 3, "{}", fa.csv);
+}
+
+/// The `--resume` contract end-to-end: a panicking scenario is isolated
+/// (sweep completes), its summary is NOT cached, and a resumed run reuses
+/// every healthy artifact while retrying only the failure.
+#[test]
+fn failed_scenarios_are_not_cached_and_are_retried_on_resume() {
+    use chopper::config::FaultSpec;
+    let node = NodeSpec::mi300x_node();
+    let mut spec = GridSpec::paper(2, 2, 1);
+    spec.batches = vec![1];
+    spec.seqs = vec![4096];
+    spec.fsdp = vec![FsdpVersion::V1];
+    spec.faults = vec![Vec::new(), vec![FaultSpec::Panic]];
+    let scenarios = spec.expand();
+    assert_eq!(scenarios.len(), 2);
+    let dir = tmpdir("resume");
+    let cache = Cache::open(&dir).unwrap();
+
+    let first = run_campaign(&node, &scenarios, 2, Some(&cache), false);
+    assert_eq!(first.executed, 1);
+    assert_eq!(first.failed, 1);
+    let failed = first
+        .summaries
+        .iter()
+        .find(|s| s.status == "failed")
+        .expect("no failed row");
+    let failed_sc = scenarios
+        .iter()
+        .find(|sc| sc.name == failed.name)
+        .unwrap();
+    assert!(
+        !cache
+            .path_for(&failed_sc.name, fingerprint(&node, failed_sc))
+            .exists(),
+        "failed scenario was cached — --resume could never retry it"
+    );
+
+    // Resume: the healthy artifact is reused, the failure runs again (and
+    // fails again — same deterministic fault), nothing else re-executes.
+    let second = run_campaign(&node, &scenarios, 2, Some(&cache), false);
+    assert_eq!(second.cached, 1);
+    assert_eq!(second.executed, 0);
+    assert_eq!(second.failed, 1);
+    assert_eq!(first.summaries, second.summaries);
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 #[test]
 fn sweep_runner_matches_campaign_scenarios() {
     // report::run_sweep rides the same fan-out; spot-check it still

@@ -512,6 +512,78 @@ fn whatif_replay_ranks_policies_and_reproduces_default_pipeline() {
     }
 }
 
+/// Fault-injection golden guard: an explicitly-empty fault list is the
+/// identical engine to the default (byte-identical chrome JSON, no fault
+/// keys on the wire — the default-vs-baseline identity itself is pinned by
+/// the engine/analysis golden tests above, which run with empty faults),
+/// and faulted runs are deterministic with the fault surfaced in the
+/// trace metadata.
+#[test]
+fn empty_fault_set_is_byte_identical_and_faulted_runs_are_deterministic() {
+    use chopper::config::FaultSpec;
+    let node = NodeSpec::mi300x_node();
+    let mut cfg = ModelConfig::llama3_8b();
+    cfg.layers = 2;
+    let mut wl = WorkloadConfig::new(1, 4096, FsdpVersion::V1);
+    wl.iterations = 2;
+    wl.warmup = 1;
+
+    // 1. Explicit empty fault list == default, byte for byte.
+    let healthy = Engine::new(&node, &cfg, &wl, EngineParams::default()).run();
+    let mut p_empty = EngineParams::default();
+    p_empty.faults = Vec::new();
+    let explicit = Engine::new(&node, &cfg, &wl, p_empty).run();
+    let healthy_json = chrome::to_chrome_json(&healthy.trace);
+    assert_eq!(healthy_json, chrome::to_chrome_json(&explicit.trace));
+    assert!(healthy.trace.meta.faults.is_empty());
+    assert_eq!(healthy.trace.meta.fault_lost_ns, 0.0);
+    // No fault keys leak into healthy chrome metadata.
+    assert!(!healthy_json.contains("\"faults\""));
+    assert!(!healthy_json.contains("fault_slowdown"));
+    assert!(!healthy_json.contains("restart_spans"));
+
+    // 2. A faulted run is deterministic and self-describing.
+    let mut p_fault = EngineParams::default();
+    p_fault.faults = vec![
+        FaultSpec::Straggler {
+            rank: Some(0),
+            factor: 0.8,
+        },
+        FaultSpec::Stalls {
+            rate: 0.05,
+            mean_us: 200.0,
+        },
+    ];
+    let a = Engine::new(&node, &cfg, &wl, p_fault.clone()).run();
+    let b = Engine::new(&node, &cfg, &wl, p_fault).run();
+    let fault_json = chrome::to_chrome_json(&a.trace);
+    assert_eq!(fault_json, chrome::to_chrome_json(&b.trace));
+    assert_eq!(a.trace.meta.faults, "strag_r0_f0_8+stall_p0_05_m200");
+    assert!(fault_json.contains("strag_r0_f0_8"));
+    assert_eq!(a.trace.meta.fault_slowdown.len(), 8);
+    assert!((a.trace.meta.fault_slowdown[0] - 0.8).abs() < 1e-12);
+    // The faulted metadata survives an export → import round trip.
+    let back = chrome::from_chrome_json(&fault_json).unwrap();
+    assert_eq!(back.meta.faults, a.trace.meta.faults);
+    assert_eq!(back.meta.fault_slowdown, a.trace.meta.fault_slowdown);
+
+    // 3. Dropout + checkpoint-restart: time lost is first-class and the
+    // faulted span is strictly longer than the healthy one.
+    let mut p_drop = EngineParams::default();
+    p_drop.faults = vec![FaultSpec::Dropout {
+        rank: Some(1),
+        at_ms: 0.5,
+        restart_ms: 2.0,
+    }];
+    let d = Engine::new(&node, &cfg, &wl, p_drop).run();
+    assert!(d.trace.meta.fault_lost_ns > 0.0, "no time lost to dropout");
+    assert_eq!(d.trace.meta.restart_spans.len(), 1);
+    assert!(
+        d.trace.span_ns() > healthy.trace.span_ns(),
+        "restart did not lengthen the run"
+    );
+}
+
 /// Serialization is deterministic byte-for-byte, and interned kernel
 /// names survive an export → import round trip exactly.
 #[test]

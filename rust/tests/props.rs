@@ -660,3 +660,45 @@ fn prop_hsdp_program_mirrors_fsdp_skeleton() {
         );
     });
 }
+
+// ---------------------------------------------------------------------------
+// Fault injection (sim::faults, DESIGN.md §11)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_straggler_never_speeds_up_the_run_and_is_monotone_in_severity() {
+    use chopper::config::FaultSpec;
+    prop("straggler_monotone", 4, |rng| {
+        let (cfg, wl) = random_workload(rng);
+        let node = NodeSpec::mi300x_node();
+        let span = |faults: Vec<FaultSpec>| {
+            let mut params = EngineParams::default();
+            params.faults = faults;
+            let out = Engine::new(&node, &cfg, &wl, params).run();
+            out.trace.events.iter().map(|e| e.t_end).fold(0.0, f64::max)
+        };
+        let healthy = span(Vec::new());
+        let rank = rng.range_u64(0, 8) as u32;
+        let factor = 0.5 + rng.f64() * 0.45;
+        let slow = span(vec![FaultSpec::Straggler {
+            rank: Some(rank),
+            factor,
+        }]);
+        assert!(
+            slow >= healthy - 1e-6,
+            "straggler (rank {rank}, factor {factor}) sped up the run: \
+             {slow} < {healthy}"
+        );
+        // A harsher slowdown on the same rank is at least as slow: every
+        // compute kernel on that rank stretches by 1/factor, and the lockstep
+        // collectives can only wait longer for it.
+        let harsher = span(vec![FaultSpec::Straggler {
+            rank: Some(rank),
+            factor: factor * 0.5,
+        }]);
+        assert!(
+            harsher >= slow - 1e-6,
+            "harsher straggler finished earlier: {harsher} < {slow}"
+        );
+    });
+}
