@@ -1,0 +1,137 @@
+//! Trace-store bench: exercise the crash-safe binary columnar store
+//! (`trace::store`) against the in-memory trace as an A/B oracle — the
+//! one-shot round trip and the engine-fed streaming sink must both
+//! reproduce the buffered trace exactly — then record the write / read /
+//! fsck-scan timings and the storage shape (bytes per event) into
+//! `BENCH_store.json` at the repo root (same trajectory schema as
+//! `BENCH_engine.json`).
+//!
+//! Scale knobs (env): CHOPPER_BENCH_LAYERS (default 8), CHOPPER_BENCH_ITERS
+//! (default 8), CHOPPER_BENCH_SAMPLES (default 3). CI smoke-runs tiny
+//! values twice and validates the trajectory schema + fingerprint dedup.
+
+use chopper::benchkit::{emit_collected, section, value, Bench};
+use chopper::config::{FsdpVersion, ModelConfig, NodeSpec, Topology, WorkloadConfig};
+use chopper::sim::{run_workload_topo_sink, run_workload_topo_with, EngineParams};
+use chopper::trace::store;
+use std::cell::RefCell;
+use std::rc::Rc;
+
+fn env_or<T: std::str::FromStr>(key: &str, default: T) -> T {
+    std::env::var(key)
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() {
+    let layers: u64 = env_or("CHOPPER_BENCH_LAYERS", 8);
+    let iters: u32 = env_or("CHOPPER_BENCH_ITERS", 8);
+    let samples: u32 = env_or("CHOPPER_BENCH_SAMPLES", 3);
+
+    let node = NodeSpec::mi300x_node();
+    chopper::benchkit::note_topology(1, node.num_gpus);
+    let topo = Topology::single(node.clone());
+    let mut cfg = ModelConfig::llama3_8b();
+    cfg.layers = layers;
+    let mut wl = WorkloadConfig::parse_label("b2s4", FsdpVersion::V2)
+        .expect("b2s4 is a known workload label");
+    wl.iterations = iters;
+    wl.warmup = iters / 2;
+    chopper::benchkit::note_workload(&wl.label());
+    let dir = std::env::temp_dir();
+    let path = dir.join(format!("chopper_bench_store_{}.ctrc", std::process::id()));
+    let spath = dir.join(format!("chopper_bench_stream_{}.ctrc", std::process::id()));
+    eprintln!(
+        "setup: {} × {} layers × {iters} iterations…",
+        wl.label_with_fsdp(),
+        layers
+    );
+
+    section("equivalence — store round trip vs in-memory trace (A/B oracle)");
+    let run = run_workload_topo_with(&topo, &cfg, &wl, EngineParams::default());
+    let info = store::write_store(&path, &run.trace, &run.power, &run.iter_bounds)
+        .expect("writing bench store");
+    let loaded = store::read_store(&path).expect("reading bench store");
+    assert!(
+        loaded.report.clean(),
+        "fresh store not clean: {}",
+        loaded.report.describe()
+    );
+    // Bitwise oracle: the Debug rendering covers every field including the
+    // exact f64 bits, so equal strings mean a bit-identical round trip.
+    assert_eq!(
+        format!("{:?}", run.trace),
+        format!("{:?}", loaded.trace),
+        "trace diverged across the store round trip"
+    );
+    assert_eq!(
+        format!("{:?}", run.power),
+        format!("{:?}", loaded.power),
+        "power telemetry diverged across the store round trip"
+    );
+    assert_eq!(
+        format!("{:?}", run.iter_bounds),
+        format!("{:?}", loaded.iter_bounds),
+        "iteration bounds diverged across the store round trip"
+    );
+    // The streaming sink (engine-fed, chunks flushed at iteration
+    // boundaries, full event vector never materialized) must land on the
+    // same bytes as the buffered one-shot writer.
+    let meta = chopper::sim::provisional_meta(&topo, &wl);
+    let w = store::StoreWriter::create(&spath, &meta).expect("creating streamed store");
+    let shared = Rc::new(RefCell::new(w));
+    let srun = run_workload_topo_sink(
+        &topo,
+        &cfg,
+        &wl,
+        EngineParams::default(),
+        Box::new(store::SharedSink(shared.clone())),
+    );
+    let w = match Rc::try_unwrap(shared) {
+        Ok(cell) => cell.into_inner(),
+        Err(_) => panic!("store writer still shared after run"),
+    };
+    w.finalize(&srun.trace.meta, &srun.power, &srun.iter_bounds)
+        .expect("finalizing streamed store");
+    let sloaded = store::read_store(&spath).expect("reading streamed store");
+    assert_eq!(
+        format!("{:?}", run.trace),
+        format!("{:?}", sloaded.trace),
+        "streamed store diverged from the buffered in-memory trace"
+    );
+    println!(
+        "equivalence OK: one-shot and streamed stores both reproduce the \
+         in-memory trace bit-identically ({} events)",
+        run.trace.events.len()
+    );
+
+    section("store hot path");
+    Bench::new("store/write").samples(samples).run(|| {
+        store::write_store(&path, &run.trace, &run.power, &run.iter_bounds)
+            .expect("writing bench store")
+    });
+    Bench::new("store/read")
+        .samples(samples)
+        .run(|| store::read_store(&path).expect("reading bench store"));
+    // The fsck scan validates every CRC without materializing events.
+    Bench::new("store/fsck_scan")
+        .samples(samples)
+        .run(|| store::check_store(&path).expect("checking bench store"));
+
+    value("events", info.events as f64, "");
+    value("chunks", info.chunks as f64, "");
+    value("power_samples", info.samples as f64, "");
+    value("store_bytes", info.bytes as f64, "B");
+    value(
+        "bytes_per_event",
+        info.bytes as f64 / info.events.max(1) as f64,
+        "B",
+    );
+    value("layers", layers as f64, "");
+    value("iters", iters as f64, "");
+
+    std::fs::remove_file(&path).ok();
+    std::fs::remove_file(&spath).ok();
+    emit_collected("store");
+}

@@ -299,13 +299,19 @@ pub fn emit_json(
         ("schema", Json::num(1.0)),
         ("entries", Json::Arr(entries)),
     ]);
-    std::fs::write(path, root.to_string_with_capacity(4096))
+    // Atomic: the trajectory is append-only history — a crash mid-rewrite
+    // must not destroy every prior run's entries.
+    crate::util::atomic_write(
+        path,
+        root.to_string_with_capacity(4096).as_bytes(),
+    )
 }
 
 /// Drain everything this process recorded via `Bench::run` and `value`
 /// and append it as one trajectory entry for `target` — the single call a
-/// bench target makes at the end of `main`. Panics on IO errors (bench
-/// targets have no error channel worth threading).
+/// bench target makes at the end of `main`. An IO failure prints the
+/// offending path and exits nonzero (bench targets have no error channel
+/// worth threading, but a full disk should name the file, not backtrace).
 pub fn emit_collected(target: &str) {
     let (results, vals) = {
         let mut c = collected().lock().unwrap();
@@ -315,8 +321,10 @@ pub fn emit_collected(target: &str) {
         vals.iter().map(|(k, v)| (k.as_str(), *v)).collect();
     let path = trajectory_path(target);
     let fp = run_fingerprint();
-    emit_json(&path, target, &results, &metrics, Some(&fp))
-        .unwrap_or_else(|e| panic!("writing {}: {e}", path.display()));
+    if let Err(e) = emit_json(&path, target, &results, &metrics, Some(&fp)) {
+        eprintln!("error: {}", crate::util::io_ctx("writing", &path, e));
+        std::process::exit(1);
+    }
     println!(
         "trajectory {} updated ({} timings, {} values)",
         path.display(),

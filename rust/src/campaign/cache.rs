@@ -35,7 +35,12 @@ use std::path::{Path, PathBuf};
 /// v5: engine parameters carry injected faults (`faults`) and summaries
 /// grew the fault/robustness fields (`faults`, `lost_ms`, `blocked_ms`,
 /// `status`).
-pub const SCHEMA_VERSION: u32 = 5;
+///
+/// v6: campaigns can persist binary trace stores next to summaries
+/// (`<name>-<fp:016x>.ctrc`, `campaign --trace-store`), and `--resume`
+/// may rebuild a summary from a finalized (non-salvaged) store instead of
+/// re-running the engine.
+pub const SCHEMA_VERSION: u32 = 6;
 
 pub use crate::util::prng::fnv1a;
 
@@ -96,6 +101,18 @@ impl Cache {
         self.dir.join(format!("{}-{fp:016x}.json", sanitize(name)))
     }
 
+    /// Binary trace-store path for a scenario name + fingerprint
+    /// (`campaign --trace-store` artifacts, same content addressing as the
+    /// JSON summaries). A `.tmp` sibling of this path is a torn store left
+    /// by a crashed run — `chopper fsck` can salvage it.
+    pub fn store_path_for(&self, name: &str, fp: u64) -> PathBuf {
+        self.dir.join(format!(
+            "{}-{fp:016x}.{}",
+            sanitize(name),
+            crate::trace::store::STORE_EXT
+        ))
+    }
+
     /// Load a cached summary if one exists for exactly this fingerprint.
     /// Corrupt or mismatched artifacts are treated as misses: an entry
     /// that exists but fails to parse (truncated by a crash predating
@@ -119,15 +136,15 @@ impl Cache {
 
     /// Persist a summary; returns the artifact path.
     ///
-    /// Crash-safe: the JSON is written to a `.tmp` sibling and renamed
-    /// into place, so a process killed mid-write can never leave a
-    /// truncated artifact under the final content-addressed name —
-    /// `campaign --resume` then sees either the complete entry or none.
+    /// Crash-safe: the JSON goes through [`crate::util::atomic_write`]
+    /// (tmp sibling + fsync + rename — the pattern this cache originated,
+    /// now shared by every artifact writer), so a process killed mid-write
+    /// can never leave a truncated artifact under the final
+    /// content-addressed name — `campaign --resume` then sees either the
+    /// complete entry or none.
     pub fn store(&self, s: &ScenarioSummary) -> io::Result<PathBuf> {
         let path = self.path_for(&s.name, s.fingerprint);
-        let tmp = path.with_extension("json.tmp");
-        std::fs::write(&tmp, s.to_json_str())?;
-        std::fs::rename(&tmp, &path)?;
+        crate::util::atomic_write(&path, s.to_json_str().as_bytes())?;
         Ok(path)
     }
 }

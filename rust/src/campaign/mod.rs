@@ -28,6 +28,6 @@ pub use compare::{
 };
 pub use grid::{GridSpec, Knob, Scenario};
 pub use runner::{
-    default_jobs, run_campaign, run_ordered, summarize, summarize_serving,
-    CampaignOutcome, ScenarioSummary,
+    default_jobs, run_campaign, run_campaign_stored, run_ordered, summarize,
+    summarize_serving, CampaignOutcome, ScenarioSummary,
 };

@@ -588,6 +588,11 @@ pub struct CampaignOutcome {
     pub executed: usize,
     /// Scenarios served from the on-disk cache.
     pub cached: usize,
+    /// Scenarios whose summary was rebuilt from a finalized on-disk trace
+    /// store (`campaign --trace-store` + `--resume`) instead of re-running
+    /// the engine. Salvaged (partially recovered) stores never count here —
+    /// they are reported and the scenario re-runs.
+    pub restored: usize,
     /// Scenarios that panicked and were isolated (status "failed").
     pub failed: usize,
 }
@@ -632,8 +637,118 @@ pub fn run_campaign(
     cache: Option<&Cache>,
     force: bool,
 ) -> CampaignOutcome {
+    run_campaign_stored(node, scenarios, jobs, cache, force, false)
+}
+
+/// Rebuild a scenario summary from a previously finalized trace store on
+/// disk, if one exists. Only a clean, finalized, never-salvaged store
+/// qualifies: [`summarize`] is a pure function of the trace and power
+/// telemetry, so a summary rebuilt from a complete store is identical to
+/// the one the original run produced — while a salvaged prefix is not, so
+/// it is reported on stderr and the scenario re-runs instead.
+fn restore_from_store(
+    node: &NodeSpec,
+    sc: &Scenario,
+    fp: u64,
+    cache: &Cache,
+) -> Option<ScenarioSummary> {
+    let path = cache.store_path_for(&sc.name, fp);
+    if !path.exists() {
+        return None;
+    }
+    match crate::trace::store::read_store(&path) {
+        Ok(loaded) => {
+            if !loaded.report.clean() || loaded.report.salvaged_upstream {
+                eprintln!(
+                    "campaign: store {} is {}; re-running scenario",
+                    path.display(),
+                    loaded.report.describe()
+                );
+                return None;
+            }
+            let run = ProfiledRun {
+                trace: loaded.trace,
+                power: loaded.power,
+                counters: Default::default(),
+                cpu: Default::default(),
+                alloc: Default::default(),
+                iter_bounds: loaded.iter_bounds,
+            };
+            Some(summarize(node, sc, fp, &run))
+        }
+        Err(e) => {
+            eprintln!(
+                "campaign: unreadable store {} ({e}); re-running scenario",
+                path.display()
+            );
+            None
+        }
+    }
+}
+
+/// Execute one training scenario with the engine streaming events straight
+/// into an on-disk trace store (bounded memory: chunks flush at iteration
+/// boundaries), then reload the finalized store and summarize from the
+/// reloaded copy. Summarizing from the bytes on disk — not the in-memory
+/// trace — means every `--trace-store` campaign continuously verifies the
+/// round trip; a format defect can never hide behind the original vector.
+fn run_streamed(
+    topo: &Topology,
+    sc: &Scenario,
+    store_path: &std::path::Path,
+) -> Result<ProfiledRun, String> {
+    use crate::trace::store::{read_store, SharedSink, StoreWriter};
+    use std::cell::RefCell;
+    use std::rc::Rc;
+    let meta = crate::sim::provisional_meta(topo, &sc.wl);
+    let w = StoreWriter::create(store_path, &meta)
+        .map_err(|e| crate::util::io_ctx("creating", store_path, e))?;
+    let shared = Rc::new(RefCell::new(w));
+    let mut run = crate::sim::run_workload_topo_sink(
+        topo,
+        &sc.model,
+        &sc.wl,
+        sc.params.clone(),
+        Box::new(SharedSink(shared.clone())),
+    );
+    // The engine dropped its sink handle when the run ended, so the Rc is
+    // unique again and the writer can be finalized by value.
+    let w = Rc::try_unwrap(shared)
+        .map_err(|_| "store writer still shared after run".to_string())?
+        .into_inner();
+    w.finalize(&run.trace.meta, &run.power, &run.iter_bounds)
+        .map_err(|e| crate::util::io_ctx("finalizing", store_path, e))?;
+    let loaded = read_store(store_path)?;
+    if !loaded.report.clean() {
+        return Err(format!(
+            "freshly finalized store is {}",
+            loaded.report.describe()
+        ));
+    }
+    run.trace = loaded.trace;
+    run.power = loaded.power;
+    run.iter_bounds = loaded.iter_bounds;
+    Ok(run)
+}
+
+/// [`run_campaign`] with an explicit trace-store switch (`campaign
+/// --trace-store`). With it on (and a cache present), training scenarios
+/// stream their events to `<cache>/<name>-<fp:016x>.ctrc` while running and
+/// are summarized from the reloaded store; on resume, a finalized store can
+/// rebuild a missing summary without re-running the engine. Store failures
+/// of any kind degrade to the plain in-memory path — the sweep's results
+/// never depend on disk health, only its speed does.
+pub fn run_campaign_stored(
+    node: &NodeSpec,
+    scenarios: &[Scenario],
+    jobs: usize,
+    cache: Option<&Cache>,
+    force: bool,
+    trace_store: bool,
+) -> CampaignOutcome {
     let executed = AtomicUsize::new(0);
     let cached = AtomicUsize::new(0);
+    let restored = AtomicUsize::new(0);
     let failed = AtomicUsize::new(0);
     let summaries = run_ordered(scenarios, jobs, |_, sc| {
         let fp = fingerprint(node, sc);
@@ -641,6 +756,21 @@ pub fn run_campaign(
             if let Some(hit) = cache.and_then(|c| c.load(&sc.name, fp)) {
                 cached.fetch_add(1, Ordering::Relaxed);
                 return hit;
+            }
+            // Summary artifact missing (crashed before the write, or
+            // deleted) but the trace store survived: rebuild the summary
+            // from disk instead of burning an engine run.
+            if trace_store && sc.serving.is_none() {
+                if let Some(c) = cache {
+                    if let Some(summary) = restore_from_store(node, sc, fp, c)
+                    {
+                        // Heal the summary artifact so the next resume is
+                        // a plain cache hit.
+                        let _ = c.store(&summary);
+                        restored.fetch_add(1, Ordering::Relaxed);
+                        return summary;
+                    }
+                }
             }
         }
         // Per-scenario panic isolation: one scenario blowing up (an
@@ -664,12 +794,34 @@ pub fn run_campaign(
                     );
                     summarize_serving(node, sc, fp, &out)
                 } else {
-                    let run = run_workload_topo_with(
-                        &topo,
-                        &sc.model,
-                        &sc.wl,
-                        sc.params.clone(),
-                    );
+                    let run = match (trace_store, cache) {
+                        (true, Some(c)) => {
+                            let sp = c.store_path_for(&sc.name, fp);
+                            match run_streamed(&topo, sc, &sp) {
+                                Ok(run) => run,
+                                Err(e) => {
+                                    eprintln!(
+                                        "campaign: trace store for {} \
+                                         unusable ({e}); re-running \
+                                         in memory",
+                                        sc.name
+                                    );
+                                    run_workload_topo_with(
+                                        &topo,
+                                        &sc.model,
+                                        &sc.wl,
+                                        sc.params.clone(),
+                                    )
+                                }
+                            }
+                        }
+                        _ => run_workload_topo_with(
+                            &topo,
+                            &sc.model,
+                            &sc.wl,
+                            sc.params.clone(),
+                        ),
+                    };
                     summarize(node, sc, fp, &run)
                 }
             },
@@ -694,6 +846,7 @@ pub fn run_campaign(
         summaries,
         executed: executed.load(Ordering::Relaxed),
         cached: cached.load(Ordering::Relaxed),
+        restored: restored.load(Ordering::Relaxed),
         failed: failed.load(Ordering::Relaxed),
     }
 }

@@ -142,84 +142,142 @@ pub struct TraceIndex<'t> {
     requests: Option<RequestColumn>,
 }
 
-impl<'t> TraceIndex<'t> {
-    /// Build the index: one pass over the events, then per-bucket sorts.
-    pub fn build(trace: &'t Trace) -> Self {
-        let warmup = trace.meta.warmup;
-        let mut lanes: BTreeMap<(u32, Stream), Vec<u32>> = BTreeMap::new();
-        let mut inst_map: FxHashMap<InstKey, u32> = FxHashMap::default();
-        let mut instances: Vec<OpInstanceAgg> = Vec::new();
-        let mut inst_keys: Vec<InstKey> = Vec::new();
-        let mut iter_spans: BTreeMap<(u32, u32), (f64, f64)> = BTreeMap::new();
-        let mut compute_ns: BTreeMap<(u32, u32), f64> = BTreeMap::new();
-        let mut phase_dur: BTreeMap<(Phase, u32, u32), f64> = BTreeMap::new();
-        let mut pk_dur: BTreeMap<(Phase, OpKind, u32, u32), f64> = BTreeMap::new();
-        let mut comm_durs: BTreeMap<OpType, Vec<f64>> = BTreeMap::new();
-        // Compute-lane event indices per gpu, ParamCopy excluded.
-        let mut launch_seq: BTreeMap<u32, Vec<u32>> = BTreeMap::new();
+/// Incremental first pass of [`TraceIndex::build`]: the per-event
+/// accumulators, fed one event at a time. The chunk-wise store reader
+/// (`trace::store::for_each_chunk`) can drive this a chunk at a time while
+/// the trace materializes, instead of re-walking a finished event vector;
+/// [`TraceIndex::build`] itself is a feed-everything use of the same
+/// builder, so both paths aggregate identically. Events must arrive in the
+/// trace's canonical event order — `(t_start, kernel_id)` for engine and
+/// store-read traces.
+pub struct IndexBuilder {
+    warmup: u32,
+    next: u32,
+    lanes: BTreeMap<(u32, Stream), Vec<u32>>,
+    inst_map: FxHashMap<InstKey, u32>,
+    instances: Vec<OpInstanceAgg>,
+    inst_keys: Vec<InstKey>,
+    iter_spans: BTreeMap<(u32, u32), (f64, f64)>,
+    compute_ns: BTreeMap<(u32, u32), f64>,
+    phase_dur: BTreeMap<(Phase, u32, u32), f64>,
+    pk_dur: BTreeMap<(Phase, OpKind, u32, u32), f64>,
+    comm_durs: BTreeMap<OpType, Vec<f64>>,
+    /// Compute-lane event indices per gpu, ParamCopy excluded.
+    launch_seq: BTreeMap<u32, Vec<u32>>,
+}
 
-        for (i, e) in trace.events.iter().enumerate() {
-            lanes.entry((e.gpu, e.stream)).or_default().push(i as u32);
+impl IndexBuilder {
+    pub fn new(warmup: u32) -> Self {
+        IndexBuilder {
+            warmup,
+            next: 0,
+            lanes: BTreeMap::new(),
+            inst_map: FxHashMap::default(),
+            instances: Vec::new(),
+            inst_keys: Vec::new(),
+            iter_spans: BTreeMap::new(),
+            compute_ns: BTreeMap::new(),
+            phase_dur: BTreeMap::new(),
+            pk_dur: BTreeMap::new(),
+            comm_durs: BTreeMap::new(),
+            launch_seq: BTreeMap::new(),
+        }
+    }
 
-            let stream_tag = match e.stream {
-                Stream::Compute => 0u8,
-                Stream::Comm => 1,
-            };
-            let key = (e.gpu, e.iter, e.op, e.layer, stream_tag);
-            let slot = *inst_map.entry(key).or_insert_with(|| {
-                instances.push(OpInstanceAgg {
-                    gpu: e.gpu,
-                    iter: e.iter,
-                    op: e.op,
-                    layer: e.layer,
-                    t_start: f64::INFINITY,
-                    t_end: f64::NEG_INFINITY,
-                    kernel_ns: 0.0,
-                    kernels: 0,
-                    flops: 0.0,
-                    bytes: 0.0,
-                    kernel_ids: Vec::new(),
-                });
-                inst_keys.push(key);
-                (instances.len() - 1) as u32
+    /// Events folded so far.
+    pub fn events_seen(&self) -> u32 {
+        self.next
+    }
+
+    /// Fold one event (the i-th pushed overall).
+    pub fn push(&mut self, e: &TraceEvent) {
+        let warmup = self.warmup;
+        let i = self.next;
+        self.next += 1;
+        self.lanes.entry((e.gpu, e.stream)).or_default().push(i);
+
+        let stream_tag = match e.stream {
+            Stream::Compute => 0u8,
+            Stream::Comm => 1,
+        };
+        let key = (e.gpu, e.iter, e.op, e.layer, stream_tag);
+        let instances = &mut self.instances;
+        let inst_keys = &mut self.inst_keys;
+        let slot = *self.inst_map.entry(key).or_insert_with(|| {
+            instances.push(OpInstanceAgg {
+                gpu: e.gpu,
+                iter: e.iter,
+                op: e.op,
+                layer: e.layer,
+                t_start: f64::INFINITY,
+                t_end: f64::NEG_INFINITY,
+                kernel_ns: 0.0,
+                kernels: 0,
+                flops: 0.0,
+                bytes: 0.0,
+                kernel_ids: Vec::new(),
             });
-            let inst = &mut instances[slot as usize];
-            inst.t_start = inst.t_start.min(e.t_start);
-            inst.t_end = inst.t_end.max(e.t_end);
-            inst.kernel_ns += e.duration();
-            inst.kernels += 1;
-            inst.flops += e.flops;
-            inst.bytes += e.bytes;
-            inst.kernel_ids.push(e.kernel_id);
+            inst_keys.push(key);
+            (instances.len() - 1) as u32
+        });
+        let inst = &mut self.instances[slot as usize];
+        inst.t_start = inst.t_start.min(e.t_start);
+        inst.t_end = inst.t_end.max(e.t_end);
+        inst.kernel_ns += e.duration();
+        inst.kernels += 1;
+        inst.flops += e.flops;
+        inst.bytes += e.bytes;
+        inst.kernel_ids.push(e.kernel_id);
 
-            match e.stream {
-                Stream::Comm => {
-                    if e.iter >= warmup {
-                        comm_durs.entry(e.op.op).or_default().push(e.duration());
-                    }
+        match e.stream {
+            Stream::Comm => {
+                if e.iter >= warmup {
+                    self.comm_durs.entry(e.op.op).or_default().push(e.duration());
                 }
-                Stream::Compute => {
-                    let s = iter_spans
-                        .entry((e.gpu, e.iter))
-                        .or_insert((f64::INFINITY, f64::NEG_INFINITY));
-                    s.0 = s.0.min(e.t_start);
-                    s.1 = s.1.max(e.t_end);
-                    *compute_ns.entry((e.gpu, e.iter)).or_insert(0.0) +=
-                        e.duration();
-                    if e.iter >= warmup {
-                        *phase_dur
-                            .entry((e.op.phase, e.gpu, e.iter))
-                            .or_insert(0.0) += e.duration();
-                        *pk_dur
-                            .entry((e.op.phase, e.kind(), e.gpu, e.iter))
-                            .or_insert(0.0) += e.duration();
-                    }
-                    if e.op.op != OpType::ParamCopy {
-                        launch_seq.entry(e.gpu).or_default().push(i as u32);
-                    }
+            }
+            Stream::Compute => {
+                let s = self
+                    .iter_spans
+                    .entry((e.gpu, e.iter))
+                    .or_insert((f64::INFINITY, f64::NEG_INFINITY));
+                s.0 = s.0.min(e.t_start);
+                s.1 = s.1.max(e.t_end);
+                *self.compute_ns.entry((e.gpu, e.iter)).or_insert(0.0) +=
+                    e.duration();
+                if e.iter >= warmup {
+                    *self
+                        .phase_dur
+                        .entry((e.op.phase, e.gpu, e.iter))
+                        .or_insert(0.0) += e.duration();
+                    *self
+                        .pk_dur
+                        .entry((e.op.phase, e.kind(), e.gpu, e.iter))
+                        .or_insert(0.0) += e.duration();
+                }
+                if e.op.op != OpType::ParamCopy {
+                    self.launch_seq.entry(e.gpu).or_default().push(i);
                 }
             }
         }
+    }
+
+    /// Finishing pass: per-bucket sorts and rollups that need the whole
+    /// trace. `trace` must hold exactly the pushed events, in push order.
+    pub fn finish<'t>(self, trace: &'t Trace) -> TraceIndex<'t> {
+        let IndexBuilder {
+            warmup,
+            next: _,
+            mut lanes,
+            inst_map: _,
+            instances,
+            inst_keys,
+            iter_spans,
+            compute_ns,
+            phase_dur,
+            pk_dur,
+            comm_durs,
+            mut launch_seq,
+        } = self;
 
         // Instance partition in the old BTreeMap-grouping order.
         let mut perm: Vec<u32> = (0..instances.len() as u32).collect();
@@ -352,7 +410,7 @@ impl<'t> TraceIndex<'t> {
                 .push(v);
         }
 
-        Self {
+        TraceIndex {
             trace,
             comm,
             instances,
@@ -376,6 +434,18 @@ impl<'t> TraceIndex<'t> {
             energy: None,
             requests: None,
         }
+    }
+}
+
+impl<'t> TraceIndex<'t> {
+    /// Build the index: one pass over the events (an [`IndexBuilder`]
+    /// fold), then per-bucket sorts.
+    pub fn build(trace: &'t Trace) -> Self {
+        let mut b = IndexBuilder::new(trace.meta.warmup);
+        for e in &trace.events {
+            b.push(e);
+        }
+        b.finish(trace)
     }
 
     /// Build and immediately attach the counter-derived metrics column.

@@ -26,7 +26,7 @@ pub use aggregate::{op_duration_samples, op_instances, Filter, OpInstanceAgg};
 pub use align::AlignedTrace;
 pub use breakdown::{all_breakdowns, op_breakdown, OpBreakdown};
 pub use cpuutil::CpuUtilAnalysis;
-pub use index::{RequestColumn, TraceIndex};
+pub use index::{IndexBuilder, RequestColumn, TraceIndex};
 pub use serving::{serving_energy, serving_goodput, serving_latency};
 pub use launch::{launch_overhead, op_launch_overheads, LaunchOverhead};
 pub use overlap::{

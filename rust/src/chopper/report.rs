@@ -53,12 +53,18 @@ pub struct Figure {
 
 impl Figure {
     /// Write ascii/csv/svg files into `dir` as `<id>.{txt,csv,svg}`.
+    /// Each file lands atomically ([`crate::util::atomic_write`]): a
+    /// figure regenerated over an existing one can never be observed
+    /// half-written, even if the process dies mid-save.
     pub fn save(&self, dir: &std::path::Path) -> std::io::Result<()> {
         std::fs::create_dir_all(dir)?;
-        std::fs::write(dir.join(format!("{}.txt", self.id)), &self.ascii)?;
-        std::fs::write(dir.join(format!("{}.csv", self.id)), &self.csv)?;
+        let w = |name: String, bytes: &[u8]| {
+            crate::util::atomic_write(&dir.join(name), bytes)
+        };
+        w(format!("{}.txt", self.id), self.ascii.as_bytes())?;
+        w(format!("{}.csv", self.id), self.csv.as_bytes())?;
         if let Some(svg) = &self.svg {
-            std::fs::write(dir.join(format!("{}.svg", self.id)), svg)?;
+            w(format!("{}.svg", self.id), svg.as_bytes())?;
         }
         Ok(())
     }

@@ -30,7 +30,7 @@ USAGE: chopper <subcommand> [options]
            [--ablate knob=v1,v2[;knob2=...]]
            [--faults 'none;straggler(factor=0.8)+stalls(rate=0.02)']
            [--jobs N] [--cache-dir DIR] [--force] [--no-cache] [--resume]
-           [--out DIR]
+           [--trace-store] [--out DIR]
            Expand the scenario grid (model × workload × topology ×
            governor policy × engine-parameter ablations × injected fault
            sets), fan scenarios out over worker threads, reuse cached
@@ -42,6 +42,11 @@ USAGE: chopper <subcommand> [options]
            that panics is isolated: marked `failed`, the sweep continues,
            and --resume retries exactly the missing/failed scenarios of an
            interrupted or partly-failed campaign from the cache.
+           --trace-store streams each training scenario's events to a
+           checksummed binary store (<cache>/<name>-<fp>.ctrc) while it
+           runs; --resume rebuilds missing summaries from finalized
+           stores without re-running, and `chopper fsck` salvages the
+           torn .ctrc.tmp a killed run leaves behind.
            Knobs: spin_penalty transfer_penalty comm_stretch rank_jitter
            compute_jitter dispatch_jitter comm_delay_sigma_ns
            far_rank_delay_ns dvfs_window_ns margin_k fixed_cap_ratio.
@@ -72,10 +77,20 @@ USAGE: chopper <subcommand> [options]
   figure   <table2|fig4..fig15|all> [--layers N] [--iters N] [--out DIR]
            Regenerate one figure; prints the ASCII rendering.
   collect  [--workload b2s4] [--fsdp v1|v2] [--nodes N] [--sharding
-           fsdp|hsdp] [--layers N] [--iters N] [--out trace.json]
-           Runtime-profile one workload and write a chrome trace.
-  analyze  <trace.json>
-           Aggregate statistics from a chrome trace (any source: sim/pjrt).
+           fsdp|hsdp] [--layers N] [--iters N] [--store] [--out PATH]
+           Runtime-profile one workload and write a chrome trace
+           (trace.json). With --store, stream events out-of-core into the
+           checksummed binary columnar store instead (trace.ctrc; bounded
+           memory, crash-safe, `chopper analyze` reads both).
+  analyze  <trace.json|trace.ctrc>
+           Aggregate statistics from a trace file (chrome JSON from any
+           source, or a binary .ctrc store — damaged stores are salvaged
+           and the loss is reported).
+  fsck     <trace.ctrc[.tmp]> [--repair]
+           Validate a binary trace store chunk by chunk (magic, framing,
+           CRC32, footer). Damage exits nonzero and reports exactly what
+           survives; --repair rewrites the longest valid prefix as a
+           finalized store (a torn `x.ctrc.tmp` repairs to `x.ctrc`).
   train    [--steps N] [--lr X] [--seed N] [--artifacts DIR]
            Train the executable mini-Llama via the PJRT runtime.
   config   [--model llama3-8b|mini]
@@ -168,10 +183,18 @@ pub fn cmd_campaign(args: &mut Args) -> Result<(), String> {
     let force = args.switch("force");
     let no_cache = args.switch("no-cache");
     let resume = args.switch("resume");
+    let trace_store = args.switch("trace-store");
     let out = args.flag("out").map(PathBuf::from);
     args.finish()?;
     if resume && no_cache {
         return Err("campaign: --resume needs the cache (drop --no-cache)".into());
+    }
+    if trace_store && no_cache {
+        return Err(
+            "campaign: --trace-store writes stores into the cache directory \
+             (drop --no-cache)"
+                .into(),
+        );
     }
     if resume && force {
         return Err(
@@ -240,7 +263,9 @@ pub fn cmd_campaign(args: &mut Args) -> Result<(), String> {
     if resume {
         // Pre-scan so an interrupted campaign says up front how much of
         // the grid survives (the run itself reuses the same cache hits).
-        let c = cache.as_ref().expect("resume implies cache");
+        let c = cache
+            .as_ref()
+            .ok_or("campaign: --resume needs an open cache")?;
         let done = scenarios
             .iter()
             .filter(|sc| {
@@ -253,14 +278,27 @@ pub fn cmd_campaign(args: &mut Args) -> Result<(), String> {
         );
     }
     let t0 = std::time::Instant::now();
-    let outcome =
-        campaign::run_campaign(&node, &scenarios, jobs, cache.as_ref(), force);
+    let outcome = campaign::run_campaign_stored(
+        &node,
+        &scenarios,
+        jobs,
+        cache.as_ref(),
+        force,
+        trace_store,
+    );
     eprintln!(
         "campaign: {} executed, {} cached in {:.2}s",
         outcome.executed,
         outcome.cached,
         t0.elapsed().as_secs_f64()
     );
+    if outcome.restored > 0 {
+        eprintln!(
+            "campaign: {} summary(ies) rebuilt from finalized trace stores \
+             (no engine re-run)",
+            outcome.restored
+        );
+    }
     if outcome.failed > 0 {
         eprintln!(
             "campaign: {} scenario(s) failed and were isolated (not cached; \
@@ -503,9 +541,11 @@ pub fn cmd_serve(args: &mut Args) -> Result<(), String> {
             json.push_str(if i + 1 < reports.len() { ",\n" } else { "\n" });
         }
         json.push_str("]\n");
-        std::fs::create_dir_all(dir).map_err(|e| e.to_string())?;
+        std::fs::create_dir_all(dir)
+            .map_err(|e| crate::util::io_ctx("creating", dir, e))?;
         let path = dir.join("serving_summary.json");
-        std::fs::write(&path, json).map_err(|e| e.to_string())?;
+        crate::util::atomic_write(&path, json.as_bytes())
+            .map_err(|e| crate::util::io_ctx("writing", &path, e))?;
         eprintln!("wrote {}", path.display());
     }
     Ok(())
@@ -559,6 +599,51 @@ pub fn cmd_figure(args: &mut Args) -> Result<(), String> {
     Ok(())
 }
 
+/// `collect --store`: stream the workload's events straight into an
+/// on-disk trace store (bounded memory — chunks flush at iteration
+/// boundaries), finalize it, and reload it. The analysis `collect` prints
+/// afterwards runs on the reloaded copy, so every invocation exercises the
+/// full write→read round trip.
+fn collect_streamed(
+    topo: &Topology,
+    cfg: &ModelConfig,
+    wl: &WorkloadConfig,
+    out: &std::path::Path,
+) -> Result<crate::sim::ProfiledRun, String> {
+    use crate::trace::store::{read_store, SharedSink, StoreWriter};
+    use std::cell::RefCell;
+    use std::rc::Rc;
+    let meta = crate::sim::provisional_meta(topo, wl);
+    let w = StoreWriter::create(out, &meta)
+        .map_err(|e| crate::util::io_ctx("creating", out, e))?;
+    let shared = Rc::new(RefCell::new(w));
+    let mut run = crate::sim::run_workload_topo_sink(
+        topo,
+        cfg,
+        wl,
+        crate::sim::EngineParams::default(),
+        Box::new(SharedSink(shared.clone())),
+    );
+    let w = Rc::try_unwrap(shared)
+        .map_err(|_| "store writer still shared after run".to_string())?
+        .into_inner();
+    let info = w
+        .finalize(&run.trace.meta, &run.power, &run.iter_bounds)
+        .map_err(|e| crate::util::io_ctx("finalizing", out, e))?;
+    eprintln!(
+        "store: {} chunk(s), {} power samples, {} bytes ({:.1} B/event)",
+        info.chunks,
+        info.samples,
+        info.bytes,
+        info.bytes as f64 / info.events.max(1) as f64
+    );
+    let loaded = read_store(out)?;
+    run.trace = loaded.trace;
+    run.power = loaded.power;
+    run.iter_bounds = loaded.iter_bounds;
+    Ok(run)
+}
+
 pub fn cmd_collect(args: &mut Args) -> Result<(), String> {
     let cfg = model_with_layers(args)?;
     let label = args.flag_or("workload", "b2s4");
@@ -569,7 +654,10 @@ pub fn cmd_collect(args: &mut Args) -> Result<(), String> {
         .ok_or_else(|| format!("bad --sharding {sharding_s} (use fsdp/hsdp)"))?;
     let iters = args.flag_u32("iters", 20)?;
     let warmup = args.flag_u32("warmup", iters / 2)?;
-    let out: PathBuf = args.flag_or("out", "trace.json").into();
+    let store = args.switch("store");
+    let out: PathBuf = args
+        .flag_or("out", if store { "trace.ctrc" } else { "trace.json" })
+        .into();
     args.finish()?;
     let mut wl = WorkloadConfig::parse_label(&label, fsdp)
         .ok_or_else(|| format!("bad --workload {label}"))?;
@@ -577,8 +665,14 @@ pub fn cmd_collect(args: &mut Args) -> Result<(), String> {
     wl.iterations = iters;
     wl.warmup = warmup;
     let topo = Topology::mi300x_cluster(nodes);
-    let run = run_workload_topo(&topo, &cfg, &wl);
-    chrome::write_chrome_trace(&run.trace, &out).map_err(|e| e.to_string())?;
+    let run = if store {
+        collect_streamed(&topo, &cfg, &wl, &out)?
+    } else {
+        let run = run_workload_topo(&topo, &cfg, &wl);
+        chrome::write_chrome_trace(&run.trace, &out)
+            .map_err(|e| crate::util::io_ctx("writing", &out, e))?;
+        run
+    };
     println!(
         "wrote {} ({} events, span {})",
         out.display(),
@@ -618,7 +712,17 @@ pub fn cmd_analyze(args: &mut Args) -> Result<(), String> {
         .take_positional()
         .ok_or("analyze: missing trace path")?;
     args.finish()?;
-    let trace = chrome::read_chrome_trace(std::path::Path::new(&path))?;
+    let p = std::path::Path::new(&path);
+    // Sniff the 8-byte magic: `analyze` takes chrome JSON and binary
+    // stores through the same front door. A damaged store is salvaged,
+    // never fatal — the status line says exactly what was lost.
+    let trace = if crate::trace::store::is_store_file(p) {
+        let loaded = crate::trace::store::read_store(p)?;
+        println!("store: {}", loaded.report.describe());
+        loaded.trace
+    } else {
+        chrome::read_chrome_trace(p)?
+    };
     println!(
         "trace: {} events, {} GPUs, workload {} ({}), source {}",
         trace.events.len(),
@@ -663,6 +767,52 @@ pub fn cmd_analyze(args: &mut Args) -> Result<(), String> {
             samples.len()
         );
     }
+    Ok(())
+}
+
+/// `fsck` — validate a binary trace store chunk by chunk and optionally
+/// repair it. Clean stores exit 0; damage without `--repair` exits
+/// nonzero (so CI and scripts can gate on store health); `--repair`
+/// rewrites the longest checksum-valid prefix as a finalized store whose
+/// footer is marked salvaged. A torn `x.ctrc.tmp` (left by a killed
+/// writer) repairs to `x.ctrc`; anything else repairs in place.
+pub fn cmd_fsck(args: &mut Args) -> Result<(), String> {
+    let path = args
+        .take_positional()
+        .ok_or("fsck: missing store path (trace.ctrc or trace.ctrc.tmp)")?;
+    let repair = args.switch("repair");
+    args.finish()?;
+    let p = std::path::Path::new(&path);
+    let report = crate::trace::store::check_store(p)?;
+    println!("{}: {}", p.display(), report.describe());
+    if report.clean() {
+        return Ok(());
+    }
+    if !repair {
+        return Err(format!(
+            "{} is damaged ({} of {} bytes valid; re-run with --repair to \
+             salvage {} events into a finalized store)",
+            p.display(),
+            report.valid_bytes,
+            report.file_bytes,
+            report.events
+        ));
+    }
+    let dst = match p.extension().and_then(|e| e.to_str()) {
+        Some("tmp") => p.with_extension(""),
+        _ => p.to_path_buf(),
+    };
+    let info = crate::trace::store::repair_store(p, &dst)?;
+    println!(
+        "repaired {} -> {} ({} events, {} chunk(s), {} power samples; \
+         {} bytes lost)",
+        p.display(),
+        info.dst.display(),
+        info.events,
+        info.chunks,
+        info.samples,
+        info.lost_bytes
+    );
     Ok(())
 }
 
@@ -994,5 +1144,102 @@ mod tests {
     #[test]
     fn figure_validates_id() {
         assert_eq!(run_cli("chopper figure nope --layers 1 --iters 2"), 1);
+    }
+
+    #[test]
+    fn collect_store_analyze_fsck_roundtrip() {
+        let dir = std::env::temp_dir()
+            .join(format!("chopper_cli_store_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let store = dir.join("t.ctrc");
+        let cmd = format!(
+            "chopper collect --workload b1s4 --fsdp v2 --layers 2 --iters 2 \
+             --warmup 1 --store --out {}",
+            store.display()
+        );
+        assert_eq!(run_cli(&cmd), 0);
+        assert!(store.exists());
+        // analyze sniffs the magic and reads the binary store directly.
+        assert_eq!(
+            run_cli(&format!("chopper analyze {}", store.display())),
+            0
+        );
+        // fsck: clean store exits 0.
+        assert_eq!(run_cli(&format!("chopper fsck {}", store.display())), 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fsck_flags_torn_store_and_repairs_it() {
+        let dir = std::env::temp_dir()
+            .join(format!("chopper_cli_fsck_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let store = dir.join("t.ctrc");
+        let cmd = format!(
+            "chopper collect --workload b1s4 --fsdp v1 --layers 2 --iters 2 \
+             --warmup 1 --store --out {}",
+            store.display()
+        );
+        assert_eq!(run_cli(&cmd), 0);
+        // Tear it like a kill -9 mid-write: keep a prefix under the torn
+        // `.tmp` name the writer uses.
+        let bytes = std::fs::read(&store).unwrap();
+        let torn = dir.join("t2.ctrc.tmp");
+        std::fs::write(&torn, &bytes[..bytes.len() / 2]).unwrap();
+        // Damaged without --repair: nonzero.
+        assert_eq!(run_cli(&format!("chopper fsck {}", torn.display())), 1);
+        // --repair strips the .tmp and finalizes the salvaged prefix.
+        assert_eq!(
+            run_cli(&format!("chopper fsck {} --repair", torn.display())),
+            0
+        );
+        let fixed = dir.join("t2.ctrc");
+        assert!(fixed.exists());
+        assert_eq!(run_cli(&format!("chopper fsck {}", fixed.display())), 0);
+        assert_eq!(
+            run_cli(&format!("chopper analyze {}", fixed.display())),
+            0
+        );
+        // Not-a-store input is a clean error, not a panic.
+        let junk = dir.join("junk.ctrc");
+        std::fs::write(&junk, b"not a store at all").unwrap();
+        assert_eq!(run_cli(&format!("chopper fsck {}", junk.display())), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn campaign_trace_store_writes_stores_and_validates_flags() {
+        // --trace-store writes into the cache, so --no-cache conflicts.
+        assert_eq!(
+            run_cli("chopper campaign --trace-store --no-cache --iters 2"),
+            1
+        );
+        let dir = std::env::temp_dir().join(format!(
+            "chopper_cli_tstore_{}",
+            std::process::id()
+        ));
+        let cache = dir.join("cache");
+        let base = format!(
+            "chopper campaign --layers 1 --batch 1 --seq 4 --fsdp v1 \
+             --iters 2 --warmup 1 --jobs 1 --trace-store --cache-dir {}",
+            cache.display()
+        );
+        assert_eq!(run_cli(&base), 0);
+        let stores: Vec<_> = std::fs::read_dir(&cache)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| {
+                e.path().extension().and_then(|x| x.to_str()) == Some("ctrc")
+            })
+            .collect();
+        assert_eq!(stores.len(), 1, "one scenario, one store");
+        // Resume after deleting the summary: rebuilt from the store.
+        for e in std::fs::read_dir(&cache).unwrap().filter_map(|e| e.ok()) {
+            if e.path().extension().and_then(|x| x.to_str()) == Some("json") {
+                std::fs::remove_file(e.path()).unwrap();
+            }
+        }
+        assert_eq!(run_cli(&format!("{base} --resume")), 0);
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

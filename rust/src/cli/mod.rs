@@ -11,7 +11,11 @@
 //!               report
 //!   figure    — regenerate one table/figure (fig4…fig15, table2)
 //!   collect   — profile one workload, write a chrome trace (+ telemetry)
-//!   analyze   — aggregate statistics from a chrome-trace file
+//!               or, with --store, a crash-safe binary trace store
+//!   analyze   — aggregate statistics from a trace file (chrome JSON or
+//!               binary .ctrc store)
+//!   fsck      — validate / repair a binary trace store (checksummed
+//!               chunks, truncation salvage)
 //!   train     — train the executable mini-Llama end to end via PJRT
 //!   config    — print the model configuration (Table II)
 //!
@@ -42,6 +46,7 @@ pub fn run(argv: Vec<String>) -> i32 {
         "figure" => commands::cmd_figure(&mut args),
         "collect" => commands::cmd_collect(&mut args),
         "analyze" => commands::cmd_analyze(&mut args),
+        "fsck" => commands::cmd_fsck(&mut args),
         "train" => commands::cmd_train(&mut args),
         "config" => commands::cmd_config(&mut args),
         "help" | "" => {

@@ -143,7 +143,7 @@ impl CachingAllocator {
 
 /// Run the allocator through `iters` iterations of `layers` gather/free
 /// pairs and report the power-noise statistics the DVFS model consumes.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, Default)]
 pub struct AllocStats {
     /// Mean fresh-allocation ratio.
     pub fresh_ratio: f64,

@@ -41,6 +41,7 @@ use crate::sim::dvfs::WindowActivity;
 use crate::sim::interconnect::{group_collective_base_ns, CollPhase, CollState};
 use crate::sim::power::{GovCtx, GovernorKind, GovernorPolicy};
 use crate::trace::event::{PowerSample, PowerTrace, Stream, Trace, TraceEvent};
+use crate::trace::store::TraceSink;
 use crate::util::hash::FxHashMap;
 use crate::util::intern::{intern, Sym};
 use crate::util::prng::Rng;
@@ -345,6 +346,14 @@ pub struct Engine<'a> {
     alloc: AllocStats,
     /// Resolved fault model (`NoFaults` when `params.faults` is empty).
     faults: Box<dyn crate::sim::faults::FaultModel>,
+    /// Optional streaming trace sink (trace::store). When attached, events
+    /// go to the sink instead of accumulating in `events`, so the full
+    /// event vector is never materialized.
+    sink: Option<Box<dyn TraceSink>>,
+    /// Whether events stream to the sink at emission. False under dropout
+    /// faults, whose global time-shift rewrite in `finish()` needs the
+    /// buffered vector — the sink is then fed after the rewrite.
+    sink_streams: bool,
 }
 
 impl<'a> Engine<'a> {
@@ -587,6 +596,8 @@ impl<'a> Engine<'a> {
             alloc,
             params,
             faults,
+            sink: None,
+            sink_streams: false,
         };
         for g in 0..r {
             eng.push(eng.params.dvfs_window_ns, EvKind::DvfsTick { rank: g });
@@ -993,7 +1004,7 @@ impl<'a> Engine<'a> {
             *s = s.min(k.t_start);
             *e = e.max(self.now);
         }
-        self.events.push(TraceEvent {
+        self.record_event(TraceEvent {
             kernel_id: id,
             gpu: rank as u32,
             stream: Stream::Compute,
@@ -1010,6 +1021,27 @@ impl<'a> Engine<'a> {
             flops: d.flops,
             bytes: d.bytes,
         });
+    }
+
+    /// Route a finished kernel's event to the buffered vector or, when a
+    /// streaming sink is attached, straight to it (bounded memory). The
+    /// flush watermark is the slowest rank's current iteration — every
+    /// iteration below it is complete and can leave the sink's buffer.
+    fn record_event(&mut self, ev: TraceEvent) {
+        if self.sink_streams {
+            if let Some(s) = self.sink.as_mut() {
+                s.event(&ev);
+                let w = self
+                    .ranks
+                    .iter()
+                    .map(|r| r.cur_iter)
+                    .min()
+                    .unwrap_or(0);
+                s.advance(w);
+                return;
+            }
+        }
+        self.events.push(ev);
     }
 
     // ------------------------------------------------------------------
@@ -1133,33 +1165,37 @@ impl<'a> Engine<'a> {
             debug_assert_eq!(self.ranks[rank].comm_occupied, Some(idx));
             self.ranks[rank].comm_occupied = None;
             self.device_work -= 1;
-            let c = &self.colls[idx];
             let id = self.next_kernel_id;
             self.next_kernel_id += 1;
             let seq = self.ranks[rank].seq_comm;
             self.ranks[rank].seq_comm += 1;
-            let name = match c.desc.op.op {
-                OpType::AllGather => self.name_allgather,
-                OpType::AllReduce => self.name_allreduce,
-                _ => self.name_reduce_scatter,
+            let freq_mhz = self.ranks[rank].gov.freq_mhz();
+            let ev = {
+                let c = &self.colls[idx];
+                let name = match c.desc.op.op {
+                    OpType::AllGather => self.name_allgather,
+                    OpType::AllReduce => self.name_allreduce,
+                    _ => self.name_reduce_scatter,
+                };
+                TraceEvent {
+                    kernel_id: id,
+                    gpu: rank as u32,
+                    stream: Stream::Comm,
+                    name,
+                    op: c.desc.op,
+                    layer: c.desc.scope.layer(),
+                    iter: c.desc.iter,
+                    t_launch: c.t_launch[rank],
+                    t_start: c.local_start[rank],
+                    t_end: self.now,
+                    seq,
+                    fwd_link: None,
+                    freq_mhz,
+                    flops: 0.0,
+                    bytes: c.desc.bytes,
+                }
             };
-            self.events.push(TraceEvent {
-                kernel_id: id,
-                gpu: rank as u32,
-                stream: Stream::Comm,
-                name,
-                op: c.desc.op,
-                layer: c.desc.scope.layer(),
-                iter: c.desc.iter,
-                t_launch: c.t_launch[rank],
-                t_start: c.local_start[rank],
-                t_end: self.now,
-                seq,
-                fwd_link: None,
-                freq_mhz: self.ranks[rank].gov.freq_mhz(),
-                flops: 0.0,
-                bytes: c.desc.bytes,
-            });
+            self.record_event(ev);
         }
         // Contention released: compute speeds back up on participants.
         for pi in 0..self.colls[idx].participants.len() {
@@ -1281,6 +1317,17 @@ impl<'a> Engine<'a> {
         fast
     }
 
+    /// Attach a streaming trace sink: events are handed over at emission
+    /// and `SimOutput.trace.events` comes back empty (read them from the
+    /// sink's store). Dropout-fault runs fall back to buffered feeding —
+    /// their global time-shift rewrite in `finish()` needs the vector —
+    /// so the sink still receives every (shifted) event, just not
+    /// incrementally.
+    pub fn set_sink(&mut self, sink: Box<dyn TraceSink>) {
+        self.sink_streams = self.faults.dropout().is_none();
+        self.sink = Some(sink);
+    }
+
     /// The pre-refactor exhaustive check (kept as the debug-mode oracle).
     fn done_scan(&self) -> bool {
         (0..self.ranks.len()).all(|r| {
@@ -1334,6 +1381,17 @@ impl<'a> Engine<'a> {
         // total_cmp: NaN timestamps (impossible today) would order
         // deterministically instead of silently comparing Equal.
         self.events.sort_by(|a, b| a.t_start.total_cmp(&b.t_start));
+        if let Some(s) = self.sink.as_mut() {
+            // Buffered-fallback streaming (dropout runs): feed the sink
+            // only now, after the time-shift rewrite and sort. On the
+            // streaming path `events` is already empty and this is a no-op
+            // apart from the final flush.
+            for e in &self.events {
+                s.event(e);
+            }
+            s.advance(u32::MAX);
+            self.events = Vec::new();
+        }
         self.host.span_ns = self.now;
         let gov_energy_j: Vec<f64> =
             self.ranks.iter().map(|r| r.gov.energy_j()).collect();

@@ -114,6 +114,55 @@ pub fn run_workload_topo_with(
     }
 }
 
+/// [`run_workload_topo_with`] with a streaming trace sink attached: the
+/// engine hands events to `sink` at emission (bounded memory, chunks leave
+/// the process as iterations complete), so the returned run's
+/// `trace.events` is empty — read the events back from the sink's store.
+/// Everything else (metadata, counters, power, cpu, iter_bounds) is
+/// identical to the buffered run.
+pub fn run_workload_topo_sink(
+    topo: &Topology,
+    cfg: &ModelConfig,
+    wl: &WorkloadConfig,
+    params: EngineParams,
+    sink: Box<dyn crate::trace::store::TraceSink>,
+) -> ProfiledRun {
+    let mut eng = Engine::with_topology(topo.clone(), cfg, wl, params);
+    eng.set_sink(sink);
+    let out = eng.run();
+    let counters = collect_counters_topo(topo, cfg, wl, &Counter::ALL, 3);
+    let host0 = out.host.node0(topo.gpus_per_node() as usize);
+    let cpu = cpu_trace(&topo.node, &host0, wl.seed, &HostModelParams::default());
+    ProfiledRun {
+        trace: out.trace,
+        counters,
+        power: out.power,
+        cpu,
+        alloc: out.alloc,
+        iter_bounds: out.iter_bounds,
+    }
+}
+
+/// The static trace metadata known *before* a run starts — what a
+/// streaming store writer stamps into its provisional META frame so even a
+/// torn file identifies its run. The engine's `finish()` rewrites the same
+/// fields (plus the fault fields that only settle at the end) into the
+/// store footer, which the reader prefers.
+pub fn provisional_meta(topo: &Topology, wl: &WorkloadConfig) -> crate::trace::TraceMeta {
+    let mut m = crate::trace::TraceMeta::default();
+    m.workload = wl.label();
+    m.fsdp = wl.fsdp.to_string();
+    m.num_gpus = topo.world_size();
+    m.num_nodes = topo.num_nodes;
+    m.gpus_per_node = topo.gpus_per_node();
+    m.sharding = wl.sharding.to_string();
+    m.iterations = wl.iterations;
+    m.warmup = wl.warmup;
+    m.seed = wl.seed;
+    m.source = "sim".into();
+    m
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

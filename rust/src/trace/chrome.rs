@@ -261,15 +261,18 @@ pub fn from_chrome_json(text: &str) -> Result<Trace, String> {
     Ok(trace)
 }
 
-/// Write a trace to a file.
+/// Write a trace to a file, atomically (tmp sibling + fsync + rename):
+/// an interrupted export never leaves a truncated JSON under `path`.
 pub fn write_chrome_trace(trace: &Trace, path: &std::path::Path) -> std::io::Result<()> {
-    std::fs::write(path, to_chrome_json(trace))
+    crate::util::atomic_write(path, to_chrome_json(trace).as_bytes())
 }
 
-/// Read a trace from a file.
+/// Read a trace from a file. Errors carry the offending path.
 pub fn read_chrome_trace(path: &std::path::Path) -> Result<Trace, String> {
-    let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| crate::util::io_ctx("reading", path, e))?;
     from_chrome_json(&text)
+        .map_err(|e| format!("{}: {e}", path.display()))
 }
 
 #[cfg(test)]

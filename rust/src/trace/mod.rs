@@ -4,13 +4,20 @@
 //! CPU samples); [`collect`] wraps the simulator and the PJRT runtime
 //! behind the same two profiler interfaces the paper uses (runtime
 //! profiling vs hardware profiling); [`chrome`] round-trips traces through
-//! chrome://tracing JSON so they can be inspected in Perfetto.
+//! chrome://tracing JSON so they can be inspected in Perfetto; [`store`]
+//! is the crash-safe out-of-core binary columnar format (checksummed
+//! chunks, truncation salvage, `chopper fsck`).
 
 pub mod chrome;
 pub mod collect;
 pub mod event;
+pub mod store;
 
 pub use event::{
     CpuSample, CpuTrace, PowerSample, PowerTrace, Stream, Trace, TraceEvent,
     TraceMeta,
+};
+pub use store::{
+    read_store, write_store, LoadedStore, SalvageReport, SharedSink,
+    StoreWriter, TraceSink,
 };

@@ -1,0 +1,1418 @@
+//! Crash-safe out-of-core columnar trace store (DESIGN.md §12).
+//!
+//! The in-memory `Vec<TraceEvent>` path stays the default — this module is
+//! the spill format for runs that should survive a crash or outlive RAM:
+//! a compact binary struct-of-arrays layout, split into per-iteration
+//! chunks, each length-prefixed and CRC32-checksummed, committed with the
+//! same tmp+rename discipline as every other artifact.
+//!
+//! ## On-disk layout (version 1)
+//!
+//! ```text
+//! [ 8] magic  b"CHOPTRC1"
+//! [ 4] u32 LE version = 1
+//! [ 4] u32 LE flags   = 0
+//! frames, each:
+//!   [ 4] u32 LE tag       ("META" | "EVNT" | "PWRC" | "FOOT")
+//!   [ 4] u32 LE payload length
+//!   [ 4] u32 LE CRC32 of the payload
+//!   [ n] payload
+//! [ 8] u64 LE file offset of the FOOT frame
+//! [ 8] magic  b"CHOPEND1"
+//! ```
+//!
+//! `META` (JSON) snapshots the provisional [`TraceMeta`] when the writer is
+//! created, so even a torn file identifies its run. `EVNT` frames are
+//! columnar event chunks (one training iteration each, split when an
+//! iteration exceeds [`CHUNK_EVENTS`]). `PWRC` frames are columnar power
+//! samples. `FOOT` (JSON) is written at finalize and carries the *final*
+//! metadata (fault fields only settle at the end of a run), iteration
+//! bounds, and frame counts; the reader prefers it over `META`.
+//!
+//! ## Robustness contract
+//!
+//! The writer streams to `<path>.tmp` and renames only after the footer,
+//! trailer and fsync — a finalized `.ctrc` is always complete. The reader
+//! never panics on damage: it walks frames until the first truncated or
+//! checksum-invalid one, salvages the longest valid prefix, and reports
+//! exactly what was lost in a [`SalvageReport`] (mirroring the campaign's
+//! `status`/`lost_ms` fault reporting). `chopper fsck` prints that report
+//! and `--repair` rewrites the valid prefix as a finalized store whose
+//! footer is flagged `salvaged` — analysis accepts such files, but the
+//! campaign cache refuses to rebuild summaries from them.
+//!
+//! Event order is not stored: the engine's canonical order is
+//! `(t_start, kernel_id)` (kernel ids are emission-monotone and the engine
+//! stable-sorts by start time), so the reader re-sorts and a roundtrip is
+//! bitwise identical to the in-memory trace.
+
+use crate::model::ops::{OpRef, OpType, Phase};
+use crate::trace::event::{PowerSample, PowerTrace, Stream, Trace, TraceEvent, TraceMeta};
+use crate::util::atomic_write::tmp_sibling;
+use crate::util::crc32::crc32;
+use crate::util::hash::FxHashMap;
+use crate::util::intern::intern;
+use crate::util::json::{self, Json};
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::io::{self, Read, Write};
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+pub const STORE_MAGIC: &[u8; 8] = b"CHOPTRC1";
+pub const STORE_END: &[u8; 8] = b"CHOPEND1";
+pub const STORE_VERSION: u32 = 1;
+/// Default store file extension (campaign cache uses `<name>-<fp>.ctrc`).
+pub const STORE_EXT: &str = "ctrc";
+
+pub const TAG_META: u32 = u32::from_le_bytes(*b"META");
+pub const TAG_EVNT: u32 = u32::from_le_bytes(*b"EVNT");
+pub const TAG_PWRC: u32 = u32::from_le_bytes(*b"PWRC");
+pub const TAG_FOOT: u32 = u32::from_le_bytes(*b"FOOT");
+
+/// Memory bound: an iteration's pending events are flushed as a chunk once
+/// they reach this count, even before the iteration completes. Chunk
+/// boundaries are a memory knob, never a correctness one — the reader
+/// re-sorts globally.
+pub const CHUNK_EVENTS: usize = 32 * 1024;
+/// Power samples per PWRC frame.
+const PWRC_SAMPLES: usize = 64 * 1024;
+/// Frames larger than this are rejected as corrupt before allocation.
+const MAX_FRAME: u32 = 1 << 30;
+
+// ---------------------------------------------------------------------------
+// Discriminant tables (explicit — `OpRef::parse` is lossy, so the binary
+// format carries its own codes; adding an OpType extends the end).
+// ---------------------------------------------------------------------------
+
+fn op_code(op: OpType) -> u8 {
+    match op {
+        OpType::IE => 0,
+        OpType::AttnN => 1,
+        OpType::QkvIp => 2,
+        OpType::QkvS => 3,
+        OpType::QkvT => 4,
+        OpType::QkvRe => 5,
+        OpType::QkvC => 6,
+        OpType::AttnFa => 7,
+        OpType::AttnOr => 8,
+        OpType::AttnOp => 9,
+        OpType::AttnRa => 10,
+        OpType::MlpN => 11,
+        OpType::MlpGp => 12,
+        OpType::MlpGs => 13,
+        OpType::MlpUp => 14,
+        OpType::MlpGu => 15,
+        OpType::MlpDp => 16,
+        OpType::MlpRa => 17,
+        OpType::Ln => 18,
+        OpType::Lp => 19,
+        OpType::GradAccum => 20,
+        OpType::OptStep => 21,
+        OpType::AllGather => 22,
+        OpType::ReduceScatter => 23,
+        OpType::AllReduce => 24,
+        OpType::ParamCopy => 25,
+        OpType::Prefill => 26,
+        OpType::Decode => 27,
+    }
+}
+
+fn code_op(code: u8) -> Option<OpType> {
+    Some(match code {
+        0 => OpType::IE,
+        1 => OpType::AttnN,
+        2 => OpType::QkvIp,
+        3 => OpType::QkvS,
+        4 => OpType::QkvT,
+        5 => OpType::QkvRe,
+        6 => OpType::QkvC,
+        7 => OpType::AttnFa,
+        8 => OpType::AttnOr,
+        9 => OpType::AttnOp,
+        10 => OpType::AttnRa,
+        11 => OpType::MlpN,
+        12 => OpType::MlpGp,
+        13 => OpType::MlpGs,
+        14 => OpType::MlpUp,
+        15 => OpType::MlpGu,
+        16 => OpType::MlpDp,
+        17 => OpType::MlpRa,
+        18 => OpType::Ln,
+        19 => OpType::Lp,
+        20 => OpType::GradAccum,
+        21 => OpType::OptStep,
+        22 => OpType::AllGather,
+        23 => OpType::ReduceScatter,
+        24 => OpType::AllReduce,
+        25 => OpType::ParamCopy,
+        26 => OpType::Prefill,
+        27 => OpType::Decode,
+        _ => return None,
+    })
+}
+
+fn phase_code(p: Phase) -> u8 {
+    match p {
+        Phase::Forward => 0,
+        Phase::Backward => 1,
+        Phase::Optimizer => 2,
+    }
+}
+
+fn code_phase(code: u8) -> Option<Phase> {
+    Some(match code {
+        0 => Phase::Forward,
+        1 => Phase::Backward,
+        2 => Phase::Optimizer,
+        _ => return None,
+    })
+}
+
+fn stream_code(s: Stream) -> u8 {
+    match s {
+        Stream::Compute => 0,
+        Stream::Comm => 1,
+    }
+}
+
+fn code_stream(code: u8) -> Option<Stream> {
+    Some(match code {
+        0 => Stream::Compute,
+        1 => Stream::Comm,
+        _ => return None,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Little-endian encode/decode helpers
+// ---------------------------------------------------------------------------
+
+fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_bits().to_le_bytes());
+}
+
+/// Bounds-checked cursor over a frame payload; every read is total, so a
+/// corrupt length can never cause a panic or over-read.
+struct Cur<'a> {
+    b: &'a [u8],
+    p: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn new(b: &'a [u8]) -> Cur<'a> {
+        Cur { b, p: 0 }
+    }
+    fn take(&mut self, n: usize) -> Option<&'a [u8]> {
+        let end = self.p.checked_add(n)?;
+        if end > self.b.len() {
+            return None;
+        }
+        let s = &self.b[self.p..end];
+        self.p = end;
+        Some(s)
+    }
+    fn u8(&mut self) -> Option<u8> {
+        self.take(1).map(|s| s[0])
+    }
+    fn u16(&mut self) -> Option<u16> {
+        self.take(2).map(|s| u16::from_le_bytes(s.try_into().unwrap()))
+    }
+    fn u32(&mut self) -> Option<u32> {
+        self.take(4).map(|s| u32::from_le_bytes(s.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Option<u64> {
+        self.take(8).map(|s| u64::from_le_bytes(s.try_into().unwrap()))
+    }
+    fn f64(&mut self) -> Option<f64> {
+        self.u64().map(f64::from_bits)
+    }
+    fn done(&self) -> bool {
+        self.p == self.b.len()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Metadata / footer JSON
+// ---------------------------------------------------------------------------
+
+/// f64 as bit-exact hex (JSON numbers would lose -0.0 and non-finite
+/// values; the salvage contract demands bitwise roundtrips).
+fn f64_hex(x: f64) -> Json {
+    Json::str(format!("{:016x}", x.to_bits()))
+}
+
+fn hex_f64(j: &Json) -> Option<f64> {
+    u64::from_str_radix(j.as_str()?, 16).ok().map(f64::from_bits)
+}
+
+fn spans_json(spans: &[(f64, f64)]) -> Json {
+    Json::Arr(
+        spans
+            .iter()
+            .map(|(a, b)| Json::Arr(vec![f64_hex(*a), f64_hex(*b)]))
+            .collect(),
+    )
+}
+
+fn json_spans(j: Option<&Json>) -> Option<Vec<(f64, f64)>> {
+    let mut out = Vec::new();
+    for pair in j?.as_arr()? {
+        let p = pair.as_arr()?;
+        out.push((hex_f64(p.first()?)?, hex_f64(p.get(1)?)?));
+    }
+    Some(out)
+}
+
+fn meta_to_json(m: &TraceMeta) -> Json {
+    Json::obj(vec![
+        ("workload", Json::str(&m.workload)),
+        ("fsdp", Json::str(&m.fsdp)),
+        ("model", Json::str(&m.model)),
+        ("num_gpus", Json::num(m.num_gpus)),
+        ("num_nodes", Json::num(m.num_nodes)),
+        ("gpus_per_node", Json::num(m.gpus_per_node)),
+        ("sharding", Json::str(&m.sharding)),
+        ("iterations", Json::num(m.iterations)),
+        ("warmup", Json::num(m.warmup)),
+        ("seed", Json::str(format!("{:016x}", m.seed))),
+        ("source", Json::str(&m.source)),
+        ("serialized", Json::Bool(m.serialized)),
+        ("faults", Json::str(&m.faults)),
+        (
+            "fault_slowdown",
+            Json::Arr(m.fault_slowdown.iter().map(|x| f64_hex(*x)).collect()),
+        ),
+        ("restart_spans", spans_json(&m.restart_spans)),
+        ("fault_lost_ns", f64_hex(m.fault_lost_ns)),
+    ])
+}
+
+fn meta_from_json(j: &Json) -> Option<TraceMeta> {
+    let s = |k: &str| j.get(k).and_then(Json::as_str).map(String::from);
+    let n = |k: &str| j.get(k).and_then(Json::as_f64);
+    Some(TraceMeta {
+        workload: s("workload")?,
+        fsdp: s("fsdp")?,
+        model: s("model")?,
+        num_gpus: n("num_gpus")? as u32,
+        num_nodes: n("num_nodes")? as u32,
+        gpus_per_node: n("gpus_per_node")? as u32,
+        sharding: s("sharding")?,
+        iterations: n("iterations")? as u32,
+        warmup: n("warmup")? as u32,
+        seed: u64::from_str_radix(j.get("seed")?.as_str()?, 16).ok()?,
+        source: s("source")?,
+        serialized: j.get("serialized")?.as_bool()?,
+        faults: s("faults")?,
+        fault_slowdown: j
+            .get("fault_slowdown")?
+            .as_arr()?
+            .iter()
+            .map(hex_f64)
+            .collect::<Option<Vec<f64>>>()?,
+        restart_spans: json_spans(j.get("restart_spans"))?,
+        fault_lost_ns: hex_f64(j.get("fault_lost_ns")?)?,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Chunk encode/decode
+// ---------------------------------------------------------------------------
+
+/// Columnar EVNT payload: iteration tag, local string table (first-appearance
+/// order, so identical runs serialize identically), then one column per
+/// `TraceEvent` field. `layer` uses `u32::MAX` = None, `fwd_link` uses
+/// `u64::MAX` = None.
+fn encode_chunk(iter: u32, evs: &[TraceEvent]) -> Vec<u8> {
+    let mut names: Vec<&'static str> = Vec::new();
+    let mut idx: FxHashMap<&'static str, u32> = FxHashMap::default();
+    let mut name_col: Vec<u32> = Vec::with_capacity(evs.len());
+    for e in evs {
+        let s = e.name.as_str();
+        let i = *idx.entry(s).or_insert_with(|| {
+            names.push(s);
+            names.len() as u32 - 1
+        });
+        name_col.push(i);
+    }
+    let mut out = Vec::with_capacity(32 + evs.len() * 78);
+    put_u32(&mut out, iter);
+    put_u32(&mut out, evs.len() as u32);
+    put_u32(&mut out, names.len() as u32);
+    for s in &names {
+        put_u16(&mut out, s.len() as u16);
+        out.extend_from_slice(s.as_bytes());
+    }
+    for e in evs {
+        put_u64(&mut out, e.kernel_id);
+    }
+    for e in evs {
+        put_u32(&mut out, e.gpu);
+    }
+    for e in evs {
+        out.push(stream_code(e.stream));
+    }
+    for i in &name_col {
+        put_u32(&mut out, *i);
+    }
+    for e in evs {
+        out.push(op_code(e.op.op));
+    }
+    for e in evs {
+        out.push(phase_code(e.op.phase));
+    }
+    for e in evs {
+        put_u32(&mut out, e.layer.unwrap_or(u32::MAX));
+    }
+    for e in evs {
+        put_u32(&mut out, e.iter);
+    }
+    for e in evs {
+        put_f64(&mut out, e.t_launch);
+    }
+    for e in evs {
+        put_f64(&mut out, e.t_start);
+    }
+    for e in evs {
+        put_f64(&mut out, e.t_end);
+    }
+    for e in evs {
+        put_u64(&mut out, e.seq);
+    }
+    for e in evs {
+        put_u64(&mut out, e.fwd_link.unwrap_or(u64::MAX));
+    }
+    for e in evs {
+        put_f64(&mut out, e.freq_mhz);
+    }
+    for e in evs {
+        put_f64(&mut out, e.flops);
+    }
+    for e in evs {
+        put_f64(&mut out, e.bytes);
+    }
+    out
+}
+
+/// Parse an EVNT payload, appending events to `out` when given (fsck
+/// validates without materializing). Returns the event count.
+fn decode_chunk(payload: &[u8], mut out: Option<&mut Vec<TraceEvent>>) -> Result<u32, String> {
+    let mut c = Cur::new(payload);
+    let bad = |what: &str| format!("EVNT chunk: {what}");
+    let _iter = c.u32().ok_or_else(|| bad("missing iteration tag"))?;
+    let n = c.u32().ok_or_else(|| bad("missing event count"))? as usize;
+    let n_names = c.u32().ok_or_else(|| bad("missing name count"))? as usize;
+    if n_names > payload.len() {
+        return Err(bad("name table larger than payload"));
+    }
+    let mut names = Vec::with_capacity(n_names);
+    for _ in 0..n_names {
+        let len = c.u16().ok_or_else(|| bad("truncated name length"))? as usize;
+        let raw = c.take(len).ok_or_else(|| bad("truncated name bytes"))?;
+        let s = std::str::from_utf8(raw).map_err(|_| bad("non-UTF8 name"))?;
+        names.push(intern(s));
+    }
+    // Column sizes are fixed per event; verify the payload holds them all
+    // before decoding (1 over-length check instead of 17n).
+    let per_event = 8 + 4 + 1 + 4 + 1 + 1 + 4 + 4 + 8 * 3 + 8 + 8 + 8 * 3;
+    let need = n.checked_mul(per_event).ok_or_else(|| bad("event count overflow"))?;
+    if payload.len() - c.p != need {
+        return Err(bad("column size mismatch"));
+    }
+    let mut kernel_id = Vec::with_capacity(n);
+    for _ in 0..n {
+        kernel_id.push(c.u64().ok_or_else(|| bad("truncated kernel_id"))?);
+    }
+    let mut gpu = Vec::with_capacity(n);
+    for _ in 0..n {
+        gpu.push(c.u32().ok_or_else(|| bad("truncated gpu"))?);
+    }
+    let mut stream = Vec::with_capacity(n);
+    for _ in 0..n {
+        let code = c.u8().ok_or_else(|| bad("truncated stream"))?;
+        stream.push(code_stream(code).ok_or_else(|| bad("invalid stream code"))?);
+    }
+    let mut name = Vec::with_capacity(n);
+    for _ in 0..n {
+        let i = c.u32().ok_or_else(|| bad("truncated name index"))? as usize;
+        name.push(*names.get(i).ok_or_else(|| bad("name index out of range"))?);
+    }
+    let mut op = Vec::with_capacity(n);
+    for _ in 0..n {
+        let code = c.u8().ok_or_else(|| bad("truncated op"))?;
+        op.push(code_op(code).ok_or_else(|| bad("invalid op code"))?);
+    }
+    let mut phase = Vec::with_capacity(n);
+    for _ in 0..n {
+        let code = c.u8().ok_or_else(|| bad("truncated phase"))?;
+        phase.push(code_phase(code).ok_or_else(|| bad("invalid phase code"))?);
+    }
+    let col_u32 = |c: &mut Cur, what: &str| -> Result<Vec<u32>, String> {
+        (0..n).map(|_| c.u32().ok_or_else(|| bad(what))).collect()
+    };
+    let col_u64 = |c: &mut Cur, what: &str| -> Result<Vec<u64>, String> {
+        (0..n).map(|_| c.u64().ok_or_else(|| bad(what))).collect()
+    };
+    let col_f64 = |c: &mut Cur, what: &str| -> Result<Vec<f64>, String> {
+        (0..n).map(|_| c.f64().ok_or_else(|| bad(what))).collect()
+    };
+    let layer = col_u32(&mut c, "truncated layer")?;
+    let iter = col_u32(&mut c, "truncated iter")?;
+    let t_launch = col_f64(&mut c, "truncated t_launch")?;
+    let t_start = col_f64(&mut c, "truncated t_start")?;
+    let t_end = col_f64(&mut c, "truncated t_end")?;
+    let seq = col_u64(&mut c, "truncated seq")?;
+    let fwd_link = col_u64(&mut c, "truncated fwd_link")?;
+    let freq_mhz = col_f64(&mut c, "truncated freq_mhz")?;
+    let flops = col_f64(&mut c, "truncated flops")?;
+    let bytes = col_f64(&mut c, "truncated bytes")?;
+    if !c.done() {
+        return Err(bad("trailing bytes"));
+    }
+    if let Some(out) = out.as_deref_mut() {
+        out.reserve(n);
+        for i in 0..n {
+            out.push(TraceEvent {
+                kernel_id: kernel_id[i],
+                gpu: gpu[i],
+                stream: stream[i],
+                name: name[i],
+                op: OpRef {
+                    op: op[i],
+                    phase: phase[i],
+                },
+                layer: if layer[i] == u32::MAX { None } else { Some(layer[i]) },
+                iter: iter[i],
+                t_launch: t_launch[i],
+                t_start: t_start[i],
+                t_end: t_end[i],
+                seq: seq[i],
+                fwd_link: if fwd_link[i] == u64::MAX {
+                    None
+                } else {
+                    Some(fwd_link[i])
+                },
+                freq_mhz: freq_mhz[i],
+                flops: flops[i],
+                bytes: bytes[i],
+            });
+        }
+    }
+    Ok(n as u32)
+}
+
+fn encode_power(samples: &[PowerSample]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(4 + samples.len() * 48);
+    put_u32(&mut out, samples.len() as u32);
+    for s in samples {
+        put_u32(&mut out, s.gpu);
+    }
+    for s in samples {
+        put_f64(&mut out, s.t);
+    }
+    for s in samples {
+        put_f64(&mut out, s.window_ns);
+    }
+    for s in samples {
+        put_f64(&mut out, s.freq_mhz);
+    }
+    for s in samples {
+        put_f64(&mut out, s.mem_freq_mhz);
+    }
+    for s in samples {
+        put_f64(&mut out, s.power_w);
+    }
+    for s in samples {
+        put_u32(&mut out, s.iter);
+    }
+    out
+}
+
+fn decode_power(payload: &[u8], mut out: Option<&mut Vec<PowerSample>>) -> Result<u32, String> {
+    let mut c = Cur::new(payload);
+    let bad = |what: &str| format!("PWRC frame: {what}");
+    let n = c.u32().ok_or_else(|| bad("missing sample count"))? as usize;
+    let need = n.checked_mul(4 + 8 * 5 + 4).ok_or_else(|| bad("sample count overflow"))?;
+    if payload.len() - c.p != need {
+        return Err(bad("column size mismatch"));
+    }
+    let gpu: Vec<u32> = (0..n).filter_map(|_| c.u32()).collect();
+    let t: Vec<f64> = (0..n).filter_map(|_| c.f64()).collect();
+    let window_ns: Vec<f64> = (0..n).filter_map(|_| c.f64()).collect();
+    let freq_mhz: Vec<f64> = (0..n).filter_map(|_| c.f64()).collect();
+    let mem_freq_mhz: Vec<f64> = (0..n).filter_map(|_| c.f64()).collect();
+    let power_w: Vec<f64> = (0..n).filter_map(|_| c.f64()).collect();
+    let iter: Vec<u32> = (0..n).filter_map(|_| c.u32()).collect();
+    if iter.len() != n || !c.done() {
+        return Err(bad("truncated columns"));
+    }
+    if let Some(out) = out.as_deref_mut() {
+        out.reserve(n);
+        for i in 0..n {
+            out.push(PowerSample {
+                gpu: gpu[i],
+                t: t[i],
+                window_ns: window_ns[i],
+                freq_mhz: freq_mhz[i],
+                mem_freq_mhz: mem_freq_mhz[i],
+                power_w: power_w[i],
+                iter: iter[i],
+            });
+        }
+    }
+    Ok(n as u32)
+}
+
+// ---------------------------------------------------------------------------
+// Streaming writer
+// ---------------------------------------------------------------------------
+
+/// A sink the engine can stream trace events into as they are emitted.
+/// Infallible by contract — implementations latch IO errors internally and
+/// surface them when the run finishes, so the hot emission path never has
+/// to unwind the simulation.
+pub trait TraceSink {
+    fn event(&mut self, ev: &TraceEvent);
+    /// All future events have `iter >= watermark`; buffered iterations
+    /// below it may be flushed.
+    fn advance(&mut self, watermark: u32);
+}
+
+/// What a finalized store contains, returned by [`StoreWriter::finalize`].
+#[derive(Debug, Clone)]
+pub struct StoreInfo {
+    pub path: PathBuf,
+    pub bytes: u64,
+    pub events: u64,
+    pub chunks: u64,
+    pub samples: u64,
+}
+
+/// Streaming store writer: bounded memory, chunks flushed at iteration
+/// boundaries (or at [`CHUNK_EVENTS`], whichever comes first). Bytes go to
+/// `<path>.tmp`; only [`finalize`](StoreWriter::finalize) renames to the
+/// real path, so the destination is always either absent or complete.
+pub struct StoreWriter {
+    w: io::BufWriter<std::fs::File>,
+    tmp: PathBuf,
+    path: PathBuf,
+    offset: u64,
+    pending: BTreeMap<u32, Vec<TraceEvent>>,
+    events: u64,
+    chunks: u64,
+    samples: u64,
+    err: Option<io::Error>,
+}
+
+impl StoreWriter {
+    /// Open `<path>.tmp` and write the header + provisional META frame.
+    pub fn create(path: impl Into<PathBuf>, meta: &TraceMeta) -> io::Result<StoreWriter> {
+        let path = path.into();
+        let tmp = tmp_sibling(&path);
+        let f = std::fs::File::create(&tmp)?;
+        let mut sw = StoreWriter {
+            w: io::BufWriter::new(f),
+            tmp,
+            path,
+            offset: 0,
+            pending: BTreeMap::new(),
+            events: 0,
+            chunks: 0,
+            samples: 0,
+            err: None,
+        };
+        sw.w.write_all(STORE_MAGIC)?;
+        sw.w.write_all(&STORE_VERSION.to_le_bytes())?;
+        sw.w.write_all(&0u32.to_le_bytes())?;
+        sw.offset = 16;
+        sw.frame(TAG_META, meta_to_json(meta).to_string().as_bytes())?;
+        Ok(sw)
+    }
+
+    fn frame(&mut self, tag: u32, payload: &[u8]) -> io::Result<()> {
+        self.w.write_all(&tag.to_le_bytes())?;
+        self.w.write_all(&(payload.len() as u32).to_le_bytes())?;
+        self.w.write_all(&crc32(payload).to_le_bytes())?;
+        self.w.write_all(payload)?;
+        self.offset += 12 + payload.len() as u64;
+        Ok(())
+    }
+
+    fn latch(&mut self, r: io::Result<()>) {
+        if let (Err(e), None) = (r, self.err.as_ref()) {
+            self.err = Some(e);
+        }
+    }
+
+    fn write_chunk(&mut self, iter: u32, evs: &[TraceEvent]) {
+        if self.err.is_some() || evs.is_empty() {
+            return;
+        }
+        let payload = encode_chunk(iter, evs);
+        let r = self.frame(TAG_EVNT, &payload);
+        self.latch(r);
+        self.chunks += 1;
+        self.events += evs.len() as u64;
+    }
+
+    /// First IO error hit so far, if any (also returned by `finalize`).
+    pub fn error(&self) -> Option<&io::Error> {
+        self.err.as_ref()
+    }
+
+    /// Events currently buffered (bounded by the flush watermark).
+    pub fn buffered(&self) -> usize {
+        self.pending.values().map(Vec::len).sum()
+    }
+
+    fn flush_complete(&mut self, watermark: u32) {
+        while let Some((&it, _)) = self.pending.iter().next() {
+            if it >= watermark {
+                break;
+            }
+            let evs = self.pending.remove(&it).unwrap_or_default();
+            self.write_chunk(it, &evs);
+        }
+    }
+
+    fn flush_all(&mut self) {
+        let pending = std::mem::take(&mut self.pending);
+        for (it, evs) in pending {
+            self.write_chunk(it, &evs);
+        }
+    }
+
+    /// Flush buffered chunks, append power samples, footer and trailer,
+    /// fsync, and atomically rename `<path>.tmp` → `path`. Consumes the
+    /// writer; any latched or new IO error is returned and the tmp file is
+    /// left behind as a salvage target.
+    pub fn finalize(
+        mut self,
+        meta: &TraceMeta,
+        power: &PowerTrace,
+        iter_bounds: &[(f64, f64)],
+    ) -> io::Result<StoreInfo> {
+        self.flush_all();
+        for block in power.samples.chunks(PWRC_SAMPLES) {
+            if self.err.is_some() {
+                break;
+            }
+            let payload = encode_power(block);
+            let r = self.frame(TAG_PWRC, &payload);
+            self.latch(r);
+            self.samples += block.len() as u64;
+        }
+        if let Some(e) = self.err.take() {
+            return Err(e);
+        }
+        let foot_offset = self.offset;
+        let foot = footer_json(meta, iter_bounds, self.events, self.chunks, self.samples, false, 0);
+        self.frame(TAG_FOOT, foot.to_string().as_bytes())?;
+        self.w.write_all(&foot_offset.to_le_bytes())?;
+        self.w.write_all(STORE_END)?;
+        self.offset += 16;
+        self.w.flush()?;
+        self.w.get_ref().sync_all()?;
+        std::fs::rename(&self.tmp, &self.path)?;
+        Ok(StoreInfo {
+            path: self.path.clone(),
+            bytes: self.offset,
+            events: self.events,
+            chunks: self.chunks,
+            samples: self.samples,
+        })
+    }
+}
+
+impl TraceSink for StoreWriter {
+    fn event(&mut self, ev: &TraceEvent) {
+        if self.err.is_some() {
+            return;
+        }
+        let v = self.pending.entry(ev.iter).or_default();
+        v.push(ev.clone());
+        if v.len() >= CHUNK_EVENTS {
+            let evs = std::mem::take(v);
+            self.write_chunk(ev.iter, &evs);
+        }
+    }
+
+    fn advance(&mut self, watermark: u32) {
+        self.flush_complete(watermark);
+    }
+}
+
+/// `Rc<RefCell<StoreWriter>>` adapter so a caller can hand the engine a
+/// sink and keep the writer for [`StoreWriter::finalize`] afterwards.
+/// Single-threaded by construction (the engine runs on one thread).
+pub struct SharedSink(pub Rc<RefCell<StoreWriter>>);
+
+impl TraceSink for SharedSink {
+    fn event(&mut self, ev: &TraceEvent) {
+        self.0.borrow_mut().event(ev);
+    }
+    fn advance(&mut self, watermark: u32) {
+        self.0.borrow_mut().advance(watermark);
+    }
+}
+
+fn footer_json(
+    meta: &TraceMeta,
+    iter_bounds: &[(f64, f64)],
+    events: u64,
+    chunks: u64,
+    samples: u64,
+    salvaged: bool,
+    lost_bytes: u64,
+) -> Json {
+    Json::obj(vec![
+        ("meta", meta_to_json(meta)),
+        ("iter_bounds", spans_json(iter_bounds)),
+        ("events", Json::num(events as f64)),
+        ("chunks", Json::num(chunks as f64)),
+        ("samples", Json::num(samples as f64)),
+        ("salvaged", Json::Bool(salvaged)),
+        ("lost_bytes", Json::num(lost_bytes as f64)),
+    ])
+}
+
+/// One-shot store write of an already-materialized trace (the non-streaming
+/// path: `fsck --repair` tests, golden fixtures, ad-hoc exports).
+pub fn write_store(
+    path: impl Into<PathBuf>,
+    trace: &Trace,
+    power: &PowerTrace,
+    iter_bounds: &[(f64, f64)],
+) -> io::Result<StoreInfo> {
+    let mut w = StoreWriter::create(path, &trace.meta)?;
+    for ev in &trace.events {
+        w.event(ev);
+    }
+    w.finalize(&trace.meta, power, iter_bounds)
+}
+
+// ---------------------------------------------------------------------------
+// Reader / salvage
+// ---------------------------------------------------------------------------
+
+/// What a scan of a store file found — the salvage contract's receipt.
+/// Produced for every read; `clean()` distinguishes a pristine finalized
+/// store from anything that lost bytes.
+#[derive(Debug, Clone, Default)]
+pub struct SalvageReport {
+    pub file_bytes: u64,
+    /// Bytes of the valid prefix (header + intact frames [+ trailer]).
+    pub valid_bytes: u64,
+    /// Bytes after the valid prefix that could not be used.
+    pub lost_bytes: u64,
+    pub frames: u64,
+    pub chunks: u64,
+    pub events: u64,
+    pub samples: u64,
+    pub meta_present: bool,
+    pub footer_present: bool,
+    /// Trailer magic present and pointing at the FOOT frame.
+    pub finalized: bool,
+    /// The footer says this file was already produced by `fsck --repair`.
+    pub salvaged_upstream: bool,
+    /// First failure was a checksum/decode error (bit-rot) rather than a
+    /// clean truncation.
+    pub corrupt: bool,
+    /// Human-readable description of the first failure ("" when clean).
+    pub note: String,
+}
+
+impl SalvageReport {
+    /// Finalized, nothing lost, not itself a repair product.
+    pub fn clean(&self) -> bool {
+        self.finalized && self.lost_bytes == 0 && !self.corrupt
+    }
+
+    /// One-line status for CLI/stderr reporting.
+    pub fn describe(&self) -> String {
+        if self.clean() && !self.salvaged_upstream {
+            format!(
+                "clean ({} events, {} chunks, {} power samples, {} bytes)",
+                self.events, self.chunks, self.samples, self.file_bytes
+            )
+        } else if self.clean() {
+            format!(
+                "salvaged upstream ({} events, {} chunks retained)",
+                self.events, self.chunks
+            )
+        } else {
+            let kind = if self.corrupt { "corrupt" } else { "torn" };
+            format!(
+                "{kind}: salvaged {} events in {} chunks ({} of {} bytes valid, {} lost{})",
+                self.events,
+                self.chunks,
+                self.valid_bytes,
+                self.file_bytes,
+                self.lost_bytes,
+                if self.note.is_empty() {
+                    String::new()
+                } else {
+                    format!("; {}", self.note)
+                }
+            )
+        }
+    }
+}
+
+/// A store read back into memory, plus the salvage receipt.
+#[derive(Debug, Clone)]
+pub struct LoadedStore {
+    pub trace: Trace,
+    pub power: PowerTrace,
+    pub iter_bounds: Vec<(f64, f64)>,
+    pub report: SalvageReport,
+}
+
+#[derive(Default)]
+struct ScanOut<'a> {
+    meta: Option<TraceMeta>,
+    foot_meta: Option<TraceMeta>,
+    iter_bounds: Vec<(f64, f64)>,
+    salvaged_upstream: bool,
+    events: Vec<TraceEvent>,
+    samples: Vec<PowerSample>,
+    /// Raw (tag, payload) frames, kept only in repair mode.
+    raw: Option<Vec<(u32, Vec<u8>)>>,
+    materialize: bool,
+    /// Chunk-wise delivery (out-of-core path): each decoded EVNT chunk is
+    /// handed over and dropped instead of accumulating in `events`.
+    chunk_visit: Option<&'a mut dyn FnMut(Vec<TraceEvent>)>,
+}
+
+/// Walk the file frame by frame, validating lengths + CRCs and decoding
+/// payloads. Stops at the first damage and reports the salvaged prefix.
+/// `Err` is reserved for "this is not a store at all" (or the file cannot
+/// be opened) — damage to a real store always returns `Ok`.
+fn scan(path: &Path, out: &mut ScanOut<'_>) -> Result<SalvageReport, String> {
+    let mut rep = SalvageReport::default();
+    let mut f = std::fs::File::open(path)
+        .map_err(|e| format!("opening {}: {e}", path.display()))?;
+    let len = f
+        .metadata()
+        .map_err(|e| format!("stat {}: {e}", path.display()))?
+        .len();
+    rep.file_bytes = len;
+
+    let mut expect_header = [0u8; 16];
+    expect_header[..8].copy_from_slice(STORE_MAGIC);
+    expect_header[8..12].copy_from_slice(&STORE_VERSION.to_le_bytes());
+    // flags = 0 already
+
+    let head_n = len.min(16) as usize;
+    let mut head = vec![0u8; head_n];
+    f.read_exact(&mut head)
+        .map_err(|e| format!("reading {}: {e}", path.display()))?;
+    if head_n >= 8 && head[..8] != STORE_MAGIC[..] {
+        return Err(format!("{}: not a chopper trace store (bad magic)", path.display()));
+    }
+    if head[..] != expect_header[..head_n] {
+        if head_n >= 12 && head[8..12] != STORE_VERSION.to_le_bytes() {
+            return Err(format!(
+                "{}: unsupported store version {}",
+                path.display(),
+                u32::from_le_bytes(head[8..12].try_into().unwrap())
+            ));
+        }
+        return Err(format!("{}: not a chopper trace store (bad header)", path.display()));
+    }
+    if head_n < 16 {
+        // A prefix of a real header: torn before any data.
+        rep.note = "truncated inside the file header".into();
+        rep.lost_bytes = len;
+        return Ok(rep);
+    }
+
+    let mut r = io::BufReader::new(f);
+    let mut pos: u64 = 16;
+    rep.valid_bytes = 16;
+    let mut foot_at: Option<u64> = None;
+
+    loop {
+        let remaining = len - pos;
+        if remaining == 0 {
+            rep.note = "missing trailer".into();
+            break;
+        }
+        if remaining == 16 {
+            let mut t = [0u8; 16];
+            if r.read_exact(&mut t).is_err() {
+                rep.note = format!("short read at offset {pos}");
+                break;
+            }
+            if t[8..] == STORE_END[..] {
+                let off = u64::from_le_bytes(t[..8].try_into().unwrap());
+                if rep.footer_present && Some(off) == foot_at {
+                    rep.finalized = true;
+                    pos += 16;
+                    rep.valid_bytes = pos;
+                } else {
+                    rep.corrupt = true;
+                    rep.note = "trailer does not point at a valid footer".into();
+                }
+                break;
+            }
+            rep.note = format!("truncated frame at offset {pos}");
+            break;
+        }
+        if remaining < 12 {
+            rep.note = format!("truncated frame header at offset {pos}");
+            break;
+        }
+        let mut h = [0u8; 12];
+        if r.read_exact(&mut h).is_err() {
+            rep.note = format!("short read at offset {pos}");
+            break;
+        }
+        let tag = u32::from_le_bytes(h[..4].try_into().unwrap());
+        let plen = u32::from_le_bytes(h[4..8].try_into().unwrap());
+        let crc = u32::from_le_bytes(h[8..12].try_into().unwrap());
+        if !matches!(tag, TAG_META | TAG_EVNT | TAG_PWRC | TAG_FOOT) {
+            rep.corrupt = true;
+            rep.note = format!("unknown frame tag at offset {pos}");
+            break;
+        }
+        if plen > MAX_FRAME || plen as u64 + 12 > remaining {
+            // Longer than the file: either a torn final frame or a corrupt
+            // length field. Indistinguishable; treat as truncation.
+            rep.note = format!("truncated frame payload at offset {pos}");
+            break;
+        }
+        let mut payload = vec![0u8; plen as usize];
+        if r.read_exact(&mut payload).is_err() {
+            rep.note = format!("short read at offset {pos}");
+            break;
+        }
+        if crc32(&payload) != crc {
+            rep.corrupt = true;
+            rep.note = format!(
+                "checksum mismatch in {} frame at offset {pos}",
+                tag_name(tag)
+            );
+            break;
+        }
+        let decoded = match tag {
+            TAG_META => parse_meta_frame(&payload).map(|m| {
+                rep.meta_present = true;
+                if out.meta.is_none() {
+                    out.meta = Some(m);
+                }
+                0
+            }),
+            TAG_EVNT => {
+                if let Some(visit) = out.chunk_visit.as_mut() {
+                    let mut evs = Vec::new();
+                    let r = decode_chunk(&payload, Some(&mut evs));
+                    if r.is_ok() {
+                        visit(evs);
+                    }
+                    r
+                } else {
+                    decode_chunk(
+                        &payload,
+                        if out.materialize { Some(&mut out.events) } else { None },
+                    )
+                }
+                .map(|n| {
+                    rep.chunks += 1;
+                    rep.events += n as u64;
+                    n
+                })
+            }
+            TAG_PWRC => decode_power(
+                &payload,
+                if out.materialize { Some(&mut out.samples) } else { None },
+            )
+            .map(|n| {
+                rep.samples += n as u64;
+                n
+            }),
+            TAG_FOOT => parse_foot_frame(&payload).map(|(m, ib, salv)| {
+                rep.footer_present = true;
+                rep.salvaged_upstream = salv;
+                out.foot_meta = Some(m);
+                out.iter_bounds = ib;
+                out.salvaged_upstream = salv;
+                foot_at = Some(pos);
+                0
+            }),
+            _ => unreachable!(),
+        };
+        if let Err(e) = decoded {
+            rep.corrupt = true;
+            rep.note = format!("{e} (frame at offset {pos})");
+            break;
+        }
+        if let Some(raw) = out.raw.as_mut() {
+            raw.push((tag, payload));
+        }
+        rep.frames += 1;
+        pos += 12 + plen as u64;
+        rep.valid_bytes = pos;
+    }
+    rep.lost_bytes = len - rep.valid_bytes;
+    Ok(rep)
+}
+
+fn tag_name(tag: u32) -> &'static str {
+    match tag {
+        TAG_META => "META",
+        TAG_EVNT => "EVNT",
+        TAG_PWRC => "PWRC",
+        TAG_FOOT => "FOOT",
+        _ => "????",
+    }
+}
+
+fn parse_meta_frame(payload: &[u8]) -> Result<TraceMeta, String> {
+    let s = std::str::from_utf8(payload).map_err(|_| "META frame: non-UTF8".to_string())?;
+    let j = json::parse(s).map_err(|e| format!("META frame: {e}"))?;
+    meta_from_json(&j).ok_or_else(|| "META frame: missing fields".to_string())
+}
+
+fn parse_foot_frame(payload: &[u8]) -> Result<(TraceMeta, Vec<(f64, f64)>, bool), String> {
+    let s = std::str::from_utf8(payload).map_err(|_| "FOOT frame: non-UTF8".to_string())?;
+    let j = json::parse(s).map_err(|e| format!("FOOT frame: {e}"))?;
+    let meta = j
+        .get("meta")
+        .and_then(meta_from_json)
+        .ok_or_else(|| "FOOT frame: missing meta".to_string())?;
+    let ib = json_spans(j.get("iter_bounds"))
+        .ok_or_else(|| "FOOT frame: bad iter_bounds".to_string())?;
+    let salvaged = j.get("salvaged").and_then(Json::as_bool).unwrap_or(false);
+    Ok((meta, ib, salvaged))
+}
+
+/// Validate a store without materializing events (what `chopper fsck`
+/// runs). Never panics on damage; `Err` only for not-a-store/unopenable.
+pub fn check_store(path: &Path) -> Result<SalvageReport, String> {
+    let mut out = ScanOut::default();
+    scan(path, &mut out)
+}
+
+/// Read a store back into memory, salvaging the longest valid prefix of a
+/// damaged file. Events are returned in the engine's canonical
+/// `(t_start, kernel_id)` order, making a roundtrip of an engine trace
+/// bitwise identical. Never panics on damage — inspect `report`.
+pub fn read_store(path: &Path) -> Result<LoadedStore, String> {
+    let mut out = ScanOut {
+        materialize: true,
+        ..ScanOut::default()
+    };
+    let report = scan(path, &mut out)?;
+    let meta = out
+        .foot_meta
+        .or(out.meta)
+        .unwrap_or_default();
+    let mut events = out.events;
+    events.sort_by(|a, b| {
+        a.t_start
+            .total_cmp(&b.t_start)
+            .then(a.kernel_id.cmp(&b.kernel_id))
+    });
+    Ok(LoadedStore {
+        trace: Trace { meta, events },
+        power: PowerTrace {
+            samples: out.samples,
+        },
+        iter_bounds: out.iter_bounds,
+        report,
+    })
+}
+
+/// Visit a store chunk-by-chunk without materializing the full event
+/// vector (the out-of-core analysis path: `TraceIndex` folds each chunk
+/// and drops it). Returns the salvage report. Chunks arrive in file
+/// order, *not* globally time-sorted.
+pub fn for_each_chunk(
+    path: &Path,
+    mut visit: impl FnMut(Vec<TraceEvent>),
+) -> Result<(TraceMeta, SalvageReport), String> {
+    let mut cb = |evs: Vec<TraceEvent>| visit(evs);
+    let mut out = ScanOut {
+        chunk_visit: Some(&mut cb),
+        ..ScanOut::default()
+    };
+    let rep = scan(path, &mut out)?;
+    let meta = out.foot_meta.take().or(out.meta.take()).unwrap_or_default();
+    Ok((meta, rep))
+}
+
+/// Outcome of [`repair_store`].
+#[derive(Debug, Clone)]
+pub struct RepairInfo {
+    pub dst: PathBuf,
+    pub events: u64,
+    pub chunks: u64,
+    pub samples: u64,
+    pub lost_bytes: u64,
+}
+
+/// Rewrite the valid prefix of a damaged store as a finalized store at
+/// `dst` (atomically). The new footer is flagged `salvaged`, which marks
+/// the trace as a partial record: analysis accepts it, the campaign cache
+/// will not rebuild summaries from it.
+pub fn repair_store(src: &Path, dst: &Path) -> Result<RepairInfo, String> {
+    let mut out = ScanOut {
+        raw: Some(Vec::new()),
+        ..ScanOut::default()
+    };
+    let rep = scan(src, &mut out)?;
+    let raw = out.raw.take().unwrap_or_default();
+    let meta = out.foot_meta.clone().or(out.meta.clone()).unwrap_or_default();
+
+    let mut buf = Vec::new();
+    buf.extend_from_slice(STORE_MAGIC);
+    buf.extend_from_slice(&STORE_VERSION.to_le_bytes());
+    buf.extend_from_slice(&0u32.to_le_bytes());
+    let mut wrote_meta = false;
+    let mut push_frame = |buf: &mut Vec<u8>, tag: u32, payload: &[u8]| {
+        buf.extend_from_slice(&tag.to_le_bytes());
+        buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        buf.extend_from_slice(&crc32(payload).to_le_bytes());
+        buf.extend_from_slice(payload);
+    };
+    if !rep.meta_present {
+        // Damaged before META survived: synthesize one so the repaired
+        // file is self-describing.
+        push_frame(&mut buf, TAG_META, meta_to_json(&meta).to_string().as_bytes());
+        wrote_meta = true;
+    }
+    for (tag, payload) in &raw {
+        if *tag == TAG_FOOT || (*tag == TAG_META && wrote_meta) {
+            continue;
+        }
+        push_frame(&mut buf, *tag, payload);
+    }
+    let foot_offset = buf.len() as u64;
+    let foot = footer_json(
+        &meta,
+        &out.iter_bounds,
+        rep.events,
+        rep.chunks,
+        rep.samples,
+        true,
+        rep.lost_bytes,
+    );
+    push_frame(&mut buf, TAG_FOOT, foot.to_string().as_bytes());
+    buf.extend_from_slice(&foot_offset.to_le_bytes());
+    buf.extend_from_slice(STORE_END);
+
+    crate::util::atomic_write(dst, &buf)
+        .map_err(|e| format!("writing {}: {e}", dst.display()))?;
+    Ok(RepairInfo {
+        dst: dst.to_path_buf(),
+        events: rep.events,
+        chunks: rep.chunks,
+        samples: rep.samples,
+        lost_bytes: rep.lost_bytes,
+    })
+}
+
+/// Cheap sniff: does this path start with the store magic? Lets the CLI
+/// route `.ctrc` files to the store reader and JSON to the chrome reader.
+pub fn is_store_file(path: &Path) -> bool {
+    let mut head = [0u8; 8];
+    match std::fs::File::open(path).and_then(|mut f| f.read_exact(&mut head)) {
+        Ok(()) => head == *STORE_MAGIC,
+        Err(_) => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(id: u64, iter: u32, t0: f64) -> TraceEvent {
+        TraceEvent {
+            kernel_id: id,
+            gpu: (id % 4) as u32,
+            stream: if id % 5 == 0 { Stream::Comm } else { Stream::Compute },
+            name: intern(if id % 2 == 0 { "Cijk_gemm" } else { "elementwise" }),
+            op: OpRef {
+                op: code_op((id % 28) as u8).unwrap(),
+                phase: code_phase((id % 3) as u8).unwrap(),
+            },
+            layer: if id % 7 == 0 { None } else { Some((id % 32) as u32) },
+            iter,
+            t_launch: t0 - 1.5,
+            t_start: t0,
+            t_end: t0 + 10.0 + id as f64,
+            seq: id * 3,
+            fwd_link: if id % 3 == 0 { Some(id / 2) } else { None },
+            freq_mhz: 1900.0 + id as f64,
+            flops: 1e9 + id as f64,
+            bytes: 4096.0 * id as f64,
+        }
+    }
+
+    fn sample_trace(n: u64) -> (Trace, PowerTrace, Vec<(f64, f64)>) {
+        let mut t = Trace::default();
+        t.meta.workload = "llama31_8b".into();
+        t.meta.fsdp = "v2".into();
+        t.meta.num_gpus = 4;
+        t.meta.num_nodes = 1;
+        t.meta.gpus_per_node = 4;
+        t.meta.sharding = "FSDP".into();
+        t.meta.iterations = 3;
+        t.meta.warmup = 1;
+        t.meta.seed = 0xDEAD_BEEF_0BAD_F00D;
+        t.meta.source = "sim".into();
+        for id in 0..n {
+            t.events.push(ev(id, (id / (n / 3).max(1)) as u32, id as f64 * 7.0));
+        }
+        let mut p = PowerTrace::default();
+        for i in 0..32u64 {
+            p.samples.push(PowerSample {
+                gpu: (i % 4) as u32,
+                t: i as f64 * 1e6,
+                window_ns: 1e6,
+                freq_mhz: 1980.0,
+                mem_freq_mhz: 2600.0,
+                power_w: 450.0 + i as f64,
+                iter: (i % 3) as u32,
+            });
+        }
+        let ib = vec![(0.0, 100.0), (100.0, 220.0), (220.0, 347.5)];
+        (t, p, ib)
+    }
+
+    fn tdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("chopper-store-{tag}-{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn roundtrip_is_bitwise_identical() {
+        let (t, p, ib) = sample_trace(200);
+        let d = tdir("rt");
+        let path = d.join("t.ctrc");
+        let info = write_store(&path, &t, &p, &ib).unwrap();
+        assert_eq!(info.events, 200);
+        assert!(!tmp_sibling(&path).exists());
+        let l = read_store(&path).unwrap();
+        assert!(l.report.clean(), "{}", l.report.describe());
+        assert_eq!(format!("{:?}", l.trace), format!("{:?}", t));
+        assert_eq!(format!("{:?}", l.power), format!("{:?}", p));
+        assert_eq!(format!("{:?}", l.iter_bounds), format!("{:?}", ib));
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn op_phase_stream_codes_roundtrip_exhaustively() {
+        for code in 0u8..=255 {
+            if let Some(op) = code_op(code) {
+                assert_eq!(op_code(op), code);
+            } else {
+                assert!(code >= 28);
+            }
+            if let Some(p) = code_phase(code) {
+                assert_eq!(phase_code(p), code);
+            }
+            if let Some(s) = code_stream(code) {
+                assert_eq!(stream_code(s), code);
+            }
+        }
+        assert!(code_op(27).is_some() && code_op(28).is_none());
+    }
+
+    #[test]
+    fn truncation_at_every_offset_salvages_without_panic() {
+        let (t, p, ib) = sample_trace(60);
+        let d = tdir("trunc");
+        let path = d.join("t.ctrc");
+        write_store(&path, &t, &p, &ib).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        let cut = d.join("cut.ctrc");
+        // Every offset would be O(n²); sample densely incl. all boundaries.
+        for at in (0..full.len()).step_by(7).chain([0, 1, 7, 8, 15, 16, full.len() - 17, full.len() - 16, full.len() - 1]) {
+            std::fs::write(&cut, &full[..at]).unwrap();
+            match read_store(&cut) {
+                Ok(l) => {
+                    assert!(!l.report.finalized || at == full.len());
+                    assert!(l.trace.events.len() <= t.events.len());
+                    assert_eq!(
+                        l.report.valid_bytes + l.report.lost_bytes,
+                        at as u64,
+                        "at {at}"
+                    );
+                }
+                Err(e) => {
+                    // Only acceptable for cuts inside the magic itself —
+                    // and ours match the real prefix, so never here.
+                    panic!("truncation at {at} must not hard-fail: {e}");
+                }
+            }
+        }
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn single_byte_corruption_is_detected() {
+        let (t, p, ib) = sample_trace(40);
+        let d = tdir("flip");
+        let path = d.join("t.ctrc");
+        write_store(&path, &t, &p, &ib).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        let flip = d.join("flip.ctrc");
+        // Flip one byte inside the first EVNT payload (after header+META).
+        let mut m = full.clone();
+        let meta_len = u32::from_le_bytes(m[20..24].try_into().unwrap()) as usize;
+        let evnt_payload_at = 16 + 12 + meta_len + 12 + 40;
+        m[evnt_payload_at] ^= 0x40;
+        std::fs::write(&flip, &m).unwrap();
+        let l = read_store(&flip).unwrap();
+        assert!(l.report.corrupt, "{}", l.report.describe());
+        assert!(l.report.note.contains("checksum mismatch"));
+        assert!(l.trace.events.is_empty());
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn repair_produces_finalized_salvaged_store() {
+        let (t, p, ib) = sample_trace(90);
+        let d = tdir("repair");
+        let path = d.join("t.ctrc");
+        write_store(&path, &t, &p, &ib).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        let torn = d.join("torn.ctrc");
+        std::fs::write(&torn, &full[..full.len() * 2 / 3]).unwrap();
+        let pre = check_store(&torn).unwrap();
+        assert!(!pre.finalized && pre.lost_bytes > 0);
+        let fixed = d.join("fixed.ctrc");
+        let info = repair_store(&torn, &fixed).unwrap();
+        assert_eq!(info.events, pre.events);
+        let l = read_store(&fixed).unwrap();
+        assert!(l.report.finalized && l.report.salvaged_upstream);
+        assert_eq!(l.report.lost_bytes, 0);
+        assert_eq!(l.trace.events.len(), pre.events as usize);
+        assert_eq!(l.trace.meta.workload, "llama31_8b");
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn non_store_files_are_rejected_cleanly() {
+        let d = tdir("sniff");
+        let j = d.join("x.json");
+        std::fs::write(&j, b"{\"not\":\"a store\"}").unwrap();
+        assert!(!is_store_file(&j));
+        assert!(read_store(&j).unwrap_err().contains("not a chopper trace store"));
+        assert!(check_store(Path::new("/nonexistent/x.ctrc")).is_err());
+        std::fs::remove_dir_all(&d).ok();
+    }
+}

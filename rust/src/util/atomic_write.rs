@@ -1,0 +1,75 @@
+//! Atomic artifact writes: tmp sibling + fsync + rename.
+//!
+//! Extracted from `campaign::cache` so every artifact the tool emits —
+//! cache entries, figures, chrome exports, serving summaries, BENCH_*.json,
+//! trace stores — lands either whole or not at all. A reader never observes
+//! a half-written file: the bytes go to `<path>.tmp` in the same directory,
+//! are fsynced, and only then renamed over the destination (rename within a
+//! directory is atomic on every platform we target).
+
+use std::io::{self, Write};
+use std::path::{Path, PathBuf};
+
+/// Sibling temp path used during an atomic write: `<file_name>.tmp` in the
+/// same directory (same filesystem, so the final rename cannot cross
+/// devices). Public so crash-safety tooling can recognize torn leftovers.
+pub fn tmp_sibling(path: &Path) -> PathBuf {
+    let mut name = path.file_name().unwrap_or_default().to_os_string();
+    name.push(".tmp");
+    path.with_file_name(name)
+}
+
+/// Write `contents` to `path` atomically. On success the destination holds
+/// exactly `contents`; on failure the destination is untouched (a `.tmp`
+/// sibling may remain and is safe to delete or salvage).
+pub fn atomic_write(path: &Path, contents: &[u8]) -> io::Result<()> {
+    let tmp = tmp_sibling(path);
+    let mut f = std::fs::File::create(&tmp)?;
+    f.write_all(contents)?;
+    f.sync_all()?;
+    drop(f);
+    std::fs::rename(&tmp, path)
+}
+
+/// Attach the offending path to an io error, for user-facing messages
+/// (`action` is a short verb phrase, e.g. "writing"). The IO-path audit
+/// routes CLI/benchkit error strings through this so a permission error or
+/// full disk names the file instead of panicking.
+pub fn io_ctx(action: &str, path: &Path, e: io::Error) -> String {
+    format!("{action} {}: {e}", path.display())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_contents_and_leaves_no_tmp() {
+        let dir = std::env::temp_dir().join(format!("chopper-aw-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("artifact.json");
+        atomic_write(&p, b"{\"ok\":true}").unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), b"{\"ok\":true}");
+        assert!(!tmp_sibling(&p).exists());
+        // Overwrite is atomic too.
+        atomic_write(&p, b"v2").unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), b"v2");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_parent_is_an_error_not_a_panic() {
+        let p = Path::new("/nonexistent-chopper-dir/x.json");
+        let e = atomic_write(p, b"x").unwrap_err();
+        assert!(!io_ctx("writing", p, e).is_empty());
+    }
+
+    #[test]
+    fn tmp_sibling_appends_suffix() {
+        assert_eq!(
+            tmp_sibling(Path::new("/a/b/c.json")),
+            PathBuf::from("/a/b/c.json.tmp")
+        );
+        assert_eq!(tmp_sibling(Path::new("t.ctrc")), PathBuf::from("t.ctrc.tmp"));
+    }
+}

@@ -1,0 +1,66 @@
+//! CRC-32 (IEEE 802.3, reflected polynomial 0xEDB88320), table-driven.
+//!
+//! The trace store frames every chunk with a CRC so the reader can tell
+//! truncation and bit-rot apart from valid data (DESIGN.md §12). Hand-rolled
+//! because the repo takes no external dependencies; the table is built once
+//! at first use.
+
+use std::sync::OnceLock;
+
+static TABLE: OnceLock<[u32; 256]> = OnceLock::new();
+
+fn table() -> &'static [u32; 256] {
+    TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        let mut i = 0usize;
+        while i < 256 {
+            let mut c = i as u32;
+            let mut k = 0;
+            while k < 8 {
+                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+                k += 1;
+            }
+            t[i] = c;
+            i += 1;
+        }
+        t
+    })
+}
+
+/// CRC-32 of `data` (init 0xFFFFFFFF, final xor 0xFFFFFFFF), matching
+/// zlib/`cksum -o3`/Python `zlib.crc32`.
+pub fn crc32(data: &[u8]) -> u32 {
+    let t = table();
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in data {
+        c = t[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+#[cfg(test)]
+mod tests {
+    use super::crc32;
+
+    #[test]
+    fn reference_vectors() {
+        // The canonical CRC-32 check value.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"a"), 0xE8B7_BE43);
+        assert_eq!(crc32(b"The quick brown fox jumps over the lazy dog"), 0x414F_A339);
+    }
+
+    #[test]
+    fn detects_single_byte_flip() {
+        let base = b"chopper trace chunk payload".to_vec();
+        let c0 = crc32(&base);
+        for i in 0..base.len() {
+            for bit in 0..8 {
+                let mut m = base.clone();
+                m[i] ^= 1 << bit;
+                assert_ne!(crc32(&m), c0, "flip at byte {i} bit {bit} undetected");
+            }
+        }
+    }
+}

@@ -4,6 +4,8 @@
 //! simulator bit-reproducible.
 
 pub mod ascii;
+pub mod atomic_write;
+pub mod crc32;
 pub mod fmt;
 pub mod hash;
 pub mod intern;
@@ -11,3 +13,5 @@ pub mod json;
 pub mod prng;
 pub mod stats;
 pub mod svg;
+
+pub use atomic_write::{atomic_write, io_ctx, tmp_sibling};

@@ -1,0 +1,300 @@
+//! Trace-store integration tests: bitwise round trips on real engine
+//! traces (one-shot and engine-fed streaming sink), truncation/corruption
+//! salvage properties, fsck repair, and the campaign `--trace-store` /
+//! resume-from-store flow.
+//!
+//! The property tests here are the robustness contract of DESIGN.md §12:
+//! truncating a store at ANY byte offset never panics and always salvages
+//! a checksum-valid prefix; flipping any single byte of a frame is
+//! detected by the CRC.
+
+use chopper::campaign::{
+    fingerprint, run_campaign_stored, Cache, GridSpec, Scenario,
+};
+use chopper::config::{
+    FaultSpec, FsdpVersion, ModelConfig, NodeSpec, Topology, WorkloadConfig,
+};
+use chopper::sim::{
+    provisional_meta, run_workload_topo_sink, run_workload_topo_with,
+    EngineParams, ProfiledRun,
+};
+use chopper::trace::store::{
+    check_store, read_store, repair_store, write_store, SharedSink,
+    StoreWriter,
+};
+use std::cell::RefCell;
+use std::path::PathBuf;
+use std::rc::Rc;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("chopper_store_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn small_run(params: EngineParams) -> (Topology, ModelConfig, WorkloadConfig, ProfiledRun) {
+    let topo = Topology::mi300x_cluster(1);
+    let mut cfg = ModelConfig::llama3_8b();
+    cfg.layers = 2;
+    let mut wl = WorkloadConfig::parse_label("b1s4", FsdpVersion::V2).unwrap();
+    wl.iterations = 3;
+    wl.warmup = 1;
+    let run = run_workload_topo_with(&topo, &cfg, &wl, params);
+    (topo, cfg, wl, run)
+}
+
+/// One-shot write→read on a real engine trace is bit-identical (every
+/// field including the exact f64 bit patterns — Debug prints them all).
+#[test]
+fn engine_trace_roundtrips_bitwise() {
+    let dir = tmpdir("roundtrip");
+    let (_, _, _, run) = small_run(EngineParams::default());
+    let path = dir.join("t.ctrc");
+    let info =
+        write_store(&path, &run.trace, &run.power, &run.iter_bounds).unwrap();
+    assert!(info.events > 0 && info.chunks > 0);
+    let loaded = read_store(&path).unwrap();
+    assert!(loaded.report.clean(), "{}", loaded.report.describe());
+    assert_eq!(format!("{:?}", run.trace), format!("{:?}", loaded.trace));
+    assert_eq!(format!("{:?}", run.power), format!("{:?}", loaded.power));
+    assert_eq!(
+        format!("{:?}", run.iter_bounds),
+        format!("{:?}", loaded.iter_bounds)
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The engine-fed streaming sink (bounded memory, chunks flushed at
+/// iteration watermarks) lands on the same trace as the buffered path.
+#[test]
+fn streamed_sink_matches_buffered_run() {
+    let dir = tmpdir("stream");
+    let (topo, cfg, wl, run) = small_run(EngineParams::default());
+    let path = dir.join("s.ctrc");
+    let w = StoreWriter::create(&path, &provisional_meta(&topo, &wl)).unwrap();
+    let shared = Rc::new(RefCell::new(w));
+    let srun = run_workload_topo_sink(
+        &topo,
+        &cfg,
+        &wl,
+        EngineParams::default(),
+        Box::new(SharedSink(shared.clone())),
+    );
+    // Streaming drains the event vector: the engine never holds the full
+    // trace (that is the out-of-core point).
+    assert!(srun.trace.events.is_empty());
+    let w = Rc::try_unwrap(shared).ok().unwrap().into_inner();
+    w.finalize(&srun.trace.meta, &srun.power, &srun.iter_bounds).unwrap();
+    let loaded = read_store(&path).unwrap();
+    assert!(loaded.report.clean(), "{}", loaded.report.describe());
+    assert_eq!(format!("{:?}", run.trace), format!("{:?}", loaded.trace));
+    assert_eq!(format!("{:?}", run.power), format!("{:?}", loaded.power));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Under a dropout fault the engine rewrites history at finish time, so
+/// the sink is fed after the rewrite instead of live — the store must
+/// still match the buffered run exactly.
+#[test]
+fn streamed_sink_matches_buffered_run_under_dropout() {
+    let mut params = EngineParams::default();
+    params.faults = vec![FaultSpec::Dropout {
+        rank: Some(0),
+        at_ms: 1.0,
+        restart_ms: 0.5,
+    }];
+    let dir = tmpdir("dropout");
+    let (topo, cfg, wl, run) = small_run(params.clone());
+    let path = dir.join("d.ctrc");
+    let w = StoreWriter::create(&path, &provisional_meta(&topo, &wl)).unwrap();
+    let shared = Rc::new(RefCell::new(w));
+    let srun = run_workload_topo_sink(
+        &topo,
+        &cfg,
+        &wl,
+        params,
+        Box::new(SharedSink(shared.clone())),
+    );
+    let w = Rc::try_unwrap(shared).ok().unwrap().into_inner();
+    w.finalize(&srun.trace.meta, &srun.power, &srun.iter_bounds).unwrap();
+    let loaded = read_store(&path).unwrap();
+    assert!(loaded.report.clean(), "{}", loaded.report.describe());
+    assert_eq!(format!("{:?}", run.trace), format!("{:?}", loaded.trace));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Property: truncating the store at ANY byte offset never panics, always
+/// returns a salvage report, and the salvaged event count never exceeds
+/// the full trace (the reader only keeps checksum-valid whole frames).
+#[test]
+fn truncation_at_any_offset_salvages_cleanly() {
+    let dir = tmpdir("trunc");
+    let (_, _, _, run) = small_run(EngineParams::default());
+    let full_path = dir.join("full.ctrc");
+    let info =
+        write_store(&full_path, &run.trace, &run.power, &run.iter_bounds)
+            .unwrap();
+    let bytes = std::fs::read(&full_path).unwrap();
+    let cut = dir.join("cut.ctrc");
+    // Every offset would be ~1e5 scans; stride through the file plus the
+    // byte-level boundary neighborhood at both ends.
+    let mut offsets: Vec<usize> = (0..bytes.len()).step_by(257).collect();
+    offsets.extend(0..24.min(bytes.len()));
+    offsets.extend(bytes.len().saturating_sub(24)..bytes.len());
+    for cut_at in offsets {
+        std::fs::write(&cut, &bytes[..cut_at]).unwrap();
+        let report = match check_store(&cut) {
+            Ok(r) => r,
+            Err(e) => panic!("cut at {cut_at}: hard error {e}"),
+        };
+        assert!(!report.finalized, "cut at {cut_at} still finalized");
+        let loaded = read_store(&cut).unwrap();
+        assert!(
+            loaded.report.events <= info.events,
+            "cut at {cut_at} salvaged more events than were written"
+        );
+        assert_eq!(loaded.trace.events.len() as u64, loaded.report.events);
+    }
+    // The untruncated file stays clean.
+    assert!(check_store(&full_path).unwrap().clean());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Property: flipping any single byte inside the framed region is caught —
+/// the reader either stops at the damaged frame (CRC/framing mismatch) or,
+/// for bytes in the unchecked 16-byte trailer, refuses the footer — never
+/// returning silently different data as "clean".
+#[test]
+fn single_byte_flips_are_detected() {
+    let dir = tmpdir("flip");
+    let (_, _, _, run) = small_run(EngineParams::default());
+    let full_path = dir.join("full.ctrc");
+    write_store(&full_path, &run.trace, &run.power, &run.iter_bounds)
+        .unwrap();
+    let bytes = std::fs::read(&full_path).unwrap();
+    let flip = dir.join("flip.ctrc");
+    // The 16-byte header is identity, not payload: flipping it makes the
+    // file "not a store", which is a hard error by contract. Start after.
+    let mut offsets: Vec<usize> = (16..bytes.len()).step_by(211).collect();
+    offsets.extend(bytes.len() - 20..bytes.len());
+    for at in offsets {
+        let mut b = bytes.clone();
+        b[at] ^= 0x40;
+        std::fs::write(&flip, &b).unwrap();
+        match check_store(&flip) {
+            Ok(report) => assert!(
+                !report.clean(),
+                "flip at {at} of {} went undetected",
+                bytes.len()
+            ),
+            // Frame-length bytes can morph into "not a store"-level
+            // damage (e.g. an impossible frame size) — also a detection.
+            Err(_) => {}
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// fsck repair: a torn store salvages into a finalized, loadable store
+/// whose footer is flagged salvaged — and the campaign will not rebuild
+/// summaries from it.
+#[test]
+fn repair_yields_finalized_salvaged_store() {
+    let dir = tmpdir("repair");
+    let (_, _, _, run) = small_run(EngineParams::default());
+    let full_path = dir.join("full.ctrc");
+    write_store(&full_path, &run.trace, &run.power, &run.iter_bounds)
+        .unwrap();
+    let bytes = std::fs::read(&full_path).unwrap();
+    let torn = dir.join("torn.ctrc.tmp");
+    std::fs::write(&torn, &bytes[..bytes.len() * 2 / 3]).unwrap();
+    let pre = check_store(&torn).unwrap();
+    assert!(!pre.finalized && pre.lost_bytes > 0);
+    let fixed = dir.join("fixed.ctrc");
+    let info = repair_store(&torn, &fixed).unwrap();
+    assert_eq!(info.events, pre.events);
+    let post = check_store(&fixed).unwrap();
+    assert!(post.finalized, "repair must finalize");
+    assert!(post.salvaged_upstream, "repair must be marked salvaged");
+    assert_eq!(post.lost_bytes, 0, "repaired store has no dangling bytes");
+    let loaded = read_store(&fixed).unwrap();
+    assert_eq!(loaded.trace.events.len() as u64, pre.events);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The campaign `--trace-store` flow: stores land next to summaries, a
+/// resume with deleted summaries rebuilds them from the stores without
+/// re-running the engine, and the rebuilt summaries are identical.
+#[test]
+fn campaign_restores_summaries_from_stores() {
+    let dir = tmpdir("campaign");
+    let cache = Cache::open(dir.join("cache")).unwrap();
+    let node = NodeSpec::mi300x_node();
+    let mut spec = GridSpec::paper(2, 2, 1);
+    spec.batches = vec![1];
+    spec.seqs = vec![4096];
+    let scenarios: Vec<Scenario> = spec.expand();
+    assert!(!scenarios.is_empty());
+    let first =
+        run_campaign_stored(&node, &scenarios, 2, Some(&cache), false, true);
+    assert_eq!(first.executed, scenarios.len());
+    assert_eq!(first.restored, 0);
+    for sc in &scenarios {
+        let fp = fingerprint(&node, sc);
+        assert!(cache.path_for(&sc.name, fp).exists(), "{} summary", sc.name);
+        let sp = cache.store_path_for(&sc.name, fp);
+        assert!(sp.exists(), "{} store", sc.name);
+        assert!(check_store(&sp).unwrap().clean());
+        // Remove the summary: resume must fall back to the store.
+        std::fs::remove_file(cache.path_for(&sc.name, fp)).unwrap();
+    }
+    let second =
+        run_campaign_stored(&node, &scenarios, 2, Some(&cache), false, true);
+    assert_eq!(second.executed, 0, "stores should satisfy every scenario");
+    assert_eq!(second.restored, scenarios.len());
+    for (a, b) in first.summaries.iter().zip(&second.summaries) {
+        assert_eq!(a, b, "{} diverged after restore-from-store", a.name);
+    }
+    // Third run: plain cache hits (restore re-wrote the summaries).
+    let third =
+        run_campaign_stored(&node, &scenarios, 2, Some(&cache), false, true);
+    assert_eq!(third.cached, scenarios.len());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A salvaged (repaired) store is NOT good enough for a summary rebuild:
+/// the campaign re-runs the scenario instead of trusting a partial trace.
+#[test]
+fn campaign_refuses_salvaged_stores() {
+    let dir = tmpdir("refuse");
+    let cache = Cache::open(dir.join("cache")).unwrap();
+    let node = NodeSpec::mi300x_node();
+    let mut spec = GridSpec::paper(2, 2, 1);
+    spec.batches = vec![1];
+    spec.seqs = vec![4096];
+    spec.fsdp = vec![FsdpVersion::V2];
+    let scenarios: Vec<Scenario> = spec.expand();
+    assert_eq!(scenarios.len(), 1);
+    let first =
+        run_campaign_stored(&node, &scenarios, 1, Some(&cache), false, true);
+    assert_eq!(first.executed, 1);
+    let sc = &scenarios[0];
+    let fp = fingerprint(&node, sc);
+    let sp = cache.store_path_for(&sc.name, fp);
+    // Tear the store, repair it in place (now finalized but salvaged),
+    // and delete the summary.
+    let bytes = std::fs::read(&sp).unwrap();
+    std::fs::write(&sp, &bytes[..bytes.len() / 2]).unwrap();
+    repair_store(&sp, &sp).unwrap();
+    assert!(check_store(&sp).unwrap().salvaged_upstream);
+    std::fs::remove_file(cache.path_for(&sc.name, fp)).unwrap();
+    let second =
+        run_campaign_stored(&node, &scenarios, 1, Some(&cache), false, true);
+    assert_eq!(second.restored, 0, "salvaged store must not rebuild");
+    assert_eq!(second.executed, 1, "scenario must re-run");
+    for (a, b) in first.summaries.iter().zip(&second.summaries) {
+        assert_eq!(a, b, "re-run after salvage refusal diverged");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
