@@ -1,0 +1,158 @@
+//! Replica-folding bench (DESIGN.md §13): verify a folded large-cluster
+//! simulation agrees with the exact one within the seeded-jitter envelope,
+//! then A/B the wall-clock of exact vs folded at 64 logical nodes and
+//! append the simulated-rank throughput speedup (the tentpole claim:
+//! O(distinct-groups × events) instead of O(world × events), ≥10× at
+//! fold 32) plus the event-count memory proxy to `BENCH_fold.json`.
+//!
+//! Scale knobs (env): CHOPPER_BENCH_LAYERS (default 2), CHOPPER_BENCH_ITERS
+//! (default 3), CHOPPER_BENCH_SAMPLES (default 3), CHOPPER_BENCH_NODES
+//! (default 64), CHOPPER_BENCH_FOLD (default 32). CI smoke-runs tiny
+//! values; set CHOPPER_BENCH_ENFORCE_SPEEDUP=10 to make the run fail
+//! below a required speedup.
+
+use chopper::benchkit::{emit_collected, section, value, Bench};
+use chopper::campaign::{grid::Scenario, summarize};
+use chopper::config::{
+    FsdpVersion, ModelConfig, NicSpec, NodeSpec, Sharding, Topology,
+    WorkloadConfig,
+};
+use chopper::sim::{run_workload_topo, EngineParams, ProfiledRun};
+
+fn env_or<T: std::str::FromStr>(key: &str, default: T) -> T {
+    std::env::var(key)
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() {
+    let layers: u64 = env_or("CHOPPER_BENCH_LAYERS", 2);
+    let iters: u32 = env_or("CHOPPER_BENCH_ITERS", 3);
+    let samples: u32 = env_or("CHOPPER_BENCH_SAMPLES", 3);
+    let nodes: u32 = env_or("CHOPPER_BENCH_NODES", 64);
+    let fold: u32 = env_or("CHOPPER_BENCH_FOLD", 32).min(nodes).max(1);
+    assert!(
+        nodes % fold == 0,
+        "CHOPPER_BENCH_FOLD must divide CHOPPER_BENCH_NODES"
+    );
+
+    let node = NodeSpec::mi300x_node();
+    chopper::benchkit::note_topology(nodes, node.num_gpus);
+    let mut cfg = ModelConfig::llama3_8b();
+    cfg.layers = layers;
+    let mut wl = WorkloadConfig::parse_label("b1s4", FsdpVersion::V1).expect("label");
+    wl.sharding = Sharding::Hsdp;
+    wl.iterations = iters;
+    wl.warmup = iters / 2;
+    let world = nodes as u64 * node.num_gpus as u64;
+    eprintln!(
+        "setup: fold A/B at {nodes} nodes ({world} logical ranks) × \
+         {layers} layers × {iters} iterations, fold {fold}…"
+    );
+
+    let simulate = |f: u32| -> ProfiledRun {
+        let topo = Topology::mi300x_cluster(nodes).with_fold(f);
+        run_workload_topo(&topo, &cfg, &wl)
+    };
+    let reduce = |f: u32, run: &ProfiledRun| {
+        let sc = Scenario {
+            name: format!("fold{f}"),
+            model: cfg.clone(),
+            wl: wl.clone(),
+            params: EngineParams::default(),
+            num_nodes: nodes,
+            nic: NicSpec::default(),
+            serving: None,
+            fold: f,
+        };
+        summarize(&node, &sc, 0, run)
+    };
+
+    section("equivalence — folded vs exact within the jitter envelope");
+    let exact_run = simulate(1);
+    let folded_run = simulate(fold);
+    let exact = reduce(1, &exact_run);
+    let folded = reduce(fold, &folded_run);
+    // Structural identities first: exact event shrinkage and logical
+    // accounting (these are exact, not envelope-bounded).
+    assert_eq!(
+        folded.events * fold as u64,
+        exact.events,
+        "folded event count must be exactly events/fold"
+    );
+    assert_eq!(folded.num_nodes, exact.num_nodes, "logical cluster");
+    let rel = |a: f64, b: f64| ((a - b) / b.abs().max(1e-12)).abs();
+    assert!(
+        rel(folded.iter_ms, exact.iter_ms) < 0.10,
+        "folded iter_ms {} vs exact {} beyond the jitter envelope",
+        folded.iter_ms,
+        exact.iter_ms
+    );
+    assert!(
+        rel(folded.energy_per_iter_j, exact.energy_per_iter_j) < 0.10,
+        "folded energy {} vs exact {} beyond the jitter envelope",
+        folded.energy_per_iter_j,
+        exact.energy_per_iter_j
+    );
+    println!(
+        "equivalence OK: iter_ms {:.3} vs {:.3}, energy {:.1} J vs {:.1} J \
+         ({} vs {} events)",
+        folded.iter_ms,
+        exact.iter_ms,
+        folded.energy_per_iter_j,
+        exact.energy_per_iter_j,
+        folded.events,
+        exact.events
+    );
+
+    section("fold hot path — logical-cluster coverage per wall-second");
+    let ex = Bench::new("cluster_sim/exact")
+        .samples(samples)
+        .run(|| simulate(1));
+    let fo = Bench::new("cluster_sim/folded")
+        .samples(samples)
+        .run(|| simulate(fold));
+    // "Simulated-rank throughput": logical ranks covered per wall-second.
+    // Both runs answer for the same logical world, so the speedup is the
+    // wall-clock ratio — expected ≈ fold, ≥10× at the default fold 32.
+    let speedup = ex.median_s / fo.median_s.max(1e-12);
+    value("speedup_folded_vs_exact", speedup, "x");
+    value(
+        "logical_ranks_per_sec_exact",
+        world as f64 / ex.median_s.max(1e-12),
+        "ranks/s",
+    );
+    value(
+        "logical_ranks_per_sec_folded",
+        world as f64 / fo.median_s.max(1e-12),
+        "ranks/s",
+    );
+    value("nodes", nodes as f64, "");
+    value("fold", fold as f64, "");
+    value("layers", layers as f64, "");
+    value("iterations", iters as f64, "");
+
+    section("memory — event footprint sublinear in replica count");
+    // The event vector is the dominant allocation; folding shrinks it by
+    // exactly the fold factor while the logical world stays fixed.
+    value("events_exact", exact.events as f64, "");
+    value("events_folded", folded.events as f64, "");
+    value(
+        "bytes_per_logical_rank_folded",
+        folded.events as f64
+            * std::mem::size_of::<chopper::trace::TraceEvent>() as f64
+            / world as f64,
+        "B",
+    );
+
+    emit_collected("fold");
+
+    if let Ok(min) = std::env::var("CHOPPER_BENCH_ENFORCE_SPEEDUP") {
+        let min: f64 = min.parse().expect("CHOPPER_BENCH_ENFORCE_SPEEDUP");
+        assert!(
+            speedup >= min,
+            "speedup {speedup:.2}x below required {min:.2}x"
+        );
+    }
+}

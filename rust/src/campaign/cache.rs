@@ -40,7 +40,11 @@ use std::path::{Path, PathBuf};
 /// (`<name>-<fp:016x>.ctrc`, `campaign --trace-store`), and `--resume`
 /// may rebuild a summary from a finalized (non-salvaged) store instead of
 /// re-running the engine.
-pub const SCHEMA_VERSION: u32 = 6;
+///
+/// v7: scenarios may carry a replica fold factor (`Scenario::fold`,
+/// DESIGN.md §13), summaries grew the `fold` field, and store/summary
+/// rebuilds expand folded per-class totals to logical-cluster figures.
+pub const SCHEMA_VERSION: u32 = 7;
 
 pub use crate::util::prng::fnv1a;
 
@@ -62,6 +66,11 @@ pub fn fingerprint(node: &NodeSpec, sc: &Scenario) -> u64 {
     // fingerprints keep their serving-free canonical form.
     if let Some(scfg) = &sc.serving {
         canon.push_str(&format!("|serve{scfg:?}"));
+    }
+    // Same rule for the replica fold factor: exact-mode fingerprints keep
+    // their fold-free canonical form.
+    if sc.fold > 1 {
+        canon.push_str(&format!("|fold{}", sc.fold));
     }
     fnv1a(canon.as_bytes())
 }
@@ -204,6 +213,15 @@ mod tests {
         tweaked.serving.as_mut().unwrap().arrival =
             crate::config::ArrivalProcess::Poisson { qps: 9.0 };
         assert_ne!(sfp, fingerprint(&node, &tweaked));
+        // The replica fold factor fingerprints too (fold 1 == the exact
+        // canonical form, so legacy entries stay addressable).
+        let mut folded = scs[0].clone();
+        folded.num_nodes = 8;
+        folded.fold = 4;
+        let ffp = fingerprint(&node, &folded);
+        let mut exact = folded.clone();
+        exact.fold = 1;
+        assert_ne!(ffp, fingerprint(&node, &exact));
     }
 
     #[test]

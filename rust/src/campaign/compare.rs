@@ -23,6 +23,10 @@ pub fn campaign_table(summaries: &[ScenarioSummary]) -> Figure {
     let multi = summaries
         .iter()
         .any(|s| s.num_nodes > 1 || s.sharding != "FSDP");
+    // The fold column appears only when some scenario actually folded
+    // replicas, so exact-mode campaigns (folded or not in topology) keep
+    // their pre-fold bytes.
+    let folded = summaries.iter().any(|s| s.fold > 1);
     let gov = summaries.iter().any(|s| s.governor != "reactive");
     let mut rows: Vec<Vec<String>> = Vec::with_capacity(summaries.len());
     let mut csv = String::from(
@@ -32,6 +36,9 @@ pub fn campaign_table(summaries: &[ScenarioSummary]) -> Figure {
     );
     if multi {
         csv.push_str(",sharding,num_nodes");
+        if folded {
+            csv.push_str(",fold");
+        }
     }
     if gov {
         csv.push_str(",governor");
@@ -54,7 +61,7 @@ pub fn campaign_table(summaries: &[ScenarioSummary]) -> Figure {
             format!("{:.2}", s.tokens_per_j),
         ];
         if multi {
-            row.push(format!("{}x{}", s.sharding, s.num_nodes));
+            row.push(topo_tag(s));
         }
         if gov {
             row.push(s.governor.clone());
@@ -83,6 +90,9 @@ pub fn campaign_table(summaries: &[ScenarioSummary]) -> Figure {
         );
         if multi {
             let _ = write!(csv, ",{},{}", s.sharding, s.num_nodes);
+            if folded {
+                let _ = write!(csv, ",{}", s.fold);
+            }
         }
         if gov {
             let _ = write!(csv, ",{}", s.governor);
@@ -109,6 +119,17 @@ pub fn campaign_table(summaries: &[ScenarioSummary]) -> Figure {
         ascii: out,
         csv,
         svg: None,
+    }
+}
+
+/// Topology cell for the ASCII tables: "HSDPx64" in exact mode,
+/// "HSDPx64 (folded /32)" shorthand "HSDPx64/f32" when the scenario
+/// simulated `num_nodes / fold` representative nodes (DESIGN.md §13).
+fn topo_tag(s: &ScenarioSummary) -> String {
+    if s.fold > 1 {
+        format!("{}x{}/f{}", s.sharding, s.num_nodes, s.fold)
+    } else {
+        format!("{}x{}", s.sharding, s.num_nodes)
     }
 }
 
@@ -139,7 +160,7 @@ pub fn campaign_by_nodes(summaries: &[ScenarioSummary]) -> Figure {
             let skew = 100.0 * (ms / fastest - 1.0);
             rows.push(vec![
                 s.name.clone(),
-                format!("{}x{}", s.sharding, s.num_nodes),
+                topo_tag(s),
                 format!("node{n}"),
                 format!("{ms:.2}"),
                 format!("{skew:+.1}%"),
@@ -456,6 +477,7 @@ mod tests {
             governor: "reactive".into(),
             sharding: "FSDP".into(),
             num_nodes: 1,
+            fold: 1,
             node_iter_ms: Vec::new(),
             layers: 2,
             batch: 1,
@@ -544,6 +566,38 @@ mod tests {
         assert!(nodes.ascii.contains("node1"));
         // Slow node skews positive against the fastest.
         assert!(nodes.csv.contains("10.53"), "{}", nodes.csv);
+    }
+
+    #[test]
+    fn fold_column_gated_and_topo_cell_tagged() {
+        // Exact multi-node campaigns keep their pre-fold bytes: no fold
+        // column, no /f tag.
+        let mut h = fake("b-hsdp-N2", 1500.0);
+        h.sharding = "HSDP".into();
+        h.num_nodes = 2;
+        let exact = campaign_table(&[fake("a", 1000.0), h.clone()]);
+        assert!(!exact.csv.lines().next().unwrap().contains(",fold"));
+        assert!(!exact.ascii.contains("/f"));
+        // A folded scenario turns the column on and tags its topo cell.
+        let mut fl = fake("c-hsdp-N64-fold32", 1400.0);
+        fl.sharding = "HSDP".into();
+        fl.num_nodes = 64;
+        fl.fold = 32;
+        fl.node_iter_ms = vec![10.0, 10.2];
+        let tbl = campaign_table(&[fake("a", 1000.0), h.clone(), fl.clone()]);
+        assert!(tbl.csv.lines().next().unwrap().contains(",fold"));
+        assert!(tbl.ascii.contains("HSDPx64/f32"));
+        // The exact sibling's row carries fold 1 in the CSV, no tag.
+        let row_h = tbl.csv.lines().find(|l| l.starts_with("b-hsdp")).unwrap();
+        assert!(row_h.ends_with(",HSDP,2,1"), "{row_h}");
+        let row_f = tbl.csv.lines().find(|l| l.starts_with("c-hsdp")).unwrap();
+        assert!(row_f.ends_with(",HSDP,64,32"), "{row_f}");
+        // The per-node rollup tags the folded row too (its two entries
+        // are the *simulated* representative nodes of 64 logical).
+        let nodes = campaign_by_nodes(&[fl]);
+        assert!(nodes.ascii.contains("HSDPx64/f32"));
+        assert!(nodes.ascii.contains("node1"));
+        assert!(!nodes.ascii.contains("node2"));
     }
 
     #[test]

@@ -30,6 +30,9 @@ pub struct Scenario {
     /// `None` = the classic training scenario; `Some` scenarios run
     /// through `serve::run_serving` instead of the training schedule.
     pub serving: Option<ServingConfig>,
+    /// Replica fold factor (DESIGN.md §13): 1 = exact, F > 1 simulates
+    /// `num_nodes / F` representative nodes and folds the replicas.
+    pub fold: u32,
 }
 
 /// An [`EngineParams`] knob a grid can ablate (DESIGN.md §5 mechanisms).
@@ -154,6 +157,10 @@ pub struct GridSpec {
     /// (`config::faults`). Default `[[]]` = the healthy cluster with no
     /// name tag; non-empty sets get a `-flt_<label>` tag.
     pub faults: Vec<Vec<FaultSpec>>,
+    /// Replica-fold axis (DESIGN.md §13). Default `[1]` = exact mode with
+    /// no name tag; folded scenarios get a `-fold<F>` tag. Each factor
+    /// must divide every node count it is crossed with.
+    pub folds: Vec<u32>,
     pub iterations: u32,
     pub warmup: u32,
     /// Base seed; each scenario derives its own seed from this and its name.
@@ -181,6 +188,7 @@ impl GridSpec {
             serving: None,
             qps: Vec::new(),
             faults: vec![Vec::new()],
+            folds: vec![1],
             iterations,
             warmup,
             seed: 0xC0FFEE,
@@ -203,7 +211,8 @@ impl GridSpec {
             } else {
                 1
             }
-            * self.faults.len().max(1);
+            * self.faults.len().max(1)
+            * self.folds.len().max(1);
         for (_, vals) in &self.ablations {
             n *= vals.len().max(1);
         }
@@ -243,6 +252,12 @@ impl GridSpec {
         } else {
             self.faults.iter().map(|f| f.as_slice()).collect()
         };
+        // Fold axis: empty list = exact mode only.
+        let folds: Vec<u32> = if self.folds.is_empty() {
+            vec![1]
+        } else {
+            self.folds.clone()
+        };
         for &layers in &self.layers {
             for &batch in &self.batches {
                 for &seq in &self.seqs {
@@ -253,11 +268,14 @@ impl GridSpec {
                                     for &gov in &self.governors {
                                         for &load in &loads {
                                             for &fset in &fault_sets {
-                                                self.expand_ablations(
-                                                    layers, batch, seq, fsdp,
-                                                    sharding, nodes, nic, gov,
-                                                    load, fset, &mut out,
-                                                );
+                                                for &fold in &folds {
+                                                    self.expand_ablations(
+                                                        layers, batch, seq,
+                                                        fsdp, sharding, nodes,
+                                                        nic, gov, load, fset,
+                                                        fold, &mut out,
+                                                    );
+                                                }
                                             }
                                         }
                                     }
@@ -284,6 +302,7 @@ impl GridSpec {
         governor: GovernorKind,
         load: Option<Option<f64>>,
         fset: &[FaultSpec],
+        fold: u32,
         out: &mut Vec<Scenario>,
     ) {
         // Odometer over the ablation axes (empty product = one scenario).
@@ -363,6 +382,15 @@ impl GridSpec {
                     crate::config::faults::set_label(fset)
                 ));
             }
+            // The fold tag is appended *after* the seed is derived, the
+            // same rule as the governor/serving/fault tags: a folded
+            // scenario shares every per-class jitter draw with its exact
+            // sibling of the same name, which is what makes the
+            // folded-vs-exact cross-check (DESIGN.md §13) an apples-to-
+            // apples comparison rather than a reseeded rerun.
+            if fold > 1 {
+                name.push_str(&format!("-fold{fold}"));
+            }
             out.push(Scenario {
                 name,
                 model,
@@ -371,6 +399,7 @@ impl GridSpec {
                 num_nodes: nodes.max(1),
                 nic,
                 serving,
+                fold: fold.max(1),
             });
             // Advance the odometer; done when it wraps.
             let mut pos = axes.len();
@@ -442,6 +471,17 @@ pub fn parse_list_nodes(s: &str) -> Result<Vec<u32>, String> {
     let v = parse_list_u64(s)?;
     if let Some(&bad) = v.iter().find(|&&n| n == 0 || n > u32::MAX as u64) {
         return Err(format!("bad node count {bad} in list `{s}`"));
+    }
+    Ok(v.into_iter().map(|n| n as u32).collect())
+}
+
+/// Parse a comma-separated fold-factor list ("1,8"), rejecting zero and
+/// values past the u32 topology representation. Divisibility against the
+/// node axis is checked at campaign start, where both axes are known.
+pub fn parse_list_folds(s: &str) -> Result<Vec<u32>, String> {
+    let v = parse_list_u64(s)?;
+    if let Some(&bad) = v.iter().find(|&&n| n == 0 || n > u32::MAX as u64) {
+        return Err(format!("bad fold factor {bad} in list `{s}`"));
     }
     Ok(v.into_iter().map(|n| n as u32).collect())
 }
@@ -698,6 +738,58 @@ mod tests {
             assert!(!sc.name.contains("-flt_"), "{}", sc.name);
             assert!(sc.params.faults.is_empty());
         }
+    }
+
+    #[test]
+    fn fold_axis_expands_and_tags_non_default_only() {
+        use crate::config::Sharding;
+        let mut g = GridSpec::paper(2, 2, 1);
+        g.batches = vec![1];
+        g.seqs = vec![4096];
+        g.fsdp = vec![FsdpVersion::V1];
+        g.shardings = vec![Sharding::Hsdp];
+        g.nodes = vec![8];
+        g.folds = vec![1, 4];
+        let scs = g.expand();
+        assert_eq!(scs.len(), g.len());
+        assert_eq!(scs.len(), 2);
+        // The exact scenario keeps its legacy name (seed/cache-key
+        // stability); the folded sibling is tagged.
+        let exact = scs
+            .iter()
+            .find(|s| s.name == "L2-b1s4-FSDPv1-HSDP-N8")
+            .expect("exact scenario");
+        let folded = scs
+            .iter()
+            .find(|s| s.name == "L2-b1s4-FSDPv1-HSDP-N8-fold4")
+            .expect("folded scenario");
+        assert_eq!(exact.fold, 1);
+        assert_eq!(folded.fold, 4);
+        // Both report the same *logical* node count; only the simulated
+        // world shrinks (in the engine, not here).
+        assert_eq!(folded.num_nodes, 8);
+        // Fold siblings share the seed (the tag is excluded from the
+        // seed basis), so the folded-vs-exact cross-check compares the
+        // same jitter draws, not two reseeded runs.
+        assert_eq!(folded.wl.seed, exact.wl.seed);
+        // Default grids carry no fold tag at all.
+        for sc in GridSpec::paper(2, 2, 1).expand() {
+            assert!(!sc.name.contains("-fold"), "{}", sc.name);
+            assert_eq!(sc.fold, 1);
+        }
+        // An empty fold axis behaves like `[1]`.
+        g.folds = Vec::new();
+        let unswept = g.expand();
+        assert_eq!(unswept.len(), 1);
+        assert_eq!(unswept.len(), g.len());
+        assert_eq!(unswept[0].fold, 1);
+    }
+
+    #[test]
+    fn fold_list_parser() {
+        assert_eq!(parse_list_folds("1,8").unwrap(), vec![1, 8]);
+        assert!(parse_list_folds("0,2").is_err());
+        assert!(parse_list_folds("4294967296").is_err());
     }
 
     #[test]

@@ -73,9 +73,16 @@ pub struct ScenarioSummary {
     pub governor: String,
     /// Sharding strategy ("FSDP"/"HSDP").
     pub sharding: String,
-    /// Nodes in the scenario topology (1 = classic single node).
+    /// Nodes in the scenario topology (1 = classic single node). Always
+    /// the *logical* cluster size — a folded scenario (DESIGN.md §13)
+    /// reports the full cluster it stands for, not the simulated subset.
     pub num_nodes: u64,
-    /// Median per-iteration wall span of each node, ms, node order.
+    /// Replica fold factor (1 = exact mode). `num_nodes / fold` nodes
+    /// were actually simulated; totals below are expanded to the logical
+    /// cluster.
+    pub fold: u64,
+    /// Median per-iteration wall span of each *simulated* node, ms, node
+    /// order (`num_nodes / fold` entries on folded scenarios).
     /// Empty on single-node scenarios (the rollup equals `iter_ms`).
     pub node_iter_ms: Vec<f64>,
     pub layers: u64,
@@ -143,6 +150,7 @@ impl Default for ScenarioSummary {
             governor: "reactive".into(),
             sharding: "FSDP".into(),
             num_nodes: 1,
+            fold: 1,
             node_iter_ms: Vec::new(),
             layers: 0,
             batch: 0,
@@ -205,6 +213,12 @@ impl ScenarioSummary {
         if self.num_nodes > 1 || self.sharding != "FSDP" {
             fields.push(("sharding", Json::str(self.sharding.clone())));
             fields.push(("num_nodes", Json::num(self.num_nodes as f64)));
+            // The fold factor serializes only when folding actually
+            // happened, so exact-mode summaries keep their pre-fold bytes
+            // (same discipline as the topology block itself).
+            if self.fold > 1 {
+                fields.push(("fold", Json::num(self.fold as f64)));
+            }
             fields.push((
                 "node_iter_ms",
                 Json::Arr(self.node_iter_ms.iter().map(|&v| Json::num(v)).collect()),
@@ -296,6 +310,9 @@ impl ScenarioSummary {
             .get("num_nodes")
             .and_then(|v| v.as_f64())
             .unwrap_or(1.0) as u64;
+        // Pre-fold artifacts (and all exact-mode summaries) carry no fold
+        // field; 1 is the exact-mode identity.
+        let fold = j.get("fold").and_then(|v| v.as_f64()).unwrap_or(1.0) as u64;
         let node_iter_ms = j
             .get("node_iter_ms")
             .and_then(|v| v.as_arr())
@@ -326,6 +343,7 @@ impl ScenarioSummary {
             governor,
             sharding,
             num_nodes,
+            fold,
             node_iter_ms,
             layers: num(j, "layers")? as u64,
             batch: num(j, "batch")? as u64,
@@ -371,9 +389,31 @@ pub fn summarize(
     fp: u64,
     run: &ProfiledRun,
 ) -> ScenarioSummary {
+    summarize_indexed(node, sc, fp, run, TraceIndex::build(&run.trace))
+}
+
+/// [`summarize`] against a caller-supplied index. The chunk-wise store
+/// restore path builds its index incrementally ([`IndexBuilder`] fed while
+/// the store streams in canonical order) and hands it here, skipping the
+/// second full-trace pass `TraceIndex::build` would cost; both index
+/// construction paths aggregate identically, so the summaries are
+/// byte-identical.
+pub fn summarize_indexed<'t>(
+    node: &NodeSpec,
+    sc: &Scenario,
+    fp: u64,
+    run: &'t ProfiledRun,
+    idx: TraceIndex<'t>,
+) -> ScenarioSummary {
     let trace = &run.trace;
-    let idx = TraceIndex::build(trace);
-    let tokens = sc.wl.tokens_per_iteration(trace.meta.num_gpus as u64) as f64;
+    // Logical-cluster accounting under replica folding (DESIGN.md §13):
+    // the trace holds `num_gpus` *simulated* ranks standing for
+    // `logical_gpus()` logical ones, and per-rank totals expand by the
+    // fold factor. In exact mode both factors are the identity, so every
+    // expression below is bit-identical to the pre-fold pipeline.
+    let fold = trace.meta.fold_factor() as f64;
+    let tokens =
+        sc.wl.tokens_per_iteration(trace.meta.logical_gpus() as u64) as f64;
     let tp = throughput(&idx, tokens);
 
     // Per-(gpu, iter) summed compute duration by phase → median
@@ -428,8 +468,12 @@ pub fn summarize(
     let warmup = trace.meta.warmup;
     let sampled_iters =
         trace.meta.iterations.saturating_sub(warmup).max(1) as f64;
+    // Folded scenarios simulate one replica class; every class draws the
+    // same power (replicas are exact copies), so the logical cluster's
+    // energy is the simulated total × fold (×1.0 is exact in IEEE 754,
+    // preserving fold-1 byte identity).
     let energy_per_iter_j =
-        finite(run.power.sampled_energy_j(warmup) / sampled_iters);
+        finite(run.power.sampled_energy_j(warmup) * fold / sampled_iters);
     let tokens_per_j = if energy_per_iter_j > 0.0 {
         finite(tokens / energy_per_iter_j)
     } else {
@@ -438,8 +482,10 @@ pub fn summarize(
 
     // Per-node rollup: only materialized on multi-node topologies (on one
     // node it duplicates `iter_ms`, and omitting it keeps the summary
-    // JSON byte-identical to the pre-topology schema).
-    let num_nodes = trace.meta.nodes() as u64;
+    // JSON byte-identical to the pre-topology schema). The reported node
+    // count is the *logical* cluster; the rollup entries are the
+    // simulated (representative) nodes.
+    let num_nodes = trace.meta.logical_nodes() as u64;
     let node_iter_ms: Vec<f64> = if num_nodes > 1 {
         idx.node_iter_medians()
             .iter()
@@ -456,7 +502,9 @@ pub fn summarize(
     let blocked_ms = if trace.meta.faults.is_empty() {
         0.0
     } else {
-        finite(idx.blocked_on_straggler_ns() / 1e6)
+        // Summed over ranks, so it expands to the logical cluster like
+        // energy does (only fold-compatible faults reach a folded run).
+        finite(idx.blocked_on_straggler_ns() * fold / 1e6)
     };
 
     ScenarioSummary {
@@ -467,6 +515,7 @@ pub fn summarize(
         governor: sc.params.governor.name().to_string(),
         sharding: sc.wl.sharding.to_string(),
         num_nodes,
+        fold: trace.meta.fold_factor() as u64,
         node_iter_ms,
         layers: sc.model.layers,
         batch: sc.wl.batch,
@@ -536,6 +585,7 @@ pub fn summarize_serving(
         governor: sc.params.governor.name().to_string(),
         sharding: sc.wl.sharding.to_string(),
         num_nodes: trace.meta.nodes() as u64,
+        fold: 1,
         node_iter_ms: Vec::new(),
         layers: sc.model.layers,
         batch: sc.wl.batch,
@@ -610,6 +660,7 @@ fn failed_summary(sc: &Scenario, fp: u64) -> ScenarioSummary {
         governor: sc.params.governor.name().to_string(),
         sharding: sc.wl.sharding.to_string(),
         num_nodes: sc.num_nodes as u64,
+        fold: sc.fold.max(1) as u64,
         layers: sc.model.layers,
         batch: sc.wl.batch,
         seq: sc.wl.seq,
@@ -637,7 +688,7 @@ pub fn run_campaign(
     cache: Option<&Cache>,
     force: bool,
 ) -> CampaignOutcome {
-    run_campaign_stored(node, scenarios, jobs, cache, force, false)
+    run_campaign_stored(node, scenarios, jobs, cache, force, false, false)
 }
 
 /// Rebuild a scenario summary from a previously finalized trace store on
@@ -646,44 +697,69 @@ pub fn run_campaign(
 /// telemetry, so a summary rebuilt from a complete store is identical to
 /// the one the original run produced — while a salvaged prefix is not, so
 /// it is reported on stderr and the scenario re-runs instead.
+///
+/// The default read path is chunk-wise ([`read_store_visit`]): the
+/// [`IndexBuilder`] is fed every event as the store streams in canonical
+/// order, so the index is finished in the same pass that materializes the
+/// trace. `chopper campaign --in-memory` flips this to the materialized
+/// `read_store` + `TraceIndex::build` path; both produce byte-identical
+/// summaries (`tests/store.rs` pins the underlying trace equality).
 fn restore_from_store(
     node: &NodeSpec,
     sc: &Scenario,
     fp: u64,
     cache: &Cache,
+    in_memory: bool,
 ) -> Option<ScenarioSummary> {
     let path = cache.store_path_for(&sc.name, fp);
     if !path.exists() {
         return None;
     }
-    match crate::trace::store::read_store(&path) {
-        Ok(loaded) => {
-            if !loaded.report.clean() || loaded.report.salvaged_upstream {
-                eprintln!(
-                    "campaign: store {} is {}; re-running scenario",
-                    path.display(),
-                    loaded.report.describe()
-                );
-                return None;
-            }
-            let run = ProfiledRun {
-                trace: loaded.trace,
-                power: loaded.power,
-                counters: Default::default(),
-                cpu: Default::default(),
-                alloc: Default::default(),
-                iter_bounds: loaded.iter_bounds,
-            };
-            Some(summarize(node, sc, fp, &run))
-        }
+    let mut builder: Option<crate::chopper::IndexBuilder> = None;
+    let loaded = if in_memory {
+        crate::trace::store::read_store(&path)
+    } else {
+        crate::trace::store::read_store_visit(&path, |m, e| {
+            builder
+                .get_or_insert_with(|| {
+                    crate::chopper::IndexBuilder::new(m.warmup)
+                })
+                .push(e);
+        })
+    };
+    let loaded = match loaded {
+        Ok(l) => l,
         Err(e) => {
             eprintln!(
                 "campaign: unreadable store {} ({e}); re-running scenario",
                 path.display()
             );
-            None
+            return None;
         }
+    };
+    if !loaded.report.clean() || loaded.report.salvaged_upstream {
+        eprintln!(
+            "campaign: store {} is {}; re-running scenario",
+            path.display(),
+            loaded.report.describe()
+        );
+        return None;
     }
+    let run = ProfiledRun {
+        trace: loaded.trace,
+        power: loaded.power,
+        counters: Default::default(),
+        cpu: Default::default(),
+        alloc: Default::default(),
+        iter_bounds: loaded.iter_bounds,
+    };
+    let idx = match builder {
+        Some(b) => b.finish(&run.trace),
+        // `--in-memory` (or an event-free store): the classic full-pass
+        // build over the materialized trace.
+        None => TraceIndex::build(&run.trace),
+    };
+    Some(summarize_indexed(node, sc, fp, &run, idx))
 }
 
 /// Execute one training scenario with the engine streaming events straight
@@ -738,6 +814,11 @@ fn run_streamed(
 /// rebuild a missing summary without re-running the engine. Store failures
 /// of any kind degrade to the plain in-memory path — the sweep's results
 /// never depend on disk health, only its speed does.
+///
+/// `in_memory` selects the store *read* path on those rebuilds: the
+/// default (`false`) streams chunk-wise through [`read_store_visit`] with
+/// the index built in the same pass; `campaign --in-memory` materializes
+/// first and indexes after, the pre-chunk-wise behavior.
 pub fn run_campaign_stored(
     node: &NodeSpec,
     scenarios: &[Scenario],
@@ -745,6 +826,7 @@ pub fn run_campaign_stored(
     cache: Option<&Cache>,
     force: bool,
     trace_store: bool,
+    in_memory: bool,
 ) -> CampaignOutcome {
     let executed = AtomicUsize::new(0);
     let cached = AtomicUsize::new(0);
@@ -762,7 +844,8 @@ pub fn run_campaign_stored(
             // from disk instead of burning an engine run.
             if trace_store && sc.serving.is_none() {
                 if let Some(c) = cache {
-                    if let Some(summary) = restore_from_store(node, sc, fp, c)
+                    if let Some(summary) =
+                        restore_from_store(node, sc, fp, c, in_memory)
                     {
                         // Heal the summary artifact so the next resume is
                         // a plain cache hit.
@@ -784,6 +867,7 @@ pub fn run_campaign_stored(
                     node: node.clone(),
                     num_nodes: sc.num_nodes,
                     nic: sc.nic.clone(),
+                    fold: sc.fold.max(1),
                 };
                 if let Some(scfg) = &sc.serving {
                     let out = crate::serve::run_serving(
@@ -882,6 +966,7 @@ mod tests {
             governor: "reactive".into(),
             sharding: "FSDP".into(),
             num_nodes: 1,
+            fold: 1,
             node_iter_ms: Vec::new(),
             layers: 2,
             batch: 1,
@@ -936,8 +1021,20 @@ mod tests {
         let j = m.to_json_str();
         assert!(j.contains("num_nodes"));
         assert!(j.contains("node_iter_ms"));
+        // Exact-mode multi-node summaries carry no fold field at all.
+        assert!(!j.contains("\"fold\""));
         let back = ScenarioSummary::from_json_str(&j).unwrap();
         assert_eq!(m, back);
+        assert_eq!(back.to_json_str(), j);
+
+        // Folded summaries carry the fold factor and round-trip too.
+        let mut fl = m.clone();
+        fl.num_nodes = 64;
+        fl.fold = 32;
+        let j = fl.to_json_str();
+        assert!(j.contains("\"fold\":32"));
+        let back = ScenarioSummary::from_json_str(&j).unwrap();
+        assert_eq!(fl, back);
         assert_eq!(back.to_json_str(), j);
 
         // Serving summaries carry the serving block and round-trip too.

@@ -93,6 +93,28 @@ pub fn replay(
     governors: &[GovernorKind],
     jobs: usize,
 ) -> WhatIfReport {
+    replay_topo(
+        &crate::config::Topology::single(node.clone()),
+        cfg,
+        wl,
+        params,
+        governors,
+        jobs,
+    )
+}
+
+/// [`replay`] over a full cluster topology, including folded ones
+/// (DESIGN.md §13): a `--fold` replay runs each policy over the
+/// representative nodes only and reports logical-cluster totals, so the
+/// advisor scales to 10k-GPU what-ifs.
+pub fn replay_topo(
+    topo: &crate::config::Topology,
+    cfg: &ModelConfig,
+    wl: &WorkloadConfig,
+    params: &EngineParams,
+    governors: &[GovernorKind],
+    jobs: usize,
+) -> WhatIfReport {
     let baseline = params.governor;
     let mut kinds: Vec<GovernorKind> = Vec::new();
     if !governors.contains(&baseline) {
@@ -107,7 +129,7 @@ pub fn replay(
     let mut rows = run_ordered(&kinds, jobs, |_, &g| {
         let mut p = params.clone();
         p.governor = g;
-        measure(node, cfg, wl, p, g)
+        measure(topo, cfg, wl, p, g)
     });
 
     // Rank by Δ iteration time (ascending), names breaking exact ties so
@@ -148,21 +170,28 @@ pub fn replay(
 /// Engine-only replay of one policy, reduced to its outcome row (deltas
 /// and frontier are filled in by [`replay`] once every row exists).
 fn measure(
-    node: &NodeSpec,
+    topo: &crate::config::Topology,
     cfg: &ModelConfig,
     wl: &WorkloadConfig,
     params: EngineParams,
     g: GovernorKind,
 ) -> PolicyOutcome {
-    let out = Engine::new(node, cfg, wl, params).run();
+    let out = Engine::with_topology(topo.clone(), cfg, wl, params).run();
     let idx = TraceIndex::build(&out.trace);
 
-    let tokens = wl.tokens_per_iteration(out.trace.meta.num_gpus as u64) as f64;
+    // Logical-cluster accounting, mirroring campaign::runner::summarize:
+    // a folded trace holds the representative ranks only, so tokens come
+    // from the logical world and per-rank energy totals expand by the
+    // fold factor (both the identity in exact mode).
+    let fold = out.trace.meta.fold_factor() as f64;
+    let tokens =
+        wl.tokens_per_iteration(out.trace.meta.logical_gpus() as u64) as f64;
     let tp = throughput(&idx, tokens);
     // Same energy reduction as campaign::runner::summarize — one code
     // path for "joules per sampled iteration" everywhere.
     let sampled_iters = wl.iterations.saturating_sub(wl.warmup).max(1) as f64;
-    let energy_per_iter_j = out.power.sampled_energy_j(wl.warmup) / sampled_iters;
+    let energy_per_iter_j =
+        out.power.sampled_energy_j(wl.warmup) * fold / sampled_iters;
 
     // Active-window telemetry, the paper's Fig. 14 averaging — the same
     // `PowerTrace::active_samples` reduction campaign summaries use.

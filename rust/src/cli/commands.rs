@@ -29,8 +29,9 @@ USAGE: chopper <subcommand> [options]
            [--iters N] [--warmup N] [--seed N]
            [--ablate knob=v1,v2[;knob2=...]]
            [--faults 'none;straggler(factor=0.8)+stalls(rate=0.02)']
-           [--jobs N] [--cache-dir DIR] [--force] [--no-cache] [--resume]
-           [--trace-store] [--out DIR]
+           [--fold 1,32] [--jobs N] [--cache-dir DIR] [--force]
+           [--no-cache] [--resume] [--trace-store] [--in-memory]
+           [--out DIR]
            Expand the scenario grid (model × workload × topology ×
            governor policy × engine-parameter ablations × injected fault
            sets), fan scenarios out over worker threads, reuse cached
@@ -45,8 +46,16 @@ USAGE: chopper <subcommand> [options]
            --trace-store streams each training scenario's events to a
            checksummed binary store (<cache>/<name>-<fp>.ctrc) while it
            runs; --resume rebuilds missing summaries from finalized
-           stores without re-running, and `chopper fsck` salvages the
-           torn .ctrc.tmp a killed run leaves behind.
+           stores without re-running (chunk-wise indexed by default;
+           --in-memory materializes first), and `chopper fsck` salvages
+           the torn .ctrc.tmp a killed run leaves behind.
+           --fold F simulates num_nodes/F representative replica nodes
+           per scenario and folds results back to the logical cluster
+           (rank-symmetry folding, DESIGN.md §13) — 10k-GPU sweeps at
+           the cost of the distinct groups. Training + HSDP grids only;
+           every --nodes value must be a multiple of every fold factor;
+           replica-pinned faults (straggler/linkdown/dropout) are
+           rejected under folding.
            Knobs: spin_penalty transfer_penalty comm_stretch rank_jitter
            compute_jitter dispatch_jitter comm_delay_sigma_ns
            far_rank_delay_ns dvfs_window_ns margin_k fixed_cap_ratio.
@@ -63,7 +72,8 @@ USAGE: chopper <subcommand> [options]
            energy per request) plus serving_summary.json.
   whatif   [--workload b2s4|serving] [--fsdp v1|v2] [--layers N] [--iters N]
            [--warmup N] [--governor reactive,fixed_cap,det_aware,oracle]
-           [--cap-ratio 0.7] [--faults SETS] [--jobs N] [--out DIR]
+           [--cap-ratio 0.7] [--faults SETS] [--nodes N] [--fold F]
+           [--jobs N] [--out DIR]
            Replay one workload under a set of power-management policies
            and print the ranked advisor report: Δ iteration time,
            Δ energy, and the perf-per-watt (time × energy) frontier.
@@ -74,6 +84,9 @@ USAGE: chopper <subcommand> [options]
            dimension is injected fault sets instead of policies: each set
            replays against the healthy `none` baseline with Δ iteration
            time, Δ energy, restart-lost and blocked-on-straggler time.
+           --nodes replays a multi-node HSDP cluster; --fold F folds its
+           replica nodes (F must divide N) so policy what-ifs scale to
+           10k-GPU clusters; faults and serving do not fold.
   figure   <table2|fig4..fig15|all> [--layers N] [--iters N] [--out DIR]
            Regenerate one figure; prints the ASCII rendering.
   collect  [--workload b2s4] [--fsdp v1|v2] [--nodes N] [--sharding
@@ -82,10 +95,12 @@ USAGE: chopper <subcommand> [options]
            (trace.json). With --store, stream events out-of-core into the
            checksummed binary columnar store instead (trace.ctrc; bounded
            memory, crash-safe, `chopper analyze` reads both).
-  analyze  <trace.json|trace.ctrc>
+  analyze  <trace.json|trace.ctrc> [--in-memory]
            Aggregate statistics from a trace file (chrome JSON from any
            source, or a binary .ctrc store — damaged stores are salvaged
-           and the loss is reported).
+           and the loss is reported). Stores are indexed chunk-wise as
+           they stream in; --in-memory materializes the whole trace
+           first (identical output, the pre-chunk-wise path).
   fsck     <trace.ctrc[.tmp]> [--repair]
            Validate a binary trace store chunk by chunk (magic, framing,
            CRC32, footer). Damage exits nonzero and reports exactly what
@@ -178,14 +193,62 @@ pub fn cmd_campaign(args: &mut Args) -> Result<(), String> {
         Some(s) => grid::parse_list_faults(&s)?,
         None => Vec::new(),
     };
+    let folds = match args.flag("fold") {
+        Some(s) => grid::parse_list_folds(&s)?,
+        None => Vec::new(),
+    };
     let jobs = args.flag_u32("jobs", campaign::default_jobs() as u32)? as usize;
     let cache_dir: PathBuf = args.flag_or("cache-dir", ".chopper-cache").into();
     let force = args.switch("force");
     let no_cache = args.switch("no-cache");
     let resume = args.switch("resume");
     let trace_store = args.switch("trace-store");
+    let in_memory = args.switch("in-memory");
     let out = args.flag("out").map(PathBuf::from);
     args.finish()?;
+    // Replica folding (DESIGN.md §13) composes with the other axes only
+    // where the fold is semantically sound; every rejection here names the
+    // offending input rather than silently producing a wrong simulation.
+    if folds.iter().any(|&f| f > 1) {
+        if workload == "serving" {
+            return Err(
+                "campaign: --fold folds symmetric training replicas \
+                 (serving requests are not rank-symmetric; drop \
+                 --workload serving)"
+                    .into(),
+            );
+        }
+        if !shardings.iter().all(|s| matches!(s, Sharding::Hsdp)) {
+            return Err(
+                "campaign: --fold exploits the data-parallel replica \
+                 symmetry of HSDP node groups (use --sharding hsdp)"
+                    .into(),
+            );
+        }
+        for &f in folds.iter().filter(|&&f| f > 1) {
+            if let Some(&n) = nodes.iter().find(|&&n| n % f != 0) {
+                return Err(format!(
+                    "campaign: fold {f} does not divide --nodes {n} \
+                     (every node count must be a multiple of every fold \
+                     factor)"
+                ));
+            }
+        }
+        // A fault pinned to one replica (straggler rank, linkdown node,
+        // dropout rank) inside a folded class would silently replay on
+        // *every* replica the representative stands for — reject it with
+        // the fault's name instead (run it exact, or drop the fault).
+        for spec in faults.iter().flatten() {
+            if !spec.fold_compatible() {
+                return Err(format!(
+                    "campaign: fault `{}` pins a specific replica and \
+                     cannot run under --fold (it would multiply across \
+                     every folded copy); drop --fold or the fault",
+                    spec.label()
+                ));
+            }
+        }
+    }
     if resume && no_cache {
         return Err("campaign: --resume needs the cache (drop --no-cache)".into());
     }
@@ -216,6 +279,9 @@ pub fn cmd_campaign(args: &mut Args) -> Result<(), String> {
     spec.ablations = ablations;
     if !faults.is_empty() {
         spec.faults = faults;
+    }
+    if !folds.is_empty() {
+        spec.folds = folds;
     }
     match workload.as_str() {
         "training" => {
@@ -285,6 +351,7 @@ pub fn cmd_campaign(args: &mut Args) -> Result<(), String> {
         cache.as_ref(),
         force,
         trace_store,
+        in_memory,
     );
     eprintln!(
         "campaign: {} executed, {} cached in {:.2}s",
@@ -350,6 +417,11 @@ pub fn cmd_whatif(args: &mut Args) -> Result<(), String> {
     let fsdp = parse_fsdp(&args.flag_or("fsdp", "v1"))?;
     let iters = args.flag_u32("iters", 6)?;
     let warmup = args.flag_u32("warmup", iters / 2)?;
+    let nodes = args.flag_u32("nodes", 1)?.max(1);
+    let fold = args.flag_u32("fold", 1)?;
+    if fold == 0 {
+        return Err("whatif: --fold needs at least 1 (1 = exact)".into());
+    }
     // Same flag spelling as `campaign --governor` (one axis, one name).
     let governors = crate::sim::parse_list_governor(
         &args.flag_or("governor", "reactive,fixed_cap,det_aware,oracle"),
@@ -376,6 +448,13 @@ pub fn cmd_whatif(args: &mut Args) -> Result<(), String> {
         if fault_sets.is_some() {
             return Err(
                 "whatif: --faults replays a training workload (drop \
+                 --workload serving)"
+                    .into(),
+            );
+        }
+        if nodes > 1 || fold > 1 {
+            return Err(
+                "whatif: --nodes/--fold replay a training workload (drop \
                  --workload serving)"
                     .into(),
             );
@@ -426,14 +505,41 @@ pub fn cmd_whatif(args: &mut Args) -> Result<(), String> {
     if !(cap_ratio > 0.0 && cap_ratio.is_finite()) {
         return Err(format!("whatif: bad --cap-ratio {cap_ratio}"));
     }
+    if fold > 1 {
+        if nodes % fold != 0 {
+            return Err(format!(
+                "whatif: --fold {fold} does not divide --nodes {nodes}"
+            ));
+        }
+        if fault_sets.is_some() {
+            // The fault replay dimension measures per-replica damage —
+            // the one thing folding cannot represent (DESIGN.md §13).
+            return Err(
+                "whatif: --faults measures per-replica damage, which \
+                 folding cannot represent (drop --fold)"
+                    .into(),
+            );
+        }
+    }
     let mut wl = WorkloadConfig::parse_label(&label, fsdp)
         .ok_or_else(|| format!("bad --workload {label}"))?;
     wl.iterations = iters;
     wl.warmup = warmup;
+    if nodes > 1 {
+        // Multi-node replay shards within the node and replicates across
+        // nodes — the symmetry --fold exploits.
+        wl.sharding = Sharding::Hsdp;
+    }
     let mut params = crate::sim::EngineParams::default();
     params.fixed_cap_ratio = cap_ratio;
     let node = NodeSpec::mi300x_node();
     if let Some(sets) = &fault_sets {
+        if nodes > 1 {
+            return Err(
+                "whatif: --faults replay is single-node (drop --nodes)"
+                    .into(),
+            );
+        }
         // Fault dimension: replay the identical workload per fault set
         // against the always-present healthy baseline.
         eprintln!(
@@ -454,14 +560,30 @@ pub fn cmd_whatif(args: &mut Args) -> Result<(), String> {
         }
         return Ok(());
     }
+    // Exact single-node replays take the identical code path as before
+    // --nodes/--fold existed: `Topology::single` is what `replay` wraps.
+    let topo = if nodes > 1 {
+        Topology::mi300x_cluster(nodes).with_fold(fold)
+    } else {
+        Topology::single(node.clone()).with_fold(fold)
+    };
     eprintln!(
-        "whatif: {} × {} layers × {iters} iters under {} policies, {jobs} worker(s)…",
+        "whatif: {} × {} layers × {iters} iters under {} policies{}, \
+         {jobs} worker(s)…",
         wl.label_with_fsdp(),
         cfg.layers,
-        governors.len()
+        governors.len(),
+        if fold > 1 {
+            format!(" ({nodes} logical nodes folded ×{fold})")
+        } else if nodes > 1 {
+            format!(" ({nodes} nodes)")
+        } else {
+            String::new()
+        }
     );
-    let report =
-        crate::chopper::whatif::replay(&node, &cfg, &wl, &params, &governors, jobs);
+    let report = crate::chopper::whatif::replay_topo(
+        &topo, &cfg, &wl, &params, &governors, jobs,
+    );
     let fig = crate::chopper::whatif::render(&report);
     println!("{}", fig.ascii);
     if let Some(dir) = &out {
@@ -711,13 +833,32 @@ pub fn cmd_analyze(args: &mut Args) -> Result<(), String> {
     let path = args
         .take_positional()
         .ok_or("analyze: missing trace path")?;
+    let in_memory = args.switch("in-memory");
     args.finish()?;
     let p = std::path::Path::new(&path);
     // Sniff the 8-byte magic: `analyze` takes chrome JSON and binary
     // stores through the same front door. A damaged store is salvaged,
     // never fatal — the status line says exactly what was lost.
+    //
+    // Stores default to the chunk-wise read path: the index builder is
+    // fed every event while the store streams in canonical order, so by
+    // the time the trace is materialized the index only needs its
+    // finishing pass. `--in-memory` is the escape hatch back to
+    // materialize-then-index; both paths are byte-identical
+    // (tests/store.rs pins the trace, the builder docs pin the index).
+    let mut builder: Option<crate::chopper::IndexBuilder> = None;
     let trace = if crate::trace::store::is_store_file(p) {
-        let loaded = crate::trace::store::read_store(p)?;
+        let loaded = if in_memory {
+            crate::trace::store::read_store(p)?
+        } else {
+            crate::trace::store::read_store_visit(p, |m, e| {
+                builder
+                    .get_or_insert_with(|| {
+                        crate::chopper::IndexBuilder::new(m.warmup)
+                    })
+                    .push(e);
+            })?
+        };
         println!("store: {}", loaded.report.describe());
         loaded.trace
     } else {
@@ -744,8 +885,13 @@ pub fn cmd_analyze(args: &mut Args) -> Result<(), String> {
         );
     }
     println!("span: {}", fmt::dur_ns(trace.span_ns()));
-    // Build the shared index once; every query below consumes it.
-    let idx = crate::chopper::TraceIndex::build(&trace);
+    // The shared index: finished from the chunk-fed builder when the
+    // store streamed one in, built from scratch otherwise (chrome JSON,
+    // --in-memory, or an event-free store).
+    let idx = match builder {
+        Some(b) => b.finish(&trace),
+        None => crate::chopper::TraceIndex::build(&trace),
+    };
     let medians = crate::chopper::aggregate::op_medians(&idx);
     let mut rows: Vec<(String, f64)> = medians
         .into_iter()
@@ -1131,6 +1277,137 @@ mod tests {
             run_cli("chopper whatif --layers 1 --iters 2 --faults meteor"),
             1
         );
+    }
+
+    #[test]
+    fn campaign_fold_axis_runs_and_validates() {
+        // Exact + folded siblings on one grid (fold 2 of 2 HSDP nodes).
+        assert_eq!(
+            run_cli(
+                "chopper campaign --layers 1 --batch 1 --seq 4 --fsdp v1 \
+                 --nodes 2 --sharding hsdp --fold 1,2 --iters 2 --warmup 1 \
+                 --jobs 2 --no-cache"
+            ),
+            0
+        );
+        // Fold must divide every node count.
+        assert_eq!(
+            run_cli(
+                "chopper campaign --no-cache --nodes 2 --sharding hsdp \
+                 --fold 3 --iters 2"
+            ),
+            1
+        );
+        // Folding exploits HSDP replica symmetry; FSDP grids are exact.
+        assert_eq!(
+            run_cli("chopper campaign --no-cache --nodes 2 --fold 2 --iters 2"),
+            1
+        );
+        // Serving requests are not rank-symmetric.
+        assert_eq!(
+            run_cli(
+                "chopper campaign --no-cache --workload serving --qps 4 \
+                 --requests 2 --nodes 2 --sharding hsdp --fold 2"
+            ),
+            1
+        );
+        // Fold 0 is rejected by the axis parser.
+        assert_eq!(
+            run_cli("chopper campaign --no-cache --fold 0 --iters 2"),
+            1
+        );
+    }
+
+    #[test]
+    fn campaign_fold_rejects_replica_pinned_faults() {
+        // A straggler pins one replica — folding would silently multiply
+        // it across every folded copy, so the combination is an error
+        // that names the fault.
+        assert_eq!(
+            run_cli(
+                "chopper campaign --no-cache --nodes 2 --sharding hsdp \
+                 --fold 2 --faults straggler(factor=0.8) --iters 2"
+            ),
+            1
+        );
+        assert_eq!(
+            run_cli(
+                "chopper campaign --no-cache --nodes 2 --sharding hsdp \
+                 --fold 2 --faults dropout(at_ms=10,restart_ms=50) --iters 2"
+            ),
+            1
+        );
+        // Replica-agnostic faults (uniform stalls) compose with folding.
+        assert_eq!(
+            run_cli(
+                "chopper campaign --layers 1 --batch 1 --seq 4 --fsdp v1 \
+                 --nodes 2 --sharding hsdp --fold 2 --faults none;stalls \
+                 --iters 2 --warmup 1 --jobs 2 --no-cache"
+            ),
+            0
+        );
+    }
+
+    #[test]
+    fn whatif_fold_replays_and_validates() {
+        assert_eq!(
+            run_cli(
+                "chopper whatif --workload b1s4 --layers 1 --iters 2 \
+                 --warmup 1 --nodes 2 --fold 2 --governor reactive,oracle \
+                 --jobs 2"
+            ),
+            0
+        );
+        // Fold must divide the node count.
+        assert_eq!(
+            run_cli("chopper whatif --layers 1 --iters 2 --nodes 2 --fold 3"),
+            1
+        );
+        // Fault replays measure per-replica damage: never folded.
+        assert_eq!(
+            run_cli(
+                "chopper whatif --layers 1 --iters 2 --nodes 2 --fold 2 \
+                 --faults stalls"
+            ),
+            1
+        );
+        // Serving replays don't fold either.
+        assert_eq!(
+            run_cli(
+                "chopper whatif --workload serving --qps 8 --requests 4 \
+                 --fold 2"
+            ),
+            1
+        );
+    }
+
+    #[test]
+    fn analyze_store_default_and_in_memory_paths_both_work() {
+        let dir = std::env::temp_dir().join(format!(
+            "chopper_cli_analyze_mem_{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let store = dir.join("t.ctrc");
+        let cmd = format!(
+            "chopper collect --workload b1s4 --fsdp v1 --layers 2 --iters 2 \
+             --warmup 1 --store --out {}",
+            store.display()
+        );
+        assert_eq!(run_cli(&cmd), 0);
+        // Default: chunk-wise streamed index. Escape hatch: --in-memory.
+        assert_eq!(
+            run_cli(&format!("chopper analyze {}", store.display())),
+            0
+        );
+        assert_eq!(
+            run_cli(&format!(
+                "chopper analyze {} --in-memory",
+                store.display()
+            )),
+            0
+        );
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -50,6 +50,23 @@ pub enum FaultSpec {
 }
 
 impl FaultSpec {
+    /// Whether this fault composes with replica folding (DESIGN.md §13).
+    /// Faults that resolve to a specific rank or node — explicitly
+    /// targeted or seeded-random (`rank: None` still lands on exactly one
+    /// rank) — break replica symmetry: simulating them on a folded
+    /// representative would silently multiply the fault across every
+    /// replica it stands for. Rate-based transient stalls hit every rank
+    /// statistically alike, and `panic` is a campaign-runner test hook
+    /// that never reaches the engine's rank state, so both stay allowed.
+    pub fn fold_compatible(&self) -> bool {
+        match self {
+            FaultSpec::Straggler { .. }
+            | FaultSpec::LinkDown { .. }
+            | FaultSpec::Dropout { .. } => false,
+            FaultSpec::Stalls { .. } | FaultSpec::Panic => true,
+        }
+    }
+
     /// The grammar keyword of this fault kind.
     pub fn kind(&self) -> &'static str {
         match self {

@@ -85,12 +85,30 @@ impl Default for NicSpec {
 
 /// The whole cluster: `num_nodes` identical [`NodeSpec`]s joined by
 /// [`NicSpec`] rails.
+///
+/// **Replica folding (DESIGN.md §13).** Under HSDP every node runs the
+/// same schedule and talks to its peers through the same symmetric
+/// collectives — replica nodes are statistically identical up to seeded
+/// jitter. `fold` exploits that: the engine simulates only
+/// `num_nodes / fold` *representative* nodes (one per equivalence class
+/// of `fold` consecutive replicas, each representative keeping the
+/// jitter substreams of the class's first logical node) while collective
+/// *pricing* still sees the full logical `num_nodes`/`world_size()`.
+/// `fold == 1` is exact mode and must reproduce the unfolded pipeline
+/// byte for byte.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Topology {
     /// Per-node hardware (GPUs, host CPU, intra-node links).
     pub node: NodeSpec,
+    /// **Logical** node count — what collectives are priced against and
+    /// what summaries report, independent of how many nodes the engine
+    /// actually simulates.
     pub num_nodes: u32,
     pub nic: NicSpec,
+    /// Replica fold factor: 1 = exact (simulate every node); F > 1 =
+    /// simulate `num_nodes / F` representative nodes and fold results
+    /// across the remaining replicas. Must divide `num_nodes`.
+    pub fold: u32,
 }
 
 impl Topology {
@@ -101,6 +119,7 @@ impl Topology {
             node,
             num_nodes: 1,
             nic: NicSpec::default(),
+            fold: 1,
         }
     }
 
@@ -110,7 +129,14 @@ impl Topology {
             node: NodeSpec::mi300x_node(),
             num_nodes: num_nodes.max(1),
             nic: NicSpec::default(),
+            fold: 1,
         }
+    }
+
+    /// Same topology with a replica fold factor.
+    pub fn with_fold(mut self, fold: u32) -> Self {
+        self.fold = fold.max(1);
+        self
     }
 
     pub fn gpus_per_node(&self) -> u32 {
@@ -146,6 +172,61 @@ impl Topology {
     /// Compact tag for names/fingerprints: "N2x8".
     pub fn tag(&self) -> String {
         format!("N{}x{}", self.num_nodes, self.gpus_per_node())
+    }
+
+    // -- replica folding (DESIGN.md §13) ------------------------------------
+
+    /// Replica fold factor, normalized (0 behaves as 1 = exact mode).
+    pub fn fold_factor(&self) -> u32 {
+        self.fold.max(1)
+    }
+
+    /// Whether this topology folds replicas (fold factor > 1).
+    pub fn is_folded(&self) -> bool {
+        self.fold_factor() > 1
+    }
+
+    /// Nodes the engine actually simulates: one representative node per
+    /// equivalence class of `fold_factor()` consecutive logical nodes.
+    /// Equal to `num_nodes` in exact mode.
+    pub fn sim_nodes(&self) -> u32 {
+        (self.num_nodes / self.fold_factor()).max(1)
+    }
+
+    /// Ranks the engine actually simulates (`sim_nodes()` × GPUs/node).
+    pub fn sim_world(&self) -> u32 {
+        self.sim_nodes() * self.gpus_per_node()
+    }
+
+    /// First **logical** node of the equivalence class represented by
+    /// simulated node `sim_node` — the node whose jitter substreams the
+    /// representative draws from, so fold-1 representatives are bitwise
+    /// the nodes they stand for.
+    pub fn logical_node_of(&self, sim_node: u32) -> u32 {
+        sim_node * self.fold_factor()
+    }
+
+    /// Logical flat rank represented by simulated flat rank `sim_rank`.
+    pub fn logical_rank_of(&self, sim_rank: u32) -> u32 {
+        let g = self.gpus_per_node().max(1);
+        self.rank_of(self.logical_node_of(sim_rank / g), sim_rank % g)
+    }
+
+    /// Structural validity of the fold spec. Callers layer their own
+    /// policy on top (campaign/whatif additionally reject folding with
+    /// FSDP sharding, serving workloads, and rank-targeted faults).
+    pub fn validate_fold(&self) -> Result<(), String> {
+        let f = self.fold_factor();
+        if f == 1 {
+            return Ok(());
+        }
+        if self.num_nodes % f != 0 {
+            return Err(format!(
+                "fold factor {f} does not divide num_nodes {}",
+                self.num_nodes
+            ));
+        }
+        Ok(())
     }
 }
 
@@ -183,6 +264,39 @@ mod tests {
         assert_eq!(Sharding::parse("zero3"), None);
         assert_eq!(Sharding::Fsdp.to_string(), "FSDP");
         assert_eq!(Sharding::Hsdp.to_string(), "HSDP");
+    }
+
+    #[test]
+    fn fold_defaults_to_exact() {
+        let t = Topology::mi300x_cluster(4);
+        assert_eq!(t.fold, 1);
+        assert!(!t.is_folded());
+        assert_eq!(t.sim_nodes(), 4);
+        assert_eq!(t.sim_world(), 32);
+        assert!(t.validate_fold().is_ok());
+        // Normalized: fold 0 behaves as exact mode.
+        let z = Topology::mi300x_cluster(4).with_fold(0);
+        assert_eq!(z.fold_factor(), 1);
+    }
+
+    #[test]
+    fn fold_maps_representatives_to_class_leaders() {
+        let t = Topology::mi300x_cluster(8).with_fold(4);
+        assert!(t.is_folded());
+        assert_eq!(t.sim_nodes(), 2);
+        assert_eq!(t.sim_world(), 16);
+        // Logical pricing still sees the full cluster.
+        assert_eq!(t.world_size(), 64);
+        // Representative 0 is logical node 0; representative 1 leads the
+        // second class (logical node 4).
+        assert_eq!(t.logical_node_of(0), 0);
+        assert_eq!(t.logical_node_of(1), 4);
+        assert_eq!(t.logical_rank_of(0), 0);
+        assert_eq!(t.logical_rank_of(7), 7);
+        assert_eq!(t.logical_rank_of(8), 32);
+        assert_eq!(t.logical_rank_of(15), 39);
+        assert!(t.validate_fold().is_ok());
+        assert!(Topology::mi300x_cluster(6).with_fold(4).validate_fold().is_err());
     }
 
     #[test]

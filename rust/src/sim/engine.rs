@@ -406,7 +406,29 @@ impl<'a> Engine<'a> {
         program: Arc<crate::fsdp::Program>,
         alloc: AllocStats,
     ) -> Self {
-        let r = topo.world_size() as usize;
+        // Replica folding (DESIGN.md §13): the engine sizes every per-rank
+        // structure to the *simulated* world (`sim_world()` representative
+        // ranks) while collective pricing below keeps reading the logical
+        // `topo.num_nodes` / `world_size()`. In exact mode (fold 1) the two
+        // coincide and every line here is byte-identical to the unfolded
+        // engine.
+        let r = topo.sim_world() as usize;
+        if topo.is_folded() {
+            topo.validate_fold().expect("folded topology");
+            if let Some(f) =
+                params.faults.iter().find(|f| !f.fold_compatible())
+            {
+                // Backstop for the CLI-level rejection: a rank/node-targeted
+                // fault inside a folded class would silently be multiplied
+                // across every replica the representative stands for.
+                panic!(
+                    "fault `{}` targets specific ranks/nodes and cannot run \
+                     under replica folding (fold {}): drop --fold or the fault",
+                    f.label(),
+                    topo.fold_factor()
+                );
+            }
+        }
         let spike_var =
             alloc.peak_sigma_bytes / cfg.layer_weight_bytes().max(1) as f64;
         let noise_w =
@@ -415,16 +437,20 @@ impl<'a> Engine<'a> {
         // One NUMA-far GPU per node (each chassis has its own two-socket
         // doorbell asymmetry). Node 0 keeps the original substream label so
         // the single-node trace is bit-identical to the pre-topology path.
+        // Folded representatives draw from the substream of the *logical*
+        // node leading their equivalence class, so at any fold the
+        // representative is bitwise the node it stands for.
         let gpn = topo.gpus_per_node() as usize;
-        let far_locals: Vec<usize> = (0..topo.num_nodes as usize)
-            .map(|n| {
-                let label = if n == 0 {
-                    "far_rank".to_string()
-                } else {
-                    format!("far_rank_node{n}")
-                };
-                Rng::substream(wl.seed, &label).range_usize(0, gpn)
-            })
+        let far_local_of = |logical_node: u32| -> usize {
+            let label = if logical_node == 0 {
+                "far_rank".to_string()
+            } else {
+                format!("far_rank_node{logical_node}")
+            };
+            Rng::substream(wl.seed, &label).range_usize(0, gpn)
+        };
+        let far_locals: Vec<usize> = (0..topo.sim_nodes())
+            .map(|n| far_local_of(topo.logical_node_of(n)))
             .collect();
         // Fault model: resolved from its own `(seed, "fault<i>")`
         // substreams so it never consumes a draw from the per-rank jitter
@@ -432,9 +458,26 @@ impl<'a> Engine<'a> {
         let faults =
             crate::sim::faults::build_fault_model(&params.faults, wl.seed, r, gpn);
 
+        // Static per-rank comm dispatch delay of a *logical* rank, drawn
+        // from its own substream exactly the way the rank loop below draws
+        // it (two leading gausses are the host/compute jitter draws).
+        let static_comm_delay = |logical_rank: u32, far_local: usize| -> f64 {
+            let mut rng =
+                Rng::substream(wl.seed, &format!("rank{logical_rank}"));
+            let _ = rng.gauss();
+            let _ = rng.gauss();
+            rng.gauss().abs() * params.comm_delay_sigma_ns
+                + if logical_rank as usize % gpn == far_local {
+                    params.far_rank_delay_ns
+                } else {
+                    0.0
+                }
+        };
+
         let mut ranks = Vec::with_capacity(r);
         for g in 0..r {
-            let mut rng = Rng::substream(wl.seed, &format!("rank{g}"));
+            let lg = topo.logical_rank_of(g as u32);
+            let mut rng = Rng::substream(wl.seed, &format!("rank{lg}"));
             let host_scale = (1.0 + params.rank_jitter * rng.gauss()).clamp(0.8, 1.3);
             let mut compute_scale =
                 (1.0 + params.compute_jitter * rng.gauss()).clamp(0.9, 1.1);
@@ -510,10 +553,48 @@ impl<'a> Engine<'a> {
             }
         }
 
+        // Folded cross-node tail envelope: a cross-node rendezvous is
+        // gated by its slowest participant, and folding removes the
+        // unsimulated replicas' arrivals from the event stream. Recover
+        // the *static* part of that tail by re-deriving every logical
+        // rank's comm dispatch delay from its substream (fresh substreams,
+        // zero draws from the engine streams) and charging each local's
+        // cross-node instances the delay gap between the slowest logical
+        // replica and the slowest represented one. Exactly empty in exact
+        // mode, so fold 1 adds nothing — not even a `+ 0.0`.
+        let cross_tail_ns: Vec<f64> = if topo.is_folded() {
+            let fold = topo.fold_factor();
+            let mut tails = Vec::with_capacity(gpn);
+            let far_all: Vec<usize> =
+                (0..topo.num_nodes).map(far_local_of).collect();
+            for local in 0..gpn as u32 {
+                let mut max_all = f64::NEG_INFINITY;
+                let mut max_rep = f64::NEG_INFINITY;
+                for n in 0..topo.num_nodes {
+                    let d = static_comm_delay(
+                        topo.rank_of(n, local),
+                        far_all[n as usize],
+                    );
+                    max_all = max_all.max(d);
+                    if n % fold == 0 {
+                        max_rep = max_rep.max(d);
+                    }
+                }
+                tails.push((max_all - max_rep).max(0.0));
+            }
+            tails
+        } else {
+            Vec::new()
+        };
+
         // Expand each program collective into its rendezvous-group
         // instances. On one node (or flat FSDP) every collective is
         // world-scoped: exactly one instance whose index equals the
         // program id, so instance lookups reduce to the old `colls[cid]`.
+        // Under folding, instances span the representative ranks only
+        // (one node per class, disjoint intra-node groups for unsimulated
+        // replicas never materialize) while `base_ns` keeps pricing the
+        // full logical topology.
         let mut colls: Vec<CollState> = Vec::with_capacity(comm_count);
         let mut coll_base: Vec<usize> = Vec::with_capacity(comm_count);
         let mut coll_group: Vec<CommGroup> = Vec::with_capacity(comm_count);
@@ -535,7 +616,7 @@ impl<'a> Engine<'a> {
                     colls.push(CollState::new(c.clone(), r, b));
                 }
                 CommGroup::IntraNode => {
-                    for n in 0..topo.num_nodes {
+                    for n in 0..topo.sim_nodes() {
                         let parts: Vec<usize> =
                             topo.node_ranks(n).map(|x| x as usize).collect();
                         let mut b = base_ns;
@@ -547,10 +628,13 @@ impl<'a> Engine<'a> {
                 }
                 CommGroup::CrossNode => {
                     for local in 0..topo.gpus_per_node() {
-                        let parts: Vec<usize> = (0..topo.num_nodes)
+                        let parts: Vec<usize> = (0..topo.sim_nodes())
                             .map(|n| topo.rank_of(n, local) as usize)
                             .collect();
                         let mut b = base_ns;
+                        if topo.is_folded() {
+                            b += cross_tail_ns[local as usize];
+                        }
                         if !faults.is_empty() {
                             b *= faults.link_time_factor(&parts);
                         }
@@ -1398,9 +1482,14 @@ impl<'a> Engine<'a> {
         let mut trace = Trace::default();
         trace.meta.workload = self.wl.label();
         trace.meta.fsdp = self.wl.fsdp.to_string();
-        trace.meta.num_gpus = self.topo.world_size();
-        trace.meta.num_nodes = self.topo.num_nodes;
+        // Folded traces carry the *simulated* shape (the events really in
+        // the trace) plus the fold factor; logical shape is derivable
+        // (`meta.logical_nodes() == num_nodes × fold`). Exact mode stamps
+        // fold 1, which serializers omit — byte-identical to the old meta.
+        trace.meta.num_gpus = self.topo.sim_world();
+        trace.meta.num_nodes = self.topo.sim_nodes();
         trace.meta.gpus_per_node = self.topo.gpus_per_node();
+        trace.meta.fold = self.topo.fold_factor();
         trace.meta.sharding = self.wl.sharding.to_string();
         trace.meta.iterations = self.wl.iterations;
         trace.meta.warmup = self.wl.warmup;

@@ -122,7 +122,10 @@ pub fn collect_counters_topo(
                 _ => {}
             }
         }
-        for gpu in 0..topo.world_size() {
+        // Records replicate across the ranks the trace actually holds —
+        // the simulated world under replica folding (== world_size() in
+        // exact mode).
+        for gpu in 0..topo.sim_world() {
             for (key, v) in &values {
                 match out.get(gpu, *key) {
                     Some(_) => {

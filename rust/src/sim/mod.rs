@@ -152,9 +152,12 @@ pub fn provisional_meta(topo: &Topology, wl: &WorkloadConfig) -> crate::trace::T
     let mut m = crate::trace::TraceMeta::default();
     m.workload = wl.label();
     m.fsdp = wl.fsdp.to_string();
-    m.num_gpus = topo.world_size();
-    m.num_nodes = topo.num_nodes;
+    // Matches the engine's `finish()`: folded traces carry the simulated
+    // shape plus the fold factor (fold 1 = exact, serializers omit it).
+    m.num_gpus = topo.sim_world();
+    m.num_nodes = topo.sim_nodes();
     m.gpus_per_node = topo.gpus_per_node();
+    m.fold = topo.fold_factor();
     m.sharding = wl.sharding.to_string();
     m.iterations = wl.iterations;
     m.warmup = wl.warmup;

@@ -40,6 +40,11 @@ pub fn to_chrome_json(trace: &Trace) -> String {
         ("source", Json::str(trace.meta.source.clone())),
         ("serialized", Json::Bool(trace.meta.serialized)),
     ];
+    if trace.meta.is_folded() {
+        // Only folded traces carry the fold factor — exact exports stay
+        // byte-identical to the pre-folding format.
+        meta_args.push(("fold", Json::num(trace.meta.fold_factor() as f64)));
+    }
     if !trace.meta.faults.is_empty() {
         meta_args.push(("faults", Json::str(trace.meta.faults.clone())));
         meta_args.push((
@@ -216,6 +221,8 @@ pub fn from_chrome_json(text: &str) -> Result<Trace, String> {
                             .get("fault_lost_ns")
                             .and_then(|v| v.as_f64())
                             .unwrap_or(0.0),
+                        // Absent on exact/legacy exports ⇒ 0 ⇒ unfolded.
+                        fold: n("fold") as u32,
                     };
                 }
             }

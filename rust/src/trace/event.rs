@@ -113,6 +113,11 @@ pub struct TraceMeta {
     pub restart_spans: Vec<(f64, f64)>,
     /// Wall-clock lost to dropout + checkpoint-restart (ns).
     pub fault_lost_ns: f64,
+    /// Replica fold factor (DESIGN.md §13): every simulated node in this
+    /// trace stands for `fold` statistically-identical logical nodes.
+    /// 0/1 (legacy/exact traces — never serialized) ⇒ unfolded; the
+    /// logical shape is `num_nodes × fold` nodes.
+    pub fold: u32,
 }
 
 impl TraceMeta {
@@ -143,6 +148,29 @@ impl TraceMeta {
     /// True when the trace spans more than one node.
     pub fn multi_node(&self) -> bool {
         self.nodes() > 1
+    }
+
+    // -- replica folding (DESIGN.md §13) ------------------------------------
+
+    /// Replica fold factor, tolerating legacy traces (0 ⇒ exact mode).
+    pub fn fold_factor(&self) -> u32 {
+        self.fold.max(1)
+    }
+
+    /// True when each simulated node stands for several logical replicas.
+    pub fn is_folded(&self) -> bool {
+        self.fold_factor() > 1
+    }
+
+    /// Logical node count the simulated nodes stand for (`nodes()` in
+    /// exact mode).
+    pub fn logical_nodes(&self) -> u32 {
+        self.nodes() * self.fold_factor()
+    }
+
+    /// Logical rank count (`num_gpus` in exact mode).
+    pub fn logical_gpus(&self) -> u32 {
+        self.num_gpus * self.fold_factor()
     }
 }
 

@@ -18,6 +18,6 @@ pub use event::{
     TraceMeta,
 };
 pub use store::{
-    read_store, write_store, LoadedStore, SalvageReport, SharedSink,
-    StoreWriter, TraceSink,
+    read_store, read_store_visit, write_store, LoadedStore, SalvageReport,
+    SharedSink, StoreWriter, TraceSink,
 };

@@ -274,7 +274,7 @@ fn json_spans(j: Option<&Json>) -> Option<Vec<(f64, f64)>> {
 }
 
 fn meta_to_json(m: &TraceMeta) -> Json {
-    Json::obj(vec![
+    let mut fields = vec![
         ("workload", Json::str(&m.workload)),
         ("fsdp", Json::str(&m.fsdp)),
         ("model", Json::str(&m.model)),
@@ -294,7 +294,13 @@ fn meta_to_json(m: &TraceMeta) -> Json {
         ),
         ("restart_spans", spans_json(&m.restart_spans)),
         ("fault_lost_ns", f64_hex(m.fault_lost_ns)),
-    ])
+    ];
+    // Only folded traces carry the fold factor — exact-mode stores stay
+    // byte-identical to the pre-folding format (and parse everywhere).
+    if m.is_folded() {
+        fields.push(("fold", Json::num(m.fold_factor())));
+    }
+    Json::obj(fields)
 }
 
 fn meta_from_json(j: &Json) -> Option<TraceMeta> {
@@ -322,6 +328,8 @@ fn meta_from_json(j: &Json) -> Option<TraceMeta> {
             .collect::<Option<Vec<f64>>>()?,
         restart_spans: json_spans(j.get("restart_spans"))?,
         fault_lost_ns: hex_f64(j.get("fault_lost_ns")?)?,
+        // Absent on exact/legacy stores ⇒ 0 ⇒ unfolded.
+        fold: n("fold").unwrap_or(0.0) as u32,
     })
 }
 
@@ -1134,6 +1142,85 @@ pub fn read_store(path: &Path) -> Result<LoadedStore, String> {
     })
 }
 
+/// Read a store like [`read_store`] while streaming every event through
+/// `visit` in the engine's canonical `(t_start, kernel_id)` order — the
+/// chunk-wise indexing path: `chopper::index::IndexBuilder` consumes the
+/// callback (it requires canonical arrival order for bit-stable float
+/// accumulation) in the same pass that materializes the trace, so the
+/// index exists the moment the file is read, with no second scan.
+///
+/// Instead of one global sort over the full vector, each per-iteration
+/// chunk is sorted as it is decoded and the sorted chunks are k-way
+/// merged; equal keys resolve to the earlier chunk in file order, then to
+/// the earlier event within it — exactly the stable sort [`read_store`]
+/// performs, so the materialized trace (and therefore everything derived
+/// from it) is byte-identical between the two paths (`tests/store.rs`
+/// pins this). Exhausted chunk buffers are dropped as the merge drains
+/// them, so peak memory is the final vector plus the undrained chunks.
+pub fn read_store_visit(
+    path: &Path,
+    mut visit: impl FnMut(&TraceMeta, &TraceEvent),
+) -> Result<LoadedStore, String> {
+    let mut chunks: Vec<Vec<TraceEvent>> = Vec::new();
+    let mut cb = |mut evs: Vec<TraceEvent>| {
+        evs.sort_by(|a, b| {
+            a.t_start
+                .total_cmp(&b.t_start)
+                .then(a.kernel_id.cmp(&b.kernel_id))
+        });
+        chunks.push(evs);
+    };
+    let mut out = ScanOut {
+        // Power samples still materialize; events route to `cb` instead.
+        materialize: true,
+        chunk_visit: Some(&mut cb),
+        ..ScanOut::default()
+    };
+    let report = scan(path, &mut out)?;
+    let meta = out.foot_meta.or(out.meta).unwrap_or_default();
+
+    let total: usize = chunks.iter().map(Vec::len).sum();
+    let mut events: Vec<TraceEvent> = Vec::with_capacity(total);
+    let mut iters: Vec<std::iter::Peekable<std::vec::IntoIter<TraceEvent>>> =
+        chunks.into_iter().map(|c| c.into_iter().peekable()).collect();
+    loop {
+        // Linear head scan per event: the chunk count is small (one per
+        // iteration plus CHUNK_EVENTS splits), so this beats a heap.
+        let mut best: Option<(usize, f64, u64)> = None;
+        for ci in 0..iters.len() {
+            if let Some(e) = iters[ci].peek() {
+                let better = match &best {
+                    None => true,
+                    Some((_, bt, bk)) => match e.t_start.total_cmp(bt) {
+                        std::cmp::Ordering::Less => true,
+                        std::cmp::Ordering::Equal => e.kernel_id < *bk,
+                        std::cmp::Ordering::Greater => false,
+                    },
+                };
+                if better {
+                    best = Some((ci, e.t_start, e.kernel_id));
+                }
+            }
+        }
+        let Some((bi, _, _)) = best else { break };
+        let ev = iters[bi].next().expect("peeked head exists");
+        if iters[bi].peek().is_none() {
+            // Free the exhausted chunk's buffer now, not at function end.
+            iters[bi] = Vec::new().into_iter().peekable();
+        }
+        visit(&meta, &ev);
+        events.push(ev);
+    }
+    Ok(LoadedStore {
+        trace: Trace { meta, events },
+        power: PowerTrace {
+            samples: out.samples,
+        },
+        iter_bounds: out.iter_bounds,
+        report,
+    })
+}
+
 /// Visit a store chunk-by-chunk without materializing the full event
 /// vector (the out-of-core analysis path: `TraceIndex` folds each chunk
 /// and drops it). Returns the salvage report. Chunks arrive in file
@@ -1310,6 +1397,40 @@ mod tests {
         assert_eq!(format!("{:?}", l.trace), format!("{:?}", t));
         assert_eq!(format!("{:?}", l.power), format!("{:?}", p));
         assert_eq!(format!("{:?}", l.iter_bounds), format!("{:?}", ib));
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn visit_read_is_bitwise_identical_to_materialized_read() {
+        let (mut t, p, ib) = sample_trace(200);
+        // Force merge tie-breaks: equal t_start values landing in
+        // different per-iteration chunks, resolved by kernel_id alone.
+        for (id, iter) in [(500u64, 0u32), (501, 1), (502, 2)] {
+            let mut e = ev(id, iter, 91.0);
+            e.t_start = 91.0;
+            t.events.push(e);
+        }
+        let d = tdir("visit");
+        let path = d.join("t.ctrc");
+        write_store(&path, &t, &p, &ib).unwrap();
+        let a = read_store(&path).unwrap();
+        let mut seen: Vec<TraceEvent> = Vec::new();
+        let mut metas = 0usize;
+        let b = read_store_visit(&path, |m, e| {
+            assert_eq!(m.workload, "llama31_8b");
+            metas += 1;
+            seen.push(e.clone());
+        })
+        .unwrap();
+        assert!(b.report.clean(), "{}", b.report.describe());
+        // The chunk-sort + k-way-merge path reproduces the global stable
+        // sort exactly: trace, power, and bounds are all byte-identical.
+        assert_eq!(format!("{:?}", a.trace), format!("{:?}", b.trace));
+        assert_eq!(format!("{:?}", a.power), format!("{:?}", b.power));
+        assert_eq!(format!("{:?}", a.iter_bounds), format!("{:?}", b.iter_bounds));
+        // The visitor saw every event, in canonical order.
+        assert_eq!(metas, a.trace.events.len());
+        assert_eq!(format!("{seen:?}"), format!("{:?}", a.trace.events));
         std::fs::remove_dir_all(&d).ok();
     }
 

@@ -654,3 +654,43 @@ fn sweep_runs_scale_with_workload() {
     assert!(spans[1] > spans[0]);
     assert!(spans[2] > spans[1]);
 }
+
+/// Replica-folding golden (DESIGN.md §13): a 64-logical-node HSDP campaign
+/// folded ×32 simulates two representative nodes, reports the logical
+/// cluster, serializes its fold factor, and reproduces byte for byte.
+#[test]
+fn sixtyfour_node_folded_campaign_golden() {
+    use chopper::campaign::{run_campaign, GridSpec};
+    use chopper::config::Sharding;
+    let node = NodeSpec::mi300x_node();
+    let mut spec = GridSpec::paper(2, 2, 1);
+    spec.batches = vec![1];
+    spec.seqs = vec![4096];
+    spec.fsdp = vec![FsdpVersion::V1];
+    spec.shardings = vec![Sharding::Hsdp];
+    spec.nodes = vec![64];
+    spec.folds = vec![32];
+    let scenarios = spec.expand();
+    assert_eq!(scenarios.len(), 1);
+    assert_eq!(scenarios[0].name, "L2-b1s4-FSDPv1-HSDP-N64-fold32");
+    let outcome = run_campaign(&node, &scenarios, 1, None, false);
+    let s = &outcome.summaries[0];
+    // Logical cluster on the wire, simulated representatives in the
+    // rollup: 64 nodes reported, 64/32 = 2 actually simulated.
+    assert_eq!(s.num_nodes, 64);
+    assert_eq!(s.fold, 32);
+    assert_eq!(s.node_iter_ms.len(), 2, "simulated-node rollup");
+    assert!(s.node_iter_ms.iter().all(|&m| m > 0.0));
+    assert!(s.tokens_per_sec > 0.0 && s.energy_per_iter_j > 0.0);
+    assert_eq!(s.status, "ok");
+    let json = s.to_json_str();
+    assert!(json.contains("\"fold\":32"), "fold missing from summary JSON");
+    let back =
+        chopper::campaign::ScenarioSummary::from_json_str(&json).unwrap();
+    assert_eq!(&back, s);
+    assert_eq!(back.to_json_str(), json, "round-trip must be byte-stable");
+    // Folded determinism: an identical second campaign reproduces the
+    // summary byte for byte.
+    let again = run_campaign(&node, &scenarios, 1, None, false);
+    assert_eq!(again.summaries[0].to_json_str(), json);
+}

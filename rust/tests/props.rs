@@ -702,3 +702,163 @@ fn prop_straggler_never_speeds_up_the_run_and_is_monotone_in_severity() {
         );
     });
 }
+
+// ---------------------------------------------------------------------------
+// Replica folding (config::Topology::fold, DESIGN.md §13)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_fold_factor_one_is_bitwise_exact_and_fold_free_on_the_wire() {
+    use chopper::config::{Sharding, Topology};
+    prop("fold1_identity", 3, |rng| {
+        let (cfg, mut wl) = random_workload(rng);
+        wl.sharding = Sharding::Hsdp;
+        let nodes = *rng.choose(&[2u32, 4]);
+        let run = |fold: u32| {
+            let topo = Topology::mi300x_cluster(nodes).with_fold(fold);
+            let out =
+                Engine::with_topology(topo, &cfg, &wl, EngineParams::default())
+                    .run();
+            to_chrome_json(&out.trace)
+        };
+        // Fold factor 1 takes the identical structural path as the
+        // pre-fold pipeline: deterministic, and nothing fold-related
+        // leaks onto the wire (legacy consumers parse it unchanged).
+        let a = run(1);
+        assert_eq!(a, run(1), "fold-1 replay must be deterministic");
+        assert!(
+            !a.contains("\"fold\""),
+            "fold-1 chrome export must not carry a fold key"
+        );
+        let back = from_chrome_json(&a).unwrap();
+        assert_eq!(back.meta.fold_factor(), 1);
+    });
+}
+
+#[test]
+fn prop_fold_single_node_matches_engine_new_bitwise() {
+    use chopper::config::Topology;
+    prop("fold_single_identity", 3, |rng| {
+        let (cfg, wl) = random_workload(rng);
+        let node = NodeSpec::mi300x_node();
+        let a = to_chrome_json(
+            &Engine::new(&node, &cfg, &wl, EngineParams::default())
+                .run()
+                .trace,
+        );
+        let topo = Topology::single(node.clone()).with_fold(1);
+        let b = to_chrome_json(
+            &Engine::with_topology(topo, &cfg, &wl, EngineParams::default())
+                .run()
+                .trace,
+        );
+        assert_eq!(a, b, "explicit fold-1 topology diverged from Engine::new");
+    });
+}
+
+#[test]
+fn prop_folded_run_matches_exact_within_jitter_envelope() {
+    use chopper::campaign::{grid::Scenario, summarize};
+    use chopper::config::{NicSpec, Sharding, Topology};
+    prop("fold_envelope", 3, |rng| {
+        let (cfg, mut wl) = random_workload(rng);
+        wl.sharding = Sharding::Hsdp;
+        wl.iterations = wl.iterations.max(2);
+        let nodes = *rng.choose(&[2u32, 4]);
+        let fold = if nodes == 4 && rng.bool(0.5) { 2 } else { nodes };
+        let node = NodeSpec::mi300x_node();
+        let mk = |f: u32| {
+            let topo = Topology::mi300x_cluster(nodes).with_fold(f);
+            let run = chopper::sim::run_workload_topo(&topo, &cfg, &wl);
+            let sc = Scenario {
+                name: format!("fold{f}"),
+                model: cfg.clone(),
+                wl: wl.clone(),
+                params: EngineParams::default(),
+                num_nodes: nodes,
+                nic: NicSpec::default(),
+                serving: None,
+                fold: f,
+            };
+            summarize(&node, &sc, 0, &run)
+        };
+        let exact = mk(1);
+        let folded = mk(fold);
+        // Logical accounting is fold-invariant: same reported cluster,
+        // same tokens; the event stream shrinks by exactly the fold
+        // factor (each simulated rank runs the identical program).
+        assert_eq!(folded.num_nodes, exact.num_nodes);
+        assert_eq!(folded.fold, fold as u64);
+        assert_eq!(exact.fold, 1);
+        assert_eq!(
+            folded.events * fold as u64,
+            exact.events,
+            "folded event count must be exactly events/fold"
+        );
+        assert_eq!(
+            folded.node_iter_ms.len() as u32,
+            nodes / fold,
+            "per-node rollup must cover the simulated nodes only"
+        );
+        // Timing and energy agree with the exact simulation within the
+        // seeded-jitter envelope (replicas differ only by their jitter
+        // substreams, a few percent at default parameters).
+        let rel = |a: f64, b: f64| ((a - b) / b.abs().max(1e-12)).abs();
+        assert!(
+            rel(folded.iter_ms, exact.iter_ms) < 0.10,
+            "folded iter_ms {} vs exact {} beyond the jitter envelope",
+            folded.iter_ms,
+            exact.iter_ms
+        );
+        assert!(
+            rel(folded.energy_per_iter_j, exact.energy_per_iter_j) < 0.10,
+            "folded energy {} vs exact {} beyond the jitter envelope",
+            folded.energy_per_iter_j,
+            exact.energy_per_iter_j
+        );
+        assert!(
+            rel(folded.tokens_per_sec, exact.tokens_per_sec) < 0.10,
+            "folded throughput {} vs exact {} beyond the jitter envelope",
+            folded.tokens_per_sec,
+            exact.tokens_per_sec
+        );
+    });
+}
+
+#[test]
+fn prop_folded_energy_expands_per_class_totals_exactly() {
+    use chopper::campaign::{grid::Scenario, summarize};
+    use chopper::config::{NicSpec, Sharding, Topology};
+    prop("fold_energy_expansion", 3, |rng| {
+        let (cfg, mut wl) = random_workload(rng);
+        wl.sharding = Sharding::Hsdp;
+        let nodes = *rng.choose(&[2u32, 4]);
+        let fold = nodes; // one representative node
+        let topo = Topology::mi300x_cluster(nodes).with_fold(fold);
+        let run = chopper::sim::run_workload_topo(&topo, &cfg, &wl);
+        let sc = Scenario {
+            name: "fold-energy".into(),
+            model: cfg.clone(),
+            wl: wl.clone(),
+            params: EngineParams::default(),
+            num_nodes: nodes,
+            nic: NicSpec::default(),
+            serving: None,
+            fold,
+        };
+        let s = summarize(&NodeSpec::mi300x_node(), &sc, 0, &run);
+        // The logical cluster's energy is the per-class (simulated)
+        // energy × replica count — bit-for-bit, not approximately: the
+        // expansion is a single IEEE multiply in summarize.
+        let warmup = run.trace.meta.warmup;
+        let sampled =
+            run.trace.meta.iterations.saturating_sub(warmup).max(1) as f64;
+        let expect =
+            run.power.sampled_energy_j(warmup) * fold as f64 / sampled;
+        assert_eq!(
+            s.energy_per_iter_j.to_bits(),
+            expect.to_bits(),
+            "folded energy must be per-class energy × fold exactly"
+        );
+    });
+}

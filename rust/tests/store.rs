@@ -237,7 +237,7 @@ fn campaign_restores_summaries_from_stores() {
     let scenarios: Vec<Scenario> = spec.expand();
     assert!(!scenarios.is_empty());
     let first =
-        run_campaign_stored(&node, &scenarios, 2, Some(&cache), false, true);
+        run_campaign_stored(&node, &scenarios, 2, Some(&cache), false, true, false);
     assert_eq!(first.executed, scenarios.len());
     assert_eq!(first.restored, 0);
     for sc in &scenarios {
@@ -250,7 +250,7 @@ fn campaign_restores_summaries_from_stores() {
         std::fs::remove_file(cache.path_for(&sc.name, fp)).unwrap();
     }
     let second =
-        run_campaign_stored(&node, &scenarios, 2, Some(&cache), false, true);
+        run_campaign_stored(&node, &scenarios, 2, Some(&cache), false, true, false);
     assert_eq!(second.executed, 0, "stores should satisfy every scenario");
     assert_eq!(second.restored, scenarios.len());
     for (a, b) in first.summaries.iter().zip(&second.summaries) {
@@ -258,7 +258,7 @@ fn campaign_restores_summaries_from_stores() {
     }
     // Third run: plain cache hits (restore re-wrote the summaries).
     let third =
-        run_campaign_stored(&node, &scenarios, 2, Some(&cache), false, true);
+        run_campaign_stored(&node, &scenarios, 2, Some(&cache), false, true, false);
     assert_eq!(third.cached, scenarios.len());
     std::fs::remove_dir_all(&dir).ok();
 }
@@ -277,7 +277,7 @@ fn campaign_refuses_salvaged_stores() {
     let scenarios: Vec<Scenario> = spec.expand();
     assert_eq!(scenarios.len(), 1);
     let first =
-        run_campaign_stored(&node, &scenarios, 1, Some(&cache), false, true);
+        run_campaign_stored(&node, &scenarios, 1, Some(&cache), false, true, false);
     assert_eq!(first.executed, 1);
     let sc = &scenarios[0];
     let fp = fingerprint(&node, sc);
@@ -290,11 +290,78 @@ fn campaign_refuses_salvaged_stores() {
     assert!(check_store(&sp).unwrap().salvaged_upstream);
     std::fs::remove_file(cache.path_for(&sc.name, fp)).unwrap();
     let second =
-        run_campaign_stored(&node, &scenarios, 1, Some(&cache), false, true);
+        run_campaign_stored(&node, &scenarios, 1, Some(&cache), false, true, false);
     assert_eq!(second.restored, 0, "salvaged store must not rebuild");
     assert_eq!(second.executed, 1, "scenario must re-run");
     for (a, b) in first.summaries.iter().zip(&second.summaries) {
         assert_eq!(a, b, "re-run after salvage refusal diverged");
     }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Chunk-wise indexing is the default `.ctrc` read path: streaming each
+/// event through the index builder while the trace materializes must be
+/// invisible in the output. Both the per-event stream and everything
+/// derived from it — summaries and comparison figures — are byte-identical
+/// to the materialize-then-index (`--in-memory`) path.
+#[test]
+fn chunkwise_read_path_matches_materialized_path_bytewise() {
+    use chopper::campaign::campaign_table;
+    use chopper::trace::store::read_store_visit;
+    let dir = tmpdir("chunkwise");
+    let (_, _, _, run) = small_run(EngineParams::default());
+    let path = dir.join("t.ctrc");
+    write_store(&path, &run.trace, &run.power, &run.iter_bounds).unwrap();
+
+    // Event stream: the visitor sees the canonical order, and the
+    // materialized trace is bit-identical to the classic reader's.
+    let a = read_store(&path).unwrap();
+    let mut seen = 0usize;
+    let b = read_store_visit(&path, |m, e| {
+        assert_eq!(m.fold_factor(), 1);
+        assert_eq!(
+            format!("{e:?}"),
+            format!("{:?}", a.trace.events[seen]),
+            "visitor event {seen} out of canonical order"
+        );
+        seen += 1;
+    })
+    .unwrap();
+    assert_eq!(seen, a.trace.events.len());
+    assert_eq!(format!("{:?}", a.trace), format!("{:?}", b.trace));
+    assert_eq!(format!("{:?}", a.power), format!("{:?}", b.power));
+
+    // Campaign rebuilds: restore summaries from the stores once through
+    // the chunk-wise default and once through --in-memory; the summaries
+    // and the figures rendered from them must match byte for byte.
+    let cache = Cache::open(dir.join("cache")).unwrap();
+    let node = NodeSpec::mi300x_node();
+    let mut spec = GridSpec::paper(2, 2, 1);
+    spec.batches = vec![1];
+    spec.seqs = vec![4096];
+    let scenarios: Vec<Scenario> = spec.expand();
+    run_campaign_stored(&node, &scenarios, 2, Some(&cache), false, true, false);
+    let wipe = |cache: &Cache| {
+        for sc in &scenarios {
+            let fp = fingerprint(&node, sc);
+            std::fs::remove_file(cache.path_for(&sc.name, fp)).unwrap();
+        }
+    };
+    wipe(&cache);
+    let chunked =
+        run_campaign_stored(&node, &scenarios, 2, Some(&cache), false, true, false);
+    assert_eq!(chunked.restored, scenarios.len());
+    wipe(&cache);
+    let in_memory =
+        run_campaign_stored(&node, &scenarios, 2, Some(&cache), false, true, true);
+    assert_eq!(in_memory.restored, scenarios.len());
+    for (a, b) in chunked.summaries.iter().zip(&in_memory.summaries) {
+        assert_eq!(a, b, "{}: chunk-wise summary diverged", a.name);
+        assert_eq!(a.to_json_str(), b.to_json_str());
+    }
+    let fa = campaign_table(&chunked.summaries);
+    let fb = campaign_table(&in_memory.summaries);
+    assert_eq!(fa.ascii, fb.ascii, "figure ASCII diverged between read paths");
+    assert_eq!(fa.csv, fb.csv, "figure CSV diverged between read paths");
     std::fs::remove_dir_all(&dir).ok();
 }
