@@ -1415,6 +1415,10 @@ pub mod summarize {
             tpot_p99_ms: 0.0,
             goodput_rps: 0.0,
             energy_per_request_j: 0.0,
+            // Later schema additions (fold, faults, thermal, status) are
+            // constant-default on the degenerate pipeline this baseline
+            // summarizes — struct update keeps the port mechanical.
+            ..ScenarioSummary::default()
         }
     }
 

@@ -794,6 +794,10 @@ impl<'a> Engine<'a> {
             mem_freq_mhz: self.ranks[rank].gov.mem_freq_mhz,
             power_w: power,
             iter,
+            // The vendored baseline predates the thermal model; neutral
+            // telemetry matches a thermal-disabled engine bit for bit.
+            temp_c: 0.0,
+            throttle: 1.0,
         });
         {
             let r = &mut self.ranks[rank];

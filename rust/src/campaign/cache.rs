@@ -44,7 +44,12 @@ use std::path::{Path, PathBuf};
 /// v7: scenarios may carry a replica fold factor (`Scenario::fold`,
 /// DESIGN.md §13), summaries grew the `fold` field, and store/summary
 /// rebuilds expand folded per-class totals to logical-cluster figures.
-pub const SCHEMA_VERSION: u32 = 7;
+///
+/// v8: engine parameters carry an optional thermal-coupling model
+/// (`EngineParams::thermal`, DESIGN.md §14) — `{params:?}` in the
+/// fingerprint changed shape for *every* scenario, thermal or not — and
+/// summaries grew the thermal fields (`peak_temp_c`, `throttle_loss_ms`).
+pub const SCHEMA_VERSION: u32 = 8;
 
 pub use crate::util::prng::fnv1a;
 

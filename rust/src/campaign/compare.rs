@@ -464,6 +464,84 @@ pub fn campaign_faults(summaries: &[ScenarioSummary]) -> Figure {
     }
 }
 
+/// Thermal table: peak die temperature and throttle loss per
+/// thermal-enabled scenario, Δ vs the thermal-disabled sibling when the
+/// grid carries one. Rendered only when the grid has a thermal axis
+/// (any `peak_temp_c != 0.0`, DESIGN.md §14).
+pub fn campaign_thermal(summaries: &[ScenarioSummary]) -> Figure {
+    // Group key: the scenario identity with the thermal tag stripped.
+    // The `-therm_*` tag is the last name component (grid.rs appends it
+    // after every other axis tag), so truncating at it recovers the
+    // sibling that shares every jitter draw.
+    let key = |s: &ScenarioSummary| -> String {
+        match s.name.find("-therm_") {
+            Some(i) => s.name[..i].to_string(),
+            None => s.name.clone(),
+        }
+    };
+    // Baseline per group: the thermal-disabled row if present, else the
+    // group's first row in grid order.
+    let mut base: std::collections::BTreeMap<_, (f64, f64)> =
+        std::collections::BTreeMap::new();
+    for s in summaries {
+        let k = key(s);
+        let e = base.entry(k).or_insert((s.iter_ms, s.energy_per_iter_j));
+        if s.peak_temp_c == 0.0 {
+            *e = (s.iter_ms, s.energy_per_iter_j);
+        }
+    }
+    let mut csv = String::from(
+        "scenario,peak_temp_c,throttle_loss_ms,iter_ms,delta_iter_pct,\
+         energy_per_iter_j,delta_energy_pct,tokens_per_j\n",
+    );
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    for s in summaries.iter().filter(|s| s.peak_temp_c != 0.0) {
+        let (bi, be) = base[&key(s)];
+        let di = 100.0 * (s.iter_ms / bi.max(1e-9) - 1.0);
+        let de = 100.0 * (s.energy_per_iter_j / be.max(1e-9) - 1.0);
+        rows.push(vec![
+            s.name.clone(),
+            format!("{:.1}", s.peak_temp_c),
+            format!("{:.2}", s.throttle_loss_ms),
+            format!("{:.2}", s.iter_ms),
+            format!("{di:+.1}%"),
+            format!("{:.1}", s.energy_per_iter_j),
+            format!("{de:+.1}%"),
+            format!("{:.2}", s.tokens_per_j),
+        ]);
+        let _ = writeln!(
+            csv,
+            "{},{:.2},{:.4},{:.4},{:.2},{:.4},{:.2},{:.4}",
+            s.name,
+            s.peak_temp_c,
+            s.throttle_loss_ms,
+            s.iter_ms,
+            di,
+            s.energy_per_iter_j,
+            de,
+            s.tokens_per_j
+        );
+    }
+    let mut out = String::from(
+        "Campaign — thermal coupling (Δ vs each scenario's \
+         thermal-disabled sibling)\n\n",
+    );
+    out.push_str(&ascii::table(
+        &[
+            "scenario", "peak C", "thr ms", "iter ms", "Δiter", "J/iter",
+            "ΔJ", "tok/J",
+        ],
+        &rows,
+    ));
+    Figure {
+        id: "campaign_thermal",
+        title: "Campaign — thermal coupling comparison".into(),
+        ascii: out,
+        csv,
+        svg: None,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -506,6 +584,8 @@ mod tests {
             faults: String::new(),
             lost_ms: 0.0,
             blocked_ms: 0.0,
+            peak_temp_c: 0.0,
+            throttle_loss_ms: 0.0,
             status: "ok".into(),
         }
     }
@@ -662,6 +742,29 @@ mod tests {
         assert!((de - 25.0).abs() < 1e-9, "Δenergy {de}");
         assert!(f.csv.contains("failed"));
         assert!(f.ascii.contains("panic"));
+    }
+
+    #[test]
+    fn thermal_table_deltas_vs_disabled_sibling() {
+        let cool = fake("L2-b1s4-FSDPv1", 1000.0);
+        let mut hot = fake("L2-b1s4-FSDPv1-therm_a85", 900.0);
+        hot.peak_temp_c = 96.5;
+        hot.throttle_loss_ms = 1.25;
+        hot.iter_ms = 12.0; // 20% slower than the disabled 10.0
+        hot.energy_per_iter_j = 63.0; // 12.5% more energy than 56.0
+        let f = campaign_thermal(&[cool, hot]);
+        assert_eq!(f.id, "campaign_thermal");
+        // Thermal-disabled baseline row is skipped; one thermal row.
+        assert_eq!(f.csv.lines().count(), 2);
+        let cols: Vec<&str> =
+            f.csv.lines().nth(1).unwrap().split(',').collect();
+        assert_eq!(cols[1], "96.50");
+        assert_eq!(cols[2], "1.2500");
+        let di: f64 = cols[4].parse().unwrap();
+        let de: f64 = cols[6].parse().unwrap();
+        assert!((di - 20.0).abs() < 1e-9, "Δiter {di}");
+        assert!((de - 12.5).abs() < 1e-9, "Δenergy {de}");
+        assert!(f.ascii.contains("peak C"));
     }
 
     #[test]

@@ -10,6 +10,9 @@ use crate::sim::{EngineParams, GovernorKind};
 
 pub use crate::config::faults::parse_list_faults;
 pub use crate::sim::power::parse_list_governor;
+pub use crate::sim::thermal::{parse_list_ambient, parse_list_thermal};
+
+use crate::sim::thermal::ThermalConfig;
 
 /// One fully specified simulation scenario — everything the engine needs,
 /// plus a stable human-readable name that doubles as the cache key prefix.
@@ -161,6 +164,11 @@ pub struct GridSpec {
     /// no name tag; folded scenarios get a `-fold<F>` tag. Each factor
     /// must divide every node count it is crossed with.
     pub folds: Vec<u32>,
+    /// Thermal-coupling axis (DESIGN.md §14): each entry is one thermal
+    /// configuration. Default `[None]` = the RC model off with no name
+    /// tag (byte-identical to pre-thermal grids); `Some` entries get a
+    /// `-therm_<label>` tag.
+    pub thermals: Vec<Option<ThermalConfig>>,
     pub iterations: u32,
     pub warmup: u32,
     /// Base seed; each scenario derives its own seed from this and its name.
@@ -189,6 +197,7 @@ impl GridSpec {
             qps: Vec::new(),
             faults: vec![Vec::new()],
             folds: vec![1],
+            thermals: vec![None],
             iterations,
             warmup,
             seed: 0xC0FFEE,
@@ -212,7 +221,8 @@ impl GridSpec {
                 1
             }
             * self.faults.len().max(1)
-            * self.folds.len().max(1);
+            * self.folds.len().max(1)
+            * self.thermals.len().max(1);
         for (_, vals) in &self.ablations {
             n *= vals.len().max(1);
         }
@@ -258,6 +268,13 @@ impl GridSpec {
         } else {
             self.folds.clone()
         };
+        // Thermal axis: empty list = the one thermal-off point.
+        let thermals: Vec<Option<&ThermalConfig>> = if self.thermals.is_empty()
+        {
+            vec![None]
+        } else {
+            self.thermals.iter().map(|t| t.as_ref()).collect()
+        };
         for &layers in &self.layers {
             for &batch in &self.batches {
                 for &seq in &self.seqs {
@@ -269,12 +286,16 @@ impl GridSpec {
                                         for &load in &loads {
                                             for &fset in &fault_sets {
                                                 for &fold in &folds {
-                                                    self.expand_ablations(
-                                                        layers, batch, seq,
-                                                        fsdp, sharding, nodes,
-                                                        nic, gov, load, fset,
-                                                        fold, &mut out,
-                                                    );
+                                                    for &thermal in &thermals {
+                                                        self.expand_ablations(
+                                                            layers, batch,
+                                                            seq, fsdp,
+                                                            sharding, nodes,
+                                                            nic, gov, load,
+                                                            fset, fold,
+                                                            thermal, &mut out,
+                                                        );
+                                                    }
                                                 }
                                             }
                                         }
@@ -303,6 +324,7 @@ impl GridSpec {
         load: Option<Option<f64>>,
         fset: &[FaultSpec],
         fold: u32,
+        thermal: Option<&ThermalConfig>,
         out: &mut Vec<Scenario>,
     ) {
         // Odometer over the ablation axes (empty product = one scenario).
@@ -390,6 +412,15 @@ impl GridSpec {
             // apples comparison rather than a reseeded rerun.
             if fold > 1 {
                 name.push_str(&format!("-fold{fold}"));
+            }
+            // The thermal tag is appended *after* the seed is derived, the
+            // same rule as every post-seed tag: a thermal scenario shares
+            // every jitter draw with its thermal-off sibling of the same
+            // name, so a thermal Δ measures the RC model alone (the
+            // thermal substreams are derived separately, DESIGN.md §14).
+            params.thermal = thermal.cloned();
+            if let Some(tc) = thermal {
+                name.push_str(&format!("-therm_{}", tc.label()));
             }
             out.push(Scenario {
                 name,
@@ -622,13 +653,16 @@ mod tests {
         g.governors = GovernorKind::ALL.to_vec();
         let scs = g.expand();
         assert_eq!(scs.len(), g.len());
-        assert_eq!(scs.len(), 4);
+        assert_eq!(scs.len(), GovernorKind::ALL.len());
         // The reactive scenario keeps its legacy name (seed/cache-key
         // stability); every other policy is tagged.
         assert!(scs.iter().any(|s| s.name == "L2-b1s4-FSDPv1"));
         assert!(scs.iter().any(|s| s.name == "L2-b1s4-FSDPv1-gov_oracle"));
         assert!(scs.iter().any(|s| s.name == "L2-b1s4-FSDPv1-gov_fixed_cap"));
         assert!(scs.iter().any(|s| s.name == "L2-b1s4-FSDPv1-gov_det_aware"));
+        assert!(scs
+            .iter()
+            .any(|s| s.name == "L2-b1s4-FSDPv1-gov_thermal_aware"));
         for sc in &scs {
             let tagged = sc.name.contains("-gov_");
             assert_eq!(tagged, sc.params.governor != GovernorKind::Reactive);
@@ -637,7 +671,7 @@ mod tests {
         // seed basis), so cross-policy deltas measure the policy alone.
         let seed_of = |n: &str| scs.iter().find(|s| s.name == n).unwrap().wl.seed;
         let base_seed = seed_of("L2-b1s4-FSDPv1");
-        for tagged in ["oracle", "fixed_cap", "det_aware"] {
+        for tagged in ["oracle", "fixed_cap", "det_aware", "thermal_aware"] {
             assert_eq!(
                 seed_of(&format!("L2-b1s4-FSDPv1-gov_{tagged}")),
                 base_seed,
@@ -783,6 +817,45 @@ mod tests {
         assert_eq!(unswept.len(), 1);
         assert_eq!(unswept.len(), g.len());
         assert_eq!(unswept[0].fold, 1);
+    }
+
+    #[test]
+    fn thermal_axis_expands_and_tags_enabled_only() {
+        let mut g = GridSpec::paper(2, 2, 1);
+        g.batches = vec![1];
+        g.seqs = vec![4096];
+        g.fsdp = vec![FsdpVersion::V1];
+        g.thermals = parse_list_thermal("none;thermal(ambient=45)").unwrap();
+        let scs = g.expand();
+        assert_eq!(scs.len(), g.len());
+        assert_eq!(scs.len(), 2);
+        // The thermal-off point keeps its legacy name (seed/cache-key
+        // stability); the thermal sibling is tagged.
+        let off = scs.iter().find(|s| s.name == "L2-b1s4-FSDPv1").unwrap();
+        let hot = scs
+            .iter()
+            .find(|s| s.name == "L2-b1s4-FSDPv1-therm_a45")
+            .unwrap_or_else(|| {
+                panic!(
+                    "missing tagged thermal scenario, have: {:?}",
+                    scs.iter().map(|s| &s.name).collect::<Vec<_>>()
+                )
+            });
+        assert!(off.params.thermal.is_none());
+        assert_eq!(hot.params.thermal.as_ref().unwrap().ambient_c, 45.0);
+        // Thermal siblings share the seed (the tag is excluded from the
+        // seed basis), so a thermal delta measures the RC model alone.
+        assert_eq!(hot.wl.seed, off.wl.seed);
+        // Default grids carry no thermal tag at all.
+        for sc in GridSpec::paper(2, 2, 1).expand() {
+            assert!(!sc.name.contains("-therm_"), "{}", sc.name);
+            assert!(sc.params.thermal.is_none());
+        }
+        // The `--ambient` sugar expands to default configs at each value.
+        let amb = parse_list_ambient("none;45").unwrap();
+        assert_eq!(amb.len(), 2);
+        assert!(amb[0].is_none());
+        assert_eq!(amb[1].as_ref().unwrap().ambient_c, 45.0);
     }
 
     #[test]

@@ -24,7 +24,7 @@ pub mod runner;
 pub use cache::{fingerprint, fnv1a, Cache};
 pub use compare::{
     campaign_breakdown, campaign_by_governor, campaign_by_nodes,
-    campaign_faults, campaign_serving, campaign_table,
+    campaign_faults, campaign_serving, campaign_table, campaign_thermal,
 };
 pub use grid::{GridSpec, Knob, Scenario};
 pub use runner::{

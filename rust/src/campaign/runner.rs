@@ -134,6 +134,14 @@ pub struct ScenarioSummary {
     /// Time ranks spent blocked at collectives waiting on slower peers
     /// (straggler drag), summed over ranks and sampled iterations, ms.
     pub blocked_ms: f64,
+    /// Peak die temperature across simulated GPUs, °C (0.0 = the thermal
+    /// model was off; the thermal block below stays off the wire so
+    /// thermal-off summary JSON keeps its pre-thermal bytes).
+    pub peak_temp_c: f64,
+    /// Clock capacity lost to thermal throttling per sampled iteration,
+    /// summed over the logical cluster, ms (throttle loss × fold, the
+    /// same expansion as energy).
+    pub throttle_loss_ms: f64,
     /// "ok", or "failed" when the scenario panicked and was isolated by
     /// the runner (numeric columns are zero; the entry is not cached, so
     /// `--resume` retries it).
@@ -179,6 +187,8 @@ impl Default for ScenarioSummary {
             faults: String::new(),
             lost_ms: 0.0,
             blocked_ms: 0.0,
+            peak_temp_c: 0.0,
+            throttle_loss_ms: 0.0,
             status: "ok".into(),
         }
     }
@@ -269,6 +279,16 @@ impl ScenarioSummary {
                 ("lost_ms", Json::num(self.lost_ms)),
                 ("blocked_ms", Json::num(self.blocked_ms)),
                 ("status", Json::str(self.status.clone())),
+            ]);
+        }
+        // Thermal fields serialize only when the RC model ran (peak die
+        // temperature 0.0 doubles as the "no thermal data" marker, the
+        // same convention as `PowerSample::temp_c`), so thermal-off
+        // summaries keep their pre-thermal JSON bytes.
+        if self.peak_temp_c != 0.0 {
+            fields.extend(vec![
+                ("peak_temp_c", Json::num(self.peak_temp_c)),
+                ("throttle_loss_ms", Json::num(self.throttle_loss_ms)),
             ]);
         }
         Json::obj(fields)
@@ -372,6 +392,11 @@ impl ScenarioSummary {
             faults,
             lost_ms: serving_num("lost_ms"),
             blocked_ms: serving_num("blocked_ms"),
+            // Thermal fields default to the thermal-off shape on
+            // pre-thermal artifacts (the block is only written when the
+            // RC model ran).
+            peak_temp_c: serving_num("peak_temp_c"),
+            throttle_loss_ms: serving_num("throttle_loss_ms"),
             status,
         })
     }
@@ -507,6 +532,24 @@ pub fn summarize_indexed<'t>(
         finite(idx.blocked_on_straggler_ns() * fold / 1e6)
     };
 
+    // Thermal telemetry (sim::thermal, DESIGN.md §14): only materialized
+    // when the run carried thermal samples, so thermal-off summaries stay
+    // bit-identical to the pre-thermal pipeline. Throttle loss is summed
+    // over ranks, so it expands to the logical cluster like energy does
+    // (each replica class's siblings carry the representative's envelope).
+    let (peak_temp_c, throttle_loss_ms) = if run.power.has_thermal() {
+        (
+            finite(run.power.peak_temp_c()),
+            finite(
+                run.power.sampled_throttle_loss_ns(warmup) * fold
+                    / sampled_iters
+                    / 1e6,
+            ),
+        )
+    } else {
+        (0.0, 0.0)
+    };
+
     ScenarioSummary {
         name: sc.name.clone(),
         fingerprint: fp,
@@ -544,6 +587,8 @@ pub fn summarize_indexed<'t>(
         faults: trace.meta.faults.clone(),
         lost_ms: finite(trace.meta.fault_lost_ns / 1e6),
         blocked_ms,
+        peak_temp_c,
+        throttle_loss_ms,
         status: "ok".into(),
     }
 }
@@ -615,6 +660,16 @@ pub fn summarize_serving(
         faults: trace.meta.faults.clone(),
         lost_ms: finite(trace.meta.fault_lost_ns / 1e6),
         blocked_ms: 0.0,
+        peak_temp_c: if out.power.has_thermal() {
+            finite(out.power.peak_temp_c())
+        } else {
+            0.0
+        },
+        throttle_loss_ms: if out.power.has_thermal() {
+            finite(out.power.sampled_throttle_loss_ns(0) / steps / 1e6)
+        } else {
+            0.0
+        },
         status: "ok".into(),
     }
 }
@@ -995,6 +1050,8 @@ mod tests {
             faults: String::new(),
             lost_ms: 0.0,
             blocked_ms: 0.0,
+            peak_temp_c: 0.0,
+            throttle_loss_ms: 0.0,
             status: "ok".into(),
         };
         let back = ScenarioSummary::from_json_str(&s.to_json_str()).unwrap();
@@ -1008,6 +1065,9 @@ mod tests {
         // Healthy summaries carry no fault/status block at all.
         assert!(!s.to_json_str().contains("faults"));
         assert!(!s.to_json_str().contains("status"));
+        // Thermal-off summaries carry no thermal block at all.
+        assert!(!s.to_json_str().contains("peak_temp_c"));
+        assert!(!s.to_json_str().contains("throttle_loss_ms"));
         // Governor/energy fields are always on the wire (cached and fresh
         // campaigns must render identically).
         assert!(s.to_json_str().contains("\"governor\""));
@@ -1072,6 +1132,17 @@ mod tests {
         assert!(j.contains("\"status\":\"failed\""));
         let back = ScenarioSummary::from_json_str(&j).unwrap();
         assert_eq!(x, back);
+
+        // Thermal summaries carry the thermal block and round-trip too.
+        let mut t = s.clone();
+        t.peak_temp_c = 96.625;
+        t.throttle_loss_ms = 1.4375;
+        let j = t.to_json_str();
+        assert!(j.contains("peak_temp_c"));
+        assert!(j.contains("throttle_loss_ms"));
+        let back = ScenarioSummary::from_json_str(&j).unwrap();
+        assert_eq!(t, back);
+        assert_eq!(back.to_json_str(), j);
     }
 
     #[test]

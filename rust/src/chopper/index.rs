@@ -66,6 +66,21 @@ struct EnergyColumn {
     total_j: f64,
 }
 
+/// Thermal rollups joined from a [`PowerTrace`] whose samples carry
+/// thermal telemetry — attached by [`TraceIndex::attach_power`] alongside
+/// the energy column, and only for thermal-enabled runs (`temp_c > 0`), so
+/// thermal-disabled analysis paths stay untouched.
+#[derive(Debug, Default)]
+struct ThermalColumn {
+    /// gpu → peak die temperature, °C.
+    peak_temp: BTreeMap<u32, f64>,
+    /// gpu → nanoseconds of clock capacity lost to throttling
+    /// (`Σ window × (1 − throttle)`).
+    loss_ns: BTreeMap<u32, f64>,
+    peak_temp_c: f64,
+    total_loss_ns: f64,
+}
+
 /// Per-request serving column (DESIGN.md §10), joined from the batcher's
 /// [`RequestRecord`](crate::serve::RequestRecord)s against the index's own
 /// per-step spans — attached on demand like the counter/energy columns.
@@ -138,6 +153,9 @@ pub struct TraceIndex<'t> {
     metrics: Option<MetricsColumn>,
     /// Energy rollups from the power trace (attached on demand).
     energy: Option<EnergyColumn>,
+    /// Thermal rollups from the power trace (attached with the energy
+    /// column, thermal-enabled runs only).
+    thermal: Option<ThermalColumn>,
     /// Per-request serving column (attached on demand, serving traces).
     requests: Option<RequestColumn>,
 }
@@ -432,6 +450,7 @@ impl IndexBuilder {
             id_idx: FxHashMap::default(),
             metrics: None,
             energy: None,
+            thermal: None,
             requests: None,
         }
     }
@@ -691,6 +710,22 @@ impl<'t> TraceIndex<'t> {
             }
         }
         self.energy = Some(col);
+
+        // Thermal rollups ride the same join, but only for traces that
+        // actually carry thermal telemetry — disabled runs keep
+        // `thermal: None` and every accessor below returns its default.
+        if power.has_thermal() {
+            let mut tc = ThermalColumn::default();
+            for s in &power.samples {
+                let peak = tc.peak_temp.entry(s.gpu).or_insert(0.0);
+                *peak = peak.max(s.temp_c);
+                tc.peak_temp_c = tc.peak_temp_c.max(s.temp_c);
+                let loss = s.throttle_loss_ns();
+                *tc.loss_ns.entry(s.gpu).or_insert(0.0) += loss;
+                tc.total_loss_ns += loss;
+            }
+            self.thermal = Some(tc);
+        }
     }
 
     pub fn has_energy(&self) -> bool {
@@ -727,6 +762,39 @@ impl<'t> TraceIndex<'t> {
             .as_ref()
             .map(|e| e.per_phase.clone())
             .unwrap_or_default()
+    }
+
+    // -- thermal rollups ----------------------------------------------------
+
+    /// Whether the attached power trace carried thermal telemetry.
+    pub fn has_thermal(&self) -> bool {
+        self.thermal.is_some()
+    }
+
+    /// Peak die temperature across all GPUs, °C (0 when no thermal data).
+    pub fn peak_temp_c(&self) -> f64 {
+        self.thermal.as_ref().map(|t| t.peak_temp_c).unwrap_or(0.0)
+    }
+
+    /// gpu → peak die temperature, °C.
+    pub fn peak_temp_by_gpu(&self) -> BTreeMap<u32, f64> {
+        self.thermal
+            .as_ref()
+            .map(|t| t.peak_temp.clone())
+            .unwrap_or_default()
+    }
+
+    /// gpu → nanoseconds of clock capacity lost to thermal throttling.
+    pub fn throttle_loss_by_gpu(&self) -> BTreeMap<u32, f64> {
+        self.thermal
+            .as_ref()
+            .map(|t| t.loss_ns.clone())
+            .unwrap_or_default()
+    }
+
+    /// Total throttle loss across the cluster, ns (0 when no thermal data).
+    pub fn total_throttle_loss_ns(&self) -> f64 {
+        self.thermal.as_ref().map(|t| t.total_loss_ns).unwrap_or(0.0)
     }
 
     // -- serving request column --------------------------------------------

@@ -26,6 +26,7 @@ use crate::sim::ProfiledRun;
 use crate::trace::event::Stream;
 use crate::util::intern::{intern, Sym};
 use crate::util::{ascii, fmt, stats};
+use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
 /// Label of a flat rank for figure rows: "GPU3" on a single node, node-
@@ -166,6 +167,28 @@ pub fn run_sweep_topo(
     iterations: u32,
     warmup: u32,
 ) -> Vec<SweepRun> {
+    run_sweep_topo_params(
+        topo,
+        cfg,
+        versions,
+        iterations,
+        warmup,
+        &crate::sim::EngineParams::default(),
+    )
+}
+
+/// [`run_sweep_topo`] with explicit engine parameters — how `sweep
+/// --thermal` profiles the paper workloads under the RC thermal model
+/// (DESIGN.md §14). Default parameters are byte-identical to
+/// [`run_sweep_topo`].
+pub fn run_sweep_topo_params(
+    topo: &crate::config::Topology,
+    cfg: &ModelConfig,
+    versions: &[FsdpVersion],
+    iterations: u32,
+    warmup: u32,
+    params: &crate::sim::EngineParams,
+) -> Vec<SweepRun> {
     let mut wls = Vec::new();
     for &v in versions {
         for mut wl in WorkloadConfig::paper_sweep(v) {
@@ -177,7 +200,7 @@ pub fn run_sweep_topo(
     let jobs = crate::campaign::runner::default_jobs();
     let runs =
         crate::campaign::runner::run_ordered(&wls, jobs, |_, wl| {
-            crate::sim::run_workload_topo(topo, cfg, wl)
+            crate::sim::run_workload_topo_with(topo, cfg, wl, params.clone())
         });
     wls.into_iter()
         .zip(runs)
@@ -1072,6 +1095,168 @@ pub fn node_rollup(runs: &[IndexedRun]) -> Figure {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Thermal figures — temperature timeline and throttle-loss breakdown
+// ---------------------------------------------------------------------------
+
+/// Per-GPU die-temperature timeline. Each GPU's governor-window samples
+/// are bucketed into at most 48 equal index ranges (mean temperature, min
+/// throttle per bucket) so the ascii sparkline and the CSV stay bounded
+/// regardless of run length. Like [`node_rollup`], not part of
+/// [`ALL_FIGURES`] — rendered only for thermal-enabled runs
+/// (`PowerTrace::has_thermal`), so thermal-disabled report output is
+/// byte-identical to builds without this figure.
+pub fn thermal_timeline(runs: &[IndexedRun]) -> Figure {
+    const BUCKETS: usize = 48;
+    const RAMP: &[u8] = b" .:-=+*#%@";
+    let mut csv =
+        String::from("run,gpu,bucket,t_ms,temp_c,min_throttle\n");
+    let mut ascii = String::from(
+        "Thermal timeline — per-GPU die temperature (bucketed governor windows)\n\n",
+    );
+    for sr in runs {
+        let power = &sr.sr.run.power;
+        if !power.has_thermal() {
+            continue;
+        }
+        let mut per_gpu: BTreeMap<u32, Vec<&crate::trace::event::PowerSample>> =
+            BTreeMap::new();
+        for s in &power.samples {
+            per_gpu.entry(s.gpu).or_default().push(s);
+        }
+        let peak = power.peak_temp_c().max(1e-9);
+        let floor: f64 = power
+            .samples
+            .iter()
+            .map(|s| s.temp_c)
+            .fold(f64::INFINITY, f64::min)
+            .min(peak);
+        let span = (peak - floor).max(1e-9);
+        let _ = writeln!(ascii, "{} (peak {:.1} C)", sr.label(), peak);
+        for (gpu, samples) in &per_gpu {
+            let n = samples.len();
+            let buckets = n.min(BUCKETS).max(1);
+            let mut line = String::new();
+            for b in 0..buckets {
+                let (lo, hi) = (b * n / buckets, ((b + 1) * n / buckets).max(b * n / buckets + 1));
+                let slice = &samples[lo..hi.min(n)];
+                let temp = slice.iter().map(|s| s.temp_c).sum::<f64>()
+                    / slice.len() as f64;
+                let thr = slice
+                    .iter()
+                    .map(|s| s.throttle)
+                    .fold(f64::INFINITY, f64::min);
+                let lvl = ((temp - floor) / span * (RAMP.len() - 1) as f64)
+                    .round()
+                    .clamp(0.0, (RAMP.len() - 1) as f64)
+                    as usize;
+                line.push(RAMP[lvl] as char);
+                let _ = writeln!(
+                    csv,
+                    "{},{},{},{:.3},{:.2},{:.3}",
+                    sr.label(),
+                    gpu,
+                    b,
+                    slice[0].t / 1e6,
+                    temp,
+                    thr
+                );
+            }
+            let g_peak = samples
+                .iter()
+                .map(|s| s.temp_c)
+                .fold(0.0_f64, f64::max);
+            let _ = writeln!(
+                ascii,
+                "  {:>8} |{line}| peak {g_peak:>6.1} C",
+                gpu_label(&sr.sr.run.trace.meta, *gpu),
+            );
+        }
+        ascii.push('\n');
+    }
+    let _ = writeln!(
+        ascii,
+        "  scale: ' ' = coolest sampled, '@' = hottest sampled"
+    );
+    Figure {
+        id: "thermal",
+        title: "Thermal timeline — per-GPU die temperature".into(),
+        ascii,
+        csv,
+        svg: None,
+    }
+}
+
+/// Throttle-loss breakdown: per-GPU clock capacity lost to thermal
+/// throttling next to its peak temperature — the thermal companion of
+/// Fig. 14's frequency/power averages. Like [`thermal_timeline`], not part
+/// of [`ALL_FIGURES`] and rendered only for thermal-enabled runs.
+pub fn throttle_breakdown(runs: &[IndexedRun]) -> Figure {
+    let mut csv = String::from(
+        "run,gpu,peak_temp_c,throttle_loss_ms,window_ms,loss_pct\n",
+    );
+    let mut ascii = String::from(
+        "Throttle loss — per-GPU clock capacity lost to thermal throttling\n\n",
+    );
+    for sr in runs {
+        let power = &sr.sr.run.power;
+        if !power.has_thermal() {
+            continue;
+        }
+        let mut loss: BTreeMap<u32, f64> = BTreeMap::new();
+        let mut window: BTreeMap<u32, f64> = BTreeMap::new();
+        let mut peak: BTreeMap<u32, f64> = BTreeMap::new();
+        for s in &power.samples {
+            *loss.entry(s.gpu).or_insert(0.0) += s.throttle_loss_ns();
+            *window.entry(s.gpu).or_insert(0.0) += s.window_ns;
+            let p = peak.entry(s.gpu).or_insert(0.0);
+            *p = p.max(s.temp_c);
+        }
+        let total_loss: f64 = loss.values().sum();
+        let max_loss = loss.values().cloned().fold(0.0_f64, f64::max);
+        let _ = writeln!(
+            ascii,
+            "{} (total {:.2} ms lost)",
+            sr.label(),
+            total_loss / 1e6
+        );
+        for (gpu, &l) in &loss {
+            let w = window[gpu].max(1e-9);
+            ascii.push_str(&ascii::stacked_bar(
+                &format!("  {:>8}", gpu_label(&sr.sr.run.trace.meta, *gpu)),
+                &[("lost".into(), l)],
+                44,
+                max_loss.max(1e-9),
+            ));
+            let _ = writeln!(
+                ascii,
+                "           peak {:>6.1} C   lost {} ({:.2}% of windows)",
+                peak[gpu],
+                fmt::dur_ns(l),
+                l / w * 100.0
+            );
+            let _ = writeln!(
+                csv,
+                "{},{},{:.2},{:.4},{:.4},{:.3}",
+                sr.label(),
+                gpu,
+                peak[gpu],
+                l / 1e6,
+                window[gpu] / 1e6,
+                l / w * 100.0
+            );
+        }
+        ascii.push('\n');
+    }
+    Figure {
+        id: "throttle",
+        title: "Throttle loss — thermal clock-capacity breakdown".into(),
+        ascii,
+        csv,
+        svg: None,
+    }
+}
+
 /// All figure ids this module can regenerate.
 pub const ALL_FIGURES: [&str; 13] = [
     "table2", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10",
@@ -1117,6 +1302,18 @@ pub fn render_all(
     Ok(crate::campaign::runner::run_ordered(&tasks, jobs, |_, t| {
         t()
     }))
+}
+
+/// Render the thermal figures ([`thermal_timeline`], [`throttle_breakdown`])
+/// for a sweep. Returns an empty vector when no run carries thermal
+/// telemetry, so thermal-disabled invocations emit exactly the
+/// [`ALL_FIGURES`] set and nothing else.
+pub fn render_thermal(runs: &[SweepRun], jobs: usize) -> Vec<Figure> {
+    let indexed = index_runs_with(runs, jobs);
+    if !indexed.iter().any(|r| r.sr.run.power.has_thermal()) {
+        return Vec::new();
+    }
+    vec![thermal_timeline(&indexed), throttle_breakdown(&indexed)]
 }
 
 #[cfg(test)]
@@ -1251,5 +1448,43 @@ mod tests {
         let figs = render_all(&node, &cfg, &runs, 1).unwrap();
         let ids: Vec<&str> = figs.iter().map(|f| f.id).collect();
         assert_eq!(ids, ALL_FIGURES.to_vec());
+    }
+
+    #[test]
+    fn render_thermal_gated_on_telemetry() {
+        // Thermal-disabled sweep: no thermal figures at all.
+        let (_, runs) = small_sweep();
+        assert!(render_thermal(&runs, 1).is_empty());
+
+        // Thermal-enabled sweep with no headroom: both figures, and the
+        // breakdown prices a nonzero loss.
+        let node = NodeSpec::mi300x_node();
+        let mut cfg = ModelConfig::llama3_8b();
+        cfg.layers = 2;
+        let mut params = crate::sim::EngineParams::default();
+        params.thermal = Some(crate::sim::thermal::ThermalConfig {
+            ambient_c: 85.0,
+            tau_s: 0.005,
+            ..Default::default()
+        });
+        let hot = run_sweep_topo_params(
+            &crate::config::Topology::single(node),
+            &cfg,
+            &[FsdpVersion::V1],
+            2,
+            1,
+            &params,
+        );
+        let figs = render_thermal(&hot, 1);
+        let ids: Vec<&str> = figs.iter().map(|f| f.id).collect();
+        assert_eq!(ids, vec!["thermal", "throttle"]);
+        assert!(figs[0].csv.lines().count() > 1);
+        let total: f64 = figs[1]
+            .csv
+            .lines()
+            .skip(1)
+            .map(|l| l.split(',').nth(3).unwrap().parse::<f64>().unwrap())
+            .sum();
+        assert!(total > 0.0, "no throttle loss under 85C ambient: {total}");
     }
 }

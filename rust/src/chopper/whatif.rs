@@ -44,6 +44,9 @@ pub struct PolicyOutcome {
     pub tokens_per_sec: f64,
     /// Perf per watt, expressed as tokens per joule.
     pub tokens_per_j: f64,
+    /// Clock capacity lost to thermal throttling per sampled iteration,
+    /// cluster-wide ms (0 for thermal-disabled replays).
+    pub throttle_loss_ms: f64,
     /// On the (iteration time, energy) Pareto frontier: no other policy
     /// is at least as fast *and* at least as cheap (strictly better in
     /// one).
@@ -59,6 +62,10 @@ pub struct WhatIfReport {
     /// Outcomes ranked fastest-first (iteration time ascending, policy
     /// name breaking exact ties) — the "Δ iteration time" ranking.
     pub rows: Vec<PolicyOutcome>,
+    /// Whether the replayed parameter set had thermal coupling enabled —
+    /// gates the throttle-loss column so thermal-disabled reports render
+    /// byte-identically to pre-thermal builds.
+    pub thermal: bool,
 }
 
 impl WhatIfReport {
@@ -164,7 +171,11 @@ pub fn replay_topo(
         rows[i].frontier = !dominated;
     }
 
-    WhatIfReport { baseline, rows }
+    WhatIfReport {
+        baseline,
+        rows,
+        thermal: params.thermal.is_some(),
+    }
 }
 
 /// Engine-only replay of one policy, reduced to its outcome row (deltas
@@ -203,6 +214,12 @@ fn measure(
     } else {
         0.0
     };
+    // Same logical-cluster expansion as energy: representative ranks'
+    // sampled throttle loss × fold, per sampled iteration.
+    let throttle_loss_ms =
+        out.power.sampled_throttle_loss_ns(wl.warmup) * fold
+            / sampled_iters
+            / 1e6;
     PolicyOutcome {
         governor: g,
         iter_ms: finite(tp.iter_ns / 1e6),
@@ -213,6 +230,7 @@ fn measure(
         freq_mhz: finite(stats::mean(&freqs)),
         tokens_per_sec: finite(tp.tokens_per_sec),
         tokens_per_j: finite(tokens_per_j),
+        throttle_loss_ms: finite(throttle_loss_ms),
         frontier: false,
     }
 }
@@ -604,13 +622,19 @@ pub fn render_serving(report: &ServingWhatIfReport) -> Figure {
 /// recommendations. Pure function of the report, so two replays of the
 /// same workload render byte-identically.
 pub fn render(report: &WhatIfReport) -> Figure {
+    // The throttle-loss column exists only for thermal-enabled replays —
+    // a disabled report's bytes are pinned by the pipeline goldens.
     let mut csv = String::from(
         "rank,governor,iter_ms,delta_iter_pct,energy_per_iter_j,\
-         delta_energy_pct,power_w,freq_mhz,tokens_per_sec,tokens_per_j,frontier\n",
+         delta_energy_pct,power_w,freq_mhz,tokens_per_sec,tokens_per_j,",
     );
+    if report.thermal {
+        csv.push_str("throttle_loss_ms,");
+    }
+    csv.push_str("frontier\n");
     let mut rows: Vec<Vec<String>> = Vec::with_capacity(report.rows.len());
     for (rank, r) in report.rows.iter().enumerate() {
-        rows.push(vec![
+        let mut cells = vec![
             format!("{}", rank + 1),
             r.governor.name().to_string(),
             format!("{:.2}", r.iter_ms),
@@ -621,11 +645,15 @@ pub fn render(report: &WhatIfReport) -> Figure {
             format!("{:.0}", r.freq_mhz),
             format!("{:.0}", r.tokens_per_sec),
             format!("{:.2}", r.tokens_per_j),
-            if r.frontier { "*".into() } else { String::new() },
-        ]);
-        let _ = writeln!(
+        ];
+        if report.thermal {
+            cells.push(format!("{:.2}", r.throttle_loss_ms));
+        }
+        cells.push(if r.frontier { "*".into() } else { String::new() });
+        rows.push(cells);
+        let _ = write!(
             csv,
-            "{},{},{:.4},{:.2},{:.4},{:.2},{:.1},{:.1},{:.2},{:.4},{}",
+            "{},{},{:.4},{:.2},{:.4},{:.2},{:.1},{:.1},{:.2},{:.4},",
             rank + 1,
             r.governor.name(),
             r.iter_ms,
@@ -636,20 +664,25 @@ pub fn render(report: &WhatIfReport) -> Figure {
             r.freq_mhz,
             r.tokens_per_sec,
             r.tokens_per_j,
-            r.frontier as u8
         );
+        if report.thermal {
+            let _ = write!(csv, "{:.4},", r.throttle_loss_ms);
+        }
+        let _ = writeln!(csv, "{}", r.frontier as u8);
     }
     let mut out = format!(
         "What-if — governor policy replay (baseline: {}, Δ vs baseline)\n\n",
         report.baseline.name()
     );
-    out.push_str(&ascii::table(
-        &[
-            "#", "governor", "iter ms", "Δiter", "J/iter", "ΔJ", "W", "MHz",
-            "tok/s", "tok/J", "pareto",
-        ],
-        &rows,
-    ));
+    let mut headers = vec![
+        "#", "governor", "iter ms", "Δiter", "J/iter", "ΔJ", "W", "MHz",
+        "tok/s", "tok/J",
+    ];
+    if report.thermal {
+        headers.push("thr ms");
+    }
+    headers.push("pareto");
+    out.push_str(&ascii::table(&headers, &rows));
     let fast = report.fastest();
     let ppw = report.best_perf_per_watt();
     let frontier: Vec<&str> = report
@@ -670,6 +703,19 @@ pub fn render(report: &WhatIfReport) -> Figure {
         ppw.tokens_per_j,
         frontier.join(", ")
     );
+    if report.thermal {
+        let hot = report
+            .rows
+            .iter()
+            .max_by(|a, b| a.throttle_loss_ms.total_cmp(&b.throttle_loss_ms))
+            .expect("report has rows");
+        let _ = writeln!(
+            out,
+            "\x20 most throttled:  {} ({:.2} ms/iter lost to thermal limits)",
+            hot.governor.name(),
+            hot.throttle_loss_ms
+        );
+    }
     Figure {
         id: "whatif",
         title: "What-if — governor policy replay".into(),
@@ -774,6 +820,44 @@ mod tests {
         let parallel = replay(&node, &cfg, &wl, &p, &GovernorKind::ALL, 4);
         assert_eq!(serial, parallel);
         assert_eq!(render(&serial).csv, render(&parallel).csv);
+    }
+
+    #[test]
+    fn thermal_replay_prices_throttle_loss() {
+        let (node, cfg, wl) = small();
+        let base = replay(
+            &node,
+            &cfg,
+            &wl,
+            &EngineParams::default(),
+            &GovernorKind::ALL,
+            1,
+        );
+        assert!(!base.thermal);
+        let disabled = render(&base);
+        assert!(!disabled.csv.contains("throttle_loss_ms"));
+        assert!(!disabled.ascii.contains("most throttled"));
+
+        // Low ambient headroom: steady state far above the throttle knee,
+        // tau a handful of governor windows.
+        let mut p = EngineParams::default();
+        p.thermal = Some(crate::sim::thermal::ThermalConfig {
+            ambient_c: 85.0,
+            tau_s: 0.005,
+            ..Default::default()
+        });
+        let r = replay(&node, &cfg, &wl, &p, &GovernorKind::ALL, 2);
+        assert!(r.thermal);
+        let reactive = r.row(GovernorKind::Reactive).unwrap();
+        assert!(
+            reactive.throttle_loss_ms > 0.0,
+            "no throttle loss under 85 C ambient"
+        );
+        let f = render(&r);
+        assert!(f.csv.contains("throttle_loss_ms"));
+        assert!(f.ascii.contains("most throttled"));
+        // Deterministic like every other replay.
+        assert_eq!(r, replay(&node, &cfg, &wl, &p, &GovernorKind::ALL, 1));
     }
 
     #[test]

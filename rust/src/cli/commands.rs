@@ -19,16 +19,23 @@ MI300X node + real PJRT mini-Llama path)
 
 USAGE: chopper <subcommand> [options]
 
-  sweep    [--layers N] [--iters N] [--warmup N] [--out DIR]
+  sweep    [--layers N] [--iters N] [--warmup N] [--thermal SPEC]
+           [--out DIR]
            Profile the paper sweep (b1s4 b2s4 b4s4 b1s8 b2s8 × v1,v2) and
            write every figure (txt/csv/svg) to DIR (default: figures/).
+           --thermal couples the RC die-temperature model into the
+           governor loop (grammar under campaign) and additionally
+           writes the thermal figures (thermal, throttle); without it
+           the output is byte-identical to pre-thermal builds.
   campaign [--layers 2,4] [--batch 1,2,4] [--seq 4,8 (K tokens)]
            [--fsdp v1,v2] [--nodes 1,2,4] [--sharding fsdp,hsdp]
-           [--nic-gbs 50,12.5] [--governor reactive,fixed_cap,det_aware,oracle]
+           [--nic-gbs 50,12.5]
+           [--governor reactive,fixed_cap,det_aware,oracle,thermal_aware]
            [--workload training|serving] [--qps 4,8,16] [--requests N]
            [--iters N] [--warmup N] [--seed N]
            [--ablate knob=v1,v2[;knob2=...]]
            [--faults 'none;straggler(factor=0.8)+stalls(rate=0.02)']
+           [--thermal 'none;thermal(ambient=45,tau=2)'] [--ambient 35;85]
            [--fold 1,32] [--jobs N] [--cache-dir DIR] [--force]
            [--no-cache] [--resume] [--trace-store] [--in-memory]
            [--out DIR]
@@ -63,6 +70,12 @@ USAGE: chopper <subcommand> [options]
            stalls(rate,mean_us) dropout(rank,at_ms,restart_ms) panic;
            sets separated by `;`, faults within a set joined by `+`,
            `none` = healthy baseline.
+           Thermal: thermal(ambient,tau,r,throttle,limit,floor,sigma,
+           skew,hbm), `;`-separated axis values, `none` = RC model off
+           (the default — byte-identical to pre-thermal output);
+           --ambient 35;85 is sugar for default configs at those
+           ambients. Thermal scenarios add a peak-temperature /
+           throttle-loss comparison table.
   serve    [--qps 4,8,16] [--requests N] [--layers N] [--nodes N]
            [--max-batch N] [--prefill-chunk N] [--kv-frac 0.30]
            [--slo-ttft-ms 200] [--seed N] [--jobs N] [--out DIR]
@@ -71,12 +84,16 @@ USAGE: chopper <subcommand> [options]
            the serving figures (latency percentiles, goodput-vs-load,
            energy per request) plus serving_summary.json.
   whatif   [--workload b2s4|serving] [--fsdp v1|v2] [--layers N] [--iters N]
-           [--warmup N] [--governor reactive,fixed_cap,det_aware,oracle]
-           [--cap-ratio 0.7] [--faults SETS] [--nodes N] [--fold F]
-           [--jobs N] [--out DIR]
+           [--warmup N]
+           [--governor reactive,fixed_cap,det_aware,oracle,thermal_aware]
+           [--cap-ratio 0.7] [--thermal SPEC] [--faults SETS] [--nodes N]
+           [--fold F] [--jobs N] [--out DIR]
            Replay one workload under a set of power-management policies
            and print the ranked advisor report: Δ iteration time,
            Δ energy, and the perf-per-watt (time × energy) frontier.
+           With --thermal (same grammar as campaign), every replay runs
+           under the RC thermal model and the report prices per-policy
+           throttle loss alongside time and energy.
            With --workload serving ([--qps X] [--requests N] [--seed N]),
            policies are ranked by joules per request alongside
            tokens-per-joule, p99 latency and goodput.
@@ -131,6 +148,10 @@ pub fn cmd_sweep(args: &mut Args) -> Result<(), String> {
     let cfg = model_with_layers(args)?;
     let iters = args.flag_u32("iters", 20)?;
     let warmup = args.flag_u32("warmup", iters / 2)?;
+    let thermal = match args.flag("thermal") {
+        Some(s) => crate::sim::parse_thermal(&s)?,
+        None => None,
+    };
     let out: PathBuf = args.flag_or("out", "figures").into();
     args.finish()?;
     let node = NodeSpec::mi300x_node();
@@ -138,15 +159,21 @@ pub fn cmd_sweep(args: &mut Args) -> Result<(), String> {
         "sweep: {} layers, {iters} iterations ({warmup} warmup), 10 runs…",
         cfg.layers
     );
-    let runs = report::run_sweep(
-        &node,
+    // Default params keep this byte-identical to the pre-thermal sweep.
+    let mut params = crate::sim::EngineParams::default();
+    params.thermal = thermal;
+    let jobs = campaign::default_jobs();
+    let runs = report::run_sweep_topo_params(
+        &Topology::single(node.clone()),
         &cfg,
         &[FsdpVersion::V1, FsdpVersion::V2],
         iters,
         warmup,
+        &params,
     );
-    let figs =
-        report::render_all(&node, &cfg, &runs, campaign::default_jobs())?;
+    let mut figs = report::render_all(&node, &cfg, &runs, jobs)?;
+    // Thermal figures exist only when the runs carry thermal telemetry.
+    figs.extend(report::render_thermal(&runs, jobs));
     for f in &figs {
         f.save(&out).map_err(|e| e.to_string())?;
         eprintln!("wrote {}/{}.{{txt,csv}}", out.display(), f.id);
@@ -197,6 +224,22 @@ pub fn cmd_campaign(args: &mut Args) -> Result<(), String> {
         Some(s) => grid::parse_list_folds(&s)?,
         None => Vec::new(),
     };
+    let thermals = match args.flag("thermal") {
+        Some(s) => grid::parse_list_thermal(&s)?,
+        None => Vec::new(),
+    };
+    let ambients = match args.flag("ambient") {
+        Some(s) => grid::parse_list_ambient(&s)?,
+        None => Vec::new(),
+    };
+    if !thermals.is_empty() && !ambients.is_empty() {
+        return Err(
+            "campaign: --ambient is sugar for --thermal (give one axis, \
+             not both)"
+                .into(),
+        );
+    }
+    let thermals = if thermals.is_empty() { ambients } else { thermals };
     let jobs = args.flag_u32("jobs", campaign::default_jobs() as u32)? as usize;
     let cache_dir: PathBuf = args.flag_or("cache-dir", ".chopper-cache").into();
     let force = args.switch("force");
@@ -282,6 +325,9 @@ pub fn cmd_campaign(args: &mut Args) -> Result<(), String> {
     }
     if !folds.is_empty() {
         spec.folds = folds;
+    }
+    if !thermals.is_empty() {
+        spec.thermals = thermals;
     }
     match workload.as_str() {
         "training" => {
@@ -389,6 +435,10 @@ pub fn cmd_campaign(args: &mut Args) -> Result<(), String> {
     if outcome.summaries.iter().any(|s| s.offered_qps > 0.0) {
         figs.push(campaign::campaign_serving(&outcome.summaries));
     }
+    // Peak-temperature / throttle-loss table on thermal grids.
+    if outcome.summaries.iter().any(|s| s.peak_temp_c != 0.0) {
+        figs.push(campaign::campaign_thermal(&outcome.summaries));
+    }
     // Fault-impact table when the grid injected faults or a scenario
     // failed (a crash must be visible in the report, not just stderr).
     if outcome
@@ -427,6 +477,12 @@ pub fn cmd_whatif(args: &mut Args) -> Result<(), String> {
         &args.flag_or("governor", "reactive,fixed_cap,det_aware,oracle"),
     )?;
     let cap_ratio = args.flag_f64("cap-ratio", 0.7)?;
+    // Same spec grammar as `campaign --thermal` (one model, one spelling);
+    // a single spec here — the replay dimension is policies, not climates.
+    let thermal = match args.flag("thermal") {
+        Some(s) => crate::sim::parse_thermal(&s)?,
+        None => None,
+    };
     let fault_sets = match args.flag("faults") {
         Some(s) => Some(crate::config::parse_list_faults(&s)?),
         None => None,
@@ -480,6 +536,7 @@ pub fn cmd_whatif(args: &mut Args) -> Result<(), String> {
         scfg.seed = seed;
         let mut params = crate::sim::EngineParams::default();
         params.fixed_cap_ratio = cap_ratio;
+        params.thermal = thermal;
         let topo = Topology::mi300x_cluster(1);
         eprintln!(
             "whatif: {} × {} layers under {} policies, {jobs} worker(s)…",
@@ -532,6 +589,7 @@ pub fn cmd_whatif(args: &mut Args) -> Result<(), String> {
     }
     let mut params = crate::sim::EngineParams::default();
     params.fixed_cap_ratio = cap_ratio;
+    params.thermal = thermal;
     let node = NodeSpec::mi300x_node();
     if let Some(sets) = &fault_sets {
         if nodes > 1 {
@@ -1345,6 +1403,52 @@ mod tests {
                  --iters 2 --warmup 1 --jobs 2 --no-cache"
             ),
             0
+        );
+    }
+
+    #[test]
+    fn campaign_thermal_axis_runs_and_validates() {
+        // Disabled + hot siblings on one grid; the thermal table renders.
+        assert_eq!(
+            run_cli(
+                "chopper campaign --layers 1 --batch 1 --seq 4 --fsdp v1 \
+                 --thermal none;thermal(ambient=85,tau=0.005) --iters 2 \
+                 --warmup 1 --jobs 2 --no-cache"
+            ),
+            0
+        );
+        // --ambient is sugar for --thermal: one axis, not both.
+        assert_eq!(
+            run_cli(
+                "chopper campaign --no-cache --thermal thermal --ambient 45 \
+                 --iters 2"
+            ),
+            1
+        );
+        // Unknown spec kinds and malformed ambients are named errors.
+        assert_eq!(
+            run_cli("chopper campaign --no-cache --thermal cryo --iters 2"),
+            1
+        );
+        assert_eq!(
+            run_cli("chopper campaign --no-cache --ambient warm --iters 2"),
+            1
+        );
+    }
+
+    #[test]
+    fn whatif_thermal_replay_runs_and_validates() {
+        assert_eq!(
+            run_cli(
+                "chopper whatif --workload b1s4 --layers 1 --iters 2 \
+                 --warmup 1 --governor reactive,thermal_aware \
+                 --thermal thermal(ambient=85,tau=0.005) --jobs 2"
+            ),
+            0
+        );
+        assert_eq!(
+            run_cli("chopper whatif --layers 1 --iters 2 --thermal warm"),
+            1
         );
     }
 

@@ -20,6 +20,12 @@
 
 use std::fmt;
 
+use super::parse::{num_label, parse_kv, reject_leftovers, split_kind, take};
+
+/// The grammar noun faults pass to the shared spec parser — keeps every
+/// error message naming the thing the user typed (`bad fault …`).
+const WHAT: &str = "fault";
+
 /// One declared fault. Optional ranks/nodes (`None`) are resolved
 /// deterministically by the fault model from the fault's seeded substream.
 #[derive(Debug, Clone, PartialEq)]
@@ -81,9 +87,7 @@ impl FaultSpec {
     /// Compact filesystem-safe label (scenario-name tag material):
     /// `strag_f0_8`, `link_n1_b0_5`, `stall_p0_01_m500`, `drop_a50_rs250`.
     pub fn label(&self) -> String {
-        fn num(v: f64) -> String {
-            format!("{v}").replace('.', "_").replace('-', "m")
-        }
+        let num = num_label;
         match self {
             FaultSpec::Straggler { rank, factor } => {
                 let mut s = String::from("strag");
@@ -140,57 +144,14 @@ pub fn set_label(faults: &[FaultSpec]) -> String {
         .join("+")
 }
 
-fn parse_kv(body: &str, fault: &str) -> Result<Vec<(String, f64)>, String> {
-    let mut out = Vec::new();
-    for part in body.split(',').filter(|p| !p.trim().is_empty()) {
-        let (k, v) = part.split_once('=').ok_or_else(|| {
-            format!("bad fault parameter `{part}` in `{fault}` (want key=value)")
-        })?;
-        let val: f64 = v.trim().parse().map_err(|_| {
-            format!("bad value `{}` for `{}` in `{fault}`", v.trim(), k.trim())
-        })?;
-        out.push((k.trim().to_string(), val));
-    }
-    Ok(out)
-}
-
-fn take(
-    kvs: &mut Vec<(String, f64)>,
-    key: &str,
-) -> Option<f64> {
-    let pos = kvs.iter().position(|(k, _)| k == key)?;
-    Some(kvs.remove(pos).1)
-}
-
-fn reject_leftovers(
-    kvs: &[(String, f64)],
-    fault: &str,
-    known: &[&str],
-) -> Result<(), String> {
-    if let Some((k, _)) = kvs.first() {
-        return Err(format!(
-            "unknown key `{k}` in fault `{fault}` (have: {})",
-            known.join(", ")
-        ));
-    }
-    Ok(())
-}
-
 /// Parse one fault: `kind` or `kind(key=value,...)`. Ranks/nodes are u32;
 /// every numeric parameter is validated into its sane range so a typo'd
-/// flag errors here, not as a NaN three layers down.
+/// flag errors here, not as a NaN three layers down. Tokenization rides the
+/// shared spec grammar in `config::parse`.
 pub fn parse_fault(s: &str) -> Result<FaultSpec, String> {
     let s = s.trim();
-    let (kind, body) = match s.split_once('(') {
-        Some((k, rest)) => {
-            let body = rest
-                .strip_suffix(')')
-                .ok_or_else(|| format!("bad fault `{s}` (missing `)`)"))?;
-            (k.trim(), body)
-        }
-        None => (s, ""),
-    };
-    let mut kvs = parse_kv(body, s)?;
+    let (kind, body) = split_kind(s, WHAT)?;
+    let mut kvs = parse_kv(body, s, WHAT)?;
     let as_rank = |v: f64, key: &str| -> Result<u32, String> {
         if v.is_finite() && v >= 0.0 && v.fract() == 0.0 && v <= u32::MAX as f64
         {
@@ -210,7 +171,7 @@ pub fn parse_fault(s: &str) -> Result<FaultSpec, String> {
                     "bad value `{factor}` for `factor` in `{s}` (want 0 < f <= 1)"
                 ));
             }
-            reject_leftovers(&kvs, s, &["rank", "factor"])?;
+            reject_leftovers(&kvs, s, WHAT, &["rank", "factor"])?;
             FaultSpec::Straggler { rank, factor }
         }
         "linkdown" | "link" => {
@@ -223,7 +184,7 @@ pub fn parse_fault(s: &str) -> Result<FaultSpec, String> {
                     "bad value `{bw}` for `bw` in `{s}` (want 0 < bw <= 1)"
                 ));
             }
-            reject_leftovers(&kvs, s, &["node", "bw"])?;
+            reject_leftovers(&kvs, s, WHAT, &["node", "bw"])?;
             FaultSpec::LinkDown { node, bw }
         }
         "stalls" | "stall" => {
@@ -239,7 +200,7 @@ pub fn parse_fault(s: &str) -> Result<FaultSpec, String> {
                     "bad value `{mean_us}` for `mean_us` in `{s}` (want > 0)"
                 ));
             }
-            reject_leftovers(&kvs, s, &["rate", "mean_us"])?;
+            reject_leftovers(&kvs, s, WHAT, &["rate", "mean_us"])?;
             FaultSpec::Stalls { rate, mean_us }
         }
         "dropout" | "drop" => {
@@ -255,7 +216,7 @@ pub fn parse_fault(s: &str) -> Result<FaultSpec, String> {
                     ));
                 }
             }
-            reject_leftovers(&kvs, s, &["rank", "at_ms", "restart_ms"])?;
+            reject_leftovers(&kvs, s, WHAT, &["rank", "at_ms", "restart_ms"])?;
             FaultSpec::Dropout {
                 rank,
                 at_ms,
@@ -263,7 +224,7 @@ pub fn parse_fault(s: &str) -> Result<FaultSpec, String> {
             }
         }
         "panic" => {
-            reject_leftovers(&kvs, s, &[])?;
+            reject_leftovers(&kvs, s, WHAT, &[])?;
             FaultSpec::Panic
         }
         other => {

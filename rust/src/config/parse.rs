@@ -1,8 +1,10 @@
 //! Line-based `key = value` config-file parser (clap/serde are not vendored
-//! in this environment; a small deterministic parser is all the CLI needs).
+//! in this environment; a small deterministic parser is all the CLI needs),
+//! plus the shared `kind(key=value,…)` spec grammar used by every CLI
+//! mini-language (`--faults`, `--thermal`).
 //!
-//! Format: one `key = value` per line, `#` comments, blank lines ignored.
-//! Keys are dotted paths (`sim.seed`, `workload.batch`).
+//! Config-file format: one `key = value` per line, `#` comments, blank
+//! lines ignored. Keys are dotted paths (`sim.seed`, `workload.batch`).
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -93,9 +95,112 @@ impl ConfigMap {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Shared `kind(key=value,…)` spec grammar.
+//
+// Every CLI mini-language built on this shape (fault sets, thermal specs)
+// shares one tokenizer and one error-naming convention, parameterized by a
+// `what` noun ("fault", "thermal spec") so messages keep naming the grammar
+// the user actually typed into.
+// ---------------------------------------------------------------------------
+
+/// Split `kind` or `kind(body)` into `(kind, body)`. The bare form yields an
+/// empty body; an unclosed paren is an error naming the whole token.
+pub fn split_kind<'a>(s: &'a str, what: &str) -> Result<(&'a str, &'a str), String> {
+    match s.split_once('(') {
+        Some((k, rest)) => {
+            let body = rest
+                .strip_suffix(')')
+                .ok_or_else(|| format!("bad {what} `{s}` (missing `)`)"))?;
+            Ok((k.trim(), body))
+        }
+        None => Ok((s, "")),
+    }
+}
+
+/// Tokenize a `key=value,key=value` body into `(key, f64)` pairs. `ctx` is
+/// the full spec string the user typed (for error messages); `what` the
+/// grammar noun.
+pub fn parse_kv(body: &str, ctx: &str, what: &str) -> Result<Vec<(String, f64)>, String> {
+    let mut out = Vec::new();
+    for part in body.split(',').filter(|p| !p.trim().is_empty()) {
+        let (k, v) = part.split_once('=').ok_or_else(|| {
+            format!("bad {what} parameter `{part}` in `{ctx}` (want key=value)")
+        })?;
+        let val: f64 = v.trim().parse().map_err(|_| {
+            format!("bad value `{}` for `{}` in `{ctx}`", v.trim(), k.trim())
+        })?;
+        out.push((k.trim().to_string(), val));
+    }
+    Ok(out)
+}
+
+/// Remove and return the value for `key`, if present.
+pub fn take(kvs: &mut Vec<(String, f64)>, key: &str) -> Option<f64> {
+    let pos = kvs.iter().position(|(k, _)| k == key)?;
+    Some(kvs.remove(pos).1)
+}
+
+/// Error on any unconsumed key, listing the keys this kind understands.
+pub fn reject_leftovers(
+    kvs: &[(String, f64)],
+    ctx: &str,
+    what: &str,
+    known: &[&str],
+) -> Result<(), String> {
+    if let Some((k, _)) = kvs.first() {
+        return Err(format!(
+            "unknown key `{k}` in {what} `{ctx}` (have: {})",
+            known.join(", ")
+        ));
+    }
+    Ok(())
+}
+
+/// Compact filesystem-safe rendering of a numeric spec parameter for
+/// scenario-name tags: `.` → `_`, `-` → `m` (`0.8` → `0_8`, `-3` → `m3`).
+pub fn num_label(v: f64) -> String {
+    format!("{v}").replace('.', "_").replace('-', "m")
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn spec_grammar_splits_kinds_and_bodies() {
+        assert_eq!(split_kind("foo", "spec").unwrap(), ("foo", ""));
+        assert_eq!(
+            split_kind("foo(a=1,b=2)", "spec").unwrap(),
+            ("foo", "a=1,b=2")
+        );
+        let e = split_kind("foo(a=1", "widget").unwrap_err();
+        assert!(e.contains("widget") && e.contains("missing"), "{e}");
+    }
+
+    #[test]
+    fn spec_grammar_tokenizes_and_rejects() {
+        let mut kvs = parse_kv("a=1, b=0.5", "foo(a=1, b=0.5)", "spec").unwrap();
+        assert_eq!(take(&mut kvs, "a"), Some(1.0));
+        assert_eq!(take(&mut kvs, "a"), None);
+        assert_eq!(take(&mut kvs, "b"), Some(0.5));
+        assert!(reject_leftovers(&kvs, "ctx", "spec", &["a", "b"]).is_ok());
+
+        let e = parse_kv("a", "foo(a)", "widget").unwrap_err();
+        assert!(e.contains("widget parameter"), "{e}");
+        let e = parse_kv("a=x", "foo(a=x)", "widget").unwrap_err();
+        assert!(e.contains("bad value `x`"), "{e}");
+        let kvs = parse_kv("z=1", "foo(z=1)", "widget").unwrap();
+        let e = reject_leftovers(&kvs, "foo(z=1)", "widget", &["a", "b"]).unwrap_err();
+        assert!(e.contains("`z`") && e.contains("widget") && e.contains("a, b"), "{e}");
+    }
+
+    #[test]
+    fn num_labels_are_filesystem_safe() {
+        assert_eq!(num_label(0.8), "0_8");
+        assert_eq!(num_label(-3.5), "m3_5");
+        assert_eq!(num_label(500.0), "500");
+    }
 
     #[test]
     fn parses_basic_file() {

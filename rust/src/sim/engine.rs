@@ -97,6 +97,11 @@ pub struct EngineParams {
     /// the workload seed. Empty = healthy cluster, byte-identical to the
     /// pre-fault pipeline.
     pub faults: Vec<crate::config::FaultSpec>,
+    /// Thermal coupling (`sim::thermal`): per-GPU RC temperature state
+    /// feeding a throttle factor back into the governor each window.
+    /// `None` (the default) disables the subsystem — no substream draws,
+    /// no decorator, byte-identical to the pre-thermal pipeline.
+    pub thermal: Option<crate::sim::thermal::ThermalConfig>,
 }
 
 impl Default for EngineParams {
@@ -117,6 +122,7 @@ impl Default for EngineParams {
             governor: GovernorKind::Reactive,
             fixed_cap_ratio: 0.7,
             faults: Vec::new(),
+            thermal: None,
         }
     }
 }
@@ -474,6 +480,44 @@ impl<'a> Engine<'a> {
                 }
         };
 
+        // Thermal cooling-efficiency resolution (DESIGN.md §14): each
+        // rank's efficiency is a fresh `"therm<logical rank>"` substream
+        // draw (never one of the engine's jitter streams). Under folding a
+        // hot node is replica-asymmetric, so each representative carries
+        // the *worst* (hottest) efficiency across the logical siblings of
+        // its equivalence class — the same envelope shape as the
+        // cross-node comm tail below, re-derived from the substreams of
+        // ranks the engine never simulates. `None` when disabled: no
+        // draws, no decorator, nothing in the hot loop.
+        let thermal_ctx: Vec<Option<crate::sim::thermal::ThermalCtx>> =
+            match &params.thermal {
+                None => vec![None; r],
+                Some(tc) => {
+                    let fold = topo.fold_factor();
+                    (0..r as u32)
+                        .map(|g| {
+                            let local = g % gpn as u32;
+                            let lead = topo.logical_node_of(g / gpn as u32);
+                            let worst = (lead..lead + fold)
+                                .map(|ln| {
+                                    crate::sim::thermal::cool_eff(
+                                        tc,
+                                        wl.seed,
+                                        topo.rank_of(ln, local),
+                                        ln,
+                                        topo.num_nodes,
+                                    )
+                                })
+                                .fold(f64::NEG_INFINITY, f64::max);
+                            Some(crate::sim::thermal::ThermalCtx {
+                                cfg: tc.clone(),
+                                cool_eff: worst,
+                            })
+                        })
+                        .collect()
+                }
+            };
+
         let mut ranks = Vec::with_capacity(r);
         for g in 0..r {
             let lg = topo.logical_rank_of(g as u32);
@@ -516,6 +560,7 @@ impl<'a> Engine<'a> {
                     margin_k: params.margin_k,
                     fixed_cap_ratio: params.fixed_cap_ratio,
                     spike_var,
+                    thermal: thermal_ctx[g].clone(),
                 }),
                 win_start: 0.0,
                 win: WindowActivity::default(),
@@ -1327,6 +1372,10 @@ impl<'a> Engine<'a> {
             (act, r.win_start, r.cur_iter)
         };
         let (power, freq) = self.ranks[rank].gov.step(&act);
+        // (0.0, 1.0) — the field defaults — when thermal is off, so the
+        // disabled sample stream is byte-identical to the pre-thermal one.
+        let (temp_c, throttle) =
+            self.ranks[rank].gov.thermal_sample().unwrap_or((0.0, 1.0));
         self.power.samples.push(PowerSample {
             gpu: rank as u32,
             t: t0,
@@ -1335,6 +1384,8 @@ impl<'a> Engine<'a> {
             mem_freq_mhz: self.ranks[rank].gov.mem_freq_mhz(),
             power_w: power,
             iter,
+            temp_c,
+            throttle,
         });
         {
             let r = &mut self.ranks[rank];

@@ -5,7 +5,8 @@
 //! ([`power`]: governor policies + energy accounting; [`dvfs`] holds the
 //! stock reactive mechanism), the seeded fault-injection model
 //! ([`faults`]: stragglers, degraded links, transient stalls, GPU
-//! dropout + checkpoint-restart), the host-CPU model, and the serialized
+//! dropout + checkpoint-restart), the host-CPU model, the per-GPU RC
+//! thermal model with throttle feedback ([`thermal`]), and the serialized
 //! hardware-profiling pass.
 
 pub mod cpu;
@@ -16,6 +17,7 @@ pub mod faults;
 pub mod hwprof;
 pub mod interconnect;
 pub mod power;
+pub mod thermal;
 
 pub use cpu::{cpu_trace, HostModelParams};
 pub use duration::{DurationModel, KernelTiming};
@@ -24,6 +26,10 @@ pub use engine::{Engine, EngineParams, HostActivity, SimOutput};
 pub use faults::{build_fault_model, DropoutPlan, FaultModel, NoFaults};
 pub use power::{
     package_power_w, parse_list_governor, GovCtx, GovernorKind, GovernorPolicy,
+};
+pub use thermal::{
+    parse_list_ambient, parse_list_thermal, parse_thermal, ThermalConfig,
+    ThermalCtx, ThermalState,
 };
 pub use hwprof::{align_key, collect_counters, collect_counters_topo};
 pub use interconnect::{

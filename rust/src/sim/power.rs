@@ -137,6 +137,15 @@ pub trait GovernorPolicy: fmt::Debug + Send {
     fn mem_freq_ratio_clamped(&self) -> f64 {
         self.mem_freq_ratio().max(MIN_FREQ_RATIO)
     }
+
+    /// Thermal telemetry for the window most recently stepped:
+    /// `(die °C, throttle factor applied)`. `None` — the default for every
+    /// policy without thermal coupling — makes the engine record the
+    /// neutral `(0.0, 1.0)` columns, keeping thermal-disabled runs
+    /// byte-identical (DESIGN.md §14).
+    fn thermal_sample(&self) -> Option<(f64, f64)> {
+        None
+    }
 }
 
 /// Everything a [`GovernorKind`] needs to build its policy for one GPU.
@@ -162,6 +171,9 @@ pub struct GovCtx<'a> {
     /// Allocator per-iteration peak σ normalized by the layer weight size
     /// — `DeterministicAware`'s determinism signal (≈0 under FSDPv2).
     pub spike_var: f64,
+    /// Thermal coupling for this rank (`None` — the default — disables the
+    /// subsystem: no decorator, no substream draws, byte-identical runs).
+    pub thermal: Option<crate::sim::thermal::ThermalCtx>,
 }
 
 /// Spike-variability threshold below which `DeterministicAware` treats
@@ -188,14 +200,19 @@ pub enum GovernorKind {
     DeterministicAware,
     /// Peak clocks, power cap ignored — Eq. 10's `D_peak` denominator.
     Oracle,
+    /// Reactive core with the power cap pre-derated to the steady-state
+    /// thermal budget — proactively trades clocks for temperature headroom
+    /// (`sim::thermal`). Degenerates to `Reactive` when thermal is off.
+    ThermalAware,
 }
 
 impl GovernorKind {
-    pub const ALL: [GovernorKind; 4] = [
+    pub const ALL: [GovernorKind; 5] = [
         GovernorKind::Reactive,
         GovernorKind::FixedCap,
         GovernorKind::DeterministicAware,
         GovernorKind::Oracle,
+        GovernorKind::ThermalAware,
     ];
 
     /// Stable identifier: scenario name tags, summary JSON, CLI values.
@@ -205,6 +222,7 @@ impl GovernorKind {
             GovernorKind::FixedCap => "fixed_cap",
             GovernorKind::DeterministicAware => "det_aware",
             GovernorKind::Oracle => "oracle",
+            GovernorKind::ThermalAware => "thermal_aware",
         }
     }
 
@@ -216,19 +234,37 @@ impl GovernorKind {
                 Some(GovernorKind::DeterministicAware)
             }
             "oracle" => Some(GovernorKind::Oracle),
+            "thermal_aware" | "thermalaware" | "thermal-aware" | "thermal" => {
+                Some(GovernorKind::ThermalAware)
+            }
             _ => None,
         }
     }
 
-    /// Build this kind's policy for one GPU.
+    /// Build this kind's policy for one GPU. When a thermal context is
+    /// present every policy is wrapped in the
+    /// [`ThermallyCoupled`](crate::sim::thermal::ThermallyCoupled)
+    /// feedback decorator; with `thermal: None` the policies are returned
+    /// bare — exactly the pre-thermal construction.
     pub fn build(&self, ctx: &GovCtx<'_>) -> Box<dyn GovernorPolicy> {
-        match self {
+        let inner: Box<dyn GovernorPolicy> = match self {
             GovernorKind::Reactive => Box::new(Reactive::new(ctx)),
             GovernorKind::FixedCap => Box::new(FixedCap::new(ctx)),
             GovernorKind::DeterministicAware => {
                 Box::new(DeterministicAware::new(ctx))
             }
             GovernorKind::Oracle => Box::new(Oracle::new(ctx)),
+            // ThermalAware handles its own wrapping (the derated core must
+            // be built before the decorator goes on).
+            GovernorKind::ThermalAware => {
+                return crate::sim::thermal::ThermalAware::build(ctx)
+            }
+        };
+        match &ctx.thermal {
+            Some(tc) => Box::new(crate::sim::thermal::ThermallyCoupled::new(
+                inner, tc, ctx,
+            )),
+            None => inner,
         }
     }
 }
@@ -539,6 +575,7 @@ mod tests {
             margin_k: 0.3,
             fixed_cap_ratio: 0.7,
             spike_var: 0.0,
+            thermal: None,
         }
     }
 
@@ -716,6 +753,99 @@ mod tests {
             };
             assert_eq!(run(), run(), "{k} not deterministic");
         }
+    }
+
+    #[test]
+    fn thermal_aware_without_thermal_is_bitwise_reactive() {
+        let gpu = GpuSpec::mi300x();
+        let c = ctx(&gpu);
+        let mut ta = GovernorKind::ThermalAware.build(&c);
+        let mut re = Reactive::new(&c);
+        assert!(ta.thermal_sample().is_none());
+        let act = busy();
+        for _ in 0..300 {
+            let (tp, tf) = ta.step(&act);
+            let (rp, rf) = re.step(&act);
+            assert_eq!(tp.to_bits(), rp.to_bits());
+            assert_eq!(tf.to_bits(), rf.to_bits());
+        }
+        assert_eq!(ta.energy_j().to_bits(), re.energy_j().to_bits());
+        assert_eq!(ta.kind(), GovernorKind::ThermalAware);
+    }
+
+    #[test]
+    fn thermal_coupling_throttles_every_policy_under_low_headroom() {
+        use crate::sim::thermal::{ThermalConfig, ThermalCtx};
+        let gpu = GpuSpec::mi300x();
+        let mut c = ctx(&gpu);
+        c.thermal = Some(ThermalCtx {
+            cfg: ThermalConfig {
+                ambient_c: 85.0,
+                tau_s: 0.005,
+                ..ThermalConfig::default()
+            },
+            cool_eff: 1.0,
+        });
+        let act = busy();
+        for k in GovernorKind::ALL {
+            let mut p = k.build(&c);
+            let mut throttled = false;
+            for _ in 0..400 {
+                p.step(&act);
+                let (temp, th) = p.thermal_sample().expect("coupled policy");
+                assert!(temp >= 85.0 - 1e-9, "{k}: below ambient");
+                if th < 1.0 {
+                    throttled = true;
+                }
+            }
+            assert!(throttled, "{k}: never throttled at 5 °C headroom");
+            // Hot runs clock lower than the same policy without thermal.
+            let mut bare_ctx = c.clone();
+            bare_ctx.thermal = None;
+            let mut bare = k.build(&bare_ctx);
+            for _ in 0..400 {
+                bare.step(&act);
+            }
+            assert!(
+                p.freq_mhz() < bare.freq_mhz() + 1e-9,
+                "{k}: thermal run not slower"
+            );
+        }
+    }
+
+    #[test]
+    fn thermal_aware_holds_headroom_reactive_oscillates() {
+        use crate::sim::thermal::{ThermalConfig, ThermalCtx};
+        let gpu = GpuSpec::mi300x();
+        let mut c = ctx(&gpu);
+        // Moderate headroom: reactive runs hot enough to throttle; a
+        // proactive budget should stay below the onset.
+        c.thermal = Some(ThermalCtx {
+            cfg: ThermalConfig {
+                ambient_c: 55.0,
+                tau_s: 0.02,
+                ..ThermalConfig::default()
+            },
+            cool_eff: 1.0,
+        });
+        let act = busy();
+        let run = |k: GovernorKind| {
+            let mut p = k.build(&c);
+            let mut loss = 0.0;
+            for _ in 0..600 {
+                p.step(&act);
+                let (_, th) = p.thermal_sample().unwrap();
+                loss += 1.0 - th;
+            }
+            (loss, p.energy_j())
+        };
+        let (loss_re, _) = run(GovernorKind::Reactive);
+        let (loss_ta, _) = run(GovernorKind::ThermalAware);
+        assert!(loss_re > 0.0, "reactive never throttled — scenario too cold");
+        assert!(
+            loss_ta < loss_re,
+            "thermal_aware loss {loss_ta} !< reactive {loss_re}"
+        );
     }
 
     #[test]

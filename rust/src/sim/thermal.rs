@@ -1,0 +1,669 @@
+//! Thermal coupling: per-GPU RC thermal state, throttle feedback into the
+//! governor loop, and the proactive [`ThermalAware`] policy.
+//!
+//! The power subsystem (PR 5) made clocks a function of instantaneous
+//! power alone; "Characterizing the Efficiency of Distributed Training: A
+//! Power, Performance, and Thermal Perspective" (PAPERS.md) shows
+//! *temperature* is the hidden state that actually drives sustained
+//! throttling. This module adds that state:
+//!
+//! - [`ThermalState`] — a first-order RC model per GPU: die and HBM
+//!   temperatures relax exponentially toward `ambient + R × cool_eff × P`
+//!   with time constant `tau` (`T += (T_ss − T)(1 − e^{−dt/τ})`), stepped
+//!   once per governor window from the window's package power.
+//! - [`ThermallyCoupled`] — a decorator over any [`GovernorPolicy`]: the
+//!   temperature maps to a throttle factor (linear ramp from 1.0 at
+//!   `throttle_c` down to `floor` at `limit_c`) that derates the clocks
+//!   the decorated policy exposes and rescales its window power by the
+//!   f^2.2 voltage-frequency law. The engine keeps consuming clocks
+//!   through the same trait accessors, so thermal feedback costs nothing
+//!   in the hot loop and *nothing at all* when disabled.
+//! - [`ThermalAware`] — the fifth governor: a reactive core whose power
+//!   cap is pre-derated to the steady-state budget that keeps the die
+//!   below `throttle_c − guard` at this GPU's cooling efficiency —
+//!   proactively trading clocks for temperature headroom instead of
+//!   oscillating against the throttle ramp.
+//!
+//! Determinism contract (DESIGN.md §3/§9/§13): per-GPU cooling-efficiency
+//! variation is drawn from `Rng::substream(seed, "therm<logical rank>")` —
+//! a dedicated channel, never the engine's jitter streams — so enabling
+//! thermal perturbs no existing draw and thermal-disabled runs stay
+//! byte-identical to the pre-thermal pipeline. Under replica folding a hot
+//! node is replica-asymmetric, so the engine folds a per-class *envelope*:
+//! each representative rank carries the worst (hottest) cooling efficiency
+//! across the logical siblings it stands for, re-derived from the same
+//! fresh substreams the expanded run would use (DESIGN.md §14).
+
+use std::fmt;
+
+use crate::config::parse::{num_label, parse_kv, reject_leftovers, split_kind, take};
+use crate::config::GpuSpec;
+use crate::sim::power::{
+    GovCtx, GovernorKind, GovernorPolicy, Reactive, WindowActivity, FREQ_POWER_EXP,
+};
+use crate::util::prng::Rng;
+
+/// The grammar noun thermal specs pass to the shared spec parser
+/// (`config::parse`) — errors read `bad thermal spec …`.
+const WHAT: &str = "thermal spec";
+
+/// Headroom (°C) the [`ThermalAware`] policy keeps below the throttle
+/// onset when deriving its steady-state power budget.
+pub const THERMAL_GUARD_C: f64 = 5.0;
+
+/// HBM time constant multiplier: the stack has more thermal mass than the
+/// die, so it heats and cools slower.
+const HBM_TAU_MULT: f64 = 1.6;
+
+// ---------------------------------------------------------------------------
+// Configuration
+// ---------------------------------------------------------------------------
+
+/// Thermal-model knobs. `None` at the engine level (the default) disables
+/// the subsystem entirely — no substream draws, no decorator, no columns.
+///
+/// CLI grammar (campaign/whatif `--thermal`, sugar `--ambient`):
+///
+/// ```text
+/// axis := spec (";" spec)*
+/// spec := "none" | "thermal" | "thermal" "(" key "=" value ("," key "=" value)* ")"
+/// keys := ambient | tau | r | throttle | limit | floor | sigma | skew | hbm
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub struct ThermalConfig {
+    /// Inlet/ambient temperature, °C.
+    pub ambient_c: f64,
+    /// Die RC time constant, seconds (HBM uses `tau × 1.6`).
+    pub tau_s: f64,
+    /// Junction-to-ambient thermal resistance, °C per watt.
+    pub r_c_per_w: f64,
+    /// Throttle onset: die/HBM temperature at which clocks start derating.
+    pub throttle_c: f64,
+    /// Hard limit: temperature at which the throttle ramp bottoms out.
+    pub limit_c: f64,
+    /// Throttle floor — the clock fraction held at/above `limit_c`.
+    pub floor: f64,
+    /// Per-GPU cooling-efficiency sigma (multiplier on `r_c_per_w`,
+    /// drawn from the `"therm<rank>"` substream).
+    pub cool_sigma: f64,
+    /// Deterministic per-node hot-aisle gradient: the last logical node
+    /// runs `1 + skew` × the thermal resistance of the first.
+    pub node_skew: f64,
+    /// Fraction of package power the HBM steady-state rise sees.
+    pub hbm_frac: f64,
+}
+
+impl Default for ThermalConfig {
+    fn default() -> Self {
+        Self {
+            ambient_c: 35.0,
+            tau_s: 2.0,
+            r_c_per_w: 0.08,
+            throttle_c: 90.0,
+            limit_c: 105.0,
+            floor: 0.5,
+            cool_sigma: 0.05,
+            node_skew: 0.0,
+            hbm_frac: 0.6,
+        }
+    }
+}
+
+impl ThermalConfig {
+    /// Compact filesystem-safe label (scenario-name tag material):
+    /// ambient always, non-default tau/throttle when present —
+    /// `a35`, `a85_t0_05`, `a45_th80`.
+    pub fn label(&self) -> String {
+        let d = ThermalConfig::default();
+        let mut s = format!("a{}", num_label(self.ambient_c));
+        if self.tau_s != d.tau_s {
+            s.push_str(&format!("_t{}", num_label(self.tau_s)));
+        }
+        if self.throttle_c != d.throttle_c {
+            s.push_str(&format!("_th{}", num_label(self.throttle_c)));
+        }
+        s
+    }
+
+    /// Steady-state power budget (W) that holds the die at `target_c`
+    /// under cooling efficiency `cool_eff` — the closed-form inversion of
+    /// the RC steady state `T_ss = ambient + R × cool_eff × P`.
+    pub fn power_budget_w(&self, target_c: f64, cool_eff: f64) -> f64 {
+        let r = self.r_c_per_w * cool_eff;
+        if r <= 0.0 {
+            return f64::INFINITY;
+        }
+        ((target_c - self.ambient_c) / r).max(0.0)
+    }
+}
+
+impl fmt::Display for ThermalConfig {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.label())
+    }
+}
+
+/// Per-GPU cooling efficiency (a multiplier on thermal resistance; > 1 ⇒
+/// worse cooling ⇒ hotter at the same power) for the GPU standing at
+/// `logical_rank`: a seeded lognormal-ish draw from the dedicated
+/// `"therm<logical rank>"` substream composed with the deterministic
+/// per-node hot-aisle gradient. Pure function of `(cfg, seed, identity)` —
+/// the folded envelope re-derives it for ranks the engine never simulates.
+pub fn cool_eff(
+    cfg: &ThermalConfig,
+    seed: u64,
+    logical_rank: u32,
+    logical_node: u32,
+    logical_nodes: u32,
+) -> f64 {
+    let mut rng = Rng::substream(seed, &format!("therm{logical_rank}"));
+    let jitter = 1.0 + cfg.cool_sigma * rng.gauss();
+    let grad = if logical_nodes > 1 {
+        1.0 + cfg.node_skew * logical_node as f64 / (logical_nodes - 1) as f64
+    } else {
+        1.0
+    };
+    (jitter * grad).clamp(0.5, 2.0)
+}
+
+/// What one rank's governor needs to run thermally coupled: the shared
+/// config plus this rank's resolved cooling efficiency (fold envelope
+/// already applied by the engine).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ThermalCtx {
+    pub cfg: ThermalConfig,
+    pub cool_eff: f64,
+}
+
+// ---------------------------------------------------------------------------
+// RC state + throttle ramp
+// ---------------------------------------------------------------------------
+
+/// First-order RC thermal state of one GPU: die and HBM temperatures, °C.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ThermalState {
+    pub die_c: f64,
+    pub hbm_c: f64,
+}
+
+impl ThermalState {
+    /// Both domains start at ambient (cold plate, idle machine).
+    pub fn new(ambient_c: f64) -> Self {
+        Self {
+            die_c: ambient_c,
+            hbm_c: ambient_c,
+        }
+    }
+
+    /// Integrate one window of package power: each domain relaxes toward
+    /// its steady state `ambient + R × cool_eff × P` (HBM sees
+    /// `hbm_frac × P` and a 1.6× slower time constant) by the exact
+    /// exponential step `T += (T_ss − T)(1 − e^{−dt/τ})`.
+    pub fn step(&mut self, cfg: &ThermalConfig, cool_eff: f64, power_w: f64, dt_s: f64) {
+        let r = cfg.r_c_per_w * cool_eff;
+        let die_ss = cfg.ambient_c + r * power_w;
+        let a_die = 1.0 - (-dt_s / cfg.tau_s).exp();
+        self.die_c += (die_ss - self.die_c) * a_die;
+        let hbm_ss = cfg.ambient_c + r * power_w * cfg.hbm_frac;
+        let a_hbm = 1.0 - (-dt_s / (cfg.tau_s * HBM_TAU_MULT)).exp();
+        self.hbm_c += (hbm_ss - self.hbm_c) * a_hbm;
+    }
+}
+
+/// Clock fraction the firmware allows at `temp_c`: 1.0 below the throttle
+/// onset, a linear ramp down to `floor` at the hard limit, `floor` beyond.
+pub fn throttle_factor(cfg: &ThermalConfig, temp_c: f64) -> f64 {
+    if temp_c <= cfg.throttle_c {
+        1.0
+    } else if temp_c >= cfg.limit_c {
+        cfg.floor
+    } else {
+        let span = (cfg.limit_c - cfg.throttle_c).max(1e-9);
+        1.0 - (1.0 - cfg.floor) * (temp_c - cfg.throttle_c) / span
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ThermallyCoupled — the decorator every policy runs under when enabled
+// ---------------------------------------------------------------------------
+
+/// Wraps any [`GovernorPolicy`] with the thermal feedback loop. Each
+/// window: the throttle factor that was in effect *during* the elapsed
+/// window derates the inner policy's clock and rescales its package power
+/// by the f^2.2 voltage-frequency law (never below idle; the inner
+/// policy's RNG stream is untouched); the effective power integrates the
+/// RC state; the updated die/HBM temperatures set the throttle the
+/// accessors expose for the *next* window. The engine needs no new calls —
+/// it already consumes clocks only through the trait accessors.
+#[derive(Debug)]
+pub struct ThermallyCoupled {
+    inner: Box<dyn GovernorPolicy>,
+    cfg: ThermalConfig,
+    cool_eff: f64,
+    state: ThermalState,
+    idle_w: f64,
+    window_s: f64,
+    /// Engine-clock throttle for the next window (what accessors expose).
+    throttle: f64,
+    /// Memory-clock throttle (driven by the HBM temperature).
+    mem_throttle: f64,
+    /// Throttle that governed the window most recently stepped — what
+    /// [`GovernorPolicy::thermal_sample`] reports, so trace-derived
+    /// throttle loss matches the integration exactly.
+    applied: f64,
+    energy_j: f64,
+    throttle_loss_ns: f64,
+}
+
+impl ThermallyCoupled {
+    pub fn new(inner: Box<dyn GovernorPolicy>, tc: &ThermalCtx, ctx: &GovCtx<'_>) -> Self {
+        Self {
+            inner,
+            cfg: tc.cfg.clone(),
+            cool_eff: tc.cool_eff,
+            state: ThermalState::new(tc.cfg.ambient_c),
+            idle_w: ctx.gpu.idle_power_w,
+            window_s: ctx.window_ns * 1e-9,
+            throttle: 1.0,
+            mem_throttle: 1.0,
+            applied: 1.0,
+            energy_j: 0.0,
+            throttle_loss_ns: 0.0,
+        }
+    }
+
+    /// Current RC state (tests, figures).
+    pub fn state(&self) -> &ThermalState {
+        &self.state
+    }
+
+    /// Nanoseconds of clock capacity lost to throttling so far:
+    /// `Σ window × (1 − throttle applied)`.
+    pub fn throttle_loss_ns(&self) -> f64 {
+        self.throttle_loss_ns
+    }
+}
+
+impl GovernorPolicy for ThermallyCoupled {
+    fn step(&mut self, act: &WindowActivity) -> (f64, f64) {
+        let (p_raw, _f_raw) = self.inner.step(act);
+        // The factor that actually governed the elapsed window is the one
+        // the accessors exposed while it ran — i.e. the previous step's.
+        let th = self.throttle;
+        self.applied = th;
+        let scale = th.powf(FREQ_POWER_EXP);
+        let p_eff = (self.idle_w + (p_raw - self.idle_w) * scale).max(self.idle_w);
+        self.energy_j += p_eff * self.window_s;
+        self.throttle_loss_ns += self.window_s * 1e9 * (1.0 - th);
+        self.state.step(&self.cfg, self.cool_eff, p_eff, self.window_s);
+        self.throttle = throttle_factor(&self.cfg, self.state.die_c);
+        self.mem_throttle = throttle_factor(&self.cfg, self.state.hbm_c);
+        (p_eff, self.inner.freq_mhz() * self.throttle)
+    }
+
+    fn freq_mhz(&self) -> f64 {
+        self.inner.freq_mhz() * self.throttle
+    }
+
+    fn mem_freq_mhz(&self) -> f64 {
+        self.inner.mem_freq_mhz() * self.mem_throttle
+    }
+
+    fn freq_ratio(&self) -> f64 {
+        self.inner.freq_ratio() * self.throttle
+    }
+
+    fn mem_freq_ratio(&self) -> f64 {
+        self.inner.mem_freq_ratio() * self.mem_throttle
+    }
+
+    fn energy_j(&self) -> f64 {
+        self.energy_j
+    }
+
+    fn kind(&self) -> GovernorKind {
+        self.inner.kind()
+    }
+
+    fn thermal_sample(&self) -> Option<(f64, f64)> {
+        Some((self.state.die_c, self.applied))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ThermalAware — the fifth governor
+// ---------------------------------------------------------------------------
+
+/// Proactive thermal management: a reactive core whose power cap is
+/// pre-derated to the steady-state budget that keeps this GPU's die at
+/// `throttle_c − guard` given its cooling efficiency — it *spends* clocks
+/// up front to buy temperature headroom, instead of running hot and
+/// oscillating against the reactive throttle ramp. With thermal disabled
+/// there is no temperature to manage and it degenerates to [`Reactive`]
+/// exactly (same substream, same margin, same cap).
+#[derive(Debug)]
+pub struct ThermalAware {
+    inner: Reactive,
+}
+
+impl ThermalAware {
+    pub fn build(ctx: &GovCtx<'_>) -> Box<dyn GovernorPolicy> {
+        match ctx.thermal.clone() {
+            None => Box::new(ThermalAware {
+                inner: Reactive::new(ctx),
+            }),
+            Some(tc) => {
+                let target_c = tc.cfg.throttle_c - THERMAL_GUARD_C;
+                let budget = tc
+                    .cfg
+                    .power_budget_w(target_c, tc.cool_eff)
+                    // A hostile config (ambient above the throttle line)
+                    // must not zero the cap — idle survives regardless.
+                    .max(ctx.gpu.idle_power_w * 1.05);
+                let mut derated: GpuSpec = ctx.gpu.clone();
+                derated.power_cap_w = derated.power_cap_w.min(budget);
+                let dctx = GovCtx {
+                    gpu: &derated,
+                    seed: ctx.seed,
+                    gpu_idx: ctx.gpu_idx,
+                    hbm_noise_w: ctx.hbm_noise_w,
+                    window_ns: ctx.window_ns,
+                    margin_k: ctx.margin_k,
+                    fixed_cap_ratio: ctx.fixed_cap_ratio,
+                    spike_var: ctx.spike_var,
+                    thermal: ctx.thermal.clone(),
+                };
+                let core = ThermalAware {
+                    inner: Reactive::new(&dctx),
+                };
+                Box::new(ThermallyCoupled::new(Box::new(core), &tc, ctx))
+            }
+        }
+    }
+}
+
+impl GovernorPolicy for ThermalAware {
+    fn step(&mut self, act: &WindowActivity) -> (f64, f64) {
+        self.inner.step(act)
+    }
+
+    fn freq_mhz(&self) -> f64 {
+        self.inner.freq_mhz()
+    }
+
+    fn mem_freq_mhz(&self) -> f64 {
+        self.inner.mem_freq_mhz()
+    }
+
+    fn freq_ratio(&self) -> f64 {
+        self.inner.freq_ratio()
+    }
+
+    fn mem_freq_ratio(&self) -> f64 {
+        self.inner.mem_freq_ratio()
+    }
+
+    fn energy_j(&self) -> f64 {
+        self.inner.energy_j()
+    }
+
+    fn kind(&self) -> GovernorKind {
+        GovernorKind::ThermalAware
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Spec grammar (shared tokenizer in config::parse)
+// ---------------------------------------------------------------------------
+
+/// Parse one thermal spec: `none`, `thermal`, or `thermal(key=value,…)`.
+pub fn parse_thermal(s: &str) -> Result<Option<ThermalConfig>, String> {
+    let s = s.trim();
+    if s.is_empty() || s == "none" {
+        return Ok(None);
+    }
+    let (kind, body) = split_kind(s, WHAT)?;
+    match kind {
+        "thermal" | "therm" => {}
+        other => {
+            return Err(format!(
+                "unknown thermal spec `{other}` (have: none, thermal)"
+            ))
+        }
+    }
+    let mut kvs = parse_kv(body, s, WHAT)?;
+    let mut cfg = ThermalConfig::default();
+    if let Some(v) = take(&mut kvs, "ambient") {
+        cfg.ambient_c = v;
+    }
+    if let Some(v) = take(&mut kvs, "tau") {
+        cfg.tau_s = v;
+    }
+    if let Some(v) = take(&mut kvs, "r") {
+        cfg.r_c_per_w = v;
+    }
+    if let Some(v) = take(&mut kvs, "throttle") {
+        cfg.throttle_c = v;
+    }
+    if let Some(v) = take(&mut kvs, "limit") {
+        cfg.limit_c = v;
+    }
+    if let Some(v) = take(&mut kvs, "floor") {
+        cfg.floor = v;
+    }
+    if let Some(v) = take(&mut kvs, "sigma") {
+        cfg.cool_sigma = v;
+    }
+    if let Some(v) = take(&mut kvs, "skew") {
+        cfg.node_skew = v;
+    }
+    if let Some(v) = take(&mut kvs, "hbm") {
+        cfg.hbm_frac = v;
+    }
+    reject_leftovers(
+        &kvs,
+        s,
+        WHAT,
+        &[
+            "ambient", "tau", "r", "throttle", "limit", "floor", "sigma", "skew", "hbm",
+        ],
+    )?;
+    for (key, v, ok) in [
+        ("ambient", cfg.ambient_c, cfg.ambient_c.is_finite()),
+        ("tau", cfg.tau_s, cfg.tau_s > 0.0 && cfg.tau_s.is_finite()),
+        (
+            "r",
+            cfg.r_c_per_w,
+            cfg.r_c_per_w > 0.0 && cfg.r_c_per_w.is_finite(),
+        ),
+        (
+            "floor",
+            cfg.floor,
+            cfg.floor > 0.0 && cfg.floor <= 1.0,
+        ),
+        (
+            "sigma",
+            cfg.cool_sigma,
+            cfg.cool_sigma >= 0.0 && cfg.cool_sigma <= 0.5,
+        ),
+        (
+            "skew",
+            cfg.node_skew,
+            cfg.node_skew >= 0.0 && cfg.node_skew <= 1.0,
+        ),
+        (
+            "hbm",
+            cfg.hbm_frac,
+            cfg.hbm_frac > 0.0 && cfg.hbm_frac <= 1.0,
+        ),
+    ] {
+        if !ok {
+            return Err(format!("bad value `{v}` for `{key}` in `{s}` (out of range)"));
+        }
+    }
+    if !(cfg.throttle_c < cfg.limit_c) {
+        return Err(format!(
+            "bad value `{}` for `throttle` in `{s}` (want throttle < limit)",
+            cfg.throttle_c
+        ));
+    }
+    Ok(Some(cfg))
+}
+
+/// Parse a `;`-separated thermal axis — the campaign `--thermal` flag.
+/// `none;thermal(ambient=85)` sweeps disabled vs a hot datacenter.
+pub fn parse_list_thermal(s: &str) -> Result<Vec<Option<ThermalConfig>>, String> {
+    let out: Vec<Option<ThermalConfig>> = s
+        .split(';')
+        .filter(|t| !t.trim().is_empty())
+        .map(parse_thermal)
+        .collect::<Result<_, _>>()?;
+    if out.is_empty() {
+        return Err(format!("empty thermal list `{s}` (use `none`)"));
+    }
+    Ok(out)
+}
+
+/// Parse the `--ambient` sugar: a `;`-separated list of ambient
+/// temperatures, each expanding to a default thermal config at that
+/// ambient (`45;85` ≡ `thermal(ambient=45);thermal(ambient=85)`).
+pub fn parse_list_ambient(s: &str) -> Result<Vec<Option<ThermalConfig>>, String> {
+    let out: Vec<Option<ThermalConfig>> = s
+        .split(';')
+        .filter(|t| !t.trim().is_empty())
+        .map(|t| {
+            let t = t.trim();
+            if t == "none" {
+                return Ok(None);
+            }
+            let v: f64 = t
+                .parse()
+                .map_err(|_| format!("bad ambient `{t}` (want °C or `none`)"))?;
+            parse_thermal(&format!("thermal(ambient={v})"))
+        })
+        .collect::<Result<_, _>>()?;
+    if out.is_empty() {
+        return Err(format!("empty ambient list `{s}` (use `none`)"));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hot_cfg() -> ThermalConfig {
+        // Low headroom + fast tau so a handful of 1 ms windows throttles.
+        ThermalConfig {
+            ambient_c: 85.0,
+            tau_s: 0.005,
+            ..ThermalConfig::default()
+        }
+    }
+
+    #[test]
+    fn state_relaxes_exactly_exponentially() {
+        let cfg = ThermalConfig::default();
+        let mut st = ThermalState::new(cfg.ambient_c);
+        // Constant 500 W for 1 τ in 1 ms steps ⇒ 1 − e⁻¹ of the rise.
+        let steps = (cfg.tau_s / 1e-3) as usize;
+        for _ in 0..steps {
+            st.step(&cfg, 1.0, 500.0, 1e-3);
+        }
+        let rise = cfg.r_c_per_w * 500.0;
+        let want = cfg.ambient_c + rise * (1.0 - (-1.0f64).exp());
+        assert!((st.die_c - want).abs() < 0.05, "{} vs {want}", st.die_c);
+        assert!(st.hbm_c < st.die_c, "HBM sees a fraction of the power");
+    }
+
+    #[test]
+    fn zero_load_decays_to_ambient() {
+        let cfg = hot_cfg();
+        let mut st = ThermalState::new(cfg.ambient_c);
+        st.die_c = 104.0;
+        st.hbm_c = 100.0;
+        for _ in 0..10_000 {
+            st.step(&cfg, 1.0, 0.0, 1e-3);
+        }
+        assert!((st.die_c - cfg.ambient_c).abs() < 1e-6);
+        assert!((st.hbm_c - cfg.ambient_c).abs() < 1e-6);
+    }
+
+    #[test]
+    fn throttle_ramp_is_linear_and_clamped() {
+        let cfg = ThermalConfig::default();
+        assert_eq!(throttle_factor(&cfg, 20.0), 1.0);
+        assert_eq!(throttle_factor(&cfg, cfg.throttle_c), 1.0);
+        let mid = (cfg.throttle_c + cfg.limit_c) / 2.0;
+        let want = 1.0 - (1.0 - cfg.floor) * 0.5;
+        assert!((throttle_factor(&cfg, mid) - want).abs() < 1e-12);
+        assert_eq!(throttle_factor(&cfg, cfg.limit_c + 40.0), cfg.floor);
+    }
+
+    #[test]
+    fn cool_eff_is_seeded_and_skewed() {
+        let cfg = ThermalConfig {
+            node_skew: 0.1,
+            ..ThermalConfig::default()
+        };
+        let a = cool_eff(&cfg, 42, 7, 0, 4);
+        assert_eq!(a, cool_eff(&cfg, 42, 7, 0, 4), "not deterministic");
+        assert_ne!(a, cool_eff(&cfg, 42, 8, 0, 4), "substream not per-rank");
+        // Same draw, hotter aisle: the gradient strictly raises resistance.
+        assert!(cool_eff(&cfg, 42, 7, 3, 4) > a);
+        for lr in 0..64 {
+            let e = cool_eff(&cfg, 42, lr, 0, 4);
+            assert!((0.5..=2.0).contains(&e));
+        }
+    }
+
+    #[test]
+    fn spec_grammar_parses_and_rejects() {
+        assert_eq!(parse_thermal("none").unwrap(), None);
+        assert_eq!(
+            parse_thermal("thermal").unwrap(),
+            Some(ThermalConfig::default())
+        );
+        let c = parse_thermal("thermal(ambient=85,tau=0.05)").unwrap().unwrap();
+        assert_eq!(c.ambient_c, 85.0);
+        assert_eq!(c.tau_s, 0.05);
+        let e = parse_thermal("thermal(tau=-1)").unwrap_err();
+        assert!(e.contains("tau"), "{e}");
+        let e = parse_thermal("thermal(watts=5)").unwrap_err();
+        assert!(e.contains("watts") && e.contains("thermal spec"), "{e}");
+        let e = parse_thermal("fusion(ambient=1)").unwrap_err();
+        assert!(e.contains("fusion"), "{e}");
+        assert!(parse_thermal("thermal(ambient=85").is_err());
+        assert!(parse_thermal("thermal(throttle=110,limit=105)").is_err());
+        let axis = parse_list_thermal("none;thermal(ambient=85)").unwrap();
+        assert_eq!(axis.len(), 2);
+        assert!(axis[0].is_none() && axis[1].is_some());
+        assert!(parse_list_thermal(";").is_err());
+        let sugar = parse_list_ambient("none;45;85").unwrap();
+        assert_eq!(sugar.len(), 3);
+        assert_eq!(sugar[1].as_ref().unwrap().ambient_c, 45.0);
+        assert!(parse_list_ambient("warm").is_err());
+    }
+
+    #[test]
+    fn labels_are_compact_and_filesystem_safe() {
+        assert_eq!(ThermalConfig::default().label(), "a35");
+        let c = parse_thermal("thermal(ambient=85,tau=0.05)").unwrap().unwrap();
+        assert_eq!(c.label(), "a85_t0_05");
+        for ch in c.label().chars() {
+            assert!(ch.is_ascii_alphanumeric() || ch == '_', "unsafe {ch}");
+        }
+    }
+
+    #[test]
+    fn power_budget_inverts_the_steady_state() {
+        let cfg = ThermalConfig::default();
+        let p = cfg.power_budget_w(cfg.throttle_c - THERMAL_GUARD_C, 1.0);
+        // Running exactly the budget forever settles exactly at the target.
+        let mut st = ThermalState::new(cfg.ambient_c);
+        for _ in 0..200_000 {
+            st.step(&cfg, 1.0, p, 1e-3);
+        }
+        assert!((st.die_c - (cfg.throttle_c - THERMAL_GUARD_C)).abs() < 1e-6);
+    }
+}

@@ -226,12 +226,25 @@ pub struct PowerSample {
     pub mem_freq_mhz: f64,
     pub power_w: f64,
     pub iter: u32,
+    /// Die temperature at window end, °C — 0.0 when the thermal subsystem
+    /// is disabled (a physical die is never at 0.0 °C, so the zero doubles
+    /// as the "no thermal data" marker across the pipeline).
+    pub temp_c: f64,
+    /// Thermal throttle factor that governed this window's clocks
+    /// (1.0 = unthrottled; always 1.0 with thermal disabled).
+    pub throttle: f64,
 }
 
 impl PowerSample {
     /// Joules this window accounts for: power × window length.
     pub fn energy_j(&self) -> f64 {
         self.power_w * self.window_ns * 1e-9
+    }
+
+    /// Nanoseconds of clock capacity this window lost to thermal
+    /// throttling: `window × (1 − throttle)`. Zero when unthrottled.
+    pub fn throttle_loss_ns(&self) -> f64 {
+        self.window_ns * (1.0 - self.throttle)
     }
 }
 
@@ -285,6 +298,29 @@ impl PowerTrace {
             .iter()
             .filter(|s| s.iter >= warmup)
             .map(|s| s.energy_j())
+            .sum()
+    }
+
+    /// Whether any window carries thermal telemetry (die temp recorded).
+    /// The gate every thermal column/figure/summary hangs off — false for
+    /// thermal-disabled runs, keeping their outputs byte-identical.
+    pub fn has_thermal(&self) -> bool {
+        self.samples.iter().any(|s| s.temp_c > 0.0)
+    }
+
+    /// Peak die temperature (°C) across every GPU and window; 0.0 when
+    /// thermal is disabled.
+    pub fn peak_temp_c(&self) -> f64 {
+        self.samples.iter().map(|s| s.temp_c).fold(0.0, f64::max)
+    }
+
+    /// Total nanoseconds of clock capacity lost to thermal throttling over
+    /// sampled iterations (`iter >= warmup`), summed in sample order.
+    pub fn sampled_throttle_loss_ns(&self, warmup: u32) -> f64 {
+        self.samples
+            .iter()
+            .filter(|s| s.iter >= warmup)
+            .map(|s| s.throttle_loss_ns())
             .sum()
     }
 }
@@ -401,6 +437,8 @@ mod tests {
                 mem_freq_mhz: 2500.0,
                 power_w: w,
                 iter,
+                temp_c: 0.0,
+                throttle: 1.0,
             });
         }
         // One 1 ms window at 500 W = 0.5 J.
@@ -413,6 +451,16 @@ mod tests {
         assert!((by_iter - total).abs() < 1e-12);
         assert!((p.sampled_energy_j(1) - 0.7).abs() < 1e-12);
         assert_eq!(p.sampled_energy_j(0), total);
+        // Neutral thermal columns: no thermal data, zero throttle loss.
+        assert!(!p.has_thermal());
+        assert_eq!(p.peak_temp_c(), 0.0);
+        assert_eq!(p.sampled_throttle_loss_ns(0), 0.0);
+        // A throttled window reports its lost capacity.
+        p.samples[1].temp_c = 96.0;
+        p.samples[1].throttle = 0.8;
+        assert!(p.has_thermal());
+        assert_eq!(p.peak_temp_c(), 96.0);
+        assert!((p.sampled_throttle_loss_ns(0) - 0.2e6).abs() < 1e-3);
     }
 
     #[test]

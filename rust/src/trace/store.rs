@@ -13,7 +13,7 @@
 //! [ 4] u32 LE version = 1
 //! [ 4] u32 LE flags   = 0
 //! frames, each:
-//!   [ 4] u32 LE tag       ("META" | "EVNT" | "PWRC" | "FOOT")
+//!   [ 4] u32 LE tag       ("META" | "EVNT" | "PWRC" | "THRM" | "FOOT")
 //!   [ 4] u32 LE payload length
 //!   [ 4] u32 LE CRC32 of the payload
 //!   [ n] payload
@@ -25,7 +25,11 @@
 //! created, so even a torn file identifies its run. `EVNT` frames are
 //! columnar event chunks (one training iteration each, split when an
 //! iteration exceeds [`CHUNK_EVENTS`]). `PWRC` frames are columnar power
-//! samples. `FOOT` (JSON) is written at finalize and carries the *final*
+//! samples. `THRM` frames carry the thermal columns (die °C, throttle) of
+//! the immediately preceding `PWRC` block — written only when the run had
+//! thermal coupling enabled, so thermal-disabled stores are byte-identical
+//! to the pre-thermal format (no tag, no wire key). `FOOT` (JSON) is
+//! written at finalize and carries the *final*
 //! metadata (fault fields only settle at the end of a run), iteration
 //! bounds, and frame counts; the reader prefers it over `META`.
 //!
@@ -68,6 +72,7 @@ pub const STORE_EXT: &str = "ctrc";
 pub const TAG_META: u32 = u32::from_le_bytes(*b"META");
 pub const TAG_EVNT: u32 = u32::from_le_bytes(*b"EVNT");
 pub const TAG_PWRC: u32 = u32::from_le_bytes(*b"PWRC");
+pub const TAG_THRM: u32 = u32::from_le_bytes(*b"THRM");
 pub const TAG_FOOT: u32 = u32::from_le_bytes(*b"FOOT");
 
 /// Memory bound: an iteration's pending events are flushed as a chunk once
@@ -546,6 +551,49 @@ fn encode_power(samples: &[PowerSample]) -> Vec<u8> {
     out
 }
 
+/// Thermal columns of one PWRC block: `n`, then `temp_c[]` and
+/// `throttle[]`. Emitted right after the block it annotates, and only when
+/// the run recorded thermal telemetry.
+fn encode_thermal(samples: &[PowerSample]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(4 + samples.len() * 16);
+    put_u32(&mut out, samples.len() as u32);
+    for s in samples {
+        put_f64(&mut out, s.temp_c);
+    }
+    for s in samples {
+        put_f64(&mut out, s.throttle);
+    }
+    out
+}
+
+/// Apply a THRM frame to the trailing `n` samples (its PWRC block). With
+/// `out: None` (fsck validation) only the column sizes are checked.
+fn decode_thermal(payload: &[u8], out: Option<&mut Vec<PowerSample>>) -> Result<u32, String> {
+    let mut c = Cur::new(payload);
+    let bad = |what: &str| format!("THRM frame: {what}");
+    let n = c.u32().ok_or_else(|| bad("missing sample count"))? as usize;
+    let need = n.checked_mul(16).ok_or_else(|| bad("sample count overflow"))?;
+    if payload.len() - c.p != need {
+        return Err(bad("column size mismatch"));
+    }
+    let temp_c: Vec<f64> = (0..n).filter_map(|_| c.f64()).collect();
+    let throttle: Vec<f64> = (0..n).filter_map(|_| c.f64()).collect();
+    if throttle.len() != n || !c.done() {
+        return Err(bad("truncated columns"));
+    }
+    if let Some(out) = out {
+        if out.len() < n {
+            return Err(bad("no matching power block"));
+        }
+        let base = out.len() - n;
+        for i in 0..n {
+            out[base + i].temp_c = temp_c[i];
+            out[base + i].throttle = throttle[i];
+        }
+    }
+    Ok(n as u32)
+}
+
 fn decode_power(payload: &[u8], mut out: Option<&mut Vec<PowerSample>>) -> Result<u32, String> {
     let mut c = Cur::new(payload);
     let bad = |what: &str| format!("PWRC frame: {what}");
@@ -575,6 +623,10 @@ fn decode_power(payload: &[u8], mut out: Option<&mut Vec<PowerSample>>) -> Resul
                 mem_freq_mhz: mem_freq_mhz[i],
                 power_w: power_w[i],
                 iter: iter[i],
+                // Neutral defaults; a trailing THRM frame (present only
+                // for thermal-enabled runs) overwrites them in place.
+                temp_c: 0.0,
+                throttle: 1.0,
             });
         }
     }
@@ -711,6 +763,7 @@ impl StoreWriter {
         iter_bounds: &[(f64, f64)],
     ) -> io::Result<StoreInfo> {
         self.flush_all();
+        let thermal = power.has_thermal();
         for block in power.samples.chunks(PWRC_SAMPLES) {
             if self.err.is_some() {
                 break;
@@ -718,6 +771,11 @@ impl StoreWriter {
             let payload = encode_power(block);
             let r = self.frame(TAG_PWRC, &payload);
             self.latch(r);
+            if thermal {
+                let payload = encode_thermal(block);
+                let r = self.frame(TAG_THRM, &payload);
+                self.latch(r);
+            }
             self.samples += block.len() as u64;
         }
         if let Some(e) = self.err.take() {
@@ -989,7 +1047,7 @@ fn scan(path: &Path, out: &mut ScanOut<'_>) -> Result<SalvageReport, String> {
         let tag = u32::from_le_bytes(h[..4].try_into().unwrap());
         let plen = u32::from_le_bytes(h[4..8].try_into().unwrap());
         let crc = u32::from_le_bytes(h[8..12].try_into().unwrap());
-        if !matches!(tag, TAG_META | TAG_EVNT | TAG_PWRC | TAG_FOOT) {
+        if !matches!(tag, TAG_META | TAG_EVNT | TAG_PWRC | TAG_THRM | TAG_FOOT) {
             rep.corrupt = true;
             rep.note = format!("unknown frame tag at offset {pos}");
             break;
@@ -1049,6 +1107,10 @@ fn scan(path: &Path, out: &mut ScanOut<'_>) -> Result<SalvageReport, String> {
                 rep.samples += n as u64;
                 n
             }),
+            TAG_THRM => decode_thermal(
+                &payload,
+                if out.materialize { Some(&mut out.samples) } else { None },
+            ),
             TAG_FOOT => parse_foot_frame(&payload).map(|(m, ib, salv)| {
                 rep.footer_present = true;
                 rep.salvaged_upstream = salv;
@@ -1081,6 +1143,7 @@ fn tag_name(tag: u32) -> &'static str {
         TAG_META => "META",
         TAG_EVNT => "EVNT",
         TAG_PWRC => "PWRC",
+        TAG_THRM => "THRM",
         TAG_FOOT => "FOOT",
         _ => "????",
     }
@@ -1372,6 +1435,8 @@ mod tests {
                 mem_freq_mhz: 2600.0,
                 power_w: 450.0 + i as f64,
                 iter: (i % 3) as u32,
+                temp_c: 0.0,
+                throttle: 1.0,
             });
         }
         let ib = vec![(0.0, 100.0), (100.0, 220.0), (220.0, 347.5)];
@@ -1397,6 +1462,36 @@ mod tests {
         assert_eq!(format!("{:?}", l.trace), format!("{:?}", t));
         assert_eq!(format!("{:?}", l.power), format!("{:?}", p));
         assert_eq!(format!("{:?}", l.iter_bounds), format!("{:?}", ib));
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn thermal_columns_roundtrip_and_disabled_stores_have_no_thrm_frame() {
+        let (t, mut p, ib) = sample_trace(50);
+        let d = tdir("thrm");
+
+        // Disabled run: the serialized bytes must contain no THRM frame.
+        let off = d.join("off.ctrc");
+        write_store(&off, &t, &p, &ib).unwrap();
+        let bytes = std::fs::read(&off).unwrap();
+        assert!(
+            !bytes.windows(4).any(|w| w == b"THRM"),
+            "thermal-disabled store grew a THRM frame"
+        );
+
+        // Enabled run: columns roundtrip bitwise.
+        for (i, s) in p.samples.iter_mut().enumerate() {
+            s.temp_c = 60.0 + i as f64 * 0.25;
+            s.throttle = if i % 4 == 0 { 0.85 } else { 1.0 };
+        }
+        let on = d.join("on.ctrc");
+        write_store(&on, &t, &p, &ib).unwrap();
+        let bytes = std::fs::read(&on).unwrap();
+        assert!(bytes.windows(4).any(|w| w == b"THRM"));
+        let l = read_store(&on).unwrap();
+        assert!(l.report.clean(), "{}", l.report.describe());
+        assert_eq!(format!("{:?}", l.power), format!("{:?}", p));
+        assert!(l.power.has_thermal());
         std::fs::remove_dir_all(&d).ok();
     }
 

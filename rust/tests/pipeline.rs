@@ -694,3 +694,120 @@ fn sixtyfour_node_folded_campaign_golden() {
     let again = run_campaign(&node, &scenarios, 1, None, false);
     assert_eq!(again.summaries[0].to_json_str(), json);
 }
+
+/// Thermal acceptance (DESIGN.md §14): a thermal-enabled 64-logical-node
+/// HSDP campaign folded ×32 completes, reports nonzero throttle loss under
+/// low ambient headroom, and round-trips its thermal fields byte-stably;
+/// the thermal-disabled sibling on the same grid keeps the pre-thermal
+/// wire bytes (no thermal keys, neutral telemetry). A thermal what-if on
+/// the same folded topology prices throttle loss across all five
+/// governors.
+#[test]
+fn thermal_folded_campaign_and_whatif_acceptance() {
+    use chopper::campaign::{campaign_thermal, run_campaign, GridSpec};
+    use chopper::config::{Sharding, Topology};
+    use chopper::sim::thermal::ThermalConfig;
+    use chopper::sim::GovernorKind;
+
+    let node = NodeSpec::mi300x_node();
+    // 85 °C ambient + millisecond τ: the die crosses the 90 °C throttle
+    // knee within the first governor windows.
+    let hot = ThermalConfig {
+        ambient_c: 85.0,
+        tau_s: 0.005,
+        ..ThermalConfig::default()
+    };
+
+    // 1. Campaign: disabled + hot siblings on one folded 64-node grid.
+    let mut spec = GridSpec::paper(2, 2, 1);
+    spec.batches = vec![1];
+    spec.seqs = vec![4096];
+    spec.fsdp = vec![FsdpVersion::V1];
+    spec.shardings = vec![Sharding::Hsdp];
+    spec.nodes = vec![64];
+    spec.folds = vec![32];
+    spec.thermals = vec![None, Some(hot.clone())];
+    let scenarios = spec.expand();
+    assert_eq!(scenarios.len(), 2);
+    assert_eq!(scenarios[0].name, "L2-b1s4-FSDPv1-HSDP-N64-fold32");
+    assert_eq!(
+        scenarios[1].name,
+        "L2-b1s4-FSDPv1-HSDP-N64-fold32-therm_a85_t0_005"
+    );
+    // Thermal siblings share the scenario seed (tag applied post-seed),
+    // so every jitter draw is identical across the pair.
+    assert_eq!(scenarios[0].wl.seed, scenarios[1].wl.seed);
+    let outcome = run_campaign(&node, &scenarios, 1, None, false);
+    let cool = &outcome.summaries[0];
+    let warm = &outcome.summaries[1];
+    // Disabled sibling: neutral fields, nothing thermal on the wire.
+    assert_eq!(cool.peak_temp_c, 0.0);
+    assert_eq!(cool.throttle_loss_ms, 0.0);
+    assert!(!cool.to_json_str().contains("peak_temp_c"));
+    assert!(!cool.to_json_str().contains("throttle_loss_ms"));
+    // Hot sibling: folded to the logical cluster, visibly throttling.
+    assert_eq!((warm.num_nodes, warm.fold), (64, 32));
+    assert_eq!(warm.status, "ok");
+    assert!(
+        warm.peak_temp_c > hot.throttle_c,
+        "peak {} never crossed the {} °C knee",
+        warm.peak_temp_c,
+        hot.throttle_c
+    );
+    assert!(warm.throttle_loss_ms > 0.0, "no throttle loss at 85 °C");
+    assert!(
+        warm.tokens_per_sec < cool.tokens_per_sec,
+        "throttling did not cost throughput"
+    );
+    let json = warm.to_json_str();
+    assert!(json.contains("\"peak_temp_c\""));
+    let back =
+        chopper::campaign::ScenarioSummary::from_json_str(&json).unwrap();
+    assert_eq!(&back, warm);
+    assert_eq!(back.to_json_str(), json, "round-trip must be byte-stable");
+    // Determinism: the identical campaign reproduces the bytes.
+    let again = run_campaign(&node, &scenarios, 1, None, false);
+    assert_eq!(again.summaries[1].to_json_str(), json);
+    // The thermal comparison table renders the hot row with its deltas.
+    let fig = campaign_thermal(&outcome.summaries);
+    assert!(fig.csv.contains("therm_a85_t0_005"));
+    assert_eq!(fig.csv.lines().count(), 2, "one thermal row expected");
+
+    // 2. What-if on the same folded topology: all five governors priced,
+    // throttle-loss column present, deterministic across jobs.
+    let topo = Topology::mi300x_cluster(64).with_fold(32);
+    let mut cfg = ModelConfig::llama3_8b();
+    cfg.layers = 2;
+    let mut wl = WorkloadConfig::new(1, 4096, FsdpVersion::V1);
+    wl.iterations = 2;
+    wl.warmup = 1;
+    wl.sharding = Sharding::Hsdp;
+    let mut params = EngineParams::default();
+    params.thermal = Some(hot);
+    let r = chopper::chopper::whatif::replay_topo(
+        &topo,
+        &cfg,
+        &wl,
+        &params,
+        &GovernorKind::ALL,
+        2,
+    );
+    assert!(r.thermal, "report not flagged thermal");
+    assert_eq!(r.rows.len(), GovernorKind::ALL.len());
+    assert!(
+        r.rows.iter().any(|row| row.throttle_loss_ms > 0.0),
+        "no policy lost clocks to thermal limits"
+    );
+    let fig = chopper::chopper::whatif::render(&r);
+    assert!(fig.csv.lines().next().unwrap().contains("throttle_loss_ms"));
+    assert!(fig.ascii.contains("thermal_aware"));
+    let serial = chopper::chopper::whatif::replay_topo(
+        &topo,
+        &cfg,
+        &wl,
+        &params,
+        &GovernorKind::ALL,
+        1,
+    );
+    assert_eq!(r, serial, "thermal what-if not deterministic across jobs");
+}

@@ -399,6 +399,7 @@ fn random_ctx(gpu: &GpuSpec, rng: &mut Rng) -> GovCtx<'_> {
         margin_k: 0.1 + rng.f64() * 0.5,
         fixed_cap_ratio: 0.3 + rng.f64() * 0.9,
         spike_var: rng.f64() * 0.5,
+        thermal: None,
     }
 }
 
@@ -500,6 +501,7 @@ fn prop_reactive_policy_is_bitwise_the_pre_refactor_governor() {
             margin_k: 0.3,
             fixed_cap_ratio: 0.7,
             spike_var: rng.f64(),
+            thermal: None,
         };
         let mut policy = GovernorKind::Reactive.build(&ctx);
         let mut stock = DvfsGovernor::new(gpu.clone(), seed, 0, noise);
@@ -514,6 +516,202 @@ fn prop_reactive_policy_is_bitwise_the_pre_refactor_governor() {
                 stock.mem_freq_mhz.to_bits(),
                 "memory clock diverged"
             );
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Thermal coupling (sim::thermal, DESIGN.md §14)
+// ---------------------------------------------------------------------------
+
+use chopper::sim::thermal::{cool_eff, ThermalConfig, ThermalState};
+
+fn random_thermal(rng: &mut Rng) -> ThermalConfig {
+    ThermalConfig {
+        ambient_c: 20.0 + rng.f64() * 65.0,
+        tau_s: 0.002 + rng.f64() * 3.0,
+        r_c_per_w: 0.02 + rng.f64() * 0.1,
+        cool_sigma: rng.f64() * 0.3,
+        node_skew: rng.f64() * 0.5,
+        ..ThermalConfig::default()
+    }
+}
+
+#[test]
+fn prop_thermal_temperature_monotone_in_power() {
+    // Pointwise-dominating power history ⇒ pointwise-dominating die and
+    // HBM temperatures, at every step, for any config.
+    prop("thermal_monotone", 32, |rng| {
+        let cfg = random_thermal(rng);
+        let eff = 0.5 + rng.f64() * 1.5;
+        let dt = 1e-4 + rng.f64() * 1e-2;
+        let mut lo = ThermalState::new(cfg.ambient_c);
+        let mut hi = ThermalState::new(cfg.ambient_c);
+        for _ in 0..400 {
+            let p = rng.f64() * 700.0;
+            let extra = rng.f64() * 300.0;
+            lo.step(&cfg, eff, p, dt);
+            hi.step(&cfg, eff, p + extra, dt);
+            assert!(hi.die_c >= lo.die_c - 1e-12, "{} < {}", hi.die_c, lo.die_c);
+            assert!(hi.hbm_c >= lo.hbm_c - 1e-12, "{} < {}", hi.hbm_c, lo.hbm_c);
+        }
+    });
+}
+
+#[test]
+fn prop_thermal_zero_load_decay_is_exact_exponential() {
+    // Under zero power the RC state must decay toward ambient along the
+    // closed-form exponential: after k windows of dt the residual above
+    // ambient is exactly (T0 − ambient) · e^(−k·dt/τ).
+    prop("thermal_decay", 32, |rng| {
+        let cfg = random_thermal(rng);
+        let t0 = cfg.ambient_c + 5.0 + rng.f64() * 60.0;
+        let dt = 1e-4 + rng.f64() * 1e-2;
+        let mut st = ThermalState::new(cfg.ambient_c);
+        st.die_c = t0;
+        st.hbm_c = t0;
+        let mut prev = t0;
+        for k in 1..=300u32 {
+            st.step(&cfg, 1.0, 0.0, dt);
+            assert!(st.die_c <= prev + 1e-12, "decay not monotone");
+            prev = st.die_c;
+            let want = cfg.ambient_c
+                + (t0 - cfg.ambient_c) * (-(k as f64) * dt / cfg.tau_s).exp();
+            assert!(
+                (st.die_c - want).abs() <= want.abs() * 1e-9 + 1e-9,
+                "step {k}: {} != closed form {want}",
+                st.die_c
+            );
+        }
+        assert!(st.hbm_c >= st.die_c - 1e-12, "HBM cools slower (τ × 1.6)");
+    });
+}
+
+#[test]
+fn prop_thermal_disabled_policies_are_bitwise_bare() {
+    // With `thermal: None` in the context: ThermalAware degenerates to
+    // Reactive bit for bit, and no policy reports a thermal sample — the
+    // engine's PowerSample stream stays byte-identical to the pre-thermal
+    // pipeline (pinned end-to-end by the pipeline goldens).
+    prop("thermal_disabled_bitwise", 16, |rng| {
+        let gpu = GpuSpec::mi300x();
+        let ctx = random_ctx(&gpu, rng);
+        let mut ta = GovernorKind::ThermalAware.build(&ctx);
+        let mut re = GovernorKind::Reactive.build(&ctx);
+        for _ in 0..120 {
+            let act = random_activity(rng);
+            let (tp, tf) = ta.step(&act);
+            let (rp, rf) = re.step(&act);
+            assert_eq!(tp.to_bits(), rp.to_bits(), "power diverged");
+            assert_eq!(tf.to_bits(), rf.to_bits(), "frequency diverged");
+            assert!(ta.thermal_sample().is_none());
+        }
+        for kind in GovernorKind::ALL {
+            assert!(kind.build(&ctx).thermal_sample().is_none(), "{kind}");
+        }
+    });
+}
+
+#[test]
+fn prop_thermal_fold_envelope_is_worst_of_class() {
+    // The folded envelope (engine construction, DESIGN.md §14): each
+    // representative rank carries the *maximum* cooling inefficiency over
+    // the logical siblings of its equivalence class, re-derived from the
+    // same fresh `"therm<logical rank>"` substreams the expanded cluster
+    // would draw — so the envelope is a pure function of logical identity,
+    // independent of the fold factor chosen.
+    prop("thermal_fold_envelope", 16, |rng| {
+        let cfg = random_thermal(rng);
+        let seed = rng.next_u64();
+        let nodes = *rng.choose(&[4u32, 8, 16]);
+        let fold = *rng.choose(&[2u32, 4]);
+        let folded = chopper::config::Topology::mi300x_cluster(nodes)
+            .with_fold(fold);
+        let exact = chopper::config::Topology::mi300x_cluster(nodes);
+        let gpn = folded.gpus_per_node();
+        let sim_ranks = (nodes / fold) * gpn;
+        for g in 0..sim_ranks {
+            let local = g % gpn;
+            let lead = folded.logical_node_of(g / gpn);
+            // Envelope as the folded engine computes it for
+            // representative g (folded topology's identity mapping).
+            let envelope = (lead..lead + fold)
+                .map(|ln| {
+                    cool_eff(&cfg, seed, folded.rank_of(ln, local), ln, nodes)
+                })
+                .fold(f64::NEG_INFINITY, f64::max);
+            // Expanded cluster: the sibling ranks' own draws under the
+            // exact (unfolded) topology, where logical rank == sim rank.
+            let expanded: Vec<f64> = (lead..lead + fold)
+                .map(|ln| {
+                    let rank = exact.rank_of(ln, local);
+                    assert_eq!(exact.logical_rank_of(rank), rank);
+                    cool_eff(&cfg, seed, rank, ln, nodes)
+                })
+                .collect();
+            let worst =
+                expanded.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            assert_eq!(envelope.to_bits(), worst.to_bits());
+            assert!(
+                expanded.iter().all(|&e| e <= envelope),
+                "a sibling runs hotter than its envelope"
+            );
+            // Clamp contract from cool_eff.
+            assert!((0.5..=2.0).contains(&envelope));
+        }
+    });
+}
+
+#[test]
+fn prop_thermal_engine_throttles_hot_and_stays_bounded() {
+    // Through the whole engine: with no headroom (85 °C ambient, fast τ)
+    // every governor's sampled temperature stays within [ambient, the
+    // steady state of the clamp-worst cooling], and the run reports
+    // nonzero throttle loss; re-running the identical scenario is bitwise
+    // deterministic.
+    prop("thermal_engine", 2, |rng| {
+        let (cfg, wl) = random_workload(rng);
+        let node = NodeSpec::mi300x_node();
+        let tc = ThermalConfig {
+            ambient_c: 85.0,
+            tau_s: 0.005,
+            ..ThermalConfig::default()
+        };
+        for kind in [GovernorKind::Reactive, GovernorKind::ThermalAware] {
+            let mut params = EngineParams::default();
+            params.governor = kind;
+            params.thermal = Some(tc.clone());
+            let out = Engine::new(&node, &cfg, &wl, params.clone()).run();
+            assert!(out.power.has_thermal(), "{kind}: no thermal telemetry");
+            // Hottest admissible temperature: every step relaxes toward a
+            // steady state bounded by the run's own peak sampled power
+            // through the clamp-worst (2.0×) thermal resistance, so no
+            // convex combination of those targets can exceed it.
+            let p_max = out
+                .power
+                .samples
+                .iter()
+                .map(|s| s.power_w)
+                .fold(0.0_f64, f64::max);
+            let t_max = tc.ambient_c + tc.r_c_per_w * 2.0 * p_max + 1e-6;
+            for s in &out.power.samples {
+                assert!(
+                    s.temp_c >= tc.ambient_c - 1e-9 && s.temp_c <= t_max,
+                    "{kind}: temp {} outside [{}, {t_max}]",
+                    s.temp_c,
+                    tc.ambient_c
+                );
+                assert!((0.0..=1.0).contains(&s.throttle), "{kind}");
+            }
+            assert!(
+                out.power.sampled_throttle_loss_ns(0) > 0.0,
+                "{kind}: no throttle loss at 85 °C ambient"
+            );
+            let again = Engine::new(&node, &cfg, &wl, params).run();
+            for (a, b) in out.power.samples.iter().zip(&again.power.samples) {
+                assert_eq!(a.temp_c.to_bits(), b.temp_c.to_bits());
+                assert_eq!(a.throttle.to_bits(), b.throttle.to_bits());
+            }
         }
     });
 }
